@@ -1,0 +1,17 @@
+//! ABL-FS — the §III design choice: Lustre backend vs HDFS-on-DAS.
+//! Shows (a) comparable performance at scale (Fadika et al. [11]) and
+//! (b) the DAS capacity wall that motivated Lustre on HPC Wales.
+use hpcw::bench::ablation_fs;
+use hpcw::config::StackConfig;
+
+fn main() {
+    let cfg = StackConfig::paper();
+    let rows = ablation_fs(&cfg);
+    assert!(!rows[0].3, "small allocations must hit the 414 GB DAS wall");
+    let big = rows.last().unwrap();
+    let ratio = big.2 / big.1;
+    println!("\nshape: at {} cores lustre={:.0}s hdfs={:.0}s (ratio {ratio:.2})",
+        big.0, big.1, big.2);
+    assert!((0.3..3.0).contains(&ratio), "comparable at scale");
+    println!("ablation_fs OK");
+}

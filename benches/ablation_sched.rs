@@ -1,0 +1,11 @@
+//! ABL-SCHED — queue policies (FIFO / fairshare / capacity) replaying one
+//! mixed HPC + Big Data job stream through the LSF-like scheduler.
+use hpcw::bench::ablation_sched;
+use hpcw::config::StackConfig;
+
+fn main() {
+    let cfg = StackConfig::paper();
+    let rows = ablation_sched(&cfg, 120);
+    assert_eq!(rows.len(), 3);
+    println!("\nablation_sched OK");
+}

@@ -1,0 +1,12 @@
+//! ABL-RPC — Lu et al. [15]: MPI-class transport vs Hadoop RPC on the
+//! shuffle path. The per-stream gap (~100x) shows when few streams run.
+use hpcw::bench::ablation_transport;
+use hpcw::config::StackConfig;
+
+fn main() {
+    let cfg = StackConfig::paper();
+    let rows = ablation_transport(&cfg);
+    assert!(rows[0].3 > 10.0, "few-stream speedup must be large");
+    assert!(rows[0].3 > rows.last().unwrap().3, "gap shrinks as streams multiply");
+    println!("\nablation_transport OK");
+}

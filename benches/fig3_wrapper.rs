@@ -1,0 +1,17 @@
+//! FIG3 — "Wrapper Behaviour": cluster create + teardown time vs cores.
+//! Regenerates the paper's Fig 3 series from the calibrated wrapper model.
+use hpcw::bench::fig3;
+use hpcw::config::StackConfig;
+
+fn main() {
+    let cfg = StackConfig::paper();
+    let rows = fig3(&cfg, 5);
+    // Shape checks (the paper's claim: "the wrapper adds little overhead").
+    let t_min = rows.iter().map(|r| r.3).fold(f64::INFINITY, f64::min);
+    let t_max = rows.iter().map(|r| r.3).fold(0.0, f64::max);
+    println!("\nshape: min={t_min:.1}s max={t_max:.1}s growth={:.2}x across {}..{} cores",
+        t_max / t_min, rows.first().unwrap().0, rows.last().unwrap().0);
+    assert!(t_max < 180.0, "wrapper overhead must stay in minutes-scale");
+    assert!(t_max / t_min < 3.0, "near-flat growth expected");
+    println!("fig3 OK");
+}

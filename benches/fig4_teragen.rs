@@ -1,0 +1,15 @@
+//! FIG4 — "Teragen Behaviour": 1 TB generation time vs cores; the paper
+//! reports the optimum at 1,800 cores.
+use hpcw::bench::fig4;
+use hpcw::config::StackConfig;
+
+fn main() {
+    let cfg = StackConfig::paper();
+    let rows = fig4(&cfg);
+    let best = rows.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+    println!("\nshape: optimum at {} cores ({:.0}s); 2048-core point {:.0}s",
+        best.0, best.1, rows.last().unwrap().1);
+    assert!((1500..2040).contains(&best.0), "optimum should bracket 1,800 cores");
+    assert!(rows.last().unwrap().1 > best.1, "past the optimum it gets worse");
+    println!("fig4 OK");
+}

@@ -1,0 +1,17 @@
+//! FIG5 — "Terasort Behaviour": 1 TB sort time vs cores; "reasonable
+//! scalability" ending I/O-bound (paper §VII).
+use hpcw::bench::fig5;
+use hpcw::config::StackConfig;
+
+fn main() {
+    let cfg = StackConfig::paper();
+    let rows = fig5(&cfg);
+    for w in rows.windows(2) {
+        assert!(w[1].4 < w[0].4, "terasort must keep improving with cores");
+    }
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    println!("\nshape: {:.0}s @{} cores -> {:.0}s @{} cores (speedup {:.1}x)",
+        first.4, first.0, last.4, last.0, first.4 / last.4);
+    println!("fig5 OK");
+}

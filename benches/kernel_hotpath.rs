@@ -1,0 +1,67 @@
+//! HOTPATH — the map-side sort+partition hot-spot: pure-Rust block path
+//! vs the AOT Pallas kernel through PJRT (interpret-mode CPU lowering, so
+//! this measures the *integration* cost, not TPU performance — see
+//! DESIGN.md §Hardware-Adaptation for the TPU estimates).
+use hpcw::bench::emit;
+use hpcw::mapreduce::BlockProcessor;
+use hpcw::runtime::{artifacts, shared_client, KernelBlockProcessor, RustBlockProcessor};
+use hpcw::terasort::format::record_for_row;
+use hpcw::terasort::RangePartitioner;
+use hpcw::util::rng::Rng;
+use std::time::Instant;
+
+fn pairs(n: usize, seed: u64) -> Vec<(Vec<u8>, Vec<u8>)> {
+    (0..n)
+        .map(|i| {
+            let rec = record_for_row(seed, i as u64);
+            (rec[..10].to_vec(), rec[10..].to_vec())
+        })
+        .collect()
+}
+
+fn bench_one(bp: &dyn BlockProcessor, n: usize, reps: u32) -> f64 {
+    // Warmup (compiles the artifact on first use).
+    let _ = bp.process(pairs(n, 1), 16).unwrap();
+    let t0 = Instant::now();
+    for r in 0..reps {
+        let _ = bp.process(pairs(n, r as u64 + 2), 16).unwrap();
+    }
+    let per_rep = t0.elapsed().as_secs_f64() / reps as f64;
+    (n * 100) as f64 / 1e6 / per_rep // MB/s of 100-byte records
+}
+
+fn main() {
+    let mut rng = Rng::new(99);
+    let samples: Vec<u64> = (0..4000).map(|_| rng.next_u64()).collect();
+    let part = RangePartitioner::from_samples(samples, 16).unwrap();
+    let rust = RustBlockProcessor {
+        partitioner: part.clone(),
+    };
+
+    let artifacts_built = artifacts::default_dir().join("manifest.json").exists();
+    let kernel = if artifacts_built {
+        Some(KernelBlockProcessor::new(shared_client().unwrap(), part).unwrap())
+    } else {
+        eprintln!("artifacts not built; kernel column skipped");
+        None
+    };
+
+    let mut rows = Vec::new();
+    for &n in &[2_000usize, 8_000, 32_000] {
+        let reps = if n >= 32_000 { 3 } else { 6 };
+        let r = bench_one(&rust, n, reps);
+        let k = kernel.as_ref().map(|k| bench_one(k, n, reps));
+        rows.push(vec![
+            n.to_string(),
+            format!("{r:.1}"),
+            k.map(|k| format!("{k:.1}")).unwrap_or_else(|| "-".into()),
+            k.map(|k| format!("{:.2}", k / r)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    emit(
+        "kernel_hotpath",
+        &["records", "rust_mbps", "pallas_pjrt_mbps", "ratio"],
+        &rows,
+    );
+    println!("\nkernel_hotpath OK");
+}

@@ -1,0 +1,110 @@
+//! The no-SSH access path (§III steps 1/2/6): start the SynfiniWay-style
+//! API server, then drive a two-step workflow and fetch outputs purely
+//! through the HTTP client.
+//!
+//! Run: `cargo run --release --example api_workflow`
+
+use hpcw::api::{ApiClient, ApiServer, AppPayload, Stack};
+use hpcw::codec::json::Json;
+use hpcw::config::StackConfig;
+use std::time::Duration;
+
+fn main() {
+    // Server side: the facility.
+    let stack = Stack::new(StackConfig::tiny()).expect("stack");
+    let server = ApiServer::start(stack).expect("api server");
+    println!("API listening on http://{}", server.addr);
+
+    // Client side: the end-user application, SSH never involved.
+    let client = ApiClient::new(&server.addr);
+
+    // Single job: a small Terasort.
+    let job = client
+        .submit(
+            6,
+            "remote-user",
+            &AppPayload::Terasort {
+                rows: 5_000,
+                maps: 4,
+                reduces: 4,
+                use_kernel: false,
+            },
+        )
+        .expect("submit");
+    println!("submitted job {job}");
+    let st = client.wait(job, Duration::from_secs(60)).expect("wait");
+    println!("job {job}: {}", st.state);
+    let result = st.result.expect("result");
+    assert_eq!(result.get("validated"), Some(&Json::Bool(true)));
+
+    // Fetch the first output part through the API (step 6).
+    let files = result.get("output_files").unwrap().as_arr().unwrap();
+    let first = files[0].as_str().unwrap();
+    let bytes = client.read_output(job, first).expect("output");
+    println!("fetched {} bytes of sorted records from {first}", bytes.len());
+
+    // A two-step SynfiniWay workflow: stage data, then analyze it.
+    let wf = client
+        .submit_workflow(
+            "gen-then-analyze",
+            "remote-user",
+            6,
+            &[
+                AppPayload::Teragen {
+                    rows: 2_000,
+                    maps: 2,
+                    dir: "/lustre/scratch/wf-data".into(),
+                },
+                AppPayload::HiveQuery {
+                    // Not a sensible query over tera-records, so analyze a
+                    // staged CSV instead: generate it via Pig? Keep the flow
+                    // honest with a second teragen step (stage-in + verify).
+                    sql: String::new(),
+                    reduces: 1,
+                },
+            ],
+        );
+    // The empty SQL above would fail the flow — demonstrate abort handling
+    // by expecting the workflow to stop after step 1.
+    let wf = wf.expect("workflow submitted");
+    let doc = client
+        .wait_workflow(wf, Duration::from_secs(60))
+        .expect("workflow");
+    println!("workflow doc: {}", doc.pretty());
+    assert_eq!(doc.get("aborted"), Some(&Json::Bool(true)),
+        "step 2 is invalid by construction; the flow must abort after step 1");
+
+    // And a clean two-step flow.
+    let wf2 = client
+        .submit_workflow(
+            "two-stage-ok",
+            "remote-user",
+            6,
+            &[
+                AppPayload::Teragen {
+                    rows: 1_000,
+                    maps: 2,
+                    dir: "/lustre/scratch/wf-a".into(),
+                },
+                AppPayload::Teragen {
+                    rows: 1_000,
+                    maps: 2,
+                    dir: "/lustre/scratch/wf-b".into(),
+                },
+            ],
+        )
+        .expect("workflow 2");
+    let doc2 = client
+        .wait_workflow(wf2, Duration::from_secs(60))
+        .expect("workflow 2 wait");
+    assert_eq!(doc2.get("complete"), Some(&Json::Bool(true)));
+    println!("workflow {wf2} complete");
+
+    println!("--- facility metrics ---");
+    let metrics = client.metrics().expect("metrics");
+    for line in metrics.lines().filter(|l| l.starts_with("counter lsf")) {
+        println!("{line}");
+    }
+    server.shutdown();
+    println!("api_workflow OK");
+}

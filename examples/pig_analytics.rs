@@ -1,0 +1,129 @@
+//! The "unified platform" demo (§III/§IV): the same analytics question
+//! answered through three frontends — Pig, Hive and RHadoop — plus a
+//! MongoDB-like collection as the data source, all on one stack.
+//!
+//! Run: `cargo run --release --example pig_analytics`
+
+use hpcw::api::{AppPayload, Stack};
+use hpcw::codec::json::Json;
+use hpcw::config::StackConfig;
+use hpcw::frameworks::mongo::Collection;
+use hpcw::frameworks::plan::sorted_result_lines;
+use hpcw::lustre::Dfs;
+use hpcw::util::rng::Rng;
+
+fn main() {
+    let mut stack = Stack::new(StackConfig::tiny()).expect("stack");
+
+    // 1. Operational data lives in a Mongo-like document store.
+    let sales = Collection::new("sales");
+    let regions = ["wales", "england", "scotland", "ireland"];
+    let products = ["widget", "sprocket", "cog"];
+    let mut rng = Rng::new(2015);
+    for _ in 0..5_000 {
+        sales
+            .insert(Json::obj(vec![
+                ("region", Json::str(*rng.choose(&regions))),
+                ("product", Json::str(*rng.choose(&products))),
+                ("amount", Json::num((rng.range(1, 500)) as f64)),
+            ]))
+            .unwrap();
+    }
+    println!("mongo collection: {} documents", sales.count(&[]));
+
+    // 2. Project the collection into the schema world on Lustre.
+    let lines = sales.project_csv(&[], &["region", "product", "amount"], ',');
+    stack.dfs.mkdirs("/lustre/scratch/sales").unwrap();
+    stack
+        .dfs
+        .create("/lustre/scratch/sales/part-0", lines.join("\n").as_bytes())
+        .unwrap();
+
+    // 3a. Pig answers: revenue per region for big-ticket sales.
+    let pig_job = stack
+        .submit(
+            4,
+            "analyst",
+            AppPayload::PigScript {
+                script: "
+        recs = LOAD '/lustre/scratch/sales' USING ',' AS (region, product, amount);
+        big  = FILTER recs BY amount > 250;
+        grp  = GROUP big BY region;
+        out  = FOREACH grp GENERATE group, SUM(amount), COUNT(amount);
+        STORE out INTO '/lustre/scratch/pig-report';"
+                    .into(),
+                reduces: 2,
+            },
+        )
+        .unwrap();
+
+    // 3b. Hive answers the same question in SQL.
+    let hive_job = stack
+        .submit(
+            4,
+            "analyst",
+            AppPayload::HiveQuery {
+                sql: "SELECT region, SUM(amount), COUNT(amount) \
+                      FROM '/lustre/scratch/sales' USING ',' \
+                      SCHEMA (region, product, amount) \
+                      WHERE amount > 250 \
+                      GROUP BY region \
+                      INTO '/lustre/scratch/hive-report'"
+                    .into(),
+                reduces: 2,
+            },
+        )
+        .unwrap();
+
+    // 3c. RHadoop computes summary statistics of the amount column.
+    let r_job = stack
+        .submit(
+            4,
+            "analyst",
+            AppPayload::RSummary {
+                input_dir: "/lustre/scratch/sales".into(),
+                output_dir: "/lustre/scratch/r-summary".into(),
+                fields: vec!["region".into(), "product".into(), "amount".into()],
+                delimiter: ',',
+                columns: vec!["amount".into()],
+            },
+        )
+        .unwrap();
+
+    let pig = stack.run_to_completion(pig_job, 20).unwrap().clone();
+    let hive = stack.run_to_completion(hive_job, 20).unwrap().clone();
+    let rsum = stack.run_to_completion(r_job, 20).unwrap().clone();
+
+    let read_all = |stack: &Stack, files: &[String]| {
+        let mut text = String::new();
+        for f in files {
+            text.push_str(&String::from_utf8(stack.read_output(f).unwrap()).unwrap());
+        }
+        text
+    };
+
+    let pig_lines = sorted_result_lines(&read_all(&stack, &pig.output_files));
+    let hive_lines = sorted_result_lines(&read_all(&stack, &hive.output_files));
+    println!("--- pig report ---\n{}", pig_lines.join("\n"));
+    println!("--- hive report ---\n{}", hive_lines.join("\n"));
+    assert_eq!(pig_lines, hive_lines, "Pig and Hive must agree");
+
+    println!("--- R summary ---\n{}", read_all(&stack, &rsum.output_files));
+
+    // 4. Results flow back into the document store for the app tier.
+    let report = Collection::new("report");
+    // Hive lines are `region \t sum \t count` — wrap as JSON docs.
+    for line in &hive_lines {
+        let cols: Vec<&str> = line.split('\t').collect();
+        report
+            .insert(Json::obj(vec![
+                ("region", Json::str(cols[0])),
+                ("revenue", Json::num(cols[1].parse::<f64>().unwrap())),
+                ("orders", Json::num(cols[2].parse::<f64>().unwrap())),
+            ]))
+            .unwrap();
+    }
+    println!("report collection: {} documents", report.count(&[]));
+    assert_eq!(report.count(&[]), hive_lines.len());
+    println!("pig_analytics OK");
+}

@@ -1,0 +1,53 @@
+//! Regenerate every paper figure + ablation in one go (Sim data plane at
+//! the paper's 1 TB / 2,048-core scale). CSVs land in `bench_out/`.
+//!
+//! Run: `cargo run --release --example scale_sweep`
+
+use hpcw::bench::{ablation_fs, ablation_sched, ablation_transport, fig3, fig4, fig5};
+use hpcw::config::StackConfig;
+
+fn main() {
+    let cfg = StackConfig::paper();
+    println!("hpcw scale sweep: hardware table = Sandy Bridge EP x16, 64 GB, 414 GB DAS,");
+    println!(
+        "Lustre {} OSTs x {} MB/s (aggregate {:.1} GB/s), IB {} Gbit/s\n",
+        cfg.lustre.ost_count,
+        cfg.lustre.ost_bw_mbps,
+        cfg.lustre.aggregate_bw() / 1e9,
+        cfg.cluster.ib_gbps
+    );
+
+    let f3 = fig3(&cfg, 5);
+    let f4 = fig4(&cfg);
+    let f5 = fig5(&cfg);
+    let fs = ablation_fs(&cfg);
+    let tr = ablation_transport(&cfg);
+    let sc = ablation_sched(&cfg, 120);
+
+    println!("\n== summary ==");
+    println!(
+        "fig3: wrapper overhead {:.0}s..{:.0}s across the sweep (near-flat)",
+        f3.iter().map(|r| r.3).fold(f64::INFINITY, f64::min),
+        f3.iter().map(|r| r.3).fold(0.0, f64::max)
+    );
+    let best = f4.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+    println!("fig4: teragen optimum at {} cores ({:.0}s)", best.0, best.1);
+    println!(
+        "fig5: terasort {:.0}s @128 cores -> {:.0}s @2048 cores",
+        f5.first().unwrap().4,
+        f5.last().unwrap().4
+    );
+    println!(
+        "abl-fs: hdfs-das fits 1TB from {} cores up",
+        fs.iter().find(|r| r.3).map(|r| r.0).unwrap_or(0)
+    );
+    println!(
+        "abl-rpc: per-stream transport gap {:.0}x at 2 reducers",
+        tr[0].3
+    );
+    println!(
+        "abl-sched: fifo/fair/capacity mean waits {:.0}/{:.0}/{:.0}s",
+        sc[0].1, sc[1].1, sc[2].1
+    );
+    println!("\nscale_sweep OK (CSVs in bench_out/)");
+}

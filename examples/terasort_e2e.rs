@@ -1,0 +1,81 @@
+//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
+//!
+//! Proves all layers compose on a real workload: an LSF job is submitted,
+//! the wrapper dynamically builds a YARN cluster on the allocation, real
+//! Teragen data is generated on the Lustre data plane, Terasort runs the
+//! full map/shuffle/reduce pipeline — once with the pure-Rust map path and
+//! once through the AOT-compiled Pallas kernel via PJRT — Teravalidate
+//! proves global order + checksum, and the cluster is torn down clean.
+//!
+//! Run: `cargo run --release --example terasort_e2e` (after `make artifacts`)
+
+use hpcw::api::{AppPayload, Stack};
+use hpcw::config::StackConfig;
+use hpcw::lustre::Dfs;
+use hpcw::terasort::RECORD_LEN;
+
+fn run_one(use_kernel: bool, rows: u64) -> (f64, bool) {
+    let mut cfg = StackConfig::tiny();
+    cfg.cluster.nodes = 8;
+    let mut stack = Stack::new(cfg).expect("stack");
+    let path = if use_kernel { "pallas-pjrt" } else { "pure-rust" };
+
+    let id = stack
+        .submit(
+            8,
+            "e2e",
+            AppPayload::Terasort {
+                rows,
+                maps: 6,
+                reduces: 8,
+                use_kernel,
+            },
+        )
+        .expect("submit");
+    let t0 = std::time::Instant::now();
+    let result = stack.run_to_completion(id, 20).expect("job").clone();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let bytes = rows * RECORD_LEN as u64;
+    let mbps = bytes as f64 / 1e6 / result.wall.as_secs_f64();
+    println!(
+        "[{path}] rows={rows} bytes={bytes} validated={} app_wall={:.2}s \
+         sort_throughput={mbps:.1} MB/s lsf_wall={wall:.2}s",
+        result.validated,
+        result.wall.as_secs_f64(),
+    );
+    // The wrapper must have left the machine clean.
+    assert!(stack.lsf.free_nodes() == 8, "all nodes released");
+    assert!(
+        !stack.dfs.exists(&format!("/lustre/scratch/hpcw-jobs/lsf-{id}")),
+        "staging removed"
+    );
+    (mbps, result.validated)
+}
+
+fn main() {
+    println!("== hpcw end-to-end: LSF -> wrapper -> YARN -> Terasort -> validate ==");
+    let rows = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(200_000); // 20 MB of official 100-byte records
+
+    let (rust_mbps, v1) = run_one(false, rows);
+    let artifacts_built = hpcw::runtime::artifacts::default_dir()
+        .join("manifest.json")
+        .exists();
+    let (kernel_mbps, v2) = if artifacts_built {
+        run_one(true, rows)
+    } else {
+        println!("[pallas-pjrt] skipped (artifacts not built; run `make artifacts`)");
+        (0.0, true)
+    };
+    assert!(v1 && v2, "teravalidate must pass on every path");
+    if kernel_mbps > 0.0 {
+        println!(
+            "paths agree; kernel/rust throughput ratio = {:.2}",
+            kernel_mbps / rust_mbps
+        );
+    }
+    println!("terasort_e2e OK");
+}

@@ -1,0 +1,125 @@
+"""AOT lowering: JAX/Pallas (L1+L2) -> HLO text artifacts for the Rust L3.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per entry point plus ``manifest.json``
+describing shapes/dtypes, which ``rust/src/runtime/artifacts.rs`` parses.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+from compile.kernels import partition as kpart  # noqa: E402
+from compile.kernels import sort as ksort  # noqa: E402
+
+S = kpart.SPLITTER_SLOTS  # 127 splitter slots -> up to 128 partitions
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def u64(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint64)
+
+
+def entries():
+    """(name, lowered, inputs, outputs) for every artifact."""
+    out = []
+
+    def add(name, fn, args, outputs):
+        lowered = jax.jit(fn).lower(*args)
+        out.append((name, lowered, args, outputs))
+
+    for block in (2048, 8192):
+        add(
+            f"mapphase_b{block}_s{S}",
+            model.map_phase,
+            (u64((block,)), u64((S,))),
+            [("sorted_keys", "u64", [block]), ("perm", "s32", [block]),
+             ("counts", "s32", [S + 1])],
+        )
+    for n in (4096, 16384):
+        add(
+            f"partition_b{n}_s{S}",
+            lambda keys, splits, n=n: kpart.partition(keys, splits, block=min(4096, n)),
+            (u64((n,)), u64((S,))),
+            [("part_ids", "s32", [n]), ("counts", "s32", [S + 1])],
+        )
+    add(
+        "sortblock_b8192",
+        ksort.sort_block,
+        (u64((8192,)),),
+        [("sorted_keys", "u64", [8192]), ("perm", "s32", [8192])],
+    )
+    # Multi-block variants: G independent 8192-blocks per PJRT call
+    # (perf pass: amortize call overhead; see EXPERIMENTS.md SPerf).
+    for g in (4,):
+        n = 8192 * g
+        add(
+            f"mapphase_multi_b8192_g{g}",
+            lambda keys, splits, n=n: _mapphase_multi(keys, splits),
+            (u64((n,)), u64((S,))),
+            [("sorted_keys", "u64", [n]), ("perm", "s32", [n]),
+             ("counts", "s32", [S + 1])],
+        )
+    return out
+
+
+def _mapphase_multi(keys, splitters):
+    """G independently-sorted 8192-blocks + global partition counts in one
+    module: one PJRT call replaces G mapphase calls; Rust merges the runs."""
+    import jax.numpy as jnp  # local: keep entries() import-light
+    sorted_keys, perm = ksort.sort_blocks(keys, block=8192)
+    _, counts = kpart.partition(sorted_keys, splitters, block=4096)
+    return sorted_keys, perm, counts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "entries": {}}
+    for name, lowered, inputs, outputs in entries():
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [
+                {"dtype": str(a.dtype), "shape": list(a.shape)} for a in inputs
+            ],
+            "outputs": [
+                {"name": n, "dtype": d, "shape": s} for (n, d, s) in outputs
+            ],
+        }
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest.json with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

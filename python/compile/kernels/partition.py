@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: range partitioning of Terasort key prefixes.
+
+The shuffle-routing hot-spot of the paper's Terasort runs (§VII). On a CPU
+this is a per-key binary search — branchy, serial. The TPU formulation
+(DESIGN.md §Hardware-Adaptation) is branch-free: the splitter vector is
+resident in VMEM, each grid step streams one key block HBM→VMEM via
+BlockSpec, and membership is a broadcast ``keys[:,None] >= splitters[None,:]``
+comparison grid reduced along the splitter axis — a one-hot-style reduction
+the VPU/MXU pipeline, not a data-dependent branch per key.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO that both pytest and the
+Rust runtime run. Real-TPU numbers are estimated in DESIGN.md §Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default artifact geometry: 128-way partitioning (127 splitters + pad).
+SPLITTER_SLOTS = 127
+
+
+def _partition_kernel(keys_ref, splitters_ref, part_ref, counts_ref):
+    """One grid step: route one key block, accumulate the histogram."""
+    keys = keys_ref[...]  # [B] u64 block in VMEM
+    splitters = splitters_ref[...]  # [S] u64, resident across steps
+
+    # Branch-free routing: [B, S] comparison grid, reduced along S.
+    ge = keys[:, None] >= splitters[None, :]
+    part = ge.sum(axis=1, dtype=jnp.int32)
+    part_ref[...] = part
+
+    # Histogram of this block: one-hot [B, S+1] reduced along B. The
+    # comparison-grid formulation again (no scatter, MXU-shaped).
+    n_parts = splitters.shape[0] + 1
+    onehot = (part[:, None] == jnp.arange(n_parts, dtype=jnp.int32)[None, :]).astype(
+        jnp.int32
+    )
+    block_counts = onehot.sum(axis=0)
+
+    # Accumulate across grid steps (counts_ref is shared across the grid).
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    counts_ref[...] += block_counts
+
+
+def partition(keys, splitters, block=4096):
+    """Route ``keys`` (uint64[N]) against ``splitters`` (uint64[S]).
+
+    N must be a multiple of ``block`` (the Rust caller pads with u64::MAX).
+    Returns (part_ids int32[N], counts int32[S+1]).
+    """
+    n = keys.shape[0]
+    s = splitters.shape[0]
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    grid = n // block
+    part, counts = pl.pallas_call(
+        _partition_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),  # stream key blocks
+            pl.BlockSpec((s,), lambda i: (0,)),  # splitters resident
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((s + 1,), lambda i: (0,)),  # shared accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((s + 1,), jnp.int32),
+        ],
+        interpret=True,
+    )(keys, splitters)
+    return part, counts
+
+
+def vmem_footprint_bytes(block=4096, splitter_slots=SPLITTER_SLOTS):
+    """Estimated VMEM residency of one grid step (DESIGN.md §Perf):
+    key block + splitters + part block + counts + the [B,S] compare grid
+    the VPU materializes in registers/VMEM scratch."""
+    keys = block * 8
+    splits = splitter_slots * 8
+    part = block * 4
+    counts = (splitter_slots + 1) * 4
+    grid = block * (splitter_slots + 1) * 1  # i1 compare grid
+    return keys + splits + part + counts + grid

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel must match
+its oracle bit-for-bit (integer outputs) across the pytest + hypothesis
+sweeps in ``python/tests/``. The Rust runtime is additionally parity-tested
+against the same semantics (``rust/src/runtime/kernels.rs``).
+"""
+
+import jax.numpy as jnp
+
+
+def partition_ref(keys, splitters):
+    """Route each key to its range partition.
+
+    partition(k) = number of splitters <= k  (upper-bound binary search,
+    identical to ``RangePartitioner::route`` on the Rust side). Padding
+    splitters are u64::MAX, which no real key reaches (MAX is reserved as
+    the sort sentinel by the Rust caller).
+
+    Args:
+      keys: uint64[N]
+      splitters: uint64[S] sorted ascending, padded with u64::MAX.
+
+    Returns:
+      (part_ids int32[N], counts int32[S+1])
+    """
+    ge = keys[:, None] >= splitters[None, :]  # [N, S] broadcast compare
+    part = ge.sum(axis=1, dtype=jnp.int32)  # upper-bound index
+    counts = jnp.bincount(part, length=splitters.shape[0] + 1).astype(jnp.int32)
+    return part, counts
+
+
+def sort_perm_ref(keys):
+    """Stable argsort of uint64 keys (ascending).
+
+    Returns int32[N] permutation: ``keys[perm]`` is sorted. jnp.argsort is
+    stable, matching the bitonic network's tie behaviour on (key, index)
+    pairs.
+    """
+    return jnp.argsort(keys, stable=True).astype(jnp.int32)
+
+
+def map_phase_ref(keys, splitters):
+    """The fused Terasort map-side hot-spot, oracle version.
+
+    Because range partitioning is monotone in the key, sorting the block
+    by key yields records that are simultaneously (a) sorted within each
+    partition and (b) grouped by partition — one pass does both jobs the
+    Hadoop map task needs.
+
+    Returns:
+      perm int32[N]           — sorted order of the block
+      part_sorted int32[N]    — partition id of each *sorted* slot
+      counts int32[S+1]       — per-partition record counts
+    """
+    perm = sort_perm_ref(keys)
+    sorted_keys = keys[perm]
+    part_sorted, counts = partition_ref(sorted_keys, splitters)
+    return perm, part_sorted, counts

@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: bitonic block sort of Terasort key prefixes.
+
+The map-side sort hot-spot. A CPU Hadoop map task quicksorts its spill
+buffer — data-dependent branching throughout. The TPU answer (DESIGN.md
+§Hardware-Adaptation) is the classic bitonic network: O(log² B) layers of
+*data-independent* compare-exchanges over the whole block, each layer a
+vectorized gather + select on VMEM-resident arrays. Fixed dataflow, no
+branches — exactly what the VPU wants.
+
+The kernel sorts ``(key, index)`` pairs: keys move with their original
+block index so the Rust caller can apply the permutation to full 100-byte
+records. Ties on the 8-byte prefix break by index, matching the stable
+oracle (``jnp.argsort(stable=True)``).
+
+Padding: callers pad short blocks with u64::MAX keys; those sink to the
+tail and their indices are discarded.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default artifact block size (records per map-side sort block).
+SORT_BLOCK = 8192
+
+
+def _bitonic_body(keys, idx):
+    """The full bitonic network over VMEM-resident [B] arrays."""
+    n = keys.shape[0]
+    logn = n.bit_length() - 1
+    assert 1 << logn == n, f"block {n} must be a power of two"
+    slot = jnp.arange(n, dtype=jnp.int32)
+    for k in range(1, logn + 1):
+        size = 1 << k
+        for j in range(k - 1, -1, -1):
+            stride = 1 << j
+            partner = slot ^ stride
+            ascending = (slot & size) == 0
+            pk = keys[partner]
+            pi = idx[partner]
+            is_low = slot < partner
+            # Compare (key, idx) lexicographically → stable ties.
+            gt = (keys > pk) | ((keys == pk) & (idx > pi))
+            lt = (keys < pk) | ((keys == pk) & (idx < pi))
+            # For the low slot of an ascending pair: swap if self > partner.
+            # All four (low/high × asc/desc) cases reduce to:
+            want_other = jnp.where(
+                is_low,
+                jnp.where(ascending, gt, lt),
+                jnp.where(ascending, lt, gt),
+            )
+            keys = jnp.where(want_other, pk, keys)
+            idx = jnp.where(want_other, pi, idx)
+    return keys, idx
+
+
+def _sort_kernel(keys_ref, keys_out_ref, perm_ref):
+    keys = keys_ref[...]
+    idx = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    skeys, sidx = _bitonic_body(keys, idx)
+    keys_out_ref[...] = skeys
+    perm_ref[...] = sidx
+
+
+def sort_block(keys):
+    """Sort one block of uint64 keys (power-of-two length).
+
+    Returns (sorted_keys uint64[B], perm int32[B]) with
+    ``sorted_keys == keys[perm]`` and stable tie order.
+    """
+    n = keys.shape[0]
+    return pl.pallas_call(
+        _sort_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint64),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(keys)
+
+
+def vmem_footprint_bytes(block=SORT_BLOCK):
+    """§Perf estimate: keys + indices + one partner-gather temp each."""
+    return block * (8 + 4) * 2
+
+
+def _sort_grid_kernel(keys_ref, keys_out_ref, perm_ref):
+    """Grid variant: each grid step sorts one independent VMEM block.
+    Permutation indices are block-local; the Rust caller adds the block
+    offset and merges the sorted runs (k-way, it already owns a merger)."""
+    keys = keys_ref[...]
+    idx = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    skeys, sidx = _bitonic_body(keys, idx)
+    keys_out_ref[...] = skeys
+    perm_ref[...] = sidx
+
+
+def sort_blocks(keys, block=SORT_BLOCK):
+    """Sort `n // block` independent blocks in ONE kernel launch.
+
+    §Perf optimization: amortizes the PJRT call overhead (dispatch, literal
+    copies, tuple decomposition) across several blocks — the CPU-path
+    equivalent of pipelining grid steps through VMEM on a real TPU.
+
+    Returns (sorted_keys uint64[N], perm int32[N]) where each aligned
+    `block`-sized window is independently sorted and perm is block-local.
+    """
+    n = keys.shape[0]
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    grid = n // block
+    return pl.pallas_call(
+        _sort_grid_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint64),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(keys)

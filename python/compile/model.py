@@ -1,0 +1,52 @@
+"""L2: the JAX compute graph for the Terasort map-side hot path.
+
+``map_phase`` composes the two L1 Pallas kernels into the single fused
+operation a map task performs on each block of key prefixes:
+
+  1. bitonic block sort (kernels.sort) — keys with their permutation;
+  2. range-partition the *sorted* keys (kernels.partition).
+
+Range partitioning is monotone in the key, so sorting once yields records
+that are both sorted within each partition and grouped by partition: the
+map task's entire shuffle-preparation in one pass. The Rust caller applies
+``perm`` to its 100-byte records and slices the block by ``counts``.
+
+This module is build-time only: ``aot.py`` lowers ``map_phase`` (and the
+standalone kernels) to HLO text once; the Rust runtime loads the text via
+PJRT and executes it from map tasks. Python never runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import partition as kpart
+from compile.kernels import sort as ksort
+from compile.kernels import ref
+
+
+def map_phase(keys, splitters):
+    """Fused map-side sort + partition over one block.
+
+    Args:
+      keys: uint64[B] key prefixes (u64::MAX-padded to the block size).
+      splitters: uint64[S] ascending, u64::MAX-padded.
+
+    Returns:
+      (sorted_keys uint64[B], perm int32[B], counts int32[S+1])
+    """
+    sorted_keys, perm = ksort.sort_block(keys)
+    _, counts = kpart.partition(
+        sorted_keys, splitters, block=min(4096, sorted_keys.shape[0])
+    )
+    return sorted_keys, perm, counts
+
+
+def map_phase_oracle(keys, splitters):
+    """Pure-jnp twin of ``map_phase`` used by the L2 shape tests."""
+    perm, _, counts = ref.map_phase_ref(keys, splitters)
+    return keys[perm], perm, counts
+
+
+def lower_entry(fn, *args):
+    """jit + lower an entry point with concrete ShapeDtypeStructs."""
+    return jax.jit(fn).lower(*args)

@@ -1,0 +1,100 @@
+"""L1 partition kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import partition as kp
+from compile.kernels import ref
+
+U64_MAX = 2**64 - 1
+
+
+def mk_splitters(rng, s=127, lo=0, hi=U64_MAX, pad=0):
+    real = np.sort(rng.integers(lo, hi, size=s - pad, dtype=np.uint64))
+    padded = np.concatenate([real, np.full(pad, U64_MAX, dtype=np.uint64)])
+    return jnp.asarray(padded)
+
+
+def check(keys, splitters, block=4096):
+    p, c = kp.partition(keys, splitters, block=block)
+    pr, cr = ref.partition_ref(keys, splitters)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    return p, c
+
+
+def test_uniform_keys_match_oracle():
+    rng = np.random.default_rng(1)
+    keys = jnp.asarray(rng.integers(0, U64_MAX, size=8192, dtype=np.uint64))
+    p, c = check(keys, mk_splitters(rng))
+    assert int(c.sum()) == 8192
+    assert int(p.max()) <= 127
+
+
+def test_multi_block_grid_accumulates_counts():
+    rng = np.random.default_rng(2)
+    keys = jnp.asarray(rng.integers(0, U64_MAX, size=4 * 4096, dtype=np.uint64))
+    _, c = check(keys, mk_splitters(rng), block=4096)
+    assert int(c.sum()) == 4 * 4096
+
+
+def test_padded_splitters_unreachable():
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.integers(0, 2**32, size=4096, dtype=np.uint64))
+    spl = mk_splitters(rng, lo=0, hi=2**32, pad=100)
+    p, _ = check(keys, spl)
+    # 27 real splitters -> partitions 0..27 only.
+    assert int(jnp.max(p)) <= 27
+
+
+def test_boundary_keys_route_right():
+    # A key exactly equal to a splitter belongs to the partition above it
+    # (upper-bound semantics, identical to RangePartitioner::route).
+    spl = np.full(127, U64_MAX, dtype=np.uint64)
+    spl[0:3] = [100, 200, 300]
+    spl = jnp.asarray(np.sort(spl))
+    keys = jnp.asarray(
+        np.array([0, 99, 100, 101, 200, 299, 300, 301] * 512, dtype=np.uint64)
+    )
+    p, _ = check(keys, spl)
+    got = np.asarray(p[:8])
+    np.testing.assert_array_equal(got, [0, 0, 1, 1, 2, 2, 3, 3])
+
+
+def test_extreme_keys():
+    spl_np = np.sort(np.random.default_rng(5).integers(1, U64_MAX, 127, dtype=np.uint64))
+    spl = jnp.asarray(spl_np)
+    keys = jnp.asarray(np.array([0, 1, U64_MAX - 1] * 1365 + [0], dtype=np.uint64))
+    check(keys, spl)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    log_scale=st.integers(4, 63),
+    blocks=st.integers(1, 3),
+)
+def test_hypothesis_sweep(seed, log_scale, blocks):
+    """Random key distributions at many scales, incl. heavily skewed."""
+    rng = np.random.default_rng(seed)
+    hi = 2**log_scale
+    n = 4096 * blocks
+    keys = jnp.asarray(rng.integers(0, hi, size=n, dtype=np.uint64))
+    spl = mk_splitters(rng, lo=0, hi=max(hi, 2), pad=int(rng.integers(0, 64)))
+    check(keys, spl)
+
+
+def test_all_equal_keys():
+    rng = np.random.default_rng(7)
+    keys = jnp.asarray(np.full(4096, 12345, dtype=np.uint64))
+    _, c = check(keys, mk_splitters(rng))
+    assert int(c.max()) == 4096  # everything in one partition
+
+
+def test_misaligned_block_rejected():
+    rng = np.random.default_rng(8)
+    keys = jnp.asarray(rng.integers(0, 100, size=1000, dtype=np.uint64))
+    with pytest.raises(AssertionError):
+        kp.partition(keys, mk_splitters(rng), block=4096)

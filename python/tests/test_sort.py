@@ -1,0 +1,57 @@
+"""L1 bitonic sort kernel vs the stable-argsort oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import sort as ks
+
+U64_MAX = 2**64 - 1
+
+
+def check(keys_np):
+    keys = jnp.asarray(keys_np)
+    sk, perm = ks.sort_block(keys)
+    permr = ref.sort_perm_ref(keys)
+    np.testing.assert_array_equal(np.asarray(perm), np.asarray(permr))
+    np.testing.assert_array_equal(np.asarray(sk), keys_np[np.asarray(perm)])
+    assert (np.diff(np.asarray(sk).astype(object)) >= 0).all()
+
+
+def test_random_block():
+    rng = np.random.default_rng(0)
+    check(rng.integers(0, U64_MAX, size=1024, dtype=np.uint64))
+
+
+def test_already_sorted_and_reversed():
+    base = np.sort(np.random.default_rng(1).integers(0, 10**12, 512, dtype=np.uint64))
+    check(base)
+    check(base[::-1].copy())
+
+
+def test_duplicates_are_stable():
+    # Many duplicate keys: permutation must be the stable one.
+    rng = np.random.default_rng(2)
+    check(rng.integers(0, 8, size=2048, dtype=np.uint64))
+
+
+def test_padding_sentinels_sink():
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 10**9, size=512, dtype=np.uint64)
+    keys[100:] = U64_MAX  # simulated padding
+    sk, _ = ks.sort_block(jnp.asarray(keys))
+    assert (np.asarray(sk[-412:]) == U64_MAX).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    log_n=st.integers(4, 12),
+    value_bits=st.integers(1, 64),
+)
+def test_hypothesis_shapes_and_ranges(seed, log_n, value_bits):
+    rng = np.random.default_rng(seed)
+    n = 1 << log_n
+    hi = 2**value_bits
+    check(rng.integers(0, hi, size=n, dtype=np.uint64))

@@ -1,0 +1,312 @@
+//! The Rust reference client for the HPC Wales API ("The user will be
+//! provided with HPC Wales APIs in multiple languages ... job submission,
+//! obtaining job status and job termination"). The wire format is plain
+//! JSON over HTTP, so other-language clients are mechanical ports.
+
+use crate::api::http::request;
+use crate::api::stack::AppPayload;
+use crate::codec::json::Json;
+use crate::error::{Error, Result};
+
+/// Client handle for one API endpoint.
+#[derive(Debug, Clone)]
+pub struct ApiClient {
+    pub addr: String,
+}
+
+/// A job status snapshot.
+#[derive(Debug, Clone)]
+pub struct JobStatus {
+    pub job: u64,
+    pub state: String,
+    pub result: Option<Json>,
+    pub error: Option<String>,
+}
+
+impl JobStatus {
+    pub fn is_terminal(&self) -> bool {
+        self.state.starts_with("DONE") || self.state.starts_with("EXIT")
+    }
+}
+
+fn payload_to_json(p: &AppPayload) -> Json {
+    match p {
+        AppPayload::Terasort {
+            rows,
+            maps,
+            reduces,
+            use_kernel,
+        } => Json::obj(vec![
+            ("type", Json::str("terasort")),
+            ("rows", Json::num(*rows as f64)),
+            ("maps", Json::num(*maps as f64)),
+            ("reduces", Json::num(*reduces as f64)),
+            ("use_kernel", Json::Bool(*use_kernel)),
+        ]),
+        AppPayload::Teragen { rows, maps, dir } => Json::obj(vec![
+            ("type", Json::str("teragen")),
+            ("rows", Json::num(*rows as f64)),
+            ("maps", Json::num(*maps as f64)),
+            ("dir", Json::str(&**dir)),
+        ]),
+        AppPayload::PigScript { script, reduces } => Json::obj(vec![
+            ("type", Json::str("pig")),
+            ("script", Json::str(&**script)),
+            ("reduces", Json::num(*reduces as f64)),
+        ]),
+        AppPayload::HiveQuery { sql, reduces } => Json::obj(vec![
+            ("type", Json::str("hive")),
+            ("sql", Json::str(&**sql)),
+            ("reduces", Json::num(*reduces as f64)),
+        ]),
+        AppPayload::RSummary {
+            input_dir,
+            output_dir,
+            fields,
+            delimiter,
+            columns,
+        } => Json::obj(vec![
+            ("type", Json::str("rsummary")),
+            ("input_dir", Json::str(&**input_dir)),
+            ("output_dir", Json::str(&**output_dir)),
+            (
+                "fields",
+                Json::Arr(fields.iter().map(|f| Json::str(&**f)).collect()),
+            ),
+            ("delimiter", Json::str(delimiter.to_string())),
+            (
+                "columns",
+                Json::Arr(columns.iter().map(|c| Json::str(&**c)).collect()),
+            ),
+        ]),
+    }
+}
+
+impl ApiClient {
+    pub fn new(addr: &str) -> ApiClient {
+        ApiClient {
+            addr: addr.to_string(),
+        }
+    }
+
+    fn check(status: u16, body: &[u8]) -> Result<Json> {
+        let text = std::str::from_utf8(body)
+            .map_err(|_| Error::Api("non-utf8 response".into()))?;
+        let json = Json::parse(text)?;
+        if status >= 400 {
+            let msg = json
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown error");
+            return Err(Error::Api(format!("HTTP {status}: {msg}")));
+        }
+        Ok(json)
+    }
+
+    /// Submit an application; returns the LSF job id.
+    pub fn submit(&self, nodes: u32, user: &str, payload: &AppPayload) -> Result<u64> {
+        let body = Json::obj(vec![
+            ("nodes", Json::num(nodes as f64)),
+            ("user", Json::str(user)),
+            ("payload", payload_to_json(payload)),
+        ])
+        .to_string();
+        let (status, resp) = request(&self.addr, "POST", "/jobs", Some(body.as_bytes()))?;
+        let json = Self::check(status, &resp)?;
+        json.req_u64("job")
+    }
+
+    /// Job status.
+    pub fn status(&self, job: u64) -> Result<JobStatus> {
+        let (status, resp) = request(&self.addr, "GET", &format!("/jobs/{job}"), None)?;
+        let json = Self::check(status, &resp)?;
+        Ok(JobStatus {
+            job,
+            state: json.req_str("state")?.to_string(),
+            result: json.get("result").cloned(),
+            error: json.get("error").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+
+    /// Poll until terminal or timeout.
+    pub fn wait(&self, job: u64, timeout: std::time::Duration) -> Result<JobStatus> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let st = self.status(job)?;
+            if st.is_terminal() {
+                return Ok(st);
+            }
+            if std::time::Instant::now() > deadline {
+                return Err(Error::Api(format!("timeout waiting for job {job}")));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+    }
+
+    /// Terminate a job.
+    pub fn kill(&self, job: u64) -> Result<()> {
+        let (status, resp) = request(&self.addr, "DELETE", &format!("/jobs/{job}"), None)?;
+        Self::check(status, &resp).map(|_| ())
+    }
+
+    /// Fetch an output file's bytes (step 6: data access via the API).
+    pub fn read_output(&self, job: u64, path: &str) -> Result<Vec<u8>> {
+        let (status, resp) = request(
+            &self.addr,
+            "GET",
+            &format!("/jobs/{job}/output?path={path}"),
+            None,
+        )?;
+        if status >= 400 {
+            return Err(Error::Api(format!("HTTP {status} reading {path}")));
+        }
+        Ok(resp)
+    }
+
+    /// Submit a workflow; returns the workflow id.
+    pub fn submit_workflow(
+        &self,
+        name: &str,
+        user: &str,
+        nodes: u32,
+        steps: &[AppPayload],
+    ) -> Result<u64> {
+        let body = Json::obj(vec![
+            ("name", Json::str(name)),
+            ("user", Json::str(user)),
+            ("nodes", Json::num(nodes as f64)),
+            (
+                "steps",
+                Json::Arr(steps.iter().map(payload_to_json).collect()),
+            ),
+        ])
+        .to_string();
+        let (status, resp) = request(&self.addr, "POST", "/workflows", Some(body.as_bytes()))?;
+        let json = Self::check(status, &resp)?;
+        json.req_u64("workflow")
+    }
+
+    /// Workflow progress document.
+    pub fn workflow(&self, id: u64) -> Result<Json> {
+        let (status, resp) = request(&self.addr, "GET", &format!("/workflows/{id}"), None)?;
+        Self::check(status, &resp)
+    }
+
+    /// Wait for a workflow to complete (or abort).
+    pub fn wait_workflow(&self, id: u64, timeout: std::time::Duration) -> Result<Json> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let doc = self.workflow(id)?;
+            let complete = doc.get("complete").and_then(Json::as_bool).unwrap_or(false);
+            let aborted = doc.get("aborted").and_then(Json::as_bool).unwrap_or(false);
+            if complete || aborted {
+                return Ok(doc);
+            }
+            if std::time::Instant::now() > deadline {
+                return Err(Error::Api(format!("timeout waiting for workflow {id}")));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+    }
+
+    /// Raw metrics dump.
+    pub fn metrics(&self) -> Result<String> {
+        let (status, resp) = request(&self.addr, "GET", "/metrics", None)?;
+        if status != 200 {
+            return Err(Error::Api(format!("HTTP {status}")));
+        }
+        String::from_utf8(resp).map_err(|_| Error::Api("non-utf8 metrics".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::server::ApiServer;
+    use crate::api::stack::Stack;
+    use crate::config::StackConfig;
+    use std::time::Duration;
+
+    fn server() -> (ApiServer, ApiClient) {
+        let stack = Stack::new(StackConfig::tiny()).unwrap();
+        let server = ApiServer::start(stack).unwrap();
+        let client = ApiClient::new(&server.addr);
+        (server, client)
+    }
+
+    #[test]
+    fn submit_wait_fetch_cycle() {
+        let (_server, client) = server();
+        let job = client
+            .submit(
+                6,
+                "sid",
+                &AppPayload::Terasort {
+                    rows: 1_000,
+                    maps: 2,
+                    reduces: 3,
+                    use_kernel: false,
+                },
+            )
+            .unwrap();
+        let st = client.wait(job, Duration::from_secs(30)).unwrap();
+        assert_eq!(st.state, "DONE", "error={:?}", st.error);
+        let result = st.result.unwrap();
+        assert_eq!(result.get("validated"), Some(&Json::Bool(true)));
+        assert_eq!(result.get("records").and_then(Json::as_u64), Some(1000));
+        // Fetch one output part through the API.
+        let files = result.get("output_files").unwrap().as_arr().unwrap();
+        let first = files[0].as_str().unwrap();
+        let bytes = client.read_output(job, first).unwrap();
+        assert_eq!(bytes.len() % 100, 0);
+        // Metrics exposed.
+        let m = client.metrics().unwrap();
+        assert!(m.contains("lsf.dispatched"));
+    }
+
+    #[test]
+    fn status_of_unknown_job_is_error() {
+        let (_server, client) = server();
+        let err = client.status(99_999).unwrap_err();
+        assert!(err.to_string().contains("404") || err.to_string().contains("unknown"));
+    }
+
+    #[test]
+    fn bad_payload_rejected() {
+        let (_server, client) = server();
+        let (status, body) = request(
+            &client.addr,
+            "POST",
+            "/jobs",
+            Some(br#"{"nodes":2,"user":"u","payload":{"type":"nonsense"}}"#),
+        )
+        .unwrap();
+        assert_eq!(status, 400);
+        assert!(String::from_utf8_lossy(&body).contains("unknown payload type"));
+    }
+
+    #[test]
+    fn workflow_over_api() {
+        let (_server, client) = server();
+        let steps = vec![
+            AppPayload::Teragen {
+                rows: 300,
+                maps: 2,
+                dir: "/lustre/scratch/api-wf-a".into(),
+            },
+            AppPayload::Teragen {
+                rows: 300,
+                maps: 2,
+                dir: "/lustre/scratch/api-wf-b".into(),
+            },
+        ];
+        let wf = client
+            .submit_workflow("two-step", "sid", 4, &steps)
+            .unwrap();
+        let doc = client.wait_workflow(wf, Duration::from_secs(30)).unwrap();
+        assert_eq!(doc.get("complete"), Some(&Json::Bool(true)));
+        let steps = doc.get("steps").unwrap().as_arr().unwrap();
+        assert_eq!(steps.len(), 2);
+        assert!(steps.iter().all(|s| s.get("state").and_then(Json::as_str) == Some("DONE")));
+    }
+}

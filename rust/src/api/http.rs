@@ -1,0 +1,246 @@
+//! Minimal HTTP/1.1 server and client primitives on `std::net`.
+//!
+//! Enough protocol for a JSON REST API: request line, headers,
+//! Content-Length bodies, keep-alive off (Connection: close). Not a
+//! general web server — the SynfiniWay analog only needs request/response.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Path segments, e.g. `/jobs/42` → `["jobs", "42"]`.
+    pub fn segments(&self) -> Vec<&str> {
+        self.path
+            .split('?')
+            .next()
+            .unwrap_or("")
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+
+    pub fn body_text(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|_| Error::Api("non-utf8 body".into()))
+    }
+}
+
+/// A response under construction.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn bytes(status: u16, body: Vec<u8>) -> Response {
+        Response {
+            status,
+            content_type: "application/octet-stream",
+            body,
+        }
+    }
+
+    fn status_text(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            201 => "Created",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            _ => "Internal Server Error",
+        }
+    }
+
+    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            self.status_text(),
+            self.content_type,
+            self.body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)
+    }
+}
+
+/// Read one request from a stream.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| Error::Api("empty request line".into()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| Error::Api("missing path".into()))?
+        .to_string();
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(Request {
+        method,
+        path,
+        headers,
+        body,
+    })
+}
+
+/// Serve until `stop` flips; each connection handled on its own thread.
+pub fn serve(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    handler: Arc<dyn Fn(Request) -> Response + Send + Sync>,
+) {
+    listener
+        .set_nonblocking(true)
+        .expect("nonblocking listener");
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                let handler = Arc::clone(&handler);
+                std::thread::spawn(move || {
+                    stream.set_nonblocking(false).ok();
+                    let response = match read_request(&mut stream) {
+                        Ok(req) => handler(req),
+                        Err(e) => Response::json(
+                            400,
+                            format!("{{\"error\":\"{}\"}}", e.to_string().replace('"', "'")),
+                        ),
+                    };
+                    let _ = response.write_to(&mut stream);
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Blocking client request; returns (status, body).
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+) -> Result<(u16, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| Error::Api(format!("connect {addr}: {e}")))?;
+    let body = body.unwrap_or(&[]);
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Api(format!("bad status line '{status_line}'")))?;
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handler: Arc<dyn Fn(Request) -> Response + Send + Sync> =
+            Arc::new(|req: Request| {
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.segments(), vec!["echo", "x"]);
+                Response::json(200, String::from_utf8(req.body).unwrap())
+            });
+        let server = std::thread::spawn(move || serve(listener, stop2, handler));
+
+        let (status, body) = request(&addr, "POST", "/echo/x", Some(b"{\"a\":1}")).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"a\":1}");
+
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn segments_ignore_query() {
+        let r = Request {
+            method: "GET".into(),
+            path: "/jobs/7/output?path=/x".into(),
+            headers: BTreeMap::new(),
+            body: vec![],
+        };
+        assert_eq!(r.segments(), vec!["jobs", "7", "output"]);
+    }
+}

@@ -1,0 +1,24 @@
+//! The access layer: the full HPC Wales submission flow (§III Fig 1).
+//!
+//! * [`stack`] — the in-process orchestrator: LSF → wrapper → YARN → app →
+//!   teardown, the end-to-end flow of steps 3–5.
+//! * [`http`] — a minimal HTTP/1.1 server on `std::net` (no tokio in the
+//!   vendored environment).
+//! * [`server`] — the REST surface (steps 1–2 and 6: submit / status /
+//!   terminate / data access without SSH).
+//! * [`synfiniway`] — workflow definitions: named multi-step flows, the
+//!   SynfiniWay analog.
+//! * [`client`] — the Rust client API ("APIs in multiple languages" —
+//!   this is the reference implementation; the wire format is plain JSON
+//!   over HTTP so other languages follow).
+
+pub mod client;
+pub mod http;
+pub mod server;
+pub mod stack;
+pub mod synfiniway;
+
+pub use client::ApiClient;
+pub use server::ApiServer;
+pub use stack::{AppPayload, AppResult, Stack};
+pub use synfiniway::{Workflow, WorkflowRun};

@@ -1,0 +1,335 @@
+//! The REST surface: submit / status / terminate / data access (§III
+//! steps 1, 2 and 6 — "the traditional means of HPC access do not become a
+//! bottleneck").
+//!
+//! Endpoints:
+//! * `POST /jobs` `{nodes, user, payload}` → `{job}`
+//! * `GET /jobs` → list; `GET /jobs/{id}` → state + result
+//! * `DELETE /jobs/{id}` → bkill
+//! * `GET /jobs/{id}/output?path=...` → raw bytes off Lustre
+//! * `POST /workflows` → SynfiniWay-style multi-step flow
+//! * `GET /workflows/{id}` → per-step progress
+//! * `GET /metrics` → text metrics dump
+//!
+//! A pump thread drives `Stack::tick` and workflow advancement; handlers
+//! only mutate queue state, so requests stay fast.
+
+use crate::api::http::{self, Request, Response};
+use crate::api::stack::{AppPayload, AppResult, Stack};
+use crate::api::synfiniway::{Workflow, WorkflowRun};
+use crate::codec::json::Json;
+use crate::error::{Error, Result};
+use crate::scheduler::JobState;
+use crate::util::ids::LsfJobId;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shared server state.
+struct State {
+    stack: Mutex<Stack>,
+    workflows: Mutex<Vec<WorkflowRun>>,
+}
+
+/// The API server handle.
+pub struct ApiServer {
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+    serve_thread: Option<std::thread::JoinHandle<()>>,
+    pump_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ApiServer {
+    /// Bind on an ephemeral loopback port and start serving `stack`.
+    pub fn start(stack: Stack) -> Result<ApiServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let state = Arc::new(State {
+            stack: Mutex::new(stack),
+            workflows: Mutex::new(Vec::new()),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // Pump: dispatch cycles + workflow advancement.
+        let pump_state = Arc::clone(&state);
+        let pump_stop = Arc::clone(&stop);
+        let pump_thread = std::thread::Builder::new()
+            .name("hpcw-api-pump".into())
+            .spawn(move || {
+                while !pump_stop.load(Ordering::Relaxed) {
+                    {
+                        let mut stack = pump_state.stack.lock().unwrap();
+                        stack.tick();
+                        let mut wfs = pump_state.workflows.lock().unwrap();
+                        for wf in wfs.iter_mut() {
+                            wf.advance(&mut stack);
+                        }
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+            })
+            .map_err(|e| Error::Api(format!("spawn pump: {e}")))?;
+
+        let handler_state = Arc::clone(&state);
+        let handler: Arc<dyn Fn(Request) -> Response + Send + Sync> =
+            Arc::new(move |req| route(&handler_state, req));
+        let serve_stop = Arc::clone(&stop);
+        let serve_thread = std::thread::Builder::new()
+            .name("hpcw-api".into())
+            .spawn(move || http::serve(listener, serve_stop, handler))
+            .map_err(|e| Error::Api(format!("spawn server: {e}")))?;
+
+        Ok(ApiServer {
+            addr,
+            stop,
+            serve_thread: Some(serve_thread),
+            pump_thread: Some(pump_thread),
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop_now();
+    }
+
+    fn stop_now(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.serve_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.pump_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ApiServer {
+    fn drop(&mut self) {
+        self.stop_now();
+    }
+}
+
+fn route(state: &State, req: Request) -> Response {
+    let segs = req.segments();
+    let result = match (req.method.as_str(), segs.as_slice()) {
+        ("POST", ["jobs"]) => post_job(state, &req),
+        ("GET", ["jobs"]) => list_jobs(state),
+        ("GET", ["jobs", id]) => get_job(state, id),
+        ("DELETE", ["jobs", id]) => delete_job(state, id),
+        ("GET", ["jobs", _id, "output"]) => get_output(state, &req),
+        ("POST", ["workflows"]) => post_workflow(state, &req),
+        ("GET", ["workflows", id]) => get_workflow(state, id),
+        ("GET", ["metrics"]) => {
+            let stack = state.stack.lock().unwrap();
+            return Response {
+                status: 200,
+                content_type: "text/plain",
+                body: stack.metrics.render().into_bytes(),
+            };
+        }
+        _ => Err(Error::Api(format!("no route {} {}", req.method, req.path))),
+    };
+    match result {
+        Ok(resp) => resp,
+        Err(e) => {
+            let status = match e {
+                Error::Api(ref m) if m.starts_with("no route") => 404,
+                Error::Api(ref m) if m.contains("unknown job") => 404,
+                _ => 400,
+            };
+            Response::json(
+                status,
+                Json::obj(vec![
+                    ("error", Json::str(e.to_string())),
+                    ("kind", Json::str(e.kind())),
+                ])
+                .to_string(),
+            )
+        }
+    }
+}
+
+/// Parse an [`AppPayload`] from its JSON form.
+pub fn payload_from_json(j: &Json) -> Result<AppPayload> {
+    match j.req_str("type")? {
+        "terasort" => Ok(AppPayload::Terasort {
+            rows: j.req_u64("rows")?,
+            maps: j.req_u64("maps")?,
+            reduces: j.req_u64("reduces")? as u32,
+            use_kernel: j.get("use_kernel").and_then(Json::as_bool).unwrap_or(false),
+        }),
+        "teragen" => Ok(AppPayload::Teragen {
+            rows: j.req_u64("rows")?,
+            maps: j.req_u64("maps")?,
+            dir: j.req_str("dir")?.to_string(),
+        }),
+        "pig" => Ok(AppPayload::PigScript {
+            script: j.req_str("script")?.to_string(),
+            reduces: j.req_u64("reduces")? as u32,
+        }),
+        "hive" => Ok(AppPayload::HiveQuery {
+            sql: j.req_str("sql")?.to_string(),
+            reduces: j.req_u64("reduces")? as u32,
+        }),
+        "rsummary" => {
+            let strs = |key: &str| -> Result<Vec<String>> {
+                j.get(key)
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(Json::as_str)
+                            .map(str::to_string)
+                            .collect()
+                    })
+                    .ok_or_else(|| Error::Codec(format!("missing array '{key}'")))
+            };
+            Ok(AppPayload::RSummary {
+                input_dir: j.req_str("input_dir")?.to_string(),
+                output_dir: j.req_str("output_dir")?.to_string(),
+                fields: strs("fields")?,
+                delimiter: j
+                    .get("delimiter")
+                    .and_then(Json::as_str)
+                    .and_then(|s| s.chars().next())
+                    .unwrap_or(','),
+                columns: strs("columns")?,
+            })
+        }
+        other => Err(Error::Api(format!("unknown payload type '{other}'"))),
+    }
+}
+
+/// Serialize an [`AppResult`].
+pub fn result_to_json(r: &AppResult) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str(r.kind)),
+        ("output_dir", Json::str(&*r.output_dir)),
+        (
+            "output_files",
+            Json::Arr(r.output_files.iter().map(|f| Json::str(&**f)).collect()),
+        ),
+        ("records", Json::num(r.records as f64)),
+        ("validated", Json::Bool(r.validated)),
+        ("wall_ms", Json::num(r.wall.as_millis() as f64)),
+        (
+            "counters",
+            Json::Obj(
+                r.counters
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn job_state_str(s: JobState) -> &'static str {
+    s.lsf_name()
+}
+
+fn parse_job_id(text: &str) -> Result<LsfJobId> {
+    text.parse::<u64>()
+        .map(LsfJobId)
+        .map_err(|_| Error::Api(format!("bad job id '{text}'")))
+}
+
+fn post_job(state: &State, req: &Request) -> Result<Response> {
+    let j = Json::parse(req.body_text()?)?;
+    let nodes = j.req_u64("nodes")? as u32;
+    let user = j.req_str("user")?.to_string();
+    let payload = payload_from_json(
+        j.get("payload")
+            .ok_or_else(|| Error::Api("missing payload".into()))?,
+    )?;
+    let mut stack = state.stack.lock().unwrap();
+    let id = stack.submit(nodes, &user, payload)?;
+    Ok(Response::json(
+        201,
+        Json::obj(vec![("job", Json::num(id.0 as f64))]).to_string(),
+    ))
+}
+
+fn list_jobs(state: &State) -> Result<Response> {
+    let stack = state.stack.lock().unwrap();
+    let jobs: Vec<Json> = stack
+        .jobs()
+        .into_iter()
+        .map(|(id, kind, s)| {
+            Json::obj(vec![
+                ("job", Json::num(id.0 as f64)),
+                ("kind", Json::str(kind)),
+                ("state", Json::str(job_state_str(s))),
+            ])
+        })
+        .collect();
+    Ok(Response::json(200, Json::Arr(jobs).to_string()))
+}
+
+fn get_job(state: &State, id: &str) -> Result<Response> {
+    let id = parse_job_id(id)?;
+    let stack = state.stack.lock().unwrap();
+    let (job_state, result) = stack
+        .job_state(id)
+        .ok_or_else(|| Error::Api(format!("unknown job {id}")))?;
+    let mut fields = vec![
+        ("job", Json::num(id.0 as f64)),
+        ("state", Json::str(job_state_str(job_state))),
+    ];
+    if let Some(r) = result {
+        fields.push(("result", result_to_json(r)));
+    }
+    if let Some(e) = stack.job_error(id) {
+        fields.push(("error", Json::str(e)));
+    }
+    Ok(Response::json(200, Json::obj(fields).to_string()))
+}
+
+fn delete_job(state: &State, id: &str) -> Result<Response> {
+    let id = parse_job_id(id)?;
+    let mut stack = state.stack.lock().unwrap();
+    stack.kill(id)?;
+    Ok(Response::json(
+        200,
+        Json::obj(vec![("killed", Json::num(id.0 as f64))]).to_string(),
+    ))
+}
+
+fn get_output(state: &State, req: &Request) -> Result<Response> {
+    let query = req.path.split('?').nth(1).unwrap_or("");
+    let path = query
+        .split('&')
+        .find_map(|kv| kv.strip_prefix("path="))
+        .ok_or_else(|| Error::Api("missing ?path=".into()))?;
+    let stack = state.stack.lock().unwrap();
+    let bytes = stack.read_output(path)?;
+    Ok(Response::bytes(200, bytes))
+}
+
+fn post_workflow(state: &State, req: &Request) -> Result<Response> {
+    let j = Json::parse(req.body_text()?)?;
+    let wf = Workflow::from_json(&j)?;
+    let mut wfs = state.workflows.lock().unwrap();
+    let id = wfs.len() as u64;
+    let mut run = WorkflowRun::new(id, wf);
+    {
+        // Kick off the first step immediately.
+        let mut stack = state.stack.lock().unwrap();
+        run.advance(&mut stack);
+    }
+    wfs.push(run);
+    Ok(Response::json(
+        201,
+        Json::obj(vec![("workflow", Json::num(id as f64))]).to_string(),
+    ))
+}
+
+fn get_workflow(state: &State, id: &str) -> Result<Response> {
+    let id: usize = id
+        .parse()
+        .map_err(|_| Error::Api(format!("bad workflow id '{id}'")))?;
+    let wfs = state.workflows.lock().unwrap();
+    let wf = wfs
+        .get(id)
+        .ok_or_else(|| Error::Api(format!("unknown job workflow {id}")))?;
+    let stack = state.stack.lock().unwrap();
+    Ok(Response::json(200, wf.to_json(&stack).to_string()))
+}

@@ -1,0 +1,529 @@
+//! The in-process orchestrator: one object owning the whole HPC Wales
+//! stack, driving the paper's execution flow (§III):
+//!
+//! submit (step 3/2) → LSF dispatch (step 4a) → wrapper builds the YARN
+//! cluster (step 4b) → application runs on it (step 4c) → teardown →
+//! outputs + logs accessible (steps 5/6).
+//!
+//! `tick()` runs one LSF dispatch cycle and executes every dispatched job
+//! to completion — Real mode is synchronous by design (the data fits in
+//! memory; determinism makes the tests honest). The HTTP API wraps this in
+//! a background pump thread.
+
+use crate::cluster::{ClusterModel, NodeId};
+use crate::config::StackConfig;
+use crate::error::{Error, Result};
+use crate::frameworks::{hive, pig, rhadoop};
+use crate::frameworks::expr::Schema;
+use crate::lustre::{Dfs, LustreFs};
+use crate::mapreduce::MrEngine;
+use crate::metrics::Metrics;
+use crate::scheduler::{JobCommand, JobState, Lsf, ResourceRequest};
+use crate::terasort::{
+    self, summarize_dir, teravalidate, TeragenSpec, TerasortJob,
+};
+use crate::util::ids::{IdGen, LsfJobId};
+use crate::util::pool::Pool;
+use crate::util::time::Micros;
+use crate::wrapper::DynamicCluster;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// What a submitted job runs inside its dynamic cluster.
+#[derive(Debug, Clone)]
+pub enum AppPayload {
+    /// Full Terasort pipeline: teragen `rows`, sort into `reduces`
+    /// partitions, teravalidate. `use_kernel` switches the map path to the
+    /// AOT Pallas kernel via PJRT.
+    Terasort {
+        rows: u64,
+        maps: u64,
+        reduces: u32,
+        use_kernel: bool,
+    },
+    /// Teragen only.
+    Teragen { rows: u64, maps: u64, dir: String },
+    /// A Pig-like script (paths inside the script).
+    PigScript { script: String, reduces: u32 },
+    /// A Hive-like query.
+    HiveQuery { sql: String, reduces: u32 },
+    /// RHadoop summary statistics over a delimited dataset.
+    RSummary {
+        input_dir: String,
+        output_dir: String,
+        fields: Vec<String>,
+        delimiter: char,
+        columns: Vec<String>,
+    },
+}
+
+impl AppPayload {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AppPayload::Terasort { .. } => "terasort",
+            AppPayload::Teragen { .. } => "teragen",
+            AppPayload::PigScript { .. } => "pig",
+            AppPayload::HiveQuery { .. } => "hive",
+            AppPayload::RSummary { .. } => "rsummary",
+        }
+    }
+}
+
+/// Result of a completed application.
+#[derive(Debug, Clone)]
+pub struct AppResult {
+    pub kind: &'static str,
+    pub output_dir: String,
+    pub output_files: Vec<String>,
+    pub records: u64,
+    pub validated: bool,
+    pub counters: Vec<(String, u64)>,
+    pub wall: std::time::Duration,
+}
+
+struct Entry {
+    payload: AppPayload,
+    user: String,
+    result: Option<Result<AppResult>>,
+}
+
+/// The orchestrator.
+pub struct Stack {
+    pub cfg: StackConfig,
+    pub cluster: ClusterModel,
+    pub lsf: Lsf,
+    pub dfs: Arc<LustreFs>,
+    pub ids: Arc<IdGen>,
+    pub metrics: Arc<Metrics>,
+    pool: Pool,
+    entries: BTreeMap<LsfJobId, Entry>,
+    now: Micros,
+}
+
+impl Stack {
+    pub fn new(cfg: StackConfig) -> Result<Stack> {
+        cfg.validate()?;
+        let cluster = ClusterModel::new(&cfg.cluster);
+        let ids = Arc::new(IdGen::default());
+        let metrics = Arc::new(Metrics::new());
+        let lsf = Lsf::new(
+            cfg.scheduler.clone(),
+            &cluster,
+            Arc::clone(&ids),
+            Arc::clone(&metrics),
+        );
+        let dfs = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(8);
+        Ok(Stack {
+            cfg,
+            cluster,
+            lsf,
+            dfs,
+            ids,
+            metrics,
+            pool: Pool::new(workers),
+            entries: BTreeMap::new(),
+            now: Micros::ZERO,
+        })
+    }
+
+    /// Submit an application to the bigdata queue (`bsub` analog).
+    pub fn submit(&mut self, nodes: u32, user: &str, payload: AppPayload) -> Result<LsfJobId> {
+        let id = self.lsf.submit(
+            ResourceRequest::bigdata(nodes, user),
+            JobCommand::wrapper(payload.kind()),
+            self.now,
+        )?;
+        self.entries.insert(
+            id,
+            Entry {
+                payload,
+                user: user.to_string(),
+                result: None,
+            },
+        );
+        Ok(id)
+    }
+
+    /// One scheduler cycle: dispatch pending jobs and run each dispatched
+    /// job to completion. Returns the ids that finished this tick.
+    pub fn tick(&mut self) -> Vec<LsfJobId> {
+        self.now += Micros::ms(self.cfg.scheduler.cycle_ms);
+        let dispatches = self.lsf.dispatch_cycle(self.now);
+        let mut finished = Vec::new();
+        for d in dispatches {
+            let outcome = self.run_dispatched(d.job, &d.nodes);
+            let ok = outcome.is_ok();
+            if let Some(e) = self.entries.get_mut(&d.job) {
+                e.result = Some(outcome);
+            }
+            if ok {
+                let _ = self.lsf.finish(d.job, self.now);
+            } else {
+                let _ = self.lsf.fail(d.job, self.now);
+            }
+            finished.push(d.job);
+        }
+        finished
+    }
+
+    /// Run ticks until `id` reaches a terminal state (or `max_ticks`).
+    pub fn run_to_completion(&mut self, id: LsfJobId, max_ticks: u32) -> Result<&AppResult> {
+        for _ in 0..max_ticks {
+            if self
+                .lsf
+                .status(id)
+                .map(|j| j.state.is_terminal())
+                .unwrap_or(false)
+            {
+                break;
+            }
+            self.tick();
+        }
+        match self.entries.get(&id).and_then(|e| e.result.as_ref()) {
+            Some(Ok(r)) => Ok(r),
+            Some(Err(e)) => Err(Error::Api(format!("job {id} failed: {e}"))),
+            None => Err(Error::Api(format!("job {id} did not complete"))),
+        }
+    }
+
+    /// Status for the API: LSF state + result summary if done.
+    pub fn job_state(&self, id: LsfJobId) -> Option<(JobState, Option<&AppResult>)> {
+        let job = self.lsf.status(id)?;
+        let result = self
+            .entries
+            .get(&id)
+            .and_then(|e| e.result.as_ref())
+            .and_then(|r| r.as_ref().ok());
+        Some((job.state, result))
+    }
+
+    pub fn job_error(&self, id: LsfJobId) -> Option<String> {
+        match self.entries.get(&id).and_then(|e| e.result.as_ref()) {
+            Some(Err(e)) => Some(e.to_string()),
+            _ => None,
+        }
+    }
+
+    /// `bkill` passthrough.
+    pub fn kill(&mut self, id: LsfJobId) -> Result<()> {
+        self.lsf.kill(id, self.now)
+    }
+
+    /// Read a result file (API step 6: data access without SSH).
+    pub fn read_output(&self, path: &str) -> Result<Vec<u8>> {
+        self.dfs.read(path)
+    }
+
+    pub fn jobs(&self) -> Vec<(LsfJobId, &'static str, JobState)> {
+        self.lsf
+            .jobs()
+            .map(|j| {
+                let kind = self
+                    .entries
+                    .get(&j.id)
+                    .map(|e| e.payload.kind())
+                    .unwrap_or("plain");
+                (j.id, kind, j.state)
+            })
+            .collect()
+    }
+
+    fn run_dispatched(&mut self, id: LsfJobId, nodes: &[NodeId]) -> Result<AppResult> {
+        let entry = self
+            .entries
+            .get(&id)
+            .ok_or_else(|| Error::Api(format!("no payload for job {id}")))?;
+        let payload = entry.payload.clone();
+        let user = entry.user.clone();
+        let tag = format!("lsf-{id}");
+        let mut dc = DynamicCluster::build(
+            &self.cfg,
+            nodes,
+            &*self.dfs,
+            Arc::clone(&self.ids),
+            Arc::clone(&self.metrics),
+            &tag,
+            self.now,
+        )?;
+        let run = self.run_payload(&mut dc, &payload, &user, &tag);
+        // Teardown happens regardless of app success; its failure only
+        // masks an app success (a dirty cluster is a wrapper bug).
+        let teardown = dc.teardown(&*self.dfs, self.now);
+        let result = run?;
+        teardown?;
+        dc.verify_clean(&*self.dfs)?;
+        Ok(result)
+    }
+
+    fn run_payload(
+        &self,
+        dc: &mut DynamicCluster,
+        payload: &AppPayload,
+        user: &str,
+        tag: &str,
+    ) -> Result<AppResult> {
+        let t0 = std::time::Instant::now();
+        let mount = self.cfg.lustre.mount.trim_end_matches('/');
+        let mut engine = MrEngine::new(
+            dc,
+            self.dfs.clone() as Arc<dyn Dfs>,
+            &self.pool,
+            self.cfg.yarn.map_memory_mb,
+            self.cfg.yarn.reduce_memory_mb,
+        );
+        match payload {
+            AppPayload::Terasort {
+                rows,
+                maps,
+                reduces,
+                use_kernel,
+            } => {
+                // Data lives OUTSIDE the wrapper staging root: outputs must
+                // survive teardown (§III step 5).
+                let in_dir = format!("{mount}/data/{tag}/tera-in");
+                let out_dir = format!("{mount}/data/{tag}/tera-out");
+                let gen = TeragenSpec {
+                    rows: *rows,
+                    maps: *maps,
+                    output_dir: in_dir.clone(),
+                    seed: self.cfg.seed,
+                };
+                terasort::run_teragen(&mut engine, &gen, self.now)?;
+                let input = summarize_dir(&*self.dfs, &in_dir)?;
+                let ts = TerasortJob {
+                    split_bytes: 4 * 1024 * 1024,
+                    ..TerasortJob::new(&in_dir, &out_dir, *reduces)
+                };
+                let outcome = if *use_kernel {
+                    let samples = terasort::sample_input(&*self.dfs, &in_dir, 1000)?;
+                    let part =
+                        terasort::RangePartitioner::from_samples(samples, *reduces)?;
+                    let client = crate::runtime::shared_client()?;
+                    let bp = crate::runtime::KernelBlockProcessor::new(client, part)?;
+                    terasort::run_terasort_with_processor(
+                        &mut engine,
+                        &ts,
+                        Arc::new(bp),
+                        self.now,
+                    )?
+                } else {
+                    terasort::run_terasort(&mut engine, &ts, None, self.now)?
+                };
+                let validated = teravalidate(&*self.dfs, &out_dir, input)?;
+                Ok(AppResult {
+                    kind: "terasort",
+                    output_dir: out_dir,
+                    output_files: outcome.output_files,
+                    records: validated.records,
+                    validated: true,
+                    counters: outcome.counters.snapshot(),
+                    wall: t0.elapsed(),
+                })
+            }
+            AppPayload::Teragen { rows, maps, dir } => {
+                let gen = TeragenSpec {
+                    rows: *rows,
+                    maps: *maps,
+                    output_dir: dir.clone(),
+                    seed: self.cfg.seed,
+                };
+                let outcome = terasort::run_teragen(&mut engine, &gen, self.now)?;
+                Ok(AppResult {
+                    kind: "teragen",
+                    output_dir: dir.clone(),
+                    output_files: outcome.output_files,
+                    records: *rows,
+                    validated: false,
+                    counters: outcome.counters.snapshot(),
+                    wall: t0.elapsed(),
+                })
+            }
+            AppPayload::PigScript { script, reduces } => {
+                let plan = pig::parse_script(script, *reduces)?;
+                let spec = plan.compile()?;
+                let out_dir = plan.output_dir.clone();
+                let outcome = engine.run(Arc::new(spec), user, self.now)?;
+                Ok(AppResult {
+                    kind: "pig",
+                    output_dir: out_dir,
+                    output_files: outcome.output_files,
+                    records: outcome.counters.get("REDUCE_OUTPUT_RECORDS"),
+                    validated: false,
+                    counters: outcome.counters.snapshot(),
+                    wall: t0.elapsed(),
+                })
+            }
+            AppPayload::HiveQuery { sql, reduces } => {
+                let plan = hive::parse_query(sql, *reduces)?;
+                let spec = plan.compile()?;
+                let out_dir = plan.output_dir.clone();
+                let outcome = engine.run(Arc::new(spec), user, self.now)?;
+                Ok(AppResult {
+                    kind: "hive",
+                    output_dir: out_dir,
+                    output_files: outcome.output_files,
+                    records: outcome.counters.get("REDUCE_OUTPUT_RECORDS"),
+                    validated: false,
+                    counters: outcome.counters.snapshot(),
+                    wall: t0.elapsed(),
+                })
+            }
+            AppPayload::RSummary {
+                input_dir,
+                output_dir,
+                fields,
+                delimiter,
+                columns,
+            } => {
+                let schema = Schema::new(
+                    &fields.iter().map(String::as_str).collect::<Vec<_>>(),
+                    *delimiter,
+                );
+                let cols: Vec<&str> = columns.iter().map(String::as_str).collect();
+                let spec = rhadoop::summary_job(input_dir, output_dir, schema, &cols)?;
+                let outcome = engine.run(Arc::new(spec), user, self.now)?;
+                Ok(AppResult {
+                    kind: "rsummary",
+                    output_dir: output_dir.clone(),
+                    output_files: outcome.output_files,
+                    records: outcome.counters.get("REDUCE_OUTPUT_RECORDS"),
+                    validated: false,
+                    counters: outcome.counters.snapshot(),
+                    wall: t0.elapsed(),
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stack() -> Stack {
+        Stack::new(StackConfig::tiny()).unwrap()
+    }
+
+    #[test]
+    fn terasort_payload_end_to_end() {
+        let mut s = stack();
+        let id = s
+            .submit(
+                6,
+                "sid",
+                AppPayload::Terasort {
+                    rows: 3_000,
+                    maps: 3,
+                    reduces: 4,
+                    use_kernel: false,
+                },
+            )
+            .unwrap();
+        let result = s.run_to_completion(id, 10).unwrap().clone();
+        assert!(result.validated);
+        assert_eq!(result.records, 3_000);
+        assert_eq!(result.output_files.len(), 4);
+        assert_eq!(s.lsf.status(id).unwrap().state, JobState::Done);
+        // Cluster is fully released.
+        assert_eq!(s.lsf.free_nodes(), 8);
+        s.lsf.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pig_payload_runs_on_stack() {
+        let mut s = stack();
+        // Stage input data on Lustre first (step: data staging).
+        s.dfs.mkdirs("/lustre/scratch/sales").unwrap();
+        s.dfs
+            .create(
+                "/lustre/scratch/sales/part-0",
+                b"wales,widget,150\nwales,sprocket,80\nengland,widget,300\nwales,widget,200\n",
+            )
+            .unwrap();
+        let script = "
+            recs = LOAD '/lustre/scratch/sales' USING ',' AS (region, product, amount);
+            big  = FILTER recs BY amount > 100;
+            grp  = GROUP big BY region;
+            out  = FOREACH grp GENERATE group, SUM(amount), COUNT(amount);
+            STORE out INTO '/lustre/scratch/sales-report';
+        ";
+        let id = s
+            .submit(
+                4,
+                "ana",
+                AppPayload::PigScript {
+                    script: script.into(),
+                    reduces: 2,
+                },
+            )
+            .unwrap();
+        let result = s.run_to_completion(id, 10).unwrap().clone();
+        let mut text = String::new();
+        for f in &result.output_files {
+            text.push_str(&String::from_utf8(s.read_output(f).unwrap()).unwrap());
+        }
+        let lines = crate::frameworks::plan::sorted_result_lines(&text);
+        assert_eq!(lines, vec!["england\t300\t1", "wales\t350\t2"]);
+    }
+
+    #[test]
+    fn failed_payload_marks_job_exited() {
+        let mut s = stack();
+        // Hive query over a missing input dir fails inside the cluster.
+        let id = s
+            .submit(
+                4,
+                "bob",
+                AppPayload::HiveQuery {
+                    sql: "SELECT COUNT(a) FROM '/lustre/scratch/nope' SCHEMA (a) INTO '/lustre/scratch/x'"
+                        .into(),
+                    reduces: 1,
+                },
+            )
+            .unwrap();
+        s.tick();
+        assert_eq!(s.lsf.status(id).unwrap().state, JobState::Exited);
+        assert!(s.job_error(id).unwrap().contains("no input files"));
+        // Nodes released even on failure.
+        assert_eq!(s.lsf.free_nodes(), 8);
+    }
+
+    #[test]
+    fn queueing_two_big_jobs_serialize() {
+        let mut s = stack();
+        let mk = || AppPayload::Teragen {
+            rows: 500,
+            maps: 2,
+            dir: String::new(),
+        };
+        let a = s
+            .submit(8, "u1", {
+                let mut p = mk();
+                if let AppPayload::Teragen { dir, .. } = &mut p {
+                    *dir = "/lustre/scratch/g1".into();
+                }
+                p
+            })
+            .unwrap();
+        let b = s
+            .submit(8, "u2", {
+                let mut p = mk();
+                if let AppPayload::Teragen { dir, .. } = &mut p {
+                    *dir = "/lustre/scratch/g2".into();
+                }
+                p
+            })
+            .unwrap();
+        let first = s.tick();
+        assert_eq!(first, vec![a]);
+        assert_eq!(s.lsf.status(b).unwrap().state, JobState::Pending);
+        let second = s.tick();
+        assert_eq!(second, vec![b]);
+        assert!(s.dfs.exists("/lustre/scratch/g1/_SUCCESS"));
+        assert!(s.dfs.exists("/lustre/scratch/g2/_SUCCESS"));
+    }
+}

@@ -1,0 +1,215 @@
+//! SynfiniWay-style workflows: named multi-step flows submitted through
+//! the API (§II: "the Fujitsu SynfiniWay framework to enable job
+//! submission via a web interface and high-level API"; §III step 2:
+//! "SynfiniWay submits the job into the scheduler based on the custom
+//! workflows").
+//!
+//! A workflow is an ordered list of application payloads; step *i+1* is
+//! submitted only after step *i*'s LSF job reaches a terminal state, and a
+//! failed step aborts the rest — the behaviour scientific pipelines
+//! (stage-in → analyse → report) rely on.
+
+use crate::api::server::payload_from_json;
+use crate::api::stack::{AppPayload, Stack};
+use crate::codec::json::Json;
+use crate::error::{Error, Result};
+use crate::scheduler::JobState;
+use crate::util::ids::LsfJobId;
+
+/// A workflow definition.
+#[derive(Debug, Clone)]
+pub struct Workflow {
+    pub name: String,
+    pub user: String,
+    /// Nodes requested for every step's LSF job.
+    pub nodes: u32,
+    pub steps: Vec<AppPayload>,
+}
+
+impl Workflow {
+    pub fn from_json(j: &Json) -> Result<Workflow> {
+        let steps_json = j
+            .get("steps")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Api("workflow needs steps[]".into()))?;
+        if steps_json.is_empty() {
+            return Err(Error::Api("workflow with no steps".into()));
+        }
+        let steps: Result<Vec<AppPayload>> = steps_json.iter().map(payload_from_json).collect();
+        Ok(Workflow {
+            name: j.req_str("name")?.to_string(),
+            user: j.req_str("user")?.to_string(),
+            nodes: j.req_u64("nodes")? as u32,
+            steps: steps?,
+        })
+    }
+}
+
+/// Execution state of one workflow.
+#[derive(Debug)]
+pub struct WorkflowRun {
+    pub id: u64,
+    pub workflow: Workflow,
+    /// LSF job per already-submitted step.
+    pub jobs: Vec<LsfJobId>,
+    pub aborted: bool,
+}
+
+impl WorkflowRun {
+    pub fn new(id: u64, workflow: Workflow) -> WorkflowRun {
+        WorkflowRun {
+            id,
+            workflow,
+            jobs: Vec::new(),
+            aborted: false,
+        }
+    }
+
+    /// Advance: submit the next step if the previous one finished cleanly.
+    /// Called from the API pump with the stack lock held.
+    pub fn advance(&mut self, stack: &mut Stack) {
+        if self.aborted || self.jobs.len() >= self.workflow.steps.len() + 1 {
+            return;
+        }
+        // Check the last submitted step.
+        if let Some(&last) = self.jobs.last() {
+            match stack.lsf.status(last).map(|j| j.state) {
+                Some(JobState::Done) => {}
+                Some(s) if s.is_terminal() => {
+                    self.aborted = true; // failed or killed → stop the flow
+                    return;
+                }
+                _ => return, // still pending/running
+            }
+        }
+        let next_idx = self.jobs.len();
+        if next_idx >= self.workflow.steps.len() {
+            return; // all done
+        }
+        let payload = self.workflow.steps[next_idx].clone();
+        match stack.submit(self.workflow.nodes, &self.workflow.user, payload) {
+            Ok(id) => self.jobs.push(id),
+            Err(_) => self.aborted = true,
+        }
+    }
+
+    /// Finished successfully?
+    pub fn is_complete(&self, stack: &Stack) -> bool {
+        !self.aborted
+            && self.jobs.len() == self.workflow.steps.len()
+            && self
+                .jobs
+                .iter()
+                .all(|&j| stack.lsf.status(j).map(|x| x.state) == Some(JobState::Done))
+    }
+
+    pub fn to_json(&self, stack: &Stack) -> Json {
+        let steps: Vec<Json> = self
+            .workflow
+            .steps
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let mut fields = vec![
+                    ("step", Json::num(i as f64)),
+                    ("type", Json::str(p.kind())),
+                ];
+                if let Some(&job) = self.jobs.get(i) {
+                    fields.push(("job", Json::num(job.0 as f64)));
+                    if let Some(j) = stack.lsf.status(job) {
+                        fields.push(("state", Json::str(j.state.lsf_name())));
+                    }
+                } else {
+                    fields.push(("state", Json::str("WAITING")));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("workflow", Json::num(self.id as f64)),
+            ("name", Json::str(&*self.workflow.name)),
+            ("aborted", Json::Bool(self.aborted)),
+            ("complete", Json::Bool(self.is_complete(stack))),
+            ("steps", Json::Arr(steps)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+    use crate::lustre::Dfs as _;
+
+    fn teragen(dir: &str) -> AppPayload {
+        AppPayload::Teragen {
+            rows: 400,
+            maps: 2,
+            dir: dir.to_string(),
+        }
+    }
+
+    #[test]
+    fn steps_run_in_order() {
+        let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+        let wf = Workflow {
+            name: "pipeline".into(),
+            user: "sid".into(),
+            nodes: 4,
+            steps: vec![
+                teragen("/lustre/scratch/wf-a"),
+                teragen("/lustre/scratch/wf-b"),
+            ],
+        };
+        let mut run = WorkflowRun::new(0, wf);
+        run.advance(&mut stack);
+        assert_eq!(run.jobs.len(), 1);
+        // Step 2 must not be submitted before step 1 completes.
+        run.advance(&mut stack);
+        assert_eq!(run.jobs.len(), 1);
+        stack.tick(); // runs step 1
+        run.advance(&mut stack);
+        assert_eq!(run.jobs.len(), 2);
+        stack.tick();
+        assert!(run.is_complete(&stack));
+        assert!(stack.dfs.exists("/lustre/scratch/wf-a/_SUCCESS"));
+        assert!(stack.dfs.exists("/lustre/scratch/wf-b/_SUCCESS"));
+    }
+
+    #[test]
+    fn failed_step_aborts_flow() {
+        let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+        let wf = Workflow {
+            name: "broken".into(),
+            user: "sid".into(),
+            nodes: 4,
+            steps: vec![
+                AppPayload::HiveQuery {
+                    sql: "SELECT COUNT(a) FROM '/lustre/scratch/missing' SCHEMA (a) INTO '/lustre/scratch/wf-x'".into(),
+                    reduces: 1,
+                },
+                teragen("/lustre/scratch/wf-never"),
+            ],
+        };
+        let mut run = WorkflowRun::new(0, wf);
+        run.advance(&mut stack);
+        stack.tick(); // step 1 fails
+        run.advance(&mut stack);
+        assert!(run.aborted);
+        assert_eq!(run.jobs.len(), 1);
+        assert!(!stack.dfs.exists("/lustre/scratch/wf-never"));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let j = Json::parse(
+            r#"{"name":"wf","user":"u","nodes":4,
+                "steps":[{"type":"teragen","rows":10,"maps":1,"dir":"/d"}]}"#,
+        )
+        .unwrap();
+        let wf = Workflow::from_json(&j).unwrap();
+        assert_eq!(wf.steps.len(), 1);
+        assert_eq!(wf.steps[0].kind(), "teragen");
+        assert!(Workflow::from_json(&Json::parse(r#"{"name":"x","user":"u","nodes":1,"steps":[]}"#).unwrap()).is_err());
+    }
+}

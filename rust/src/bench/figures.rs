@@ -1,0 +1,182 @@
+//! The experiment generators: one per paper figure + the ablations.
+
+use crate::bench::{emit, secs};
+use crate::cluster::interconnect::Transport;
+use crate::config::StackConfig;
+use crate::lustre::{Dfs, HdfsLikeFs, LustreFs};
+use crate::mapreduce::sim::{map_slots, simulate_mr, MrWorkload};
+use crate::wrapper::sim::fig3_sweep;
+
+/// Node counts for the core sweeps (×16 cores each: 128 → 2,048 cores,
+/// plus the 113-node point that brackets the paper's 1,800-core optimum).
+pub const SWEEP_NODES: &[u32] = &[8, 16, 32, 56, 88, 113, 120, 128];
+
+const TB: f64 = 1e12;
+
+/// FIG3: wrapper create + teardown vs cores (no application in between).
+pub fn fig3(cfg: &StackConfig, reps: u32) -> Vec<(u32, f64, f64, f64)> {
+    let rows = fig3_sweep(cfg, SWEEP_NODES, reps);
+    emit(
+        "fig3_wrapper",
+        &["cores", "create_s", "teardown_s", "total_s"],
+        &rows
+            .iter()
+            .map(|(c, cr, td, t)| vec![c.to_string(), secs(*cr), secs(*td), secs(*t)])
+            .collect::<Vec<_>>(),
+    );
+    rows
+}
+
+/// FIG4: Teragen of 1 TB vs cores. Returns `(cores, total_s, bottleneck)`.
+pub fn fig4(cfg: &StackConfig) -> Vec<(u32, f64, &'static str)> {
+    let lustre = LustreFs::new(&cfg.lustre, &cfg.cluster);
+    let mut rows = Vec::new();
+    for &nodes in SWEEP_NODES {
+        let w = MrWorkload::teragen_shape(cfg, nodes, TB);
+        let r = simulate_mr(cfg, &lustre.model(nodes), &w);
+        rows.push((nodes * cfg.cluster.cores_per_node, r.total_s, r.bottleneck));
+    }
+    emit(
+        "fig4_teragen",
+        &["cores", "mappers", "total_s", "bottleneck"],
+        &rows
+            .iter()
+            .zip(SWEEP_NODES)
+            .map(|((c, t, b), &n)| {
+                vec![
+                    c.to_string(),
+                    map_slots(cfg, n).to_string(),
+                    secs(*t),
+                    b.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    rows
+}
+
+/// FIG5: Terasort of 1 TB vs cores. Returns
+/// `(cores, map_s, shuffle_s, reduce_s, total_s)`.
+pub fn fig5(cfg: &StackConfig) -> Vec<(u32, f64, f64, f64, f64)> {
+    let lustre = LustreFs::new(&cfg.lustre, &cfg.cluster);
+    let mut rows = Vec::new();
+    for &nodes in SWEEP_NODES {
+        let w = MrWorkload::terasort_shape(cfg, nodes, TB);
+        let r = simulate_mr(cfg, &lustre.model(nodes), &w);
+        rows.push((
+            nodes * cfg.cluster.cores_per_node,
+            r.map_s,
+            r.shuffle_s,
+            r.reduce_s,
+            r.total_s,
+        ));
+    }
+    emit(
+        "fig5_terasort",
+        &["cores", "map_s", "shuffle_s", "reduce_s", "total_s"],
+        &rows
+            .iter()
+            .map(|(c, m, s, r, t)| {
+                vec![c.to_string(), secs(*m), secs(*s), secs(*r), secs(*t)]
+            })
+            .collect::<Vec<_>>(),
+    );
+    rows
+}
+
+/// ABL-FS: Terasort on Lustre vs HDFS-on-DAS, including the capacity wall.
+/// Returns `(cores, lustre_s, hdfs_s_or_nan, hdfs_fits)`.
+pub fn ablation_fs(cfg: &StackConfig) -> Vec<(u32, f64, f64, bool)> {
+    let lustre = LustreFs::new(&cfg.lustre, &cfg.cluster);
+    let hdfs = HdfsLikeFs::new(&cfg.cluster);
+    let mut rows = Vec::new();
+    for &nodes in SWEEP_NODES {
+        let w = MrWorkload::terasort_shape(cfg, nodes, TB);
+        let tl = simulate_mr(cfg, &lustre.model(nodes), &w).total_s;
+        let hm = hdfs.model(nodes);
+        // Footprint: input + output, replicated 3×.
+        let fits = hm.fits(2.0 * TB);
+        let th = if fits {
+            simulate_mr(cfg, &hm, &w).total_s
+        } else {
+            f64::NAN
+        };
+        rows.push((nodes * cfg.cluster.cores_per_node, tl, th, fits));
+    }
+    emit(
+        "ablation_fs",
+        &["cores", "lustre_s", "hdfs_das_s", "hdfs_fits_1tb"],
+        &rows
+            .iter()
+            .map(|(c, l, h, f)| {
+                vec![
+                    c.to_string(),
+                    secs(*l),
+                    if h.is_nan() { "DNF(capacity)".into() } else { secs(*h) },
+                    f.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    rows
+}
+
+/// ABL-RPC: shuffle phase under Hadoop-RPC vs native transport (Lu et al.
+/// [15]). Few reducers isolate the per-stream gap, as in their setup.
+/// Returns `(reducers, rpc_shuffle_s, native_shuffle_s, speedup)`.
+pub fn ablation_transport(cfg: &StackConfig) -> Vec<(u32, f64, f64, f64)> {
+    let lustre = LustreFs::new(&cfg.lustre, &cfg.cluster);
+    let nodes = 64;
+    let fs = lustre.model(nodes);
+    let mut rows = Vec::new();
+    for &reduces in &[2u32, 4, 8, 16, 64, 256] {
+        let mut w = MrWorkload::terasort_shape(cfg, nodes, TB);
+        w.n_reduces = reduces;
+        w.transport = Transport::HadoopRpc;
+        let rpc = simulate_mr(cfg, &fs, &w).shuffle_s;
+        w.transport = Transport::Native;
+        let native = simulate_mr(cfg, &fs, &w).shuffle_s;
+        rows.push((reduces, rpc, native, rpc / native));
+    }
+    emit(
+        "ablation_transport",
+        &["reducers", "rpc_shuffle_s", "native_shuffle_s", "speedup"],
+        &rows
+            .iter()
+            .map(|(r, a, b, s)| {
+                vec![r.to_string(), secs(*a), secs(*b), format!("{s:.1}")]
+            })
+            .collect::<Vec<_>>(),
+    );
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_optimum_bracketed() {
+        let cfg = StackConfig::paper();
+        let rows = fig4(&cfg);
+        let best = rows.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+        assert!((1500..2040).contains(&best.0), "optimum at {}", best.0);
+    }
+
+    #[test]
+    fn ablation_fs_capacity_wall() {
+        let cfg = StackConfig::paper();
+        let rows = ablation_fs(&cfg);
+        // Small allocations cannot hold 1 TB on HDFS-DAS; big ones can.
+        assert!(!rows[0].3, "8 nodes must not fit 6 TB");
+        assert!(rows.last().unwrap().3);
+    }
+
+    #[test]
+    fn transport_gap_largest_at_few_streams() {
+        let cfg = StackConfig::paper();
+        let rows = ablation_transport(&cfg);
+        assert!(rows[0].3 > rows.last().unwrap().3);
+        assert!(rows[0].3 > 10.0, "few-stream speedup {}", rows[0].3);
+    }
+}

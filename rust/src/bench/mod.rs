@@ -1,0 +1,43 @@
+//! Figure/table generators shared by the `benches/` binaries.
+//!
+//! Every generator prints the same rows the paper reports and writes a CSV
+//! under `bench_out/` so the series can be plotted. Absolute values come
+//! from the calibrated Sim data plane (DESIGN.md §2); the assertions that
+//! the *shapes* match the paper live in the module tests and in
+//! EXPERIMENTS.md.
+
+pub mod figures;
+pub mod sched;
+
+pub use figures::*;
+pub use sched::ablation_sched;
+
+use crate::codec::csv::CsvWriter;
+use std::path::PathBuf;
+
+/// Where bench CSVs land.
+pub fn out_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_out")
+}
+
+/// Print a table and write it to CSV.
+pub fn emit(name: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {name} ==");
+    println!("{}", header.join("\t"));
+    let mut csv = CsvWriter::new(header);
+    for r in rows {
+        println!("{}", r.join("\t"));
+        csv.row(r);
+    }
+    let path = out_dir().join(format!("{name}.csv"));
+    if let Err(e) = csv.write_file(&path) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("-> {}", path.display());
+    }
+}
+
+/// Format seconds for display: `"123.4"`.
+pub fn secs(v: f64) -> String {
+    format!("{v:.1}")
+}

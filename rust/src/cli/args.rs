@@ -1,0 +1,92 @@
+//! Tiny argv parser (clap is not vendored): one optional subcommand,
+//! `--flag` booleans, `--key value` options.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: Vec<String>,
+    opts: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv` (excluding the program name).
+    pub fn parse(argv: Vec<String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Api("bare '--' not supported".into()));
+                }
+                // `--key value` when the next token is not another flag;
+                // otherwise a boolean flag.
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.opts.insert(name.to_string(), v);
+                    }
+                    _ => out.flags.push(name.to_string()),
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                return Err(Error::Api(format!("unexpected positional '{a}'")));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<String> {
+        self.opts.get(name).cloned()
+    }
+
+    pub fn num(&self, name: &str) -> Option<u64> {
+        self.opts.get(name).and_then(|v| v.parse().ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn subcommand_flags_and_options() {
+        let a = Args::parse(argv("terasort --rows 1000 --kernel --reduces 4")).unwrap();
+        assert_eq!(a.command.as_deref(), Some("terasort"));
+        assert_eq!(a.num("rows"), Some(1000));
+        assert_eq!(a.num("reduces"), Some(4));
+        assert!(a.flag("kernel"));
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.num("missing"), None);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = Args::parse(argv("serve --tiny")).unwrap();
+        assert!(a.flag("tiny"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(argv("x --kernel --rows 5")).unwrap();
+        assert!(a.flag("kernel"));
+        assert_eq!(a.num("rows"), Some(5));
+    }
+
+    #[test]
+    fn double_positional_rejected() {
+        assert!(Args::parse(argv("a b")).is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! The `hpcw` command-line interface (the leader entrypoint).
+//!
+//! Subcommands:
+//! * `hpcw figures [--reps N] [--jobs N]` — regenerate every paper figure
+//!   and ablation (Sim data plane), CSVs in `bench_out/`.
+//! * `hpcw terasort --rows N [--nodes N] [--maps N] [--reduces N]
+//!   [--kernel]` — run the real pipeline end to end and validate.
+//! * `hpcw pig --file SCRIPT [--reduces N]` — run a Pig-like script.
+//! * `hpcw hive --sql QUERY [--reduces N]` — run a Hive-like query.
+//! * `hpcw wrapper --nodes N` — simulate one wrapper create/teardown and
+//!   print the phase timeline (Fig 3's single point).
+//! * `hpcw serve [--config FILE]` — start the SynfiniWay-style API server
+//!   and block.
+
+pub mod args;
+
+use crate::api::{ApiServer, AppPayload, Stack};
+use crate::bench;
+use crate::config::StackConfig;
+use crate::error::{Error, Result};
+use crate::wrapper::sim::simulate_wrapper;
+use args::Args;
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("hpcw: error: {e}");
+            1
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<StackConfig> {
+    match args.opt("config") {
+        Some(path) => StackConfig::from_file(std::path::Path::new(&path)),
+        None => Ok(if args.flag("tiny") {
+            StackConfig::tiny()
+        } else {
+            StackConfig::paper()
+        }),
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_deref() {
+        Some("figures") => cmd_figures(&args),
+        Some("terasort") => cmd_terasort(&args),
+        Some("pig") => cmd_pig(&args),
+        Some("hive") => cmd_hive(&args),
+        Some("wrapper") => cmd_wrapper(&args),
+        Some("serve") => cmd_serve(&args),
+        Some(other) => Err(Error::Api(format!("unknown subcommand '{other}'\n{USAGE}"))),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage: hpcw <figures|terasort|pig|hive|wrapper|serve> [options]
+  figures   [--reps N] [--jobs N]           regenerate paper figures (sim)
+  terasort  --rows N [--nodes N] [--maps N] [--reduces N] [--kernel] [--tiny]
+  pig       --file SCRIPT [--reduces N] [--tiny]
+  hive      --sql QUERY [--reduces N] [--tiny]
+  wrapper   --nodes N                       one simulated create/teardown
+  serve     [--config FILE] [--tiny]        start the API server";
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let reps = args.num("reps").unwrap_or(5) as u32;
+    let jobs = args.num("jobs").unwrap_or(120) as u32;
+    bench::fig3(&cfg, reps);
+    bench::fig4(&cfg);
+    bench::fig5(&cfg);
+    bench::ablation_fs(&cfg);
+    bench::ablation_transport(&cfg);
+    bench::ablation_sched(&cfg, jobs);
+    println!("\nall figures regenerated into bench_out/");
+    Ok(())
+}
+
+fn cmd_terasort(args: &Args) -> Result<()> {
+    let mut cfg = StackConfig::tiny();
+    let nodes = args.num("nodes").unwrap_or(8) as u32;
+    cfg.cluster.nodes = nodes.max(3);
+    let rows = args
+        .num("rows")
+        .ok_or_else(|| Error::Api("terasort needs --rows".into()))?;
+    let payload = AppPayload::Terasort {
+        rows,
+        maps: args.num("maps").unwrap_or(4),
+        reduces: args.num("reduces").unwrap_or(4) as u32,
+        use_kernel: args.flag("kernel"),
+    };
+    let mut stack = Stack::new(cfg)?;
+    let id = stack.submit(nodes, &whoami(), payload)?;
+    println!("submitted LSF job {id}");
+    let result = stack.run_to_completion(id, 50)?;
+    println!(
+        "validated={} records={} wall={:.2}s output={}",
+        result.validated,
+        result.records,
+        result.wall.as_secs_f64(),
+        result.output_dir
+    );
+    Ok(())
+}
+
+fn cmd_pig(args: &Args) -> Result<()> {
+    let path = args
+        .opt("file")
+        .ok_or_else(|| Error::Api("pig needs --file".into()))?;
+    let script = std::fs::read_to_string(&path)
+        .map_err(|e| Error::Api(format!("read {path}: {e}")))?;
+    run_query(
+        args,
+        AppPayload::PigScript {
+            script,
+            reduces: args.num("reduces").unwrap_or(2) as u32,
+        },
+    )
+}
+
+fn cmd_hive(args: &Args) -> Result<()> {
+    let sql = args
+        .opt("sql")
+        .ok_or_else(|| Error::Api("hive needs --sql".into()))?;
+    run_query(
+        args,
+        AppPayload::HiveQuery {
+            sql,
+            reduces: args.num("reduces").unwrap_or(2) as u32,
+        },
+    )
+}
+
+fn run_query(args: &Args, payload: AppPayload) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mut stack = Stack::new(cfg)?;
+    let nodes = args.num("nodes").unwrap_or(4) as u32;
+    let id = stack.submit(nodes, &whoami(), payload)?;
+    let result = stack.run_to_completion(id, 50)?.clone();
+    println!("job {id} done; {} output files:", result.output_files.len());
+    for f in &result.output_files {
+        let text = String::from_utf8_lossy(&stack.read_output(f)?).to_string();
+        print!("{text}");
+    }
+    Ok(())
+}
+
+fn cmd_wrapper(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let nodes = args.num("nodes").unwrap_or(16) as u32;
+    let p = simulate_wrapper(&cfg, nodes.max(3), 0);
+    println!("wrapper timing for {} nodes ({} cores):", p.nodes, p.cores);
+    println!("  env setup      {:>8.2}s", p.env_setup_s);
+    println!("  lustre dirs    {:>8.2}s", p.shared_dirs_s);
+    println!("  RM + JHS up    {:>8.2}s", p.daemons_s);
+    println!("  NM fan-out     {:>8.2}s", p.nm_phase_s);
+    println!("  create total   {:>8.2}s", p.create_s);
+    println!("  teardown       {:>8.2}s", p.teardown_s);
+    println!("  TOTAL          {:>8.2}s", p.total_s());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let stack = Stack::new(cfg)?;
+    let server = ApiServer::start(stack)?;
+    println!("hpcw API serving on http://{} (Ctrl-C to stop)", server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn whoami() -> String {
+    std::env::var("USER").unwrap_or_else(|_| "hpcw".into())
+}

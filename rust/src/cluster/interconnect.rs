@@ -1,0 +1,109 @@
+//! Interconnect model: per-node InfiniBand links into a non-blocking-ish
+//! fabric with a configurable bisection factor.
+//!
+//! The paper's shuffle traffic crosses IB; the HDFS ablation crosses the
+//! same links; the RPC-transport ablation (ABL-RPC, Lu et al. [15]) swaps
+//! the per-stream efficiency while the physical link stays the same.
+
+use crate::config::ClusterConfig;
+use crate::util::time::Micros;
+
+/// Transport efficiency regimes for a logical stream on top of the fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transport {
+    /// Hadoop RPC / HTTP shuffle: per-stream software ceiling, far below
+    /// the link rate (Lu et al. measure ~1/100 of MPI).
+    HadoopRpc,
+    /// Native verbs / MPI-class transport.
+    Native,
+}
+
+/// Fabric + NIC model.
+#[derive(Debug, Clone)]
+pub struct Interconnect {
+    /// Per-node NIC bandwidth, bytes/s.
+    pub nic_bps: f64,
+    /// One-hop latency.
+    pub hop_latency: Micros,
+    /// Fraction of aggregate NIC bandwidth the core fabric can carry
+    /// (1.0 = full bisection; HPC Wales hub fat-tree ≈ 0.75 after blocking).
+    pub bisection_factor: f64,
+    node_count: u32,
+}
+
+impl Interconnect {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        Interconnect {
+            nic_bps: cfg.ib_gbps * 1e9 / 8.0,
+            hop_latency: Micros((cfg.ib_latency_us.max(0.0)) as u64),
+            bisection_factor: 0.75,
+            node_count: cfg.nodes,
+        }
+    }
+
+    /// Aggregate cross-fabric capacity when `nodes` nodes talk all-to-all,
+    /// bytes/s.
+    pub fn bisection_bps(&self, nodes: u32) -> f64 {
+        let nodes = nodes.min(self.node_count).max(1);
+        nodes as f64 * self.nic_bps * self.bisection_factor
+    }
+
+    /// Effective bandwidth of one logical stream under a transport.
+    pub fn stream_bps(&self, transport: Transport, per_stream_soft_cap: f64) -> f64 {
+        match transport {
+            Transport::HadoopRpc => per_stream_soft_cap.min(self.nic_bps),
+            Transport::Native => self.nic_bps,
+        }
+    }
+
+    /// Latency-inclusive point-to-point transfer time for `bytes` at a given
+    /// achieved rate.
+    pub fn transfer_time(&self, bytes: f64, rate_bps: f64) -> Micros {
+        let rate = rate_bps.min(self.nic_bps).max(1.0);
+        self.hop_latency + Micros::from_secs_f64(bytes / rate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn ic() -> Interconnect {
+        Interconnect::new(&ClusterConfig::default())
+    }
+
+    #[test]
+    fn nic_rate_matches_config() {
+        let i = ic();
+        // 32 Gbit/s = 4 GB/s.
+        assert!((i.nic_bps - 4e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn bisection_scales_with_nodes_but_capped() {
+        let i = ic();
+        let b64 = i.bisection_bps(64);
+        let b128 = i.bisection_bps(128);
+        let b_many = i.bisection_bps(10_000); // capped at cluster size
+        assert!(b128 > b64);
+        assert_eq!(b128, b_many);
+    }
+
+    #[test]
+    fn rpc_transport_caps_stream() {
+        let i = ic();
+        let rpc = i.stream_bps(Transport::HadoopRpc, 30e6);
+        let native = i.stream_bps(Transport::Native, 30e6);
+        assert!(native / rpc > 50.0, "native={native} rpc={rpc}");
+    }
+
+    #[test]
+    fn transfer_time_includes_latency() {
+        let i = ic();
+        let t = i.transfer_time(0.0, 1e9);
+        assert_eq!(t, i.hop_latency);
+        let t2 = i.transfer_time(4e9, 4e9);
+        assert!((t2.as_secs_f64() - 1.0).abs() < 0.01);
+    }
+}

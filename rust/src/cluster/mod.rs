@@ -1,0 +1,212 @@
+//! The machine model: nodes, campuses, interconnect, node-local storage.
+//!
+//! This is the synthetic stand-in for the HPC Wales estate (§II): the
+//! experiment pool is the Sandy Bridge hub; hostnames, core counts, memory
+//! and DAS match the §VI hardware table. Node state supports failure
+//! injection for the fault-tolerance tests.
+
+pub mod interconnect;
+
+pub use interconnect::Interconnect;
+
+use crate::config::{ClusterConfig, CpuGen};
+use crate::error::{Error, Result};
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// Dense node identifier within a [`ClusterModel`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub u32);
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{:04}", self.0)
+    }
+}
+
+/// Liveness of a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    Up,
+    /// Administratively removed from scheduling (maintenance).
+    Drained,
+    /// Crashed (failure injection); jobs on it are lost.
+    Down,
+}
+
+/// One compute node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub cores: u32,
+    pub mem_mb: u64,
+    pub das_mb: u64,
+    pub cpu: CpuGen,
+    pub state: NodeState,
+}
+
+impl Node {
+    /// LSF-style hostname, e.g. `sbd0007` for Sandy Bridge node 7.
+    pub fn hostname(&self) -> String {
+        let prefix = match self.cpu {
+            CpuGen::SandyBridgeEp => "sbd",
+            CpuGen::Westmere => "wmr",
+        };
+        format!("{prefix}{:04}", self.id.0)
+    }
+}
+
+/// The experiment cluster: a flat pool of identical nodes plus the
+/// interconnect model. (Cross-campus topology lives in
+/// [`crate::config::CampusConfig`] and is exercised by topology tests; jobs
+/// in the paper never span campuses.)
+#[derive(Debug, Clone)]
+pub struct ClusterModel {
+    nodes: Vec<Node>,
+    pub interconnect: Interconnect,
+    cores_per_node: u32,
+}
+
+impl ClusterModel {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        let nodes = (0..cfg.nodes)
+            .map(|i| Node {
+                id: NodeId(i),
+                cores: cfg.cores_per_node,
+                mem_mb: cfg.mem_gb as u64 * 1024,
+                das_mb: cfg.das_gb as u64 * 1024,
+                cpu: cfg.cpu,
+                state: NodeState::Up,
+            })
+            .collect();
+        ClusterModel {
+            nodes,
+            interconnect: Interconnect::new(cfg),
+            cores_per_node: cfg.cores_per_node,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn cores_per_node(&self) -> u32 {
+        self.cores_per_node
+    }
+
+    pub fn node(&self, id: NodeId) -> Result<&Node> {
+        self.nodes
+            .get(id.0 as usize)
+            .ok_or_else(|| Error::Config(format!("unknown node {id}")))
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> Result<&mut Node> {
+        self.nodes
+            .get_mut(id.0 as usize)
+            .ok_or_else(|| Error::Config(format!("unknown node {id}")))
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter()
+    }
+
+    /// Ids of nodes currently schedulable.
+    pub fn up_nodes(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.state == NodeState::Up)
+            .map(|n| n.id)
+            .collect()
+    }
+
+    pub fn up_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.state == NodeState::Up).count()
+    }
+
+    /// Total cores across Up nodes.
+    pub fn up_cores(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| n.state == NodeState::Up)
+            .map(|n| n.cores as u64)
+            .sum()
+    }
+
+    /// Failure injection: mark a node down. Returns previous state.
+    pub fn fail_node(&mut self, id: NodeId) -> Result<NodeState> {
+        let n = self.node_mut(id)?;
+        let prev = n.state;
+        n.state = NodeState::Down;
+        Ok(prev)
+    }
+
+    /// Bring a node back.
+    pub fn restore_node(&mut self, id: NodeId) -> Result<()> {
+        self.node_mut(id)?.state = NodeState::Up;
+        Ok(())
+    }
+
+    pub fn drain_node(&mut self, id: NodeId) -> Result<()> {
+        self.node_mut(id)?.state = NodeState::Drained;
+        Ok(())
+    }
+
+    /// Validate that a set of node ids exists and is Up (allocation check).
+    pub fn assert_allocatable(&self, ids: &BTreeSet<NodeId>) -> Result<()> {
+        for &id in ids {
+            let n = self.node(id)?;
+            if n.state != NodeState::Up {
+                return Err(Error::Sched(format!("node {id} is not up")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    #[test]
+    fn paper_pool_shape() {
+        let m = ClusterModel::new(&ClusterConfig::default());
+        assert_eq!(m.len(), 128);
+        let n = m.node(NodeId(0)).unwrap();
+        assert_eq!(n.cores, 16);
+        assert_eq!(n.mem_mb, 64 * 1024);
+        assert_eq!(n.das_mb, 414 * 1024);
+        assert_eq!(n.hostname(), "sbd0000");
+    }
+
+    #[test]
+    fn failure_injection_changes_counts() {
+        let mut m = ClusterModel::new(&ClusterConfig::tiny());
+        let before = m.up_count();
+        m.fail_node(NodeId(2)).unwrap();
+        assert_eq!(m.up_count(), before - 1);
+        assert!(!m.up_nodes().contains(&NodeId(2)));
+        m.restore_node(NodeId(2)).unwrap();
+        assert_eq!(m.up_count(), before);
+    }
+
+    #[test]
+    fn allocatable_check_rejects_down_nodes() {
+        let mut m = ClusterModel::new(&ClusterConfig::tiny());
+        m.fail_node(NodeId(1)).unwrap();
+        let ids: BTreeSet<NodeId> = [NodeId(0), NodeId(1)].into_iter().collect();
+        assert!(m.assert_allocatable(&ids).is_err());
+        let ok: BTreeSet<NodeId> = [NodeId(0), NodeId(3)].into_iter().collect();
+        m.assert_allocatable(&ok).unwrap();
+    }
+
+    #[test]
+    fn unknown_node_errors() {
+        let m = ClusterModel::new(&ClusterConfig::tiny());
+        assert!(m.node(NodeId(10_000)).is_err());
+    }
+}

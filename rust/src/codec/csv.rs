@@ -1,0 +1,109 @@
+//! Tiny CSV writer for bench output (`bench_out/*.csv`), with RFC-4180
+//! quoting. Write-only: nothing in the stack parses CSV.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Accumulates rows, writes a file atomically at the end.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        CsvWriter {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience for numeric benches.
+    pub fn rowf(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|v| format!("{v}")).collect::<Vec<_>>());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        push_row(&mut out, &self.header);
+        for r in &self.rows {
+            push_row(&mut out, r);
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write_file(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+fn push_row(out: &mut String, cells: &[String]) {
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if c.contains(',') || c.contains('"') || c.contains('\n') {
+            out.push('"');
+            out.push_str(&c.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(c);
+        }
+    }
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut w = CsvWriter::new(&["cores", "seconds"]);
+        w.rowf(&[16.0, 31.5]);
+        w.rowf(&[32.0, 33.0]);
+        let text = w.to_string();
+        assert_eq!(text, "cores,seconds\n16,31.5\n32,33\n");
+    }
+
+    #[test]
+    fn quotes_when_needed() {
+        let mut w = CsvWriter::new(&["a"]);
+        w.row(&["x,y".to_string()]);
+        w.row(&["say \"hi\"".to_string()]);
+        let text = w.to_string();
+        assert!(text.contains("\"x,y\""));
+        assert!(text.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["only-one".to_string()]);
+    }
+}

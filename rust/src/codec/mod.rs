@@ -1,0 +1,7 @@
+//! Hand-rolled serialization: JSON (API wire format), a TOML subset
+//! (config files) and CSV (bench output). serde is not vendored in this
+//! environment, so these are small self-contained implementations.
+
+pub mod csv;
+pub mod json;
+pub mod toml;

@@ -1,0 +1,327 @@
+//! A TOML subset parser for config files.
+//!
+//! Supported: `[table]` / `[table.sub]` headers, `key = value` with string,
+//! integer, float, boolean and homogeneous-array values, `#` comments.
+//! Not supported (rejected loudly): inline tables, array-of-tables,
+//! multiline strings, datetimes — the stack's configs don't use them.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar / array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path key → value.
+/// `[lustre]` + `ost_count = 12` becomes `"lustre.ost_count"`.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                if line.starts_with("[[") {
+                    return Err(Error::Codec(format!(
+                        "line {}: array-of-tables not supported",
+                        lineno + 1
+                    )));
+                }
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    Error::Codec(format!("line {}: unterminated table header", lineno + 1))
+                })?;
+                let name = name.trim();
+                if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-') {
+                    return Err(Error::Codec(format!(
+                        "line {}: bad table name '{name}'",
+                        lineno + 1
+                    )));
+                }
+                prefix = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| {
+                Error::Codec(format!("line {}: expected 'key = value'", lineno + 1))
+            })?;
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(Error::Codec(format!("line {}: empty key", lineno + 1)));
+            }
+            let full = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            let parsed = parse_value(val)
+                .map_err(|e| Error::Codec(format!("line {}: {e}", lineno + 1)))?;
+            doc.entries.insert(full, parsed);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(TomlValue::as_str)
+    }
+
+    pub fn u64(&self, path: &str) -> Option<u64> {
+        self.get(path).and_then(TomlValue::as_u64)
+    }
+
+    pub fn f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(TomlValue::as_f64)
+    }
+
+    pub fn bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(TomlValue::as_bool)
+    }
+
+    /// All keys under a table prefix (`keys_under("lustre")`).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let want = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(&want))
+            .map(|k| k.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Strip a `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape \\{other:?}")),
+                }
+            } else if c == '"' {
+                return Err("unescaped quote inside string".into());
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("unparseable value '{s}'"))
+}
+
+/// Split array items on commas that are not inside strings.
+fn split_array_items(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# stack config
+seed = 42
+name = "hpcwales"   # trailing comment
+
+[cluster]
+nodes = 128
+cores_per_node = 16
+mem_gb = 64.0
+exclusive = true
+
+[lustre]
+ost_count = 12
+ost_bw_mbps = 1_200
+mount = "/lustre/scratch"
+stripes = [1, 2, 4]
+tags = ["a", "b,c"]
+"#;
+
+    #[test]
+    fn parses_tables_and_scalars() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.u64("seed"), Some(42));
+        assert_eq!(doc.str("name"), Some("hpcwales"));
+        assert_eq!(doc.u64("cluster.nodes"), Some(128));
+        assert_eq!(doc.f64("cluster.mem_gb"), Some(64.0));
+        assert_eq!(doc.bool("cluster.exclusive"), Some(true));
+        assert_eq!(doc.u64("lustre.ost_bw_mbps"), Some(1200));
+        assert_eq!(doc.str("lustre.mount"), Some("/lustre/scratch"));
+    }
+
+    #[test]
+    fn arrays_with_commas_in_strings() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        match doc.get("lustre.stripes").unwrap() {
+            TomlValue::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+        match doc.get("lustre.tags").unwrap() {
+            TomlValue::Arr(v) => {
+                assert_eq!(v[1].as_str(), Some("b,c"));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn int_coerces_to_f64_not_reverse() {
+        let doc = TomlDoc::parse("x = 3\ny = 3.5").unwrap();
+        assert_eq!(doc.f64("x"), Some(3.0));
+        assert_eq!(doc.u64("y"), None);
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        let keys: Vec<_> = doc.keys_under("cluster").collect();
+        assert_eq!(keys.len(), 4);
+        assert!(keys.contains(&"cluster.nodes"));
+    }
+
+    #[test]
+    fn rejects_unsupported_constructs() {
+        assert!(TomlDoc::parse("[[jobs]]").is_err());
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("just a line").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = TomlDoc::parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(doc.str("s"), Some("a\nb\t\"c\""));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = TomlDoc::parse(r##"s = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.str("s"), Some("a#b"));
+    }
+}

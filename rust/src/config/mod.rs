@@ -1,0 +1,138 @@
+//! Typed configuration for the whole stack, loadable from a TOML file with
+//! paper-faithful defaults.
+//!
+//! Defaults reproduce the experimental setup of §VI of the paper:
+//! Sandy Bridge EP nodes (dual-socket, 16 cores), 64 GB RAM, 414 GB local
+//! DAS, Lustre 2.1.3 over InfiniBand, and the YARN parameter table.
+
+pub mod calibration;
+pub mod cluster;
+pub mod lustre;
+pub mod sched;
+pub mod yarn;
+
+pub use calibration::CalibrationConfig;
+pub use cluster::{CampusConfig, ClusterConfig, CpuGen};
+pub use lustre::LustreConfig;
+pub use sched::{QueuePolicy, SchedulerConfig};
+pub use yarn::YarnConfig;
+
+use crate::codec::toml::TomlDoc;
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// Aggregate configuration of an hpcw stack instance.
+#[derive(Debug, Clone, Default)]
+pub struct StackConfig {
+    /// Master seed for all derived random streams.
+    pub seed: u64,
+    pub cluster: ClusterConfig,
+    pub lustre: LustreConfig,
+    pub yarn: YarnConfig,
+    pub scheduler: SchedulerConfig,
+    pub calibration: CalibrationConfig,
+}
+
+impl StackConfig {
+    /// Paper-faithful defaults (seed 42).
+    pub fn paper() -> Self {
+        StackConfig {
+            seed: 42,
+            ..Default::default()
+        }
+    }
+
+    /// A small configuration suitable for in-process Real-mode runs and
+    /// unit tests: 8 nodes of 4 cores, with the YARN memory figures scaled
+    /// down in the same 52/64 proportion as the paper's table.
+    pub fn tiny() -> Self {
+        let mut c = StackConfig::paper();
+        c.cluster = ClusterConfig::tiny();
+        c.lustre.ost_count = 4;
+        c.yarn.nm_resource_mb = 6 * 1024; // 6 of 8 GB, as 52 of 64
+        c.yarn.min_alloc_mb = 512;
+        c.yarn.am_resource_mb = 1024;
+        c.yarn.map_memory_mb = 1024;
+        c.yarn.map_java_heap_mb = 768;
+        c.yarn.reduce_memory_mb = 1024;
+        c.yarn.nm_vcores = c.cluster.cores_per_node;
+        c
+    }
+
+    /// Load from TOML text, overriding defaults key by key.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = StackConfig::paper();
+        if let Some(s) = doc.u64("seed") {
+            cfg.seed = s;
+        }
+        cfg.cluster.apply(&doc)?;
+        cfg.lustre.apply(&doc)?;
+        cfg.yarn.apply(&doc)?;
+        cfg.scheduler.apply(&doc)?;
+        cfg.calibration.apply(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("read {}: {e}", path.display())))?;
+        Self::from_toml(&text)
+    }
+
+    /// Cross-field sanity checks.
+    pub fn validate(&self) -> Result<()> {
+        self.cluster.validate()?;
+        self.lustre.validate()?;
+        self.yarn.validate(&self.cluster)?;
+        self.scheduler.validate()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_validate() {
+        StackConfig::paper().validate().unwrap();
+        StackConfig::tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let cfg = StackConfig::from_toml(
+            r#"
+seed = 7
+[cluster]
+nodes = 256
+[lustre]
+ost_count = 24
+[yarn]
+nm_resource_mb = 40960
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.cluster.nodes, 256);
+        assert_eq!(cfg.lustre.ost_count, 24);
+        assert_eq!(cfg.yarn.nm_resource_mb, 40960);
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        // NM memory larger than node memory is a config error.
+        let r = StackConfig::from_toml(
+            r#"
+[cluster]
+mem_gb = 8
+[yarn]
+nm_resource_mb = 53248
+"#,
+        );
+        assert!(r.is_err());
+    }
+}

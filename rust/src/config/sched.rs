@@ -1,0 +1,163 @@
+//! LSF-like scheduler configuration: queues and policies.
+//!
+//! The paper submits to "a dedicated queue, with exclusive access to the
+//! nodes" (§VI); the default queue set mirrors that: a `bigdata` queue with
+//! exclusive node access plus a general `serial` queue used by the
+//! scheduler-policy ablation (ABL-SCHED).
+
+use crate::codec::toml::TomlDoc;
+use crate::error::{Error, Result};
+
+/// Dispatch policy of a queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// First come, first served.
+    Fifo,
+    /// Deficit-based fair share between users.
+    Fairshare,
+    /// Hierarchical capacity caps per queue.
+    Capacity,
+}
+
+impl QueuePolicy {
+    pub fn parse(s: &str) -> Option<QueuePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Some(QueuePolicy::Fifo),
+            "fairshare" | "fair" => Some(QueuePolicy::Fairshare),
+            "capacity" => Some(QueuePolicy::Capacity),
+            _ => None,
+        }
+    }
+}
+
+/// One scheduler queue.
+#[derive(Debug, Clone)]
+pub struct QueueConfig {
+    pub name: String,
+    pub policy: QueuePolicy,
+    /// Jobs get whole nodes to themselves (the paper's Big Data queue).
+    pub exclusive: bool,
+    /// Max fraction of the cluster this queue may hold (capacity policy).
+    pub capacity_share: f64,
+    /// Dispatch priority (higher wins between queues).
+    pub priority: i32,
+}
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub queues: Vec<QueueConfig>,
+    /// Scheduling cycle period, ms (LSF's MBD_SLEEP_TIME analog).
+    pub cycle_ms: u64,
+    /// Backfill shorter jobs into reservation gaps.
+    pub backfill: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            queues: vec![
+                QueueConfig {
+                    name: "bigdata".into(),
+                    policy: QueuePolicy::Fifo,
+                    exclusive: true,
+                    capacity_share: 1.0,
+                    priority: 10,
+                },
+                QueueConfig {
+                    name: "serial".into(),
+                    policy: QueuePolicy::Fairshare,
+                    exclusive: false,
+                    capacity_share: 0.5,
+                    priority: 1,
+                },
+            ],
+            cycle_ms: 500,
+            backfill: true,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    pub fn queue(&self, name: &str) -> Option<&QueueConfig> {
+        self.queues.iter().find(|q| q.name == name)
+    }
+
+    pub fn apply(&mut self, doc: &TomlDoc) -> Result<()> {
+        if let Some(v) = doc.u64("scheduler.cycle_ms") {
+            self.cycle_ms = v;
+        }
+        if let Some(v) = doc.bool("scheduler.backfill") {
+            self.backfill = v;
+        }
+        // Per-queue overrides: `[scheduler] bigdata_policy = "capacity"`.
+        for q in &mut self.queues {
+            let key = format!("scheduler.{}_policy", q.name);
+            if let Some(s) = doc.str(&key) {
+                q.policy = QueuePolicy::parse(s)
+                    .ok_or_else(|| Error::Config(format!("unknown policy '{s}'")))?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.queues.is_empty() {
+            return Err(Error::Config("scheduler needs at least one queue".into()));
+        }
+        let mut names: Vec<_> = self.queues.iter().map(|q| q.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != self.queues.len() {
+            return Err(Error::Config("duplicate queue names".into()));
+        }
+        for q in &self.queues {
+            if !(0.0..=1.0).contains(&q.capacity_share) {
+                return Err(Error::Config(format!(
+                    "queue {}: capacity_share out of [0,1]",
+                    q.name
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_has_dedicated_exclusive_queue() {
+        let s = SchedulerConfig::default();
+        let q = s.queue("bigdata").unwrap();
+        assert!(q.exclusive); // §VI: "exclusive access to the nodes"
+        assert!(q.priority > s.queue("serial").unwrap().priority);
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(QueuePolicy::parse("FIFO"), Some(QueuePolicy::Fifo));
+        assert_eq!(QueuePolicy::parse("fair"), Some(QueuePolicy::Fairshare));
+        assert_eq!(QueuePolicy::parse("capacity"), Some(QueuePolicy::Capacity));
+        assert_eq!(QueuePolicy::parse("lottery"), None);
+    }
+
+    #[test]
+    fn duplicate_queues_rejected() {
+        let mut s = SchedulerConfig::default();
+        s.queues.push(s.queues[0].clone());
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn toml_policy_override() {
+        let doc = crate::codec::toml::TomlDoc::parse(
+            "[scheduler]\nbigdata_policy = \"capacity\"\ncycle_ms = 250",
+        )
+        .unwrap();
+        let mut s = SchedulerConfig::default();
+        s.apply(&doc).unwrap();
+        assert_eq!(s.queue("bigdata").unwrap().policy, QueuePolicy::Capacity);
+        assert_eq!(s.cycle_ms, 250);
+    }
+}

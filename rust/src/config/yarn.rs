@@ -1,0 +1,185 @@
+//! YARN configuration — the paper's §VI parameter table, verbatim:
+//!
+//! | Parameter                                 | Value     |
+//! |-------------------------------------------|-----------|
+//! | yarn.nodemanager.resource.memory-mb       | 52GB      |
+//! | yarn.scheduler.minimum-allocation-mb      | 2GB       |
+//! | yarn.scheduler.minimum-allocation-vcores  | 1 core    |
+//! | yarn.app.mapreduce.am.resource.mb         | 8192      |
+//! | mapreduce.map.memory.mb                   | 4096      |
+//! | mapreduce.map.java.opts                   | -Xmx3072m |
+//!
+//! This module *is* experiment TAB2: `paper_table_defaults` asserts these
+//! values and every bench inherits them.
+
+use crate::codec::toml::TomlDoc;
+use crate::config::cluster::ClusterConfig;
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone)]
+pub struct YarnConfig {
+    /// `yarn.nodemanager.resource.memory-mb` — memory a NodeManager offers
+    /// to containers (52 GB of the node's 64 GB; the rest is left for the
+    /// OS, the NM itself and the Lustre client).
+    pub nm_resource_mb: u64,
+    /// `yarn.scheduler.minimum-allocation-mb`.
+    pub min_alloc_mb: u64,
+    /// `yarn.scheduler.minimum-allocation-vcores`.
+    pub min_alloc_vcores: u32,
+    /// `yarn.app.mapreduce.am.resource.mb`.
+    pub am_resource_mb: u64,
+    /// `mapreduce.map.memory.mb`.
+    pub map_memory_mb: u64,
+    /// `-Xmx` of the map JVM, MB (3072 from `-Xmx3072m`).
+    pub map_java_heap_mb: u64,
+    /// `mapreduce.reduce.memory.mb` (not in the paper's table; Hadoop
+    /// 2.5 default practice was map×1 or ×2 — we use 4096 to match maps).
+    pub reduce_memory_mb: u64,
+    /// NM→RM heartbeat interval, ms (Hadoop default 1000).
+    pub nm_heartbeat_ms: u64,
+    /// AM→RM allocate poll interval, ms.
+    pub am_heartbeat_ms: u64,
+    /// vcores a NodeManager offers (= physical cores on HPC Wales).
+    pub nm_vcores: u32,
+    /// Enable speculative execution of stragglers.
+    pub speculative_execution: bool,
+    /// Maximum application attempts (AM restarts).
+    pub max_app_attempts: u32,
+}
+
+impl Default for YarnConfig {
+    fn default() -> Self {
+        YarnConfig {
+            nm_resource_mb: 52 * 1024,
+            min_alloc_mb: 2 * 1024,
+            min_alloc_vcores: 1,
+            am_resource_mb: 8192,
+            map_memory_mb: 4096,
+            map_java_heap_mb: 3072,
+            reduce_memory_mb: 4096,
+            nm_heartbeat_ms: 1000,
+            am_heartbeat_ms: 1000,
+            nm_vcores: 16,
+            speculative_execution: true,
+            max_app_attempts: 2,
+        }
+    }
+}
+
+impl YarnConfig {
+    /// Containers a single NM can host for a given per-container demand,
+    /// honouring the minimum-allocation rounding the RM performs.
+    pub fn containers_per_node(&self, container_mb: u64) -> u64 {
+        let rounded = self.round_allocation(container_mb);
+        (self.nm_resource_mb / rounded).min(self.nm_vcores as u64)
+    }
+
+    /// RM rounds every request up to a multiple of the minimum allocation.
+    pub fn round_allocation(&self, mb: u64) -> u64 {
+        let unit = self.min_alloc_mb.max(1);
+        crate::util::ceil_div(mb.max(1), unit) * unit
+    }
+
+    pub fn apply(&mut self, doc: &TomlDoc) -> Result<()> {
+        if let Some(v) = doc.u64("yarn.nm_resource_mb") {
+            self.nm_resource_mb = v;
+        }
+        if let Some(v) = doc.u64("yarn.min_alloc_mb") {
+            self.min_alloc_mb = v;
+        }
+        if let Some(v) = doc.u64("yarn.min_alloc_vcores") {
+            self.min_alloc_vcores = v as u32;
+        }
+        if let Some(v) = doc.u64("yarn.am_resource_mb") {
+            self.am_resource_mb = v;
+        }
+        if let Some(v) = doc.u64("yarn.map_memory_mb") {
+            self.map_memory_mb = v;
+        }
+        if let Some(v) = doc.u64("yarn.map_java_heap_mb") {
+            self.map_java_heap_mb = v;
+        }
+        if let Some(v) = doc.u64("yarn.reduce_memory_mb") {
+            self.reduce_memory_mb = v;
+        }
+        if let Some(v) = doc.u64("yarn.nm_heartbeat_ms") {
+            self.nm_heartbeat_ms = v;
+        }
+        if let Some(v) = doc.u64("yarn.am_heartbeat_ms") {
+            self.am_heartbeat_ms = v;
+        }
+        if let Some(v) = doc.u64("yarn.nm_vcores") {
+            self.nm_vcores = v as u32;
+        }
+        if let Some(v) = doc.bool("yarn.speculative_execution") {
+            self.speculative_execution = v;
+        }
+        if let Some(v) = doc.u64("yarn.max_app_attempts") {
+            self.max_app_attempts = v as u32;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self, cluster: &ClusterConfig) -> Result<()> {
+        if self.nm_resource_mb > cluster.mem_gb as u64 * 1024 {
+            return Err(Error::Config(format!(
+                "yarn.nm_resource_mb ({}) exceeds node memory ({} GB)",
+                self.nm_resource_mb, cluster.mem_gb
+            )));
+        }
+        if self.map_java_heap_mb > self.map_memory_mb {
+            return Err(Error::Config(
+                "map JVM heap larger than the map container".into(),
+            ));
+        }
+        if self.min_alloc_mb == 0 {
+            return Err(Error::Config("yarn.min_alloc_mb must be > 0".into()));
+        }
+        if self.am_resource_mb > self.nm_resource_mb {
+            return Err(Error::Config("AM container cannot fit on any NM".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Experiment TAB2: the paper's YARN parameter table, asserted.
+    #[test]
+    fn paper_table_defaults() {
+        let y = YarnConfig::default();
+        assert_eq!(y.nm_resource_mb, 52 * 1024); // 52GB
+        assert_eq!(y.min_alloc_mb, 2 * 1024); // 2GB
+        assert_eq!(y.min_alloc_vcores, 1); // 1 core
+        assert_eq!(y.am_resource_mb, 8192); // 8192 MB
+        assert_eq!(y.map_memory_mb, 4096); // 4096 MB
+        assert_eq!(y.map_java_heap_mb, 3072); // -Xmx3072m
+    }
+
+    #[test]
+    fn containers_per_node_under_paper_config() {
+        let y = YarnConfig::default();
+        // 52 GB / 4 GB map containers = 13 containers, under 16 vcores.
+        assert_eq!(y.containers_per_node(y.map_memory_mb), 13);
+        // 52 GB / 2 GB = 26, capped by 16 vcores.
+        assert_eq!(y.containers_per_node(2048), 16);
+    }
+
+    #[test]
+    fn allocation_rounding() {
+        let y = YarnConfig::default();
+        assert_eq!(y.round_allocation(1), 2048);
+        assert_eq!(y.round_allocation(2048), 2048);
+        assert_eq!(y.round_allocation(2049), 4096);
+        assert_eq!(y.round_allocation(8192), 8192);
+    }
+
+    #[test]
+    fn validation_catches_heap_overflow() {
+        let mut y = YarnConfig::default();
+        y.map_java_heap_mb = 8192;
+        assert!(y.validate(&ClusterConfig::default()).is_err());
+    }
+}

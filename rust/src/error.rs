@@ -1,0 +1,105 @@
+//! Crate-wide error type.
+//!
+//! Domain layers attach their own context; everything converges on
+//! [`Error`] so the CLI / API boundary can render a single error shape.
+
+use thiserror::Error;
+
+/// Unified error type for the hpcw stack.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Configuration file or value problems.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// JSON / TOML / CSV encoding-decoding problems.
+    #[error("codec: {0}")]
+    Codec(String),
+
+    /// LSF-like scheduler errors (unknown queue, bad resource request, ...).
+    #[error("scheduler: {0}")]
+    Sched(String),
+
+    /// YARN daemon / container protocol errors.
+    #[error("yarn: {0}")]
+    Yarn(String),
+
+    /// Dynamic-cluster wrapper errors (daemon start failure, dirty teardown).
+    #[error("wrapper: {0}")]
+    Wrapper(String),
+
+    /// Distributed-filesystem errors (Lustre / HDFS-like / DAS).
+    #[error("dfs: {0}")]
+    Dfs(String),
+
+    /// MapReduce engine errors.
+    #[error("mapreduce: {0}")]
+    MapReduce(String),
+
+    /// Framework frontend errors (Pig / Hive / RHadoop / Mongo parsing or planning).
+    #[error("framework: {0}")]
+    Framework(String),
+
+    /// SynfiniWay-style API errors.
+    #[error("api: {0}")]
+    Api(String),
+
+    /// PJRT runtime errors (artifact missing, compile or execute failure).
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Underlying OS I/O.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Errors bubbled from the `xla` crate.
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Short machine-readable kind tag, used by the API layer.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Error::Config(_) => "config",
+            Error::Codec(_) => "codec",
+            Error::Sched(_) => "scheduler",
+            Error::Yarn(_) => "yarn",
+            Error::Wrapper(_) => "wrapper",
+            Error::Dfs(_) => "dfs",
+            Error::MapReduce(_) => "mapreduce",
+            Error::Framework(_) => "framework",
+            Error::Api(_) => "api",
+            Error::Runtime(_) => "runtime",
+            Error::Io(_) => "io",
+            Error::Xla(_) => "xla",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_are_stable() {
+        assert_eq!(Error::Sched("x".into()).kind(), "scheduler");
+        assert_eq!(Error::Yarn("x".into()).kind(), "yarn");
+        assert_eq!(Error::Wrapper("x".into()).kind(), "wrapper");
+    }
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Wrapper("node 3 NM failed to start".into());
+        assert!(e.to_string().contains("node 3"));
+    }
+}

@@ -1,0 +1,447 @@
+//! Row model and expression language shared by the Pig and Hive frontends.
+//!
+//! Rows are delimited text records (the classic Hadoop warehouse format);
+//! values are dynamically typed (string / number). Expressions cover what
+//! the frontends need: field references, literals, comparisons, boolean
+//! connectives and arithmetic.
+
+use crate::error::{Error, Result};
+use std::fmt;
+
+/// A dynamically-typed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Num(f64),
+    Str(String),
+}
+
+impl Value {
+    /// Parse a field: numeric if it looks numeric.
+    pub fn parse(s: &str) -> Value {
+        match s.trim().parse::<f64>() {
+            Ok(n) => Value::Num(n),
+            Err(_) => Value::Str(s.to_string()),
+        }
+    }
+
+    pub fn as_num(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            Value::Str(s) => Err(Error::Framework(format!("'{s}' is not numeric"))),
+        }
+    }
+
+    pub fn truthy(&self) -> bool {
+        match self {
+            Value::Num(n) => *n != 0.0,
+            Value::Str(s) => !s.is_empty(),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Num(n) if n.fract() == 0.0 && n.abs() < 9e15 => write!(f, "{}", *n as i64),
+            Value::Num(n) => write!(f, "{n}"),
+            Value::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// A parsed row (split by the schema's delimiter).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row(pub Vec<Value>);
+
+/// Field-name → position mapping.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schema {
+    pub fields: Vec<String>,
+    pub delimiter: char,
+}
+
+impl Schema {
+    pub fn new(fields: &[&str], delimiter: char) -> Schema {
+        Schema {
+            fields: fields.iter().map(|s| s.to_string()).collect(),
+            delimiter,
+        }
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.fields
+            .iter()
+            .position(|f| f == name)
+            .ok_or_else(|| Error::Framework(format!("unknown field '{name}'")))
+    }
+
+    pub fn parse_row(&self, line: &str) -> Row {
+        Row(line.split(self.delimiter).map(Value::parse).collect())
+    }
+}
+
+/// Binary comparison / arithmetic / boolean operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+/// An expression over a row.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Field reference by resolved index.
+    Field(usize),
+    Lit(Value),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    Not(Box<Expr>),
+}
+
+impl Expr {
+    pub fn eval(&self, row: &Row) -> Result<Value> {
+        match self {
+            Expr::Field(i) => row
+                .0
+                .get(*i)
+                .cloned()
+                .ok_or_else(|| Error::Framework(format!("row too short for field {i}"))),
+            Expr::Lit(v) => Ok(v.clone()),
+            Expr::Not(e) => Ok(Value::Num(if e.eval(row)?.truthy() { 0.0 } else { 1.0 })),
+            Expr::Bin(op, a, b) => {
+                let va = a.eval(row)?;
+                let vb = b.eval(row)?;
+                let bool_val = |b: bool| Value::Num(if b { 1.0 } else { 0.0 });
+                Ok(match op {
+                    BinOp::And => bool_val(va.truthy() && vb.truthy()),
+                    BinOp::Or => bool_val(va.truthy() || vb.truthy()),
+                    BinOp::Eq => bool_val(cmp_values(&va, &vb) == std::cmp::Ordering::Equal),
+                    BinOp::Ne => bool_val(cmp_values(&va, &vb) != std::cmp::Ordering::Equal),
+                    BinOp::Lt => bool_val(cmp_values(&va, &vb) == std::cmp::Ordering::Less),
+                    BinOp::Le => bool_val(cmp_values(&va, &vb) != std::cmp::Ordering::Greater),
+                    BinOp::Gt => bool_val(cmp_values(&va, &vb) == std::cmp::Ordering::Greater),
+                    BinOp::Ge => bool_val(cmp_values(&va, &vb) != std::cmp::Ordering::Less),
+                    BinOp::Add => Value::Num(va.as_num()? + vb.as_num()?),
+                    BinOp::Sub => Value::Num(va.as_num()? - vb.as_num()?),
+                    BinOp::Mul => Value::Num(va.as_num()? * vb.as_num()?),
+                    BinOp::Div => {
+                        let d = vb.as_num()?;
+                        if d == 0.0 {
+                            return Err(Error::Framework("division by zero".into()));
+                        }
+                        Value::Num(va.as_num()? / d)
+                    }
+                })
+            }
+        }
+    }
+}
+
+/// Compare values: numerically when both numeric, else lexicographically.
+pub fn cmp_values(a: &Value, b: &Value) -> std::cmp::Ordering {
+    match (a, b) {
+        (Value::Num(x), Value::Num(y)) => x.total_cmp(y),
+        _ => a.to_string().cmp(&b.to_string()),
+    }
+}
+
+/// Tokenize + parse an expression string against a schema.
+/// Grammar (precedence low→high): OR, AND, NOT, comparison, add/sub,
+/// mul/div, atom (field, number, 'string', parens).
+pub fn parse_expr(text: &str, schema: &Schema) -> Result<Expr> {
+    let tokens = tokenize(text)?;
+    let mut p = ExprParser {
+        tokens,
+        pos: 0,
+        schema,
+    };
+    let e = p.or_expr()?;
+    if p.pos != p.tokens.len() {
+        return Err(Error::Framework(format!(
+            "trailing tokens after expression: {:?}",
+            &p.tokens[p.pos..]
+        )));
+    }
+    Ok(e)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Num(f64),
+    Str(String),
+    Op(String),
+    LParen,
+    RParen,
+}
+
+fn tokenize(text: &str) -> Result<Vec<Tok>> {
+    let mut out = Vec::new();
+    let chars: Vec<char> = text.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        match c {
+            ' ' | '\t' | '\n' => i += 1,
+            '(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            '\'' | '"' => {
+                let quote = c;
+                let mut s = String::new();
+                i += 1;
+                while i < chars.len() && chars[i] != quote {
+                    s.push(chars[i]);
+                    i += 1;
+                }
+                if i == chars.len() {
+                    return Err(Error::Framework("unterminated string".into()));
+                }
+                i += 1;
+                out.push(Tok::Str(s));
+            }
+            '<' | '>' | '=' | '!' => {
+                let mut op = c.to_string();
+                if i + 1 < chars.len() && chars[i + 1] == '=' {
+                    op.push('=');
+                    i += 1;
+                }
+                i += 1;
+                out.push(Tok::Op(op));
+            }
+            '+' | '-' | '*' | '/' => {
+                out.push(Tok::Op(c.to_string()));
+                i += 1;
+            }
+            c if c.is_ascii_digit() || c == '.' => {
+                let start = i;
+                while i < chars.len() && (chars[i].is_ascii_digit() || chars[i] == '.') {
+                    i += 1;
+                }
+                let text: String = chars[start..i].iter().collect();
+                out.push(Tok::Num(text.parse().map_err(|_| {
+                    Error::Framework(format!("bad number '{text}'"))
+                })?));
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < chars.len() && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                out.push(Tok::Ident(chars[start..i].iter().collect()));
+            }
+            other => return Err(Error::Framework(format!("bad character '{other}'"))),
+        }
+    }
+    Ok(out)
+}
+
+struct ExprParser<'a> {
+    tokens: Vec<Tok>,
+    pos: usize,
+    schema: &'a Schema,
+}
+
+impl<'a> ExprParser<'a> {
+    fn peek(&self) -> Option<&Tok> {
+        self.tokens.get(self.pos)
+    }
+
+    fn eat_keyword(&mut self, kw: &str) -> bool {
+        if let Some(Tok::Ident(s)) = self.peek() {
+            if s.eq_ignore_ascii_case(kw) {
+                self.pos += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn eat_op(&mut self, op: &str) -> bool {
+        if let Some(Tok::Op(s)) = self.peek() {
+            if s == op {
+                self.pos += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.and_expr()?;
+        while self.eat_keyword("OR") {
+            let rhs = self.and_expr()?;
+            lhs = Expr::Bin(BinOp::Or, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.not_expr()?;
+        while self.eat_keyword("AND") {
+            let rhs = self.not_expr()?;
+            lhs = Expr::Bin(BinOp::And, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn not_expr(&mut self) -> Result<Expr> {
+        if self.eat_keyword("NOT") {
+            return Ok(Expr::Not(Box::new(self.not_expr()?)));
+        }
+        self.cmp_expr()
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr> {
+        let lhs = self.add_expr()?;
+        for (tok, op) in [
+            ("<=", BinOp::Le),
+            (">=", BinOp::Ge),
+            ("!=", BinOp::Ne),
+            ("==", BinOp::Eq),
+            ("=", BinOp::Eq),
+            ("<", BinOp::Lt),
+            (">", BinOp::Gt),
+        ] {
+            if self.eat_op(tok) {
+                let rhs = self.add_expr()?;
+                return Ok(Expr::Bin(op, Box::new(lhs), Box::new(rhs)));
+            }
+        }
+        Ok(lhs)
+    }
+
+    fn add_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            if self.eat_op("+") {
+                lhs = Expr::Bin(BinOp::Add, Box::new(lhs), Box::new(self.mul_expr()?));
+            } else if self.eat_op("-") {
+                lhs = Expr::Bin(BinOp::Sub, Box::new(lhs), Box::new(self.mul_expr()?));
+            } else {
+                return Ok(lhs);
+            }
+        }
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.atom()?;
+        loop {
+            if self.eat_op("*") {
+                lhs = Expr::Bin(BinOp::Mul, Box::new(lhs), Box::new(self.atom()?));
+            } else if self.eat_op("/") {
+                lhs = Expr::Bin(BinOp::Div, Box::new(lhs), Box::new(self.atom()?));
+            } else {
+                return Ok(lhs);
+            }
+        }
+    }
+
+    fn atom(&mut self) -> Result<Expr> {
+        match self.peek().cloned() {
+            Some(Tok::LParen) => {
+                self.pos += 1;
+                let e = self.or_expr()?;
+                match self.peek() {
+                    Some(Tok::RParen) => {
+                        self.pos += 1;
+                        Ok(e)
+                    }
+                    _ => Err(Error::Framework("expected ')'".into())),
+                }
+            }
+            Some(Tok::Num(n)) => {
+                self.pos += 1;
+                Ok(Expr::Lit(Value::Num(n)))
+            }
+            Some(Tok::Str(s)) => {
+                self.pos += 1;
+                Ok(Expr::Lit(Value::Str(s)))
+            }
+            Some(Tok::Ident(name)) => {
+                self.pos += 1;
+                Ok(Expr::Field(self.schema.index_of(&name)?))
+            }
+            other => Err(Error::Framework(format!("unexpected token {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> Schema {
+        Schema::new(&["region", "product", "amount"], ',')
+    }
+
+    fn row(line: &str) -> Row {
+        schema().parse_row(line)
+    }
+
+    #[test]
+    fn rows_parse_typed() {
+        let r = row("wales,widget,120.5");
+        assert_eq!(r.0[0], Value::Str("wales".into()));
+        assert_eq!(r.0[2], Value::Num(120.5));
+    }
+
+    #[test]
+    fn comparisons_and_boolean_logic() {
+        let s = schema();
+        let e = parse_expr("amount > 100 AND region == 'wales'", &s).unwrap();
+        assert!(e.eval(&row("wales,w,120")).unwrap().truthy());
+        assert!(!e.eval(&row("england,w,120")).unwrap().truthy());
+        assert!(!e.eval(&row("wales,w,50")).unwrap().truthy());
+    }
+
+    #[test]
+    fn arithmetic_precedence() {
+        let s = schema();
+        let e = parse_expr("amount + 2 * 10", &s).unwrap();
+        assert_eq!(e.eval(&row("x,y,5")).unwrap(), Value::Num(25.0));
+        let e2 = parse_expr("(amount + 2) * 10", &s).unwrap();
+        assert_eq!(e2.eval(&row("x,y,5")).unwrap(), Value::Num(70.0));
+    }
+
+    #[test]
+    fn not_and_or() {
+        let s = schema();
+        let e = parse_expr("NOT amount > 100 OR region == 'wales'", &s).unwrap();
+        assert!(e.eval(&row("wales,w,500")).unwrap().truthy());
+        assert!(e.eval(&row("england,w,50")).unwrap().truthy());
+        assert!(!e.eval(&row("england,w,500")).unwrap().truthy());
+    }
+
+    #[test]
+    fn errors_are_clean() {
+        let s = schema();
+        assert!(parse_expr("nosuch > 1", &s).is_err());
+        assert!(parse_expr("amount >", &s).is_err());
+        assert!(parse_expr("amount > 1 extra", &s).is_err());
+        assert!(parse_expr("'unterminated", &s).is_err());
+        let div = parse_expr("amount / 0", &s).unwrap();
+        assert!(div.eval(&row("x,y,5")).is_err());
+    }
+
+    #[test]
+    fn value_display_compact() {
+        assert_eq!(Value::Num(3.0).to_string(), "3");
+        assert_eq!(Value::Num(3.5).to_string(), "3.5");
+        assert_eq!(Value::Str("abc".into()).to_string(), "abc");
+    }
+}

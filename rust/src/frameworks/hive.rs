@@ -1,0 +1,221 @@
+//! A HiveQL-like SQL frontend lowering to the same [`LogicalPlan`] as Pig.
+//!
+//! Supported statement:
+//!
+//! ```sql
+//! SELECT region, SUM(amount), COUNT(amount)
+//! FROM '/data/sales' USING ','
+//! SCHEMA (region, product, amount)
+//! WHERE amount > 100 AND region != 'north'
+//! GROUP BY region
+//! INTO '/data/report'
+//! ```
+//!
+//! (`SCHEMA (...)` replaces the metastore: the paper-era HPC Wales setup
+//! had no persistent Hive metastore inside a dynamic cluster, so table
+//! schemas travel with the query.)
+
+use crate::error::{Error, Result};
+use crate::frameworks::expr::{parse_expr, Schema};
+use crate::frameworks::plan::{AggSpec, Aggregate, LogicalPlan};
+
+/// Parse one SELECT statement into a logical plan.
+pub fn parse_query(sql: &str, n_reduces: u32) -> Result<LogicalPlan> {
+    let text = sql.trim().trim_end_matches(';').trim();
+    let upper = text.to_ascii_uppercase();
+    if !upper.starts_with("SELECT") {
+        return Err(Error::Framework("expected SELECT".into()));
+    }
+
+    // Clause positions (each appears at most once, in this order).
+    let from = find_kw(&upper, " FROM ")?;
+    let using = find_opt(&upper, " USING ");
+    let schema_kw = find_kw(&upper, " SCHEMA ")?;
+    let where_kw = find_opt(&upper, " WHERE ");
+    let group_kw = find_opt(&upper, " GROUP BY ");
+    let into_kw = find_kw(&upper, " INTO ")?;
+
+    // SELECT list.
+    let select_list = &text["SELECT".len()..from];
+
+    // FROM '<path>'.
+    let from_end = using.or(Some(schema_kw)).unwrap();
+    let input_dir = unquote(text[from + 6..from_end].trim())?;
+
+    // USING '<delim>'.
+    let delimiter = match using {
+        Some(u) => unquote(text[u + 7..schema_kw].trim())?
+            .chars()
+            .next()
+            .unwrap_or('\t'),
+        None => '\t',
+    };
+
+    // SCHEMA (f1, f2, ...).
+    let schema_end = where_kw.or(group_kw).unwrap_or(into_kw);
+    let schema_text = text[schema_kw + 8..schema_end].trim();
+    let inner = schema_text
+        .strip_prefix('(')
+        .and_then(|s| s.strip_suffix(')'))
+        .ok_or_else(|| Error::Framework("SCHEMA needs (fields)".into()))?;
+    let fields: Vec<&str> = inner.split(',').map(str::trim).filter(|f| !f.is_empty()).collect();
+    if fields.is_empty() {
+        return Err(Error::Framework("empty SCHEMA".into()));
+    }
+    let schema = Schema::new(&fields, delimiter);
+
+    // WHERE <expr>.
+    let filter = match where_kw {
+        Some(w) => {
+            let end = group_kw.unwrap_or(into_kw);
+            Some(parse_expr(text[w + 7..end].trim(), &schema)?)
+        }
+        None => None,
+    };
+
+    // GROUP BY <expr>.
+    let group_by = match group_kw {
+        Some(g) => Some(parse_expr(text[g + 10..into_kw].trim(), &schema)?),
+        None => None,
+    };
+
+    // INTO '<path>'.
+    let output_dir = unquote(text[into_kw + 6..].trim())?;
+
+    // SELECT list → group columns (must match GROUP BY) + aggregates.
+    let mut aggregates = Vec::new();
+    for item in select_list.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        if let Some(open) = item.find('(') {
+            let close = item
+                .rfind(')')
+                .ok_or_else(|| Error::Framework(format!("unclosed '(' in '{item}'")))?;
+            let name = item[..open].trim();
+            if let Some(agg) = Aggregate::parse(name) {
+                aggregates.push(AggSpec {
+                    agg,
+                    expr: parse_expr(item[open + 1..close].trim(), &schema)?,
+                });
+                continue;
+            }
+            return Err(Error::Framework(format!("unknown function '{name}'")));
+        }
+        // A bare column: must be the group key.
+        if group_by.is_none() {
+            return Err(Error::Framework(format!(
+                "bare column '{item}' without GROUP BY"
+            )));
+        }
+        // Validate it refers to a real field.
+        schema.index_of(item)?;
+    }
+    if aggregates.is_empty() {
+        return Err(Error::Framework("SELECT needs at least one aggregate".into()));
+    }
+
+    Ok(LogicalPlan {
+        input_dir,
+        output_dir,
+        schema,
+        filter,
+        group_by,
+        aggregates,
+        n_reduces,
+    })
+}
+
+fn find_kw(upper: &str, kw: &str) -> Result<usize> {
+    upper
+        .find(kw)
+        .ok_or_else(|| Error::Framework(format!("missing {} clause", kw.trim())))
+}
+
+fn find_opt(upper: &str, kw: &str) -> Option<usize> {
+    upper.find(kw)
+}
+
+fn unquote(s: &str) -> Result<String> {
+    s.strip_prefix('\'')
+        .and_then(|x| x.strip_suffix('\''))
+        .map(str::to_string)
+        .ok_or_else(|| Error::Framework(format!("expected quoted string, got '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SQL: &str = "SELECT region, SUM(amount), AVG(amount) \
+        FROM '/data/sales' USING ',' \
+        SCHEMA (region, product, amount) \
+        WHERE amount > 100 \
+        GROUP BY region \
+        INTO '/data/report';";
+
+    #[test]
+    fn full_query_parses() {
+        let plan = parse_query(SQL, 4).unwrap();
+        assert_eq!(plan.input_dir, "/data/sales");
+        assert_eq!(plan.output_dir, "/data/report");
+        assert_eq!(plan.schema.delimiter, ',');
+        assert!(plan.filter.is_some());
+        assert!(plan.group_by.is_some());
+        assert_eq!(plan.aggregates.len(), 2);
+        assert_eq!(plan.aggregates[0].agg, Aggregate::Sum);
+        assert_eq!(plan.aggregates[1].agg, Aggregate::Avg);
+        assert_eq!(plan.n_reduces, 4);
+    }
+
+    #[test]
+    fn global_aggregate_without_group_by() {
+        let plan = parse_query(
+            "SELECT COUNT(a) FROM '/in' SCHEMA (a, b) INTO '/out'",
+            1,
+        )
+        .unwrap();
+        assert!(plan.group_by.is_none());
+        assert_eq!(plan.aggregates.len(), 1);
+    }
+
+    #[test]
+    fn bare_column_requires_group_by() {
+        let err = parse_query("SELECT a, COUNT(b) FROM '/in' SCHEMA (a, b) INTO '/out'", 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("without GROUP BY"));
+    }
+
+    #[test]
+    fn pig_and_hive_lower_to_equivalent_plans() {
+        let hive = parse_query(SQL, 2).unwrap();
+        let pig = crate::frameworks::pig::parse_script(
+            "recs = LOAD '/data/sales' USING ',' AS (region, product, amount);
+             big  = FILTER recs BY amount > 100;
+             grp  = GROUP big BY region;
+             out  = FOREACH grp GENERATE group, SUM(amount), AVG(amount);
+             STORE out INTO '/data/report';",
+            2,
+        )
+        .unwrap();
+        assert_eq!(hive.input_dir, pig.input_dir);
+        assert_eq!(hive.output_dir, pig.output_dir);
+        assert_eq!(hive.schema, pig.schema);
+        assert_eq!(hive.filter, pig.filter);
+        assert_eq!(hive.group_by, pig.group_by);
+        assert_eq!(hive.aggregates.len(), pig.aggregates.len());
+        for (h, p) in hive.aggregates.iter().zip(&pig.aggregates) {
+            assert_eq!(h.agg, p.agg);
+            assert_eq!(h.expr, p.expr);
+        }
+    }
+
+    #[test]
+    fn missing_clauses_rejected() {
+        assert!(parse_query("SELECT COUNT(a) SCHEMA (a) INTO '/o'", 1).is_err()); // no FROM
+        assert!(parse_query("SELECT COUNT(a) FROM '/i' INTO '/o'", 1).is_err()); // no SCHEMA
+        assert!(parse_query("SELECT COUNT(a) FROM '/i' SCHEMA (a)", 1).is_err()); // no INTO
+        assert!(parse_query("DELETE FROM x", 1).is_err());
+    }
+}

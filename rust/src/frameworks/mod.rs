@@ -1,0 +1,30 @@
+//! The "unified platform" frontends (§III, §IV).
+//!
+//! The paper's differentiator over myHadoop: "We not only configure Hadoop
+//! in the environment but also enable the related frameworks such as Pig,
+//! Hive, R and Mongo DB. This provides flexibility for the application
+//! designer to use the best of all the frameworks in the solution."
+//!
+//! Every frontend here lowers onto the same MapReduce [`JobSpec`] and thus
+//! runs inside the same wrapper-built dynamic YARN cluster:
+//!
+//! * [`pig`] — a Pig-Latin-like dataflow DSL (LOAD / FILTER / GROUP /
+//!   FOREACH ... GENERATE / STORE);
+//! * [`hive`] — a HiveQL-like SQL subset (SELECT ... WHERE ... GROUP BY);
+//! * [`rhadoop`] — RHadoop-style distributed statistics over numeric
+//!   columns (summary, histogram);
+//! * [`mongo`] — a MongoDB-like document store usable as an MR source and
+//!   sink.
+//!
+//! Pig and Hive share one logical-plan representation ([`plan`]) and one
+//! expression language ([`expr`]); the parsers are thin frontends.
+
+pub mod expr;
+pub mod hive;
+pub mod mongo;
+pub mod pig;
+pub mod plan;
+pub mod rhadoop;
+
+pub use expr::{Expr, Value};
+pub use plan::{Aggregate, LogicalPlan};

@@ -1,0 +1,227 @@
+//! A MongoDB-like document store, usable standalone and as an MR
+//! source/sink (the paper lists "Mongo DB" among the enabled frameworks).
+//!
+//! Collections live on the shared filesystem as newline-delimited JSON —
+//! which is exactly `InputFormat::Lines`, so any MR job (and thus any Pig
+//! or Hive query over a projected schema) can consume a collection dumped
+//! by [`Collection::export_mr_input`].
+
+use crate::codec::json::Json;
+use crate::error::{Error, Result};
+use crate::lustre::Dfs;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// A filter condition on one field.
+#[derive(Debug, Clone)]
+pub enum Cond {
+    Eq(String, Json),
+    Gt(String, f64),
+    Lt(String, f64),
+    Exists(String),
+}
+
+impl Cond {
+    fn matches(&self, doc: &Json) -> bool {
+        match self {
+            Cond::Eq(field, v) => doc.get(field) == Some(v),
+            Cond::Gt(field, x) => doc.get(field).and_then(Json::as_f64).map(|n| n > *x) == Some(true),
+            Cond::Lt(field, x) => doc.get(field).and_then(Json::as_f64).map(|n| n < *x) == Some(true),
+            Cond::Exists(field) => doc.get(field).is_some(),
+        }
+    }
+}
+
+/// An in-memory collection with persistence to the Dfs.
+pub struct Collection {
+    name: String,
+    docs: Mutex<BTreeMap<u64, Json>>,
+    next_id: Mutex<u64>,
+}
+
+impl Collection {
+    pub fn new(name: &str) -> Collection {
+        Collection {
+            name: name.to_string(),
+            docs: Mutex::new(BTreeMap::new()),
+            next_id: Mutex::new(1),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Insert a document (object); returns its `_id`.
+    pub fn insert(&self, mut doc: Json) -> Result<u64> {
+        if !matches!(doc, Json::Obj(_)) {
+            return Err(Error::Framework("documents must be objects".into()));
+        }
+        let mut next = self.next_id.lock().unwrap();
+        let id = *next;
+        *next += 1;
+        if let Json::Obj(pairs) = &mut doc {
+            pairs.retain(|(k, _)| k != "_id");
+            pairs.insert(0, ("_id".to_string(), Json::num(id as f64)));
+        }
+        self.docs.lock().unwrap().insert(id, doc);
+        Ok(id)
+    }
+
+    /// All docs matching every condition.
+    pub fn find(&self, conds: &[Cond]) -> Vec<Json> {
+        self.docs
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|d| conds.iter().all(|c| c.matches(d)))
+            .cloned()
+            .collect()
+    }
+
+    pub fn count(&self, conds: &[Cond]) -> usize {
+        self.find(conds).len()
+    }
+
+    /// Remove matching docs; returns how many.
+    pub fn remove(&self, conds: &[Cond]) -> usize {
+        let mut g = self.docs.lock().unwrap();
+        let victims: Vec<u64> = g
+            .iter()
+            .filter(|(_, d)| conds.iter().all(|c| c.matches(d)))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in &victims {
+            g.remove(id);
+        }
+        victims.len()
+    }
+
+    /// Dump as newline-delimited JSON into an MR input directory.
+    pub fn export_mr_input(&self, dfs: &dyn Dfs, dir: &str) -> Result<u64> {
+        dfs.mkdirs(dir)?;
+        let mut buf = Vec::new();
+        let g = self.docs.lock().unwrap();
+        for doc in g.values() {
+            buf.extend_from_slice(doc.to_string().as_bytes());
+            buf.push(b'\n');
+        }
+        let path = format!("{dir}/{}.jsonl", self.name);
+        dfs.create(&path, &buf)?;
+        Ok(g.len() as u64)
+    }
+
+    /// Import MR output (`key \t json` or bare-json lines) as documents.
+    pub fn import_mr_output(&self, dfs: &dyn Dfs, dir: &str) -> Result<u64> {
+        let mut imported = 0;
+        let mut files: Vec<String> = dfs
+            .list(dir)
+            .into_iter()
+            .filter(|p| p.contains("/part-"))
+            .collect();
+        files.sort();
+        for f in files {
+            let text = String::from_utf8(dfs.read(&f)?)
+                .map_err(|_| Error::Framework(format!("non-utf8 output {f}")))?;
+            for line in text.lines() {
+                let payload = line.split('\t').next_back().unwrap_or(line);
+                if let Ok(doc @ Json::Obj(_)) = Json::parse(payload) {
+                    self.insert(doc)?;
+                    imported += 1;
+                }
+            }
+        }
+        Ok(imported)
+    }
+
+    /// Project fields of matching docs into a delimited line (bridge into
+    /// the Pig/Hive schema world).
+    pub fn project_csv(&self, conds: &[Cond], fields: &[&str], delim: char) -> Vec<String> {
+        self.find(conds)
+            .into_iter()
+            .map(|d| {
+                fields
+                    .iter()
+                    .map(|f| match d.get(f) {
+                        Some(Json::Str(s)) => s.clone(),
+                        Some(Json::Num(n)) if n.fract() == 0.0 => format!("{}", *n as i64),
+                        Some(Json::Num(n)) => format!("{n}"),
+                        Some(other) => other.to_string(),
+                        None => String::new(),
+                    })
+                    .collect::<Vec<_>>()
+                    .join(&delim.to_string())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+    use crate::lustre::LustreFs;
+
+    fn doc(region: &str, amount: f64) -> Json {
+        Json::obj(vec![
+            ("region", Json::str(region)),
+            ("amount", Json::num(amount)),
+        ])
+    }
+
+    #[test]
+    fn insert_assigns_ids_and_find_filters() {
+        let c = Collection::new("sales");
+        let a = c.insert(doc("wales", 120.0)).unwrap();
+        let b = c.insert(doc("england", 80.0)).unwrap();
+        assert!(b > a);
+        assert_eq!(c.count(&[]), 2);
+        assert_eq!(c.count(&[Cond::Gt("amount".into(), 100.0)]), 1);
+        assert_eq!(
+            c.count(&[Cond::Eq("region".into(), Json::str("wales"))]),
+            1
+        );
+        assert_eq!(c.count(&[Cond::Exists("missing".into())]), 0);
+        assert!(c.insert(Json::num(5)).is_err());
+    }
+
+    #[test]
+    fn remove_matching() {
+        let c = Collection::new("t");
+        c.insert(doc("a", 1.0)).unwrap();
+        c.insert(doc("b", 2.0)).unwrap();
+        c.insert(doc("b", 3.0)).unwrap();
+        let n = c.remove(&[Cond::Eq("region".into(), Json::str("b"))]);
+        assert_eq!(n, 2);
+        assert_eq!(c.count(&[]), 1);
+    }
+
+    #[test]
+    fn export_import_round_trip() {
+        let cfg = StackConfig::paper();
+        let fs = LustreFs::new(&cfg.lustre, &cfg.cluster);
+        let c = Collection::new("sales");
+        c.insert(doc("wales", 120.0)).unwrap();
+        c.insert(doc("england", 80.0)).unwrap();
+        let n = c.export_mr_input(&fs, "/lustre/scratch/mongo-in").unwrap();
+        assert_eq!(n, 2);
+        // Import as if it were MR output (bare JSON lines).
+        fs.mkdirs("/lustre/scratch/mongo-out").unwrap();
+        let data = fs
+            .read("/lustre/scratch/mongo-in/sales.jsonl")
+            .unwrap();
+        fs.create("/lustre/scratch/mongo-out/part-r-00000", &data).unwrap();
+        let c2 = Collection::new("imported");
+        let m = c2.import_mr_output(&fs, "/lustre/scratch/mongo-out").unwrap();
+        assert_eq!(m, 2);
+        assert_eq!(c2.count(&[Cond::Gt("amount".into(), 100.0)]), 1);
+    }
+
+    #[test]
+    fn projection_bridges_to_schema_world() {
+        let c = Collection::new("t");
+        c.insert(doc("wales", 120.5)).unwrap();
+        let lines = c.project_csv(&[], &["region", "amount", "nope"], ',');
+        assert_eq!(lines, vec!["wales,120.5,"]);
+    }
+}

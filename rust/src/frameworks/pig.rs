@@ -1,0 +1,320 @@
+//! A Pig-Latin-like dataflow frontend.
+//!
+//! Supported script shape (one job, the §IV "custom flow" class):
+//!
+//! ```text
+//! recs = LOAD '/data/sales' USING ',' AS (region, product, amount);
+//! big  = FILTER recs BY amount > 100;
+//! grp  = GROUP big BY region;
+//! out  = FOREACH grp GENERATE group, SUM(amount), COUNT(amount);
+//! STORE out INTO '/data/report';
+//! ```
+//!
+//! The parser builds a [`LogicalPlan`]; aliases are checked for dataflow
+//! consistency (each statement consumes an alias the previous ones
+//! produced).
+
+use crate::error::{Error, Result};
+use crate::frameworks::expr::{parse_expr, Schema};
+use crate::frameworks::plan::{AggSpec, Aggregate, LogicalPlan};
+
+/// Parse a Pig-like script into a logical plan.
+pub fn parse_script(script: &str, n_reduces: u32) -> Result<LogicalPlan> {
+    // Strip comment lines first ('-- ...'), then split on ';'.
+    let cleaned: String = script
+        .lines()
+        .filter(|l| !l.trim_start().starts_with("--"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    let statements: Vec<&str> = cleaned
+        .split(';')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if statements.is_empty() {
+        return Err(Error::Framework("empty pig script".into()));
+    }
+
+    let mut input_dir = None;
+    let mut schema: Option<Schema> = None;
+    let mut filter = None;
+    let mut group_by = None;
+    let mut aggregates: Vec<AggSpec> = Vec::new();
+    let mut output_dir = None;
+    let mut aliases: Vec<String> = Vec::new();
+
+    for stmt in statements {
+        if let Some((alias, rest)) = split_assignment(stmt) {
+            let rest_upper = rest.to_ascii_uppercase();
+            if rest_upper.starts_with("LOAD") {
+                let (path, delim, fields) = parse_load(rest)?;
+                input_dir = Some(path);
+                schema = Some(Schema::new(
+                    &fields.iter().map(String::as_str).collect::<Vec<_>>(),
+                    delim,
+                ));
+            } else if rest_upper.starts_with("FILTER") {
+                let s = schema
+                    .as_ref()
+                    .ok_or_else(|| Error::Framework("FILTER before LOAD".into()))?;
+                let (src, cond) = parse_filter(rest)?;
+                require_alias(&aliases, &src)?;
+                filter = Some(parse_expr(&cond, s)?);
+            } else if rest_upper.starts_with("GROUP") {
+                let s = schema
+                    .as_ref()
+                    .ok_or_else(|| Error::Framework("GROUP before LOAD".into()))?;
+                let (src, key) = parse_group(rest)?;
+                require_alias(&aliases, &src)?;
+                group_by = Some(parse_expr(&key, s)?);
+            } else if rest_upper.starts_with("FOREACH") {
+                let s = schema
+                    .as_ref()
+                    .ok_or_else(|| Error::Framework("FOREACH before LOAD".into()))?;
+                let (src, gens) = parse_foreach(rest)?;
+                require_alias(&aliases, &src)?;
+                for (agg, arg) in gens {
+                    aggregates.push(AggSpec {
+                        agg,
+                        expr: parse_expr(&arg, s)?,
+                    });
+                }
+            } else {
+                return Err(Error::Framework(format!("unknown statement '{rest}'")));
+            }
+            aliases.push(alias);
+        } else if stmt.to_ascii_uppercase().starts_with("STORE") {
+            let (src, path) = parse_store(stmt)?;
+            require_alias(&aliases, &src)?;
+            output_dir = Some(path);
+        } else {
+            return Err(Error::Framework(format!("cannot parse statement '{stmt}'")));
+        }
+    }
+
+    Ok(LogicalPlan {
+        input_dir: input_dir.ok_or_else(|| Error::Framework("no LOAD".into()))?,
+        output_dir: output_dir.ok_or_else(|| Error::Framework("no STORE".into()))?,
+        schema: schema.unwrap(),
+        filter,
+        group_by,
+        aggregates,
+        n_reduces,
+    })
+}
+
+fn split_assignment(stmt: &str) -> Option<(String, &str)> {
+    let eq = stmt.find('=')?;
+    let alias = stmt[..eq].trim();
+    // Guard against '==' inside expressions: alias must be a bare ident.
+    if alias.is_empty() || !alias.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+        return None;
+    }
+    Some((alias.to_string(), stmt[eq + 1..].trim()))
+}
+
+fn require_alias(aliases: &[String], name: &str) -> Result<()> {
+    if aliases.iter().any(|a| a == name) {
+        Ok(())
+    } else {
+        Err(Error::Framework(format!("unknown alias '{name}'")))
+    }
+}
+
+fn quoted(text: &str) -> Result<(String, &str)> {
+    let start = text
+        .find('\'')
+        .ok_or_else(|| Error::Framework(format!("expected quoted string in '{text}'")))?;
+    let rest = &text[start + 1..];
+    let end = rest
+        .find('\'')
+        .ok_or_else(|| Error::Framework("unterminated quote".into()))?;
+    Ok((rest[..end].to_string(), &rest[end + 1..]))
+}
+
+/// `LOAD '<path>' [USING '<delim>'] AS (f1, f2, ...)`
+fn parse_load(rest: &str) -> Result<(String, char, Vec<String>)> {
+    let after_load = rest["LOAD".len()..].trim();
+    let (path, mut tail) = quoted(after_load)?;
+    let mut delim = '\t';
+    let tail_upper = tail.to_ascii_uppercase();
+    if let Some(pos) = tail_upper.find("USING") {
+        let (d, t) = quoted(&tail[pos + 5..])?;
+        delim = d.chars().next().unwrap_or('\t');
+        tail = t;
+    }
+    let tail_upper = tail.to_ascii_uppercase();
+    let as_pos = tail_upper
+        .find("AS")
+        .ok_or_else(|| Error::Framework("LOAD needs AS (fields)".into()))?;
+    let fields_text = tail[as_pos + 2..].trim();
+    let inner = fields_text
+        .strip_prefix('(')
+        .and_then(|s| s.strip_suffix(')'))
+        .ok_or_else(|| Error::Framework("AS needs (field, ...)".into()))?;
+    let fields: Vec<String> = inner
+        .split(',')
+        .map(|f| f.trim().to_string())
+        .filter(|f| !f.is_empty())
+        .collect();
+    if fields.is_empty() {
+        return Err(Error::Framework("empty field list".into()));
+    }
+    Ok((path, delim, fields))
+}
+
+/// `FILTER <alias> BY <expr>`
+fn parse_filter(rest: &str) -> Result<(String, String)> {
+    let after = rest["FILTER".len()..].trim();
+    let by = after
+        .to_ascii_uppercase()
+        .find(" BY ")
+        .ok_or_else(|| Error::Framework("FILTER needs BY".into()))?;
+    Ok((
+        after[..by].trim().to_string(),
+        after[by + 4..].trim().to_string(),
+    ))
+}
+
+/// `GROUP <alias> BY <expr>`
+fn parse_group(rest: &str) -> Result<(String, String)> {
+    let after = rest["GROUP".len()..].trim();
+    let by = after
+        .to_ascii_uppercase()
+        .find(" BY ")
+        .ok_or_else(|| Error::Framework("GROUP needs BY".into()))?;
+    Ok((
+        after[..by].trim().to_string(),
+        after[by + 4..].trim().to_string(),
+    ))
+}
+
+/// `FOREACH <alias> GENERATE group, AGG(expr), ...`
+fn parse_foreach(rest: &str) -> Result<(String, Vec<(Aggregate, String)>)> {
+    let after = rest["FOREACH".len()..].trim();
+    let gen = after
+        .to_ascii_uppercase()
+        .find("GENERATE")
+        .ok_or_else(|| Error::Framework("FOREACH needs GENERATE".into()))?;
+    let src = after[..gen].trim().to_string();
+    let gens_text = &after[gen + "GENERATE".len()..];
+    let mut out = Vec::new();
+    for item in gens_text.split(',') {
+        let item = item.trim();
+        if item.is_empty() || item.eq_ignore_ascii_case("group") {
+            continue; // the group key is always emitted first
+        }
+        let open = item
+            .find('(')
+            .ok_or_else(|| Error::Framework(format!("expected AGG(expr) in '{item}'")))?;
+        let close = item
+            .rfind(')')
+            .ok_or_else(|| Error::Framework(format!("unclosed paren in '{item}'")))?;
+        let agg = Aggregate::parse(item[..open].trim())
+            .ok_or_else(|| Error::Framework(format!("unknown aggregate '{}'", &item[..open])))?;
+        out.push((agg, item[open + 1..close].trim().to_string()));
+    }
+    if out.is_empty() {
+        return Err(Error::Framework("GENERATE needs at least one aggregate".into()));
+    }
+    Ok((src, out))
+}
+
+/// `STORE <alias> INTO '<path>'`
+fn parse_store(stmt: &str) -> Result<(String, String)> {
+    let after = stmt["STORE".len()..].trim();
+    let into = after
+        .to_ascii_uppercase()
+        .find("INTO")
+        .ok_or_else(|| Error::Framework("STORE needs INTO".into()))?;
+    let src = after[..into].trim().to_string();
+    let (path, _) = quoted(&after[into + 4..])?;
+    Ok((src, path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frameworks::plan::Aggregate;
+
+    const SCRIPT: &str = "
+        recs = LOAD '/data/sales' USING ',' AS (region, product, amount);
+        big  = FILTER recs BY amount > 100;
+        grp  = GROUP big BY region;
+        out  = FOREACH grp GENERATE group, SUM(amount), COUNT(amount);
+        STORE out INTO '/data/report';
+    ";
+
+    #[test]
+    fn full_script_parses() {
+        let plan = parse_script(SCRIPT, 3).unwrap();
+        assert_eq!(plan.input_dir, "/data/sales");
+        assert_eq!(plan.output_dir, "/data/report");
+        assert_eq!(plan.schema.fields, vec!["region", "product", "amount"]);
+        assert_eq!(plan.schema.delimiter, ',');
+        assert!(plan.filter.is_some());
+        assert!(plan.group_by.is_some());
+        assert_eq!(plan.aggregates.len(), 2);
+        assert_eq!(plan.aggregates[0].agg, Aggregate::Sum);
+        assert_eq!(plan.aggregates[1].agg, Aggregate::Count);
+    }
+
+    #[test]
+    fn filter_is_optional() {
+        let plan = parse_script(
+            "r = LOAD '/in' AS (a, b);
+             g = GROUP r BY a;
+             o = FOREACH g GENERATE group, MAX(b);
+             STORE o INTO '/out';",
+            1,
+        )
+        .unwrap();
+        assert!(plan.filter.is_none());
+        assert_eq!(plan.schema.delimiter, '\t'); // default
+    }
+
+    #[test]
+    fn unknown_alias_rejected() {
+        let err = parse_script(
+            "r = LOAD '/in' AS (a);
+             g = GROUP nope BY a;
+             o = FOREACH g GENERATE group, COUNT(a);
+             STORE o INTO '/out';",
+            1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown alias 'nope'"));
+    }
+
+    #[test]
+    fn missing_store_rejected() {
+        assert!(parse_script("r = LOAD '/in' AS (a);", 1).is_err());
+    }
+
+    #[test]
+    fn bad_aggregate_rejected() {
+        let err = parse_script(
+            "r = LOAD '/in' AS (a);
+             g = GROUP r BY a;
+             o = FOREACH g GENERATE group, MEDIAN(a);
+             STORE o INTO '/out';",
+            1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown aggregate"));
+    }
+
+    #[test]
+    fn comments_and_blank_statements_skipped() {
+        let plan = parse_script(
+            "-- comment line
+             r = LOAD '/in' AS (a);;
+             g = GROUP r BY a;
+             o = FOREACH g GENERATE group, COUNT(a);
+             STORE o INTO '/out';",
+            1,
+        )
+        .unwrap();
+        assert_eq!(plan.aggregates.len(), 1);
+    }
+}

@@ -1,0 +1,314 @@
+//! The shared logical plan Pig and Hive lower to, and its compilation to a
+//! MapReduce [`JobSpec`].
+//!
+//! Plan shape (the classic one-job pipeline):
+//! `LOAD → [FILTER] → GROUP BY key → AGGREGATE(s) → STORE`.
+//! The map side parses rows, applies the filter and emits
+//! `(group_key, projected row)`; the reduce side folds the aggregates.
+
+use crate::error::{Error, Result};
+use crate::frameworks::expr::{cmp_values, Expr, Row, Schema, Value};
+use crate::mapreduce::{HashPartitioner, InputFormat, JobSpec, Mapper, OutputFormat, Reducer};
+use std::sync::Arc;
+
+/// Aggregate functions over a grouped expression.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Aggregate {
+    Count,
+    Sum,
+    Avg,
+    Min,
+    Max,
+}
+
+impl Aggregate {
+    pub fn parse(s: &str) -> Option<Aggregate> {
+        match s.to_ascii_uppercase().as_str() {
+            "COUNT" => Some(Aggregate::Count),
+            "SUM" => Some(Aggregate::Sum),
+            "AVG" => Some(Aggregate::Avg),
+            "MIN" => Some(Aggregate::Min),
+            "MAX" => Some(Aggregate::Max),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Aggregate::Count => "COUNT",
+            Aggregate::Sum => "SUM",
+            Aggregate::Avg => "AVG",
+            Aggregate::Min => "MIN",
+            Aggregate::Max => "MAX",
+        }
+    }
+}
+
+/// One output column: an aggregate over an expression.
+#[derive(Debug, Clone)]
+pub struct AggSpec {
+    pub agg: Aggregate,
+    pub expr: Expr,
+}
+
+/// The one-job logical plan.
+#[derive(Debug, Clone)]
+pub struct LogicalPlan {
+    pub input_dir: String,
+    pub output_dir: String,
+    pub schema: Schema,
+    pub filter: Option<Expr>,
+    /// Group key expression (None = global aggregate, single group).
+    pub group_by: Option<Expr>,
+    pub aggregates: Vec<AggSpec>,
+    pub n_reduces: u32,
+}
+
+impl LogicalPlan {
+    /// Compile to a runnable [`JobSpec`].
+    pub fn compile(&self) -> Result<JobSpec> {
+        if self.aggregates.is_empty() {
+            return Err(Error::Framework("plan has no aggregates".into()));
+        }
+        let mut spec = JobSpec::identity(
+            "framework-query",
+            &self.input_dir,
+            &self.output_dir,
+            self.n_reduces.max(1),
+        );
+        spec.input_format = InputFormat::Lines;
+        spec.output_format = OutputFormat::TextValue;
+        spec.split_bytes = 8 * 1024 * 1024;
+        spec.mapper = Arc::new(PlanMapper {
+            schema: self.schema.clone(),
+            filter: self.filter.clone(),
+            group_by: self.group_by.clone(),
+            aggregates: self.aggregates.clone(),
+        });
+        spec.reducer = Arc::new(PlanReducer {
+            aggregates: self.aggregates.clone(),
+        });
+        spec.partitioner = Arc::new(HashPartitioner);
+        Ok(spec)
+    }
+}
+
+/// Map side: filter rows, emit `(group_key, partial-aggregate tuple)`.
+/// Partials are pre-folded per emission (combiner-less but compact: the
+/// reduce side merges `(count, sum, min, max)` partials per aggregate).
+struct PlanMapper {
+    schema: Schema,
+    filter: Option<Expr>,
+    group_by: Option<Expr>,
+    aggregates: Vec<AggSpec>,
+}
+
+/// Serialized partial: for each aggregate, `count,sum,min,max` joined by
+/// `;` — enough to finalize any of the five functions.
+fn partial_for(aggs: &[AggSpec], row: &Row) -> Result<String> {
+    let mut parts = Vec::with_capacity(aggs.len());
+    for a in aggs {
+        let v = a.expr.eval(row)?;
+        let n = match a.agg {
+            Aggregate::Count => 1.0,
+            _ => v.as_num()?,
+        };
+        parts.push(format!("1,{n},{n},{n}"));
+    }
+    Ok(parts.join(";"))
+}
+
+impl Mapper for PlanMapper {
+    fn map(&self, _k: &[u8], value: &[u8], emit: &mut dyn FnMut(Vec<u8>, Vec<u8>)) {
+        let Ok(line) = std::str::from_utf8(value) else {
+            return;
+        };
+        if line.trim().is_empty() {
+            return;
+        }
+        let row = self.schema.parse_row(line);
+        if let Some(f) = &self.filter {
+            match f.eval(&row) {
+                Ok(v) if v.truthy() => {}
+                _ => return,
+            }
+        }
+        let key = match &self.group_by {
+            Some(g) => match g.eval(&row) {
+                Ok(v) => v.to_string(),
+                Err(_) => return,
+            },
+            None => "<all>".to_string(),
+        };
+        if let Ok(partial) = partial_for(&self.aggregates, &row) {
+            emit(key.into_bytes(), partial.into_bytes());
+        }
+    }
+}
+
+/// Reduce side: merge partials, finalize, emit one text row per group.
+struct PlanReducer {
+    aggregates: Vec<AggSpec>,
+}
+
+#[derive(Clone, Copy)]
+struct Partial {
+    count: f64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+fn parse_partials(n: usize, text: &str) -> Option<Vec<Partial>> {
+    let mut out = Vec::with_capacity(n);
+    for part in text.split(';') {
+        let nums: Vec<f64> = part.split(',').filter_map(|x| x.parse().ok()).collect();
+        if nums.len() != 4 {
+            return None;
+        }
+        out.push(Partial {
+            count: nums[0],
+            sum: nums[1],
+            min: nums[2],
+            max: nums[3],
+        });
+    }
+    (out.len() == n).then_some(out)
+}
+
+impl Reducer for PlanReducer {
+    fn reduce(
+        &self,
+        key: &[u8],
+        values: &mut dyn Iterator<Item = &[u8]>,
+        emit: &mut dyn FnMut(Vec<u8>, Vec<u8>),
+    ) {
+        let n = self.aggregates.len();
+        let mut acc: Vec<Partial> = vec![
+            Partial {
+                count: 0.0,
+                sum: 0.0,
+                min: f64::INFINITY,
+                max: f64::NEG_INFINITY,
+            };
+            n
+        ];
+        for v in values {
+            let Ok(text) = std::str::from_utf8(v) else {
+                continue;
+            };
+            let Some(parts) = parse_partials(n, text) else {
+                continue;
+            };
+            for (a, p) in acc.iter_mut().zip(parts) {
+                a.count += p.count;
+                a.sum += p.sum;
+                a.min = a.min.min(p.min);
+                a.max = a.max.max(p.max);
+            }
+        }
+        let mut cols = vec![String::from_utf8_lossy(key).to_string()];
+        for (spec, a) in self.aggregates.iter().zip(&acc) {
+            let v = match spec.agg {
+                Aggregate::Count => a.count,
+                Aggregate::Sum => a.sum,
+                Aggregate::Avg => {
+                    if a.count > 0.0 {
+                        a.sum / a.count
+                    } else {
+                        f64::NAN
+                    }
+                }
+                Aggregate::Min => a.min,
+                Aggregate::Max => a.max,
+            };
+            cols.push(Value::Num(v).to_string());
+        }
+        emit(key.to_vec(), cols.join("\t").into_bytes());
+    }
+}
+
+/// Sort query-output lines for stable comparisons in tests and examples.
+pub fn sorted_result_lines(text: &str) -> Vec<String> {
+    let mut lines: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+    lines.sort_by(|a, b| {
+        let ka = Value::parse(a.split('\t').next().unwrap_or(""));
+        let kb = Value::parse(b.split('\t').next().unwrap_or(""));
+        cmp_values(&ka, &kb)
+    });
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frameworks::expr::parse_expr;
+
+    fn plan() -> LogicalPlan {
+        let schema = Schema::new(&["region", "product", "amount"], ',');
+        LogicalPlan {
+            input_dir: "/in".into(),
+            output_dir: "/out".into(),
+            filter: Some(parse_expr("amount > 100", &schema).unwrap()),
+            group_by: Some(parse_expr("region", &schema).unwrap()),
+            aggregates: vec![
+                AggSpec {
+                    agg: Aggregate::Sum,
+                    expr: parse_expr("amount", &schema).unwrap(),
+                },
+                AggSpec {
+                    agg: Aggregate::Count,
+                    expr: parse_expr("amount", &schema).unwrap(),
+                },
+            ],
+            schema,
+            n_reduces: 2,
+        }
+    }
+
+    #[test]
+    fn compiles_to_job_spec() {
+        let spec = plan().compile().unwrap();
+        assert_eq!(spec.n_reduces, 2);
+        assert_eq!(spec.input_format, InputFormat::Lines);
+    }
+
+    #[test]
+    fn mapper_filters_and_keys() {
+        let p = plan();
+        let spec = p.compile().unwrap();
+        let mut out = Vec::new();
+        spec.mapper.map(b"0", b"wales,w,150", &mut |k, v| out.push((k, v)));
+        spec.mapper.map(b"1", b"wales,w,50", &mut |k, v| out.push((k, v)));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, b"wales".to_vec());
+        assert_eq!(out[0].1, b"1,150,150,150;1,1,1,1".to_vec());
+    }
+
+    #[test]
+    fn reducer_finalizes_aggregates() {
+        let p = plan();
+        let spec = p.compile().unwrap();
+        let vals: Vec<&[u8]> = vec![b"1,150,150,150;1,1,1,1", b"1,250,250,250;1,1,1,1"];
+        let mut out = Vec::new();
+        spec.reducer
+            .reduce(b"wales", &mut vals.into_iter(), &mut |_, v| {
+                out.push(String::from_utf8(v).unwrap())
+            });
+        assert_eq!(out, vec!["wales\t400\t2"]);
+    }
+
+    #[test]
+    fn empty_aggregate_list_rejected() {
+        let mut p = plan();
+        p.aggregates.clear();
+        assert!(p.compile().is_err());
+    }
+
+    #[test]
+    fn sorted_lines_numeric_then_string() {
+        let lines = sorted_result_lines("10\tx\n2\ty\nalpha\tz");
+        assert_eq!(lines[0].starts_with('2'), true);
+        assert_eq!(lines[1].starts_with("10"), true);
+    }
+}

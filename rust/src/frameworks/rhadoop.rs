@@ -1,0 +1,317 @@
+//! RHadoop-style distributed statistics.
+//!
+//! The R user's entry point on HPC Wales was RHadoop's `mapreduce()` over
+//! numeric data. The two canonical flows are reproduced as first-class
+//! jobs over delimited numeric columns:
+//!
+//! * [`summary_job`] — `summary(x)` per column: count / mean / variance /
+//!   min / max, via one MR pass of mergeable moment partials;
+//! * [`histogram_job`] — `hist(x, breaks)`: fixed-width binning via one MR
+//!   pass (bins = reduce keys).
+//!
+//! Welford-style merging keeps the variance numerically honest across
+//! partial merges — property-tested against a direct two-pass computation.
+
+use crate::error::Result;
+use crate::frameworks::expr::{Schema, Value};
+use crate::mapreduce::{
+    HashPartitioner, InputFormat, JobSpec, Mapper, OutputFormat, Reducer,
+};
+use std::sync::Arc;
+
+/// Mergeable moments partial (per column).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Moments {
+    pub count: f64,
+    pub mean: f64,
+    /// Sum of squared deviations from the mean (M2 in Welford terms).
+    pub m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Moments {
+    pub fn empty() -> Moments {
+        Moments {
+            count: 0.0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn of(x: f64) -> Moments {
+        Moments {
+            count: 1.0,
+            mean: x,
+            m2: 0.0,
+            min: x,
+            max: x,
+        }
+    }
+
+    /// Chan et al. parallel merge.
+    pub fn merge(self, other: Moments) -> Moments {
+        if self.count == 0.0 {
+            return other;
+        }
+        if other.count == 0.0 {
+            return self;
+        }
+        let n = self.count + other.count;
+        let delta = other.mean - self.mean;
+        Moments {
+            count: n,
+            mean: self.mean + delta * other.count / n,
+            m2: self.m2 + other.m2 + delta * delta * self.count * other.count / n,
+            min: self.min.min(other.min),
+            max: self.max.max(other.max),
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.count < 2.0 {
+            0.0
+        } else {
+            self.m2 / (self.count - 1.0)
+        }
+    }
+
+    fn serialize(&self) -> String {
+        format!(
+            "{},{},{},{},{}",
+            self.count, self.mean, self.m2, self.min, self.max
+        )
+    }
+
+    fn parse(text: &str) -> Option<Moments> {
+        let v: Vec<f64> = text.split(',').filter_map(|x| x.parse().ok()).collect();
+        (v.len() == 5).then(|| Moments {
+            count: v[0],
+            mean: v[1],
+            m2: v[2],
+            min: v[3],
+            max: v[4],
+        })
+    }
+}
+
+/// Map: emit one Moments partial per (column, value).
+struct SummaryMapper {
+    schema: Schema,
+    columns: Vec<usize>,
+}
+
+impl Mapper for SummaryMapper {
+    fn map(&self, _k: &[u8], value: &[u8], emit: &mut dyn FnMut(Vec<u8>, Vec<u8>)) {
+        let Ok(line) = std::str::from_utf8(value) else {
+            return;
+        };
+        if line.trim().is_empty() {
+            return;
+        }
+        let row = self.schema.parse_row(line);
+        for &c in &self.columns {
+            if let Some(Value::Num(x)) = row.0.get(c) {
+                emit(
+                    self.schema.fields[c].clone().into_bytes(),
+                    Moments::of(*x).serialize().into_bytes(),
+                );
+            }
+        }
+    }
+}
+
+/// Reduce: merge partials, emit `column count mean var min max`.
+struct SummaryReducer;
+
+impl Reducer for SummaryReducer {
+    fn reduce(
+        &self,
+        key: &[u8],
+        values: &mut dyn Iterator<Item = &[u8]>,
+        emit: &mut dyn FnMut(Vec<u8>, Vec<u8>),
+    ) {
+        let mut acc = Moments::empty();
+        for v in values {
+            if let Some(m) = std::str::from_utf8(v).ok().and_then(Moments::parse) {
+                acc = acc.merge(m);
+            }
+        }
+        let line = format!(
+            "{}\t{}\t{:.6}\t{:.6}\t{}\t{}",
+            String::from_utf8_lossy(key),
+            acc.count as u64,
+            acc.mean,
+            acc.variance(),
+            Value::Num(acc.min),
+            Value::Num(acc.max),
+        );
+        emit(key.to_vec(), line.into_bytes());
+    }
+}
+
+/// Build the `summary()` job over named numeric columns.
+pub fn summary_job(
+    input_dir: &str,
+    output_dir: &str,
+    schema: Schema,
+    columns: &[&str],
+) -> Result<JobSpec> {
+    let idx: Result<Vec<usize>> = columns.iter().map(|c| schema.index_of(c)).collect();
+    let mut spec = JobSpec::identity("rhadoop-summary", input_dir, output_dir, 1);
+    spec.input_format = InputFormat::Lines;
+    spec.output_format = OutputFormat::TextValue;
+    spec.split_bytes = 8 * 1024 * 1024;
+    spec.mapper = Arc::new(SummaryMapper {
+        schema,
+        columns: idx?,
+    });
+    spec.reducer = Arc::new(SummaryReducer);
+    spec.partitioner = Arc::new(HashPartitioner);
+    Ok(spec)
+}
+
+/// Map: route each value into a fixed-width bin.
+struct HistMapper {
+    schema: Schema,
+    column: usize,
+    lo: f64,
+    width: f64,
+    bins: u32,
+}
+
+impl Mapper for HistMapper {
+    fn map(&self, _k: &[u8], value: &[u8], emit: &mut dyn FnMut(Vec<u8>, Vec<u8>)) {
+        let Ok(line) = std::str::from_utf8(value) else {
+            return;
+        };
+        if line.trim().is_empty() {
+            return;
+        }
+        let row = self.schema.parse_row(line);
+        if let Some(Value::Num(x)) = row.0.get(self.column) {
+            let bin = (((x - self.lo) / self.width).floor() as i64)
+                .clamp(0, self.bins as i64 - 1) as u32;
+            emit(format!("{bin:06}").into_bytes(), b"1".to_vec());
+        }
+    }
+}
+
+struct HistReducer {
+    lo: f64,
+    width: f64,
+}
+
+impl Reducer for HistReducer {
+    fn reduce(
+        &self,
+        key: &[u8],
+        values: &mut dyn Iterator<Item = &[u8]>,
+        emit: &mut dyn FnMut(Vec<u8>, Vec<u8>),
+    ) {
+        let n = values.count();
+        let bin: u32 = String::from_utf8_lossy(key).parse().unwrap_or(0);
+        let lo = self.lo + bin as f64 * self.width;
+        let hi = lo + self.width;
+        emit(
+            key.to_vec(),
+            format!("[{},{})\t{}", Value::Num(lo), Value::Num(hi), n).into_bytes(),
+        );
+    }
+}
+
+/// Build the `hist()` job: `bins` fixed-width bins over `[lo, hi)`.
+pub fn histogram_job(
+    input_dir: &str,
+    output_dir: &str,
+    schema: Schema,
+    column: &str,
+    lo: f64,
+    hi: f64,
+    bins: u32,
+) -> Result<JobSpec> {
+    let column = schema.index_of(column)?;
+    let bins = bins.max(1);
+    let width = (hi - lo) / bins as f64;
+    let mut spec = JobSpec::identity("rhadoop-hist", input_dir, output_dir, bins.min(16));
+    spec.input_format = InputFormat::Lines;
+    spec.output_format = OutputFormat::TextValue;
+    spec.split_bytes = 8 * 1024 * 1024;
+    spec.mapper = Arc::new(HistMapper {
+        schema,
+        column,
+        lo,
+        width,
+        bins,
+    });
+    spec.reducer = Arc::new(HistReducer { lo, width });
+    spec.partitioner = Arc::new(HashPartitioner);
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::props;
+
+    #[test]
+    fn moments_merge_matches_two_pass() {
+        props(40, |g| {
+            let xs: Vec<f64> = (0..g.usize(2..200))
+                .map(|_| g.unit_f64() * 1000.0 - 500.0)
+                .collect();
+            // Merge in random-sized chunks.
+            let mut acc = Moments::empty();
+            let mut i = 0;
+            while i < xs.len() {
+                let j = (i + g.usize(1..8)).min(xs.len());
+                let mut chunk = Moments::empty();
+                for &x in &xs[i..j] {
+                    chunk = chunk.merge(Moments::of(x));
+                }
+                acc = acc.merge(chunk);
+                i = j;
+            }
+            // Two-pass reference.
+            let n = xs.len() as f64;
+            let mean = xs.iter().sum::<f64>() / n;
+            let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+            assert!((acc.mean - mean).abs() < 1e-6, "mean");
+            assert!((acc.variance() - var).abs() < 1e-6 * var.max(1.0), "var");
+            assert_eq!(acc.count, n);
+        });
+    }
+
+    #[test]
+    fn summary_mapper_skips_non_numeric() {
+        let schema = Schema::new(&["name", "x"], ',');
+        let job = summary_job("/in", "/out", schema, &["x"]).unwrap();
+        let mut out = Vec::new();
+        job.mapper.map(b"0", b"alice,5", &mut |k, v| out.push((k, v)));
+        job.mapper.map(b"1", b"bob,oops", &mut |k, v| out.push((k, v)));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, b"x".to_vec());
+    }
+
+    #[test]
+    fn histogram_bins_clamp() {
+        let schema = Schema::new(&["x"], ',');
+        let job = histogram_job("/in", "/out", schema, "x", 0.0, 10.0, 5).unwrap();
+        let mut out = Vec::new();
+        for v in ["-3", "0", "9.99", "25"] {
+            job.mapper.map(b"0", v.as_bytes(), &mut |k, _| {
+                out.push(String::from_utf8(k).unwrap())
+            });
+        }
+        assert_eq!(out, vec!["000000", "000000", "000004", "000004"]);
+    }
+
+    #[test]
+    fn unknown_column_rejected() {
+        let schema = Schema::new(&["x"], ',');
+        assert!(summary_job("/i", "/o", schema.clone(), &["y"]).is_err());
+        assert!(histogram_job("/i", "/o", schema, "y", 0.0, 1.0, 4).is_err());
+    }
+}

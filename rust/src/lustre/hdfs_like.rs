@@ -1,0 +1,175 @@
+//! The rejected design: an HDFS-style replicated block store on node-local
+//! DAS (ABL-FS baseline).
+//!
+//! Differences from Lustre captured by the model:
+//! * aggregate bandwidth **scales with the job's node count** (every node
+//!   brings its spindle) — the HDFS advantage;
+//! * 3× pipeline replication taxes writes and capacity — with 414 GB DAS
+//!   per node, a 1 TB sorted dataset (input + output, 3× replicated)
+//!   simply does not fit below ~16 nodes, the paper's §III objection;
+//! * most map reads are node-local and bypass the network entirely.
+
+use crate::config::ClusterConfig;
+use crate::error::Result;
+use crate::lustre::{Dfs, FsModel, MemStore};
+use crate::simx::queueing::MD1;
+
+/// HDFS-on-DAS [`Dfs`] implementation.
+pub struct HdfsLikeFs {
+    store: MemStore,
+    mount: String,
+    das_bps: f64,
+    das_bytes_per_node: f64,
+    nic_bps: f64,
+    /// Replication factor (HDFS default 3).
+    pub replication: u32,
+    /// Fraction of map reads scheduled node-local (delay scheduling ≈ 0.93).
+    pub local_read_frac: f64,
+    /// NameNode ops/sec (single NameNode, comparable MDS-class server).
+    pub namenode_ops_per_sec: f64,
+}
+
+impl HdfsLikeFs {
+    pub fn new(cluster: &ClusterConfig) -> Self {
+        let fs = HdfsLikeFs {
+            store: MemStore::new(),
+            mount: "/hdfs".to_string(),
+            das_bps: cluster.das_bw_mbps * 1e6,
+            das_bytes_per_node: cluster.das_gb as f64 * 1e9,
+            nic_bps: cluster.ib_gbps * 1e9 / 8.0,
+            replication: 3,
+            local_read_frac: 0.93,
+            namenode_ops_per_sec: 20_000.0,
+        };
+        fs.store.mkdirs("/hdfs").expect("mount");
+        fs
+    }
+}
+
+impl Dfs for HdfsLikeFs {
+    fn name(&self) -> &str {
+        "hdfs-das"
+    }
+
+    fn mount(&self) -> &str {
+        &self.mount
+    }
+
+    fn mkdirs(&self, path: &str) -> Result<()> {
+        self.store.mkdirs(path)
+    }
+
+    fn create(&self, path: &str, data: &[u8]) -> Result<()> {
+        self.store.create(path, data)
+    }
+
+    fn append(&self, path: &str, data: &[u8]) -> Result<()> {
+        self.store.append(path, data)
+    }
+
+    fn read(&self, path: &str) -> Result<Vec<u8>> {
+        self.store.read(path)
+    }
+
+    fn read_range(&self, path: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        self.store.read_range(path, offset, len)
+    }
+
+    fn size(&self, path: &str) -> Result<u64> {
+        self.store.size(path)
+    }
+
+    fn exists(&self, path: &str) -> bool {
+        self.store.exists(path)
+    }
+
+    fn list(&self, dir: &str) -> Vec<String> {
+        self.store.list(dir)
+    }
+
+    fn rename(&self, from: &str, to: &str) -> Result<()> {
+        self.store.rename(from, to)
+    }
+
+    fn delete(&self, path: &str) -> Result<()> {
+        self.store.delete(path)
+    }
+
+    fn delete_recursive(&self, prefix: &str) -> Result<u64> {
+        self.store.delete_recursive(prefix)
+    }
+
+    fn model(&self, job_nodes: u32) -> FsModel {
+        let nodes = job_nodes.max(1) as f64;
+        // Every participating node contributes its spindle.
+        let agg = nodes * self.das_bps;
+        // Writes: first replica local at spindle speed; the 2 remote copies
+        // ride the NIC but land on other spindles — the spindle pool is the
+        // binding constraint, accounted via write_amplification.
+        FsModel {
+            write_agg_bps: agg,
+            read_agg_bps: agg,
+            per_client_write_bps: self.das_bps.min(self.nic_bps),
+            per_client_read_bps: self.das_bps.min(self.nic_bps),
+            meta: MD1::new(self.namenode_ops_per_sec),
+            write_amplification: self.replication as f64,
+            local_read_frac: self.local_read_frac,
+            capacity_bytes: nodes * self.das_bytes_per_node,
+            contention_sat_clients: f64::INFINITY,
+            contention_alpha: 0.0,
+        }
+    }
+
+    fn used_bytes(&self) -> u64 {
+        self.store.used_bytes()
+    }
+
+    fn object_count(&self) -> u64 {
+        self.store.object_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn fs() -> HdfsLikeFs {
+        HdfsLikeFs::new(&ClusterConfig::default())
+    }
+
+    #[test]
+    fn aggregate_scales_with_job_nodes() {
+        let fs = fs();
+        let m8 = fs.model(8);
+        let m64 = fs.model(64);
+        assert!((m64.write_agg_bps / m8.write_agg_bps - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn terabyte_does_not_fit_on_few_nodes() {
+        // §III: "very little local storage that cannot handle typical Big
+        // Data workloads (in the order of TB's)".
+        let fs = fs();
+        let tb = 1e12;
+        // Terasort's footprint: input + output, both 3× replicated.
+        let footprint = 2.0 * tb;
+        assert!(!fs.model(8).fits(footprint)); // 8 × 414 GB < 6 TB
+        assert!(fs.model(64).fits(footprint)); // 64 × 414 GB > 6 TB
+    }
+
+    #[test]
+    fn replication_amplifies_writes() {
+        let fs = fs();
+        let m = fs.model(32);
+        let logical = m.wave_write_bps(32 * 13);
+        assert!((logical - m.write_agg_bps / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mostly_local_reads() {
+        let fs = fs();
+        let m = fs.model(32);
+        assert!(m.local_read_frac > 0.9);
+    }
+}

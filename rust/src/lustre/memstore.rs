@@ -1,0 +1,395 @@
+//! In-memory object store: the shared Real-mode data plane.
+//!
+//! Paths are `/`-separated absolute strings. Directories are explicit (a
+//! `mkdirs` is required before `create`, as on a POSIX filesystem — the
+//! wrapper's directory-setup step is real work here, and tests assert it
+//! happened). Thread-safe; map/reduce task attempts on the thread pool hit
+//! this concurrently.
+
+use crate::error::{Error, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+struct Inner {
+    files: BTreeMap<String, Vec<u8>>,
+    dirs: BTreeSet<String>,
+    /// Metadata-op counter (creates, opens, renames, deletes, mkdirs).
+    meta_ops: u64,
+}
+
+/// Thread-safe in-memory filesystem.
+#[derive(Debug, Default)]
+pub struct MemStore {
+    inner: Mutex<Inner>,
+}
+
+fn parent(path: &str) -> Option<&str> {
+    let p = path.trim_end_matches('/');
+    let idx = p.rfind('/')?;
+    if idx == 0 {
+        Some("/")
+    } else {
+        Some(&p[..idx])
+    }
+}
+
+fn normalize(path: &str) -> Result<String> {
+    if !path.starts_with('/') {
+        return Err(Error::Dfs(format!("path must be absolute: '{path}'")));
+    }
+    if path.contains("//") || path.contains("/../") || path.ends_with("/..") {
+        return Err(Error::Dfs(format!("bad path: '{path}'")));
+    }
+    Ok(path.trim_end_matches('/').to_string())
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        let store = MemStore::default();
+        store.inner.lock().unwrap().dirs.insert("/".into());
+        store
+    }
+
+    pub fn mkdirs(&self, path: &str) -> Result<()> {
+        let path = normalize(path)?;
+        let mut g = self.inner.lock().unwrap();
+        let mut acc = String::new();
+        for comp in path.split('/').filter(|c| !c.is_empty()) {
+            acc.push('/');
+            acc.push_str(comp);
+            if g.files.contains_key(&acc) {
+                return Err(Error::Dfs(format!("'{acc}' is a file")));
+            }
+            if g.dirs.insert(acc.clone()) {
+                g.meta_ops += 1;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn create(&self, path: &str, data: &[u8]) -> Result<()> {
+        let path = normalize(path)?;
+        let dir = parent(&path)
+            .ok_or_else(|| Error::Dfs(format!("no parent for '{path}'")))?
+            .to_string();
+        let mut g = self.inner.lock().unwrap();
+        if !g.dirs.contains(dir.as_str()) {
+            return Err(Error::Dfs(format!("parent dir missing for '{path}'")));
+        }
+        if g.dirs.contains(path.as_str()) {
+            return Err(Error::Dfs(format!("'{path}' is a directory")));
+        }
+        if g.files.contains_key(&path) {
+            return Err(Error::Dfs(format!("'{path}' already exists")));
+        }
+        g.files.insert(path, data.to_vec());
+        g.meta_ops += 1;
+        Ok(())
+    }
+
+    pub fn append(&self, path: &str, data: &[u8]) -> Result<()> {
+        let path = normalize(path)?;
+        let mut g = self.inner.lock().unwrap();
+        match g.files.get_mut(&path) {
+            Some(buf) => {
+                buf.extend_from_slice(data);
+                Ok(())
+            }
+            None => Err(Error::Dfs(format!("append to missing file '{path}'"))),
+        }
+    }
+
+    pub fn read(&self, path: &str) -> Result<Vec<u8>> {
+        let path = normalize(path)?;
+        let mut g = self.inner.lock().unwrap();
+        g.meta_ops += 1; // open
+        g.files
+            .get(&path)
+            .cloned()
+            .ok_or_else(|| Error::Dfs(format!("no such file '{path}'")))
+    }
+
+    pub fn read_range(&self, path: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let path = normalize(path)?;
+        let mut g = self.inner.lock().unwrap();
+        g.meta_ops += 1;
+        let buf = g
+            .files
+            .get(&path)
+            .ok_or_else(|| Error::Dfs(format!("no such file '{path}'")))?;
+        let start = (offset as usize).min(buf.len());
+        let end = ((offset + len) as usize).min(buf.len());
+        Ok(buf[start..end].to_vec())
+    }
+
+    pub fn size(&self, path: &str) -> Result<u64> {
+        let path = normalize(path)?;
+        let g = self.inner.lock().unwrap();
+        g.files
+            .get(&path)
+            .map(|b| b.len() as u64)
+            .ok_or_else(|| Error::Dfs(format!("no such file '{path}'")))
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        match normalize(path) {
+            Ok(p) => {
+                let g = self.inner.lock().unwrap();
+                g.files.contains_key(&p) || g.dirs.contains(p.as_str())
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Immediate children (files and dirs) of `dir`, sorted.
+    pub fn list(&self, dir: &str) -> Vec<String> {
+        let Ok(dir) = normalize(dir) else {
+            return Vec::new();
+        };
+        let g = self.inner.lock().unwrap();
+        let prefix = if dir == "/" { "/".to_string() } else { format!("{dir}/") };
+        let mut out = BTreeSet::new();
+        for name in g.files.keys().chain(g.dirs.iter()) {
+            if let Some(rest) = name.strip_prefix(&prefix) {
+                if rest.is_empty() {
+                    continue;
+                }
+                let child = match rest.find('/') {
+                    Some(i) => &rest[..i],
+                    None => rest,
+                };
+                out.insert(format!("{prefix}{child}"));
+            }
+        }
+        out.into_iter().collect()
+    }
+
+    pub fn rename(&self, from: &str, to: &str) -> Result<()> {
+        let from = normalize(from)?;
+        let to = normalize(to)?;
+        let mut g = self.inner.lock().unwrap();
+        let to_parent = parent(&to).unwrap_or("/").to_string();
+        if !g.dirs.contains(to_parent.as_str()) {
+            return Err(Error::Dfs(format!("target dir missing for '{to}'")));
+        }
+        if g.files.contains_key(&to) || g.dirs.contains(to.as_str()) {
+            return Err(Error::Dfs(format!("target '{to}' exists")));
+        }
+        g.meta_ops += 1;
+        if let Some(data) = g.files.remove(&from) {
+            g.files.insert(to, data);
+            return Ok(());
+        }
+        if g.dirs.contains(from.as_str()) {
+            // Move the whole subtree.
+            let from_prefix = format!("{from}/");
+            let moved_files: Vec<(String, Vec<u8>)> = g
+                .files
+                .iter()
+                .filter(|(k, _)| k.starts_with(&from_prefix))
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect();
+            for (k, _) in &moved_files {
+                g.files.remove(k);
+            }
+            for (k, v) in moved_files {
+                let new_key = format!("{to}/{}", &k[from_prefix.len()..]);
+                g.files.insert(new_key, v);
+            }
+            let moved_dirs: Vec<String> = g
+                .dirs
+                .iter()
+                .filter(|d| d.as_str() == from || d.starts_with(&from_prefix))
+                .cloned()
+                .collect();
+            for d in &moved_dirs {
+                g.dirs.remove(d);
+            }
+            for d in moved_dirs {
+                let suffix = &d[from.len()..];
+                g.dirs.insert(format!("{to}{suffix}"));
+            }
+            return Ok(());
+        }
+        Err(Error::Dfs(format!("no such path '{from}'")))
+    }
+
+    pub fn delete(&self, path: &str) -> Result<()> {
+        let path = normalize(path)?;
+        let mut g = self.inner.lock().unwrap();
+        g.meta_ops += 1;
+        if g.files.remove(&path).is_some() {
+            return Ok(());
+        }
+        if g.dirs.contains(path.as_str()) {
+            let prefix = format!("{path}/");
+            let has_children = g.files.keys().any(|k| k.starts_with(&prefix))
+                || g.dirs.iter().any(|d| d.starts_with(&prefix));
+            if has_children {
+                return Err(Error::Dfs(format!("directory '{path}' not empty")));
+            }
+            g.dirs.remove(path.as_str());
+            return Ok(());
+        }
+        Err(Error::Dfs(format!("no such path '{path}'")))
+    }
+
+    /// Delete a subtree; returns number of objects removed.
+    pub fn delete_recursive(&self, prefix: &str) -> Result<u64> {
+        let prefix = normalize(prefix)?;
+        let mut g = self.inner.lock().unwrap();
+        let pfx = format!("{prefix}/");
+        let files: Vec<String> = g
+            .files
+            .keys()
+            .filter(|k| k.as_str() == prefix || k.starts_with(&pfx))
+            .cloned()
+            .collect();
+        let dirs: Vec<String> = g
+            .dirs
+            .iter()
+            .filter(|d| d.as_str() == prefix || d.starts_with(&pfx))
+            .cloned()
+            .collect();
+        let n = (files.len() + dirs.len()) as u64;
+        for f in files {
+            g.files.remove(&f);
+        }
+        for d in dirs {
+            g.dirs.remove(&d);
+        }
+        g.meta_ops += n;
+        Ok(n)
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.files.values().map(|v| v.len() as u64).sum()
+    }
+
+    pub fn object_count(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        (g.files.len() + g.dirs.len()) as u64
+    }
+
+    pub fn meta_ops(&self) -> u64 {
+        self.inner.lock().unwrap().meta_ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_requires_parent_dir() {
+        let fs = MemStore::new();
+        assert!(fs.create("/a/b/file", b"x").is_err());
+        fs.mkdirs("/a/b").unwrap();
+        fs.create("/a/b/file", b"x").unwrap();
+        assert_eq!(fs.read("/a/b/file").unwrap(), b"x");
+    }
+
+    #[test]
+    fn no_double_create() {
+        let fs = MemStore::new();
+        fs.mkdirs("/d").unwrap();
+        fs.create("/d/f", b"1").unwrap();
+        assert!(fs.create("/d/f", b"2").is_err());
+    }
+
+    #[test]
+    fn append_and_range_reads() {
+        let fs = MemStore::new();
+        fs.mkdirs("/d").unwrap();
+        fs.create("/d/f", b"hello").unwrap();
+        fs.append("/d/f", b" world").unwrap();
+        assert_eq!(fs.size("/d/f").unwrap(), 11);
+        assert_eq!(fs.read_range("/d/f", 6, 5).unwrap(), b"world");
+        assert_eq!(fs.read_range("/d/f", 6, 100).unwrap(), b"world");
+        assert_eq!(fs.read_range("/d/f", 100, 5).unwrap(), b"");
+    }
+
+    #[test]
+    fn list_immediate_children_only() {
+        let fs = MemStore::new();
+        fs.mkdirs("/out/sub").unwrap();
+        fs.create("/out/part-0", b"").unwrap();
+        fs.create("/out/sub/deep", b"").unwrap();
+        let ls = fs.list("/out");
+        assert_eq!(ls, vec!["/out/part-0".to_string(), "/out/sub".to_string()]);
+    }
+
+    #[test]
+    fn rename_file_and_tree() {
+        let fs = MemStore::new();
+        fs.mkdirs("/job/_tmp/attempt_0").unwrap();
+        fs.create("/job/_tmp/attempt_0/part-0", b"data").unwrap();
+        fs.mkdirs("/job/out").unwrap();
+        // MR commit: rename attempt dir into final output.
+        fs.rename("/job/_tmp/attempt_0", "/job/out/task_0").unwrap();
+        assert!(fs.exists("/job/out/task_0/part-0"));
+        assert!(!fs.exists("/job/_tmp/attempt_0/part-0"));
+        assert_eq!(fs.read("/job/out/task_0/part-0").unwrap(), b"data");
+    }
+
+    #[test]
+    fn rename_refuses_clobber() {
+        let fs = MemStore::new();
+        fs.mkdirs("/d").unwrap();
+        fs.create("/d/a", b"1").unwrap();
+        fs.create("/d/b", b"2").unwrap();
+        assert!(fs.rename("/d/a", "/d/b").is_err());
+    }
+
+    #[test]
+    fn delete_nonempty_dir_needs_recursive() {
+        let fs = MemStore::new();
+        fs.mkdirs("/x/y").unwrap();
+        fs.create("/x/y/f", b"1").unwrap();
+        assert!(fs.delete("/x/y").is_err());
+        let n = fs.delete_recursive("/x").unwrap();
+        assert_eq!(n, 3); // /x, /x/y, /x/y/f
+        assert!(!fs.exists("/x"));
+    }
+
+    #[test]
+    fn usage_accounting() {
+        let fs = MemStore::new();
+        fs.mkdirs("/d").unwrap();
+        fs.create("/d/a", &[0u8; 100]).unwrap();
+        fs.create("/d/b", &[0u8; 50]).unwrap();
+        assert_eq!(fs.used_bytes(), 150);
+        assert!(fs.object_count() >= 3);
+        assert!(fs.meta_ops() >= 3);
+    }
+
+    #[test]
+    fn rejects_relative_and_dirty_paths() {
+        let fs = MemStore::new();
+        assert!(fs.mkdirs("relative/path").is_err());
+        assert!(fs.mkdirs("/a//b").is_err());
+        assert!(fs.mkdirs("/a/../b").is_err());
+    }
+
+    #[test]
+    fn concurrent_writers_consistent() {
+        use std::sync::Arc;
+        let fs = Arc::new(MemStore::new());
+        fs.mkdirs("/c").unwrap();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let fs = Arc::clone(&fs);
+                std::thread::spawn(move || {
+                    fs.create(&format!("/c/part-{i}"), &[i as u8; 64]).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(fs.list("/c").len(), 8);
+        assert_eq!(fs.used_bytes(), 8 * 64);
+    }
+}

@@ -1,0 +1,210 @@
+//! Distributed-filesystem layer: the `Dfs` abstraction, the in-memory data
+//! plane shared by Real-mode runs, and the cost models the Sim data plane
+//! queries.
+//!
+//! Two implementations mirror the paper's §III design choice:
+//!
+//! * [`LustreFs`] — what HPC Wales deployed: a shared parallel filesystem;
+//!   every byte crosses the fabric, aggregate bandwidth is the OST pool,
+//!   metadata is a single MDS (an M/D/1 server in the model).
+//! * [`HdfsLikeFs`] — the rejected design: replicated blocks on node-local
+//!   DAS. Fast local reads, but write amplification (pipeline replication)
+//!   and a hard capacity ceiling — HPC Wales nodes have only 414 GB DAS,
+//!   which is the paper's stated reason for rejecting it.
+//!
+//! Both run the same [`MemStore`] data plane so Real-mode MapReduce is
+//! byte-identical across backends; only the cost model and capacity
+//! accounting differ.
+
+pub mod hdfs_like;
+pub mod lustre_fs;
+pub mod memstore;
+
+pub use hdfs_like::HdfsLikeFs;
+pub use lustre_fs::LustreFs;
+pub use memstore::MemStore;
+
+use crate::error::Result;
+use crate::simx::queueing::MD1;
+
+/// Cost-model view of a filesystem for a job spanning `nodes` clients.
+/// All rates in bytes/sec.
+#[derive(Debug, Clone, Copy)]
+pub struct FsModel {
+    /// Aggregate write bandwidth of the backend.
+    pub write_agg_bps: f64,
+    /// Aggregate read bandwidth of the backend.
+    pub read_agg_bps: f64,
+    /// Per-client write ceiling (NIC, RPC window or local spindle).
+    pub per_client_write_bps: f64,
+    /// Per-client read ceiling.
+    pub per_client_read_bps: f64,
+    /// Metadata server model (create/open/close ops).
+    pub meta: MD1,
+    /// Bytes physically written per logical byte (HDFS replication = 3.0).
+    pub write_amplification: f64,
+    /// Fraction of map-input reads served node-locally (0 for Lustre: all
+    /// remote; ~0.93 for HDFS with delay scheduling).
+    pub local_read_frac: f64,
+    /// Usable capacity in bytes (∞ for the shared filestore at our scales).
+    pub capacity_bytes: f64,
+    /// Client count beyond which the shared backend degrades (OSS
+    /// service-thread / extent-lock saturation). ∞ for DAS-local backends.
+    pub contention_sat_clients: f64,
+    /// Degradation strength beyond saturation.
+    pub contention_alpha: f64,
+}
+
+impl FsModel {
+    /// Effective aggregate write rate seen by `clients` concurrent writers,
+    /// accounting for amplification and per-client caps.
+    pub fn wave_write_bps(&self, clients: u32) -> f64 {
+        let clients = clients.max(1) as f64;
+        let agg = self.write_agg_bps / self.write_amplification;
+        (clients * self.per_client_write_bps).min(agg)
+    }
+
+    /// Effective aggregate read rate seen by `clients` concurrent readers.
+    pub fn wave_read_bps(&self, clients: u32) -> f64 {
+        let clients = clients.max(1) as f64;
+        // Local reads bypass the shared backend entirely.
+        let remote_frac = 1.0 - self.local_read_frac;
+        let remote = (clients * self.per_client_read_bps).min(self.read_agg_bps);
+        if remote_frac <= 0.0 {
+            clients * self.per_client_read_bps
+        } else {
+            // Harmonic blend: local portion at client rate, remote portion
+            // through the shared pool.
+            let local_rate = clients * self.per_client_read_bps * self.local_read_frac;
+            local_rate + remote * remote_frac
+        }
+    }
+
+    /// Does a dataset of `bytes` (logical) fit, post-amplification?
+    pub fn fits(&self, bytes: f64) -> bool {
+        bytes * self.write_amplification <= self.capacity_bytes
+    }
+
+    /// Oversubscription slowdown factor for `clients` concurrent streams:
+    /// 1.0 at or below saturation, growing linearly in the fractional
+    /// overshoot (`1 + alpha × (clients - sat)/sat`).
+    pub fn contention_factor(&self, clients: u32) -> f64 {
+        let c = clients as f64;
+        if !self.contention_sat_clients.is_finite() || c <= self.contention_sat_clients {
+            1.0
+        } else {
+            1.0 + self.contention_alpha * (c - self.contention_sat_clients)
+                / self.contention_sat_clients
+        }
+    }
+
+    /// Write rate including oversubscription degradation.
+    pub fn contended_write_bps(&self, clients: u32) -> f64 {
+        self.wave_write_bps(clients) / self.contention_factor(clients)
+    }
+
+    /// Read rate including oversubscription degradation.
+    pub fn contended_read_bps(&self, clients: u32) -> f64 {
+        self.wave_read_bps(clients) / self.contention_factor(clients)
+    }
+}
+
+/// Filesystem abstraction: Real-mode data plane + Sim-mode cost model.
+///
+/// Paths are absolute strings rooted at the mount, e.g.
+/// `/lustre/scratch/user/tera-in/part-00003`.
+pub trait Dfs: Send + Sync {
+    /// Backend name for reports ("lustre", "hdfs-das").
+    fn name(&self) -> &str;
+
+    /// Mount prefix for user paths.
+    fn mount(&self) -> &str;
+
+    // --- data plane (Real mode) ------------------------------------------
+    fn mkdirs(&self, path: &str) -> Result<()>;
+    fn create(&self, path: &str, data: &[u8]) -> Result<()>;
+    fn append(&self, path: &str, data: &[u8]) -> Result<()>;
+    fn read(&self, path: &str) -> Result<Vec<u8>>;
+    fn read_range(&self, path: &str, offset: u64, len: u64) -> Result<Vec<u8>>;
+    fn size(&self, path: &str) -> Result<u64>;
+    fn exists(&self, path: &str) -> bool;
+    fn list(&self, dir: &str) -> Vec<String>;
+    fn rename(&self, from: &str, to: &str) -> Result<()>;
+    fn delete(&self, path: &str) -> Result<()>;
+    /// Remove a directory tree (wrapper teardown; job cleanup).
+    fn delete_recursive(&self, prefix: &str) -> Result<u64>;
+
+    // --- cost plane (Sim mode) -------------------------------------------
+    /// Cost model for a job whose clients span `job_nodes` nodes.
+    fn model(&self, job_nodes: u32) -> FsModel;
+
+    /// Total bytes currently stored (logical).
+    fn used_bytes(&self) -> u64;
+
+    /// Number of metadata objects (files + dirs), for MDS-load assertions.
+    fn object_count(&self) -> u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model(amp: f64, local: f64) -> FsModel {
+        FsModel {
+            write_agg_bps: 1000.0,
+            read_agg_bps: 1000.0,
+            per_client_write_bps: 100.0,
+            per_client_read_bps: 100.0,
+            meta: MD1::new(1000.0),
+            write_amplification: amp,
+            local_read_frac: local,
+            capacity_bytes: 10_000.0,
+            contention_sat_clients: 16.0,
+            contention_alpha: 0.5,
+        }
+    }
+
+    #[test]
+    fn contention_kicks_in_past_saturation() {
+        let m = toy_model(1.0, 0.0);
+        assert_eq!(m.contention_factor(16), 1.0);
+        assert_eq!(m.contention_factor(8), 1.0);
+        // 2× oversubscribed: 1 + 0.5×1 = 1.5.
+        assert!((m.contention_factor(32) - 1.5).abs() < 1e-9);
+        assert!(m.contended_write_bps(32) < m.wave_write_bps(32));
+        // Infinite saturation (DAS) never degrades.
+        let mut das = toy_model(1.0, 0.9);
+        das.contention_sat_clients = f64::INFINITY;
+        assert_eq!(das.contention_factor(10_000), 1.0);
+    }
+
+    #[test]
+    fn wave_write_caps() {
+        let m = toy_model(1.0, 0.0);
+        // 4 clients × 100 < 1000 agg → client-bound.
+        assert_eq!(m.wave_write_bps(4), 400.0);
+        // 20 clients × 100 > 1000 agg → backend-bound.
+        assert_eq!(m.wave_write_bps(20), 1000.0);
+    }
+
+    #[test]
+    fn amplification_reduces_effective_write() {
+        let m = toy_model(3.0, 0.0);
+        assert!((m.wave_write_bps(20) - 1000.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn local_reads_bypass_backend() {
+        let remote = toy_model(1.0, 0.0);
+        let local = toy_model(1.0, 0.9);
+        // With 20 clients: remote-only capped at 1000; 90%-local blows past.
+        assert!(local.wave_read_bps(20) > remote.wave_read_bps(20));
+    }
+
+    #[test]
+    fn fits_accounts_amplification() {
+        let m = toy_model(3.0, 0.0);
+        assert!(m.fits(3000.0));
+        assert!(!m.fits(4000.0));
+    }
+}

@@ -1,0 +1,8 @@
+//! `hpcw` — the leader binary: CLI over the full stack.
+//! See `hpcw --help`-style usage in `hpcw::cli`.
+
+fn main() {
+    hpcw::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(hpcw::cli::run(argv));
+}

@@ -1,0 +1,72 @@
+//! MapReduce job counters (the Hadoop counter groups the JHS reports).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Thread-safe counter set, merged across task attempts.
+#[derive(Debug, Default)]
+pub struct Counters {
+    inner: Mutex<BTreeMap<&'static str, u64>>,
+}
+
+/// Canonical counter names (subset of Hadoop's).
+pub const MAP_INPUT_RECORDS: &str = "MAP_INPUT_RECORDS";
+pub const MAP_OUTPUT_RECORDS: &str = "MAP_OUTPUT_RECORDS";
+pub const MAP_OUTPUT_BYTES: &str = "MAP_OUTPUT_BYTES";
+pub const MAP_SPILLS: &str = "MAP_SPILLS";
+pub const SHUFFLE_BYTES: &str = "SHUFFLE_BYTES";
+pub const SHUFFLE_SEGMENTS: &str = "SHUFFLE_SEGMENTS";
+pub const REDUCE_INPUT_RECORDS: &str = "REDUCE_INPUT_RECORDS";
+pub const REDUCE_OUTPUT_RECORDS: &str = "REDUCE_OUTPUT_RECORDS";
+pub const REDUCE_OUTPUT_BYTES: &str = "REDUCE_OUTPUT_BYTES";
+pub const TASKS_LAUNCHED: &str = "TASKS_LAUNCHED";
+pub const TASKS_FAILED: &str = "TASKS_FAILED";
+pub const TASKS_SPECULATED: &str = "TASKS_SPECULATED";
+
+impl Counters {
+    pub fn new() -> Self {
+        Counters::default()
+    }
+
+    pub fn add(&self, name: &'static str, by: u64) {
+        *self.inner.lock().unwrap().entry(name).or_insert(0) += by;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Snapshot for the history report.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_get() {
+        let c = Counters::new();
+        c.add(MAP_INPUT_RECORDS, 10);
+        c.add(MAP_INPUT_RECORDS, 5);
+        assert_eq!(c.get(MAP_INPUT_RECORDS), 15);
+        assert_eq!(c.get("missing"), 0);
+    }
+
+    #[test]
+    fn snapshot_sorted_by_name() {
+        let c = Counters::new();
+        c.add(SHUFFLE_BYTES, 1);
+        c.add(MAP_SPILLS, 2);
+        let snap = c.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(snap[0].0 < snap[1].0);
+    }
+}

@@ -1,0 +1,695 @@
+//! The Real-mode MapReduce executor: actual bytes through the live YARN
+//! cluster built by the wrapper.
+//!
+//! Execution follows Hadoop 2.5's wave structure: the MR ApplicationMaster
+//! heartbeats the RM for map containers, runs the granted wave on the
+//! node's thread pool, commits sorted spill segments into the shuffle
+//! store, then repeats for reduces, which merge their segments and commit
+//! output files via the rename protocol (`_temporary/attempt` → `part-r`).
+//! Failed attempts (fault injection, panics) retry up to
+//! [`task::MAX_ATTEMPTS`]; a node failure mid-job invalidates its shuffle
+//! segments and re-runs exactly the affected maps.
+
+use crate::error::{Error, Result};
+use crate::lustre::Dfs;
+use crate::mapreduce::counters::{self, Counters};
+use crate::mapreduce::shuffle::{merge_segments, Segment, ShuffleStore};
+use crate::mapreduce::split::{plan_splits, read_records, row_range_splits, InputFormat, InputSplit};
+use crate::mapreduce::task::{TaskId, MAX_ATTEMPTS};
+use crate::mapreduce::{JobSpec, OutputFormat};
+use crate::util::ids::AppId;
+use crate::util::pool::Pool;
+use crate::util::time::Micros;
+use crate::wrapper::DynamicCluster;
+use crate::yarn::container::{Container, ContainerKind, ContainerRequest, Resource};
+use crate::yarn::jobhistory::AppReport;
+use crate::yarn::rm::AppState;
+use std::sync::Arc;
+
+/// Result of a completed job.
+#[derive(Debug)]
+pub struct MrOutcome {
+    pub app: AppId,
+    pub maps: u32,
+    pub reduces: u32,
+    pub counters: Arc<Counters>,
+    pub output_files: Vec<String>,
+    pub wall: std::time::Duration,
+}
+
+/// The Real-mode engine. Holds the live cluster and the worker pool.
+pub struct MrEngine<'a> {
+    pub cluster: &'a mut DynamicCluster,
+    pub dfs: Arc<dyn Dfs>,
+    pub pool: &'a Pool,
+    pub map_memory_mb: u64,
+    pub reduce_memory_mb: u64,
+}
+
+impl<'a> MrEngine<'a> {
+    pub fn new(
+        cluster: &'a mut DynamicCluster,
+        dfs: Arc<dyn Dfs>,
+        pool: &'a Pool,
+        map_memory_mb: u64,
+        reduce_memory_mb: u64,
+    ) -> Self {
+        MrEngine {
+            cluster,
+            dfs,
+            pool,
+            map_memory_mb,
+            reduce_memory_mb,
+        }
+    }
+
+    /// Run a job to completion. `now` is the logical submission time used
+    /// for YARN bookkeeping; wall time is measured for the outcome.
+    pub fn run(&mut self, spec: Arc<JobSpec>, user: &str, now: Micros) -> Result<MrOutcome> {
+        let t0 = std::time::Instant::now();
+        if self.dfs.exists(&spec.output_dir) {
+            return Err(Error::MapReduce(format!(
+                "output dir '{}' already exists",
+                spec.output_dir
+            )));
+        }
+        let splits: Vec<InputSplit> = match spec.input_format {
+            InputFormat::RowRange => {
+                let (rows, maps) = spec.synthetic_rows.ok_or_else(|| {
+                    Error::MapReduce("RowRange job without synthetic_rows".into())
+                })?;
+                row_range_splits(rows, maps)
+            }
+            fmt => plan_splits(&*self.dfs, &spec.input_dir, fmt, spec.split_bytes)?,
+        };
+        let n_maps = splits.len() as u32;
+        let n_reduces = spec.n_reduces; // 0 = map-only job (Teragen)
+
+        // Output scaffolding.
+        self.dfs.mkdirs(&spec.output_dir)?;
+        let tmp_root = format!("{}/_temporary", spec.output_dir);
+        self.dfs.mkdirs(&tmp_root)?;
+
+        let handle = self.cluster.rm.submit_app(&spec.name, user, now)?;
+        let counters = Arc::new(Counters::new());
+        let shuffle = Arc::new(ShuffleStore::new());
+
+        let map_only = spec.n_reduces == 0;
+        let map_result = self.run_maps(&spec, &handle.app, &splits, &shuffle, &counters, now);
+        if let Err(e) = map_result {
+            self.fail_app(&spec, handle.app, user, &counters, now)?;
+            return Err(e);
+        }
+
+        if !map_only {
+            shuffle.verify_complete(n_maps, n_reduces)?;
+            let reduce_result = self.run_reduces(
+                &spec, &handle.app, n_maps, n_reduces, &shuffle, &counters, &tmp_root, now,
+            );
+            if let Err(e) = reduce_result {
+                self.fail_app(&spec, handle.app, user, &counters, now)?;
+                return Err(e);
+            }
+        }
+
+        // Commit: _SUCCESS marker, drop _temporary.
+        self.dfs.delete_recursive(&tmp_root)?;
+        self.dfs.create(&format!("{}/_SUCCESS", spec.output_dir), b"")?;
+
+        self.cluster
+            .rm
+            .finish_app(handle.app, AppState::Finished, now)?;
+        self.cluster.jhs.record(
+            AppReport {
+                app: handle.app,
+                name: spec.name.clone(),
+                user: user.to_string(),
+                state: AppState::Finished,
+                submitted_at: now,
+                finished_at: now + Micros::from_secs_f64(t0.elapsed().as_secs_f64()),
+                counters: counters.snapshot(),
+            },
+            &*self.dfs,
+        )?;
+
+        let output_files = self
+            .dfs
+            .list(&spec.output_dir)
+            .into_iter()
+            .filter(|p| p.contains("/part-"))
+            .collect();
+        Ok(MrOutcome {
+            app: handle.app,
+            maps: n_maps,
+            reduces: n_reduces,
+            counters,
+            output_files,
+            wall: t0.elapsed(),
+        })
+    }
+
+    fn fail_app(
+        &mut self,
+        spec: &JobSpec,
+        app: AppId,
+        user: &str,
+        counters: &Arc<Counters>,
+        now: Micros,
+    ) -> Result<()> {
+        self.cluster.rm.finish_app(app, AppState::Failed, now)?;
+        self.cluster.jhs.record(
+            AppReport {
+                app,
+                name: spec.name.clone(),
+                user: user.to_string(),
+                state: AppState::Failed,
+                submitted_at: now,
+                finished_at: now,
+                counters: counters.snapshot(),
+            },
+            &*self.dfs,
+        )?;
+        Ok(())
+    }
+
+    /// Grant a wave of containers for `want` tasks of `mem_mb`.
+    fn grant_wave(
+        &mut self,
+        app: &AppId,
+        want: u32,
+        mem_mb: u64,
+        kind: ContainerKind,
+        now: Micros,
+    ) -> Result<Vec<Container>> {
+        let got = self.cluster.rm.allocate(
+            *app,
+            ContainerRequest {
+                resource: Resource::new(mem_mb, 1),
+                count: want,
+            },
+            kind,
+            now,
+        )?;
+        if got.is_empty() {
+            return Err(Error::MapReduce(
+                "RM granted zero containers — cluster too small for one task".into(),
+            ));
+        }
+        for c in &got {
+            if let Some(nm) = self.cluster.nms.get_mut(&c.node) {
+                nm.launch(c.id)?;
+            }
+        }
+        Ok(got)
+    }
+
+    fn finish_wave(&mut self, app: &AppId, wave: &[(Container, bool)]) -> Result<()> {
+        for (c, ok) in wave {
+            if let Some(nm) = self.cluster.nms.get_mut(&c.node) {
+                nm.complete(c.id, *ok)?;
+            }
+            self.cluster.rm.release(*app, c.id)?;
+        }
+        Ok(())
+    }
+
+    fn run_maps(
+        &mut self,
+        spec: &Arc<JobSpec>,
+        app: &AppId,
+        splits: &[InputSplit],
+        shuffle: &Arc<ShuffleStore>,
+        counters: &Arc<Counters>,
+        now: Micros,
+    ) -> Result<()> {
+        // (task index, attempt) work queue.
+        let mut todo: Vec<(u32, u32)> = (0..splits.len() as u32).map(|i| (i, 0)).collect();
+        while !todo.is_empty() {
+            let wave_n = todo.len() as u32;
+            let granted = self.grant_wave(app, wave_n, self.map_memory_mb, ContainerKind::Map, now)?;
+            let batch: Vec<((u32, u32), Container)> =
+                todo.drain(..granted.len().min(todo.len())).zip(granted).collect();
+
+            let results = self.pool.try_map(
+                batch
+                    .iter()
+                    .map(|((idx, attempt), c)| {
+                        (
+                            *idx,
+                            *attempt,
+                            c.node,
+                            splits[*idx as usize].clone(),
+                            Arc::clone(spec),
+                            Arc::clone(shuffle),
+                            Arc::clone(counters),
+                            Arc::clone(&self.dfs),
+                        )
+                    })
+                    .collect(),
+                run_map_task,
+            );
+
+            let mut wave_done = Vec::new();
+            for (((idx, attempt), container), result) in batch.into_iter().zip(results) {
+                let ok = matches!(result, Some(Ok(())));
+                wave_done.push((container, ok));
+                if !ok {
+                    counters.add(counters::TASKS_FAILED, 1);
+                    let next = attempt + 1;
+                    if next >= MAX_ATTEMPTS {
+                        self.finish_wave(app, &wave_done)?;
+                        return Err(Error::MapReduce(format!(
+                            "map {idx} failed {MAX_ATTEMPTS} attempts"
+                        )));
+                    }
+                    todo.push((idx, next));
+                }
+            }
+            self.finish_wave(app, &wave_done)?;
+        }
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_reduces(
+        &mut self,
+        spec: &Arc<JobSpec>,
+        app: &AppId,
+        n_maps: u32,
+        n_reduces: u32,
+        shuffle: &Arc<ShuffleStore>,
+        counters: &Arc<Counters>,
+        tmp_root: &str,
+        now: Micros,
+    ) -> Result<()> {
+        let mut todo: Vec<(u32, u32)> = (0..n_reduces).map(|r| (r, 0)).collect();
+        while !todo.is_empty() {
+            let wave_n = todo.len() as u32;
+            let granted =
+                self.grant_wave(app, wave_n, self.reduce_memory_mb, ContainerKind::Reduce, now)?;
+            let batch: Vec<((u32, u32), Container)> =
+                todo.drain(..granted.len().min(todo.len())).zip(granted).collect();
+
+            let results = self.pool.try_map(
+                batch
+                    .iter()
+                    .map(|((r, attempt), _)| {
+                        (
+                            *r,
+                            *attempt,
+                            n_maps,
+                            Arc::clone(spec),
+                            Arc::clone(shuffle),
+                            Arc::clone(counters),
+                            Arc::clone(&self.dfs),
+                            tmp_root.to_string(),
+                        )
+                    })
+                    .collect(),
+                run_reduce_task,
+            );
+
+            let mut wave_done = Vec::new();
+            for (((r, attempt), container), result) in batch.into_iter().zip(results) {
+                let ok = matches!(result, Some(Ok(())));
+                wave_done.push((container, ok));
+                if !ok {
+                    counters.add(counters::TASKS_FAILED, 1);
+                    let next = attempt + 1;
+                    if next >= MAX_ATTEMPTS {
+                        self.finish_wave(app, &wave_done)?;
+                        return Err(Error::MapReduce(format!(
+                            "reduce {r} failed {MAX_ATTEMPTS} attempts"
+                        )));
+                    }
+                    todo.push((r, next));
+                }
+            }
+            self.finish_wave(app, &wave_done)?;
+        }
+        Ok(())
+    }
+}
+
+type MapTaskArgs = (
+    u32,
+    u32,
+    crate::cluster::NodeId,
+    InputSplit,
+    Arc<JobSpec>,
+    Arc<ShuffleStore>,
+    Arc<Counters>,
+    Arc<dyn Dfs>,
+);
+
+/// One map task attempt (runs on a pool worker).
+fn run_map_task(args: MapTaskArgs) -> Result<()> {
+    let (idx, attempt, node, split, spec, shuffle, counters, dfs) = args;
+    counters.add(counters::TASKS_LAUNCHED, 1);
+    if spec.failures.should_fail(TaskId::map(idx), attempt) {
+        return Err(Error::MapReduce(format!(
+            "injected failure: map {idx} attempt {attempt}"
+        )));
+    }
+
+    let map_only = spec.n_reduces == 0;
+    let n_buckets = spec.n_reduces.max(1);
+    let block_path = spec.block_processor.is_some() && !map_only;
+    let mut buckets: Vec<Vec<(Vec<u8>, Vec<u8>)>> = vec![Vec::new(); n_buckets as usize];
+    let mut in_records = 0u64;
+    {
+        let mapper = &spec.mapper;
+        let partitioner = &spec.partitioner;
+        let mut emit = |k: Vec<u8>, v: Vec<u8>| {
+            let p = if map_only || block_path {
+                0
+            } else {
+                partitioner.partition(&k, n_buckets).min(n_buckets - 1)
+            };
+            counters.add(counters::MAP_OUTPUT_BYTES, (k.len() + v.len()) as u64);
+            counters.add(counters::MAP_OUTPUT_RECORDS, 1);
+            buckets[p as usize].push((k, v));
+        };
+        match spec.input_format {
+            InputFormat::RowRange => {
+                for row in split.offset..split.offset + split.len {
+                    mapper.map(&row.to_be_bytes(), &[], &mut emit);
+                    in_records += 1;
+                }
+            }
+            fmt => {
+                in_records += read_records(&*dfs, &split, fmt, &mut |k, v| {
+                    mapper.map(k, v, &mut emit)
+                })?;
+            }
+        }
+    }
+    counters.add(counters::MAP_INPUT_RECORDS, in_records);
+
+    if map_only {
+        // Map-only jobs (Teragen) write their emissions straight to the
+        // output directory in emission order via the commit protocol.
+        let pairs = buckets.into_iter().next().unwrap();
+        let mut out = Vec::new();
+        for (k, v) in &pairs {
+            match spec.output_format {
+                OutputFormat::TeraRecords => {
+                    out.extend_from_slice(k);
+                    out.extend_from_slice(v);
+                }
+                OutputFormat::TextKv => {
+                    out.extend_from_slice(k);
+                    out.push(b'\t');
+                    out.extend_from_slice(v);
+                    out.push(b'\n');
+                }
+                OutputFormat::TextValue => {
+                    out.extend_from_slice(v);
+                    out.push(b'\n');
+                }
+            }
+        }
+        let attempt_dir = format!("{}/_temporary/attempt_m_{idx:05}_{attempt}", spec.output_dir);
+        dfs.mkdirs(&attempt_dir)?;
+        let attempt_file = format!("{attempt_dir}/part-m-{idx:05}");
+        dfs.create(&attempt_file, &out)?;
+        dfs.rename(
+            &attempt_file,
+            &format!("{}/part-m-{idx:05}", spec.output_dir),
+        )?;
+        return Ok(());
+    }
+
+    // Map-side sort + spill (one segment per partition).
+    for (p, mut pairs) in buckets.into_iter().enumerate() {
+        pairs.sort_by(|a, b| a.0.cmp(&b.0));
+        shuffle.put(Segment {
+            map: idx,
+            partition: p as u32,
+            node,
+            pairs,
+        });
+        counters.add(counters::MAP_SPILLS, 1);
+        counters.add(counters::SHUFFLE_SEGMENTS, 1);
+    }
+    Ok(())
+}
+
+type ReduceTaskArgs = (
+    u32,
+    u32,
+    u32,
+    Arc<JobSpec>,
+    Arc<ShuffleStore>,
+    Arc<Counters>,
+    Arc<dyn Dfs>,
+    String,
+);
+
+/// One reduce task attempt.
+fn run_reduce_task(args: ReduceTaskArgs) -> Result<()> {
+    let (r, attempt, n_maps, spec, shuffle, counters, dfs, tmp_root) = args;
+    counters.add(counters::TASKS_LAUNCHED, 1);
+    if spec.failures.should_fail(TaskId::reduce(r), attempt) {
+        return Err(Error::MapReduce(format!(
+            "injected failure: reduce {r} attempt {attempt}"
+        )));
+    }
+
+    let segments = shuffle.fetch_partition(r, n_maps)?;
+    counters.add(
+        counters::SHUFFLE_BYTES,
+        segments.iter().map(Segment::bytes).sum::<u64>(),
+    );
+    let merged = merge_segments(segments);
+    counters.add(counters::REDUCE_INPUT_RECORDS, merged.len() as u64);
+
+    // Group by key, reduce, serialize.
+    let mut out = Vec::new();
+    let mut out_records = 0u64;
+    {
+        let mut emit = |k: Vec<u8>, v: Vec<u8>| {
+            out_records += 1;
+            match spec.output_format {
+                OutputFormat::TeraRecords => {
+                    out.extend_from_slice(&k);
+                    out.extend_from_slice(&v);
+                }
+                OutputFormat::TextKv => {
+                    out.extend_from_slice(&k);
+                    out.push(b'\t');
+                    out.extend_from_slice(&v);
+                    out.push(b'\n');
+                }
+                OutputFormat::TextValue => {
+                    out.extend_from_slice(&v);
+                    out.push(b'\n');
+                }
+            }
+        };
+        let mut i = 0usize;
+        while i < merged.len() {
+            let mut j = i + 1;
+            while j < merged.len() && merged[j].0 == merged[i].0 {
+                j += 1;
+            }
+            let key = merged[i].0.clone();
+            let mut values = merged[i..j].iter().map(|(_, v)| v.as_slice());
+            spec.reducer.reduce(&key, &mut values, &mut emit);
+            i = j;
+        }
+    }
+    counters.add(counters::REDUCE_OUTPUT_RECORDS, out_records);
+    counters.add(counters::REDUCE_OUTPUT_BYTES, out.len() as u64);
+
+    // Commit protocol: write the attempt file, then rename into place.
+    let attempt_dir = format!("{tmp_root}/attempt_r_{r:05}_{attempt}");
+    dfs.mkdirs(&attempt_dir)?;
+    let attempt_file = format!("{attempt_dir}/part-r-{r:05}");
+    dfs.create(&attempt_file, &out)?;
+    let final_file = format!("{}/part-r-{r:05}", spec.output_dir);
+    dfs.rename(&attempt_file, &final_file)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeId;
+    use crate::config::StackConfig;
+    use crate::lustre::LustreFs;
+    use crate::mapreduce::{FailurePlan, HashPartitioner, Mapper, Reducer};
+    use crate::mapreduce::task::TaskId;
+    use crate::metrics::Metrics;
+    use crate::util::ids::IdGen;
+
+    struct WordSplit;
+    impl Mapper for WordSplit {
+        fn map(&self, _k: &[u8], v: &[u8], emit: &mut dyn FnMut(Vec<u8>, Vec<u8>)) {
+            for w in v.split(|&b| b == b' ').filter(|w| !w.is_empty()) {
+                emit(w.to_vec(), b"1".to_vec());
+            }
+        }
+    }
+
+    struct CountReducer;
+    impl Reducer for CountReducer {
+        fn reduce(
+            &self,
+            key: &[u8],
+            values: &mut dyn Iterator<Item = &[u8]>,
+            emit: &mut dyn FnMut(Vec<u8>, Vec<u8>),
+        ) {
+            let n = values.count();
+            emit(key.to_vec(), n.to_string().into_bytes());
+        }
+    }
+
+    fn stack() -> (StackConfig, Arc<LustreFs>, DynamicCluster, Pool) {
+        let cfg = StackConfig::tiny();
+        let fs = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
+        let nodes: Vec<NodeId> = (0..6).map(NodeId).collect();
+        let dc = DynamicCluster::build(
+            &cfg,
+            &nodes,
+            &*fs,
+            Arc::new(IdGen::default()),
+            Arc::new(Metrics::new()),
+            "mr-test",
+            Micros::ZERO,
+        )
+        .unwrap();
+        (cfg, fs, dc, Pool::new(4))
+    }
+
+    fn wordcount_spec(input: &str, output: &str) -> JobSpec {
+        let mut spec = JobSpec::identity("wordcount", input, output, 3);
+        spec.input_format = InputFormat::Lines;
+        spec.output_format = OutputFormat::TextKv;
+        spec.split_bytes = 32;
+        spec.mapper = Arc::new(WordSplit);
+        spec.reducer = Arc::new(CountReducer);
+        spec.partitioner = Arc::new(HashPartitioner);
+        spec
+    }
+
+    #[test]
+    fn wordcount_end_to_end() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/wc-in").unwrap();
+        fs.create(
+            "/lustre/scratch/wc-in/f1",
+            b"the quick brown fox\nthe lazy dog\nthe end",
+        )
+        .unwrap();
+        let spec = Arc::new(wordcount_spec("/lustre/scratch/wc-in", "/lustre/scratch/wc-out"));
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        );
+        let outcome = engine.run(Arc::clone(&spec), "alice", Micros::ZERO).unwrap();
+        assert!(outcome.maps >= 2, "small splits → multiple maps");
+        assert_eq!(outcome.reduces, 3);
+
+        // Collect all output lines and check counts.
+        let mut text = String::new();
+        for f in &outcome.output_files {
+            text.push_str(&String::from_utf8(fs.read(f).unwrap()).unwrap());
+        }
+        let mut the_count = None;
+        for line in text.lines() {
+            let (w, n) = line.split_once('\t').unwrap();
+            if w == "the" {
+                the_count = Some(n.to_string());
+            }
+        }
+        assert_eq!(the_count.as_deref(), Some("3"));
+        assert!(fs.exists("/lustre/scratch/wc-out/_SUCCESS"));
+        assert!(!fs.exists("/lustre/scratch/wc-out/_temporary"));
+        // History recorded.
+        assert_eq!(dc.jhs.count(), 1);
+        dc.rm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn existing_output_dir_rejected() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/exists").unwrap();
+        fs.mkdirs("/lustre/scratch/in2").unwrap();
+        fs.create("/lustre/scratch/in2/f", b"x").unwrap();
+        let spec = Arc::new(wordcount_spec("/lustre/scratch/in2", "/lustre/scratch/exists"));
+        let mut engine = MrEngine::new(&mut dc, fs, &pool, cfg.yarn.map_memory_mb, cfg.yarn.reduce_memory_mb);
+        assert!(engine.run(spec, "u", Micros::ZERO).is_err());
+    }
+
+    #[test]
+    fn injected_map_failure_retries_and_succeeds() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/in3").unwrap();
+        fs.create("/lustre/scratch/in3/f", b"a b c d e f").unwrap();
+        let mut spec = wordcount_spec("/lustre/scratch/in3", "/lustre/scratch/out3");
+        spec.split_bytes = 1024;
+        spec.failures = FailurePlan::none().fail_attempt(TaskId::map(0), 0);
+        let spec = Arc::new(spec);
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        );
+        let outcome = engine.run(spec, "u", Micros::ZERO).unwrap();
+        assert_eq!(outcome.counters.get(counters::TASKS_FAILED), 1);
+        assert!(fs.exists("/lustre/scratch/out3/_SUCCESS"));
+        dc.rm.check_invariants().unwrap();
+        // NM logs include the failed container's log.
+        let pool_panics = pool.panic_count();
+        assert_eq!(pool_panics, 0, "failures are Results, not panics");
+    }
+
+    #[test]
+    fn repeated_failures_fail_the_job() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/in4").unwrap();
+        fs.create("/lustre/scratch/in4/f", b"words here").unwrap();
+        let mut spec = wordcount_spec("/lustre/scratch/in4", "/lustre/scratch/out4");
+        spec.split_bytes = 1024;
+        let mut failures = FailurePlan::none();
+        for a in 0..MAX_ATTEMPTS {
+            failures = failures.fail_attempt(TaskId::map(0), a);
+        }
+        spec.failures = failures;
+        let spec = Arc::new(spec);
+        let mut engine = MrEngine::new(&mut dc, fs, &pool, cfg.yarn.map_memory_mb, cfg.yarn.reduce_memory_mb);
+        let err = engine.run(spec, "u", Micros::ZERO).unwrap_err();
+        assert!(err.to_string().contains("failed 4 attempts"), "{err}");
+        // App recorded as failed; resources all released.
+        dc.rm.check_invariants().unwrap();
+        let (_, used) = dc.rm.cluster_resources();
+        assert_eq!(used.mem_mb, 0);
+    }
+
+    #[test]
+    fn reduce_failure_retries() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/in5").unwrap();
+        fs.create("/lustre/scratch/in5/f", b"k1 k2 k1").unwrap();
+        let mut spec = wordcount_spec("/lustre/scratch/in5", "/lustre/scratch/out5");
+        spec.split_bytes = 1024;
+        spec.failures = FailurePlan::none().fail_attempt(TaskId::reduce(1), 0);
+        let spec = Arc::new(spec);
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        );
+        let outcome = engine.run(spec, "u", Micros::ZERO).unwrap();
+        assert_eq!(outcome.counters.get(counters::TASKS_FAILED), 1);
+        assert!(fs.exists("/lustre/scratch/out5/_SUCCESS"));
+    }
+}

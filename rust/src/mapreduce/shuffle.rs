@@ -1,0 +1,228 @@
+//! The shuffle store: map-output segments keyed by `(map, partition)`.
+//!
+//! Stands in for the NM-local spill directories + the HTTP shuffle
+//! handlers. Segments record the node that produced them so a node failure
+//! invalidates exactly the segments Hadoop would lose (map re-execution),
+//! and the exactly-once delivery invariant can be property-tested.
+
+use crate::cluster::NodeId;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// One spilled map-output segment (already sorted by key).
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub map: u32,
+    pub partition: u32,
+    pub node: NodeId,
+    /// Sorted (key, value) pairs.
+    pub pairs: Vec<(Vec<u8>, Vec<u8>)>,
+}
+
+impl Segment {
+    pub fn bytes(&self) -> u64 {
+        self.pairs
+            .iter()
+            .map(|(k, v)| (k.len() + v.len()) as u64)
+            .sum()
+    }
+}
+
+/// Thread-safe shuffle store for one job.
+#[derive(Debug, Default)]
+pub struct ShuffleStore {
+    inner: Mutex<BTreeMap<(u32, u32), Segment>>,
+}
+
+impl ShuffleStore {
+    pub fn new() -> Self {
+        ShuffleStore::default()
+    }
+
+    /// Commit a map attempt's segment. Re-commits (speculative duplicate or
+    /// re-run after failure) replace the previous segment — Hadoop's
+    /// commit-wins-once semantics.
+    pub fn put(&self, seg: Segment) {
+        debug_assert!(
+            seg.pairs.windows(2).all(|w| w[0].0 <= w[1].0),
+            "segment must be sorted"
+        );
+        let mut g = self.inner.lock().unwrap();
+        g.insert((seg.map, seg.partition), seg);
+    }
+
+    /// Fetch all segments for one reduce partition, map order.
+    pub fn fetch_partition(&self, partition: u32, n_maps: u32) -> Result<Vec<Segment>> {
+        let g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for m in 0..n_maps {
+            match g.get(&(m, partition)) {
+                Some(s) => out.push(s.clone()),
+                None => {
+                    return Err(Error::MapReduce(format!(
+                        "shuffle: missing segment map={m} partition={partition}"
+                    )))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Drop every segment produced on a failed node; returns the map ids
+    /// whose output was lost (they must re-run).
+    pub fn invalidate_node(&self, node: NodeId) -> Vec<u32> {
+        let mut g = self.inner.lock().unwrap();
+        let lost: Vec<(u32, u32)> = g
+            .iter()
+            .filter(|(_, s)| s.node == node)
+            .map(|(&k, _)| k)
+            .collect();
+        let mut maps: Vec<u32> = lost.iter().map(|&(m, _)| m).collect();
+        for k in lost {
+            g.remove(&k);
+        }
+        maps.sort_unstable();
+        maps.dedup();
+        maps
+    }
+
+    /// Total bytes held.
+    pub fn total_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().values().map(Segment::bytes).sum()
+    }
+
+    pub fn segment_count(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// Exactly-once check: every (map, partition) cell present exactly once
+    /// for the full matrix.
+    pub fn verify_complete(&self, n_maps: u32, n_partitions: u32) -> Result<()> {
+        let g = self.inner.lock().unwrap();
+        if g.len() != (n_maps as usize) * (n_partitions as usize) {
+            return Err(Error::MapReduce(format!(
+                "shuffle matrix {}×{} has {} cells",
+                n_maps,
+                n_partitions,
+                g.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// K-way merge of sorted segments into one sorted stream of pairs.
+/// Stable across segments in map order (Hadoop merge semantics).
+pub fn merge_segments(segments: Vec<Segment>) -> Vec<(Vec<u8>, Vec<u8>)> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    let total: usize = segments.iter().map(|s| s.pairs.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    // Heap of (key, segment_idx, pair_idx); Reverse for min-heap. The
+    // segment index participates in ordering → stability.
+    let mut heap: BinaryHeap<Reverse<(Vec<u8>, usize, usize)>> = BinaryHeap::new();
+    for (si, s) in segments.iter().enumerate() {
+        if !s.pairs.is_empty() {
+            heap.push(Reverse((s.pairs[0].0.clone(), si, 0)));
+        }
+    }
+    while let Some(Reverse((_, si, pi))) = heap.pop() {
+        let (k, v) = &segments[si].pairs[pi];
+        out.push((k.clone(), v.clone()));
+        let next = pi + 1;
+        if next < segments[si].pairs.len() {
+            heap.push(Reverse((segments[si].pairs[next].0.clone(), si, next)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::props;
+
+    fn seg(map: u32, part: u32, keys: &[u8]) -> Segment {
+        Segment {
+            map,
+            partition: part,
+            node: NodeId(map),
+            pairs: keys.iter().map(|&k| (vec![k], vec![k, k])).collect(),
+        }
+    }
+
+    #[test]
+    fn put_fetch_round_trip() {
+        let st = ShuffleStore::new();
+        st.put(seg(0, 0, &[1, 3]));
+        st.put(seg(1, 0, &[2]));
+        let got = st.fetch_partition(0, 2).unwrap();
+        assert_eq!(got.len(), 2);
+        assert!(st.fetch_partition(1, 2).is_err(), "missing partition 1");
+    }
+
+    #[test]
+    fn recommit_replaces() {
+        let st = ShuffleStore::new();
+        st.put(seg(0, 0, &[1]));
+        st.put(seg(0, 0, &[9])); // speculative duplicate wins once
+        let got = st.fetch_partition(0, 1).unwrap();
+        assert_eq!(got[0].pairs[0].0, vec![9]);
+        assert_eq!(st.segment_count(), 1);
+    }
+
+    #[test]
+    fn node_invalidation_names_lost_maps() {
+        let st = ShuffleStore::new();
+        st.put(seg(0, 0, &[1]));
+        st.put(seg(0, 1, &[1]));
+        st.put(seg(1, 0, &[2]));
+        let lost = st.invalidate_node(NodeId(0));
+        assert_eq!(lost, vec![0]);
+        assert_eq!(st.segment_count(), 1);
+        assert!(st.verify_complete(2, 2).is_err());
+    }
+
+    #[test]
+    fn merge_is_sorted_and_complete() {
+        let a = seg(0, 0, &[1, 4, 7]);
+        let b = seg(1, 0, &[2, 4, 9]);
+        let merged = merge_segments(vec![a, b]);
+        let keys: Vec<u8> = merged.iter().map(|(k, _)| k[0]).collect();
+        assert_eq!(keys, vec![1, 2, 4, 4, 7, 9]);
+    }
+
+    #[test]
+    fn merge_stable_on_equal_keys() {
+        // Equal keys come out in segment (map) order.
+        let mut a = seg(0, 0, &[5]);
+        a.pairs[0].1 = b"from-map0".to_vec();
+        let mut b = seg(1, 0, &[5]);
+        b.pairs[0].1 = b"from-map1".to_vec();
+        let merged = merge_segments(vec![a, b]);
+        assert_eq!(merged[0].1, b"from-map0".to_vec());
+        assert_eq!(merged[1].1, b"from-map1".to_vec());
+    }
+
+    #[test]
+    fn merge_property_equals_flat_sort() {
+        props(30, |g| {
+            let n_segs = g.usize(1..6);
+            let mut segs = Vec::new();
+            let mut flat = Vec::new();
+            for m in 0..n_segs {
+                let mut keys: Vec<u8> =
+                    (0..g.usize(0..20)).map(|_| g.u32(0..50) as u8).collect();
+                keys.sort_unstable();
+                flat.extend(keys.iter().copied());
+                segs.push(seg(m as u32, 0, &keys));
+            }
+            flat.sort_unstable();
+            let merged = merge_segments(segs);
+            let keys: Vec<u8> = merged.iter().map(|(k, _)| k[0]).collect();
+            assert_eq!(keys, flat);
+        });
+    }
+}

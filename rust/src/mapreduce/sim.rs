@@ -1,0 +1,364 @@
+//! The Sim-mode MapReduce cost model: the same phase structure as
+//! [`super::real`], with the data plane replaced by the calibrated models
+//! (`FsModel` for storage, `Interconnect` for the shuffle fabric,
+//! `CalibrationConfig` for per-task software costs).
+//!
+//! This is what regenerates Fig 4 (Teragen) and Fig 5 (Terasort) at the
+//! paper's 1 TB / 2,048-core scale. Every rate used here is either taken
+//! from the hardware table (§VI) or carries a provenance note in
+//! [`crate::config::calibration`].
+
+use crate::cluster::interconnect::Transport;
+use crate::config::StackConfig;
+use crate::lustre::FsModel;
+
+/// Workload description for one simulated MR job.
+#[derive(Debug, Clone)]
+pub struct MrWorkload {
+    /// Nodes in the LSF allocation (the first two run RM/JHS, per §V).
+    pub alloc_nodes: u32,
+    /// Bytes read by the map phase from the Dfs (0 for Teragen).
+    pub input_bytes: f64,
+    /// Bytes crossing the shuffle (0 for map-only jobs).
+    pub shuffle_bytes: f64,
+    /// Bytes written to the Dfs by the final phase.
+    pub output_bytes: f64,
+    pub n_maps: u32,
+    pub n_reduces: u32,
+    /// Shuffle transport (ABL-RPC swaps this).
+    pub transport: Transport,
+    /// Per-record map compute cost multiplier (1.0 = Terasort's identity
+    /// map; frameworks with heavier mappers raise it).
+    pub map_cost_factor: f64,
+}
+
+impl MrWorkload {
+    /// The paper's standard shape: mappers/reducers proportional to cores.
+    pub fn terasort_shape(cfg: &StackConfig, alloc_nodes: u32, bytes: f64) -> MrWorkload {
+        let slots = map_slots(cfg, alloc_nodes);
+        MrWorkload {
+            alloc_nodes,
+            input_bytes: bytes,
+            shuffle_bytes: bytes,
+            output_bytes: bytes,
+            n_maps: slots,
+            n_reduces: (slots / 2).max(1),
+            transport: Transport::HadoopRpc,
+            map_cost_factor: 1.0,
+        }
+    }
+
+    /// Teragen: map-only, mappers fill every slot (§VII: "the number of
+    /// mappers and reducers are proportional to the allocated cores").
+    pub fn teragen_shape(cfg: &StackConfig, alloc_nodes: u32, bytes: f64) -> MrWorkload {
+        let slots = map_slots(cfg, alloc_nodes);
+        MrWorkload {
+            alloc_nodes,
+            input_bytes: 0.0,
+            shuffle_bytes: 0.0,
+            output_bytes: bytes,
+            n_maps: slots,
+            n_reduces: 0,
+            transport: Transport::HadoopRpc,
+            map_cost_factor: 0.7, // row synthesis is cheaper than parse+sort
+        }
+    }
+}
+
+/// Concurrent map containers an allocation can host (slaves × per-node).
+pub fn map_slots(cfg: &StackConfig, alloc_nodes: u32) -> u32 {
+    let slaves = alloc_nodes.saturating_sub(2).max(1);
+    slaves * cfg.yarn.containers_per_node(cfg.yarn.map_memory_mb) as u32
+}
+
+/// Phase timing breakdown of one simulated job.
+#[derive(Debug, Clone)]
+pub struct MrSimReport {
+    pub map_s: f64,
+    pub shuffle_s: f64,
+    pub reduce_s: f64,
+    pub total_s: f64,
+    pub map_waves: u32,
+    pub reduce_waves: u32,
+    /// Which resource bound the longest phase: "map-io", "map-cpu",
+    /// "shuffle-net", "shuffle-disk", "reduce-io", "reduce-cpu".
+    pub bottleneck: &'static str,
+}
+
+/// Simulate one MR job against a storage model.
+pub fn simulate_mr(cfg: &StackConfig, fs: &FsModel, w: &MrWorkload) -> MrSimReport {
+    let cal = &cfg.calibration;
+    let cpu = cfg.cluster.cpu.speed_factor();
+    let slots = map_slots(cfg, w.alloc_nodes).max(1);
+    let slaves = w.alloc_nodes.saturating_sub(2).max(1);
+
+    let straggler_tax = if cfg.yarn.speculative_execution {
+        // Speculation re-runs the tail; residual tax is small.
+        1.0 + cal.straggler_frac * (cal.straggler_slowdown - 1.0)
+    } else {
+        // An unspeculated wave waits for its slowest member.
+        cal.straggler_slowdown
+            .min(1.0 + cal.straggler_frac * slots as f64 * (cal.straggler_slowdown - 1.0))
+    };
+
+    // ---------------- map phase ----------------
+    let n_maps = w.n_maps.max(1);
+    let map_waves = n_maps.div_ceil(slots);
+    let per_map_in = w.input_bytes / n_maps as f64;
+    let per_map_out = if w.n_reduces == 0 {
+        w.output_bytes / n_maps as f64
+    } else {
+        w.shuffle_bytes / n_maps as f64
+    };
+
+    let mut map_s = 0.0;
+    let mut map_bound = "map-cpu";
+    let mut remaining = n_maps;
+    while remaining > 0 {
+        let k = remaining.min(slots);
+        // Input: shared read through the Dfs (remote for Lustre).
+        let read_rate = fs.contended_read_bps(k).max(1.0);
+        let per_task_read = per_map_in
+            / (read_rate / k as f64)
+                .min(cal.hadoop_stream_read_mbps * 1e6)
+                .max(1.0);
+        // Compute: parse + partition + sort at the calibrated per-core rate.
+        let comp_rate = cal.map_compute_mbps_per_core * 1e6 * cpu / w.map_cost_factor;
+        let per_task_comp = per_map_in.max(per_map_out) / comp_rate;
+        // Output: map-only jobs write to the Dfs; shuffled jobs spill to DAS.
+        let per_task_write = if w.n_reduces == 0 {
+            let write_rate = fs.contended_write_bps(k).max(1.0);
+            per_map_out
+                / (write_rate / k as f64)
+                    .min(cal.hadoop_stream_write_mbps * 1e6)
+                    .max(1.0)
+        } else {
+            // Spill to node-local DAS shared by concurrent tasks on the node.
+            let tasks_per_node = (k as f64 / slaves as f64).max(1.0);
+            per_map_out * cal.spill_factor / (cfg.cluster.das_bw_mbps * 1e6 / tasks_per_node)
+        };
+        let io = per_task_read + per_task_write;
+        let task_s = io.max(per_task_comp) * straggler_tax;
+        if io > per_task_comp {
+            map_bound = "map-io";
+        }
+        map_s += cal.container_launch_s + cal.wave_latency_s + task_s;
+        remaining -= k;
+    }
+
+    // ---------------- shuffle ----------------
+    let (shuffle_s, shuffle_bound) = if w.shuffle_bytes > 0.0 && w.n_reduces > 0 {
+        let streams = (w.n_reduces as u64 * n_maps as u64).min(10_000) as f64;
+        let per_stream = match w.transport {
+            Transport::HadoopRpc => cal.hadoop_rpc_stream_mbps * 1e6,
+            Transport::Native => cal.native_stream_mbps * 1e6,
+        };
+        // Aggregate limits: per-stream software ceiling × concurrent
+        // fetchers (Hadoop runs ~5 fetchers per reduce), fabric bisection,
+        // and the DAS spindles serving the map-side segments.
+        let fetchers = (w.n_reduces as f64 * 5.0).min(streams);
+        let net = cfg.cluster.ib_gbps * 1e9 / 8.0 * slaves as f64 * 0.75;
+        let das = slaves as f64 * cfg.cluster.das_bw_mbps * 1e6;
+        let rate = (fetchers * per_stream).min(net).min(das).max(1.0);
+        let fetch_overhead =
+            cal.shuffle_fetch_overhead_s * (n_maps as f64) / (w.n_reduces as f64 * 5.0).max(1.0);
+        (
+            w.shuffle_bytes / rate + fetch_overhead,
+            if (fetchers * per_stream) < net.min(das) {
+                "shuffle-net"
+            } else {
+                "shuffle-disk"
+            },
+        )
+    } else {
+        (0.0, "map-cpu")
+    };
+
+    // ---------------- reduce phase ----------------
+    let mut reduce_s = 0.0;
+    let mut reduce_waves = 0;
+    let mut reduce_bound = "reduce-io";
+    if w.n_reduces > 0 {
+        let reduce_slots =
+            (slaves * cfg.yarn.containers_per_node(cfg.yarn.reduce_memory_mb) as u32).max(1);
+        let n_red = w.n_reduces;
+        reduce_waves = n_red.div_ceil(reduce_slots);
+        let per_red_out = w.output_bytes / n_red as f64;
+        let mut remaining = n_red;
+        while remaining > 0 {
+            let k = remaining.min(reduce_slots);
+            let write_rate = fs.contended_write_bps(k).max(1.0);
+            let per_task_write = per_red_out
+                / (write_rate / k as f64)
+                    .min(cal.hadoop_stream_write_mbps * 1e6)
+                    .max(1.0);
+            let comp_rate = cal.reduce_compute_mbps_per_core * 1e6 * cpu;
+            let per_task_comp = per_red_out / comp_rate;
+            let task_s = per_task_write.max(per_task_comp) * straggler_tax;
+            if per_task_comp > per_task_write {
+                reduce_bound = "reduce-cpu";
+            }
+            reduce_s += cal.container_launch_s + cal.wave_latency_s + task_s;
+            remaining -= k;
+        }
+    }
+
+    let total_s = map_s + shuffle_s + reduce_s;
+    let bottleneck = if map_s >= shuffle_s && map_s >= reduce_s {
+        map_bound
+    } else if shuffle_s >= reduce_s {
+        shuffle_bound
+    } else {
+        reduce_bound
+    };
+    MrSimReport {
+        map_s,
+        shuffle_s,
+        reduce_s,
+        total_s,
+        map_waves,
+        reduce_waves,
+        bottleneck,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+    use crate::lustre::{Dfs, HdfsLikeFs, LustreFs};
+
+    fn lustre_model(cfg: &StackConfig, nodes: u32) -> FsModel {
+        LustreFs::new(&cfg.lustre, &cfg.cluster).model(nodes)
+    }
+
+    const TB: f64 = 1e12;
+
+    #[test]
+    fn teragen_fig4_shape_optimum_near_1800_cores() {
+        let cfg = StackConfig::paper();
+        let mut rows = Vec::new();
+        for &nodes in &[8u32, 16, 32, 56, 88, 113, 120, 128] {
+            let w = MrWorkload::teragen_shape(&cfg, nodes, TB);
+            let fs = lustre_model(&cfg, nodes);
+            let r = simulate_mr(&cfg, &fs, &w);
+            rows.push((nodes * 16, r.total_s));
+        }
+        // Strictly improving up to the ~1,800-core row...
+        for win in rows.windows(2) {
+            if win[1].0 <= 1800 {
+                assert!(
+                    win[1].1 < win[0].1,
+                    "teragen should improve {} -> {} cores: {} vs {}",
+                    win[0].0,
+                    win[1].0,
+                    win[0].1,
+                    win[1].1
+                );
+            }
+        }
+        // ...and the optimum is near 1,800, not at the 2,048-core end.
+        let best = rows.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+        assert!(
+            (1500..2040).contains(&best.0),
+            "optimum at {} cores (rows: {rows:?})",
+            best.0
+        );
+        let last = rows.last().unwrap();
+        assert!(last.1 > best.1, "2,048 cores worse than the optimum");
+    }
+
+    #[test]
+    fn terasort_fig5_shape_diminishing_returns() {
+        let cfg = StackConfig::paper();
+        let mut rows = Vec::new();
+        for &nodes in &[8u32, 16, 32, 64, 128] {
+            let w = MrWorkload::terasort_shape(&cfg, nodes, TB);
+            let fs = lustre_model(&cfg, nodes);
+            let r = simulate_mr(&cfg, &fs, &w);
+            rows.push((nodes as f64 * 16.0, r.total_s));
+        }
+        // Monotone improvement with diminishing returns.
+        for w in rows.windows(2) {
+            assert!(w[1].1 < w[0].1, "terasort scales: {rows:?}");
+        }
+        let speedup_low = rows[0].1 / rows[1].1;
+        let speedup_high = rows[3].1 / rows[4].1;
+        assert!(
+            speedup_low > speedup_high,
+            "early doubling helps more than late: {speedup_low} vs {speedup_high}"
+        );
+        // "Reasonable scalability": sublinear in the slave count (6 slaves
+        // at 8 nodes vs 126 at 128 nodes = 21x more data-plane capacity,
+        // but less than 21x speedup). Per-core speedup can exceed 16x only
+        // because 2 of 8 nodes are daemon-taxed at the small end.
+        let overall = rows[0].1 / rows[4].1;
+        assert!(overall > 3.0 && overall < 21.0, "overall speedup {overall}");
+    }
+
+    #[test]
+    fn terasort_goes_io_bound_at_scale() {
+        let cfg = StackConfig::paper();
+        let w = MrWorkload::terasort_shape(&cfg, 128, TB);
+        let fs = lustre_model(&cfg, 128);
+        let r = simulate_mr(&cfg, &fs, &w);
+        assert!(
+            r.bottleneck.contains("io") || r.bottleneck.contains("disk"),
+            "paper SVII: I/O bottleneck at scale, got {}",
+            r.bottleneck
+        );
+    }
+
+    #[test]
+    fn hdfs_ablation_beats_lustre_on_io_but_cannot_hold_terabyte() {
+        let cfg = StackConfig::paper();
+        let hdfs = HdfsLikeFs::new(&cfg.cluster);
+        let w = MrWorkload::terasort_shape(&cfg, 64, TB);
+        let m = hdfs.model(64);
+        // Capacity: input+output x3 replication does NOT fit on 8 nodes
+        // (8 x 414 GB = 3.3 TB < 6 TB) - the paper's SIII objection.
+        assert!(!hdfs.model(8).fits(2.0 * TB));
+        assert!(m.fits(2.0 * TB));
+        // Performance on big allocations is comparable (Fadika et al. [11]):
+        // within ~2.5x either way.
+        let lustre = lustre_model(&cfg, 64);
+        let t_hdfs = simulate_mr(&cfg, &m, &w).total_s;
+        let t_lustre = simulate_mr(&cfg, &lustre, &w).total_s;
+        let ratio = t_hdfs / t_lustre;
+        assert!((0.4..2.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn native_transport_shrinks_shuffle() {
+        let cfg = StackConfig::paper();
+        let fs = lustre_model(&cfg, 64);
+        let mut w = MrWorkload::terasort_shape(&cfg, 64, TB);
+        // Lu et al.'s gap is per-stream: make the stream count the binding
+        // constraint (few reducers), as in their measurement setup.
+        w.n_reduces = 4;
+        let rpc = simulate_mr(&cfg, &fs, &w);
+        w.transport = Transport::Native;
+        let native = simulate_mr(&cfg, &fs, &w);
+        assert!(
+            native.shuffle_s < rpc.shuffle_s / 3.0,
+            "native {} vs rpc {}",
+            native.shuffle_s,
+            rpc.shuffle_s
+        );
+    }
+
+    #[test]
+    fn more_waves_cost_more_overhead() {
+        let cfg = StackConfig::paper();
+        let fs = lustre_model(&cfg, 16);
+        let slots = map_slots(&cfg, 16);
+        let mut w = MrWorkload::terasort_shape(&cfg, 16, 1e10);
+        w.n_maps = slots; // one wave
+        let one = simulate_mr(&cfg, &fs, &w);
+        w.n_maps = slots * 4; // four waves, same bytes
+        let four = simulate_mr(&cfg, &fs, &w);
+        assert_eq!(one.map_waves, 1);
+        assert_eq!(four.map_waves, 4);
+        assert!(four.map_s > one.map_s);
+    }
+}

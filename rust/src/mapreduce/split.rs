@@ -1,0 +1,272 @@
+//! Input splits and record formats.
+//!
+//! Three formats cover the stack:
+//! * [`InputFormat::TeraRecords`] — fixed 100-byte Terasort records
+//!   (10-byte key + 90-byte value), split on record boundaries;
+//! * [`InputFormat::Lines`] — newline-delimited text (key = byte offset,
+//!   value = line), splits aligned to line boundaries at read time;
+//! * [`InputFormat::RowRange`] — synthetic splits with no backing file:
+//!   Teragen's input ("generate rows [start, start+count)").
+
+use crate::error::{Error, Result};
+use crate::lustre::Dfs;
+use crate::terasort::format::RECORD_LEN;
+
+/// Record format of a job's input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputFormat {
+    TeraRecords,
+    Lines,
+    /// Synthetic: `InputSplit.offset` = first row id, `.len` = row count.
+    RowRange,
+}
+
+/// One input split, processed by one map task.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSplit {
+    /// Backing file ("" for RowRange).
+    pub path: String,
+    /// Byte offset (or first row id for RowRange).
+    pub offset: u64,
+    /// Byte length (or row count for RowRange).
+    pub len: u64,
+}
+
+/// Plan splits over all files under `input_dir`.
+///
+/// TeraRecords splits are record-aligned; Lines splits are byte ranges that
+/// the reader later aligns to line boundaries (Hadoop semantics: a split
+/// owns every line that *starts* inside it).
+pub fn plan_splits(
+    dfs: &dyn Dfs,
+    input_dir: &str,
+    format: InputFormat,
+    split_bytes: u64,
+) -> Result<Vec<InputSplit>> {
+    if format == InputFormat::RowRange {
+        return Err(Error::MapReduce(
+            "RowRange splits are synthesized by the job, not planned from files".into(),
+        ));
+    }
+    let split_bytes = split_bytes.max(1);
+    let mut out = Vec::new();
+    let mut files: Vec<String> = dfs
+        .list(input_dir)
+        .into_iter()
+        .filter(|p| !p.split('/').next_back().unwrap_or("").starts_with('_'))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err(Error::MapReduce(format!("no input files in {input_dir}")));
+    }
+    for f in files {
+        let size = dfs.size(&f)?;
+        if size == 0 {
+            continue;
+        }
+        let step = match format {
+            InputFormat::TeraRecords => {
+                if size % RECORD_LEN as u64 != 0 {
+                    return Err(Error::MapReduce(format!(
+                        "{f}: size {size} not a multiple of the {RECORD_LEN}-byte record"
+                    )));
+                }
+                // Round the split down to a whole number of records.
+                (split_bytes / RECORD_LEN as u64).max(1) * RECORD_LEN as u64
+            }
+            InputFormat::Lines => split_bytes,
+            InputFormat::RowRange => unreachable!(),
+        };
+        let mut off = 0;
+        while off < size {
+            let len = step.min(size - off);
+            out.push(InputSplit {
+                path: f.clone(),
+                offset: off,
+                len,
+            });
+            off += len;
+        }
+    }
+    Ok(out)
+}
+
+/// Synthesize RowRange splits for a generator job (Teragen).
+pub fn row_range_splits(total_rows: u64, n_maps: u64) -> Vec<InputSplit> {
+    let n_maps = n_maps.max(1).min(total_rows.max(1));
+    let base = total_rows / n_maps;
+    let extra = total_rows % n_maps;
+    let mut out = Vec::with_capacity(n_maps as usize);
+    let mut start = 0;
+    for i in 0..n_maps {
+        let count = base + if i < extra { 1 } else { 0 };
+        out.push(InputSplit {
+            path: String::new(),
+            offset: start,
+            len: count,
+        });
+        start += count;
+    }
+    out
+}
+
+/// Iterate the records of a split, calling `f(key, value)`.
+pub fn read_records(
+    dfs: &dyn Dfs,
+    split: &InputSplit,
+    format: InputFormat,
+    f: &mut dyn FnMut(&[u8], &[u8]),
+) -> Result<u64> {
+    match format {
+        InputFormat::TeraRecords => {
+            let buf = dfs.read_range(&split.path, split.offset, split.len)?;
+            if buf.len() % RECORD_LEN != 0 {
+                return Err(Error::MapReduce(format!(
+                    "split of {} not record aligned",
+                    split.path
+                )));
+            }
+            let mut n = 0;
+            for rec in buf.chunks_exact(RECORD_LEN) {
+                f(&rec[..10], &rec[10..]);
+                n += 1;
+            }
+            Ok(n)
+        }
+        InputFormat::Lines => {
+            // A split owns lines that *start* within [offset, offset+len).
+            // Read a bit past the end to finish the last line.
+            let file_size = dfs.size(&split.path)?;
+            let read_to = (split.offset + split.len + 1024 * 1024).min(file_size);
+            let buf = dfs.read_range(&split.path, split.offset, read_to - split.offset)?;
+            let mut pos = 0usize;
+            // Skip the partial first line unless we start at 0 (it belongs
+            // to the previous split).
+            if split.offset > 0 {
+                match buf.iter().position(|&b| b == b'\n') {
+                    Some(i) => pos = i + 1,
+                    None => return Ok(0),
+                }
+            }
+            let mut n = 0;
+            while pos < buf.len() {
+                let abs = split.offset + pos as u64;
+                if abs >= split.offset + split.len {
+                    break; // line starts in the next split
+                }
+                let end = buf[pos..]
+                    .iter()
+                    .position(|&b| b == b'\n')
+                    .map(|i| pos + i)
+                    .unwrap_or(buf.len());
+                let key = abs.to_be_bytes();
+                f(&key, &buf[pos..end]);
+                n += 1;
+                pos = end + 1;
+            }
+            Ok(n)
+        }
+        InputFormat::RowRange => Err(Error::MapReduce(
+            "RowRange records are synthesized by the mapper".into(),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+    use crate::lustre::LustreFs;
+
+    fn fs() -> LustreFs {
+        let c = StackConfig::paper();
+        LustreFs::new(&c.lustre, &c.cluster)
+    }
+
+    #[test]
+    fn tera_splits_are_record_aligned() {
+        let fs = fs();
+        fs.mkdirs("/lustre/scratch/in").unwrap();
+        fs.create("/lustre/scratch/in/part-0", &vec![0u8; 100 * 1000]).unwrap();
+        let splits =
+            plan_splits(&fs, "/lustre/scratch/in", InputFormat::TeraRecords, 30_000).unwrap();
+        // 100,000 bytes in steps of 30,000 rounded to 100 → 300 recs/split.
+        assert_eq!(splits.len(), 4);
+        for s in &splits {
+            assert_eq!(s.offset % 100, 0);
+        }
+        let total: u64 = splits.iter().map(|s| s.len).sum();
+        assert_eq!(total, 100 * 1000);
+    }
+
+    #[test]
+    fn tera_split_rejects_misaligned_file() {
+        let fs = fs();
+        fs.mkdirs("/lustre/scratch/bad").unwrap();
+        fs.create("/lustre/scratch/bad/f", &[0u8; 150]).unwrap();
+        assert!(plan_splits(&fs, "/lustre/scratch/bad", InputFormat::TeraRecords, 100).is_err());
+    }
+
+    #[test]
+    fn hidden_files_skipped_and_empty_dir_errors() {
+        let fs = fs();
+        fs.mkdirs("/lustre/scratch/only-hidden").unwrap();
+        fs.create("/lustre/scratch/only-hidden/_SUCCESS", b"").unwrap();
+        assert!(
+            plan_splits(&fs, "/lustre/scratch/only-hidden", InputFormat::TeraRecords, 100)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn line_records_assigned_to_owning_split() {
+        let fs = fs();
+        fs.mkdirs("/lustre/scratch/txt").unwrap();
+        let text = b"alpha\nbeta\ngamma\ndelta\n";
+        fs.create("/lustre/scratch/txt/f", text).unwrap();
+        let splits = plan_splits(&fs, "/lustre/scratch/txt", InputFormat::Lines, 8).unwrap();
+        let mut all = Vec::new();
+        for s in &splits {
+            read_records(&fs, s, InputFormat::Lines, &mut |_, v| {
+                all.push(String::from_utf8(v.to_vec()).unwrap());
+            })
+            .unwrap();
+        }
+        assert_eq!(all, vec!["alpha", "beta", "gamma", "delta"]);
+    }
+
+    #[test]
+    fn tera_records_read_back() {
+        let fs = fs();
+        fs.mkdirs("/lustre/scratch/t2").unwrap();
+        let mut data = Vec::new();
+        for i in 0..5u8 {
+            let mut rec = vec![i; 10];
+            rec.extend_from_slice(&[0xAA; 90]);
+            data.extend_from_slice(&rec);
+        }
+        fs.create("/lustre/scratch/t2/f", &data).unwrap();
+        let splits = plan_splits(&fs, "/lustre/scratch/t2", InputFormat::TeraRecords, 200).unwrap();
+        let mut keys = Vec::new();
+        for s in &splits {
+            read_records(&fs, s, InputFormat::TeraRecords, &mut |k, v| {
+                assert_eq!(v.len(), 90);
+                keys.push(k[0]);
+            })
+            .unwrap();
+        }
+        assert_eq!(keys, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn row_range_split_counts() {
+        let splits = row_range_splits(10, 3);
+        assert_eq!(splits.len(), 3);
+        let counts: Vec<u64> = splits.iter().map(|s| s.len).collect();
+        assert_eq!(counts, vec![4, 3, 3]);
+        let starts: Vec<u64> = splits.iter().map(|s| s.offset).collect();
+        assert_eq!(starts, vec![0, 4, 7]);
+        // More maps than rows clamps.
+        assert_eq!(row_range_splits(2, 100).len(), 2);
+    }
+}

@@ -1,0 +1,99 @@
+//! Task identity, attempts and fault-injection plans.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::sync::Mutex;
+
+/// Map or reduce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TaskKind {
+    Map,
+    Reduce,
+}
+
+/// Task id within a job (`task_m_000017` style).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TaskId {
+    pub kind: TaskKind,
+    pub index: u32,
+}
+
+impl fmt::Display for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let k = match self.kind {
+            TaskKind::Map => 'm',
+            TaskKind::Reduce => 'r',
+        };
+        write!(f, "task_{k}_{:06}", self.index)
+    }
+}
+
+impl TaskId {
+    pub fn map(index: u32) -> TaskId {
+        TaskId {
+            kind: TaskKind::Map,
+            index,
+        }
+    }
+
+    pub fn reduce(index: u32) -> TaskId {
+        TaskId {
+            kind: TaskKind::Reduce,
+            index,
+        }
+    }
+}
+
+/// Hadoop's retry budget.
+pub const MAX_ATTEMPTS: u32 = 4;
+
+/// Fault-injection plan: `(task, attempt)` pairs that must fail. Interior
+/// mutability so the engine can consume injections from worker threads.
+#[derive(Debug, Default)]
+pub struct FailurePlan {
+    fail: Mutex<BTreeSet<(TaskId, u32)>>,
+}
+
+impl FailurePlan {
+    pub fn none() -> FailurePlan {
+        FailurePlan::default()
+    }
+
+    /// Schedule attempt `attempt` of `task` to fail.
+    pub fn fail_attempt(self, task: TaskId, attempt: u32) -> FailurePlan {
+        self.fail.lock().unwrap().insert((task, attempt));
+        self
+    }
+
+    /// Should this attempt fail? (Consumes the injection.)
+    pub fn should_fail(&self, task: TaskId, attempt: u32) -> bool {
+        self.fail.lock().unwrap().remove(&(task, attempt))
+    }
+
+    pub fn pending(&self) -> usize {
+        self.fail.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_format() {
+        assert_eq!(TaskId::map(17).to_string(), "task_m_000017");
+        assert_eq!(TaskId::reduce(3).to_string(), "task_r_000003");
+    }
+
+    #[test]
+    fn failure_plan_consumes_injections() {
+        let plan = FailurePlan::none()
+            .fail_attempt(TaskId::map(0), 0)
+            .fail_attempt(TaskId::map(1), 0);
+        assert_eq!(plan.pending(), 2);
+        assert!(plan.should_fail(TaskId::map(0), 0));
+        assert!(!plan.should_fail(TaskId::map(0), 0), "consumed");
+        assert!(!plan.should_fail(TaskId::map(0), 1));
+        assert_eq!(plan.pending(), 1);
+    }
+}

@@ -1,0 +1,241 @@
+//! Metrics: counters, gauges, histograms and timelines.
+//!
+//! Every daemon and engine in the stack reports through a [`Metrics`]
+//! registry; benches and the API surface render them. Histograms use
+//! power-of-two-ish buckets (HDR-lite) which is plenty for latency
+//! distributions at simulation fidelity.
+
+use crate::util::time::Micros;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+/// A fixed-bucket latency/size histogram. Buckets are `[2^k, 2^(k+1))` in
+/// the recorded unit.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; 64],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let bucket = 64 - v.leading_zeros() as usize; // 0 → bucket 0
+        let bucket = bucket.min(self.counts.len() - 1);
+        self.counts[bucket] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// containing bucket).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return if i == 0 { 1 } else { 1u64 << i };
+            }
+        }
+        self.max
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One timeline event: `(at, component, label)`. The wrapper and the MR
+/// engine emit these so tests can assert ordering ("RM up before NMs").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimelineEvent {
+    pub at: Micros,
+    pub component: String,
+    pub label: String,
+}
+
+/// Thread-safe metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+    timeline: Vec<TimelineEvent>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    pub fn observe(&self, name: &str, v: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms.entry(name.to_string()).or_default().record(v);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        self.inner.lock().unwrap().histograms.get(name).cloned()
+    }
+
+    pub fn event(&self, at: Micros, component: &str, label: &str) {
+        self.inner.lock().unwrap().timeline.push(TimelineEvent {
+            at,
+            component: component.to_string(),
+            label: label.to_string(),
+        });
+    }
+
+    pub fn timeline(&self) -> Vec<TimelineEvent> {
+        let mut t = self.inner.lock().unwrap().timeline.clone();
+        t.sort_by_key(|e| e.at);
+        t
+    }
+
+    /// Find the first timeline event whose label contains `needle`.
+    pub fn find_event(&self, needle: &str) -> Option<TimelineEvent> {
+        self.timeline().into_iter().find(|e| e.label.contains(needle))
+    }
+
+    /// Render a flat text report (CLI `hpcw metrics`).
+    pub fn render(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in &g.counters {
+            let _ = writeln!(out, "counter {k} = {v}");
+        }
+        for (k, v) in &g.gauges {
+            let _ = writeln!(out, "gauge   {k} = {v}");
+        }
+        for (k, h) in &g.histograms {
+            let _ = writeln!(
+                out,
+                "hist    {k}: n={} mean={:.1} p50={} p99={} max={}",
+                h.count(),
+                h.mean(),
+                h.quantile(0.5),
+                h.quantile(0.99),
+                h.max()
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.inc("maps.completed", 3);
+        m.inc("maps.completed", 4);
+        assert_eq!(m.counter("maps.completed"), 7);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::new();
+        for v in [1u64, 2, 4, 8, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 1000);
+        assert!((h.mean() - 203.0).abs() < 1.0);
+        assert!(h.quantile(0.5) <= 8);
+        assert!(h.quantile(1.0) >= 1000 || h.quantile(1.0) == 1024);
+    }
+
+    #[test]
+    fn timeline_sorted_by_time() {
+        let m = Metrics::new();
+        m.event(Micros::secs(5), "rm", "started");
+        m.event(Micros::secs(1), "lsf", "dispatched");
+        let t = m.timeline();
+        assert_eq!(t[0].component, "lsf");
+        assert_eq!(t[1].component, "rm");
+        assert!(m.find_event("started").is_some());
+        assert!(m.find_event("nope").is_none());
+    }
+
+    #[test]
+    fn render_contains_everything() {
+        let m = Metrics::new();
+        m.inc("a", 1);
+        m.set_gauge("b", 2.5);
+        m.observe("c", 10);
+        let r = m.render();
+        assert!(r.contains("counter a = 1"));
+        assert!(r.contains("gauge   b = 2.5"));
+        assert!(r.contains("hist    c:"));
+    }
+}

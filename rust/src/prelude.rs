@@ -1,0 +1,13 @@
+//! Convenience re-exports for examples and downstream users.
+
+pub use crate::api::{ApiClient, ApiServer, AppPayload, AppResult, Stack};
+pub use crate::cluster::{ClusterModel, NodeId};
+pub use crate::config::StackConfig;
+pub use crate::error::{Error, Result};
+pub use crate::lustre::{Dfs, HdfsLikeFs, LustreFs};
+pub use crate::mapreduce::{JobSpec, MrEngine, MrOutcome};
+pub use crate::scheduler::{Lsf, ResourceRequest};
+pub use crate::terasort::{TeragenSpec, TerasortJob};
+pub use crate::util::bytes::ByteSize;
+pub use crate::util::time::Micros;
+pub use crate::wrapper::DynamicCluster;

@@ -1,0 +1,194 @@
+//! Artifact manifest: locate and describe the AOT-lowered HLO modules
+//! produced by `python/compile/aot.py` (`make artifacts`).
+
+use crate::codec::json::Json;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor spec of one kernel input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    /// "uint64" / "u64" / "int32" / "s32" (aot.py emits numpy-style for
+    /// inputs and short names for outputs; both are accepted).
+    pub dtype: String,
+    pub shape: Vec<u64>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> u64 {
+        self.shape.iter().product()
+    }
+
+    pub fn is_u64(&self) -> bool {
+        matches!(self.dtype.as_str(), "uint64" | "u64")
+    }
+
+    pub fn is_i32(&self) -> bool {
+        matches!(self.dtype.as_str(), "int32" | "s32")
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+/// Locate the artifacts directory: `HPCW_ARTIFACTS` env var, else
+/// `./artifacts`, else `<crate root>/artifacts`.
+pub fn default_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("HPCW_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.join("manifest.json").exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Runtime(format!(
+                "read {} failed ({e}) — run `make artifacts` first",
+                manifest_path.display()
+            ))
+        })?;
+        let json = Json::parse(&text)?;
+        if json.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            return Err(Error::Runtime("manifest: unknown format".into()));
+        }
+        let mut entries = BTreeMap::new();
+        let Some(Json::Obj(list)) = json.get("entries") else {
+            return Err(Error::Runtime("manifest: missing entries".into()));
+        };
+        for (name, e) in list {
+            let file = dir.join(e.req_str("file")?);
+            if !file.exists() {
+                return Err(Error::Runtime(format!(
+                    "artifact {} missing file {}",
+                    name,
+                    file.display()
+                )));
+            }
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                let mut out = Vec::new();
+                if let Some(arr) = e.get(key).and_then(Json::as_arr) {
+                    for (i, t) in arr.iter().enumerate() {
+                        out.push(TensorSpec {
+                            name: t
+                                .get("name")
+                                .and_then(Json::as_str)
+                                .unwrap_or(&format!("{key}{i}"))
+                                .to_string(),
+                            dtype: t.req_str("dtype")?.to_string(),
+                            shape: t
+                                .get("shape")
+                                .and_then(Json::as_arr)
+                                .map(|s| s.iter().filter_map(Json::as_u64).collect())
+                                .unwrap_or_default(),
+                        });
+                    }
+                }
+                Ok(out)
+            };
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file,
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact entry '{name}'")))
+    }
+
+    /// Entries named `prefix_b<N>...`, sorted by N — used to pick the
+    /// smallest block geometry that fits a batch.
+    pub fn block_sizes(&self, prefix: &str) -> Vec<(u64, String)> {
+        let mut out: Vec<(u64, String)> = self
+            .entries
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .filter_map(|k| {
+                let rest = &k[prefix.len()..];
+                let b = rest
+                    .strip_prefix("_b")?
+                    .split('_')
+                    .next()?
+                    .parse::<u64>()
+                    .ok()?;
+                Some((b, k.clone()))
+            })
+            .collect();
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<ArtifactManifest> {
+        let dir = default_dir();
+        ArtifactManifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn manifest_loads_when_built() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(m.entries.len() >= 5);
+        let e = m.entry("partition_b4096_s127").unwrap();
+        assert!(e.inputs[0].is_u64());
+        assert_eq!(e.inputs[0].shape, vec![4096]);
+        assert_eq!(e.outputs[1].name, "counts");
+        assert!(e.outputs[1].is_i32());
+    }
+
+    #[test]
+    fn block_size_listing() {
+        let Some(m) = manifest() else {
+            return;
+        };
+        let parts = m.block_sizes("partition");
+        assert_eq!(parts.len(), 2);
+        assert!(parts[0].0 < parts[1].0);
+        let maps = m.block_sizes("mapphase");
+        assert_eq!(maps.first().map(|e| e.0), Some(2048));
+    }
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = ArtifactManifest::load(Path::new("/nonexistent-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

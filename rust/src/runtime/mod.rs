@@ -1,0 +1,16 @@
+//! The PJRT runtime: load the AOT-lowered JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and execute them from the Rust hot path.
+//!
+//! * [`artifacts`] — manifest parsing + artifact discovery.
+//! * [`pjrt`] — the dedicated PJRT server thread (xla-crate types are not
+//!   `Send`) with compile-once caching and a cloneable client handle.
+//! * [`kernels`] — typed wrappers and the [`crate::mapreduce::BlockProcessor`]
+//!   implementations (pure-Rust reference vs Pallas kernel), parity-tested.
+
+pub mod artifacts;
+pub mod kernels;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactManifest, TensorSpec};
+pub use kernels::{KernelBlockProcessor, RustBlockProcessor};
+pub use pjrt::{shared_client, KernelClient, KernelServer, Tensor};

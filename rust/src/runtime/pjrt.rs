@@ -1,0 +1,329 @@
+//! The PJRT execution server.
+//!
+//! The `xla` crate's client/executable types wrap raw C++ pointers and are
+//! not `Send`, but map tasks run on a thread pool. The server owns the
+//! PJRT CPU client and all compiled executables on one dedicated thread;
+//! callers talk to it through a cloneable [`KernelClient`] channel handle.
+//! Executables are compiled once per entry name and cached for the life of
+//! the server — compilation happens at startup (or first use), never on
+//! the per-record hot path.
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::ArtifactManifest;
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// A typed input tensor crossing the channel.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    U64(Vec<u64>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn as_u64(&self) -> Result<&[u64]> {
+        match self {
+            Tensor::U64(v) => Ok(v),
+            _ => Err(Error::Runtime("expected u64 tensor".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            _ => Err(Error::Runtime("expected i32 tensor".into())),
+        }
+    }
+
+    fn to_literal(&self) -> xla::Literal {
+        match self {
+            Tensor::U64(v) => xla::Literal::vec1(v),
+            Tensor::I32(v) => xla::Literal::vec1(v),
+        }
+    }
+}
+
+enum Request {
+    Exec {
+        entry: String,
+        inputs: Vec<Tensor>,
+        reply: Sender<Result<Vec<Tensor>>>,
+    },
+    /// Pre-compile an entry (warmup).
+    Compile {
+        entry: String,
+        reply: Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the PJRT server thread.
+#[derive(Clone)]
+pub struct KernelClient {
+    tx: Sender<Request>,
+    manifest: Arc<ArtifactManifest>,
+}
+
+// The Sender is Send+Sync via the Mutex pattern below; Request contains
+// only owned data.
+pub struct KernelServer {
+    tx: Sender<Request>,
+    manifest: Arc<ArtifactManifest>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl KernelServer {
+    /// Start the server for an artifact manifest.
+    pub fn start(manifest: ArtifactManifest) -> Result<KernelServer> {
+        let manifest = Arc::new(manifest);
+        let (tx, rx) = channel::<Request>();
+        let m2 = Arc::clone(&manifest);
+        let handle = std::thread::Builder::new()
+            .name("hpcw-pjrt".into())
+            .spawn(move || server_loop(rx, m2))
+            .map_err(|e| Error::Runtime(format!("spawn pjrt server: {e}")))?;
+        Ok(KernelServer {
+            tx,
+            manifest,
+            handle: Some(handle),
+        })
+    }
+
+    /// Start from the default artifacts dir.
+    pub fn start_default() -> Result<KernelServer> {
+        let dir = crate::runtime::artifacts::default_dir();
+        KernelServer::start(ArtifactManifest::load(&dir)?)
+    }
+
+    pub fn client(&self) -> KernelClient {
+        KernelClient {
+            tx: self.tx.clone(),
+            manifest: Arc::clone(&self.manifest),
+        }
+    }
+}
+
+impl Drop for KernelServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl KernelClient {
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Execute an entry with typed tensors; blocks for the result.
+    pub fn execute(&self, entry: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.entry(entry)?;
+        if spec.inputs.len() != inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{entry}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (s, t)) in spec.inputs.iter().zip(&inputs).enumerate() {
+            let len = match t {
+                Tensor::U64(v) => v.len() as u64,
+                Tensor::I32(v) => v.len() as u64,
+            };
+            if len != s.elements() {
+                return Err(Error::Runtime(format!(
+                    "{entry}: input {i} has {len} elements, expected {}",
+                    s.elements()
+                )));
+            }
+        }
+        let (reply, rrx): (Sender<Result<Vec<Tensor>>>, Receiver<_>) = channel();
+        self.tx
+            .send(Request::Exec {
+                entry: entry.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| Error::Runtime("pjrt server gone".into()))?;
+        rrx.recv()
+            .map_err(|_| Error::Runtime("pjrt server dropped reply".into()))?
+    }
+
+    /// Warm the compile cache for an entry.
+    pub fn precompile(&self, entry: &str) -> Result<()> {
+        let (reply, rrx) = channel();
+        self.tx
+            .send(Request::Compile {
+                entry: entry.to_string(),
+                reply,
+            })
+            .map_err(|_| Error::Runtime("pjrt server gone".into()))?;
+        rrx.recv()
+            .map_err(|_| Error::Runtime("pjrt server dropped reply".into()))?
+    }
+}
+
+fn server_loop(rx: Receiver<Request>, manifest: Arc<ArtifactManifest>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Answer every request with the startup error.
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Exec { reply, .. } => {
+                        let _ = reply.send(Err(Error::Runtime(format!("PJRT init failed: {e}"))));
+                    }
+                    Request::Compile { reply, .. } => {
+                        let _ = reply.send(Err(Error::Runtime(format!("PJRT init failed: {e}"))));
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: BTreeMap<String, xla::PjRtLoadedExecutable> = BTreeMap::new();
+
+    let compile =
+        |cache: &mut BTreeMap<String, xla::PjRtLoadedExecutable>, entry: &str| -> Result<()> {
+            if cache.contains_key(entry) {
+                return Ok(());
+            }
+            let spec = manifest.entry(entry)?;
+            let path = spec
+                .file
+                .to_str()
+                .ok_or_else(|| Error::Runtime("bad artifact path".into()))?
+                .to_string();
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            cache.insert(entry.to_string(), exe);
+            Ok(())
+        };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Compile { entry, reply } => {
+                let _ = reply.send(compile(&mut cache, &entry));
+            }
+            Request::Exec {
+                entry,
+                inputs,
+                reply,
+            } => {
+                let result = (|| -> Result<Vec<Tensor>> {
+                    compile(&mut cache, &entry)?;
+                    let exe = cache.get(&entry).unwrap();
+                    let lits: Vec<xla::Literal> =
+                        inputs.iter().map(Tensor::to_literal).collect();
+                    let out = exe.execute::<xla::Literal>(&lits)?;
+                    let result = out[0][0].to_literal_sync()?;
+                    // aot.py lowers with return_tuple=True.
+                    let parts = result.to_tuple()?;
+                    let spec = manifest.entry(&entry)?;
+                    if parts.len() != spec.outputs.len() {
+                        return Err(Error::Runtime(format!(
+                            "{entry}: got {} outputs, manifest says {}",
+                            parts.len(),
+                            spec.outputs.len()
+                        )));
+                    }
+                    let mut tensors = Vec::with_capacity(parts.len());
+                    for (lit, ospec) in parts.into_iter().zip(&spec.outputs) {
+                        if ospec.is_u64() {
+                            tensors.push(Tensor::U64(lit.to_vec::<u64>()?));
+                        } else if ospec.is_i32() {
+                            tensors.push(Tensor::I32(lit.to_vec::<i32>()?));
+                        } else {
+                            return Err(Error::Runtime(format!(
+                                "{entry}: unsupported output dtype {}",
+                                ospec.dtype
+                            )));
+                        }
+                    }
+                    Ok(tensors)
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+/// Shared lazily-started server (one per process). Returns a client, or a
+/// clean error if artifacts are not built / PJRT unavailable.
+pub fn shared_client() -> Result<KernelClient> {
+    static SERVER: once_cell::sync::Lazy<Mutex<Option<KernelServer>>> =
+        once_cell::sync::Lazy::new(|| Mutex::new(None));
+    let mut guard = SERVER.lock().unwrap();
+    if guard.is_none() {
+        *guard = Some(KernelServer::start_default()?);
+    }
+    Ok(guard.as_ref().unwrap().client())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::default_dir;
+
+    fn client() -> Option<KernelClient> {
+        if !default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        shared_client().ok()
+    }
+
+    #[test]
+    fn partition_kernel_executes() {
+        let Some(c) = client() else { return };
+        let n = 4096usize;
+        let keys: Vec<u64> = (0..n as u64).map(|i| i * 1_000_003).collect();
+        let mut splitters = vec![u64::MAX; 127];
+        splitters[0] = 1_000_000_000;
+        splitters[1] = 3_000_000_000;
+        splitters.sort_unstable();
+        let out = c
+            .execute(
+                "partition_b4096_s127",
+                vec![Tensor::U64(keys.clone()), Tensor::U64(splitters.clone())],
+            )
+            .unwrap();
+        let part = out[0].as_i32().unwrap();
+        let counts = out[1].as_i32().unwrap();
+        assert_eq!(part.len(), n);
+        assert_eq!(counts.iter().map(|&c| c as i64).sum::<i64>(), n as i64);
+        // Spot-check against the Rust router semantics.
+        for (i, &k) in keys.iter().enumerate().step_by(517) {
+            let expect = splitters.iter().filter(|&&s| s <= k).count() as i32;
+            assert_eq!(part[i], expect, "key {k}");
+        }
+    }
+
+    #[test]
+    fn input_shape_mismatch_rejected() {
+        let Some(c) = client() else { return };
+        let err = c
+            .execute("partition_b4096_s127", vec![Tensor::U64(vec![1, 2, 3])])
+            .unwrap_err();
+        assert!(err.to_string().contains("expected 2 inputs"));
+        let err2 = c
+            .execute(
+                "partition_b4096_s127",
+                vec![Tensor::U64(vec![1, 2, 3]), Tensor::U64(vec![0; 127])],
+            )
+            .unwrap_err();
+        assert!(err2.to_string().contains("elements"));
+    }
+
+    #[test]
+    fn unknown_entry_rejected() {
+        let Some(c) = client() else { return };
+        assert!(c.execute("nope", vec![]).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Job, request and command types for the LSF-like scheduler.
+
+use crate::cluster::NodeId;
+use crate::util::ids::LsfJobId;
+use crate::util::time::Micros;
+
+/// What the dispatched job runs. The paper's flow always goes through the
+/// wrapper script, but plain commands model the coexisting HPC workloads
+/// (MPI jobs sharing the machine in the ABL-SCHED ablation).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobCommand {
+    /// The HPC Wales wrapper: build a YARN cluster, run `app`, tear down.
+    Wrapper { app: String },
+    /// A plain command (an MPI application, a serial task...).
+    Plain { argv: Vec<String> },
+}
+
+impl JobCommand {
+    pub fn wrapper(app: &str) -> JobCommand {
+        JobCommand::Wrapper { app: app.to_string() }
+    }
+
+    pub fn plain(argv: &[&str]) -> JobCommand {
+        JobCommand::Plain {
+            argv: argv.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Display string for `bjobs`-style listings.
+    pub fn display(&self) -> String {
+        match self {
+            JobCommand::Wrapper { app } => format!("hpcw-wrapper {app}"),
+            JobCommand::Plain { argv } => argv.join(" "),
+        }
+    }
+}
+
+/// A `bsub`-style resource request. HPC Wales Big Data jobs request whole
+/// nodes (`-n N -R span[ptile=16] -x`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResourceRequest {
+    /// Whole nodes requested.
+    pub nodes: u32,
+    pub queue: String,
+    pub user: String,
+    /// Wall-clock limit (jobs past it are killed by the driver).
+    pub wall_limit: Option<Micros>,
+    /// Force exclusive placement even on a shared queue.
+    pub exclusive: bool,
+}
+
+impl ResourceRequest {
+    /// The paper's standard request: N nodes on the dedicated queue.
+    pub fn bigdata(nodes: u32, user: &str) -> ResourceRequest {
+        ResourceRequest {
+            nodes,
+            queue: "bigdata".into(),
+            user: user.into(),
+            wall_limit: None,
+            exclusive: true,
+        }
+    }
+}
+
+/// Lifecycle state (LSF names: PEND, RUN, DONE, EXIT).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    /// Finished with exit 0.
+    Done,
+    /// Finished with non-zero exit.
+    Exited,
+    /// Terminated by bkill.
+    Killed,
+}
+
+impl JobState {
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Exited | JobState::Killed)
+    }
+
+    /// LSF display name.
+    pub fn lsf_name(self) -> &'static str {
+        match self {
+            JobState::Pending => "PEND",
+            JobState::Running => "RUN",
+            JobState::Done => "DONE",
+            JobState::Exited => "EXIT",
+            JobState::Killed => "EXIT(kill)",
+        }
+    }
+}
+
+/// A tracked job.
+#[derive(Debug, Clone)]
+pub struct LsfJob {
+    pub id: LsfJobId,
+    pub req: ResourceRequest,
+    pub command: JobCommand,
+    pub state: JobState,
+    pub submitted_at: Micros,
+    pub started_at: Option<Micros>,
+    pub finished_at: Option<Micros>,
+    /// Nodes held while running (empty otherwise).
+    pub nodes: Vec<NodeId>,
+}
+
+impl LsfJob {
+    /// Queue wait so far / total.
+    pub fn wait_time(&self, now: Micros) -> Micros {
+        match self.started_at {
+            Some(s) => s.saturating_sub(self.submitted_at),
+            None => now.saturating_sub(self.submitted_at),
+        }
+    }
+
+    /// Runtime so far / total.
+    pub fn run_time(&self, now: Micros) -> Micros {
+        match (self.started_at, self.finished_at) {
+            (Some(s), Some(f)) => f.saturating_sub(s),
+            (Some(s), None) => now.saturating_sub(s),
+            _ => Micros::ZERO,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn terminal_states() {
+        assert!(!JobState::Pending.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::Done.is_terminal());
+        assert!(JobState::Exited.is_terminal());
+        assert!(JobState::Killed.is_terminal());
+    }
+
+    #[test]
+    fn lsf_names() {
+        assert_eq!(JobState::Pending.lsf_name(), "PEND");
+        assert_eq!(JobState::Running.lsf_name(), "RUN");
+    }
+
+    #[test]
+    fn bigdata_request_is_exclusive() {
+        let r = ResourceRequest::bigdata(113, "sid");
+        assert!(r.exclusive);
+        assert_eq!(r.queue, "bigdata");
+        assert_eq!(r.nodes, 113);
+    }
+
+    #[test]
+    fn times() {
+        let j = LsfJob {
+            id: LsfJobId(1),
+            req: ResourceRequest::bigdata(1, "u"),
+            command: JobCommand::wrapper("t"),
+            state: JobState::Running,
+            submitted_at: Micros::secs(10),
+            started_at: Some(Micros::secs(25)),
+            finished_at: None,
+            nodes: vec![],
+        };
+        assert_eq!(j.wait_time(Micros::secs(100)), Micros::secs(15));
+        assert_eq!(j.run_time(Micros::secs(100)), Micros::secs(75));
+    }
+
+    #[test]
+    fn command_display() {
+        assert_eq!(JobCommand::wrapper("ts").display(), "hpcw-wrapper ts");
+        assert_eq!(JobCommand::plain(&["mpirun", "-np", "64"]).display(), "mpirun -np 64");
+    }
+}

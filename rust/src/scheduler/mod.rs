@@ -1,0 +1,432 @@
+//! The LSF-like batch scheduler (IBM Platform LSF stand-in).
+//!
+//! The paper's integration point (§III "Scheduler Integration"): Hadoop
+//! jobs are submitted "just like any other" to the batch scheduler, which
+//! allocates whole nodes on a dedicated queue with exclusive access; the
+//! wrapper then builds the YARN cluster inside that allocation.
+//!
+//! This module provides the full lifecycle — `bsub` (submit), the periodic
+//! dispatch cycle, `bjobs` (status), `bkill` (terminate), completion — and
+//! three queue policies (FIFO / fairshare / capacity) for the ABL-SCHED
+//! ablation. It is deliberately synchronous: Sim mode drives it from event
+//! ticks, Real mode from plain calls; the state machine is identical.
+
+pub mod alloc;
+pub mod job;
+pub mod policy;
+
+pub use alloc::Allocator;
+pub use job::{JobCommand, JobState, LsfJob, ResourceRequest};
+pub use policy::pick_next;
+
+use crate::cluster::{ClusterModel, NodeId};
+use crate::config::SchedulerConfig;
+use crate::error::{Error, Result};
+use crate::metrics::Metrics;
+use crate::util::ids::{IdGen, LsfJobId};
+use crate::util::time::Micros;
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+/// A dispatch decision produced by one scheduling cycle: the job now owns
+/// `nodes` and should start.
+#[derive(Debug, Clone)]
+pub struct Dispatch {
+    pub job: LsfJobId,
+    pub nodes: Vec<NodeId>,
+    pub at: Micros,
+}
+
+/// The scheduler.
+pub struct Lsf {
+    cfg: SchedulerConfig,
+    alloc: Allocator,
+    jobs: BTreeMap<LsfJobId, LsfJob>,
+    /// Pending ids per queue, in submit order.
+    pending: BTreeMap<String, Vec<LsfJobId>>,
+    ids: Arc<IdGen>,
+    metrics: Arc<Metrics>,
+}
+
+impl Lsf {
+    pub fn new(cfg: SchedulerConfig, cluster: &ClusterModel, ids: Arc<IdGen>, metrics: Arc<Metrics>) -> Self {
+        let mut pending = BTreeMap::new();
+        for q in &cfg.queues {
+            pending.insert(q.name.clone(), Vec::new());
+        }
+        Lsf {
+            cfg,
+            alloc: Allocator::new(cluster),
+            jobs: BTreeMap::new(),
+            pending,
+            ids,
+            metrics,
+        }
+    }
+
+    /// `bsub`: validate and enqueue. Returns the job id.
+    pub fn submit(&mut self, req: ResourceRequest, command: JobCommand, now: Micros) -> Result<LsfJobId> {
+        let queue = self
+            .cfg
+            .queue(&req.queue)
+            .ok_or_else(|| Error::Sched(format!("unknown queue '{}'", req.queue)))?
+            .clone();
+        if req.nodes == 0 {
+            return Err(Error::Sched("resource request of zero nodes".into()));
+        }
+        if req.nodes as usize > self.alloc.total_nodes() {
+            return Err(Error::Sched(format!(
+                "request of {} nodes exceeds cluster size {}",
+                req.nodes,
+                self.alloc.total_nodes()
+            )));
+        }
+        let id = self.ids.lsf_job();
+        let job = LsfJob {
+            id,
+            req: ResourceRequest {
+                exclusive: queue.exclusive || req.exclusive,
+                ..req
+            },
+            command,
+            state: JobState::Pending,
+            submitted_at: now,
+            started_at: None,
+            finished_at: None,
+            nodes: Vec::new(),
+        };
+        self.pending.get_mut(&job.req.queue).unwrap().push(id);
+        self.jobs.insert(id, job);
+        self.metrics.inc("lsf.submitted", 1);
+        self.metrics.event(now, "lsf", &format!("submit job {id}"));
+        Ok(id)
+    }
+
+    /// One dispatch cycle (LSF's mbatchd scheduling pass). Walks queues by
+    /// priority, applies the queue policy to order candidates, allocates
+    /// nodes, optionally backfills. Returns dispatches decided this cycle.
+    pub fn dispatch_cycle(&mut self, now: Micros) -> Vec<Dispatch> {
+        let mut out = Vec::new();
+        let mut queues: Vec<_> = self.cfg.queues.clone();
+        queues.sort_by_key(|q| std::cmp::Reverse(q.priority));
+
+        for q in &queues {
+            loop {
+                let pend = self.pending.get(&q.name).unwrap();
+                if pend.is_empty() {
+                    break;
+                }
+                // Policy picks the next candidate among this queue's pending.
+                let running_by_user = self.running_nodes_by_user();
+                let queue_used = self.nodes_used_by_queue(&q.name);
+                let Some(next_id) = pick_next(
+                    q,
+                    pend,
+                    &self.jobs,
+                    &running_by_user,
+                    queue_used,
+                    self.alloc.total_nodes(),
+                ) else {
+                    break; // queue at capacity
+                };
+                let req = self.jobs[&next_id].req.clone();
+                match self.alloc.try_allocate(&req) {
+                    Some(nodes) => {
+                        self.start_job(next_id, nodes.clone(), now);
+                        out.push(Dispatch {
+                            job: next_id,
+                            nodes,
+                            at: now,
+                        });
+                    }
+                    None => {
+                        // Head job blocked. Optionally backfill smaller jobs
+                        // behind it (simple backfill: anything that fits).
+                        if self.cfg.backfill {
+                            let backfills = self.backfill_queue(&q.name, next_id, now);
+                            out.extend(backfills);
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn backfill_queue(&mut self, queue: &str, blocked_head: LsfJobId, now: Micros) -> Vec<Dispatch> {
+        let mut out = Vec::new();
+        let candidates: Vec<LsfJobId> = self.pending[queue]
+            .iter()
+            .copied()
+            .filter(|&id| id != blocked_head)
+            .collect();
+        for id in candidates {
+            let req = self.jobs[&id].req.clone();
+            if let Some(nodes) = self.alloc.try_allocate(&req) {
+                self.start_job(id, nodes.clone(), now);
+                self.metrics.inc("lsf.backfilled", 1);
+                out.push(Dispatch { job: id, nodes, at: now });
+            }
+        }
+        out
+    }
+
+    fn start_job(&mut self, id: LsfJobId, nodes: Vec<NodeId>, now: Micros) {
+        let job = self.jobs.get_mut(&id).unwrap();
+        job.state = JobState::Running;
+        job.started_at = Some(now);
+        job.nodes = nodes;
+        let q = job.req.queue.clone();
+        let pend = self.pending.get_mut(&q).unwrap();
+        pend.retain(|&p| p != id);
+        self.metrics.inc("lsf.dispatched", 1);
+        self.metrics.event(now, "lsf", &format!("dispatch job {id}"));
+        let wait = now.saturating_sub(self.jobs[&id].submitted_at);
+        self.metrics.observe("lsf.queue_wait_us", wait.0.max(1));
+    }
+
+    /// Mark a running job finished (exit 0) and release its nodes.
+    pub fn finish(&mut self, id: LsfJobId, now: Micros) -> Result<()> {
+        self.complete(id, now, JobState::Done)
+    }
+
+    /// `bkill`: terminate a pending or running job.
+    pub fn kill(&mut self, id: LsfJobId, now: Micros) -> Result<()> {
+        let state = self.jobs.get(&id).map(|j| j.state);
+        match state {
+            Some(JobState::Pending) => {
+                let q = self.jobs[&id].req.queue.clone();
+                self.pending.get_mut(&q).unwrap().retain(|&p| p != id);
+                let job = self.jobs.get_mut(&id).unwrap();
+                job.state = JobState::Killed;
+                job.finished_at = Some(now);
+                self.metrics.inc("lsf.killed", 1);
+                Ok(())
+            }
+            Some(JobState::Running) => self.complete(id, now, JobState::Killed),
+            Some(_) => Err(Error::Sched(format!("job {id} already finished"))),
+            None => Err(Error::Sched(format!("unknown job {id}"))),
+        }
+    }
+
+    /// Mark a running job failed (non-zero exit) and release nodes.
+    pub fn fail(&mut self, id: LsfJobId, now: Micros) -> Result<()> {
+        self.complete(id, now, JobState::Exited)
+    }
+
+    fn complete(&mut self, id: LsfJobId, now: Micros, end_state: JobState) -> Result<()> {
+        let job = self
+            .jobs
+            .get_mut(&id)
+            .ok_or_else(|| Error::Sched(format!("unknown job {id}")))?;
+        if job.state != JobState::Running {
+            return Err(Error::Sched(format!("job {id} is not running")));
+        }
+        job.state = end_state;
+        job.finished_at = Some(now);
+        let nodes = std::mem::take(&mut job.nodes);
+        self.alloc.release(&nodes);
+        self.metrics.inc("lsf.finished", 1);
+        self.metrics
+            .event(now, "lsf", &format!("finish job {id} ({end_state:?})"));
+        Ok(())
+    }
+
+    /// `bjobs`: job status lookup.
+    pub fn status(&self, id: LsfJobId) -> Option<&LsfJob> {
+        self.jobs.get(&id)
+    }
+
+    /// All jobs (API listing).
+    pub fn jobs(&self) -> impl Iterator<Item = &LsfJob> {
+        self.jobs.values()
+    }
+
+    /// Nodes currently free.
+    pub fn free_nodes(&self) -> usize {
+        self.alloc.free_count()
+    }
+
+    /// Node-failure hook: releases the node from the free pool and reports
+    /// which running jobs were hit (the caller decides to fail/requeue).
+    pub fn node_failed(&mut self, node: NodeId) -> Vec<LsfJobId> {
+        self.alloc.remove_node(node);
+        self.jobs
+            .values()
+            .filter(|j| j.state == JobState::Running && j.nodes.contains(&node))
+            .map(|j| j.id)
+            .collect()
+    }
+
+    fn running_nodes_by_user(&self) -> BTreeMap<String, u32> {
+        let mut m = BTreeMap::new();
+        for j in self.jobs.values() {
+            if j.state == JobState::Running {
+                *m.entry(j.req.user.clone()).or_insert(0) += j.nodes.len() as u32;
+            }
+        }
+        m
+    }
+
+    fn nodes_used_by_queue(&self, queue: &str) -> u32 {
+        self.jobs
+            .values()
+            .filter(|j| j.state == JobState::Running && j.req.queue == queue)
+            .map(|j| j.nodes.len() as u32)
+            .sum()
+    }
+
+    /// Invariant check used by property tests: no node is owned by two
+    /// running jobs; allocator bookkeeping matches job records.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut seen: BTreeSet<NodeId> = BTreeSet::new();
+        for j in self.jobs.values() {
+            if j.state == JobState::Running {
+                for &n in &j.nodes {
+                    if !seen.insert(n) {
+                        return Err(Error::Sched(format!(
+                            "node {n} owned by two running jobs"
+                        )));
+                    }
+                }
+            } else if !j.nodes.is_empty() {
+                return Err(Error::Sched(format!(
+                    "non-running job {} still holds nodes",
+                    j.id
+                )));
+            }
+        }
+        let busy = self.alloc.busy_count();
+        if busy != seen.len() {
+            return Err(Error::Sched(format!(
+                "allocator busy={} but jobs hold {}",
+                busy,
+                seen.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+
+    fn mk() -> Lsf {
+        let cfg = StackConfig::tiny();
+        let cluster = ClusterModel::new(&cfg.cluster);
+        Lsf::new(
+            cfg.scheduler.clone(),
+            &cluster,
+            Arc::new(IdGen::default()),
+            Arc::new(Metrics::new()),
+        )
+    }
+
+    fn req(nodes: u32) -> ResourceRequest {
+        ResourceRequest {
+            nodes,
+            queue: "bigdata".into(),
+            user: "alice".into(),
+            wall_limit: None,
+            exclusive: false,
+        }
+    }
+
+    #[test]
+    fn submit_dispatch_finish_cycle() {
+        let mut lsf = mk();
+        let id = lsf
+            .submit(req(4), JobCommand::wrapper("terasort"), Micros::ZERO)
+            .unwrap();
+        assert_eq!(lsf.status(id).unwrap().state, JobState::Pending);
+        let d = lsf.dispatch_cycle(Micros::ms(500));
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].nodes.len(), 4);
+        assert_eq!(lsf.status(id).unwrap().state, JobState::Running);
+        lsf.check_invariants().unwrap();
+        lsf.finish(id, Micros::secs(100)).unwrap();
+        assert_eq!(lsf.status(id).unwrap().state, JobState::Done);
+        assert_eq!(lsf.free_nodes(), 8);
+        lsf.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oversized_request_rejected_at_submit() {
+        let mut lsf = mk();
+        assert!(lsf.submit(req(9), JobCommand::wrapper("x"), Micros::ZERO).is_err());
+        assert!(lsf.submit(req(0), JobCommand::wrapper("x"), Micros::ZERO).is_err());
+    }
+
+    #[test]
+    fn unknown_queue_rejected() {
+        let mut lsf = mk();
+        let mut r = req(1);
+        r.queue = "nope".into();
+        assert!(lsf.submit(r, JobCommand::wrapper("x"), Micros::ZERO).is_err());
+    }
+
+    #[test]
+    fn fifo_order_within_queue() {
+        let mut lsf = mk();
+        let a = lsf.submit(req(8), JobCommand::wrapper("a"), Micros::ZERO).unwrap();
+        let b = lsf.submit(req(8), JobCommand::wrapper("b"), Micros::ZERO).unwrap();
+        let d1 = lsf.dispatch_cycle(Micros::ms(500));
+        assert_eq!(d1.len(), 1);
+        assert_eq!(d1[0].job, a);
+        // b waits for the full cluster.
+        assert!(lsf.dispatch_cycle(Micros::secs(1)).is_empty());
+        lsf.finish(a, Micros::secs(2)).unwrap();
+        let d2 = lsf.dispatch_cycle(Micros::secs(2)).pop().unwrap();
+        assert_eq!(d2.job, b);
+    }
+
+    #[test]
+    fn backfill_fills_behind_blocked_head() {
+        let mut lsf = mk();
+        let big = lsf.submit(req(6), JobCommand::wrapper("big"), Micros::ZERO).unwrap();
+        let d = lsf.dispatch_cycle(Micros::ms(500));
+        assert_eq!(d[0].job, big);
+        // Head needs 6 (only 2 free) → blocked; small job of 2 backfills.
+        let _head = lsf.submit(req(6), JobCommand::wrapper("head"), Micros::secs(1)).unwrap();
+        let small = lsf.submit(req(2), JobCommand::wrapper("small"), Micros::secs(1)).unwrap();
+        let d2 = lsf.dispatch_cycle(Micros::secs(1));
+        assert_eq!(d2.len(), 1);
+        assert_eq!(d2[0].job, small);
+        lsf.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn kill_pending_and_running() {
+        let mut lsf = mk();
+        let a = lsf.submit(req(2), JobCommand::wrapper("a"), Micros::ZERO).unwrap();
+        let b = lsf.submit(req(2), JobCommand::wrapper("b"), Micros::ZERO).unwrap();
+        lsf.dispatch_cycle(Micros::ms(500));
+        // Both dispatched (8 nodes, 2+2). Kill a running job:
+        lsf.kill(a, Micros::secs(1)).unwrap();
+        assert_eq!(lsf.status(a).unwrap().state, JobState::Killed);
+        // Kill a pending job:
+        let c = lsf.submit(req(8), JobCommand::wrapper("c"), Micros::secs(2)).unwrap();
+        lsf.kill(c, Micros::secs(3)).unwrap();
+        assert_eq!(lsf.status(c).unwrap().state, JobState::Killed);
+        // Double-kill errors.
+        assert!(lsf.kill(a, Micros::secs(4)).is_err());
+        let _ = b;
+        lsf.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn node_failure_reports_affected_jobs() {
+        let mut lsf = mk();
+        let a = lsf.submit(req(8), JobCommand::wrapper("a"), Micros::ZERO).unwrap();
+        lsf.dispatch_cycle(Micros::ms(500));
+        let victims = lsf.node_failed(crate::cluster::NodeId(3));
+        assert_eq!(victims, vec![a]);
+        lsf.fail(a, Micros::secs(1)).unwrap();
+        // Failed node is out of the pool: only 7 free.
+        assert_eq!(lsf.free_nodes(), 7);
+    }
+}

@@ -1,0 +1,174 @@
+//! Queue dispatch policies: FIFO, fairshare, capacity (ABL-SCHED).
+//!
+//! `pick_next` returns the pending job the queue should try to start next,
+//! or `None` if policy forbids starting anything (capacity exhausted).
+
+use crate::config::sched::{QueueConfig, QueuePolicy};
+use crate::scheduler::job::LsfJob;
+use crate::util::ids::LsfJobId;
+use std::collections::BTreeMap;
+
+/// Choose the next candidate from `pending` (submit order) for queue `q`.
+///
+/// * `running_by_user` — nodes currently held per user (fairshare input).
+/// * `queue_used` — nodes currently held by this queue (capacity input).
+/// * `total_nodes` — cluster size (capacity denominator).
+pub fn pick_next(
+    q: &QueueConfig,
+    pending: &[LsfJobId],
+    jobs: &BTreeMap<LsfJobId, LsfJob>,
+    running_by_user: &BTreeMap<String, u32>,
+    queue_used: u32,
+    total_nodes: usize,
+) -> Option<LsfJobId> {
+    if pending.is_empty() {
+        return None;
+    }
+    match q.policy {
+        QueuePolicy::Fifo => Some(pending[0]),
+        QueuePolicy::Fairshare => {
+            // Deficit fairshare: among pending jobs, pick the one whose user
+            // currently holds the fewest nodes; ties go to submit order.
+            pending
+                .iter()
+                .copied()
+                .min_by_key(|id| {
+                    let user = &jobs[id].req.user;
+                    let held = running_by_user.get(user).copied().unwrap_or(0);
+                    (held, *id)
+                })
+        }
+        QueuePolicy::Capacity => {
+            // The queue may not exceed its share of the cluster. Pick FIFO
+            // among jobs that fit under the cap.
+            let cap = (q.capacity_share * total_nodes as f64).floor() as u32;
+            pending
+                .iter()
+                .copied()
+                .find(|id| queue_used + jobs[id].req.nodes <= cap.max(1))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::job::{JobCommand, JobState, ResourceRequest};
+    use crate::util::time::Micros;
+
+    fn queue(policy: QueuePolicy, share: f64) -> QueueConfig {
+        QueueConfig {
+            name: "q".into(),
+            policy,
+            exclusive: true,
+            capacity_share: share,
+            priority: 1,
+        }
+    }
+
+    fn job(id: u64, user: &str, nodes: u32) -> (LsfJobId, LsfJob) {
+        let jid = LsfJobId(id);
+        (
+            jid,
+            LsfJob {
+                id: jid,
+                req: ResourceRequest {
+                    nodes,
+                    queue: "q".into(),
+                    user: user.into(),
+                    wall_limit: None,
+                    exclusive: true,
+                },
+                command: JobCommand::wrapper("x"),
+                state: JobState::Pending,
+                submitted_at: Micros::ZERO,
+                started_at: None,
+                finished_at: None,
+                nodes: vec![],
+            },
+        )
+    }
+
+    fn jobs(list: Vec<(LsfJobId, LsfJob)>) -> BTreeMap<LsfJobId, LsfJob> {
+        list.into_iter().collect()
+    }
+
+    #[test]
+    fn fifo_takes_head() {
+        let js = jobs(vec![job(1, "a", 2), job(2, "b", 2)]);
+        let picked = pick_next(
+            &queue(QueuePolicy::Fifo, 1.0),
+            &[LsfJobId(1), LsfJobId(2)],
+            &js,
+            &BTreeMap::new(),
+            0,
+            8,
+        );
+        assert_eq!(picked, Some(LsfJobId(1)));
+    }
+
+    #[test]
+    fn fairshare_prefers_starved_user() {
+        let js = jobs(vec![job(1, "greedy", 2), job(2, "starved", 2)]);
+        let mut held = BTreeMap::new();
+        held.insert("greedy".to_string(), 6u32);
+        let picked = pick_next(
+            &queue(QueuePolicy::Fairshare, 1.0),
+            &[LsfJobId(1), LsfJobId(2)],
+            &js,
+            &held,
+            6,
+            8,
+        );
+        assert_eq!(picked, Some(LsfJobId(2)));
+    }
+
+    #[test]
+    fn fairshare_ties_break_by_submit_order() {
+        let js = jobs(vec![job(1, "a", 2), job(2, "b", 2)]);
+        let picked = pick_next(
+            &queue(QueuePolicy::Fairshare, 1.0),
+            &[LsfJobId(1), LsfJobId(2)],
+            &js,
+            &BTreeMap::new(),
+            0,
+            8,
+        );
+        assert_eq!(picked, Some(LsfJobId(1)));
+    }
+
+    #[test]
+    fn capacity_blocks_over_cap() {
+        let js = jobs(vec![job(1, "a", 4), job(2, "a", 1)]);
+        // Cap = 0.5 × 8 = 4 nodes; 2 already used → job of 4 blocked, job
+        // of 1 admitted.
+        let picked = pick_next(
+            &queue(QueuePolicy::Capacity, 0.5),
+            &[LsfJobId(1), LsfJobId(2)],
+            &js,
+            &BTreeMap::new(),
+            2,
+            8,
+        );
+        assert_eq!(picked, Some(LsfJobId(2)));
+        // Fully at cap → nothing.
+        let none = pick_next(
+            &queue(QueuePolicy::Capacity, 0.5),
+            &[LsfJobId(1), LsfJobId(2)],
+            &js,
+            &BTreeMap::new(),
+            4,
+            8,
+        );
+        assert_eq!(none, None);
+    }
+
+    #[test]
+    fn empty_pending_none() {
+        let js = jobs(vec![]);
+        assert_eq!(
+            pick_next(&queue(QueuePolicy::Fifo, 1.0), &[], &js, &BTreeMap::new(), 0, 8),
+            None
+        );
+    }
+}

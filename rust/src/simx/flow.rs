@@ -1,0 +1,323 @@
+//! Exact progressive-filling solver for shared-bandwidth pipes.
+//!
+//! Model: a pipe of capacity `C` bytes/s is shared by flows; at any instant
+//! each active flow gets `min(rate_cap, C / n_active)` (max–min fair with an
+//! optional per-flow cap, e.g. a client NIC). Given all flows' start times
+//! and sizes up front, [`FlowSolver::solve`] computes exact completion
+//! times by sweeping piecewise-constant rate intervals.
+//!
+//! This is the data-plane primitive of the Sim engine: a Teragen wave of
+//! 1,664 writers into 24 OSTs is one solve; the answer feeds scheduled
+//! events back into `Sim`.
+
+use crate::util::time::Micros;
+
+/// One flow: starts at `start`, must move `bytes`.
+#[derive(Debug, Clone, Copy)]
+pub struct Flow {
+    pub start: Micros,
+    pub bytes: f64,
+    /// Per-flow rate cap, bytes/s (`f64::INFINITY` for none): models the
+    /// client-side NIC or DAS spindle limit.
+    pub rate_cap: f64,
+}
+
+impl Flow {
+    pub fn new(start: Micros, bytes: f64) -> Flow {
+        Flow {
+            start,
+            bytes,
+            rate_cap: f64::INFINITY,
+        }
+    }
+
+    pub fn capped(start: Micros, bytes: f64, rate_cap: f64) -> Flow {
+        Flow {
+            start,
+            bytes,
+            rate_cap,
+        }
+    }
+}
+
+/// Result for one flow.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlowDone {
+    pub finish: Micros,
+}
+
+/// Shared-pipe solver.
+#[derive(Debug, Clone)]
+pub struct FlowSolver {
+    /// Pipe capacity in bytes/s.
+    pub capacity: f64,
+}
+
+impl FlowSolver {
+    pub fn new(capacity: f64) -> Self {
+        assert!(capacity > 0.0);
+        FlowSolver { capacity }
+    }
+
+    /// Compute completion times for all flows. O((n log n) + n·k) where k is
+    /// the number of rate-change points (≤ 2n).
+    pub fn solve(&self, flows: &[Flow]) -> Vec<FlowDone> {
+        let n = flows.len();
+        let mut remaining: Vec<f64> = flows.iter().map(|f| f.bytes.max(0.0)).collect();
+        let mut finish: Vec<Option<Micros>> = vec![None; n];
+
+        // Sweep: maintain the active set between "breakpoints" (a start or a
+        // completion). Rates are constant inside an interval.
+        let mut starts: Vec<usize> = (0..n).collect();
+        starts.sort_by_key(|&i| flows[i].start);
+        let mut next_start = 0usize;
+        let mut active: Vec<usize> = Vec::new();
+        let mut t = if n > 0 {
+            flows[starts[0]].start.as_secs_f64()
+        } else {
+            0.0
+        };
+
+        // Zero-byte flows complete instantly at their start time.
+        for i in 0..n {
+            if remaining[i] <= 0.0 {
+                finish[i] = Some(flows[i].start);
+            }
+        }
+
+        loop {
+            // Admit flows that have started by time t.
+            while next_start < n {
+                let idx = starts[next_start];
+                let st = flows[idx].start.as_secs_f64();
+                if st <= t + 1e-12 {
+                    if finish[idx].is_none() {
+                        active.push(idx);
+                    }
+                    next_start += 1;
+                } else {
+                    break;
+                }
+            }
+            if active.is_empty() {
+                if next_start >= n {
+                    break; // all done
+                }
+                // Jump to the next start.
+                t = flows[starts[next_start]].start.as_secs_f64();
+                continue;
+            }
+
+            // Current per-flow rates (max–min fair with caps): waterfill.
+            let rates = waterfill(self.capacity, &active, flows);
+
+            // Time until the earliest event: a completion or a new arrival.
+            let mut dt = f64::INFINITY;
+            for (k, &i) in active.iter().enumerate() {
+                let r = rates[k];
+                if r > 0.0 {
+                    dt = dt.min(remaining[i] / r);
+                }
+            }
+            if next_start < n {
+                let st = flows[starts[next_start]].start.as_secs_f64();
+                dt = dt.min(st - t);
+            }
+            assert!(dt.is_finite() && dt >= 0.0, "stuck flow solve (dt={dt})");
+
+            // Advance.
+            for (k, &i) in active.iter().enumerate() {
+                remaining[i] -= rates[k] * dt;
+            }
+            t += dt;
+
+            // Retire completed flows.
+            let mut still = Vec::with_capacity(active.len());
+            for &i in &active {
+                if remaining[i] <= 1e-6 {
+                    finish[i] = Some(Micros::from_secs_f64(t));
+                } else {
+                    still.push(i);
+                }
+            }
+            active = still;
+        }
+
+        finish
+            .into_iter()
+            .map(|f| FlowDone {
+                finish: f.expect("flow never finished"),
+            })
+            .collect()
+    }
+
+    /// Convenience: K identical flows all starting at t0; returns the
+    /// common makespan (they finish together under fair sharing).
+    pub fn wave(&self, k: usize, bytes_each: f64, per_flow_cap: f64) -> f64 {
+        if k == 0 || bytes_each <= 0.0 {
+            return 0.0;
+        }
+        let rate = (self.capacity / k as f64).min(per_flow_cap);
+        bytes_each / rate
+    }
+}
+
+/// Max–min fair waterfilling with per-flow caps. Returns rates aligned with
+/// `active`.
+fn waterfill(capacity: f64, active: &[usize], flows: &[Flow]) -> Vec<f64> {
+    let n = active.len();
+    let mut rates = vec![0.0f64; n];
+    let mut fixed = vec![false; n];
+    let mut cap_left = capacity;
+    let mut free = n;
+    // Iteratively fix flows whose cap is below the fair share.
+    loop {
+        if free == 0 {
+            break;
+        }
+        let share = cap_left / free as f64;
+        let mut changed = false;
+        for (k, &i) in active.iter().enumerate() {
+            if !fixed[k] && flows[i].rate_cap < share {
+                rates[k] = flows[i].rate_cap;
+                cap_left -= flows[i].rate_cap;
+                fixed[k] = true;
+                free -= 1;
+                changed = true;
+            }
+        }
+        if !changed {
+            for (k, _) in active.iter().enumerate() {
+                if !fixed[k] {
+                    rates[k] = share;
+                }
+            }
+            break;
+        }
+    }
+    rates
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::props;
+
+    #[test]
+    fn single_flow_full_capacity() {
+        let s = FlowSolver::new(100.0);
+        let done = s.solve(&[Flow::new(Micros::ZERO, 1000.0)]);
+        assert_eq!(done[0].finish, Micros::secs(10));
+    }
+
+    #[test]
+    fn two_equal_flows_share_fairly() {
+        let s = FlowSolver::new(100.0);
+        let done = s.solve(&[
+            Flow::new(Micros::ZERO, 500.0),
+            Flow::new(Micros::ZERO, 500.0),
+        ]);
+        // Each gets 50 B/s → 10 s.
+        assert_eq!(done[0].finish, Micros::secs(10));
+        assert_eq!(done[1].finish, Micros::secs(10));
+    }
+
+    #[test]
+    fn short_flow_finishes_then_long_speeds_up() {
+        let s = FlowSolver::new(100.0);
+        let done = s.solve(&[
+            Flow::new(Micros::ZERO, 100.0), // finishes at 2 s (50 B/s)
+            Flow::new(Micros::ZERO, 600.0), // 100 @50 in 2 s, then 500 @100 in 5 s
+        ]);
+        assert_eq!(done[0].finish, Micros::secs(2));
+        assert_eq!(done[1].finish, Micros::secs(7));
+    }
+
+    #[test]
+    fn late_arrival_slows_first() {
+        let s = FlowSolver::new(100.0);
+        let done = s.solve(&[
+            Flow::new(Micros::ZERO, 1000.0),
+            Flow::new(Micros::secs(5), 250.0),
+        ]);
+        // Flow 0: 500 by t=5, then shares: both at 50 B/s. Flow 1 finishes at
+        // t=10 (250/50). Flow 0 has 250 left at t=10, alone again: +2.5 s.
+        assert_eq!(done[1].finish, Micros::secs(10));
+        assert_eq!(done[0].finish, Micros::from_secs_f64(12.5));
+    }
+
+    #[test]
+    fn rate_caps_respected() {
+        let s = FlowSolver::new(1000.0);
+        let done = s.solve(&[
+            Flow::capped(Micros::ZERO, 100.0, 10.0),
+            Flow::new(Micros::ZERO, 990.0 * 5.0),
+        ]);
+        // Capped flow: 10 B/s → 10 s. Other gets 990 B/s → 5 s, then capped
+        // flow still 10 B/s (its own cap binds).
+        assert_eq!(done[1].finish, Micros::secs(5));
+        assert_eq!(done[0].finish, Micros::secs(10));
+    }
+
+    #[test]
+    fn zero_byte_flow_instant() {
+        let s = FlowSolver::new(10.0);
+        let done = s.solve(&[Flow::new(Micros::secs(3), 0.0)]);
+        assert_eq!(done[0].finish, Micros::secs(3));
+    }
+
+    #[test]
+    fn wave_closed_form_matches_solver() {
+        let s = FlowSolver::new(1_000.0);
+        let k = 7;
+        let bytes = 350.0;
+        let wave_s = s.wave(k, bytes, f64::INFINITY);
+        let flows: Vec<Flow> = (0..k).map(|_| Flow::new(Micros::ZERO, bytes)).collect();
+        let done = s.solve(&flows);
+        for d in done {
+            assert!((d.finish.as_secs_f64() - wave_s).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn conservation_property() {
+        // Work conservation: with no caps and all flows at t=0, makespan
+        // equals total bytes / capacity.
+        props(40, |g| {
+            let cap = 10.0 + g.unit_f64() * 1000.0;
+            let flows: Vec<Flow> = (0..g.usize(1..12))
+                .map(|_| Flow::new(Micros::ZERO, 1.0 + g.unit_f64() * 10_000.0))
+                .collect();
+            let total: f64 = flows.iter().map(|f| f.bytes).sum();
+            let solver = FlowSolver::new(cap);
+            let done = solver.solve(&flows);
+            let makespan = done
+                .iter()
+                .map(|d| d.finish.as_secs_f64())
+                .fold(0.0, f64::max);
+            let expect = total / cap;
+            assert!(
+                (makespan - expect).abs() / expect < 1e-3,
+                "makespan={makespan} expect={expect}"
+            );
+        });
+    }
+
+    #[test]
+    fn completion_order_matches_size_order_for_equal_starts() {
+        props(30, |g| {
+            let solver = FlowSolver::new(100.0);
+            let flows: Vec<Flow> = (0..g.usize(2..10))
+                .map(|_| Flow::new(Micros::ZERO, 10.0 + g.unit_f64() * 1000.0))
+                .collect();
+            let done = solver.solve(&flows);
+            for i in 0..flows.len() {
+                for j in 0..flows.len() {
+                    if flows[i].bytes < flows[j].bytes {
+                        assert!(done[i].finish <= done[j].finish);
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,219 @@
+//! Discrete-event simulation core.
+//!
+//! Two cooperating pieces:
+//!
+//! * [`Sim`] — a classic event-heap engine, generic over a world type `W`.
+//!   The *control plane* (LSF dispatch cycles, daemon startups, YARN
+//!   heartbeats, MR wave scheduling) runs as events here.
+//! * [`flow::FlowSolver`] — an exact progressive-filling fluid solver for
+//!   shared bandwidth (Lustre OST aggregate, IB links, DAS spindles). The
+//!   *data plane* asks it "these K transfers share this pipe; when does each
+//!   finish?" and schedules the answers back into [`Sim`].
+//! * [`queueing`] — closed-form queueing approximations (M/D/1) used for
+//!   metadata-server contention, where per-op event simulation would be
+//!   pointlessly expensive at 10^5 ops.
+
+pub mod flow;
+pub mod queueing;
+
+use crate::util::time::Micros;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+type EventFn<W> = Box<dyn FnOnce(&mut W, &mut Sim<W>)>;
+
+struct Entry<W> {
+    at: Micros,
+    seq: u64,
+    run: EventFn<W>,
+}
+
+impl<W> PartialEq for Entry<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<W> Eq for Entry<W> {}
+impl<W> PartialOrd for Entry<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Entry<W> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// Event-heap simulator. Events are `FnOnce(&mut W, &mut Sim<W>)`; ties are
+/// broken by scheduling order (FIFO), which keeps runs deterministic.
+pub struct Sim<W> {
+    now: Micros,
+    seq: u64,
+    heap: BinaryHeap<Reverse<Entry<W>>>,
+    executed: u64,
+    /// Hard stop to catch runaway event loops in tests.
+    pub max_events: u64,
+}
+
+impl<W> Sim<W> {
+    pub fn new() -> Self {
+        Sim {
+            now: Micros::ZERO,
+            seq: 0,
+            heap: BinaryHeap::new(),
+            executed: 0,
+            max_events: 50_000_000,
+        }
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> Micros {
+        self.now
+    }
+
+    /// Number of executed events so far.
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Schedule at an absolute time (must not be in the past).
+    pub fn at(&mut self, at: Micros, f: impl FnOnce(&mut W, &mut Sim<W>) + 'static) {
+        assert!(at >= self.now, "scheduling into the past: {at:?} < {:?}", self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Entry {
+            at,
+            seq,
+            run: Box::new(f),
+        }));
+    }
+
+    /// Schedule after a delay.
+    pub fn after(&mut self, dt: Micros, f: impl FnOnce(&mut W, &mut Sim<W>) + 'static) {
+        let at = self.now + dt;
+        self.at(at, f);
+    }
+
+    /// Run until the heap is empty. Returns the final time.
+    pub fn run(&mut self, world: &mut W) -> Micros {
+        while let Some(Reverse(entry)) = self.heap.pop() {
+            debug_assert!(entry.at >= self.now);
+            self.now = entry.at;
+            self.executed += 1;
+            assert!(
+                self.executed <= self.max_events,
+                "event budget exceeded ({} events) — runaway loop?",
+                self.max_events
+            );
+            (entry.run)(world, self);
+        }
+        self.now
+    }
+
+    /// Run until `deadline` (events beyond it stay queued). Returns whether
+    /// the queue was drained.
+    pub fn run_until(&mut self, world: &mut W, deadline: Micros) -> bool {
+        while let Some(Reverse(peek)) = self.heap.peek() {
+            if peek.at > deadline {
+                self.now = deadline;
+                return false;
+            }
+            let Reverse(entry) = self.heap.pop().unwrap();
+            self.now = entry.at;
+            self.executed += 1;
+            assert!(self.executed <= self.max_events, "event budget exceeded");
+            (entry.run)(world, self);
+        }
+        self.now = self.now.max(deadline);
+        true
+    }
+
+    /// Pending event count.
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl<W> Default for Sim<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct World {
+        log: Vec<(u64, &'static str)>,
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(Micros::secs(3), |w, s| w.log.push((s.now().0, "c")));
+        sim.at(Micros::secs(1), |w, s| w.log.push((s.now().0, "a")));
+        sim.at(Micros::secs(2), |w, s| w.log.push((s.now().0, "b")));
+        let end = sim.run(&mut w);
+        assert_eq!(end, Micros::secs(3));
+        let labels: Vec<_> = w.log.iter().map(|(_, l)| *l).collect();
+        assert_eq!(labels, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_fifo() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        for (i, label) in ["x", "y", "z"].iter().enumerate() {
+            let label: &'static str = label;
+            let _ = i;
+            sim.at(Micros::secs(1), move |w, s| w.log.push((s.now().0, label)));
+        }
+        sim.run(&mut w);
+        let labels: Vec<_> = w.log.iter().map(|(_, l)| *l).collect();
+        assert_eq!(labels, vec!["x", "y", "z"]);
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(Micros::secs(1), |_, s| {
+            s.after(Micros::secs(1), |w, s| {
+                w.log.push((s.now().0, "chained"));
+            });
+        });
+        let end = sim.run(&mut w);
+        assert_eq!(end, Micros::secs(2));
+        assert_eq!(w.log.len(), 1);
+    }
+
+    #[test]
+    fn run_until_stops_at_deadline() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(Micros::secs(1), |w, s| w.log.push((s.now().0, "early")));
+        sim.at(Micros::secs(10), |w, s| w.log.push((s.now().0, "late")));
+        let drained = sim.run_until(&mut w, Micros::secs(5));
+        assert!(!drained);
+        assert_eq!(w.log.len(), 1);
+        assert_eq!(sim.now(), Micros::secs(5));
+        assert_eq!(sim.pending(), 1);
+        sim.run(&mut w);
+        assert_eq!(w.log.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn past_scheduling_panics() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(Micros::secs(5), |_, s| {
+            s.at(Micros::secs(1), |_, _| {});
+        });
+        sim.run(&mut w);
+    }
+}

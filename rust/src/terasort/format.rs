@@ -1,0 +1,117 @@
+//! The Terasort record format (O'Malley, "TeraByte Sort on Apache Hadoop"
+//! [9]): 100-byte records, 10-byte key.
+//!
+//! Teragen's official generator derives each record deterministically from
+//! its row id, so any subset of rows can be generated independently by any
+//! map task — we keep that property (key bytes come from a SplitMix64
+//! stream seeded by `seed ^ row`), which is what makes re-run map attempts
+//! byte-identical and Teravalidate's checksum comparison meaningful.
+
+use crate::util::bytes::Crc32;
+use crate::util::rng::splitmix64;
+
+/// Total record length.
+pub const RECORD_LEN: usize = 100;
+/// Key prefix length.
+pub const KEY_LEN: usize = 10;
+/// Value length.
+pub const VALUE_LEN: usize = RECORD_LEN - KEY_LEN;
+
+/// Generate the 10-byte key of row `row` under `seed`.
+pub fn key_for_row(seed: u64, row: u64) -> [u8; KEY_LEN] {
+    let mut state = seed ^ row.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    let a = splitmix64(&mut state);
+    let b = splitmix64(&mut state);
+    let mut key = [0u8; KEY_LEN];
+    key[..8].copy_from_slice(&a.to_be_bytes());
+    key[8..].copy_from_slice(&b.to_be_bytes()[..2]);
+    key
+}
+
+/// Generate the 90-byte value of row `row`: the row id in ASCII (matching
+/// teragen's human-inspectable layout) plus a deterministic filler.
+pub fn value_for_row(row: u64) -> [u8; VALUE_LEN] {
+    let mut v = [b'.'; VALUE_LEN];
+    let id = format!("{row:020}");
+    v[..20].copy_from_slice(id.as_bytes());
+    // Filler pattern: repeating A-Z block keyed by the row (teragen uses a
+    // similar alphabetic filler).
+    let c = b'A' + (row % 26) as u8;
+    for x in v[20..].iter_mut() {
+        *x = c;
+    }
+    v
+}
+
+/// Full record for a row.
+pub fn record_for_row(seed: u64, row: u64) -> [u8; RECORD_LEN] {
+    let mut rec = [0u8; RECORD_LEN];
+    rec[..KEY_LEN].copy_from_slice(&key_for_row(seed, row));
+    rec[KEY_LEN..].copy_from_slice(&value_for_row(row));
+    rec
+}
+
+/// First 8 bytes of a key as a big-endian u64 — the prefix the range
+/// partitioner (and the Pallas kernel) operates on.
+pub fn key_prefix_u64(key: &[u8]) -> u64 {
+    debug_assert!(key.len() >= 8);
+    u64::from_be_bytes(key[..8].try_into().unwrap())
+}
+
+/// Checksum of one record, accumulated Teravalidate-style: CRC32 widened
+/// to u64 and wrapping-summed over all records (order independent).
+pub fn record_checksum(record: &[u8]) -> u64 {
+    Crc32::of(record) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_are_deterministic_in_row() {
+        assert_eq!(record_for_row(42, 7), record_for_row(42, 7));
+        assert_ne!(record_for_row(42, 7), record_for_row(42, 8));
+        assert_ne!(record_for_row(42, 7), record_for_row(43, 7));
+    }
+
+    #[test]
+    fn sizes_are_official() {
+        let r = record_for_row(1, 1);
+        assert_eq!(r.len(), 100);
+        assert_eq!(key_for_row(1, 1).len(), 10);
+        assert_eq!(value_for_row(1).len(), 90);
+    }
+
+    #[test]
+    fn value_carries_row_id() {
+        let v = value_for_row(12345);
+        assert_eq!(&v[..20], b"00000000000000012345");
+    }
+
+    #[test]
+    fn key_prefix_preserves_order() {
+        // Byte-order comparison of keys == numeric comparison of prefixes
+        // whenever prefixes differ (big-endian).
+        let a = key_for_row(9, 100);
+        let b = key_for_row(9, 200);
+        let cmp_bytes = a.cmp(&b);
+        let cmp_prefix = key_prefix_u64(&a).cmp(&key_prefix_u64(&b));
+        if key_prefix_u64(&a) != key_prefix_u64(&b) {
+            assert_eq!(cmp_bytes, cmp_prefix);
+        }
+    }
+
+    #[test]
+    fn keys_are_spread() {
+        // Rough uniformity: bucket the top byte of 10k keys.
+        let mut buckets = [0u32; 16];
+        for row in 0..10_000u64 {
+            let k = key_for_row(5, row);
+            buckets[(k[0] >> 4) as usize] += 1;
+        }
+        for (i, &b) in buckets.iter().enumerate() {
+            assert!((400..900).contains(&b), "bucket {i} = {b}");
+        }
+    }
+}

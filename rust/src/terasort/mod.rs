@@ -1,0 +1,268 @@
+//! Terasort: the paper's benchmark (§VI–VII). "Terasort provides the
+//! opportunity to analyze the behavior of the cluster when subjected to
+//! sorting one Terabyte of data... divided into three stages, (i) Teragen,
+//! (ii) Terasort and (iii) Teravalidate."
+//!
+//! Real mode runs all three stages through the live MR engine on a live
+//! wrapper-built cluster; Sim mode regenerates Figs 4 and 5 through the
+//! same phase structure at 1 TB scale.
+
+pub mod format;
+pub mod partition;
+pub mod validate;
+
+pub use format::{key_for_row, key_prefix_u64, record_for_row, KEY_LEN, RECORD_LEN, VALUE_LEN};
+pub use partition::{sample_input, RangePartitioner};
+pub use validate::{summarize_dir, teravalidate, DirSummary};
+
+use crate::error::Result;
+use crate::mapreduce::{InputFormat, JobSpec, Mapper, MrEngine, MrOutcome, OutputFormat};
+use crate::util::time::Micros;
+use std::sync::Arc;
+
+/// Teragen parameters.
+#[derive(Debug, Clone)]
+pub struct TeragenSpec {
+    pub rows: u64,
+    pub maps: u64,
+    pub output_dir: String,
+    /// Deterministic data seed (keys derive from `seed ^ row`).
+    pub seed: u64,
+}
+
+/// The Teragen mapper: synthesizes the official record for each row id.
+pub struct TeragenMapper {
+    pub seed: u64,
+}
+
+impl Mapper for TeragenMapper {
+    fn map(&self, key: &[u8], _value: &[u8], emit: &mut dyn FnMut(Vec<u8>, Vec<u8>)) {
+        let row = u64::from_be_bytes(key.try_into().expect("row id key"));
+        let rec = record_for_row(self.seed, row);
+        emit(rec[..KEY_LEN].to_vec(), rec[KEY_LEN..].to_vec());
+    }
+}
+
+/// Run Teragen (map-only job) on a live engine.
+pub fn run_teragen(engine: &mut MrEngine<'_>, spec: &TeragenSpec, now: Micros) -> Result<MrOutcome> {
+    let mut job = JobSpec::identity("teragen", "", &spec.output_dir, 0);
+    job.input_format = InputFormat::RowRange;
+    job.output_format = OutputFormat::TeraRecords;
+    job.synthetic_rows = Some((spec.rows, spec.maps));
+    job.mapper = Arc::new(TeragenMapper { seed: spec.seed });
+    engine.run(Arc::new(job), "hpcw", now)
+}
+
+/// Terasort parameters.
+#[derive(Debug, Clone)]
+pub struct TerasortJob {
+    pub input_dir: String,
+    pub output_dir: String,
+    pub reduces: u32,
+    /// Samples per input part for the range partitioner.
+    pub samples_per_file: u64,
+    pub split_bytes: u64,
+}
+
+impl TerasortJob {
+    pub fn new(input_dir: &str, output_dir: &str, reduces: u32) -> TerasortJob {
+        TerasortJob {
+            input_dir: input_dir.to_string(),
+            output_dir: output_dir.to_string(),
+            reduces,
+            samples_per_file: 1000,
+            split_bytes: 64 * 1024 * 1024,
+        }
+    }
+}
+
+/// Run Terasort with a partitioner built by sampling the input.
+/// `partitioner` may be injected (e.g. the PJRT kernel path); when `None`
+/// the pure-Rust [`RangePartitioner`] is sampled here.
+pub fn run_terasort(
+    engine: &mut MrEngine<'_>,
+    ts: &TerasortJob,
+    partitioner: Option<Arc<dyn crate::mapreduce::Partitioner>>,
+    now: Micros,
+) -> Result<MrOutcome> {
+    let partitioner = match partitioner {
+        Some(p) => p,
+        None => {
+            let samples = sample_input(&*engine.dfs, &ts.input_dir, ts.samples_per_file)?;
+            Arc::new(RangePartitioner::from_samples(samples, ts.reduces)?)
+                as Arc<dyn crate::mapreduce::Partitioner>
+        }
+    };
+    let mut job = JobSpec::identity("terasort", &ts.input_dir, &ts.output_dir, ts.reduces);
+    job.input_format = InputFormat::TeraRecords;
+    job.output_format = OutputFormat::TeraRecords;
+    job.split_bytes = ts.split_bytes;
+    job.partitioner = partitioner;
+    engine.run(Arc::new(job), "hpcw", now)
+}
+
+/// Run Terasort through a whole-block map path (the PJRT Pallas kernel or
+/// the pure-Rust block processor) — the paper's hot path, accelerated.
+pub fn run_terasort_with_processor(
+    engine: &mut MrEngine<'_>,
+    ts: &TerasortJob,
+    processor: Arc<dyn crate::mapreduce::BlockProcessor>,
+    now: Micros,
+) -> Result<MrOutcome> {
+    let mut job = JobSpec::identity("terasort", &ts.input_dir, &ts.output_dir, ts.reduces);
+    job.input_format = InputFormat::TeraRecords;
+    job.output_format = OutputFormat::TeraRecords;
+    job.split_bytes = ts.split_bytes;
+    job.block_processor = Some(processor);
+    engine.run(Arc::new(job), "hpcw", now)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeId;
+    use crate::config::StackConfig;
+    use crate::lustre::{Dfs as _, LustreFs};
+    use crate::metrics::Metrics;
+    use crate::util::ids::IdGen;
+    use crate::util::pool::Pool;
+    use crate::wrapper::DynamicCluster;
+
+    fn stack() -> (StackConfig, Arc<LustreFs>, DynamicCluster, Pool) {
+        let cfg = StackConfig::tiny();
+        let fs = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
+        let nodes: Vec<NodeId> = (0..6).map(NodeId).collect();
+        let dc = DynamicCluster::build(
+            &cfg,
+            &nodes,
+            &*fs,
+            Arc::new(IdGen::default()),
+            Arc::new(Metrics::new()),
+            "ts-test",
+            Micros::ZERO,
+        )
+        .unwrap();
+        (cfg, fs, dc, Pool::new(4))
+    }
+
+    /// The miniature end-to-end: teragen → terasort → teravalidate.
+    #[test]
+    fn terasort_pipeline_validates() {
+        let (cfg, fs, mut dc, pool) = stack();
+        let gen = TeragenSpec {
+            rows: 5_000,
+            maps: 4,
+            output_dir: "/lustre/scratch/tera-in".into(),
+            seed: 42,
+        };
+        {
+            let mut engine = MrEngine::new(
+                &mut dc,
+                fs.clone(),
+                &pool,
+                cfg.yarn.map_memory_mb,
+                cfg.yarn.reduce_memory_mb,
+            );
+            let out = run_teragen(&mut engine, &gen, Micros::ZERO).unwrap();
+            assert_eq!(out.maps, 4);
+            assert_eq!(out.reduces, 0);
+        }
+        let input = summarize_dir(&*fs, "/lustre/scratch/tera-in").unwrap();
+        assert_eq!(input.records, 5_000);
+
+        {
+            let mut engine = MrEngine::new(
+                &mut dc,
+                fs.clone(),
+                &pool,
+                cfg.yarn.map_memory_mb,
+                cfg.yarn.reduce_memory_mb,
+            );
+            let ts = TerasortJob {
+                split_bytes: 50_000, // force multiple maps
+                ..TerasortJob::new("/lustre/scratch/tera-in", "/lustre/scratch/tera-out", 5)
+            };
+            let out = run_terasort(&mut engine, &ts, None, Micros::secs(60)).unwrap();
+            assert!(out.maps > 1);
+            assert_eq!(out.reduces, 5);
+        }
+
+        let validated = teravalidate(&*fs, "/lustre/scratch/tera-out", input).unwrap();
+        assert_eq!(validated.records, 5_000);
+        // Both stages recorded in history.
+        assert_eq!(dc.jhs.count(), 2);
+    }
+
+    #[test]
+    fn teragen_bytes_match_rows() {
+        let (cfg, fs, mut dc, pool) = stack();
+        let gen = TeragenSpec {
+            rows: 1_234,
+            maps: 3,
+            output_dir: "/lustre/scratch/tg".into(),
+            seed: 7,
+        };
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        );
+        run_teragen(&mut engine, &gen, Micros::ZERO).unwrap();
+        let total: u64 = fs
+            .list("/lustre/scratch/tg")
+            .iter()
+            .filter(|p| p.contains("/part-"))
+            .map(|p| fs.size(p).unwrap())
+            .sum();
+        assert_eq!(total, 1_234 * RECORD_LEN as u64);
+    }
+
+    #[test]
+    fn terasort_with_failure_injection_still_validates() {
+        use crate::mapreduce::{FailurePlan, TaskId};
+        let (cfg, fs, mut dc, pool) = stack();
+        let gen = TeragenSpec {
+            rows: 2_000,
+            maps: 2,
+            output_dir: "/lustre/scratch/tf-in".into(),
+            seed: 3,
+        };
+        {
+            let mut engine = MrEngine::new(
+                &mut dc,
+                fs.clone(),
+                &pool,
+                cfg.yarn.map_memory_mb,
+                cfg.yarn.reduce_memory_mb,
+            );
+            run_teragen(&mut engine, &gen, Micros::ZERO).unwrap();
+        }
+        let input = summarize_dir(&*fs, "/lustre/scratch/tf-in").unwrap();
+        {
+            let samples = sample_input(&*fs, "/lustre/scratch/tf-in", 500).unwrap();
+            let part = RangePartitioner::from_samples(samples, 3).unwrap();
+            let mut job = JobSpec::identity(
+                "terasort",
+                "/lustre/scratch/tf-in",
+                "/lustre/scratch/tf-out",
+                3,
+            );
+            job.split_bytes = 60_000;
+            job.partitioner = Arc::new(part);
+            job.failures = FailurePlan::none()
+                .fail_attempt(TaskId::map(1), 0)
+                .fail_attempt(TaskId::reduce(0), 0);
+            let mut engine = MrEngine::new(
+                &mut dc,
+                fs.clone(),
+                &pool,
+                cfg.yarn.map_memory_mb,
+                cfg.yarn.reduce_memory_mb,
+            );
+            engine.run(Arc::new(job), "hpcw", Micros::ZERO).unwrap();
+        }
+        teravalidate(&*fs, "/lustre/scratch/tf-out", input).unwrap();
+    }
+}

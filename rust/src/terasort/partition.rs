@@ -1,0 +1,153 @@
+//! Total-order range partitioning for Terasort.
+//!
+//! Hadoop's TeraSort samples the input, computes `R-1` splitter keys, and
+//! routes each record to the partition whose range contains its key — that
+//! is what makes concatenated reduce outputs globally sorted. We partition
+//! on the 8-byte big-endian key prefix (ties below the prefix resolution
+//! land in the same partition, preserving correctness).
+//!
+//! Two interchangeable implementations of the routing hot-spot exist:
+//! this pure-Rust binary search, and the AOT-compiled Pallas kernel loaded
+//! through [`crate::runtime`] (see `python/compile/kernels/partition.py`).
+//! They are parity-tested against each other.
+
+use crate::error::{Error, Result};
+use crate::lustre::Dfs;
+use crate::mapreduce::Partitioner;
+use crate::terasort::format::{key_prefix_u64, KEY_LEN, RECORD_LEN};
+
+/// Range partitioner over u64 key prefixes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RangePartitioner {
+    /// `n_partitions - 1` sorted boundaries; partition i takes keys in
+    /// `[splitters[i-1], splitters[i])`.
+    pub splitters: Vec<u64>,
+}
+
+impl RangePartitioner {
+    /// Build from sampled key prefixes: sort and take R-1 quantiles.
+    pub fn from_samples(mut samples: Vec<u64>, n_partitions: u32) -> Result<RangePartitioner> {
+        if n_partitions == 0 {
+            return Err(Error::MapReduce("0 partitions".into()));
+        }
+        if samples.is_empty() && n_partitions > 1 {
+            return Err(Error::MapReduce("no samples for the partitioner".into()));
+        }
+        samples.sort_unstable();
+        let r = n_partitions as usize;
+        let mut splitters = Vec::with_capacity(r - 1);
+        for i in 1..r {
+            let idx = i * samples.len() / r;
+            splitters.push(samples[idx.min(samples.len() - 1)]);
+        }
+        splitters.dedup();
+        Ok(RangePartitioner { splitters })
+    }
+
+    /// Number of partitions this router produces.
+    pub fn n_partitions(&self) -> u32 {
+        self.splitters.len() as u32 + 1
+    }
+
+    /// Route one prefix: index of the first splitter greater than the key
+    /// (upper-bound binary search).
+    #[inline]
+    pub fn route(&self, prefix: u64) -> u32 {
+        self.splitters.partition_point(|&s| s <= prefix) as u32
+    }
+}
+
+impl Partitioner for RangePartitioner {
+    fn partition(&self, key: &[u8], n_reduces: u32) -> u32 {
+        self.route(key_prefix_u64(key)).min(n_reduces.saturating_sub(1))
+    }
+}
+
+/// Sample key prefixes from a Terasort input directory: reads up to
+/// `per_file` records from the head of each input part (Hadoop's sampler
+/// reads from a handful of splits; input keys are uniform so head-sampling
+/// is unbiased here by construction).
+pub fn sample_input(dfs: &dyn Dfs, input_dir: &str, per_file: u64) -> Result<Vec<u64>> {
+    let mut samples = Vec::new();
+    let mut files: Vec<String> = dfs
+        .list(input_dir)
+        .into_iter()
+        .filter(|p| p.contains("/part-"))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err(Error::MapReduce(format!("no parts under {input_dir}")));
+    }
+    for f in &files {
+        let take = per_file * RECORD_LEN as u64;
+        let buf = dfs.read_range(f, 0, take)?;
+        for rec in buf.chunks_exact(RECORD_LEN) {
+            samples.push(key_prefix_u64(&rec[..KEY_LEN]));
+        }
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::props;
+
+    #[test]
+    fn route_respects_ranges() {
+        let p = RangePartitioner {
+            splitters: vec![100, 200, 300],
+        };
+        assert_eq!(p.n_partitions(), 4);
+        assert_eq!(p.route(0), 0);
+        assert_eq!(p.route(99), 0);
+        assert_eq!(p.route(100), 1); // boundary goes right
+        assert_eq!(p.route(250), 2);
+        assert_eq!(p.route(300), 3);
+        assert_eq!(p.route(u64::MAX), 3);
+    }
+
+    #[test]
+    fn from_samples_balances() {
+        // Uniform samples → roughly equal-width ranges.
+        let samples: Vec<u64> = (0..10_000).map(|i| i * 1000).collect();
+        let p = RangePartitioner::from_samples(samples, 10).unwrap();
+        assert_eq!(p.n_partitions(), 10);
+        // Route a fresh uniform stream; counts should be near 1/10 each.
+        let mut counts = vec![0u32; 10];
+        for i in 0..10_000u64 {
+            counts[p.route(i * 999 + 7) as usize] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((700..1300).contains(&c), "partition {i}: {c}");
+        }
+    }
+
+    #[test]
+    fn routing_is_monotone_property() {
+        props(40, |g| {
+            let samples: Vec<u64> = (0..g.usize(10..200)).map(|_| g.u64(0..1_000_000)).collect();
+            let parts = g.u32(1..32);
+            let p = RangePartitioner::from_samples(samples, parts).unwrap();
+            let mut a = g.u64(0..1_000_000);
+            let mut b = g.u64(0..1_000_000);
+            if a > b {
+                std::mem::swap(&mut a, &mut b);
+            }
+            assert!(p.route(a) <= p.route(b), "monotone routing");
+            assert!(p.route(b) < p.n_partitions());
+        });
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        // Single partition needs no samples.
+        let p = RangePartitioner::from_samples(vec![], 1).unwrap();
+        assert_eq!(p.route(123), 0);
+        // All-equal samples dedup to fewer partitions but stay valid.
+        let p = RangePartitioner::from_samples(vec![5; 100], 4).unwrap();
+        assert!(p.n_partitions() <= 2);
+        assert!(RangePartitioner::from_samples(vec![], 4).is_err());
+        assert!(RangePartitioner::from_samples(vec![1], 0).is_err());
+    }
+}

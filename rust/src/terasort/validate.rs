@@ -1,0 +1,219 @@
+//! Teravalidate: prove the output of Terasort is a permutation of the
+//! input and globally sorted.
+//!
+//! Checks, per the Hadoop validator:
+//! 1. within every part file, keys are non-decreasing;
+//! 2. across part files (in name order), the first key of part *i+1* is
+//!    `>=` the last key of part *i*;
+//! 3. record count matches;
+//! 4. an order-independent checksum (wrapping sum of per-record CRC32s)
+//!    matches the input's.
+
+use crate::error::{Error, Result};
+use crate::lustre::Dfs;
+use crate::terasort::format::{record_checksum, KEY_LEN, RECORD_LEN};
+
+/// Aggregate of one directory scan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DirSummary {
+    pub records: u64,
+    pub checksum: u64,
+}
+
+/// Scan a Terasort data directory (input or output): count + checksum.
+pub fn summarize_dir(dfs: &dyn Dfs, dir: &str) -> Result<DirSummary> {
+    let mut records = 0u64;
+    let mut checksum = 0u64;
+    for f in part_files(dfs, dir)? {
+        let buf = dfs.read(&f)?;
+        if buf.len() % RECORD_LEN != 0 {
+            return Err(Error::MapReduce(format!("{f}: not record aligned")));
+        }
+        for rec in buf.chunks_exact(RECORD_LEN) {
+            records += 1;
+            checksum = checksum.wrapping_add(record_checksum(rec));
+        }
+    }
+    Ok(DirSummary { records, checksum })
+}
+
+/// Full validation of `output_dir` against the input's summary.
+pub fn teravalidate(dfs: &dyn Dfs, output_dir: &str, input: DirSummary) -> Result<DirSummary> {
+    let files = part_files(dfs, output_dir)?;
+    let mut records = 0u64;
+    let mut checksum = 0u64;
+    let mut prev_last: Option<Vec<u8>> = None;
+    for f in &files {
+        let buf = dfs.read(f)?;
+        if buf.len() % RECORD_LEN != 0 {
+            return Err(Error::MapReduce(format!("{f}: not record aligned")));
+        }
+        let mut prev: Option<&[u8]> = None;
+        for rec in buf.chunks_exact(RECORD_LEN) {
+            let key = &rec[..KEY_LEN];
+            if let Some(p) = prev {
+                if p > key {
+                    return Err(Error::MapReduce(format!("{f}: keys out of order")));
+                }
+            }
+            // Cross-file boundary: first key of this file vs last of prev.
+            if prev.is_none() {
+                if let Some(pl) = &prev_last {
+                    if pl.as_slice() > key {
+                        return Err(Error::MapReduce(format!(
+                            "{f}: first key below previous part's last key"
+                        )));
+                    }
+                }
+            }
+            prev = Some(key);
+            records += 1;
+            checksum = checksum.wrapping_add(record_checksum(rec));
+        }
+        if let Some(p) = prev {
+            prev_last = Some(p.to_vec());
+        }
+    }
+    if records != input.records {
+        return Err(Error::MapReduce(format!(
+            "record count {} != input {}",
+            records, input.records
+        )));
+    }
+    if checksum != input.checksum {
+        return Err(Error::MapReduce(format!(
+            "checksum {checksum:#x} != input {:#x}",
+            input.checksum
+        )));
+    }
+    Ok(DirSummary { records, checksum })
+}
+
+fn part_files(dfs: &dyn Dfs, dir: &str) -> Result<Vec<String>> {
+    let mut files: Vec<String> = dfs
+        .list(dir)
+        .into_iter()
+        .filter(|p| p.contains("/part-"))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err(Error::MapReduce(format!("no parts under {dir}")));
+    }
+    Ok(files)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+    use crate::lustre::LustreFs;
+    use crate::terasort::format::record_for_row;
+
+    fn fs() -> LustreFs {
+        let c = StackConfig::paper();
+        LustreFs::new(&c.lustre, &c.cluster)
+    }
+
+    fn write_parts(fs: &LustreFs, dir: &str, rows_per_part: &[Vec<u64>], sort: bool) -> DirSummary {
+        fs.mkdirs(dir).unwrap();
+        let mut records = 0;
+        let mut checksum = 0u64;
+        for (i, rows) in rows_per_part.iter().enumerate() {
+            let mut recs: Vec<[u8; 100]> = rows.iter().map(|&r| record_for_row(1, r)).collect();
+            if sort {
+                recs.sort();
+            }
+            let mut buf = Vec::new();
+            for r in &recs {
+                records += 1;
+                checksum = checksum.wrapping_add(record_checksum(r));
+                buf.extend_from_slice(r);
+            }
+            fs.create(&format!("{dir}/part-r-{i:05}"), &buf).unwrap();
+        }
+        DirSummary { records, checksum }
+    }
+
+    #[test]
+    fn valid_sorted_output_passes() {
+        let fs = fs();
+        // Craft two parts whose key ranges don't overlap: route by key.
+        let all: Vec<u64> = (0..200).collect();
+        let mut keyed: Vec<(Vec<u8>, u64)> = all
+            .iter()
+            .map(|&r| (record_for_row(1, r)[..10].to_vec(), r))
+            .collect();
+        keyed.sort();
+        let lo: Vec<u64> = keyed[..100].iter().map(|(_, r)| *r).collect();
+        let hi: Vec<u64> = keyed[100..].iter().map(|(_, r)| *r).collect();
+        let summary = write_parts(&fs, "/lustre/scratch/tv-ok", &[lo, hi], true);
+        let out = teravalidate(&fs, "/lustre/scratch/tv-ok", summary).unwrap();
+        assert_eq!(out.records, 200);
+    }
+
+    #[test]
+    fn unsorted_part_fails() {
+        let fs = fs();
+        let summary = write_parts(&fs, "/lustre/scratch/tv-bad", &[vec![5, 3, 9]], false);
+        let err = teravalidate(&fs, "/lustre/scratch/tv-bad", summary);
+        // Either sorted-within fails, or if rows happen sorted the test is
+        // vacuous — force the known-unsorted case:
+        if err.is_ok() {
+            // keys of rows 5,3,9 happened to be ordered; craft a reversal.
+            let fs2 = self::fs();
+            let r0 = record_for_row(1, 0);
+            let r1 = record_for_row(1, 1);
+            let (big, small) = if r0[..10] > r1[..10] { (r0, r1) } else { (r1, r0) };
+            fs2.mkdirs("/lustre/scratch/tv-bad2").unwrap();
+            let mut buf = Vec::new();
+            buf.extend_from_slice(&big);
+            buf.extend_from_slice(&small);
+            fs2.create("/lustre/scratch/tv-bad2/part-r-00000", &buf).unwrap();
+            let s = DirSummary {
+                records: 2,
+                checksum: record_checksum(&big).wrapping_add(record_checksum(&small)),
+            };
+            assert!(teravalidate(&fs2, "/lustre/scratch/tv-bad2", s).is_err());
+        }
+    }
+
+    #[test]
+    fn cross_part_boundary_violation_fails() {
+        let fs = fs();
+        let r0 = record_for_row(1, 0);
+        let r1 = record_for_row(1, 1);
+        let (big, small) = if r0[..10] > r1[..10] { (r0, r1) } else { (r1, r0) };
+        fs.mkdirs("/lustre/scratch/tv-x").unwrap();
+        fs.create("/lustre/scratch/tv-x/part-r-00000", &big).unwrap();
+        fs.create("/lustre/scratch/tv-x/part-r-00001", &small).unwrap();
+        let s = DirSummary {
+            records: 2,
+            checksum: record_checksum(&big).wrapping_add(record_checksum(&small)),
+        };
+        assert!(teravalidate(&fs, "/lustre/scratch/tv-x", s).is_err());
+    }
+
+    #[test]
+    fn count_and_checksum_mismatches_fail() {
+        let fs = fs();
+        let summary = write_parts(&fs, "/lustre/scratch/tv-c", &[vec![1, 2, 3]], true);
+        let short = DirSummary {
+            records: summary.records + 1,
+            checksum: summary.checksum,
+        };
+        assert!(teravalidate(&fs, "/lustre/scratch/tv-c", short).is_err());
+        let wrong = DirSummary {
+            records: summary.records,
+            checksum: summary.checksum ^ 1,
+        };
+        assert!(teravalidate(&fs, "/lustre/scratch/tv-c", wrong).is_err());
+    }
+
+    #[test]
+    fn summarize_matches_write() {
+        let fs = fs();
+        let summary = write_parts(&fs, "/lustre/scratch/tv-s", &[vec![7, 8], vec![9]], true);
+        let scanned = summarize_dir(&fs, "/lustre/scratch/tv-s").unwrap();
+        assert_eq!(scanned, summary);
+    }
+}

@@ -1,0 +1,202 @@
+//! Byte-size arithmetic and parsing (`"1TB"`, `"52GB"`, `"4096MB"`), plus a
+//! CRC32 (IEEE) implementation used by Teravalidate's checksums.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Mul, Sub};
+
+/// A count of bytes. Binary units (KiB = 1024) as Hadoop uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct ByteSize(pub u64);
+
+pub const KB: u64 = 1 << 10;
+pub const MB: u64 = 1 << 20;
+pub const GB: u64 = 1 << 30;
+pub const TB: u64 = 1 << 40;
+
+impl ByteSize {
+    pub const fn b(n: u64) -> Self {
+        ByteSize(n)
+    }
+    pub const fn kb(n: u64) -> Self {
+        ByteSize(n * KB)
+    }
+    pub const fn mb(n: u64) -> Self {
+        ByteSize(n * MB)
+    }
+    pub const fn gb(n: u64) -> Self {
+        ByteSize(n * GB)
+    }
+    pub const fn tb(n: u64) -> Self {
+        ByteSize(n * TB)
+    }
+
+    pub fn as_f64(self) -> f64 {
+        self.0 as f64
+    }
+
+    /// Parse `"512"`, `"4096MB"`, `"52GB"`, `"1.5TB"`, `"64K"` (case
+    /// insensitive, optional `B` suffix).
+    pub fn parse(s: &str) -> Option<ByteSize> {
+        let s = s.trim();
+        let split = s
+            .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+            .unwrap_or(s.len());
+        let (num, unit) = s.split_at(split);
+        let num: f64 = num.parse().ok()?;
+        if num < 0.0 {
+            return None;
+        }
+        let mult = match unit.trim().to_ascii_uppercase().as_str() {
+            "" | "B" => 1,
+            "K" | "KB" | "KIB" => KB,
+            "M" | "MB" | "MIB" => MB,
+            "G" | "GB" | "GIB" => GB,
+            "T" | "TB" | "TIB" => TB,
+            _ => return None,
+        };
+        Some(ByteSize((num * mult as f64).round() as u64))
+    }
+}
+
+impl fmt::Display for ByteSize {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let n = self.0;
+        let (v, unit) = if n >= TB {
+            (n as f64 / TB as f64, "TB")
+        } else if n >= GB {
+            (n as f64 / GB as f64, "GB")
+        } else if n >= MB {
+            (n as f64 / MB as f64, "MB")
+        } else if n >= KB {
+            (n as f64 / KB as f64, "KB")
+        } else {
+            return write!(f, "{n}B");
+        };
+        if (v - v.round()).abs() < 1e-9 {
+            write!(f, "{}{}", v.round() as u64, unit)
+        } else {
+            write!(f, "{v:.2}{unit}")
+        }
+    }
+}
+
+impl Add for ByteSize {
+    type Output = ByteSize;
+    fn add(self, rhs: ByteSize) -> ByteSize {
+        ByteSize(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for ByteSize {
+    fn add_assign(&mut self, rhs: ByteSize) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for ByteSize {
+    type Output = ByteSize;
+    fn sub(self, rhs: ByteSize) -> ByteSize {
+        ByteSize(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Mul<u64> for ByteSize {
+    type Output = ByteSize;
+    fn mul(self, rhs: u64) -> ByteSize {
+        ByteSize(self.0 * rhs)
+    }
+}
+
+/// CRC32 (IEEE 802.3, reflected) — the checksum Teravalidate aggregates.
+/// Table-driven, generated at first use.
+pub struct Crc32 {
+    state: u32,
+}
+
+static CRC_TABLE: once_cell::sync::Lazy<[u32; 256]> = once_cell::sync::Lazy::new(|| {
+    let mut table = [0u32; 256];
+    for (i, e) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *e = c;
+    }
+    table
+});
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        let t = &*CRC_TABLE;
+        let mut c = self.state;
+        for &b in data {
+            c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+
+    /// One-shot convenience.
+    pub fn of(data: &[u8]) -> u32 {
+        let mut c = Crc32::new();
+        c.update(data);
+        c.finish()
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip() {
+        assert_eq!(ByteSize::parse("512"), Some(ByteSize(512)));
+        assert_eq!(ByteSize::parse("4096MB"), Some(ByteSize::mb(4096)));
+        assert_eq!(ByteSize::parse("52GB"), Some(ByteSize::gb(52)));
+        assert_eq!(ByteSize::parse("1TB"), Some(ByteSize::tb(1)));
+        assert_eq!(ByteSize::parse("64k"), Some(ByteSize::kb(64)));
+        assert_eq!(ByteSize::parse("1.5GB"), Some(ByteSize((1.5 * GB as f64) as u64)));
+        assert_eq!(ByteSize::parse("nonsense"), None);
+        assert_eq!(ByteSize::parse("-5GB"), None);
+    }
+
+    #[test]
+    fn display_is_compact() {
+        assert_eq!(ByteSize::gb(52).to_string(), "52GB");
+        assert_eq!(ByteSize::tb(1).to_string(), "1TB");
+        assert_eq!(ByteSize(100).to_string(), "100B");
+        assert_eq!(ByteSize(KB * 3 / 2).to_string(), "1.50KB");
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(ByteSize::gb(1) + ByteSize::gb(1), ByteSize::gb(2));
+        assert_eq!(ByteSize::gb(2) - ByteSize::gb(3), ByteSize(0)); // saturating
+        assert_eq!(ByteSize::mb(4) * 3, ByteSize::mb(12));
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard test vector: CRC32("123456789") = 0xCBF43926.
+        assert_eq!(Crc32::of(b"123456789"), 0xCBF4_3926);
+        assert_eq!(Crc32::of(b""), 0);
+        // Incremental == one-shot.
+        let mut c = Crc32::new();
+        c.update(b"1234");
+        c.update(b"56789");
+        assert_eq!(c.finish(), 0xCBF4_3926);
+    }
+}

@@ -1,0 +1,153 @@
+//! Typed identifiers in the Hadoop/LSF display formats
+//! (`job_<epoch>_<seq>`, `application_<epoch>_<seq>`,
+//! `container_<epoch>_<app>_<attempt>_<seq>`, LSF numeric job ids).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic sequence source shared by a stack instance. The "epoch" mirrors
+/// the RM start time in real Hadoop; here it is fixed per [`IdGen`] so ids
+/// are reproducible in tests.
+#[derive(Debug)]
+pub struct IdGen {
+    epoch: u64,
+    next_app: AtomicU64,
+    next_lsf: AtomicU64,
+}
+
+impl IdGen {
+    pub fn new(epoch: u64) -> Self {
+        IdGen {
+            epoch,
+            next_app: AtomicU64::new(1),
+            next_lsf: AtomicU64::new(1000),
+        }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Next YARN application id.
+    pub fn app(&self) -> AppId {
+        AppId {
+            epoch: self.epoch,
+            seq: self.next_app.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// Next LSF job id (plain integer, as `bsub` reports).
+    pub fn lsf_job(&self) -> LsfJobId {
+        LsfJobId(self.next_lsf.fetch_add(1, Ordering::Relaxed))
+    }
+}
+
+impl Default for IdGen {
+    fn default() -> Self {
+        // An arbitrary fixed epoch (2015-03-01, the paper era) keeps display
+        // strings stable across runs.
+        IdGen::new(1_425_168_000)
+    }
+}
+
+/// LSF batch job id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LsfJobId(pub u64);
+
+impl fmt::Display for LsfJobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// YARN application id: `application_<epoch>_<seq>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct AppId {
+    pub epoch: u64,
+    pub seq: u64,
+}
+
+impl fmt::Display for AppId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "application_{}_{:04}", self.epoch, self.seq)
+    }
+}
+
+impl AppId {
+    /// The MapReduce job id twin: `job_<epoch>_<seq>`.
+    pub fn as_mr_job(&self) -> String {
+        format!("job_{}_{:04}", self.epoch, self.seq)
+    }
+
+    pub fn attempt(&self, attempt: u32) -> AppAttemptId {
+        AppAttemptId { app: *self, attempt }
+    }
+}
+
+/// YARN application attempt: `appattempt_<epoch>_<seq>_<attempt>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct AppAttemptId {
+    pub app: AppId,
+    pub attempt: u32,
+}
+
+impl fmt::Display for AppAttemptId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "appattempt_{}_{:04}_{:06}",
+            self.app.epoch, self.app.seq, self.attempt
+        )
+    }
+}
+
+impl AppAttemptId {
+    pub fn container(&self, seq: u64) -> ContainerId {
+        ContainerId { attempt: *self, seq }
+    }
+}
+
+/// YARN container id: `container_<epoch>_<app>_<attempt>_<seq>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ContainerId {
+    pub attempt: AppAttemptId,
+    pub seq: u64,
+}
+
+impl fmt::Display for ContainerId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "container_{}_{:04}_{:02}_{:06}",
+            self.attempt.app.epoch, self.attempt.app.seq, self.attempt.attempt, self.seq
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_match_hadoop_conventions() {
+        let gen = IdGen::new(1_425_168_000);
+        let app = gen.app();
+        assert_eq!(app.to_string(), "application_1425168000_0001");
+        assert_eq!(app.as_mr_job(), "job_1425168000_0001");
+        let att = app.attempt(1);
+        assert_eq!(att.to_string(), "appattempt_1425168000_0001_000001");
+        let c = att.container(3);
+        assert_eq!(c.to_string(), "container_1425168000_0001_01_000003");
+    }
+
+    #[test]
+    fn ids_are_monotonic() {
+        let gen = IdGen::default();
+        let a = gen.app();
+        let b = gen.app();
+        assert!(b.seq > a.seq);
+        let j1 = gen.lsf_job();
+        let j2 = gen.lsf_job();
+        assert!(j2.0 > j1.0);
+    }
+}

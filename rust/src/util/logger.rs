@@ -1,0 +1,97 @@
+//! Minimal leveled logger (env-controlled via `HPCW_LOG`), since no logging
+//! crates are vendored. Daemons tag lines with their component name the way
+//! Hadoop daemons do.
+
+use std::fmt::Arguments;
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log verbosity, lowest → highest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+static INIT: std::sync::Once = std::sync::Once::new();
+
+/// Initialise from `HPCW_LOG` (error|warn|info|debug|trace). Idempotent.
+pub fn init() {
+    INIT.call_once(|| {
+        let lvl = match std::env::var("HPCW_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("info") => Level::Info,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Warn,
+        };
+        MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+}
+
+/// Force a level (tests, CLI `-v`).
+pub fn set_level(lvl: Level) {
+    INIT.call_once(|| {});
+    MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+/// Current max level.
+pub fn level() -> Level {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+#[doc(hidden)]
+pub fn log(lvl: Level, component: &str, args: Arguments<'_>) {
+    init();
+    if lvl > level() {
+        return;
+    }
+    let tag = match lvl {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    let stderr = std::io::stderr();
+    let mut out = stderr.lock();
+    let _ = writeln!(out, "{tag} [{component}] {args}");
+}
+
+/// `hlog!(Level::Info, "yarn.rm", "allocated {} containers", n)`
+#[macro_export]
+macro_rules! hlog {
+    ($lvl:expr, $comp:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($lvl, $comp, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn set_and_get_level() {
+        set_level(Level::Debug);
+        assert_eq!(level(), Level::Debug);
+        set_level(Level::Warn);
+        assert_eq!(level(), Level::Warn);
+    }
+}

@@ -1,0 +1,45 @@
+//! Small shared utilities: PRNG, byte sizes, simulated time, id generation,
+//! a scoped thread pool, and a minimal leveled logger.
+//!
+//! The build environment vendors only the `xla` crate family, so facilities
+//! usually pulled from crates.io (rand, humantime, rayon, env_logger) are
+//! implemented here.
+
+pub mod bytes;
+pub mod ids;
+pub mod logger;
+pub mod pool;
+pub mod rng;
+pub mod time;
+
+/// Integer ceiling division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Clamp a float into `[lo, hi]`.
+pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(1_000_000_007, 16), 62_500_001);
+    }
+
+    #[test]
+    fn clampf_basics() {
+        assert_eq!(clampf(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clampf(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+    }
+}

@@ -1,0 +1,216 @@
+//! A small fixed-size thread pool with scoped parallel-map support.
+//!
+//! Real-mode MapReduce execution runs map/reduce task *attempts* on this
+//! pool — one pool per simulated node group — so the Real data plane gets
+//! actual parallelism without tokio (not available offline).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool. Jobs are `FnOnce() + Send`. Panics inside jobs
+/// are caught and surfaced via [`Pool::panic_count`] so a failed task
+/// attempt does not take the whole engine down (MR retries it instead).
+pub struct Pool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    panics: Arc<Mutex<Vec<String>>>,
+}
+
+impl Pool {
+    /// Spawn `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(Mutex::new(Vec::new()));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
+                std::thread::Builder::new()
+                    .name(format!("hpcw-pool-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                if let Err(e) = catch_unwind(AssertUnwindSafe(job)) {
+                                    let text = panic_text(&e);
+                                    panics.lock().unwrap().push(text);
+                                }
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool { tx, workers, panics }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fire-and-forget.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool closed");
+    }
+
+    /// Run `f` over `items` in parallel, preserving order of results.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let n = items.len();
+        let (rtx, rrx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let r = f(item);
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut received = 0;
+        while received < n {
+            match rrx.recv() {
+                Ok((i, r)) => {
+                    out[i] = Some(r);
+                    received += 1;
+                }
+                Err(_) => break, // a job panicked; its slot stays None
+            }
+        }
+        out.into_iter()
+            .map(|o| o.expect("pool job panicked; see panic_count"))
+            .collect()
+    }
+
+    /// Like [`Pool::map`] but panics in jobs yield `None` slots instead of
+    /// panicking the caller — used by MR failure-injection tests.
+    pub fn try_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<Option<R>>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let n = items.len();
+        let (rtx, rrx): (Sender<(usize, Option<R>)>, Receiver<(usize, Option<R>)>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            let panics = Arc::clone(&self.panics);
+            self.submit(move || {
+                let r = match catch_unwind(AssertUnwindSafe(|| f(item))) {
+                    Ok(r) => Some(r),
+                    Err(e) => {
+                        panics.lock().unwrap().push(panic_text(&*e));
+                        None
+                    }
+                };
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            if let Ok((i, r)) = rrx.recv() {
+                out[i] = r;
+            }
+        }
+        out
+    }
+
+    /// Number of panicked jobs so far.
+    pub fn panic_count(&self) -> usize {
+        self.panics.lock().unwrap().len()
+    }
+}
+
+fn panic_text(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = Pool::new(4);
+        let out = pool.map((0..100u64).collect(), |x| x * x);
+        assert_eq!(out, (0..100u64).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn submit_runs_everything() {
+        let pool = Pool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // drop joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn try_map_surfaces_panics_as_none() {
+        let pool = Pool::new(2);
+        let out = pool.try_map(vec![1u32, 2, 3, 4], |x| {
+            if x == 3 {
+                panic!("injected failure");
+            }
+            x * 10
+        });
+        assert_eq!(out, vec![Some(10), Some(20), None, Some(40)]);
+        assert_eq!(pool.panic_count(), 1);
+    }
+
+    #[test]
+    fn zero_workers_clamped_to_one() {
+        let pool = Pool::new(0);
+        assert_eq!(pool.size(), 1);
+        let out = pool.map(vec![5], |x| x + 1);
+        assert_eq!(out, vec![6]);
+    }
+}

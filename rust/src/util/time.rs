@@ -1,0 +1,141 @@
+//! Simulated time: microsecond ticks with human-friendly formatting.
+//!
+//! All discrete-event timestamps in the stack are [`Micros`]. Wall-clock
+//! measurements (Real mode, benches) convert through `std::time::Duration`.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+use std::time::Duration;
+
+/// A simulated instant / duration in microseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Micros(pub u64);
+
+impl Micros {
+    pub const ZERO: Micros = Micros(0);
+
+    pub const fn us(n: u64) -> Self {
+        Micros(n)
+    }
+    pub const fn ms(n: u64) -> Self {
+        Micros(n * 1_000)
+    }
+    pub const fn secs(n: u64) -> Self {
+        Micros(n * 1_000_000)
+    }
+    pub const fn mins(n: u64) -> Self {
+        Micros(n * 60_000_000)
+    }
+
+    /// From fractional seconds (cost-model outputs).
+    pub fn from_secs_f64(s: f64) -> Self {
+        Micros((s.max(0.0) * 1e6).round() as u64)
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    pub fn as_duration(self) -> Duration {
+        Duration::from_micros(self.0)
+    }
+
+    pub fn saturating_sub(self, rhs: Micros) -> Micros {
+        Micros(self.0.saturating_sub(rhs.0))
+    }
+
+    pub fn max(self, other: Micros) -> Micros {
+        Micros(self.0.max(other.0))
+    }
+
+    pub fn min(self, other: Micros) -> Micros {
+        Micros(self.0.min(other.0))
+    }
+}
+
+impl Add for Micros {
+    type Output = Micros;
+    fn add(self, rhs: Micros) -> Micros {
+        Micros(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Micros {
+    fn add_assign(&mut self, rhs: Micros) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Micros {
+    type Output = Micros;
+    fn sub(self, rhs: Micros) -> Micros {
+        Micros(self.0.checked_sub(rhs.0).expect("Micros underflow"))
+    }
+}
+
+impl From<Duration> for Micros {
+    fn from(d: Duration) -> Self {
+        Micros(d.as_micros() as u64)
+    }
+}
+
+impl fmt::Display for Micros {
+    /// `"1h 02m 03s"`, `"2m 34.5s"`, `"340ms"`, `"75us"`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let us = self.0;
+        if us < 1_000 {
+            return write!(f, "{us}us");
+        }
+        if us < 1_000_000 {
+            return write!(f, "{:.1}ms", us as f64 / 1e3);
+        }
+        let secs = us as f64 / 1e6;
+        if secs < 60.0 {
+            return write!(f, "{secs:.1}s");
+        }
+        let total_s = us / 1_000_000;
+        let h = total_s / 3600;
+        let m = (total_s % 3600) / 60;
+        let s = total_s % 60;
+        if h > 0 {
+            write!(f, "{h}h {m:02}m {s:02}s")
+        } else {
+            write!(f, "{m}m {s:02}s")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_scale() {
+        assert_eq!(Micros::ms(2), Micros(2_000));
+        assert_eq!(Micros::secs(3), Micros(3_000_000));
+        assert_eq!(Micros::mins(1), Micros::secs(60));
+    }
+
+    #[test]
+    fn display_bands() {
+        assert_eq!(Micros(75).to_string(), "75us");
+        assert_eq!(Micros::ms(340).to_string(), "340.0ms");
+        assert_eq!(Micros::secs(34).to_string(), "34.0s");
+        assert_eq!(Micros::secs(154).to_string(), "2m 34s");
+        assert_eq!(Micros::secs(3723).to_string(), "1h 02m 03s");
+    }
+
+    #[test]
+    fn f64_round_trip() {
+        let m = Micros::from_secs_f64(1.5);
+        assert_eq!(m, Micros(1_500_000));
+        assert!((m.as_secs_f64() - 1.5).abs() < 1e-9);
+        assert_eq!(Micros::from_secs_f64(-3.0), Micros::ZERO);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sub_underflow_panics() {
+        let _ = Micros(1) - Micros(2);
+    }
+}

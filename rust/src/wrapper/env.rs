@@ -1,0 +1,135 @@
+//! The environment the wrapper exports into the dynamic cluster: Hadoop
+//! configuration values and the Lustre directory layout.
+//!
+//! §III "Data Movement": operational directories on node-local DAS (see
+//! [`crate::yarn::nm::LOCAL_DIRS`]); "Hadoop Staging, Input and Output" on
+//! Lustre. §V: "This configuration is exported into the cluster
+//! environment and the daemons are triggered."
+
+use crate::cluster::NodeId;
+use crate::config::StackConfig;
+use crate::error::Result;
+use crate::lustre::Dfs;
+
+/// Resolved per-job environment.
+#[derive(Debug, Clone)]
+pub struct ClusterEnv {
+    /// Per-job staging root on Lustre, removed at teardown.
+    pub staging_root: String,
+    /// Job input directory (user-provided data lands here).
+    pub input_dir: String,
+    /// Job output directory.
+    pub output_dir: String,
+    /// MR intermediate/staging area.
+    pub mr_staging_dir: String,
+    /// Job-history done-dir — deliberately *outside* the staging root so it
+    /// survives teardown.
+    pub history_done_dir: String,
+    /// Exported variables (the `hadoop-env.sh` analog); kept as explicit
+    /// pairs so tests and the API can show the user exactly what a job saw.
+    pub exports: Vec<(String, String)>,
+}
+
+impl ClusterEnv {
+    pub fn new(cfg: &StackConfig, job_tag: &str, rm_node: NodeId, jhs_node: NodeId) -> ClusterEnv {
+        let mount = cfg.lustre.mount.trim_end_matches('/');
+        let staging_root = format!("{mount}/hpcw-jobs/{job_tag}");
+        let env = ClusterEnv {
+            input_dir: format!("{staging_root}/input"),
+            output_dir: format!("{staging_root}/output"),
+            mr_staging_dir: format!("{staging_root}/staging"),
+            history_done_dir: format!("{mount}/hpcw-history/done"),
+            exports: vec![
+                ("HADOOP_HOME".into(), "/app/hadoop/2.5.1".into()),
+                ("YARN_RESOURCEMANAGER_HOST".into(), rm_node.to_string()),
+                ("MAPRED_HISTORYSERVER_HOST".into(), jhs_node.to_string()),
+                (
+                    "YARN_NM_RESOURCE_MB".into(),
+                    cfg.yarn.nm_resource_mb.to_string(),
+                ),
+                (
+                    "YARN_MIN_ALLOC_MB".into(),
+                    cfg.yarn.min_alloc_mb.to_string(),
+                ),
+                (
+                    "MAPREDUCE_MAP_MEMORY_MB".into(),
+                    cfg.yarn.map_memory_mb.to_string(),
+                ),
+                (
+                    "MAPREDUCE_MAP_JAVA_OPTS".into(),
+                    format!("-Xmx{}m", cfg.yarn.map_java_heap_mb),
+                ),
+                ("HPCW_LUSTRE_MOUNT".into(), mount.to_string()),
+            ],
+            staging_root,
+        };
+        env
+    }
+
+    /// Create the shared (Lustre) directories.
+    pub fn create_shared_dirs(&self, dfs: &dyn Dfs) -> Result<()> {
+        dfs.mkdirs(&self.staging_root)?;
+        dfs.mkdirs(&self.input_dir)?;
+        dfs.mkdirs(&self.output_dir)?;
+        dfs.mkdirs(&self.mr_staging_dir)?;
+        dfs.mkdirs(&self.history_done_dir)?;
+        Ok(())
+    }
+
+    /// Lookup of an exported variable.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.exports
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Number of shared metadata objects this env creates (Sim mode feeds
+    /// this into the MDS model).
+    pub fn shared_dir_count(&self) -> u32 {
+        5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+    use crate::lustre::LustreFs;
+
+    #[test]
+    fn paths_rooted_in_lustre_mount() {
+        let cfg = StackConfig::paper();
+        let env = ClusterEnv::new(&cfg, "job42", NodeId(0), NodeId(1));
+        assert!(env.staging_root.starts_with("/lustre/scratch/"));
+        assert!(env.input_dir.contains("job42"));
+        assert!(!env.history_done_dir.contains("job42")); // survives teardown
+    }
+
+    #[test]
+    fn exports_reflect_paper_table() {
+        let cfg = StackConfig::paper();
+        let env = ClusterEnv::new(&cfg, "j", NodeId(3), NodeId(4));
+        assert_eq!(env.get("YARN_NM_RESOURCE_MB"), Some("53248"));
+        assert_eq!(env.get("MAPREDUCE_MAP_JAVA_OPTS"), Some("-Xmx3072m"));
+        assert_eq!(env.get("YARN_RESOURCEMANAGER_HOST"), Some("n0003"));
+        assert_eq!(env.get("NOPE"), None);
+    }
+
+    #[test]
+    fn create_shared_dirs_makes_all() {
+        let cfg = StackConfig::paper();
+        let fs = LustreFs::new(&cfg.lustre, &cfg.cluster);
+        let env = ClusterEnv::new(&cfg, "j", NodeId(0), NodeId(1));
+        env.create_shared_dirs(&fs).unwrap();
+        for d in [
+            &env.staging_root,
+            &env.input_dir,
+            &env.output_dir,
+            &env.mr_staging_dir,
+            &env.history_done_dir,
+        ] {
+            assert!(fs.exists(d), "{d} missing");
+        }
+    }
+}

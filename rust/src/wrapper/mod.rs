@@ -1,0 +1,266 @@
+//! The HPC Wales wrapper — the paper's contribution (§III step 4, §V).
+//!
+//! "The dynamic cluster configuration then kicks in, driven by a custom
+//! wrapper script that performs the Hadoop cluster creation: daemon
+//! initiation, directory structure creation and the environment setup. The
+//! user application is then submitted into this cluster. ... This
+//! infrastructure is torn down after the job completes."
+//!
+//! Layout (§V, Fig 2): the Resource Manager starts on the **first** node of
+//! the LSF allocation, the Job History Server on the **second**, and every
+//! remaining node becomes a slave running a NodeManager.
+//!
+//! Two faces of the same logic:
+//! * [`DynamicCluster`] (this file) — Real mode: actually constructs the
+//!   RM / NM / JHS state machines, creates the directory trees, hands the
+//!   caller a live cluster, and tears it down afterwards, verifying the
+//!   environment is returned clean.
+//! * [`sim::simulate_wrapper`] — Sim mode: the calibrated timing model of
+//!   the identical sequence of steps, which regenerates Fig 3.
+
+pub mod env;
+pub mod sim;
+
+pub use env::ClusterEnv;
+pub use sim::{simulate_wrapper, WrapperPhases};
+
+use crate::cluster::NodeId;
+use crate::config::StackConfig;
+use crate::error::{Error, Result};
+use crate::lustre::Dfs;
+use crate::metrics::Metrics;
+use crate::util::ids::IdGen;
+use crate::util::time::Micros;
+use crate::yarn::{JobHistoryServer, NodeManager, ResourceManager};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// A live dynamically-constructed YARN cluster inside an LSF allocation.
+pub struct DynamicCluster {
+    pub rm: ResourceManager,
+    pub jhs: JobHistoryServer,
+    pub nms: BTreeMap<NodeId, NodeManager>,
+    pub rm_node: NodeId,
+    pub jhs_node: NodeId,
+    pub slaves: Vec<NodeId>,
+    pub env: ClusterEnv,
+    metrics: Arc<Metrics>,
+    torn_down: bool,
+}
+
+impl DynamicCluster {
+    /// Build the cluster on an LSF allocation (wrapper step 4).
+    ///
+    /// `nodes` is the allocation in LSF order; needs at least 3 nodes
+    /// (RM, JHS, ≥1 slave). `job_tag` isolates this job's staging area.
+    pub fn build(
+        cfg: &StackConfig,
+        nodes: &[NodeId],
+        dfs: &dyn Dfs,
+        ids: Arc<IdGen>,
+        metrics: Arc<Metrics>,
+        job_tag: &str,
+        now: Micros,
+    ) -> Result<DynamicCluster> {
+        if nodes.len() < 3 {
+            return Err(Error::Wrapper(format!(
+                "allocation of {} nodes: need >= 3 (RM, JHS, >=1 slave)",
+                nodes.len()
+            )));
+        }
+        let rm_node = nodes[0];
+        let jhs_node = nodes[1];
+        let slaves: Vec<NodeId> = nodes[2..].to_vec();
+
+        // 1. Environment setup + staging directories on Lustre.
+        let env = ClusterEnv::new(cfg, job_tag, rm_node, jhs_node);
+        env.create_shared_dirs(dfs)?;
+        metrics.event(now, "wrapper", "staging dirs created");
+
+        // 2. Resource Manager on the first node.
+        let mut rm = ResourceManager::new(cfg.yarn.clone(), ids, Arc::clone(&metrics));
+        metrics.event(now, "wrapper", &format!("RM started on {rm_node}"));
+
+        // 3. Job History Server on the second node.
+        let mut jhs = JobHistoryServer::new(&env.history_done_dir);
+        jhs.start(dfs)?;
+        metrics.event(now, "wrapper", &format!("JHS started on {jhs_node}"));
+
+        // 4. Slaves: local dirs, NM daemon, registration with the RM.
+        let mut nms = BTreeMap::new();
+        for &s in &slaves {
+            let mut nm = NodeManager::new(s);
+            nm.setup_dirs()
+                .map_err(|e| Error::Wrapper(format!("dir setup on {s}: {e}")))?;
+            nm.start(now)
+                .map_err(|e| Error::Wrapper(format!("NM start on {s}: {e}")))?;
+            rm.register_nm(s, now)
+                .map_err(|e| Error::Wrapper(format!("NM register {s}: {e}")))?;
+            nms.insert(s, nm);
+        }
+        metrics.event(now, "wrapper", &format!("{} NMs up", slaves.len()));
+        metrics.inc("wrapper.clusters_built", 1);
+
+        Ok(DynamicCluster {
+            rm,
+            jhs,
+            nms,
+            rm_node,
+            jhs_node,
+            slaves,
+            env,
+            metrics,
+            torn_down: false,
+        })
+    }
+
+    /// Abort half-way through a failed build: release whatever exists.
+    /// (Build is transactional from the caller's perspective: on error the
+    /// LSF job exits and the allocation is released; staging dirs are
+    /// removed here.)
+    pub fn abort_build(cfg: &StackConfig, dfs: &dyn Dfs, job_tag: &str) -> Result<()> {
+        let env = ClusterEnv::new(cfg, job_tag, NodeId(0), NodeId(0));
+        let _ = dfs.delete_recursive(&env.staging_root);
+        Ok(())
+    }
+
+    /// Number of slave nodes.
+    pub fn slave_count(&self) -> usize {
+        self.slaves.len()
+    }
+
+    /// Total container capacity in (mem, vcores) terms.
+    pub fn capacity(&self) -> crate::yarn::Resource {
+        self.rm.cluster_resources().0
+    }
+
+    /// Tear the cluster down (wrapper step after app completion):
+    /// stop NMs (refusing if containers still run), clean node-local
+    /// workspaces, shut the RM down, stop the JHS, remove staging — but
+    /// keep the history done-dir (it outlives the cluster; §V).
+    pub fn teardown(&mut self, dfs: &dyn Dfs, now: Micros) -> Result<()> {
+        if self.torn_down {
+            return Err(Error::Wrapper("cluster already torn down".into()));
+        }
+        for (id, nm) in self.nms.iter_mut() {
+            nm.stop_and_clean()
+                .map_err(|e| Error::Wrapper(format!("NM {id} teardown: {e}")))?;
+        }
+        self.rm
+            .shutdown()
+            .map_err(|e| Error::Wrapper(format!("RM shutdown: {e}")))?;
+        self.jhs.stop();
+        dfs.delete_recursive(&self.env.staging_root)?;
+        self.torn_down = true;
+        self.metrics.event(now, "wrapper", "cluster torn down");
+        self.metrics.inc("wrapper.clusters_torn_down", 1);
+        Ok(())
+    }
+
+    /// Post-teardown cleanliness check, used by tests: no staging left, no
+    /// NM running, no NM-local files.
+    pub fn verify_clean(&self, dfs: &dyn Dfs) -> Result<()> {
+        if !self.torn_down {
+            return Err(Error::Wrapper("not torn down".into()));
+        }
+        if dfs.exists(&self.env.staging_root) {
+            return Err(Error::Wrapper(format!(
+                "staging '{}' survived teardown",
+                self.env.staging_root
+            )));
+        }
+        for (id, nm) in &self.nms {
+            if nm.is_running() {
+                return Err(Error::Wrapper(format!("NM {id} still running")));
+            }
+            if nm.local_fs.exists("/tmp/hpcw") {
+                return Err(Error::Wrapper(format!("NM {id} workspace not cleaned")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+    use crate::lustre::LustreFs;
+
+    fn setup() -> (StackConfig, LustreFs, Arc<IdGen>, Arc<Metrics>) {
+        let cfg = StackConfig::tiny();
+        let fs = LustreFs::new(&cfg.lustre, &cfg.cluster);
+        (cfg, fs, Arc::new(IdGen::default()), Arc::new(Metrics::new()))
+    }
+
+    fn nodes(n: u32) -> Vec<NodeId> {
+        (0..n).map(NodeId).collect()
+    }
+
+    #[test]
+    fn build_assigns_roles_per_paper() {
+        let (cfg, fs, ids, m) = setup();
+        let dc =
+            DynamicCluster::build(&cfg, &nodes(8), &fs, ids, m, "job1", Micros::ZERO).unwrap();
+        // First two nodes: RM + JHS; the other six are slaves (§V).
+        assert_eq!(dc.rm_node, NodeId(0));
+        assert_eq!(dc.jhs_node, NodeId(1));
+        assert_eq!(dc.slave_count(), 6);
+        assert_eq!(dc.rm.nm_count(), 6);
+        assert!(dc.jhs.is_running());
+        // Slaves have their local dirs.
+        for nm in dc.nms.values() {
+            assert!(nm.local_fs.exists("/tmp/hpcw/yarn/nm-local"));
+        }
+    }
+
+    #[test]
+    fn build_requires_three_nodes() {
+        let (cfg, fs, ids, m) = setup();
+        assert!(DynamicCluster::build(&cfg, &nodes(2), &fs, ids, m, "j", Micros::ZERO).is_err());
+    }
+
+    #[test]
+    fn teardown_leaves_no_residue_but_keeps_history() {
+        let (cfg, fs, ids, m) = setup();
+        let mut dc =
+            DynamicCluster::build(&cfg, &nodes(4), &fs, ids, m, "job2", Micros::ZERO).unwrap();
+        let staging = dc.env.staging_root.clone();
+        let done = dc.env.history_done_dir.clone();
+        assert!(fs.exists(&staging));
+        dc.teardown(&fs, Micros::secs(100)).unwrap();
+        dc.verify_clean(&fs).unwrap();
+        assert!(!fs.exists(&staging));
+        assert!(fs.exists(&done)); // history outlives the cluster
+        // Double teardown is an error.
+        assert!(dc.teardown(&fs, Micros::secs(101)).is_err());
+    }
+
+    #[test]
+    fn teardown_refuses_while_app_running() {
+        let (cfg, fs, ids, m) = setup();
+        let mut dc =
+            DynamicCluster::build(&cfg, &nodes(4), &fs, ids, m, "job3", Micros::ZERO).unwrap();
+        let _h = dc.rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        // RM still tracks the AM container → shutdown must refuse.
+        assert!(dc.teardown(&fs, Micros::secs(5)).is_err());
+    }
+
+    #[test]
+    fn two_jobs_do_not_collide_in_staging() {
+        let (cfg, fs, ids, m) = setup();
+        let dc1 = DynamicCluster::build(
+            &cfg,
+            &nodes(4),
+            &fs,
+            Arc::clone(&ids),
+            Arc::clone(&m),
+            "jobA",
+            Micros::ZERO,
+        )
+        .unwrap();
+        let dc2 =
+            DynamicCluster::build(&cfg, &nodes(4), &fs, ids, m, "jobB", Micros::ZERO).unwrap();
+        assert_ne!(dc1.env.staging_root, dc2.env.staging_root);
+    }
+}

@@ -1,0 +1,206 @@
+//! Sim-mode wrapper timing model — regenerates **Fig 3** ("Wrapper
+//! Behaviour": cores allocated vs time to create + tear down the cluster,
+//! with no application run in between).
+//!
+//! The modelled sequence is exactly [`super::DynamicCluster::build`]'s:
+//!
+//! 1. script + environment export;
+//! 2. staging-directory creation on Lustre (MDS drain; grows ~linearly in
+//!    node count but at 15k ops/s stays sub-second);
+//! 3. RM on node 1, JHS on node 2 (ssh'd serially, JVMs boot in parallel);
+//! 4. NodeManagers on the remaining nodes through a pdsh-style sliding
+//!    window (`calibration.ssh_fanout` concurrent sessions), each session =
+//!    ssh setup + local mkdir + NM JVM boot (log-normal jitter), then
+//!    registration with the RM;
+//! 5. teardown mirrors it: NM stop window, RM/JHS stop, staging removal.
+//!
+//! The shape this produces — near-flat with a mild log-ish rise from the
+//! max of per-node jitter and the fan-out window — is the published
+//! "wrapper adds little overhead" behaviour.
+
+use crate::config::StackConfig;
+use crate::simx::queueing::MD1;
+use crate::util::rng::Rng;
+use std::collections::BinaryHeap;
+
+/// Timing breakdown of one simulated wrapper run.
+#[derive(Debug, Clone)]
+pub struct WrapperPhases {
+    pub nodes: u32,
+    pub cores: u32,
+    pub env_setup_s: f64,
+    pub shared_dirs_s: f64,
+    pub daemons_s: f64,
+    pub nm_phase_s: f64,
+    pub create_s: f64,
+    pub teardown_s: f64,
+}
+
+impl WrapperPhases {
+    pub fn total_s(&self) -> f64 {
+        self.create_s + self.teardown_s
+    }
+}
+
+/// Makespan of `durations` items run through a sliding window of `width`
+/// concurrent slots (pdsh semantics), items issued in order.
+pub fn sliding_window_makespan(durations: &[f64], width: usize) -> f64 {
+    assert!(width >= 1);
+    // Min-heap of slot free times (stored negated in a max-heap).
+    let mut heap: BinaryHeap<std::cmp::Reverse<u64>> = BinaryHeap::new();
+    const SCALE: f64 = 1e6;
+    let mut makespan = 0.0f64;
+    for &d in durations {
+        let start = if heap.len() < width {
+            0.0
+        } else {
+            let std::cmp::Reverse(t) = heap.pop().unwrap();
+            t as f64 / SCALE
+        };
+        let finish = start + d;
+        makespan = makespan.max(finish);
+        heap.push(std::cmp::Reverse((finish * SCALE) as u64));
+    }
+    makespan
+}
+
+/// Simulate one wrapper create+teardown for an allocation of `nodes`.
+pub fn simulate_wrapper(cfg: &StackConfig, nodes: u32, seed: u64) -> WrapperPhases {
+    assert!(nodes >= 3, "wrapper needs RM + JHS + >=1 slave");
+    let cal = &cfg.calibration;
+    let mut rng = Rng::new(cfg.seed ^ seed.wrapping_mul(0x9E3779B97F4A7C15)).fork(nodes as u64);
+    let slaves = nodes - 2;
+
+    // Log-normal with mean `mean_s`: ln-mu = ln(mean) - sigma^2/2.
+    fn lognorm(rng: &mut Rng, sigma: f64, mean_s: f64) -> f64 {
+        let mu = mean_s.ln() - sigma * sigma / 2.0;
+        rng.lognormal(mu, sigma)
+    }
+    let sig = cal.daemon_jitter_sigma;
+
+    // Phase 1: script startup, module loads, config generation, env export.
+    let env_setup_s = 1.0 + rng.f64() * 0.2;
+
+    // Phase 2: shared dirs on Lustre. 5 job dirs + one staging subdir per
+    // node (the NM deposit dirs), drained by the MDS.
+    let mds = MD1::new(cfg.lustre.mds_ops_per_sec);
+    let shared_dirs_s = mds.drain_time(5 + nodes as u64);
+
+    // Phase 3: RM (node 1) and JHS (node 2). Serial ssh, parallel boot.
+    let rm_up = cal.ssh_setup_s + lognorm(&mut rng, sig, cal.rm_start_s);
+    let jhs_up = 2.0 * cal.ssh_setup_s + lognorm(&mut rng, sig, cal.jhs_start_s);
+    let daemons_s = rm_up.max(jhs_up);
+
+    // Phase 4: NM fan-out. Per node: ssh + local mkdirs + NM boot.
+    let local_mkdir_s = cal.dirs_per_node as f64 * 0.002;
+    let durations: Vec<f64> = (0..slaves)
+        .map(|_| cal.ssh_setup_s + local_mkdir_s + lognorm(&mut rng, sig, cal.nm_start_s))
+        .collect();
+    let nm_boot = sliding_window_makespan(&durations, cal.ssh_fanout as usize);
+    // Registration needs the RM up; the fan-out starts as soon as the RM/JHS
+    // ssh commands return (daemon boot is backgrounded).
+    let nm_phase_s = nm_boot.max(daemons_s) + cal.nm_register_s;
+
+    let create_s = env_setup_s + shared_dirs_s + nm_phase_s;
+
+    // Teardown: NM stop window, RM + JHS stop, staging removal.
+    let stop_durations: Vec<f64> = (0..slaves)
+        .map(|_| cal.ssh_setup_s + lognorm(&mut rng, sig, cal.daemon_stop_s))
+        .collect();
+    let nm_stop = sliding_window_makespan(&stop_durations, cal.ssh_fanout as usize);
+    let rm_jhs_stop = 2.0 * cal.ssh_setup_s + lognorm(&mut rng, sig, cal.daemon_stop_s);
+    // Staging removal: ~1 dir per node plus job dirs and logs.
+    let unlink_s = mds.drain_time(nodes as u64 + 20);
+    let teardown_s = nm_stop + rm_jhs_stop + unlink_s;
+
+    WrapperPhases {
+        nodes,
+        cores: nodes * cfg.cluster.cores_per_node,
+        env_setup_s,
+        shared_dirs_s,
+        daemons_s,
+        nm_phase_s,
+        create_s,
+        teardown_s,
+    }
+}
+
+/// The Fig 3 sweep: create+teardown times across allocation sizes.
+/// Returns `(cores, create_s, teardown_s, total_s)` rows.
+pub fn fig3_sweep(cfg: &StackConfig, node_counts: &[u32], reps: u32) -> Vec<(u32, f64, f64, f64)> {
+    node_counts
+        .iter()
+        .map(|&n| {
+            let mut create = 0.0;
+            let mut teardown = 0.0;
+            for r in 0..reps.max(1) {
+                let p = simulate_wrapper(cfg, n, r as u64);
+                create += p.create_s;
+                teardown += p.teardown_s;
+            }
+            let reps = reps.max(1) as f64;
+            let (c, t) = (create / reps, teardown / reps);
+            (n * cfg.cluster.cores_per_node, c, t, c + t)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+
+    #[test]
+    fn sliding_window_basics() {
+        // 4 items of 1 s through width 2 → 2 s.
+        assert!((sliding_window_makespan(&[1.0; 4], 2) - 2.0).abs() < 1e-9);
+        // Width >= n → max item.
+        assert!((sliding_window_makespan(&[1.0, 3.0, 2.0], 10) - 3.0).abs() < 1e-9);
+        // Width 1 → sum.
+        assert!((sliding_window_makespan(&[1.0, 2.0, 3.0], 1) - 6.0).abs() < 1e-6);
+        assert_eq!(sliding_window_makespan(&[], 4), 0.0);
+    }
+
+    #[test]
+    fn wrapper_time_dominated_by_daemons_not_dirs() {
+        let cfg = StackConfig::paper();
+        let p = simulate_wrapper(&cfg, 16, 0);
+        assert!(p.shared_dirs_s < 1.0, "MDS dirs {0}", p.shared_dirs_s);
+        assert!(p.nm_phase_s > p.shared_dirs_s);
+        assert!(p.create_s > p.teardown_s, "stop is faster than start");
+    }
+
+    #[test]
+    fn fig3_shape_near_flat_with_mild_growth() {
+        let cfg = StackConfig::paper();
+        let rows = fig3_sweep(&cfg, &[4, 16, 64, 128], 3);
+        let t4 = rows[0].3;
+        let t128 = rows[3].3;
+        // Little overhead: under 2 minutes even at 2,048 cores...
+        assert!(t128 < 120.0, "t128={t128}");
+        // ...and growth from 64 to 2,048 cores is well under 3×.
+        assert!(t128 / t4 < 3.0, "t4={t4} t128={t128}");
+        // But it is monotone-ish: more nodes is not faster.
+        assert!(t128 > t4 * 0.9);
+        // Cores column uses the paper's 16-core nodes.
+        assert_eq!(rows[0].0, 64);
+        assert_eq!(rows[3].0, 2048);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = StackConfig::paper();
+        let a = simulate_wrapper(&cfg, 32, 7);
+        let b = simulate_wrapper(&cfg, 32, 7);
+        assert_eq!(a.create_s, b.create_s);
+        let c = simulate_wrapper(&cfg, 32, 8);
+        assert_ne!(a.create_s, c.create_s);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs RM")]
+    fn too_few_nodes_panics() {
+        let cfg = StackConfig::paper();
+        simulate_wrapper(&cfg, 2, 0);
+    }
+}

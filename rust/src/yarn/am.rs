@@ -1,0 +1,172 @@
+//! ApplicationMaster abstraction.
+//!
+//! §V: "An Application Master Server is instantiated on one of the nodes
+//! and is responsible for the complete job execution, with the RM tracking
+//! the status of the application through the Application Master."
+//!
+//! The MR engine implements [`AppMaster`]; the YARN layer only needs the
+//! generic protocol: ask → receive → report progress → finish. The
+//! container-based design is what lets "anything that works as a Linux
+//! command-line work on a container" (§IV) — modelled by the generic
+//! [`ShellAm`] used in tests and by the frameworks layer.
+
+use crate::error::Result;
+use crate::util::time::Micros;
+use crate::yarn::container::{Container, ContainerKind, ContainerRequest};
+use crate::yarn::rm::ResourceManager;
+use crate::util::ids::AppId;
+
+/// Progress report returned by an AM step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AmProgress {
+    /// 0.0 – 1.0.
+    pub progress: f64,
+    pub done: bool,
+}
+
+/// The AM protocol: the driver (wrapper / engine) pumps `step` until done.
+pub trait AppMaster {
+    /// App this AM manages.
+    fn app(&self) -> AppId;
+
+    /// One heartbeat: request/receive containers from the RM, advance
+    /// whatever work is in flight, release finished containers.
+    fn step(&mut self, rm: &mut ResourceManager, now: Micros) -> Result<AmProgress>;
+
+    /// Handle containers lost to a node failure.
+    fn on_containers_lost(&mut self, lost: &[Container]);
+}
+
+/// A trivial AM that runs `n_tasks` generic containers of fixed size, each
+/// completing after one step — the "custom flow" (non-MapReduce) execution
+/// path, and the AM used by daemon-level tests.
+pub struct ShellAm {
+    app: AppId,
+    want: u32,
+    running: Vec<Container>,
+    completed: u32,
+    resource_mb: u64,
+}
+
+impl ShellAm {
+    pub fn new(app: AppId, n_tasks: u32, resource_mb: u64) -> Self {
+        ShellAm {
+            app,
+            want: n_tasks,
+            running: Vec::new(),
+            completed: 0,
+            resource_mb,
+        }
+    }
+
+    pub fn completed(&self) -> u32 {
+        self.completed
+    }
+}
+
+impl AppMaster for ShellAm {
+    fn app(&self) -> AppId {
+        self.app
+    }
+
+    fn step(&mut self, rm: &mut ResourceManager, now: Micros) -> Result<AmProgress> {
+        // Complete whatever ran last step.
+        for c in self.running.drain(..) {
+            rm.release(self.app, c.id)?;
+            self.completed += 1;
+        }
+        let remaining = self.want - self.completed;
+        if remaining == 0 {
+            return Ok(AmProgress {
+                progress: 1.0,
+                done: true,
+            });
+        }
+        let got = rm.allocate(
+            self.app,
+            ContainerRequest {
+                resource: crate::yarn::container::Resource::new(self.resource_mb, 1),
+                count: remaining,
+            },
+            ContainerKind::Generic,
+            now,
+        )?;
+        self.running = got;
+        Ok(AmProgress {
+            progress: self.completed as f64 / self.want as f64,
+            done: false,
+        })
+    }
+
+    fn on_containers_lost(&mut self, lost: &[Container]) {
+        // Lost tasks are simply not counted; they will be re-requested.
+        self.running.retain(|c| !lost.iter().any(|l| l.id == c.id));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeId;
+    use crate::config::YarnConfig;
+    use crate::metrics::Metrics;
+    use crate::util::ids::IdGen;
+    use std::sync::Arc;
+
+    fn rm(nodes: u32) -> ResourceManager {
+        let mut rm = ResourceManager::new(
+            YarnConfig::default(),
+            Arc::new(IdGen::default()),
+            Arc::new(Metrics::new()),
+        );
+        for i in 0..nodes {
+            rm.register_nm(NodeId(i), Micros::ZERO).unwrap();
+        }
+        rm
+    }
+
+    #[test]
+    fn shell_am_completes_all_tasks() {
+        let mut rm = rm(2);
+        let h = rm.submit_app("shell", "u", Micros::ZERO).unwrap();
+        let mut am = ShellAm::new(h.app, 50, 2048);
+        let mut steps = 0;
+        loop {
+            let p = am.step(&mut rm, Micros::secs(steps)).unwrap();
+            steps += 1;
+            if p.done {
+                break;
+            }
+            assert!(steps < 100, "AM not converging");
+        }
+        assert_eq!(am.completed(), 50);
+        rm.finish_app(h.app, crate::yarn::rm::AppState::Finished, Micros::secs(steps))
+            .unwrap();
+        rm.check_invariants().unwrap();
+        // Takes multiple waves: 2 nodes can't host 50 × 2 GB at once.
+        assert!(steps > 2);
+    }
+
+    #[test]
+    fn lost_containers_are_rerun() {
+        let mut rm = rm(2);
+        let h = rm.submit_app("shell", "u", Micros::ZERO).unwrap();
+        let mut am = ShellAm::new(h.app, 20, 2048);
+        am.step(&mut rm, Micros::ZERO).unwrap(); // wave 1 in flight
+        // Fail one node: its containers vanish.
+        let lost = rm.node_failed(NodeId(0));
+        assert!(!lost.is_empty());
+        am.on_containers_lost(&lost);
+        let mut done = false;
+        for s in 0..100 {
+            let p = am.step(&mut rm, Micros::secs(s)).unwrap();
+            if p.done {
+                done = true;
+                break;
+            }
+        }
+        assert!(done);
+        assert_eq!(am.completed(), 20);
+        rm.check_invariants().unwrap();
+    }
+}

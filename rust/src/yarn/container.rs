@@ -1,0 +1,101 @@
+//! Containers and resource vectors.
+
+use crate::cluster::NodeId;
+use crate::util::ids::ContainerId;
+
+/// A (memory, vcores) resource vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Resource {
+    pub mem_mb: u64,
+    pub vcores: u32,
+}
+
+impl Resource {
+    pub fn new(mem_mb: u64, vcores: u32) -> Self {
+        Resource { mem_mb, vcores }
+    }
+
+    pub fn zero() -> Self {
+        Resource { mem_mb: 0, vcores: 0 }
+    }
+
+    pub fn fits_in(&self, avail: Resource) -> bool {
+        self.mem_mb <= avail.mem_mb && self.vcores <= avail.vcores
+    }
+
+    pub fn add(&mut self, other: Resource) {
+        self.mem_mb += other.mem_mb;
+        self.vcores += other.vcores;
+    }
+
+    /// Subtract, panicking on underflow (an accounting bug, not a user
+    /// error — property tests hunt for exactly this).
+    pub fn sub(&mut self, other: Resource) {
+        self.mem_mb = self
+            .mem_mb
+            .checked_sub(other.mem_mb)
+            .expect("resource mem underflow");
+        self.vcores = self
+            .vcores
+            .checked_sub(other.vcores)
+            .expect("resource vcore underflow");
+    }
+}
+
+/// An outstanding ask from an AM: `count` containers of `resource` each.
+/// (Locality hints omitted: on Lustre every node is equidistant from the
+/// data, which is precisely the paper's §III storage argument.)
+#[derive(Debug, Clone, Copy)]
+pub struct ContainerRequest {
+    pub resource: Resource,
+    pub count: u32,
+}
+
+/// The purpose a container was granted for (display / history).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerKind {
+    AppMaster,
+    Map,
+    Reduce,
+    Generic,
+}
+
+/// A granted container.
+#[derive(Debug, Clone, Copy)]
+pub struct Container {
+    pub id: ContainerId,
+    pub node: NodeId,
+    pub resource: Resource,
+    pub kind: ContainerKind,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_in_both_dimensions() {
+        let small = Resource::new(1024, 1);
+        let big = Resource::new(4096, 4);
+        assert!(small.fits_in(big));
+        assert!(!big.fits_in(small));
+        assert!(!Resource::new(1024, 8).fits_in(Resource::new(8192, 4)));
+    }
+
+    #[test]
+    fn add_sub_round_trip() {
+        let mut r = Resource::new(8192, 8);
+        let c = Resource::new(2048, 2);
+        r.sub(c);
+        assert_eq!(r, Resource::new(6144, 6));
+        r.add(c);
+        assert_eq!(r, Resource::new(8192, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn sub_underflow_is_a_bug() {
+        let mut r = Resource::new(1024, 1);
+        r.sub(Resource::new(2048, 1));
+    }
+}

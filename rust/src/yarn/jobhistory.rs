@@ -1,0 +1,237 @@
+//! The Job History Server.
+//!
+//! §V: "The framework also starts the Job History Server which maintains
+//! information about MapReduce jobs after their AM terminates; this is
+//! useful in our case to debug the application." The wrapper starts it on
+//! the second allocated node; reports are also persisted as JSON into the
+//! done-directory on the shared filesystem so they outlive the dynamic
+//! cluster (that persistence is what makes post-teardown debugging work).
+
+use crate::codec::json::Json;
+use crate::error::{Error, Result};
+use crate::lustre::Dfs;
+use crate::util::ids::AppId;
+use crate::util::time::Micros;
+use crate::yarn::rm::AppState;
+use std::collections::BTreeMap;
+
+/// A finished-application report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppReport {
+    pub app: AppId,
+    pub name: String,
+    pub user: String,
+    pub state: AppState,
+    pub submitted_at: Micros,
+    pub finished_at: Micros,
+    /// Selected counters (maps launched, reduce bytes, ...).
+    pub counters: Vec<(String, u64)>,
+}
+
+impl AppReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::str(self.app.to_string())),
+            ("name", Json::str(&*self.name)),
+            ("user", Json::str(&*self.user)),
+            ("state", Json::str(format!("{:?}", self.state))),
+            ("submitted_us", Json::num(self.submitted_at.0 as f64)),
+            ("finished_us", Json::num(self.finished_at.0 as f64)),
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<AppReport> {
+        let app_str = j.req_str("app")?;
+        let app = parse_app_id(app_str)?;
+        let state = match j.req_str("state")? {
+            "Finished" => AppState::Finished,
+            "Failed" => AppState::Failed,
+            "Killed" => AppState::Killed,
+            other => return Err(Error::Codec(format!("bad app state '{other}'"))),
+        };
+        let counters = match j.get("counters") {
+            Some(Json::Obj(pairs)) => pairs
+                .iter()
+                .filter_map(|(k, v)| v.as_u64().map(|n| (k.clone(), n)))
+                .collect(),
+            _ => Vec::new(),
+        };
+        Ok(AppReport {
+            app,
+            name: j.req_str("name")?.to_string(),
+            user: j.req_str("user")?.to_string(),
+            state,
+            submitted_at: Micros(j.req_u64("submitted_us")?),
+            finished_at: Micros(j.req_u64("finished_us")?),
+            counters,
+        })
+    }
+}
+
+fn parse_app_id(s: &str) -> Result<AppId> {
+    let parts: Vec<&str> = s.split('_').collect();
+    if parts.len() != 3 || parts[0] != "application" {
+        return Err(Error::Codec(format!("bad app id '{s}'")));
+    }
+    Ok(AppId {
+        epoch: parts[1]
+            .parse()
+            .map_err(|_| Error::Codec(format!("bad app id '{s}'")))?,
+        seq: parts[2]
+            .parse()
+            .map_err(|_| Error::Codec(format!("bad app id '{s}'")))?,
+    })
+}
+
+/// The JHS daemon.
+pub struct JobHistoryServer {
+    reports: BTreeMap<AppId, AppReport>,
+    /// Done-dir on the shared filesystem.
+    done_dir: String,
+    running: bool,
+}
+
+impl JobHistoryServer {
+    pub fn new(done_dir: &str) -> Self {
+        JobHistoryServer {
+            reports: BTreeMap::new(),
+            done_dir: done_dir.to_string(),
+            running: false,
+        }
+    }
+
+    pub fn start(&mut self, dfs: &dyn Dfs) -> Result<()> {
+        dfs.mkdirs(&self.done_dir)?;
+        self.running = true;
+        Ok(())
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.running
+    }
+
+    /// Record a finished app and persist the JSON report.
+    pub fn record(&mut self, report: AppReport, dfs: &dyn Dfs) -> Result<()> {
+        if !self.running {
+            return Err(Error::Yarn("JobHistoryServer not running".into()));
+        }
+        let path = format!("{}/{}.json", self.done_dir, report.app);
+        dfs.create(&path, report.to_json().to_string().as_bytes())?;
+        self.reports.insert(report.app, report);
+        Ok(())
+    }
+
+    /// In-memory lookup (the JHS web-UI analog).
+    pub fn get(&self, app: AppId) -> Option<&AppReport> {
+        self.reports.get(&app)
+    }
+
+    pub fn count(&self) -> usize {
+        self.reports.len()
+    }
+
+    /// Rebuild state from the done-dir (a fresh JHS after teardown — this
+    /// is how history survives the dynamic cluster).
+    pub fn reload(&mut self, dfs: &dyn Dfs) -> Result<usize> {
+        self.reports.clear();
+        for path in dfs.list(&self.done_dir) {
+            if !path.ends_with(".json") {
+                continue;
+            }
+            let bytes = dfs.read(&path)?;
+            let text = String::from_utf8(bytes)
+                .map_err(|_| Error::Codec(format!("non-utf8 report {path}")))?;
+            let report = AppReport::from_json(&Json::parse(&text)?)?;
+            self.reports.insert(report.app, report);
+        }
+        self.running = true;
+        Ok(self.reports.len())
+    }
+
+    pub fn stop(&mut self) {
+        self.running = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+    use crate::lustre::LustreFs;
+
+    fn dfs() -> LustreFs {
+        let c = StackConfig::paper();
+        LustreFs::new(&c.lustre, &c.cluster)
+    }
+
+    fn report(seq: u64) -> AppReport {
+        AppReport {
+            app: AppId {
+                epoch: 1_425_168_000,
+                seq,
+            },
+            name: "terasort".into(),
+            user: "sid".into(),
+            state: AppState::Finished,
+            submitted_at: Micros::secs(10),
+            finished_at: Micros::secs(500),
+            counters: vec![("maps".into(), 1664), ("reduces".into(), 832)],
+        }
+    }
+
+    #[test]
+    fn record_persists_and_reloads() {
+        let fs = dfs();
+        let done = "/lustre/scratch/hpcw/history/done";
+        let mut jhs = JobHistoryServer::new(done);
+        jhs.start(&fs).unwrap();
+        jhs.record(report(1), &fs).unwrap();
+        jhs.record(report(2), &fs).unwrap();
+        assert_eq!(jhs.count(), 2);
+
+        // Teardown kills the JHS; a later one reloads from Lustre.
+        let mut jhs2 = JobHistoryServer::new(done);
+        let n = jhs2.reload(&fs).unwrap();
+        assert_eq!(n, 2);
+        let r = jhs2
+            .get(AppId {
+                epoch: 1_425_168_000,
+                seq: 1,
+            })
+            .unwrap();
+        assert_eq!(r.name, "terasort");
+        assert_eq!(r.counters[0], ("maps".to_string(), 1664));
+        assert_eq!(r.state, AppState::Finished);
+    }
+
+    #[test]
+    fn record_requires_running() {
+        let fs = dfs();
+        let mut jhs = JobHistoryServer::new("/lustre/scratch/done2");
+        assert!(jhs.record(report(1), &fs).is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let r = report(7);
+        let j = r.to_json();
+        let back = AppReport::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn bad_app_id_rejected() {
+        assert!(parse_app_id("application_x_1").is_err());
+        assert!(parse_app_id("job_1_1").is_err());
+        assert!(parse_app_id("application_1425168000_0004").is_ok());
+    }
+}

@@ -1,0 +1,25 @@
+//! YARN: the container-based resource layer (Hadoop 2.5.1 architecture).
+//!
+//! §V of the paper: "The Resource Manager (RM) and per-node slave, and the
+//! Node Manager (NM) are the main components of the data-computation
+//! framework. ... An Application Master Server is instantiated on one of
+//! the nodes ... The core computational tasks are performed in the
+//! Containers instantiated on the slaves. The framework also starts the
+//! Job History Server."
+//!
+//! The daemons here are synchronous state machines; Sim mode drives them
+//! from scheduled heartbeat events, Real mode calls them directly. Either
+//! way the *same* allocation/bookkeeping code runs — that is what lets the
+//! Real-mode end-to-end test vouch for the Sim-mode figures.
+
+pub mod am;
+pub mod container;
+pub mod jobhistory;
+pub mod nm;
+pub mod rm;
+
+pub use am::{AmProgress, AppMaster};
+pub use container::{Container, ContainerRequest, Resource};
+pub use jobhistory::{AppReport, JobHistoryServer};
+pub use nm::NodeManager;
+pub use rm::{AppHandle, ResourceManager};

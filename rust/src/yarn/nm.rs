@@ -1,0 +1,209 @@
+//! The NodeManager: per-node daemon that launches containers and owns the
+//! node-local directory structure.
+//!
+//! The paper's "Data Movement" paragraph places the operational directories
+//! on node-local DAS (AM logs, NameNode/RM logs, NM data dirs) while job
+//! data lives on Lustre; the wrapper creates this structure on every node.
+//! Each NM carries its own [`MemStore`] as the node's local disk so that
+//! directory setup and log aggregation are real operations the tests can
+//! assert on.
+
+use crate::cluster::NodeId;
+use crate::error::{Error, Result};
+use crate::lustre::MemStore;
+use crate::util::ids::ContainerId;
+use crate::util::time::Micros;
+use std::collections::BTreeMap;
+
+/// Local directory layout the wrapper creates on every node (paper §III
+/// "Data Movement": Application Master Log Directory, Name Node Log
+/// Directory, Resource Manager Log Directory, Name Node Data Directory —
+/// plus the NM work dirs YARN itself needs).
+pub const LOCAL_DIRS: &[&str] = &[
+    "/tmp/hpcw/yarn/nm-local",
+    "/tmp/hpcw/yarn/nm-logs",
+    "/tmp/hpcw/yarn/am-logs",
+    "/tmp/hpcw/yarn/rm-logs",
+    "/tmp/hpcw/hdfs/nn-logs",
+    "/tmp/hpcw/hdfs/nn-data",
+];
+
+/// State of one container on the node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LocalContainerState {
+    Localizing,
+    Running,
+    Completed,
+    Failed,
+}
+
+/// The NM daemon state for one node.
+pub struct NodeManager {
+    pub node: NodeId,
+    /// The node's local filesystem (DAS).
+    pub local_fs: MemStore,
+    containers: BTreeMap<ContainerId, LocalContainerState>,
+    started_at: Option<Micros>,
+    dirs_ready: bool,
+}
+
+impl NodeManager {
+    pub fn new(node: NodeId) -> Self {
+        NodeManager {
+            node,
+            local_fs: MemStore::new(),
+            containers: BTreeMap::new(),
+            started_at: None,
+            dirs_ready: false,
+        }
+    }
+
+    /// Wrapper step: create the local directory structure. Must happen
+    /// before the daemon starts.
+    pub fn setup_dirs(&mut self) -> Result<u32> {
+        let mut created = 0;
+        for d in LOCAL_DIRS {
+            self.local_fs.mkdirs(d)?;
+            created += 1;
+        }
+        self.dirs_ready = true;
+        Ok(created)
+    }
+
+    /// Daemon start (wrapper records the time; Sim mode adds the modelled
+    /// JVM latency before calling this).
+    pub fn start(&mut self, now: Micros) -> Result<()> {
+        if !self.dirs_ready {
+            return Err(Error::Yarn(format!(
+                "NM {}: local dirs missing — wrapper must set up before start",
+                self.node
+            )));
+        }
+        if self.started_at.is_some() {
+            return Err(Error::Yarn(format!("NM {} already started", self.node)));
+        }
+        self.started_at = Some(now);
+        Ok(())
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.started_at.is_some()
+    }
+
+    /// Container launch: localization then run.
+    pub fn launch(&mut self, id: ContainerId) -> Result<()> {
+        if self.started_at.is_none() {
+            return Err(Error::Yarn(format!("NM {} not running", self.node)));
+        }
+        if self.containers.contains_key(&id) {
+            return Err(Error::Yarn(format!("container {id} already on {}", self.node)));
+        }
+        self.containers.insert(id, LocalContainerState::Running);
+        Ok(())
+    }
+
+    /// Container completion; writes a stub log into the AM log dir (so log
+    /// aggregation has something real to aggregate).
+    pub fn complete(&mut self, id: ContainerId, ok: bool) -> Result<()> {
+        let state = self
+            .containers
+            .get_mut(&id)
+            .ok_or_else(|| Error::Yarn(format!("unknown container {id} on {}", self.node)))?;
+        if *state != LocalContainerState::Running {
+            return Err(Error::Yarn(format!("container {id} is not running")));
+        }
+        *state = if ok {
+            LocalContainerState::Completed
+        } else {
+            LocalContainerState::Failed
+        };
+        let log = format!("/tmp/hpcw/yarn/nm-logs/{id}.log");
+        let body = format!("container {id} exit={}", if ok { 0 } else { 1 });
+        self.local_fs.create(&log, body.as_bytes())?;
+        Ok(())
+    }
+
+    pub fn running_containers(&self) -> usize {
+        self.containers
+            .values()
+            .filter(|s| **s == LocalContainerState::Running)
+            .count()
+    }
+
+    pub fn container_state(&self, id: ContainerId) -> Option<LocalContainerState> {
+        self.containers.get(&id).copied()
+    }
+
+    /// Daemon stop + workspace cleanup (wrapper teardown). Refuses while
+    /// containers run.
+    pub fn stop_and_clean(&mut self) -> Result<u64> {
+        if self.running_containers() > 0 {
+            return Err(Error::Yarn(format!(
+                "NM {}: {} containers still running",
+                self.node,
+                self.running_containers()
+            )));
+        }
+        self.started_at = None;
+        self.dirs_ready = false;
+        self.containers.clear();
+        self.local_fs.delete_recursive("/tmp/hpcw")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::IdGen;
+
+    fn cid(seq: u64) -> ContainerId {
+        IdGen::default().app().attempt(1).container(seq)
+    }
+
+    #[test]
+    fn start_requires_dirs() {
+        let mut nm = NodeManager::new(NodeId(0));
+        assert!(nm.start(Micros::ZERO).is_err());
+        assert_eq!(nm.setup_dirs().unwrap(), 6);
+        nm.start(Micros::ZERO).unwrap();
+        assert!(nm.is_running());
+        assert!(nm.start(Micros::ZERO).is_err()); // double start
+    }
+
+    #[test]
+    fn launch_complete_cycle_writes_logs() {
+        let mut nm = NodeManager::new(NodeId(1));
+        nm.setup_dirs().unwrap();
+        nm.start(Micros::ZERO).unwrap();
+        let c = cid(2);
+        nm.launch(c).unwrap();
+        assert_eq!(nm.running_containers(), 1);
+        nm.complete(c, true).unwrap();
+        assert_eq!(nm.running_containers(), 0);
+        assert_eq!(nm.container_state(c), Some(LocalContainerState::Completed));
+        let logs = nm.local_fs.list("/tmp/hpcw/yarn/nm-logs");
+        assert_eq!(logs.len(), 1);
+    }
+
+    #[test]
+    fn teardown_refuses_live_containers_then_cleans() {
+        let mut nm = NodeManager::new(NodeId(2));
+        nm.setup_dirs().unwrap();
+        nm.start(Micros::ZERO).unwrap();
+        let c = cid(2);
+        nm.launch(c).unwrap();
+        assert!(nm.stop_and_clean().is_err());
+        nm.complete(c, false).unwrap();
+        let removed = nm.stop_and_clean().unwrap();
+        assert!(removed >= 7); // 6 dirs + ≥1 log + parents
+        assert!(!nm.is_running());
+        assert!(!nm.local_fs.exists("/tmp/hpcw"));
+    }
+
+    #[test]
+    fn launch_before_start_rejected() {
+        let mut nm = NodeManager::new(NodeId(3));
+        nm.setup_dirs().unwrap();
+        assert!(nm.launch(cid(2)).is_err());
+    }
+}

@@ -1,0 +1,541 @@
+//! The Resource Manager: NM registry, application lifecycle, container
+//! scheduling ("the arbitration of resources", §V).
+
+use crate::cluster::NodeId;
+use crate::config::YarnConfig;
+use crate::error::{Error, Result};
+use crate::metrics::Metrics;
+use crate::util::ids::{AppAttemptId, AppId, ContainerId, IdGen};
+use crate::util::time::Micros;
+use crate::yarn::container::{Container, ContainerKind, ContainerRequest, Resource};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Per-NM state tracked by the RM.
+#[derive(Debug, Clone)]
+struct NmRecord {
+    capacity: Resource,
+    used: Resource,
+    containers: Vec<ContainerId>,
+    last_heartbeat: Micros,
+}
+
+/// Application lifecycle as the RM sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppState {
+    Submitted,
+    Running,
+    Finished,
+    Failed,
+    Killed,
+}
+
+/// Per-application record.
+#[derive(Debug)]
+struct AppRecord {
+    attempt: AppAttemptId,
+    user: String,
+    name: String,
+    state: AppState,
+    am_container: Option<Container>,
+    containers: BTreeMap<ContainerId, Container>,
+    next_container_seq: u64,
+    submitted_at: Micros,
+    finished_at: Option<Micros>,
+}
+
+/// Handle returned on submission.
+#[derive(Debug, Clone, Copy)]
+pub struct AppHandle {
+    pub app: AppId,
+    pub attempt: AppAttemptId,
+    pub am_container: Container,
+}
+
+/// The RM daemon.
+pub struct ResourceManager {
+    cfg: YarnConfig,
+    nodes: BTreeMap<NodeId, NmRecord>,
+    apps: BTreeMap<AppId, AppRecord>,
+    ids: Arc<IdGen>,
+    metrics: Arc<Metrics>,
+    /// Round-robin cursor for container spreading.
+    rr_cursor: usize,
+}
+
+impl ResourceManager {
+    pub fn new(cfg: YarnConfig, ids: Arc<IdGen>, metrics: Arc<Metrics>) -> Self {
+        ResourceManager {
+            cfg,
+            nodes: BTreeMap::new(),
+            apps: BTreeMap::new(),
+            ids,
+            metrics,
+            rr_cursor: 0,
+        }
+    }
+
+    /// NM registration (wrapper step: each slave's NM registers after
+    /// starting). Capacity comes from the paper's `nm_resource_mb`/vcores.
+    pub fn register_nm(&mut self, node: NodeId, now: Micros) -> Result<()> {
+        if self.nodes.contains_key(&node) {
+            return Err(Error::Yarn(format!("NM on {node} already registered")));
+        }
+        self.nodes.insert(
+            node,
+            NmRecord {
+                capacity: Resource::new(self.cfg.nm_resource_mb, self.cfg.nm_vcores),
+                used: Resource::zero(),
+                containers: Vec::new(),
+                last_heartbeat: now,
+            },
+        );
+        self.metrics.inc("rm.nm_registered", 1);
+        Ok(())
+    }
+
+    pub fn nm_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Total and used resources across the cluster.
+    pub fn cluster_resources(&self) -> (Resource, Resource) {
+        let mut cap = Resource::zero();
+        let mut used = Resource::zero();
+        for r in self.nodes.values() {
+            cap.add(r.capacity);
+            used.add(r.used);
+        }
+        (cap, used)
+    }
+
+    /// Submit an application: allocates the AM container (8192 MB per the
+    /// paper's table) and returns the handle.
+    pub fn submit_app(&mut self, name: &str, user: &str, now: Micros) -> Result<AppHandle> {
+        let app = self.ids.app();
+        let attempt = app.attempt(1);
+        let am_resource = Resource::new(self.cfg.round_allocation(self.cfg.am_resource_mb), 1);
+        let am = self
+            .place(attempt, am_resource, ContainerKind::AppMaster, 1)
+            .pop()
+            .ok_or_else(|| Error::Yarn("no NM can host the ApplicationMaster".into()))?;
+        let mut record = AppRecord {
+            attempt,
+            user: user.to_string(),
+            name: name.to_string(),
+            state: AppState::Running,
+            am_container: Some(am),
+            containers: BTreeMap::new(),
+            next_container_seq: 2, // container 1 is the AM
+            submitted_at: now,
+            finished_at: None,
+        };
+        record.containers.insert(am.id, am);
+        self.apps.insert(app, record);
+        self.metrics.inc("rm.apps_submitted", 1);
+        self.metrics.event(now, "yarn.rm", &format!("app {app} AM on {}", am.node));
+        Ok(AppHandle {
+            app,
+            attempt,
+            am_container: am,
+        })
+    }
+
+    /// AM heartbeat: ask for containers. Grants as many as fit right now
+    /// (the rest should be re-requested — YARN semantics).
+    pub fn allocate(
+        &mut self,
+        app: AppId,
+        ask: ContainerRequest,
+        kind: ContainerKind,
+        now: Micros,
+    ) -> Result<Vec<Container>> {
+        let state = self
+            .apps
+            .get(&app)
+            .ok_or_else(|| Error::Yarn(format!("unknown app {app}")))?
+            .state;
+        if state != AppState::Running {
+            return Err(Error::Yarn(format!("app {app} is not running")));
+        }
+        let attempt = self.apps[&app].attempt;
+        let rounded = Resource::new(
+            self.cfg.round_allocation(ask.resource.mem_mb),
+            ask.resource.vcores.max(self.cfg.min_alloc_vcores),
+        );
+        let granted = self.place(attempt, rounded, kind, ask.count);
+        let rec = self.apps.get_mut(&app).unwrap();
+        for c in &granted {
+            rec.containers.insert(c.id, *c);
+        }
+        self.metrics.inc("rm.containers_allocated", granted.len() as u64);
+        let _ = now;
+        Ok(granted)
+    }
+
+    /// Place up to `count` containers round-robin across NMs with room.
+    fn place(
+        &mut self,
+        attempt: AppAttemptId,
+        resource: Resource,
+        kind: ContainerKind,
+        count: u32,
+    ) -> Vec<Container> {
+        let node_ids: Vec<NodeId> = self.nodes.keys().copied().collect();
+        if node_ids.is_empty() {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let mut misses = 0usize;
+        while out.len() < count as usize && misses < node_ids.len() {
+            let node = node_ids[self.rr_cursor % node_ids.len()];
+            self.rr_cursor = (self.rr_cursor + 1) % node_ids.len();
+            let rec = self.nodes.get_mut(&node).unwrap();
+            let mut avail = rec.capacity;
+            avail.sub(rec.used);
+            if resource.fits_in(avail) {
+                misses = 0;
+                let seq = {
+                    // Container seq is per-attempt; track via the app record
+                    // when present (AM placement happens pre-record).
+                    let app_rec = self.apps.get_mut(&attempt.app);
+                    match app_rec {
+                        Some(r) => {
+                            let s = r.next_container_seq;
+                            r.next_container_seq += 1;
+                            s
+                        }
+                        None => 1,
+                    }
+                };
+                let id = attempt.container(seq);
+                rec.used.add(resource);
+                rec.containers.push(id);
+                out.push(Container {
+                    id,
+                    node,
+                    resource,
+                    kind,
+                });
+            } else {
+                misses += 1;
+            }
+        }
+        out
+    }
+
+    /// Container completion/release from the AM.
+    pub fn release(&mut self, app: AppId, container: ContainerId) -> Result<()> {
+        let rec = self
+            .apps
+            .get_mut(&app)
+            .ok_or_else(|| Error::Yarn(format!("unknown app {app}")))?;
+        let c = rec
+            .containers
+            .remove(&container)
+            .ok_or_else(|| Error::Yarn(format!("app {app} does not own {container}")))?;
+        if rec.am_container.map(|a| a.id) == Some(container) {
+            rec.am_container = None;
+        }
+        let node = self
+            .nodes
+            .get_mut(&c.node)
+            .ok_or_else(|| Error::Yarn(format!("container on unknown node {}", c.node)))?;
+        node.used.sub(c.resource);
+        node.containers.retain(|&cid| cid != container);
+        self.metrics.inc("rm.containers_released", 1);
+        Ok(())
+    }
+
+    /// App completion: release everything still held.
+    pub fn finish_app(&mut self, app: AppId, state: AppState, now: Micros) -> Result<()> {
+        let held: Vec<ContainerId> = self
+            .apps
+            .get(&app)
+            .ok_or_else(|| Error::Yarn(format!("unknown app {app}")))?
+            .containers
+            .keys()
+            .copied()
+            .collect();
+        for c in held {
+            self.release(app, c)?;
+        }
+        let rec = self.apps.get_mut(&app).unwrap();
+        rec.state = state;
+        rec.finished_at = Some(now);
+        self.metrics.inc("rm.apps_finished", 1);
+        Ok(())
+    }
+
+    /// NM heartbeat (liveness).
+    pub fn nm_heartbeat(&mut self, node: NodeId, now: Micros) -> Result<()> {
+        let rec = self
+            .nodes
+            .get_mut(&node)
+            .ok_or_else(|| Error::Yarn(format!("heartbeat from unknown NM {node}")))?;
+        rec.last_heartbeat = now;
+        Ok(())
+    }
+
+    /// Node failure: drop the NM and return the containers lost (the AM
+    /// must re-run those tasks).
+    pub fn node_failed(&mut self, node: NodeId) -> Vec<Container> {
+        let Some(rec) = self.nodes.remove(&node) else {
+            return Vec::new();
+        };
+        let mut lost = Vec::new();
+        for cid in rec.containers {
+            for app in self.apps.values_mut() {
+                if let Some(c) = app.containers.remove(&cid) {
+                    if app.am_container.map(|a| a.id) == Some(cid) {
+                        app.am_container = None;
+                    }
+                    lost.push(c);
+                }
+            }
+        }
+        self.metrics.inc("rm.nodes_lost", 1);
+        lost
+    }
+
+    /// Deregister all NMs (wrapper teardown). Errors if containers are
+    /// still running — teardown must come after app completion.
+    pub fn shutdown(&mut self) -> Result<()> {
+        for (node, rec) in &self.nodes {
+            if !rec.containers.is_empty() {
+                return Err(Error::Yarn(format!(
+                    "NM {node} still hosts {} containers at shutdown",
+                    rec.containers.len()
+                )));
+            }
+        }
+        self.nodes.clear();
+        Ok(())
+    }
+
+    pub fn app_state(&self, app: AppId) -> Option<AppState> {
+        self.apps.get(&app).map(|a| a.state)
+    }
+
+    pub fn app_info(&self, app: AppId) -> Option<(String, String, AppState, Micros, Option<Micros>)> {
+        self.apps.get(&app).map(|a| {
+            (
+                a.name.clone(),
+                a.user.clone(),
+                a.state,
+                a.submitted_at,
+                a.finished_at,
+            )
+        })
+    }
+
+    /// Containers currently held by an app.
+    pub fn app_containers(&self, app: AppId) -> Vec<Container> {
+        self.apps
+            .get(&app)
+            .map(|a| a.containers.values().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// Accounting invariant: per-node used == Σ resources of the app
+    /// containers placed there, and never exceeds capacity.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut per_node: BTreeMap<NodeId, Resource> = BTreeMap::new();
+        for app in self.apps.values() {
+            for c in app.containers.values() {
+                per_node.entry(c.node).or_insert_with(Resource::zero).add(c.resource);
+            }
+        }
+        for (node, rec) in &self.nodes {
+            let expect = per_node.get(node).copied().unwrap_or_else(Resource::zero);
+            if rec.used != expect {
+                return Err(Error::Yarn(format!(
+                    "node {node}: used {:?} != containers {:?}",
+                    rec.used, expect
+                )));
+            }
+            if rec.used.mem_mb > rec.capacity.mem_mb || rec.used.vcores > rec.capacity.vcores {
+                return Err(Error::Yarn(format!("node {node} over-committed")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::props;
+
+    fn rm_with(nodes: u32) -> ResourceManager {
+        let mut rm = ResourceManager::new(
+            YarnConfig::default(),
+            Arc::new(IdGen::default()),
+            Arc::new(Metrics::new()),
+        );
+        for i in 0..nodes {
+            rm.register_nm(NodeId(i), Micros::ZERO).unwrap();
+        }
+        rm
+    }
+
+    #[test]
+    fn submit_allocates_am() {
+        let mut rm = rm_with(4);
+        let h = rm.submit_app("terasort", "sid", Micros::ZERO).unwrap();
+        assert_eq!(h.am_container.resource.mem_mb, 8192);
+        assert_eq!(rm.app_state(h.app), Some(AppState::Running));
+        rm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocation_honours_paper_limits() {
+        let mut rm = rm_with(1);
+        let h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        // Node: 52 GB. AM takes 8 GB → 44 GB left → 11 maps of 4 GB.
+        let got = rm
+            .allocate(
+                h.app,
+                ContainerRequest {
+                    resource: Resource::new(4096, 1),
+                    count: 100,
+                },
+                ContainerKind::Map,
+                Micros::ZERO,
+            )
+            .unwrap();
+        assert_eq!(got.len(), 11);
+        rm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn vcores_cap_allocation() {
+        let mut rm = rm_with(1);
+        let h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        // 2 GB containers: memory allows (52-8)/2 = 22, vcores allow 15
+        // more (16 - 1 AM).
+        let got = rm
+            .allocate(
+                h.app,
+                ContainerRequest {
+                    resource: Resource::new(2048, 1),
+                    count: 100,
+                },
+                ContainerKind::Map,
+                Micros::ZERO,
+            )
+            .unwrap();
+        assert_eq!(got.len(), 15);
+    }
+
+    #[test]
+    fn release_returns_resources() {
+        let mut rm = rm_with(2);
+        let h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        let got = rm
+            .allocate(
+                h.app,
+                ContainerRequest {
+                    resource: Resource::new(4096, 1),
+                    count: 4,
+                },
+                ContainerKind::Map,
+                Micros::ZERO,
+            )
+            .unwrap();
+        let (cap, used_before) = rm.cluster_resources();
+        for c in &got {
+            rm.release(h.app, c.id).unwrap();
+        }
+        let (_, used_after) = rm.cluster_resources();
+        assert_eq!(used_after.mem_mb, used_before.mem_mb - 4 * 4096);
+        assert!(used_after.mem_mb <= cap.mem_mb);
+        rm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn finish_app_releases_everything() {
+        let mut rm = rm_with(3);
+        let h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        rm.allocate(
+            h.app,
+            ContainerRequest {
+                resource: Resource::new(4096, 1),
+                count: 10,
+            },
+            ContainerKind::Map,
+            Micros::ZERO,
+        )
+        .unwrap();
+        rm.finish_app(h.app, AppState::Finished, Micros::secs(60)).unwrap();
+        let (_, used) = rm.cluster_resources();
+        assert_eq!(used, Resource::zero());
+        rm.shutdown().unwrap();
+        assert_eq!(rm.nm_count(), 0);
+    }
+
+    #[test]
+    fn shutdown_refuses_with_live_containers() {
+        let mut rm = rm_with(2);
+        let _h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        assert!(rm.shutdown().is_err());
+    }
+
+    #[test]
+    fn node_failure_loses_containers() {
+        let mut rm = rm_with(2);
+        let h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        let got = rm
+            .allocate(
+                h.app,
+                ContainerRequest {
+                    resource: Resource::new(4096, 1),
+                    count: 6,
+                },
+                ContainerKind::Map,
+                Micros::ZERO,
+            )
+            .unwrap();
+        let victim = got[0].node;
+        let lost = rm.node_failed(victim);
+        assert!(!lost.is_empty());
+        assert!(lost.iter().all(|c| c.node == victim));
+        rm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_register_rejected() {
+        let mut rm = rm_with(1);
+        assert!(rm.register_nm(NodeId(0), Micros::ZERO).is_err());
+    }
+
+    #[test]
+    fn allocation_never_overcommits_property() {
+        props(30, |g| {
+            let n = g.u32(1..6);
+            let mut rm = rm_with(n);
+            let h = rm.submit_app("p", "u", Micros::ZERO).unwrap();
+            for _ in 0..g.usize(1..15) {
+                let mem = g.u64(512..9000);
+                let count = g.u32(1..20);
+                let got = rm
+                    .allocate(
+                        h.app,
+                        ContainerRequest {
+                            resource: Resource::new(mem, 1),
+                            count,
+                        },
+                        ContainerKind::Generic,
+                        Micros::ZERO,
+                    )
+                    .unwrap();
+                if g.chance(0.4) {
+                    for c in got.iter().take(g.usize(0..got.len().max(1))) {
+                        rm.release(h.app, c.id).unwrap();
+                    }
+                }
+                rm.check_invariants().unwrap();
+            }
+        });
+    }
+}

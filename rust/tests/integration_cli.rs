@@ -1,0 +1,51 @@
+//! CLI smoke tests: the `hpcw` subcommands end to end (in-process).
+
+#[test]
+fn usage_on_no_command() {
+    assert_eq!(hpcw::cli::run(vec![]), 0);
+}
+
+#[test]
+fn unknown_subcommand_is_an_error() {
+    assert_eq!(hpcw::cli::run(vec!["frobnicate".into()]), 1);
+}
+
+#[test]
+fn wrapper_point_prints_and_succeeds() {
+    let code = hpcw::cli::run(vec![
+        "wrapper".into(),
+        "--nodes".into(),
+        "16".into(),
+    ]);
+    assert_eq!(code, 0);
+}
+
+#[test]
+fn terasort_cli_end_to_end() {
+    let code = hpcw::cli::run(vec![
+        "terasort".into(),
+        "--rows".into(),
+        "2000".into(),
+        "--nodes".into(),
+        "4".into(),
+        "--reduces".into(),
+        "3".into(),
+    ]);
+    assert_eq!(code, 0);
+}
+
+#[test]
+fn terasort_requires_rows() {
+    assert_eq!(hpcw::cli::run(vec!["terasort".into()]), 1);
+}
+
+#[test]
+fn hive_cli_reports_parse_errors() {
+    let code = hpcw::cli::run(vec![
+        "hive".into(),
+        "--sql".into(),
+        "DROP TABLE x".into(),
+        "--tiny".into(),
+    ]);
+    assert_eq!(code, 1);
+}

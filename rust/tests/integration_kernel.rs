@@ -1,0 +1,73 @@
+//! Kernel-path integration: the AOT Pallas `mapphase` artifact running
+//! inside the full stack (LSF → wrapper → YARN → MR with the PJRT block
+//! processor), validated by Teravalidate and parity-checked against the
+//! pure-Rust path. Skips gracefully when artifacts are not built.
+
+use hpcw::api::{AppPayload, Stack};
+use hpcw::config::StackConfig;
+use hpcw::lustre::Dfs;
+use hpcw::runtime::artifacts::default_dir;
+
+fn artifacts_built() -> bool {
+    default_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn kernel_terasort_validates_through_full_stack() {
+    if !artifacts_built() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut s = Stack::new(StackConfig::tiny()).unwrap();
+    let id = s
+        .submit(
+            6,
+            "kernel-user",
+            AppPayload::Terasort {
+                rows: 4_000,
+                maps: 3,
+                reduces: 5,
+                use_kernel: true,
+            },
+        )
+        .unwrap();
+    let r = s.run_to_completion(id, 10).unwrap();
+    assert!(r.validated);
+    assert_eq!(r.records, 4_000);
+}
+
+#[test]
+fn kernel_and_rust_paths_produce_identical_output() {
+    if !artifacts_built() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let run = |use_kernel: bool| {
+        let mut s = Stack::new(StackConfig::tiny()).unwrap();
+        let id = s
+            .submit(
+                6,
+                "parity",
+                AppPayload::Terasort {
+                    rows: 2_500,
+                    maps: 2,
+                    reduces: 3,
+                    use_kernel,
+                },
+            )
+            .unwrap();
+        let r = s.run_to_completion(id, 10).unwrap().clone();
+        // Concatenate all output bytes in part order.
+        let mut all = Vec::new();
+        let mut files = r.output_files.clone();
+        files.sort();
+        for f in files {
+            all.extend(s.read_output(&f).unwrap());
+        }
+        all
+    };
+    let rust = run(false);
+    let kernel = run(true);
+    assert_eq!(rust.len(), kernel.len());
+    assert_eq!(rust, kernel, "byte-identical sorted output on both paths");
+}

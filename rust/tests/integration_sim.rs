@@ -1,0 +1,112 @@
+//! Event-driven control-plane integration: the YARN daemons driven by the
+//! `simx::Sim` engine (heartbeats, liveness, staggered NM registration) —
+//! the Sim-mode twin of the wrapper's Real-mode daemon handling.
+
+use hpcw::cluster::NodeId;
+use hpcw::config::StackConfig;
+use hpcw::metrics::Metrics;
+use hpcw::simx::Sim;
+use hpcw::util::ids::IdGen;
+use hpcw::util::rng::Rng;
+use hpcw::util::time::Micros;
+use hpcw::wrapper::sim::sliding_window_makespan;
+use hpcw::yarn::ResourceManager;
+use std::sync::Arc;
+
+struct World {
+    rm: ResourceManager,
+    registrations: Vec<(NodeId, Micros)>,
+    heartbeats: u64,
+}
+
+#[test]
+fn staggered_nm_registration_through_event_engine() {
+    let cfg = StackConfig::paper();
+    let mut sim: Sim<World> = Sim::new();
+    let mut world = World {
+        rm: ResourceManager::new(
+            cfg.yarn.clone(),
+            Arc::new(IdGen::default()),
+            Arc::new(Metrics::new()),
+        ),
+        registrations: Vec::new(),
+        heartbeats: 0,
+    };
+
+    // Wrapper model: 30 slaves boot with log-normal jitter and register
+    // when up; each then heartbeats every nm_heartbeat_ms.
+    let mut rng = Rng::new(42);
+    let hb = Micros::ms(cfg.yarn.nm_heartbeat_ms);
+    for i in 0..30u32 {
+        let boot = Micros::from_secs_f64(rng.lognormal(1.5, 0.2));
+        sim.at(boot, move |w: &mut World, s| {
+            let node = NodeId(i);
+            w.rm.register_nm(node, s.now()).unwrap();
+            w.registrations.push((node, s.now()));
+            // Recurring heartbeat (3 beats are enough for the test).
+            for beat in 1..=3u64 {
+                s.after(Micros(hb.0 * beat), move |w: &mut World, s| {
+                    w.rm.nm_heartbeat(node, s.now()).unwrap();
+                    w.heartbeats += 1;
+                });
+            }
+        });
+    }
+    let end = sim.run(&mut world);
+
+    assert_eq!(world.rm.nm_count(), 30);
+    assert_eq!(world.heartbeats, 90);
+    // Registrations happened at distinct, ordered times (event ordering).
+    let times: Vec<Micros> = world.registrations.iter().map(|r| r.1).collect();
+    let mut sorted = times.clone();
+    sorted.sort();
+    assert_eq!(times, sorted, "events fire in time order");
+    // The run ends exactly 3 heartbeats after the slowest boot.
+    let slowest = *times.last().unwrap();
+    assert_eq!(end, slowest + Micros(hb.0 * 3));
+    world.rm.check_invariants().unwrap();
+}
+
+#[test]
+fn event_engine_agrees_with_sliding_window_closed_form() {
+    // The fan-out window model used by Fig 3 can also be computed by the
+    // event engine; both must agree (cross-validation of the Fig 3 math).
+    struct W {
+        done_at: Vec<f64>,
+    }
+    let durations: Vec<f64> = (0..25).map(|i| 1.0 + (i % 7) as f64 * 0.3).collect();
+    let width = 4usize;
+
+    // Event-driven version: `width` workers pull tasks from a queue.
+    let mut sim: Sim<W> = Sim::new();
+    let mut w = W { done_at: Vec::new() };
+    let queue = std::rc::Rc::new(std::cell::RefCell::new(
+        durations.iter().copied().rev().collect::<Vec<f64>>(),
+    ));
+    fn pull(
+        q: std::rc::Rc<std::cell::RefCell<Vec<f64>>>,
+        sim: &mut Sim<W>,
+    ) {
+        let next = q.borrow_mut().pop();
+        if let Some(d) = next {
+            sim.after(Micros::from_secs_f64(d), move |w: &mut W, s| {
+                w.done_at.push(s.now().as_secs_f64());
+                pull(q, s);
+            });
+        }
+    }
+    for _ in 0..width {
+        let q = std::rc::Rc::clone(&queue);
+        sim.at(Micros::ZERO, move |_w: &mut W, s| pull(q, s));
+    }
+    let end = sim.run(&mut w);
+
+    let closed_form = sliding_window_makespan(&durations, width);
+    assert!(
+        (end.as_secs_f64() - closed_form).abs() < 1e-3,
+        "event engine {} vs closed form {}",
+        end.as_secs_f64(),
+        closed_form
+    );
+    assert_eq!(w.done_at.len(), durations.len());
+}

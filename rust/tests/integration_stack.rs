@@ -1,0 +1,239 @@
+//! Full-stack integration: LSF → wrapper → YARN → MapReduce → teardown,
+//! across multiple jobs, users and failure cases.
+
+use hpcw::api::{AppPayload, Stack};
+use hpcw::cluster::NodeId;
+use hpcw::config::StackConfig;
+use hpcw::lustre::Dfs;
+use hpcw::scheduler::JobState;
+use hpcw::yarn::JobHistoryServer;
+
+fn stack() -> Stack {
+    Stack::new(StackConfig::tiny()).unwrap()
+}
+
+#[test]
+fn many_sequential_jobs_leave_no_residue() {
+    let mut s = stack();
+    for i in 0..5 {
+        let id = s
+            .submit(
+                4,
+                "loop-user",
+                AppPayload::Teragen {
+                    rows: 300,
+                    maps: 2,
+                    dir: format!("/lustre/scratch/residue-{i}"),
+                },
+            )
+            .unwrap();
+        s.run_to_completion(id, 10).unwrap();
+    }
+    // All staging removed; all 5 outputs present; all nodes free.
+    for i in 0..5 {
+        assert!(s.dfs.exists(&format!("/lustre/scratch/residue-{i}/_SUCCESS")));
+    }
+    let leftovers: Vec<String> = s.dfs.list("/lustre/scratch/hpcw-jobs");
+    assert!(leftovers.is_empty(), "staging left: {leftovers:?}");
+    assert_eq!(s.lsf.free_nodes(), 8);
+    s.lsf.check_invariants().unwrap();
+    // JHS history survives teardown: reload from Lustre and count apps.
+    let mut jhs = JobHistoryServer::new("/lustre/scratch/hpcw-history/done");
+    let n = jhs.reload(&*s.dfs).unwrap();
+    assert_eq!(n, 5, "one history report per MR app");
+}
+
+#[test]
+fn concurrent_users_fair_queueing() {
+    let mut s = stack();
+    // Three 4-node jobs on an 8-node machine: two run, one queues.
+    let ids: Vec<_> = (0..3)
+        .map(|i| {
+            s.submit(
+                4,
+                &format!("user{i}"),
+                AppPayload::Teragen {
+                    rows: 200,
+                    maps: 1,
+                    dir: format!("/lustre/scratch/cc-{i}"),
+                },
+            )
+            .unwrap()
+        })
+        .collect();
+    let first_wave = s.tick();
+    assert_eq!(first_wave.len(), 2, "two fit at once");
+    let second_wave = s.tick();
+    assert_eq!(second_wave.len(), 1);
+    for id in ids {
+        assert_eq!(s.lsf.status(id).unwrap().state, JobState::Done);
+    }
+}
+
+#[test]
+fn kill_pending_job_never_runs() {
+    let mut s = stack();
+    let a = s
+        .submit(
+            8,
+            "u",
+            AppPayload::Teragen {
+                rows: 200,
+                maps: 1,
+                dir: "/lustre/scratch/kill-a".into(),
+            },
+        )
+        .unwrap();
+    let b = s
+        .submit(
+            8,
+            "u",
+            AppPayload::Teragen {
+                rows: 200,
+                maps: 1,
+                dir: "/lustre/scratch/kill-b".into(),
+            },
+        )
+        .unwrap();
+    s.kill(b).unwrap();
+    s.tick();
+    s.tick();
+    assert_eq!(s.lsf.status(a).unwrap().state, JobState::Done);
+    assert_eq!(s.lsf.status(b).unwrap().state, JobState::Killed);
+    assert!(!s.dfs.exists("/lustre/scratch/kill-b"));
+}
+
+#[test]
+fn node_failure_shrinks_pool_but_jobs_continue() {
+    let mut s = stack();
+    // Fail a node before dispatch: 7 remain.
+    s.cluster.fail_node(NodeId(7)).unwrap();
+    let victims = s.lsf.node_failed(NodeId(7));
+    assert!(victims.is_empty());
+    let id = s
+        .submit(
+            7,
+            "u",
+            AppPayload::Teragen {
+                rows: 300,
+                maps: 2,
+                dir: "/lustre/scratch/nf".into(),
+            },
+        )
+        .unwrap();
+    let r = s.run_to_completion(id, 10).unwrap();
+    assert_eq!(r.records, 300);
+    assert_eq!(s.lsf.free_nodes(), 7);
+}
+
+#[test]
+fn oversized_request_rejected_cleanly() {
+    let mut s = stack();
+    let err = s
+        .submit(
+            99,
+            "u",
+            AppPayload::Teragen {
+                rows: 1,
+                maps: 1,
+                dir: "/lustre/scratch/x".into(),
+            },
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("exceeds cluster size"));
+}
+
+#[test]
+fn hive_and_pig_agree_through_the_full_stack() {
+    let mut s = stack();
+    s.dfs.mkdirs("/lustre/scratch/agree").unwrap();
+    let mut rows = String::new();
+    for i in 0..200 {
+        rows.push_str(&format!(
+            "r{},p{},{}\n",
+            i % 4,
+            i % 3,
+            (i * 37) % 500
+        ));
+    }
+    s.dfs
+        .create("/lustre/scratch/agree/part-0", rows.as_bytes())
+        .unwrap();
+
+    let pig = s
+        .submit(
+            4,
+            "u",
+            AppPayload::PigScript {
+                script: "
+        recs = LOAD '/lustre/scratch/agree' USING ',' AS (region, product, amount);
+        big  = FILTER recs BY amount > 250;
+        grp  = GROUP big BY region;
+        out  = FOREACH grp GENERATE group, SUM(amount), MAX(amount);
+        STORE out INTO '/lustre/scratch/agree-pig';"
+                    .into(),
+                reduces: 3,
+            },
+        )
+        .unwrap();
+    let hive = s
+        .submit(
+            4,
+            "u",
+            AppPayload::HiveQuery {
+                sql: "SELECT region, SUM(amount), MAX(amount) \
+                      FROM '/lustre/scratch/agree' USING ',' \
+                      SCHEMA (region, product, amount) \
+                      WHERE amount > 250 GROUP BY region \
+                      INTO '/lustre/scratch/agree-hive'"
+                    .into(),
+                reduces: 3,
+            },
+        )
+        .unwrap();
+    let rp = s.run_to_completion(pig, 10).unwrap().clone();
+    let rh = s.run_to_completion(hive, 10).unwrap().clone();
+
+    let collect = |s: &Stack, files: &[String]| {
+        let mut text = String::new();
+        for f in files {
+            text.push_str(&String::from_utf8(s.read_output(f).unwrap()).unwrap());
+        }
+        hpcw::frameworks::plan::sorted_result_lines(&text)
+    };
+    let a = collect(&s, &rp.output_files);
+    let b = collect(&s, &rh.output_files);
+    assert_eq!(a, b);
+    assert!(!a.is_empty());
+}
+
+#[test]
+fn metrics_timeline_orders_wrapper_events() {
+    let mut s = stack();
+    let id = s
+        .submit(
+            4,
+            "u",
+            AppPayload::Teragen {
+                rows: 100,
+                maps: 1,
+                dir: "/lustre/scratch/tl".into(),
+            },
+        )
+        .unwrap();
+    s.run_to_completion(id, 10).unwrap();
+    let timeline = s.metrics.timeline();
+    let idx = |needle: &str| {
+        timeline
+            .iter()
+            .position(|e| e.label.contains(needle))
+            .unwrap_or_else(|| panic!("missing event '{needle}'"))
+    };
+    // Paper ordering: dispatch → staging dirs → RM → JHS → NMs → teardown.
+    assert!(idx("dispatch job") < idx("staging dirs created"));
+    assert!(idx("staging dirs created") < idx("RM started"));
+    assert!(idx("RM started") < idx("JHS started"));
+    assert!(idx("JHS started") < idx("NMs up"));
+    assert!(idx("NMs up") < idx("cluster torn down"));
+    assert!(idx("cluster torn down") < idx("finish job"));
+}

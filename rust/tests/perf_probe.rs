@@ -1,0 +1,44 @@
+//! One-off perf probe used for EXPERIMENTS.md §Perf (run with --ignored).
+use hpcw::cluster::NodeId;
+use hpcw::config::StackConfig;
+use hpcw::lustre::LustreFs;
+use hpcw::mapreduce::MrEngine;
+use hpcw::metrics::Metrics;
+use hpcw::runtime::RustBlockProcessor;
+use hpcw::terasort::*;
+use hpcw::util::ids::IdGen;
+use hpcw::util::pool::Pool;
+use hpcw::util::time::Micros;
+use hpcw::wrapper::DynamicCluster;
+use std::sync::Arc;
+
+#[test]
+#[ignore]
+fn perkey_vs_block_map_path() {
+    let cfg = StackConfig::tiny();
+    let fs = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
+    let nodes: Vec<NodeId> = (0..8).map(NodeId).collect();
+    let mut dc = DynamicCluster::build(&cfg, &nodes, &*fs, Arc::new(IdGen::default()),
+        Arc::new(Metrics::new()), "probe", Micros::ZERO).unwrap();
+    let pool = Pool::new(8);
+    let rows = 1_000_000u64;
+    {
+        let mut engine = MrEngine::new(&mut dc, fs.clone(), &pool, cfg.yarn.map_memory_mb, cfg.yarn.reduce_memory_mb);
+        run_teragen(&mut engine, &TeragenSpec { rows, maps: 6, output_dir: "/lustre/scratch/p-in".into(), seed: 1 }, Micros::ZERO).unwrap();
+    }
+    for (label, use_block) in [("rust-block", true), ("per-key", false), ("rust-block2", true), ("per-key2", false)] {
+        let out = format!("/lustre/scratch/p-out-{label}");
+        let ts = TerasortJob { split_bytes: 4 << 20, ..TerasortJob::new("/lustre/scratch/p-in", &out, 8) };
+        let t0 = std::time::Instant::now();
+        let mut engine = MrEngine::new(&mut dc, fs.clone(), &pool, cfg.yarn.map_memory_mb, cfg.yarn.reduce_memory_mb);
+        if use_block {
+            let samples = sample_input(&*fs, "/lustre/scratch/p-in", 1000).unwrap();
+            let part = RangePartitioner::from_samples(samples, 8).unwrap();
+            run_terasort_with_processor(&mut engine, &ts, Arc::new(RustBlockProcessor { partitioner: part }), Micros::ZERO).unwrap();
+        } else {
+            run_terasort(&mut engine, &ts, None, Micros::ZERO).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{label}: {:.2}s ({:.1} MB/s sort-only)", dt, rows as f64 * 100.0 / 1e6 / dt);
+    }
+}

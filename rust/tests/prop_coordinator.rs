@@ -1,0 +1,207 @@
+//! Property tests over the coordinator invariants (DESIGN.md §6):
+//! randomized job streams, allocation churn, shuffle delivery, and the
+//! YARN resource ledger, driven by the in-repo testkit.
+
+use hpcw::cluster::{ClusterModel, NodeId};
+use hpcw::config::StackConfig;
+use hpcw::mapreduce::shuffle::{merge_segments, Segment, ShuffleStore};
+use hpcw::metrics::Metrics;
+use hpcw::scheduler::{JobCommand, JobState, Lsf, ResourceRequest};
+use hpcw::testkit::{props, Gen};
+use hpcw::util::ids::{IdGen, LsfJobId};
+use hpcw::util::time::Micros;
+use hpcw::yarn::container::{ContainerKind, ContainerRequest, Resource};
+use hpcw::yarn::rm::{AppState, ResourceManager};
+use std::sync::Arc;
+
+/// The scheduler never double-books nodes, never loses them, and every
+/// terminal job ends with zero holdings — across arbitrary interleavings
+/// of submit / dispatch / finish / kill / node-failure.
+#[test]
+fn scheduler_conserves_nodes_under_churn() {
+    props(40, |g: &mut Gen| {
+        let cfg = StackConfig::tiny();
+        let cluster = ClusterModel::new(&cfg.cluster);
+        let mut lsf = Lsf::new(
+            cfg.scheduler.clone(),
+            &cluster,
+            Arc::new(IdGen::default()),
+            Arc::new(Metrics::new()),
+        );
+        let mut live: Vec<LsfJobId> = Vec::new();
+        let mut now = Micros::ZERO;
+        for _ in 0..g.usize(5..60) {
+            now += Micros::secs(1);
+            match g.u32(0..10) {
+                0..=3 => {
+                    let nodes = g.u32(1..9);
+                    if let Ok(id) = lsf.submit(
+                        ResourceRequest::bigdata(nodes, &g.ident(5)),
+                        JobCommand::plain(&["w"]),
+                        now,
+                    ) {
+                        live.push(id);
+                    }
+                }
+                4..=6 => {
+                    lsf.dispatch_cycle(now);
+                }
+                7 => {
+                    if !live.is_empty() {
+                        let id = live[g.usize(0..live.len())];
+                        if lsf.status(id).map(|j| j.state) == Some(JobState::Running) {
+                            lsf.finish(id, now).unwrap();
+                        }
+                    }
+                }
+                8 => {
+                    if !live.is_empty() {
+                        let id = live[g.usize(0..live.len())];
+                        let state = lsf.status(id).map(|j| j.state).unwrap();
+                        if !state.is_terminal() {
+                            lsf.kill(id, now).unwrap();
+                        }
+                    }
+                }
+                _ => {
+                    let node = NodeId(g.u32(0..8));
+                    let victims = lsf.node_failed(node);
+                    for v in victims {
+                        let _ = lsf.fail(v, now);
+                    }
+                }
+            }
+            lsf.check_invariants().expect("scheduler invariant");
+        }
+        // Drain: finish everything still running.
+        for id in live {
+            if lsf.status(id).map(|j| j.state) == Some(JobState::Running) {
+                lsf.finish(id, now).unwrap();
+            }
+        }
+        lsf.check_invariants().unwrap();
+    });
+}
+
+/// The RM's per-node ledger equals the sum of outstanding containers at
+/// every step of a random allocate/release/fail sequence, and app
+/// completion always returns the ledger to zero.
+#[test]
+fn yarn_ledger_balances_under_churn() {
+    props(40, |g: &mut Gen| {
+        let n_nodes = g.u32(1..6);
+        let mut rm = ResourceManager::new(
+            StackConfig::paper().yarn.clone(),
+            Arc::new(IdGen::default()),
+            Arc::new(Metrics::new()),
+        );
+        for i in 0..n_nodes {
+            rm.register_nm(NodeId(i), Micros::ZERO).unwrap();
+        }
+        let h = rm.submit_app("prop", "u", Micros::ZERO).unwrap();
+        let mut held = Vec::new();
+        for _ in 0..g.usize(1..25) {
+            match g.u32(0..3) {
+                0 => {
+                    let got = rm
+                        .allocate(
+                            h.app,
+                            ContainerRequest {
+                                resource: Resource::new(g.u64(256..8192), 1),
+                                count: g.u32(1..10),
+                            },
+                            ContainerKind::Map,
+                            Micros::ZERO,
+                        )
+                        .unwrap();
+                    held.extend(got);
+                }
+                1 => {
+                    if !held.is_empty() {
+                        let i = g.usize(0..held.len());
+                        let c: hpcw::yarn::Container = held.swap_remove(i);
+                        rm.release(h.app, c.id).unwrap();
+                    }
+                }
+                _ => {
+                    if g.chance(0.2) && rm.nm_count() > 1 {
+                        let node = NodeId(g.u32(0..n_nodes));
+                        let lost = rm.node_failed(node);
+                        held.retain(|c| !lost.iter().any(|l| l.id == c.id));
+                    }
+                }
+            }
+            rm.check_invariants().expect("yarn ledger");
+        }
+        rm.finish_app(h.app, AppState::Finished, Micros::secs(1)).unwrap();
+        let (_, used) = rm.cluster_resources();
+        assert_eq!(used, Resource::zero());
+    });
+}
+
+/// Shuffle delivery is exactly-once and merge output equals a flat sort,
+/// under random segment commits including duplicate (speculative) commits.
+#[test]
+fn shuffle_exactly_once_and_merge_correct() {
+    props(40, |g: &mut Gen| {
+        let n_maps = g.u32(1..6);
+        let n_parts = g.u32(1..5);
+        let store = ShuffleStore::new();
+        let mut expected: Vec<Vec<u8>> = Vec::new();
+        for m in 0..n_maps {
+            for p in 0..n_parts {
+                let mut keys: Vec<u8> =
+                    (0..g.usize(0..15)).map(|_| g.u32(0..40) as u8).collect();
+                keys.sort_unstable();
+                let seg = Segment {
+                    map: m,
+                    partition: p,
+                    node: NodeId(m),
+                    pairs: keys.iter().map(|&k| (vec![k], vec![])).collect(),
+                };
+                // Speculative duplicate commit sometimes.
+                if g.chance(0.3) {
+                    store.put(seg.clone());
+                }
+                store.put(seg);
+                if p == 0 {
+                    expected.extend(keys.iter().map(|&k| vec![k]));
+                }
+            }
+        }
+        store.verify_complete(n_maps, n_parts).unwrap();
+        let segs = store.fetch_partition(0, n_maps).unwrap();
+        let merged = merge_segments(segs);
+        let mut keys: Vec<Vec<u8>> = merged.into_iter().map(|(k, _)| k).collect();
+        expected.sort();
+        keys.sort();
+        assert_eq!(keys, expected);
+    });
+}
+
+/// Terasort invariant at the unit level: for any random data, the range
+/// partitioner is monotone and concatenated partition runs cover exactly
+/// the input (used by Teravalidate's cross-part boundary check).
+#[test]
+fn range_partition_cover_property() {
+    use hpcw::terasort::RangePartitioner;
+    props(60, |g: &mut Gen| {
+        let samples: Vec<u64> = (0..g.usize(2..300)).map(|_| g.u64(0..1 << 48)).collect();
+        let parts = g.u32(1..64);
+        let p = RangePartitioner::from_samples(samples, parts).unwrap();
+        let keys: Vec<u64> = (0..200).map(|_| g.u64(0..1 << 48)).collect();
+        let mut per_part: Vec<Vec<u64>> = vec![Vec::new(); p.n_partitions() as usize];
+        for &k in &keys {
+            per_part[p.route(k) as usize].push(k);
+        }
+        // Concatenating sorted partitions equals sorting everything.
+        let mut concat = Vec::new();
+        for part in &mut per_part {
+            part.sort_unstable();
+            concat.extend_from_slice(part);
+        }
+        let mut all = keys.clone();
+        all.sort_unstable();
+        assert_eq!(concat, all);
+    });
+}
