@@ -1,6 +1,7 @@
 //! FIG5 — "Terasort Behaviour": 1 TB sort time vs cores; "reasonable
-//! scalability" ending I/O-bound (paper §VII).
-use hpcw::bench::fig5;
+//! scalability" ending I/O-bound (paper §VII). Also appends the sweep to
+//! `BENCH_PR1.json` so the perf trajectory is machine-readable.
+use hpcw::bench::{emit_json, fig5};
 use hpcw::config::StackConfig;
 
 fn main() {
@@ -11,6 +12,17 @@ fn main() {
     }
     let first = rows.first().unwrap();
     let last = rows.last().unwrap();
+    emit_json(
+        "BENCH_PR1.json",
+        "fig5_terasort",
+        &[
+            ("min_cores", first.0 as f64),
+            ("min_cores_total_s", first.4),
+            ("max_cores", last.0 as f64),
+            ("max_cores_total_s", last.4),
+            ("speedup", first.4 / last.4),
+        ],
+    );
     println!("\nshape: {:.0}s @{} cores -> {:.0}s @{} cores (speedup {:.1}x)",
         first.4, first.0, last.4, last.0, first.4 / last.4);
     println!("fig5 OK");

@@ -1,11 +1,21 @@
-//! HOTPATH — the map-side sort+partition hot-spot: pure-Rust block path
-//! vs the AOT Pallas kernel through PJRT (interpret-mode CPU lowering, so
-//! this measures the *integration* cost, not TPU performance — see
-//! DESIGN.md §Hardware-Adaptation for the TPU estimates).
-use hpcw::bench::emit;
-use hpcw::mapreduce::BlockProcessor;
+//! HOTPATH — the map-side sort+partition hot-spot, three ways:
+//!
+//! * `legacy_pairs` — the pre-flat-path model this PR replaced: owned
+//!   `(Vec<u8>, Vec<u8>)` pairs, stable full-key Vec sort, per-record
+//!   binary-search routing. Kept in-bench as the same-run baseline so the
+//!   flat-path speedup is measured, not remembered.
+//! * `rust_flat` — [`RustBlockProcessor`] over the `RecordBuf` arena:
+//!   prefix-decorated index sort + monotone routing scan.
+//! * `pallas_pjrt` — the AOT Pallas kernel through PJRT (interpret-mode
+//!   CPU lowering, so this measures the *integration* cost, not TPU
+//!   performance), when artifacts are built.
+//!
+//! Results go to `bench_out/kernel_hotpath.csv` (human) and
+//! `BENCH_PR1.json` (machine-readable, merged across benches).
+use hpcw::bench::{emit, emit_json};
+use hpcw::mapreduce::{BlockProcessor, RecordBuf};
 use hpcw::runtime::{artifacts, shared_client, KernelBlockProcessor, RustBlockProcessor};
-use hpcw::terasort::format::record_for_row;
+use hpcw::terasort::format::{key_prefix_u64, record_for_row};
 use hpcw::terasort::RangePartitioner;
 use hpcw::util::rng::Rng;
 use std::time::Instant;
@@ -19,15 +29,45 @@ fn pairs(n: usize, seed: u64) -> Vec<(Vec<u8>, Vec<u8>)> {
         .collect()
 }
 
-fn bench_one(bp: &dyn BlockProcessor, n: usize, reps: u32) -> f64 {
-    // Warmup (compiles the artifact on first use).
-    let _ = bp.process(pairs(n, 1), 16).unwrap();
-    let t0 = Instant::now();
-    for r in 0..reps {
-        let _ = bp.process(pairs(n, r as u64 + 2), 16).unwrap();
+fn records(n: usize, seed: u64) -> RecordBuf {
+    let mut rb = RecordBuf::with_capacity(n, n * 100);
+    for i in 0..n {
+        rb.push_record(&record_for_row(seed, i as u64), 10);
     }
-    let per_rep = t0.elapsed().as_secs_f64() / reps as f64;
-    (n * 100) as f64 / 1e6 / per_rep // MB/s of 100-byte records
+    rb
+}
+
+/// The legacy data path, verbatim: stable sort of owned pairs, then one
+/// binary-search route per record.
+fn legacy_process(
+    mut pairs: Vec<(Vec<u8>, Vec<u8>)>,
+    partitioner: &RangePartitioner,
+    n_reduces: u32,
+) -> Vec<Vec<(Vec<u8>, Vec<u8>)>> {
+    pairs.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut out: Vec<Vec<(Vec<u8>, Vec<u8>)>> = (0..n_reduces).map(|_| Vec::new()).collect();
+    for (k, v) in pairs {
+        let p = partitioner
+            .route(key_prefix_u64(&k))
+            .min(n_reduces.saturating_sub(1)) as usize;
+        out[p].push((k, v));
+    }
+    out
+}
+
+/// Seconds per rep for `run` over pre-built inputs (only the sort+route
+/// path is timed, not input construction).
+fn throughput<I>(inputs: Vec<I>, mut run: impl FnMut(I)) -> f64 {
+    let reps = inputs.len();
+    let t0 = Instant::now();
+    for input in inputs {
+        run(input);
+    }
+    t0.elapsed().as_secs_f64() / reps.max(1) as f64
+}
+
+fn mbps(n_records: usize, per_rep_secs: f64) -> f64 {
+    (n_records * 100) as f64 / 1e6 / per_rep_secs
 }
 
 fn main() {
@@ -40,28 +80,82 @@ fn main() {
 
     let artifacts_built = artifacts::default_dir().join("manifest.json").exists();
     let kernel = if artifacts_built {
-        Some(KernelBlockProcessor::new(shared_client().unwrap(), part).unwrap())
+        // Probe one small block so a build without the `xla` feature (stub
+        // PJRT backend) degrades to a skipped column, not a panic.
+        match shared_client()
+            .and_then(|c| KernelBlockProcessor::new(c, part.clone()))
+            .and_then(|k| k.process(records(128, 0), 16).map(|_| k))
+        {
+            Ok(k) => Some(k),
+            Err(e) => {
+                eprintln!("kernel path unavailable ({e}); column skipped");
+                None
+            }
+        }
     } else {
         eprintln!("artifacts not built; kernel column skipped");
         None
     };
 
     let mut rows = Vec::new();
+    let mut json: Vec<(&str, f64)> = Vec::new();
     for &n in &[2_000usize, 8_000, 32_000] {
-        let reps = if n >= 32_000 { 3 } else { 6 };
-        let r = bench_one(&rust, n, reps);
-        let k = kernel.as_ref().map(|k| bench_one(k, n, reps));
+        let reps = if n >= 32_000 { 5 } else { 10 };
+
+        // Warmups.
+        let _ = legacy_process(pairs(n, 1), &part, 16);
+        let _ = rust.process(records(n, 1), 16).unwrap();
+        if let Some(k) = &kernel {
+            let _ = k.process(records(n, 1), 16).unwrap();
+        }
+
+        let legacy_in: Vec<_> = (0..reps).map(|r| pairs(n, r as u64 + 2)).collect();
+        let legacy_s = throughput(legacy_in, |p| {
+            let _ = legacy_process(p, &part, 16);
+        });
+        let flat_in: Vec<_> = (0..reps).map(|r| records(n, r as u64 + 2)).collect();
+        let flat_s = throughput(flat_in, |rb| {
+            let _ = rust.process(rb, 16).unwrap();
+        });
+        let kernel_s = kernel.as_ref().map(|k| {
+            let inputs: Vec<_> = (0..reps).map(|r| records(n, r as u64 + 2)).collect();
+            throughput(inputs, |rb| {
+                let _ = k.process(rb, 16).unwrap();
+            })
+        });
+
+        let (legacy_mbps, flat_mbps) = (mbps(n, legacy_s), mbps(n, flat_s));
+        let kernel_mbps = kernel_s.map(|s| mbps(n, s));
         rows.push(vec![
             n.to_string(),
-            format!("{r:.1}"),
-            k.map(|k| format!("{k:.1}")).unwrap_or_else(|| "-".into()),
-            k.map(|k| format!("{:.2}", k / r)).unwrap_or_else(|| "-".into()),
+            format!("{legacy_mbps:.1}"),
+            format!("{flat_mbps:.1}"),
+            format!("{:.2}", flat_mbps / legacy_mbps),
+            kernel_mbps
+                .map(|k| format!("{k:.1}"))
+                .unwrap_or_else(|| "-".into()),
         ]);
+        if n == 32_000 {
+            json.push(("records", n as f64));
+            json.push(("legacy_pairs_mbps", legacy_mbps));
+            json.push(("rust_flat_mbps", flat_mbps));
+            json.push(("flat_vs_legacy", flat_mbps / legacy_mbps));
+            if let Some(k) = kernel_mbps {
+                json.push(("pallas_pjrt_mbps", k));
+            }
+        }
     }
     emit(
         "kernel_hotpath",
-        &["records", "rust_mbps", "pallas_pjrt_mbps", "ratio"],
+        &[
+            "records",
+            "legacy_pairs_mbps",
+            "rust_flat_mbps",
+            "flat_vs_legacy",
+            "pallas_pjrt_mbps",
+        ],
         &rows,
     );
+    emit_json("BENCH_PR1.json", "kernel_hotpath", &json);
     println!("\nkernel_hotpath OK");
 }

@@ -13,11 +13,47 @@ pub use figures::*;
 pub use sched::ablation_sched;
 
 use crate::codec::csv::CsvWriter;
+use crate::codec::json::Json;
 use std::path::PathBuf;
 
 /// Where bench CSVs land.
 pub fn out_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_out")
+}
+
+/// Machine-readable results file at the repo root. Each bench merges its
+/// metrics under its own key, so one run of the bench suite accumulates a
+/// single JSON object subsequent PRs can diff for the perf trajectory.
+pub fn results_path(file: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(file)
+}
+
+/// Merge `metrics` into `file` (a JSON object keyed by bench name).
+/// Existing entries for other benches are preserved; this bench's entry is
+/// replaced wholesale.
+pub fn emit_json(file: &str, bench: &str, metrics: &[(&str, f64)]) {
+    let path = results_path(file);
+    let mut root = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .filter(|j| matches!(j, Json::Obj(_)))
+        .unwrap_or(Json::Obj(Vec::new()));
+    let entry = Json::Obj(
+        metrics
+            .iter()
+            .map(|&(k, v)| (k.to_string(), Json::Num(v)))
+            .collect(),
+    );
+    if let Json::Obj(pairs) = &mut root {
+        match pairs.iter_mut().find(|(k, _)| k == bench) {
+            Some(slot) => slot.1 = entry,
+            None => pairs.push((bench.to_string(), entry)),
+        }
+    }
+    match std::fs::write(&path, root.pretty()) {
+        Ok(()) => println!("-> {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
 }
 
 /// Print a table and write it to CSV.

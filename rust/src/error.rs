@@ -2,61 +2,86 @@
 //!
 //! Domain layers attach their own context; everything converges on
 //! [`Error`] so the CLI / API boundary can render a single error shape.
+//! Display/Error are hand-implemented — the offline build has no
+//! `thiserror`.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for the hpcw stack.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file or value problems.
-    #[error("config: {0}")]
     Config(String),
 
     /// JSON / TOML / CSV encoding-decoding problems.
-    #[error("codec: {0}")]
     Codec(String),
 
     /// LSF-like scheduler errors (unknown queue, bad resource request, ...).
-    #[error("scheduler: {0}")]
     Sched(String),
 
     /// YARN daemon / container protocol errors.
-    #[error("yarn: {0}")]
     Yarn(String),
 
     /// Dynamic-cluster wrapper errors (daemon start failure, dirty teardown).
-    #[error("wrapper: {0}")]
     Wrapper(String),
 
     /// Distributed-filesystem errors (Lustre / HDFS-like / DAS).
-    #[error("dfs: {0}")]
     Dfs(String),
 
     /// MapReduce engine errors.
-    #[error("mapreduce: {0}")]
     MapReduce(String),
 
     /// Framework frontend errors (Pig / Hive / RHadoop / Mongo parsing or planning).
-    #[error("framework: {0}")]
     Framework(String),
 
     /// SynfiniWay-style API errors.
-    #[error("api: {0}")]
     Api(String),
 
     /// PJRT runtime errors (artifact missing, compile or execute failure).
-    #[error("runtime: {0}")]
     Runtime(String),
 
     /// Underlying OS I/O.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    /// Errors bubbled from the `xla` crate.
-    #[error("xla: {0}")]
+    /// Errors bubbled from the `xla` crate (feature-gated backend).
     Xla(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Codec(m) => write!(f, "codec: {m}"),
+            Error::Sched(m) => write!(f, "scheduler: {m}"),
+            Error::Yarn(m) => write!(f, "yarn: {m}"),
+            Error::Wrapper(m) => write!(f, "wrapper: {m}"),
+            Error::Dfs(m) => write!(f, "dfs: {m}"),
+            Error::MapReduce(m) => write!(f, "mapreduce: {m}"),
+            Error::Framework(m) => write!(f, "framework: {m}"),
+            Error::Api(m) => write!(f, "api: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

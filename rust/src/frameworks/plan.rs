@@ -119,7 +119,7 @@ fn partial_for(aggs: &[AggSpec], row: &Row) -> Result<String> {
 }
 
 impl Mapper for PlanMapper {
-    fn map(&self, _k: &[u8], value: &[u8], emit: &mut dyn FnMut(Vec<u8>, Vec<u8>)) {
+    fn map(&self, _k: &[u8], value: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
         let Ok(line) = std::str::from_utf8(value) else {
             return;
         };
@@ -141,7 +141,7 @@ impl Mapper for PlanMapper {
             None => "<all>".to_string(),
         };
         if let Ok(partial) = partial_for(&self.aggregates, &row) {
-            emit(key.into_bytes(), partial.into_bytes());
+            emit(key.as_bytes(), partial.as_bytes());
         }
     }
 }
@@ -181,7 +181,7 @@ impl Reducer for PlanReducer {
         &self,
         key: &[u8],
         values: &mut dyn Iterator<Item = &[u8]>,
-        emit: &mut dyn FnMut(Vec<u8>, Vec<u8>),
+        emit: &mut dyn FnMut(&[u8], &[u8]),
     ) {
         let n = self.aggregates.len();
         let mut acc: Vec<Partial> = vec![
@@ -224,7 +224,7 @@ impl Reducer for PlanReducer {
             };
             cols.push(Value::Num(v).to_string());
         }
-        emit(key.to_vec(), cols.join("\t").into_bytes());
+        emit(key, cols.join("\t").as_bytes());
     }
 }
 
@@ -278,8 +278,10 @@ mod tests {
         let p = plan();
         let spec = p.compile().unwrap();
         let mut out = Vec::new();
-        spec.mapper.map(b"0", b"wales,w,150", &mut |k, v| out.push((k, v)));
-        spec.mapper.map(b"1", b"wales,w,50", &mut |k, v| out.push((k, v)));
+        spec.mapper
+            .map(b"0", b"wales,w,150", &mut |k, v| out.push((k.to_vec(), v.to_vec())));
+        spec.mapper
+            .map(b"1", b"wales,w,50", &mut |k, v| out.push((k.to_vec(), v.to_vec())));
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].0, b"wales".to_vec());
         assert_eq!(out[0].1, b"1,150,150,150;1,1,1,1".to_vec());
@@ -293,7 +295,7 @@ mod tests {
         let mut out = Vec::new();
         spec.reducer
             .reduce(b"wales", &mut vals.into_iter(), &mut |_, v| {
-                out.push(String::from_utf8(v).unwrap())
+                out.push(String::from_utf8(v.to_vec()).unwrap())
             });
         assert_eq!(out, vec!["wales\t400\t2"]);
     }

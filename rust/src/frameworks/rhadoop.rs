@@ -104,7 +104,7 @@ struct SummaryMapper {
 }
 
 impl Mapper for SummaryMapper {
-    fn map(&self, _k: &[u8], value: &[u8], emit: &mut dyn FnMut(Vec<u8>, Vec<u8>)) {
+    fn map(&self, _k: &[u8], value: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
         let Ok(line) = std::str::from_utf8(value) else {
             return;
         };
@@ -115,8 +115,8 @@ impl Mapper for SummaryMapper {
         for &c in &self.columns {
             if let Some(Value::Num(x)) = row.0.get(c) {
                 emit(
-                    self.schema.fields[c].clone().into_bytes(),
-                    Moments::of(*x).serialize().into_bytes(),
+                    self.schema.fields[c].as_bytes(),
+                    Moments::of(*x).serialize().as_bytes(),
                 );
             }
         }
@@ -131,7 +131,7 @@ impl Reducer for SummaryReducer {
         &self,
         key: &[u8],
         values: &mut dyn Iterator<Item = &[u8]>,
-        emit: &mut dyn FnMut(Vec<u8>, Vec<u8>),
+        emit: &mut dyn FnMut(&[u8], &[u8]),
     ) {
         let mut acc = Moments::empty();
         for v in values {
@@ -148,7 +148,7 @@ impl Reducer for SummaryReducer {
             Value::Num(acc.min),
             Value::Num(acc.max),
         );
-        emit(key.to_vec(), line.into_bytes());
+        emit(key, line.as_bytes());
     }
 }
 
@@ -183,7 +183,7 @@ struct HistMapper {
 }
 
 impl Mapper for HistMapper {
-    fn map(&self, _k: &[u8], value: &[u8], emit: &mut dyn FnMut(Vec<u8>, Vec<u8>)) {
+    fn map(&self, _k: &[u8], value: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
         let Ok(line) = std::str::from_utf8(value) else {
             return;
         };
@@ -194,7 +194,7 @@ impl Mapper for HistMapper {
         if let Some(Value::Num(x)) = row.0.get(self.column) {
             let bin = (((x - self.lo) / self.width).floor() as i64)
                 .clamp(0, self.bins as i64 - 1) as u32;
-            emit(format!("{bin:06}").into_bytes(), b"1".to_vec());
+            emit(format!("{bin:06}").as_bytes(), b"1");
         }
     }
 }
@@ -209,15 +209,15 @@ impl Reducer for HistReducer {
         &self,
         key: &[u8],
         values: &mut dyn Iterator<Item = &[u8]>,
-        emit: &mut dyn FnMut(Vec<u8>, Vec<u8>),
+        emit: &mut dyn FnMut(&[u8], &[u8]),
     ) {
         let n = values.count();
         let bin: u32 = String::from_utf8_lossy(key).parse().unwrap_or(0);
         let lo = self.lo + bin as f64 * self.width;
         let hi = lo + self.width;
         emit(
-            key.to_vec(),
-            format!("[{},{})\t{}", Value::Num(lo), Value::Num(hi), n).into_bytes(),
+            key,
+            format!("[{},{})\t{}", Value::Num(lo), Value::Num(hi), n).as_bytes(),
         );
     }
 }
@@ -289,8 +289,10 @@ mod tests {
         let schema = Schema::new(&["name", "x"], ',');
         let job = summary_job("/in", "/out", schema, &["x"]).unwrap();
         let mut out = Vec::new();
-        job.mapper.map(b"0", b"alice,5", &mut |k, v| out.push((k, v)));
-        job.mapper.map(b"1", b"bob,oops", &mut |k, v| out.push((k, v)));
+        job.mapper
+            .map(b"0", b"alice,5", &mut |k, v| out.push((k.to_vec(), v.to_vec())));
+        job.mapper
+            .map(b"1", b"bob,oops", &mut |k, v| out.push((k.to_vec(), v.to_vec())));
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].0, b"x".to_vec());
     }
@@ -302,7 +304,7 @@ mod tests {
         let mut out = Vec::new();
         for v in ["-3", "0", "9.99", "25"] {
             job.mapper.map(b"0", v.as_bytes(), &mut |k, _| {
-                out.push(String::from_utf8(k).unwrap())
+                out.push(String::from_utf8(k.to_vec()).unwrap())
             });
         }
         assert_eq!(out, vec!["000000", "000000", "000004", "000004"]);

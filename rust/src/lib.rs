@@ -1,4 +1,8 @@
-// TEMP build-check lib root (full version in /tmp/lib_full.rs)
+//! `hpcw` — reproduction of "Big Data at HPC Wales": an LSF-scheduled
+//! HPC cluster that dynamically provisions YARN clusters over Lustre and
+//! runs Hadoop-shaped MapReduce workloads (Terasort, Pig/Hive/RHadoop)
+//! in Real mode (actual bytes) and Sim mode (calibrated cost models).
+
 pub mod api;
 pub mod bench;
 pub mod cli;

@@ -32,6 +32,16 @@ impl Counters {
         *self.inner.lock().unwrap().entry(name).or_insert(0) += by;
     }
 
+    /// Batched update: one lock acquisition for a whole task's counters.
+    /// Tasks accumulate in local `u64`s and flush once here instead of
+    /// taking the lock per record.
+    pub fn add_many(&self, entries: &[(&'static str, u64)]) {
+        let mut g = self.inner.lock().unwrap();
+        for &(name, by) in entries {
+            *g.entry(name).or_insert(0) += by;
+        }
+    }
+
     pub fn get(&self, name: &str) -> u64 {
         self.inner.lock().unwrap().get(name).copied().unwrap_or(0)
     }
@@ -58,6 +68,15 @@ mod tests {
         c.add(MAP_INPUT_RECORDS, 5);
         assert_eq!(c.get(MAP_INPUT_RECORDS), 15);
         assert_eq!(c.get("missing"), 0);
+    }
+
+    #[test]
+    fn add_many_batches() {
+        let c = Counters::new();
+        c.add(MAP_SPILLS, 1);
+        c.add_many(&[(MAP_SPILLS, 2), (SHUFFLE_BYTES, 100)]);
+        assert_eq!(c.get(MAP_SPILLS), 3);
+        assert_eq!(c.get(SHUFFLE_BYTES), 100);
     }
 
     #[test]

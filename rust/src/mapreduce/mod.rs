@@ -16,6 +16,7 @@
 
 pub mod counters;
 pub mod real;
+pub mod recordbuf;
 pub mod shuffle;
 pub mod sim;
 pub mod split;
@@ -23,6 +24,7 @@ pub mod task;
 
 pub use counters::Counters;
 pub use real::{MrEngine, MrOutcome};
+pub use recordbuf::RecordBuf;
 pub use sim::{simulate_mr, MrSimReport, MrWorkload};
 
 pub use split::{InputFormat, InputSplit};
@@ -31,9 +33,13 @@ pub use task::{FailurePlan, TaskId, TaskKind};
 use std::sync::Arc;
 
 /// Map function over byte-oriented records.
+///
+/// `emit` borrows its slices: the engine copies them straight into the
+/// flat [`RecordBuf`] arena, so a mapper emission performs no heap
+/// allocation of its own.
 pub trait Mapper: Send + Sync {
     /// Emit zero or more (key, value) pairs for one input record.
-    fn map(&self, key: &[u8], value: &[u8], emit: &mut dyn FnMut(Vec<u8>, Vec<u8>));
+    fn map(&self, key: &[u8], value: &[u8], emit: &mut dyn FnMut(&[u8], &[u8]));
 }
 
 /// Reduce function: all values for one key, in one partition.
@@ -42,7 +48,7 @@ pub trait Reducer: Send + Sync {
         &self,
         key: &[u8],
         values: &mut dyn Iterator<Item = &[u8]>,
-        emit: &mut dyn FnMut(Vec<u8>, Vec<u8>),
+        emit: &mut dyn FnMut(&[u8], &[u8]),
     );
 }
 
@@ -59,12 +65,9 @@ pub trait Partitioner: Send + Sync {
 /// (pure-Rust reference and the AOT Pallas kernel via PJRT) and are
 /// parity-tested against each other.
 pub trait BlockProcessor: Send + Sync {
-    /// Returns `pairs` grouped per partition, each group sorted by key.
-    fn process(
-        &self,
-        pairs: Vec<(Vec<u8>, Vec<u8>)>,
-        n_reduces: u32,
-    ) -> crate::error::Result<Vec<Vec<(Vec<u8>, Vec<u8>)>>>;
+    /// Returns exactly `n_reduces` buffers — `records` routed per
+    /// partition, each buffer sorted by key.
+    fn process(&self, records: RecordBuf, n_reduces: u32) -> crate::error::Result<Vec<RecordBuf>>;
 
     /// Implementation name, surfaced in job counters.
     fn name(&self) -> &'static str;
@@ -74,8 +77,8 @@ pub trait BlockProcessor: Send + Sync {
 pub struct IdentityMapper;
 
 impl Mapper for IdentityMapper {
-    fn map(&self, key: &[u8], value: &[u8], emit: &mut dyn FnMut(Vec<u8>, Vec<u8>)) {
-        emit(key.to_vec(), value.to_vec());
+    fn map(&self, key: &[u8], value: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        emit(key, value);
     }
 }
 
@@ -87,10 +90,10 @@ impl Reducer for IdentityReducer {
         &self,
         key: &[u8],
         values: &mut dyn Iterator<Item = &[u8]>,
-        emit: &mut dyn FnMut(Vec<u8>, Vec<u8>),
+        emit: &mut dyn FnMut(&[u8], &[u8]),
     ) {
         for v in values {
-            emit(key.to_vec(), v.to_vec());
+            emit(key, v);
         }
     }
 }
@@ -118,6 +121,29 @@ pub enum OutputFormat {
     TextKv,
     /// Values only, newline-separated (key is a routing artifact).
     TextValue,
+}
+
+impl OutputFormat {
+    /// Serialize one record into `out`.
+    #[inline]
+    pub fn write_record(&self, out: &mut Vec<u8>, key: &[u8], value: &[u8]) {
+        match self {
+            OutputFormat::TeraRecords => {
+                out.extend_from_slice(key);
+                out.extend_from_slice(value);
+            }
+            OutputFormat::TextKv => {
+                out.extend_from_slice(key);
+                out.push(b'\t');
+                out.extend_from_slice(value);
+                out.push(b'\n');
+            }
+            OutputFormat::TextValue => {
+                out.extend_from_slice(value);
+                out.push(b'\n');
+            }
+        }
+    }
 }
 
 /// A MapReduce job description.
@@ -187,7 +213,7 @@ mod tests {
     fn identity_mapper_round_trips() {
         let m = IdentityMapper;
         let mut out = Vec::new();
-        m.map(b"k", b"v", &mut |k, v| out.push((k, v)));
+        m.map(b"k", b"v", &mut |k, v| out.push((k.to_vec(), v.to_vec())));
         assert_eq!(out, vec![(b"k".to_vec(), b"v".to_vec())]);
     }
 
@@ -196,7 +222,20 @@ mod tests {
         let r = IdentityReducer;
         let vals: Vec<&[u8]> = vec![b"1", b"2", b"3"];
         let mut out = Vec::new();
-        r.reduce(b"k", &mut vals.into_iter(), &mut |_, v| out.push(v));
+        r.reduce(b"k", &mut vals.into_iter(), &mut |_, v| out.push(v.to_vec()));
         assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn output_format_serialization() {
+        let mut tera = Vec::new();
+        OutputFormat::TeraRecords.write_record(&mut tera, b"kk", b"vv");
+        assert_eq!(tera, b"kkvv");
+        let mut kv = Vec::new();
+        OutputFormat::TextKv.write_record(&mut kv, b"k", b"v");
+        assert_eq!(kv, b"k\tv\n");
+        let mut val = Vec::new();
+        OutputFormat::TextValue.write_record(&mut val, b"k", b"v");
+        assert_eq!(val, b"v\n");
     }
 }

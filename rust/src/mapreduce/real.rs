@@ -13,10 +13,11 @@
 use crate::error::{Error, Result};
 use crate::lustre::Dfs;
 use crate::mapreduce::counters::{self, Counters};
+use crate::mapreduce::recordbuf::RecordBuf;
 use crate::mapreduce::shuffle::{merge_segments, Segment, ShuffleStore};
 use crate::mapreduce::split::{plan_splits, read_records, row_range_splits, InputFormat, InputSplit};
 use crate::mapreduce::task::{TaskId, MAX_ATTEMPTS};
-use crate::mapreduce::{JobSpec, OutputFormat};
+use crate::mapreduce::JobSpec;
 use crate::util::ids::AppId;
 use crate::util::pool::Pool;
 use crate::util::time::Micros;
@@ -226,7 +227,8 @@ impl<'a> MrEngine<'a> {
         let mut todo: Vec<(u32, u32)> = (0..splits.len() as u32).map(|i| (i, 0)).collect();
         while !todo.is_empty() {
             let wave_n = todo.len() as u32;
-            let granted = self.grant_wave(app, wave_n, self.map_memory_mb, ContainerKind::Map, now)?;
+            let granted =
+                self.grant_wave(app, wave_n, self.map_memory_mb, ContainerKind::Map, now)?;
             let batch: Vec<((u32, u32), Container)> =
                 todo.drain(..granted.len().min(todo.len())).zip(granted).collect();
 
@@ -343,6 +345,12 @@ type MapTaskArgs = (
 );
 
 /// One map task attempt (runs on a pool worker).
+///
+/// Records flow through the flat [`RecordBuf`] arena: emissions are copied
+/// straight into per-partition buffers (no per-record heap allocation),
+/// counters accumulate in task-local `u64`s and flush once at the end of
+/// the task, and spilled segments hand their arenas to the shuffle store
+/// without further copying.
 fn run_map_task(args: MapTaskArgs) -> Result<()> {
     let (idx, attempt, node, split, spec, shuffle, counters, dfs) = args;
     counters.add(counters::TASKS_LAUNCHED, 1);
@@ -355,20 +363,26 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
     let map_only = spec.n_reduces == 0;
     let n_buckets = spec.n_reduces.max(1);
     let block_path = spec.block_processor.is_some() && !map_only;
-    let mut buckets: Vec<Vec<(Vec<u8>, Vec<u8>)>> = vec![Vec::new(); n_buckets as usize];
+    // One bucket when the whole block is processed at once (map-only
+    // serialization order, or the BlockProcessor's input block).
+    let n_emit_buckets = if map_only || block_path { 1 } else { n_buckets };
+    let mut buckets: Vec<RecordBuf> = (0..n_emit_buckets).map(|_| RecordBuf::new()).collect();
+    // Task-local counter accumulation (flushed once below).
     let mut in_records = 0u64;
+    let mut out_records = 0u64;
+    let mut out_bytes = 0u64;
     {
         let mapper = &spec.mapper;
         let partitioner = &spec.partitioner;
-        let mut emit = |k: Vec<u8>, v: Vec<u8>| {
-            let p = if map_only || block_path {
+        let mut emit = |k: &[u8], v: &[u8]| {
+            let p = if n_emit_buckets == 1 {
                 0
             } else {
-                partitioner.partition(&k, n_buckets).min(n_buckets - 1)
+                partitioner.partition(k, n_buckets).min(n_buckets - 1)
             };
-            counters.add(counters::MAP_OUTPUT_BYTES, (k.len() + v.len()) as u64);
-            counters.add(counters::MAP_OUTPUT_RECORDS, 1);
-            buckets[p as usize].push((k, v));
+            out_bytes += (k.len() + v.len()) as u64;
+            out_records += 1;
+            buckets[p as usize].push(k, v);
         };
         match spec.input_format {
             InputFormat::RowRange => {
@@ -384,30 +398,20 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
             }
         }
     }
-    counters.add(counters::MAP_INPUT_RECORDS, in_records);
+    let mut flush = vec![(counters::MAP_INPUT_RECORDS, in_records)];
+    if out_records > 0 {
+        flush.push((counters::MAP_OUTPUT_BYTES, out_bytes));
+        flush.push((counters::MAP_OUTPUT_RECORDS, out_records));
+    }
+    counters.add_many(&flush);
 
     if map_only {
         // Map-only jobs (Teragen) write their emissions straight to the
         // output directory in emission order via the commit protocol.
-        let pairs = buckets.into_iter().next().unwrap();
-        let mut out = Vec::new();
-        for (k, v) in &pairs {
-            match spec.output_format {
-                OutputFormat::TeraRecords => {
-                    out.extend_from_slice(k);
-                    out.extend_from_slice(v);
-                }
-                OutputFormat::TextKv => {
-                    out.extend_from_slice(k);
-                    out.push(b'\t');
-                    out.extend_from_slice(v);
-                    out.push(b'\n');
-                }
-                OutputFormat::TextValue => {
-                    out.extend_from_slice(v);
-                    out.push(b'\n');
-                }
-            }
+        let records = buckets.into_iter().next().unwrap();
+        let mut out = Vec::with_capacity(records.payload_bytes() as usize);
+        for (k, v) in records.iter() {
+            spec.output_format.write_record(&mut out, k, v);
         }
         let attempt_dir = format!("{}/_temporary/attempt_m_{idx:05}_{attempt}", spec.output_dir);
         dfs.mkdirs(&attempt_dir)?;
@@ -420,18 +424,50 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
         return Ok(());
     }
 
-    // Map-side sort + spill (one segment per partition).
-    for (p, mut pairs) in buckets.into_iter().enumerate() {
-        pairs.sort_by(|a, b| a.0.cmp(&b.0));
+    if block_path {
+        // Whole-block map path: the BlockProcessor sorts + routes the
+        // entire emitted block at once (Terasort kernel acceleration).
+        let bp = spec.block_processor.as_ref().unwrap();
+        let block = buckets.into_iter().next().unwrap();
+        let parts = bp.process(block, n_buckets)?;
+        if parts.len() != n_buckets as usize {
+            return Err(Error::MapReduce(format!(
+                "block processor '{}' returned {} partitions, expected {n_buckets}",
+                bp.name(),
+                parts.len()
+            )));
+        }
+        for (p, records) in parts.into_iter().enumerate() {
+            shuffle.put(Segment {
+                map: idx,
+                partition: p as u32,
+                node,
+                records,
+            });
+        }
+        counters.add_many(&[
+            (counters::MAP_SPILLS, n_buckets as u64),
+            (counters::SHUFFLE_SEGMENTS, n_buckets as u64),
+        ]);
+        return Ok(());
+    }
+
+    // Map-side sort + spill (one segment per partition). The sort permutes
+    // index entries decorated with u64 key prefixes — payload bytes never
+    // move.
+    for (p, mut records) in buckets.into_iter().enumerate() {
+        records.sort_by_key();
         shuffle.put(Segment {
             map: idx,
             partition: p as u32,
             node,
-            pairs,
+            records,
         });
-        counters.add(counters::MAP_SPILLS, 1);
-        counters.add(counters::SHUFFLE_SEGMENTS, 1);
     }
+    counters.add_many(&[
+        (counters::MAP_SPILLS, n_buckets as u64),
+        (counters::SHUFFLE_SEGMENTS, n_buckets as u64),
+    ]);
     Ok(())
 }
 
@@ -447,6 +483,10 @@ type ReduceTaskArgs = (
 );
 
 /// One reduce task attempt.
+///
+/// The shuffle hands back `Arc`-shared segments (no copies); the k-way
+/// merge yields `(segment, record)` indices; grouping and reduction read
+/// keys and values as borrowed slices straight out of the segment arenas.
 fn run_reduce_task(args: ReduceTaskArgs) -> Result<()> {
     let (r, attempt, n_maps, spec, shuffle, counters, dfs, tmp_root) = args;
     counters.add(counters::TASKS_LAUNCHED, 1);
@@ -457,50 +497,45 @@ fn run_reduce_task(args: ReduceTaskArgs) -> Result<()> {
     }
 
     let segments = shuffle.fetch_partition(r, n_maps)?;
-    counters.add(
-        counters::SHUFFLE_BYTES,
-        segments.iter().map(Segment::bytes).sum::<u64>(),
-    );
-    let merged = merge_segments(segments);
-    counters.add(counters::REDUCE_INPUT_RECORDS, merged.len() as u64);
+    let shuffle_bytes = segments.iter().map(|s| s.bytes()).sum::<u64>();
+    let order = merge_segments(&segments);
+    counters.add_many(&[
+        (counters::SHUFFLE_BYTES, shuffle_bytes),
+        (counters::REDUCE_INPUT_RECORDS, order.len() as u64),
+    ]);
 
-    // Group by key, reduce, serialize.
+    // Group by key, reduce, serialize. Keys and values are borrowed from
+    // the shared segments for the whole pass.
     let mut out = Vec::new();
     let mut out_records = 0u64;
     {
-        let mut emit = |k: Vec<u8>, v: Vec<u8>| {
+        let mut emit = |k: &[u8], v: &[u8]| {
             out_records += 1;
-            match spec.output_format {
-                OutputFormat::TeraRecords => {
-                    out.extend_from_slice(&k);
-                    out.extend_from_slice(&v);
-                }
-                OutputFormat::TextKv => {
-                    out.extend_from_slice(&k);
-                    out.push(b'\t');
-                    out.extend_from_slice(&v);
-                    out.push(b'\n');
-                }
-                OutputFormat::TextValue => {
-                    out.extend_from_slice(&v);
-                    out.push(b'\n');
-                }
-            }
+            spec.output_format.write_record(&mut out, k, v);
         };
         let mut i = 0usize;
-        while i < merged.len() {
+        while i < order.len() {
+            let (s0, r0) = order[i];
+            let key = segments[s0 as usize].records.key(r0 as usize);
             let mut j = i + 1;
-            while j < merged.len() && merged[j].0 == merged[i].0 {
+            while j < order.len() {
+                let (s1, r1) = order[j];
+                if segments[s1 as usize].records.key(r1 as usize) != key {
+                    break;
+                }
                 j += 1;
             }
-            let key = merged[i].0.clone();
-            let mut values = merged[i..j].iter().map(|(_, v)| v.as_slice());
-            spec.reducer.reduce(&key, &mut values, &mut emit);
+            let mut values = order[i..j]
+                .iter()
+                .map(|&(s, rec)| segments[s as usize].records.value(rec as usize));
+            spec.reducer.reduce(key, &mut values, &mut emit);
             i = j;
         }
     }
-    counters.add(counters::REDUCE_OUTPUT_RECORDS, out_records);
-    counters.add(counters::REDUCE_OUTPUT_BYTES, out.len() as u64);
+    counters.add_many(&[
+        (counters::REDUCE_OUTPUT_RECORDS, out_records),
+        (counters::REDUCE_OUTPUT_BYTES, out.len() as u64),
+    ]);
 
     // Commit protocol: write the attempt file, then rename into place.
     let attempt_dir = format!("{tmp_root}/attempt_r_{r:05}_{attempt}");
@@ -518,16 +553,16 @@ mod tests {
     use crate::cluster::NodeId;
     use crate::config::StackConfig;
     use crate::lustre::LustreFs;
-    use crate::mapreduce::{FailurePlan, HashPartitioner, Mapper, Reducer};
+    use crate::mapreduce::{FailurePlan, HashPartitioner, Mapper, OutputFormat, Reducer};
     use crate::mapreduce::task::TaskId;
     use crate::metrics::Metrics;
     use crate::util::ids::IdGen;
 
     struct WordSplit;
     impl Mapper for WordSplit {
-        fn map(&self, _k: &[u8], v: &[u8], emit: &mut dyn FnMut(Vec<u8>, Vec<u8>)) {
+        fn map(&self, _k: &[u8], v: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
             for w in v.split(|&b| b == b' ').filter(|w| !w.is_empty()) {
-                emit(w.to_vec(), b"1".to_vec());
+                emit(w, b"1");
             }
         }
     }
@@ -538,10 +573,10 @@ mod tests {
             &self,
             key: &[u8],
             values: &mut dyn Iterator<Item = &[u8]>,
-            emit: &mut dyn FnMut(Vec<u8>, Vec<u8>),
+            emit: &mut dyn FnMut(&[u8], &[u8]),
         ) {
             let n = values.count();
-            emit(key.to_vec(), n.to_string().into_bytes());
+            emit(key, n.to_string().as_bytes());
         }
     }
 
@@ -621,7 +656,8 @@ mod tests {
         fs.mkdirs("/lustre/scratch/in2").unwrap();
         fs.create("/lustre/scratch/in2/f", b"x").unwrap();
         let spec = Arc::new(wordcount_spec("/lustre/scratch/in2", "/lustre/scratch/exists"));
-        let mut engine = MrEngine::new(&mut dc, fs, &pool, cfg.yarn.map_memory_mb, cfg.yarn.reduce_memory_mb);
+        let mut engine =
+            MrEngine::new(&mut dc, fs, &pool, cfg.yarn.map_memory_mb, cfg.yarn.reduce_memory_mb);
         assert!(engine.run(spec, "u", Micros::ZERO).is_err());
     }
 
@@ -663,7 +699,8 @@ mod tests {
         }
         spec.failures = failures;
         let spec = Arc::new(spec);
-        let mut engine = MrEngine::new(&mut dc, fs, &pool, cfg.yarn.map_memory_mb, cfg.yarn.reduce_memory_mb);
+        let mut engine =
+            MrEngine::new(&mut dc, fs, &pool, cfg.yarn.map_memory_mb, cfg.yarn.reduce_memory_mb);
         let err = engine.run(spec, "u", Micros::ZERO).unwrap_err();
         assert!(err.to_string().contains("failed 4 attempts"), "{err}");
         // App recorded as failed; resources all released.

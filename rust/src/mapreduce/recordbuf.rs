@@ -1,0 +1,357 @@
+//! `RecordBuf` — the flat-record arena the MapReduce data path runs on.
+//!
+//! The legacy path moved every record as an owned `(Vec<u8>, Vec<u8>)`
+//! pair: two heap allocations per record at map emit, pointer-chasing
+//! comparisons in every sort, and a deep clone wherever a segment crossed
+//! a boundary. `RecordBuf` stores all record payloads in one contiguous
+//! byte buffer plus a compact `(offset, key_len, val_len)` index entry per
+//! record, so:
+//!
+//! * map emit is an `extend_from_slice` into the arena (zero mallocs on
+//!   the per-record path once the buffers are warm);
+//! * sorting permutes 16-byte index entries decorated with a `u64`
+//!   big-endian key prefix — the Terasort 10/90 fast path sorts on the
+//!   prefix with `sort_unstable` and only touches full keys to resolve
+//!   the (rare) prefix ties;
+//! * shuffle segments share the arena behind an `Arc` — fetching a
+//!   partition never copies record bytes.
+//!
+//! The prefix ordering is correct for arbitrary keys, not just Terasort's:
+//! the zero-padded 8-byte big-endian prefix can never *invert* the
+//! lexicographic byte order of two keys, only equate them, and equal
+//! prefixes fall back to a full-key comparison.
+
+use crate::terasort::format::key_prefix_u64;
+use std::fmt;
+
+/// Index entry: one record inside the arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct RecordMeta {
+    offset: u64,
+    key_len: u32,
+    val_len: u32,
+}
+
+impl RecordMeta {
+    #[inline]
+    fn end(&self) -> usize {
+        self.offset as usize + self.key_len as usize + self.val_len as usize
+    }
+}
+
+/// Contiguous record storage + per-record index. Records keep their push
+/// order until [`RecordBuf::sort_by_key`] permutes the index.
+#[derive(Clone, Default)]
+pub struct RecordBuf {
+    data: Vec<u8>,
+    index: Vec<RecordMeta>,
+}
+
+impl RecordBuf {
+    pub fn new() -> RecordBuf {
+        RecordBuf::default()
+    }
+
+    /// Pre-size for `records` entries totalling `bytes` of payload.
+    pub fn with_capacity(records: usize, bytes: usize) -> RecordBuf {
+        RecordBuf {
+            data: Vec::with_capacity(bytes),
+            index: Vec::with_capacity(records),
+        }
+    }
+
+    /// Append one record (copies the payload into the arena).
+    #[inline]
+    pub fn push(&mut self, key: &[u8], value: &[u8]) {
+        let offset = self.data.len() as u64;
+        self.data.extend_from_slice(key);
+        self.data.extend_from_slice(value);
+        self.index.push(RecordMeta {
+            offset,
+            key_len: key.len() as u32,
+            val_len: value.len() as u32,
+        });
+    }
+
+    /// Fixed-width fast path: append a whole record (key followed by value
+    /// in one contiguous slice) with a single copy — the Terasort read
+    /// path pushes 100-byte records with `key_len = 10`.
+    #[inline]
+    pub fn push_record(&mut self, record: &[u8], key_len: usize) {
+        debug_assert!(key_len <= record.len());
+        let offset = self.data.len() as u64;
+        self.data.extend_from_slice(record);
+        self.index.push(RecordMeta {
+            offset,
+            key_len: key_len as u32,
+            val_len: (record.len() - key_len) as u32,
+        });
+    }
+
+    /// Copy record `i` of `src` into this buffer.
+    #[inline]
+    pub fn push_from(&mut self, src: &RecordBuf, i: usize) {
+        let m = src.index[i];
+        let offset = self.data.len() as u64;
+        self.data
+            .extend_from_slice(&src.data[m.offset as usize..m.end()]);
+        self.index.push(RecordMeta { offset, ..m });
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Total payload bytes held (keys + values).
+    #[inline]
+    pub fn payload_bytes(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    #[inline]
+    pub fn key(&self, i: usize) -> &[u8] {
+        let m = self.index[i];
+        &self.data[m.offset as usize..m.offset as usize + m.key_len as usize]
+    }
+
+    #[inline]
+    pub fn value(&self, i: usize) -> &[u8] {
+        let m = self.index[i];
+        let start = m.offset as usize + m.key_len as usize;
+        &self.data[start..start + m.val_len as usize]
+    }
+
+    /// `(key, value)` of record `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> (&[u8], &[u8]) {
+        let m = self.index[i];
+        let ks = m.offset as usize;
+        let vs = ks + m.key_len as usize;
+        (&self.data[ks..vs], &self.data[vs..vs + m.val_len as usize])
+    }
+
+    /// Iterate `(key, value)` in index order.
+    pub fn iter(&self) -> impl Iterator<Item = (&[u8], &[u8])> + '_ {
+        (0..self.len()).map(move |i| self.get(i))
+    }
+
+    /// Stable sort by key, permuting only the index. Decorates each entry
+    /// with its `u64` key prefix, sorts the `(prefix, position)` pairs with
+    /// `sort_unstable` (total order — equal prefixes break on the original
+    /// position, so the result is stable), then resolves equal-prefix runs
+    /// on the full key via [`resolve_prefix_ties`]. Allocates O(records)
+    /// index words, never touches payload bytes.
+    pub fn sort_by_key(&mut self) {
+        fn key_at<'b>(data: &'b [u8], m: &RecordMeta) -> &'b [u8] {
+            &data[m.offset as usize..m.offset as usize + m.key_len as usize]
+        }
+        if self.index.len() <= 1 {
+            return;
+        }
+        let data = self.data.as_slice();
+        let index = &self.index;
+        let prefixes: Vec<u64> = index
+            .iter()
+            .map(|m| key_prefix_u64(key_at(data, m)))
+            .collect();
+        let mut decorated: Vec<(u64, u32)> = prefixes
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as u32))
+            .collect();
+        decorated.sort_unstable();
+        let mut order: Vec<u32> = decorated.iter().map(|&(_, i)| i).collect();
+        resolve_prefix_ties(
+            &mut order,
+            |i| prefixes[i as usize],
+            |i| key_at(data, &index[i as usize]),
+        );
+        let new_index: Vec<RecordMeta> =
+            order.iter().map(|&i| index[i as usize]).collect();
+        self.index = new_index;
+    }
+
+    /// Are the records in non-decreasing key order?
+    pub fn is_sorted_by_key(&self) -> bool {
+        (1..self.len()).all(|i| self.key(i - 1) <= self.key(i))
+    }
+
+    /// Build from owned pairs (tests and migration shims).
+    pub fn from_pairs<I, K, V>(pairs: I) -> RecordBuf
+    where
+        I: IntoIterator<Item = (K, V)>,
+        K: AsRef<[u8]>,
+        V: AsRef<[u8]>,
+    {
+        let mut out = RecordBuf::new();
+        for (k, v) in pairs {
+            out.push(k.as_ref(), v.as_ref());
+        }
+        out
+    }
+
+    /// Materialize as owned pairs (tests and migration shims).
+    pub fn to_pairs(&self) -> Vec<(Vec<u8>, Vec<u8>)> {
+        self.iter()
+            .map(|(k, v)| (k.to_vec(), v.to_vec()))
+            .collect()
+    }
+}
+
+/// Given `order` already sorted by `prefix`, re-sort every equal-prefix
+/// run by the full key, with the order value itself as the final tiebreak
+/// — restoring stable full-key order after a prefix-only sort. Shared by
+/// [`RecordBuf::sort_by_key`] and the kernel block processor, whose
+/// byte-identical parity depends on both using the same tie rules.
+pub(crate) fn resolve_prefix_ties<'a>(
+    order: &mut [u32],
+    prefix: impl Fn(u32) -> u64,
+    key: impl Fn(u32) -> &'a [u8],
+) {
+    let mut i = 0;
+    while i < order.len() {
+        let pi = prefix(order[i]);
+        let mut j = i + 1;
+        while j < order.len() && prefix(order[j]) == pi {
+            j += 1;
+        }
+        if j - i > 1 {
+            order[i..j].sort_unstable_by(|&a, &b| key(a).cmp(key(b)).then(a.cmp(&b)));
+        }
+        i = j;
+    }
+}
+
+/// Logical equality: same records in the same order, regardless of arena
+/// layout (a sorted buffer equals a freshly-pushed sorted copy).
+impl PartialEq for RecordBuf {
+    fn eq(&self, other: &RecordBuf) -> bool {
+        self.len() == other.len() && (0..self.len()).all(|i| self.get(i) == other.get(i))
+    }
+}
+
+impl Eq for RecordBuf {}
+
+impl fmt::Debug for RecordBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "RecordBuf({} records, {} bytes)",
+            self.len(),
+            self.payload_bytes()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::props;
+
+    #[test]
+    fn push_and_get_round_trip() {
+        let mut rb = RecordBuf::new();
+        rb.push(b"alpha", b"1");
+        rb.push(b"", b"empty-key");
+        rb.push_record(b"key-and-value", 3);
+        assert_eq!(rb.len(), 3);
+        assert_eq!(rb.get(0), (&b"alpha"[..], &b"1"[..]));
+        assert_eq!(rb.get(1), (&b""[..], &b"empty-key"[..]));
+        assert_eq!(rb.get(2), (&b"key"[..], &b"-and-value"[..]));
+        assert_eq!(rb.payload_bytes(), 6 + 9 + 13);
+    }
+
+    #[test]
+    fn prefix_never_inverts_byte_order() {
+        let cases: &[(&[u8], &[u8])] = &[
+            (b"a", b"ab"),
+            (b"a\x00", b"a"),
+            (b"a\x01", b"a"),
+            (b"same-key!", b"same-key!"),
+            (b"", b"x"),
+            (b"\xff\xff\xff\xff\xff\xff\xff\xff\x01", b"\xff\xff\xff\xff\xff\xff\xff\xff"),
+        ];
+        for &(a, b) in cases {
+            let (pa, pb) = (key_prefix_u64(a), key_prefix_u64(b));
+            if pa != pb {
+                assert_eq!(pa.cmp(&pb), a.cmp(b), "{a:?} vs {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sort_matches_legacy_pairs_sort() {
+        props(60, |g| {
+            let n = g.usize(0..120);
+            let mut pairs: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+            let mut rb = RecordBuf::new();
+            for seq in 0..n {
+                // Short keys from a small alphabet force duplicates (and
+                // prefix ties); the value records the emission order so
+                // stability is observable.
+                let klen = g.usize(0..12);
+                let key: Vec<u8> = (0..klen).map(|_| g.u32(0..4) as u8).collect();
+                let val = format!("seq-{seq}").into_bytes();
+                rb.push(&key, &val);
+                pairs.push((key, val));
+            }
+            rb.sort_by_key();
+            pairs.sort_by(|a, b| a.0.cmp(&b.0)); // legacy path: stable Vec sort
+            assert_eq!(rb.to_pairs(), pairs);
+            assert!(rb.is_sorted_by_key());
+        });
+    }
+
+    #[test]
+    fn sort_fixed_width_terasort_records() {
+        use crate::terasort::format::record_for_row;
+        let mut rb = RecordBuf::new();
+        let mut pairs = Vec::new();
+        for row in 0..500u64 {
+            let rec = record_for_row(7, row);
+            rb.push_record(&rec, 10);
+            pairs.push((rec[..10].to_vec(), rec[10..].to_vec()));
+        }
+        rb.sort_by_key();
+        pairs.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(rb.to_pairs(), pairs);
+    }
+
+    #[test]
+    fn from_pairs_round_trips() {
+        let pairs = vec![
+            (b"k1".to_vec(), b"v1".to_vec()),
+            (b"k0".to_vec(), b"v0".to_vec()),
+        ];
+        let rb = RecordBuf::from_pairs(pairs.clone());
+        assert_eq!(rb.to_pairs(), pairs);
+    }
+
+    #[test]
+    fn logical_equality_ignores_layout() {
+        let mut a = RecordBuf::new();
+        a.push(b"b", b"2");
+        a.push(b"a", b"1");
+        a.sort_by_key(); // permuted index, original arena layout
+        let mut b = RecordBuf::new();
+        b.push(b"a", b"1");
+        b.push(b"b", b"2"); // contiguous sorted layout
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn push_from_copies_one_record() {
+        let mut src = RecordBuf::new();
+        src.push(b"k0", b"v0");
+        src.push(b"k1", b"v1");
+        let mut dst = RecordBuf::new();
+        dst.push_from(&src, 1);
+        assert_eq!(dst.to_pairs(), vec![(b"k1".to_vec(), b"v1".to_vec())]);
+    }
+}

@@ -4,11 +4,25 @@
 //! handlers. Segments record the node that produced them so a node failure
 //! invalidates exactly the segments Hadoop would lose (map re-execution),
 //! and the exactly-once delivery invariant can be property-tested.
+//!
+//! Perf shape (the Terasort hot path):
+//!
+//! * the store is **partition-sharded** (`shard = partition % N`), so
+//!   concurrent map spills and reduce fetches of different partitions
+//!   never contend on one global lock;
+//! * segments are stored behind `Arc` and [`ShuffleStore::fetch_partition`]
+//!   hands out shared views — no record bytes are copied at fetch time;
+//! * [`merge_segments`] is a cursor-based k-way merge over borrowed key
+//!   slices: it allocates O(segments) heap entries plus the output index,
+//!   never cloning keys or values.
 
 use crate::cluster::NodeId;
 use crate::error::{Error, Result};
+use crate::mapreduce::recordbuf::RecordBuf;
+use std::cmp::Reverse;
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::collections::BinaryHeap;
+use std::sync::{Arc, Mutex};
 
 /// One spilled map-output segment (already sorted by key).
 #[derive(Debug, Clone)]
@@ -16,49 +30,77 @@ pub struct Segment {
     pub map: u32,
     pub partition: u32,
     pub node: NodeId,
-    /// Sorted (key, value) pairs.
-    pub pairs: Vec<(Vec<u8>, Vec<u8>)>,
+    /// Flat record storage, sorted by key.
+    pub records: RecordBuf,
 }
 
 impl Segment {
     pub fn bytes(&self) -> u64 {
-        self.pairs
-            .iter()
-            .map(|(k, v)| (k.len() + v.len()) as u64)
-            .sum()
+        self.records.payload_bytes()
     }
 }
 
-/// Thread-safe shuffle store for one job.
-#[derive(Debug, Default)]
+/// Default shard count; override with [`ShuffleStore::with_shards`] or the
+/// `HPCW_SHUFFLE_SHARDS` environment variable.
+pub const DEFAULT_SHUFFLE_SHARDS: usize = 16;
+
+type Shard = Mutex<BTreeMap<(u32, u32), Arc<Segment>>>;
+
+/// Thread-safe, partition-sharded shuffle store for one job.
+#[derive(Debug)]
 pub struct ShuffleStore {
-    inner: Mutex<BTreeMap<(u32, u32), Segment>>,
+    shards: Vec<Shard>,
+}
+
+impl Default for ShuffleStore {
+    fn default() -> Self {
+        ShuffleStore::new()
+    }
 }
 
 impl ShuffleStore {
+    /// Store with the default shard count (`HPCW_SHUFFLE_SHARDS` overrides).
     pub fn new() -> Self {
-        ShuffleStore::default()
+        let n = std::env::var("HPCW_SHUFFLE_SHARDS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_SHUFFLE_SHARDS);
+        ShuffleStore::with_shards(n)
+    }
+
+    /// Store with an explicit shard count (`n >= 1`).
+    pub fn with_shards(n: usize) -> Self {
+        ShuffleStore {
+            shards: (0..n.max(1)).map(|_| Mutex::new(BTreeMap::new())).collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn shard_for(&self, partition: u32) -> &Shard {
+        &self.shards[partition as usize % self.shards.len()]
     }
 
     /// Commit a map attempt's segment. Re-commits (speculative duplicate or
     /// re-run after failure) replace the previous segment — Hadoop's
     /// commit-wins-once semantics.
     pub fn put(&self, seg: Segment) {
-        debug_assert!(
-            seg.pairs.windows(2).all(|w| w[0].0 <= w[1].0),
-            "segment must be sorted"
-        );
-        let mut g = self.inner.lock().unwrap();
-        g.insert((seg.map, seg.partition), seg);
+        debug_assert!(seg.records.is_sorted_by_key(), "segment must be sorted");
+        let mut g = self.shard_for(seg.partition).lock().unwrap();
+        g.insert((seg.map, seg.partition), Arc::new(seg));
     }
 
-    /// Fetch all segments for one reduce partition, map order.
-    pub fn fetch_partition(&self, partition: u32, n_maps: u32) -> Result<Vec<Segment>> {
-        let g = self.inner.lock().unwrap();
-        let mut out = Vec::new();
+    /// Fetch all segments for one reduce partition, map order. Returns
+    /// `Arc`-shared views of the committed segments — no per-record copies.
+    pub fn fetch_partition(&self, partition: u32, n_maps: u32) -> Result<Vec<Arc<Segment>>> {
+        let g = self.shard_for(partition).lock().unwrap();
+        let mut out = Vec::with_capacity(n_maps as usize);
         for m in 0..n_maps {
             match g.get(&(m, partition)) {
-                Some(s) => out.push(s.clone()),
+                Some(s) => out.push(Arc::clone(s)),
                 None => {
                     return Err(Error::MapReduce(format!(
                         "shuffle: missing segment map={m} partition={partition}"
@@ -72,15 +114,18 @@ impl ShuffleStore {
     /// Drop every segment produced on a failed node; returns the map ids
     /// whose output was lost (they must re-run).
     pub fn invalidate_node(&self, node: NodeId) -> Vec<u32> {
-        let mut g = self.inner.lock().unwrap();
-        let lost: Vec<(u32, u32)> = g
-            .iter()
-            .filter(|(_, s)| s.node == node)
-            .map(|(&k, _)| k)
-            .collect();
-        let mut maps: Vec<u32> = lost.iter().map(|&(m, _)| m).collect();
-        for k in lost {
-            g.remove(&k);
+        let mut maps = Vec::new();
+        for shard in &self.shards {
+            let mut g = shard.lock().unwrap();
+            let lost: Vec<(u32, u32)> = g
+                .iter()
+                .filter(|(_, s)| s.node == node)
+                .map(|(&k, _)| k)
+                .collect();
+            for k in lost {
+                maps.push(k.0);
+                g.remove(&k);
+            }
         }
         maps.sort_unstable();
         maps.dedup();
@@ -89,52 +134,109 @@ impl ShuffleStore {
 
     /// Total bytes held.
     pub fn total_bytes(&self) -> u64 {
-        self.inner.lock().unwrap().values().map(Segment::bytes).sum()
+        self.shards
+            .iter()
+            .map(|s| {
+                s.lock()
+                    .unwrap()
+                    .values()
+                    .map(|seg| seg.bytes())
+                    .sum::<u64>()
+            })
+            .sum()
     }
 
     pub fn segment_count(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     /// Exactly-once check: every (map, partition) cell present exactly once
     /// for the full matrix.
     pub fn verify_complete(&self, n_maps: u32, n_partitions: u32) -> Result<()> {
-        let g = self.inner.lock().unwrap();
-        if g.len() != (n_maps as usize) * (n_partitions as usize) {
+        let have = self.segment_count();
+        if have != (n_maps as usize) * (n_partitions as usize) {
             return Err(Error::MapReduce(format!(
-                "shuffle matrix {}×{} has {} cells",
-                n_maps,
-                n_partitions,
-                g.len()
+                "shuffle matrix {n_maps}×{n_partitions} has {have} cells"
             )));
         }
         Ok(())
     }
 }
 
-/// K-way merge of sorted segments into one sorted stream of pairs.
-/// Stable across segments in map order (Hadoop merge semantics).
-pub fn merge_segments(segments: Vec<Segment>) -> Vec<(Vec<u8>, Vec<u8>)> {
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
+/// One merge cursor head: the current key of a segment. Ordered by
+/// `(key, segment index)` so equal keys pop in map order — Hadoop's merge
+/// stability guarantee.
+struct Head<'a> {
+    key: &'a [u8],
+    seg: u32,
+    rec: u32,
+}
 
-    let total: usize = segments.iter().map(|s| s.pairs.len()).sum();
+impl PartialEq for Head<'_> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.seg == other.seg
+    }
+}
+
+impl Eq for Head<'_> {}
+
+impl PartialOrd for Head<'_> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Head<'_> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key.cmp(other.key).then(self.seg.cmp(&other.seg))
+    }
+}
+
+/// Cursor-based k-way merge of sorted segments: returns the merged order
+/// as `(segment index, record index)` pairs, stable across segments in map
+/// order for equal keys. Allocates the O(segments) heap and the output
+/// index — no key or value bytes are cloned; callers read records through
+/// the returned indices.
+pub fn merge_segments(segments: &[Arc<Segment>]) -> Vec<(u32, u32)> {
+    let total: usize = segments.iter().map(|s| s.records.len()).sum();
     let mut out = Vec::with_capacity(total);
-    // Heap of (key, segment_idx, pair_idx); Reverse for min-heap. The
-    // segment index participates in ordering → stability.
-    let mut heap: BinaryHeap<Reverse<(Vec<u8>, usize, usize)>> = BinaryHeap::new();
+    if segments.len() == 1 {
+        out.extend((0..segments[0].records.len() as u32).map(|r| (0u32, r)));
+        return out;
+    }
+    let mut heap: BinaryHeap<Reverse<Head<'_>>> = BinaryHeap::with_capacity(segments.len());
     for (si, s) in segments.iter().enumerate() {
-        if !s.pairs.is_empty() {
-            heap.push(Reverse((s.pairs[0].0.clone(), si, 0)));
+        if !s.records.is_empty() {
+            heap.push(Reverse(Head {
+                key: s.records.key(0),
+                seg: si as u32,
+                rec: 0,
+            }));
         }
     }
-    while let Some(Reverse((_, si, pi))) = heap.pop() {
-        let (k, v) = &segments[si].pairs[pi];
-        out.push((k.clone(), v.clone()));
-        let next = pi + 1;
-        if next < segments[si].pairs.len() {
-            heap.push(Reverse((segments[si].pairs[next].0.clone(), si, next)));
+    while let Some(Reverse(h)) = heap.pop() {
+        out.push((h.seg, h.rec));
+        let next = h.rec as usize + 1;
+        let s = &segments[h.seg as usize];
+        if next < s.records.len() {
+            heap.push(Reverse(Head {
+                key: s.records.key(next),
+                seg: h.seg,
+                rec: next as u32,
+            }));
         }
+    }
+    out
+}
+
+/// Materialize a merge into one `RecordBuf` (tests and tools; the reduce
+/// path iterates [`merge_segments`]' index order without copying).
+pub fn merge_to_recordbuf(segments: &[Arc<Segment>]) -> RecordBuf {
+    let order = merge_segments(segments);
+    let bytes: usize = segments.iter().map(|s| s.records.payload_bytes() as usize).sum();
+    let mut out = RecordBuf::with_capacity(order.len(), bytes);
+    for (s, r) in order {
+        out.push_from(&segments[s as usize].records, r as usize);
     }
     out
 }
@@ -149,7 +251,7 @@ mod tests {
             map,
             partition: part,
             node: NodeId(map),
-            pairs: keys.iter().map(|&k| (vec![k], vec![k, k])).collect(),
+            records: RecordBuf::from_pairs(keys.iter().map(|&k| (vec![k], vec![k, k]))),
         }
     }
 
@@ -164,12 +266,25 @@ mod tests {
     }
 
     #[test]
+    fn fetch_shares_segments_without_copying() {
+        // Zero-copy contract: two fetches of the same partition return the
+        // same `Arc` allocation — the store never deep-clones a segment.
+        let st = ShuffleStore::new();
+        st.put(seg(0, 0, &[1, 2, 3]));
+        let a = st.fetch_partition(0, 1).unwrap().remove(0);
+        let b = st.fetch_partition(0, 1).unwrap().remove(0);
+        assert!(Arc::ptr_eq(&a, &b), "fetch must hand out shared segments");
+        // Store + two fetched handles.
+        assert_eq!(Arc::strong_count(&a), 3);
+    }
+
+    #[test]
     fn recommit_replaces() {
         let st = ShuffleStore::new();
         st.put(seg(0, 0, &[1]));
         st.put(seg(0, 0, &[9])); // speculative duplicate wins once
         let got = st.fetch_partition(0, 1).unwrap();
-        assert_eq!(got[0].pairs[0].0, vec![9]);
+        assert_eq!(got[0].records.key(0), &[9]);
         assert_eq!(st.segment_count(), 1);
     }
 
@@ -186,10 +301,27 @@ mod tests {
     }
 
     #[test]
+    fn sharding_covers_all_partitions() {
+        // More partitions than shards: routing must stay consistent.
+        let st = ShuffleStore::with_shards(3);
+        assert_eq!(st.n_shards(), 3);
+        for p in 0..10u32 {
+            st.put(seg(0, p, &[p as u8]));
+        }
+        for p in 0..10u32 {
+            let got = st.fetch_partition(p, 1).unwrap();
+            assert_eq!(got[0].records.key(0), &[p as u8]);
+        }
+        assert_eq!(st.segment_count(), 10);
+        st.verify_complete(1, 10).unwrap();
+    }
+
+    #[test]
     fn merge_is_sorted_and_complete() {
         let a = seg(0, 0, &[1, 4, 7]);
         let b = seg(1, 0, &[2, 4, 9]);
-        let merged = merge_segments(vec![a, b]);
+        let segs = vec![Arc::new(a), Arc::new(b)];
+        let merged = merge_to_recordbuf(&segs);
         let keys: Vec<u8> = merged.iter().map(|(k, _)| k[0]).collect();
         assert_eq!(keys, vec![1, 2, 4, 4, 7, 9]);
     }
@@ -197,13 +329,19 @@ mod tests {
     #[test]
     fn merge_stable_on_equal_keys() {
         // Equal keys come out in segment (map) order.
-        let mut a = seg(0, 0, &[5]);
-        a.pairs[0].1 = b"from-map0".to_vec();
-        let mut b = seg(1, 0, &[5]);
-        b.pairs[0].1 = b"from-map1".to_vec();
-        let merged = merge_segments(vec![a, b]);
-        assert_eq!(merged[0].1, b"from-map0".to_vec());
-        assert_eq!(merged[1].1, b"from-map1".to_vec());
+        let mk = |map: u32, val: &[u8]| Segment {
+            map,
+            partition: 0,
+            node: NodeId(map),
+            records: RecordBuf::from_pairs([(b"\x05".to_vec(), val.to_vec())]),
+        };
+        let segs = vec![
+            Arc::new(mk(0, b"from-map0")),
+            Arc::new(mk(1, b"from-map1")),
+        ];
+        let merged = merge_to_recordbuf(&segs);
+        assert_eq!(merged.value(0), b"from-map0");
+        assert_eq!(merged.value(1), b"from-map1");
     }
 
     #[test]
@@ -217,12 +355,75 @@ mod tests {
                     (0..g.usize(0..20)).map(|_| g.u32(0..50) as u8).collect();
                 keys.sort_unstable();
                 flat.extend(keys.iter().copied());
-                segs.push(seg(m as u32, 0, &keys));
+                segs.push(Arc::new(seg(m as u32, 0, &keys)));
             }
             flat.sort_unstable();
-            let merged = merge_segments(segs);
+            let merged = merge_to_recordbuf(&segs);
             let keys: Vec<u8> = merged.iter().map(|(k, _)| k[0]).collect();
             assert_eq!(keys, flat);
+        });
+    }
+
+    /// Parity with the legacy pairs path: merge order, group boundaries,
+    /// and stable equal-key ordering across segments all match a reference
+    /// model built on `Vec<(Vec<u8>, Vec<u8>)>`.
+    #[test]
+    fn merge_parity_with_legacy_pairs_path() {
+        props(40, |g| {
+            let n_segs = g.usize(1..6);
+            let mut segs: Vec<Arc<Segment>> = Vec::new();
+            let mut legacy: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+            for m in 0..n_segs {
+                let mut pairs: Vec<(Vec<u8>, Vec<u8>)> = (0..g.usize(0..25))
+                    .map(|i| {
+                        // Small key space → plenty of equal keys, within and
+                        // across segments. Values carry (segment, seq).
+                        let key = vec![g.u32(0..6) as u8];
+                        (key, format!("s{m}-r{i}").into_bytes())
+                    })
+                    .collect();
+                pairs.sort_by(|a, b| a.0.cmp(&b.0)); // legacy map-side sort (stable)
+                legacy.extend(pairs.iter().cloned());
+                segs.push(Arc::new(Segment {
+                    map: m as u32,
+                    partition: 0,
+                    node: NodeId(m as u32),
+                    records: RecordBuf::from_pairs(pairs),
+                }));
+            }
+            // Legacy reference merge: stable sort of the concatenated
+            // (already per-segment-sorted, segment-ordered) stream.
+            legacy.sort_by(|a, b| a.0.cmp(&b.0));
+
+            let merged = merge_to_recordbuf(&segs);
+            assert_eq!(merged.to_pairs(), legacy, "merge order + stability");
+
+            // Group boundaries: walking the merged order groups by key
+            // exactly like grouping the legacy merged stream.
+            let order = merge_segments(&segs);
+            let mut flat_groups: Vec<(Vec<u8>, usize)> = Vec::new();
+            for (k, _) in &legacy {
+                match flat_groups.last_mut() {
+                    Some((lk, n)) if lk == k => *n += 1,
+                    _ => flat_groups.push((k.clone(), 1)),
+                }
+            }
+            let mut cursor_groups: Vec<(Vec<u8>, usize)> = Vec::new();
+            let mut i = 0;
+            while i < order.len() {
+                let key = segs[order[i].0 as usize]
+                    .records
+                    .key(order[i].1 as usize);
+                let mut j = i + 1;
+                while j < order.len()
+                    && segs[order[j].0 as usize].records.key(order[j].1 as usize) == key
+                {
+                    j += 1;
+                }
+                cursor_groups.push((key.to_vec(), j - i));
+                i = j;
+            }
+            assert_eq!(cursor_groups, flat_groups, "group boundaries");
         });
     }
 }

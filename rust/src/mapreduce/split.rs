@@ -10,7 +10,7 @@
 
 use crate::error::{Error, Result};
 use crate::lustre::Dfs;
-use crate::terasort::format::RECORD_LEN;
+use crate::terasort::format::{split_record, RECORD_LEN};
 
 /// Record format of a job's input.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -128,7 +128,8 @@ pub fn read_records(
             }
             let mut n = 0;
             for rec in buf.chunks_exact(RECORD_LEN) {
-                f(&rec[..10], &rec[10..]);
+                let (k, v) = split_record(rec);
+                f(k, v);
                 n += 1;
             }
             Ok(n)

@@ -3,39 +3,41 @@
 //! [`BlockProcessor`] is the hook the MR engine's map task calls to
 //! sort+partition a whole emitted block at once. Two implementations:
 //!
-//! * [`RustBlockProcessor`] — pure Rust (sort_by + binary-search routing);
+//! * [`RustBlockProcessor`] — pure Rust over the flat `RecordBuf` arena
+//!   (prefix-decorated index sort + monotone routing scan);
 //! * [`KernelBlockProcessor`] — the AOT Pallas `mapphase` artifact through
 //!   PJRT: kernel sorts/partitions the 8-byte key prefixes, Rust applies
-//!   the permutation to the full 100-byte records and resolves the rare
+//!   the permutation to the arena indices and resolves the rare
 //!   prefix-tie runs by a local full-key fix-up pass.
 //!
 //! Both must produce byte-identical segments; `parity` tests enforce it.
 
 use crate::error::{Error, Result};
-use crate::mapreduce::BlockProcessor;
+use crate::mapreduce::recordbuf::resolve_prefix_ties;
+use crate::mapreduce::{BlockProcessor, RecordBuf};
 use crate::runtime::pjrt::{KernelClient, Tensor};
 use crate::terasort::format::key_prefix_u64;
 use crate::terasort::RangePartitioner;
 
-/// Pure-Rust reference path.
+/// Pure-Rust reference path over the flat [`RecordBuf`] arena: one
+/// prefix-decorated index sort, then a single monotone routing scan that
+/// copies each record once into its partition buffer.
 pub struct RustBlockProcessor {
     pub partitioner: RangePartitioner,
 }
 
 impl BlockProcessor for RustBlockProcessor {
-    fn process(
-        &self,
-        mut pairs: Vec<(Vec<u8>, Vec<u8>)>,
-        n_reduces: u32,
-    ) -> Result<Vec<Vec<(Vec<u8>, Vec<u8>)>>> {
-        pairs.sort_by(|a, b| a.0.cmp(&b.0));
-        let mut out: Vec<Vec<(Vec<u8>, Vec<u8>)>> = (0..n_reduces).map(|_| Vec::new()).collect();
-        for (k, v) in pairs {
-            let p = self
-                .partitioner
-                .route(key_prefix_u64(&k))
-                .min(n_reduces.saturating_sub(1)) as usize;
-            out[p].push((k, v));
+    fn process(&self, mut records: RecordBuf, n_reduces: u32) -> Result<Vec<RecordBuf>> {
+        let mut out: Vec<RecordBuf> = (0..n_reduces).map(|_| RecordBuf::new()).collect();
+        if n_reduces == 0 {
+            return Ok(out);
+        }
+        records.sort_by_key();
+        let mut router = self.partitioner.router();
+        for i in 0..records.len() {
+            let (k, v) = records.get(i);
+            let p = router.route(key_prefix_u64(k)).min(n_reduces - 1) as usize;
+            out[p].push(k, v);
         }
         Ok(out)
     }
@@ -196,79 +198,68 @@ impl KernelBlockProcessor {
 }
 
 impl BlockProcessor for KernelBlockProcessor {
-    fn process(
-        &self,
-        pairs: Vec<(Vec<u8>, Vec<u8>)>,
-        n_reduces: u32,
-    ) -> Result<Vec<Vec<(Vec<u8>, Vec<u8>)>>> {
+    fn process(&self, records: RecordBuf, n_reduces: u32) -> Result<Vec<RecordBuf>> {
+        // `.max(1)`: a corrupt manifest advertising a zero-sized block must
+        // not stall the chunking loop below (`base` would never advance).
         let chunk_cap = self
             .multi
             .as_ref()
             .map(|(t, _, _)| *t as usize)
-            .unwrap_or_else(|| self.blocks.last().unwrap().0 as usize);
-        let mut out: Vec<Vec<(Vec<u8>, Vec<u8>)>> = (0..n_reduces).map(|_| Vec::new()).collect();
-
-        // Process in kernel-sized chunks; each chunk may come back as
-        // several sorted runs (multi-block artifact). Multi-run outputs get
-        // one per-partition merge pass at the end.
-        let mut chunks: Vec<Vec<(Vec<u8>, Vec<u8>)>> = Vec::new();
-        let mut current = Vec::new();
-        for p in pairs {
-            current.push(p);
-            if current.len() == chunk_cap {
-                chunks.push(std::mem::take(&mut current));
-            }
-        }
-        if !current.is_empty() {
-            chunks.push(current);
+            .unwrap_or_else(|| self.blocks.last().unwrap().0 as usize)
+            .max(1);
+        let mut out: Vec<RecordBuf> = (0..n_reduces).map(|_| RecordBuf::new()).collect();
+        if n_reduces == 0 {
+            return Ok(out);
         }
 
+        // Process in kernel-sized chunks of the arena; each chunk may come
+        // back as several sorted runs (multi-block artifact). Multi-run
+        // outputs get one per-partition sort pass at the end. The kernel
+        // only ever sees the u64 prefixes — record payloads stay in the
+        // arena and are copied exactly once, into their partition buffer.
+        let n = records.len();
         let mut total_runs = 0usize;
-        for chunk in chunks {
-            let prefixes: Vec<u64> = chunk.iter().map(|(k, _)| key_prefix_u64(k)).collect();
+        let mut base = 0usize;
+        while base < n {
+            let len = chunk_cap.min(n - base);
+            let prefixes: Vec<u64> = (base..base + len)
+                .map(|i| key_prefix_u64(records.key(i)))
+                .collect();
             let runs = self.sorted_runs(&prefixes)?;
             total_runs += runs.len();
-            let mut taken: Vec<Option<(Vec<u8>, Vec<u8>)>> =
-                chunk.into_iter().map(Some).collect();
-            for order in runs {
-                // Apply the permutation to full records.
-                let mut sorted: Vec<(Vec<u8>, Vec<u8>)> = Vec::with_capacity(order.len());
-                for &i in &order {
-                    sorted.push(taken[i as usize].take().expect("perm is a permutation"));
-                }
+            for mut order in runs {
+                // `order` holds chunk-local indices sorted by prefix.
+                // Fix-up: resolve ties on the full 10-byte key within
+                // equal-prefix runs (position stays the final tiebreak, so
+                // equal full keys keep emission order) — the same shared
+                // pass RecordBuf::sort_by_key uses, keeping both paths
+                // byte-identical.
+                resolve_prefix_ties(
+                    &mut order,
+                    |i| prefixes[i as usize],
+                    |i| records.key(base + i as usize),
+                );
 
-                // Fix-up: the kernel sorted by the 8-byte prefix; resolve
-                // ties on the full 10-byte key within equal-prefix runs.
-                let mut i = 0;
-                while i < sorted.len() {
-                    let mut j = i + 1;
-                    let pi = key_prefix_u64(&sorted[i].0);
-                    while j < sorted.len() && key_prefix_u64(&sorted[j].0) == pi {
-                        j += 1;
-                    }
-                    if j - i > 1 {
-                        sorted[i..j].sort_by(|a, b| a.0.cmp(&b.0));
-                    }
-                    i = j;
-                }
-
-                // Route the sorted run (partitioning is monotone: one scan).
-                for (k, v) in sorted {
-                    let p = self
-                        .partitioner
-                        .route(key_prefix_u64(&k))
-                        .min(n_reduces.saturating_sub(1)) as usize;
-                    out[p].push((k, v));
+                // Route the sorted run (partitioning is monotone: one scan;
+                // prefixes were already extracted for the kernel call).
+                let mut router = self.partitioner.router();
+                for &ci in &order {
+                    let gi = base + ci as usize;
+                    let (k, v) = records.get(gi);
+                    let p = router.route(prefixes[ci as usize]).min(n_reduces - 1) as usize;
+                    out[p].push(k, v);
                 }
             }
+            base += len;
         }
 
         if total_runs > 1 {
             // Per-partition contributions from different runs are each
-            // sorted but interleaved; restore order with one merge-ish
-            // sort pass (partitions are small relative to the block).
+            // sorted but interleaved; restore order with one stable index
+            // sort per partition (partitions are small relative to the
+            // block).
             for part in &mut out {
-                part.sort_by(|a, b| a.0.cmp(&b.0));
+                part.sort_by_key();
             }
         }
         Ok(out)
@@ -293,13 +284,12 @@ mod tests {
         RangePartitioner::from_samples(samples, n).unwrap()
     }
 
-    fn pairs(n: usize, seed: u64) -> Vec<(Vec<u8>, Vec<u8>)> {
-        (0..n)
-            .map(|i| {
-                let rec = record_for_row(seed, i as u64);
-                (rec[..10].to_vec(), rec[10..].to_vec())
-            })
-            .collect()
+    fn records(n: usize, seed: u64) -> RecordBuf {
+        let mut rb = RecordBuf::with_capacity(n, n * 100);
+        for i in 0..n {
+            rb.push_record(&record_for_row(seed, i as u64), 10);
+        }
+        rb
     }
 
     #[test]
@@ -307,12 +297,40 @@ mod tests {
         let p = RustBlockProcessor {
             partitioner: partitioner(8, 1),
         };
-        let out = p.process(pairs(5000, 42), 8).unwrap();
+        let out = p.process(records(5000, 42), 8).unwrap();
         assert_eq!(out.len(), 8);
-        let total: usize = out.iter().map(Vec::len).sum();
+        let total: usize = out.iter().map(RecordBuf::len).sum();
         assert_eq!(total, 5000);
         for part in &out {
-            assert!(part.windows(2).all(|w| w[0].0 <= w[1].0));
+            assert!(part.is_sorted_by_key());
+        }
+    }
+
+    #[test]
+    fn rust_processor_matches_legacy_pairs_model() {
+        // Parity with the pre-flat-path implementation: stable full sort of
+        // owned pairs, then per-record binary-search routing.
+        let part = partitioner(8, 3);
+        let n_reduces = 8u32;
+        let mut pairs: Vec<(Vec<u8>, Vec<u8>)> = (0..3000)
+            .map(|i| {
+                let rec = record_for_row(11, i as u64);
+                (rec[..10].to_vec(), rec[10..].to_vec())
+            })
+            .collect();
+        let p = RustBlockProcessor {
+            partitioner: part.clone(),
+        };
+        let out = p.process(records(3000, 11), n_reduces).unwrap();
+        pairs.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut legacy: Vec<Vec<(Vec<u8>, Vec<u8>)>> =
+            (0..n_reduces).map(|_| Vec::new()).collect();
+        for (k, v) in pairs {
+            let route = part.route(key_prefix_u64(&k)).min(n_reduces - 1) as usize;
+            legacy[route].push((k, v));
+        }
+        for (flat, old) in out.iter().zip(&legacy) {
+            assert_eq!(&flat.to_pairs(), old);
         }
     }
 
@@ -327,8 +345,8 @@ mod tests {
         let kernel = KernelBlockProcessor::new(client, part.clone()).unwrap();
         let rust = RustBlockProcessor { partitioner: part };
         for &n in &[100usize, 2048, 3000, 9000] {
-            let a = kernel.process(pairs(n, 7), 16).unwrap();
-            let b = rust.process(pairs(n, 7), 16).unwrap();
+            let a = kernel.process(records(n, 7), 16).unwrap();
+            let b = rust.process(records(n, 7), 16).unwrap();
             assert_eq!(a, b, "parity failed at n={n}");
         }
     }

@@ -52,10 +52,27 @@ pub fn record_for_row(seed: u64, row: u64) -> [u8; RECORD_LEN] {
 }
 
 /// First 8 bytes of a key as a big-endian u64 — the prefix the range
-/// partitioner (and the Pallas kernel) operates on.
+/// partitioner, the flat-record sort and the Pallas kernel operate on.
+/// Keys shorter than 8 bytes are zero-padded on the right, which can only
+/// *equate* two keys the byte order distinguishes, never invert them —
+/// callers that need a total order resolve equal prefixes on the full key.
+#[inline]
 pub fn key_prefix_u64(key: &[u8]) -> u64 {
-    debug_assert!(key.len() >= 8);
-    u64::from_be_bytes(key[..8].try_into().unwrap())
+    if key.len() >= 8 {
+        u64::from_be_bytes(key[..8].try_into().unwrap())
+    } else {
+        let mut buf = [0u8; 8];
+        buf[..key.len()].copy_from_slice(key);
+        u64::from_be_bytes(buf)
+    }
+}
+
+/// Split a 100-byte record into its `(key, value)` slices — the flat-path
+/// view of the fixed 10/90 layout.
+#[inline]
+pub fn split_record(record: &[u8]) -> (&[u8], &[u8]) {
+    debug_assert_eq!(record.len(), RECORD_LEN);
+    record.split_at(KEY_LEN)
 }
 
 /// Checksum of one record, accumulated Teravalidate-style: CRC32 widened

@@ -36,15 +36,20 @@ pub struct TeragenMapper {
 }
 
 impl Mapper for TeragenMapper {
-    fn map(&self, key: &[u8], _value: &[u8], emit: &mut dyn FnMut(Vec<u8>, Vec<u8>)) {
+    fn map(&self, key: &[u8], _value: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
         let row = u64::from_be_bytes(key.try_into().expect("row id key"));
         let rec = record_for_row(self.seed, row);
-        emit(rec[..KEY_LEN].to_vec(), rec[KEY_LEN..].to_vec());
+        let (k, v) = format::split_record(&rec);
+        emit(k, v);
     }
 }
 
 /// Run Teragen (map-only job) on a live engine.
-pub fn run_teragen(engine: &mut MrEngine<'_>, spec: &TeragenSpec, now: Micros) -> Result<MrOutcome> {
+pub fn run_teragen(
+    engine: &mut MrEngine<'_>,
+    spec: &TeragenSpec,
+    now: Micros,
+) -> Result<MrOutcome> {
     let mut job = JobSpec::identity("teragen", "", &spec.output_dir, 0);
     job.input_format = InputFormat::RowRange;
     job.output_format = OutputFormat::TeraRecords;

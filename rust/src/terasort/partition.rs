@@ -55,6 +55,35 @@ impl RangePartitioner {
     pub fn route(&self, prefix: u64) -> u32 {
         self.splitters.partition_point(|&s| s <= prefix) as u32
     }
+
+    /// Sequential router for a key stream already sorted by prefix:
+    /// amortizes the per-key binary search to O(n + splitters) for a whole
+    /// sorted run (the block-processor hot path).
+    pub fn router(&self) -> MonotoneRouter<'_> {
+        MonotoneRouter {
+            splitters: &self.splitters,
+            next: 0,
+        }
+    }
+}
+
+/// Cursor over the splitter array; feed it non-decreasing prefixes.
+#[derive(Debug)]
+pub struct MonotoneRouter<'a> {
+    splitters: &'a [u64],
+    next: usize,
+}
+
+impl MonotoneRouter<'_> {
+    /// Partition of `prefix`. Equivalent to [`RangePartitioner::route`]
+    /// when prefixes arrive in non-decreasing order.
+    #[inline]
+    pub fn route(&mut self, prefix: u64) -> u32 {
+        while self.next < self.splitters.len() && self.splitters[self.next] <= prefix {
+            self.next += 1;
+        }
+        self.next as u32
+    }
 }
 
 impl Partitioner for RangePartitioner {
@@ -136,6 +165,21 @@ mod tests {
             }
             assert!(p.route(a) <= p.route(b), "monotone routing");
             assert!(p.route(b) < p.n_partitions());
+        });
+    }
+
+    #[test]
+    fn monotone_router_matches_binary_search() {
+        props(40, |g| {
+            let samples: Vec<u64> = (0..g.usize(2..200)).map(|_| g.u64(0..1 << 40)).collect();
+            let parts = g.u32(1..32);
+            let p = RangePartitioner::from_samples(samples, parts).unwrap();
+            let mut keys: Vec<u64> = (0..200).map(|_| g.u64(0..1 << 40)).collect();
+            keys.sort_unstable();
+            let mut router = p.router();
+            for &k in &keys {
+                assert_eq!(router.route(k), p.route(k), "key {k}");
+            }
         });
     }
 

@@ -108,22 +108,28 @@ impl Mul<u64> for ByteSize {
 }
 
 /// CRC32 (IEEE 802.3, reflected) — the checksum Teravalidate aggregates.
-/// Table-driven, generated at first use.
+/// Table-driven, generated at compile time.
 pub struct Crc32 {
     state: u32,
 }
 
-static CRC_TABLE: once_cell::sync::Lazy<[u32; 256]> = once_cell::sync::Lazy::new(|| {
+const fn crc_table() -> [u32; 256] {
     let mut table = [0u32; 256];
-    for (i, e) in table.iter_mut().enumerate() {
+    let mut i = 0usize;
+    while i < 256 {
         let mut c = i as u32;
-        for _ in 0..8 {
+        let mut k = 0;
+        while k < 8 {
             c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
         }
-        *e = c;
+        table[i] = c;
+        i += 1;
     }
     table
-});
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
 
 impl Crc32 {
     pub fn new() -> Self {
@@ -131,7 +137,7 @@ impl Crc32 {
     }
 
     pub fn update(&mut self, data: &[u8]) {
-        let t = &*CRC_TABLE;
+        let t = &CRC_TABLE;
         let mut c = self.state;
         for &b in data {
             c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);

@@ -4,7 +4,8 @@
 
 use hpcw::cluster::{ClusterModel, NodeId};
 use hpcw::config::StackConfig;
-use hpcw::mapreduce::shuffle::{merge_segments, Segment, ShuffleStore};
+use hpcw::mapreduce::shuffle::{merge_to_recordbuf, Segment, ShuffleStore};
+use hpcw::mapreduce::RecordBuf;
 use hpcw::metrics::Metrics;
 use hpcw::scheduler::{JobCommand, JobState, Lsf, ResourceRequest};
 use hpcw::testkit::{props, Gen};
@@ -157,7 +158,9 @@ fn shuffle_exactly_once_and_merge_correct() {
                     map: m,
                     partition: p,
                     node: NodeId(m),
-                    pairs: keys.iter().map(|&k| (vec![k], vec![])).collect(),
+                    records: RecordBuf::from_pairs(
+                        keys.iter().map(|&k| (vec![k], Vec::<u8>::new())),
+                    ),
                 };
                 // Speculative duplicate commit sometimes.
                 if g.chance(0.3) {
@@ -171,8 +174,8 @@ fn shuffle_exactly_once_and_merge_correct() {
         }
         store.verify_complete(n_maps, n_parts).unwrap();
         let segs = store.fetch_partition(0, n_maps).unwrap();
-        let merged = merge_segments(segs);
-        let mut keys: Vec<Vec<u8>> = merged.into_iter().map(|(k, _)| k).collect();
+        let merged = merge_to_recordbuf(&segs);
+        let mut keys: Vec<Vec<u8>> = merged.iter().map(|(k, _)| k.to_vec()).collect();
         expected.sort();
         keys.sort();
         assert_eq!(keys, expected);
