@@ -1,10 +1,200 @@
 //! FIG5 — "Terasort Behaviour": 1 TB sort time vs cores; "reasonable
-//! scalability" ending I/O-bound (paper §VII). Also appends the sweep to
-//! `BENCH_PR1.json` so the perf trajectory is machine-readable.
+//! scalability" ending I/O-bound (paper §VII). Appends the sim sweep to
+//! `BENCH_PR1.json` (perf trajectory) and — new in PR 2 — runs the Real
+//! engine end-to-end in both scheduler modes and writes the
+//! barriered-vs-pipelined comparison, with per-phase map/reduce/overlap
+//! timings, to **`BENCH_PR2.json`**.
+//!
+//! `HPCW_BENCH_SMOKE=1` shrinks the Real run to a CI-sized smoke test
+//! (1 iteration, no speedup assertion) so the bench cannot bit-rot.
+
 use hpcw::bench::{emit_json, fig5};
+use hpcw::cluster::NodeId;
 use hpcw::config::StackConfig;
+use hpcw::lustre::{Dfs, LustreFs};
+use hpcw::mapreduce::{counters, MrEngine, MrOutcome, SchedMode};
+use hpcw::metrics::Metrics;
+use hpcw::terasort::{run_teragen, run_terasort, TeragenSpec, TerasortJob};
+use hpcw::util::ids::IdGen;
+use hpcw::util::pool::Pool;
+use hpcw::util::time::Micros;
+use hpcw::wrapper::DynamicCluster;
+use std::sync::Arc;
+
+/// Same default the API stack uses for its worker pool.
+fn default_pool_width() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8)
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct RealRun {
+    total_s: f64,
+    map_s: f64,
+    reduce_s: f64,
+    overlap_s: f64,
+    maps_at_first_reduce: u64,
+    maps: u32,
+}
+
+fn summarize(o: &MrOutcome) -> RealRun {
+    RealRun {
+        total_s: o.phases.total_s,
+        map_s: o.phases.last_map_commit_s - o.phases.first_map_launch_s,
+        reduce_s: o.phases.last_reduce_commit_s - o.phases.first_reduce_launch_s,
+        overlap_s: o.phases.overlap_s(),
+        maps_at_first_reduce: o.counters.get(counters::MAPS_AT_FIRST_REDUCE),
+        maps: o.maps,
+    }
+}
+
+fn better(best: Option<RealRun>, run: RealRun) -> Option<RealRun> {
+    match best {
+        Some(b) if b.total_s <= run.total_s => Some(b),
+        _ => Some(run),
+    }
+}
+
+/// End-to-end Real-mode Terasort, barriered vs pipelined, on a cluster
+/// sized so container grants (one task-sized container per slave) come in
+/// waves that do not divide the pool width — the regime where the wave
+/// barrier leaves workers idle and the event-driven scheduler does not.
+fn real_overlap_bench(smoke: bool) {
+    // At least 2 workers so slow-start has a spare worker to run reduces
+    // on while maps drain.
+    let w = default_pool_width().max(2);
+    let capacity = w + 1; // containers per wave; ceil((w+1)/w) = 2 pool rounds
+    let cfg = StackConfig::tiny();
+    let fs = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
+    let nodes: Vec<NodeId> = (0..(capacity as u32 + 2)).map(NodeId).collect();
+    let mut dc = DynamicCluster::build(
+        &cfg,
+        &nodes,
+        &*fs,
+        Arc::new(IdGen::default()),
+        Arc::new(Metrics::new()),
+        "fig5-real",
+        Micros::ZERO,
+    )
+    .unwrap();
+    let pool = Pool::new(w);
+    // One task container per slave: the tiny config's 6 GB NMs host
+    // exactly one 4 GB container each.
+    let mem = 4096u64;
+    let n_maps = 6 * capacity as u64;
+    let rows_per_map: u64 = if smoke { 2_000 } else { 40_000 };
+    let rows = n_maps * rows_per_map;
+    let split_bytes = rows_per_map * 100;
+    let reduces = (2 * w + 1) as u32;
+
+    {
+        let mut engine =
+            MrEngine::new(&mut dc, fs.clone() as Arc<dyn Dfs>, &pool, mem, mem);
+        run_teragen(
+            &mut engine,
+            &TeragenSpec {
+                rows,
+                maps: 6,
+                output_dir: "/lustre/scratch/f5-in".into(),
+                seed: 42,
+            },
+            Micros::ZERO,
+        )
+        .unwrap();
+    }
+
+    let mut best_bar: Option<RealRun> = None;
+    let mut best_pipe: Option<RealRun> = None;
+    let max_rounds = if smoke { 1 } else { 5 };
+    for round in 0..max_rounds {
+        for (label, mode) in [
+            ("barriered", SchedMode::Barriered),
+            ("pipelined", SchedMode::Pipelined),
+        ] {
+            let out = format!("/lustre/scratch/f5-out-{label}-{round}");
+            let ts = TerasortJob {
+                split_bytes,
+                samples_per_file: 200,
+                ..TerasortJob::new("/lustre/scratch/f5-in", &out, reduces)
+            };
+            let mut engine =
+                MrEngine::new(&mut dc, fs.clone() as Arc<dyn Dfs>, &pool, mem, mem)
+                    .with_mode(mode);
+            let outcome = run_terasort(&mut engine, &ts, None, Micros::ZERO).unwrap();
+            let run = summarize(&outcome);
+            println!(
+                "[{label} r{round}] total={:.3}s map={:.3}s reduce={:.3}s overlap={:.3}s \
+                 maps@first-reduce={}/{}",
+                run.total_s, run.map_s, run.reduce_s, run.overlap_s,
+                run.maps_at_first_reduce, run.maps
+            );
+            match mode {
+                SchedMode::Barriered => best_bar = better(best_bar, run),
+                SchedMode::Pipelined => best_pipe = better(best_pipe, run),
+            }
+            fs.delete_recursive(&out).unwrap();
+        }
+        if round >= 1 {
+            let (b, p) = (best_bar.unwrap(), best_pipe.unwrap());
+            if b.total_s / p.total_s >= 1.35 {
+                break; // the gap is established; no need to keep sorting
+            }
+        }
+    }
+    let bar = best_bar.unwrap();
+    let pipe = best_pipe.unwrap();
+    let speedup = bar.total_s / pipe.total_s;
+    emit_json(
+        "BENCH_PR2.json",
+        "fig5_terasort_real",
+        &[
+            ("pool_width", w as f64),
+            ("wave_containers", capacity as f64),
+            ("maps", n_maps as f64),
+            ("reduces", reduces as f64),
+            ("rows", rows as f64),
+            ("barriered_total_s", bar.total_s),
+            ("barriered_map_s", bar.map_s),
+            ("barriered_reduce_s", bar.reduce_s),
+            ("barriered_overlap_s", bar.overlap_s),
+            ("pipelined_total_s", pipe.total_s),
+            ("pipelined_map_s", pipe.map_s),
+            ("pipelined_reduce_s", pipe.reduce_s),
+            ("pipelined_overlap_s", pipe.overlap_s),
+            ("pipelined_maps_at_first_reduce", pipe.maps_at_first_reduce as f64),
+            ("speedup", speedup),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    );
+    println!(
+        "\nreal-mode: barriered {:.3}s -> pipelined {:.3}s (speedup {speedup:.2}x, \
+         overlap {:.3}s)",
+        bar.total_s, pipe.total_s, pipe.overlap_s
+    );
+    // Slow-start must be visible in any mode/geometry: the first reduce
+    // launched before the last map committed.
+    assert!(
+        pipe.maps_at_first_reduce < pipe.maps as u64,
+        "no map/reduce overlap: first reduce at {}/{} maps",
+        pipe.maps_at_first_reduce,
+        pipe.maps
+    );
+    if !smoke {
+        assert!(pipe.overlap_s > 0.0, "no overlap window in phase timings");
+        assert!(
+            speedup >= 1.25,
+            "pipelined must be >= 25% faster end-to-end: got {speedup:.2}x \
+             (barriered {:.3}s, pipelined {:.3}s)",
+            bar.total_s,
+            pipe.total_s
+        );
+    }
+}
 
 fn main() {
+    let smoke = std::env::var("HPCW_BENCH_SMOKE").is_ok();
     let cfg = StackConfig::paper();
     let rows = fig5(&cfg);
     for w in rows.windows(2) {
@@ -25,5 +215,7 @@ fn main() {
     );
     println!("\nshape: {:.0}s @{} cores -> {:.0}s @{} cores (speedup {:.1}x)",
         first.4, first.0, last.4, last.0, first.4 / last.4);
+
+    real_overlap_bench(smoke);
     println!("fig5 OK");
 }

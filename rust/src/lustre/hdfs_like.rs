@@ -71,6 +71,10 @@ impl Dfs for HdfsLikeFs {
         self.store.read(path)
     }
 
+    fn open(&self, path: &str) -> Result<std::sync::Arc<[u8]>> {
+        self.store.open(path)
+    }
+
     fn read_range(&self, path: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
         self.store.read_range(path, offset, len)
     }

@@ -5,23 +5,59 @@
 //! wrapper's directory-setup step is real work here, and tests assert it
 //! happened). Thread-safe; map/reduce task attempts on the thread pool hit
 //! this concurrently.
+//!
+//! Perf shape (PR 2): the file plane is **sharded by path hash** and file
+//! contents live behind `Arc<[u8]>` extents, so
+//!
+//! * the per-file data path (`open`/`read`/`read_range`/`size`/`append`,
+//!   plain-file `delete`) takes only the file's shard lock — map-side
+//!   reads never touch the namespace lock and never contend with reads
+//!   or writes of other shards;
+//! * namespace-touching writes (`create`, `mkdirs`, `rename`, directory
+//!   deletes) serialize briefly on the namespace (`dirs`) lock — a
+//!   critical section of a handful of map/set operations, never a byte
+//!   copy (`create` builds its extent before any lock). This keeps the
+//!   old single-lock invariants: a path cannot become both a file and a
+//!   directory, and `rename` never clobbers a committed file;
+//! * [`MemStore::open`] hands out a shared `Arc<[u8]>` view — no file
+//!   bytes are copied under (or after) the lock.
+//!
+//! Consistency: per-path operations are atomic, but aggregate views
+//! (`list`, `exists`, `used_bytes`, `object_count`) visit shards one at a
+//! time and are only per-shard consistent — a concurrent `rename` may make
+//! a path transiently invisible to them. The MR engine never lists a
+//! directory another task is renaming into mid-commit, so this trade is
+//! safe here; it is NOT a general-purpose snapshot filesystem.
+//!
+//! Lock order (deadlock rule): ops that take more than one lock take the
+//! `dirs` namespace lock first, then shard locks; ops that skip `dirs`
+//! take exactly one shard lock. `meta_ops` is a lock-free atomic.
 
 use crate::error::{Error, Result};
+use crate::util::bytes::fnv1a;
 use std::collections::{BTreeMap, BTreeSet};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
-#[derive(Debug, Default)]
-struct Inner {
-    files: BTreeMap<String, Vec<u8>>,
-    dirs: BTreeSet<String>,
-    /// Metadata-op counter (creates, opens, renames, deletes, mkdirs).
-    meta_ops: u64,
-}
+/// Default file-plane shard count; override with [`MemStore::with_shards`]
+/// or the `HPCW_DFS_SHARDS` environment variable.
+pub const DEFAULT_DFS_SHARDS: usize = 16;
+
+type FileShard = Mutex<BTreeMap<String, Arc<[u8]>>>;
 
 /// Thread-safe in-memory filesystem.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct MemStore {
-    inner: Mutex<Inner>,
+    dirs: Mutex<BTreeSet<String>>,
+    shards: Vec<FileShard>,
+    /// Metadata-op counter (creates, opens, renames, deletes, mkdirs).
+    meta_ops: AtomicU64,
+}
+
+impl Default for MemStore {
+    fn default() -> Self {
+        MemStore::new()
+    }
 }
 
 fn parent(path: &str) -> Option<&str> {
@@ -45,24 +81,51 @@ fn normalize(path: &str) -> Result<String> {
 }
 
 impl MemStore {
+    /// Store with the default shard count (`HPCW_DFS_SHARDS` overrides).
     pub fn new() -> Self {
-        let store = MemStore::default();
-        store.inner.lock().unwrap().dirs.insert("/".into());
+        let n = std::env::var("HPCW_DFS_SHARDS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_DFS_SHARDS);
+        MemStore::with_shards(n)
+    }
+
+    /// Store with an explicit file-shard count (`n >= 1`).
+    pub fn with_shards(n: usize) -> Self {
+        let store = MemStore {
+            dirs: Mutex::new(BTreeSet::new()),
+            shards: (0..n.max(1)).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            meta_ops: AtomicU64::new(0),
+        };
+        store.dirs.lock().unwrap().insert("/".into());
         store
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn shard_for(&self, path: &str) -> &FileShard {
+        &self.shards[(fnv1a(path.as_bytes()) as usize) % self.shards.len()]
+    }
+
+    fn file_exists(&self, path: &str) -> bool {
+        self.shard_for(path).lock().unwrap().contains_key(path)
     }
 
     pub fn mkdirs(&self, path: &str) -> Result<()> {
         let path = normalize(path)?;
-        let mut g = self.inner.lock().unwrap();
+        let mut dirs = self.dirs.lock().unwrap();
         let mut acc = String::new();
         for comp in path.split('/').filter(|c| !c.is_empty()) {
             acc.push('/');
             acc.push_str(comp);
-            if g.files.contains_key(&acc) {
+            if self.file_exists(&acc) {
                 return Err(Error::Dfs(format!("'{acc}' is a file")));
             }
-            if g.dirs.insert(acc.clone()) {
-                g.meta_ops += 1;
+            if dirs.insert(acc.clone()) {
+                self.meta_ops.fetch_add(1, Ordering::Relaxed);
             }
         }
         Ok(())
@@ -73,51 +136,65 @@ impl MemStore {
         let dir = parent(&path)
             .ok_or_else(|| Error::Dfs(format!("no parent for '{path}'")))?
             .to_string();
-        let mut g = self.inner.lock().unwrap();
-        if !g.dirs.contains(dir.as_str()) {
+        // The extent is built before any lock: no critical section ever
+        // spans a byte copy. The namespace lock is held through the shard
+        // insert so a path can never become a file and a directory at
+        // once — the critical section is four map/set operations.
+        let data: Arc<[u8]> = Arc::from(data);
+        let dirs = self.dirs.lock().unwrap();
+        if !dirs.contains(dir.as_str()) {
             return Err(Error::Dfs(format!("parent dir missing for '{path}'")));
         }
-        if g.dirs.contains(path.as_str()) {
+        if dirs.contains(path.as_str()) {
             return Err(Error::Dfs(format!("'{path}' is a directory")));
         }
-        if g.files.contains_key(&path) {
+        let mut shard = self.shard_for(&path).lock().unwrap();
+        if shard.contains_key(&path) {
             return Err(Error::Dfs(format!("'{path}' already exists")));
         }
-        g.files.insert(path, data.to_vec());
-        g.meta_ops += 1;
+        shard.insert(path, data);
+        self.meta_ops.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
     pub fn append(&self, path: &str, data: &[u8]) -> Result<()> {
         let path = normalize(path)?;
-        let mut g = self.inner.lock().unwrap();
-        match g.files.get_mut(&path) {
+        let mut shard = self.shard_for(&path).lock().unwrap();
+        match shard.get_mut(&path) {
             Some(buf) => {
-                buf.extend_from_slice(data);
+                // Copy-on-append: extents are immutable shared slices, so
+                // an append rebuilds the extent (appends are rare — logs
+                // and history files, never the record path).
+                let mut grown = Vec::with_capacity(buf.len() + data.len());
+                grown.extend_from_slice(buf);
+                grown.extend_from_slice(data);
+                *buf = Arc::from(grown);
                 Ok(())
             }
             None => Err(Error::Dfs(format!("append to missing file '{path}'"))),
         }
     }
 
-    pub fn read(&self, path: &str) -> Result<Vec<u8>> {
+    /// Zero-copy read: the returned extent shares the stored allocation
+    /// (pointer-identity is unit-tested). This is the hot read path —
+    /// map-side split reads slice the extent without ever copying.
+    pub fn open(&self, path: &str) -> Result<Arc<[u8]>> {
         let path = normalize(path)?;
-        let mut g = self.inner.lock().unwrap();
-        g.meta_ops += 1; // open
-        g.files
+        self.meta_ops.fetch_add(1, Ordering::Relaxed); // open
+        let shard = self.shard_for(&path).lock().unwrap();
+        shard
             .get(&path)
-            .cloned()
+            .map(Arc::clone)
             .ok_or_else(|| Error::Dfs(format!("no such file '{path}'")))
     }
 
+    pub fn read(&self, path: &str) -> Result<Vec<u8>> {
+        // The copy happens on the caller's thread, outside the shard lock.
+        self.open(path).map(|a| a.to_vec())
+    }
+
     pub fn read_range(&self, path: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
-        let path = normalize(path)?;
-        let mut g = self.inner.lock().unwrap();
-        g.meta_ops += 1;
-        let buf = g
-            .files
-            .get(&path)
-            .ok_or_else(|| Error::Dfs(format!("no such file '{path}'")))?;
+        let buf = self.open(path)?;
         let start = (offset as usize).min(buf.len());
         let end = ((offset + len) as usize).min(buf.len());
         Ok(buf[start..end].to_vec())
@@ -125,8 +202,8 @@ impl MemStore {
 
     pub fn size(&self, path: &str) -> Result<u64> {
         let path = normalize(path)?;
-        let g = self.inner.lock().unwrap();
-        g.files
+        let shard = self.shard_for(&path).lock().unwrap();
+        shard
             .get(&path)
             .map(|b| b.len() as u64)
             .ok_or_else(|| Error::Dfs(format!("no such file '{path}'")))
@@ -135,8 +212,10 @@ impl MemStore {
     pub fn exists(&self, path: &str) -> bool {
         match normalize(path) {
             Ok(p) => {
-                let g = self.inner.lock().unwrap();
-                g.files.contains_key(&p) || g.dirs.contains(p.as_str())
+                if self.dirs.lock().unwrap().contains(p.as_str()) {
+                    return true;
+                }
+                self.file_exists(&p)
             }
             Err(_) => false,
         }
@@ -147,19 +226,26 @@ impl MemStore {
         let Ok(dir) = normalize(dir) else {
             return Vec::new();
         };
-        let g = self.inner.lock().unwrap();
         let prefix = if dir == "/" { "/".to_string() } else { format!("{dir}/") };
         let mut out = BTreeSet::new();
-        for name in g.files.keys().chain(g.dirs.iter()) {
+        let mut collect = |name: &str| {
             if let Some(rest) = name.strip_prefix(&prefix) {
                 if rest.is_empty() {
-                    continue;
+                    return;
                 }
                 let child = match rest.find('/') {
                     Some(i) => &rest[..i],
                     None => rest,
                 };
                 out.insert(format!("{prefix}{child}"));
+            }
+        };
+        for d in self.dirs.lock().unwrap().iter() {
+            collect(d);
+        }
+        for shard in &self.shards {
+            for name in shard.lock().unwrap().keys() {
+                collect(name);
             }
         }
         out.into_iter().collect()
@@ -168,47 +254,68 @@ impl MemStore {
     pub fn rename(&self, from: &str, to: &str) -> Result<()> {
         let from = normalize(from)?;
         let to = normalize(to)?;
-        let mut g = self.inner.lock().unwrap();
+        let mut dirs = self.dirs.lock().unwrap();
         let to_parent = parent(&to).unwrap_or("/").to_string();
-        if !g.dirs.contains(to_parent.as_str()) {
+        if !dirs.contains(to_parent.as_str()) {
             return Err(Error::Dfs(format!("target dir missing for '{to}'")));
         }
-        if g.files.contains_key(&to) || g.dirs.contains(to.as_str()) {
+        if dirs.contains(to.as_str()) || self.file_exists(&to) {
             return Err(Error::Dfs(format!("target '{to}' exists")));
         }
-        g.meta_ops += 1;
-        if let Some(data) = g.files.remove(&from) {
-            g.files.insert(to, data);
-            return Ok(());
+        self.meta_ops.fetch_add(1, Ordering::Relaxed);
+        // Plain file rename: move the extent between (at most two) shards.
+        // `dirs` is held throughout, which is what makes taking two shard
+        // locks safe (see the lock-order rule in the module docs).
+        let moved = self.shard_for(&from).lock().unwrap().remove(&from);
+        if let Some(data) = moved {
+            {
+                let mut dst = self.shard_for(&to).lock().unwrap();
+                // Re-check under the destination shard lock: a concurrent
+                // `create` (which inserts outside the namespace lock) may
+                // have won the target since the check above — refuse to
+                // clobber it, exactly as the single-lock store did.
+                if !dst.contains_key(&to) {
+                    dst.insert(to, data);
+                    return Ok(());
+                }
+            }
+            // Lost the race: restore the source (keep any file that raced
+            // into the old name — never overwrite committed bytes).
+            self.shard_for(&from).lock().unwrap().entry(from).or_insert(data);
+            return Err(Error::Dfs(format!("target '{to}' exists")));
         }
-        if g.dirs.contains(from.as_str()) {
-            // Move the whole subtree.
+        if dirs.contains(from.as_str()) {
+            // Move the whole subtree. Two passes (collect from every
+            // shard, then re-insert under the new keys) so each extent
+            // moves exactly once even if the target nests under `from`.
             let from_prefix = format!("{from}/");
-            let moved_files: Vec<(String, Vec<u8>)> = g
-                .files
-                .iter()
-                .filter(|(k, _)| k.starts_with(&from_prefix))
-                .map(|(k, v)| (k.clone(), v.clone()))
-                .collect();
-            for (k, _) in &moved_files {
-                g.files.remove(k);
+            let mut moved: Vec<(String, Arc<[u8]>)> = Vec::new();
+            for shard in &self.shards {
+                let mut g = shard.lock().unwrap();
+                let keys: Vec<String> = g
+                    .keys()
+                    .filter(|k| k.starts_with(&from_prefix))
+                    .cloned()
+                    .collect();
+                for k in keys {
+                    let data = g.remove(&k).unwrap();
+                    moved.push((format!("{to}/{}", &k[from_prefix.len()..]), data));
+                }
             }
-            for (k, v) in moved_files {
-                let new_key = format!("{to}/{}", &k[from_prefix.len()..]);
-                g.files.insert(new_key, v);
+            for (k, v) in moved {
+                self.shard_for(&k).lock().unwrap().insert(k, v);
             }
-            let moved_dirs: Vec<String> = g
-                .dirs
+            let moved_dirs: Vec<String> = dirs
                 .iter()
                 .filter(|d| d.as_str() == from || d.starts_with(&from_prefix))
                 .cloned()
                 .collect();
             for d in &moved_dirs {
-                g.dirs.remove(d);
+                dirs.remove(d);
             }
             for d in moved_dirs {
                 let suffix = &d[from.len()..];
-                g.dirs.insert(format!("{to}{suffix}"));
+                dirs.insert(format!("{to}{suffix}"));
             }
             return Ok(());
         }
@@ -217,19 +324,24 @@ impl MemStore {
 
     pub fn delete(&self, path: &str) -> Result<()> {
         let path = normalize(path)?;
-        let mut g = self.inner.lock().unwrap();
-        g.meta_ops += 1;
-        if g.files.remove(&path).is_some() {
+        self.meta_ops.fetch_add(1, Ordering::Relaxed);
+        // Plain-file deletes touch only the file's shard — no namespace
+        // lock; the directory branch below takes `dirs` (then shards, per
+        // the lock-order rule) only after the shard probe missed.
+        if self.shard_for(&path).lock().unwrap().remove(&path).is_some() {
             return Ok(());
         }
-        if g.dirs.contains(path.as_str()) {
+        let mut dirs = self.dirs.lock().unwrap();
+        if dirs.contains(path.as_str()) {
             let prefix = format!("{path}/");
-            let has_children = g.files.keys().any(|k| k.starts_with(&prefix))
-                || g.dirs.iter().any(|d| d.starts_with(&prefix));
-            if has_children {
+            let has_child_file = self
+                .shards
+                .iter()
+                .any(|s| s.lock().unwrap().keys().any(|k| k.starts_with(&prefix)));
+            if has_child_file || dirs.iter().any(|d| d.starts_with(&prefix)) {
                 return Err(Error::Dfs(format!("directory '{path}' not empty")));
             }
-            g.dirs.remove(path.as_str());
+            dirs.remove(path.as_str());
             return Ok(());
         }
         Err(Error::Dfs(format!("no such path '{path}'")))
@@ -238,43 +350,48 @@ impl MemStore {
     /// Delete a subtree; returns number of objects removed.
     pub fn delete_recursive(&self, prefix: &str) -> Result<u64> {
         let prefix = normalize(prefix)?;
-        let mut g = self.inner.lock().unwrap();
+        let mut dirs = self.dirs.lock().unwrap();
         let pfx = format!("{prefix}/");
-        let files: Vec<String> = g
-            .files
-            .keys()
-            .filter(|k| k.as_str() == prefix || k.starts_with(&pfx))
-            .cloned()
-            .collect();
-        let dirs: Vec<String> = g
-            .dirs
+        let mut n = 0u64;
+        for shard in &self.shards {
+            let mut g = shard.lock().unwrap();
+            let keys: Vec<String> = g
+                .keys()
+                .filter(|k| k.as_str() == prefix || k.starts_with(&pfx))
+                .cloned()
+                .collect();
+            n += keys.len() as u64;
+            for k in keys {
+                g.remove(&k);
+            }
+        }
+        let dead: Vec<String> = dirs
             .iter()
             .filter(|d| d.as_str() == prefix || d.starts_with(&pfx))
             .cloned()
             .collect();
-        let n = (files.len() + dirs.len()) as u64;
-        for f in files {
-            g.files.remove(&f);
+        n += dead.len() as u64;
+        for d in dead {
+            dirs.remove(&d);
         }
-        for d in dirs {
-            g.dirs.remove(&d);
-        }
-        g.meta_ops += n;
+        self.meta_ops.fetch_add(n, Ordering::Relaxed);
         Ok(n)
     }
 
     pub fn used_bytes(&self) -> u64 {
-        let g = self.inner.lock().unwrap();
-        g.files.values().map(|v| v.len() as u64).sum()
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().values().map(|v| v.len() as u64).sum::<u64>())
+            .sum()
     }
 
     pub fn object_count(&self) -> u64 {
-        let g = self.inner.lock().unwrap();
-        (g.files.len() + g.dirs.len()) as u64
+        let files: usize = self.shards.iter().map(|s| s.lock().unwrap().len()).sum();
+        (files + self.dirs.lock().unwrap().len()) as u64
     }
 
     pub fn meta_ops(&self) -> u64 {
-        self.inner.lock().unwrap().meta_ops
+        self.meta_ops.load(Ordering::Relaxed)
     }
 }
 
@@ -374,6 +491,53 @@ mod tests {
     }
 
     #[test]
+    fn open_is_zero_copy_shared() {
+        // The sharded-DFS contract: `open` returns the stored extent
+        // itself, not a copy — two opens share one allocation.
+        let fs = MemStore::new();
+        fs.mkdirs("/z").unwrap();
+        fs.create("/z/f", &[7u8; 4096]).unwrap();
+        let a = fs.open("/z/f").unwrap();
+        let b = fs.open("/z/f").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "open must hand out the shared extent");
+        assert_eq!(&a[..], &[7u8; 4096][..]);
+        // The store + both handles.
+        assert_eq!(Arc::strong_count(&a), 3);
+    }
+
+    #[test]
+    fn open_counts_meta_ops_like_read() {
+        let fs = MemStore::new();
+        fs.mkdirs("/m").unwrap();
+        fs.create("/m/f", b"x").unwrap();
+        let before = fs.meta_ops();
+        fs.open("/m/f").unwrap();
+        fs.read("/m/f").unwrap();
+        fs.read_range("/m/f", 0, 1).unwrap();
+        assert_eq!(fs.meta_ops(), before + 3);
+    }
+
+    #[test]
+    fn sharding_is_transparent_to_the_namespace() {
+        // A 1-shard store and a many-shard store expose identical
+        // namespace behavior.
+        for shards in [1usize, 3, 64] {
+            let fs = MemStore::with_shards(shards);
+            assert_eq!(fs.n_shards(), shards);
+            fs.mkdirs("/s/a").unwrap();
+            for i in 0..40 {
+                fs.create(&format!("/s/a/part-{i:02}"), &[i as u8]).unwrap();
+            }
+            assert_eq!(fs.list("/s/a").len(), 40);
+            assert_eq!(fs.used_bytes(), 40);
+            fs.rename("/s/a", "/s/b").unwrap();
+            assert_eq!(fs.list("/s/b").len(), 40);
+            assert!(!fs.exists("/s/a"));
+            assert_eq!(fs.delete_recursive("/s").unwrap(), 42);
+        }
+    }
+
+    #[test]
     fn concurrent_writers_consistent() {
         use std::sync::Arc;
         let fs = Arc::new(MemStore::new());
@@ -391,5 +555,66 @@ mod tests {
         }
         assert_eq!(fs.list("/c").len(), 8);
         assert_eq!(fs.used_bytes(), 8 * 64);
+    }
+
+    #[test]
+    fn concurrent_readers_and_writers_content_parity() {
+        // Multi-threaded readers + writers over the sharded plane: every
+        // read observes exactly the bytes its writer committed, and
+        // meta_ops accounts one create + every open.
+        use std::sync::Arc;
+        let fs = Arc::new(MemStore::with_shards(4));
+        fs.mkdirs("/cc").unwrap();
+        let n_files = 16usize;
+        let reads_per_file = 25usize;
+        let writers: Vec<_> = (0..n_files)
+            .map(|i| {
+                let fs = Arc::clone(&fs);
+                std::thread::spawn(move || {
+                    fs.create(&format!("/cc/f{i}"), &[i as u8; 512]).unwrap();
+                })
+            })
+            .collect();
+        let n_readers = 4usize;
+        let readers: Vec<_> = (0..n_readers)
+            .map(|t| {
+                let fs = Arc::clone(&fs);
+                std::thread::spawn(move || {
+                    for round in 0..reads_per_file {
+                        for i in 0..n_files {
+                            // A miss is fine (writer not there yet); a hit
+                            // must never observe a torn or partial extent.
+                            if let Ok(buf) = fs.open(&format!("/cc/f{i}")) {
+                                assert_eq!(buf.len(), 512, "reader {t} round {round}");
+                                assert!(buf.iter().all(|&b| b == i as u8), "torn read");
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        for r in readers {
+            r.join().unwrap();
+        }
+        // Every open attempt (hit or miss) is one metadata op, as on the
+        // unsharded store.
+        let opens = n_readers * reads_per_file * n_files;
+        // Final parity pass: each file is whole and pointer-shared.
+        for i in 0..n_files {
+            let a = fs.open(&format!("/cc/f{i}")).unwrap();
+            let b = fs.open(&format!("/cc/f{i}")).unwrap();
+            assert!(Arc::ptr_eq(&a, &b));
+            assert_eq!(&a[..], &[i as u8; 512][..]);
+        }
+        // mkdirs(1) + creates + successful opens from readers + the 2×
+        // parity opens just above.
+        assert_eq!(
+            fs.meta_ops(),
+            1 + n_files as u64 + opens as u64 + 2 * n_files as u64
+        );
+        assert_eq!(fs.used_bytes(), n_files as u64 * 512);
     }
 }

@@ -125,6 +125,13 @@ pub trait Dfs: Send + Sync {
     fn create(&self, path: &str, data: &[u8]) -> Result<()>;
     fn append(&self, path: &str, data: &[u8]) -> Result<()>;
     fn read(&self, path: &str) -> Result<Vec<u8>>;
+    /// Zero-copy read: a shared view of the whole file. Backends over
+    /// [`MemStore`] return the stored extent itself (no byte copy); the
+    /// default falls back to a copying `read`. Map-side split reads go
+    /// through this and slice the extent in place.
+    fn open(&self, path: &str) -> Result<std::sync::Arc<[u8]>> {
+        self.read(path).map(std::sync::Arc::from)
+    }
     fn read_range(&self, path: &str, offset: u64, len: u64) -> Result<Vec<u8>>;
     fn size(&self, path: &str) -> Result<u64>;
     fn exists(&self, path: &str) -> bool;

@@ -22,6 +22,20 @@ pub const REDUCE_OUTPUT_BYTES: &str = "REDUCE_OUTPUT_BYTES";
 pub const TASKS_LAUNCHED: &str = "TASKS_LAUNCHED";
 pub const TASKS_FAILED: &str = "TASKS_FAILED";
 pub const TASKS_SPECULATED: &str = "TASKS_SPECULATED";
+/// 1 once the first reduce container launches (slow-start marker).
+pub const FIRST_REDUCE_LAUNCHED: &str = "FIRST_REDUCE_LAUNCHED";
+/// Maps committed at the moment the first reduce launched. Under reduce
+/// slow-start this is < total maps — the observable overlap signal.
+pub const MAPS_AT_FIRST_REDUCE: &str = "MAPS_AT_FIRST_REDUCE";
+/// Allocate rounds the scheduler retried because the RM granted zero
+/// containers with nothing in flight (backoff path).
+pub const GRANT_ZERO_RETRIES: &str = "GRANT_ZERO_RETRIES";
+/// Containers granted over the job's lifetime (every grant is a release +
+/// re-grant of freed capacity once the first wave is out).
+pub const CONTAINERS_GRANTED: &str = "CONTAINERS_GRANTED";
+/// Shuffle segments a reduce fetched before the job's last map committed
+/// (slow-start fetch overlap).
+pub const SHUFFLE_SEGMENTS_PREFETCHED: &str = "SHUFFLE_SEGMENTS_PREFETCHED";
 
 impl Counters {
     pub fn new() -> Self {

@@ -23,7 +23,7 @@ pub mod split;
 pub mod task;
 
 pub use counters::Counters;
-pub use real::{MrEngine, MrOutcome};
+pub use real::{MrEngine, MrOutcome, PhaseTimings, SchedMode};
 pub use recordbuf::RecordBuf;
 pub use sim::{simulate_mr, MrSimReport, MrWorkload};
 
@@ -103,12 +103,7 @@ pub struct HashPartitioner;
 
 impl Partitioner for HashPartitioner {
     fn partition(&self, key: &[u8], n_reduces: u32) -> u32 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for &b in key {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3);
-        }
-        (h % n_reduces.max(1) as u64) as u32
+        (crate::util::bytes::fnv1a(key) % n_reduces.max(1) as u64) as u32
     }
 }
 

@@ -1,11 +1,25 @@
 //! The Real-mode MapReduce executor: actual bytes through the live YARN
 //! cluster built by the wrapper.
 //!
-//! Execution follows Hadoop 2.5's wave structure: the MR ApplicationMaster
-//! heartbeats the RM for map containers, runs the granted wave on the
-//! node's thread pool, commits sorted spill segments into the shuffle
-//! store, then repeats for reduces, which merge their segments and commit
-//! output files via the rename protocol (`_temporary/attempt` → `part-r`).
+//! Since PR 2 the default execution is **event-driven** (see
+//! [`SchedMode::Pipelined`]): the AM-side scheduler loop grants containers
+//! for pending tasks, submits each task attempt to the worker pool with a
+//! completion channel ([`crate::util::pool::Pool::submit_with`]), and on
+//! every completion releases that container back to the RM and immediately
+//! re-grants freed capacity to the next pending task — no wave barrier, so
+//! one straggler no longer idles the whole wave. Reduce tasks launch under
+//! Hadoop-style **slow-start**: once `HPCW_SLOWSTART` (default 0.8) of the
+//! maps have committed, reduces are granted containers and begin fetching
+//! already-committed shuffle segments ([`ShuffleStore::try_fetch`])
+//! concurrently with the remaining maps. A zero-container grant with
+//! nothing in flight retries with bounded backoff instead of failing the
+//! job.
+//!
+//! The pre-PR-2 lock-step wave execution survives as
+//! [`SchedMode::Barriered`] — the measured baseline for
+//! `benches/fig5_terasort.rs` and the parity oracle for
+//! `rust/tests/prop_coordinator.rs`.
+//!
 //! Failed attempts (fault injection, panics) retry up to
 //! [`task::MAX_ATTEMPTS`]; a node failure mid-job invalidates its shuffle
 //! segments and re-runs exactly the affected maps.
@@ -25,7 +39,59 @@ use crate::wrapper::DynamicCluster;
 use crate::yarn::container::{Container, ContainerKind, ContainerRequest, Resource};
 use crate::yarn::jobhistory::AppReport;
 use crate::yarn::rm::AppState;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How the engine schedules task attempts onto containers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Event-driven overlap scheduler (default): per-completion container
+    /// release/re-grant, reduce slow-start, zero-grant backoff.
+    Pipelined,
+    /// Legacy lock-step waves (benchmark baseline / parity oracle).
+    Barriered,
+}
+
+/// Default reduce slow-start fraction (Hadoop's
+/// `mapreduce.job.reduce.slowstart.completedmaps` lore value).
+pub const DEFAULT_SLOWSTART: f64 = 0.8;
+
+/// Bounded retries when the RM grants zero containers with nothing in
+/// flight (capacity may free up between scheduler cycles on a busy
+/// cluster).
+const MAX_GRANT_RETRIES: u32 = 6;
+const GRANT_BACKOFF_START: Duration = Duration::from_micros(500);
+
+/// Reduce slow-start poll interval while waiting for map segments.
+const FETCH_POLL: Duration = Duration::from_micros(300);
+
+/// Wall-clock phase marks of one job, seconds since submission. In
+/// pipelined mode `first_reduce_launch_s < last_map_commit_s` is the
+/// map/reduce overlap window; in barriered mode the overlap is zero by
+/// construction.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseTimings {
+    pub first_map_launch_s: f64,
+    pub last_map_commit_s: f64,
+    /// 0.0 for map-only jobs.
+    pub first_reduce_launch_s: f64,
+    pub last_reduce_commit_s: f64,
+    pub total_s: f64,
+}
+
+impl PhaseTimings {
+    /// Seconds during which reduces were launched while maps were still
+    /// committing.
+    pub fn overlap_s(&self) -> f64 {
+        if self.first_reduce_launch_s <= 0.0 {
+            return 0.0;
+        }
+        (self.last_map_commit_s - self.first_reduce_launch_s).max(0.0)
+    }
+}
 
 /// Result of a completed job.
 #[derive(Debug)]
@@ -36,6 +102,22 @@ pub struct MrOutcome {
     pub counters: Arc<Counters>,
     pub output_files: Vec<String>,
     pub wall: std::time::Duration,
+    pub phases: PhaseTimings,
+}
+
+fn env_sched_mode() -> SchedMode {
+    match std::env::var("HPCW_SCHED").as_deref() {
+        Ok("barriered") | Ok("waves") => SchedMode::Barriered,
+        _ => SchedMode::Pipelined,
+    }
+}
+
+fn env_slowstart() -> f64 {
+    std::env::var("HPCW_SLOWSTART")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(|f| f.clamp(0.0, 1.0))
+        .unwrap_or(DEFAULT_SLOWSTART)
 }
 
 /// The Real-mode engine. Holds the live cluster and the worker pool.
@@ -45,6 +127,10 @@ pub struct MrEngine<'a> {
     pub pool: &'a Pool,
     pub map_memory_mb: u64,
     pub reduce_memory_mb: u64,
+    /// Scheduling mode (`HPCW_SCHED=barriered` flips the default).
+    pub mode: SchedMode,
+    /// Reduce slow-start fraction in `[0, 1]` (`HPCW_SLOWSTART`).
+    pub slowstart: f64,
 }
 
 impl<'a> MrEngine<'a> {
@@ -61,13 +147,25 @@ impl<'a> MrEngine<'a> {
             pool,
             map_memory_mb,
             reduce_memory_mb,
+            mode: env_sched_mode(),
+            slowstart: env_slowstart(),
         }
+    }
+
+    pub fn with_mode(mut self, mode: SchedMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_slowstart(mut self, frac: f64) -> Self {
+        self.slowstart = frac.clamp(0.0, 1.0);
+        self
     }
 
     /// Run a job to completion. `now` is the logical submission time used
     /// for YARN bookkeeping; wall time is measured for the outcome.
     pub fn run(&mut self, spec: Arc<JobSpec>, user: &str, now: Micros) -> Result<MrOutcome> {
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         if self.dfs.exists(&spec.output_dir) {
             return Err(Error::MapReduce(format!(
                 "output dir '{}' already exists",
@@ -83,6 +181,9 @@ impl<'a> MrEngine<'a> {
             }
             fmt => plan_splits(&*self.dfs, &spec.input_dir, fmt, spec.split_bytes)?,
         };
+        // Shared once: task attempts, retries and re-grants borrow the same
+        // allocation instead of cloning split metadata per attempt.
+        let splits: Arc<[InputSplit]> = splits.into();
         let n_maps = splits.len() as u32;
         let n_reduces = spec.n_reduces; // 0 = map-only job (Teragen)
 
@@ -95,22 +196,20 @@ impl<'a> MrEngine<'a> {
         let counters = Arc::new(Counters::new());
         let shuffle = Arc::new(ShuffleStore::new());
 
-        let map_only = spec.n_reduces == 0;
-        let map_result = self.run_maps(&spec, &handle.app, &splits, &shuffle, &counters, now);
-        if let Err(e) = map_result {
+        let mut phases = PhaseTimings::default();
+        let exec = match self.mode {
+            SchedMode::Pipelined => self.run_pipelined(
+                &spec, &handle.app, &splits, &shuffle, &counters, &tmp_root, now, t0,
+                &mut phases,
+            ),
+            SchedMode::Barriered => self.run_barriered(
+                &spec, &handle.app, &splits, &shuffle, &counters, &tmp_root, now, t0,
+                &mut phases,
+            ),
+        };
+        if let Err(e) = exec {
             self.fail_app(&spec, handle.app, user, &counters, now)?;
             return Err(e);
-        }
-
-        if !map_only {
-            shuffle.verify_complete(n_maps, n_reduces)?;
-            let reduce_result = self.run_reduces(
-                &spec, &handle.app, n_maps, n_reduces, &shuffle, &counters, &tmp_root, now,
-            );
-            if let Err(e) = reduce_result {
-                self.fail_app(&spec, handle.app, user, &counters, now)?;
-                return Err(e);
-            }
         }
 
         // Commit: _SUCCESS marker, drop _temporary.
@@ -139,6 +238,7 @@ impl<'a> MrEngine<'a> {
             .into_iter()
             .filter(|p| p.contains("/part-"))
             .collect();
+        phases.total_s = t0.elapsed().as_secs_f64();
         Ok(MrOutcome {
             app: handle.app,
             maps: n_maps,
@@ -146,6 +246,7 @@ impl<'a> MrEngine<'a> {
             counters,
             output_files,
             wall: t0.elapsed(),
+            phases,
         })
     }
 
@@ -173,8 +274,20 @@ impl<'a> MrEngine<'a> {
         Ok(())
     }
 
-    /// Grant a wave of containers for `want` tasks of `mem_mb`.
-    fn grant_wave(
+    /// Complete a container on its NM and release it back to the RM — the
+    /// per-task-completion release that replaces `finish_wave`.
+    fn finish_container(&mut self, app: &AppId, c: &Container, ok: bool) -> Result<()> {
+        if let Some(nm) = self.cluster.nms.get_mut(&c.node) {
+            nm.complete(c.id, ok)?;
+        }
+        self.cluster.rm.release(*app, c.id)?;
+        Ok(())
+    }
+
+    /// Allocate up to `want` containers of `mem_mb` and launch them on
+    /// their NMs. May grant fewer (including zero) — YARN semantics; the
+    /// caller re-requests as capacity frees.
+    fn grant(
         &mut self,
         app: &AppId,
         want: u32,
@@ -191,11 +304,6 @@ impl<'a> MrEngine<'a> {
             kind,
             now,
         )?;
-        if got.is_empty() {
-            return Err(Error::MapReduce(
-                "RM granted zero containers — cluster too small for one task".into(),
-            ));
-        }
         for c in &got {
             if let Some(nm) = self.cluster.nms.get_mut(&c.node) {
                 nm.launch(c.id)?;
@@ -204,21 +312,360 @@ impl<'a> MrEngine<'a> {
         Ok(got)
     }
 
-    fn finish_wave(&mut self, app: &AppId, wave: &[(Container, bool)]) -> Result<()> {
-        for (c, ok) in wave {
-            if let Some(nm) = self.cluster.nms.get_mut(&c.node) {
-                nm.complete(c.id, *ok)?;
+    // ------------------------------------------------------------------
+    // Pipelined (event-driven) scheduler
+    // ------------------------------------------------------------------
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_pipelined(
+        &mut self,
+        spec: &Arc<JobSpec>,
+        app: &AppId,
+        splits: &Arc<[InputSplit]>,
+        shuffle: &Arc<ShuffleStore>,
+        counters: &Arc<Counters>,
+        tmp_root: &str,
+        now: Micros,
+        t0: Instant,
+        phases: &mut PhaseTimings,
+    ) -> Result<()> {
+        let mut running: BTreeMap<u64, InFlight> = BTreeMap::new();
+        let (tx, rx): (TaskTx, TaskRx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let result = self.pipelined_loop(
+            spec, app, splits, shuffle, counters, tmp_root, now, t0, phases, &tx, &rx,
+            &cancel, &mut running,
+        );
+        if result.is_err() {
+            // Whatever failed, leave the shared pool clean: flag in-flight
+            // slow-start reduces to stop waiting and drain every running
+            // task so its container is released (fail_app sweeps any
+            // release this misses).
+            self.drain_failed(app, &rx, &mut running, &cancel);
+        }
+        result
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn pipelined_loop(
+        &mut self,
+        spec: &Arc<JobSpec>,
+        app: &AppId,
+        splits: &Arc<[InputSplit]>,
+        shuffle: &Arc<ShuffleStore>,
+        counters: &Arc<Counters>,
+        tmp_root: &str,
+        now: Micros,
+        t0: Instant,
+        phases: &mut PhaseTimings,
+        tx: &TaskTx,
+        rx: &TaskRx,
+        cancel: &Arc<AtomicBool>,
+        running: &mut BTreeMap<u64, InFlight>,
+    ) -> Result<()> {
+        let n_maps = splits.len() as u32;
+        let n_reduces = spec.n_reduces;
+        let map_only = n_reduces == 0;
+        // Reduces become eligible once this many maps committed.
+        let slowstart_target = ((self.slowstart * n_maps as f64).ceil() as u32).min(n_maps);
+
+        let mut pending_maps: VecDeque<(u32, u32)> =
+            (0..n_maps).map(|i| (i, 0)).collect();
+        let mut pending_reduces: VecDeque<(u32, u32)> = if map_only {
+            VecDeque::new()
+        } else {
+            (0..n_reduces).map(|r| (r, 0)).collect()
+        };
+        let mut next_token = 0u64;
+        let mut maps_committed = 0u32;
+        let mut reduces_done = 0u32;
+        let mut maps_running = 0u32;
+        let mut reduces_running = 0u32;
+        let mut first_map_launched = false;
+        let mut first_reduce_launched = false;
+        let mut zero_tries = 0u32;
+        let mut backoff = GRANT_BACKOFF_START;
+
+        loop {
+            // --- launch: grant containers for every eligible pending task.
+            let mut launched = 0u32;
+            while !pending_maps.is_empty() {
+                let got = self.grant(
+                    app,
+                    pending_maps.len() as u32,
+                    self.map_memory_mb,
+                    ContainerKind::Map,
+                    now,
+                )?;
+                if got.is_empty() {
+                    break;
+                }
+                counters.add(counters::CONTAINERS_GRANTED, got.len() as u64);
+                for c in got {
+                    let (idx, attempt) = pending_maps.pop_front().unwrap();
+                    if !first_map_launched {
+                        first_map_launched = true;
+                        phases.first_map_launch_s = t0.elapsed().as_secs_f64();
+                    }
+                    let token = next_token;
+                    next_token += 1;
+                    let task = TaskRef::Map { idx, attempt };
+                    running.insert(token, InFlight { container: c, task });
+                    maps_running += 1;
+                    launched += 1;
+                    self.pool.submit_with(
+                        token,
+                        MapTaskArgs {
+                            idx,
+                            attempt,
+                            node: c.node,
+                            splits: Arc::clone(splits),
+                            spec: Arc::clone(spec),
+                            shuffle: Arc::clone(shuffle),
+                            counters: Arc::clone(counters),
+                            dfs: Arc::clone(&self.dfs),
+                        },
+                        run_map_task,
+                        tx.clone(),
+                    );
+                }
             }
-            self.cluster.rm.release(*app, c.id)?;
+            if !map_only && maps_committed >= slowstart_target {
+                // While maps are still outstanding, cap in-flight reduces
+                // below the pool width so slow-start fetch-waits can never
+                // starve the remaining maps of worker threads.
+                // (With a 1-wide pool that cap is zero: there is no spare
+                // worker, so reduces wait for the maps to drain.)
+                let maps_outstanding = !pending_maps.is_empty() || maps_running > 0;
+                let cap = if maps_outstanding {
+                    self.pool.size().saturating_sub(1) as u32
+                } else {
+                    u32::MAX
+                };
+                while !pending_reduces.is_empty() && reduces_running < cap {
+                    let want = (pending_reduces.len() as u32).min(cap - reduces_running);
+                    let got = self.grant(
+                        app,
+                        want,
+                        self.reduce_memory_mb,
+                        ContainerKind::Reduce,
+                        now,
+                    )?;
+                    if got.is_empty() {
+                        break;
+                    }
+                    counters.add(counters::CONTAINERS_GRANTED, got.len() as u64);
+                    for c in got {
+                        let (r, attempt) = pending_reduces.pop_front().unwrap();
+                        if !first_reduce_launched {
+                            first_reduce_launched = true;
+                            phases.first_reduce_launch_s = t0.elapsed().as_secs_f64();
+                            counters.add(counters::FIRST_REDUCE_LAUNCHED, 1);
+                            counters.add(counters::MAPS_AT_FIRST_REDUCE, maps_committed as u64);
+                        }
+                        let token = next_token;
+                        next_token += 1;
+                        let task = TaskRef::Reduce { r, attempt };
+                        running.insert(token, InFlight { container: c, task });
+                        reduces_running += 1;
+                        launched += 1;
+                        self.pool.submit_with(
+                            token,
+                            ReduceTaskArgs {
+                                r,
+                                attempt,
+                                n_maps,
+                                spec: Arc::clone(spec),
+                                shuffle: Arc::clone(shuffle),
+                                counters: Arc::clone(counters),
+                                dfs: Arc::clone(&self.dfs),
+                                tmp_root: tmp_root.to_string(),
+                                cancel: Some(Arc::clone(cancel)),
+                            },
+                            run_reduce_task,
+                            tx.clone(),
+                        );
+                    }
+                }
+            }
+
+            if running.is_empty() {
+                if pending_maps.is_empty() && pending_reduces.is_empty() {
+                    break; // job complete
+                }
+                // Nothing in flight and the RM granted zero containers:
+                // bounded retry with backoff (capacity can free between
+                // scheduler cycles) instead of failing the job outright.
+                debug_assert_eq!(launched, 0);
+                zero_tries += 1;
+                counters.add(counters::GRANT_ZERO_RETRIES, 1);
+                if zero_tries > MAX_GRANT_RETRIES {
+                    return Err(Error::MapReduce(format!(
+                        "RM granted zero containers over {MAX_GRANT_RETRIES} \
+                         backoff retries — cluster cannot host a single task"
+                    )));
+                }
+                std::thread::sleep(backoff);
+                backoff = backoff.saturating_mul(2);
+                continue;
+            }
+            zero_tries = 0;
+            backoff = GRANT_BACKOFF_START;
+
+            // --- wait for exactly one completion, then release + re-grant.
+            let (token, result) = rx
+                .recv()
+                .map_err(|_| Error::MapReduce("scheduler channel closed".into()))?;
+            let inflight = running
+                .remove(&token)
+                .ok_or_else(|| Error::MapReduce(format!("unknown task token {token}")))?;
+            let ok = matches!(result, Some(Ok(())));
+            self.finish_container(app, &inflight.container, ok)?;
+            match inflight.task {
+                TaskRef::Map { idx, attempt } => {
+                    maps_running -= 1;
+                    if ok {
+                        maps_committed += 1;
+                        phases.last_map_commit_s = t0.elapsed().as_secs_f64();
+                    } else {
+                        counters.add(counters::TASKS_FAILED, 1);
+                        let next = attempt + 1;
+                        if next >= MAX_ATTEMPTS {
+                            // The caller drains in-flight tasks on error.
+                            return Err(Error::MapReduce(format!(
+                                "map {idx} failed {MAX_ATTEMPTS} attempts"
+                            )));
+                        }
+                        pending_maps.push_back((idx, next));
+                    }
+                }
+                TaskRef::Reduce { r, attempt } => {
+                    reduces_running -= 1;
+                    if ok {
+                        reduces_done += 1;
+                        phases.last_reduce_commit_s = t0.elapsed().as_secs_f64();
+                    } else {
+                        counters.add(counters::TASKS_FAILED, 1);
+                        let next = attempt + 1;
+                        if next >= MAX_ATTEMPTS {
+                            // The caller drains in-flight tasks on error.
+                            return Err(Error::MapReduce(format!(
+                                "reduce {r} failed {MAX_ATTEMPTS} attempts"
+                            )));
+                        }
+                        pending_reduces.push_back((r, next));
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(maps_committed, n_maps);
+        debug_assert!(map_only || reduces_done == n_reduces);
+        Ok(())
+    }
+
+    /// Job failure mid-flight: flag running slow-start reduces to bail out
+    /// of their fetch wait, then drain every in-flight task so the shared
+    /// pool is clean for the next job. Best-effort on the YARN side — a
+    /// container whose release fails here is swept up by `fail_app`'s
+    /// `finish_app`.
+    fn drain_failed(
+        &mut self,
+        app: &AppId,
+        rx: &TaskRx,
+        running: &mut BTreeMap<u64, InFlight>,
+        cancel: &Arc<AtomicBool>,
+    ) {
+        cancel.store(true, Ordering::SeqCst);
+        while !running.is_empty() {
+            match rx.recv() {
+                Ok((token, result)) => {
+                    if let Some(inflight) = running.remove(&token) {
+                        let ok = matches!(result, Some(Ok(())));
+                        let _ = self.finish_container(app, &inflight.container, ok);
+                    }
+                }
+                Err(_) => break, // channel closed: nothing left to drain
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Barriered baseline (pre-PR-2 wave execution)
+    // ------------------------------------------------------------------
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_barriered(
+        &mut self,
+        spec: &Arc<JobSpec>,
+        app: &AppId,
+        splits: &Arc<[InputSplit]>,
+        shuffle: &Arc<ShuffleStore>,
+        counters: &Arc<Counters>,
+        tmp_root: &str,
+        now: Micros,
+        t0: Instant,
+        phases: &mut PhaseTimings,
+    ) -> Result<()> {
+        let n_maps = splits.len() as u32;
+        let n_reduces = spec.n_reduces;
+        phases.first_map_launch_s = t0.elapsed().as_secs_f64();
+        self.run_maps_barriered(spec, app, splits, shuffle, counters, now)?;
+        phases.last_map_commit_s = t0.elapsed().as_secs_f64();
+        if n_reduces > 0 {
+            shuffle.verify_complete(n_maps, n_reduces)?;
+            phases.first_reduce_launch_s = t0.elapsed().as_secs_f64();
+            counters.add(counters::FIRST_REDUCE_LAUNCHED, 1);
+            counters.add(counters::MAPS_AT_FIRST_REDUCE, n_maps as u64);
+            self.run_reduces_barriered(
+                spec, app, n_maps, n_reduces, shuffle, counters, tmp_root, now,
+            )?;
+            phases.last_reduce_commit_s = t0.elapsed().as_secs_f64();
         }
         Ok(())
     }
 
-    fn run_maps(
+    /// Grant a wave of containers for `want` tasks of `mem_mb`. Zero-grant
+    /// retries with bounded backoff before giving up.
+    fn grant_wave(
+        &mut self,
+        app: &AppId,
+        want: u32,
+        mem_mb: u64,
+        kind: ContainerKind,
+        counters: &Arc<Counters>,
+        now: Micros,
+    ) -> Result<Vec<Container>> {
+        let mut backoff = GRANT_BACKOFF_START;
+        for attempt in 0..=MAX_GRANT_RETRIES {
+            let got = self.grant(app, want, mem_mb, kind, now)?;
+            if !got.is_empty() {
+                counters.add(counters::CONTAINERS_GRANTED, got.len() as u64);
+                return Ok(got);
+            }
+            counters.add(counters::GRANT_ZERO_RETRIES, 1);
+            if attempt < MAX_GRANT_RETRIES {
+                std::thread::sleep(backoff);
+                backoff = backoff.saturating_mul(2);
+            }
+        }
+        Err(Error::MapReduce(format!(
+            "RM granted zero containers over {MAX_GRANT_RETRIES} backoff \
+             retries — cluster cannot host a single task"
+        )))
+    }
+
+    fn finish_wave(&mut self, app: &AppId, wave: &[(Container, bool)]) -> Result<()> {
+        for (c, ok) in wave {
+            self.finish_container(app, c, *ok)?;
+        }
+        Ok(())
+    }
+
+    fn run_maps_barriered(
         &mut self,
         spec: &Arc<JobSpec>,
         app: &AppId,
-        splits: &[InputSplit],
+        splits: &Arc<[InputSplit]>,
         shuffle: &Arc<ShuffleStore>,
         counters: &Arc<Counters>,
         now: Micros,
@@ -228,24 +675,22 @@ impl<'a> MrEngine<'a> {
         while !todo.is_empty() {
             let wave_n = todo.len() as u32;
             let granted =
-                self.grant_wave(app, wave_n, self.map_memory_mb, ContainerKind::Map, now)?;
+                self.grant_wave(app, wave_n, self.map_memory_mb, ContainerKind::Map, counters, now)?;
             let batch: Vec<((u32, u32), Container)> =
                 todo.drain(..granted.len().min(todo.len())).zip(granted).collect();
 
             let results = self.pool.try_map(
                 batch
                     .iter()
-                    .map(|((idx, attempt), c)| {
-                        (
-                            *idx,
-                            *attempt,
-                            c.node,
-                            splits[*idx as usize].clone(),
-                            Arc::clone(spec),
-                            Arc::clone(shuffle),
-                            Arc::clone(counters),
-                            Arc::clone(&self.dfs),
-                        )
+                    .map(|((idx, attempt), c)| MapTaskArgs {
+                        idx: *idx,
+                        attempt: *attempt,
+                        node: c.node,
+                        splits: Arc::clone(splits),
+                        spec: Arc::clone(spec),
+                        shuffle: Arc::clone(shuffle),
+                        counters: Arc::clone(counters),
+                        dfs: Arc::clone(&self.dfs),
                     })
                     .collect(),
                 run_map_task,
@@ -273,7 +718,7 @@ impl<'a> MrEngine<'a> {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn run_reduces(
+    fn run_reduces_barriered(
         &mut self,
         spec: &Arc<JobSpec>,
         app: &AppId,
@@ -287,25 +732,25 @@ impl<'a> MrEngine<'a> {
         let mut todo: Vec<(u32, u32)> = (0..n_reduces).map(|r| (r, 0)).collect();
         while !todo.is_empty() {
             let wave_n = todo.len() as u32;
-            let granted =
-                self.grant_wave(app, wave_n, self.reduce_memory_mb, ContainerKind::Reduce, now)?;
+            let granted = self.grant_wave(
+                app, wave_n, self.reduce_memory_mb, ContainerKind::Reduce, counters, now,
+            )?;
             let batch: Vec<((u32, u32), Container)> =
                 todo.drain(..granted.len().min(todo.len())).zip(granted).collect();
 
             let results = self.pool.try_map(
                 batch
                     .iter()
-                    .map(|((r, attempt), _)| {
-                        (
-                            *r,
-                            *attempt,
-                            n_maps,
-                            Arc::clone(spec),
-                            Arc::clone(shuffle),
-                            Arc::clone(counters),
-                            Arc::clone(&self.dfs),
-                            tmp_root.to_string(),
-                        )
+                    .map(|((r, attempt), _)| ReduceTaskArgs {
+                        r: *r,
+                        attempt: *attempt,
+                        n_maps,
+                        spec: Arc::clone(spec),
+                        shuffle: Arc::clone(shuffle),
+                        counters: Arc::clone(counters),
+                        dfs: Arc::clone(&self.dfs),
+                        tmp_root: tmp_root.to_string(),
+                        cancel: None,
                     })
                     .collect(),
                 run_reduce_task,
@@ -333,16 +778,31 @@ impl<'a> MrEngine<'a> {
     }
 }
 
-type MapTaskArgs = (
-    u32,
-    u32,
-    crate::cluster::NodeId,
-    InputSplit,
-    Arc<JobSpec>,
-    Arc<ShuffleStore>,
-    Arc<Counters>,
-    Arc<dyn Dfs>,
-);
+/// What one in-flight container is working on.
+enum TaskRef {
+    Map { idx: u32, attempt: u32 },
+    Reduce { r: u32, attempt: u32 },
+}
+
+struct InFlight {
+    container: Container,
+    task: TaskRef,
+}
+
+type TaskTx = Sender<(u64, Option<Result<()>>)>;
+type TaskRx = Receiver<(u64, Option<Result<()>>)>;
+
+/// Arguments of one map task attempt.
+struct MapTaskArgs {
+    idx: u32,
+    attempt: u32,
+    node: crate::cluster::NodeId,
+    splits: Arc<[InputSplit]>,
+    spec: Arc<JobSpec>,
+    shuffle: Arc<ShuffleStore>,
+    counters: Arc<Counters>,
+    dfs: Arc<dyn Dfs>,
+}
 
 /// One map task attempt (runs on a pool worker).
 ///
@@ -352,7 +812,8 @@ type MapTaskArgs = (
 /// the task, and spilled segments hand their arenas to the shuffle store
 /// without further copying.
 fn run_map_task(args: MapTaskArgs) -> Result<()> {
-    let (idx, attempt, node, split, spec, shuffle, counters, dfs) = args;
+    let MapTaskArgs { idx, attempt, node, splits, spec, shuffle, counters, dfs } = args;
+    let split = &splits[idx as usize];
     counters.add(counters::TASKS_LAUNCHED, 1);
     if spec.failures.should_fail(TaskId::map(idx), attempt) {
         return Err(Error::MapReduce(format!(
@@ -392,7 +853,7 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
                 }
             }
             fmt => {
-                in_records += read_records(&*dfs, &split, fmt, &mut |k, v| {
+                in_records += read_records(&*dfs, split, fmt, &mut |k, v| {
                     mapper.map(k, v, &mut emit)
                 })?;
             }
@@ -454,15 +915,22 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
 
     // Map-side sort + spill (one segment per partition). The sort permutes
     // index entries decorated with u64 key prefixes — payload bytes never
-    // move.
+    // move. All partitions are sorted BEFORE the first commit: slow-start
+    // reduces see map output per cell (`try_fetch`), so the commit must be
+    // all-or-nothing per attempt — a sort panic on a later bucket must not
+    // leave this attempt's earlier segments visible.
+    let mut segments = Vec::with_capacity(n_buckets as usize);
     for (p, mut records) in buckets.into_iter().enumerate() {
         records.sort_by_key();
-        shuffle.put(Segment {
+        segments.push(Segment {
             map: idx,
             partition: p as u32,
             node,
             records,
         });
+    }
+    for seg in segments {
+        shuffle.put(seg);
     }
     counters.add_many(&[
         (counters::MAP_SPILLS, n_buckets as u64),
@@ -471,16 +939,21 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
     Ok(())
 }
 
-type ReduceTaskArgs = (
-    u32,
-    u32,
-    u32,
-    Arc<JobSpec>,
-    Arc<ShuffleStore>,
-    Arc<Counters>,
-    Arc<dyn Dfs>,
-    String,
-);
+/// Arguments of one reduce task attempt. `cancel: Some(_)` puts the fetch
+/// phase in slow-start mode: poll [`ShuffleStore::try_fetch`] per map cell
+/// until the partition's column is complete (bailing out if the scheduler
+/// cancels the job); `None` is the barriered baseline's all-at-once fetch.
+struct ReduceTaskArgs {
+    r: u32,
+    attempt: u32,
+    n_maps: u32,
+    spec: Arc<JobSpec>,
+    shuffle: Arc<ShuffleStore>,
+    counters: Arc<Counters>,
+    dfs: Arc<dyn Dfs>,
+    tmp_root: String,
+    cancel: Option<Arc<AtomicBool>>,
+}
 
 /// One reduce task attempt.
 ///
@@ -488,7 +961,8 @@ type ReduceTaskArgs = (
 /// merge yields `(segment, record)` indices; grouping and reduction read
 /// keys and values as borrowed slices straight out of the segment arenas.
 fn run_reduce_task(args: ReduceTaskArgs) -> Result<()> {
-    let (r, attempt, n_maps, spec, shuffle, counters, dfs, tmp_root) = args;
+    let ReduceTaskArgs { r, attempt, n_maps, spec, shuffle, counters, dfs, tmp_root, cancel } =
+        args;
     counters.add(counters::TASKS_LAUNCHED, 1);
     if spec.failures.should_fail(TaskId::reduce(r), attempt) {
         return Err(Error::MapReduce(format!(
@@ -496,7 +970,41 @@ fn run_reduce_task(args: ReduceTaskArgs) -> Result<()> {
         )));
     }
 
-    let segments = shuffle.fetch_partition(r, n_maps)?;
+    let segments: Vec<Arc<Segment>> = match cancel {
+        // Slow-start: fetch each map's segment the moment it commits,
+        // concurrently with the remaining maps.
+        Some(cancel) => {
+            let mut slots: Vec<Option<Arc<Segment>>> = (0..n_maps).map(|_| None).collect();
+            let mut missing = n_maps as usize;
+            let mut prefetched = 0u64;
+            while missing > 0 {
+                if cancel.load(Ordering::Relaxed) {
+                    return Err(Error::MapReduce(format!(
+                        "reduce {r} cancelled: job failed while waiting for map output"
+                    )));
+                }
+                for (m, slot) in slots.iter_mut().enumerate() {
+                    if slot.is_none() {
+                        if let Some(s) = shuffle.try_fetch(m as u32, r) {
+                            *slot = Some(s);
+                            missing -= 1;
+                        }
+                    }
+                }
+                if missing > 0 {
+                    // Still waiting on uncommitted maps: everything fetched
+                    // so far arrived ahead of the last map commit.
+                    prefetched = (n_maps as usize - missing) as u64;
+                    std::thread::sleep(FETCH_POLL);
+                }
+            }
+            if prefetched > 0 {
+                counters.add(counters::SHUFFLE_SEGMENTS_PREFETCHED, prefetched);
+            }
+            slots.into_iter().map(|s| s.unwrap()).collect()
+        }
+        None => shuffle.fetch_partition(r, n_maps)?,
+    };
     let shuffle_bytes = segments.iter().map(|s| s.bytes()).sum::<u64>();
     let order = merge_segments(&segments);
     counters.add_many(&[
@@ -728,5 +1236,156 @@ mod tests {
         let outcome = engine.run(spec, "u", Micros::ZERO).unwrap();
         assert_eq!(outcome.counters.get(counters::TASKS_FAILED), 1);
         assert!(fs.exists("/lustre/scratch/out5/_SUCCESS"));
+    }
+
+    #[test]
+    fn barriered_mode_still_works() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/in-b").unwrap();
+        fs.create("/lustre/scratch/in-b/f", b"x y x z y x").unwrap();
+        let spec = Arc::new(wordcount_spec("/lustre/scratch/in-b", "/lustre/scratch/out-b"));
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        )
+        .with_mode(SchedMode::Barriered);
+        let outcome = engine.run(spec, "u", Micros::ZERO).unwrap();
+        assert!(fs.exists("/lustre/scratch/out-b/_SUCCESS"));
+        // Barriered reduces see the full map count at launch — no overlap.
+        assert_eq!(
+            outcome.counters.get(counters::MAPS_AT_FIRST_REDUCE),
+            outcome.maps as u64
+        );
+        assert_eq!(outcome.phases.overlap_s(), 0.0);
+        dc.rm.check_invariants().unwrap();
+    }
+
+    /// The slow-start acceptance: with more maps than the pool is wide,
+    /// the first reduce launches before the last map commits, observable
+    /// through the counters and the phase marks.
+    #[test]
+    fn slowstart_launches_reduces_before_last_map_commit() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/ss-in").unwrap();
+        // 20 splits of one line each (split_bytes = 32 over ~640 bytes).
+        let mut text = Vec::new();
+        for i in 0..20 {
+            text.extend_from_slice(format!("alpha bravo w{i:02} charlie del\n").as_bytes());
+        }
+        fs.create("/lustre/scratch/ss-in/f", &text).unwrap();
+        let spec = Arc::new(wordcount_spec("/lustre/scratch/ss-in", "/lustre/scratch/ss-out"));
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        )
+        .with_slowstart(0.8);
+        let outcome = engine.run(spec, "u", Micros::ZERO).unwrap();
+        let n_maps = outcome.maps as u64;
+        assert!(n_maps > pool.size() as u64, "need maps > pool width");
+        assert_eq!(outcome.counters.get(counters::FIRST_REDUCE_LAUNCHED), 1);
+        let at_first = outcome.counters.get(counters::MAPS_AT_FIRST_REDUCE);
+        assert!(
+            at_first >= (0.8 * n_maps as f64).ceil() as u64 && at_first < n_maps,
+            "first reduce launched at {at_first} of {n_maps} maps"
+        );
+        assert!(
+            outcome.phases.first_reduce_launch_s < outcome.phases.last_map_commit_s,
+            "reduce launch must precede last map commit: {:?}",
+            outcome.phases
+        );
+        // Every grant is accounted; one container per task attempt, and
+        // every one of them ran to completion on some NM.
+        assert_eq!(
+            outcome.counters.get(counters::CONTAINERS_GRANTED),
+            outcome.counters.get(counters::TASKS_LAUNCHED)
+        );
+        let completed: usize = dc.nms.values().map(|nm| nm.completed_containers()).sum();
+        assert_eq!(
+            completed as u64,
+            outcome.counters.get(counters::TASKS_LAUNCHED),
+            "per-completion container recycling completes one NM container per attempt"
+        );
+        // Release/re-grant churn: total grants exceed the concurrent
+        // high-water mark once containers are recycled.
+        let (granted_total, peak) = dc.rm.app_grant_stats(outcome.app).unwrap();
+        assert_eq!(granted_total, outcome.counters.get(counters::TASKS_LAUNCHED) + 1);
+        assert!(peak as u64 <= granted_total);
+        dc.rm.check_invariants().unwrap();
+    }
+
+    /// Zero-grant is a bounded-backoff retry, not an instant hard error —
+    /// and after the retries it is still a clean failure with all
+    /// resources released.
+    #[test]
+    fn zero_grant_backs_off_then_fails_cleanly() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/zg-in").unwrap();
+        fs.create("/lustre/scratch/zg-in/f", b"a b").unwrap();
+        let spec = Arc::new(wordcount_spec("/lustre/scratch/zg-in", "/lustre/scratch/zg-out"));
+        // Map containers larger than any NM can host → RM grants zero.
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.nm_resource_mb * 4,
+            cfg.yarn.reduce_memory_mb,
+        );
+        let err = engine.run(spec, "u", Micros::ZERO).unwrap_err();
+        assert!(err.to_string().contains("backoff retries"), "{err}");
+        dc.rm.check_invariants().unwrap();
+        let (_, used) = dc.rm.cluster_resources();
+        assert_eq!(used.mem_mb, 0, "failed job must release everything");
+    }
+
+    /// A failing job with slow-start reduces in flight must cancel them
+    /// (not leave pool workers polling forever) and release containers.
+    #[test]
+    fn map_exhaustion_cancels_inflight_reduces() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/cx-in").unwrap();
+        let mut text = Vec::new();
+        for i in 0..10 {
+            text.extend_from_slice(format!("word{i} again maybe here yes\n").as_bytes());
+        }
+        fs.create("/lustre/scratch/cx-in/f", &text).unwrap();
+        let mut spec = wordcount_spec("/lustre/scratch/cx-in", "/lustre/scratch/cx-out");
+        // Map 5 fails every attempt; with slow-start 0.1 reduces launch
+        // early and then must be cancelled when the job dies.
+        let mut failures = FailurePlan::none();
+        for a in 0..MAX_ATTEMPTS {
+            failures = failures.fail_attempt(TaskId::map(5), a);
+        }
+        spec.failures = failures;
+        let spec = Arc::new(spec);
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        )
+        .with_slowstart(0.1);
+        let err = engine.run(spec, "u", Micros::ZERO).unwrap_err();
+        assert!(err.to_string().contains("failed 4 attempts"), "{err}");
+        dc.rm.check_invariants().unwrap();
+        let (_, used) = dc.rm.cluster_resources();
+        assert_eq!(used.mem_mb, 0);
+        // The pool is healthy for the next job: run one to completion.
+        let spec2 = Arc::new(wordcount_spec("/lustre/scratch/cx-in", "/lustre/scratch/cx-out2"));
+        let mut engine2 = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        );
+        engine2.run(spec2, "u", Micros::ZERO).unwrap();
+        assert!(fs.exists("/lustre/scratch/cx-out2/_SUCCESS"));
     }
 }

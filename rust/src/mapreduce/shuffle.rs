@@ -111,6 +111,17 @@ impl ShuffleStore {
         Ok(out)
     }
 
+    /// Non-blocking per-cell visibility: the segment for `(map, partition)`
+    /// if that map has committed, else `None`. Reduce slow-start polls this
+    /// to fetch already-committed segments while the remaining maps are
+    /// still running. Map tasks commit all their partitions together after
+    /// the last sort (see `run_map_task`), so a visible cell always comes
+    /// from an attempt that produced its full partition set.
+    pub fn try_fetch(&self, map: u32, partition: u32) -> Option<Arc<Segment>> {
+        let g = self.shard_for(partition).lock().unwrap();
+        g.get(&(map, partition)).map(Arc::clone)
+    }
+
     /// Drop every segment produced on a failed node; returns the map ids
     /// whose output was lost (they must re-run).
     pub fn invalidate_node(&self, node: NodeId) -> Vec<u32> {
@@ -276,6 +287,26 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b), "fetch must hand out shared segments");
         // Store + two fetched handles.
         assert_eq!(Arc::strong_count(&a), 3);
+    }
+
+    #[test]
+    fn try_fetch_sees_partial_commits() {
+        // Per-map-commit visibility: cells appear one map at a time, and
+        // the handed-out view shares the stored segment.
+        let st = ShuffleStore::new();
+        assert!(st.try_fetch(0, 0).is_none());
+        st.put(seg(1, 0, &[2]));
+        assert!(st.try_fetch(0, 0).is_none(), "map 0 not committed yet");
+        let got = st.try_fetch(1, 0).unwrap();
+        assert_eq!(got.records.key(0), &[2]);
+        let again = st.try_fetch(1, 0).unwrap();
+        assert!(Arc::ptr_eq(&got, &again));
+        // fetch_partition still refuses the incomplete matrix.
+        assert!(st.fetch_partition(0, 3).is_err());
+        st.put(seg(0, 0, &[1]));
+        st.put(seg(2, 0, &[3]));
+        assert!((0..3).all(|m| st.try_fetch(m, 0).is_some()));
+        assert_eq!(st.fetch_partition(0, 3).unwrap().len(), 3);
     }
 
     #[test]

@@ -119,7 +119,12 @@ pub fn read_records(
 ) -> Result<u64> {
     match format {
         InputFormat::TeraRecords => {
-            let buf = dfs.read_range(&split.path, split.offset, split.len)?;
+            // Zero-copy: slice the shared file extent in place instead of
+            // copying the split's byte range out of the store.
+            let file = dfs.open(&split.path)?;
+            let start = (split.offset as usize).min(file.len());
+            let end = ((split.offset + split.len) as usize).min(file.len());
+            let buf = &file[start..end];
             if buf.len() % RECORD_LEN != 0 {
                 return Err(Error::MapReduce(format!(
                     "split of {} not record aligned",
@@ -136,10 +141,13 @@ pub fn read_records(
         }
         InputFormat::Lines => {
             // A split owns lines that *start* within [offset, offset+len).
-            // Read a bit past the end to finish the last line.
-            let file_size = dfs.size(&split.path)?;
+            // Slice a bit past the end of the shared extent to finish the
+            // last line (no copy).
+            let file = dfs.open(&split.path)?;
+            let file_size = file.len() as u64;
             let read_to = (split.offset + split.len + 1024 * 1024).min(file_size);
-            let buf = dfs.read_range(&split.path, split.offset, read_to - split.offset)?;
+            let start = (split.offset as usize).min(file.len());
+            let buf = &file[start..(read_to as usize).max(start)];
             let mut pos = 0usize;
             // Skip the partial first line unless we start at 0 (it belongs
             // to the previous split).

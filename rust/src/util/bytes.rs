@@ -107,6 +107,18 @@ impl Mul<u64> for ByteSize {
     }
 }
 
+/// FNV-1a over a byte slice — the crate's one non-cryptographic hash
+/// (Hadoop-default key partitioning, DFS path→shard routing).
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 /// CRC32 (IEEE 802.3, reflected) — the checksum Teravalidate aggregates.
 /// Table-driven, generated at compile time.
 pub struct Crc32 {

@@ -69,6 +69,31 @@ impl Pool {
         self.tx.send(Msg::Run(Box::new(f))).expect("pool closed");
     }
 
+    /// Event-driven submission: run `f(item)` on a worker and deliver
+    /// `(token, Some(result))` — or `(token, None)` if the job panicked —
+    /// on `done`. No barrier: the caller owns the receiving end and decides
+    /// when (and whether) to wait, which is what lets the MR scheduler
+    /// release and re-grant containers per task completion instead of per
+    /// wave.
+    pub fn submit_with<T, R, F>(&self, token: u64, item: T, f: F, done: Sender<(u64, Option<R>)>)
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: FnOnce(T) -> R + Send + 'static,
+    {
+        let panics = Arc::clone(&self.panics);
+        self.submit(move || {
+            let r = match catch_unwind(AssertUnwindSafe(|| f(item))) {
+                Ok(r) => Some(r),
+                Err(e) => {
+                    panics.lock().unwrap().push(panic_text(&*e));
+                    None
+                }
+            };
+            let _ = done.send((token, r));
+        });
+    }
+
     /// Run `f` over `items` in parallel, preserving order of results.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
@@ -203,6 +228,37 @@ mod tests {
             x * 10
         });
         assert_eq!(out, vec![Some(10), Some(20), None, Some(40)]);
+        assert_eq!(pool.panic_count(), 1);
+    }
+
+    #[test]
+    fn submit_with_delivers_tokens_and_panics_as_none() {
+        let pool = Pool::new(2);
+        let (tx, rx) = channel();
+        for i in 0..10u64 {
+            pool.submit_with(
+                i,
+                i,
+                |x| {
+                    if x == 7 {
+                        panic!("boom");
+                    }
+                    x * 2
+                },
+                tx.clone(),
+            );
+        }
+        drop(tx);
+        let mut got: Vec<(u64, Option<u64>)> = rx.iter().collect();
+        got.sort();
+        assert_eq!(got.len(), 10);
+        for (tok, r) in got {
+            if tok == 7 {
+                assert_eq!(r, None);
+            } else {
+                assert_eq!(r, Some(tok * 2));
+            }
+        }
         assert_eq!(pool.panic_count(), 1);
     }
 

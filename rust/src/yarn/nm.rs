@@ -123,6 +123,21 @@ impl NodeManager {
         Ok(())
     }
 
+    /// Containers that ran to completion on this node (success or
+    /// failure) — with per-completion container recycling this counts one
+    /// entry per task attempt hosted here.
+    pub fn completed_containers(&self) -> usize {
+        self.containers
+            .values()
+            .filter(|s| {
+                matches!(
+                    s,
+                    LocalContainerState::Completed | LocalContainerState::Failed
+                )
+            })
+            .count()
+    }
+
     pub fn running_containers(&self) -> usize {
         self.containers
             .values()

@@ -42,6 +42,12 @@ struct AppRecord {
     next_container_seq: u64,
     submitted_at: Micros,
     finished_at: Option<Micros>,
+    /// Release/re-grant accounting: containers granted over the app's
+    /// lifetime and the concurrent high-water mark. An event-driven AM
+    /// shows `granted_total` far above `peak_held` — capacity is recycled
+    /// per task completion instead of held for a wave.
+    granted_total: u64,
+    peak_held: usize,
 }
 
 /// Handle returned on submission.
@@ -129,6 +135,8 @@ impl ResourceManager {
             next_container_seq: 2, // container 1 is the AM
             submitted_at: now,
             finished_at: None,
+            granted_total: 1, // the AM container
+            peak_held: 1,
         };
         record.containers.insert(am.id, am);
         self.apps.insert(app, record);
@@ -168,6 +176,8 @@ impl ResourceManager {
         for c in &granted {
             rec.containers.insert(c.id, *c);
         }
+        rec.granted_total += granted.len() as u64;
+        rec.peak_held = rec.peak_held.max(rec.containers.len());
         self.metrics.inc("rm.containers_allocated", granted.len() as u64);
         let _ = now;
         Ok(granted)
@@ -329,6 +339,13 @@ impl ResourceManager {
         })
     }
 
+    /// Release/re-grant accounting for one app: `(granted_total,
+    /// peak_held)`. With container recycling, granted_total ≈ task
+    /// attempts + 1 while peak_held stays at cluster capacity.
+    pub fn app_grant_stats(&self, app: AppId) -> Option<(u64, usize)> {
+        self.apps.get(&app).map(|a| (a.granted_total, a.peak_held))
+    }
+
     /// Containers currently held by an app.
     pub fn app_containers(&self, app: AppId) -> Vec<Container> {
         self.apps
@@ -426,6 +443,42 @@ mod tests {
             )
             .unwrap();
         assert_eq!(got.len(), 15);
+    }
+
+    #[test]
+    fn grant_stats_track_release_regrant_churn() {
+        // Release + immediate re-grant (container recycling): total grants
+        // grow while the high-water mark stays at what fits concurrently.
+        let mut rm = rm_with(1);
+        let h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        let ask = ContainerRequest {
+            resource: Resource::new(4096, 1),
+            count: 11,
+        };
+        let first = rm.allocate(h.app, ask, ContainerKind::Map, Micros::ZERO).unwrap();
+        assert_eq!(first.len(), 11);
+        for _ in 0..3 {
+            // One completes, one re-granted — the event-driven AM's cycle.
+            let held = rm.app_containers(h.app);
+            let victim = held.iter().find(|c| c.kind == ContainerKind::Map).unwrap().id;
+            rm.release(h.app, victim).unwrap();
+            let again = rm
+                .allocate(
+                    h.app,
+                    ContainerRequest {
+                        resource: Resource::new(4096, 1),
+                        count: 1,
+                    },
+                    ContainerKind::Map,
+                    Micros::ZERO,
+                )
+                .unwrap();
+            assert_eq!(again.len(), 1);
+        }
+        let (granted, peak) = rm.app_grant_stats(h.app).unwrap();
+        assert_eq!(granted, 1 + 11 + 3); // AM + first wave + 3 re-grants
+        assert_eq!(peak, 12); // AM + 11 concurrent
+        rm.check_invariants().unwrap();
     }
 
     #[test]

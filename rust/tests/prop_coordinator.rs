@@ -4,15 +4,22 @@
 
 use hpcw::cluster::{ClusterModel, NodeId};
 use hpcw::config::StackConfig;
+use hpcw::lustre::{Dfs, LustreFs};
 use hpcw::mapreduce::shuffle::{merge_to_recordbuf, Segment, ShuffleStore};
-use hpcw::mapreduce::RecordBuf;
+use hpcw::mapreduce::{
+    FailurePlan, HashPartitioner, InputFormat, JobSpec, Mapper, MrEngine, OutputFormat,
+    RecordBuf, Reducer, SchedMode, TaskId,
+};
 use hpcw::metrics::Metrics;
 use hpcw::scheduler::{JobCommand, JobState, Lsf, ResourceRequest};
 use hpcw::testkit::{props, Gen};
 use hpcw::util::ids::{IdGen, LsfJobId};
+use hpcw::util::pool::Pool;
 use hpcw::util::time::Micros;
+use hpcw::wrapper::DynamicCluster;
 use hpcw::yarn::container::{ContainerKind, ContainerRequest, Resource};
 use hpcw::yarn::rm::{AppState, ResourceManager};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// The scheduler never double-books nodes, never loses them, and every
@@ -179,6 +186,144 @@ fn shuffle_exactly_once_and_merge_correct() {
         expected.sort();
         keys.sort();
         assert_eq!(keys, expected);
+    });
+}
+
+struct WordSplit;
+impl Mapper for WordSplit {
+    fn map(&self, _k: &[u8], v: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        for w in v.split(|&b| b == b' ').filter(|w| !w.is_empty()) {
+            emit(w, b"1");
+        }
+    }
+}
+
+struct CountReducer;
+impl Reducer for CountReducer {
+    fn reduce(
+        &self,
+        key: &[u8],
+        values: &mut dyn Iterator<Item = &[u8]>,
+        emit: &mut dyn FnMut(&[u8], &[u8]),
+    ) {
+        let n = values.count();
+        emit(key, n.to_string().as_bytes());
+    }
+}
+
+/// Counters whose totals must not depend on launch ordering.
+const PARITY_COUNTERS: &[&str] = &[
+    "MAP_INPUT_RECORDS",
+    "MAP_OUTPUT_RECORDS",
+    "MAP_OUTPUT_BYTES",
+    "SHUFFLE_BYTES",
+    "SHUFFLE_SEGMENTS",
+    "REDUCE_INPUT_RECORDS",
+    "REDUCE_OUTPUT_RECORDS",
+    "REDUCE_OUTPUT_BYTES",
+    "TASKS_FAILED",
+    "TASKS_LAUNCHED",
+];
+
+/// Run one wordcount job on a fresh cluster in the given scheduler mode.
+/// Returns `(output file name → bytes, order-independent counters)`.
+#[allow(clippy::type_complexity)]
+fn run_parity_job(
+    mode: SchedMode,
+    text: &[u8],
+    reduces: u32,
+    split_bytes: u64,
+    failures: &[(TaskId, u32)],
+) -> (BTreeMap<String, Vec<u8>>, BTreeMap<String, u64>) {
+    let cfg = StackConfig::tiny();
+    let fs = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
+    let nodes: Vec<NodeId> = (0..6).map(NodeId).collect();
+    let mut dc = DynamicCluster::build(
+        &cfg,
+        &nodes,
+        &*fs,
+        Arc::new(IdGen::default()),
+        Arc::new(Metrics::new()),
+        "parity",
+        Micros::ZERO,
+    )
+    .unwrap();
+    let pool = Pool::new(4);
+    fs.mkdirs("/lustre/scratch/par-in").unwrap();
+    fs.create("/lustre/scratch/par-in/f", text).unwrap();
+    let mut spec =
+        JobSpec::identity("parity", "/lustre/scratch/par-in", "/lustre/scratch/par-out", reduces);
+    spec.input_format = InputFormat::Lines;
+    spec.output_format = OutputFormat::TextKv;
+    spec.split_bytes = split_bytes;
+    spec.mapper = Arc::new(WordSplit);
+    spec.reducer = Arc::new(CountReducer);
+    spec.partitioner = Arc::new(HashPartitioner);
+    let mut plan = FailurePlan::none();
+    for &(task, attempt) in failures {
+        plan = plan.fail_attempt(task, attempt);
+    }
+    spec.failures = plan;
+    let mut engine = MrEngine::new(
+        &mut dc,
+        fs.clone(),
+        &pool,
+        cfg.yarn.map_memory_mb,
+        cfg.yarn.reduce_memory_mb,
+    )
+    .with_mode(mode)
+    .with_slowstart(0.5);
+    let outcome = engine.run(Arc::new(spec), "u", Micros::ZERO).unwrap();
+    dc.rm.check_invariants().unwrap();
+    let mut files = BTreeMap::new();
+    for f in &outcome.output_files {
+        files.insert(f.clone(), fs.read(f).unwrap());
+    }
+    let counters: BTreeMap<String, u64> = outcome
+        .counters
+        .snapshot()
+        .into_iter()
+        .filter(|(k, _)| PARITY_COUNTERS.contains(&k.as_str()))
+        .collect();
+    (files, counters)
+}
+
+/// The pipelined scheduler is a pure scheduling change: under random
+/// inputs, reduce counts, split sizes and attempt-0 failure injection,
+/// its reduce output files are byte-identical to the barriered path and
+/// the order-independent counter totals match exactly.
+#[test]
+fn pipelined_matches_barriered_byte_for_byte() {
+    props(8, |g: &mut Gen| {
+        let n_lines = g.usize(4..40);
+        let mut text = Vec::new();
+        for i in 0..n_lines {
+            let w1 = g.u32(0..12);
+            let w2 = g.u32(0..12);
+            text.extend_from_slice(format!("w{w1} w{w2} line{i}\n").as_bytes());
+        }
+        let reduces = g.u32(1..5);
+        let split_bytes = [24u64, 48, 96][g.usize(0..3)];
+        let n_maps = ((text.len() as u64 + split_bytes - 1) / split_bytes) as u32;
+        // Attempt-0 failures on a few random tasks — both runs inject the
+        // identical plan, so retries line up.
+        let mut failures = Vec::new();
+        for _ in 0..g.usize(0..3) {
+            if g.chance(0.5) {
+                failures.push((TaskId::map(g.u32(0..n_maps)), 0));
+            } else {
+                failures.push((TaskId::reduce(g.u32(0..reduces)), 0));
+            }
+        }
+        failures.sort_by_key(|(t, a)| (t.kind, t.index, *a));
+        failures.dedup();
+        let (files_b, ctr_b) =
+            run_parity_job(SchedMode::Barriered, &text, reduces, split_bytes, &failures);
+        let (files_p, ctr_p) =
+            run_parity_job(SchedMode::Pipelined, &text, reduces, split_bytes, &failures);
+        assert_eq!(files_b.len(), reduces as usize);
+        assert_eq!(files_b, files_p, "reduce outputs must be byte-identical");
+        assert_eq!(ctr_b, ctr_p, "order-independent counters must match");
     });
 }
 
