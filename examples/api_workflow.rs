@@ -1,24 +1,26 @@
-//! The no-SSH access path (§III steps 1/2/6): start the SynfiniWay-style
-//! API server, then drive a two-step workflow and fetch outputs purely
-//! through the HTTP client.
+//! The no-SSH access path (§III steps 1/2/6): start the v1 API server,
+//! then drive jobs and a DAG workflow purely through the HTTP client —
+//! event-driven waits, output chaining, and the transition journal.
 //!
 //! Run: `cargo run --release --example api_workflow`
 
+use hpcw::api::wire::{StepSpec, StepState, WorkflowSpec};
 use hpcw::api::{ApiClient, ApiServer, AppPayload, Stack};
-use hpcw::codec::json::Json;
 use hpcw::config::StackConfig;
+use hpcw::scheduler::JobState;
 use std::time::Duration;
 
 fn main() {
     // Server side: the facility.
     let stack = Stack::new(StackConfig::tiny()).expect("stack");
     let server = ApiServer::start(stack).expect("api server");
-    println!("API listening on http://{}", server.addr);
+    println!("API listening on http://{}/v1", server.addr);
 
     // Client side: the end-user application, SSH never involved.
     let client = ApiClient::new(&server.addr);
 
-    // Single job: a small Terasort.
+    // Single job: a small Terasort. `wait` long-polls — O(transitions)
+    // HTTP requests, not a 25 ms busy loop.
     let job = client
         .submit(
             6,
@@ -32,77 +34,110 @@ fn main() {
         )
         .expect("submit");
     println!("submitted job {job}");
-    let st = client.wait(job, Duration::from_secs(60)).expect("wait");
-    println!("job {job}: {}", st.state);
-    let result = st.result.expect("result");
-    assert_eq!(result.get("validated"), Some(&Json::Bool(true)));
+    let before = client.request_count();
+    let doc = client.wait(job, Duration::from_secs(60)).expect("wait");
+    println!(
+        "job {job}: {:?} after {} HTTP request(s)",
+        doc.state,
+        client.request_count() - before
+    );
+    assert_eq!(doc.state, JobState::Done);
+    let result = doc.result.expect("result");
+    assert!(result.validated);
 
-    // Fetch the first output part through the API (step 6).
-    let files = result.get("output_files").unwrap().as_arr().unwrap();
-    let first = files[0].as_str().unwrap();
-    let bytes = client.read_output(job, first).expect("output");
-    println!("fetched {} bytes of sorted records from {first}", bytes.len());
+    // Fetch the first output part through the API (step 6) — paths are
+    // confined to the job's output root server-side.
+    let bytes = client
+        .read_output(job, &result.output_files[0])
+        .expect("output");
+    println!(
+        "fetched {} bytes of sorted records from {}",
+        bytes.len(),
+        result.output_files[0]
+    );
 
-    // A two-step SynfiniWay workflow: stage data, then analyze it.
-    let wf = client
-        .submit_workflow(
-            "gen-then-analyze",
-            "remote-user",
-            6,
-            &[
-                AppPayload::Teragen {
-                    rows: 2_000,
-                    maps: 2,
-                    dir: "/lustre/scratch/wf-data".into(),
-                },
-                AppPayload::HiveQuery {
-                    // Not a sensible query over tera-records, so analyze a
-                    // staged CSV instead: generate it via Pig? Keep the flow
-                    // honest with a second teragen step (stage-in + verify).
-                    sql: String::new(),
-                    reduces: 1,
-                },
-            ],
-        );
-    // The empty SQL above would fail the flow — demonstrate abort handling
-    // by expecting the workflow to stop after step 1.
-    let wf = wf.expect("workflow submitted");
+    // A diamond DAG: stage data once, analyze it along two independent
+    // branches concurrently, then join. Outputs chain through
+    // `${steps.<name>.output_dir}` instead of hard-coded paths.
+    let teragen = |dir: &str| AppPayload::Teragen {
+        rows: 1_000,
+        maps: 2,
+        dir: dir.into(),
+    };
+    let step = |name: &str, after: &[&str], payload: AppPayload| StepSpec {
+        name: name.into(),
+        after: after.iter().map(|s| s.to_string()).collect(),
+        retries: 1,
+        payload,
+    };
+    let spec = WorkflowSpec {
+        name: "stage-fan-out-join".into(),
+        user: "remote-user".into(),
+        nodes: 4,
+        steps: vec![
+            step("stage", &[], teragen("/lustre/scratch/wf-stage")),
+            step("left", &["stage"], teragen("/lustre/scratch/wf-left")),
+            step("right", &["stage"], teragen("/lustre/scratch/wf-right")),
+            step("join", &["left", "right"], teragen("/lustre/scratch/wf-join")),
+        ],
+    };
+    let wf = client.submit_workflow(&spec).expect("workflow");
     let doc = client
         .wait_workflow(wf, Duration::from_secs(60))
-        .expect("workflow");
-    println!("workflow doc: {}", doc.pretty());
-    assert_eq!(doc.get("aborted"), Some(&Json::Bool(true)),
-        "step 2 is invalid by construction; the flow must abort after step 1");
+        .expect("workflow wait");
+    assert!(doc.complete, "diamond must complete: {doc:?}");
+    for s in &doc.steps {
+        println!(
+            "  step {:<6} {:<8} attempts={} job={:?}",
+            s.name,
+            s.state.as_wire(),
+            s.attempts,
+            s.job
+        );
+        assert_eq!(s.state, StepState::Done);
+    }
 
-    // And a clean two-step flow.
-    let wf2 = client
-        .submit_workflow(
-            "two-stage-ok",
-            "remote-user",
-            6,
-            &[
-                AppPayload::Teragen {
-                    rows: 1_000,
-                    maps: 2,
-                    dir: "/lustre/scratch/wf-a".into(),
+    // A failing workflow aborts and skips dependents (per-step retries
+    // are consumed first).
+    let broken = WorkflowSpec {
+        name: "broken".into(),
+        user: "remote-user".into(),
+        nodes: 4,
+        steps: vec![
+            step(
+                "bad",
+                &[],
+                AppPayload::HiveQuery {
+                    sql: "SELECT COUNT(a) FROM '/lustre/scratch/missing' SCHEMA (a) INTO '/lustre/scratch/wf-x'".into(),
+                    reduces: 1,
                 },
-                AppPayload::Teragen {
-                    rows: 1_000,
-                    maps: 2,
-                    dir: "/lustre/scratch/wf-b".into(),
-                },
-            ],
-        )
-        .expect("workflow 2");
+            ),
+            step("never", &["bad"], teragen("/lustre/scratch/wf-never")),
+        ],
+    };
+    let wf2 = client.submit_workflow(&broken).expect("broken workflow");
     let doc2 = client
         .wait_workflow(wf2, Duration::from_secs(60))
-        .expect("workflow 2 wait");
-    assert_eq!(doc2.get("complete"), Some(&Json::Bool(true)));
-    println!("workflow {wf2} complete");
+        .expect("broken wait");
+    assert!(doc2.aborted, "step 1 is invalid by construction: {doc2:?}");
+    println!("workflow {wf2} aborted as expected (bad step, dependents skipped)");
+
+    // The journal: every transition the facility observed, in order.
+    let page = client.events(0, 0).expect("events");
+    println!("--- event journal ({} events) ---", page.events.len());
+    for e in page.events.iter().take(12) {
+        match &e.step {
+            Some(s) => println!("  #{:<4} {:<9} id={} {s}: {}", e.seq, e.kind, e.id, e.state),
+            None => println!("  #{:<4} {:<9} id={} {}", e.seq, e.kind, e.id, e.state),
+        }
+    }
 
     println!("--- facility metrics ---");
     let metrics = client.metrics().expect("metrics");
-    for line in metrics.lines().filter(|l| l.starts_with("counter lsf")) {
+    for line in metrics
+        .lines()
+        .filter(|l| l.starts_with("counter lsf") || l.starts_with("counter api"))
+    {
         println!("{line}");
     }
     server.shutdown();

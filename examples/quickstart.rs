@@ -69,5 +69,22 @@ fn main() {
         println!("{line}");
     }
     assert!(text.contains("wales\t350\t2"));
+
+    // 6. The same facility over the network: wrap the stack in the v1 API
+    //    server and inspect it with the HTTP client (no SSH involved).
+    let server = hpcw::api::ApiServer::start(stack).expect("api server");
+    let client = hpcw::api::ApiClient::new(&server.addr);
+    let page = client.list_jobs(0, 10).expect("list jobs");
+    println!("--- via the v1 API ---");
+    for j in &page.jobs {
+        println!(
+            "  job {:>4}  {:<6} {}",
+            j.job,
+            j.kind,
+            hpcw::api::wire::job_state_to_wire(j.state)
+        );
+    }
+    assert_eq!(page.total, 1, "the pig job is visible over HTTP");
+    server.shutdown();
     println!("quickstart OK");
 }

@@ -1,0 +1,12 @@
+"""HPC Wales API client, Python edition.
+
+The paper promises "HPC Wales APIs in multiple languages"; this package
+is the Python port of the Rust reference client, speaking the same v1
+wire protocol (``rust/src/api/wire.rs`` ↔ ``hpcw_client.wire``), held
+byte-compatible by the conformance vectors in ``python/tests/vectors.json``.
+"""
+
+from . import wire
+from .client import ApiClient, ApiError
+
+__all__ = ["ApiClient", "ApiError", "wire"]

@@ -1,0 +1,158 @@
+"""Python client for the HPC Wales v1 API — the paper's "APIs in multiple
+languages" made real. Stdlib only (``http.client`` + ``json``); the wire
+schema lives in :mod:`hpcw_client.wire` and is conformance-tested against
+the Rust implementation.
+
+``wait``/``wait_workflow`` long-poll ``?wait_ms=N``: a job completing
+after time T costs O(state transitions) HTTP requests, not
+O(T / poll-interval).
+
+Usage::
+
+    client = ApiClient("127.0.0.1:8080")
+    job = client.submit(nodes=6, user="sid", payload=wire.terasort(100_000, 4, 4))
+    doc = client.wait(job, timeout=60.0)
+    assert doc["state"] == "DONE"
+    data = client.read_output(job, doc["result"]["output_files"][0])
+"""
+
+from __future__ import annotations
+
+import http.client
+import json
+import time
+import urllib.parse
+from typing import Any, Dict, List, Optional, Tuple
+
+from . import wire
+
+#: Longest single long-poll slice requested from the server (ms).
+WAIT_SLICE_MS = 10_000
+
+
+class ApiError(Exception):
+    """An error envelope from the server (or a transport failure)."""
+
+    def __init__(self, status: int, code: str, message: str):
+        super().__init__(f"HTTP {status} {code}: {message}")
+        self.status = status
+        self.code = code
+        self.message = message
+
+
+class ApiClient:
+    """Client handle for one API endpoint (``host:port``)."""
+
+    def __init__(self, addr: str, timeout: float = 30.0):
+        self.addr = addr
+        self.timeout = timeout
+        #: HTTP requests issued (conformance tests assert the
+        #: O(transitions) property of ``wait`` with it).
+        self.request_count = 0
+
+    # -- transport ---------------------------------------------------------
+
+    def _call(
+        self, method: str, path: str, body: Optional[bytes] = None
+    ) -> Tuple[int, bytes]:
+        self.request_count += 1
+        # Per-request connection: the server speaks Connection: close.
+        # The socket timeout must exceed the longest wait_ms slice.
+        conn = http.client.HTTPConnection(
+            self.addr, timeout=self.timeout + WAIT_SLICE_MS / 1000.0
+        )
+        try:
+            conn.request(method, path, body=body)
+            resp = conn.getresponse()
+            return resp.status, resp.read()
+        finally:
+            conn.close()
+
+    def _json(self, method: str, path: str, body: Optional[Dict[str, Any]] = None) -> Any:
+        raw = wire.dumps(body).encode("utf-8") if body is not None else None
+        status, data = self._call(method, path, raw)
+        try:
+            doc = json.loads(data.decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise ApiError(status, wire.INTERNAL, f"unparseable response: {e}")
+        if status >= 400:
+            code, message = wire.parse_error(doc)
+            raise ApiError(status, code, message)
+        return doc
+
+    # -- jobs --------------------------------------------------------------
+
+    def submit(self, nodes: int, user: str, payload: Dict[str, Any]) -> int:
+        """Submit an application; returns the LSF job id."""
+        doc = self._json("POST", "/v1/jobs", wire.submit_request(nodes, user, payload))
+        return doc["job"]
+
+    def status(self, job: int) -> Dict[str, Any]:
+        """Job status document (``state`` is an exact token from
+        ``wire.JOB_STATES``)."""
+        return self._json("GET", f"/v1/jobs/{job}")
+
+    def list_jobs(self, offset: int = 0, limit: int = 50) -> Dict[str, Any]:
+        return self._json("GET", f"/v1/jobs?offset={offset}&limit={limit}")
+
+    def wait(self, job: int, timeout: float = 60.0) -> Dict[str, Any]:
+        """Long-poll until the job is terminal or ``timeout`` seconds."""
+        deadline = time.monotonic() + timeout
+        while True:
+            left_ms = max(0, int((deadline - time.monotonic()) * 1000))
+            slice_ms = min(left_ms, WAIT_SLICE_MS)
+            doc = self._json("GET", f"/v1/jobs/{job}?wait_ms={slice_ms}")
+            if wire.is_terminal(doc["state"]):
+                return doc
+            if time.monotonic() >= deadline:
+                raise ApiError(408, wire.NOT_READY, f"timeout waiting for job {job}")
+
+    def kill(self, job: int) -> None:
+        self._json("DELETE", f"/v1/jobs/{job}")
+
+    def read_output(self, job: int, path: str) -> bytes:
+        """Fetch an output file's bytes. ``path`` may be absolute (under
+        the job's output root) or relative to it; escapes are rejected by
+        the server with code ``bad_path``."""
+        q = urllib.parse.quote(path, safe="/")
+        status, data = self._call("GET", f"/v1/jobs/{job}/output?path={q}")
+        if status >= 400:
+            doc = json.loads(data.decode("utf-8"))
+            code, message = wire.parse_error(doc)
+            raise ApiError(status, code, message)
+        return data
+
+    # -- workflows ---------------------------------------------------------
+
+    def submit_workflow(self, spec: Dict[str, Any]) -> int:
+        """Submit a named-step DAG (build with ``wire.workflow_spec`` /
+        ``wire.linear_workflow``); returns the workflow id."""
+        doc = self._json("POST", "/v1/workflows", wire.canonical_workflow(spec))
+        return doc["workflow"]
+
+    def workflow(self, wf: int) -> Dict[str, Any]:
+        return self._json("GET", f"/v1/workflows/{wf}")
+
+    def wait_workflow(self, wf: int, timeout: float = 120.0) -> Dict[str, Any]:
+        deadline = time.monotonic() + timeout
+        while True:
+            left_ms = max(0, int((deadline - time.monotonic()) * 1000))
+            slice_ms = min(left_ms, WAIT_SLICE_MS)
+            doc = self._json("GET", f"/v1/workflows/{wf}?wait_ms={slice_ms}")
+            if doc["complete"] or doc["aborted"]:
+                return doc
+            if time.monotonic() >= deadline:
+                raise ApiError(408, wire.NOT_READY, f"timeout waiting for workflow {wf}")
+
+    # -- events and metrics ------------------------------------------------
+
+    def events(self, since: int = 0, wait_ms: int = 0) -> Dict[str, Any]:
+        """The monotonic transition journal after ``since``; feed the
+        returned ``next`` back as the following ``since``."""
+        return self._json("GET", f"/v1/events?since={since}&wait_ms={wait_ms}")
+
+    def metrics(self) -> str:
+        status, data = self._call("GET", "/v1/metrics")
+        if status != 200:
+            raise ApiError(status, wire.INTERNAL, "metrics unavailable")
+        return data.decode("utf-8")

@@ -1,0 +1,203 @@
+"""The v1 wire schema, Python side.
+
+This is the mechanical port of ``rust/src/api/wire.rs`` — the single
+source of truth for the protocol. Both implementations are pinned to the
+shared conformance vectors in ``python/tests/vectors.json``: every
+document must re-serialize to the byte-identical canonical string in both
+languages.
+
+Canonical encoding: compact JSON (no whitespace), keys in declaration
+order, raw UTF-8 (no ``\\uXXXX`` for non-ASCII), integers without a
+fractional part. ``dumps`` below matches the Rust ``Json`` writer.
+
+Stdlib only: ``json`` here, ``http.client`` in ``client.py``.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+# Stable error codes (mirror wire::code).
+BAD_REQUEST = "bad_request"
+BAD_JSON = "bad_json"
+NOT_FOUND = "not_found"
+BAD_PATH = "bad_path"
+UNKNOWN_PAYLOAD = "unknown_payload"
+NOT_READY = "not_ready"
+TOO_LARGE = "too_large"
+DEPRECATED = "deprecated"
+INTERNAL = "internal"
+
+#: Exact job-state tokens (LSF names; KILLED is a real token, clients
+#: never prefix-match display strings like "EXIT(kill)").
+JOB_STATES = ("PEND", "RUN", "DONE", "EXIT", "KILLED")
+TERMINAL_JOB_STATES = frozenset({"DONE", "EXIT", "KILLED"})
+
+STEP_STATES = ("WAITING", "RUNNING", "DONE", "FAILED", "SKIPPED")
+TERMINAL_STEP_STATES = frozenset({"DONE", "FAILED", "SKIPPED"})
+
+
+def dumps(doc: Any) -> str:
+    """Serialize to the canonical wire form (byte-identical to Rust)."""
+    return json.dumps(doc, separators=(",", ":"), ensure_ascii=False)
+
+
+def is_terminal(state: str) -> bool:
+    return state in TERMINAL_JOB_STATES
+
+
+# ---------------------------------------------------------------------------
+# Payload builders (canonical key order = Rust field order)
+# ---------------------------------------------------------------------------
+
+def terasort(rows: int, maps: int, reduces: int, use_kernel: bool = False) -> Dict[str, Any]:
+    return {
+        "type": "terasort",
+        "rows": rows,
+        "maps": maps,
+        "reduces": reduces,
+        "use_kernel": use_kernel,
+    }
+
+
+def teragen(rows: int, maps: int, dir: str) -> Dict[str, Any]:
+    return {"type": "teragen", "rows": rows, "maps": maps, "dir": dir}
+
+
+def pig(script: str, reduces: int) -> Dict[str, Any]:
+    return {"type": "pig", "script": script, "reduces": reduces}
+
+
+def hive(sql: str, reduces: int) -> Dict[str, Any]:
+    return {"type": "hive", "sql": sql, "reduces": reduces}
+
+
+def rsummary(
+    input_dir: str,
+    output_dir: str,
+    fields: Iterable[str],
+    delimiter: str = ",",
+    columns: Iterable[str] = (),
+) -> Dict[str, Any]:
+    return {
+        "type": "rsummary",
+        "input_dir": input_dir,
+        "output_dir": output_dir,
+        "fields": list(fields),
+        "delimiter": delimiter,
+        "columns": list(columns),
+    }
+
+
+def _req(doc: Dict[str, Any], key: str) -> Any:
+    if key not in doc:
+        raise ValueError(f"missing field '{key}'")
+    return doc[key]
+
+
+def canonical_payload(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Parse-and-rebuild a payload document in canonical form — the
+    Python analog of Rust's ``payload_from_json`` → ``payload_to_json``
+    round trip (defaults filled, keys in canonical order)."""
+    t = _req(doc, "type")
+    if t == "terasort":
+        return terasort(
+            _req(doc, "rows"),
+            _req(doc, "maps"),
+            _req(doc, "reduces"),
+            bool(doc.get("use_kernel", False)),
+        )
+    if t == "teragen":
+        return teragen(_req(doc, "rows"), _req(doc, "maps"), _req(doc, "dir"))
+    if t == "pig":
+        return pig(_req(doc, "script"), _req(doc, "reduces"))
+    if t == "hive":
+        return hive(_req(doc, "sql"), _req(doc, "reduces"))
+    if t == "rsummary":
+        # Mirror Rust payload_from_json: the delimiter is one character —
+        # longer strings truncate to their first char, empty/missing
+        # defaults to ','.
+        delim = doc.get("delimiter") or ","
+        return rsummary(
+            _req(doc, "input_dir"),
+            _req(doc, "output_dir"),
+            _req(doc, "fields"),
+            delim[0],
+            _req(doc, "columns"),
+        )
+    raise ValueError(f"unknown payload type '{t}'")
+
+
+# ---------------------------------------------------------------------------
+# Requests and documents
+# ---------------------------------------------------------------------------
+
+def submit_request(nodes: int, user: str, payload: Dict[str, Any]) -> Dict[str, Any]:
+    return {"nodes": nodes, "user": user, "payload": canonical_payload(payload)}
+
+
+def step(
+    name: str,
+    payload: Dict[str, Any],
+    after: Iterable[str] = (),
+    retries: int = 0,
+) -> Dict[str, Any]:
+    return {
+        "name": name,
+        "after": list(after),
+        "retries": retries,
+        "payload": canonical_payload(payload),
+    }
+
+
+def workflow_spec(
+    name: str, user: str, nodes: int, steps: List[Dict[str, Any]]
+) -> Dict[str, Any]:
+    return {"name": name, "user": user, "nodes": nodes, "steps": steps}
+
+
+def linear_workflow(
+    name: str, user: str, nodes: int, payloads: List[Dict[str, Any]]
+) -> Dict[str, Any]:
+    """A linear chain: stepN runs after stepN-1 (mirrors
+    ``WorkflowSpec::linear``)."""
+    steps = [
+        step(f"step{i}", p, after=[] if i == 0 else [f"step{i-1}"])
+        for i, p in enumerate(payloads)
+    ]
+    return workflow_spec(name, user, nodes, steps)
+
+
+def canonical_workflow(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Parse-and-rebuild a workflow spec in canonical form (defaults for
+    ``after``/``retries`` filled, payloads canonicalized)."""
+    return workflow_spec(
+        _req(doc, "name"),
+        _req(doc, "user"),
+        _req(doc, "nodes"),
+        [
+            step(
+                _req(s, "name"),
+                _req(s, "payload"),
+                s.get("after", []),
+                s.get("retries", 0),
+            )
+            for s in _req(doc, "steps")
+        ],
+    )
+
+
+def error_doc(code: str, message: str) -> Dict[str, Any]:
+    return {"error": {"code": code, "message": message}}
+
+
+def canonical_error(doc: Dict[str, Any]) -> Dict[str, Any]:
+    e = _req(doc, "error")
+    return error_doc(_req(e, "code"), _req(e, "message"))
+
+
+def parse_error(doc: Dict[str, Any]) -> tuple:
+    """(code, message) from an error envelope."""
+    e = _req(doc, "error")
+    return _req(e, "code"), _req(e, "message")

@@ -1,3 +1,15 @@
-import jax
+import pathlib
+import sys
 
-jax.config.update("jax_enable_x64", True)
+# Make `python/` importable so the test modules can `import hpcw_client`
+# and the kernel tests can import `compile.*` regardless of rootdir.
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+# jax is only needed by the kernel tests; the wire/conformance suite
+# must run on a bare CPython (CI installs pytest alone).
+try:
+    import jax
+except ImportError:
+    jax = None
+else:
+    jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,124 @@
+"""Live conformance: drive a real `hpcw serve` binary with the Python
+client through the same submit → wait → fetch-output scenario as the Rust
+client test ``submit_wait_fetch_cycle``, plus the workflow, event and
+error-code paths.
+
+Needs the release binary (``HPCW_BIN`` env var, default
+``target/release/hpcw``); skips when it is absent so the pure-Python
+suite still runs anywhere. CI builds the binary first.
+"""
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import time
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from hpcw_client import ApiClient, ApiError, wire  # noqa: E402
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+BIN = pathlib.Path(os.environ.get("HPCW_BIN", REPO / "target" / "release" / "hpcw"))
+
+pytestmark = pytest.mark.skipif(
+    not BIN.exists(), reason=f"server binary not built ({BIN}); set HPCW_BIN"
+)
+
+
+@pytest.fixture()
+def server():
+    proc = subprocess.Popen(
+        [str(BIN), "serve", "--tiny"],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+        text=True,
+    )
+    try:
+        line = proc.stdout.readline()
+        m = re.search(r"http://([0-9.]+:[0-9]+)", line)
+        assert m, f"no address in server banner: {line!r}"
+        yield m.group(1)
+    finally:
+        proc.kill()
+        proc.wait(timeout=10)
+
+
+def test_submit_wait_fetch_cycle(server):
+    client = ApiClient(server)
+    job = client.submit(
+        nodes=6, user="sid", payload=wire.terasort(rows=1000, maps=2, reduces=3)
+    )
+    before_wait = client.request_count
+    doc = client.wait(job, timeout=60.0)
+    # Event-driven wait: one long-poll request, not O(time / 25 ms).
+    assert client.request_count - before_wait <= 3
+    assert doc["state"] == "DONE", doc.get("error")
+    result = doc["result"]
+    assert result["validated"] is True
+    assert result["records"] == 1000
+    # Fetch one output part through the API (step 6), absolute then
+    # relative to the output root.
+    data = client.read_output(job, result["output_files"][0])
+    assert len(data) % 100 == 0 and data
+    rel = result["output_files"][0][len(result["output_dir"]) + 1 :]
+    assert client.read_output(job, rel) == data
+    # Metrics exposed, including the API layer's own counters.
+    metrics = client.metrics()
+    assert "lsf.dispatched" in metrics
+    assert "api.requests" in metrics
+
+
+def test_path_traversal_rejected(server):
+    client = ApiClient(server)
+    job = client.submit(
+        nodes=2, user="sid", payload=wire.teragen(rows=100, maps=1, dir="/lustre/scratch/py-esc")
+    )
+    client.wait(job, timeout=60.0)
+    for bad in ("../../../etc/passwd", "/etc/passwd", ".."):
+        with pytest.raises(ApiError) as e:
+            client.read_output(job, bad)
+        assert e.value.code == "bad_path"
+
+
+def test_workflow_dag_and_events(server):
+    client = ApiClient(server)
+    spec = wire.workflow_spec(
+        "py-diamond",
+        "sid",
+        4,
+        [
+            wire.step("gen", wire.teragen(200, 1, "/lustre/scratch/py-gen")),
+            wire.step("left", wire.teragen(200, 1, "/lustre/scratch/py-left"), after=["gen"]),
+            wire.step("right", wire.teragen(200, 1, "/lustre/scratch/py-right"), after=["gen"]),
+            wire.step(
+                "join",
+                wire.teragen(200, 1, "/lustre/scratch/py-join"),
+                after=["left", "right"],
+            ),
+        ],
+    )
+    wf = client.submit_workflow(spec)
+    doc = client.wait_workflow(wf, timeout=120.0)
+    assert doc["complete"] is True
+    states = {s["name"]: s["state"] for s in doc["steps"]}
+    assert states == {"gen": "DONE", "left": "DONE", "right": "DONE", "join": "DONE"}
+    # The journal shows both middle steps RUNNING before either is DONE.
+    events = client.events(since=0)["events"]
+    mine = [e for e in events if e["kind"] == "step" and e["id"] == wf]
+    seq_of = lambda step, state: next(
+        e["seq"] for e in mine if e["step"] == step and e["state"] == state
+    )
+    assert seq_of("left", "RUNNING") < seq_of("right", "DONE")
+    assert seq_of("right", "RUNNING") < seq_of("left", "DONE")
+
+
+def test_unknown_job_and_bad_payload_codes(server):
+    client = ApiClient(server)
+    with pytest.raises(ApiError) as e:
+        client.status(999_999)
+    assert e.value.code == "not_found" and e.value.status == 404
+    with pytest.raises(ValueError):
+        client.submit(nodes=2, user="u", payload={"type": "nonsense"})

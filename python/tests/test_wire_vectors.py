@@ -1,0 +1,73 @@
+"""Wire-protocol conformance: the Python serializer must produce the
+byte-identical canonical string for every shared vector. The Rust side
+(`rust/src/api/wire.rs::tests::conformance_vectors_are_canonical`) replays
+the same file, so client and server agree on one schema, byte for byte.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from hpcw_client import wire
+
+VECTORS = pathlib.Path(__file__).parent / "vectors.json"
+
+
+def load_vectors():
+    with open(VECTORS, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def test_every_payload_vector_is_canonical():
+    vectors = load_vectors()
+    assert len(vectors["payloads"]) >= 5, "one vector per payload variant"
+    for case in vectors["payloads"]:
+        assert wire.dumps(wire.canonical_payload(case["doc"])) == case["canon"]
+
+
+def test_payload_vectors_cover_every_variant():
+    kinds = {c["doc"]["type"] for c in load_vectors()["payloads"]}
+    assert kinds == {"terasort", "teragen", "pig", "hive", "rsummary"}
+
+
+def test_workflow_vector_is_canonical():
+    wf = load_vectors()["workflow"]
+    assert wire.dumps(wire.canonical_workflow(wf["doc"])) == wf["canon"]
+
+
+def test_error_vector_is_canonical():
+    err = load_vectors()["error"]
+    assert wire.dumps(wire.canonical_error(err["doc"])) == err["canon"]
+    code, message = wire.parse_error(err["doc"])
+    assert code == "bad_path"
+    assert "escapes" in message
+
+
+def test_canonicalization_is_idempotent():
+    for case in load_vectors()["payloads"]:
+        once = wire.canonical_payload(case["doc"])
+        assert wire.canonical_payload(once) == once
+
+
+def test_unknown_payload_type_rejected():
+    with pytest.raises(ValueError, match="unknown payload type"):
+        wire.canonical_payload({"type": "nonsense"})
+
+
+def test_linear_workflow_builder_chains_steps():
+    wf = wire.linear_workflow(
+        "w", "u", 4, [wire.teragen(10, 1, "/a"), wire.teragen(10, 1, "/b")]
+    )
+    assert wf["steps"][0]["after"] == []
+    assert wf["steps"][1]["after"] == ["step0"]
+
+
+def test_state_tokens_match_rust():
+    assert wire.JOB_STATES == ("PEND", "RUN", "DONE", "EXIT", "KILLED")
+    assert wire.is_terminal("KILLED") and wire.is_terminal("DONE")
+    assert not wire.is_terminal("RUN")
+    # The old string-prefix hack must stay dead: display strings are not
+    # wire tokens.
+    assert "EXIT(kill)" not in wire.JOB_STATES
+    assert not wire.is_terminal("EXIT(kill)")

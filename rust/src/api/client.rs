@@ -1,84 +1,41 @@
-//! The Rust reference client for the HPC Wales API ("The user will be
+//! The Rust reference client for the HPC Wales v1 API ("The user will be
 //! provided with HPC Wales APIs in multiple languages ... job submission,
-//! obtaining job status and job termination"). The wire format is plain
-//! JSON over HTTP, so other-language clients are mechanical ports.
+//! obtaining job status and job termination"). The wire format is the
+//! typed schema in [`crate::api::wire`]; `python/hpcw_client/` is the
+//! mechanical port, held to the same conformance vectors.
+//!
+//! `wait`/`wait_workflow` are event-driven: they long-poll
+//! `GET /v1/...?wait_ms=N`, so a job that completes after time T costs
+//! O(state transitions) HTTP requests, not O(T / poll-interval).
 
 use crate::api::http::request;
 use crate::api::stack::AppPayload;
+use crate::api::wire::{
+    ErrorDoc, EventPage, JobDoc, JobsPage, SubmitRequest, WorkflowDoc, WorkflowSpec,
+};
 use crate::codec::json::Json;
 use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Longest single long-poll slice requested from the server.
+const WAIT_SLICE_MS: u64 = 10_000;
 
 /// Client handle for one API endpoint.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct ApiClient {
     pub addr: String,
+    /// HTTP requests issued by this handle (tests assert the O(transitions)
+    /// property of `wait` with it).
+    requests: AtomicU64,
 }
 
-/// A job status snapshot.
-#[derive(Debug, Clone)]
-pub struct JobStatus {
-    pub job: u64,
-    pub state: String,
-    pub result: Option<Json>,
-    pub error: Option<String>,
-}
-
-impl JobStatus {
-    pub fn is_terminal(&self) -> bool {
-        self.state.starts_with("DONE") || self.state.starts_with("EXIT")
-    }
-}
-
-fn payload_to_json(p: &AppPayload) -> Json {
-    match p {
-        AppPayload::Terasort {
-            rows,
-            maps,
-            reduces,
-            use_kernel,
-        } => Json::obj(vec![
-            ("type", Json::str("terasort")),
-            ("rows", Json::num(*rows as f64)),
-            ("maps", Json::num(*maps as f64)),
-            ("reduces", Json::num(*reduces as f64)),
-            ("use_kernel", Json::Bool(*use_kernel)),
-        ]),
-        AppPayload::Teragen { rows, maps, dir } => Json::obj(vec![
-            ("type", Json::str("teragen")),
-            ("rows", Json::num(*rows as f64)),
-            ("maps", Json::num(*maps as f64)),
-            ("dir", Json::str(&**dir)),
-        ]),
-        AppPayload::PigScript { script, reduces } => Json::obj(vec![
-            ("type", Json::str("pig")),
-            ("script", Json::str(&**script)),
-            ("reduces", Json::num(*reduces as f64)),
-        ]),
-        AppPayload::HiveQuery { sql, reduces } => Json::obj(vec![
-            ("type", Json::str("hive")),
-            ("sql", Json::str(&**sql)),
-            ("reduces", Json::num(*reduces as f64)),
-        ]),
-        AppPayload::RSummary {
-            input_dir,
-            output_dir,
-            fields,
-            delimiter,
-            columns,
-        } => Json::obj(vec![
-            ("type", Json::str("rsummary")),
-            ("input_dir", Json::str(&**input_dir)),
-            ("output_dir", Json::str(&**output_dir)),
-            (
-                "fields",
-                Json::Arr(fields.iter().map(|f| Json::str(&**f)).collect()),
-            ),
-            ("delimiter", Json::str(delimiter.to_string())),
-            (
-                "columns",
-                Json::Arr(columns.iter().map(|c| Json::str(&**c)).collect()),
-            ),
-        ]),
+impl Clone for ApiClient {
+    fn clone(&self) -> ApiClient {
+        ApiClient {
+            addr: self.addr.clone(),
+            requests: AtomicU64::new(0),
+        }
     }
 }
 
@@ -86,132 +43,171 @@ impl ApiClient {
     pub fn new(addr: &str) -> ApiClient {
         ApiClient {
             addr: addr.to_string(),
+            requests: AtomicU64::new(0),
         }
     }
 
+    /// HTTP requests issued so far by this handle.
+    pub fn request_count(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    fn call(&self, method: &str, path: &str, body: Option<&[u8]>) -> Result<(u16, Vec<u8>)> {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        request(&self.addr, method, path, body)
+    }
+
+    /// Parse a JSON response; `4xx`/`5xx` become errors carrying the
+    /// stable wire code, e.g. `api: HTTP 404 not_found: unknown job 9`.
     fn check(status: u16, body: &[u8]) -> Result<Json> {
         let text = std::str::from_utf8(body)
             .map_err(|_| Error::Api("non-utf8 response".into()))?;
         let json = Json::parse(text)?;
         if status >= 400 {
-            let msg = json
-                .get("error")
-                .and_then(Json::as_str)
-                .unwrap_or("unknown error");
-            return Err(Error::Api(format!("HTTP {status}: {msg}")));
+            return match ErrorDoc::from_json(&json) {
+                Ok(e) => Err(Error::Api(format!(
+                    "HTTP {status} {}: {}",
+                    e.code, e.message
+                ))),
+                Err(_) => Err(Error::Api(format!("HTTP {status}: {text}"))),
+            };
         }
         Ok(json)
     }
 
     /// Submit an application; returns the LSF job id.
     pub fn submit(&self, nodes: u32, user: &str, payload: &AppPayload) -> Result<u64> {
-        let body = Json::obj(vec![
-            ("nodes", Json::num(nodes as f64)),
-            ("user", Json::str(user)),
-            ("payload", payload_to_json(payload)),
-        ])
+        let body = SubmitRequest {
+            nodes,
+            user: user.to_string(),
+            payload: payload.clone(),
+        }
+        .to_json()
         .to_string();
-        let (status, resp) = request(&self.addr, "POST", "/jobs", Some(body.as_bytes()))?;
+        let (status, resp) = self.call("POST", "/v1/jobs", Some(body.as_bytes()))?;
         let json = Self::check(status, &resp)?;
         json.req_u64("job")
     }
 
-    /// Job status.
-    pub fn status(&self, job: u64) -> Result<JobStatus> {
-        let (status, resp) = request(&self.addr, "GET", &format!("/jobs/{job}"), None)?;
-        let json = Self::check(status, &resp)?;
-        Ok(JobStatus {
-            job,
-            state: json.req_str("state")?.to_string(),
-            result: json.get("result").cloned(),
-            error: json.get("error").and_then(Json::as_str).map(str::to_string),
-        })
+    /// Job status snapshot.
+    pub fn status(&self, job: u64) -> Result<JobDoc> {
+        let (status, resp) = self.call("GET", &format!("/v1/jobs/{job}"), None)?;
+        JobDoc::from_json(&Self::check(status, &resp)?)
     }
 
-    /// Poll until terminal or timeout.
-    pub fn wait(&self, job: u64, timeout: std::time::Duration) -> Result<JobStatus> {
+    /// One page of the job list.
+    pub fn list_jobs(&self, offset: u64, limit: u64) -> Result<JobsPage> {
+        let (status, resp) = self.call(
+            "GET",
+            &format!("/v1/jobs?offset={offset}&limit={limit}"),
+            None,
+        )?;
+        JobsPage::from_json(&Self::check(status, &resp)?)
+    }
+
+    /// Wait until terminal or timeout, long-polling the server.
+    pub fn wait(&self, job: u64, timeout: Duration) -> Result<JobDoc> {
         let deadline = std::time::Instant::now() + timeout;
         loop {
-            let st = self.status(job)?;
-            if st.is_terminal() {
-                return Ok(st);
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            let slice = (left.as_millis() as u64).min(WAIT_SLICE_MS);
+            let (status, resp) = self.call(
+                "GET",
+                &format!("/v1/jobs/{job}?wait_ms={slice}"),
+                None,
+            )?;
+            let doc = JobDoc::from_json(&Self::check(status, &resp)?)?;
+            if doc.is_terminal() {
+                return Ok(doc);
             }
-            if std::time::Instant::now() > deadline {
+            if std::time::Instant::now() >= deadline {
                 return Err(Error::Api(format!("timeout waiting for job {job}")));
             }
-            std::thread::sleep(std::time::Duration::from_millis(25));
         }
     }
 
     /// Terminate a job.
     pub fn kill(&self, job: u64) -> Result<()> {
-        let (status, resp) = request(&self.addr, "DELETE", &format!("/jobs/{job}"), None)?;
+        let (status, resp) = self.call("DELETE", &format!("/v1/jobs/{job}"), None)?;
         Self::check(status, &resp).map(|_| ())
     }
 
     /// Fetch an output file's bytes (step 6: data access via the API).
+    /// `path` may be absolute (must stay under the job's output root) or
+    /// relative to that root.
     pub fn read_output(&self, job: u64, path: &str) -> Result<Vec<u8>> {
-        let (status, resp) = request(
-            &self.addr,
+        let encoded: String = path
+            .bytes()
+            .map(|b| match b {
+                b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'/' | b'-' | b'_' | b'.' | b'~' => {
+                    (b as char).to_string()
+                }
+                _ => format!("%{b:02x}"),
+            })
+            .collect();
+        let (status, resp) = self.call(
             "GET",
-            &format!("/jobs/{job}/output?path={path}"),
+            &format!("/v1/jobs/{job}/output?path={encoded}"),
             None,
         )?;
         if status >= 400 {
+            Self::check(status, &resp)?;
             return Err(Error::Api(format!("HTTP {status} reading {path}")));
         }
         Ok(resp)
     }
 
-    /// Submit a workflow; returns the workflow id.
-    pub fn submit_workflow(
-        &self,
-        name: &str,
-        user: &str,
-        nodes: u32,
-        steps: &[AppPayload],
-    ) -> Result<u64> {
-        let body = Json::obj(vec![
-            ("name", Json::str(name)),
-            ("user", Json::str(user)),
-            ("nodes", Json::num(nodes as f64)),
-            (
-                "steps",
-                Json::Arr(steps.iter().map(payload_to_json).collect()),
-            ),
-        ])
-        .to_string();
-        let (status, resp) = request(&self.addr, "POST", "/workflows", Some(body.as_bytes()))?;
+    /// Submit a named-step DAG workflow; returns the workflow id.
+    pub fn submit_workflow(&self, spec: &WorkflowSpec) -> Result<u64> {
+        spec.validate()?;
+        let body = spec.to_json().to_string();
+        let (status, resp) = self.call("POST", "/v1/workflows", Some(body.as_bytes()))?;
         let json = Self::check(status, &resp)?;
         json.req_u64("workflow")
     }
 
     /// Workflow progress document.
-    pub fn workflow(&self, id: u64) -> Result<Json> {
-        let (status, resp) = request(&self.addr, "GET", &format!("/workflows/{id}"), None)?;
-        Self::check(status, &resp)
+    pub fn workflow(&self, id: u64) -> Result<WorkflowDoc> {
+        let (status, resp) = self.call("GET", &format!("/v1/workflows/{id}"), None)?;
+        WorkflowDoc::from_json(&Self::check(status, &resp)?)
     }
 
-    /// Wait for a workflow to complete (or abort).
-    pub fn wait_workflow(&self, id: u64, timeout: std::time::Duration) -> Result<Json> {
+    /// Wait for a workflow to complete or abort, long-polling the server.
+    pub fn wait_workflow(&self, id: u64, timeout: Duration) -> Result<WorkflowDoc> {
         let deadline = std::time::Instant::now() + timeout;
         loop {
-            let doc = self.workflow(id)?;
-            let complete = doc.get("complete").and_then(Json::as_bool).unwrap_or(false);
-            let aborted = doc.get("aborted").and_then(Json::as_bool).unwrap_or(false);
-            if complete || aborted {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            let slice = (left.as_millis() as u64).min(WAIT_SLICE_MS);
+            let (status, resp) = self.call(
+                "GET",
+                &format!("/v1/workflows/{id}?wait_ms={slice}"),
+                None,
+            )?;
+            let doc = WorkflowDoc::from_json(&Self::check(status, &resp)?)?;
+            if doc.is_terminal() {
                 return Ok(doc);
             }
-            if std::time::Instant::now() > deadline {
+            if std::time::Instant::now() >= deadline {
                 return Err(Error::Api(format!("timeout waiting for workflow {id}")));
             }
-            std::thread::sleep(std::time::Duration::from_millis(25));
         }
+    }
+
+    /// Events after `since` (the monotonic journal); pass `wait_ms > 0`
+    /// to long-poll when the journal is drained. Returns the page; feed
+    /// `page.next` back as the next `since`.
+    pub fn events(&self, since: u64, wait_ms: u64) -> Result<EventPage> {
+        let (status, resp) = self.call(
+            "GET",
+            &format!("/v1/events?since={since}&wait_ms={wait_ms}"),
+            None,
+        )?;
+        EventPage::from_json(&Self::check(status, &resp)?)
     }
 
     /// Raw metrics dump.
     pub fn metrics(&self) -> Result<String> {
-        let (status, resp) = request(&self.addr, "GET", "/metrics", None)?;
+        let (status, resp) = self.call("GET", "/v1/metrics", None)?;
         if status != 200 {
             return Err(Error::Api(format!("HTTP {status}")));
         }
@@ -224,7 +220,9 @@ mod tests {
     use super::*;
     use crate::api::server::ApiServer;
     use crate::api::stack::Stack;
+    use crate::api::wire::StepState;
     use crate::config::StackConfig;
+    use crate::scheduler::JobState;
     use std::time::Duration;
 
     fn server() -> (ApiServer, ApiClient) {
@@ -250,63 +248,149 @@ mod tests {
             )
             .unwrap();
         let st = client.wait(job, Duration::from_secs(30)).unwrap();
-        assert_eq!(st.state, "DONE", "error={:?}", st.error);
+        assert_eq!(st.state, JobState::Done, "error={:?}", st.error);
+        assert!(st.is_terminal());
         let result = st.result.unwrap();
-        assert_eq!(result.get("validated"), Some(&Json::Bool(true)));
-        assert_eq!(result.get("records").and_then(Json::as_u64), Some(1000));
+        assert!(result.validated);
+        assert_eq!(result.records, 1000);
+        assert_eq!(result.kind, "terasort");
         // Fetch one output part through the API.
-        let files = result.get("output_files").unwrap().as_arr().unwrap();
-        let first = files[0].as_str().unwrap();
-        let bytes = client.read_output(job, first).unwrap();
+        let bytes = client.read_output(job, &result.output_files[0]).unwrap();
         assert_eq!(bytes.len() % 100, 0);
-        // Metrics exposed.
+        // Relative paths resolve against the output root.
+        let rel = result.output_files[0]
+            .strip_prefix(&format!("{}/", result.output_dir))
+            .unwrap();
+        assert_eq!(client.read_output(job, rel).unwrap(), bytes);
+        // Metrics exposed, including the API layer's own counters.
         let m = client.metrics().unwrap();
         assert!(m.contains("lsf.dispatched"));
+        assert!(m.contains("api.requests"));
     }
 
     #[test]
-    fn status_of_unknown_job_is_error() {
+    fn status_of_unknown_job_is_not_found() {
         let (_server, client) = server();
         let err = client.status(99_999).unwrap_err();
-        assert!(err.to_string().contains("404") || err.to_string().contains("unknown"));
+        assert!(err.to_string().contains("not_found"), "{err}");
     }
 
     #[test]
-    fn bad_payload_rejected() {
+    fn bad_payload_rejected_with_stable_code() {
         let (_server, client) = server();
         let (status, body) = request(
             &client.addr,
             "POST",
-            "/jobs",
+            "/v1/jobs",
             Some(br#"{"nodes":2,"user":"u","payload":{"type":"nonsense"}}"#),
         )
         .unwrap();
         assert_eq!(status, 400);
-        assert!(String::from_utf8_lossy(&body).contains("unknown payload type"));
+        let doc = ErrorDoc::from_json(&Json::parse(std::str::from_utf8(&body).unwrap()).unwrap())
+            .unwrap();
+        assert_eq!(doc.code, "unknown_payload");
+        assert!(doc.message.contains("unknown payload type"));
     }
 
     #[test]
-    fn workflow_over_api() {
+    fn jobs_are_paginated() {
         let (_server, client) = server();
-        let steps = vec![
-            AppPayload::Teragen {
-                rows: 300,
-                maps: 2,
-                dir: "/lustre/scratch/api-wf-a".into(),
-            },
-            AppPayload::Teragen {
-                rows: 300,
-                maps: 2,
-                dir: "/lustre/scratch/api-wf-b".into(),
-            },
-        ];
-        let wf = client
-            .submit_workflow("two-step", "sid", 4, &steps)
-            .unwrap();
+        for i in 0..5 {
+            client
+                .submit(
+                    2,
+                    "pager",
+                    &AppPayload::Teragen {
+                        rows: 50,
+                        maps: 1,
+                        dir: format!("/lustre/scratch/page-{i}"),
+                    },
+                )
+                .unwrap();
+        }
+        let page = client.list_jobs(0, 2).unwrap();
+        assert_eq!(page.total, 5);
+        assert_eq!(page.jobs.len(), 2);
+        assert_eq!(page.offset, 0);
+        let rest = client.list_jobs(2, 500).unwrap();
+        assert_eq!(rest.jobs.len(), 3);
+        let first_ids: Vec<u64> = page.jobs.iter().map(|j| j.job).collect();
+        let rest_ids: Vec<u64> = rest.jobs.iter().map(|j| j.job).collect();
+        assert!(first_ids.iter().max().unwrap() < rest_ids.iter().min().unwrap());
+    }
+
+    #[test]
+    fn dag_workflow_over_api() {
+        let (_server, client) = server();
+        let spec = WorkflowSpec::linear(
+            "two-step",
+            "sid",
+            4,
+            vec![
+                AppPayload::Teragen {
+                    rows: 300,
+                    maps: 2,
+                    dir: "/lustre/scratch/api-wf-a".into(),
+                },
+                AppPayload::Teragen {
+                    rows: 300,
+                    maps: 2,
+                    dir: "/lustre/scratch/api-wf-b".into(),
+                },
+            ],
+        );
+        let wf = client.submit_workflow(&spec).unwrap();
         let doc = client.wait_workflow(wf, Duration::from_secs(30)).unwrap();
-        assert_eq!(doc.get("complete"), Some(&Json::Bool(true)));
-        let steps = doc.get("steps").unwrap().as_arr().unwrap();
-        assert_eq!(steps.len(), 2);
-        assert!(steps.iter().all(|s| s.get("state").and_then(Json::as_str) == Some("DONE")));
+        assert!(doc.complete, "doc={doc:?}");
+        assert_eq!(doc.steps.len(), 2);
+        assert!(doc.steps.iter().all(|s| s.state == StepState::Done));
+        assert!(doc.steps.iter().all(|s| s.job.is_some()));
+        assert_eq!(
+            doc.steps[1].output_dir.as_deref(),
+            Some("/lustre/scratch/api-wf-b")
+        );
+    }
+
+    #[test]
+    fn events_journal_reports_transitions() {
+        let (_server, client) = server();
+        let job = client
+            .submit(
+                2,
+                "ev",
+                &AppPayload::Teragen {
+                    rows: 100,
+                    maps: 1,
+                    dir: "/lustre/scratch/ev".into(),
+                },
+            )
+            .unwrap();
+        client.wait(job, Duration::from_secs(30)).unwrap();
+        let page = client.events(0, 0).unwrap();
+        assert!(page.next >= 1);
+        let done = page
+            .events
+            .iter()
+            .find(|e| e.kind == "job" && e.id == job && e.state == "DONE");
+        assert!(done.is_some(), "events={:?}", page.events);
+        // Seqs are strictly increasing.
+        let seqs: Vec<u64> = page.events.iter().map(|e| e.seq).collect();
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]));
+        // Draining from the cursor returns nothing new.
+        let empty = client.events(page.next, 0).unwrap();
+        assert!(empty.events.is_empty());
+    }
+
+    #[test]
+    fn legacy_paths_redirect_with_deprecation() {
+        let (_server, client) = server();
+        let (status, headers, body) =
+            crate::api::http::request_full(&client.addr, "GET", "/jobs", None).unwrap();
+        assert_eq!(status, 301);
+        assert_eq!(headers.get("location").map(String::as_str), Some("/v1/jobs"));
+        assert_eq!(headers.get("deprecation").map(String::as_str), Some("true"));
+        let doc = ErrorDoc::from_json(&Json::parse(std::str::from_utf8(&body).unwrap()).unwrap())
+            .unwrap();
+        assert_eq!(doc.code, "deprecated");
     }
 }

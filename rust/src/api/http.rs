@@ -3,6 +3,12 @@
 //! Enough protocol for a JSON REST API: request line, headers,
 //! Content-Length bodies, keep-alive off (Connection: close). Not a
 //! general web server — the SynfiniWay analog only needs request/response.
+//!
+//! The reader is hardened against adversarial input: request lines and
+//! header lines are length-bounded, header count is capped, bodies are
+//! capped, and every violation produces a clean parse error (which the
+//! server answers with a structured 4xx envelope) instead of unbounded
+//! allocation or a hung thread.
 
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
@@ -10,6 +16,18 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Longest accepted request line or header line, bytes.
+pub const MAX_LINE_BYTES: usize = 8 * 1024;
+/// Most headers accepted on one request.
+pub const MAX_HEADERS: usize = 64;
+/// Largest accepted request body, bytes.
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+/// Per-connection socket timeouts: a client that stalls mid-request or
+/// stops reading the response cannot pin a handler thread forever.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// A parsed request.
 #[derive(Debug)]
@@ -21,7 +39,7 @@ pub struct Request {
 }
 
 impl Request {
-    /// Path segments, e.g. `/jobs/42` → `["jobs", "42"]`.
+    /// Path segments, e.g. `/v1/jobs/42` → `["v1", "jobs", "42"]`.
     pub fn segments(&self) -> Vec<&str> {
         self.path
             .split('?')
@@ -32,9 +50,56 @@ impl Request {
             .collect()
     }
 
+    /// Path without the query string.
+    pub fn route(&self) -> &str {
+        self.path.split('?').next().unwrap_or("")
+    }
+
+    /// A query parameter, `%XX`-decoded. `/x?a=1&b=two` → `query_param("b") == Some("two")`.
+    pub fn query_param(&self, name: &str) -> Option<String> {
+        let query = self.path.split('?').nth(1)?;
+        query.split('&').find_map(|kv| {
+            let (k, v) = kv.split_once('=')?;
+            (k == name).then(|| percent_decode(v))
+        })
+    }
+
     pub fn body_text(&self) -> Result<&str> {
         std::str::from_utf8(&self.body).map_err(|_| Error::Api("non-utf8 body".into()))
     }
+}
+
+/// Decode `%XX` escapes and `+` (space); malformed escapes pass through.
+pub fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' if i + 2 < bytes.len() => {
+                let hex = |b: u8| (b as char).to_digit(16);
+                match (hex(bytes[i + 1]), hex(bytes[i + 2])) {
+                    (Some(h), Some(l)) => {
+                        out.push((h * 16 + l) as u8);
+                        i += 3;
+                    }
+                    _ => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
 }
 
 /// A response under construction.
@@ -42,6 +107,8 @@ impl Request {
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
+    /// Extra headers (`Location`, `Deprecation`, ...).
+    pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
 }
 
@@ -50,6 +117,7 @@ impl Response {
         Response {
             status,
             content_type: "application/json",
+            headers: Vec::new(),
             body: body.into_bytes(),
         }
     }
@@ -58,40 +126,84 @@ impl Response {
         Response {
             status,
             content_type: "application/octet-stream",
+            headers: Vec::new(),
             body,
         }
+    }
+
+    pub fn text(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "text/plain",
+            headers: Vec::new(),
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
     }
 
     fn status_text(&self) -> &'static str {
         match self.status {
             200 => "OK",
             201 => "Created",
+            301 => "Moved Permanently",
             400 => "Bad Request",
             404 => "Not Found",
             405 => "Method Not Allowed",
             409 => "Conflict",
+            413 => "Payload Too Large",
             _ => "Internal Server Error",
         }
     }
 
     fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
-        let head = format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
             self.status,
             self.status_text(),
             self.content_type,
             self.body.len()
         );
+        for (k, v) in &self.headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
         stream.write_all(head.as_bytes())?;
         stream.write_all(&self.body)
     }
 }
 
-/// Read one request from a stream.
+/// Read one `\n`-terminated line, at most `MAX_LINE_BYTES` long. A closed
+/// connection before any byte yields an "empty request" error; a line with
+/// no terminator within the bound is "line too long" / "truncated".
+fn read_line_bounded(reader: &mut impl BufRead, what: &str) -> Result<String> {
+    let mut buf = Vec::new();
+    let mut limited = reader.take(MAX_LINE_BYTES as u64 + 1);
+    limited.read_until(b'\n', &mut buf)?;
+    if buf.len() > MAX_LINE_BYTES {
+        return Err(Error::Api(format!("{what} line exceeds {MAX_LINE_BYTES} bytes")));
+    }
+    if !buf.ends_with(b"\n") && !buf.is_empty() {
+        return Err(Error::Api(format!("truncated {what} line")));
+    }
+    String::from_utf8(buf).map_err(|_| Error::Api(format!("non-utf8 {what} line")))
+}
+
+/// Read one request from a stream, enforcing the protocol bounds.
 pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
+    let line = read_line_bounded(&mut reader, "request")?;
+    if line.trim().is_empty() {
+        return Err(Error::Api("empty request line".into()));
+    }
     let mut parts = line.split_whitespace();
     let method = parts
         .next()
@@ -104,11 +216,13 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
 
     let mut headers = BTreeMap::new();
     loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
+        let h = read_line_bounded(&mut reader, "header")?;
         let h = h.trim_end();
         if h.is_empty() {
             break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(Error::Api(format!("more than {MAX_HEADERS} headers")));
         }
         if let Some((k, v)) = h.split_once(':') {
             headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
@@ -118,6 +232,11 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
         .get("content-length")
         .and_then(|v| v.parse().ok())
         .unwrap_or(0);
+    if len > MAX_BODY_BYTES {
+        return Err(Error::Api(format!(
+            "body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+        )));
+    }
     let mut body = vec![0u8; len];
     if len > 0 {
         reader.read_exact(&mut body)?;
@@ -128,6 +247,22 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
         headers,
         body,
     })
+}
+
+/// The structured 4xx envelope for requests that never reached a handler.
+/// Mirrors `wire::ErrorDoc` (kept literal here: the HTTP layer stays
+/// schema-agnostic).
+fn parse_error_response(e: &Error) -> Response {
+    let msg = e.to_string().replace('\\', "\\\\").replace('"', "'");
+    let (status, code) = if msg.contains("exceeds the") {
+        (413, "too_large")
+    } else {
+        (400, "bad_request")
+    };
+    Response::json(
+        status,
+        format!("{{\"error\":{{\"code\":\"{code}\",\"message\":\"{msg}\"}}}}"),
+    )
 }
 
 /// Serve until `stop` flips; each connection handled on its own thread.
@@ -147,10 +282,7 @@ pub fn serve(
                     stream.set_nonblocking(false).ok();
                     let response = match read_request(&mut stream) {
                         Ok(req) => handler(req),
-                        Err(e) => Response::json(
-                            400,
-                            format!("{{\"error\":\"{}\"}}", e.to_string().replace('"', "'")),
-                        ),
+                        Err(e) => parse_error_response(&e),
                     };
                     let _ = response.write_to(&mut stream);
                 });
@@ -170,6 +302,18 @@ pub fn request(
     path: &str,
     body: Option<&[u8]>,
 ) -> Result<(u16, Vec<u8>)> {
+    let (status, _headers, body) = request_full(addr, method, path, body)?;
+    Ok((status, body))
+}
+
+/// Blocking client request; returns (status, headers, body). Header names
+/// are lower-cased.
+pub fn request_full(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+) -> Result<(u16, BTreeMap<String, String>, Vec<u8>)> {
     let mut stream = TcpStream::connect(addr)
         .map_err(|e| Error::Api(format!("connect {addr}: {e}")))?;
     let body = body.unwrap_or(&[]);
@@ -188,6 +332,7 @@ pub fn request(
         .nth(1)
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| Error::Api(format!("bad status line '{status_line}'")))?;
+    let mut headers = BTreeMap::new();
     let mut len = 0usize;
     loop {
         let mut h = String::new();
@@ -197,19 +342,33 @@ pub fn request(
             break;
         }
         if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                len = v.trim().parse().unwrap_or(0);
+            let k = k.trim().to_ascii_lowercase();
+            let v = v.trim().to_string();
+            if k == "content-length" {
+                len = v.parse().unwrap_or(0);
             }
+            headers.insert(k, v);
         }
     }
     let mut body = vec![0u8; len];
     reader.read_exact(&mut body)?;
-    Ok((status, body))
+    Ok((status, headers, body))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn echo_server() -> (String, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handler: Arc<dyn Fn(Request) -> Response + Send + Sync> =
+            Arc::new(|req: Request| Response::json(200, String::from_utf8_lossy(&req.body).into_owned()));
+        let server = std::thread::spawn(move || serve(listener, stop2, handler));
+        (addr, stop, server)
+    }
 
     #[test]
     fn round_trip_over_loopback() {
@@ -242,5 +401,120 @@ mod tests {
             body: vec![],
         };
         assert_eq!(r.segments(), vec!["jobs", "7", "output"]);
+        assert_eq!(r.route(), "/jobs/7/output");
+        assert_eq!(r.query_param("path").as_deref(), Some("/x"));
+        assert_eq!(r.query_param("nope"), None);
+    }
+
+    #[test]
+    fn query_params_percent_decode() {
+        let r = Request {
+            method: "GET".into(),
+            path: "/jobs/7/output?path=%2Flustre%2Fa%20b&x=1+2".into(),
+            headers: BTreeMap::new(),
+            body: vec![],
+        };
+        assert_eq!(r.query_param("path").as_deref(), Some("/lustre/a b"));
+        assert_eq!(r.query_param("x").as_deref(), Some("1 2"));
+        assert_eq!(percent_decode("100%"), "100%");
+        assert_eq!(percent_decode("%zz"), "%zz");
+    }
+
+    #[test]
+    fn extra_headers_are_written() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handler: Arc<dyn Fn(Request) -> Response + Send + Sync> = Arc::new(|_req| {
+            Response::json(301, "{}".into())
+                .with_header("Location", "/v1/jobs")
+                .with_header("Deprecation", "true")
+        });
+        let server = std::thread::spawn(move || serve(listener, stop2, handler));
+        let (status, headers, _body) = request_full(&addr, "GET", "/jobs", None).unwrap();
+        assert_eq!(status, 301);
+        assert_eq!(headers.get("location").map(String::as_str), Some("/v1/jobs"));
+        assert_eq!(headers.get("deprecation").map(String::as_str), Some("true"));
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn truncated_request_line_answered_cleanly() {
+        let (addr, stop, server) = echo_server();
+        // A client that sends half a request line and hangs up.
+        {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(b"GET /half").unwrap();
+        } // dropped: connection closed with no newline
+        // The server must still serve the next client.
+        let (status, body) = request(&addr, "POST", "/x", Some(b"ok")).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"ok");
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_request_line_rejected() {
+        let (addr, stop, server) = echo_server();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let huge = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_LINE_BYTES * 2));
+        s.write_all(huge.as_bytes()).unwrap();
+        let mut reader = BufReader::new(s);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("400"), "got {line}");
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn too_many_headers_rejected() {
+        let (addr, stop, server) = echo_server();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut req = String::from("GET /x HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADERS + 8) {
+            req.push_str(&format!("X-Flood-{i}: v\r\n"));
+        }
+        req.push_str("\r\n");
+        s.write_all(req.as_bytes()).unwrap();
+        let mut reader = BufReader::new(s);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("400"), "got {line}");
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_body_rejected_without_allocation() {
+        let (addr, stop, server) = echo_server();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        // Claim a 1 GiB body; never send it. The server must refuse from
+        // the header alone (413), not allocate-and-wait.
+        let req = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            1u64 << 30
+        );
+        s.write_all(req.as_bytes()).unwrap();
+        let mut reader = BufReader::new(s);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("413"), "got {line}");
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn non_utf8_body_is_reportable() {
+        let r = Request {
+            method: "POST".into(),
+            path: "/x".into(),
+            headers: BTreeMap::new(),
+            body: vec![0xff, 0xfe, 0x00],
+        };
+        assert!(r.body_text().is_err());
     }
 }

@@ -1,24 +1,37 @@
-//! The access layer: the full HPC Wales submission flow (§III Fig 1).
+//! The access layer: the full HPC Wales submission flow (§III Fig 1),
+//! exposed as a versioned, event-capable REST API. The endpoint-by-
+//! endpoint contract lives in `docs/API.md`.
 //!
-//! * [`stack`] — the in-process orchestrator: LSF → wrapper → YARN → app →
-//!   teardown, the end-to-end flow of steps 3–5.
-//! * [`http`] — a minimal HTTP/1.1 server on `std::net` (no tokio in the
-//!   vendored environment).
-//! * [`server`] — the REST surface (steps 1–2 and 6: submit / status /
-//!   terminate / data access without SSH).
-//! * [`synfiniway`] — workflow definitions: named multi-step flows, the
-//!   SynfiniWay analog.
+//! * [`wire`] — the single source of truth for the v1 wire protocol:
+//!   every request/response document as a typed struct with
+//!   `to_json`/`from_json`, stable error codes, and the conformance
+//!   vectors shared with the Python client.
+//! * [`stack`] — the in-process orchestrator: LSF → wrapper → YARN →
+//!   app → teardown, the end-to-end flow of steps 3–5.
+//! * [`http`] — a minimal, hardened HTTP/1.1 server on `std::net` (no
+//!   tokio in the vendored environment).
+//! * [`server`] — the `/v1` REST surface (steps 1–2 and 6: submit /
+//!   status / terminate / data access without SSH), long-poll waits and
+//!   the monotonic event journal.
+//! * [`synfiniway`] — workflow execution: named-step DAGs with retry
+//!   policies and `${steps.<name>.output_dir}` chaining, the SynfiniWay
+//!   analog.
 //! * [`client`] — the Rust client API ("APIs in multiple languages" —
-//!   this is the reference implementation; the wire format is plain JSON
-//!   over HTTP so other languages follow).
+//!   the reference implementation; `python/hpcw_client/` is the Python
+//!   port, pinned to the same `python/tests/vectors.json`).
 
 pub mod client;
 pub mod http;
 pub mod server;
 pub mod stack;
 pub mod synfiniway;
+pub mod wire;
 
 pub use client::ApiClient;
 pub use server::ApiServer;
 pub use stack::{AppPayload, AppResult, Stack};
 pub use synfiniway::{Workflow, WorkflowRun};
+pub use wire::{
+    ErrorDoc, EventDoc, EventPage, JobDoc, JobsPage, ResultDoc, StepSpec, StepState,
+    SubmitRequest, WorkflowDoc, WorkflowSpec,
+};

@@ -1,73 +1,211 @@
-//! The REST surface: submit / status / terminate / data access (§III
-//! steps 1, 2 and 6 — "the traditional means of HPC access do not become a
-//! bottleneck").
+//! The versioned REST surface (§III steps 1, 2 and 6 — "the traditional
+//! means of HPC access do not become a bottleneck").
 //!
-//! Endpoints:
-//! * `POST /jobs` `{nodes, user, payload}` → `{job}`
-//! * `GET /jobs` → list; `GET /jobs/{id}` → state + result
-//! * `DELETE /jobs/{id}` → bkill
-//! * `GET /jobs/{id}/output?path=...` → raw bytes off Lustre
-//! * `POST /workflows` → SynfiniWay-style multi-step flow
-//! * `GET /workflows/{id}` → per-step progress
-//! * `GET /metrics` → text metrics dump
+//! All routes live under `/v1` and speak the typed wire schema from
+//! [`crate::api::wire`] — see `docs/API.md` for the full spec:
 //!
-//! A pump thread drives `Stack::tick` and workflow advancement; handlers
-//! only mutate queue state, so requests stay fast.
+//! * `POST /v1/jobs` `SubmitRequest` → `{job}`
+//! * `GET /v1/jobs?offset=&limit=` → `JobsPage`
+//! * `GET /v1/jobs/{id}[?wait_ms=N]` → `JobDoc` (long-poll until terminal)
+//! * `DELETE /v1/jobs/{id}` → bkill
+//! * `GET /v1/jobs/{id}/output?path=...` → raw bytes, confined to the
+//!   job's output root (`bad_path` on traversal attempts)
+//! * `POST /v1/workflows` `WorkflowSpec` (named-step DAG) → `{workflow}`
+//! * `GET /v1/workflows/{id}[?wait_ms=N]` → `WorkflowDoc`
+//! * `GET /v1/events?since=seq[&wait_ms=N]` → `EventPage`, the monotonic
+//!   journal of job/workflow/step transitions
+//! * `GET /v1/metrics` → text metrics dump
+//!
+//! Unversioned legacy paths answer `301 Moved Permanently` with
+//! `Location: /v1/...` and a `Deprecation: true` header.
+//!
+//! A pump thread drives `Stack::tick` and workflow advancement. It is
+//! event-driven: handlers only mutate queue state and wake the pump via a
+//! condvar (no fixed-interval sleep), and the pump publishes every state
+//! transition to the event journal, which in turn wakes long-pollers —
+//! `wait` costs O(transitions) requests instead of O(time/poll-interval).
 
 use crate::api::http::{self, Request, Response};
-use crate::api::stack::{AppPayload, AppResult, Stack};
-use crate::api::synfiniway::{Workflow, WorkflowRun};
+use crate::api::stack::Stack;
+use crate::api::synfiniway::WorkflowRun;
+use crate::api::wire::{
+    self, code, ErrorDoc, EventDoc, EventPage, JobDoc, JobsPage, ResultDoc, SubmitRequest,
+    WorkflowSpec,
+};
 use crate::codec::json::Json;
-use crate::error::{Error, Result};
+use crate::error::Error;
+use crate::metrics::Metrics;
 use crate::scheduler::JobState;
 use crate::util::ids::LsfJobId;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Longest server-side long-poll slice; clients re-arm for longer waits.
+const MAX_WAIT_MS: u64 = 10_000;
+/// Event journal retention; older events are dropped (the `next` cursor
+/// lets clients detect and resync).
+const EVENT_CAP: usize = 4096;
+/// Pump fallback wakeup when idle (safety net only; submissions wake it).
+const IDLE_TICK: Duration = Duration::from_millis(250);
+
+/// A condvar-guarded generation counter: `notify` bumps it, `wait_past`
+/// blocks until it moves past a seen value or the deadline passes.
+struct Signal {
+    gen: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Signal {
+    fn new() -> Signal {
+        Signal {
+            gen: Mutex::new(0),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn notify(&self) {
+        *self.gen.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+
+    /// Wait until the generation exceeds `seen` or `timeout` elapses;
+    /// returns the current generation.
+    fn wait_past(&self, seen: u64, timeout: Duration) -> u64 {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.gen.lock().unwrap();
+        while *g <= seen {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, left).unwrap();
+            g = guard;
+        }
+        *g
+    }
+}
+
+/// The monotonic event journal plus its change condvar.
+struct EventBus {
+    inner: Mutex<EventLog>,
+    cv: Condvar,
+    metrics: Arc<Metrics>,
+}
+
+struct EventLog {
+    events: VecDeque<EventDoc>,
+    next_seq: u64,
+}
+
+impl EventBus {
+    fn new(metrics: Arc<Metrics>) -> EventBus {
+        EventBus {
+            inner: Mutex::new(EventLog {
+                events: VecDeque::new(),
+                next_seq: 1,
+            }),
+            cv: Condvar::new(),
+            metrics,
+        }
+    }
+
+    fn emit(&self, kind: &str, id: u64, state: String, step: Option<String>) {
+        let mut log = self.inner.lock().unwrap();
+        let seq = log.next_seq;
+        log.next_seq += 1;
+        log.events.push_back(EventDoc {
+            seq,
+            kind: kind.to_string(),
+            id,
+            state,
+            step,
+        });
+        while log.events.len() > EVENT_CAP {
+            log.events.pop_front();
+        }
+        drop(log);
+        self.metrics.inc("api.events_emitted", 1);
+        self.cv.notify_all();
+    }
+
+    /// Events with `seq > since` plus the cursor for the next call.
+    fn since(&self, since: u64) -> EventPage {
+        let log = self.inner.lock().unwrap();
+        let events: Vec<EventDoc> = log
+            .events
+            .iter()
+            .filter(|e| e.seq > since)
+            .cloned()
+            .collect();
+        let next = events.last().map(|e| e.seq).unwrap_or(since);
+        EventPage { events, next }
+    }
+
+    /// Highest published sequence number.
+    fn seq(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq - 1
+    }
+
+    /// Block until any event lands past `seen` or the deadline passes.
+    fn wait_change(&self, seen: u64, deadline: Instant, stop: &AtomicBool) {
+        let mut log = self.inner.lock().unwrap();
+        while log.next_seq - 1 <= seen && !stop.load(Ordering::Relaxed) {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return;
+            }
+            let (guard, _) = self.cv.wait_timeout(log, left.min(Duration::from_millis(500))).unwrap();
+            log = guard;
+        }
+    }
+}
 
 /// Shared server state.
 struct State {
     stack: Mutex<Stack>,
     workflows: Mutex<Vec<WorkflowRun>>,
+    events: EventBus,
+    /// Wakes the pump on submissions / kills.
+    work: Signal,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
 }
 
 /// The API server handle.
 pub struct ApiServer {
     pub addr: String,
     stop: Arc<AtomicBool>,
+    state: Arc<State>,
     serve_thread: Option<std::thread::JoinHandle<()>>,
     pump_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ApiServer {
     /// Bind on an ephemeral loopback port and start serving `stack`.
-    pub fn start(stack: Stack) -> Result<ApiServer> {
+    pub fn start(stack: Stack) -> crate::error::Result<ApiServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?.to_string();
+        let metrics = Arc::clone(&stack.metrics);
+        let stop = Arc::new(AtomicBool::new(false));
         let state = Arc::new(State {
             stack: Mutex::new(stack),
             workflows: Mutex::new(Vec::new()),
+            events: EventBus::new(Arc::clone(&metrics)),
+            work: Signal::new(),
+            metrics,
+            stop: Arc::clone(&stop),
         });
-        let stop = Arc::new(AtomicBool::new(false));
 
-        // Pump: dispatch cycles + workflow advancement.
+        // Pump: dispatch cycles + workflow advancement + event publishing.
         let pump_state = Arc::clone(&state);
         let pump_stop = Arc::clone(&stop);
         let pump_thread = std::thread::Builder::new()
             .name("hpcw-api-pump".into())
-            .spawn(move || {
-                while !pump_stop.load(Ordering::Relaxed) {
-                    {
-                        let mut stack = pump_state.stack.lock().unwrap();
-                        stack.tick();
-                        let mut wfs = pump_state.workflows.lock().unwrap();
-                        for wf in wfs.iter_mut() {
-                            wf.advance(&mut stack);
-                        }
-                    }
-                    std::thread::sleep(std::time::Duration::from_millis(20));
-                }
-            })
+            .spawn(move || pump(pump_state, pump_stop))
             .map_err(|e| Error::Api(format!("spawn pump: {e}")))?;
 
         let handler_state = Arc::clone(&state);
@@ -82,6 +220,7 @@ impl ApiServer {
         Ok(ApiServer {
             addr,
             stop,
+            state,
             serve_thread: Some(serve_thread),
             pump_thread: Some(pump_thread),
         })
@@ -93,6 +232,9 @@ impl ApiServer {
 
     fn stop_now(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        // Wake the pump and every long-poller so they observe `stop`.
+        self.state.work.notify();
+        self.state.events.cv.notify_all();
         if let Some(t) = self.serve_thread.take() {
             let _ = t.join();
         }
@@ -108,228 +250,350 @@ impl Drop for ApiServer {
     }
 }
 
+/// The event-driven pump. While jobs or workflows are live it runs
+/// dispatch cycles back to back (each `tick` performs real work in Real
+/// mode); when everything is terminal it sleeps on the `work` condvar
+/// until a handler submits or kills something.
+fn pump(state: Arc<State>, stop: Arc<AtomicBool>) {
+    let mut known: BTreeMap<u64, JobState> = BTreeMap::new();
+    let mut work_gen = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        let active = {
+            let mut stack = state.stack.lock().unwrap();
+            stack.tick();
+            let mut wfs = state.workflows.lock().unwrap();
+            for wf in wfs.iter_mut() {
+                let before_terminal = wf.is_terminal();
+                for t in wf.advance(&mut stack) {
+                    state.events.emit(
+                        "step",
+                        wf.id,
+                        t.state.as_wire().to_string(),
+                        Some(t.step),
+                    );
+                }
+                if !before_terminal && wf.is_terminal() {
+                    let state_str = if wf.is_complete() { "COMPLETE" } else { "ABORTED" };
+                    state.events.emit("workflow", wf.id, state_str.to_string(), None);
+                }
+            }
+            // Publish observed job transitions.
+            for j in stack.lsf.jobs() {
+                let id = j.id.0;
+                if known.get(&id) != Some(&j.state) {
+                    known.insert(id, j.state);
+                    state
+                        .events
+                        .emit("job", id, wire::job_state_to_wire(j.state).to_string(), None);
+                }
+            }
+            stack.has_active_jobs() || wfs.iter().any(|w| !w.is_terminal())
+        };
+        if !active {
+            work_gen = state.work.wait_past(work_gen, IDLE_TICK);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routing
+// ---------------------------------------------------------------------------
+
+type HandlerResult = std::result::Result<Response, ErrorDoc>;
+
+fn error_response(e: &ErrorDoc) -> Response {
+    Response::json(e.http_status(), e.to_json().to_string())
+}
+
 fn route(state: &State, req: Request) -> Response {
+    let t0 = Instant::now();
+    state.metrics.inc("api.requests", 1);
     let segs = req.segments();
-    let result = match (req.method.as_str(), segs.as_slice()) {
-        ("POST", ["jobs"]) => post_job(state, &req),
-        ("GET", ["jobs"]) => list_jobs(state),
-        ("GET", ["jobs", id]) => get_job(state, id),
-        ("DELETE", ["jobs", id]) => delete_job(state, id),
-        ("GET", ["jobs", _id, "output"]) => get_output(state, &req),
-        ("POST", ["workflows"]) => post_workflow(state, &req),
-        ("GET", ["workflows", id]) => get_workflow(state, id),
-        ("GET", ["metrics"]) => {
-            let stack = state.stack.lock().unwrap();
-            return Response {
-                status: 200,
-                content_type: "text/plain",
-                body: stack.metrics.render().into_bytes(),
-            };
+    let (endpoint, result): (&str, HandlerResult) = match (req.method.as_str(), segs.as_slice()) {
+        ("POST", ["v1", "jobs"]) => ("post_job", post_job(state, &req)),
+        ("GET", ["v1", "jobs"]) => ("list_jobs", list_jobs(state, &req)),
+        ("GET", ["v1", "jobs", id]) => ("get_job", get_job(state, &req, id)),
+        ("DELETE", ["v1", "jobs", id]) => ("delete_job", delete_job(state, id)),
+        ("GET", ["v1", "jobs", id, "output"]) => ("get_output", get_output(state, &req, id)),
+        ("POST", ["v1", "workflows"]) => ("post_workflow", post_workflow(state, &req)),
+        ("GET", ["v1", "workflows", id]) => ("get_workflow", get_workflow(state, &req, id)),
+        ("GET", ["v1", "events"]) => ("get_events", get_events(state, &req)),
+        ("GET", ["v1", "metrics"]) => ("get_metrics", get_metrics(state)),
+        // Unversioned legacy paths: permanent redirect + Deprecation.
+        (_, ["jobs", ..]) | (_, ["workflows", ..]) | (_, ["metrics"]) => {
+            ("legacy", legacy_redirect(&req))
         }
-        _ => Err(Error::Api(format!("no route {} {}", req.method, req.path))),
+        _ => (
+            "unrouted",
+            Err(ErrorDoc::not_found(format!(
+                "no route {} {}",
+                req.method, req.path
+            ))),
+        ),
     };
-    match result {
+    let response = match result {
         Ok(resp) => resp,
-        Err(e) => {
-            let status = match e {
-                Error::Api(ref m) if m.starts_with("no route") => 404,
-                Error::Api(ref m) if m.contains("unknown job") => 404,
-                _ => 400,
-            };
-            Response::json(
-                status,
-                Json::obj(vec![
-                    ("error", Json::str(e.to_string())),
-                    ("kind", Json::str(e.kind())),
-                ])
-                .to_string(),
-            )
+        Err(e) => error_response(&e),
+    };
+    state.metrics.inc(&format!("api.requests.{endpoint}"), 1);
+    state.metrics.inc(
+        &format!("api.latency_us.{endpoint}"),
+        t0.elapsed().as_micros() as u64,
+    );
+    response
+}
+
+fn legacy_redirect(req: &Request) -> HandlerResult {
+    let target = format!("/v1{}", req.path);
+    Ok(Response::json(
+        301,
+        ErrorDoc::new(
+            code::DEPRECATED,
+            format!("unversioned path is deprecated; use {target}"),
+        )
+        .to_json()
+        .to_string(),
+    )
+    .with_header("Location", &target)
+    .with_header("Deprecation", "true"))
+}
+
+fn bad_request(e: &Error) -> ErrorDoc {
+    match e {
+        Error::Api(m) if m.contains("unknown payload type") => {
+            ErrorDoc::new(code::UNKNOWN_PAYLOAD, m.clone())
         }
+        Error::Codec(m) if m.contains("byte") || m.contains("unterminated") => {
+            ErrorDoc::new(code::BAD_JSON, m.clone())
+        }
+        _ => ErrorDoc::from(e),
     }
 }
 
-/// Parse an [`AppPayload`] from its JSON form.
-pub fn payload_from_json(j: &Json) -> Result<AppPayload> {
-    match j.req_str("type")? {
-        "terasort" => Ok(AppPayload::Terasort {
-            rows: j.req_u64("rows")?,
-            maps: j.req_u64("maps")?,
-            reduces: j.req_u64("reduces")? as u32,
-            use_kernel: j.get("use_kernel").and_then(Json::as_bool).unwrap_or(false),
-        }),
-        "teragen" => Ok(AppPayload::Teragen {
-            rows: j.req_u64("rows")?,
-            maps: j.req_u64("maps")?,
-            dir: j.req_str("dir")?.to_string(),
-        }),
-        "pig" => Ok(AppPayload::PigScript {
-            script: j.req_str("script")?.to_string(),
-            reduces: j.req_u64("reduces")? as u32,
-        }),
-        "hive" => Ok(AppPayload::HiveQuery {
-            sql: j.req_str("sql")?.to_string(),
-            reduces: j.req_u64("reduces")? as u32,
-        }),
-        "rsummary" => {
-            let strs = |key: &str| -> Result<Vec<String>> {
-                j.get(key)
-                    .and_then(Json::as_arr)
-                    .map(|a| {
-                        a.iter()
-                            .filter_map(Json::as_str)
-                            .map(str::to_string)
-                            .collect()
-                    })
-                    .ok_or_else(|| Error::Codec(format!("missing array '{key}'")))
-            };
-            Ok(AppPayload::RSummary {
-                input_dir: j.req_str("input_dir")?.to_string(),
-                output_dir: j.req_str("output_dir")?.to_string(),
-                fields: strs("fields")?,
-                delimiter: j
-                    .get("delimiter")
-                    .and_then(Json::as_str)
-                    .and_then(|s| s.chars().next())
-                    .unwrap_or(','),
-                columns: strs("columns")?,
-            })
-        }
-        other => Err(Error::Api(format!("unknown payload type '{other}'"))),
-    }
+fn parse_body(req: &Request) -> std::result::Result<Json, ErrorDoc> {
+    let text = req
+        .body_text()
+        .map_err(|_| ErrorDoc::new(code::BAD_JSON, "body is not valid UTF-8"))?;
+    Json::parse(text).map_err(|e| ErrorDoc::new(code::BAD_JSON, e.to_string()))
 }
 
-/// Serialize an [`AppResult`].
-pub fn result_to_json(r: &AppResult) -> Json {
-    Json::obj(vec![
-        ("kind", Json::str(r.kind)),
-        ("output_dir", Json::str(&*r.output_dir)),
-        (
-            "output_files",
-            Json::Arr(r.output_files.iter().map(|f| Json::str(&**f)).collect()),
-        ),
-        ("records", Json::num(r.records as f64)),
-        ("validated", Json::Bool(r.validated)),
-        ("wall_ms", Json::num(r.wall.as_millis() as f64)),
-        (
-            "counters",
-            Json::Obj(
-                r.counters
-                    .iter()
-                    .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
-                    .collect(),
-            ),
-        ),
-    ])
-}
-
-fn job_state_str(s: JobState) -> &'static str {
-    s.lsf_name()
-}
-
-fn parse_job_id(text: &str) -> Result<LsfJobId> {
+fn parse_job_id(text: &str) -> std::result::Result<LsfJobId, ErrorDoc> {
     text.parse::<u64>()
         .map(LsfJobId)
-        .map_err(|_| Error::Api(format!("bad job id '{text}'")))
+        .map_err(|_| ErrorDoc::new(code::BAD_REQUEST, format!("bad job id '{text}'")))
 }
 
-fn post_job(state: &State, req: &Request) -> Result<Response> {
-    let j = Json::parse(req.body_text()?)?;
-    let nodes = j.req_u64("nodes")? as u32;
-    let user = j.req_str("user")?.to_string();
-    let payload = payload_from_json(
-        j.get("payload")
-            .ok_or_else(|| Error::Api("missing payload".into()))?,
-    )?;
+fn wait_ms(req: &Request) -> u64 {
+    req.query_param("wait_ms")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+        .min(MAX_WAIT_MS)
+}
+
+/// Shared long-poll loop: re-`snapshot` until `done`, the deadline, or
+/// shutdown. The event cursor is captured BEFORE each snapshot so a
+/// transition landing in between re-wakes the wait instead of being lost.
+fn long_poll<T>(
+    state: &State,
+    deadline: Instant,
+    snapshot: impl Fn() -> std::result::Result<T, ErrorDoc>,
+    done: impl Fn(&T) -> bool,
+) -> std::result::Result<T, ErrorDoc> {
+    let mut waited = false;
+    loop {
+        let seen = state.events.seq();
+        let doc = snapshot()?;
+        if done(&doc)
+            || Instant::now() >= deadline
+            || state.stop.load(Ordering::Relaxed)
+        {
+            return Ok(doc);
+        }
+        if !waited {
+            state.metrics.inc("api.long_poll_waits", 1);
+            waited = true;
+        }
+        state.events.wait_change(seen, deadline, &state.stop);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Handlers
+// ---------------------------------------------------------------------------
+
+fn post_job(state: &State, req: &Request) -> HandlerResult {
+    let j = parse_body(req)?;
+    let submit = SubmitRequest::from_json(&j).map_err(|e| bad_request(&e))?;
     let mut stack = state.stack.lock().unwrap();
-    let id = stack.submit(nodes, &user, payload)?;
+    let id = stack
+        .submit(submit.nodes, &submit.user, submit.payload)
+        .map_err(|e| bad_request(&e))?;
+    drop(stack);
+    state.work.notify();
     Ok(Response::json(
         201,
         Json::obj(vec![("job", Json::num(id.0 as f64))]).to_string(),
     ))
 }
 
-fn list_jobs(state: &State) -> Result<Response> {
-    let stack = state.stack.lock().unwrap();
-    let jobs: Vec<Json> = stack
-        .jobs()
-        .into_iter()
-        .map(|(id, kind, s)| {
-            Json::obj(vec![
-                ("job", Json::num(id.0 as f64)),
-                ("kind", Json::str(kind)),
-                ("state", Json::str(job_state_str(s))),
-            ])
-        })
-        .collect();
-    Ok(Response::json(200, Json::Arr(jobs).to_string()))
-}
-
-fn get_job(state: &State, id: &str) -> Result<Response> {
-    let id = parse_job_id(id)?;
-    let stack = state.stack.lock().unwrap();
+fn job_doc(stack: &Stack, id: LsfJobId, with_result: bool) -> std::result::Result<JobDoc, ErrorDoc> {
     let (job_state, result) = stack
         .job_state(id)
-        .ok_or_else(|| Error::Api(format!("unknown job {id}")))?;
-    let mut fields = vec![
-        ("job", Json::num(id.0 as f64)),
-        ("state", Json::str(job_state_str(job_state))),
-    ];
-    if let Some(r) = result {
-        fields.push(("result", result_to_json(r)));
-    }
-    if let Some(e) = stack.job_error(id) {
-        fields.push(("error", Json::str(e)));
-    }
-    Ok(Response::json(200, Json::obj(fields).to_string()))
+        .ok_or_else(|| ErrorDoc::not_found(format!("unknown job {id}")))?;
+    Ok(JobDoc {
+        job: id.0,
+        kind: stack.job_kind(id).unwrap_or("plain").to_string(),
+        state: job_state,
+        result: if with_result {
+            result.map(ResultDoc::from_result)
+        } else {
+            None
+        },
+        error: stack.job_error(id),
+    })
 }
 
-fn delete_job(state: &State, id: &str) -> Result<Response> {
+fn list_jobs(state: &State, req: &Request) -> HandlerResult {
+    let offset: u64 = req
+        .query_param("offset")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let limit: u64 = req
+        .query_param("limit")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50)
+        .clamp(1, 500);
+    let stack = state.stack.lock().unwrap();
+    let mut ids: Vec<LsfJobId> = stack.lsf.jobs().map(|j| j.id).collect();
+    ids.sort();
+    let total = ids.len() as u64;
+    let jobs = ids
+        .into_iter()
+        .skip(offset as usize)
+        .take(limit as usize)
+        .map(|id| job_doc(&stack, id, false))
+        .collect::<std::result::Result<Vec<_>, _>>()?;
+    let page = JobsPage {
+        jobs,
+        total,
+        offset,
+    };
+    Ok(Response::json(200, page.to_json().to_string()))
+}
+
+fn get_job(state: &State, req: &Request, id: &str) -> HandlerResult {
+    let id = parse_job_id(id)?;
+    let deadline = Instant::now() + Duration::from_millis(wait_ms(req));
+    let doc = long_poll(
+        state,
+        deadline,
+        || job_doc(&state.stack.lock().unwrap(), id, true),
+        JobDoc::is_terminal,
+    )?;
+    Ok(Response::json(200, doc.to_json().to_string()))
+}
+
+fn delete_job(state: &State, id: &str) -> HandlerResult {
     let id = parse_job_id(id)?;
     let mut stack = state.stack.lock().unwrap();
-    stack.kill(id)?;
+    stack.kill(id).map_err(|e| {
+        let msg = e.to_string();
+        if msg.contains("unknown job") {
+            ErrorDoc::not_found(msg)
+        } else {
+            bad_request(&e)
+        }
+    })?;
+    drop(stack);
+    state.work.notify();
     Ok(Response::json(
         200,
         Json::obj(vec![("killed", Json::num(id.0 as f64))]).to_string(),
     ))
 }
 
-fn get_output(state: &State, req: &Request) -> Result<Response> {
-    let query = req.path.split('?').nth(1).unwrap_or("");
-    let path = query
-        .split('&')
-        .find_map(|kv| kv.strip_prefix("path="))
-        .ok_or_else(|| Error::Api("missing ?path=".into()))?;
+fn get_output(state: &State, req: &Request, id: &str) -> HandlerResult {
+    let id = parse_job_id(id)?;
+    let path = req
+        .query_param("path")
+        .ok_or_else(|| ErrorDoc::new(code::BAD_REQUEST, "missing ?path="))?;
     let stack = state.stack.lock().unwrap();
-    let bytes = stack.read_output(path)?;
+    let (job_state, result) = stack
+        .job_state(id)
+        .ok_or_else(|| ErrorDoc::not_found(format!("unknown job {id}")))?;
+    let root = match result {
+        Some(r) => r.output_dir.clone(),
+        None => {
+            return Err(ErrorDoc::new(
+                code::NOT_READY,
+                format!(
+                    "job {id} has no output yet (state {})",
+                    wire::job_state_to_wire(job_state)
+                ),
+            ))
+        }
+    };
+    // Confine the read to the job's output root: `..` and absolute
+    // escapes answer with the stable `bad_path` code.
+    let full = wire::resolve_output_path(&root, &path)
+        .map_err(|e| ErrorDoc::new(code::BAD_PATH, e.to_string()))?;
+    let bytes = stack
+        .read_output(&full)
+        .map_err(|e| ErrorDoc::not_found(e.to_string()))?;
     Ok(Response::bytes(200, bytes))
 }
 
-fn post_workflow(state: &State, req: &Request) -> Result<Response> {
-    let j = Json::parse(req.body_text()?)?;
-    let wf = Workflow::from_json(&j)?;
+fn post_workflow(state: &State, req: &Request) -> HandlerResult {
+    let j = parse_body(req)?;
+    let spec = WorkflowSpec::from_json(&j).map_err(|e| bad_request(&e))?;
     let mut wfs = state.workflows.lock().unwrap();
     let id = wfs.len() as u64;
-    let mut run = WorkflowRun::new(id, wf);
-    {
-        // Kick off the first step immediately.
-        let mut stack = state.stack.lock().unwrap();
-        run.advance(&mut stack);
-    }
-    wfs.push(run);
+    wfs.push(WorkflowRun::new(id, spec));
+    drop(wfs);
+    state.work.notify();
     Ok(Response::json(
         201,
         Json::obj(vec![("workflow", Json::num(id as f64))]).to_string(),
     ))
 }
 
-fn get_workflow(state: &State, id: &str) -> Result<Response> {
-    let id: usize = id
+fn get_workflow(state: &State, req: &Request, id: &str) -> HandlerResult {
+    let idx: usize = id
         .parse()
-        .map_err(|_| Error::Api(format!("bad workflow id '{id}'")))?;
-    let wfs = state.workflows.lock().unwrap();
-    let wf = wfs
-        .get(id)
-        .ok_or_else(|| Error::Api(format!("unknown job workflow {id}")))?;
-    let stack = state.stack.lock().unwrap();
-    Ok(Response::json(200, wf.to_json(&stack).to_string()))
+        .map_err(|_| ErrorDoc::new(code::BAD_REQUEST, format!("bad workflow id '{id}'")))?;
+    let deadline = Instant::now() + Duration::from_millis(wait_ms(req));
+    let doc = long_poll(
+        state,
+        deadline,
+        || {
+            state
+                .workflows
+                .lock()
+                .unwrap()
+                .get(idx)
+                .map(|wf| wf.to_doc())
+                .ok_or_else(|| ErrorDoc::not_found(format!("unknown workflow {idx}")))
+        },
+        WorkflowDoc::is_terminal,
+    )?;
+    Ok(Response::json(200, doc.to_json().to_string()))
+}
+
+fn get_events(state: &State, req: &Request) -> HandlerResult {
+    let since: u64 = req
+        .query_param("since")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let deadline = Instant::now() + Duration::from_millis(wait_ms(req));
+    let page = long_poll(
+        state,
+        deadline,
+        || Ok(state.events.since(since)),
+        |page: &EventPage| !page.events.is_empty(),
+    )?;
+    Ok(Response::json(200, page.to_json().to_string()))
+}
+
+fn get_metrics(state: &State) -> HandlerResult {
+    Ok(Response::text(200, state.metrics.render()))
 }

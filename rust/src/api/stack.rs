@@ -30,7 +30,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// What a submitted job runs inside its dynamic cluster.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum AppPayload {
     /// Full Terasort pipeline: teragen `rows`, sort into `reduces`
     /// partitions, teravalidate. `use_kernel` switches the map path to the
@@ -206,6 +206,17 @@ impl Stack {
             Some(Err(e)) => Some(e.to_string()),
             _ => None,
         }
+    }
+
+    /// Payload kind of a submitted job (`None` for plain LSF jobs).
+    pub fn job_kind(&self, id: LsfJobId) -> Option<&'static str> {
+        self.entries.get(&id).map(|e| e.payload.kind())
+    }
+
+    /// Any job not yet in a terminal state? The API pump keeps ticking
+    /// while this holds and sleeps on its condvar otherwise.
+    pub fn has_active_jobs(&self) -> bool {
+        self.lsf.jobs().any(|j| !j.state.is_terminal())
     }
 
     /// `bkill` passthrough.

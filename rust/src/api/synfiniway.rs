@@ -1,143 +1,278 @@
-//! SynfiniWay-style workflows: named multi-step flows submitted through
-//! the API (§II: "the Fujitsu SynfiniWay framework to enable job
-//! submission via a web interface and high-level API"; §III step 2:
-//! "SynfiniWay submits the job into the scheduler based on the custom
-//! workflows").
+//! SynfiniWay-style workflows: named-step DAGs submitted through the API
+//! (§II: "the Fujitsu SynfiniWay framework to enable job submission via a
+//! web interface and high-level API"; §III step 2: "SynfiniWay submits the
+//! job into the scheduler based on the custom workflows").
 //!
-//! A workflow is an ordered list of application payloads; step *i+1* is
-//! submitted only after step *i*'s LSF job reaches a terminal state, and a
-//! failed step aborts the rest — the behaviour scientific pipelines
-//! (stage-in → analyse → report) rely on.
+//! A workflow is a DAG of named steps ([`WorkflowSpec`] in `wire.rs`):
+//! a step starts when every step in its `after` list is `DONE`, and every
+//! ready step is submitted in the same advance pass — independent branches
+//! run concurrently. Steps chain outputs to inputs by embedding
+//! `${steps.<name>.output_dir}` in their payload strings; the reference is
+//! substituted with the producing step's actual output directory at
+//! submit time. A failed step is retried up to its `retries` budget, then
+//! fails the workflow: running branches finish, unstarted steps are
+//! `SKIPPED`, and the workflow reports `aborted`.
 
-use crate::api::server::payload_from_json;
-use crate::api::stack::{AppPayload, Stack};
-use crate::codec::json::Json;
-use crate::error::{Error, Result};
+use crate::api::stack::Stack;
+use crate::api::wire::{
+    payload_map_strings, substitute_step_refs, StepDoc, StepSpec, StepState, WorkflowDoc,
+    WorkflowSpec,
+};
+use crate::error::Result;
 use crate::scheduler::JobState;
 use crate::util::ids::LsfJobId;
 
-/// A workflow definition.
-#[derive(Debug, Clone)]
-pub struct Workflow {
-    pub name: String,
-    pub user: String,
-    /// Nodes requested for every step's LSF job.
-    pub nodes: u32,
-    pub steps: Vec<AppPayload>,
+/// Back-compat alias: the workflow definition is the wire spec.
+pub type Workflow = WorkflowSpec;
+
+/// One observed step transition, for the server's event journal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepTransition {
+    pub step: String,
+    pub state: StepState,
+    pub job: Option<LsfJobId>,
 }
 
-impl Workflow {
-    pub fn from_json(j: &Json) -> Result<Workflow> {
-        let steps_json = j
-            .get("steps")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| Error::Api("workflow needs steps[]".into()))?;
-        if steps_json.is_empty() {
-            return Err(Error::Api("workflow with no steps".into()));
-        }
-        let steps: Result<Vec<AppPayload>> = steps_json.iter().map(payload_from_json).collect();
-        Ok(Workflow {
-            name: j.req_str("name")?.to_string(),
-            user: j.req_str("user")?.to_string(),
-            nodes: j.req_u64("nodes")? as u32,
-            steps: steps?,
-        })
-    }
+/// Execution state of one step.
+#[derive(Debug)]
+struct StepRun {
+    state: StepState,
+    /// LSF job of the current (or last) attempt.
+    job: Option<LsfJobId>,
+    attempts: u32,
+    /// The producing job's output directory, recorded on `DONE` for
+    /// `${steps.<name>.output_dir}` consumers.
+    output_dir: Option<String>,
 }
 
 /// Execution state of one workflow.
 #[derive(Debug)]
 pub struct WorkflowRun {
     pub id: u64,
-    pub workflow: Workflow,
-    /// LSF job per already-submitted step.
-    pub jobs: Vec<LsfJobId>,
-    pub aborted: bool,
+    pub spec: WorkflowSpec,
+    steps: Vec<StepRun>,
+    aborted: bool,
+    complete: bool,
 }
 
 impl WorkflowRun {
-    pub fn new(id: u64, workflow: Workflow) -> WorkflowRun {
-        WorkflowRun {
-            id,
-            workflow,
-            jobs: Vec::new(),
-            aborted: false,
-        }
-    }
-
-    /// Advance: submit the next step if the previous one finished cleanly.
-    /// Called from the API pump with the stack lock held.
-    pub fn advance(&mut self, stack: &mut Stack) {
-        if self.aborted || self.jobs.len() >= self.workflow.steps.len() + 1 {
-            return;
-        }
-        // Check the last submitted step.
-        if let Some(&last) = self.jobs.last() {
-            match stack.lsf.status(last).map(|j| j.state) {
-                Some(JobState::Done) => {}
-                Some(s) if s.is_terminal() => {
-                    self.aborted = true; // failed or killed → stop the flow
-                    return;
-                }
-                _ => return, // still pending/running
-            }
-        }
-        let next_idx = self.jobs.len();
-        if next_idx >= self.workflow.steps.len() {
-            return; // all done
-        }
-        let payload = self.workflow.steps[next_idx].clone();
-        match stack.submit(self.workflow.nodes, &self.workflow.user, payload) {
-            Ok(id) => self.jobs.push(id),
-            Err(_) => self.aborted = true,
-        }
-    }
-
-    /// Finished successfully?
-    pub fn is_complete(&self, stack: &Stack) -> bool {
-        !self.aborted
-            && self.jobs.len() == self.workflow.steps.len()
-            && self
-                .jobs
-                .iter()
-                .all(|&j| stack.lsf.status(j).map(|x| x.state) == Some(JobState::Done))
-    }
-
-    pub fn to_json(&self, stack: &Stack) -> Json {
-        let steps: Vec<Json> = self
-            .workflow
+    /// `spec` must already be validated (`WorkflowSpec::from_json` does;
+    /// call [`WorkflowSpec::validate`] for hand-built specs).
+    pub fn new(id: u64, spec: WorkflowSpec) -> WorkflowRun {
+        let steps = spec
             .steps
             .iter()
-            .enumerate()
-            .map(|(i, p)| {
-                let mut fields = vec![
-                    ("step", Json::num(i as f64)),
-                    ("type", Json::str(p.kind())),
-                ];
-                if let Some(&job) = self.jobs.get(i) {
-                    fields.push(("job", Json::num(job.0 as f64)));
-                    if let Some(j) = stack.lsf.status(job) {
-                        fields.push(("state", Json::str(j.state.lsf_name())));
-                    }
-                } else {
-                    fields.push(("state", Json::str("WAITING")));
-                }
-                Json::obj(fields)
+            .map(|_| StepRun {
+                state: StepState::Waiting,
+                job: None,
+                attempts: 0,
+                output_dir: None,
             })
             .collect();
-        Json::obj(vec![
-            ("workflow", Json::num(self.id as f64)),
-            ("name", Json::str(&*self.workflow.name)),
-            ("aborted", Json::Bool(self.aborted)),
-            ("complete", Json::Bool(self.is_complete(stack))),
-            ("steps", Json::Arr(steps)),
-        ])
+        WorkflowRun {
+            id,
+            spec,
+            steps,
+            aborted: false,
+            complete: false,
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        self.complete || self.aborted
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.complete
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.aborted
+    }
+
+    fn index_of(&self, name: &str) -> usize {
+        self.spec
+            .steps
+            .iter()
+            .position(|s| s.name == name)
+            .expect("validated spec: step names resolve")
+    }
+
+    fn deps_done(&self, spec: &StepSpec) -> bool {
+        spec.after
+            .iter()
+            .all(|d| self.steps[self.index_of(d)].state == StepState::Done)
+    }
+
+    /// Substitute `${steps.<name>.output_dir}` references in a payload
+    /// against completed steps' recorded output dirs.
+    fn resolve_payload(&self, spec: &StepSpec) -> Result<crate::api::stack::AppPayload> {
+        payload_map_strings(&spec.payload, &mut |text| {
+            substitute_step_refs(text, &|name| {
+                self.spec
+                    .steps
+                    .iter()
+                    .position(|s| s.name == name)
+                    .and_then(|i| self.steps[i].output_dir.clone())
+            })
+        })
+    }
+
+    /// Advance the workflow: collect finished attempts, retry or fail,
+    /// and submit every ready step. Called from the API pump with the
+    /// stack lock held. Returns the step transitions that occurred, in
+    /// order, for the event journal.
+    pub fn advance(&mut self, stack: &mut Stack) -> Vec<StepTransition> {
+        let mut transitions = Vec::new();
+        if self.is_terminal() {
+            return transitions;
+        }
+
+        // 1. Collect running attempts that reached a terminal LSF state.
+        for i in 0..self.steps.len() {
+            if self.steps[i].state != StepState::Running {
+                continue;
+            }
+            let job = self.steps[i].job.expect("running step has a job");
+            let job_state = match stack.lsf.status(job).map(|j| j.state) {
+                Some(s) => s,
+                None => {
+                    // Job vanished (should not happen): treat as failure.
+                    JobState::Exited
+                }
+            };
+            match job_state {
+                JobState::Done => {
+                    let output_dir = stack
+                        .job_state(job)
+                        .and_then(|(_, r)| r.map(|r| r.output_dir.clone()));
+                    let run = &mut self.steps[i];
+                    run.state = StepState::Done;
+                    run.output_dir = output_dir;
+                    transitions.push(StepTransition {
+                        step: self.spec.steps[i].name.clone(),
+                        state: StepState::Done,
+                        job: Some(job),
+                    });
+                }
+                JobState::Killed => {
+                    // An operator bkill is a decision, not a flaky attempt:
+                    // never resubmit it, fail the step immediately.
+                    transitions.push(self.fail_step(i));
+                }
+                s if s.is_terminal() => {
+                    // Failed attempt: retry if budget remains.
+                    if self.steps[i].attempts <= self.spec.steps[i].retries {
+                        match self.submit_step(stack, i) {
+                            Ok(t) => transitions.push(t),
+                            Err(_) => transitions.push(self.fail_step(i)),
+                        }
+                    } else {
+                        transitions.push(self.fail_step(i));
+                    }
+                }
+                _ => {} // still pending/running
+            }
+        }
+
+        // 2. On failure, skip everything not yet started; running branches
+        //    were already collected above and simply stop mattering.
+        if self.aborted {
+            self.skip_waiting(&mut transitions);
+            return transitions;
+        }
+
+        // 3. Submit every ready step in the same pass: independent DAG
+        //    branches (e.g. the two middle steps of a diamond) go to the
+        //    scheduler together and run concurrently.
+        for i in 0..self.steps.len() {
+            if self.steps[i].state == StepState::Waiting && self.deps_done(&self.spec.steps[i]) {
+                match self.submit_step(stack, i) {
+                    Ok(t) => transitions.push(t),
+                    Err(_) => {
+                        transitions.push(self.fail_step(i));
+                        break;
+                    }
+                }
+            }
+        }
+        if self.aborted {
+            self.skip_waiting(&mut transitions);
+        } else if self.steps.iter().all(|s| s.state == StepState::Done) {
+            self.complete = true;
+        }
+        transitions
+    }
+
+    fn skip_waiting(&mut self, transitions: &mut Vec<StepTransition>) {
+        for i in 0..self.steps.len() {
+            if self.steps[i].state == StepState::Waiting {
+                self.steps[i].state = StepState::Skipped;
+                transitions.push(StepTransition {
+                    step: self.spec.steps[i].name.clone(),
+                    state: StepState::Skipped,
+                    job: None,
+                });
+            }
+        }
+    }
+
+    fn submit_step(&mut self, stack: &mut Stack, i: usize) -> Result<StepTransition> {
+        let spec = &self.spec.steps[i];
+        let payload = self.resolve_payload(spec)?;
+        let id = stack.submit(self.spec.nodes, &self.spec.user, payload)?;
+        let name = self.spec.steps[i].name.clone();
+        let run = &mut self.steps[i];
+        run.state = StepState::Running;
+        run.job = Some(id);
+        run.attempts += 1;
+        Ok(StepTransition {
+            step: name,
+            state: StepState::Running,
+            job: Some(id),
+        })
+    }
+
+    fn fail_step(&mut self, i: usize) -> StepTransition {
+        self.steps[i].state = StepState::Failed;
+        self.aborted = true;
+        StepTransition {
+            step: self.spec.steps[i].name.clone(),
+            state: StepState::Failed,
+            job: self.steps[i].job,
+        }
+    }
+
+    /// The wire status document.
+    pub fn to_doc(&self) -> WorkflowDoc {
+        let steps = self
+            .spec
+            .steps
+            .iter()
+            .zip(&self.steps)
+            .map(|(spec, run)| StepDoc {
+                name: spec.name.clone(),
+                kind: spec.payload.kind().to_string(),
+                state: run.state,
+                attempts: run.attempts,
+                job: run.job.map(|j| j.0),
+                output_dir: run.output_dir.clone(),
+            })
+            .collect();
+        WorkflowDoc {
+            workflow: self.id,
+            name: self.spec.name.clone(),
+            complete: self.complete,
+            aborted: self.aborted,
+            steps,
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::stack::AppPayload;
     use crate::config::StackConfig;
     use crate::lustre::Dfs as _;
 
@@ -149,67 +284,240 @@ mod tests {
         }
     }
 
-    #[test]
-    fn steps_run_in_order() {
-        let mut stack = Stack::new(StackConfig::tiny()).unwrap();
-        let wf = Workflow {
-            name: "pipeline".into(),
+    fn step(name: &str, after: &[&str], payload: AppPayload) -> StepSpec {
+        StepSpec {
+            name: name.into(),
+            after: after.iter().map(|s| s.to_string()).collect(),
+            retries: 0,
+            payload,
+        }
+    }
+
+    fn spec(steps: Vec<StepSpec>) -> WorkflowSpec {
+        let s = WorkflowSpec {
+            name: "wf".into(),
             user: "sid".into(),
             nodes: 4,
-            steps: vec![
-                teragen("/lustre/scratch/wf-a"),
-                teragen("/lustre/scratch/wf-b"),
-            ],
+            steps,
         };
+        s.validate().unwrap();
+        s
+    }
+
+    #[test]
+    fn linear_steps_run_in_order() {
+        let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+        let wf = WorkflowSpec::linear(
+            "pipeline",
+            "sid",
+            4,
+            vec![teragen("/lustre/scratch/wf-a"), teragen("/lustre/scratch/wf-b")],
+        );
+        wf.validate().unwrap();
         let mut run = WorkflowRun::new(0, wf);
-        run.advance(&mut stack);
-        assert_eq!(run.jobs.len(), 1);
+        let t = run.advance(&mut stack);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].state, StepState::Running);
         // Step 2 must not be submitted before step 1 completes.
-        run.advance(&mut stack);
-        assert_eq!(run.jobs.len(), 1);
+        assert!(run.advance(&mut stack).is_empty());
         stack.tick(); // runs step 1
-        run.advance(&mut stack);
-        assert_eq!(run.jobs.len(), 2);
+        let t = run.advance(&mut stack);
+        assert_eq!(
+            t.iter().map(|x| x.state).collect::<Vec<_>>(),
+            vec![StepState::Done, StepState::Running]
+        );
         stack.tick();
-        assert!(run.is_complete(&stack));
+        run.advance(&mut stack);
+        assert!(run.is_complete());
         assert!(stack.dfs.exists("/lustre/scratch/wf-a/_SUCCESS"));
         assert!(stack.dfs.exists("/lustre/scratch/wf-b/_SUCCESS"));
     }
 
     #[test]
-    fn failed_step_aborts_flow() {
+    fn diamond_runs_middle_steps_concurrently() {
         let mut stack = Stack::new(StackConfig::tiny()).unwrap();
-        let wf = Workflow {
-            name: "broken".into(),
-            user: "sid".into(),
-            nodes: 4,
-            steps: vec![
+        let wf = spec(vec![
+            step("gen", &[], teragen("/lustre/scratch/di-gen")),
+            step("left", &["gen"], teragen("/lustre/scratch/di-left")),
+            step("right", &["gen"], teragen("/lustre/scratch/di-right")),
+            step("join", &["left", "right"], teragen("/lustre/scratch/di-join")),
+        ]);
+        let mut run = WorkflowRun::new(0, wf);
+        run.advance(&mut stack);
+        stack.tick(); // gen done
+        let t = run.advance(&mut stack);
+        // Both middle steps submitted in the SAME pass, before either ran.
+        let running: Vec<&str> = t
+            .iter()
+            .filter(|x| x.state == StepState::Running)
+            .map(|x| x.step.as_str())
+            .collect();
+        assert_eq!(running, vec!["left", "right"]);
+        let doc = run.to_doc();
+        let st = |n: &str| doc.steps.iter().find(|s| s.name == n).unwrap().state;
+        assert_eq!(st("left"), StepState::Running);
+        assert_eq!(st("right"), StepState::Running);
+        assert_eq!(st("join"), StepState::Waiting);
+        stack.tick(); // both middles execute this tick (4+4 nodes fit)
+        run.advance(&mut stack);
+        stack.tick();
+        run.advance(&mut stack);
+        assert!(run.is_complete());
+        for d in ["di-gen", "di-left", "di-right", "di-join"] {
+            assert!(stack.dfs.exists(&format!("/lustre/scratch/{d}/_SUCCESS")));
+        }
+    }
+
+    #[test]
+    fn output_dir_chains_into_dependent_payload() {
+        let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+        stack.dfs.mkdirs("/lustre/scratch/chain-src").unwrap();
+        stack
+            .dfs
+            .create(
+                "/lustre/scratch/chain-src/part-0",
+                b"wales,200\nwales,300\nengland,50\n",
+            )
+            .unwrap();
+        let wf = spec(vec![
+            step(
+                "report",
+                &[],
+                AppPayload::PigScript {
+                    script: "
+                        recs = LOAD '/lustre/scratch/chain-src' USING ',' AS (region, amount);
+                        grp  = GROUP recs BY region;
+                        out  = FOREACH grp GENERATE group, SUM(amount);
+                        STORE out INTO '/lustre/scratch/chain-report';"
+                        .into(),
+                    reduces: 1,
+                },
+            ),
+            step(
+                "rollup",
+                &["report"],
+                AppPayload::HiveQuery {
+                    // Consumes the producing step's ACTUAL output dir via
+                    // the wire reference, not a hard-coded path.
+                    sql: "SELECT region, SUM(total) FROM '${steps.report.output_dir}' \
+                          USING '\t' SCHEMA (region, total) GROUP BY region \
+                          INTO '/lustre/scratch/chain-rollup'"
+                        .into(),
+                    reduces: 1,
+                },
+            ),
+        ]);
+        let mut run = WorkflowRun::new(0, wf);
+        run.advance(&mut stack);
+        stack.tick();
+        run.advance(&mut stack);
+        stack.tick();
+        run.advance(&mut stack);
+        assert!(run.is_complete(), "doc={:?}", run.to_doc());
+        let doc = run.to_doc();
+        assert_eq!(
+            doc.steps[0].output_dir.as_deref(),
+            Some("/lustre/scratch/chain-report")
+        );
+        assert!(stack.dfs.exists("/lustre/scratch/chain-rollup/_SUCCESS"));
+    }
+
+    #[test]
+    fn failed_step_aborts_flow_and_skips_dependents() {
+        let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+        let wf = spec(vec![
+            step(
+                "bad",
+                &[],
                 AppPayload::HiveQuery {
                     sql: "SELECT COUNT(a) FROM '/lustre/scratch/missing' SCHEMA (a) INTO '/lustre/scratch/wf-x'".into(),
                     reduces: 1,
                 },
-                teragen("/lustre/scratch/wf-never"),
-            ],
-        };
+            ),
+            step("never", &["bad"], teragen("/lustre/scratch/wf-never")),
+        ]);
         let mut run = WorkflowRun::new(0, wf);
         run.advance(&mut stack);
         stack.tick(); // step 1 fails
-        run.advance(&mut stack);
-        assert!(run.aborted);
-        assert_eq!(run.jobs.len(), 1);
+        let t = run.advance(&mut stack);
+        assert!(run.is_aborted());
+        assert_eq!(
+            t.iter().map(|x| x.state).collect::<Vec<_>>(),
+            vec![StepState::Failed, StepState::Skipped]
+        );
         assert!(!stack.dfs.exists("/lustre/scratch/wf-never"));
+        let doc = run.to_doc();
+        assert!(doc.aborted && !doc.complete);
+        assert_eq!(doc.steps[1].state, StepState::Skipped);
     }
 
     #[test]
-    fn json_round_trip() {
-        let j = Json::parse(
-            r#"{"name":"wf","user":"u","nodes":4,
-                "steps":[{"type":"teragen","rows":10,"maps":1,"dir":"/d"}]}"#,
-        )
-        .unwrap();
-        let wf = Workflow::from_json(&j).unwrap();
-        assert_eq!(wf.steps.len(), 1);
-        assert_eq!(wf.steps[0].kind(), "teragen");
-        assert!(Workflow::from_json(&Json::parse(r#"{"name":"x","user":"u","nodes":1,"steps":[]}"#).unwrap()).is_err());
+    fn retry_budget_resubmits_failed_attempts() {
+        let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+        // The query fails while the input is missing; retries=2 gives the
+        // step three attempts total.
+        let mut s = step(
+            "flaky",
+            &[],
+            AppPayload::HiveQuery {
+                sql: "SELECT COUNT(a) FROM '/lustre/scratch/late' SCHEMA (a) INTO '/lustre/scratch/late-out'".into(),
+                reduces: 1,
+            },
+        );
+        s.retries = 2;
+        let mut run = WorkflowRun::new(0, spec(vec![s]));
+        run.advance(&mut stack);
+        stack.tick(); // attempt 1 fails
+        let t = run.advance(&mut stack);
+        assert_eq!(t.last().unwrap().state, StepState::Running, "retried");
+        // Stage the input before the retry executes: attempt 2 succeeds.
+        stack.dfs.mkdirs("/lustre/scratch/late").unwrap();
+        stack
+            .dfs
+            .create("/lustre/scratch/late/part-0", b"7\n9\n")
+            .unwrap();
+        stack.tick();
+        run.advance(&mut stack);
+        assert!(run.is_complete());
+        assert_eq!(run.to_doc().steps[0].attempts, 2);
+    }
+
+    #[test]
+    fn killed_step_is_not_retried() {
+        let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+        let mut s = step("stoppable", &[], teragen("/lustre/scratch/kill-wf"));
+        s.retries = 3; // a bkill must override the retry budget
+        let mut run = WorkflowRun::new(0, spec(vec![s]));
+        run.advance(&mut stack);
+        let job = run.to_doc().steps[0].job.unwrap();
+        stack.kill(crate::util::ids::LsfJobId(job)).unwrap();
+        let t = run.advance(&mut stack);
+        assert!(run.is_aborted());
+        assert_eq!(t[0].state, StepState::Failed);
+        assert_eq!(run.to_doc().steps[0].attempts, 1, "no resubmission");
+    }
+
+    #[test]
+    fn retries_exhausted_fails_the_workflow() {
+        let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+        let mut s = step(
+            "doomed",
+            &[],
+            AppPayload::HiveQuery {
+                sql: "SELECT COUNT(a) FROM '/lustre/scratch/never' SCHEMA (a) INTO '/lustre/scratch/never-out'".into(),
+                reduces: 1,
+            },
+        );
+        s.retries = 1;
+        let mut run = WorkflowRun::new(0, spec(vec![s]));
+        run.advance(&mut stack);
+        stack.tick();
+        run.advance(&mut stack); // retry submitted
+        stack.tick();
+        run.advance(&mut stack); // retry failed, budget exhausted
+        assert!(run.is_aborted());
+        let doc = run.to_doc();
+        assert_eq!(doc.steps[0].state, StepState::Failed);
+        assert_eq!(doc.steps[0].attempts, 2);
     }
 }

@@ -1,0 +1,1348 @@
+//! Single source of truth for the v1 wire protocol.
+//!
+//! Every JSON document that crosses the HTTP boundary — submissions, job
+//! and workflow status, events, errors — is defined here as a typed
+//! struct with `to_json` / `from_json`. The Rust client, the server, the
+//! CLI and the Python client (`python/hpcw_client/wire.py`) all speak
+//! exactly this schema; the shared conformance vectors in
+//! `python/tests/vectors.json` pin the byte-level encoding for both
+//! languages. See `docs/API.md` for the endpoint-by-endpoint spec.
+//!
+//! Design rules:
+//! * one encoder/decoder per document, round-trip property-tested
+//!   (`from_json(to_json(x)) == x` for every variant);
+//! * stable machine-readable error codes ([`code`]) instead of matching
+//!   on message text;
+//! * [`JobState`] crosses the wire as an exact token (`KILLED`, not the
+//!   `EXIT(kill)` display string), so clients never prefix-match.
+
+use crate::api::stack::{AppPayload, AppResult};
+use crate::codec::json::Json;
+use crate::error::{Error, Result};
+use crate::scheduler::JobState;
+
+/// The protocol version segment every route is mounted under.
+pub const WIRE_VERSION: &str = "v1";
+
+/// Stable error codes carried by [`ErrorDoc`]. Clients branch on these,
+/// never on message text.
+pub mod code {
+    /// Malformed request: bad fields, bad ids, bad query parameters.
+    pub const BAD_REQUEST: &str = "bad_request";
+    /// Body is not valid JSON (or not valid UTF-8).
+    pub const BAD_JSON: &str = "bad_json";
+    /// Unknown job / workflow / route.
+    pub const NOT_FOUND: &str = "not_found";
+    /// Output path escapes the job's output root.
+    pub const BAD_PATH: &str = "bad_path";
+    /// `payload.type` is not a known application.
+    pub const UNKNOWN_PAYLOAD: &str = "unknown_payload";
+    /// Request is valid but the resource is not in a state that allows
+    /// it (e.g. output fetch before the job finished).
+    pub const NOT_READY: &str = "not_ready";
+    /// Request body exceeds the server's size cap.
+    pub const TOO_LARGE: &str = "too_large";
+    /// Unversioned legacy path; follow `Location` to the `/v1` route.
+    pub const DEPRECATED: &str = "deprecated";
+    /// Server-side failure.
+    pub const INTERNAL: &str = "internal";
+}
+
+// ---------------------------------------------------------------------------
+// ErrorDoc
+// ---------------------------------------------------------------------------
+
+/// The structured error envelope: `{"error":{"code":..,"message":..}}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorDoc {
+    pub code: String,
+    pub message: String,
+}
+
+impl ErrorDoc {
+    pub fn new(code: &str, message: impl Into<String>) -> ErrorDoc {
+        ErrorDoc {
+            code: code.to_string(),
+            message: message.into(),
+        }
+    }
+
+    pub fn not_found(message: impl Into<String>) -> ErrorDoc {
+        ErrorDoc::new(code::NOT_FOUND, message)
+    }
+
+    /// HTTP status implied by the code.
+    pub fn http_status(&self) -> u16 {
+        match self.code.as_str() {
+            code::NOT_FOUND => 404,
+            code::NOT_READY => 409,
+            code::TOO_LARGE => 413,
+            code::DEPRECATED => 301,
+            code::INTERNAL => 500,
+            _ => 400,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "error",
+            Json::obj(vec![
+                ("code", Json::str(&*self.code)),
+                ("message", Json::str(&*self.message)),
+            ]),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ErrorDoc> {
+        let e = j
+            .get("error")
+            .ok_or_else(|| Error::Codec("missing 'error' envelope".into()))?;
+        Ok(ErrorDoc {
+            code: e.req_str("code")?.to_string(),
+            message: e.req_str("message")?.to_string(),
+        })
+    }
+}
+
+impl From<&Error> for ErrorDoc {
+    fn from(e: &Error) -> ErrorDoc {
+        let c = match e {
+            Error::Io(_) => code::INTERNAL,
+            _ => code::BAD_REQUEST,
+        };
+        ErrorDoc::new(c, e.to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Job state tokens
+// ---------------------------------------------------------------------------
+
+/// Exact wire token for a job state (LSF names, but `KILLED` instead of
+/// the display-only `EXIT(kill)` so parsing is never prefix matching).
+pub fn job_state_to_wire(s: JobState) -> &'static str {
+    match s {
+        JobState::Pending => "PEND",
+        JobState::Running => "RUN",
+        JobState::Done => "DONE",
+        JobState::Exited => "EXIT",
+        JobState::Killed => "KILLED",
+    }
+}
+
+pub fn job_state_from_wire(s: &str) -> Result<JobState> {
+    match s {
+        "PEND" => Ok(JobState::Pending),
+        "RUN" => Ok(JobState::Running),
+        "DONE" => Ok(JobState::Done),
+        "EXIT" => Ok(JobState::Exited),
+        "KILLED" => Ok(JobState::Killed),
+        other => Err(Error::Codec(format!("unknown job state '{other}'"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AppPayload — the one and only JSON mapping
+// ---------------------------------------------------------------------------
+
+/// Serialize a payload. This is the single copy in the codebase: client,
+/// server, CLI and tests all call here (the old duplicated
+/// `client::payload_to_json` / `server::payload_from_json` pair is gone).
+pub fn payload_to_json(p: &AppPayload) -> Json {
+    match p {
+        AppPayload::Terasort {
+            rows,
+            maps,
+            reduces,
+            use_kernel,
+        } => Json::obj(vec![
+            ("type", Json::str("terasort")),
+            ("rows", Json::num(*rows as f64)),
+            ("maps", Json::num(*maps as f64)),
+            ("reduces", Json::num(*reduces as f64)),
+            ("use_kernel", Json::Bool(*use_kernel)),
+        ]),
+        AppPayload::Teragen { rows, maps, dir } => Json::obj(vec![
+            ("type", Json::str("teragen")),
+            ("rows", Json::num(*rows as f64)),
+            ("maps", Json::num(*maps as f64)),
+            ("dir", Json::str(&**dir)),
+        ]),
+        AppPayload::PigScript { script, reduces } => Json::obj(vec![
+            ("type", Json::str("pig")),
+            ("script", Json::str(&**script)),
+            ("reduces", Json::num(*reduces as f64)),
+        ]),
+        AppPayload::HiveQuery { sql, reduces } => Json::obj(vec![
+            ("type", Json::str("hive")),
+            ("sql", Json::str(&**sql)),
+            ("reduces", Json::num(*reduces as f64)),
+        ]),
+        AppPayload::RSummary {
+            input_dir,
+            output_dir,
+            fields,
+            delimiter,
+            columns,
+        } => Json::obj(vec![
+            ("type", Json::str("rsummary")),
+            ("input_dir", Json::str(&**input_dir)),
+            ("output_dir", Json::str(&**output_dir)),
+            (
+                "fields",
+                Json::Arr(fields.iter().map(|f| Json::str(&**f)).collect()),
+            ),
+            ("delimiter", Json::str(delimiter.to_string())),
+            (
+                "columns",
+                Json::Arr(columns.iter().map(|c| Json::str(&**c)).collect()),
+            ),
+        ]),
+    }
+}
+
+/// Parse a payload; unknown `type` yields [`code::UNKNOWN_PAYLOAD`]-worthy
+/// errors at the API layer.
+pub fn payload_from_json(j: &Json) -> Result<AppPayload> {
+    match j.req_str("type")? {
+        "terasort" => Ok(AppPayload::Terasort {
+            rows: j.req_u64("rows")?,
+            maps: j.req_u64("maps")?,
+            reduces: j.req_u64("reduces")? as u32,
+            use_kernel: j.get("use_kernel").and_then(Json::as_bool).unwrap_or(false),
+        }),
+        "teragen" => Ok(AppPayload::Teragen {
+            rows: j.req_u64("rows")?,
+            maps: j.req_u64("maps")?,
+            dir: j.req_str("dir")?.to_string(),
+        }),
+        "pig" => Ok(AppPayload::PigScript {
+            script: j.req_str("script")?.to_string(),
+            reduces: j.req_u64("reduces")? as u32,
+        }),
+        "hive" => Ok(AppPayload::HiveQuery {
+            sql: j.req_str("sql")?.to_string(),
+            reduces: j.req_u64("reduces")? as u32,
+        }),
+        "rsummary" => {
+            let strs = |key: &str| -> Result<Vec<String>> {
+                j.get(key)
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(Json::as_str)
+                            .map(str::to_string)
+                            .collect()
+                    })
+                    .ok_or_else(|| Error::Codec(format!("missing array '{key}'")))
+            };
+            Ok(AppPayload::RSummary {
+                input_dir: j.req_str("input_dir")?.to_string(),
+                output_dir: j.req_str("output_dir")?.to_string(),
+                fields: strs("fields")?,
+                delimiter: j
+                    .get("delimiter")
+                    .and_then(Json::as_str)
+                    .and_then(|s| s.chars().next())
+                    .unwrap_or(','),
+                columns: strs("columns")?,
+            })
+        }
+        other => Err(Error::Api(format!("unknown payload type '{other}'"))),
+    }
+}
+
+/// Apply `f` to every free-form string field of a payload — the fields
+/// that may carry `${steps.<name>.output_dir}` references (workflow
+/// output→input chaining).
+pub fn payload_map_strings(
+    p: &AppPayload,
+    f: &mut dyn FnMut(&str) -> Result<String>,
+) -> Result<AppPayload> {
+    Ok(match p {
+        AppPayload::Terasort { .. } => p.clone(),
+        AppPayload::Teragen { rows, maps, dir } => AppPayload::Teragen {
+            rows: *rows,
+            maps: *maps,
+            dir: f(dir)?,
+        },
+        AppPayload::PigScript { script, reduces } => AppPayload::PigScript {
+            script: f(script)?,
+            reduces: *reduces,
+        },
+        AppPayload::HiveQuery { sql, reduces } => AppPayload::HiveQuery {
+            sql: f(sql)?,
+            reduces: *reduces,
+        },
+        AppPayload::RSummary {
+            input_dir,
+            output_dir,
+            fields,
+            delimiter,
+            columns,
+        } => AppPayload::RSummary {
+            input_dir: f(input_dir)?,
+            output_dir: f(output_dir)?,
+            fields: fields.clone(),
+            delimiter: *delimiter,
+            columns: columns.clone(),
+        },
+    })
+}
+
+/// Step names referenced as `${steps.<name>.output_dir}` in one string.
+pub fn step_refs(s: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut rest = s;
+    while let Some(start) = rest.find("${") {
+        let tail = &rest[start + 2..];
+        let end = tail
+            .find('}')
+            .ok_or_else(|| Error::Api(format!("unterminated ${{...}} reference in '{s}'")))?;
+        let inner = &tail[..end];
+        let name = inner
+            .strip_prefix("steps.")
+            .and_then(|x| x.strip_suffix(".output_dir"))
+            .ok_or_else(|| {
+                Error::Api(format!(
+                    "bad reference '${{{inner}}}': only ${{steps.<name>.output_dir}} is supported"
+                ))
+            })?;
+        out.push(name.to_string());
+        rest = &tail[end + 1..];
+    }
+    Ok(out)
+}
+
+/// Replace every `${steps.<name>.output_dir}` with `lookup(name)`.
+pub fn substitute_step_refs(
+    s: &str,
+    lookup: &dyn Fn(&str) -> Option<String>,
+) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s;
+    while let Some(start) = rest.find("${") {
+        out.push_str(&rest[..start]);
+        let tail = &rest[start + 2..];
+        let end = tail
+            .find('}')
+            .ok_or_else(|| Error::Api(format!("unterminated ${{...}} reference in '{s}'")))?;
+        let inner = &tail[..end];
+        let name = inner
+            .strip_prefix("steps.")
+            .and_then(|x| x.strip_suffix(".output_dir"))
+            .ok_or_else(|| {
+                Error::Api(format!(
+                    "bad reference '${{{inner}}}': only ${{steps.<name>.output_dir}} is supported"
+                ))
+            })?;
+        let val = lookup(name).ok_or_else(|| {
+            Error::Api(format!("step '{name}' has no output_dir yet (bad dependency?)"))
+        })?;
+        out.push_str(&val);
+        rest = &tail[end + 1..];
+    }
+    out.push_str(rest);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Output-path containment (GET /v1/jobs/{id}/output?path=...)
+// ---------------------------------------------------------------------------
+
+/// Normalize an absolute path: collapse `//` and `.` segments, resolve
+/// `..` textually, and reject any `..` that climbs past the filesystem
+/// root. Returns the canonical `/a/b/c` form.
+fn normalize_abs(p: &str) -> Result<String> {
+    if !p.starts_with('/') {
+        return Err(Error::Api(format!("path '{p}' is not absolute")));
+    }
+    let mut segs: Vec<&str> = Vec::new();
+    for seg in p.split('/') {
+        match seg {
+            "" | "." => {}
+            ".." => {
+                if segs.pop().is_none() {
+                    return Err(Error::Api(format!("path '{p}' escapes the filesystem root")));
+                }
+            }
+            s => segs.push(s),
+        }
+    }
+    Ok(format!("/{}", segs.join("/")))
+}
+
+/// Resolve a client-supplied output path against a job's output root.
+/// Relative paths are joined to the root; absolute paths must stay under
+/// it. Any escape (`..`, absolute path outside the root) is an error the
+/// API layer reports as [`code::BAD_PATH`].
+pub fn resolve_output_path(root: &str, path: &str) -> Result<String> {
+    let root = normalize_abs(root)?;
+    let joined = if path.starts_with('/') {
+        path.to_string()
+    } else {
+        format!("{root}/{path}")
+    };
+    let full = normalize_abs(&joined)?;
+    if full == root || full.starts_with(&format!("{root}/")) {
+        Ok(full)
+    } else {
+        Err(Error::Api(format!(
+            "path '{path}' escapes the job output root '{root}'"
+        )))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SubmitRequest / ResultDoc / JobDoc / JobsPage
+// ---------------------------------------------------------------------------
+
+/// `POST /v1/jobs` body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitRequest {
+    pub nodes: u32,
+    pub user: String,
+    pub payload: AppPayload,
+}
+
+impl SubmitRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nodes", Json::num(self.nodes as f64)),
+            ("user", Json::str(&*self.user)),
+            ("payload", payload_to_json(&self.payload)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SubmitRequest> {
+        Ok(SubmitRequest {
+            nodes: j.req_u64("nodes")? as u32,
+            user: j.req_str("user")?.to_string(),
+            payload: payload_from_json(
+                j.get("payload")
+                    .ok_or_else(|| Error::Codec("missing 'payload'".into()))?,
+            )?,
+        })
+    }
+}
+
+/// A finished application's result document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultDoc {
+    pub kind: String,
+    pub output_dir: String,
+    pub output_files: Vec<String>,
+    pub records: u64,
+    pub validated: bool,
+    pub wall_ms: u64,
+    pub counters: Vec<(String, u64)>,
+}
+
+impl ResultDoc {
+    pub fn from_result(r: &AppResult) -> ResultDoc {
+        ResultDoc {
+            kind: r.kind.to_string(),
+            output_dir: r.output_dir.clone(),
+            output_files: r.output_files.clone(),
+            records: r.records,
+            validated: r.validated,
+            wall_ms: r.wall.as_millis() as u64,
+            counters: r.counters.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(&*self.kind)),
+            ("output_dir", Json::str(&*self.output_dir)),
+            (
+                "output_files",
+                Json::Arr(self.output_files.iter().map(|f| Json::str(&**f)).collect()),
+            ),
+            ("records", Json::num(self.records as f64)),
+            ("validated", Json::Bool(self.validated)),
+            ("wall_ms", Json::num(self.wall_ms as f64)),
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ResultDoc> {
+        let files = j
+            .get("output_files")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Codec("missing array 'output_files'".into()))?
+            .iter()
+            .filter_map(Json::as_str)
+            .map(str::to_string)
+            .collect();
+        let counters = match j.get("counters") {
+            Some(Json::Obj(pairs)) => pairs
+                .iter()
+                .filter_map(|(k, v)| v.as_u64().map(|n| (k.clone(), n)))
+                .collect(),
+            _ => Vec::new(),
+        };
+        Ok(ResultDoc {
+            kind: j.req_str("kind")?.to_string(),
+            output_dir: j.req_str("output_dir")?.to_string(),
+            output_files: files,
+            records: j.req_u64("records")?,
+            validated: j.get("validated").and_then(Json::as_bool).unwrap_or(false),
+            wall_ms: j.req_u64("wall_ms")?,
+            counters,
+        })
+    }
+}
+
+/// `GET /v1/jobs/{id}` response (and one row of `GET /v1/jobs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobDoc {
+    pub job: u64,
+    pub kind: String,
+    pub state: JobState,
+    /// Present once the job is `DONE` (omitted in list rows).
+    pub result: Option<ResultDoc>,
+    /// Present once the job failed.
+    pub error: Option<String>,
+}
+
+impl JobDoc {
+    pub fn is_terminal(&self) -> bool {
+        self.state.is_terminal()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("job", Json::num(self.job as f64)),
+            ("kind", Json::str(&*self.kind)),
+            ("state", Json::str(job_state_to_wire(self.state))),
+        ];
+        if let Some(r) = &self.result {
+            fields.push(("result", r.to_json()));
+        }
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::str(&**e)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobDoc> {
+        Ok(JobDoc {
+            job: j.req_u64("job")?,
+            kind: j.req_str("kind")?.to_string(),
+            state: job_state_from_wire(j.req_str("state")?)?,
+            result: match j.get("result") {
+                Some(r) => Some(ResultDoc::from_json(r)?),
+                None => None,
+            },
+            error: j.get("error").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+}
+
+/// `GET /v1/jobs?offset=N&limit=N` response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobsPage {
+    pub jobs: Vec<JobDoc>,
+    pub total: u64,
+    pub offset: u64,
+}
+
+impl JobsPage {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "jobs",
+                Json::Arr(self.jobs.iter().map(JobDoc::to_json).collect()),
+            ),
+            ("total", Json::num(self.total as f64)),
+            ("offset", Json::num(self.offset as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobsPage> {
+        let jobs = j
+            .get("jobs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Codec("missing array 'jobs'".into()))?
+            .iter()
+            .map(JobDoc::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(JobsPage {
+            jobs,
+            total: j.req_u64("total")?,
+            offset: j.req_u64("offset")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workflows: spec (submit) and doc (status)
+// ---------------------------------------------------------------------------
+
+/// One named step of a workflow DAG.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepSpec {
+    pub name: String,
+    /// Names of steps that must be `DONE` before this one starts.
+    pub after: Vec<String>,
+    /// Re-submission attempts allowed after a failure (0 = fail fast).
+    pub retries: u32,
+    pub payload: AppPayload,
+}
+
+/// `POST /v1/workflows` body: a named-step DAG.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowSpec {
+    pub name: String,
+    pub user: String,
+    /// Nodes requested for every step's LSF job.
+    pub nodes: u32,
+    pub steps: Vec<StepSpec>,
+}
+
+impl WorkflowSpec {
+    /// A linear chain (the pre-DAG workflow shape): `stepN` after
+    /// `stepN-1`, no retries.
+    pub fn linear(name: &str, user: &str, nodes: u32, payloads: Vec<AppPayload>) -> WorkflowSpec {
+        let steps = payloads
+            .into_iter()
+            .enumerate()
+            .map(|(i, payload)| StepSpec {
+                name: format!("step{i}"),
+                after: if i == 0 {
+                    Vec::new()
+                } else {
+                    vec![format!("step{}", i - 1)]
+                },
+                retries: 0,
+                payload,
+            })
+            .collect();
+        WorkflowSpec {
+            name: name.to_string(),
+            user: user.to_string(),
+            nodes,
+            steps,
+        }
+    }
+
+    /// Structural validation: non-empty, unique well-formed names, known
+    /// acyclic dependencies, and `${steps.<name>.output_dir}` references
+    /// only to declared dependencies.
+    pub fn validate(&self) -> Result<()> {
+        if self.steps.is_empty() {
+            return Err(Error::Api("workflow with no steps".into()));
+        }
+        let mut names = std::collections::BTreeSet::new();
+        for s in &self.steps {
+            if s.name.is_empty()
+                || !s
+                    .name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+            {
+                return Err(Error::Api(format!(
+                    "bad step name '{}': use [A-Za-z0-9_-]+",
+                    s.name
+                )));
+            }
+            if !names.insert(s.name.as_str()) {
+                return Err(Error::Api(format!("duplicate step name '{}'", s.name)));
+            }
+        }
+        for s in &self.steps {
+            let mut deps = std::collections::BTreeSet::new();
+            for d in &s.after {
+                if d == &s.name {
+                    return Err(Error::Api(format!("step '{}' depends on itself", s.name)));
+                }
+                if !names.contains(d.as_str()) {
+                    return Err(Error::Api(format!(
+                        "step '{}' depends on unknown step '{d}'",
+                        s.name
+                    )));
+                }
+                if !deps.insert(d.as_str()) {
+                    return Err(Error::Api(format!(
+                        "step '{}' lists dependency '{d}' twice",
+                        s.name
+                    )));
+                }
+            }
+            // Output references must point at declared dependencies, so a
+            // referenced output_dir is always available at submit time.
+            let mut refs = Vec::new();
+            payload_map_strings(&s.payload, &mut |text| {
+                refs.extend(step_refs(text)?);
+                Ok(text.to_string())
+            })?;
+            for r in refs {
+                if !s.after.iter().any(|d| d == &r) {
+                    return Err(Error::Api(format!(
+                        "step '{}' references ${{steps.{r}.output_dir}} but does not list '{r}' in after[]",
+                        s.name
+                    )));
+                }
+            }
+        }
+        // Kahn's algorithm: every step must be reachable from the roots.
+        let mut indeg: std::collections::BTreeMap<&str, usize> = self
+            .steps
+            .iter()
+            .map(|s| (s.name.as_str(), s.after.len()))
+            .collect();
+        let mut ready: Vec<&str> = indeg
+            .iter()
+            .filter(|(_, &d)| d == 0)
+            .map(|(&n, _)| n)
+            .collect();
+        let mut seen = 0usize;
+        while let Some(n) = ready.pop() {
+            seen += 1;
+            for s in &self.steps {
+                if s.after.iter().any(|d| d == n) {
+                    let e = indeg.get_mut(s.name.as_str()).unwrap();
+                    *e -= 1;
+                    if *e == 0 {
+                        ready.push(s.name.as_str());
+                    }
+                }
+            }
+        }
+        if seen != self.steps.len() {
+            return Err(Error::Api(format!(
+                "workflow '{}' has a dependency cycle",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let steps = self
+            .steps
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(&*s.name)),
+                    (
+                        "after",
+                        Json::Arr(s.after.iter().map(|a| Json::str(&**a)).collect()),
+                    ),
+                    ("retries", Json::num(s.retries as f64)),
+                    ("payload", payload_to_json(&s.payload)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::str(&*self.name)),
+            ("user", Json::str(&*self.user)),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("steps", Json::Arr(steps)),
+        ])
+    }
+
+    /// Parse and validate. `after` and `retries` are optional per step.
+    pub fn from_json(j: &Json) -> Result<WorkflowSpec> {
+        let steps_json = j
+            .get("steps")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Api("workflow needs steps[]".into()))?;
+        let steps = steps_json
+            .iter()
+            .map(|s| {
+                let after = match s.get("after") {
+                    Some(Json::Arr(items)) => items
+                        .iter()
+                        .filter_map(Json::as_str)
+                        .map(str::to_string)
+                        .collect(),
+                    _ => Vec::new(),
+                };
+                Ok(StepSpec {
+                    name: s.req_str("name")?.to_string(),
+                    after,
+                    retries: s.get("retries").and_then(Json::as_u64).unwrap_or(0) as u32,
+                    payload: payload_from_json(
+                        s.get("payload")
+                            .ok_or_else(|| Error::Codec("step missing 'payload'".into()))?,
+                    )?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let spec = WorkflowSpec {
+            name: j.req_str("name")?.to_string(),
+            user: j.req_str("user")?.to_string(),
+            nodes: j.req_u64("nodes")? as u32,
+            steps,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Execution state of one workflow step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepState {
+    /// Dependencies not yet satisfied.
+    Waiting,
+    /// Submitted to LSF (possibly a retry attempt).
+    Running,
+    Done,
+    /// Failed after exhausting retries.
+    Failed,
+    /// Never ran: an upstream step failed.
+    Skipped,
+}
+
+impl StepState {
+    pub fn as_wire(self) -> &'static str {
+        match self {
+            StepState::Waiting => "WAITING",
+            StepState::Running => "RUNNING",
+            StepState::Done => "DONE",
+            StepState::Failed => "FAILED",
+            StepState::Skipped => "SKIPPED",
+        }
+    }
+
+    pub fn from_wire(s: &str) -> Result<StepState> {
+        match s {
+            "WAITING" => Ok(StepState::Waiting),
+            "RUNNING" => Ok(StepState::Running),
+            "DONE" => Ok(StepState::Done),
+            "FAILED" => Ok(StepState::Failed),
+            "SKIPPED" => Ok(StepState::Skipped),
+            other => Err(Error::Codec(format!("unknown step state '{other}'"))),
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, StepState::Done | StepState::Failed | StepState::Skipped)
+    }
+}
+
+/// Per-step progress row inside [`WorkflowDoc`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepDoc {
+    pub name: String,
+    pub kind: String,
+    pub state: StepState,
+    pub attempts: u32,
+    pub job: Option<u64>,
+    pub output_dir: Option<String>,
+}
+
+impl StepDoc {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::str(&*self.name)),
+            ("kind", Json::str(&*self.kind)),
+            ("state", Json::str(self.state.as_wire())),
+            ("attempts", Json::num(self.attempts as f64)),
+        ];
+        if let Some(job) = self.job {
+            fields.push(("job", Json::num(job as f64)));
+        }
+        if let Some(d) = &self.output_dir {
+            fields.push(("output_dir", Json::str(&**d)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<StepDoc> {
+        Ok(StepDoc {
+            name: j.req_str("name")?.to_string(),
+            kind: j.req_str("kind")?.to_string(),
+            state: StepState::from_wire(j.req_str("state")?)?,
+            attempts: j.req_u64("attempts")? as u32,
+            job: j.get("job").and_then(Json::as_u64),
+            output_dir: j
+                .get("output_dir")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+        })
+    }
+}
+
+/// `GET /v1/workflows/{id}` response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowDoc {
+    pub workflow: u64,
+    pub name: String,
+    pub complete: bool,
+    pub aborted: bool,
+    pub steps: Vec<StepDoc>,
+}
+
+impl WorkflowDoc {
+    pub fn is_terminal(&self) -> bool {
+        self.complete || self.aborted
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workflow", Json::num(self.workflow as f64)),
+            ("name", Json::str(&*self.name)),
+            ("complete", Json::Bool(self.complete)),
+            ("aborted", Json::Bool(self.aborted)),
+            (
+                "steps",
+                Json::Arr(self.steps.iter().map(StepDoc::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<WorkflowDoc> {
+        let steps = j
+            .get("steps")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Codec("missing array 'steps'".into()))?
+            .iter()
+            .map(StepDoc::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(WorkflowDoc {
+            workflow: j.req_u64("workflow")?,
+            name: j.req_str("name")?.to_string(),
+            complete: j.get("complete").and_then(Json::as_bool).unwrap_or(false),
+            aborted: j.get("aborted").and_then(Json::as_bool).unwrap_or(false),
+            steps,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+/// One entry of the monotonic event journal (`GET /v1/events?since=seq`):
+/// a job, workflow or step state transition observed by the pump.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventDoc {
+    /// Monotonic sequence number, 1-based, never reused.
+    pub seq: u64,
+    /// `"job"`, `"workflow"` or `"step"`.
+    pub kind: String,
+    /// Job id for job events; workflow id for workflow/step events.
+    pub id: u64,
+    /// Wire state token ([`job_state_to_wire`] / [`StepState::as_wire`],
+    /// or `COMPLETE`/`ABORTED` for workflow events).
+    pub state: String,
+    /// Step name, present on step events.
+    pub step: Option<String>,
+}
+
+impl EventDoc {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("kind", Json::str(&*self.kind)),
+            ("id", Json::num(self.id as f64)),
+            ("state", Json::str(&*self.state)),
+        ];
+        if let Some(s) = &self.step {
+            fields.push(("step", Json::str(&**s)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<EventDoc> {
+        Ok(EventDoc {
+            seq: j.req_u64("seq")?,
+            kind: j.req_str("kind")?.to_string(),
+            id: j.req_u64("id")?,
+            state: j.req_str("state")?.to_string(),
+            step: j.get("step").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+}
+
+/// `GET /v1/events` response: events after `since`, plus the cursor to
+/// pass as the next `since`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventPage {
+    pub events: Vec<EventDoc>,
+    pub next: u64,
+}
+
+impl EventPage {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "events",
+                Json::Arr(self.events.iter().map(EventDoc::to_json).collect()),
+            ),
+            ("next", Json::num(self.next as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<EventPage> {
+        let events = j
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Codec("missing array 'events'".into()))?
+            .iter()
+            .map(EventDoc::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(EventPage {
+            events,
+            next: j.req_u64("next")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{props, Gen};
+
+    fn arb_path(g: &mut Gen) -> String {
+        format!("/lustre/scratch/{}", g.ident(8))
+    }
+
+    fn arb_payload(g: &mut Gen) -> AppPayload {
+        match g.u32(0..5) {
+            0 => AppPayload::Terasort {
+                rows: g.u64(1..1_000_000),
+                maps: g.u64(1..64),
+                reduces: g.u32(1..32),
+                use_kernel: g.chance(0.5),
+            },
+            1 => AppPayload::Teragen {
+                rows: g.u64(1..1_000_000),
+                maps: g.u64(1..64),
+                dir: arb_path(g),
+            },
+            2 => AppPayload::PigScript {
+                script: format!("recs = LOAD '{}' AS (a);\nSTORE recs INTO '{}';", arb_path(g), arb_path(g)),
+                reduces: g.u32(1..32),
+            },
+            3 => AppPayload::HiveQuery {
+                sql: format!("SELECT COUNT(a) FROM '{}' SCHEMA (a) INTO '{}'", arb_path(g), arb_path(g)),
+                reduces: g.u32(1..32),
+            },
+            _ => AppPayload::RSummary {
+                input_dir: arb_path(g),
+                output_dir: arb_path(g),
+                fields: g.vec(1..4, |g| g.ident(6)),
+                delimiter: g.pick(&[',', ';', '\t', '|']),
+                columns: g.vec(1..3, |g| g.ident(6)),
+            },
+        }
+    }
+
+    fn arb_state(g: &mut Gen) -> JobState {
+        g.pick(&[
+            JobState::Pending,
+            JobState::Running,
+            JobState::Done,
+            JobState::Exited,
+            JobState::Killed,
+        ])
+    }
+
+    fn arb_result(g: &mut Gen) -> ResultDoc {
+        ResultDoc {
+            kind: g.pick(&["terasort", "teragen", "pig", "hive", "rsummary"]).to_string(),
+            output_dir: arb_path(g),
+            output_files: g.vec(0..4, arb_path),
+            records: g.u64(0..1_000_000),
+            validated: g.chance(0.5),
+            wall_ms: g.u64(0..100_000),
+            counters: g.vec(0..4, |g| (g.ident(8), g.u64(0..1_000))),
+        }
+    }
+
+    /// The acceptance property: every payload variant survives the wire.
+    #[test]
+    fn prop_payload_round_trip() {
+        props(300, |g| {
+            let p = arb_payload(g);
+            let text = payload_to_json(&p).to_string();
+            let back = payload_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(p, back);
+        });
+    }
+
+    #[test]
+    fn prop_submit_request_round_trip() {
+        props(200, |g| {
+            let r = SubmitRequest {
+                nodes: g.u32(1..128),
+                user: g.ident(8),
+                payload: arb_payload(g),
+            };
+            let back =
+                SubmitRequest::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(r, back);
+        });
+    }
+
+    #[test]
+    fn prop_job_doc_round_trip() {
+        props(200, |g| {
+            let d = JobDoc {
+                job: g.u64(1..10_000),
+                kind: g.pick(&["terasort", "pig", "hive"]).to_string(),
+                state: arb_state(g),
+                result: if g.chance(0.5) { Some(arb_result(g)) } else { None },
+                error: if g.chance(0.3) { Some(g.ident(12)) } else { None },
+            };
+            let back = JobDoc::from_json(&Json::parse(&d.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(d, back);
+        });
+    }
+
+    #[test]
+    fn prop_jobs_page_round_trip() {
+        props(100, |g| {
+            let page = JobsPage {
+                jobs: g.vec(0..5, |g| JobDoc {
+                    job: g.u64(1..10_000),
+                    kind: "teragen".to_string(),
+                    state: arb_state(g),
+                    result: None,
+                    error: None,
+                }),
+                total: g.u64(0..10_000),
+                offset: g.u64(0..10_000),
+            };
+            let back =
+                JobsPage::from_json(&Json::parse(&page.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(page, back);
+        });
+    }
+
+    #[test]
+    fn prop_workflow_spec_round_trip() {
+        props(150, |g| {
+            let n = g.usize(1..5);
+            let steps: Vec<StepSpec> = (0..n)
+                .map(|i| {
+                    let after = (0..i).filter(|_| g.chance(0.5)).map(|d| format!("s{d}")).collect();
+                    StepSpec {
+                        name: format!("s{i}"),
+                        after,
+                        retries: g.u32(0..3),
+                        payload: arb_payload(g),
+                    }
+                })
+                .collect();
+            let spec = WorkflowSpec {
+                name: g.ident(8),
+                user: g.ident(6),
+                nodes: g.u32(1..32),
+                steps,
+            };
+            spec.validate().unwrap();
+            let back =
+                WorkflowSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(spec, back);
+        });
+    }
+
+    #[test]
+    fn prop_workflow_doc_round_trip() {
+        props(150, |g| {
+            let doc = WorkflowDoc {
+                workflow: g.u64(0..1_000),
+                name: g.ident(8),
+                complete: g.chance(0.5),
+                aborted: g.chance(0.3),
+                steps: g.vec(1..4, |g| StepDoc {
+                    name: g.ident(6),
+                    kind: "pig".to_string(),
+                    state: g.pick(&[
+                        StepState::Waiting,
+                        StepState::Running,
+                        StepState::Done,
+                        StepState::Failed,
+                        StepState::Skipped,
+                    ]),
+                    attempts: g.u32(0..4),
+                    job: if g.chance(0.5) { Some(g.u64(1..1_000)) } else { None },
+                    output_dir: if g.chance(0.5) { Some(arb_path(g)) } else { None },
+                }),
+            };
+            let back =
+                WorkflowDoc::from_json(&Json::parse(&doc.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(doc, back);
+        });
+    }
+
+    #[test]
+    fn prop_event_docs_round_trip() {
+        props(150, |g| {
+            let page = EventPage {
+                events: g.vec(0..6, |g| EventDoc {
+                    seq: g.u64(1..100_000),
+                    kind: g.pick(&["job", "workflow", "step"]).to_string(),
+                    id: g.u64(0..10_000),
+                    state: g.pick(&["PEND", "RUN", "DONE", "EXIT", "COMPLETE"]).to_string(),
+                    step: if g.chance(0.4) { Some(g.ident(6)) } else { None },
+                }),
+                next: g.u64(0..100_000),
+            };
+            let back =
+                EventPage::from_json(&Json::parse(&page.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(page, back);
+        });
+    }
+
+    #[test]
+    fn error_doc_round_trip_and_statuses() {
+        let e = ErrorDoc::new(code::BAD_PATH, "escapes root");
+        let back = ErrorDoc::from_json(&Json::parse(&e.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(e, back);
+        assert_eq!(e.http_status(), 400);
+        assert_eq!(ErrorDoc::not_found("x").http_status(), 404);
+        assert_eq!(ErrorDoc::new(code::NOT_READY, "x").http_status(), 409);
+        assert_eq!(ErrorDoc::new(code::INTERNAL, "x").http_status(), 500);
+        assert_eq!(ErrorDoc::new(code::DEPRECATED, "x").http_status(), 301);
+    }
+
+    #[test]
+    fn job_states_cross_the_wire_exactly() {
+        for s in [
+            JobState::Pending,
+            JobState::Running,
+            JobState::Done,
+            JobState::Exited,
+            JobState::Killed,
+        ] {
+            assert_eq!(job_state_from_wire(job_state_to_wire(s)).unwrap(), s);
+        }
+        // KILLED is a real token, not the EXIT(kill) display hack.
+        assert_eq!(job_state_to_wire(JobState::Killed), "KILLED");
+        assert!(job_state_from_wire("EXIT(kill)").is_err());
+        assert!(job_state_from_wire("DONEish").is_err());
+    }
+
+    #[test]
+    fn unknown_payload_type_rejected() {
+        let j = Json::parse(r#"{"type":"nonsense"}"#).unwrap();
+        assert!(payload_from_json(&j).unwrap_err().to_string().contains("unknown payload type"));
+    }
+
+    #[test]
+    fn step_ref_scan_and_substitution() {
+        let refs = step_refs("LOAD '${steps.gen.output_dir}' INTO '${steps.stage.output_dir}'")
+            .unwrap();
+        assert_eq!(refs, vec!["gen", "stage"]);
+        assert!(step_refs("${steps.x.wall_ms}").is_err());
+        assert!(step_refs("${steps.x.output_dir").is_err());
+
+        let out = substitute_step_refs("FROM '${steps.gen.output_dir}/part-0'", &|n| {
+            (n == "gen").then(|| "/lustre/out".to_string())
+        })
+        .unwrap();
+        assert_eq!(out, "FROM '/lustre/out/part-0'");
+        assert!(substitute_step_refs("${steps.missing.output_dir}", &|_| None).is_err());
+        // No references: unchanged.
+        assert_eq!(substitute_step_refs("plain", &|_| None).unwrap(), "plain");
+    }
+
+    #[test]
+    fn workflow_validation_rejects_bad_dags() {
+        let step = |name: &str, after: &[&str]| StepSpec {
+            name: name.into(),
+            after: after.iter().map(|s| s.to_string()).collect(),
+            retries: 0,
+            payload: AppPayload::Teragen { rows: 1, maps: 1, dir: "/d".into() },
+        };
+        let wf = |steps: Vec<StepSpec>| WorkflowSpec {
+            name: "wf".into(),
+            user: "u".into(),
+            nodes: 2,
+            steps,
+        };
+        assert!(wf(vec![]).validate().is_err());
+        assert!(wf(vec![step("a", &[]), step("a", &[])]).validate().is_err());
+        assert!(wf(vec![step("a", &["ghost"])]).validate().is_err());
+        assert!(wf(vec![step("a", &["a"])]).validate().is_err());
+        assert!(wf(vec![step("bad name", &[])]).validate().is_err());
+        // Cycle a→b→a.
+        assert!(wf(vec![step("a", &["b"]), step("b", &["a"])]).validate().is_err());
+        // Reference to a step not in after[].
+        let mut s = step("b", &[]);
+        s.payload = AppPayload::HiveQuery {
+            sql: "SELECT COUNT(a) FROM '${steps.a.output_dir}' SCHEMA (a) INTO '/o'".into(),
+            reduces: 1,
+        };
+        assert!(wf(vec![step("a", &[]), s.clone()]).validate().is_err());
+        s.after = vec!["a".into()];
+        wf(vec![step("a", &[]), s]).validate().unwrap();
+        // Diamond is fine.
+        wf(vec![
+            step("a", &[]),
+            step("b", &["a"]),
+            step("c", &["a"]),
+            step("d", &["b", "c"]),
+        ])
+        .validate()
+        .unwrap();
+    }
+
+    #[test]
+    fn output_path_containment() {
+        let root = "/lustre/data/lsf-7/tera-out";
+        // Absolute path inside the root.
+        assert_eq!(
+            resolve_output_path(root, "/lustre/data/lsf-7/tera-out/part-0").unwrap(),
+            "/lustre/data/lsf-7/tera-out/part-0"
+        );
+        // Relative path joins the root.
+        assert_eq!(
+            resolve_output_path(root, "part-1").unwrap(),
+            "/lustre/data/lsf-7/tera-out/part-1"
+        );
+        // Dot segments collapse but stay inside.
+        assert_eq!(
+            resolve_output_path(root, "./sub/../part-2").unwrap(),
+            "/lustre/data/lsf-7/tera-out/part-2"
+        );
+        // `..` escapes are rejected.
+        assert!(resolve_output_path(root, "..").is_err());
+        assert!(resolve_output_path(root, "../other-job/part-0").is_err());
+        assert!(resolve_output_path(root, "a/../../../../etc/passwd").is_err());
+        // Absolute escapes are rejected.
+        assert!(resolve_output_path(root, "/etc/passwd").is_err());
+        assert!(resolve_output_path(root, "/lustre/data/lsf-7/tera-outish/x").is_err());
+        assert!(resolve_output_path(root, "/lustre/data/lsf-7/tera-out/../x").is_err());
+    }
+
+    /// The Python conformance suite replays the same vectors
+    /// (`python/tests/vectors.json`): every `doc` must re-serialize to the
+    /// byte-identical `canon` string in both languages.
+    #[test]
+    fn conformance_vectors_are_canonical() {
+        let text = include_str!(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/python/tests/vectors.json"
+        ));
+        let vectors = Json::parse(text).unwrap();
+        let cases = vectors.get("payloads").unwrap().as_arr().unwrap();
+        assert!(cases.len() >= 5, "one vector per payload variant");
+        for case in cases {
+            let doc = case.get("doc").unwrap();
+            let canon = case.get("canon").unwrap().as_str().unwrap();
+            let typed = payload_from_json(doc).unwrap();
+            assert_eq!(payload_to_json(&typed).to_string(), canon);
+        }
+        let wf = vectors.get("workflow").unwrap();
+        let typed = WorkflowSpec::from_json(wf.get("doc").unwrap()).unwrap();
+        assert_eq!(typed.to_json().to_string(), wf.get("canon").unwrap().as_str().unwrap());
+        let err = vectors.get("error").unwrap();
+        let typed = ErrorDoc::from_json(err.get("doc").unwrap()).unwrap();
+        assert_eq!(typed.to_json().to_string(), err.get("canon").unwrap().as_str().unwrap());
+    }
+}

@@ -9,12 +9,17 @@
 //! * `hpcw hive --sql QUERY [--reduces N]` — run a Hive-like query.
 //! * `hpcw wrapper --nodes N` — simulate one wrapper create/teardown and
 //!   print the phase timeline (Fig 3's single point).
-//! * `hpcw serve [--config FILE]` — start the SynfiniWay-style API server
-//!   and block.
+//! * `hpcw serve [--config FILE]` — start the SynfiniWay-style v1 API
+//!   server and block.
+//! * `hpcw jobs --addr HOST:PORT [--offset N] [--limit N]` — page through
+//!   a running server's job list over the v1 wire protocol.
+//! * `hpcw events --addr HOST:PORT [--since SEQ] [--wait-ms N]` — tail a
+//!   running server's event journal.
 
 pub mod args;
 
-use crate::api::{ApiServer, AppPayload, Stack};
+use crate::api::{ApiClient, ApiServer, AppPayload, Stack};
+use crate::api::wire::job_state_to_wire;
 use crate::bench;
 use crate::config::StackConfig;
 use crate::error::{Error, Result};
@@ -52,6 +57,8 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         Some("hive") => cmd_hive(&args),
         Some("wrapper") => cmd_wrapper(&args),
         Some("serve") => cmd_serve(&args),
+        Some("jobs") => cmd_jobs(&args),
+        Some("events") => cmd_events(&args),
         Some(other) => Err(Error::Api(format!("unknown subcommand '{other}'\n{USAGE}"))),
         None => {
             println!("{USAGE}");
@@ -60,13 +67,15 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: hpcw <figures|terasort|pig|hive|wrapper|serve> [options]
+const USAGE: &str = "usage: hpcw <figures|terasort|pig|hive|wrapper|serve|jobs|events> [options]
   figures   [--reps N] [--jobs N]           regenerate paper figures (sim)
   terasort  --rows N [--nodes N] [--maps N] [--reduces N] [--kernel] [--tiny]
   pig       --file SCRIPT [--reduces N] [--tiny]
   hive      --sql QUERY [--reduces N] [--tiny]
   wrapper   --nodes N                       one simulated create/teardown
-  serve     [--config FILE] [--tiny]        start the API server";
+  serve     [--config FILE] [--tiny]        start the v1 API server
+  jobs      --addr HOST:PORT [--offset N] [--limit N]   list a server's jobs
+  events    --addr HOST:PORT [--since SEQ] [--wait-ms N] tail the event journal";
 
 fn cmd_figures(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
@@ -171,9 +180,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let stack = Stack::new(cfg)?;
     let server = ApiServer::start(stack)?;
     println!("hpcw API serving on http://{} (Ctrl-C to stop)", server.addr);
+    println!("  v1 routes: POST/GET /v1/jobs, GET /v1/jobs/{{id}}?wait_ms=N,");
+    println!("             GET /v1/jobs/{{id}}/output?path=, POST/GET /v1/workflows,");
+    println!("             GET /v1/events?since=seq, GET /v1/metrics  (see docs/API.md)");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn client_for(args: &Args) -> Result<ApiClient> {
+    let addr = args
+        .opt("addr")
+        .ok_or_else(|| Error::Api("needs --addr HOST:PORT of a running `hpcw serve`".into()))?;
+    Ok(ApiClient::new(&addr))
+}
+
+fn cmd_jobs(args: &Args) -> Result<()> {
+    let client = client_for(args)?;
+    let page = client.list_jobs(args.num("offset").unwrap_or(0), args.num("limit").unwrap_or(50))?;
+    println!(
+        "{} jobs total, showing {} from offset {}",
+        page.total,
+        page.jobs.len(),
+        page.offset
+    );
+    for j in &page.jobs {
+        println!("  job {:>6}  {:<10} {}", j.job, j.kind, job_state_to_wire(j.state));
+    }
+    Ok(())
+}
+
+fn cmd_events(args: &Args) -> Result<()> {
+    let client = client_for(args)?;
+    let page = client.events(
+        args.num("since").unwrap_or(0),
+        args.num("wait-ms").unwrap_or(0),
+    )?;
+    for e in &page.events {
+        match &e.step {
+            Some(step) => println!("{:>6}  {:<9} {:<6} {step}: {}", e.seq, e.kind, e.id, e.state),
+            None => println!("{:>6}  {:<9} {:<6} {}", e.seq, e.kind, e.id, e.state),
+        }
+    }
+    println!("next cursor: {}", page.next);
+    Ok(())
 }
 
 fn whoami() -> String {

@@ -1,12 +1,15 @@
 //! Convenience re-exports for examples and downstream users.
 
-pub use crate::api::{ApiClient, ApiServer, AppPayload, AppResult, Stack};
+pub use crate::api::{
+    ApiClient, ApiServer, AppPayload, AppResult, EventDoc, JobDoc, JobsPage, ResultDoc, Stack,
+    StepSpec, StepState, WorkflowDoc, WorkflowSpec,
+};
 pub use crate::cluster::{ClusterModel, NodeId};
 pub use crate::config::StackConfig;
 pub use crate::error::{Error, Result};
 pub use crate::lustre::{Dfs, HdfsLikeFs, LustreFs};
 pub use crate::mapreduce::{JobSpec, MrEngine, MrOutcome};
-pub use crate::scheduler::{Lsf, ResourceRequest};
+pub use crate::scheduler::{JobState, Lsf, ResourceRequest};
 pub use crate::terasort::{TeragenSpec, TerasortJob};
 pub use crate::util::bytes::ByteSize;
 pub use crate::util::time::Micros;

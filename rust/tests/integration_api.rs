@@ -1,0 +1,378 @@
+//! v1 API integration: the event-driven access path end to end —
+//! long-poll waits, the event journal, DAG workflows with output
+//! chaining, path-traversal containment, API metrics, and the HTTP
+//! layer under adversarial input and concurrency.
+
+use hpcw::api::http::{request, request_full};
+use hpcw::api::wire::{StepSpec, StepState, WorkflowSpec};
+use hpcw::api::{ApiClient, ApiServer, AppPayload, Stack};
+use hpcw::codec::json::Json;
+use hpcw::config::StackConfig;
+use hpcw::lustre::Dfs as _;
+use hpcw::scheduler::JobState;
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn server() -> (ApiServer, ApiClient) {
+    let stack = Stack::new(StackConfig::tiny()).unwrap();
+    let server = ApiServer::start(stack).unwrap();
+    let client = ApiClient::new(&server.addr);
+    (server, client)
+}
+
+fn teragen(dir: &str) -> AppPayload {
+    AppPayload::Teragen {
+        rows: 200,
+        maps: 1,
+        dir: dir.to_string(),
+    }
+}
+
+fn metric(metrics: &str, name: &str) -> u64 {
+    metrics
+        .lines()
+        .find_map(|l| {
+            let l = l.strip_prefix("counter ")?;
+            let (k, v) = l.split_once(" = ")?;
+            (k.trim() == name).then(|| v.trim().parse().ok())?
+        })
+        .unwrap_or(0)
+}
+
+/// Acceptance: a wait over a queued-then-running job costs O(transitions)
+/// HTTP requests — bounded by 3 — instead of O(time / 25 ms).
+#[test]
+fn wait_is_event_driven_not_polling() {
+    let (_server, client) = server();
+    // Two 8-node jobs on an 8-node cluster: the second queues behind the
+    // first, so its wait spans PEND → RUN→DONE transitions.
+    let _first = client
+        .submit(8, "u", &teragen("/lustre/scratch/lp-a"))
+        .unwrap();
+    let second = client
+        .submit(8, "u", &teragen("/lustre/scratch/lp-b"))
+        .unwrap();
+    let before = client.request_count();
+    let doc = client.wait(second, Duration::from_secs(30)).unwrap();
+    let wait_requests = client.request_count() - before;
+    assert_eq!(doc.state, JobState::Done, "error={:?}", doc.error);
+    assert!(
+        wait_requests <= 3,
+        "wait used {wait_requests} HTTP requests; long-poll should need ≤ 3"
+    );
+    // The server recorded the long poll and the journal growth.
+    let m = client.metrics().unwrap();
+    assert!(metric(&m, "api.long_poll_waits") >= 1, "{m}");
+    assert!(metric(&m, "api.events_emitted") >= 2, "{m}");
+}
+
+/// Acceptance: a diamond DAG runs its middle steps concurrently and
+/// chains outputs through `${steps.<name>.output_dir}`.
+#[test]
+fn diamond_workflow_runs_middles_concurrently_and_chains_outputs() {
+    let stack = Stack::new(StackConfig::tiny()).unwrap();
+    // Stage the source data the root step will aggregate.
+    stack.dfs.mkdirs("/lustre/scratch/di-src").unwrap();
+    stack
+        .dfs
+        .create(
+            "/lustre/scratch/di-src/part-0",
+            b"wales,200\nwales,300\nengland,50\nengland,75\n",
+        )
+        .unwrap();
+    let server = ApiServer::start(stack).unwrap();
+    let client = ApiClient::new(&server.addr);
+
+    let hive = |sql: &str| AppPayload::HiveQuery {
+        sql: sql.into(),
+        reduces: 1,
+    };
+    let step = |name: &str, after: &[&str], payload: AppPayload| StepSpec {
+        name: name.into(),
+        after: after.iter().map(|s| s.to_string()).collect(),
+        retries: 0,
+        payload,
+    };
+    let spec = WorkflowSpec {
+        name: "diamond".into(),
+        user: "sid".into(),
+        nodes: 4,
+        steps: vec![
+            step(
+                "gen",
+                &[],
+                AppPayload::PigScript {
+                    script: "
+                        recs = LOAD '/lustre/scratch/di-src' USING ',' AS (region, amount);
+                        grp  = GROUP recs BY region;
+                        out  = FOREACH grp GENERATE group, SUM(amount);
+                        STORE out INTO '/lustre/scratch/di-report';"
+                        .into(),
+                    reduces: 1,
+                },
+            ),
+            // Both middles read gen's ACTUAL output dir via the wire
+            // reference. (Pig report lines are tab-separated.)
+            step(
+                "left",
+                &["gen"],
+                hive("SELECT region, SUM(total) FROM '${steps.gen.output_dir}' USING '\t' \
+                      SCHEMA (region, total) GROUP BY region INTO '/lustre/scratch/di-left'"),
+            ),
+            step(
+                "right",
+                &["gen"],
+                hive("SELECT region, MAX(total) FROM '${steps.gen.output_dir}' USING '\t' \
+                      SCHEMA (region, total) GROUP BY region INTO '/lustre/scratch/di-right'"),
+            ),
+            step(
+                "join",
+                &["left", "right"],
+                hive("SELECT region, COUNT(total) FROM '${steps.left.output_dir}' USING '\t' \
+                      SCHEMA (region, total) GROUP BY region INTO '/lustre/scratch/di-join'"),
+            ),
+        ],
+    };
+    let wf = client.submit_workflow(&spec).unwrap();
+    let doc = client.wait_workflow(wf, Duration::from_secs(60)).unwrap();
+    assert!(doc.complete, "doc={doc:?}");
+    assert!(doc.steps.iter().all(|s| s.state == StepState::Done));
+    // Output chaining recorded the real dirs.
+    let dir_of = |n: &str| {
+        doc.steps
+            .iter()
+            .find(|s| s.name == n)
+            .unwrap()
+            .output_dir
+            .clone()
+            .unwrap()
+    };
+    assert_eq!(dir_of("gen"), "/lustre/scratch/di-report");
+    assert_eq!(dir_of("join"), "/lustre/scratch/di-join");
+
+    // Concurrency proof from the journal: both middles were RUNNING
+    // before either was DONE.
+    let page = client.events(0, 0).unwrap();
+    let seq_of = |step: &str, state: &str| {
+        page.events
+            .iter()
+            .find(|e| {
+                e.kind == "step"
+                    && e.id == wf
+                    && e.step.as_deref() == Some(step)
+                    && e.state == state
+            })
+            .unwrap_or_else(|| panic!("no event {step}:{state} in {:?}", page.events))
+            .seq
+    };
+    assert!(seq_of("left", "RUNNING") < seq_of("right", "DONE"));
+    assert!(seq_of("right", "RUNNING") < seq_of("left", "DONE"));
+    // And the workflow-level COMPLETE event landed.
+    assert!(page
+        .events
+        .iter()
+        .any(|e| e.kind == "workflow" && e.id == wf && e.state == "COMPLETE"));
+}
+
+/// Satellite: output reads are confined to the job's output root with
+/// the stable `bad_path` code.
+#[test]
+fn output_path_traversal_rejected() {
+    let (_server, client) = server();
+    let job = client
+        .submit(2, "sid", &teragen("/lustre/scratch/esc"))
+        .unwrap();
+    client.wait(job, Duration::from_secs(30)).unwrap();
+    for bad in ["..", "../other", "a/../../etc", "/etc/passwd", "/lustre/scratch/other"] {
+        let err = client.read_output(job, bad).unwrap_err().to_string();
+        assert!(err.contains("bad_path"), "path {bad:?} gave: {err}");
+    }
+    // Legit reads still work, absolute and relative.
+    assert!(client
+        .read_output(job, "/lustre/scratch/esc/_SUCCESS")
+        .is_ok());
+    assert!(client.read_output(job, "_SUCCESS").is_ok());
+    // A job with no result yet answers not_ready, not a read.
+    let err = client.read_output(99_999, "x").unwrap_err().to_string();
+    assert!(err.contains("not_found"), "{err}");
+}
+
+/// Satellite: adversarial HTTP input cannot wedge or crash the server.
+#[test]
+fn adversarial_http_input_is_survivable() {
+    let (_server, client) = server();
+
+    // 1. Truncated request line, connection dropped.
+    {
+        let mut s = TcpStream::connect(&client.addr).unwrap();
+        s.write_all(b"POST /v1/jo").unwrap();
+    }
+    // 2. Oversized header block.
+    {
+        let mut s = TcpStream::connect(&client.addr).unwrap();
+        let mut req = String::from("GET /v1/jobs HTTP/1.1\r\n");
+        req.push_str(&format!("X-Big: {}\r\n\r\n", "a".repeat(64 * 1024)));
+        s.write_all(req.as_bytes()).unwrap();
+    }
+    // 3. Non-UTF-8 body on a JSON route → bad_json envelope.
+    let (status, body) = request(
+        &client.addr,
+        "POST",
+        "/v1/jobs",
+        Some(&[0xff, 0xfe, 0x00, 0x80]),
+    )
+    .unwrap();
+    assert_eq!(status, 400);
+    let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(
+        doc.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+        Some("bad_json")
+    );
+    // 4. Malformed JSON → bad_json.
+    let (status, _body) =
+        request(&client.addr, "POST", "/v1/jobs", Some(b"{\"nodes\": ")).unwrap();
+    assert_eq!(status, 400);
+
+    // The server still does real work afterwards.
+    let job = client
+        .submit(2, "sid", &teragen("/lustre/scratch/adv"))
+        .unwrap();
+    let doc = client.wait(job, Duration::from_secs(30)).unwrap();
+    assert_eq!(doc.state, JobState::Done);
+}
+
+/// Satellite: N concurrent clients submitting + long-polling against one
+/// server make progress with no deadlock on the pump lock.
+#[test]
+fn concurrent_clients_no_deadlock() {
+    let (server, _client) = server();
+    let addr = server.addr.clone();
+    let threads: Vec<_> = (0..8)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let client = ApiClient::new(&addr);
+                let job = client
+                    .submit(
+                        2,
+                        &format!("user{i}"),
+                        &teragen(&format!("/lustre/scratch/cc-{i}")),
+                    )
+                    .unwrap();
+                let doc = client.wait(job, Duration::from_secs(60)).unwrap();
+                assert_eq!(doc.state, JobState::Done, "error={:?}", doc.error);
+                // Poll the rest of the surface while others run.
+                client.list_jobs(0, 100).unwrap();
+                client.events(0, 0).unwrap();
+                client.metrics().unwrap();
+                job
+            })
+        })
+        .collect();
+    let mut jobs: Vec<u64> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    jobs.sort();
+    jobs.dedup();
+    assert_eq!(jobs.len(), 8, "all submissions got distinct ids");
+}
+
+/// Satellite: the API layer's own counters are visible in /v1/metrics.
+#[test]
+fn api_metrics_exposed_and_accurate() {
+    let (_server, client) = server();
+    let job = client
+        .submit(2, "m", &teragen("/lustre/scratch/met"))
+        .unwrap();
+    client.wait(job, Duration::from_secs(30)).unwrap();
+    client.list_jobs(0, 10).unwrap();
+    client.events(0, 0).unwrap();
+    let m = client.metrics().unwrap();
+    // request_count tracks every HTTP call this client made; the server
+    // must have seen at least those (the count includes this /v1/metrics
+    // request itself, counted server-side before rendering).
+    assert!(metric(&m, "api.requests") >= client.request_count() - 1, "{m}");
+    for counter in [
+        "api.requests.post_job",
+        "api.requests.get_job",
+        "api.requests.list_jobs",
+        "api.requests.get_events",
+        "api.latency_us.get_job",
+        "api.events_emitted",
+    ] {
+        assert!(metric(&m, counter) >= 1, "missing {counter} in:\n{m}");
+    }
+}
+
+/// Legacy unversioned paths answer 301 + Deprecation and never execute.
+#[test]
+fn legacy_paths_are_deprecation_answered() {
+    let (_server, client) = server();
+    for (method, path) in [
+        ("GET", "/jobs"),
+        ("POST", "/jobs"),
+        ("GET", "/jobs/1"),
+        ("GET", "/workflows/0"),
+        ("POST", "/workflows"),
+        ("GET", "/metrics"),
+    ] {
+        let (status, headers, _body) =
+            request_full(&client.addr, method, path, Some(b"{}")).unwrap();
+        assert_eq!(status, 301, "{method} {path}");
+        assert_eq!(
+            headers.get("location").map(String::as_str),
+            Some(format!("/v1{path}").as_str())
+        );
+        assert_eq!(headers.get("deprecation").map(String::as_str), Some("true"));
+    }
+    // Nothing was submitted by the legacy POSTs.
+    assert_eq!(client.list_jobs(0, 10).unwrap().total, 0);
+}
+
+/// A failing DAG step with retries exhausts its budget, skips dependents
+/// and reports ABORTED through the API.
+#[test]
+fn workflow_failure_skips_dependents_over_api() {
+    let (_server, client) = server();
+    let spec = WorkflowSpec {
+        name: "doomed".into(),
+        user: "sid".into(),
+        nodes: 2,
+        steps: vec![
+            StepSpec {
+                name: "bad".into(),
+                after: vec![],
+                retries: 1,
+                payload: AppPayload::HiveQuery {
+                    sql: "SELECT COUNT(a) FROM '/lustre/scratch/nope' SCHEMA (a) INTO '/lustre/scratch/nope-out'".into(),
+                    reduces: 1,
+                },
+            },
+            StepSpec {
+                name: "never".into(),
+                after: vec!["bad".into()],
+                retries: 0,
+                payload: teragen("/lustre/scratch/never"),
+            },
+        ],
+    };
+    let wf = client.submit_workflow(&spec).unwrap();
+    let doc = client.wait_workflow(wf, Duration::from_secs(30)).unwrap();
+    assert!(doc.aborted && !doc.complete);
+    let get = |n: &str| doc.steps.iter().find(|s| s.name == n).unwrap();
+    assert_eq!(get("bad").state, StepState::Failed);
+    assert_eq!(get("bad").attempts, 2, "one retry consumed");
+    assert_eq!(get("never").state, StepState::Skipped);
+    // Cyclic specs are rejected client-side and server-side alike.
+    let cyclic = r#"{"name":"c","user":"u","nodes":2,"steps":[
+        {"name":"a","after":["b"],"payload":{"type":"teragen","rows":1,"maps":1,"dir":"/x"}},
+        {"name":"b","after":["a"],"payload":{"type":"teragen","rows":1,"maps":1,"dir":"/y"}}]}"#;
+    let (status, body) = request(
+        &client.addr,
+        "POST",
+        "/v1/workflows",
+        Some(cyclic.as_bytes()),
+    )
+    .unwrap();
+    assert_eq!(status, 400);
+    assert!(String::from_utf8_lossy(&body).contains("cycle"));
+}

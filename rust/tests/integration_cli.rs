@@ -40,6 +40,52 @@ fn terasort_requires_rows() {
 }
 
 #[test]
+fn jobs_requires_addr() {
+    assert_eq!(hpcw::cli::run(vec!["jobs".into()]), 1);
+}
+
+#[test]
+fn events_requires_addr() {
+    assert_eq!(hpcw::cli::run(vec!["events".into()]), 1);
+}
+
+#[test]
+fn jobs_and_events_against_live_server() {
+    // Start an in-process API server, then drive the client subcommands
+    // against it exactly as a user would from another machine.
+    let stack = hpcw::api::Stack::new(hpcw::config::StackConfig::tiny()).unwrap();
+    let server = hpcw::api::ApiServer::start(stack).unwrap();
+    let client = hpcw::api::ApiClient::new(&server.addr);
+    let job = client
+        .submit(
+            2,
+            "cli",
+            &hpcw::api::AppPayload::Teragen {
+                rows: 100,
+                maps: 1,
+                dir: "/lustre/scratch/cli-jobs".into(),
+            },
+        )
+        .unwrap();
+    client.wait(job, std::time::Duration::from_secs(30)).unwrap();
+    let addr = server.addr.clone();
+    assert_eq!(
+        hpcw::cli::run(vec!["jobs".into(), "--addr".into(), addr.clone()]),
+        0
+    );
+    assert_eq!(
+        hpcw::cli::run(vec![
+            "events".into(),
+            "--addr".into(),
+            addr,
+            "--since".into(),
+            "0".into(),
+        ]),
+        0
+    );
+}
+
+#[test]
 fn hive_cli_reports_parse_errors() {
     let code = hpcw::cli::run(vec![
         "hive".into(),
