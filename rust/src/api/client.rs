@@ -11,7 +11,7 @@
 use crate::api::http::request;
 use crate::api::stack::AppPayload;
 use crate::api::wire::{
-    ErrorDoc, EventPage, JobDoc, JobsPage, SubmitRequest, WorkflowDoc, WorkflowSpec,
+    ClusterDoc, ErrorDoc, EventPage, JobDoc, JobsPage, SubmitRequest, WorkflowDoc, WorkflowSpec,
 };
 use crate::codec::json::Json;
 use crate::error::{Error, Result};
@@ -205,6 +205,20 @@ impl ApiClient {
         EventPage::from_json(&Self::check(status, &resp)?)
     }
 
+    /// Cluster snapshot: node states, lease holders, totals.
+    pub fn cluster(&self) -> Result<ClusterDoc> {
+        let (status, resp) = self.call("GET", "/v1/cluster", None)?;
+        ClusterDoc::from_json(&Self::check(status, &resp)?)
+    }
+
+    /// Node lifecycle administration: `action` ∈ `fail` / `drain` /
+    /// `restore`.
+    pub fn node_action(&self, node: u64, action: &str) -> Result<()> {
+        let (status, resp) =
+            self.call("POST", &format!("/v1/cluster/nodes/{node}/{action}"), None)?;
+        Self::check(status, &resp).map(|_| ())
+    }
+
     /// Raw metrics dump.
     pub fn metrics(&self) -> Result<String> {
         let (status, resp) = self.call("GET", "/v1/metrics", None)?;
@@ -379,6 +393,51 @@ mod tests {
         // Draining from the cursor returns nothing new.
         let empty = client.events(page.next, 0).unwrap();
         assert!(empty.events.is_empty());
+    }
+
+    #[test]
+    fn cluster_endpoint_reports_and_drives_node_lifecycle() {
+        let (_server, client) = server();
+        let doc = client.cluster().unwrap();
+        assert_eq!(doc.nodes.len(), 8);
+        assert_eq!(doc.up, 8);
+        assert_eq!(doc.leased, 0);
+        // Fail a node, drain another: the snapshot and the event journal
+        // both reflect the transitions.
+        client.node_action(3, "fail").unwrap();
+        client.node_action(5, "drain").unwrap();
+        let doc = client.cluster().unwrap();
+        assert_eq!(doc.up, 6);
+        assert_eq!(doc.down, 1);
+        assert_eq!(doc.drained, 1);
+        let down = doc.nodes.iter().find(|n| n.node == 3).unwrap();
+        assert_eq!(down.state, "DOWN");
+        // Restore both; journal carries the node transitions.
+        client.node_action(3, "restore").unwrap();
+        client.node_action(5, "restore").unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let mut seen_down = false;
+        let mut seen_up = false;
+        let mut since = 0;
+        while std::time::Instant::now() < deadline && !(seen_down && seen_up) {
+            let page = client.events(since, 200).unwrap();
+            since = page.next;
+            for e in &page.events {
+                if e.kind == "node" && e.id == 3 && e.state == "DOWN" {
+                    seen_down = true;
+                }
+                if e.kind == "node" && e.id == 3 && e.state == "UP" {
+                    seen_up = true;
+                }
+            }
+        }
+        assert!(seen_down && seen_up, "node transitions must reach the journal");
+        assert_eq!(client.cluster().unwrap().up, 8);
+        // Unknown node and unknown action answer with stable codes.
+        let err = client.node_action(99, "fail").unwrap_err();
+        assert!(err.to_string().contains("not_found"), "{err}");
+        let err = client.node_action(0, "explode").unwrap_err();
+        assert!(err.to_string().contains("bad_request"), "{err}");
     }
 
     #[test]

@@ -30,7 +30,7 @@ use crate::api::stack::Stack;
 use crate::api::synfiniway::WorkflowRun;
 use crate::api::wire::{
     self, code, ErrorDoc, EventDoc, EventPage, JobDoc, JobsPage, ResultDoc, SubmitRequest,
-    WorkflowSpec,
+    WorkflowDoc, WorkflowSpec,
 };
 use crate::codec::json::Json;
 use crate::error::Error;
@@ -317,6 +317,10 @@ fn route(state: &State, req: Request) -> Response {
         ("GET", ["v1", "jobs", id, "output"]) => ("get_output", get_output(state, &req, id)),
         ("POST", ["v1", "workflows"]) => ("post_workflow", post_workflow(state, &req)),
         ("GET", ["v1", "workflows", id]) => ("get_workflow", get_workflow(state, &req, id)),
+        ("GET", ["v1", "cluster"]) => ("get_cluster", get_cluster(state)),
+        ("POST", ["v1", "cluster", "nodes", id, action]) => {
+            ("post_node_action", post_node_action(state, id, action))
+        }
         ("GET", ["v1", "events"]) => ("get_events", get_events(state, &req)),
         ("GET", ["v1", "metrics"]) => ("get_metrics", get_metrics(state)),
         // Unversioned legacy paths: permanent redirect + Deprecation.
@@ -577,6 +581,59 @@ fn get_workflow(state: &State, req: &Request, id: &str) -> HandlerResult {
         WorkflowDoc::is_terminal,
     )?;
     Ok(Response::json(200, doc.to_json().to_string()))
+}
+
+fn get_cluster(state: &State) -> HandlerResult {
+    let stack = state.stack.lock().unwrap();
+    Ok(Response::json(200, stack.cluster_doc().to_json().to_string()))
+}
+
+/// Node lifecycle administration: `POST /v1/cluster/nodes/{id}/{action}`
+/// with `action` ∈ {`fail`, `drain`, `restore`}. The transition lands in
+/// the event journal (kind `node`).
+fn post_node_action(state: &State, id: &str, action: &str) -> HandlerResult {
+    let node: u64 = id
+        .parse()
+        .map_err(|_| ErrorDoc::new(code::BAD_REQUEST, format!("bad node id '{id}'")))?;
+    let mut stack = state.stack.lock().unwrap();
+    let known = stack.cluster_doc().nodes.iter().any(|n| n.node == node);
+    if !known {
+        return Err(ErrorDoc::not_found(format!("unknown node {node}")));
+    }
+    let new_state = match action {
+        "fail" => {
+            stack.fail_node(node).map_err(|e| bad_request(&e))?;
+            "DOWN"
+        }
+        "drain" => {
+            stack.drain_node(node).map_err(|e| bad_request(&e))?;
+            "DRAINED"
+        }
+        "restore" => {
+            stack.restore_node(node).map_err(|e| bad_request(&e))?;
+            "UP"
+        }
+        other => {
+            return Err(ErrorDoc::new(
+                code::BAD_REQUEST,
+                format!("unknown node action '{other}' (fail|drain|restore)"),
+            ))
+        }
+    };
+    // Emit while still holding the stack lock: the journal order of node
+    // events then always matches the order the transitions were applied,
+    // even when two admin actions race on separate connections.
+    state.events.emit("node", node, new_state.to_string(), None);
+    drop(stack);
+    state.work.notify();
+    Ok(Response::json(
+        200,
+        Json::obj(vec![
+            ("node", Json::num(node as f64)),
+            ("state", Json::str(new_state)),
+        ])
+        .to_string(),
+    ))
 }
 
 fn get_events(state: &State, req: &Request) -> HandlerResult {

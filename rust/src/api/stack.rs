@@ -10,7 +10,8 @@
 //! memory; determinism makes the tests honest). The HTTP API wraps this in
 //! a background pump thread.
 
-use crate::cluster::{ClusterModel, NodeId};
+use crate::api::wire::{ClusterDoc, NodeDoc};
+use crate::cluster::{ClusterModel, NodeId, NodeState};
 use crate::config::StackConfig;
 use crate::error::{Error, Result};
 use crate::frameworks::{hive, pig, rhadoop};
@@ -227,6 +228,98 @@ impl Stack {
     /// Read a result file (API step 6: data access without SSH).
     pub fn read_output(&self, path: &str) -> Result<Vec<u8>> {
         self.dfs.read(path)
+    }
+
+    /// Machine-model + lease view for `GET /v1/cluster`: per-node state,
+    /// the LSF job currently leasing each node, and remaining walltime.
+    pub fn cluster_doc(&self) -> ClusterDoc {
+        // One pass over the job table up front: node → leasing job.
+        let mut holders: BTreeMap<NodeId, &crate::scheduler::LsfJob> = BTreeMap::new();
+        for j in self.lsf.jobs().filter(|j| j.state == JobState::Running) {
+            for &n in &j.nodes {
+                holders.insert(n, j);
+            }
+        }
+        let mut nodes = Vec::with_capacity(self.cluster.len());
+        let mut up = 0u64;
+        let mut drained = 0u64;
+        let mut down = 0u64;
+        let mut leased = 0u64;
+        for n in self.cluster.nodes() {
+            let state = match n.state {
+                NodeState::Up => {
+                    up += 1;
+                    "UP"
+                }
+                NodeState::Drained => {
+                    drained += 1;
+                    "DRAINED"
+                }
+                NodeState::Down => {
+                    down += 1;
+                    "DOWN"
+                }
+            };
+            let holder = holders.get(&n.id).copied();
+            let lease_remaining_ms = holder.and_then(|j| {
+                let limit = j.req.wall_limit?;
+                let started = j.started_at?;
+                Some((started + limit).saturating_sub(self.now).0 / 1_000)
+            });
+            if holder.is_some() {
+                leased += 1;
+            }
+            nodes.push(NodeDoc {
+                node: n.id.0 as u64,
+                hostname: n.hostname(),
+                state: state.to_string(),
+                cores: n.cores as u64,
+                mem_mb: n.mem_mb,
+                job: holder.map(|j| j.id.0),
+                lease_remaining_ms,
+            });
+        }
+        ClusterDoc {
+            nodes,
+            up,
+            drained,
+            down,
+            leased,
+        }
+    }
+
+    /// Crash a node: it leaves the machine model and the LSF pool; any
+    /// running job holding it is failed (its allocation died).
+    pub fn fail_node(&mut self, node: u64) -> Result<Vec<LsfJobId>> {
+        let id = NodeId(node as u32);
+        self.cluster.fail_node(id)?;
+        let victims = self.lsf.node_failed(id);
+        for &v in &victims {
+            if let Some(e) = self.entries.get_mut(&v) {
+                e.result = Some(Err(Error::Api(format!("job {v} lost node {id}"))));
+            }
+            let _ = self.lsf.fail(v, self.now);
+        }
+        self.metrics.event(self.now, "cluster", &format!("node {id} failed"));
+        Ok(victims)
+    }
+
+    /// Administratively drain a node (maintenance): no new allocations.
+    pub fn drain_node(&mut self, node: u64) -> Result<()> {
+        let id = NodeId(node as u32);
+        self.cluster.drain_node(id)?;
+        self.lsf.drain_node(id);
+        self.metrics.event(self.now, "cluster", &format!("node {id} drained"));
+        Ok(())
+    }
+
+    /// Restore a failed or drained node into service.
+    pub fn restore_node(&mut self, node: u64) -> Result<()> {
+        let id = NodeId(node as u32);
+        self.cluster.restore_node(id)?;
+        self.lsf.restore_node(id);
+        self.metrics.event(self.now, "cluster", &format!("node {id} restored"));
+        Ok(())
     }
 
     pub fn jobs(&self) -> Vec<(LsfJobId, &'static str, JobState)> {
@@ -501,6 +594,50 @@ mod tests {
         assert!(s.job_error(id).unwrap().contains("no input files"));
         // Nodes released even on failure.
         assert_eq!(s.lsf.free_nodes(), 8);
+    }
+
+    #[test]
+    fn cluster_doc_reports_states_and_counts() {
+        let mut s = stack();
+        let doc = s.cluster_doc();
+        assert_eq!(doc.nodes.len(), 8);
+        assert_eq!(doc.up, 8);
+        assert_eq!(doc.leased, 0);
+        assert!(doc.nodes.iter().all(|n| n.state == "UP" && n.job.is_none()));
+        s.drain_node(2).unwrap();
+        s.fail_node(5).unwrap();
+        let doc = s.cluster_doc();
+        assert_eq!(doc.up, 6);
+        assert_eq!(doc.drained, 1);
+        assert_eq!(doc.down, 1);
+        assert_eq!(doc.nodes[2].state, "DRAINED");
+        assert_eq!(doc.nodes[5].state, "DOWN");
+    }
+
+    #[test]
+    fn failed_node_shrinks_pool_until_restored() {
+        let mut s = stack();
+        s.fail_node(7).unwrap();
+        assert_eq!(s.lsf.free_nodes(), 7);
+        // A full-cluster request now exceeds capacity at dispatch time but
+        // an 7-node job still runs.
+        let id = s
+            .submit(
+                7,
+                "u",
+                AppPayload::Teragen {
+                    rows: 200,
+                    maps: 2,
+                    dir: "/lustre/scratch/fn-g".into(),
+                },
+            )
+            .unwrap();
+        s.run_to_completion(id, 10).unwrap();
+        assert_eq!(s.lsf.status(id).unwrap().state, JobState::Done);
+        s.restore_node(7).unwrap();
+        assert_eq!(s.lsf.free_nodes(), 8);
+        assert_eq!(s.cluster_doc().up, 8);
+        s.lsf.check_invariants().unwrap();
     }
 
     #[test]

@@ -921,6 +921,100 @@ impl WorkflowDoc {
 }
 
 // ---------------------------------------------------------------------------
+// Cluster (GET /v1/cluster)
+// ---------------------------------------------------------------------------
+
+/// One machine-model node as reported by `GET /v1/cluster`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeDoc {
+    pub node: u64,
+    pub hostname: String,
+    /// `UP`, `DRAINED` or `DOWN`.
+    pub state: String,
+    pub cores: u64,
+    pub mem_mb: u64,
+    /// LSF job currently leasing this node, if any.
+    pub job: Option<u64>,
+    /// Milliseconds left on the lease's wall limit (absent when the lease
+    /// has no wall limit or the node is free).
+    pub lease_remaining_ms: Option<u64>,
+}
+
+impl NodeDoc {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("node", Json::num(self.node as f64)),
+            ("hostname", Json::str(&*self.hostname)),
+            ("state", Json::str(&*self.state)),
+            ("cores", Json::num(self.cores as f64)),
+            ("mem_mb", Json::num(self.mem_mb as f64)),
+        ];
+        if let Some(j) = self.job {
+            fields.push(("job", Json::num(j as f64)));
+        }
+        if let Some(ms) = self.lease_remaining_ms {
+            fields.push(("lease_remaining_ms", Json::num(ms as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<NodeDoc> {
+        Ok(NodeDoc {
+            node: j.req_u64("node")?,
+            hostname: j.req_str("hostname")?.to_string(),
+            state: j.req_str("state")?.to_string(),
+            cores: j.req_u64("cores")?,
+            mem_mb: j.req_u64("mem_mb")?,
+            job: j.get("job").and_then(Json::as_u64),
+            lease_remaining_ms: j.get("lease_remaining_ms").and_then(Json::as_u64),
+        })
+    }
+}
+
+/// `GET /v1/cluster` response: node states + lease info + totals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterDoc {
+    pub nodes: Vec<NodeDoc>,
+    pub up: u64,
+    pub drained: u64,
+    pub down: u64,
+    /// Nodes currently leased to running jobs.
+    pub leased: u64,
+}
+
+impl ClusterDoc {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "nodes",
+                Json::Arr(self.nodes.iter().map(NodeDoc::to_json).collect()),
+            ),
+            ("up", Json::num(self.up as f64)),
+            ("drained", Json::num(self.drained as f64)),
+            ("down", Json::num(self.down as f64)),
+            ("leased", Json::num(self.leased as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClusterDoc> {
+        let nodes = j
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Codec("missing array 'nodes'".into()))?
+            .iter()
+            .map(NodeDoc::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ClusterDoc {
+            nodes,
+            up: j.req_u64("up")?,
+            drained: j.req_u64("drained")?,
+            down: j.req_u64("down")?,
+            leased: j.req_u64("leased")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Events
 // ---------------------------------------------------------------------------
 
@@ -1195,6 +1289,34 @@ mod tests {
             let back =
                 EventPage::from_json(&Json::parse(&page.to_json().to_string()).unwrap()).unwrap();
             assert_eq!(page, back);
+        });
+    }
+
+    #[test]
+    fn prop_cluster_doc_round_trip() {
+        props(150, |g| {
+            let doc = ClusterDoc {
+                nodes: g.vec(0..6, |g| NodeDoc {
+                    node: g.u64(0..256),
+                    hostname: format!("sbd{:04}", g.u64(0..256)),
+                    state: g.pick(&["UP", "DRAINED", "DOWN"]).to_string(),
+                    cores: g.u64(1..64),
+                    mem_mb: g.u64(1024..65_536),
+                    job: if g.chance(0.5) { Some(g.u64(1..1_000)) } else { None },
+                    lease_remaining_ms: if g.chance(0.4) {
+                        Some(g.u64(0..10_000_000))
+                    } else {
+                        None
+                    },
+                }),
+                up: g.u64(0..256),
+                drained: g.u64(0..16),
+                down: g.u64(0..16),
+                leased: g.u64(0..256),
+            };
+            let back =
+                ClusterDoc::from_json(&Json::parse(&doc.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(doc, back);
         });
     }
 

@@ -1,0 +1,499 @@
+//! The simulated HPC batch allocator and the elastic cluster manager.
+//!
+//! Pilot-abstraction shape (Luckow et al. 2015/2016, "Hadoop on HPC"): a
+//! pilot layer acquires and releases batch-scheduler nodes at runtime
+//! while the data framework rides the changing resource pool. Here the
+//! [`BatchAllocator`] stands in for PBS/SLURM — node requests queue for a
+//! configurable delay, grants carry **walltime-bounded leases**, failed
+//! nodes never return to the pool — and the [`ClusterManager`] drives a
+//! live [`DynamicCluster`] against it: grow on backlog, drain-and-release
+//! on idle or lease expiry, and turn missed NM heartbeats into
+//! `node_failed` recoveries.
+
+use crate::cluster::NodeId;
+use crate::config::ElasticConfig;
+use crate::error::Result;
+use crate::util::time::Micros;
+use crate::wrapper::DynamicCluster;
+use crate::yarn::Container;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// One granted node lease: the batch scheduler's promise that `node` is
+/// ours until `granted_at + walltime`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeLease {
+    pub node: NodeId,
+    pub granted_at: Micros,
+    pub walltime: Micros,
+}
+
+impl NodeLease {
+    pub fn expires_at(&self) -> Micros {
+        self.granted_at + self.walltime
+    }
+
+    pub fn remaining(&self, now: Micros) -> Micros {
+        self.expires_at().saturating_sub(now)
+    }
+}
+
+/// A pending node request sitting in the batch queue.
+#[derive(Debug, Clone, Copy)]
+struct QueuedRequest {
+    count: u32,
+    ready_at: Micros,
+}
+
+/// The simulated PBS/SLURM-style allocator: a free pool of node ids, a
+/// request queue with a grant delay, and walltime leases. Node ids are
+/// never re-minted after a failure, so a lost node's identity stays dead
+/// for the life of the job (shuffle fencing relies on this).
+#[derive(Debug)]
+pub struct BatchAllocator {
+    free: VecDeque<NodeId>,
+    queue: VecDeque<QueuedRequest>,
+    leases: BTreeMap<NodeId, NodeLease>,
+    dead: BTreeSet<NodeId>,
+    queue_delay: Micros,
+    walltime: Micros,
+}
+
+impl BatchAllocator {
+    /// Allocator over an explicit pool of grantable node ids.
+    pub fn new(pool: Vec<NodeId>, cfg: &ElasticConfig) -> BatchAllocator {
+        BatchAllocator {
+            free: pool.into_iter().collect(),
+            queue: VecDeque::new(),
+            leases: BTreeMap::new(),
+            dead: BTreeSet::new(),
+            queue_delay: Micros::ms(cfg.queue_delay_ms),
+            walltime: Micros::secs(cfg.lease_walltime_s),
+        }
+    }
+
+    /// Submit a node request (`qsub`/`sbatch`): it becomes grantable after
+    /// the queue delay.
+    pub fn request(&mut self, count: u32, now: Micros) {
+        if count > 0 {
+            self.queue.push_back(QueuedRequest {
+                count,
+                ready_at: now + self.queue_delay,
+            });
+        }
+    }
+
+    /// Grant every due request the free pool can satisfy. Partial grants
+    /// leave the remainder queued (still due, so the next poll retries).
+    pub fn poll(&mut self, now: Micros) -> Vec<NodeLease> {
+        let mut out = Vec::new();
+        while let Some(req) = self.queue.front_mut() {
+            if req.ready_at > now {
+                break;
+            }
+            while req.count > 0 {
+                let Some(node) = self.free.pop_front() else {
+                    return out; // pool exhausted; remainder stays queued
+                };
+                let lease = NodeLease {
+                    node,
+                    granted_at: now,
+                    walltime: self.walltime,
+                };
+                self.leases.insert(node, lease);
+                req.count -= 1;
+                out.push(lease);
+            }
+            self.queue.pop_front();
+        }
+        out
+    }
+
+    /// Return a node to the pool (graceful drain / job end).
+    pub fn release(&mut self, node: NodeId) {
+        if self.leases.remove(&node).is_some() && !self.dead.contains(&node) {
+            self.free.push_back(node);
+        }
+    }
+
+    /// A leased node crashed: its lease ends and the id never returns to
+    /// the free pool.
+    pub fn node_failed(&mut self, node: NodeId) {
+        self.leases.remove(&node);
+        self.dead.insert(node);
+    }
+
+    /// Leases past their walltime at `now`.
+    pub fn expired(&self, now: Micros) -> Vec<NodeLease> {
+        self.leases
+            .values()
+            .filter(|l| l.expires_at() <= now)
+            .copied()
+            .collect()
+    }
+
+    pub fn lease(&self, node: NodeId) -> Option<NodeLease> {
+        self.leases.get(&node).copied()
+    }
+
+    pub fn leased_count(&self) -> usize {
+        self.leases.len()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn queued_requests(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Nodes still owed across all queued requests.
+    pub fn queued_nodes(&self) -> u32 {
+        self.queue.iter().map(|r| r.count).sum()
+    }
+}
+
+/// What one [`ClusterManager::tick`] did to the cluster.
+#[derive(Debug, Default, Clone)]
+pub struct ClusterDelta {
+    pub joined: Vec<NodeId>,
+    pub drained: Vec<NodeId>,
+    /// Nodes declared failed (missed heartbeats), with the containers that
+    /// died on them.
+    pub failed: Vec<(NodeId, Vec<Container>)>,
+}
+
+impl ClusterDelta {
+    pub fn is_empty(&self) -> bool {
+        self.joined.is_empty() && self.drained.is_empty() && self.failed.is_empty()
+    }
+}
+
+/// Drives a live [`DynamicCluster`] against the batch allocator:
+/// registers granted nodes as NMs mid-job, drains idle nodes on lease
+/// expiry or shrink requests, and converts missed heartbeats into
+/// `node_failed` events the MR engine recovers from.
+pub struct ClusterManager {
+    pub alloc: BatchAllocator,
+    cfg: ElasticConfig,
+    /// Fault injection: these nodes stop heartbeating (alive but
+    /// unreachable) until restored.
+    partitioned: BTreeSet<NodeId>,
+    pub joined_total: u64,
+    pub drained_total: u64,
+    pub failed_total: u64,
+}
+
+impl ClusterManager {
+    pub fn new(cfg: ElasticConfig, pool: Vec<NodeId>) -> ClusterManager {
+        ClusterManager {
+            alloc: BatchAllocator::new(pool, &cfg),
+            cfg,
+            partitioned: BTreeSet::new(),
+            joined_total: 0,
+            drained_total: 0,
+            failed_total: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ElasticConfig {
+        &self.cfg
+    }
+
+    /// Ask the batch scheduler for `count` more nodes (bounded by
+    /// `nodes_max` over the current NM population and what's in flight).
+    pub fn request_grow(&mut self, dc: &DynamicCluster, count: u32, now: Micros) -> u32 {
+        let ceiling = self.cfg.nodes_max;
+        let have = dc.rm.nm_count() as u32 + self.alloc.queued_nodes();
+        let want = count.min(ceiling.saturating_sub(have));
+        if want > 0 {
+            self.alloc.request(want, now);
+        }
+        want
+    }
+
+    /// Admit every node whose batch grant came through: the wrapper's
+    /// per-slave steps run against the live cluster.
+    pub fn admit_ready(&mut self, dc: &mut DynamicCluster, now: Micros) -> Result<Vec<NodeId>> {
+        let mut joined = Vec::new();
+        for lease in self.alloc.poll(now) {
+            dc.admit_node(lease.node, now)?;
+            self.joined_total += 1;
+            joined.push(lease.node);
+        }
+        Ok(joined)
+    }
+
+    /// Gracefully drain one node: refuses (and reports the error) while
+    /// the RM still tracks containers there; on success the lease returns
+    /// to the batch scheduler.
+    pub fn drain(&mut self, dc: &mut DynamicCluster, node: NodeId, now: Micros) -> Result<()> {
+        dc.decommission_node(node, now)?;
+        self.alloc.release(node);
+        self.partitioned.remove(&node);
+        self.drained_total += 1;
+        Ok(())
+    }
+
+    /// Crash a node (fault injection or external signal): the NM vanishes,
+    /// the lease dies, and the lost containers are returned for the engine
+    /// to reschedule.
+    pub fn fail(&mut self, dc: &mut DynamicCluster, node: NodeId, now: Micros) -> Vec<Container> {
+        let lost = dc.fail_node(node, now);
+        self.alloc.node_failed(node);
+        self.partitioned.remove(&node);
+        self.failed_total += 1;
+        lost
+    }
+
+    /// Fault injection: `node` stops heartbeating until `heal` — the RM's
+    /// liveness expiry will eventually declare it failed.
+    pub fn partition(&mut self, node: NodeId) {
+        self.partitioned.insert(node);
+    }
+
+    pub fn heal(&mut self, node: NodeId) {
+        self.partitioned.remove(&node);
+    }
+
+    /// One elastic control cycle:
+    /// 1. live NMs heartbeat; silent ones past `nm_timeout_ms` fail;
+    /// 2. expired leases on idle nodes drain and return to the allocator;
+    /// 3. `backlog > 0` grows the cluster (up to `nodes_max`), an idle
+    ///    cluster above `nodes_min` drains one node;
+    /// 4. due grants are admitted as new NMs.
+    pub fn tick(
+        &mut self,
+        dc: &mut DynamicCluster,
+        backlog: u32,
+        now: Micros,
+    ) -> Result<ClusterDelta> {
+        let mut delta = ClusterDelta::default();
+
+        // 1. Liveness: heartbeat + expiry.
+        let timeout = Micros::ms(self.cfg.nm_timeout_ms);
+        for (node, lost) in dc.heartbeat_and_expire(now, timeout, &self.partitioned) {
+            self.alloc.node_failed(node);
+            self.partitioned.remove(&node);
+            self.failed_total += 1;
+            delta.failed.push((node, lost));
+        }
+
+        // 2. Lease expiry: drain idle expired nodes; busy ones get one
+        // walltime extension implicitly (they drain on a later tick once
+        // idle — the engine stops placing work on a node being drained by
+        // simply racing it; refusal is not an error here).
+        for lease in self.alloc.expired(now) {
+            if dc.rm.has_nm(lease.node) && self.drain(dc, lease.node, now).is_ok() {
+                delta.drained.push(lease.node);
+            }
+        }
+
+        // 3. Autoscale policy. Requests already in the batch queue count
+        // against the backlog so a slow grant is not re-requested every
+        // tick.
+        let nms = dc.rm.nm_count() as u32;
+        let pending = self.alloc.queued_nodes();
+        if nms + pending < self.cfg.nodes_min {
+            // Below the floor (a failure shrank us): request replacements.
+            self.request_grow(dc, self.cfg.nodes_min - nms - pending, now);
+        } else if backlog > pending && nms < self.cfg.nodes_max {
+            self.request_grow(dc, backlog - pending, now);
+        } else if backlog == 0 && nms > self.cfg.nodes_min {
+            // Drain the highest-id idle node among those *this allocator
+            // leased* (joined last, shortest remaining walltime). The
+            // batch job's original allocation is never returned here — the
+            // pilot only releases nodes it acquired.
+            let idle = dc
+                .rm
+                .nm_infos()
+                .into_iter()
+                .rev()
+                .find(|i| i.containers == 0 && self.alloc.lease(i.node).is_some())
+                .map(|i| i.node);
+            if let Some(node) = idle {
+                if self.drain(dc, node, now).is_ok() {
+                    delta.drained.push(node);
+                }
+            }
+        }
+
+        // 4. Admit granted nodes.
+        delta.joined = self.admit_ready(dc, now)?;
+        Ok(delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StackConfig;
+    use crate::lustre::LustreFs;
+    use crate::metrics::Metrics;
+    use crate::util::ids::IdGen;
+    use std::sync::Arc;
+
+    fn cfg() -> ElasticConfig {
+        ElasticConfig {
+            queue_delay_ms: 100,
+            lease_walltime_s: 10,
+            nm_timeout_ms: 1_000,
+            nodes_min: 1,
+            nodes_max: 8,
+            ..Default::default()
+        }
+    }
+
+    fn pool(base: u32, n: u32) -> Vec<NodeId> {
+        (base..base + n).map(NodeId).collect()
+    }
+
+    #[test]
+    fn grants_wait_for_queue_delay() {
+        let mut a = BatchAllocator::new(pool(100, 4), &cfg());
+        a.request(2, Micros::ZERO);
+        assert!(a.poll(Micros::ms(50)).is_empty(), "still queued");
+        let granted = a.poll(Micros::ms(100));
+        assert_eq!(granted.len(), 2);
+        assert_eq!(a.leased_count(), 2);
+        assert_eq!(a.free_count(), 2);
+    }
+
+    #[test]
+    fn partial_grant_leaves_remainder_queued() {
+        let mut a = BatchAllocator::new(pool(0, 2), &cfg());
+        a.request(3, Micros::ZERO);
+        let first = a.poll(Micros::secs(1));
+        assert_eq!(first.len(), 2);
+        assert_eq!(a.queued_requests(), 1);
+        // A release frees capacity; the queued remainder gets it.
+        a.release(first[0].node);
+        let second = a.poll(Micros::secs(2));
+        assert_eq!(second.len(), 1);
+        assert_eq!(a.queued_requests(), 0);
+    }
+
+    #[test]
+    fn leases_expire_at_walltime() {
+        let mut a = BatchAllocator::new(pool(0, 1), &cfg());
+        a.request(1, Micros::ZERO);
+        let l = a.poll(Micros::ms(100)).pop().unwrap();
+        assert_eq!(l.expires_at(), Micros::ms(100) + Micros::secs(10));
+        assert!(a.expired(Micros::secs(5)).is_empty());
+        assert_eq!(a.expired(Micros::secs(11)).len(), 1);
+    }
+
+    #[test]
+    fn failed_nodes_never_return_to_the_pool() {
+        let mut a = BatchAllocator::new(pool(0, 2), &cfg());
+        a.request(2, Micros::ZERO);
+        let granted = a.poll(Micros::secs(1));
+        a.node_failed(granted[0].node);
+        a.release(granted[1].node);
+        assert_eq!(a.free_count(), 1, "only the healthy node returns");
+        // Releasing a dead node is a no-op.
+        a.release(granted[0].node);
+        assert_eq!(a.free_count(), 1);
+    }
+
+    fn live_cluster() -> (StackConfig, LustreFs, DynamicCluster) {
+        let cfg = StackConfig::tiny();
+        let fs = LustreFs::new(&cfg.lustre, &cfg.cluster);
+        let nodes: Vec<NodeId> = (0..5).map(NodeId).collect();
+        let dc = DynamicCluster::build(
+            &cfg,
+            &nodes,
+            &fs,
+            Arc::new(IdGen::default()),
+            Arc::new(Metrics::new()),
+            "cm-test",
+            Micros::ZERO,
+        )
+        .unwrap();
+        (cfg, fs, dc)
+    }
+
+    #[test]
+    fn grow_admits_new_nms_after_queue_delay() {
+        let (_c, _fs, mut dc) = live_cluster();
+        let before = dc.rm.nm_count();
+        let mut cm = ClusterManager::new(cfg(), pool(100, 3));
+        cm.request_grow(&dc, 2, Micros::ZERO);
+        assert!(cm.admit_ready(&mut dc, Micros::ms(10)).unwrap().is_empty());
+        let joined = cm.admit_ready(&mut dc, Micros::ms(200)).unwrap();
+        assert_eq!(joined.len(), 2);
+        assert_eq!(dc.rm.nm_count(), before + 2);
+        assert!(dc.nms.contains_key(&NodeId(100)));
+        dc.rm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tick_expires_partitioned_node_into_failure() {
+        let (_c, _fs, mut dc) = live_cluster();
+        let victim = *dc.slaves.last().unwrap();
+        let base = dc.rm.nm_count() as u32;
+        // nodes_min = current population: a failure below it triggers a
+        // replacement request on a later tick.
+        let mut cm = ClusterManager::new(
+            ElasticConfig {
+                nodes_min: base,
+                ..cfg()
+            },
+            pool(100, 2),
+        );
+        // Healthy ticks keep everyone alive.
+        let d = cm.tick(&mut dc, 0, Micros::ms(500)).unwrap();
+        assert!(d.failed.is_empty());
+        // Partition the victim: after the timeout it fails exactly once.
+        cm.partition(victim);
+        let d1 = cm.tick(&mut dc, 0, Micros::secs(2)).unwrap();
+        assert_eq!(d1.failed.len(), 1);
+        assert_eq!(d1.failed[0].0, victim);
+        assert!(!dc.rm.has_nm(victim));
+        let d2 = cm.tick(&mut dc, 0, Micros::secs(4)).unwrap();
+        assert!(d2.failed.is_empty(), "a dead node cannot fail twice");
+        dc.rm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tick_grows_on_backlog_and_drains_on_idle() {
+        let (_c, _fs, mut dc) = live_cluster();
+        let base = dc.rm.nm_count() as u32;
+        let mut cm = ClusterManager::new(
+            ElasticConfig {
+                nodes_min: base,
+                ..cfg()
+            },
+            pool(100, 4),
+        );
+        // Backlog of 2 queues a grow; the grant lands a tick later.
+        cm.tick(&mut dc, 2, Micros::ZERO).unwrap();
+        let d = cm.tick(&mut dc, 2, Micros::ms(200)).unwrap();
+        assert_eq!(d.joined.len(), 2);
+        assert_eq!(dc.rm.nm_count() as u32, base + 2);
+        // Idle ticks drain back down to nodes_min, one node per tick.
+        let mut drained = 0;
+        for t in 0..6 {
+            let d = cm.tick(&mut dc, 0, Micros::secs(1) + Micros::ms(t * 10)).unwrap();
+            drained += d.drained.len();
+        }
+        assert_eq!(drained, 2);
+        assert_eq!(dc.rm.nm_count() as u32, base);
+        assert_eq!(cm.alloc.free_count(), 4, "drained leases return to the pool");
+        dc.rm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lease_expiry_drains_idle_node() {
+        let (_c, _fs, mut dc) = live_cluster();
+        let mut cm = ClusterManager::new(cfg(), pool(100, 1));
+        cm.request_grow(&dc, 1, Micros::ZERO);
+        let d = cm.tick(&mut dc, 1, Micros::ms(200)).unwrap();
+        assert_eq!(d.joined, vec![NodeId(100)]);
+        // Walltime is 10s: past it, the node drains and the lease frees.
+        let d = cm.tick(&mut dc, 1, Micros::secs(15)).unwrap();
+        assert!(d.drained.contains(&NodeId(100)), "delta={d:?}");
+        assert!(!dc.rm.has_nm(NodeId(100)));
+        assert_eq!(cm.alloc.free_count(), 1);
+    }
+}

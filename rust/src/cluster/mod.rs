@@ -5,8 +5,10 @@
 //! and DAS match the §VI hardware table. Node state supports failure
 //! injection for the fault-tolerance tests.
 
+pub mod batch;
 pub mod interconnect;
 
+pub use batch::{BatchAllocator, ClusterDelta, ClusterManager, NodeLease};
 pub use interconnect::Interconnect;
 
 use crate::config::{ClusterConfig, CpuGen};

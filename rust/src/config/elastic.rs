@@ -1,0 +1,194 @@
+//! Elastic-cluster configuration: the knobs of the batch allocator, the
+//! RM liveness expiry, speculative execution and locality-aware placement.
+//!
+//! The paper's core claim is that the YARN cluster is *dynamically
+//! created* on top of the HPC batch scheduler and "scales seamlessly from
+//! a few cores to thousands of cores"; this module parameterizes the
+//! subsystem that makes the cluster elastic *during* a job's life (grow on
+//! backlog, drain on idle, recover from node loss). Environment overrides
+//! (`HPCW_NODES_MIN`, `HPCW_NODES_MAX`, `HPCW_NM_TIMEOUT`,
+//! `HPCW_SPECULATION`) exist so benches and CI can flip behaviour without
+//! a config file; see `docs/CLUSTER.md`.
+
+use crate::codec::toml::TomlDoc;
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Floor of NodeManagers the cluster manager keeps alive
+    /// (`HPCW_NODES_MIN`).
+    pub nodes_min: u32,
+    /// Ceiling of NodeManagers autoscaling may grow to (`HPCW_NODES_MAX`).
+    pub nodes_max: u32,
+    /// NM heartbeat liveness timeout in milliseconds (`HPCW_NM_TIMEOUT`);
+    /// a NodeManager silent for longer is declared failed.
+    pub nm_timeout_ms: u64,
+    /// Enable speculative duplicate execution of stragglers
+    /// (`HPCW_SPECULATION`, `0`/`false` to disable).
+    pub speculation: bool,
+    /// A running attempt is a straggler once its elapsed time exceeds
+    /// `speculation_factor ×` the mean duration of committed attempts of
+    /// the same phase…
+    pub speculation_factor: f64,
+    /// …and also exceeds this absolute floor (milliseconds), so sub-ms
+    /// tasks never trigger spurious duplicates.
+    pub speculation_floor_ms: u64,
+    /// Simulated batch-queue delay between a node request and its grant,
+    /// in milliseconds of logical time (PBS/SLURM queue wait).
+    pub queue_delay_ms: u64,
+    /// Walltime of a node lease in seconds of logical time; an expired
+    /// lease must be drained and returned to the batch scheduler.
+    pub lease_walltime_s: u64,
+    /// Nodes per rack for the rack-local placement tier (`node.0 /
+    /// rack_width` is the rack id).
+    pub rack_width: u32,
+    /// Preferred nodes attached to each input split (DFS shard residency
+    /// fan-out; HDFS would call this the replica count).
+    pub locality_replicas: u32,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            nodes_min: 1,
+            nodes_max: 64,
+            nm_timeout_ms: 3_000,
+            speculation: true,
+            speculation_factor: 2.0,
+            speculation_floor_ms: 100,
+            queue_delay_ms: 500,
+            lease_walltime_s: 3_600,
+            rack_width: 4,
+            locality_replicas: 2,
+        }
+    }
+}
+
+impl ElasticConfig {
+    /// Apply environment-variable overrides (the CI/bench knobs).
+    pub fn apply_env(&mut self) {
+        fn env_u64(name: &str) -> Option<u64> {
+            std::env::var(name).ok().and_then(|v| v.parse().ok())
+        }
+        if let Some(v) = env_u64("HPCW_NODES_MIN") {
+            self.nodes_min = v as u32;
+        }
+        if let Some(v) = env_u64("HPCW_NODES_MAX") {
+            self.nodes_max = v as u32;
+        }
+        if let Some(v) = env_u64("HPCW_NM_TIMEOUT") {
+            self.nm_timeout_ms = v;
+        }
+        if let Ok(v) = std::env::var("HPCW_SPECULATION") {
+            self.speculation = !matches!(v.as_str(), "0" | "false" | "off");
+        }
+    }
+
+    /// Apply TOML overrides under `[elastic]`.
+    pub fn apply(&mut self, doc: &TomlDoc) -> Result<()> {
+        if let Some(v) = doc.u64("elastic.nodes_min") {
+            self.nodes_min = v as u32;
+        }
+        if let Some(v) = doc.u64("elastic.nodes_max") {
+            self.nodes_max = v as u32;
+        }
+        if let Some(v) = doc.u64("elastic.nm_timeout_ms") {
+            self.nm_timeout_ms = v;
+        }
+        if let Some(v) = doc.bool("elastic.speculation") {
+            self.speculation = v;
+        }
+        if let Some(v) = doc.f64("elastic.speculation_factor") {
+            self.speculation_factor = v;
+        }
+        if let Some(v) = doc.u64("elastic.speculation_floor_ms") {
+            self.speculation_floor_ms = v;
+        }
+        if let Some(v) = doc.u64("elastic.queue_delay_ms") {
+            self.queue_delay_ms = v;
+        }
+        if let Some(v) = doc.u64("elastic.lease_walltime_s") {
+            self.lease_walltime_s = v;
+        }
+        if let Some(v) = doc.u64("elastic.rack_width") {
+            self.rack_width = v as u32;
+        }
+        if let Some(v) = doc.u64("elastic.locality_replicas") {
+            self.locality_replicas = v as u32;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes_min > self.nodes_max {
+            return Err(Error::Config(format!(
+                "elastic.nodes_min ({}) exceeds elastic.nodes_max ({})",
+                self.nodes_min, self.nodes_max
+            )));
+        }
+        if self.nm_timeout_ms == 0 {
+            return Err(Error::Config("elastic.nm_timeout_ms must be > 0".into()));
+        }
+        if self.rack_width == 0 {
+            return Err(Error::Config("elastic.rack_width must be > 0".into()));
+        }
+        if self.speculation_factor < 1.0 {
+            return Err(Error::Config(
+                "elastic.speculation_factor must be >= 1.0".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ElasticConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let doc = TomlDoc::parse(
+            r#"
+[elastic]
+nodes_min = 2
+nodes_max = 16
+nm_timeout_ms = 750
+speculation = false
+rack_width = 8
+"#,
+        )
+        .unwrap();
+        let mut e = ElasticConfig::default();
+        e.apply(&doc).unwrap();
+        assert_eq!(e.nodes_min, 2);
+        assert_eq!(e.nodes_max, 16);
+        assert_eq!(e.nm_timeout_ms, 750);
+        assert!(!e.speculation);
+        assert_eq!(e.rack_width, 8);
+        e.validate().unwrap();
+    }
+
+    #[test]
+    fn min_above_max_rejected() {
+        let e = ElasticConfig {
+            nodes_min: 10,
+            nodes_max: 2,
+            ..Default::default()
+        };
+        assert!(e.validate().is_err());
+    }
+
+    #[test]
+    fn zero_timeout_rejected() {
+        let e = ElasticConfig {
+            nm_timeout_ms: 0,
+            ..Default::default()
+        };
+        assert!(e.validate().is_err());
+    }
+}

@@ -7,12 +7,14 @@
 
 pub mod calibration;
 pub mod cluster;
+pub mod elastic;
 pub mod lustre;
 pub mod sched;
 pub mod yarn;
 
 pub use calibration::CalibrationConfig;
 pub use cluster::{CampusConfig, ClusterConfig, CpuGen};
+pub use elastic::ElasticConfig;
 pub use lustre::LustreConfig;
 pub use sched::{QueuePolicy, SchedulerConfig};
 pub use yarn::YarnConfig;
@@ -31,6 +33,7 @@ pub struct StackConfig {
     pub yarn: YarnConfig,
     pub scheduler: SchedulerConfig,
     pub calibration: CalibrationConfig,
+    pub elastic: ElasticConfig,
 }
 
 impl StackConfig {
@@ -71,6 +74,7 @@ impl StackConfig {
         cfg.yarn.apply(&doc)?;
         cfg.scheduler.apply(&doc)?;
         cfg.calibration.apply(&doc)?;
+        cfg.elastic.apply(&doc)?;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -88,6 +92,7 @@ impl StackConfig {
         self.lustre.validate()?;
         self.yarn.validate(&self.cluster)?;
         self.scheduler.validate()?;
+        self.elastic.validate()?;
         Ok(())
     }
 }

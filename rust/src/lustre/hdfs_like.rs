@@ -79,6 +79,10 @@ impl Dfs for HdfsLikeFs {
         self.store.read_range(path, offset, len)
     }
 
+    fn shard_of(&self, path: &str) -> Option<u64> {
+        Some(self.store.shard_index(path))
+    }
+
     fn size(&self, path: &str) -> Result<u64> {
         self.store.size(path)
     }

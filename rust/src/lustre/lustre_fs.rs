@@ -71,6 +71,10 @@ impl Dfs for LustreFs {
         self.store.read_range(path, offset, len)
     }
 
+    fn shard_of(&self, path: &str) -> Option<u64> {
+        Some(self.store.shard_index(path))
+    }
+
     fn size(&self, path: &str) -> Result<u64> {
         self.store.size(path)
     }

@@ -110,6 +110,12 @@ impl MemStore {
         &self.shards[(fnv1a(path.as_bytes()) as usize) % self.shards.len()]
     }
 
+    /// Index of the shard `path` routes to — the data-plane residency the
+    /// locality-aware split planner maps onto preferred nodes.
+    pub fn shard_index(&self, path: &str) -> u64 {
+        fnv1a(path.as_bytes()) % self.shards.len() as u64
+    }
+
     fn file_exists(&self, path: &str) -> bool {
         self.shard_for(path).lock().unwrap().contains_key(path)
     }

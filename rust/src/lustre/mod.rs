@@ -133,6 +133,13 @@ pub trait Dfs: Send + Sync {
         self.read(path).map(std::sync::Arc::from)
     }
     fn read_range(&self, path: &str, offset: u64, len: u64) -> Result<Vec<u8>>;
+    /// Data-plane shard a file resides in, when the backend is sharded
+    /// (both in-memory backends are). Locality-aware split planning maps
+    /// this residency onto preferred nodes; `None` means "no residency
+    /// information — place anywhere".
+    fn shard_of(&self, _path: &str) -> Option<u64> {
+        None
+    }
     fn size(&self, path: &str) -> Result<u64>;
     fn exists(&self, path: &str) -> bool;
     fn list(&self, dir: &str) -> Vec<String>;

@@ -36,6 +36,22 @@ pub const CONTAINERS_GRANTED: &str = "CONTAINERS_GRANTED";
 /// Shuffle segments a reduce fetched before the job's last map committed
 /// (slow-start fetch overlap).
 pub const SHUFFLE_SEGMENTS_PREFETCHED: &str = "SHUFFLE_SEGMENTS_PREFETCHED";
+/// Map containers granted on one of the split's preferred nodes.
+pub const LOCAL_MAPS: &str = "LOCAL_MAPS";
+/// Map containers granted in a preferred node's rack (but not on it).
+pub const RACK_MAPS: &str = "RACK_MAPS";
+/// Map containers granted with no locality match (or no preference).
+pub const OTHER_MAPS: &str = "OTHER_MAPS";
+/// Speculative duplicate attempts that committed before the original.
+pub const SPECULATIVE_WINS: &str = "SPECULATIVE_WINS";
+/// NodeManagers that joined the live cluster mid-job (elastic grow).
+pub const NODES_JOINED: &str = "NODES_JOINED";
+/// NodeManagers drained and returned to the batch scheduler mid-job.
+pub const NODES_DRAINED: &str = "NODES_DRAINED";
+/// NodeManagers lost mid-job (crash or missed-heartbeat expiry).
+pub const NODES_FAILED: &str = "NODES_FAILED";
+/// Committed map outputs invalidated by a node loss and re-executed.
+pub const MAPS_INVALIDATED: &str = "MAPS_INVALIDATED";
 
 impl Counters {
     pub fn new() -> Self {

@@ -23,11 +23,13 @@ pub mod split;
 pub mod task;
 
 pub use counters::Counters;
-pub use real::{MrEngine, MrOutcome, PhaseTimings, SchedMode};
+pub use real::{
+    ElasticAction, ElasticEvent, ElasticPlan, MrEngine, MrOutcome, PhaseTimings, SchedMode,
+};
 pub use recordbuf::RecordBuf;
 pub use sim::{simulate_mr, MrSimReport, MrWorkload};
 
-pub use split::{InputFormat, InputSplit};
+pub use split::{assign_locality, InputFormat, InputSplit};
 pub use task::{FailurePlan, TaskId, TaskKind};
 
 use std::sync::Arc;

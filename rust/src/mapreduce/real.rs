@@ -24,12 +24,16 @@
 //! [`task::MAX_ATTEMPTS`]; a node failure mid-job invalidates its shuffle
 //! segments and re-runs exactly the affected maps.
 
+use crate::cluster::{ClusterManager, NodeId};
+use crate::config::ElasticConfig;
 use crate::error::{Error, Result};
 use crate::lustre::Dfs;
 use crate::mapreduce::counters::{self, Counters};
 use crate::mapreduce::recordbuf::RecordBuf;
 use crate::mapreduce::shuffle::{merge_segments, Segment, ShuffleStore};
-use crate::mapreduce::split::{plan_splits, read_records, row_range_splits, InputFormat, InputSplit};
+use crate::mapreduce::split::{
+    assign_locality, plan_splits, read_records, row_range_splits, InputFormat, InputSplit,
+};
 use crate::mapreduce::task::{TaskId, MAX_ATTEMPTS};
 use crate::mapreduce::JobSpec;
 use crate::util::ids::AppId;
@@ -38,7 +42,7 @@ use crate::util::time::Micros;
 use crate::wrapper::DynamicCluster;
 use crate::yarn::container::{Container, ContainerKind, ContainerRequest, Resource};
 use crate::yarn::jobhistory::AppReport;
-use crate::yarn::rm::AppState;
+use crate::yarn::rm::{AppState, LocalityTier};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -120,6 +124,54 @@ fn env_slowstart() -> f64 {
         .unwrap_or(DEFAULT_SLOWSTART)
 }
 
+/// A scripted elastic/chaos event: once `after_maps_committed` maps have
+/// committed, `action` runs against the live cluster. Deterministic
+/// fault/growth injection for tests and the elastic bench.
+#[derive(Debug, Clone)]
+pub struct ElasticEvent {
+    pub after_maps_committed: u32,
+    pub action: ElasticAction,
+}
+
+/// What a scripted elastic event does.
+#[derive(Debug, Clone)]
+pub enum ElasticAction {
+    /// Crash the nth current slave (NM vanishes, containers lost).
+    FailNthSlave(usize),
+    /// Crash the node holding map `m`'s committed shuffle output —
+    /// deterministic "lose exactly this map's segments" injection. Fires
+    /// once map `m` has committed (requires a shuffling job).
+    FailMapHost(u32),
+    /// The nth slave stops heartbeating; RM liveness expiry will declare
+    /// it failed after `nm_timeout_ms`. Requires a cluster manager.
+    PartitionNthSlave(usize),
+    /// Request `n` more nodes from the batch allocator. Requires a
+    /// cluster manager.
+    Grow(u32),
+    /// Gracefully drain the nth slave (retries until it is idle).
+    DrainNthSlave(usize),
+}
+
+/// A deterministic schedule of [`ElasticEvent`]s for one job.
+#[derive(Debug, Clone, Default)]
+pub struct ElasticPlan {
+    pub events: Vec<ElasticEvent>,
+}
+
+impl ElasticPlan {
+    pub fn new() -> ElasticPlan {
+        ElasticPlan::default()
+    }
+
+    pub fn at_maps(mut self, after_maps_committed: u32, action: ElasticAction) -> ElasticPlan {
+        self.events.push(ElasticEvent {
+            after_maps_committed,
+            action,
+        });
+        self
+    }
+}
+
 /// The Real-mode engine. Holds the live cluster and the worker pool.
 pub struct MrEngine<'a> {
     pub cluster: &'a mut DynamicCluster,
@@ -131,6 +183,16 @@ pub struct MrEngine<'a> {
     pub mode: SchedMode,
     /// Reduce slow-start fraction in `[0, 1]` (`HPCW_SLOWSTART`).
     pub slowstart: f64,
+    /// Elastic knobs: speculation, locality fan-out, liveness timeout
+    /// (`HPCW_SPECULATION`, `HPCW_NM_TIMEOUT`, … applied from the
+    /// environment).
+    pub elastic_cfg: ElasticConfig,
+    /// Batch-allocator-backed elasticity: when present, the scheduler
+    /// loop runs a cluster-manager tick per cycle — NM heartbeats +
+    /// liveness expiry, lease expiry drains, grow-on-backlog.
+    pub cluster_mgr: Option<ClusterManager>,
+    /// Scripted elastic/chaos events for this engine's next job.
+    pub plan: ElasticPlan,
 }
 
 impl<'a> MrEngine<'a> {
@@ -141,6 +203,8 @@ impl<'a> MrEngine<'a> {
         map_memory_mb: u64,
         reduce_memory_mb: u64,
     ) -> Self {
+        let mut elastic_cfg = ElasticConfig::default();
+        elastic_cfg.apply_env();
         MrEngine {
             cluster,
             dfs,
@@ -149,6 +213,9 @@ impl<'a> MrEngine<'a> {
             reduce_memory_mb,
             mode: env_sched_mode(),
             slowstart: env_slowstart(),
+            elastic_cfg,
+            cluster_mgr: None,
+            plan: ElasticPlan::default(),
         }
     }
 
@@ -162,6 +229,21 @@ impl<'a> MrEngine<'a> {
         self
     }
 
+    pub fn with_elastic_cfg(mut self, cfg: ElasticConfig) -> Self {
+        self.elastic_cfg = cfg;
+        self
+    }
+
+    pub fn with_cluster_manager(mut self, cm: ClusterManager) -> Self {
+        self.cluster_mgr = Some(cm);
+        self
+    }
+
+    pub fn with_plan(mut self, plan: ElasticPlan) -> Self {
+        self.plan = plan;
+        self
+    }
+
     /// Run a job to completion. `now` is the logical submission time used
     /// for YARN bookkeeping; wall time is measured for the outcome.
     pub fn run(&mut self, spec: Arc<JobSpec>, user: &str, now: Micros) -> Result<MrOutcome> {
@@ -172,7 +254,7 @@ impl<'a> MrEngine<'a> {
                 spec.output_dir
             )));
         }
-        let splits: Vec<InputSplit> = match spec.input_format {
+        let mut splits: Vec<InputSplit> = match spec.input_format {
             InputFormat::RowRange => {
                 let (rows, maps) = spec.synthetic_rows.ok_or_else(|| {
                     Error::MapReduce("RowRange job without synthetic_rows".into())
@@ -181,6 +263,14 @@ impl<'a> MrEngine<'a> {
             }
             fmt => plan_splits(&*self.dfs, &spec.input_dir, fmt, spec.split_bytes)?,
         };
+        // Locality: each split's preferred nodes come from its file's DFS
+        // shard residency, mapped over the current slave set.
+        assign_locality(
+            &mut splits,
+            &*self.dfs,
+            &self.cluster.slaves,
+            self.elastic_cfg.locality_replicas,
+        );
         // Shared once: task attempts, retries and re-grants borrow the same
         // allocation instead of cloning split metadata per attempt.
         let splits: Arc<[InputSplit]> = splits.into();
@@ -329,19 +419,19 @@ impl<'a> MrEngine<'a> {
         t0: Instant,
         phases: &mut PhaseTimings,
     ) -> Result<()> {
-        let mut running: BTreeMap<u64, InFlight> = BTreeMap::new();
         let (tx, rx): (TaskTx, TaskRx) = channel();
         let cancel = Arc::new(AtomicBool::new(false));
+        let mut st = PipeState::new(splits.len() as u32, spec.n_reduces, self.plan.events.len());
         let result = self.pipelined_loop(
             spec, app, splits, shuffle, counters, tmp_root, now, t0, phases, &tx, &rx,
-            &cancel, &mut running,
+            &cancel, &mut st,
         );
         if result.is_err() {
             // Whatever failed, leave the shared pool clean: flag in-flight
             // slow-start reduces to stop waiting and drain every running
             // task so its container is released (fail_app sweeps any
             // release this misses).
-            self.drain_failed(app, &rx, &mut running, &cancel);
+            self.drain_failed(app, &rx, &mut st.running, &cancel);
         }
         result
     }
@@ -361,7 +451,7 @@ impl<'a> MrEngine<'a> {
         tx: &TaskTx,
         rx: &TaskRx,
         cancel: &Arc<AtomicBool>,
-        running: &mut BTreeMap<u64, InFlight>,
+        st: &mut PipeState,
     ) -> Result<()> {
         let n_maps = splits.len() as u32;
         let n_reduces = spec.n_reduces;
@@ -369,81 +459,155 @@ impl<'a> MrEngine<'a> {
         // Reduces become eligible once this many maps committed.
         let slowstart_target = ((self.slowstart * n_maps as f64).ceil() as u32).min(n_maps);
 
-        let mut pending_maps: VecDeque<(u32, u32)> =
-            (0..n_maps).map(|i| (i, 0)).collect();
-        let mut pending_reduces: VecDeque<(u32, u32)> = if map_only {
-            VecDeque::new()
-        } else {
-            (0..n_reduces).map(|r| (r, 0)).collect()
-        };
-        let mut next_token = 0u64;
-        let mut maps_committed = 0u32;
-        let mut reduces_done = 0u32;
-        let mut maps_running = 0u32;
-        let mut reduces_running = 0u32;
         let mut first_map_launched = false;
         let mut first_reduce_launched = false;
         let mut zero_tries = 0u32;
         let mut backoff = GRANT_BACKOFF_START;
+        // Start of the current nothing-running-waiting-for-grants stretch.
+        let mut grow_wait_since: Option<Instant> = None;
+        let has_elastic = self.cluster_mgr.is_some() || !self.plan.events.is_empty();
+        // Straggler detection and elastic control both need the loop to
+        // wake without a completion. Elastic control wants a fine slice;
+        // speculation alone needs to wake no faster than half its own
+        // straggler floor, so the default (non-elastic) path keeps its
+        // event-driven shape to within a couple of wakes per floor.
+        let wait_slice = if has_elastic {
+            Some(ELASTIC_TICK)
+        } else if self.elastic_cfg.speculation {
+            Some(Duration::from_millis(
+                (self.elastic_cfg.speculation_floor_ms / 2).max(1),
+            ))
+        } else {
+            None
+        };
 
         loop {
-            // --- launch: grant containers for every eligible pending task.
+            // --- elastic control plane: scripted chaos/growth events, NM
+            // heartbeats + liveness expiry, lease management, autoscale.
+            if has_elastic {
+                let lnow = now + Micros::from_secs_f64(t0.elapsed().as_secs_f64());
+                self.elastic_step(st, shuffle, counters, lnow)?;
+            }
+
+            // --- straggler detection: duplicate slow attempts once a
+            // phase majority has committed and capacity is otherwise idle.
+            if self.elastic_cfg.speculation {
+                maybe_speculate(st, &self.elastic_cfg, counters);
+            }
+
+            // --- launch maps: one locality-aware grant per pending task
+            // (node-local > rack-local > any against the split's preferred
+            // nodes).
             let mut launched = 0u32;
-            while !pending_maps.is_empty() {
-                let got = self.grant(
-                    app,
-                    pending_maps.len() as u32,
-                    self.map_memory_mb,
+            while let Some(&(idx, attempt, speculative)) = st.pending_maps.front() {
+                if st.maps.done[idx as usize] {
+                    // A queued speculative duplicate whose original already
+                    // committed: drop it instead of re-running the task.
+                    // (Maps pop from the front only, so a head check is
+                    // enough — no full-queue sweep on the hot path.)
+                    st.pending_maps.pop_front();
+                    st.maps.live[idx as usize] -= 1;
+                    continue;
+                }
+                let prefs: &[NodeId] = &splits[idx as usize].preferred;
+                // A speculative duplicate must not land on a node already
+                // running an attempt of this task — the straggler's host
+                // is the likely culprit (Hadoop excludes it too).
+                let avoid: Vec<NodeId> = if speculative {
+                    st.running
+                        .values()
+                        .filter(|f| {
+                            !f.orphaned
+                                && matches!(f.task,
+                                    TaskRef::Map { idx: j, .. } if j == idx)
+                        })
+                        .map(|f| f.container.node)
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                let got = self.cluster.rm.allocate_one(
+                    *app,
+                    Resource::new(self.map_memory_mb, 1),
                     ContainerKind::Map,
+                    prefs,
+                    &avoid,
                     now,
                 )?;
-                if got.is_empty() {
-                    break;
+                let Some((c, tier)) = got else { break };
+                if let Some(nm) = self.cluster.nms.get_mut(&c.node) {
+                    nm.launch(c.id)?;
                 }
-                counters.add(counters::CONTAINERS_GRANTED, got.len() as u64);
-                for c in got {
-                    let (idx, attempt) = pending_maps.pop_front().unwrap();
-                    if !first_map_launched {
-                        first_map_launched = true;
-                        phases.first_map_launch_s = t0.elapsed().as_secs_f64();
-                    }
-                    let token = next_token;
-                    next_token += 1;
-                    let task = TaskRef::Map { idx, attempt };
-                    running.insert(token, InFlight { container: c, task });
-                    maps_running += 1;
-                    launched += 1;
-                    self.pool.submit_with(
-                        token,
-                        MapTaskArgs {
-                            idx,
-                            attempt,
-                            node: c.node,
-                            splits: Arc::clone(splits),
-                            spec: Arc::clone(spec),
-                            shuffle: Arc::clone(shuffle),
-                            counters: Arc::clone(counters),
-                            dfs: Arc::clone(&self.dfs),
-                        },
-                        run_map_task,
-                        tx.clone(),
-                    );
+                st.pending_maps.pop_front();
+                counters.add(counters::CONTAINERS_GRANTED, 1);
+                let tier_counter = match tier {
+                    LocalityTier::NodeLocal => counters::LOCAL_MAPS,
+                    LocalityTier::RackLocal => counters::RACK_MAPS,
+                    LocalityTier::Any => counters::OTHER_MAPS,
+                };
+                counters.add(tier_counter, 1);
+                if !first_map_launched {
+                    first_map_launched = true;
+                    phases.first_map_launch_s = t0.elapsed().as_secs_f64();
                 }
+                let token = st.next_token;
+                st.next_token += 1;
+                st.running.insert(
+                    token,
+                    InFlight {
+                        container: c,
+                        task: TaskRef::Map { idx, attempt },
+                        started: Instant::now(),
+                        speculative,
+                        orphaned: false,
+                    },
+                );
+                st.maps_running += 1;
+                launched += 1;
+                self.pool.submit_with(
+                    token,
+                    MapTaskArgs {
+                        idx,
+                        attempt,
+                        node: c.node,
+                        splits: Arc::clone(splits),
+                        spec: Arc::clone(spec),
+                        shuffle: Arc::clone(shuffle),
+                        counters: Arc::clone(counters),
+                        dfs: Arc::clone(&self.dfs),
+                    },
+                    run_map_task,
+                    tx.clone(),
+                );
             }
-            if !map_only && maps_committed >= slowstart_target {
+            if !map_only && st.maps_committed >= slowstart_target {
                 // While maps are still outstanding, cap in-flight reduces
                 // below the pool width so slow-start fetch-waits can never
                 // starve the remaining maps of worker threads.
                 // (With a 1-wide pool that cap is zero: there is no spare
                 // worker, so reduces wait for the maps to drain.)
-                let maps_outstanding = !pending_maps.is_empty() || maps_running > 0;
+                let maps_outstanding = !st.pending_maps.is_empty() || st.maps_running > 0;
                 let cap = if maps_outstanding {
                     self.pool.size().saturating_sub(1) as u32
                 } else {
                     u32::MAX
                 };
-                while !pending_reduces.is_empty() && reduces_running < cap {
-                    let want = (pending_reduces.len() as u32).min(cap - reduces_running);
+                // The batched grant below pops entries from arbitrary
+                // queue positions, so stale speculative duplicates of
+                // committed reduces are swept first (the queue is at most
+                // n_reduces long — cheap).
+                if !st.pending_reduces.is_empty() {
+                    let rt = &mut st.reduces;
+                    st.pending_reduces.retain(|&(r, _, _)| {
+                        let keep = !rt.done[r as usize];
+                        if !keep {
+                            rt.live[r as usize] -= 1;
+                        }
+                        keep
+                    });
+                }
+                while !st.pending_reduces.is_empty() && st.reduces_running < cap {
+                    let want = (st.pending_reduces.len() as u32).min(cap - st.reduces_running);
                     let got = self.grant(
                         app,
                         want,
@@ -456,18 +620,28 @@ impl<'a> MrEngine<'a> {
                     }
                     counters.add(counters::CONTAINERS_GRANTED, got.len() as u64);
                     for c in got {
-                        let (r, attempt) = pending_reduces.pop_front().unwrap();
+                        let (r, attempt, speculative) =
+                            st.pending_reduces.pop_front().unwrap();
                         if !first_reduce_launched {
                             first_reduce_launched = true;
                             phases.first_reduce_launch_s = t0.elapsed().as_secs_f64();
                             counters.add(counters::FIRST_REDUCE_LAUNCHED, 1);
-                            counters.add(counters::MAPS_AT_FIRST_REDUCE, maps_committed as u64);
+                            counters
+                                .add(counters::MAPS_AT_FIRST_REDUCE, st.maps_committed as u64);
                         }
-                        let token = next_token;
-                        next_token += 1;
-                        let task = TaskRef::Reduce { r, attempt };
-                        running.insert(token, InFlight { container: c, task });
-                        reduces_running += 1;
+                        let token = st.next_token;
+                        st.next_token += 1;
+                        st.running.insert(
+                            token,
+                            InFlight {
+                                container: c,
+                                task: TaskRef::Reduce { r, attempt },
+                                started: Instant::now(),
+                                speculative,
+                                orphaned: false,
+                            },
+                        );
+                        st.reduces_running += 1;
                         launched += 1;
                         self.pool.submit_with(
                             token,
@@ -489,16 +663,37 @@ impl<'a> MrEngine<'a> {
                 }
             }
 
-            if running.is_empty() {
-                if pending_maps.is_empty() && pending_reduces.is_empty() {
+            if st.running.is_empty() {
+                if st.pending_maps.is_empty() && st.pending_reduces.is_empty() {
                     break; // job complete
+                }
+                debug_assert_eq!(launched, 0);
+                // Capacity known to be on its way (queued batch grants or
+                // a below-floor cluster being replenished): keep ticking
+                // the control plane without consuming the hard-retry
+                // budget, bounded by a wall-clock stall limit. The retry
+                // counter ticks once per grow-wait stretch, not per sleep.
+                let growing = self.cluster_mgr.as_ref().is_some_and(|cm| {
+                    cm.alloc.queued_nodes() > 0 || cm.alloc.free_count() > 0
+                });
+                if growing {
+                    if grow_wait_since.is_none() {
+                        counters.add(counters::GRANT_ZERO_RETRIES, 1);
+                    }
+                    let since = *grow_wait_since.get_or_insert_with(Instant::now);
+                    if since.elapsed() > GROW_STALL_LIMIT {
+                        return Err(Error::MapReduce(
+                            "cluster grow stalled: batch grants never arrived".into(),
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue;
                 }
                 // Nothing in flight and the RM granted zero containers:
                 // bounded retry with backoff (capacity can free between
                 // scheduler cycles) instead of failing the job outright.
-                debug_assert_eq!(launched, 0);
-                zero_tries += 1;
                 counters.add(counters::GRANT_ZERO_RETRIES, 1);
+                zero_tries += 1;
                 if zero_tries > MAX_GRANT_RETRIES {
                     return Err(Error::MapReduce(format!(
                         "RM granted zero containers over {MAX_GRANT_RETRIES} \
@@ -511,55 +706,239 @@ impl<'a> MrEngine<'a> {
             }
             zero_tries = 0;
             backoff = GRANT_BACKOFF_START;
+            grow_wait_since = None;
 
-            // --- wait for exactly one completion, then release + re-grant.
-            let (token, result) = rx
-                .recv()
-                .map_err(|_| Error::MapReduce("scheduler channel closed".into()))?;
-            let inflight = running
-                .remove(&token)
-                .ok_or_else(|| Error::MapReduce(format!("unknown task token {token}")))?;
+            // --- wait for a completion, then release + re-grant. With an
+            // elastic control plane (or speculation) the wait is sliced so
+            // heartbeats, expiry, admissions and straggler scans stay
+            // timely even when completions are sparse.
+            let (token, result) = if let Some(slice) = wait_slice {
+                match rx.recv_timeout(slice) {
+                    Ok(v) => v,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        return Err(Error::MapReduce("scheduler channel closed".into()))
+                    }
+                }
+            } else {
+                rx.recv()
+                    .map_err(|_| Error::MapReduce("scheduler channel closed".into()))?
+            };
+            let inflight = match st.running.remove(&token) {
+                Some(inflight) => inflight,
+                None => {
+                    if st.detached.remove(&token) {
+                        continue; // killed speculation loser finally returned
+                    }
+                    return Err(Error::MapReduce(format!("unknown task token {token}")));
+                }
+            };
             let ok = matches!(result, Some(Ok(())));
+            if inflight.orphaned {
+                // The attempt's node died mid-flight: its container is
+                // already gone from the RM, its commit (if any) was fenced
+                // out of the shuffle, and its task was rescheduled when
+                // the node failed. Discard the zombie result.
+                match inflight.task {
+                    TaskRef::Map { .. } => st.maps_running -= 1,
+                    TaskRef::Reduce { .. } => st.reduces_running -= 1,
+                }
+                continue;
+            }
             self.finish_container(app, &inflight.container, ok)?;
             match inflight.task {
-                TaskRef::Map { idx, attempt } => {
-                    maps_running -= 1;
+                TaskRef::Map { idx, .. } => {
+                    st.maps_running -= 1;
+                    let i = idx as usize;
+                    st.maps.live[i] -= 1;
                     if ok {
-                        maps_committed += 1;
-                        phases.last_map_commit_s = t0.elapsed().as_secs_f64();
-                    } else {
+                        if !st.maps.done[i] {
+                            st.maps.done[i] = true;
+                            st.maps_committed += 1;
+                            st.maps
+                                .durations_s
+                                .push(inflight.started.elapsed().as_secs_f64());
+                            phases.last_map_commit_s = t0.elapsed().as_secs_f64();
+                            if inflight.speculative {
+                                counters.add(counters::SPECULATIVE_WINS, 1);
+                            }
+                            // First commit wins: kill any still-running
+                            // twin of this task — release its container
+                            // now and stop waiting on its result.
+                            self.kill_twins(app, st, inflight.task);
+                        }
+                        // else: a speculative twin lost the race — first
+                        // commit won, this container just gets released.
+                    } else if !st.maps.done[i] {
                         counters.add(counters::TASKS_FAILED, 1);
-                        let next = attempt + 1;
-                        if next >= MAX_ATTEMPTS {
+                        st.maps.failures[i] += 1;
+                        if st.maps.failures[i] >= MAX_ATTEMPTS {
                             // The caller drains in-flight tasks on error.
                             return Err(Error::MapReduce(format!(
                                 "map {idx} failed {MAX_ATTEMPTS} attempts"
                             )));
                         }
-                        pending_maps.push_back((idx, next));
+                        if st.maps.live[i] == 0 {
+                            st.push_map(idx, false);
+                        }
                     }
                 }
-                TaskRef::Reduce { r, attempt } => {
-                    reduces_running -= 1;
+                TaskRef::Reduce { r, .. } => {
+                    st.reduces_running -= 1;
+                    let i = r as usize;
+                    st.reduces.live[i] -= 1;
                     if ok {
-                        reduces_done += 1;
-                        phases.last_reduce_commit_s = t0.elapsed().as_secs_f64();
-                    } else {
+                        if !st.reduces.done[i] {
+                            st.reduces.done[i] = true;
+                            st.reduces_done += 1;
+                            st.reduces
+                                .durations_s
+                                .push(inflight.started.elapsed().as_secs_f64());
+                            phases.last_reduce_commit_s = t0.elapsed().as_secs_f64();
+                            if inflight.speculative {
+                                counters.add(counters::SPECULATIVE_WINS, 1);
+                            }
+                            self.kill_twins(app, st, inflight.task);
+                        }
+                    } else if !st.reduces.done[i] {
                         counters.add(counters::TASKS_FAILED, 1);
-                        let next = attempt + 1;
-                        if next >= MAX_ATTEMPTS {
+                        st.reduces.failures[i] += 1;
+                        if st.reduces.failures[i] >= MAX_ATTEMPTS {
                             // The caller drains in-flight tasks on error.
                             return Err(Error::MapReduce(format!(
                                 "reduce {r} failed {MAX_ATTEMPTS} attempts"
                             )));
                         }
-                        pending_reduces.push_back((r, next));
+                        if st.reduces.live[i] == 0 {
+                            st.push_reduce(r, false);
+                        }
                     }
                 }
             }
         }
-        debug_assert_eq!(maps_committed, n_maps);
-        debug_assert!(map_only || reduces_done == n_reduces);
+        debug_assert_eq!(st.maps_committed, n_maps);
+        debug_assert!(map_only || st.reduces_done == n_reduces);
+        Ok(())
+    }
+
+    /// First-commit-wins cleanup: every still-running non-orphaned
+    /// attempt of the committed task is killed — its container released
+    /// now, its token detached so the scheduler stops waiting on it and
+    /// discards its late pool result.
+    fn kill_twins(&mut self, app: &AppId, st: &mut PipeState, task: TaskRef) {
+        let twins: Vec<u64> = st
+            .running
+            .iter()
+            .filter(|(_, f)| !f.orphaned && f.task.same_task(task))
+            .map(|(&t, _)| t)
+            .collect();
+        for t in twins {
+            let loser = st.running.remove(&t).unwrap();
+            let _ = self.finish_container(app, &loser.container, false);
+            match loser.task {
+                TaskRef::Map { idx, .. } => {
+                    st.maps_running -= 1;
+                    st.maps.live[idx as usize] -= 1;
+                }
+                TaskRef::Reduce { r, .. } => {
+                    st.reduces_running -= 1;
+                    st.reduces.live[r as usize] -= 1;
+                }
+            }
+            st.detached.insert(t);
+        }
+    }
+
+    /// One elastic control-plane step: fire due scripted events, then run
+    /// a cluster-manager tick (heartbeats → expiry, lease drains,
+    /// grow-on-backlog, admissions).
+    fn elastic_step(
+        &mut self,
+        st: &mut PipeState,
+        shuffle: &Arc<ShuffleStore>,
+        counters: &Arc<Counters>,
+        lnow: Micros,
+    ) -> Result<()> {
+        for i in 0..self.plan.events.len() {
+            if st.fired[i] || st.maps_committed < self.plan.events[i].after_maps_committed {
+                continue;
+            }
+            let action = self.plan.events[i].action.clone();
+            let done = match action {
+                ElasticAction::FailNthSlave(n) => {
+                    if let Some(&node) = self.cluster.slaves.get(n) {
+                        if let Some(cm) = self.cluster_mgr.as_mut() {
+                            cm.fail(self.cluster, node, lnow);
+                        } else {
+                            self.cluster.fail_node(node, lnow);
+                        }
+                        apply_node_loss(node, st, shuffle, counters);
+                    }
+                    true
+                }
+                ElasticAction::FailMapHost(m) => {
+                    if !st.maps.done.get(m as usize).copied().unwrap_or(false) {
+                        false // not committed yet; retry on a later step
+                    } else {
+                        if let Some(seg) = shuffle.try_fetch(m, 0) {
+                            let node = seg.node;
+                            if self.cluster.rm.has_nm(node) {
+                                if let Some(cm) = self.cluster_mgr.as_mut() {
+                                    cm.fail(self.cluster, node, lnow);
+                                } else {
+                                    self.cluster.fail_node(node, lnow);
+                                }
+                                apply_node_loss(node, st, shuffle, counters);
+                            }
+                        }
+                        true
+                    }
+                }
+                ElasticAction::PartitionNthSlave(n) => {
+                    if let Some(&node) = self.cluster.slaves.get(n) {
+                        if let Some(cm) = self.cluster_mgr.as_mut() {
+                            cm.partition(node);
+                        }
+                    }
+                    true
+                }
+                ElasticAction::Grow(k) => {
+                    if let Some(cm) = self.cluster_mgr.as_mut() {
+                        cm.request_grow(self.cluster, k, lnow);
+                    }
+                    true
+                }
+                ElasticAction::DrainNthSlave(n) => match self.cluster.slaves.get(n).copied() {
+                    Some(node) => {
+                        let drained = match self.cluster_mgr.as_mut() {
+                            Some(cm) => cm.drain(self.cluster, node, lnow).is_ok(),
+                            None => self.cluster.decommission_node(node, lnow).is_ok(),
+                        };
+                        if drained {
+                            counters.add(counters::NODES_DRAINED, 1);
+                        }
+                        drained // busy node: retry on a later step
+                    }
+                    None => true,
+                },
+            };
+            if done {
+                st.fired[i] = true;
+            }
+        }
+        if let Some(cm) = self.cluster_mgr.as_mut() {
+            let backlog = (st.pending_maps.len() + st.pending_reduces.len()) as u32;
+            let delta = cm.tick(self.cluster, backlog, lnow)?;
+            if !delta.joined.is_empty() {
+                counters.add(counters::NODES_JOINED, delta.joined.len() as u64);
+            }
+            if !delta.drained.is_empty() {
+                counters.add(counters::NODES_DRAINED, delta.drained.len() as u64);
+            }
+            for (node, _lost) in delta.failed {
+                apply_node_loss(node, st, shuffle, counters);
+            }
+        }
         Ok(())
     }
 
@@ -778,15 +1157,261 @@ impl<'a> MrEngine<'a> {
     }
 }
 
+/// Control-plane slice of the completion wait when elasticity is on:
+/// heartbeats/expiry/admissions run at least this often.
+const ELASTIC_TICK: Duration = Duration::from_millis(2);
+
+/// Hard wall-clock cap on waiting for queued batch grants with nothing
+/// running (a stuck allocator must fail the job, not hang it).
+const GROW_STALL_LIMIT: Duration = Duration::from_secs(30);
+
 /// What one in-flight container is working on.
+#[derive(Debug, Clone, Copy)]
 enum TaskRef {
     Map { idx: u32, attempt: u32 },
     Reduce { r: u32, attempt: u32 },
 }
 
+impl TaskRef {
+    /// Same task (phase + index), regardless of attempt.
+    fn same_task(self, other: TaskRef) -> bool {
+        match (self, other) {
+            (TaskRef::Map { idx: a, .. }, TaskRef::Map { idx: b, .. }) => a == b,
+            (TaskRef::Reduce { r: a, .. }, TaskRef::Reduce { r: b, .. }) => a == b,
+            _ => false,
+        }
+    }
+}
+
 struct InFlight {
     container: Container,
     task: TaskRef,
+    started: Instant,
+    /// This attempt is a straggler's speculative duplicate.
+    speculative: bool,
+    /// This attempt's node died; its result is a zombie to discard.
+    orphaned: bool,
+}
+
+/// Per-phase task bookkeeping for the pipelined scheduler.
+struct TaskTable {
+    /// Committed (invalidation flips this back to false).
+    done: Vec<bool>,
+    /// Genuine attempt failures (node losses do not count — Hadoop's
+    /// killed-vs-failed distinction).
+    failures: Vec<u32>,
+    /// Next attempt id (monotonic; keeps attempt dirs/logs unique across
+    /// retries, speculation and post-failure re-runs).
+    next_attempt: Vec<u32>,
+    /// Pending + running non-orphaned attempts per task.
+    live: Vec<u32>,
+    /// Durations of committed attempts (straggler baseline).
+    durations_s: Vec<f64>,
+}
+
+impl TaskTable {
+    fn new(n: u32) -> TaskTable {
+        TaskTable {
+            done: vec![false; n as usize],
+            failures: vec![0; n as usize],
+            next_attempt: vec![0; n as usize],
+            live: vec![0; n as usize],
+            durations_s: Vec::new(),
+        }
+    }
+
+    fn mean_duration_s(&self) -> Option<f64> {
+        if self.durations_s.is_empty() {
+            return None;
+        }
+        Some(self.durations_s.iter().sum::<f64>() / self.durations_s.len() as f64)
+    }
+}
+
+/// Mutable scheduling state of one pipelined job.
+struct PipeState {
+    /// `(task index, attempt id, speculative)` queues.
+    pending_maps: VecDeque<(u32, u32, bool)>,
+    pending_reduces: VecDeque<(u32, u32, bool)>,
+    running: BTreeMap<u64, InFlight>,
+    maps: TaskTable,
+    reduces: TaskTable,
+    maps_committed: u32,
+    reduces_done: u32,
+    maps_running: u32,
+    reduces_running: u32,
+    next_token: u64,
+    /// Scripted elastic events already executed.
+    fired: Vec<bool>,
+    /// Tokens of killed speculation losers: their containers are already
+    /// released and the scheduler no longer waits on them; their late
+    /// pool results are discarded on arrival.
+    detached: std::collections::BTreeSet<u64>,
+}
+
+impl PipeState {
+    fn new(n_maps: u32, n_reduces: u32, plan_events: usize) -> PipeState {
+        let mut st = PipeState {
+            pending_maps: VecDeque::with_capacity(n_maps as usize),
+            pending_reduces: VecDeque::with_capacity(n_reduces as usize),
+            running: BTreeMap::new(),
+            maps: TaskTable::new(n_maps),
+            reduces: TaskTable::new(n_reduces),
+            maps_committed: 0,
+            reduces_done: 0,
+            maps_running: 0,
+            reduces_running: 0,
+            next_token: 0,
+            fired: vec![false; plan_events],
+            detached: std::collections::BTreeSet::new(),
+        };
+        for i in 0..n_maps {
+            st.push_map(i, false);
+        }
+        for r in 0..n_reduces {
+            st.push_reduce(r, false);
+        }
+        st
+    }
+
+    fn push_map(&mut self, idx: u32, speculative: bool) {
+        let a = self.maps.next_attempt[idx as usize];
+        self.maps.next_attempt[idx as usize] += 1;
+        self.maps.live[idx as usize] += 1;
+        self.pending_maps.push_back((idx, a, speculative));
+    }
+
+    fn push_reduce(&mut self, r: u32, speculative: bool) {
+        let a = self.reduces.next_attempt[r as usize];
+        self.reduces.next_attempt[r as usize] += 1;
+        self.reduces.live[r as usize] += 1;
+        self.pending_reduces.push_back((r, a, speculative));
+    }
+}
+
+/// A node died: fence its shuffle output, reschedule the committed maps
+/// it hosted, orphan its in-flight attempts and reschedule their tasks.
+/// Committed reduces are untouched — their output lives on the shared
+/// filesystem (the paper's Lustre argument), exactly Hadoop's behaviour.
+fn apply_node_loss(
+    node: NodeId,
+    st: &mut PipeState,
+    shuffle: &ShuffleStore,
+    counters: &Counters,
+) {
+    counters.add(counters::NODES_FAILED, 1);
+    // Fence + drop the dead node's map output; these maps must re-run.
+    let lost_maps = shuffle.invalidate_node(node);
+
+    // Orphan in-flight attempts that were running on the dead node.
+    let victims: Vec<(u64, TaskRef)> = st
+        .running
+        .iter()
+        .filter(|(_, inf)| inf.container.node == node && !inf.orphaned)
+        .map(|(&t, inf)| (t, inf.task))
+        .collect();
+    let mut hit_maps: Vec<u32> = Vec::new();
+    let mut hit_reduces: Vec<u32> = Vec::new();
+    for (token, task) in victims {
+        st.running.get_mut(&token).unwrap().orphaned = true;
+        match task {
+            TaskRef::Map { idx, .. } => {
+                st.maps.live[idx as usize] -= 1;
+                hit_maps.push(idx);
+            }
+            TaskRef::Reduce { r, .. } => {
+                st.reduces.live[r as usize] -= 1;
+                hit_reduces.push(r);
+            }
+        }
+    }
+
+    // Committed output lost → not done any more; count the invalidation.
+    for &m in &lost_maps {
+        let i = m as usize;
+        if st.maps.done[i] {
+            st.maps.done[i] = false;
+            st.maps_committed -= 1;
+            counters.add(counters::MAPS_INVALIDATED, 1);
+        }
+    }
+
+    // Re-execute every affected task that has no other live attempt.
+    let affected: std::collections::BTreeSet<u32> =
+        lost_maps.into_iter().chain(hit_maps).collect();
+    for m in affected {
+        if !st.maps.done[m as usize] && st.maps.live[m as usize] == 0 {
+            st.push_map(m, false);
+        }
+    }
+    for r in hit_reduces {
+        if !st.reduces.done[r as usize] && st.reduces.live[r as usize] == 0 {
+            st.push_reduce(r, false);
+        }
+    }
+}
+
+/// Straggler scan: once a phase has a duration baseline (≥ 3 commits and
+/// a committed majority) and no other work is pending, any sole running
+/// attempt slower than `factor × mean` (and the absolute floor) gets a
+/// speculative duplicate. First commit wins; the loser's container is
+/// simply released on completion.
+fn maybe_speculate(st: &mut PipeState, cfg: &ElasticConfig, counters: &Counters) {
+    let floor_s = cfg.speculation_floor_ms as f64 / 1000.0;
+    let mut spec_maps: Vec<u32> = Vec::new();
+    let mut spec_reduces: Vec<u32> = Vec::new();
+    let n_maps = st.maps.done.len() as u32;
+    let n_reduces = st.reduces.done.len() as u32;
+    let m_mean = st.maps.mean_duration_s();
+    let r_mean = st.reduces.mean_duration_s();
+    for inf in st.running.values() {
+        if inf.orphaned || inf.speculative {
+            continue;
+        }
+        let elapsed = inf.started.elapsed().as_secs_f64();
+        match inf.task {
+            TaskRef::Map { idx, .. } => {
+                if !st.pending_maps.is_empty()
+                    || st.maps_committed < 3
+                    || st.maps_committed * 2 < n_maps
+                {
+                    continue;
+                }
+                let i = idx as usize;
+                if st.maps.done[i] || st.maps.live[i] != 1 {
+                    continue;
+                }
+                let Some(mean) = m_mean else { continue };
+                if elapsed > (cfg.speculation_factor * mean).max(floor_s) {
+                    spec_maps.push(idx);
+                }
+            }
+            TaskRef::Reduce { r, .. } => {
+                if !st.pending_reduces.is_empty()
+                    || st.reduces_done < 3
+                    || st.reduces_done * 2 < n_reduces
+                {
+                    continue;
+                }
+                let i = r as usize;
+                if st.reduces.done[i] || st.reduces.live[i] != 1 {
+                    continue;
+                }
+                let Some(mean) = r_mean else { continue };
+                if elapsed > (cfg.speculation_factor * mean).max(floor_s) {
+                    spec_reduces.push(r);
+                }
+            }
+        }
+    }
+    for idx in spec_maps {
+        st.push_map(idx, true);
+        counters.add(counters::TASKS_SPECULATED, 1);
+    }
+    for r in spec_reduces {
+        st.push_reduce(r, true);
+        counters.add(counters::TASKS_SPECULATED, 1);
+    }
 }
 
 type TaskTx = Sender<(u64, Option<Result<()>>)>;
@@ -819,6 +1444,11 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
         return Err(Error::MapReduce(format!(
             "injected failure: map {idx} attempt {attempt}"
         )));
+    }
+    if let Some(ms) = spec.failures.delay_for(TaskId::map(idx), attempt) {
+        // Injected straggler: dawdle before doing any work so the
+        // speculation scan has something to race.
+        std::thread::sleep(Duration::from_millis(ms));
     }
 
     let map_only = spec.n_reduces == 0;
@@ -877,11 +1507,9 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
         let attempt_dir = format!("{}/_temporary/attempt_m_{idx:05}_{attempt}", spec.output_dir);
         dfs.mkdirs(&attempt_dir)?;
         let attempt_file = format!("{attempt_dir}/part-m-{idx:05}");
+        let final_file = format!("{}/part-m-{idx:05}", spec.output_dir);
         dfs.create(&attempt_file, &out)?;
-        dfs.rename(
-            &attempt_file,
-            &format!("{}/part-m-{idx:05}", spec.output_dir),
-        )?;
+        commit_rename(&*dfs, &attempt_file, &final_file)?;
         return Ok(());
     }
 
@@ -969,6 +1597,9 @@ fn run_reduce_task(args: ReduceTaskArgs) -> Result<()> {
             "injected failure: reduce {r} attempt {attempt}"
         )));
     }
+    if let Some(ms) = spec.failures.delay_for(TaskId::reduce(r), attempt) {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
 
     let segments: Vec<Arc<Segment>> = match cancel {
         // Slow-start: fetch each map's segment the moment it commits,
@@ -1051,8 +1682,22 @@ fn run_reduce_task(args: ReduceTaskArgs) -> Result<()> {
     let attempt_file = format!("{attempt_dir}/part-r-{r:05}");
     dfs.create(&attempt_file, &out)?;
     let final_file = format!("{}/part-r-{r:05}", spec.output_dir);
-    dfs.rename(&attempt_file, &final_file)?;
+    commit_rename(&*dfs, &attempt_file, &final_file)?;
     Ok(())
+}
+
+/// First-commit-wins rename: when a speculative twin (or a re-run racing
+/// a zombie) already renamed its identical output into place, this
+/// attempt's commit is a clean no-op instead of a clobber error.
+fn commit_rename(dfs: &dyn Dfs, attempt_file: &str, final_file: &str) -> Result<()> {
+    if dfs.exists(final_file) {
+        return Ok(());
+    }
+    match dfs.rename(attempt_file, final_file) {
+        Ok(()) => Ok(()),
+        Err(_) if dfs.exists(final_file) => Ok(()),
+        Err(e) => Err(e),
+    }
 }
 
 #[cfg(test)]
@@ -1341,6 +1986,140 @@ mod tests {
         dc.rm.check_invariants().unwrap();
         let (_, used) = dc.rm.cluster_resources();
         assert_eq!(used.mem_mb, 0, "failed job must release everything");
+    }
+
+    /// Tentpole: lose the node holding a committed map's shuffle output
+    /// mid-job. The engine must fence + invalidate the lost segments,
+    /// re-execute exactly the affected maps, and still produce correct,
+    /// complete output — with the loss visible in the counters.
+    #[test]
+    fn node_loss_invalidates_and_reexecutes_lost_maps() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/nl-in").unwrap();
+        let mut text = Vec::new();
+        for i in 0..12 {
+            text.extend_from_slice(format!("tok{i:02} common words here\n").as_bytes());
+        }
+        fs.create("/lustre/scratch/nl-in/f", &text).unwrap();
+        let spec = Arc::new(wordcount_spec("/lustre/scratch/nl-in", "/lustre/scratch/nl-out"));
+        // Once map 0 commits, crash whichever node holds its segments.
+        let plan = ElasticPlan::new().at_maps(1, ElasticAction::FailMapHost(0));
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        )
+        .with_plan(plan);
+        let outcome = engine.run(Arc::clone(&spec), "u", Micros::ZERO).unwrap();
+        assert_eq!(outcome.counters.get(counters::NODES_FAILED), 1);
+        assert!(
+            outcome.counters.get(counters::MAPS_INVALIDATED) >= 1,
+            "map 0's committed output was on the crashed node"
+        );
+        assert!(fs.exists("/lustre/scratch/nl-out/_SUCCESS"));
+        // Output is complete and correct despite the loss.
+        let mut all = String::new();
+        for f in &outcome.output_files {
+            all.push_str(&String::from_utf8(fs.read(f).unwrap()).unwrap());
+        }
+        let common = all
+            .lines()
+            .find_map(|l| l.strip_prefix("common\t"))
+            .expect("'common' key present");
+        assert_eq!(common, "12");
+        dc.rm.check_invariants().unwrap();
+        let (_, used) = dc.rm.cluster_resources();
+        assert_eq!(used.mem_mb, 0);
+    }
+
+    /// Speculative execution: an injected straggler gets a duplicate
+    /// attempt once the rest of the phase commits; the duplicate wins and
+    /// the job finishes long before the straggler's delay elapses alone.
+    #[test]
+    fn straggler_gets_speculative_duplicate_that_wins() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/sp-in").unwrap();
+        let mut text = Vec::new();
+        for i in 0..8 {
+            text.extend_from_slice(format!("alpha beta w{i} gamma delta\n").as_bytes());
+        }
+        fs.create("/lustre/scratch/sp-in/f", &text).unwrap();
+        let mut spec = wordcount_spec("/lustre/scratch/sp-in", "/lustre/scratch/sp-out");
+        // Map 0's first attempt dawdles 2s; the speculative twin (a later
+        // attempt, not covered by the delay injection) runs at full speed.
+        spec.failures = FailurePlan::none().delay_attempt(TaskId::map(0), 0, 2_000);
+        let spec = Arc::new(spec);
+        let ecfg = crate::config::ElasticConfig {
+            speculation: true,
+            speculation_factor: 2.0,
+            speculation_floor_ms: 20,
+            ..Default::default()
+        };
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        )
+        .with_elastic_cfg(ecfg);
+        let t0 = std::time::Instant::now();
+        let outcome = engine.run(Arc::clone(&spec), "u", Micros::ZERO).unwrap();
+        assert!(outcome.counters.get(counters::TASKS_SPECULATED) >= 1);
+        assert_eq!(outcome.counters.get(counters::SPECULATIVE_WINS), 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(1_500),
+            "speculation must beat the 2s straggler; took {:?}",
+            t0.elapsed()
+        );
+        assert!(fs.exists("/lustre/scratch/sp-out/_SUCCESS"));
+        // Output is still correct (first commit won; twins are identical).
+        let mut all = String::new();
+        for f in &outcome.output_files {
+            all.push_str(&String::from_utf8(fs.read(f).unwrap()).unwrap());
+        }
+        let alpha = all.lines().find_map(|l| l.strip_prefix("alpha\t")).unwrap();
+        assert_eq!(alpha, "8");
+        dc.rm.check_invariants().unwrap();
+    }
+
+    /// Locality-aware placement: with free capacity on the preferred
+    /// nodes, every map with a residency hint places node-local, and the
+    /// tier counters account for every map launched.
+    #[test]
+    fn locality_counters_account_for_every_map() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/lc-in").unwrap();
+        for i in 0..4 {
+            fs.create(
+                &format!("/lustre/scratch/lc-in/part-{i}"),
+                format!("word{i} again maybe\n").as_bytes(),
+            )
+            .unwrap();
+        }
+        let mut spec = wordcount_spec("/lustre/scratch/lc-in", "/lustre/scratch/lc-out");
+        spec.split_bytes = 1024; // one map per file
+        let spec = Arc::new(spec);
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        );
+        let outcome = engine.run(spec, "u", Micros::ZERO).unwrap();
+        let local = outcome.counters.get(counters::LOCAL_MAPS);
+        let rack = outcome.counters.get(counters::RACK_MAPS);
+        let other = outcome.counters.get(counters::OTHER_MAPS);
+        // Every map attempt got exactly one tiered grant.
+        assert!(local + rack + other >= outcome.maps as u64);
+        // A fresh cluster always has room on the first map's anchor node,
+        // and with residency hints nothing should degrade past rack tier.
+        assert!(local >= 1, "local={local} rack={rack} other={other}");
+        assert_eq!(other, 0, "local={local} rack={rack} other={other}");
+        dc.rm.check_invariants().unwrap();
     }
 
     /// A failing job with slow-start reduces in flight must cancel them

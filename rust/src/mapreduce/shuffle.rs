@@ -20,8 +20,8 @@ use crate::cluster::NodeId;
 use crate::error::{Error, Result};
 use crate::mapreduce::recordbuf::RecordBuf;
 use std::cmp::Reverse;
-use std::collections::BTreeMap;
 use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, Mutex};
 
 /// One spilled map-output segment (already sorted by key).
@@ -50,6 +50,12 @@ type Shard = Mutex<BTreeMap<(u32, u32), Arc<Segment>>>;
 #[derive(Debug)]
 pub struct ShuffleStore {
     shards: Vec<Shard>,
+    /// Nodes whose segments are fenced out: a node that failed mid-job
+    /// stays banned for the life of the store, so an in-flight zombie
+    /// attempt on the dead node can never overwrite a re-executed map's
+    /// committed segment (the batch allocator never re-mints a failed
+    /// node id).
+    banned: Mutex<BTreeSet<NodeId>>,
 }
 
 impl Default for ShuffleStore {
@@ -72,6 +78,7 @@ impl ShuffleStore {
     pub fn with_shards(n: usize) -> Self {
         ShuffleStore {
             shards: (0..n.max(1)).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            banned: Mutex::new(BTreeSet::new()),
         }
     }
 
@@ -86,11 +93,16 @@ impl ShuffleStore {
 
     /// Commit a map attempt's segment. Re-commits (speculative duplicate or
     /// re-run after failure) replace the previous segment — Hadoop's
-    /// commit-wins-once semantics.
-    pub fn put(&self, seg: Segment) {
+    /// commit-wins-once semantics. A segment from a banned (failed) node
+    /// is dropped on the floor; returns whether the segment was stored.
+    pub fn put(&self, seg: Segment) -> bool {
         debug_assert!(seg.records.is_sorted_by_key(), "segment must be sorted");
+        if self.banned.lock().unwrap().contains(&seg.node) {
+            return false;
+        }
         let mut g = self.shard_for(seg.partition).lock().unwrap();
         g.insert((seg.map, seg.partition), Arc::new(seg));
+        true
     }
 
     /// Fetch all segments for one reduce partition, map order. Returns
@@ -123,8 +135,12 @@ impl ShuffleStore {
     }
 
     /// Drop every segment produced on a failed node; returns the map ids
-    /// whose output was lost (they must re-run).
+    /// whose output was lost (they must re-run). The node is also banned:
+    /// any commit from it arriving after this call is discarded, so a
+    /// zombie attempt racing the invalidation cannot resurrect lost (or
+    /// overwrite re-executed) segments.
     pub fn invalidate_node(&self, node: NodeId) -> Vec<u32> {
+        self.banned.lock().unwrap().insert(node);
         let mut maps = Vec::new();
         for shard in &self.shards {
             let mut g = shard.lock().unwrap();
@@ -329,6 +345,29 @@ mod tests {
         assert_eq!(lost, vec![0]);
         assert_eq!(st.segment_count(), 1);
         assert!(st.verify_complete(2, 2).is_err());
+    }
+
+    #[test]
+    fn banned_node_commits_are_fenced_out() {
+        // A zombie attempt on a failed node must never overwrite the
+        // re-executed map's segment: after invalidation, puts from the
+        // dead node are dropped.
+        let st = ShuffleStore::new();
+        assert!(st.put(seg(0, 0, &[1])));
+        st.invalidate_node(NodeId(0));
+        assert!(!st.put(seg(0, 0, &[9])), "zombie commit dropped");
+        assert!(st.try_fetch(0, 0).is_none());
+        // The re-run on a fresh node commits normally…
+        let rerun = Segment {
+            map: 0,
+            partition: 0,
+            node: NodeId(7),
+            records: RecordBuf::from_pairs([(vec![5u8], vec![5, 5])]),
+        };
+        assert!(st.put(rerun));
+        // …and a late zombie still cannot clobber it.
+        assert!(!st.put(seg(0, 0, &[9])));
+        assert_eq!(st.try_fetch(0, 0).unwrap().records.key(0), &[5]);
     }
 
     #[test]

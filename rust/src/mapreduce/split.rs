@@ -8,6 +8,7 @@
 //! * [`InputFormat::RowRange`] — synthetic splits with no backing file:
 //!   Teragen's input ("generate rows [start, start+count)").
 
+use crate::cluster::NodeId;
 use crate::error::{Error, Result};
 use crate::lustre::Dfs;
 use crate::terasort::format::{split_record, RECORD_LEN};
@@ -30,6 +31,10 @@ pub struct InputSplit {
     pub offset: u64,
     /// Byte length (or row count for RowRange).
     pub len: u64,
+    /// Nodes the scheduler should prefer for this split's map task, in
+    /// order (derived from DFS shard residency by [`assign_locality`];
+    /// empty = no preference, e.g. synthetic RowRange splits).
+    pub preferred: Vec<NodeId>,
 }
 
 /// Plan splits over all files under `input_dir`.
@@ -84,6 +89,7 @@ pub fn plan_splits(
                 path: f.clone(),
                 offset: off,
                 len,
+                preferred: Vec::new(),
             });
             off += len;
         }
@@ -104,10 +110,39 @@ pub fn row_range_splits(total_rows: u64, n_maps: u64) -> Vec<InputSplit> {
             path: String::new(),
             offset: start,
             len: count,
+            preferred: Vec::new(),
         });
         start += count;
     }
     out
+}
+
+/// Attach preferred nodes to each split from DFS shard residency: the
+/// shard a split's file lives in is mapped onto the slave list, and the
+/// next `replicas - 1` slaves back it up (the HDFS-replica analogue). The
+/// RM's placement then honours node-local > rack-local > any. Splits with
+/// no backing file (RowRange) and backends without residency information
+/// keep an empty preference.
+pub fn assign_locality(
+    splits: &mut [InputSplit],
+    dfs: &dyn Dfs,
+    nodes: &[NodeId],
+    replicas: u32,
+) {
+    if nodes.is_empty() || replicas == 0 {
+        return;
+    }
+    for s in splits {
+        if s.path.is_empty() {
+            continue;
+        }
+        let Some(shard) = dfs.shard_of(&s.path) else {
+            continue;
+        };
+        let anchor = (shard as usize) % nodes.len();
+        let fanout = (replicas as usize).min(nodes.len());
+        s.preferred = (0..fanout).map(|i| nodes[(anchor + i) % nodes.len()]).collect();
+    }
 }
 
 /// Iterate the records of a split, calling `f(key, value)`.
@@ -265,6 +300,37 @@ mod tests {
             .unwrap();
         }
         assert_eq!(keys, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn locality_assignment_is_deterministic_and_fans_out() {
+        let fs = fs();
+        fs.mkdirs("/lustre/scratch/loc").unwrap();
+        for i in 0..4 {
+            fs.create(&format!("/lustre/scratch/loc/part-{i}"), &vec![0u8; 300]).unwrap();
+        }
+        let nodes: Vec<NodeId> = (2..8).map(NodeId).collect();
+        let mut a = plan_splits(&fs, "/lustre/scratch/loc", InputFormat::TeraRecords, 300).unwrap();
+        let mut b = a.clone();
+        assign_locality(&mut a, &fs, &nodes, 2);
+        assign_locality(&mut b, &fs, &nodes, 2);
+        assert_eq!(a, b, "residency-derived placement is deterministic");
+        for s in &a {
+            assert_eq!(s.preferred.len(), 2);
+            assert_ne!(s.preferred[0], s.preferred[1]);
+            assert!(s.preferred.iter().all(|n| nodes.contains(n)));
+            // Splits of the same file share the same residency.
+            let twin = a.iter().find(|t| t.path == s.path).unwrap();
+            assert_eq!(twin.preferred, s.preferred);
+        }
+    }
+
+    #[test]
+    fn locality_skips_synthetic_splits() {
+        let fs = fs();
+        let mut splits = row_range_splits(10, 3);
+        assign_locality(&mut splits, &fs, &[NodeId(0), NodeId(1)], 2);
+        assert!(splits.iter().all(|s| s.preferred.is_empty()));
     }
 
     #[test]

@@ -47,11 +47,14 @@ impl TaskId {
 /// Hadoop's retry budget.
 pub const MAX_ATTEMPTS: u32 = 4;
 
-/// Fault-injection plan: `(task, attempt)` pairs that must fail. Interior
-/// mutability so the engine can consume injections from worker threads.
+/// Fault-injection plan: `(task, attempt)` pairs that must fail, plus
+/// `(task, attempt)` pairs that must *dawdle* (straggler injection for the
+/// speculative-execution tests). Interior mutability so the engine can
+/// consume injections from worker threads.
 #[derive(Debug, Default)]
 pub struct FailurePlan {
     fail: Mutex<BTreeSet<(TaskId, u32)>>,
+    delay: Mutex<std::collections::BTreeMap<(TaskId, u32), u64>>,
 }
 
 impl FailurePlan {
@@ -65,13 +68,26 @@ impl FailurePlan {
         self
     }
 
+    /// Schedule attempt `attempt` of `task` to sleep `ms` before doing any
+    /// work — a straggler for speculation to race.
+    pub fn delay_attempt(self, task: TaskId, attempt: u32, ms: u64) -> FailurePlan {
+        self.delay.lock().unwrap().insert((task, attempt), ms);
+        self
+    }
+
     /// Should this attempt fail? (Consumes the injection.)
     pub fn should_fail(&self, task: TaskId, attempt: u32) -> bool {
         self.fail.lock().unwrap().remove(&(task, attempt))
     }
 
+    /// Straggler delay for this attempt in ms, if any. (Consumes the
+    /// injection.)
+    pub fn delay_for(&self, task: TaskId, attempt: u32) -> Option<u64> {
+        self.delay.lock().unwrap().remove(&(task, attempt))
+    }
+
     pub fn pending(&self) -> usize {
-        self.fail.lock().unwrap().len()
+        self.fail.lock().unwrap().len() + self.delay.lock().unwrap().len()
     }
 }
 
@@ -95,5 +111,14 @@ mod tests {
         assert!(!plan.should_fail(TaskId::map(0), 0), "consumed");
         assert!(!plan.should_fail(TaskId::map(0), 1));
         assert_eq!(plan.pending(), 1);
+    }
+
+    #[test]
+    fn delay_plan_consumes_injections() {
+        let plan = FailurePlan::none().delay_attempt(TaskId::reduce(2), 0, 40);
+        assert_eq!(plan.pending(), 1);
+        assert_eq!(plan.delay_for(TaskId::reduce(2), 0), Some(40));
+        assert_eq!(plan.delay_for(TaskId::reduce(2), 0), None, "consumed");
+        assert_eq!(plan.pending(), 0);
     }
 }

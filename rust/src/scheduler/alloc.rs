@@ -88,11 +88,15 @@ impl Allocator {
         }
     }
 
-    /// Re-admit a repaired node.
+    /// Re-admit a repaired node. A node restored while a job still holds
+    /// it counts toward the total immediately and re-enters the free pool
+    /// when that job releases it.
     pub fn restore_node(&mut self, node: NodeId) {
-        if self.removed.remove(&node) && !self.busy.contains(&node) {
-            self.free.insert(node);
+        if self.removed.remove(&node) {
             self.total += 1;
+            if !self.busy.contains(&node) {
+                self.free.insert(node);
+            }
         }
     }
 }
@@ -142,6 +146,23 @@ mod tests {
         a.restore_node(nodes[0]);
         assert_eq!(a.free_count(), 8);
         assert_eq!(a.total_nodes(), 8);
+    }
+
+    #[test]
+    fn restore_while_busy_keeps_totals_consistent() {
+        // Drain a node a running job holds, restore it while still held,
+        // then release: the node must return to the pool and the total
+        // must be back to the full cluster size (regression: the restore
+        // used to skip the total increment when the node was busy).
+        let mut a = alloc();
+        let nodes = a.try_allocate(&req(3)).unwrap();
+        a.remove_node(nodes[0]);
+        assert_eq!(a.total_nodes(), 7);
+        a.restore_node(nodes[0]);
+        assert_eq!(a.total_nodes(), 8);
+        a.release(&nodes);
+        assert_eq!(a.free_count(), 8);
+        assert_eq!(a.busy_count(), 0);
     }
 
     #[test]

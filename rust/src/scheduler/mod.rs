@@ -249,6 +249,19 @@ impl Lsf {
         self.alloc.free_count()
     }
 
+    /// Administrative drain: pull the node from the schedulable pool.
+    /// Running jobs keep it until they finish (the node then stays out).
+    pub fn drain_node(&mut self, node: NodeId) {
+        self.alloc.remove_node(node);
+        self.metrics.inc("lsf.nodes_drained", 1);
+    }
+
+    /// Re-admit a repaired or restored node into the pool.
+    pub fn restore_node(&mut self, node: NodeId) {
+        self.alloc.restore_node(node);
+        self.metrics.inc("lsf.nodes_restored", 1);
+    }
+
     /// Node-failure hook: releases the node from the free pool and reports
     /// which running jobs were hit (the caller decides to fail/requeue).
     pub fn node_failed(&mut self, node: NodeId) -> Vec<LsfJobId> {

@@ -79,6 +79,7 @@ impl DynamicCluster {
 
         // 2. Resource Manager on the first node.
         let mut rm = ResourceManager::new(cfg.yarn.clone(), ids, Arc::clone(&metrics));
+        rm.set_rack_width(cfg.elastic.rack_width);
         metrics.event(now, "wrapper", &format!("RM started on {rm_node}"));
 
         // 3. Job History Server on the second node.
@@ -127,6 +128,79 @@ impl DynamicCluster {
     /// Number of slave nodes.
     pub fn slave_count(&self) -> usize {
         self.slaves.len()
+    }
+
+    /// Admit a new slave mid-job (elastic grow): create its local dirs,
+    /// start the NM daemon and register it with the live RM — the same
+    /// three wrapper steps the initial build performs per slave.
+    pub fn admit_node(&mut self, node: NodeId, now: Micros) -> Result<()> {
+        if self.nms.contains_key(&node) {
+            return Err(Error::Wrapper(format!("node {node} already admitted")));
+        }
+        let mut nm = NodeManager::new(node);
+        nm.setup_dirs()
+            .map_err(|e| Error::Wrapper(format!("dir setup on {node}: {e}")))?;
+        nm.start(now)
+            .map_err(|e| Error::Wrapper(format!("NM start on {node}: {e}")))?;
+        self.rm
+            .register_nm(node, now)
+            .map_err(|e| Error::Wrapper(format!("NM register {node}: {e}")))?;
+        self.nms.insert(node, nm);
+        self.slaves.push(node);
+        self.metrics.inc("wrapper.nodes_joined", 1);
+        self.metrics.event(now, "wrapper", &format!("node {node} joined"));
+        Ok(())
+    }
+
+    /// Gracefully decommission a slave (elastic shrink / lease expiry):
+    /// refuses while the RM still tracks containers there, then stops the
+    /// NM, cleans its workspace and removes it from the cluster.
+    pub fn decommission_node(&mut self, node: NodeId, now: Micros) -> Result<()> {
+        self.rm.decommission_nm(node)?;
+        if let Some(mut nm) = self.nms.remove(&node) {
+            nm.stop_and_clean()
+                .map_err(|e| Error::Wrapper(format!("NM {node} drain: {e}")))?;
+        }
+        self.slaves.retain(|&s| s != node);
+        self.metrics.inc("wrapper.nodes_drained", 1);
+        self.metrics.event(now, "wrapper", &format!("node {node} drained"));
+        Ok(())
+    }
+
+    /// Crash a slave: the NM vanishes without cleanup (node is gone), the
+    /// RM drops it and reports the containers lost with it.
+    pub fn fail_node(&mut self, node: NodeId, now: Micros) -> Vec<crate::yarn::Container> {
+        let lost = self.rm.node_failed(node);
+        self.nms.remove(&node);
+        self.slaves.retain(|&s| s != node);
+        self.metrics.inc("wrapper.nodes_failed", 1);
+        self.metrics.event(now, "wrapper", &format!("node {node} failed"));
+        lost
+    }
+
+    /// Heartbeat every live NM and expire the rest: nodes silent for more
+    /// than `timeout` become failures. `partitioned` nodes skip their
+    /// heartbeat (fault injection: the node is alive but unreachable).
+    pub fn heartbeat_and_expire(
+        &mut self,
+        now: Micros,
+        timeout: Micros,
+        partitioned: &std::collections::BTreeSet<NodeId>,
+    ) -> Vec<(NodeId, Vec<crate::yarn::Container>)> {
+        for (&node, nm) in self.nms.iter() {
+            if nm.is_running() && !partitioned.contains(&node) {
+                let _ = self.rm.nm_heartbeat(node, now);
+            }
+        }
+        let expired = self.rm.expire_nms(now, timeout);
+        for (node, _) in &expired {
+            self.nms.remove(node);
+            self.slaves.retain(|s| s != node);
+            self.metrics.inc("wrapper.nodes_failed", 1);
+            self.metrics
+                .event(now, "wrapper", &format!("node {node} expired (missed heartbeats)"));
+        }
+        expired
     }
 
     /// Total container capacity in (mem, vcores) terms.

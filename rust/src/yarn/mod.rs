@@ -22,4 +22,4 @@ pub use am::{AmProgress, AppMaster};
 pub use container::{Container, ContainerRequest, Resource};
 pub use jobhistory::{AppReport, JobHistoryServer};
 pub use nm::NodeManager;
-pub use rm::{AppHandle, ResourceManager};
+pub use rm::{AppHandle, LocalityTier, NmInfo, ResourceManager};

@@ -58,6 +58,27 @@ pub struct AppHandle {
     pub am_container: Container,
 }
 
+/// How well a placement matched the request's preferred nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LocalityTier {
+    /// Granted on one of the preferred nodes.
+    NodeLocal,
+    /// Granted on a node sharing a rack with a preferred node.
+    RackLocal,
+    /// Granted wherever capacity was found (or no preference given).
+    Any,
+}
+
+/// Summary of one NM as the RM sees it (`GET /v1/cluster` and tests).
+#[derive(Debug, Clone)]
+pub struct NmInfo {
+    pub node: NodeId,
+    pub capacity: Resource,
+    pub used: Resource,
+    pub containers: usize,
+    pub last_heartbeat: Micros,
+}
+
 /// The RM daemon.
 pub struct ResourceManager {
     cfg: YarnConfig,
@@ -67,6 +88,8 @@ pub struct ResourceManager {
     metrics: Arc<Metrics>,
     /// Round-robin cursor for container spreading.
     rr_cursor: usize,
+    /// Nodes per rack for the rack-local placement tier.
+    rack_width: u32,
 }
 
 impl ResourceManager {
@@ -78,7 +101,18 @@ impl ResourceManager {
             ids,
             metrics,
             rr_cursor: 0,
+            rack_width: 4,
         }
+    }
+
+    /// Nodes per rack used by the rack-local placement tier.
+    pub fn set_rack_width(&mut self, width: u32) {
+        self.rack_width = width.max(1);
+    }
+
+    /// Rack id of a node under this RM's rack geometry.
+    pub fn rack_of(&self, node: NodeId) -> u32 {
+        node.0 / self.rack_width
     }
 
     /// NM registration (wrapper step: each slave's NM registers after
@@ -183,6 +217,125 @@ impl ResourceManager {
         Ok(granted)
     }
 
+    /// Locality-aware single-container allocation. Tries the preferred
+    /// nodes first (node-local), then any node sharing a rack with a
+    /// preferred node (rack-local), then falls back to the round-robin
+    /// spread. Nodes in `avoid` are excluded from every tier (a
+    /// speculative duplicate must not land beside the straggler it
+    /// races). Returns `None` when nothing has room right now — YARN
+    /// semantics, the AM re-requests later.
+    pub fn allocate_one(
+        &mut self,
+        app: AppId,
+        ask: Resource,
+        kind: ContainerKind,
+        preferred: &[NodeId],
+        avoid: &[NodeId],
+        now: Micros,
+    ) -> Result<Option<(Container, LocalityTier)>> {
+        let state = self
+            .apps
+            .get(&app)
+            .ok_or_else(|| Error::Yarn(format!("unknown app {app}")))?
+            .state;
+        if state != AppState::Running {
+            return Err(Error::Yarn(format!("app {app} is not running")));
+        }
+        let attempt = self.apps[&app].attempt;
+        let rounded = Resource::new(
+            self.cfg.round_allocation(ask.mem_mb),
+            ask.vcores.max(self.cfg.min_alloc_vcores),
+        );
+        // Tier 1: node-local.
+        let mut choice: Option<(NodeId, LocalityTier)> = None;
+        for &p in preferred {
+            if !avoid.contains(&p) && self.node_has_room(p, rounded) {
+                choice = Some((p, LocalityTier::NodeLocal));
+                break;
+            }
+        }
+        // Tier 2: rack-local (any node in a preferred node's rack).
+        if choice.is_none() && !preferred.is_empty() {
+            let racks: Vec<u32> = preferred.iter().map(|&p| self.rack_of(p)).collect();
+            let candidate = self.nodes.keys().copied().find(|&n| {
+                !avoid.contains(&n)
+                    && racks.contains(&self.rack_of(n))
+                    && self.node_has_room(n, rounded)
+            });
+            if let Some(n) = candidate {
+                choice = Some((n, LocalityTier::RackLocal));
+            }
+        }
+        // Tier 3: anywhere, via the round-robin spread.
+        if choice.is_none() {
+            let node_ids: Vec<NodeId> = self.nodes.keys().copied().collect();
+            for _ in 0..node_ids.len() {
+                let n = node_ids[self.rr_cursor % node_ids.len()];
+                self.rr_cursor = (self.rr_cursor + 1) % node_ids.len();
+                if !avoid.contains(&n) && self.node_has_room(n, rounded) {
+                    choice = Some((n, LocalityTier::Any));
+                    break;
+                }
+            }
+        }
+        let Some((node, tier)) = choice else {
+            return Ok(None);
+        };
+        let c = self.bind_container(attempt, node, rounded, kind);
+        let rec = self.apps.get_mut(&app).unwrap();
+        rec.containers.insert(c.id, c);
+        rec.granted_total += 1;
+        rec.peak_held = rec.peak_held.max(rec.containers.len());
+        self.metrics.inc("rm.containers_allocated", 1);
+        match tier {
+            LocalityTier::NodeLocal => self.metrics.inc("rm.placements_node_local", 1),
+            LocalityTier::RackLocal => self.metrics.inc("rm.placements_rack_local", 1),
+            LocalityTier::Any => self.metrics.inc("rm.placements_any", 1),
+        }
+        let _ = now;
+        Ok(Some((c, tier)))
+    }
+
+    fn node_has_room(&self, node: NodeId, resource: Resource) -> bool {
+        match self.nodes.get(&node) {
+            Some(rec) => {
+                let mut avail = rec.capacity;
+                avail.sub(rec.used);
+                resource.fits_in(avail)
+            }
+            None => false,
+        }
+    }
+
+    /// Charge `resource` on `node` and mint the container record. The
+    /// caller has already verified the node has room.
+    fn bind_container(
+        &mut self,
+        attempt: AppAttemptId,
+        node: NodeId,
+        resource: Resource,
+        kind: ContainerKind,
+    ) -> Container {
+        let seq = match self.apps.get_mut(&attempt.app) {
+            Some(r) => {
+                let s = r.next_container_seq;
+                r.next_container_seq += 1;
+                s
+            }
+            None => 1,
+        };
+        let id = attempt.container(seq);
+        let rec = self.nodes.get_mut(&node).expect("bind on live node");
+        rec.used.add(resource);
+        rec.containers.push(id);
+        Container {
+            id,
+            node,
+            resource,
+            kind,
+        }
+    }
+
     /// Place up to `count` containers round-robin across NMs with room.
     fn place(
         &mut self,
@@ -200,33 +353,9 @@ impl ResourceManager {
         while out.len() < count as usize && misses < node_ids.len() {
             let node = node_ids[self.rr_cursor % node_ids.len()];
             self.rr_cursor = (self.rr_cursor + 1) % node_ids.len();
-            let rec = self.nodes.get_mut(&node).unwrap();
-            let mut avail = rec.capacity;
-            avail.sub(rec.used);
-            if resource.fits_in(avail) {
+            if self.node_has_room(node, resource) {
                 misses = 0;
-                let seq = {
-                    // Container seq is per-attempt; track via the app record
-                    // when present (AM placement happens pre-record).
-                    let app_rec = self.apps.get_mut(&attempt.app);
-                    match app_rec {
-                        Some(r) => {
-                            let s = r.next_container_seq;
-                            r.next_container_seq += 1;
-                            s
-                        }
-                        None => 1,
-                    }
-                };
-                let id = attempt.container(seq);
-                rec.used.add(resource);
-                rec.containers.push(id);
-                out.push(Container {
-                    id,
-                    node,
-                    resource,
-                    kind,
-                });
+                out.push(self.bind_container(attempt, node, resource, kind));
             } else {
                 misses += 1;
             }
@@ -285,6 +414,63 @@ impl ResourceManager {
             .ok_or_else(|| Error::Yarn(format!("heartbeat from unknown NM {node}")))?;
         rec.last_heartbeat = now;
         Ok(())
+    }
+
+    /// Liveness expiry: every NM whose last heartbeat is older than
+    /// `timeout` is declared failed — `node_failed` runs for each exactly
+    /// once (the record is removed, so a node cannot expire twice).
+    /// Returns `(node, lost containers)` per expired NM.
+    pub fn expire_nms(&mut self, now: Micros, timeout: Micros) -> Vec<(NodeId, Vec<Container>)> {
+        let dead: Vec<NodeId> = self
+            .nodes
+            .iter()
+            .filter(|(_, rec)| now.saturating_sub(rec.last_heartbeat) > timeout)
+            .map(|(&n, _)| n)
+            .collect();
+        let mut out = Vec::with_capacity(dead.len());
+        for n in dead {
+            self.metrics.inc("rm.nm_expired", 1);
+            out.push((n, self.node_failed(n)));
+        }
+        out
+    }
+
+    /// Graceful decommission: remove an NM that hosts no containers.
+    /// Refuses while containers are live — the caller must wait for (or
+    /// reschedule) them first, which is what makes drain safe mid-job.
+    pub fn decommission_nm(&mut self, node: NodeId) -> Result<()> {
+        let rec = self
+            .nodes
+            .get(&node)
+            .ok_or_else(|| Error::Yarn(format!("decommission of unknown NM {node}")))?;
+        if !rec.containers.is_empty() {
+            return Err(Error::Yarn(format!(
+                "NM {node} still hosts {} containers — drain refused",
+                rec.containers.len()
+            )));
+        }
+        self.nodes.remove(&node);
+        self.metrics.inc("rm.nm_decommissioned", 1);
+        Ok(())
+    }
+
+    /// Per-NM summaries, sorted by node id.
+    pub fn nm_infos(&self) -> Vec<NmInfo> {
+        self.nodes
+            .iter()
+            .map(|(&node, rec)| NmInfo {
+                node,
+                capacity: rec.capacity,
+                used: rec.used,
+                containers: rec.containers.len(),
+                last_heartbeat: rec.last_heartbeat,
+            })
+            .collect()
+    }
+
+    /// Is this NM registered (and not failed/decommissioned)?
+    pub fn has_nm(&self, node: NodeId) -> bool {
+        self.nodes.contains_key(&node)
     }
 
     /// Node failure: drop the NM and return the containers lost (the AM
@@ -560,6 +746,232 @@ mod tests {
     fn double_register_rejected() {
         let mut rm = rm_with(1);
         assert!(rm.register_nm(NodeId(0), Micros::ZERO).is_err());
+    }
+
+    #[test]
+    fn heartbeat_timeout_fails_node_exactly_once() {
+        let mut rm = rm_with(3);
+        let h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        rm.allocate(
+            h.app,
+            ContainerRequest {
+                resource: Resource::new(4096, 1),
+                count: 3,
+            },
+            ContainerKind::Map,
+            Micros::ZERO,
+        )
+        .unwrap();
+        // Nodes 0 and 2 heartbeat at t=5s; node 1 stays silent.
+        rm.nm_heartbeat(NodeId(0), Micros::secs(5)).unwrap();
+        rm.nm_heartbeat(NodeId(2), Micros::secs(5)).unwrap();
+        let expired = rm.expire_nms(Micros::secs(6), Micros::secs(3));
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].0, NodeId(1));
+        assert!(
+            expired[0].1.iter().all(|c| c.node == NodeId(1)),
+            "lost containers are exactly the silent node's"
+        );
+        assert!(!rm.has_nm(NodeId(1)));
+        assert_eq!(rm.nm_count(), 2);
+        // Exactly once: with the survivors still heartbeating, a second
+        // expiry pass finds nothing — the dead node cannot expire again.
+        rm.nm_heartbeat(NodeId(0), Micros::secs(19)).unwrap();
+        rm.nm_heartbeat(NodeId(2), Micros::secs(19)).unwrap();
+        assert!(rm.expire_nms(Micros::secs(20), Micros::secs(3)).is_empty());
+        assert!(rm.nm_heartbeat(NodeId(1), Micros::secs(20)).is_err());
+        rm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn expiry_is_idempotent_per_node() {
+        let mut rm = rm_with(2);
+        let _h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        let first = rm.expire_nms(Micros::secs(10), Micros::secs(1));
+        assert_eq!(first.len(), 2);
+        let second = rm.expire_nms(Micros::secs(20), Micros::secs(1));
+        assert!(second.is_empty(), "an expired NM cannot expire again");
+        assert_eq!(rm.nm_count(), 0);
+    }
+
+    #[test]
+    fn decommission_refuses_live_containers_then_releases() {
+        let mut rm = rm_with(2);
+        let h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        let got = rm
+            .allocate(
+                h.app,
+                ContainerRequest {
+                    resource: Resource::new(4096, 1),
+                    count: 4,
+                },
+                ContainerKind::Map,
+                Micros::ZERO,
+            )
+            .unwrap();
+        let victim = got[0].node;
+        assert!(rm.decommission_nm(victim).is_err(), "live containers");
+        // Release everything on the victim, then drain succeeds and the
+        // node's resources leave the cluster totals.
+        let (cap_before, _) = rm.cluster_resources();
+        for c in got.iter().filter(|c| c.node == victim) {
+            rm.release(h.app, c.id).unwrap();
+        }
+        if rm.app_containers(h.app).iter().any(|c| c.node == victim) {
+            // AM landed on the victim: move it out of the way first.
+            let am = rm
+                .app_containers(h.app)
+                .into_iter()
+                .find(|c| c.node == victim)
+                .unwrap();
+            rm.release(h.app, am.id).unwrap();
+        }
+        rm.decommission_nm(victim).unwrap();
+        assert!(!rm.has_nm(victim));
+        let (cap_after, _) = rm.cluster_resources();
+        assert!(cap_after.mem_mb < cap_before.mem_mb);
+        assert!(rm.decommission_nm(victim).is_err(), "already gone");
+        rm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocate_one_honours_locality_tiers() {
+        // rack_width = 2: racks are {0,1}, {2,3}.
+        let mut rm = rm_with(4);
+        rm.set_rack_width(2);
+        let h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        let ask = Resource::new(4096, 1);
+        // Node-local on a preferred node with room.
+        let (c, tier) = rm
+            .allocate_one(h.app, ask, ContainerKind::Map, &[NodeId(3)], &[], Micros::ZERO)
+            .unwrap()
+            .unwrap();
+        assert_eq!(c.node, NodeId(3));
+        assert_eq!(tier, LocalityTier::NodeLocal);
+        // Fill node 3 completely, then a preference for it degrades to
+        // rack-local on node 2 (same rack).
+        while rm
+            .allocate_one(h.app, ask, ContainerKind::Map, &[NodeId(3)], &[], Micros::ZERO)
+            .unwrap()
+            .map(|(c, t)| (c.node, t))
+            == Some((NodeId(3), LocalityTier::NodeLocal))
+        {}
+        let last = rm
+            .allocate_one(h.app, ask, ContainerKind::Map, &[NodeId(3)], &[], Micros::ZERO)
+            .unwrap();
+        if let Some((c, tier)) = last {
+            assert_eq!(tier, LocalityTier::RackLocal);
+            assert_eq!(rm.rack_of(c.node), rm.rack_of(NodeId(3)));
+        }
+        rm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocate_one_without_prefs_is_any_tier() {
+        let mut rm = rm_with(2);
+        let h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        let (_, tier) = rm
+            .allocate_one(
+                h.app,
+                Resource::new(4096, 1),
+                ContainerKind::Map,
+                &[],
+                &[],
+                Micros::ZERO,
+            )
+            .unwrap()
+            .unwrap();
+        assert_eq!(tier, LocalityTier::Any);
+    }
+
+    #[test]
+    fn allocate_one_avoid_excludes_every_tier() {
+        // A speculative duplicate must never land beside the straggler:
+        // with the preferred node (and its whole rack) in `avoid`, the
+        // grant degrades to another node, and avoiding everything yields
+        // no grant at all.
+        let mut rm = rm_with(2);
+        rm.set_rack_width(1); // each node its own rack
+        let h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        let ask = Resource::new(4096, 1);
+        let (c, _) = rm
+            .allocate_one(h.app, ask, ContainerKind::Map, &[NodeId(0)], &[NodeId(0)], Micros::ZERO)
+            .unwrap()
+            .unwrap();
+        assert_eq!(c.node, NodeId(1), "avoid must exclude the preferred node");
+        let none = rm
+            .allocate_one(
+                h.app,
+                ask,
+                ContainerKind::Map,
+                &[NodeId(0)],
+                &[NodeId(0), NodeId(1)],
+                Micros::ZERO,
+            )
+            .unwrap();
+        assert!(none.is_none(), "avoiding every node grants nothing");
+        rm.check_invariants().unwrap();
+    }
+
+    /// Satellite invariant: `check_invariants` holds across arbitrary
+    /// join/drain/fail sequences interleaved with allocation traffic.
+    #[test]
+    fn invariants_hold_across_join_drain_fail_property() {
+        props(30, |g| {
+            let mut rm = rm_with(g.u32(2..5));
+            let h = rm.submit_app("p", "u", Micros::ZERO).unwrap();
+            let mut next_node = 100u32;
+            for step in 0..g.usize(3..20) {
+                let now = Micros::secs(step as u64);
+                match g.u32(0..4) {
+                    0 => {
+                        // Join a fresh node.
+                        rm.register_nm(NodeId(next_node), now).unwrap();
+                        next_node += 1;
+                    }
+                    1 => {
+                        // Fail a random registered node.
+                        let nodes: Vec<NodeId> =
+                            rm.nm_infos().iter().map(|i| i.node).collect();
+                        if let Some(&n) = nodes.get(g.usize(0..nodes.len().max(1))) {
+                            rm.node_failed(n);
+                        }
+                    }
+                    2 => {
+                        // Drain: only succeeds on an idle node; either way
+                        // the invariants must hold.
+                        let idle: Vec<NodeId> = rm
+                            .nm_infos()
+                            .iter()
+                            .filter(|i| i.containers == 0)
+                            .map(|i| i.node)
+                            .collect();
+                        if let Some(&n) = idle.first() {
+                            rm.decommission_nm(n).unwrap();
+                        }
+                    }
+                    _ => {
+                        // Allocation traffic (may grant zero on a shrunken
+                        // cluster) and partial release.
+                        let got = rm
+                            .allocate(
+                                h.app,
+                                ContainerRequest {
+                                    resource: Resource::new(g.u64(512..6000), 1),
+                                    count: g.u32(1..6),
+                                },
+                                ContainerKind::Generic,
+                                now,
+                            )
+                            .unwrap();
+                        for c in got.iter().take(g.usize(0..got.len().max(1))) {
+                            rm.release(h.app, c.id).unwrap();
+                        }
+                    }
+                }
+                rm.check_invariants().unwrap();
+            }
+        });
     }
 
     #[test]

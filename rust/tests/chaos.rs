@@ -1,0 +1,300 @@
+//! Chaos / elasticity tests: the cluster loses and gains nodes while real
+//! jobs run, and the data must not care.
+//!
+//! The acceptance scenario is the paper's elasticity claim driven to the
+//! byte level: a Terasort that loses a node mid-map-phase and gains a
+//! batch-allocator replacement still produces **byte-identical, validated
+//! output**. `HPCW_CHAOS=1` (the CI chaos step) multiplies the property
+//! iterations.
+
+use hpcw::cluster::{ClusterManager, NodeId};
+use hpcw::config::{ElasticConfig, StackConfig};
+use hpcw::lustre::{Dfs, LustreFs};
+use hpcw::mapreduce::{
+    counters, ElasticAction, ElasticPlan, FailurePlan, MrEngine, TaskId,
+};
+use hpcw::metrics::Metrics;
+use hpcw::terasort::{
+    run_teragen, run_terasort, summarize_dir, teravalidate, TeragenSpec, TerasortJob,
+};
+use hpcw::testkit::{props, Gen};
+use hpcw::util::ids::IdGen;
+use hpcw::util::pool::Pool;
+use hpcw::util::time::Micros;
+use hpcw::wrapper::DynamicCluster;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Iteration multiplier for the CI chaos step (`HPCW_CHAOS=1`).
+fn chaos_iters(base: u64) -> u64 {
+    if std::env::var("HPCW_CHAOS").is_ok() {
+        base * 4
+    } else {
+        base
+    }
+}
+
+fn elastic_cfg() -> ElasticConfig {
+    ElasticConfig {
+        nodes_min: 3,
+        nodes_max: 8,
+        queue_delay_ms: 20,
+        lease_walltime_s: 3_600,
+        nm_timeout_ms: 3_000,
+        ..Default::default()
+    }
+}
+
+fn build_cluster(fs: &LustreFs, cfg: &StackConfig, tag: &str) -> DynamicCluster {
+    let nodes: Vec<NodeId> = (0..5).map(NodeId).collect(); // RM, JHS, 3 slaves
+    DynamicCluster::build(
+        cfg,
+        &nodes,
+        fs,
+        Arc::new(IdGen::default()),
+        Arc::new(Metrics::new()),
+        tag,
+        Micros::ZERO,
+    )
+    .unwrap()
+}
+
+fn sorted_output(fs: &LustreFs, files: &[String]) -> BTreeMap<String, Vec<u8>> {
+    files
+        .iter()
+        .map(|f| {
+            let name = f.rsplit('/').next().unwrap().to_string();
+            (name, fs.read(f).unwrap())
+        })
+        .collect()
+}
+
+/// THE acceptance test: a Terasort run that loses a node mid-map-phase
+/// and gains a batch-allocator replacement produces byte-identical,
+/// validated output, with the loss/join visible in the counters.
+#[test]
+fn chaos_terasort_node_loss_with_replacement_is_byte_identical() {
+    let cfg = StackConfig::tiny();
+    let fs = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
+    let pool = Pool::new(4);
+    let rows = 6_000u64;
+    let gen = TeragenSpec {
+        rows,
+        maps: 3,
+        output_dir: "/lustre/scratch/chaos-in".into(),
+        seed: 42,
+    };
+
+    // Reference run on a healthy cluster.
+    let mut dc_ref = build_cluster(&fs, &cfg, "chaos-ref");
+    {
+        let mut engine =
+            MrEngine::new(&mut dc_ref, fs.clone() as Arc<dyn Dfs>, &pool, 1024, 1024);
+        run_teragen(&mut engine, &gen, Micros::ZERO).unwrap();
+    }
+    let input = summarize_dir(&*fs, "/lustre/scratch/chaos-in").unwrap();
+    let ts_ref = TerasortJob {
+        split_bytes: 60_000, // ~10 maps over 600 KB
+        samples_per_file: 200,
+        ..TerasortJob::new("/lustre/scratch/chaos-in", "/lustre/scratch/chaos-ref-out", 4)
+    };
+    let ref_outcome = {
+        let mut engine =
+            MrEngine::new(&mut dc_ref, fs.clone() as Arc<dyn Dfs>, &pool, 1024, 1024);
+        run_terasort(&mut engine, &ts_ref, None, Micros::ZERO).unwrap()
+    };
+    teravalidate(&*fs, "/lustre/scratch/chaos-ref-out", input.clone()).unwrap();
+    let reference = sorted_output(&fs, &ref_outcome.output_files);
+
+    // Elastic run: once two maps have committed, crash the node holding
+    // map 0's shuffle output. The cluster manager (floor = 3 slaves)
+    // acquires a replacement node from the batch allocator mid-job.
+    let mut dc = build_cluster(&fs, &cfg, "chaos-elastic");
+    let cm = ClusterManager::new(elastic_cfg(), (100..104).map(NodeId).collect());
+    let plan = ElasticPlan::new().at_maps(2, ElasticAction::FailMapHost(0));
+    let ts = TerasortJob {
+        output_dir: "/lustre/scratch/chaos-el-out".into(),
+        ..ts_ref.clone()
+    };
+    let outcome = {
+        let mut engine = MrEngine::new(&mut dc, fs.clone() as Arc<dyn Dfs>, &pool, 1024, 1024)
+            .with_cluster_manager(cm)
+            .with_plan(plan);
+        run_terasort(&mut engine, &ts, None, Micros::ZERO).unwrap()
+    };
+    let validated = teravalidate(&*fs, "/lustre/scratch/chaos-el-out", input).unwrap();
+    assert_eq!(validated.records, rows);
+
+    assert_eq!(outcome.counters.get(counters::NODES_FAILED), 1);
+    assert!(
+        outcome.counters.get(counters::MAPS_INVALIDATED) >= 1,
+        "the crashed node held at least map 0's committed output"
+    );
+    assert!(
+        outcome.counters.get(counters::NODES_JOINED) >= 1,
+        "the batch allocator must deliver a replacement node"
+    );
+
+    // Byte-identical: same part files, same bytes, despite the chaos.
+    let elastic = sorted_output(&fs, &outcome.output_files);
+    assert_eq!(reference.len(), elastic.len());
+    for (name, bytes) in &reference {
+        assert_eq!(
+            Some(bytes),
+            elastic.get(name),
+            "part file {name} must be byte-identical after node loss + rejoin"
+        );
+    }
+    dc.rm.check_invariants().unwrap();
+    let (_, used) = dc.rm.cluster_resources();
+    assert_eq!(used.mem_mb, 0, "all containers released");
+}
+
+/// Property: random attempt failures + a random committed-map host crash
+/// never change Terasort's bytes relative to a clean reference run.
+#[test]
+fn chaos_random_faults_preserve_terasort_bytes_property() {
+    let cfg = StackConfig::tiny();
+    props(chaos_iters(4), |g: &mut Gen| {
+        let fs = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
+        let pool = Pool::new(4);
+        let rows = 1_500 + g.u64(0..1_500);
+        let gen = TeragenSpec {
+            rows,
+            maps: 2,
+            output_dir: "/lustre/scratch/cr-in".into(),
+            seed: 7,
+        };
+        let mut dc_ref = build_cluster(&fs, &cfg, "cr-ref");
+        {
+            let mut engine =
+                MrEngine::new(&mut dc_ref, fs.clone() as Arc<dyn Dfs>, &pool, 1024, 1024);
+            run_teragen(&mut engine, &gen, Micros::ZERO).unwrap();
+        }
+        let ts = TerasortJob {
+            split_bytes: 40_000,
+            samples_per_file: 100,
+            ..TerasortJob::new("/lustre/scratch/cr-in", "/lustre/scratch/cr-ref-out", 3)
+        };
+        let ref_outcome = {
+            let mut engine =
+                MrEngine::new(&mut dc_ref, fs.clone() as Arc<dyn Dfs>, &pool, 1024, 1024);
+            run_terasort(&mut engine, &ts, None, Micros::ZERO).unwrap()
+        };
+        let reference = sorted_output(&fs, &ref_outcome.output_files);
+        let n_maps = ref_outcome.maps;
+
+        // Chaos run: random attempt-0 failures plus a node crash pinned to
+        // a random committed map's host, with auto-replacement.
+        let mut dc = build_cluster(&fs, &cfg, "cr-chaos");
+        let cm = ClusterManager::new(elastic_cfg(), (200..206).map(NodeId).collect());
+        let victim_map = g.u32(0..n_maps);
+        let fire_at = 1 + g.u32(0..n_maps.max(2) - 1);
+        let plan = ElasticPlan::new().at_maps(fire_at, ElasticAction::FailMapHost(victim_map));
+        let mut failures = FailurePlan::none();
+        for _ in 0..g.usize(0..3) {
+            failures = failures.fail_attempt(TaskId::map(g.u32(0..n_maps)), 0);
+        }
+        let mut job = ts.clone();
+        job.output_dir = "/lustre/scratch/cr-chaos-out".into();
+        let outcome = {
+            let mut engine =
+                MrEngine::new(&mut dc, fs.clone() as Arc<dyn Dfs>, &pool, 1024, 1024)
+                    .with_cluster_manager(cm)
+                    .with_plan(plan);
+            // TerasortJob has no failure hook; drive the identity job
+            // directly through the sort spec.
+            run_terasort_with_failures(&mut engine, &job, failures)
+        };
+        let chaotic = sorted_output(&fs, &outcome.output_files);
+        assert_eq!(reference, chaotic, "fault injection must never change bytes");
+        dc.rm.check_invariants().unwrap();
+        let (_, used) = dc.rm.cluster_resources();
+        assert_eq!(used.mem_mb, 0);
+    });
+}
+
+/// `run_terasort` with a failure plan injected into the sort job's spec.
+fn run_terasort_with_failures(
+    engine: &mut MrEngine<'_>,
+    job: &TerasortJob,
+    failures: FailurePlan,
+) -> hpcw::mapreduce::MrOutcome {
+    use hpcw::mapreduce::{InputFormat, JobSpec, OutputFormat};
+    use hpcw::terasort::{sample_input, RangePartitioner};
+    let samples =
+        sample_input(&*engine.dfs, &job.input_dir, job.samples_per_file).unwrap();
+    let part = RangePartitioner::from_samples(samples, job.reduces).unwrap();
+    let mut spec =
+        JobSpec::identity("terasort-chaos", &job.input_dir, &job.output_dir, job.reduces);
+    spec.input_format = InputFormat::TeraRecords;
+    spec.output_format = OutputFormat::TeraRecords;
+    spec.split_bytes = job.split_bytes;
+    spec.partitioner = Arc::new(part);
+    spec.failures = failures;
+    engine.run(Arc::new(spec), "chaos", Micros::ZERO).unwrap()
+}
+
+/// Property: arbitrary admit/drain/partition sequences through the
+/// cluster manager keep the RM ledger consistent, expire silent nodes
+/// exactly once, and drains always return leases to the allocator.
+#[test]
+fn chaos_join_drain_partition_invariants_property() {
+    let cfg = StackConfig::tiny();
+    props(chaos_iters(10), |g: &mut Gen| {
+        let fs = LustreFs::new(&cfg.lustre, &cfg.cluster);
+        let mut dc = build_cluster(&fs, &cfg, "jdp");
+        let base = dc.rm.nm_count() as u32;
+        let pool_n = 6u32;
+        let mut cm = ClusterManager::new(
+            ElasticConfig {
+                nodes_min: 1,
+                nodes_max: base + pool_n,
+                queue_delay_ms: 0,
+                nm_timeout_ms: 500,
+                lease_walltime_s: 3_600,
+                ..Default::default()
+            },
+            (300..300 + pool_n).map(NodeId).collect(),
+        );
+        let mut now = Micros::ZERO;
+        let mut expired_total = 0usize;
+        for _ in 0..g.usize(4..25) {
+            now += Micros::ms(g.u64(1..400));
+            match g.u32(0..4) {
+                0 => {
+                    cm.request_grow(&dc, g.u32(1..3), now);
+                }
+                1 => {
+                    // Drain a random slave (may refuse; both paths legal).
+                    if let Some(&node) = dc.slaves.get(g.usize(0..dc.slaves.len().max(1))) {
+                        let _ = cm.drain(&mut dc, node, now);
+                    }
+                }
+                2 => {
+                    // Partition a random slave: it must expire (exactly
+                    // once) on a later tick.
+                    if let Some(&node) = dc.slaves.get(g.usize(0..dc.slaves.len().max(1))) {
+                        cm.partition(node);
+                    }
+                }
+                _ => {}
+            }
+            let delta = cm.tick(&mut dc, g.u32(0..3), now).unwrap();
+            expired_total += delta.failed.len();
+            for (node, _) in &delta.failed {
+                assert!(!dc.rm.has_nm(*node), "expired node must be gone");
+                assert!(!dc.nms.contains_key(node));
+            }
+            dc.rm.check_invariants().expect("rm ledger under churn");
+            assert_eq!(
+                dc.rm.nm_count(),
+                dc.nms.len(),
+                "RM registry and NM set must agree"
+            );
+        }
+        // Every partitioned node that expired did so exactly once: the
+        // failed_total tally equals the observed expiries.
+        assert_eq!(cm.failed_total as usize, expired_total);
+    });
+}

@@ -264,6 +264,12 @@ fn run_parity_job(
         plan = plan.fail_attempt(task, attempt);
     }
     spec.failures = plan;
+    // Speculation is deliberate scheduling nondeterminism (duplicate
+    // attempts); the byte-parity oracle runs with it off.
+    let ecfg = hpcw::config::ElasticConfig {
+        speculation: false,
+        ..Default::default()
+    };
     let mut engine = MrEngine::new(
         &mut dc,
         fs.clone(),
@@ -272,7 +278,8 @@ fn run_parity_job(
         cfg.yarn.reduce_memory_mb,
     )
     .with_mode(mode)
-    .with_slowstart(0.5);
+    .with_slowstart(0.5)
+    .with_elastic_cfg(ecfg);
     let outcome = engine.run(Arc::new(spec), "u", Micros::ZERO).unwrap();
     dc.rm.check_invariants().unwrap();
     let mut files = BTreeMap::new();
