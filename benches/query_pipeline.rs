@@ -1,0 +1,225 @@
+//! Query-engine bench (PR 5): JOIN + ORDER BY over generated tables,
+//! and the combiner's shuffle-byte cut on an aggregating plan. Writes
+//! **`BENCH_PR5.json`** with per-stage and shuffle-byte counters:
+//!
+//! * `query_join_orderby` — a two-table Hive query (repartition join →
+//!   total-order sort) run end to end through the Stack as chained MR
+//!   jobs on one dynamic cluster, with per-stage `SHUFFLE_BYTES` and
+//!   wall time;
+//! * `query_combiner` — the same aggregation stage run combiner-off vs
+//!   combiner-on; asserts the outputs are byte-identical and reports
+//!   `shuffle_ratio = bytes_off / bytes_on` (the CI baseline gate reads
+//!   this — see `benches/baselines/`).
+//!
+//! `HPCW_BENCH_SMOKE=1` shrinks the tables to CI size.
+
+use hpcw::api::{parse_query_text, AppPayload, Stack};
+use hpcw::bench::emit_json;
+use hpcw::cluster::NodeId;
+use hpcw::config::StackConfig;
+use hpcw::lustre::{Dfs, LustreFs};
+use hpcw::metrics::Metrics;
+use hpcw::mapreduce::MrEngine;
+use hpcw::util::ids::IdGen;
+use hpcw::util::pool::Pool;
+use hpcw::util::time::Micros;
+use hpcw::wrapper::DynamicCluster;
+use std::sync::Arc;
+
+const REGIONS: &[(&str, &str)] = &[
+    ("wales", "UK"),
+    ("england", "UK"),
+    ("scotland", "UK"),
+    ("bayern", "DE"),
+    ("hessen", "DE"),
+    ("eire", "IE"),
+    ("ulster", "IE"),
+    ("jylland", "DK"),
+    ("skane", "SE"),
+    ("lappi", "FI"),
+];
+
+fn gen_sales(n_rows: u64) -> String {
+    // Deterministic rows; amounts cycle over a large range so ORDER BY
+    // has real work and the WHERE clause drops a fixed fraction.
+    let mut text = String::with_capacity(n_rows as usize * 24);
+    for i in 0..n_rows {
+        let (region, _) = REGIONS[(i % REGIONS.len() as u64) as usize];
+        let amount = (i * 7919) % 100_000;
+        text.push_str(&format!("{region},p{:04},{amount}\n", i % 1000));
+    }
+    text
+}
+
+fn stage_counter(result: &hpcw::api::AppResult, key: &str) -> u64 {
+    result
+        .counters
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| *v)
+        .unwrap_or(0)
+}
+
+/// JOIN + ORDER BY through the Stack: chained MR jobs on one cluster.
+fn join_orderby_bench(smoke: bool) {
+    let n_rows: u64 = if smoke { 5_000 } else { 200_000 };
+    let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/qb-sales").unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/qb-regions").unwrap();
+    stack
+        .dfs
+        .create("/lustre/scratch/qb-sales/part-0", gen_sales(n_rows).as_bytes())
+        .unwrap();
+    let rtext: String = REGIONS.iter().map(|(r, c)| format!("{r},{c}\n")).collect();
+    stack
+        .dfs
+        .create("/lustre/scratch/qb-regions/part-0", rtext.as_bytes())
+        .unwrap();
+    let sql = "SELECT * FROM '/lustre/scratch/qb-sales' USING ',' \
+               SCHEMA (region, product, amount) \
+               JOIN '/lustre/scratch/qb-regions' USING ',' \
+               SCHEMA (region, country) ON region = region \
+               WHERE amount > 50000 \
+               ORDER BY amount DESC \
+               INTO '/lustre/scratch/qb-top'";
+    let t0 = std::time::Instant::now();
+    let id = stack
+        .submit(
+            6,
+            "bench",
+            AppPayload::Query {
+                engine: "hive".into(),
+                text: sql.into(),
+                reduces: 4,
+            },
+        )
+        .unwrap();
+    let result = stack.run_to_completion(id, 50).unwrap().clone();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let join_shuffle = stage_counter(&result, "s0.SHUFFLE_BYTES");
+    let sort_shuffle = stage_counter(&result, "s1.SHUFFLE_BYTES");
+    assert!(result.records > 0, "join+sort produced no rows");
+    assert!(join_shuffle > 0 && sort_shuffle > 0, "both stages shuffle");
+    emit_json(
+        "BENCH_PR5.json",
+        "query_join_orderby",
+        &[
+            ("rows_in", n_rows as f64),
+            ("rows_out", result.records as f64),
+            ("stages", 2.0),
+            ("wall_s", wall_s),
+            ("join_shuffle_bytes", join_shuffle as f64),
+            ("sort_shuffle_bytes", sort_shuffle as f64),
+            ("join_reduce_records", stage_counter(&result, "s0.REDUCE_OUTPUT_RECORDS") as f64),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    );
+    println!(
+        "join+orderby: {n_rows} rows -> {} rows in {wall_s:.3}s \
+         (shuffle join={join_shuffle}B sort={sort_shuffle}B)",
+        result.records
+    );
+}
+
+/// Combiner-off vs combiner-on on the aggregation stage.
+fn combiner_bench(smoke: bool) {
+    let n_rows: u64 = if smoke { 20_000 } else { 400_000 };
+    let cfg = StackConfig::tiny();
+    let fs = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
+    let nodes: Vec<NodeId> = (0..6).map(NodeId).collect();
+    let mut dc = DynamicCluster::build(
+        &cfg,
+        &nodes,
+        &*fs,
+        Arc::new(IdGen::default()),
+        Arc::new(Metrics::new()),
+        "query-bench",
+        Micros::ZERO,
+    )
+    .unwrap();
+    let pool = Pool::new(
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(8),
+    );
+    fs.mkdirs("/lustre/scratch/qb-agg-in").unwrap();
+    fs.create(
+        "/lustre/scratch/qb-agg-in/part-0",
+        gen_sales(n_rows).as_bytes(),
+    )
+    .unwrap();
+    let mut walls = [0.0f64; 2];
+    let mut shuffle = [0u64; 2];
+    let mut outputs: Vec<Vec<u8>> = Vec::new();
+    for (i, combine) in [false, true].into_iter().enumerate() {
+        let out = format!("/lustre/scratch/qb-agg-out-{combine}");
+        let plan = parse_query_text(
+            "hive",
+            &format!(
+                "SELECT region, SUM(amount), COUNT(amount), MAX(amount) \
+                 FROM '/lustre/scratch/qb-agg-in' USING ',' \
+                 SCHEMA (region, product, amount) GROUP BY region INTO '{out}'"
+            ),
+            4,
+        )
+        .unwrap();
+        let mut spec = plan.compile_stages().unwrap()[0].compile(&*fs).unwrap();
+        spec.split_bytes = 256 * 1024;
+        if !combine {
+            spec.combiner = None;
+        }
+        let t0 = std::time::Instant::now();
+        let outcome = {
+            let mut engine = MrEngine::new(
+                &mut dc,
+                fs.clone() as Arc<dyn Dfs>,
+                &pool,
+                cfg.yarn.map_memory_mb,
+                cfg.yarn.reduce_memory_mb,
+            );
+            engine.run(Arc::new(spec), "bench", Micros::ZERO).unwrap()
+        };
+        walls[i] = t0.elapsed().as_secs_f64();
+        shuffle[i] = outcome.counters.get("SHUFFLE_BYTES");
+        let mut files = outcome.output_files.clone();
+        files.sort();
+        let mut bytes = Vec::new();
+        for f in &files {
+            bytes.extend(fs.read(f).unwrap());
+        }
+        outputs.push(bytes);
+    }
+    assert_eq!(outputs[0], outputs[1], "combiner must not change results");
+    let ratio = shuffle[0] as f64 / shuffle[1].max(1) as f64;
+    assert!(
+        ratio > 1.0,
+        "combiner must cut shuffle bytes: off={} on={}",
+        shuffle[0],
+        shuffle[1]
+    );
+    emit_json(
+        "BENCH_PR5.json",
+        "query_combiner",
+        &[
+            ("rows_in", n_rows as f64),
+            ("shuffle_bytes_off", shuffle[0] as f64),
+            ("shuffle_bytes_on", shuffle[1] as f64),
+            ("shuffle_ratio", ratio),
+            ("wall_off_s", walls[0]),
+            ("wall_on_s", walls[1]),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    );
+    println!(
+        "combiner: shuffle {}B -> {}B ({ratio:.1}x smaller), wall {:.3}s -> {:.3}s",
+        shuffle[0], shuffle[1], walls[0], walls[1]
+    );
+}
+
+fn main() {
+    let smoke = std::env::var("HPCW_BENCH_SMOKE").is_ok();
+    join_orderby_bench(smoke);
+    combiner_bench(smoke);
+    println!("query_pipeline OK");
+}

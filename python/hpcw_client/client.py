@@ -122,6 +122,29 @@ class ApiClient:
             raise ApiError(status, code, message)
         return data
 
+    def submit_query(
+        self,
+        engine: str,
+        text: str,
+        reduces: int,
+        nodes: int,
+        user: str,
+        workflow: bool = False,
+    ) -> int:
+        """Submit a Pig/Hive query text (``POST /v1/queries``). Returns a
+        job id (one cluster, chained stages) or, with ``workflow=True``,
+        a workflow id (one ``query_stage`` step per MR job)."""
+        body = {
+            "engine": engine,
+            "text": text,
+            "reduces": reduces,
+            "nodes": nodes,
+            "user": user,
+            "mode": "workflow" if workflow else "job",
+        }
+        doc = self._json("POST", "/v1/queries", body)
+        return doc["workflow"] if workflow else doc["job"]
+
     # -- workflows ---------------------------------------------------------
 
     def submit_workflow(self, spec: Dict[str, Any]) -> int:

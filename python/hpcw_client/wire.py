@@ -73,6 +73,63 @@ def hive(sql: str, reduces: int) -> Dict[str, Any]:
     return {"type": "hive", "sql": sql, "reduces": reduces}
 
 
+def query(engine: str, text: str, reduces: int) -> Dict[str, Any]:
+    """A multi-stage query (``engine`` = ``"pig"`` or ``"hive"``): JOIN /
+    ORDER BY / LIMIT compile server-side to chained MR jobs."""
+    return {"type": "query", "engine": engine, "text": text, "reduces": reduces}
+
+
+#: Stage kinds of a compiled query plan (``query_stage`` payloads).
+STAGE_KINDS = ("join", "agg", "select", "sort")
+
+
+def _canonical_stage(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Rebuild a ``query_stage``'s stage document in canonical key order,
+    mirroring Rust ``wire::stage_to_json`` byte for byte: the right-side
+    block only for joins, optionals only when set, ``project``/
+    ``aggregates`` only when non-empty, ``desc`` only when true."""
+    kind = _req(doc, "kind")
+    if kind not in STAGE_KINDS:
+        raise ValueError(f"unknown stage kind '{kind}'")
+    out: Dict[str, Any] = {
+        "kind": kind,
+        "input_dir": _req(doc, "input_dir"),
+        "input_fields": list(_req(doc, "input_fields")),
+        "input_delim": (doc.get("input_delim") or "\t")[0],
+        "output_dir": _req(doc, "output_dir"),
+        "reduces": _req(doc, "reduces"),
+    }
+    if doc.get("intermediate"):
+        out["intermediate"] = True
+    if doc.get("right_dir") is not None:
+        out["right_dir"] = doc["right_dir"]
+        out["right_fields"] = list(_req(doc, "right_fields"))
+        out["right_delim"] = (doc.get("right_delim") or "\t")[0]
+    if doc.get("left_key") is not None:
+        out["left_key"] = doc["left_key"]
+    if doc.get("right_key") is not None:
+        out["right_key"] = doc["right_key"]
+    if doc.get("combined_fields"):
+        out["combined_fields"] = list(doc["combined_fields"])
+    if doc.get("filter") is not None:
+        out["filter"] = doc["filter"]
+    if doc.get("project"):
+        out["project"] = list(doc["project"])
+    if doc.get("group_by") is not None:
+        out["group_by"] = doc["group_by"]
+    if doc.get("aggregates"):
+        out["aggregates"] = [
+            {"fn": _req(a, "fn"), "expr": _req(a, "expr")} for a in doc["aggregates"]
+        ]
+    if doc.get("sort_by") is not None:
+        out["sort_by"] = doc["sort_by"]
+    if doc.get("desc"):
+        out["desc"] = True
+    if doc.get("limit") is not None:
+        out["limit"] = doc["limit"]
+    return out
+
+
 def rsummary(
     input_dir: str,
     output_dir: str,
@@ -114,6 +171,10 @@ def canonical_payload(doc: Dict[str, Any]) -> Dict[str, Any]:
         return pig(_req(doc, "script"), _req(doc, "reduces"))
     if t == "hive":
         return hive(_req(doc, "sql"), _req(doc, "reduces"))
+    if t == "query":
+        return query(_req(doc, "engine"), _req(doc, "text"), _req(doc, "reduces"))
+    if t == "query_stage":
+        return {"type": "query_stage", "stage": _canonical_stage(_req(doc, "stage"))}
     if t == "rsummary":
         # Mirror Rust payload_from_json: the delimiter is one character —
         # longer strings truncate to their first char, empty/missing

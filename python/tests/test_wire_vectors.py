@@ -28,7 +28,40 @@ def test_every_payload_vector_is_canonical():
 
 def test_payload_vectors_cover_every_variant():
     kinds = {c["doc"]["type"] for c in load_vectors()["payloads"]}
-    assert kinds == {"terasort", "teragen", "pig", "hive", "rsummary"}
+    assert kinds == {
+        "terasort",
+        "teragen",
+        "pig",
+        "hive",
+        "query",
+        "query_stage",
+        "rsummary",
+    }
+
+
+def test_query_stage_vectors_cover_join_agg_and_sort():
+    stage_kinds = {
+        c["doc"]["stage"]["kind"]
+        for c in load_vectors()["payloads"]
+        if c["doc"]["type"] == "query_stage"
+    }
+    assert {"join", "agg", "sort"} <= stage_kinds
+
+
+def test_unknown_stage_kind_rejected():
+    with pytest.raises(ValueError, match="unknown stage kind"):
+        wire.canonical_payload(
+            {
+                "type": "query_stage",
+                "stage": {
+                    "kind": "explode",
+                    "input_dir": "/i",
+                    "input_fields": ["a"],
+                    "output_dir": "/o",
+                    "reduces": 1,
+                },
+            }
+        )
 
 
 def test_workflow_vector_is_canonical():

@@ -157,6 +157,35 @@ impl ApiClient {
         Ok(resp)
     }
 
+    /// Submit a Pig/Hive query text (`POST /v1/queries`). With
+    /// `workflow = false` the stage chain runs on one dynamic cluster
+    /// and the returned id is an LSF **job**; with `workflow = true` the
+    /// plan becomes a DAG of `query_stage` steps and the id is a
+    /// **workflow** (one LSF job per stage).
+    pub fn submit_query(
+        &self,
+        engine: &str,
+        text: &str,
+        reduces: u32,
+        nodes: u32,
+        user: &str,
+        workflow: bool,
+    ) -> Result<u64> {
+        let mode = if workflow { "workflow" } else { "job" };
+        let body = Json::obj(vec![
+            ("engine", Json::str(engine)),
+            ("text", Json::str(text)),
+            ("reduces", Json::num(reduces as f64)),
+            ("nodes", Json::num(nodes as f64)),
+            ("user", Json::str(user)),
+            ("mode", Json::str(mode)),
+        ])
+        .to_string();
+        let (status, resp) = self.call("POST", "/v1/queries", Some(body.as_bytes()))?;
+        let json = Self::check(status, &resp)?;
+        json.req_u64(if workflow { "workflow" } else { "job" })
+    }
+
     /// Submit a named-step DAG workflow; returns the workflow id.
     pub fn submit_workflow(&self, spec: &WorkflowSpec) -> Result<u64> {
         spec.validate()?;

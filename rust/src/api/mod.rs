@@ -29,8 +29,8 @@ pub mod wire;
 
 pub use client::ApiClient;
 pub use server::ApiServer;
-pub use stack::{AppPayload, AppResult, Stack};
-pub use synfiniway::{Workflow, WorkflowRun};
+pub use stack::{parse_query_text, AppPayload, AppResult, Stack};
+pub use synfiniway::{query_workflow, Workflow, WorkflowRun};
 pub use wire::{
     ErrorDoc, EventDoc, EventPage, JobDoc, JobsPage, ResultDoc, StepSpec, StepState,
     SubmitRequest, WorkflowDoc, WorkflowSpec,

@@ -11,6 +11,9 @@
 //! * `GET /v1/jobs/{id}/output?path=...` → raw bytes, confined to the
 //!   job's output root (`bad_path` on traversal attempts)
 //! * `POST /v1/workflows` `WorkflowSpec` (named-step DAG) → `{workflow}`
+//! * `POST /v1/queries` `{engine,text,reduces,nodes,user[,mode]}` →
+//!   `{job}` (one cluster, chained stages) or, with `mode:"workflow"`,
+//!   `{workflow}` (one `query_stage` step per MR job)
 //! * `GET /v1/workflows/{id}[?wait_ms=N]` → `WorkflowDoc`
 //! * `GET /v1/events?since=seq[&wait_ms=N]` → `EventPage`, the monotonic
 //!   journal of job/workflow/step transitions
@@ -316,6 +319,7 @@ fn route(state: &State, req: Request) -> Response {
         ("DELETE", ["v1", "jobs", id]) => ("delete_job", delete_job(state, id)),
         ("GET", ["v1", "jobs", id, "output"]) => ("get_output", get_output(state, &req, id)),
         ("POST", ["v1", "workflows"]) => ("post_workflow", post_workflow(state, &req)),
+        ("POST", ["v1", "queries"]) => ("post_query", post_query(state, &req)),
         ("GET", ["v1", "workflows", id]) => ("get_workflow", get_workflow(state, &req, id)),
         ("GET", ["v1", "cluster"]) => ("get_cluster", get_cluster(state)),
         ("POST", ["v1", "cluster", "nodes", id, action]) => {
@@ -559,6 +563,67 @@ fn post_workflow(state: &State, req: &Request) -> HandlerResult {
         201,
         Json::obj(vec![("workflow", Json::num(id as f64))]).to_string(),
     ))
+}
+
+/// `POST /v1/queries`: submit a Pig/Hive query text. Body:
+/// `{engine, text, reduces, nodes, user[, mode]}`. `mode: "job"`
+/// (default) runs the stage chain on one dynamic cluster and answers
+/// `{job}`; `mode: "workflow"` compiles the plan to a DAG of
+/// `query_stage` steps and answers `{workflow}` — one LSF job per stage,
+/// chained through `${steps.<name>.output_dir}` references.
+fn post_query(state: &State, req: &Request) -> HandlerResult {
+    let j = parse_body(req)?;
+    let engine = j.req_str("engine").map_err(|e| bad_request(&e))?.to_string();
+    let text = j.req_str("text").map_err(|e| bad_request(&e))?.to_string();
+    let reduces = j.req_u64("reduces").map_err(|e| bad_request(&e))? as u32;
+    let nodes = j.req_u64("nodes").map_err(|e| bad_request(&e))? as u32;
+    let user = j.req_str("user").map_err(|e| bad_request(&e))?.to_string();
+    let mode = j.get("mode").and_then(Json::as_str).unwrap_or("job");
+    match mode {
+        "job" => {
+            // Parse eagerly so syntax errors answer 400, not a failed job.
+            crate::api::stack::parse_query_text(&engine, &text, reduces)
+                .map_err(|e| bad_request(&e))?;
+            let mut stack = state.stack.lock().unwrap();
+            let id = stack
+                .submit(
+                    nodes,
+                    &user,
+                    crate::api::stack::AppPayload::Query {
+                        engine,
+                        text,
+                        reduces,
+                    },
+                )
+                .map_err(|e| bad_request(&e))?;
+            drop(stack);
+            state.work.notify();
+            Ok(Response::json(
+                201,
+                Json::obj(vec![("job", Json::num(id.0 as f64))]).to_string(),
+            ))
+        }
+        "workflow" => {
+            let plan = crate::api::stack::parse_query_text(&engine, &text, reduces)
+                .map_err(|e| bad_request(&e))?;
+            let wf =
+                crate::api::synfiniway::query_workflow(&format!("query-{engine}"), &user, nodes, &plan)
+                    .map_err(|e| bad_request(&e))?;
+            let mut wfs = state.workflows.lock().unwrap();
+            let id = wfs.len() as u64;
+            wfs.push(WorkflowRun::new(id, wf));
+            drop(wfs);
+            state.work.notify();
+            Ok(Response::json(
+                201,
+                Json::obj(vec![("workflow", Json::num(id as f64))]).to_string(),
+            ))
+        }
+        other => Err(ErrorDoc::new(
+            code::BAD_REQUEST,
+            format!("unknown query mode '{other}' (job|workflow)"),
+        )),
+    }
 }
 
 fn get_workflow(state: &State, req: &Request, id: &str) -> HandlerResult {

@@ -14,7 +14,7 @@ use crate::api::wire::{ClusterDoc, NodeDoc};
 use crate::cluster::{ClusterModel, NodeId, NodeState};
 use crate::config::StackConfig;
 use crate::error::{Error, Result};
-use crate::frameworks::{hive, pig, rhadoop};
+use crate::frameworks::{hive, pig, rhadoop, LogicalPlan};
 use crate::frameworks::expr::Schema;
 use crate::lustre::{Dfs, LustreFs};
 use crate::mapreduce::MrEngine;
@@ -48,6 +48,20 @@ pub enum AppPayload {
     PigScript { script: String, reduces: u32 },
     /// A Hive-like query.
     HiveQuery { sql: String, reduces: u32 },
+    /// A multi-stage query (`engine` = `"pig"` or `"hive"`): the plan's
+    /// stage chain (join → aggregate → sort) runs back to back on ONE
+    /// dynamic cluster — the pilot-job shape (chained MR jobs on the same
+    /// pilot-managed resources).
+    Query {
+        engine: String,
+        text: String,
+        reduces: u32,
+    },
+    /// One compiled stage of a query plan — the unit a compiled-query
+    /// workflow submits per step (`synfiniway::query_workflow`).
+    QueryStage {
+        stage: crate::frameworks::plan::StageSpec,
+    },
     /// RHadoop summary statistics over a delimited dataset.
     RSummary {
         input_dir: String,
@@ -65,6 +79,8 @@ impl AppPayload {
             AppPayload::Teragen { .. } => "teragen",
             AppPayload::PigScript { .. } => "pig",
             AppPayload::HiveQuery { .. } => "hive",
+            AppPayload::Query { .. } => "query",
+            AppPayload::QueryStage { .. } => "query_stage",
             AppPayload::RSummary { .. } => "rsummary",
         }
     }
@@ -448,29 +464,27 @@ impl Stack {
             }
             AppPayload::PigScript { script, reduces } => {
                 let plan = pig::parse_script(script, *reduces)?;
-                let spec = plan.compile()?;
-                let out_dir = plan.output_dir.clone();
-                let outcome = engine.run(Arc::new(spec), user, self.now)?;
-                Ok(AppResult {
-                    kind: "pig",
-                    output_dir: out_dir,
-                    output_files: outcome.output_files,
-                    records: outcome.counters.get("REDUCE_OUTPUT_RECORDS"),
-                    validated: false,
-                    counters: outcome.counters.snapshot(),
-                    wall: t0.elapsed(),
-                })
+                self.run_query_plan(&mut engine, "pig", &plan, user, t0)
             }
             AppPayload::HiveQuery { sql, reduces } => {
                 let plan = hive::parse_query(sql, *reduces)?;
-                let spec = plan.compile()?;
-                let out_dir = plan.output_dir.clone();
-                let outcome = engine.run(Arc::new(spec), user, self.now)?;
+                self.run_query_plan(&mut engine, "hive", &plan, user, t0)
+            }
+            AppPayload::Query {
+                engine: qe,
+                text,
+                reduces,
+            } => {
+                let plan = parse_query_text(qe, text, *reduces)?;
+                self.run_query_plan(&mut engine, "query", &plan, user, t0)
+            }
+            AppPayload::QueryStage { stage } => {
+                let (outcome, records) = self.run_stage(&mut engine, stage, user)?;
                 Ok(AppResult {
-                    kind: "hive",
-                    output_dir: out_dir,
+                    kind: "query_stage",
+                    output_dir: stage.output_dir.clone(),
                     output_files: outcome.output_files,
-                    records: outcome.counters.get("REDUCE_OUTPUT_RECORDS"),
+                    records,
                     validated: false,
                     counters: outcome.counters.snapshot(),
                     wall: t0.elapsed(),
@@ -501,6 +515,87 @@ impl Stack {
                 })
             }
         }
+    }
+
+    /// Run ONE compiled query stage: pre-delete a stale intermediate
+    /// output (guarded — see `StageSpec::cleanable_intermediate`),
+    /// compile (sort stages sample their input here, after the producer
+    /// ran), execute, and return the outcome plus its output-record
+    /// count. Shared by the `query_stage` payload and the chained
+    /// `query` runner so their semantics cannot drift.
+    fn run_stage(
+        &self,
+        engine: &mut MrEngine<'_>,
+        stage: &crate::frameworks::StageSpec,
+        user: &str,
+    ) -> Result<(crate::mapreduce::MrOutcome, u64)> {
+        if stage.cleanable_intermediate() && self.dfs.exists(&stage.output_dir) {
+            self.dfs.delete_recursive(&stage.output_dir)?;
+        }
+        let spec = stage.compile(&*self.dfs)?;
+        let map_only = spec.n_reduces == 0;
+        let outcome = engine.run(Arc::new(spec), user, self.now)?;
+        let records = outcome.counters.get(if map_only {
+            "MAP_OUTPUT_RECORDS"
+        } else {
+            "REDUCE_OUTPUT_RECORDS"
+        });
+        Ok((outcome, records))
+    }
+
+    /// Run a compiled query plan as chained MR jobs on one dynamic
+    /// cluster: stage `i` reads stage `i-1`'s output through the DFS;
+    /// intermediates are deleted after success. The result carries the
+    /// final stage's output plus merged (`NAME`) and per-stage
+    /// (`s{i}.NAME`) counters.
+    fn run_query_plan(
+        &self,
+        engine: &mut MrEngine<'_>,
+        kind: &'static str,
+        plan: &LogicalPlan,
+        user: &str,
+        t0: std::time::Instant,
+    ) -> Result<AppResult> {
+        let stages = plan.compile_stages()?;
+        let mut merged: BTreeMap<String, u64> = BTreeMap::new();
+        let mut per_stage: Vec<(String, u64)> = Vec::new();
+        let mut last: Option<(crate::mapreduce::MrOutcome, u64)> = None;
+        for (i, stage) in stages.iter().enumerate() {
+            let (outcome, records) = self.run_stage(engine, stage, user)?;
+            for (name, v) in outcome.counters.snapshot() {
+                *merged.entry(name.clone()).or_insert(0) += v;
+                per_stage.push((format!("s{i}.{name}"), v));
+            }
+            last = Some((outcome, records));
+        }
+        let (outcome, records) =
+            last.ok_or_else(|| Error::Api("query compiled to zero stages".into()))?;
+        for stage in &stages[..stages.len() - 1] {
+            let _ = self.dfs.delete_recursive(&stage.output_dir);
+        }
+        let mut counters: Vec<(String, u64)> = merged.into_iter().collect();
+        counters.extend(per_stage);
+        Ok(AppResult {
+            kind,
+            output_dir: plan.output_dir.clone(),
+            output_files: outcome.output_files,
+            records,
+            validated: false,
+            counters,
+            wall: t0.elapsed(),
+        })
+    }
+}
+
+/// Parse `engine` + query text into a validated plan (`"pig"` scripts or
+/// `"hive"` SQL).
+pub fn parse_query_text(engine: &str, text: &str, reduces: u32) -> Result<LogicalPlan> {
+    match engine {
+        "pig" => pig::parse_script(text, reduces),
+        "hive" => hive::parse_query(text, reduces),
+        other => Err(Error::Api(format!(
+            "unknown query engine '{other}' (pig|hive)"
+        ))),
     }
 }
 

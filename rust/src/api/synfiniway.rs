@@ -25,6 +25,47 @@ use crate::util::ids::LsfJobId;
 /// Back-compat alias: the workflow definition is the wire spec.
 pub type Workflow = WorkflowSpec;
 
+/// Compile a multi-stage query plan to a SynfiniWay workflow: one
+/// `query_stage` step per MR job, chained `s0 → s1 → …` with each step's
+/// input wired to `${steps.<prev>.output_dir}` — intermediate outputs
+/// flow through the DFS like any other job's, and the API's workflow
+/// machinery (retries, events, status docs) applies unchanged.
+pub fn query_workflow(
+    name: &str,
+    user: &str,
+    nodes: u32,
+    plan: &crate::frameworks::LogicalPlan,
+) -> Result<WorkflowSpec> {
+    let stages = plan.compile_stages()?;
+    let steps = stages
+        .iter()
+        .enumerate()
+        .map(|(i, stage)| {
+            let mut stage = stage.clone();
+            let after = if i == 0 {
+                Vec::new()
+            } else {
+                stage.input_dir = format!("${{steps.s{}.output_dir}}", i - 1);
+                vec![format!("s{}", i - 1)]
+            };
+            StepSpec {
+                name: format!("s{i}"),
+                after,
+                retries: 0,
+                payload: crate::api::stack::AppPayload::QueryStage { stage },
+            }
+        })
+        .collect();
+    let spec = WorkflowSpec {
+        name: name.to_string(),
+        user: user.to_string(),
+        nodes,
+        steps,
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
 /// One observed step transition, for the server's event journal.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StepTransition {
@@ -495,6 +536,74 @@ mod tests {
         assert!(run.is_aborted());
         assert_eq!(t[0].state, StepState::Failed);
         assert_eq!(run.to_doc().steps[0].attempts, 1, "no resubmission");
+    }
+
+    #[test]
+    fn query_workflow_chains_stages_through_step_refs() {
+        let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+        stack.dfs.mkdirs("/lustre/scratch/qw-sales").unwrap();
+        stack
+            .dfs
+            .create(
+                "/lustre/scratch/qw-sales/part-0",
+                b"wales,200\nwales,300\nengland,50\nwales,25\nengland,75\n",
+            )
+            .unwrap();
+        let plan = crate::api::stack::parse_query_text(
+            "hive",
+            "SELECT region, SUM(amount) FROM '/lustre/scratch/qw-sales' USING ',' \
+             SCHEMA (region, amount) GROUP BY region \
+             ORDER BY sum_amount DESC INTO '/lustre/scratch/qw-top'",
+            2,
+        )
+        .unwrap();
+        let wf = query_workflow("top-regions", "sid", 4, &plan).unwrap();
+        assert_eq!(wf.steps.len(), 2, "agg then sort");
+        assert_eq!(wf.steps[1].after, vec!["s0"]);
+        // The sort step's input is a reference, resolved at submit time.
+        match &wf.steps[1].payload {
+            crate::api::stack::AppPayload::QueryStage { stage } => {
+                assert_eq!(stage.input_dir, "${steps.s0.output_dir}");
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+        let mut run = WorkflowRun::new(0, wf);
+        for _ in 0..6 {
+            run.advance(&mut stack);
+            stack.tick();
+        }
+        run.advance(&mut stack);
+        assert!(run.is_complete(), "doc={:?}", run.to_doc());
+        // Globally ordered output: wales (525) before england (125).
+        let mut files: Vec<String> = stack
+            .dfs
+            .list("/lustre/scratch/qw-top")
+            .into_iter()
+            .filter(|p| p.contains("/part-"))
+            .collect();
+        files.sort();
+        let mut text = String::new();
+        for f in &files {
+            text.push_str(&String::from_utf8(stack.dfs.read(f).unwrap()).unwrap());
+        }
+        let rows: Vec<&str> = text.lines().collect();
+        assert_eq!(rows, vec!["wales\t525", "england\t125"]);
+
+        // Re-running the same query as a workflow must succeed: the
+        // final output is removed by the caller (Hadoop semantics), and
+        // the stale `.stage0` intermediate left by the first run is
+        // pre-deleted by the stage itself.
+        assert!(stack.dfs.exists("/lustre/scratch/qw-top.stage0"));
+        stack.dfs.delete_recursive("/lustre/scratch/qw-top").unwrap();
+        let wf2 = query_workflow("top-regions-again", "sid", 4, &plan).unwrap();
+        let mut rerun = WorkflowRun::new(1, wf2);
+        for _ in 0..6 {
+            rerun.advance(&mut stack);
+            stack.tick();
+        }
+        rerun.advance(&mut stack);
+        assert!(rerun.is_complete(), "doc={:?}", rerun.to_doc());
+        assert!(stack.dfs.exists("/lustre/scratch/qw-top/_SUCCESS"));
     }
 
     #[test]

@@ -19,6 +19,8 @@
 use crate::api::stack::{AppPayload, AppResult};
 use crate::codec::json::Json;
 use crate::error::{Error, Result};
+use crate::frameworks::expr::Schema;
+use crate::frameworks::plan::{AggSpec, Aggregate, StageKind, StageSpec};
 use crate::scheduler::JobState;
 
 /// The protocol version segment every route is mounted under.
@@ -178,6 +180,20 @@ pub fn payload_to_json(p: &AppPayload) -> Json {
             ("sql", Json::str(&**sql)),
             ("reduces", Json::num(*reduces as f64)),
         ]),
+        AppPayload::Query {
+            engine,
+            text,
+            reduces,
+        } => Json::obj(vec![
+            ("type", Json::str("query")),
+            ("engine", Json::str(&**engine)),
+            ("text", Json::str(&**text)),
+            ("reduces", Json::num(*reduces as f64)),
+        ]),
+        AppPayload::QueryStage { stage } => Json::obj(vec![
+            ("type", Json::str("query_stage")),
+            ("stage", stage_to_json(stage)),
+        ]),
         AppPayload::RSummary {
             input_dir,
             output_dir,
@@ -224,6 +240,17 @@ pub fn payload_from_json(j: &Json) -> Result<AppPayload> {
             sql: j.req_str("sql")?.to_string(),
             reduces: j.req_u64("reduces")? as u32,
         }),
+        "query" => Ok(AppPayload::Query {
+            engine: j.req_str("engine")?.to_string(),
+            text: j.req_str("text")?.to_string(),
+            reduces: j.req_u64("reduces")? as u32,
+        }),
+        "query_stage" => Ok(AppPayload::QueryStage {
+            stage: stage_from_json(
+                j.get("stage")
+                    .ok_or_else(|| Error::Codec("missing 'stage'".into()))?,
+            )?,
+        }),
         "rsummary" => {
             let strs = |key: &str| -> Result<Vec<String>> {
                 j.get(key)
@@ -252,6 +279,157 @@ pub fn payload_from_json(j: &Json) -> Result<AppPayload> {
     }
 }
 
+fn str_arr(items: &[String]) -> Json {
+    Json::Arr(items.iter().map(|s| Json::str(&**s)).collect())
+}
+
+fn req_str_arr(j: &Json, key: &str) -> Result<Vec<String>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(Json::as_str)
+                .map(str::to_string)
+                .collect()
+        })
+        .ok_or_else(|| Error::Codec(format!("missing array '{key}'")))
+}
+
+fn opt_str(j: &Json, key: &str) -> Option<String> {
+    j.get(key).and_then(Json::as_str).map(str::to_string)
+}
+
+/// Serialize one compiled query stage. Field presence rules (mirrored
+/// byte-for-byte by `python/hpcw_client/wire.py`): the right-side block
+/// appears only for `join` stages; `filter`/`group_by`/`sort_by`/`limit`
+/// only when set; `project`/`aggregates` only when non-empty; `desc`
+/// only when true.
+pub fn stage_to_json(s: &StageSpec) -> Json {
+    let mut fields = vec![
+        ("kind", Json::str(s.kind.as_wire())),
+        ("input_dir", Json::str(&*s.input_dir)),
+        ("input_fields", str_arr(&s.input_schema.fields)),
+        ("input_delim", Json::str(s.input_schema.delimiter.to_string())),
+        ("output_dir", Json::str(&*s.output_dir)),
+        ("reduces", Json::num(s.n_reduces as f64)),
+    ];
+    if s.intermediate {
+        fields.push(("intermediate", Json::Bool(true)));
+    }
+    if let (Some(rd), Some(rs)) = (&s.right_dir, &s.right_schema) {
+        fields.push(("right_dir", Json::str(&**rd)));
+        fields.push(("right_fields", str_arr(&rs.fields)));
+        fields.push(("right_delim", Json::str(rs.delimiter.to_string())));
+    }
+    if let Some(k) = &s.left_key {
+        fields.push(("left_key", Json::str(&**k)));
+    }
+    if let Some(k) = &s.right_key {
+        fields.push(("right_key", Json::str(&**k)));
+    }
+    if !s.combined_fields.is_empty() {
+        fields.push(("combined_fields", str_arr(&s.combined_fields)));
+    }
+    if let Some(f) = &s.filter {
+        fields.push(("filter", Json::str(&**f)));
+    }
+    if !s.project.is_empty() {
+        fields.push(("project", str_arr(&s.project)));
+    }
+    if let Some(g) = &s.group_by {
+        fields.push(("group_by", Json::str(&**g)));
+    }
+    if !s.aggregates.is_empty() {
+        fields.push((
+            "aggregates",
+            Json::Arr(
+                s.aggregates
+                    .iter()
+                    .map(|a| {
+                        Json::obj(vec![
+                            ("fn", Json::str(a.agg.name())),
+                            ("expr", Json::str(&*a.expr)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    if let Some(k) = &s.sort_by {
+        fields.push(("sort_by", Json::str(&**k)));
+    }
+    if s.desc {
+        fields.push(("desc", Json::Bool(true)));
+    }
+    if let Some(l) = s.limit {
+        fields.push(("limit", Json::num(l as f64)));
+    }
+    Json::obj(fields)
+}
+
+/// Parse a stage document (inverse of [`stage_to_json`]).
+pub fn stage_from_json(j: &Json) -> Result<StageSpec> {
+    let delim_of = |key: &str| -> char {
+        j.get(key)
+            .and_then(Json::as_str)
+            .and_then(|s| s.chars().next())
+            .unwrap_or('\t')
+    };
+    let right_dir = opt_str(j, "right_dir");
+    let right_schema = if right_dir.is_some() {
+        Some(Schema {
+            fields: req_str_arr(j, "right_fields")?,
+            delimiter: delim_of("right_delim"),
+        })
+    } else {
+        None
+    };
+    let aggregates = match j.get("aggregates").and_then(Json::as_arr) {
+        Some(items) => items
+            .iter()
+            .map(|a| {
+                let name = a.req_str("fn")?;
+                Ok(AggSpec {
+                    agg: Aggregate::parse(name).ok_or_else(|| {
+                        Error::Codec(format!("unknown aggregate '{name}'"))
+                    })?,
+                    expr: a.req_str("expr")?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => Vec::new(),
+    };
+    Ok(StageSpec {
+        kind: StageKind::from_wire(j.req_str("kind")?)?,
+        input_dir: j.req_str("input_dir")?.to_string(),
+        input_schema: Schema {
+            fields: req_str_arr(j, "input_fields")?,
+            delimiter: delim_of("input_delim"),
+        },
+        right_dir,
+        right_schema,
+        left_key: opt_str(j, "left_key"),
+        right_key: opt_str(j, "right_key"),
+        combined_fields: match j.get("combined_fields") {
+            Some(_) => req_str_arr(j, "combined_fields")?,
+            None => Vec::new(),
+        },
+        filter: opt_str(j, "filter"),
+        project: match j.get("project") {
+            Some(_) => req_str_arr(j, "project")?,
+            None => Vec::new(),
+        },
+        group_by: opt_str(j, "group_by"),
+        aggregates,
+        sort_by: opt_str(j, "sort_by"),
+        desc: j.get("desc").and_then(Json::as_bool).unwrap_or(false),
+        limit: j.get("limit").and_then(Json::as_u64),
+        output_dir: j.req_str("output_dir")?.to_string(),
+        n_reduces: j.req_u64("reduces")? as u32,
+        intermediate: j.get("intermediate").and_then(Json::as_bool).unwrap_or(false),
+    })
+}
+
 /// Apply `f` to every free-form string field of a payload — the fields
 /// that may carry `${steps.<name>.output_dir}` references (workflow
 /// output→input chaining).
@@ -274,6 +452,24 @@ pub fn payload_map_strings(
             sql: f(sql)?,
             reduces: *reduces,
         },
+        AppPayload::Query {
+            engine,
+            text,
+            reduces,
+        } => AppPayload::Query {
+            engine: engine.clone(),
+            text: f(text)?,
+            reduces: *reduces,
+        },
+        AppPayload::QueryStage { stage } => {
+            let mut s = stage.clone();
+            s.input_dir = f(&s.input_dir)?;
+            if let Some(rd) = &s.right_dir {
+                s.right_dir = Some(f(rd)?);
+            }
+            s.output_dir = f(&s.output_dir)?;
+            AppPayload::QueryStage { stage: s }
+        }
         AppPayload::RSummary {
             input_dir,
             output_dir,
@@ -1103,8 +1299,67 @@ mod tests {
         format!("/lustre/scratch/{}", g.ident(8))
     }
 
+    fn arb_stage(g: &mut Gen) -> StageSpec {
+        let kind = g.pick(&[StageKind::Join, StageKind::Agg, StageKind::Select, StageKind::Sort]);
+        let join = kind == StageKind::Join;
+        let input_fields = g.vec(1..4, |g| g.ident(6));
+        let right_fields = g.vec(1..3, |g| g.ident(6));
+        StageSpec {
+            kind,
+            input_dir: arb_path(g),
+            input_schema: Schema {
+                fields: input_fields.clone(),
+                delimiter: g.pick(&[',', ';', '\t']),
+            },
+            right_dir: join.then(|| arb_path(g)),
+            right_schema: join.then(|| Schema {
+                fields: right_fields.clone(),
+                delimiter: g.pick(&[',', '\t']),
+            }),
+            left_key: join.then(|| input_fields[0].clone()),
+            right_key: join.then(|| right_fields[0].clone()),
+            combined_fields: if join {
+                input_fields.iter().chain(&right_fields).cloned().collect()
+            } else {
+                Vec::new()
+            },
+            filter: g.chance(0.5).then(|| format!("{} > 1", input_fields[0])),
+            project: if kind == StageKind::Select {
+                vec![input_fields[0].clone()]
+            } else {
+                Vec::new()
+            },
+            group_by: (kind == StageKind::Agg && g.chance(0.7))
+                .then(|| input_fields[0].clone()),
+            aggregates: if kind == StageKind::Agg {
+                g.vec(1..3, |g| AggSpec {
+                    agg: g.pick(&[
+                        Aggregate::Count,
+                        Aggregate::Sum,
+                        Aggregate::Avg,
+                        Aggregate::Min,
+                        Aggregate::Max,
+                    ]),
+                    expr: input_fields[0].clone(),
+                })
+            } else {
+                Vec::new()
+            },
+            sort_by: (kind == StageKind::Sort).then(|| input_fields[0].clone()),
+            desc: kind == StageKind::Sort && g.chance(0.5),
+            limit: (kind == StageKind::Sort && g.chance(0.5)).then(|| g.u64(1..100)),
+            output_dir: arb_path(g),
+            n_reduces: if kind == StageKind::Select {
+                0
+            } else {
+                g.u32(1..16)
+            },
+            intermediate: g.chance(0.4),
+        }
+    }
+
     fn arb_payload(g: &mut Gen) -> AppPayload {
-        match g.u32(0..5) {
+        match g.u32(0..7) {
             0 => AppPayload::Terasort {
                 rows: g.u64(1..1_000_000),
                 maps: g.u64(1..64),
@@ -1123,6 +1378,18 @@ mod tests {
             3 => AppPayload::HiveQuery {
                 sql: format!("SELECT COUNT(a) FROM '{}' SCHEMA (a) INTO '{}'", arb_path(g), arb_path(g)),
                 reduces: g.u32(1..32),
+            },
+            4 => AppPayload::Query {
+                engine: g.pick(&["pig", "hive"]).to_string(),
+                text: format!(
+                    "SELECT COUNT(a) FROM '{}' SCHEMA (a) ORDER BY a INTO '{}'",
+                    arb_path(g),
+                    arb_path(g)
+                ),
+                reduces: g.u32(1..32),
+            },
+            5 => AppPayload::QueryStage {
+                stage: arb_stage(g),
             },
             _ => AppPayload::RSummary {
                 input_dir: arb_path(g),

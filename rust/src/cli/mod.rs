@@ -7,6 +7,8 @@
 //!   [--kernel]` — run the real pipeline end to end and validate.
 //! * `hpcw pig --file SCRIPT [--reduces N]` — run a Pig-like script.
 //! * `hpcw hive --sql QUERY [--reduces N]` — run a Hive-like query.
+//! * `hpcw query --sql QUERY | --file SCRIPT [--engine pig|hive]` — run a
+//!   multi-stage query (JOIN / ORDER BY / LIMIT) as chained MR jobs.
 //! * `hpcw wrapper --nodes N` — simulate one wrapper create/teardown and
 //!   print the phase timeline (Fig 3's single point).
 //! * `hpcw serve [--config FILE]` — start the SynfiniWay-style v1 API
@@ -55,6 +57,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         Some("terasort") => cmd_terasort(&args),
         Some("pig") => cmd_pig(&args),
         Some("hive") => cmd_hive(&args),
+        Some("query") => cmd_query(&args),
         Some("wrapper") => cmd_wrapper(&args),
         Some("serve") => cmd_serve(&args),
         Some("jobs") => cmd_jobs(&args),
@@ -67,11 +70,13 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: hpcw <figures|terasort|pig|hive|wrapper|serve|jobs|events> [options]
+const USAGE: &str = "usage: hpcw <figures|terasort|pig|hive|query|wrapper|serve|jobs|events> [options]
   figures   [--reps N] [--jobs N]           regenerate paper figures (sim)
   terasort  --rows N [--nodes N] [--maps N] [--reduces N] [--kernel] [--tiny]
   pig       --file SCRIPT [--reduces N] [--tiny]
   hive      --sql QUERY [--reduces N] [--tiny]
+  query     --sql QUERY | --file SCRIPT [--engine pig|hive] [--reduces N] [--tiny]
+            multi-stage queries: JOIN / ORDER BY / LIMIT compile to chained MR jobs
   wrapper   --nodes N                       one simulated create/teardown
   serve     [--config FILE] [--tiny]        start the v1 API server
   jobs      --addr HOST:PORT [--offset N] [--limit N]   list a server's jobs
@@ -141,6 +146,29 @@ fn cmd_hive(args: &Args) -> Result<()> {
         args,
         AppPayload::HiveQuery {
             sql,
+            reduces: args.num("reduces").unwrap_or(2) as u32,
+        },
+    )
+}
+
+/// `hpcw query` — the multi-stage engine: `--sql` (Hive, default) or
+/// `--file` (Pig script, default) with `--engine` to override.
+fn cmd_query(args: &Args) -> Result<()> {
+    let (default_engine, text) = if let Some(sql) = args.opt("sql") {
+        ("hive", sql)
+    } else if let Some(path) = args.opt("file") {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Api(format!("read {path}: {e}")))?;
+        ("pig", text)
+    } else {
+        return Err(Error::Api("query needs --sql or --file".into()));
+    };
+    let engine = args.opt("engine").unwrap_or_else(|| default_engine.into());
+    run_query(
+        args,
+        AppPayload::Query {
+            engine,
+            text,
             reduces: args.num("reduces").unwrap_or(2) as u32,
         },
     )

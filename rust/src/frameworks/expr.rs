@@ -154,6 +154,55 @@ pub fn cmp_values(a: &Value, b: &Value) -> std::cmp::Ordering {
     }
 }
 
+/// Map an `f64` to a `u64` whose unsigned order equals IEEE total order
+/// (the classic sign-flip trick): negative values complement all bits,
+/// non-negatives set the sign bit.
+fn f64_order_bits(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b & (1 << 63) != 0 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+impl Value {
+    /// Order-preserving byte encoding for total-order sorts (ORDER BY):
+    /// comparing encodings bytewise equals [`cmp_sort_keys`]. Numbers sort
+    /// before strings (tag bytes `0x10` / `0x20`); numbers encode as the
+    /// big-endian `f64_order_bits`; strings append a `0x00` terminator so
+    /// prefix relationships survive the DESC complement. `desc` complements
+    /// every byte, reversing the order.
+    pub fn sort_key(&self, desc: bool) -> Vec<u8> {
+        let mut out = Vec::with_capacity(10);
+        match self {
+            Value::Num(n) => {
+                out.push(0x10);
+                out.extend_from_slice(&f64_order_bits(*n).to_be_bytes());
+            }
+            Value::Str(s) => {
+                out.push(0x20);
+                out.extend_from_slice(s.as_bytes());
+                out.push(0x00);
+            }
+        }
+        if desc {
+            for b in &mut out {
+                *b = !*b;
+            }
+        }
+        out
+    }
+}
+
+/// The ORDER BY comparator: exactly the order `Value::sort_key(false)`
+/// encodes — numbers (IEEE total order) before strings (byte order).
+/// Reference evaluations sort with this so they match the distributed
+/// sort row for row.
+pub fn cmp_sort_keys(a: &Value, b: &Value) -> std::cmp::Ordering {
+    a.sort_key(false).cmp(&b.sort_key(false))
+}
+
 /// Tokenize + parse an expression string against a schema.
 /// Grammar (precedence low→high): OR, AND, NOT, comparison, add/sub,
 /// mul/div, atom (field, number, 'string', parens).
@@ -443,5 +492,44 @@ mod tests {
         assert_eq!(Value::Num(3.0).to_string(), "3");
         assert_eq!(Value::Num(3.5).to_string(), "3.5");
         assert_eq!(Value::Str("abc".into()).to_string(), "abc");
+    }
+
+    #[test]
+    fn sort_key_encoding_preserves_order() {
+        let vals = [
+            Value::Num(f64::NEG_INFINITY),
+            Value::Num(-3.5),
+            Value::Num(-0.0),
+            Value::Num(0.0),
+            Value::Num(2.0),
+            Value::Num(10.0),
+            Value::Num(f64::INFINITY),
+            Value::Str("".into()),
+            Value::Str("a".into()),
+            Value::Str("ab".into()),
+            Value::Str("b".into()),
+        ];
+        for w in vals.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            assert!(
+                a.sort_key(false) <= b.sort_key(false),
+                "asc order broken: {a:?} vs {b:?}"
+            );
+            assert!(
+                a.sort_key(true) >= b.sort_key(true),
+                "desc complement must reverse: {a:?} vs {b:?}"
+            );
+            assert_eq!(
+                a.sort_key(false).cmp(&b.sort_key(false)),
+                cmp_sort_keys(a, b),
+                "comparator parity: {a:?} vs {b:?}"
+            );
+        }
+        // The classic variable-length trap: DESC must put "ab" before "a".
+        let a = Value::Str("a".into()).sort_key(true);
+        let ab = Value::Str("ab".into()).sort_key(true);
+        assert!(ab < a, "'ab' must sort first under DESC");
+        // Numeric order, not string order: 2 sorts before 10.
+        assert!(Value::Num(2.0).sort_key(false) < Value::Num(10.0).sort_key(false));
     }
 }

@@ -1,92 +1,191 @@
-//! A HiveQL-like SQL frontend lowering to the same [`LogicalPlan`] as Pig.
+//! A HiveQL-like SQL frontend lowering to the same [`LogicalPlan`] as
+//! Pig.
 //!
-//! Supported statement:
+//! Supported statement shape (clauses in this order, optional clauses in
+//! brackets):
 //!
 //! ```sql
 //! SELECT region, SUM(amount), COUNT(amount)
 //! FROM '/data/sales' USING ','
 //! SCHEMA (region, product, amount)
-//! WHERE amount > 100 AND region != 'north'
-//! GROUP BY region
+//! [JOIN '/data/regions' USING ',' SCHEMA (region, country) ON region = region]
+//! [WHERE amount > 100 AND region != 'north']
+//! [GROUP BY region]
+//! [ORDER BY sum_amount DESC]
+//! [LIMIT 10]
 //! INTO '/data/report'
 //! ```
 //!
 //! (`SCHEMA (...)` replaces the metastore: the paper-era HPC Wales setup
 //! had no persistent Hive metastore inside a dynamic cluster, so table
 //! schemas travel with the query.)
+//!
+//! * The SELECT list is either aggregates (+ the group column), `*`, or
+//!   a bare-column projection when no GROUP BY is present.
+//! * `JOIN ... ON l = r` is an inner repartition join; right-side fields
+//!   colliding with left names are renamed `r_{name}`.
+//! * `ORDER BY` addresses the **output** schema — after GROUP BY the
+//!   columns are the group key plus `sum_amount`-style aggregate names
+//!   (see `LogicalPlan::agg_output_schema`).
+//! * `LIMIT` requires `ORDER BY` and forces a single reduce.
 
 use crate::error::{Error, Result};
-use crate::frameworks::expr::{parse_expr, Schema};
-use crate::frameworks::plan::{AggSpec, Aggregate, LogicalPlan};
+use crate::frameworks::expr::Schema;
+use crate::frameworks::plan::{
+    combined_schema, AggSpec, Aggregate, JoinClause, LogicalPlan, OrderClause, TableRef,
+};
 
-/// Parse one SELECT statement into a logical plan.
+/// Uppercase copy of the query with the contents of single-quoted
+/// string literals blanked to `_` — byte positions preserved — so
+/// clause keywords inside literals (`WHERE town != 'stratford on
+/// avon'`) are never mistaken for clauses. An unterminated quote blanks
+/// the rest of the text, which surfaces as a missing-clause error.
+fn keyword_scan_text(text: &str) -> String {
+    let mut out = text.to_ascii_uppercase().into_bytes();
+    let mut in_quote = false;
+    for (i, &b) in text.as_bytes().iter().enumerate() {
+        if b == b'\'' {
+            in_quote = !in_quote;
+        } else if in_quote {
+            out[i] = b'_';
+        }
+    }
+    // Only quote interiors were rewritten, and every rewritten byte is
+    // ASCII `_`, so the buffer stays valid UTF-8.
+    String::from_utf8(out).expect("masking preserves UTF-8")
+}
+
+/// Parse one SELECT statement into a validated logical plan.
 pub fn parse_query(sql: &str, n_reduces: u32) -> Result<LogicalPlan> {
     let text = sql.trim().trim_end_matches(';').trim();
-    let upper = text.to_ascii_uppercase();
+    let upper = keyword_scan_text(text);
     if !upper.starts_with("SELECT") {
         return Err(Error::Framework("expected SELECT".into()));
     }
 
-    // Clause positions (each appears at most once, in this order).
+    // Clause positions (each appears at most once, in this order). JOIN
+    // introduces a second SCHEMA, found after the JOIN keyword.
     let from = find_kw(&upper, " FROM ")?;
-    let using = find_opt(&upper, " USING ");
-    let schema_kw = find_kw(&upper, " SCHEMA ")?;
+    let join_kw = find_opt(&upper, " JOIN ");
+    let on_kw = find_opt(&upper, " ON ");
     let where_kw = find_opt(&upper, " WHERE ");
     let group_kw = find_opt(&upper, " GROUP BY ");
+    let order_kw = find_opt(&upper, " ORDER BY ");
+    let limit_kw = find_opt(&upper, " LIMIT ");
     let into_kw = find_kw(&upper, " INTO ")?;
+
+    let clause_starts = [
+        Some(from),
+        join_kw,
+        on_kw,
+        where_kw,
+        group_kw,
+        order_kw,
+        limit_kw,
+        Some(into_kw),
+    ];
+    let mut prev = 0usize;
+    for s in clause_starts.into_iter().flatten() {
+        if s < prev {
+            return Err(Error::Framework(
+                "clauses out of order: expected FROM [JOIN .. ON] [WHERE] \
+                 [GROUP BY] [ORDER BY] [LIMIT] INTO"
+                    .into(),
+            ));
+        }
+        prev = s;
+    }
+    // End of a clause = start of the next clause at or after the
+    // clause's content (filtering from the content start keeps an
+    // overlapping keyword match — e.g. `JOIN ON`, where " ON " reuses
+    // " JOIN "'s trailing space — from producing a backwards slice).
+    let next_after = |content_start: usize| -> usize {
+        clause_starts
+            .into_iter()
+            .flatten()
+            .filter(|&s| s >= content_start)
+            .min()
+            .unwrap_or(text.len())
+    };
 
     // SELECT list.
     let select_list = &text["SELECT".len()..from];
 
-    // FROM '<path>'.
-    let from_end = using.or(Some(schema_kw)).unwrap();
-    let input_dir = unquote(text[from + 6..from_end].trim())?;
+    // FROM '<path>' [USING '<d>'] SCHEMA (...)  — up to JOIN/WHERE/...
+    let from_end = next_after(from + 6);
+    let (input_dir, left_schema) = parse_table(&text[from + 6..from_end])?;
 
-    // USING '<delim>'.
-    let delimiter = match using {
-        Some(u) => unquote(text[u + 7..schema_kw].trim())?
-            .chars()
-            .next()
-            .unwrap_or('\t'),
-        None => '\t',
+    // JOIN '<path>' [USING '<d>'] SCHEMA (...) ON <l> = <r>.
+    let join = match join_kw {
+        Some(j) => {
+            let on = on_kw.ok_or_else(|| Error::Framework("JOIN needs ON".into()))?;
+            if on < j + 6 {
+                return Err(Error::Framework("JOIN needs a table before ON".into()));
+            }
+            let (right_dir, right_schema) = parse_table(&text[j + 6..on])?;
+            let on_text = text[on + 4..next_after(on + 4)].trim();
+            let eq = on_text
+                .find('=')
+                .ok_or_else(|| Error::Framework("ON needs '<left> = <right>'".into()))?;
+            let left_key = on_text[..eq].trim().to_string();
+            let right_key = on_text[eq + 1..].trim().to_string();
+            if left_key.is_empty() || right_key.is_empty() {
+                return Err(Error::Framework("ON needs '<left> = <right>'".into()));
+            }
+            Some(JoinClause {
+                right: TableRef {
+                    dir: right_dir,
+                    schema: right_schema,
+                },
+                left_key,
+                right_key,
+                right_prefix: "r".into(),
+            })
+        }
+        None => {
+            if on_kw.is_some() {
+                return Err(Error::Framework("ON without JOIN".into()));
+            }
+            None
+        }
     };
-
-    // SCHEMA (f1, f2, ...).
-    let schema_end = where_kw.or(group_kw).unwrap_or(into_kw);
-    let schema_text = text[schema_kw + 8..schema_end].trim();
-    let inner = schema_text
-        .strip_prefix('(')
-        .and_then(|s| s.strip_suffix(')'))
-        .ok_or_else(|| Error::Framework("SCHEMA needs (fields)".into()))?;
-    let fields: Vec<&str> = inner.split(',').map(str::trim).filter(|f| !f.is_empty()).collect();
-    if fields.is_empty() {
-        return Err(Error::Framework("empty SCHEMA".into()));
-    }
-    let schema = Schema::new(&fields, delimiter);
 
     // WHERE <expr>.
-    let filter = match where_kw {
-        Some(w) => {
-            let end = group_kw.unwrap_or(into_kw);
-            Some(parse_expr(text[w + 7..end].trim(), &schema)?)
-        }
-        None => None,
-    };
+    let filter = where_kw.map(|w| text[w + 7..next_after(w + 7)].trim().to_string());
 
     // GROUP BY <expr>.
-    let group_by = match group_kw {
-        Some(g) => Some(parse_expr(text[g + 10..into_kw].trim(), &schema)?),
+    let group_by = group_kw.map(|g| text[g + 10..next_after(g + 10)].trim().to_string());
+
+    // ORDER BY <expr> [DESC|ASC].
+    let order_by = order_kw
+        .map(|o| OrderClause::parse(&text[o + 10..next_after(o + 10)]))
+        .transpose()?;
+
+    // LIMIT <n>.
+    let limit = match limit_kw {
+        Some(l) => {
+            let n_text = text[l + 7..next_after(l + 7)].trim();
+            Some(n_text.parse::<u64>().map_err(|_| {
+                Error::Framework(format!("bad LIMIT count '{n_text}'"))
+            })?)
+        }
         None => None,
     };
 
     // INTO '<path>'.
     let output_dir = unquote(text[into_kw + 6..].trim())?;
 
-    // SELECT list → group columns (must match GROUP BY) + aggregates.
+    // SELECT list → aggregates, or a bare-column projection, or '*'.
     let mut aggregates = Vec::new();
+    let mut project: Vec<String> = Vec::new();
+    let mut star = false;
     for item in select_list.split(',') {
         let item = item.trim();
         if item.is_empty() {
+            continue;
+        }
+        if item == "*" {
+            star = true;
             continue;
         }
         if let Some(open) = item.find('(') {
@@ -97,34 +196,89 @@ pub fn parse_query(sql: &str, n_reduces: u32) -> Result<LogicalPlan> {
             if let Some(agg) = Aggregate::parse(name) {
                 aggregates.push(AggSpec {
                     agg,
-                    expr: parse_expr(item[open + 1..close].trim(), &schema)?,
+                    expr: item[open + 1..close].trim().to_string(),
                 });
                 continue;
             }
             return Err(Error::Framework(format!("unknown function '{name}'")));
         }
-        // A bare column: must be the group key.
-        if group_by.is_none() {
+        project.push(item.to_string());
+    }
+    if star && (!aggregates.is_empty() || !project.is_empty()) {
+        return Err(Error::Framework(
+            "SELECT * cannot be mixed with other select items".into(),
+        ));
+    }
+    if !aggregates.is_empty() {
+        // Bare columns next to aggregates must be the group key; they are
+        // emitted automatically, so only validate membership.
+        if group_by.is_none() && !project.is_empty() {
             return Err(Error::Framework(format!(
-                "bare column '{item}' without GROUP BY"
+                "bare column '{}' without GROUP BY",
+                project[0]
             )));
         }
-        // Validate it refers to a real field.
-        schema.index_of(item)?;
-    }
-    if aggregates.is_empty() {
-        return Err(Error::Framework("SELECT needs at least one aggregate".into()));
+        let cur = match &join {
+            Some(j) => combined_schema(&left_schema, &j.right.schema, "r")?,
+            None => left_schema.clone(),
+        };
+        for p in &project {
+            cur.index_of(p)?;
+        }
+        project.clear();
+    } else if !star && project.is_empty() {
+        return Err(Error::Framework(
+            "SELECT needs aggregates, columns or '*'".into(),
+        ));
     }
 
-    Ok(LogicalPlan {
-        input_dir,
-        output_dir,
-        schema,
+    let plan = LogicalPlan {
+        input: TableRef {
+            dir: input_dir,
+            schema: left_schema,
+        },
+        join,
         filter,
+        project,
         group_by,
         aggregates,
+        order_by,
+        limit,
+        output_dir,
         n_reduces,
-    })
+    };
+    plan.validate()?;
+    Ok(plan)
+}
+
+/// `'<path>' [USING '<d>'] SCHEMA (f1, f2, ...)` — the table form shared
+/// by FROM and JOIN. Parsed token by token (not by substring search), so
+/// field names containing `using`/`schema` — e.g. `housing` — cannot be
+/// mistaken for keywords.
+fn parse_table(text: &str) -> Result<(String, Schema)> {
+    let (path, rest) = unquote_prefix(text.trim())?;
+    let mut rest = rest.trim_start();
+    let mut delimiter = '\t';
+    if rest.get(..5).is_some_and(|t| t.eq_ignore_ascii_case("USING")) {
+        let (d, r) = unquote_prefix(&rest[5..])?;
+        delimiter = d.chars().next().unwrap_or('\t');
+        rest = r.trim_start();
+    }
+    if !rest.get(..6).is_some_and(|t| t.eq_ignore_ascii_case("SCHEMA")) {
+        return Err(Error::Framework(format!(
+            "table '{path}' needs SCHEMA (fields)"
+        )));
+    }
+    let schema_text = rest[6..].trim();
+    let inner = schema_text
+        .strip_prefix('(')
+        .and_then(|x| x.strip_suffix(')'))
+        .ok_or_else(|| Error::Framework("SCHEMA needs (fields)".into()))?;
+    let fields: Vec<&str> = inner.split(',').map(str::trim).filter(|f| !f.is_empty()).collect();
+    if fields.is_empty() {
+        return Err(Error::Framework("empty SCHEMA".into()));
+    }
+    Ok((path, Schema::new(&fields, delimiter)))
 }
 
 fn find_kw(upper: &str, kw: &str) -> Result<usize> {
@@ -144,9 +298,22 @@ fn unquote(s: &str) -> Result<String> {
         .ok_or_else(|| Error::Framework(format!("expected quoted string, got '{s}'")))
 }
 
+/// Leading `'...'` of `s`, plus the remainder.
+fn unquote_prefix(s: &str) -> Result<(String, &str)> {
+    let s = s.trim_start();
+    let rest = s
+        .strip_prefix('\'')
+        .ok_or_else(|| Error::Framework(format!("expected quoted string in '{s}'")))?;
+    let end = rest
+        .find('\'')
+        .ok_or_else(|| Error::Framework("unterminated quote".into()))?;
+    Ok((rest[..end].to_string(), &rest[end + 1..]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::frameworks::plan::StageKind;
 
     const SQL: &str = "SELECT region, SUM(amount), AVG(amount) \
         FROM '/data/sales' USING ',' \
@@ -158,9 +325,9 @@ mod tests {
     #[test]
     fn full_query_parses() {
         let plan = parse_query(SQL, 4).unwrap();
-        assert_eq!(plan.input_dir, "/data/sales");
+        assert_eq!(plan.input.dir, "/data/sales");
         assert_eq!(plan.output_dir, "/data/report");
-        assert_eq!(plan.schema.delimiter, ',');
+        assert_eq!(plan.input.schema.delimiter, ',');
         assert!(plan.filter.is_some());
         assert!(plan.group_by.is_some());
         assert_eq!(plan.aggregates.len(), 2);
@@ -188,6 +355,109 @@ mod tests {
     }
 
     #[test]
+    fn join_order_limit_query_parses() {
+        let plan = parse_query(
+            "SELECT * FROM '/sales' USING ',' SCHEMA (region, product, amount) \
+             JOIN '/regions' USING ',' SCHEMA (region, country) ON region = region \
+             WHERE amount > 100 \
+             ORDER BY amount DESC \
+             LIMIT 7 \
+             INTO '/report'",
+            3,
+        )
+        .unwrap();
+        let j = plan.join.as_ref().unwrap();
+        assert_eq!(j.right.dir, "/regions");
+        assert_eq!(j.left_key, "region");
+        assert_eq!(j.right_key, "region");
+        assert!(plan.order_by.as_ref().unwrap().desc);
+        assert_eq!(plan.limit, Some(7));
+        let stages = plan.compile_stages().unwrap();
+        assert_eq!(
+            stages.iter().map(|s| s.kind).collect::<Vec<_>>(),
+            vec![StageKind::Join, StageKind::Sort]
+        );
+    }
+
+    #[test]
+    fn order_by_aggregate_output_column() {
+        let plan = parse_query(
+            "SELECT region, SUM(amount) FROM '/sales' USING ',' \
+             SCHEMA (region, amount) GROUP BY region \
+             ORDER BY sum_amount DESC INTO '/top'",
+            2,
+        )
+        .unwrap();
+        let stages = plan.compile_stages().unwrap();
+        assert_eq!(
+            stages.iter().map(|s| s.kind).collect::<Vec<_>>(),
+            vec![StageKind::Agg, StageKind::Sort]
+        );
+        assert_eq!(stages[1].input_schema.fields, vec!["region", "sum_amount"]);
+    }
+
+    #[test]
+    fn clause_keywords_inside_string_literals_are_ignored() {
+        // ' ON ', ' ORDER BY ' and ' LIMIT ' inside quoted literals must
+        // not be taken for clauses.
+        let plan = parse_query(
+            "SELECT COUNT(a) FROM '/i' USING ',' SCHEMA (town, a) \
+             WHERE town != 'stratford on avon' AND town != 'no LIMIT here' \
+             GROUP BY town INTO '/o'",
+            1,
+        )
+        .unwrap();
+        assert!(plan.filter.as_deref().unwrap().contains("stratford on avon"));
+        // A literal containing ' ORDER BY ' with a real ORDER BY after it.
+        let plan = parse_query(
+            "SELECT COUNT(a) FROM '/i' USING ',' SCHEMA (town, a) \
+             WHERE town == 'sort ORDER BY hand' GROUP BY town \
+             ORDER BY count_a INTO '/o'",
+            1,
+        )
+        .unwrap();
+        assert_eq!(plan.order_by.as_ref().unwrap().key, "count_a");
+        // Unterminated quotes blank the rest: clean error, no panic.
+        assert!(parse_query(
+            "SELECT COUNT(a) FROM '/i SCHEMA (a) INTO '/o'",
+            1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn keywords_inside_identifiers_are_not_keywords() {
+        // 'housing' contains 'USING'; 'bonn' feeds the ON scan nothing.
+        let plan = parse_query(
+            "SELECT housing, COUNT(amount) FROM '/in' USING ',' \
+             SCHEMA (housing, amount) GROUP BY housing INTO '/out'",
+            1,
+        )
+        .unwrap();
+        assert_eq!(plan.input.schema.fields, vec!["housing", "amount"]);
+        assert_eq!(plan.input.schema.delimiter, ',');
+        // And without USING: the identifier alone must not trigger it.
+        let plan = parse_query(
+            "SELECT COUNT(housing) FROM '/in' SCHEMA (housing) INTO '/out'",
+            1,
+        )
+        .unwrap();
+        assert_eq!(plan.input.schema.delimiter, '\t');
+    }
+
+    #[test]
+    fn projection_select_parses() {
+        let plan = parse_query(
+            "SELECT b, a FROM '/in' USING ',' SCHEMA (a, b) WHERE a > 1 INTO '/out'",
+            1,
+        )
+        .unwrap();
+        assert_eq!(plan.project, vec!["b", "a"]);
+        let stages = plan.compile_stages().unwrap();
+        assert_eq!(stages[0].kind, StageKind::Select);
+    }
+
+    #[test]
     fn pig_and_hive_lower_to_equivalent_plans() {
         let hive = parse_query(SQL, 2).unwrap();
         let pig = crate::frameworks::pig::parse_script(
@@ -199,16 +469,15 @@ mod tests {
             2,
         )
         .unwrap();
-        assert_eq!(hive.input_dir, pig.input_dir);
+        assert_eq!(hive.input, pig.input);
         assert_eq!(hive.output_dir, pig.output_dir);
-        assert_eq!(hive.schema, pig.schema);
         assert_eq!(hive.filter, pig.filter);
         assert_eq!(hive.group_by, pig.group_by);
-        assert_eq!(hive.aggregates.len(), pig.aggregates.len());
-        for (h, p) in hive.aggregates.iter().zip(&pig.aggregates) {
-            assert_eq!(h.agg, p.agg);
-            assert_eq!(h.expr, p.expr);
-        }
+        assert_eq!(hive.aggregates, pig.aggregates);
+        // Both compile to the same stage chain.
+        let hs = hive.compile_stages().unwrap();
+        let ps = pig.compile_stages().unwrap();
+        assert_eq!(hs, ps);
     }
 
     #[test]
@@ -217,5 +486,41 @@ mod tests {
         assert!(parse_query("SELECT COUNT(a) FROM '/i' INTO '/o'", 1).is_err()); // no SCHEMA
         assert!(parse_query("SELECT COUNT(a) FROM '/i' SCHEMA (a)", 1).is_err()); // no INTO
         assert!(parse_query("DELETE FROM x", 1).is_err());
+    }
+
+    /// Adversarial corpus: truncated queries, unknown keywords and
+    /// unbalanced expressions must return `Err`, never panic.
+    #[test]
+    fn malformed_queries_error_cleanly() {
+        let cases = [
+            "",
+            "SELECT",
+            "SELECT * FROM",
+            "SELECT * FROM '/i' SCHEMA (a INTO '/o'",
+            "SELECT * FROM '/i' SCHEMA () INTO '/o'",
+            "SELECT nosuch FROM '/i' SCHEMA (a) INTO '/o'",
+            "SELECT MEDIAN(a) FROM '/i' SCHEMA (a) INTO '/o'",
+            "SELECT COUNT(a FROM '/i' SCHEMA (a) INTO '/o'",
+            "SELECT COUNT(a) FROM '/i' SCHEMA (a) WHERE a > INTO '/o'",
+            "SELECT COUNT(a) FROM '/i' SCHEMA (a) WHERE (a > 1 INTO '/o'",
+            "SELECT COUNT(a) FROM '/i' SCHEMA (a) LIMIT 5 INTO '/o'",
+            "SELECT COUNT(a) FROM '/i' SCHEMA (a) ORDER BY  INTO '/o'",
+            "SELECT COUNT(a) FROM '/i' SCHEMA (a) ORDER BY a LIMIT x INTO '/o'",
+            "SELECT * FROM '/i' SCHEMA (a) ON a = a INTO '/o'",
+            "SELECT * FROM '/i' SCHEMA (a) JOIN ON a = a INTO '/o'",
+            "SELECT * FROM '/i' SCHEMA (a) JOIN '/j' SCHEMA (b) INTO '/o'",
+            "SELECT * FROM '/i' SCHEMA (a) JOIN '/j' SCHEMA (b) ON a INTO '/o'",
+            "SELECT * FROM '/i' SCHEMA (a) JOIN '/j' SCHEMA (b) ON a = nosuch INTO '/o'",
+            "SELECT *, a FROM '/i' SCHEMA (a) INTO '/o'",
+            "SELECT FROM '/a' USING ',' SCHEMA (x) JOIN '/b' USING ',' SCHEMA (x, y) ON x = x INTO '/o'",
+            "SELECT INTO FROM WHERE",
+            "SELECT COUNT(a) FROM '/i' SCHEMA (a) INTO '/o' GROUP BY a",
+        ];
+        for c in cases {
+            assert!(parse_query(c, 1).is_err(), "case must error: {c:?}");
+            for cut in 1..c.len().min(60) {
+                let _ = parse_query(&c[..cut], 1); // must not panic
+            }
+        }
     }
 }

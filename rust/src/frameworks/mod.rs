@@ -17,7 +17,10 @@
 //!   sink.
 //!
 //! Pig and Hive share one logical-plan representation ([`plan`]) and one
-//! expression language ([`expr`]); the parsers are thin frontends.
+//! expression language ([`expr`]); the parsers are thin frontends. Since
+//! PR 5 the plan is multi-stage: JOIN, ORDER BY and LIMIT compile to a
+//! chain of MapReduce jobs (see [`plan::LogicalPlan::compile_stages`]),
+//! and aggregation jobs carry a map-side combiner.
 
 pub mod expr;
 pub mod hive;
@@ -27,4 +30,4 @@ pub mod plan;
 pub mod rhadoop;
 
 pub use expr::{Expr, Value};
-pub use plan::{Aggregate, LogicalPlan};
+pub use plan::{Aggregate, LogicalPlan, StageKind, StageSpec};

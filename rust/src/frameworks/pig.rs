@@ -1,6 +1,6 @@
 //! A Pig-Latin-like dataflow frontend.
 //!
-//! Supported script shape (one job, the §IV "custom flow" class):
+//! Supported script shapes (the §IV "custom flow" class, now multi-stage):
 //!
 //! ```text
 //! recs = LOAD '/data/sales' USING ',' AS (region, product, amount);
@@ -10,15 +10,38 @@
 //! STORE out INTO '/data/report';
 //! ```
 //!
-//! The parser builds a [`LogicalPlan`]; aliases are checked for dataflow
-//! consistency (each statement consumes an alias the previous ones
-//! produced).
+//! and with joins, total-order sorts and limits:
+//!
+//! ```text
+//! sales   = LOAD '/data/sales' USING ',' AS (region, product, amount);
+//! regions = LOAD '/data/regions' USING ',' AS (region, country);
+//! j   = JOIN sales BY region, regions BY region;
+//! big = FILTER j BY amount > 100;
+//! srt = ORDER big BY amount DESC;
+//! top = LIMIT srt 10;
+//! STORE top INTO '/data/report';
+//! ```
+//!
+//! The parser builds a multi-stage [`LogicalPlan`]; the dataflow is
+//! **linear**: every statement must consume the alias the previous
+//! statement produced (JOIN consumes two LOAD aliases), and statements
+//! the compiled pipeline would reorder — a FILTER after ORDER, a second
+//! FILTER, a HAVING-style FILTER after FOREACH — are rejected instead
+//! of silently mis-executing. The validated plan compiles to a chain of
+//! MapReduce jobs (`LogicalPlan::compile_stages`).
+//!
+//! Semantics notes: `FILTER` applies to the joined relation (write it
+//! after the JOIN). Right-side fields whose names collide with
+//! left-side fields are renamed `{right_alias}_{name}` in the joined
+//! schema. `LIMIT` is only valid downstream of `ORDER`.
 
 use crate::error::{Error, Result};
-use crate::frameworks::expr::{parse_expr, Schema};
-use crate::frameworks::plan::{AggSpec, Aggregate, LogicalPlan};
+use crate::frameworks::expr::Schema;
+use crate::frameworks::plan::{
+    AggSpec, Aggregate, JoinClause, LogicalPlan, OrderClause, TableRef,
+};
 
-/// Parse a Pig-like script into a logical plan.
+/// Parse a Pig-like script into a validated logical plan.
 pub fn parse_script(script: &str, n_reduces: u32) -> Result<LogicalPlan> {
     // Strip comment lines first ('-- ...'), then split on ';'.
     let cleaned: String = script
@@ -35,72 +58,188 @@ pub fn parse_script(script: &str, n_reduces: u32) -> Result<LogicalPlan> {
         return Err(Error::Framework("empty pig script".into()));
     }
 
-    let mut input_dir = None;
-    let mut schema: Option<Schema> = None;
+    // (alias, table) for every LOAD, in script order.
+    let mut loads: Vec<(String, TableRef)> = Vec::new();
+    let mut join: Option<(String, String, String, String)> = None; // (la, lk, ra, rk)
     let mut filter = None;
     let mut group_by = None;
     let mut aggregates: Vec<AggSpec> = Vec::new();
+    let mut project: Vec<String> = Vec::new();
+    let mut order_by: Option<OrderClause> = None;
+    let mut limit: Option<u64> = None;
     let mut output_dir = None;
     let mut aliases: Vec<String> = Vec::new();
+    // The alias the NEXT pipeline statement must consume: scripts are a
+    // linear dataflow, so branching off an earlier alias (e.g. sorting
+    // the unfiltered relation after a FILTER) is rejected instead of
+    // silently executing the linear pipeline.
+    let mut head: Option<String> = None;
 
     for stmt in statements {
         if let Some((alias, rest)) = split_assignment(stmt) {
             let rest_upper = rest.to_ascii_uppercase();
             if rest_upper.starts_with("LOAD") {
                 let (path, delim, fields) = parse_load(rest)?;
-                input_dir = Some(path);
-                schema = Some(Schema::new(
-                    &fields.iter().map(String::as_str).collect::<Vec<_>>(),
-                    delim,
+                loads.push((
+                    alias.clone(),
+                    TableRef {
+                        dir: path,
+                        schema: Schema::new(
+                            &fields.iter().map(String::as_str).collect::<Vec<_>>(),
+                            delim,
+                        ),
+                    },
                 ));
             } else if rest_upper.starts_with("FILTER") {
-                let s = schema
-                    .as_ref()
-                    .ok_or_else(|| Error::Framework("FILTER before LOAD".into()))?;
-                let (src, cond) = parse_filter(rest)?;
-                require_alias(&aliases, &src)?;
-                filter = Some(parse_expr(&cond, s)?);
-            } else if rest_upper.starts_with("GROUP") {
-                let s = schema
-                    .as_ref()
-                    .ok_or_else(|| Error::Framework("GROUP before LOAD".into()))?;
-                let (src, key) = parse_group(rest)?;
-                require_alias(&aliases, &src)?;
-                group_by = Some(parse_expr(&key, s)?);
-            } else if rest_upper.starts_with("FOREACH") {
-                let s = schema
-                    .as_ref()
-                    .ok_or_else(|| Error::Framework("FOREACH before LOAD".into()))?;
-                let (src, gens) = parse_foreach(rest)?;
-                require_alias(&aliases, &src)?;
-                for (agg, arg) in gens {
-                    aggregates.push(AggSpec {
-                        agg,
-                        expr: parse_expr(&arg, s)?,
-                    });
+                // The compiled pipeline runs the filter before
+                // grouping and sorting, so a FILTER written after those
+                // phases would silently mean something else — reject it
+                // (and repeats: a second FILTER used to overwrite the
+                // first).
+                if filter.is_some() {
+                    return Err(Error::Framework("only one FILTER is supported".into()));
                 }
+                if group_by.is_some() || !aggregates.is_empty() {
+                    return Err(Error::Framework(
+                        "FILTER after GROUP/FOREACH (a HAVING clause) is not supported".into(),
+                    ));
+                }
+                if order_by.is_some() || limit.is_some() {
+                    return Err(Error::Framework(
+                        "FILTER after ORDER/LIMIT is not supported".into(),
+                    ));
+                }
+                let (src, cond) = parse_filter(rest)?;
+                require_head(&head, &aliases, &src)?;
+                filter = Some(cond);
+            } else if rest_upper.starts_with("GROUP") {
+                if group_by.is_some() {
+                    return Err(Error::Framework("only one GROUP is supported".into()));
+                }
+                if order_by.is_some() || limit.is_some() {
+                    return Err(Error::Framework(
+                        "GROUP after ORDER/LIMIT is not supported".into(),
+                    ));
+                }
+                let (src, key) = parse_group(rest)?;
+                require_head(&head, &aliases, &src)?;
+                group_by = Some(key);
+            } else if rest_upper.starts_with("FOREACH") {
+                if !aggregates.is_empty() || !project.is_empty() {
+                    return Err(Error::Framework("only one FOREACH is supported".into()));
+                }
+                if order_by.is_some() || limit.is_some() {
+                    return Err(Error::Framework(
+                        "FOREACH after ORDER/LIMIT is not supported".into(),
+                    ));
+                }
+                let (src, gens, cols) = parse_foreach(rest)?;
+                require_head(&head, &aliases, &src)?;
+                for (agg, arg) in gens {
+                    aggregates.push(AggSpec { agg, expr: arg });
+                }
+                project = cols;
+            } else if rest_upper.starts_with("JOIN") {
+                if join.is_some() {
+                    return Err(Error::Framework("only one JOIN per script".into()));
+                }
+                if group_by.is_some()
+                    || !aggregates.is_empty()
+                    || !project.is_empty()
+                    || order_by.is_some()
+                    || limit.is_some()
+                {
+                    return Err(Error::Framework(
+                        "JOIN must precede GROUP/FOREACH/ORDER/LIMIT".into(),
+                    ));
+                }
+                if filter.is_some() {
+                    return Err(Error::Framework(
+                        "FILTER before JOIN is not supported; filter the joined relation".into(),
+                    ));
+                }
+                let (la, lk, ra, rk) = parse_join(rest)?;
+                require_alias(&aliases, &la)?;
+                require_alias(&aliases, &ra)?;
+                join = Some((la, lk, ra, rk));
+            } else if rest_upper.starts_with("ORDER") {
+                if order_by.is_some() {
+                    return Err(Error::Framework("only one ORDER is supported".into()));
+                }
+                if limit.is_some() {
+                    return Err(Error::Framework("ORDER cannot follow LIMIT".into()));
+                }
+                let (src, clause) = parse_order(rest)?;
+                require_head(&head, &aliases, &src)?;
+                order_by = Some(clause);
+            } else if rest_upper.starts_with("LIMIT") {
+                if limit.is_some() {
+                    return Err(Error::Framework("only one LIMIT is supported".into()));
+                }
+                let (src, n) = parse_limit(rest)?;
+                require_head(&head, &aliases, &src)?;
+                limit = Some(n);
             } else {
                 return Err(Error::Framework(format!("unknown statement '{rest}'")));
             }
+            head = Some(alias.clone());
             aliases.push(alias);
         } else if stmt.to_ascii_uppercase().starts_with("STORE") {
             let (src, path) = parse_store(stmt)?;
-            require_alias(&aliases, &src)?;
+            require_head(&head, &aliases, &src)?;
             output_dir = Some(path);
         } else {
             return Err(Error::Framework(format!("cannot parse statement '{stmt}'")));
         }
     }
 
-    Ok(LogicalPlan {
-        input_dir: input_dir.ok_or_else(|| Error::Framework("no LOAD".into()))?,
-        output_dir: output_dir.ok_or_else(|| Error::Framework("no STORE".into()))?,
-        schema: schema.unwrap(),
+    // Resolve the dataflow inputs.
+    let take_load = |loads: &[(String, TableRef)], alias: &str| -> Result<TableRef> {
+        loads
+            .iter()
+            .find(|(a, _)| a == alias)
+            .map(|(_, t)| t.clone())
+            .ok_or_else(|| Error::Framework(format!("JOIN side '{alias}' is not a LOAD alias")))
+    };
+    let (input, join_clause) = match &join {
+        Some((la, lk, ra, rk)) => {
+            let left = take_load(&loads, la)?;
+            let right = take_load(&loads, ra)?;
+            (
+                left,
+                Some(JoinClause {
+                    right,
+                    left_key: lk.clone(),
+                    right_key: rk.clone(),
+                    right_prefix: ra.clone(),
+                }),
+            )
+        }
+        None => match loads.len() {
+            0 => return Err(Error::Framework("no LOAD".into())),
+            1 => (loads[0].1.clone(), None),
+            n => {
+                return Err(Error::Framework(format!(
+                    "{n} LOADs but no JOIN to combine them"
+                )))
+            }
+        },
+    };
+
+    let plan = LogicalPlan {
+        input,
+        join: join_clause,
         filter,
+        project,
         group_by,
         aggregates,
+        order_by,
+        limit,
+        output_dir: output_dir.ok_or_else(|| Error::Framework("no STORE".into()))?,
         n_reduces,
-    })
+    };
+    plan.validate()?;
+    Ok(plan)
 }
 
 fn split_assignment(stmt: &str) -> Option<(String, &str)> {
@@ -118,6 +257,22 @@ fn require_alias(aliases: &[String], name: &str) -> Result<()> {
         Ok(())
     } else {
         Err(Error::Framework(format!("unknown alias '{name}'")))
+    }
+}
+
+/// Pipelines are linear: every consuming statement must read the alias
+/// the previous statement produced. Branching off an earlier alias
+/// (e.g. `ORDER r` after `f = FILTER r`) would silently execute the
+/// linear pipeline instead of the written dataflow, so it is an error.
+fn require_head(head: &Option<String>, aliases: &[String], src: &str) -> Result<()> {
+    require_alias(aliases, src)?;
+    match head {
+        Some(h) if h == src => Ok(()),
+        Some(h) => Err(Error::Framework(format!(
+            "statement consumes '{src}' but the current relation is '{h}' \
+             (pipelines are linear)"
+        ))),
+        None => Err(Error::Framework(format!("unknown alias '{src}'"))),
     }
 }
 
@@ -189,8 +344,55 @@ fn parse_group(rest: &str) -> Result<(String, String)> {
     ))
 }
 
-/// `FOREACH <alias> GENERATE group, AGG(expr), ...`
-fn parse_foreach(rest: &str) -> Result<(String, Vec<(Aggregate, String)>)> {
+/// `JOIN <alias> BY <expr>, <alias> BY <expr>`
+fn parse_join(rest: &str) -> Result<(String, String, String, String)> {
+    let after = rest["JOIN".len()..].trim();
+    let comma = after
+        .find(',')
+        .ok_or_else(|| Error::Framework("JOIN needs '<a> BY k, <b> BY k'".into()))?;
+    let side = |text: &str| -> Result<(String, String)> {
+        let by = text
+            .to_ascii_uppercase()
+            .find(" BY ")
+            .ok_or_else(|| Error::Framework("JOIN side needs BY".into()))?;
+        Ok((
+            text[..by].trim().to_string(),
+            text[by + 4..].trim().to_string(),
+        ))
+    };
+    let (la, lk) = side(after[..comma].trim())?;
+    let (ra, rk) = side(after[comma + 1..].trim())?;
+    Ok((la, lk, ra, rk))
+}
+
+/// `ORDER <alias> BY <expr> [DESC|ASC]`
+fn parse_order(rest: &str) -> Result<(String, OrderClause)> {
+    let after = rest["ORDER".len()..].trim();
+    let by = after
+        .to_ascii_uppercase()
+        .find(" BY ")
+        .ok_or_else(|| Error::Framework("ORDER needs BY".into()))?;
+    let src = after[..by].trim().to_string();
+    Ok((src, OrderClause::parse(&after[by + 4..])?))
+}
+
+/// `LIMIT <alias> <n>`
+fn parse_limit(rest: &str) -> Result<(String, u64)> {
+    let after = rest["LIMIT".len()..].trim();
+    let (src, n) = after
+        .rsplit_once(char::is_whitespace)
+        .ok_or_else(|| Error::Framework("LIMIT needs '<alias> <n>'".into()))?;
+    let n: u64 = n
+        .trim()
+        .parse()
+        .map_err(|_| Error::Framework(format!("bad LIMIT count '{n}'")))?;
+    Ok((src.trim().to_string(), n))
+}
+
+/// `FOREACH <alias> GENERATE group, AGG(expr), ...` — or a bare column
+/// list (projection) when no aggregate appears.
+#[allow(clippy::type_complexity)]
+fn parse_foreach(rest: &str) -> Result<(String, Vec<(Aggregate, String)>, Vec<String>)> {
     let after = rest["FOREACH".len()..].trim();
     let gen = after
         .to_ascii_uppercase()
@@ -198,26 +400,37 @@ fn parse_foreach(rest: &str) -> Result<(String, Vec<(Aggregate, String)>)> {
         .ok_or_else(|| Error::Framework("FOREACH needs GENERATE".into()))?;
     let src = after[..gen].trim().to_string();
     let gens_text = &after[gen + "GENERATE".len()..];
-    let mut out = Vec::new();
+    let mut aggs = Vec::new();
+    let mut cols = Vec::new();
     for item in gens_text.split(',') {
         let item = item.trim();
         if item.is_empty() || item.eq_ignore_ascii_case("group") {
             continue; // the group key is always emitted first
         }
-        let open = item
-            .find('(')
-            .ok_or_else(|| Error::Framework(format!("expected AGG(expr) in '{item}'")))?;
-        let close = item
-            .rfind(')')
-            .ok_or_else(|| Error::Framework(format!("unclosed paren in '{item}'")))?;
-        let agg = Aggregate::parse(item[..open].trim())
-            .ok_or_else(|| Error::Framework(format!("unknown aggregate '{}'", &item[..open])))?;
-        out.push((agg, item[open + 1..close].trim().to_string()));
+        match item.find('(') {
+            Some(open) => {
+                let close = item
+                    .rfind(')')
+                    .ok_or_else(|| Error::Framework(format!("unclosed paren in '{item}'")))?;
+                let agg = Aggregate::parse(item[..open].trim()).ok_or_else(|| {
+                    Error::Framework(format!("unknown aggregate '{}'", &item[..open]))
+                })?;
+                aggs.push((agg, item[open + 1..close].trim().to_string()));
+            }
+            None => cols.push(item.to_string()),
+        }
     }
-    if out.is_empty() {
-        return Err(Error::Framework("GENERATE needs at least one aggregate".into()));
+    if aggs.is_empty() && cols.is_empty() {
+        return Err(Error::Framework(
+            "GENERATE needs at least one aggregate or column".into(),
+        ));
     }
-    Ok((src, out))
+    if !aggs.is_empty() && !cols.is_empty() {
+        return Err(Error::Framework(
+            "GENERATE cannot mix bare columns with aggregates (except 'group')".into(),
+        ));
+    }
+    Ok((src, aggs, cols))
 }
 
 /// `STORE <alias> INTO '<path>'`
@@ -235,7 +448,7 @@ fn parse_store(stmt: &str) -> Result<(String, String)> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::frameworks::plan::Aggregate;
+    use crate::frameworks::plan::{Aggregate, StageKind};
 
     const SCRIPT: &str = "
         recs = LOAD '/data/sales' USING ',' AS (region, product, amount);
@@ -248,10 +461,10 @@ mod tests {
     #[test]
     fn full_script_parses() {
         let plan = parse_script(SCRIPT, 3).unwrap();
-        assert_eq!(plan.input_dir, "/data/sales");
+        assert_eq!(plan.input.dir, "/data/sales");
         assert_eq!(plan.output_dir, "/data/report");
-        assert_eq!(plan.schema.fields, vec!["region", "product", "amount"]);
-        assert_eq!(plan.schema.delimiter, ',');
+        assert_eq!(plan.input.schema.fields, vec!["region", "product", "amount"]);
+        assert_eq!(plan.input.schema.delimiter, ',');
         assert!(plan.filter.is_some());
         assert!(plan.group_by.is_some());
         assert_eq!(plan.aggregates.len(), 2);
@@ -270,7 +483,51 @@ mod tests {
         )
         .unwrap();
         assert!(plan.filter.is_none());
-        assert_eq!(plan.schema.delimiter, '\t'); // default
+        assert_eq!(plan.input.schema.delimiter, '\t'); // default
+    }
+
+    #[test]
+    fn join_and_order_parse_to_multi_stage_plan() {
+        let plan = parse_script(
+            "sales   = LOAD '/data/sales' USING ',' AS (region, product, amount);
+             regions = LOAD '/data/regions' USING ',' AS (region, country);
+             j   = JOIN sales BY region, regions BY region;
+             big = FILTER j BY amount > 100;
+             srt = ORDER big BY amount DESC;
+             top = LIMIT srt 10;
+             STORE top INTO '/data/report';",
+            2,
+        )
+        .unwrap();
+        let j = plan.join.as_ref().unwrap();
+        assert_eq!(j.right.dir, "/data/regions");
+        assert_eq!(j.left_key, "region");
+        assert_eq!(j.right_key, "region");
+        assert_eq!(j.right_prefix, "regions");
+        let o = plan.order_by.as_ref().unwrap();
+        assert_eq!(o.key, "amount");
+        assert!(o.desc);
+        assert_eq!(plan.limit, Some(10));
+        let stages = plan.compile_stages().unwrap();
+        assert_eq!(
+            stages.iter().map(|s| s.kind).collect::<Vec<_>>(),
+            vec![StageKind::Join, StageKind::Sort]
+        );
+    }
+
+    #[test]
+    fn foreach_projection_without_aggregates() {
+        let plan = parse_script(
+            "r = LOAD '/in' USING ',' AS (a, b, c);
+             p = FOREACH r GENERATE c, a;
+             STORE p INTO '/out';",
+            1,
+        )
+        .unwrap();
+        assert_eq!(plan.project, vec!["c", "a"]);
+        assert!(plan.aggregates.is_empty());
+        let stages = plan.compile_stages().unwrap();
+        assert_eq!(stages[0].kind, StageKind::Select);
     }
 
     #[test]
@@ -289,6 +546,95 @@ mod tests {
     #[test]
     fn missing_store_rejected() {
         assert!(parse_script("r = LOAD '/in' AS (a);", 1).is_err());
+    }
+
+    #[test]
+    fn two_loads_without_join_rejected() {
+        let err = parse_script(
+            "a = LOAD '/a' AS (x);
+             b = LOAD '/b' AS (y);
+             g = GROUP b BY y;
+             o = FOREACH g GENERATE group, COUNT(y);
+             STORE o INTO '/out';",
+            1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no JOIN"));
+    }
+
+    /// Linear-dataflow enforcement: consuming an alias other than the
+    /// one the previous statement produced is an error, not a silent
+    /// re-linearization.
+    #[test]
+    fn branching_dataflow_rejected() {
+        // Sorting the UNFILTERED relation after a filter.
+        let err = parse_script(
+            "r = LOAD '/in' AS (a);
+             f = FILTER r BY a > 1;
+             s = ORDER r BY a;
+             STORE s INTO '/o';",
+            1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("linear"), "{err}");
+        // Storing the pre-LIMIT relation.
+        let err = parse_script(
+            "r = LOAD '/in' AS (a);
+             s = ORDER r BY a;
+             t = LIMIT s 5;
+             STORE s INTO '/o';",
+            1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("linear"), "{err}");
+    }
+
+    /// Statements the compiled pipeline would silently reorder are
+    /// rejected instead of mis-executing (the stage chain always runs
+    /// filter → group → sort → limit).
+    #[test]
+    fn out_of_order_and_repeated_statements_rejected() {
+        let cases = [
+            // FILTER after ORDER would filter before the sort+limit.
+            ("r = LOAD '/in' AS (a);
+              s = ORDER r BY a;
+              f = FILTER s BY a > 10;
+              STORE f INTO '/o';", "FILTER after ORDER"),
+            // Second FILTER used to silently overwrite the first.
+            ("r = LOAD '/in' AS (a);
+              f1 = FILTER r BY a > 1;
+              f2 = FILTER f1 BY a < 9;
+              g = GROUP f2 BY a;
+              o = FOREACH g GENERATE group, COUNT(a);
+              STORE o INTO '/o';", "only one FILTER"),
+            // HAVING-style filter after aggregation.
+            ("r = LOAD '/in' AS (a);
+              g = GROUP r BY a;
+              o = FOREACH g GENERATE group, COUNT(a);
+              f = FILTER o BY a > 1;
+              STORE f INTO '/o';", "HAVING"),
+            ("r = LOAD '/in' AS (a);
+              s = ORDER r BY a;
+              l = LIMIT s 3;
+              s2 = ORDER l BY a;
+              STORE s2 INTO '/o';", "only one ORDER"),
+        ];
+        for (script, needle) in cases {
+            let err = parse_script(script, 1).unwrap_err().to_string();
+            assert!(err.contains(needle), "{script}: {err}");
+        }
+    }
+
+    #[test]
+    fn limit_without_order_rejected() {
+        let err = parse_script(
+            "r = LOAD '/in' AS (a);
+             l = LIMIT r 5;
+             STORE l INTO '/out';",
+            1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("LIMIT requires ORDER BY"));
     }
 
     #[test]
@@ -316,5 +662,37 @@ mod tests {
         )
         .unwrap();
         assert_eq!(plan.aggregates.len(), 1);
+    }
+
+    /// Adversarial corpus: malformed scripts must return `Err`, never
+    /// panic (the parser is exposed over the wire).
+    #[test]
+    fn malformed_scripts_error_cleanly() {
+        let cases = [
+            "",
+            ";;;",
+            "r = LOAD",
+            "r = LOAD '/in'",
+            "r = LOAD '/in' AS a, b",
+            "r = LOAD '/in' AS (a); j = JOIN r BY a",
+            "r = LOAD '/in' AS (a); j = JOIN r BY a, r",
+            "r = LOAD '/in' AS (a); o = ORDER r BY",
+            "r = LOAD '/in' AS (a); o = ORDER r BY ; STORE o INTO '/o';",
+            "r = LOAD '/in' AS (a); l = LIMIT r; STORE l INTO '/o';",
+            "r = LOAD '/in' AS (a); l = LIMIT r abc; STORE l INTO '/o';",
+            "r = LOAD '/in' AS (a); f = FILTER r BY (a > ; STORE f INTO '/o';",
+            "r = LOAD '/in' AS (a); f = FILTER r BY nosuch > 1; STORE f INTO '/o';",
+            "r = LOAD '/in' AS (a); STORE r INTO",
+            "r = LOAD '/in' AS (a); EXPLODE r;",
+            "r = LOAD '/in' AS (a); g = GROUP r BY a; STORE g INTO '/o';",
+            "r = LOAD '/in' AS (a); o = FOREACH r GENERATE SUM(a), a; STORE o INTO '/o';",
+        ];
+        for c in cases {
+            // Truncations of every case must also fail or parse cleanly.
+            assert!(parse_script(c, 1).is_err(), "case must error: {c:?}");
+            for cut in 1..c.len().min(40) {
+                let _ = parse_script(&c[..cut], 1); // must not panic
+            }
+        }
     }
 }

@@ -1,14 +1,47 @@
-//! The shared logical plan Pig and Hive lower to, and its compilation to a
-//! MapReduce [`JobSpec`].
+//! The shared logical plan Pig and Hive lower to, and its compilation to
+//! a **DAG of MapReduce jobs**.
 //!
-//! Plan shape (the classic one-job pipeline):
-//! `LOAD → [FILTER] → GROUP BY key → AGGREGATE(s) → STORE`.
-//! The map side parses rows, applies the filter and emits
-//! `(group_key, projected row)`; the reduce side folds the aggregates.
+//! Up to PR 4 this module compiled the classic one-job pipeline
+//! (`LOAD → [FILTER] → GROUP BY → AGGREGATE → STORE`) to a single
+//! [`JobSpec`]. It is now a multi-stage query engine:
+//!
+//! * **JOIN** — a repartition join: both inputs are mapped with a side
+//!   tag (`L`/`R`) keyed by the join expression, and the reduce side
+//!   merges the tagged streams per key (inner join, cross product per
+//!   key group);
+//! * **GROUP BY / aggregates** — the aggregation job, now with a
+//!   map-side **combiner** (`PlanCombiner`) that folds partials at
+//!   spill time so shuffle bytes drop (`HPCW_COMBINER=0` disables);
+//! * **ORDER BY** — a total-order sort reusing the Terasort
+//!   [`RangePartitioner`]: the input is head-sampled, `R-1` splitters
+//!   route each row's order-preserving key encoding
+//!   ([`Value::sort_key`]), and concatenating the reduce outputs in
+//!   partition order yields a globally sorted result. `LIMIT` forces a
+//!   single reduce and truncates its output;
+//! * **SELECT** — a map-only filter/projection pass when no other stage
+//!   wants the work.
+//!
+//! [`LogicalPlan::compile_stages`] lowers a validated plan to an ordered
+//! list of [`StageSpec`]s — serializable single-job descriptions chained
+//! through intermediate DFS directories. The stages run either
+//! back-to-back on one dynamic cluster (`AppPayload::Query`) or as a
+//! SynfiniWay workflow of `query_stage` steps wired with
+//! `${steps.<name>.output_dir}` references (see
+//! `crate::api::synfiniway::query_workflow`).
+//!
+//! Stage rows are delimited text. Stages that rewrite rows (join,
+//! aggregate) emit tab-delimited fields and replace embedded tabs and
+//! newlines in field values with spaces — the standard Hadoop text-format
+//! constraint.
 
 use crate::error::{Error, Result};
-use crate::frameworks::expr::{cmp_values, Expr, Row, Schema, Value};
-use crate::mapreduce::{HashPartitioner, InputFormat, JobSpec, Mapper, OutputFormat, Reducer};
+use crate::frameworks::expr::{cmp_values, parse_expr, Expr, Row, Schema, Value};
+use crate::lustre::Dfs;
+use crate::mapreduce::{
+    HashPartitioner, InputFormat, JobSpec, Mapper, OutputFormat, Partitioner, Reducer, TaggedInput,
+};
+use crate::terasort::format::key_prefix_u64;
+use crate::terasort::partition::RangePartitioner;
 use std::sync::Arc;
 
 /// Aggregate functions over a grouped expression.
@@ -44,72 +77,920 @@ impl Aggregate {
     }
 }
 
-/// One output column: an aggregate over an expression.
-#[derive(Debug, Clone)]
+/// One output column: an aggregate over an expression (kept as source
+/// text so plans and stages serialize; stages re-parse at compile time).
+#[derive(Debug, Clone, PartialEq)]
 pub struct AggSpec {
     pub agg: Aggregate,
-    pub expr: Expr,
+    pub expr: String,
 }
 
-/// The one-job logical plan.
-#[derive(Debug, Clone)]
-pub struct LogicalPlan {
-    pub input_dir: String,
-    pub output_dir: String,
+/// One input table: a DFS directory of delimited text plus its schema.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TableRef {
+    pub dir: String,
     pub schema: Schema,
-    pub filter: Option<Expr>,
-    /// Group key expression (None = global aggregate, single group).
-    pub group_by: Option<Expr>,
+}
+
+/// `JOIN <right> ON <left_key> = <right_key>`; `right_prefix` renames
+/// right-side fields that collide with left-side names
+/// (`{prefix}_{name}`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JoinClause {
+    pub right: TableRef,
+    pub left_key: String,
+    pub right_key: String,
+    pub right_prefix: String,
+}
+
+/// `ORDER BY <key> [DESC]` against the plan's final output schema.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OrderClause {
+    pub key: String,
+    pub desc: bool,
+}
+
+impl OrderClause {
+    /// Parse `<expr> [DESC|ASC]` — the shared tail of Pig's `ORDER ... BY`
+    /// and Hive's `ORDER BY` clauses (case-insensitive keyword; ASCII
+    /// uppercase preserves byte offsets, so the slice below is safe).
+    pub fn parse(text: &str) -> Result<OrderClause> {
+        let mut key = text.trim().to_string();
+        let mut desc = false;
+        let upper = key.to_ascii_uppercase();
+        if let Some(stripped) = upper.strip_suffix(" DESC") {
+            key = key[..stripped.len()].trim().to_string();
+            desc = true;
+        } else if let Some(stripped) = upper.strip_suffix(" ASC") {
+            key = key[..stripped.len()].trim().to_string();
+        }
+        if key.is_empty() {
+            return Err(Error::Framework("ORDER BY needs an expression".into()));
+        }
+        Ok(OrderClause { key, desc })
+    }
+}
+
+/// The multi-stage logical plan. Expressions are source text, parsed for
+/// validation at plan construction and again at stage compile time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogicalPlan {
+    pub input: TableRef,
+    pub join: Option<JoinClause>,
+    /// Filter over the current schema (post-join when a join is present).
+    pub filter: Option<String>,
+    /// Bare output columns (no aggregates); empty = all columns.
+    pub project: Vec<String>,
+    pub group_by: Option<String>,
     pub aggregates: Vec<AggSpec>,
+    pub order_by: Option<OrderClause>,
+    /// Row cap; only valid together with `order_by` (single reduce).
+    pub limit: Option<u64>,
+    pub output_dir: String,
     pub n_reduces: u32,
 }
 
-impl LogicalPlan {
-    /// Compile to a runnable [`JobSpec`].
-    pub fn compile(&self) -> Result<JobSpec> {
-        if self.aggregates.is_empty() {
-            return Err(Error::Framework("plan has no aggregates".into()));
+/// Is `s` a bare identifier (usable as a generated field name)?
+fn bare_ident(s: &str) -> Option<&str> {
+    let t = s.trim();
+    let mut chars = t.chars();
+    let first = chars.next()?;
+    if (first.is_ascii_alphabetic() || first == '_')
+        && chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+    {
+        Some(t)
+    } else {
+        None
+    }
+}
+
+/// Combined schema of a join: left fields, then right fields with
+/// collisions renamed `{prefix}_{name}`. Tab-delimited (stage format).
+pub fn combined_schema(left: &Schema, right: &Schema, prefix: &str) -> Result<Schema> {
+    let mut fields: Vec<String> = left.fields.clone();
+    for f in &right.fields {
+        let name = if fields.iter().any(|x| x == f) {
+            format!("{prefix}_{f}")
+        } else {
+            f.clone()
+        };
+        if fields.iter().any(|x| x == &name) {
+            return Err(Error::Framework(format!(
+                "join field '{name}' collides even after renaming"
+            )));
         }
-        let mut spec = JobSpec::identity(
-            "framework-query",
-            &self.input_dir,
-            &self.output_dir,
-            self.n_reduces.max(1),
-        );
+        fields.push(name);
+    }
+    Ok(Schema {
+        fields,
+        delimiter: '\t',
+    })
+}
+
+impl LogicalPlan {
+    /// A single-input plan skeleton (tests and simple callers).
+    pub fn single(input: TableRef, output_dir: &str, n_reduces: u32) -> LogicalPlan {
+        LogicalPlan {
+            input,
+            join: None,
+            filter: None,
+            project: Vec::new(),
+            group_by: None,
+            aggregates: Vec::new(),
+            order_by: None,
+            limit: None,
+            output_dir: output_dir.to_string(),
+            n_reduces,
+        }
+    }
+
+    /// Schema the filter / group / aggregates see: the joined schema when
+    /// a join is present, else the input schema.
+    pub fn current_schema(&self) -> Result<Schema> {
+        match &self.join {
+            Some(j) => combined_schema(&self.input.schema, &j.right.schema, &j.right_prefix),
+            None => Ok(self.input.schema.clone()),
+        }
+    }
+
+    /// Output schema of the aggregation stage: the group column (named
+    /// after the group expression when it is a bare field, else `group`)
+    /// followed by one column per aggregate (`sum_amount` style names for
+    /// bare arguments, `agg{i}` otherwise).
+    pub fn agg_output_schema(&self) -> Schema {
+        let mut fields = Vec::with_capacity(1 + self.aggregates.len());
+        let group_name = self
+            .group_by
+            .as_deref()
+            .and_then(bare_ident)
+            .unwrap_or("group")
+            .to_string();
+        fields.push(group_name);
+        for (i, a) in self.aggregates.iter().enumerate() {
+            let name = match bare_ident(&a.expr) {
+                Some(arg) => format!("{}_{arg}", a.agg.name().to_ascii_lowercase()),
+                None => format!("agg{i}"),
+            };
+            let name = if fields.iter().any(|f| f == &name) {
+                format!("agg{i}")
+            } else {
+                name
+            };
+            fields.push(name);
+        }
+        Schema {
+            fields,
+            delimiter: '\t',
+        }
+    }
+
+    /// Schema of the plan's final output rows (what ORDER BY parses
+    /// against).
+    pub fn final_schema(&self) -> Result<Schema> {
+        if !self.aggregates.is_empty() {
+            return Ok(self.agg_output_schema());
+        }
+        let cur = self.current_schema()?;
+        if self.project.is_empty() {
+            return Ok(cur);
+        }
+        let mut fields = Vec::with_capacity(self.project.len());
+        for p in &self.project {
+            cur.index_of(p)?;
+            fields.push(p.clone());
+        }
+        Ok(Schema {
+            fields,
+            delimiter: cur.delimiter,
+        })
+    }
+
+    /// Structural + expression validation. Every expression must parse
+    /// against the schema of the stage that will evaluate it.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_reduces == 0 {
+            return Err(Error::Framework("plan needs n_reduces >= 1".into()));
+        }
+        if let Some(j) = &self.join {
+            parse_expr(&j.left_key, &self.input.schema)?;
+            parse_expr(&j.right_key, &j.right.schema)?;
+        }
+        let cur = self.current_schema()?;
+        if let Some(f) = &self.filter {
+            parse_expr(f, &cur)?;
+        }
+        if !self.project.is_empty() && !self.aggregates.is_empty() {
+            return Err(Error::Framework(
+                "bare output columns cannot be mixed with aggregates".into(),
+            ));
+        }
+        for p in &self.project {
+            cur.index_of(p)?;
+        }
+        if let Some(g) = &self.group_by {
+            parse_expr(g, &cur)?;
+            if self.aggregates.is_empty() {
+                return Err(Error::Framework("GROUP BY without aggregates".into()));
+            }
+        }
+        for a in &self.aggregates {
+            parse_expr(&a.expr, &cur)?;
+        }
+        if let Some(o) = &self.order_by {
+            parse_expr(&o.key, &self.final_schema()?)?;
+        }
+        if self.limit.is_some() && self.order_by.is_none() {
+            return Err(Error::Framework("LIMIT requires ORDER BY".into()));
+        }
+        if self.aggregates.is_empty()
+            && self.join.is_none()
+            && self.filter.is_none()
+            && self.project.is_empty()
+            && self.order_by.is_none()
+        {
+            return Err(Error::Framework(
+                "query does nothing: no join, filter, projection, aggregate or sort".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Lower to an ordered list of single-job stages. Stage `i > 0` reads
+    /// stage `i-1`'s output directory; all but the last stage write to
+    /// `"{output_dir}.stage{i}"` intermediates on the DFS.
+    pub fn compile_stages(&self) -> Result<Vec<StageSpec>> {
+        self.validate()?;
+        let mut stages: Vec<StageSpec> = Vec::new();
+        let mut filter = self.filter.clone();
+        let mut project = self.project.clone();
+        let mut cur_schema = self.input.schema.clone();
+
+        if let Some(j) = &self.join {
+            let combined = combined_schema(&self.input.schema, &j.right.schema, &j.right_prefix)?;
+            // The join consumes the filter, and the projection too when no
+            // aggregation follows (aggregates forbid bare columns anyway).
+            let proj = std::mem::take(&mut project);
+            let out_schema = if proj.is_empty() {
+                combined.clone()
+            } else {
+                let fields = proj.clone();
+                Schema {
+                    fields,
+                    delimiter: '\t',
+                }
+            };
+            stages.push(StageSpec {
+                input_dir: self.input.dir.clone(),
+                right_dir: Some(j.right.dir.clone()),
+                right_schema: Some(j.right.schema.clone()),
+                left_key: Some(j.left_key.clone()),
+                right_key: Some(j.right_key.clone()),
+                combined_fields: combined.fields.clone(),
+                filter: filter.take(),
+                project: proj,
+                ..StageSpec::new(StageKind::Join, self.input.schema.clone(), self.n_reduces)
+            });
+            cur_schema = out_schema;
+        }
+
+        if !self.aggregates.is_empty() {
+            stages.push(StageSpec {
+                filter: filter.take(),
+                group_by: self.group_by.clone(),
+                aggregates: self.aggregates.clone(),
+                ..StageSpec::new(StageKind::Agg, cur_schema.clone(), self.n_reduces)
+            });
+            cur_schema = self.agg_output_schema();
+        }
+
+        if let Some(o) = &self.order_by {
+            let n_reduces = if self.limit.is_some() {
+                1
+            } else {
+                self.n_reduces
+            };
+            stages.push(StageSpec {
+                filter: filter.take(),
+                project: std::mem::take(&mut project),
+                sort_by: Some(o.key.clone()),
+                desc: o.desc,
+                limit: self.limit,
+                ..StageSpec::new(StageKind::Sort, cur_schema.clone(), n_reduces)
+            });
+        } else if filter.is_some() || !project.is_empty() {
+            stages.push(StageSpec {
+                filter: filter.take(),
+                project: std::mem::take(&mut project),
+                ..StageSpec::new(StageKind::Select, cur_schema.clone(), 0)
+            });
+        }
+
+        // Wire the chain: stage 0 reads the plan input; stage i reads
+        // stage i-1's output; the last stage writes the plan output, the
+        // rest write sibling intermediates.
+        let last = stages.len() - 1;
+        for i in 0..stages.len() {
+            if i > 0 {
+                stages[i].input_dir = stages[i - 1].output_dir.clone();
+            } else if stages[0].input_dir.is_empty() {
+                stages[0].input_dir = self.input.dir.clone();
+            }
+            stages[i].output_dir = if i == last {
+                self.output_dir.clone()
+            } else {
+                format!("{}.stage{i}", self.output_dir)
+            };
+            stages[i].intermediate = i != last;
+        }
+        Ok(stages)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StageSpec — one serializable MR job of a compiled query
+// ---------------------------------------------------------------------------
+
+/// What a stage does; see the module docs for each job's shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    Join,
+    Agg,
+    Select,
+    Sort,
+}
+
+impl StageKind {
+    pub fn as_wire(self) -> &'static str {
+        match self {
+            StageKind::Join => "join",
+            StageKind::Agg => "agg",
+            StageKind::Select => "select",
+            StageKind::Sort => "sort",
+        }
+    }
+
+    pub fn from_wire(s: &str) -> Result<StageKind> {
+        match s {
+            "join" => Ok(StageKind::Join),
+            "agg" => Ok(StageKind::Agg),
+            "select" => Ok(StageKind::Select),
+            "sort" => Ok(StageKind::Sort),
+            other => Err(Error::Framework(format!("unknown stage kind '{other}'"))),
+        }
+    }
+}
+
+/// One compiled query stage: a self-contained, wire-serializable MR job
+/// description (see `wire::payload_to_json` for the JSON form). Compiling
+/// re-parses the expression texts against the carried schemas, so a stage
+/// can cross the API boundary and run as a workflow step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSpec {
+    pub kind: StageKind,
+    pub input_dir: String,
+    pub input_schema: Schema,
+    /// Join only: the right-side input.
+    pub right_dir: Option<String>,
+    pub right_schema: Option<Schema>,
+    pub left_key: Option<String>,
+    pub right_key: Option<String>,
+    /// Join only: field names of the combined row (left ++ renamed right).
+    pub combined_fields: Vec<String>,
+    pub filter: Option<String>,
+    pub project: Vec<String>,
+    pub group_by: Option<String>,
+    pub aggregates: Vec<AggSpec>,
+    pub sort_by: Option<String>,
+    pub desc: bool,
+    pub limit: Option<u64>,
+    pub output_dir: String,
+    /// 0 = map-only (select stages).
+    pub n_reduces: u32,
+    /// This stage writes a `.stage{i}` intermediate, not the plan's
+    /// final output: a stale copy (crashed or aborted earlier run) is
+    /// deleted before the stage runs, and job-mode execution deletes it
+    /// after the query succeeds. Final outputs keep Hadoop's
+    /// must-not-exist semantics.
+    pub intermediate: bool,
+}
+
+/// Bytes head-sampled per input part when building a sort stage's range
+/// partitioner (Hadoop's TeraSort sampler reads a handful of splits; a
+/// head sample per part is enough to balance text inputs).
+const SORT_SAMPLE_BYTES: u64 = 64 * 1024;
+
+impl StageSpec {
+    /// An empty stage skeleton: callers fill the per-kind fields with
+    /// struct-update syntax, so growing the struct touches one place.
+    pub fn new(kind: StageKind, input_schema: Schema, n_reduces: u32) -> StageSpec {
+        StageSpec {
+            kind,
+            input_dir: String::new(),
+            input_schema,
+            right_dir: None,
+            right_schema: None,
+            left_key: None,
+            right_key: None,
+            combined_fields: Vec::new(),
+            filter: None,
+            project: Vec::new(),
+            group_by: None,
+            aggregates: Vec::new(),
+            sort_by: None,
+            desc: false,
+            limit: None,
+            output_dir: String::new(),
+            n_reduces,
+            intermediate: false,
+        }
+    }
+
+    /// May a stale copy of this stage's output be deleted before the
+    /// stage runs? True only when the stage is flagged intermediate AND
+    /// its output directory carries the compiler's `.stage{i}` suffix —
+    /// a wire-supplied `intermediate: true` on an arbitrary directory
+    /// must never turn into a recursive delete of user data.
+    pub fn cleanable_intermediate(&self) -> bool {
+        self.intermediate
+            && self
+                .output_dir
+                .rsplit_once(".stage")
+                .is_some_and(|(_, n)| !n.is_empty() && n.bytes().all(|b| b.is_ascii_digit()))
+    }
+
+    fn job(&self, name: &str) -> JobSpec {
+        let mut spec = JobSpec::identity(name, &self.input_dir, &self.output_dir, self.n_reduces);
         spec.input_format = InputFormat::Lines;
         spec.output_format = OutputFormat::TextValue;
         spec.split_bytes = 8 * 1024 * 1024;
-        spec.mapper = Arc::new(PlanMapper {
-            schema: self.schema.clone(),
-            filter: self.filter.clone(),
-            group_by: self.group_by.clone(),
-            aggregates: self.aggregates.clone(),
-        });
-        spec.reducer = Arc::new(PlanReducer {
-            aggregates: self.aggregates.clone(),
+        spec
+    }
+
+    fn project_indices(&self, schema: &Schema) -> Result<Vec<usize>> {
+        self.project.iter().map(|p| schema.index_of(p)).collect()
+    }
+
+    /// Compile to a runnable [`JobSpec`]. `dfs` is only read by sort
+    /// stages (range-partitioner sampling), so compile a sort stage after
+    /// its input stage has run.
+    pub fn compile(&self, dfs: &dyn Dfs) -> Result<JobSpec> {
+        match self.kind {
+            StageKind::Join => self.compile_join(),
+            StageKind::Agg => self.compile_agg(),
+            StageKind::Select => self.compile_select(),
+            StageKind::Sort => self.compile_sort(dfs),
+        }
+    }
+
+    fn compile_join(&self) -> Result<JobSpec> {
+        let right_dir = self
+            .right_dir
+            .as_ref()
+            .ok_or_else(|| Error::Framework("join stage without right_dir".into()))?;
+        let right_schema = self
+            .right_schema
+            .as_ref()
+            .ok_or_else(|| Error::Framework("join stage without right_schema".into()))?;
+        let left_key = self
+            .left_key
+            .as_ref()
+            .ok_or_else(|| Error::Framework("join stage without left_key".into()))?;
+        let right_key = self
+            .right_key
+            .as_ref()
+            .ok_or_else(|| Error::Framework("join stage without right_key".into()))?;
+        if self.combined_fields.is_empty() {
+            return Err(Error::Framework("join stage without combined_fields".into()));
+        }
+        let combined = Schema {
+            fields: self.combined_fields.clone(),
+            delimiter: '\t',
+        };
+        let filter = self
+            .filter
+            .as_ref()
+            .map(|f| parse_expr(f, &combined))
+            .transpose()?;
+        let project = self.project_indices(&combined)?;
+        let mut spec = self.job("query-join");
+        spec.n_reduces = self.n_reduces.max(1);
+        spec.tagged_inputs = vec![
+            TaggedInput {
+                dir: self.input_dir.clone(),
+                mapper: Arc::new(JoinSideMapper {
+                    schema: self.input_schema.clone(),
+                    key: parse_expr(left_key, &self.input_schema)?,
+                    tag: b'L',
+                }),
+            },
+            TaggedInput {
+                dir: right_dir.clone(),
+                mapper: Arc::new(JoinSideMapper {
+                    schema: right_schema.clone(),
+                    key: parse_expr(right_key, right_schema)?,
+                    tag: b'R',
+                }),
+            },
+        ];
+        spec.reducer = Arc::new(JoinReducer {
+            combined,
+            filter,
+            project,
         });
         spec.partitioner = Arc::new(HashPartitioner);
         Ok(spec)
     }
+
+    fn compile_agg(&self) -> Result<JobSpec> {
+        if self.aggregates.is_empty() {
+            return Err(Error::Framework("agg stage has no aggregates".into()));
+        }
+        let schema = &self.input_schema;
+        let filter = self
+            .filter
+            .as_ref()
+            .map(|f| parse_expr(f, schema))
+            .transpose()?;
+        let group_by = self
+            .group_by
+            .as_ref()
+            .map(|g| parse_expr(g, schema))
+            .transpose()?;
+        let aggs: Vec<(Aggregate, Expr)> = self
+            .aggregates
+            .iter()
+            .map(|a| Ok((a.agg, parse_expr(&a.expr, schema)?)))
+            .collect::<Result<_>>()?;
+        let mut spec = self.job("query-agg");
+        spec.n_reduces = self.n_reduces.max(1);
+        spec.mapper = Arc::new(PlanMapper {
+            schema: schema.clone(),
+            filter,
+            group_by,
+            aggs,
+        });
+        spec.reducer = Arc::new(PlanReducer {
+            aggs: self.aggregates.iter().map(|a| a.agg).collect(),
+        });
+        spec.combiner = Some(Arc::new(PlanCombiner {
+            n: self.aggregates.len(),
+        }));
+        spec.partitioner = Arc::new(HashPartitioner);
+        Ok(spec)
+    }
+
+    fn compile_select(&self) -> Result<JobSpec> {
+        let schema = &self.input_schema;
+        let filter = self
+            .filter
+            .as_ref()
+            .map(|f| parse_expr(f, schema))
+            .transpose()?;
+        let project = self.project_indices(schema)?;
+        let mut spec = self.job("query-select");
+        spec.n_reduces = 0; // map-only
+        spec.mapper = Arc::new(SelectMapper {
+            schema: schema.clone(),
+            filter,
+            project,
+        });
+        Ok(spec)
+    }
+
+    fn compile_sort(&self, dfs: &dyn Dfs) -> Result<JobSpec> {
+        let schema = &self.input_schema;
+        let sort_by = self
+            .sort_by
+            .as_ref()
+            .ok_or_else(|| Error::Framework("sort stage without sort_by".into()))?;
+        let filter = self
+            .filter
+            .as_ref()
+            .map(|f| parse_expr(f, schema))
+            .transpose()?;
+        let project = self.project_indices(schema)?;
+        let key_schema = if project.is_empty() {
+            schema.clone()
+        } else {
+            Schema {
+                fields: self.project.clone(),
+                delimiter: schema.delimiter,
+            }
+        };
+        let key = parse_expr(sort_by, &key_schema)?;
+        let mut n_reduces = if self.limit.is_some() {
+            1
+        } else {
+            self.n_reduces.max(1)
+        };
+        let partitioner: Arc<dyn Partitioner> = if n_reduces == 1 {
+            Arc::new(HashPartitioner)
+        } else {
+            let samples = sample_sort_keys(
+                dfs,
+                &self.input_dir,
+                schema,
+                filter.as_ref(),
+                &project,
+                &key,
+                self.desc,
+            )?;
+            if samples.is_empty() {
+                n_reduces = 1;
+                Arc::new(HashPartitioner)
+            } else {
+                Arc::new(RangePartitioner::from_samples(samples, n_reduces)?)
+            }
+        };
+        let mut spec = self.job("query-sort");
+        spec.n_reduces = n_reduces;
+        spec.mapper = Arc::new(SortMapper {
+            schema: schema.clone(),
+            filter,
+            project,
+            key,
+            desc: self.desc,
+        });
+        // Identity reduce: the merge already yields key order; TextValue
+        // drops the routing key.
+        spec.reducer = Arc::new(crate::mapreduce::IdentityReducer);
+        spec.partitioner = partitioner;
+        spec.reduce_limit = self.limit;
+        Ok(spec)
+    }
 }
 
-/// Map side: filter rows, emit `(group_key, partial-aggregate tuple)`.
-/// Partials are pre-folded per emission (combiner-less but compact: the
-/// reduce side merges `(count, sum, min, max)` partials per aggregate).
+/// Split a line into exactly `arity` raw fields (padded with empty
+/// strings, extra fields dropped) so column indices stay aligned when
+/// stages re-join rows.
+fn raw_fields(line: &str, delimiter: char, arity: usize) -> Vec<String> {
+    let mut out: Vec<String> = line.split(delimiter).take(arity).map(sanitize).collect();
+    while out.len() < arity {
+        out.push(String::new());
+    }
+    out
+}
+
+/// Stage rows are tab/newline-delimited text: embedded tabs and newlines
+/// in field values become spaces.
+fn sanitize(f: &str) -> String {
+    f.replace(['\t', '\n', '\r'], " ")
+}
+
+/// Evaluate a sort stage's row pipeline: parse, filter, project, key.
+/// Returns `(encoded key, output row text)` or `None` when filtered out
+/// or unparseable.
+fn sort_row(
+    schema: &Schema,
+    filter: Option<&Expr>,
+    project: &[usize],
+    key: &Expr,
+    desc: bool,
+    line: &str,
+) -> Option<(Vec<u8>, String)> {
+    if line.trim().is_empty() {
+        return None;
+    }
+    let row = schema.parse_row(line);
+    if let Some(f) = filter {
+        match f.eval(&row) {
+            Ok(v) if v.truthy() => {}
+            _ => return None,
+        }
+    }
+    let (out_row, key_row) = if project.is_empty() {
+        // Sort stages are terminal in every compiled plan (nothing
+        // re-parses their output), so the passthrough case emits the
+        // original line — one parse, no re-split, no per-field copies.
+        (line.to_string(), row)
+    } else {
+        // Index the padded raw fields (short rows stay in bounds); the
+        // key row re-parses the padded text so both views agree.
+        let fields = raw_fields(line, schema.delimiter, schema.fields.len());
+        let picked: Vec<String> = project.iter().map(|&i| fields[i].clone()).collect();
+        let key_row = Row(picked.iter().map(|f| Value::parse(f)).collect());
+        (picked.join(&schema.delimiter.to_string()), key_row)
+    };
+    let v = key.eval(&key_row).ok()?;
+    Some((v.sort_key(desc), out_row))
+}
+
+/// Head-sample a sort stage's input to seed the range partitioner:
+/// the first `SORT_SAMPLE_BYTES` of every part file, parsed and keyed
+/// exactly like the sort mapper, reduced to u64 key prefixes.
+fn sample_sort_keys(
+    dfs: &dyn Dfs,
+    input_dir: &str,
+    schema: &Schema,
+    filter: Option<&Expr>,
+    project: &[usize],
+    key: &Expr,
+    desc: bool,
+) -> Result<Vec<u64>> {
+    let mut files: Vec<String> = dfs
+        .list(input_dir)
+        .into_iter()
+        .filter(|p| !p.split('/').next_back().unwrap_or("").starts_with('_'))
+        .collect();
+    files.sort();
+    let mut samples = Vec::new();
+    for f in &files {
+        let buf = dfs.read_range(f, 0, SORT_SAMPLE_BYTES)?;
+        let text = String::from_utf8_lossy(&buf);
+        let complete = buf.len() < SORT_SAMPLE_BYTES as usize;
+        let mut lines: Vec<&str> = text.lines().collect();
+        if !complete && lines.len() > 1 {
+            lines.pop(); // drop the truncated tail line
+        }
+        for line in lines {
+            if let Some((k, _)) = sort_row(schema, filter, project, key, desc, line) {
+                samples.push(key_prefix_u64(&k));
+            }
+        }
+    }
+    Ok(samples)
+}
+
+// ---------------------------------------------------------------------------
+// Join operators
+// ---------------------------------------------------------------------------
+
+/// Tagged map side of the repartition join: emits
+/// `(join_key, tag ++ raw row)` with the row re-joined on tabs.
+struct JoinSideMapper {
+    schema: Schema,
+    key: Expr,
+    tag: u8,
+}
+
+impl Mapper for JoinSideMapper {
+    fn map(&self, _k: &[u8], value: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        let Ok(line) = std::str::from_utf8(value) else {
+            return;
+        };
+        if line.trim().is_empty() {
+            return;
+        }
+        let row = self.schema.parse_row(line);
+        let Ok(key) = self.key.eval(&row) else {
+            return;
+        };
+        let fields = raw_fields(line, self.schema.delimiter, self.schema.fields.len());
+        let mut v = Vec::with_capacity(line.len() + 1);
+        v.push(self.tag);
+        v.extend_from_slice(fields.join("\t").as_bytes());
+        emit(sanitize(&key.to_string()).as_bytes(), &v);
+    }
+}
+
+/// Reduce side of the repartition join: per key, buffer both tagged
+/// streams and emit the inner-join cross product, filtered and projected.
+struct JoinReducer {
+    combined: Schema,
+    filter: Option<Expr>,
+    /// Output column indices into the combined row; empty = all.
+    project: Vec<usize>,
+}
+
+impl Reducer for JoinReducer {
+    fn reduce(
+        &self,
+        key: &[u8],
+        values: &mut dyn Iterator<Item = &[u8]>,
+        emit: &mut dyn FnMut(&[u8], &[u8]),
+    ) {
+        let mut lefts: Vec<Vec<u8>> = Vec::new();
+        let mut rights: Vec<Vec<u8>> = Vec::new();
+        for v in values {
+            match v.first() {
+                Some(&b'L') => lefts.push(v[1..].to_vec()),
+                Some(&b'R') => rights.push(v[1..].to_vec()),
+                _ => {}
+            }
+        }
+        let arity = self.combined.fields.len();
+        for l in &lefts {
+            for r in &rights {
+                let mut row = Vec::with_capacity(l.len() + 1 + r.len());
+                row.extend_from_slice(l);
+                row.push(b'\t');
+                row.extend_from_slice(r);
+                let Ok(text) = std::str::from_utf8(&row) else {
+                    continue;
+                };
+                // The map sides emit fixed-arity rows, so the combined
+                // row re-splits into exactly the combined schema's
+                // columns.
+                let fields = raw_fields(text, '\t', arity);
+                let parsed = Row(fields.iter().map(|f| Value::parse(f)).collect());
+                if let Some(f) = &self.filter {
+                    match f.eval(&parsed) {
+                        Ok(v) if v.truthy() => {}
+                        _ => continue,
+                    }
+                }
+                let out = if self.project.is_empty() {
+                    fields.join("\t")
+                } else {
+                    self.project
+                        .iter()
+                        .map(|&i| fields[i].as_str())
+                        .collect::<Vec<_>>()
+                        .join("\t")
+                };
+                emit(key, out.as_bytes());
+            }
+        }
+    }
+}
+
+/// Map-only filter/projection pass.
+struct SelectMapper {
+    schema: Schema,
+    filter: Option<Expr>,
+    project: Vec<usize>,
+}
+
+impl Mapper for SelectMapper {
+    fn map(&self, _k: &[u8], value: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        let Ok(line) = std::str::from_utf8(value) else {
+            return;
+        };
+        if line.trim().is_empty() {
+            return;
+        }
+        let row = self.schema.parse_row(line);
+        if let Some(f) = &self.filter {
+            match f.eval(&row) {
+                Ok(v) if v.truthy() => {}
+                _ => return,
+            }
+        }
+        if self.project.is_empty() {
+            // Filter-only select: pass the surviving line through
+            // untouched (select stages are terminal — no re-split).
+            emit(b"", line.as_bytes());
+            return;
+        }
+        let fields = raw_fields(line, self.schema.delimiter, self.schema.fields.len());
+        let out = self
+            .project
+            .iter()
+            .map(|&i| fields[i].as_str())
+            .collect::<Vec<_>>()
+            .join(&self.schema.delimiter.to_string());
+        emit(b"", out.as_bytes());
+    }
+}
+
+/// Total-order sort map side: emits `(order-preserving key, row)`.
+struct SortMapper {
+    schema: Schema,
+    filter: Option<Expr>,
+    project: Vec<usize>,
+    key: Expr,
+    desc: bool,
+}
+
+impl Mapper for SortMapper {
+    fn map(&self, _k: &[u8], value: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        let Ok(line) = std::str::from_utf8(value) else {
+            return;
+        };
+        if let Some((k, row)) = sort_row(
+            &self.schema,
+            self.filter.as_ref(),
+            &self.project,
+            &self.key,
+            self.desc,
+            line,
+        ) {
+            emit(&k, row.as_bytes());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Aggregation operators (map / combine / reduce)
+// ---------------------------------------------------------------------------
+
+/// Map side of the aggregation: filter rows, emit
+/// `(group_key, partial-aggregate tuple)`.
 struct PlanMapper {
     schema: Schema,
     filter: Option<Expr>,
     group_by: Option<Expr>,
-    aggregates: Vec<AggSpec>,
+    aggs: Vec<(Aggregate, Expr)>,
 }
 
 /// Serialized partial: for each aggregate, `count,sum,min,max` joined by
-/// `;` — enough to finalize any of the five functions.
-fn partial_for(aggs: &[AggSpec], row: &Row) -> Result<String> {
+/// `;` — enough to finalize any of the five functions, and closed under
+/// merging (the combiner's associativity requirement).
+fn partial_for(aggs: &[(Aggregate, Expr)], row: &Row) -> Result<String> {
     let mut parts = Vec::with_capacity(aggs.len());
-    for a in aggs {
-        let v = a.expr.eval(row)?;
-        let n = match a.agg {
+    for (agg, expr) in aggs {
+        let v = expr.eval(row)?;
+        let n = match agg {
             Aggregate::Count => 1.0,
             _ => v.as_num()?,
         };
@@ -135,20 +1016,15 @@ impl Mapper for PlanMapper {
         }
         let key = match &self.group_by {
             Some(g) => match g.eval(&row) {
-                Ok(v) => v.to_string(),
+                Ok(v) => sanitize(&v.to_string()),
                 Err(_) => return,
             },
             None => "<all>".to_string(),
         };
-        if let Ok(partial) = partial_for(&self.aggregates, &row) {
+        if let Ok(partial) = partial_for(&self.aggs, &row) {
             emit(key.as_bytes(), partial.as_bytes());
         }
     }
-}
-
-/// Reduce side: merge partials, finalize, emit one text row per group.
-struct PlanReducer {
-    aggregates: Vec<AggSpec>,
 }
 
 #[derive(Clone, Copy)]
@@ -157,6 +1033,24 @@ struct Partial {
     sum: f64,
     min: f64,
     max: f64,
+}
+
+impl Partial {
+    fn zero() -> Partial {
+        Partial {
+            count: 0.0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn merge(&mut self, p: Partial) {
+        self.count += p.count;
+        self.sum += p.sum;
+        self.min = self.min.min(p.min);
+        self.max = self.max.max(p.max);
+    }
 }
 
 fn parse_partials(n: usize, text: &str) -> Option<Vec<Partial>> {
@@ -176,6 +1070,55 @@ fn parse_partials(n: usize, text: &str) -> Option<Vec<Partial>> {
     (out.len() == n).then_some(out)
 }
 
+fn partials_to_string(acc: &[Partial]) -> String {
+    acc.iter()
+        .map(|p| format!("{},{},{},{}", p.count, p.sum, p.min, p.max))
+        .collect::<Vec<_>>()
+        .join(";")
+}
+
+/// Merge all partial tuples of one key into `n` accumulators.
+fn merge_partials(n: usize, values: &mut dyn Iterator<Item = &[u8]>) -> Vec<Partial> {
+    let mut acc = vec![Partial::zero(); n];
+    for v in values {
+        let Ok(text) = std::str::from_utf8(v) else {
+            continue;
+        };
+        let Some(parts) = parse_partials(n, text) else {
+            continue;
+        };
+        for (a, p) in acc.iter_mut().zip(parts) {
+            a.merge(p);
+        }
+    }
+    acc
+}
+
+/// The map-side combiner: folds a sorted spill run's partials per key
+/// WITHOUT finalizing, emitting one partial tuple per key — associative,
+/// so combined and uncombined runs reduce to identical results while the
+/// shuffle carries one record per (map, key) instead of one per row.
+struct PlanCombiner {
+    n: usize,
+}
+
+impl Reducer for PlanCombiner {
+    fn reduce(
+        &self,
+        key: &[u8],
+        values: &mut dyn Iterator<Item = &[u8]>,
+        emit: &mut dyn FnMut(&[u8], &[u8]),
+    ) {
+        let acc = merge_partials(self.n, values);
+        emit(key, partials_to_string(&acc).as_bytes());
+    }
+}
+
+/// Reduce side: merge partials, finalize, emit one text row per group.
+struct PlanReducer {
+    aggs: Vec<Aggregate>,
+}
+
 impl Reducer for PlanReducer {
     fn reduce(
         &self,
@@ -183,33 +1126,10 @@ impl Reducer for PlanReducer {
         values: &mut dyn Iterator<Item = &[u8]>,
         emit: &mut dyn FnMut(&[u8], &[u8]),
     ) {
-        let n = self.aggregates.len();
-        let mut acc: Vec<Partial> = vec![
-            Partial {
-                count: 0.0,
-                sum: 0.0,
-                min: f64::INFINITY,
-                max: f64::NEG_INFINITY,
-            };
-            n
-        ];
-        for v in values {
-            let Ok(text) = std::str::from_utf8(v) else {
-                continue;
-            };
-            let Some(parts) = parse_partials(n, text) else {
-                continue;
-            };
-            for (a, p) in acc.iter_mut().zip(parts) {
-                a.count += p.count;
-                a.sum += p.sum;
-                a.min = a.min.min(p.min);
-                a.max = a.max.max(p.max);
-            }
-        }
+        let acc = merge_partials(self.aggs.len(), values);
         let mut cols = vec![String::from_utf8_lossy(key).to_string()];
-        for (spec, a) in self.aggregates.iter().zip(&acc) {
-            let v = match spec.agg {
+        for (agg, a) in self.aggs.iter().zip(&acc) {
+            let v = match agg {
                 Aggregate::Count => a.count,
                 Aggregate::Sum => a.sum,
                 Aggregate::Avg => {
@@ -242,41 +1162,58 @@ pub fn sorted_result_lines(text: &str) -> Vec<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::frameworks::expr::parse_expr;
+    use crate::config::StackConfig;
+    use crate::lustre::LustreFs;
 
-    fn plan() -> LogicalPlan {
-        let schema = Schema::new(&["region", "product", "amount"], ',');
+    fn sales_schema() -> Schema {
+        Schema::new(&["region", "product", "amount"], ',')
+    }
+
+    fn agg_plan() -> LogicalPlan {
         LogicalPlan {
-            input_dir: "/in".into(),
-            output_dir: "/out".into(),
-            filter: Some(parse_expr("amount > 100", &schema).unwrap()),
-            group_by: Some(parse_expr("region", &schema).unwrap()),
+            filter: Some("amount > 100".into()),
+            group_by: Some("region".into()),
             aggregates: vec![
                 AggSpec {
                     agg: Aggregate::Sum,
-                    expr: parse_expr("amount", &schema).unwrap(),
+                    expr: "amount".into(),
                 },
                 AggSpec {
                     agg: Aggregate::Count,
-                    expr: parse_expr("amount", &schema).unwrap(),
+                    expr: "amount".into(),
                 },
             ],
-            schema,
-            n_reduces: 2,
+            ..LogicalPlan::single(
+                TableRef {
+                    dir: "/in".into(),
+                    schema: sales_schema(),
+                },
+                "/out",
+                2,
+            )
         }
     }
 
-    #[test]
-    fn compiles_to_job_spec() {
-        let spec = plan().compile().unwrap();
-        assert_eq!(spec.n_reduces, 2);
-        assert_eq!(spec.input_format, InputFormat::Lines);
+    fn fs() -> LustreFs {
+        let c = StackConfig::paper();
+        LustreFs::new(&c.lustre, &c.cluster)
     }
 
     #[test]
-    fn mapper_filters_and_keys() {
-        let p = plan();
-        let spec = p.compile().unwrap();
+    fn agg_plan_compiles_to_one_stage_with_combiner() {
+        let stages = agg_plan().compile_stages().unwrap();
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].kind, StageKind::Agg);
+        assert_eq!(stages[0].output_dir, "/out");
+        let spec = stages[0].compile(&fs()).unwrap();
+        assert_eq!(spec.n_reduces, 2);
+        assert_eq!(spec.input_format, InputFormat::Lines);
+        assert!(spec.combiner.is_some(), "agg stages carry a combiner");
+    }
+
+    #[test]
+    fn agg_mapper_filters_and_keys() {
+        let spec = agg_plan().compile_stages().unwrap()[0].compile(&fs()).unwrap();
         let mut out = Vec::new();
         spec.mapper
             .map(b"0", b"wales,w,150", &mut |k, v| out.push((k.to_vec(), v.to_vec())));
@@ -289,8 +1226,7 @@ mod tests {
 
     #[test]
     fn reducer_finalizes_aggregates() {
-        let p = plan();
-        let spec = p.compile().unwrap();
+        let spec = agg_plan().compile_stages().unwrap()[0].compile(&fs()).unwrap();
         let vals: Vec<&[u8]> = vec![b"1,150,150,150;1,1,1,1", b"1,250,250,250;1,1,1,1"];
         let mut out = Vec::new();
         spec.reducer
@@ -301,10 +1237,229 @@ mod tests {
     }
 
     #[test]
-    fn empty_aggregate_list_rejected() {
-        let mut p = plan();
+    fn combiner_folds_partials_without_finalizing() {
+        let spec = agg_plan().compile_stages().unwrap()[0].compile(&fs()).unwrap();
+        let combiner = spec.combiner.unwrap();
+        let vals: Vec<&[u8]> = vec![b"1,150,150,150;1,1,1,1", b"1,250,250,250;1,1,1,1"];
+        let mut out = Vec::new();
+        combiner.reduce(b"wales", &mut vals.into_iter(), &mut |k, v| {
+            out.push((k.to_vec(), String::from_utf8(v.to_vec()).unwrap()))
+        });
+        assert_eq!(out.len(), 1, "one partial per key");
+        assert_eq!(out[0].0, b"wales".to_vec());
+        assert_eq!(out[0].1, "2,400,150,250;2,2,1,1");
+        // The reducer finalizes the combined partial to the same row.
+        let combined = out[0].1.clone();
+        let vals: Vec<&[u8]> = vec![combined.as_bytes()];
+        let mut fin = Vec::new();
+        spec.reducer.reduce(b"wales", &mut vals.into_iter(), &mut |_, v| {
+            fin.push(String::from_utf8(v.to_vec()).unwrap())
+        });
+        assert_eq!(fin, vec!["wales\t400\t2"]);
+    }
+
+    #[test]
+    fn empty_aggregate_list_needs_other_work() {
+        let mut p = agg_plan();
         p.aggregates.clear();
-        assert!(p.compile().is_err());
+        p.group_by = None;
+        p.filter = None;
+        assert!(p.validate().is_err(), "no-op query rejected");
+        p.filter = Some("amount > 100".into());
+        p.validate().unwrap(); // a pure filter is a valid select stage
+        let stages = p.compile_stages().unwrap();
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].kind, StageKind::Select);
+        assert_eq!(stages[0].n_reduces, 0, "select is map-only");
+    }
+
+    #[test]
+    fn join_order_plan_compiles_to_chained_stages() {
+        let mut p = LogicalPlan::single(
+            TableRef {
+                dir: "/sales".into(),
+                schema: sales_schema(),
+            },
+            "/report",
+            3,
+        );
+        p.join = Some(JoinClause {
+            right: TableRef {
+                dir: "/regions".into(),
+                schema: Schema::new(&["region", "country"], ','),
+            },
+            left_key: "region".into(),
+            right_key: "region".into(),
+            right_prefix: "r".into(),
+        });
+        p.filter = Some("amount > 10".into());
+        p.group_by = Some("country".into());
+        p.aggregates = vec![AggSpec {
+            agg: Aggregate::Sum,
+            expr: "amount".into(),
+        }];
+        p.order_by = Some(OrderClause {
+            key: "sum_amount".into(),
+            desc: true,
+        });
+        p.limit = Some(5);
+        let stages = p.compile_stages().unwrap();
+        assert_eq!(
+            stages.iter().map(|s| s.kind).collect::<Vec<_>>(),
+            vec![StageKind::Join, StageKind::Agg, StageKind::Sort]
+        );
+        // Chained through intermediates; final stage writes the output.
+        assert_eq!(stages[0].output_dir, "/report.stage0");
+        assert_eq!(stages[1].input_dir, "/report.stage0");
+        assert_eq!(stages[1].output_dir, "/report.stage1");
+        assert_eq!(stages[2].input_dir, "/report.stage1");
+        assert_eq!(stages[2].output_dir, "/report");
+        // The join consumed the filter; later stages must not re-filter.
+        assert!(stages[0].filter.is_some());
+        assert!(stages[1].filter.is_none() && stages[2].filter.is_none());
+        // Combined schema renames the colliding right-side key.
+        assert_eq!(
+            stages[0].combined_fields,
+            vec!["region", "product", "amount", "r_region", "country"]
+        );
+        // LIMIT forces a single reduce on the sort stage.
+        assert_eq!(stages[2].n_reduces, 1);
+        assert_eq!(stages[2].limit, Some(5));
+        // Intermediates are flagged; the final stage is not.
+        assert!(stages[0].intermediate && stages[1].intermediate);
+        assert!(!stages[2].intermediate);
+    }
+
+    #[test]
+    fn join_reducer_inner_joins_and_filters() {
+        let st = StageSpec {
+            input_dir: "/l".into(),
+            right_dir: Some("/r".into()),
+            right_schema: Some(Schema::new(&["region", "country"], ',')),
+            left_key: Some("region".into()),
+            right_key: Some("region".into()),
+            combined_fields: vec![
+                "region".into(),
+                "amount".into(),
+                "r_region".into(),
+                "country".into(),
+            ],
+            filter: Some("amount > 100".into()),
+            project: vec!["country".into(), "amount".into()],
+            output_dir: "/o".into(),
+            ..StageSpec::new(StageKind::Join, Schema::new(&["region", "amount"], ','), 2)
+        };
+        let spec = st.compile(&fs()).unwrap();
+        assert_eq!(spec.tagged_inputs.len(), 2);
+        // Map both sides.
+        let mut pairs: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+        let mut emit = |k: &[u8], v: &[u8]| pairs.push((k.to_vec(), v.to_vec()));
+        spec.tagged_inputs[0].mapper.map(b"0", b"wales,150", &mut emit);
+        spec.tagged_inputs[0].mapper.map(b"1", b"wales,80", &mut emit);
+        spec.tagged_inputs[1].mapper.map(b"2", b"wales,UK", &mut emit);
+        assert!(pairs.iter().all(|(k, _)| k == b"wales"));
+        assert_eq!(pairs[0].1, b"Lwales\t150".to_vec());
+        assert_eq!(pairs[2].1, b"Rwales\tUK".to_vec());
+        // Reduce: the 80-amount row is filtered, the projection picks
+        // (country, amount).
+        let values: Vec<&[u8]> = pairs.iter().map(|(_, v)| v.as_slice()).collect();
+        let mut out = Vec::new();
+        spec.reducer
+            .reduce(b"wales", &mut values.into_iter(), &mut |_, v| {
+                out.push(String::from_utf8(v.to_vec()).unwrap())
+            });
+        assert_eq!(out, vec!["UK\t150"]);
+    }
+
+    #[test]
+    fn sort_stage_produces_total_order_keys() {
+        let st = StageSpec {
+            input_dir: "/nosuch".into(),
+            sort_by: Some("score".into()),
+            limit: Some(2),
+            output_dir: "/o".into(),
+            ..StageSpec::new(StageKind::Sort, Schema::new(&["name", "score"], '\t'), 4)
+        };
+        let spec = st.compile(&fs()).unwrap();
+        assert_eq!(spec.n_reduces, 1, "LIMIT forces one reduce");
+        assert_eq!(spec.reduce_limit, Some(2));
+        let mut pairs: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+        let mut emit = |k: &[u8], v: &[u8]| pairs.push((k.to_vec(), v.to_vec()));
+        spec.mapper.map(b"0", b"bob\t10", &mut emit);
+        spec.mapper.map(b"1", b"amy\t2", &mut emit);
+        spec.mapper.map(b"2", b"cat\t30", &mut emit);
+        // Keys order numerically: 2 < 10 < 30.
+        let mut sorted = pairs.clone();
+        sorted.sort_by(|a, b| a.0.cmp(&b.0));
+        let rows: Vec<String> = sorted
+            .iter()
+            .map(|(_, v)| String::from_utf8(v.clone()).unwrap())
+            .collect();
+        assert_eq!(rows, vec!["amy\t2", "bob\t10", "cat\t30"]);
+    }
+
+    #[test]
+    fn sort_sampling_builds_range_partitioner() {
+        let fs = fs();
+        fs.mkdirs("/lustre/scratch/srt").unwrap();
+        let mut text = String::new();
+        for i in 0..200 {
+            text.push_str(&format!("row{i}\t{}\n", i * 7 % 200));
+        }
+        fs.create("/lustre/scratch/srt/part-0", text.as_bytes()).unwrap();
+        let st = StageSpec {
+            input_dir: "/lustre/scratch/srt".into(),
+            sort_by: Some("score".into()),
+            output_dir: "/o".into(),
+            ..StageSpec::new(StageKind::Sort, Schema::new(&["name", "score"], '\t'), 4)
+        };
+        let spec = st.compile(&fs).unwrap();
+        assert_eq!(spec.n_reduces, 4);
+        // The partitioner must route sorted keys monotonically.
+        let keys: Vec<Vec<u8>> = (0..200)
+            .map(|i| Value::Num(i as f64).sort_key(false))
+            .collect();
+        let parts: Vec<u32> = keys.iter().map(|k| spec.partitioner.partition(k, 4)).collect();
+        assert!(parts.windows(2).all(|w| w[0] <= w[1]), "monotone routing");
+        assert!(parts.iter().any(|&p| p > 0), "multiple partitions in use");
+    }
+
+    #[test]
+    fn cleanable_intermediate_requires_stage_suffix() {
+        let mut st = StageSpec::new(StageKind::Select, Schema::new(&["a"], ','), 0);
+        st.output_dir = "/report.stage0".into();
+        assert!(!st.cleanable_intermediate(), "flag off => never cleanable");
+        st.intermediate = true;
+        assert!(st.cleanable_intermediate());
+        // A wire-supplied flag on a non-.stage{i} directory must NOT
+        // authorize a recursive delete.
+        for bad in ["/lustre/scratch", "/report.stage", "/report.stageX", "/report"] {
+            st.output_dir = bad.into();
+            assert!(!st.cleanable_intermediate(), "{bad} must not be cleanable");
+        }
+        st.output_dir = "/report.stage12".into();
+        assert!(st.cleanable_intermediate());
+    }
+
+    #[test]
+    fn limit_without_order_rejected() {
+        let mut p = agg_plan();
+        p.limit = Some(3);
+        assert!(p.validate().unwrap_err().to_string().contains("LIMIT requires ORDER BY"));
+    }
+
+    #[test]
+    fn final_schema_names_aggregates() {
+        let p = agg_plan();
+        let s = p.agg_output_schema();
+        assert_eq!(s.fields, vec!["region", "sum_amount", "count_amount"]);
+        // Non-bare expressions fall back to positional names.
+        let mut p2 = agg_plan();
+        p2.aggregates[0].expr = "amount * 2".into();
+        assert_eq!(
+            p2.agg_output_schema().fields,
+            vec!["region", "agg0", "count_amount"]
+        );
     }
 
     #[test]

@@ -52,6 +52,10 @@ pub const NODES_DRAINED: &str = "NODES_DRAINED";
 pub const NODES_FAILED: &str = "NODES_FAILED";
 /// Committed map outputs invalidated by a node loss and re-executed.
 pub const MAPS_INVALIDATED: &str = "MAPS_INVALIDATED";
+/// Records fed into the map-side combiner (sorted spill runs).
+pub const COMBINE_INPUT_RECORDS: &str = "COMBINE_INPUT_RECORDS";
+/// Records the combiner emitted (what the shuffle actually carries).
+pub const COMBINE_OUTPUT_RECORDS: &str = "COMBINE_OUTPUT_RECORDS";
 
 impl Counters {
     pub fn new() -> Self {

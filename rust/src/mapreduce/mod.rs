@@ -143,10 +143,18 @@ impl OutputFormat {
     }
 }
 
+/// One input directory of a multi-input job, mapped with its own mapper
+/// (Hadoop's `MultipleInputs` — the repartition join's tagged map sides).
+pub struct TaggedInput {
+    pub dir: String,
+    pub mapper: Arc<dyn Mapper>,
+}
+
 /// A MapReduce job description.
 pub struct JobSpec {
     pub name: String,
-    /// Input directory on the Dfs (unused for synthetic-row jobs).
+    /// Input directory on the Dfs (unused for synthetic-row jobs and
+    /// when `tagged_inputs` is non-empty).
     pub input_dir: String,
     /// Final output directory (must not exist — Hadoop semantics).
     pub output_dir: String,
@@ -158,8 +166,22 @@ pub struct JobSpec {
     /// For `InputFormat::RowRange` jobs (Teragen): `(total_rows, n_maps)`.
     pub synthetic_rows: Option<(u64, u64)>,
     pub mapper: Arc<dyn Mapper>,
+    /// Multi-input jobs: when non-empty, splits are planned over every
+    /// entry and each split runs its own entry's mapper (`mapper` and
+    /// `input_dir` are ignored for split planning).
+    pub tagged_inputs: Vec<TaggedInput>,
     pub reducer: Arc<dyn Reducer>,
+    /// Optional map-side combiner, run over each sorted spill run before
+    /// the segment is committed to the shuffle (Hadoop contract: it must
+    /// emit records under the keys it was given, and be associative —
+    /// combined and uncombined runs must reduce identically). Disabled
+    /// globally by `HPCW_COMBINER=0`.
+    pub combiner: Option<Arc<dyn Reducer>>,
     pub partitioner: Arc<dyn Partitioner>,
+    /// Cap on records each reduce task serializes (ORDER BY ... LIMIT
+    /// with a single reduce). Counted per attempt, so retries and
+    /// speculative twins stay correct.
+    pub reduce_limit: Option<u64>,
     /// Fault-injection schedule (tests).
     pub failures: FailurePlan,
     /// Optional whole-block map path (Terasort kernel acceleration).
@@ -179,8 +201,11 @@ impl JobSpec {
             split_bytes: 64 * 1024 * 1024,
             synthetic_rows: None,
             mapper: Arc::new(IdentityMapper),
+            tagged_inputs: Vec::new(),
             reducer: Arc::new(IdentityReducer),
+            combiner: None,
             partitioner: Arc::new(HashPartitioner),
+            reduce_limit: None,
             failures: FailurePlan::none(),
             block_processor: None,
         }

@@ -261,6 +261,20 @@ impl<'a> MrEngine<'a> {
                 })?;
                 row_range_splits(rows, maps)
             }
+            fmt if !spec.tagged_inputs.is_empty() => {
+                // Multi-input job (repartition join): plan each tagged
+                // directory and stamp its splits with the source index so
+                // the map task runs the matching mapper.
+                let mut all = Vec::new();
+                for (i, ti) in spec.tagged_inputs.iter().enumerate() {
+                    let mut part = plan_splits(&*self.dfs, &ti.dir, fmt, spec.split_bytes)?;
+                    for s in &mut part {
+                        s.source = i as u32;
+                    }
+                    all.extend(part);
+                }
+                all
+            }
             fmt => plan_splits(&*self.dfs, &spec.input_dir, fmt, spec.split_bytes)?,
         };
         // Locality: each split's preferred nodes come from its file's DFS
@@ -1463,7 +1477,11 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
     let mut out_records = 0u64;
     let mut out_bytes = 0u64;
     {
-        let mapper = &spec.mapper;
+        // Multi-input jobs route each split to its tagged input's mapper.
+        let mapper = match spec.tagged_inputs.get(split.source as usize) {
+            Some(ti) => &ti.mapper,
+            None => &spec.mapper,
+        };
         let partitioner = &spec.partitioner;
         let mut emit = |k: &[u8], v: &[u8]| {
             let p = if n_emit_buckets == 1 {
@@ -1547,9 +1565,22 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
     // reduces see map output per cell (`try_fetch`), so the commit must be
     // all-or-nothing per attempt — a sort panic on a later bucket must not
     // leave this attempt's earlier segments visible.
+    //
+    // With a combiner (aggregating query plans), each sorted run is folded
+    // per key before the segment commits: the shuffle then carries one
+    // partial per (map, key) instead of one record per input row.
+    let combiner = spec.combiner.as_deref().filter(|_| combiner_enabled());
+    let mut combine_in = 0u64;
+    let mut combine_out = 0u64;
     let mut segments = Vec::with_capacity(n_buckets as usize);
     for (p, mut records) in buckets.into_iter().enumerate() {
         records.sort_by_key();
+        if let Some(c) = combiner {
+            let combined = crate::mapreduce::recordbuf::combine_sorted(&records, c);
+            combine_in += records.len() as u64;
+            combine_out += combined.len() as u64;
+            records = combined;
+        }
         segments.push(Segment {
             map: idx,
             partition: p as u32,
@@ -1560,11 +1591,25 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
     for seg in segments {
         shuffle.put(seg);
     }
-    counters.add_many(&[
+    let mut flush = vec![
         (counters::MAP_SPILLS, n_buckets as u64),
         (counters::SHUFFLE_SEGMENTS, n_buckets as u64),
-    ]);
+    ];
+    if combiner.is_some() {
+        flush.push((counters::COMBINE_INPUT_RECORDS, combine_in));
+        flush.push((counters::COMBINE_OUTPUT_RECORDS, combine_out));
+    }
+    counters.add_many(&flush);
     Ok(())
+}
+
+/// The `HPCW_COMBINER` knob: on by default, `0`/`off`/`false` disables
+/// map-side combining globally (bench baselines, parity debugging).
+fn combiner_enabled() -> bool {
+    !matches!(
+        std::env::var("HPCW_COMBINER").as_deref(),
+        Ok("0") | Ok("off") | Ok("false")
+    )
 }
 
 /// Arguments of one reduce task attempt. `cancel: Some(_)` puts the fetch
@@ -1644,16 +1689,18 @@ fn run_reduce_task(args: ReduceTaskArgs) -> Result<()> {
     ]);
 
     // Group by key, reduce, serialize. Keys and values are borrowed from
-    // the shared segments for the whole pass.
+    // the shared segments for the whole pass. `reduce_limit` (ORDER BY
+    // ... LIMIT) caps the records serialized per attempt — counted
+    // task-locally, so retries and speculative twins each start from
+    // zero and stay correct.
     let mut out = Vec::new();
     let mut out_records = 0u64;
     {
-        let mut emit = |k: &[u8], v: &[u8]| {
-            out_records += 1;
-            spec.output_format.write_record(&mut out, k, v);
-        };
         let mut i = 0usize;
         while i < order.len() {
+            if spec.reduce_limit.is_some_and(|l| out_records >= l) {
+                break;
+            }
             let (s0, r0) = order[i];
             let key = segments[s0 as usize].records.key(r0 as usize);
             let mut j = i + 1;
@@ -1667,6 +1714,13 @@ fn run_reduce_task(args: ReduceTaskArgs) -> Result<()> {
             let mut values = order[i..j]
                 .iter()
                 .map(|&(s, rec)| segments[s as usize].records.value(rec as usize));
+            let mut emit = |k: &[u8], v: &[u8]| {
+                if spec.reduce_limit.is_some_and(|l| out_records >= l) {
+                    return;
+                }
+                out_records += 1;
+                spec.output_format.write_record(&mut out, k, v);
+            };
             spec.reducer.reduce(key, &mut values, &mut emit);
             i = j;
         }
@@ -2120,6 +2174,172 @@ mod tests {
         assert!(local >= 1, "local={local} rack={rack} other={other}");
         assert_eq!(other, 0, "local={local} rack={rack} other={other}");
         dc.rm.check_invariants().unwrap();
+    }
+
+    /// Map-side combining: a sum job run with and without the combiner
+    /// produces byte-identical output while the combined run ships
+    /// strictly fewer shuffle bytes.
+    #[test]
+    fn combiner_cuts_shuffle_bytes_with_identical_output() {
+        struct SumReducer;
+        impl Reducer for SumReducer {
+            fn reduce(
+                &self,
+                key: &[u8],
+                values: &mut dyn Iterator<Item = &[u8]>,
+                emit: &mut dyn FnMut(&[u8], &[u8]),
+            ) {
+                let total: u64 = values
+                    .filter_map(|v| std::str::from_utf8(v).ok())
+                    .filter_map(|s| s.parse::<u64>().ok())
+                    .sum();
+                emit(key, total.to_string().as_bytes());
+            }
+        }
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/cb-in").unwrap();
+        let mut text = Vec::new();
+        for i in 0..200 {
+            text.extend_from_slice(format!("word{} again again\n", i % 5).as_bytes());
+        }
+        fs.create("/lustre/scratch/cb-in/f", &text).unwrap();
+        let read_all = |dir: &str| {
+            let mut names: Vec<String> = fs
+                .list(dir)
+                .into_iter()
+                .filter(|p| p.contains("/part-"))
+                .collect();
+            names.sort();
+            let mut all = Vec::new();
+            for n in names {
+                all.extend(fs.read(&n).unwrap());
+            }
+            all
+        };
+        let mut outcomes = Vec::new();
+        for (label, with_combiner) in [("off", false), ("on", true)] {
+            let mut spec = wordcount_spec(
+                "/lustre/scratch/cb-in",
+                &format!("/lustre/scratch/cb-out-{label}"),
+            );
+            spec.split_bytes = 256; // several maps -> several spill runs
+            spec.reducer = Arc::new(SumReducer);
+            if with_combiner {
+                spec.combiner = Some(Arc::new(SumReducer));
+            }
+            let mut engine = MrEngine::new(
+                &mut dc,
+                fs.clone(),
+                &pool,
+                cfg.yarn.map_memory_mb,
+                cfg.yarn.reduce_memory_mb,
+            );
+            let outcome = engine.run(Arc::new(spec), "u", Micros::ZERO).unwrap();
+            outcomes.push(outcome);
+        }
+        let (off, on) = (&outcomes[0], &outcomes[1]);
+        assert_eq!(
+            read_all("/lustre/scratch/cb-out-off"),
+            read_all("/lustre/scratch/cb-out-on"),
+            "combiner must not change the result"
+        );
+        let sb_off = off.counters.get(counters::SHUFFLE_BYTES);
+        let sb_on = on.counters.get(counters::SHUFFLE_BYTES);
+        assert!(
+            sb_on < sb_off,
+            "combiner must cut shuffle bytes: on={sb_on} off={sb_off}"
+        );
+        assert!(on.counters.get(counters::COMBINE_INPUT_RECORDS) > 0);
+        assert!(
+            on.counters.get(counters::COMBINE_OUTPUT_RECORDS)
+                < on.counters.get(counters::COMBINE_INPUT_RECORDS)
+        );
+        assert_eq!(off.counters.get(counters::COMBINE_INPUT_RECORDS), 0);
+    }
+
+    /// Multi-input jobs: every tagged input's splits run that input's
+    /// mapper, and the reduce sees both streams.
+    #[test]
+    fn tagged_inputs_route_to_their_mappers() {
+        struct TagMapper(u8);
+        impl Mapper for TagMapper {
+            fn map(&self, _k: &[u8], v: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+                for w in v.split(|&b| b == b' ').filter(|w| !w.is_empty()) {
+                    emit(w, &[self.0]);
+                }
+            }
+        }
+        struct ConcatReducer;
+        impl Reducer for ConcatReducer {
+            fn reduce(
+                &self,
+                key: &[u8],
+                values: &mut dyn Iterator<Item = &[u8]>,
+                emit: &mut dyn FnMut(&[u8], &[u8]),
+            ) {
+                let mut tags: Vec<u8> = values.map(|v| v[0]).collect();
+                tags.sort_unstable();
+                emit(key, &tags);
+            }
+        }
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/ti-a").unwrap();
+        fs.mkdirs("/lustre/scratch/ti-b").unwrap();
+        fs.create("/lustre/scratch/ti-a/f", b"both left").unwrap();
+        fs.create("/lustre/scratch/ti-b/f", b"both right").unwrap();
+        let mut spec = JobSpec::identity("tagged", "", "/lustre/scratch/ti-out", 2);
+        spec.input_format = InputFormat::Lines;
+        spec.output_format = OutputFormat::TextKv;
+        spec.split_bytes = 1024;
+        spec.tagged_inputs = vec![
+            crate::mapreduce::TaggedInput {
+                dir: "/lustre/scratch/ti-a".into(),
+                mapper: Arc::new(TagMapper(b'A')),
+            },
+            crate::mapreduce::TaggedInput {
+                dir: "/lustre/scratch/ti-b".into(),
+                mapper: Arc::new(TagMapper(b'B')),
+            },
+        ];
+        spec.reducer = Arc::new(ConcatReducer);
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        );
+        let outcome = engine.run(Arc::new(spec), "u", Micros::ZERO).unwrap();
+        let mut text = String::new();
+        for f in &outcome.output_files {
+            text.push_str(&String::from_utf8(fs.read(f).unwrap()).unwrap());
+        }
+        let mut rows: Vec<&str> = text.lines().collect();
+        rows.sort_unstable();
+        assert_eq!(rows, vec!["both\tAB", "left\tA", "right\tB"]);
+    }
+
+    /// `reduce_limit` caps serialized output per reduce attempt.
+    #[test]
+    fn reduce_limit_truncates_output() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/rl-in").unwrap();
+        fs.create("/lustre/scratch/rl-in/f", b"a b c d e f g h").unwrap();
+        let mut spec = wordcount_spec("/lustre/scratch/rl-in", "/lustre/scratch/rl-out");
+        spec.split_bytes = 1024;
+        spec.n_reduces = 1;
+        spec.reduce_limit = Some(3);
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        );
+        let outcome = engine.run(Arc::new(spec), "u", Micros::ZERO).unwrap();
+        assert_eq!(outcome.counters.get(counters::REDUCE_OUTPUT_RECORDS), 3);
+        let text = String::from_utf8(fs.read(&outcome.output_files[0]).unwrap()).unwrap();
+        assert_eq!(text.lines().count(), 3);
     }
 
     /// A failing job with slow-start reduces in flight must cancel them

@@ -228,6 +228,30 @@ pub(crate) fn resolve_prefix_ties<'a>(
     }
 }
 
+/// Run a combiner over the equal-key runs of a **sorted** buffer,
+/// returning the combined records (spill-time combining: the map task
+/// calls this per partition before committing the segment). The combiner
+/// must emit records under the key of the run it is reducing, so the
+/// result stays sorted; `ShuffleStore::put`'s debug assertion enforces
+/// it.
+pub fn combine_sorted(records: &RecordBuf, combiner: &dyn crate::mapreduce::Reducer) -> RecordBuf {
+    debug_assert!(records.is_sorted_by_key());
+    let n = records.len();
+    let mut out = RecordBuf::with_capacity(n.min(1024), 0);
+    let mut i = 0;
+    while i < n {
+        let key = records.key(i);
+        let mut j = i + 1;
+        while j < n && records.key(j) == key {
+            j += 1;
+        }
+        let mut values = (i..j).map(|r| records.value(r));
+        combiner.reduce(key, &mut values, &mut |k, v| out.push(k, v));
+        i = j;
+    }
+    out
+}
+
 /// Logical equality: same records in the same order, regardless of arena
 /// layout (a sorted buffer equals a freshly-pushed sorted copy).
 impl PartialEq for RecordBuf {
@@ -343,6 +367,41 @@ mod tests {
         b.push(b"a", b"1");
         b.push(b"b", b"2"); // contiguous sorted layout
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn combine_sorted_folds_equal_key_runs() {
+        struct CountCombiner;
+        impl crate::mapreduce::Reducer for CountCombiner {
+            fn reduce(
+                &self,
+                key: &[u8],
+                values: &mut dyn Iterator<Item = &[u8]>,
+                emit: &mut dyn FnMut(&[u8], &[u8]),
+            ) {
+                let n = values.count();
+                emit(key, n.to_string().as_bytes());
+            }
+        }
+        let mut rb = RecordBuf::new();
+        rb.push(b"a", b"x");
+        rb.push(b"a", b"y");
+        rb.push(b"b", b"z");
+        rb.push(b"c", b"w");
+        rb.push(b"c", b"v");
+        assert!(rb.is_sorted_by_key());
+        let out = combine_sorted(&rb, &CountCombiner);
+        assert_eq!(
+            out.to_pairs(),
+            vec![
+                (b"a".to_vec(), b"2".to_vec()),
+                (b"b".to_vec(), b"1".to_vec()),
+                (b"c".to_vec(), b"2".to_vec()),
+            ]
+        );
+        assert!(out.is_sorted_by_key());
+        // Empty input combines to empty output.
+        assert_eq!(combine_sorted(&RecordBuf::new(), &CountCombiner).len(), 0);
     }
 
     #[test]

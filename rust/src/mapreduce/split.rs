@@ -35,6 +35,9 @@ pub struct InputSplit {
     /// order (derived from DFS shard residency by [`assign_locality`];
     /// empty = no preference, e.g. synthetic RowRange splits).
     pub preferred: Vec<NodeId>,
+    /// Which `JobSpec::tagged_inputs` entry produced this split (0 for
+    /// single-input jobs): the map task runs that entry's mapper.
+    pub source: u32,
 }
 
 /// Plan splits over all files under `input_dir`.
@@ -90,6 +93,7 @@ pub fn plan_splits(
                 offset: off,
                 len,
                 preferred: Vec::new(),
+                source: 0,
             });
             off += len;
         }
@@ -111,6 +115,7 @@ pub fn row_range_splits(total_rows: u64, n_maps: u64) -> Vec<InputSplit> {
             offset: start,
             len: count,
             preferred: Vec::new(),
+            source: 0,
         });
         start += count;
     }

@@ -56,6 +56,16 @@ impl RangePartitioner {
         self.splitters.partition_point(|&s| s <= prefix) as u32
     }
 
+    /// Route an arbitrary byte key by its 8-byte big-endian prefix — the
+    /// entry point the query engine's ORDER BY stage shares with
+    /// Terasort (samples and keys are both reduced to prefixes, so ties
+    /// below prefix resolution land in the same partition and the
+    /// in-partition sort finishes the order).
+    #[inline]
+    pub fn route_key(&self, key: &[u8]) -> u32 {
+        self.route(key_prefix_u64(key))
+    }
+
     /// Sequential router for a key stream already sorted by prefix:
     /// amortizes the per-key binary search to O(n + splitters) for a whole
     /// sorted run (the block-processor hot path).
@@ -88,7 +98,7 @@ impl MonotoneRouter<'_> {
 
 impl Partitioner for RangePartitioner {
     fn partition(&self, key: &[u8], n_reduces: u32) -> u32 {
-        self.route(key_prefix_u64(key)).min(n_reduces.saturating_sub(1))
+        self.route_key(key).min(n_reduces.saturating_sub(1))
     }
 }
 

@@ -1,0 +1,343 @@
+//! Multi-stage query engine integration (PR 5 acceptance):
+//!
+//! * a Hive query with JOIN + ORDER BY runs end to end over the API as a
+//!   workflow of ≥ 2 chained MR jobs, and its totally-ordered output is
+//!   validated **row for row** against a single-threaded reference
+//!   evaluation;
+//! * the map-side combiner leaves aggregation output byte-identical
+//!   while strictly reducing the `SHUFFLE_BYTES` counter (also asserted
+//!   as a property over random integer tables);
+//! * Pig's JOIN / ORDER / LIMIT pipeline runs as chained jobs on one
+//!   dynamic cluster via the `query` payload, with per-stage counters.
+
+use hpcw::api::{ApiClient, ApiServer, AppPayload, Stack};
+use hpcw::api::wire::StepState;
+use hpcw::cluster::NodeId;
+use hpcw::config::StackConfig;
+use hpcw::frameworks::plan::StageKind;
+use hpcw::lustre::{Dfs, LustreFs};
+use hpcw::mapreduce::MrEngine;
+use hpcw::metrics::Metrics;
+use hpcw::testkit::props;
+use hpcw::util::ids::IdGen;
+use hpcw::util::pool::Pool;
+use hpcw::util::time::Micros;
+use hpcw::wrapper::DynamicCluster;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Concatenate a query's output parts in partition-file order (which is
+/// global order for sort stages).
+fn read_parts(dfs: &LustreFs, dir: &str) -> String {
+    let mut files: Vec<String> = dfs
+        .list(dir)
+        .into_iter()
+        .filter(|p| p.contains("/part-"))
+        .collect();
+    files.sort();
+    let mut text = String::new();
+    for f in &files {
+        text.push_str(&String::from_utf8(dfs.read(f).unwrap()).unwrap());
+    }
+    text
+}
+
+/// The acceptance test: JOIN + ORDER BY over the v1 wire, executed as a
+/// workflow DAG — one `query_stage` LSF job per MR stage — with the
+/// final output validated row for row against a reference evaluation.
+#[test]
+fn hive_join_order_by_runs_as_chained_workflow_jobs() {
+    let stack = Stack::new(StackConfig::tiny()).unwrap();
+    let dfs = stack.dfs.clone();
+
+    // Tables: sales(region, product, amount) and regions(region, country).
+    // Amounts are unique so the total order is deterministic and the
+    // row-for-row comparison is exact. 'norge' has no region row (inner
+    // join drops it); amounts <= 100 are filtered by WHERE.
+    let regions: &[(&str, &str)] =
+        &[("wales", "UK"), ("england", "UK"), ("bayern", "DE"), ("ireland", "IE")];
+    let mut sales: Vec<(String, String, u64)> = Vec::new();
+    for i in 0..60u64 {
+        let region = ["wales", "england", "bayern", "norge"][(i % 4) as usize];
+        sales.push((region.to_string(), format!("p{i:02}"), 40 + i * 7));
+    }
+    dfs.mkdirs("/lustre/scratch/qe-sales").unwrap();
+    dfs.mkdirs("/lustre/scratch/qe-regions").unwrap();
+    // Two part files per table: the join must merge across files.
+    for (part, chunk) in sales.chunks(30).enumerate() {
+        let text: String = chunk
+            .iter()
+            .map(|(r, p, a)| format!("{r},{p},{a}\n"))
+            .collect();
+        dfs.create(
+            &format!("/lustre/scratch/qe-sales/part-{part}"),
+            text.as_bytes(),
+        )
+        .unwrap();
+    }
+    let rtext: String = regions.iter().map(|(r, c)| format!("{r},{c}\n")).collect();
+    dfs.create("/lustre/scratch/qe-regions/part-0", rtext.as_bytes())
+        .unwrap();
+
+    // Reference evaluation (single-threaded): inner join, filter, total
+    // order by amount descending.
+    let mut expected: Vec<(u64, String)> = Vec::new();
+    for (r, p, a) in &sales {
+        if *a <= 100 {
+            continue;
+        }
+        for (rr, c) in regions {
+            if rr == r {
+                expected.push((*a, format!("{r}\t{p}\t{a}\t{rr}\t{c}")));
+            }
+        }
+    }
+    expected.sort_by(|x, y| y.0.cmp(&x.0));
+    let expected: Vec<String> = expected.into_iter().map(|(_, row)| row).collect();
+    assert!(expected.len() > 20, "test data must survive the filter");
+
+    let server = ApiServer::start(stack).unwrap();
+    let client = ApiClient::new(&server.addr);
+    let sql = "SELECT * FROM '/lustre/scratch/qe-sales' USING ',' \
+               SCHEMA (region, product, amount) \
+               JOIN '/lustre/scratch/qe-regions' USING ',' \
+               SCHEMA (region, country) ON region = region \
+               WHERE amount > 100 \
+               ORDER BY amount DESC \
+               INTO '/lustre/scratch/qe-top'";
+    let wf = client
+        .submit_query("hive", sql, 3, 6, "sid", true)
+        .unwrap();
+    let doc = client.wait_workflow(wf, Duration::from_secs(60)).unwrap();
+    assert!(doc.complete, "doc={doc:?}");
+    assert!(
+        doc.steps.len() >= 2,
+        "JOIN + ORDER BY must compile to >= 2 chained MR jobs, got {}",
+        doc.steps.len()
+    );
+    for s in &doc.steps {
+        assert_eq!(s.state, StepState::Done);
+        assert!(s.job.is_some(), "every stage ran as its own LSF job");
+    }
+    // Steps chained: each later step consumed its predecessor's output.
+    assert_eq!(
+        doc.steps.last().unwrap().output_dir.as_deref(),
+        Some("/lustre/scratch/qe-top")
+    );
+
+    // Row-for-row validation against the reference: concatenating the
+    // sort stage's parts in partition order IS the total order.
+    let got: Vec<String> = read_parts(&dfs, "/lustre/scratch/qe-top")
+        .lines()
+        .map(|l| l.to_string())
+        .collect();
+    assert_eq!(got, expected, "distributed result must match the reference");
+}
+
+fn engine_fixture() -> (StackConfig, Arc<LustreFs>, DynamicCluster, Pool) {
+    let cfg = StackConfig::tiny();
+    let fs = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
+    let nodes: Vec<NodeId> = (0..6).map(NodeId).collect();
+    let dc = DynamicCluster::build(
+        &cfg,
+        &nodes,
+        &*fs,
+        Arc::new(IdGen::default()),
+        Arc::new(Metrics::new()),
+        "query-engine-test",
+        Micros::ZERO,
+    )
+    .unwrap();
+    (cfg, fs, dc, Pool::new(4))
+}
+
+/// Combiner acceptance: the aggregation stage run with and without its
+/// combiner produces byte-identical output, and the combiner run ships
+/// strictly fewer `SHUFFLE_BYTES`.
+#[test]
+fn combiner_is_invisible_in_output_but_cuts_shuffle_bytes() {
+    let (cfg, fs, mut dc, pool) = engine_fixture();
+    fs.mkdirs("/lustre/scratch/qc-in").unwrap();
+    let mut text = String::new();
+    for i in 0..400u64 {
+        let region = ["wales", "england", "bayern", "alba", "eire"][(i % 5) as usize];
+        text.push_str(&format!("{region},p{},{}\n", i % 7, 10 + (i % 97)));
+    }
+    fs.create("/lustre/scratch/qc-in/part-0", text.as_bytes()).unwrap();
+
+    let run = |dc: &mut DynamicCluster, combine: bool, out: &str| {
+        let plan = hpcw::api::parse_query_text(
+            "hive",
+            &format!(
+                "SELECT region, SUM(amount), COUNT(amount), MIN(amount), MAX(amount) \
+                 FROM '/lustre/scratch/qc-in' USING ',' \
+                 SCHEMA (region, product, amount) GROUP BY region INTO '{out}'"
+            ),
+            3,
+        )
+        .unwrap();
+        let stages = plan.compile_stages().unwrap();
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].kind, StageKind::Agg);
+        let mut spec = stages[0].compile(&*fs).unwrap();
+        // Split small so several maps spill several runs each.
+        spec.split_bytes = 1024;
+        if !combine {
+            spec.combiner = None;
+        }
+        let mut engine = MrEngine::new(
+            dc,
+            fs.clone() as Arc<dyn Dfs>,
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        );
+        engine.run(Arc::new(spec), "u", Micros::ZERO).unwrap()
+    };
+
+    let off = run(&mut dc, false, "/lustre/scratch/qc-off");
+    let on = run(&mut dc, true, "/lustre/scratch/qc-on");
+
+    // Byte-identical result (integer inputs: partial merging is exact).
+    assert_eq!(
+        read_parts(&fs, "/lustre/scratch/qc-off"),
+        read_parts(&fs, "/lustre/scratch/qc-on"),
+        "combiner must not change the query result"
+    );
+    let sb_off = off.counters.get("SHUFFLE_BYTES");
+    let sb_on = on.counters.get("SHUFFLE_BYTES");
+    assert!(
+        sb_on < sb_off,
+        "combiner must strictly cut shuffle bytes: on={sb_on} off={sb_off}"
+    );
+    assert!(on.counters.get("COMBINE_INPUT_RECORDS") > on.counters.get("COMBINE_OUTPUT_RECORDS"));
+    assert_eq!(off.counters.get("COMBINE_INPUT_RECORDS"), 0);
+}
+
+/// Property: for random integer tables, combiner-on and combiner-off
+/// aggregation runs are byte-identical and the combiner never increases
+/// shuffle bytes (strict decrease whenever keys repeat within a map).
+#[test]
+fn prop_combiner_parity_on_random_tables() {
+    props(8, |g| {
+        // Fresh filesystem + cluster per case: seeds replay cleanly.
+        let (cfg, fs, mut dc, pool) = engine_fixture();
+        let in_dir = "/lustre/scratch/qp-in".to_string();
+        fs.mkdirs(&in_dir).unwrap();
+        let n_rows = g.usize(40..200);
+        let n_keys = g.usize(1..6);
+        let mut text = String::new();
+        for _ in 0..n_rows {
+            // Integer amounts only: f64 partial sums stay exact, so the
+            // byte-identity assertion is sound.
+            text.push_str(&format!(
+                "k{},{}\n",
+                g.u32(0..n_keys as u32),
+                g.u64(0..10_000)
+            ));
+        }
+        fs.create(&format!("{in_dir}/part-0"), text.as_bytes()).unwrap();
+        let mut outcomes = Vec::new();
+        for combine in [false, true] {
+            let out = format!("/lustre/scratch/qp-out-{combine}");
+            let plan = hpcw::api::parse_query_text(
+                "hive",
+                &format!(
+                    "SELECT key, SUM(amount), COUNT(amount) FROM '{in_dir}' USING ',' \
+                     SCHEMA (key, amount) GROUP BY key INTO '{out}'"
+                ),
+                2,
+            )
+            .unwrap();
+            let mut spec = plan.compile_stages().unwrap()[0].compile(&*fs).unwrap();
+            spec.split_bytes = 512;
+            if !combine {
+                spec.combiner = None;
+            }
+            let mut engine = MrEngine::new(
+                &mut dc,
+                fs.clone() as Arc<dyn Dfs>,
+                &pool,
+                cfg.yarn.map_memory_mb,
+                cfg.yarn.reduce_memory_mb,
+            );
+            let outcome = engine.run(Arc::new(spec), "u", Micros::ZERO).unwrap();
+            outcomes.push((out, outcome));
+        }
+        let (off_dir, off) = &outcomes[0];
+        let (on_dir, on) = &outcomes[1];
+        assert_eq!(read_parts(&fs, off_dir), read_parts(&fs, on_dir));
+        let (sb_off, sb_on) = (off.counters.get("SHUFFLE_BYTES"), on.counters.get("SHUFFLE_BYTES"));
+        assert!(sb_on <= sb_off, "combiner must never grow the shuffle");
+        if on.counters.get("COMBINE_OUTPUT_RECORDS") < on.counters.get("COMBINE_INPUT_RECORDS") {
+            assert!(sb_on < sb_off, "folded records must shrink shuffle bytes");
+        }
+    });
+}
+
+/// Pig JOIN / ORDER / LIMIT through the `query` payload: the stage chain
+/// runs on ONE dynamic cluster (one LSF job), intermediates are cleaned
+/// up, and the result carries merged plus per-stage (`s{i}.`) counters.
+#[test]
+fn pig_join_order_limit_runs_on_one_cluster() {
+    let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/pg-sales").unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/pg-regions").unwrap();
+    let mut text = String::new();
+    for i in 0..30u64 {
+        let region = ["wales", "england"][(i % 2) as usize];
+        text.push_str(&format!("{region},p{i},{}\n", 50 + i * 11));
+    }
+    stack
+        .dfs
+        .create("/lustre/scratch/pg-sales/part-0", text.as_bytes())
+        .unwrap();
+    stack
+        .dfs
+        .create(
+            "/lustre/scratch/pg-regions/part-0",
+            b"wales,UK\nengland,UK\n",
+        )
+        .unwrap();
+    let script = "
+        sales   = LOAD '/lustre/scratch/pg-sales' USING ',' AS (region, product, amount);
+        regions = LOAD '/lustre/scratch/pg-regions' USING ',' AS (region, country);
+        j   = JOIN sales BY region, regions BY region;
+        big = FILTER j BY amount > 100;
+        srt = ORDER big BY amount DESC;
+        top = LIMIT srt 5;
+        STORE top INTO '/lustre/scratch/pg-top';
+    ";
+    let id = stack
+        .submit(
+            4,
+            "ana",
+            AppPayload::Query {
+                engine: "pig".into(),
+                text: script.into(),
+                reduces: 2,
+            },
+        )
+        .unwrap();
+    let result = stack.run_to_completion(id, 20).unwrap().clone();
+    assert_eq!(result.kind, "query");
+    assert_eq!(result.records, 5, "LIMIT 5");
+    let rows: Vec<String> = read_parts(&stack.dfs, "/lustre/scratch/pg-top")
+        .lines()
+        .map(str::to_string)
+        .collect();
+    assert_eq!(rows.len(), 5);
+    // Descending amounts, and the top row is the global maximum (369).
+    let amounts: Vec<u64> = rows
+        .iter()
+        .map(|r| r.split('\t').nth(2).unwrap().parse().unwrap())
+        .collect();
+    assert!(amounts.windows(2).all(|w| w[0] >= w[1]), "{amounts:?}");
+    assert_eq!(amounts[0], 50 + 29 * 11);
+    // Per-stage counters present: s0 = join, s1 = sort.
+    assert!(result.counters.iter().any(|(k, _)| k == "s0.SHUFFLE_BYTES"));
+    assert!(result.counters.iter().any(|(k, _)| k == "s1.SHUFFLE_BYTES"));
+    // Intermediates were deleted after success.
+    assert!(!stack.dfs.exists("/lustre/scratch/pg-top.stage0"));
+    assert!(stack.dfs.exists("/lustre/scratch/pg-top/_SUCCESS"));
+}
