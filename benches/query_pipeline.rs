@@ -1,16 +1,28 @@
-//! Query-engine bench (PR 5): JOIN + ORDER BY over generated tables,
-//! and the combiner's shuffle-byte cut on an aggregating plan. Writes
-//! **`BENCH_PR5.json`** with per-stage and shuffle-byte counters:
+//! Query-engine bench (PR 5 + PR 6): JOIN + ORDER BY over generated
+//! tables, the combiner's shuffle-byte cut, and the PR 6 optimizer wins.
+//! Writes **`BENCH_PR5.json`** and **`BENCH_PR6.json`**:
 //!
-//! * `query_join_orderby` — a two-table Hive query (repartition join →
-//!   total-order sort) run end to end through the Stack as chained MR
-//!   jobs on one dynamic cluster, with per-stage `SHUFFLE_BYTES` and
-//!   wall time;
-//! * `query_combiner` — the same aggregation stage run combiner-off vs
-//!   combiner-on; asserts the outputs are byte-identical and reports
-//!   `shuffle_ratio = bytes_off / bytes_on` (the CI baseline gate reads
-//!   this — see `benches/baselines/`).
+//! * `query_join_orderby` (PR5) — a two-table Hive query (repartition
+//!   join → total-order sort) run end to end through the Stack as
+//!   chained MR jobs on one dynamic cluster, with per-stage
+//!   `SHUFFLE_BYTES` and wall time; pinned to the repartition oracle
+//!   (`HPCW_BROADCAST_MAX_BYTES=0`) so the PR 5 baseline stays
+//!   comparable across releases;
+//! * `query_combiner` (PR5) — the same aggregation stage run
+//!   combiner-off vs combiner-on; asserts the outputs are
+//!   byte-identical and reports `shuffle_ratio = bytes_off / bytes_on`;
+//! * `query_join_strategy` (PR6) — the same join+aggregate pipeline
+//!   under the repartition oracle vs the cost-based broadcast-hash
+//!   join; asserts byte-identical output and reports
+//!   `shuffle_reduction_ratio` (total repartition shuffle bytes over
+//!   total broadcast shuffle bytes — the broadcast join stage itself
+//!   shuffles nothing);
+//! * `query_fusion` (PR6) — a filter→project→join Pig pipeline with
+//!   map-stage fusion disabled (`HPCW_FUSION=0`) vs enabled; asserts
+//!   byte-identical output and reports `stages_saved`.
 //!
+//! The CI baseline gate reads `shuffle_ratio`, `shuffle_reduction_ratio`
+//! and `stages_saved` — see `benches/baselines/`.
 //! `HPCW_BENCH_SMOKE=1` shrinks the tables to CI size.
 
 use hpcw::api::{parse_query_text, AppPayload, Stack};
@@ -60,8 +72,24 @@ fn stage_counter(result: &hpcw::api::AppResult, key: &str) -> u64 {
         .unwrap_or(0)
 }
 
+/// Count the distinct `s{i}.` per-stage counter prefixes — the number
+/// of MR jobs the query actually executed.
+fn stages_run(result: &hpcw::api::AppResult) -> u64 {
+    (0..16u64)
+        .take_while(|i| {
+            let prefix = format!("s{i}.");
+            result.counters.iter().any(|(k, _)| k.starts_with(&prefix))
+        })
+        .count() as u64
+}
+
 /// JOIN + ORDER BY through the Stack: chained MR jobs on one cluster.
+/// Pinned to the repartition join (`HPCW_BROADCAST_MAX_BYTES=0`): this
+/// is the PR 5 baseline scenario, and its `join_shuffle_bytes > 0`
+/// invariant only holds for the shuffle-based join. The broadcast
+/// strategy is measured separately by `join_strategy_bench`.
 fn join_orderby_bench(smoke: bool) {
+    std::env::set_var("HPCW_BROADCAST_MAX_BYTES", "0");
     let n_rows: u64 = if smoke { 5_000 } else { 200_000 };
     let mut stack = Stack::new(StackConfig::tiny()).unwrap();
     stack.dfs.mkdirs("/lustre/scratch/qb-sales").unwrap();
@@ -118,6 +146,211 @@ fn join_orderby_bench(smoke: bool) {
         "join+orderby: {n_rows} rows -> {} rows in {wall_s:.3}s \
          (shuffle join={join_shuffle}B sort={sort_shuffle}B)",
         result.records
+    );
+    std::env::remove_var("HPCW_BROADCAST_MAX_BYTES");
+}
+
+/// PR 6: repartition vs cost-based broadcast join on a join+aggregate
+/// pipeline. The broadcast join runs map-only — the join stage ships
+/// the small build side once (`BROADCAST_BYTES`) instead of shuffling
+/// both inputs — so total shuffle bytes collapse to the (combined)
+/// aggregation stage's.
+fn join_strategy_bench(smoke: bool) {
+    let n_rows: u64 = if smoke { 5_000 } else { 200_000 };
+    let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/qs-sales").unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/qs-regions").unwrap();
+    stack
+        .dfs
+        .create("/lustre/scratch/qs-sales/part-0", gen_sales(n_rows).as_bytes())
+        .unwrap();
+    let rtext: String = REGIONS.iter().map(|(r, c)| format!("{r},{c}\n")).collect();
+    stack
+        .dfs
+        .create("/lustre/scratch/qs-regions/part-0", rtext.as_bytes())
+        .unwrap();
+    let mut walls = [0.0f64; 2];
+    let mut totals = [0u64; 2];
+    let mut join_shuffles = [0u64; 2];
+    let mut broadcast_bytes = 0u64;
+    let mut outputs: Vec<String> = Vec::new();
+    for (i, broadcast) in [false, true].into_iter().enumerate() {
+        if broadcast {
+            std::env::remove_var("HPCW_BROADCAST_MAX_BYTES");
+        } else {
+            std::env::set_var("HPCW_BROADCAST_MAX_BYTES", "0");
+        }
+        let out = format!("/lustre/scratch/qs-out-{broadcast}");
+        let sql = format!(
+            "SELECT country, SUM(amount) FROM '/lustre/scratch/qs-sales' USING ',' \
+             SCHEMA (region, product, amount) \
+             JOIN '/lustre/scratch/qs-regions' USING ',' \
+             SCHEMA (region, country) ON region = region \
+             WHERE amount > 50000 \
+             GROUP BY country \
+             INTO '{out}'"
+        );
+        let t0 = std::time::Instant::now();
+        let id = stack
+            .submit(
+                6,
+                "bench",
+                AppPayload::Query {
+                    engine: "hive".into(),
+                    text: sql,
+                    reduces: 4,
+                },
+            )
+            .unwrap();
+        let result = stack.run_to_completion(id, 50).unwrap().clone();
+        walls[i] = t0.elapsed().as_secs_f64();
+        join_shuffles[i] = stage_counter(&result, "s0.SHUFFLE_BYTES");
+        totals[i] =
+            stage_counter(&result, "s0.SHUFFLE_BYTES") + stage_counter(&result, "s1.SHUFFLE_BYTES");
+        if broadcast {
+            broadcast_bytes = stage_counter(&result, "s0.BROADCAST_BYTES");
+        }
+        let mut files: Vec<String> = stack
+            .dfs
+            .list(&out)
+            .into_iter()
+            .filter(|p| p.contains("/part-"))
+            .collect();
+        files.sort();
+        let mut text = String::new();
+        for f in &files {
+            text.push_str(&String::from_utf8(stack.dfs.read(f).unwrap()).unwrap());
+        }
+        outputs.push(text);
+    }
+    std::env::remove_var("HPCW_BROADCAST_MAX_BYTES");
+    assert_eq!(outputs[0], outputs[1], "join strategy must not change results");
+    assert_eq!(join_shuffles[1], 0, "broadcast join must not shuffle");
+    assert!(broadcast_bytes > 0, "broadcast join must ship the build side");
+    let ratio = totals[0] as f64 / totals[1].max(1) as f64;
+    assert!(
+        ratio >= 2.0,
+        "broadcast must cut total shuffle bytes >= 2x: repart={} broadcast={}",
+        totals[0],
+        totals[1]
+    );
+    emit_json(
+        "BENCH_PR6.json",
+        "query_join_strategy",
+        &[
+            ("rows_in", n_rows as f64),
+            ("repart_shuffle_bytes", totals[0] as f64),
+            ("broadcast_shuffle_bytes", totals[1] as f64),
+            ("broadcast_bytes", broadcast_bytes as f64),
+            ("shuffle_reduction_ratio", ratio),
+            ("wall_repart_s", walls[0]),
+            ("wall_broadcast_s", walls[1]),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    );
+    println!(
+        "join strategy: shuffle {}B -> {}B ({ratio:.1}x smaller, broadcast={broadcast_bytes}B), \
+         wall {:.3}s -> {:.3}s",
+        totals[0], totals[1], walls[0], walls[1]
+    );
+}
+
+/// PR 6: map-stage fusion on a filter→project→join Pig pipeline. Naive
+/// lowering runs three MR jobs; the fused plan folds both SELECTs into
+/// the join stage and runs one.
+fn fusion_bench(smoke: bool) {
+    let n_rows: u64 = if smoke { 5_000 } else { 100_000 };
+    let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/qf-sales").unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/qf-regions").unwrap();
+    stack
+        .dfs
+        .create("/lustre/scratch/qf-sales/part-0", gen_sales(n_rows).as_bytes())
+        .unwrap();
+    let rtext: String = REGIONS.iter().map(|(r, c)| format!("{r},{c}\n")).collect();
+    stack
+        .dfs
+        .create("/lustre/scratch/qf-regions/part-0", rtext.as_bytes())
+        .unwrap();
+    let mut walls = [0.0f64; 2];
+    let mut stages = [0u64; 2];
+    let mut outputs: Vec<String> = Vec::new();
+    for (i, fused) in [false, true].into_iter().enumerate() {
+        if fused {
+            std::env::remove_var("HPCW_FUSION");
+        } else {
+            std::env::set_var("HPCW_FUSION", "0");
+        }
+        let out = format!("/lustre/scratch/qf-out-{fused}");
+        let script = format!(
+            "sales   = LOAD '/lustre/scratch/qf-sales' USING ',' AS (region, product, amount);
+             regions = LOAD '/lustre/scratch/qf-regions' USING ',' AS (region, country);
+             j   = JOIN sales BY region, regions BY region;
+             big = FILTER j BY amount > 50000;
+             prj = FOREACH big GENERATE country, amount;
+             STORE prj INTO '{out}';"
+        );
+        let t0 = std::time::Instant::now();
+        let id = stack
+            .submit(
+                6,
+                "bench",
+                AppPayload::Query {
+                    engine: "pig".into(),
+                    text: script,
+                    reduces: 4,
+                },
+            )
+            .unwrap();
+        let result = stack.run_to_completion(id, 50).unwrap().clone();
+        walls[i] = t0.elapsed().as_secs_f64();
+        stages[i] = stages_run(&result);
+        let mut files: Vec<String> = stack
+            .dfs
+            .list(&out)
+            .into_iter()
+            .filter(|p| p.contains("/part-"))
+            .collect();
+        files.sort();
+        let mut lines: Vec<String> = files
+            .iter()
+            .flat_map(|f| {
+                String::from_utf8(stack.dfs.read(f).unwrap())
+                    .unwrap()
+                    .lines()
+                    .map(str::to_string)
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        // No ORDER BY stage: compare the row multiset, not file layout.
+        lines.sort();
+        outputs.push(lines.join("\n"));
+    }
+    std::env::remove_var("HPCW_FUSION");
+    assert_eq!(outputs[0], outputs[1], "fusion must not change results");
+    let stages_saved = stages[0].saturating_sub(stages[1]);
+    assert!(
+        stages_saved >= 1,
+        "fusion must eliminate at least one MR job: naive={} fused={}",
+        stages[0],
+        stages[1]
+    );
+    emit_json(
+        "BENCH_PR6.json",
+        "query_fusion",
+        &[
+            ("rows_in", n_rows as f64),
+            ("stages_naive", stages[0] as f64),
+            ("stages_fused_run", stages[1] as f64),
+            ("stages_saved", stages_saved as f64),
+            ("wall_naive_s", walls[0]),
+            ("wall_fused_s", walls[1]),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    );
+    println!(
+        "fusion: {} stages -> {} stages, wall {:.3}s -> {:.3}s",
+        stages[0], stages[1], walls[0], walls[1]
     );
 }
 
@@ -221,5 +454,7 @@ fn main() {
     let smoke = std::env::var("HPCW_BENCH_SMOKE").is_ok();
     join_orderby_bench(smoke);
     combiner_bench(smoke);
+    join_strategy_bench(smoke);
+    fusion_bench(smoke);
     println!("query_pipeline OK");
 }

@@ -127,13 +127,26 @@ class ApiClient:
         engine: str,
         text: str,
         reduces: int,
-        nodes: int,
-        user: str,
+        nodes: int = 0,
+        user: str = "",
         workflow: bool = False,
-    ) -> int:
+        explain: bool = False,
+    ):
         """Submit a Pig/Hive query text (``POST /v1/queries``). Returns a
         job id (one cluster, chained stages) or, with ``workflow=True``,
-        a workflow id (one ``query_stage`` step per MR job)."""
+        a workflow id (one ``query_stage`` step per MR job). With
+        ``explain=True`` nothing runs: the server answers the optimizer's
+        stage DAG (per-stage join strategy, fused ops, estimated input
+        bytes) and that document is returned instead of an id —
+        ``nodes``/``user`` are not required."""
+        if explain:
+            body = {
+                "engine": engine,
+                "text": text,
+                "reduces": reduces,
+                "explain": True,
+            }
+            return self._json("POST", "/v1/queries", body)
         body = {
             "engine": engine,
             "text": text,

@@ -113,6 +113,10 @@ def _canonical_stage(doc: Dict[str, Any]) -> Dict[str, Any]:
         out["combined_fields"] = list(doc["combined_fields"])
     if doc.get("filter") is not None:
         out["filter"] = doc["filter"]
+    if doc.get("left_filter") is not None:
+        out["left_filter"] = doc["left_filter"]
+    if doc.get("right_filter") is not None:
+        out["right_filter"] = doc["right_filter"]
     if doc.get("project"):
         out["project"] = list(doc["project"])
     if doc.get("group_by") is not None:

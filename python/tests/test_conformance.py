@@ -115,6 +115,29 @@ def test_workflow_dag_and_events(server):
     assert seq_of("right", "RUNNING") < seq_of("left", "DONE")
 
 
+def test_explain_query_returns_optimizer_plan(server):
+    client = ApiClient(server)
+    sql = (
+        "SELECT region, SUM(amount) FROM '/lustre/scratch/py-sales' USING ',' "
+        "SCHEMA (region, amount) WHERE amount > 100 GROUP BY region "
+        "INTO '/lustre/scratch/py-sales-report'"
+    )
+    doc = client.submit_query("hive", sql, reduces=2, explain=True)
+    assert doc["engine"] == "hive"
+    # WHERE fuses into the aggregation's map phase: one stage, one fused.
+    assert doc["stages_fused"] >= 1
+    assert doc["naive_stages"] == len(doc["stages"]) + doc["stages_fused"]
+    for i, st in enumerate(doc["stages"]):
+        assert st["stage"] == i
+        assert st["strategy"] in ("map-only", "shuffle", "repartition") or st[
+            "strategy"
+        ].startswith("broadcast")
+        assert st["ops"], "every stage reports its fused ops"
+        # The embedded stage spec is wire-canonical byte for byte.
+        payload = {"type": "query_stage", "stage": st["spec"]}
+        assert wire.dumps(wire.canonical_payload(payload)) == wire.dumps(payload)
+
+
 def test_unknown_job_and_bad_payload_codes(server):
     client = ApiClient(server)
     with pytest.raises(ApiError) as e:

@@ -64,6 +64,25 @@ def test_unknown_stage_kind_rejected():
         )
 
 
+def test_pushed_join_filters_round_trip():
+    # The planner's predicate pushdown adds left_filter / right_filter to
+    # join stages; the shared vectors pin their wire position (after
+    # `filter`, before `project`) in both languages.
+    cases = [
+        c["doc"]["stage"]
+        for c in load_vectors()["payloads"]
+        if c["doc"]["type"] == "query_stage"
+        and c["doc"]["stage"].get("left_filter") is not None
+    ]
+    assert cases, "a pushed-filter join stage vector must exist"
+    for stage in cases:
+        canon = wire._canonical_stage(stage)
+        assert canon["left_filter"] == stage["left_filter"]
+        keys = list(canon.keys())
+        assert keys.index("left_filter") < keys.index("right_filter")
+        assert keys.index("right_filter") < keys.index("project")
+
+
 def test_workflow_vector_is_canonical():
     wf = load_vectors()["workflow"]
     assert wire.dumps(wire.canonical_workflow(wf["doc"])) == wf["canon"]

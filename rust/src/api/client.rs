@@ -186,6 +186,22 @@ impl ApiClient {
         json.req_u64(if workflow { "workflow" } else { "job" })
     }
 
+    /// EXPLAIN a Pig/Hive query (`POST /v1/queries` with
+    /// `explain: true`): returns the optimizer's stage DAG — per-stage
+    /// join strategy, fused ops, and estimated input bytes — without
+    /// running anything.
+    pub fn explain_query(&self, engine: &str, text: &str, reduces: u32) -> Result<Json> {
+        let body = Json::obj(vec![
+            ("engine", Json::str(engine)),
+            ("text", Json::str(text)),
+            ("reduces", Json::num(reduces as f64)),
+            ("explain", Json::Bool(true)),
+        ])
+        .to_string();
+        let (status, resp) = self.call("POST", "/v1/queries", Some(body.as_bytes()))?;
+        Self::check(status, &resp)
+    }
+
     /// Submit a named-step DAG workflow; returns the workflow id.
     pub fn submit_workflow(&self, spec: &WorkflowSpec) -> Result<u64> {
         spec.validate()?;

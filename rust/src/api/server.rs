@@ -566,9 +566,12 @@ fn post_workflow(state: &State, req: &Request) -> HandlerResult {
 }
 
 /// `POST /v1/queries`: submit a Pig/Hive query text. Body:
-/// `{engine, text, reduces, nodes, user[, mode]}`. `mode: "job"`
-/// (default) runs the stage chain on one dynamic cluster and answers
-/// `{job}`; `mode: "workflow"` compiles the plan to a DAG of
+/// `{engine, text, reduces, nodes, user[, mode][, explain]}`.
+/// `explain: true` compiles the plan and answers the optimizer's stage
+/// DAG (join strategy, fused ops, estimated input bytes) with 200 —
+/// nothing runs and `nodes`/`user` are not required. Otherwise
+/// `mode: "job"` (default) runs the stage chain on one dynamic cluster
+/// and answers `{job}`; `mode: "workflow"` compiles the plan to a DAG of
 /// `query_stage` steps and answers `{workflow}` — one LSF job per stage,
 /// chained through `${steps.<name>.output_dir}` references.
 fn post_query(state: &State, req: &Request) -> HandlerResult {
@@ -576,6 +579,13 @@ fn post_query(state: &State, req: &Request) -> HandlerResult {
     let engine = j.req_str("engine").map_err(|e| bad_request(&e))?.to_string();
     let text = j.req_str("text").map_err(|e| bad_request(&e))?.to_string();
     let reduces = j.req_u64("reduces").map_err(|e| bad_request(&e))? as u32;
+    if j.get("explain").and_then(Json::as_bool).unwrap_or(false) {
+        let stack = state.stack.lock().unwrap();
+        let doc = stack
+            .explain_query(&engine, &text, reduces)
+            .map_err(|e| bad_request(&e))?;
+        return Ok(Response::json(200, doc.to_string()));
+    }
     let nodes = j.req_u64("nodes").map_err(|e| bad_request(&e))? as u32;
     let user = j.req_str("user").map_err(|e| bad_request(&e))?.to_string();
     let mode = j.get("mode").and_then(Json::as_str).unwrap_or("job");

@@ -543,6 +543,50 @@ impl Stack {
         Ok((outcome, records))
     }
 
+    /// Compile a query and report the optimizer's plan WITHOUT running
+    /// it — the EXPLAIN path. Each stage carries its wire-canonical
+    /// spec plus the join strategy the cost rule would pick right now,
+    /// the logical ops fused into it, and estimated input bytes from
+    /// DFS size metadata.
+    pub fn explain_query(
+        &self,
+        engine: &str,
+        text: &str,
+        reduces: u32,
+    ) -> Result<crate::codec::json::Json> {
+        use crate::codec::json::Json;
+        let plan = parse_query_text(engine, text, reduces)?;
+        let (stages, stats) = plan.optimized_stages()?;
+        let stage_docs = stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let (strategy, bytes) = s.explain_strategy(&*self.dfs);
+                Json::obj(vec![
+                    ("stage", Json::num(i as f64)),
+                    ("strategy", Json::str(strategy)),
+                    ("est_input_bytes", Json::num(bytes as f64)),
+                    (
+                        "ops",
+                        Json::Arr(s.fused_ops().into_iter().map(Json::str).collect()),
+                    ),
+                    ("spec", crate::api::wire::stage_to_json(s)),
+                ])
+            })
+            .collect();
+        Ok(Json::obj(vec![
+            ("engine", Json::str(engine)),
+            ("reduces", Json::num(reduces as f64)),
+            ("naive_stages", Json::num(stats.naive_stages as f64)),
+            ("stages_fused", Json::num(stats.stages_fused as f64)),
+            (
+                "predicate_pushdowns",
+                Json::num(stats.predicate_pushdowns as f64),
+            ),
+            ("stages", Json::Arr(stage_docs)),
+        ]))
+    }
+
     /// Run a compiled query plan as chained MR jobs on one dynamic
     /// cluster: stage `i` reads stage `i-1`'s output through the DFS;
     /// intermediates are deleted after success. The result carries the
@@ -556,8 +600,18 @@ impl Stack {
         user: &str,
         t0: std::time::Instant,
     ) -> Result<AppResult> {
-        let stages = plan.compile_stages()?;
+        let (stages, pstats) = plan.optimized_stages()?;
         let mut merged: BTreeMap<String, u64> = BTreeMap::new();
+        // Planner counters: what the optimizer did, next to what the
+        // engine measured.
+        merged.insert(
+            crate::mapreduce::counters::STAGES_FUSED.to_string(),
+            pstats.stages_fused,
+        );
+        merged.insert(
+            crate::mapreduce::counters::PREDICATE_PUSHDOWNS.to_string(),
+            pstats.predicate_pushdowns,
+        );
         let mut per_stage: Vec<(String, u64)> = Vec::new();
         let mut last: Option<(crate::mapreduce::MrOutcome, u64)> = None;
         for (i, stage) in stages.iter().enumerate() {

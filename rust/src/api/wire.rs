@@ -301,9 +301,10 @@ fn opt_str(j: &Json, key: &str) -> Option<String> {
 
 /// Serialize one compiled query stage. Field presence rules (mirrored
 /// byte-for-byte by `python/hpcw_client/wire.py`): the right-side block
-/// appears only for `join` stages; `filter`/`group_by`/`sort_by`/`limit`
-/// only when set; `project`/`aggregates` only when non-empty; `desc`
-/// only when true.
+/// appears only for `join` stages; `filter`/`left_filter`/`right_filter`
+/// (the pushed-down join predicates)/`group_by`/`sort_by`/`limit` only
+/// when set; `project`/`aggregates` only when non-empty; `desc` only
+/// when true.
 pub fn stage_to_json(s: &StageSpec) -> Json {
     let mut fields = vec![
         ("kind", Json::str(s.kind.as_wire())),
@@ -332,6 +333,12 @@ pub fn stage_to_json(s: &StageSpec) -> Json {
     }
     if let Some(f) = &s.filter {
         fields.push(("filter", Json::str(&**f)));
+    }
+    if let Some(f) = &s.left_filter {
+        fields.push(("left_filter", Json::str(&**f)));
+    }
+    if let Some(f) = &s.right_filter {
+        fields.push(("right_filter", Json::str(&**f)));
     }
     if !s.project.is_empty() {
         fields.push(("project", str_arr(&s.project)));
@@ -415,6 +422,8 @@ pub fn stage_from_json(j: &Json) -> Result<StageSpec> {
             None => Vec::new(),
         },
         filter: opt_str(j, "filter"),
+        left_filter: opt_str(j, "left_filter"),
+        right_filter: opt_str(j, "right_filter"),
         project: match j.get("project") {
             Some(_) => req_str_arr(j, "project")?,
             None => Vec::new(),
@@ -1324,6 +1333,8 @@ mod tests {
                 Vec::new()
             },
             filter: g.chance(0.5).then(|| format!("{} > 1", input_fields[0])),
+            left_filter: (join && g.chance(0.5)).then(|| format!("{} > 2", input_fields[0])),
+            right_filter: (join && g.chance(0.5)).then(|| format!("{} > 3", right_fields[0])),
             project: if kind == StageKind::Select {
                 vec![input_fields[0].clone()]
             } else {

@@ -8,7 +8,8 @@
 //! * `hpcw pig --file SCRIPT [--reduces N]` — run a Pig-like script.
 //! * `hpcw hive --sql QUERY [--reduces N]` — run a Hive-like query.
 //! * `hpcw query --sql QUERY | --file SCRIPT [--engine pig|hive]` — run a
-//!   multi-stage query (JOIN / ORDER BY / LIMIT) as chained MR jobs.
+//!   multi-stage query (JOIN / ORDER BY / LIMIT) as chained MR jobs;
+//!   `--explain` prints the optimizer's stage plan instead of running.
 //! * `hpcw wrapper --nodes N` — simulate one wrapper create/teardown and
 //!   print the phase timeline (Fig 3's single point).
 //! * `hpcw serve [--config FILE]` — start the SynfiniWay-style v1 API
@@ -75,7 +76,8 @@ const USAGE: &str = "usage: hpcw <figures|terasort|pig|hive|query|wrapper|serve|
   terasort  --rows N [--nodes N] [--maps N] [--reduces N] [--kernel] [--tiny]
   pig       --file SCRIPT [--reduces N] [--tiny]
   hive      --sql QUERY [--reduces N] [--tiny]
-  query     --sql QUERY | --file SCRIPT [--engine pig|hive] [--reduces N] [--tiny]
+  query     --sql QUERY | --file SCRIPT [--engine pig|hive] [--reduces N]
+            [--explain] [--tiny]
             multi-stage queries: JOIN / ORDER BY / LIMIT compile to chained MR jobs
   wrapper   --nodes N                       one simulated create/teardown
   serve     [--config FILE] [--tiny]        start the v1 API server
@@ -164,12 +166,20 @@ fn cmd_query(args: &Args) -> Result<()> {
         return Err(Error::Api("query needs --sql or --file".into()));
     };
     let engine = args.opt("engine").unwrap_or_else(|| default_engine.into());
+    let reduces = args.num("reduces").unwrap_or(2) as u32;
+    if args.flag("explain") {
+        let cfg = load_config(args)?;
+        let stack = Stack::new(cfg)?;
+        let doc = stack.explain_query(&engine, &text, reduces)?;
+        println!("{}", doc.pretty());
+        return Ok(());
+    }
     run_query(
         args,
         AppPayload::Query {
             engine,
             text,
-            reduces: args.num("reduces").unwrap_or(2) as u32,
+            reduces,
         },
     )
 }

@@ -203,6 +203,134 @@ pub fn cmp_sort_keys(a: &Value, b: &Value) -> std::cmp::Ordering {
     a.sort_key(false).cmp(&b.sort_key(false))
 }
 
+/// Collect every field index referenced by `e` (sorted, deduplicated).
+pub fn referenced_fields(e: &Expr) -> Vec<usize> {
+    fn walk(e: &Expr, out: &mut std::collections::BTreeSet<usize>) {
+        match e {
+            Expr::Field(i) => {
+                out.insert(*i);
+            }
+            Expr::Lit(_) => {}
+            Expr::Not(inner) => walk(inner, out),
+            Expr::Bin(_, a, b) => {
+                walk(a, out);
+                walk(b, out);
+            }
+        }
+    }
+    let mut set = std::collections::BTreeSet::new();
+    walk(e, &mut set);
+    set.into_iter().collect()
+}
+
+/// Split an expression into its top-level AND conjuncts, preserving order.
+pub fn split_conjuncts(e: &Expr) -> Vec<Expr> {
+    fn walk(e: &Expr, out: &mut Vec<Expr>) {
+        match e {
+            Expr::Bin(BinOp::And, a, b) => {
+                walk(a, out);
+                walk(b, out);
+            }
+            other => out.push(other.clone()),
+        }
+    }
+    let mut out = Vec::new();
+    walk(e, &mut out);
+    out
+}
+
+/// Re-join conjuncts with AND; `None` when the list is empty.
+pub fn join_conjuncts(conjuncts: Vec<Expr>) -> Option<Expr> {
+    let mut it = conjuncts.into_iter();
+    let first = it.next()?;
+    Some(it.fold(first, |acc, e| Expr::Bin(BinOp::And, Box::new(acc), Box::new(e))))
+}
+
+/// Rewrite every field index through `f` (predicate pushdown re-bases a
+/// combined-schema expression onto one join side).
+pub fn map_fields(e: &Expr, f: &mut impl FnMut(usize) -> usize) -> Expr {
+    match e {
+        Expr::Field(i) => Expr::Field(f(*i)),
+        Expr::Lit(v) => Expr::Lit(v.clone()),
+        Expr::Not(inner) => Expr::Not(Box::new(map_fields(inner, f))),
+        Expr::Bin(op, a, b) => Expr::Bin(
+            *op,
+            Box::new(map_fields(a, f)),
+            Box::new(map_fields(b, f)),
+        ),
+    }
+}
+
+/// True when `name` survives the tokenizer as a single field reference:
+/// a bare identifier that is not an expression keyword.
+fn unparses_as_field(name: &str) -> bool {
+    let mut chars = name.chars();
+    let head_ok = chars
+        .next()
+        .map(|c| c.is_ascii_alphabetic() || c == '_')
+        .unwrap_or(false);
+    head_ok
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        && !["and", "or", "not"].contains(&name.to_ascii_lowercase().as_str())
+}
+
+/// Render `e` back to text that [`parse_expr`] accepts against `schema`,
+/// fully parenthesized so precedence never shifts. Returns `None` when the
+/// expression is not representable in the surface grammar (field names
+/// that are not bare identifiers, negative or non-finite numeric
+/// literals — the tokenizer has no unary minus — or strings containing
+/// both quote characters).
+pub fn unparse_expr(e: &Expr, schema: &Schema) -> Option<String> {
+    match e {
+        Expr::Field(i) => {
+            let name = schema.fields.get(*i)?;
+            if unparses_as_field(name) {
+                Some(name.clone())
+            } else {
+                None
+            }
+        }
+        Expr::Lit(Value::Num(n)) => {
+            if *n < 0.0 || !n.is_finite() {
+                return None;
+            }
+            Some(format!("{n}"))
+        }
+        Expr::Lit(Value::Str(s)) => {
+            if !s.contains('\'') {
+                Some(format!("'{s}'"))
+            } else if !s.contains('"') {
+                Some(format!("\"{s}\""))
+            } else {
+                None
+            }
+        }
+        Expr::Not(inner) => Some(format!("(NOT {})", unparse_expr(inner, schema)?)),
+        Expr::Bin(op, a, b) => {
+            let sym = match op {
+                BinOp::Eq => "=",
+                BinOp::Ne => "!=",
+                BinOp::Lt => "<",
+                BinOp::Le => "<=",
+                BinOp::Gt => ">",
+                BinOp::Ge => ">=",
+                BinOp::And => "AND",
+                BinOp::Or => "OR",
+                BinOp::Add => "+",
+                BinOp::Sub => "-",
+                BinOp::Mul => "*",
+                BinOp::Div => "/",
+            };
+            Some(format!(
+                "({} {} {})",
+                unparse_expr(a, schema)?,
+                sym,
+                unparse_expr(b, schema)?
+            ))
+        }
+    }
+}
+
 /// Tokenize + parse an expression string against a schema.
 /// Grammar (precedence low→high): OR, AND, NOT, comparison, add/sub,
 /// mul/div, atom (field, number, 'string', parens).
@@ -492,6 +620,68 @@ mod tests {
         assert_eq!(Value::Num(3.0).to_string(), "3");
         assert_eq!(Value::Num(3.5).to_string(), "3.5");
         assert_eq!(Value::Str("abc".into()).to_string(), "abc");
+    }
+
+    #[test]
+    fn referenced_fields_and_conjunct_split() {
+        let s = schema();
+        let e = parse_expr("amount > 100 AND region == 'wales' AND amount < 900", &s).unwrap();
+        assert_eq!(referenced_fields(&e), vec![0, 2]);
+        let parts = split_conjuncts(&e);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(referenced_fields(&parts[0]), vec![2]);
+        assert_eq!(referenced_fields(&parts[1]), vec![0]);
+        // OR is not a conjunct boundary.
+        let e2 = parse_expr("amount > 100 OR region == 'wales'", &s).unwrap();
+        assert_eq!(split_conjuncts(&e2).len(), 1);
+        // Rejoining reproduces the original evaluation on every row.
+        let rejoined = join_conjuncts(parts).unwrap();
+        for line in ["wales,w,120", "wales,w,50", "england,w,120", "wales,w,950"] {
+            assert_eq!(
+                rejoined.eval(&row(line)).unwrap(),
+                e.eval(&row(line)).unwrap(),
+                "line={line}"
+            );
+        }
+        assert!(join_conjuncts(Vec::new()).is_none());
+    }
+
+    #[test]
+    fn map_fields_rebases_indices() {
+        let s = schema();
+        let e = parse_expr("amount > 100 AND product == 'w'", &s).unwrap();
+        let shifted = map_fields(&e, &mut |i| i - 1);
+        assert_eq!(referenced_fields(&shifted), vec![0, 1]);
+    }
+
+    #[test]
+    fn unparse_round_trips_structurally() {
+        let s = schema();
+        for text in [
+            "amount > 100 AND region == 'wales'",
+            "NOT amount > 100 OR region != 'x'",
+            "(amount + 2) * 10 >= amount / 2",
+            "amount - 2.5 < 1000000",
+            "region = 'it''s'.replace", // parse fails; skipped below
+        ] {
+            let Ok(e) = parse_expr(text, &s) else { continue };
+            let rendered = unparse_expr(&e, &s).expect("parseable exprs must unparse");
+            let back = parse_expr(&rendered, &s)
+                .unwrap_or_else(|err| panic!("reparse of '{rendered}' failed: {err:?}"));
+            assert_eq!(back, e, "round trip of '{text}' via '{rendered}'");
+        }
+        // Double-quoted strings survive via the alternate quote.
+        let dq = Expr::Lit(Value::Str("don't".into()));
+        let rendered = unparse_expr(&dq, &s).unwrap();
+        assert_eq!(parse_expr(&rendered, &s).unwrap(), dq);
+        // Unrepresentable cases bail instead of emitting garbage.
+        assert!(unparse_expr(&Expr::Lit(Value::Num(-1.0)), &s).is_none());
+        assert!(unparse_expr(&Expr::Lit(Value::Num(f64::NAN)), &s).is_none());
+        assert!(unparse_expr(&Expr::Lit(Value::Str("b'o\"th".into())), &s).is_none());
+        let odd = Schema::new(&["per cent", "and"], ',');
+        assert!(unparse_expr(&Expr::Field(0), &odd).is_none());
+        assert!(unparse_expr(&Expr::Field(1), &odd).is_none());
+        assert!(unparse_expr(&Expr::Field(9), &s).is_none());
     }
 
     #[test]

@@ -21,9 +21,35 @@
 //! * **SELECT** — a map-only filter/projection pass when no other stage
 //!   wants the work.
 //!
+//! Lowering is a small **cost-based optimizer** since PR 6:
+//!
+//! * **Broadcast-hash join** — when DFS metadata says one join side is
+//!   non-empty and at most `HPCW_BROADCAST_MAX_BYTES` (default 16 MiB;
+//!   `0` disables), the join compiles to a *map-only* job over the big
+//!   side: the small side ships to every mapper through the engine's
+//!   broadcast side-channel ([`crate::mapreduce::BroadcastInput`]) and
+//!   is probed from an in-memory hash table, so the join shuffle
+//!   disappears entirely. The repartition join remains the fallback and
+//!   the byte-identity oracle — both strategies share one row pipeline.
+//! * **Map-stage fusion** — the naive one-stage-per-op lowering is fused:
+//!   adjacent map-only filter/projection stages fold into the map phase
+//!   of the neighboring join / aggregation / sort stage, so strictly
+//!   fewer jobs run and fewer `.stage{i}` intermediates materialize
+//!   (`STAGES_FUSED` planner counter; `HPCW_FUSION=0` reverts to the
+//!   naive plan, the fusion parity oracle).
+//! * **Predicate pushdown** — filter conjuncts referencing only one join
+//!   side are evaluated map-side below the join on that side's own rows
+//!   (`PREDICATE_PUSHDOWNS` counter), shrinking what the join shuffles
+//!   or probes.
+//! * **Columnar batch execution** — row decode goes through
+//!   [`ColumnBatch`] column cuts, parsing only the fields an expression
+//!   actually references; projection and aggregation maps no longer
+//!   materialize unreferenced columns.
+//!
 //! [`LogicalPlan::compile_stages`] lowers a validated plan to an ordered
 //! list of [`StageSpec`]s — serializable single-job descriptions chained
-//! through intermediate DFS directories. The stages run either
+//! through intermediate DFS directories ([`LogicalPlan::optimized_stages`]
+//! additionally reports [`PlanStats`]). The stages run either
 //! back-to-back on one dynamic cluster (`AppPayload::Query`) or as a
 //! SynfiniWay workflow of `query_stage` steps wired with
 //! `${steps.<name>.output_dir}` references (see
@@ -35,14 +61,20 @@
 //! constraint.
 
 use crate::error::{Error, Result};
-use crate::frameworks::expr::{cmp_values, parse_expr, Expr, Row, Schema, Value};
+use crate::frameworks::expr::{
+    cmp_values, join_conjuncts, map_fields, parse_expr, referenced_fields, split_conjuncts,
+    unparse_expr, Expr, Row, Schema, Value,
+};
 use crate::lustre::Dfs;
+use crate::mapreduce::recordbuf::ColumnBatch;
 use crate::mapreduce::{
-    HashPartitioner, InputFormat, JobSpec, Mapper, OutputFormat, Partitioner, Reducer, TaggedInput,
+    BroadcastInput, BroadcastSink, HashPartitioner, InputFormat, JobSpec, Mapper, OutputFormat,
+    Partitioner, Reducer, TaggedInput,
 };
 use crate::terasort::format::key_prefix_u64;
 use crate::terasort::partition::RangePartitioner;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
 
 /// Aggregate functions over a grouped expression.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -315,30 +347,16 @@ impl LogicalPlan {
         Ok(())
     }
 
-    /// Lower to an ordered list of single-job stages. Stage `i > 0` reads
-    /// stage `i-1`'s output directory; all but the last stage write to
-    /// `"{output_dir}.stage{i}"` intermediates on the DFS.
-    pub fn compile_stages(&self) -> Result<Vec<StageSpec>> {
+    /// The naive lowering: one stage per logical op, in pipeline order
+    /// (join → filter → aggregate/projection → sort), unwired. This is
+    /// what runs under `HPCW_FUSION=0` — the optimizer's parity oracle.
+    fn lower_stages(&self) -> Result<Vec<StageSpec>> {
         self.validate()?;
         let mut stages: Vec<StageSpec> = Vec::new();
-        let mut filter = self.filter.clone();
-        let mut project = self.project.clone();
         let mut cur_schema = self.input.schema.clone();
 
         if let Some(j) = &self.join {
             let combined = combined_schema(&self.input.schema, &j.right.schema, &j.right_prefix)?;
-            // The join consumes the filter, and the projection too when no
-            // aggregation follows (aggregates forbid bare columns anyway).
-            let proj = std::mem::take(&mut project);
-            let out_schema = if proj.is_empty() {
-                combined.clone()
-            } else {
-                let fields = proj.clone();
-                Schema {
-                    fields,
-                    delimiter: '\t',
-                }
-            };
             stages.push(StageSpec {
                 input_dir: self.input.dir.clone(),
                 right_dir: Some(j.right.dir.clone()),
@@ -346,21 +364,34 @@ impl LogicalPlan {
                 left_key: Some(j.left_key.clone()),
                 right_key: Some(j.right_key.clone()),
                 combined_fields: combined.fields.clone(),
-                filter: filter.take(),
-                project: proj,
                 ..StageSpec::new(StageKind::Join, self.input.schema.clone(), self.n_reduces)
             });
-            cur_schema = out_schema;
+            cur_schema = combined;
+        }
+
+        if let Some(f) = &self.filter {
+            stages.push(StageSpec {
+                filter: Some(f.clone()),
+                ..StageSpec::new(StageKind::Select, cur_schema.clone(), 0)
+            });
         }
 
         if !self.aggregates.is_empty() {
             stages.push(StageSpec {
-                filter: filter.take(),
                 group_by: self.group_by.clone(),
                 aggregates: self.aggregates.clone(),
                 ..StageSpec::new(StageKind::Agg, cur_schema.clone(), self.n_reduces)
             });
             cur_schema = self.agg_output_schema();
+        } else if !self.project.is_empty() {
+            stages.push(StageSpec {
+                project: self.project.clone(),
+                ..StageSpec::new(StageKind::Select, cur_schema.clone(), 0)
+            });
+            cur_schema = Schema {
+                fields: self.project.clone(),
+                delimiter: cur_schema.delimiter,
+            };
         }
 
         if let Some(o) = &self.order_by {
@@ -370,39 +401,221 @@ impl LogicalPlan {
                 self.n_reduces
             };
             stages.push(StageSpec {
-                filter: filter.take(),
-                project: std::mem::take(&mut project),
                 sort_by: Some(o.key.clone()),
                 desc: o.desc,
                 limit: self.limit,
                 ..StageSpec::new(StageKind::Sort, cur_schema.clone(), n_reduces)
             });
-        } else if filter.is_some() || !project.is_empty() {
-            stages.push(StageSpec {
-                filter: filter.take(),
-                project: std::mem::take(&mut project),
-                ..StageSpec::new(StageKind::Select, cur_schema.clone(), 0)
-            });
-        }
-
-        // Wire the chain: stage 0 reads the plan input; stage i reads
-        // stage i-1's output; the last stage writes the plan output, the
-        // rest write sibling intermediates.
-        let last = stages.len() - 1;
-        for i in 0..stages.len() {
-            if i > 0 {
-                stages[i].input_dir = stages[i - 1].output_dir.clone();
-            } else if stages[0].input_dir.is_empty() {
-                stages[0].input_dir = self.input.dir.clone();
-            }
-            stages[i].output_dir = if i == last {
-                self.output_dir.clone()
-            } else {
-                format!("{}.stage{i}", self.output_dir)
-            };
-            stages[i].intermediate = i != last;
         }
         Ok(stages)
+    }
+
+    /// Optimized lowering: fuse map-only stages, push predicates below
+    /// the join, then wire the chain. Returns the stages plus the
+    /// [`PlanStats`] the query layer stamps as planner counters.
+    pub fn optimized_stages(&self) -> Result<(Vec<StageSpec>, PlanStats)> {
+        let mut stages = self.lower_stages()?;
+        let mut stats = PlanStats {
+            naive_stages: stages.len(),
+            ..PlanStats::default()
+        };
+        if fusion_enabled() {
+            let (fused, n_fused) = fuse_stages(stages);
+            stages = fused;
+            stats.stages_fused = n_fused;
+            for s in &mut stages {
+                stats.predicate_pushdowns += push_join_predicates(s);
+            }
+        }
+        wire_chain(&mut stages, &self.input.dir, &self.output_dir);
+        Ok((stages, stats))
+    }
+
+    /// Lower to an ordered list of single-job stages. Stage `i > 0` reads
+    /// stage `i-1`'s output directory; all but the last stage write to
+    /// `"{output_dir}.stage{i}"` intermediates on the DFS. Fusion and
+    /// pushdown run by default (see [`LogicalPlan::optimized_stages`]).
+    pub fn compile_stages(&self) -> Result<Vec<StageSpec>> {
+        Ok(self.optimized_stages()?.0)
+    }
+}
+
+/// What the plan optimizer did — surfaced as the `STAGES_FUSED` /
+/// `PREDICATE_PUSHDOWNS` planner counters and in EXPLAIN output.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    /// Stage count of the naive one-op-per-stage lowering.
+    pub naive_stages: usize,
+    /// Stages eliminated by map-stage fusion.
+    pub stages_fused: u64,
+    /// Filter conjuncts pushed below the join.
+    pub predicate_pushdowns: u64,
+}
+
+/// `HPCW_FUSION=0` disables map-stage fusion and predicate pushdown;
+/// the naive lowering is the optimizer's byte-parity oracle.
+fn fusion_enabled() -> bool {
+    std::env::var("HPCW_FUSION").map(|v| v != "0").unwrap_or(true)
+}
+
+/// Fuse the naive stage list: map-only SELECT stages fold into a
+/// neighboring stage's map phase — backward into a preceding bare JOIN
+/// (filter, then projection), forward into the map side of a following
+/// AGG (filter) or SORT (filter + projection), or into an adjacent
+/// SELECT. Returns the fused list and the number of stages eliminated.
+/// Fusion never reorders work: each rule keeps filter-before-projection
+/// evaluation order and re-bases the absorbing stage's input schema.
+fn fuse_stages(stages: Vec<StageSpec>) -> (Vec<StageSpec>, u64) {
+    let mut out: Vec<StageSpec> = Vec::new();
+    let mut fused = 0u64;
+    for mut s in stages {
+        match s.kind {
+            StageKind::Select => {
+                if let Some(prev) = out.last_mut() {
+                    match prev.kind {
+                        StageKind::Join => {
+                            if s.filter.is_some()
+                                && s.project.is_empty()
+                                && prev.filter.is_none()
+                                && prev.project.is_empty()
+                            {
+                                prev.filter = s.filter;
+                                fused += 1;
+                                continue;
+                            }
+                            if s.filter.is_none() && !s.project.is_empty() && prev.project.is_empty()
+                            {
+                                prev.project = s.project;
+                                fused += 1;
+                                continue;
+                            }
+                        }
+                        StageKind::Select => {
+                            if prev.project.is_empty() && s.filter.is_none() && !s.project.is_empty()
+                            {
+                                prev.project = s.project;
+                                fused += 1;
+                                continue;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                out.push(s);
+            }
+            StageKind::Agg => {
+                if let Some(prev) = out.last() {
+                    if prev.kind == StageKind::Select
+                        && prev.project.is_empty()
+                        && prev.filter.is_some()
+                        && s.filter.is_none()
+                    {
+                        let sel = out.pop().expect("just peeked");
+                        s.filter = sel.filter;
+                        s.input_schema = sel.input_schema;
+                        fused += 1;
+                    }
+                }
+                out.push(s);
+            }
+            StageKind::Sort => {
+                if let Some(prev) = out.last() {
+                    if prev.kind == StageKind::Select && s.filter.is_none() && s.project.is_empty()
+                    {
+                        let sel = out.pop().expect("just peeked");
+                        s.filter = sel.filter;
+                        s.project = sel.project;
+                        s.input_schema = sel.input_schema;
+                        fused += 1;
+                    }
+                }
+                out.push(s);
+            }
+            StageKind::Join => out.push(s),
+        }
+    }
+    (out, fused)
+}
+
+/// Push single-side conjuncts of a join stage's filter below the join:
+/// conjuncts referencing only left fields become `left_filter`, only
+/// right fields `right_filter` (re-based onto the right schema's own
+/// names), mixed conjuncts stay as the residual reduce-side filter.
+/// Conjuncts that cannot be rendered back to surface syntax stay in the
+/// residual; if the residual itself cannot be rendered, the pushdown is
+/// abandoned. Returns the number of conjuncts pushed.
+fn push_join_predicates(stage: &mut StageSpec) -> u64 {
+    if stage.kind != StageKind::Join {
+        return 0;
+    }
+    let (Some(filter_text), Some(right_schema)) = (stage.filter.as_ref(), &stage.right_schema)
+    else {
+        return 0;
+    };
+    let combined = Schema {
+        fields: stage.combined_fields.clone(),
+        delimiter: '\t',
+    };
+    let Ok(expr) = parse_expr(filter_text, &combined) else {
+        return 0; // compile_join will surface the parse error
+    };
+    let left_arity = stage.input_schema.fields.len();
+    let mut left: Vec<String> = Vec::new();
+    let mut right: Vec<String> = Vec::new();
+    let mut residual: Vec<Expr> = Vec::new();
+    for c in split_conjuncts(&expr) {
+        let refs = referenced_fields(&c);
+        if !refs.is_empty() && refs.iter().all(|&i| i < left_arity) {
+            // Left names are a prefix of the combined schema, so the
+            // combined rendering re-parses against the left schema.
+            if let Some(t) = unparse_expr(&c, &combined) {
+                left.push(t);
+                continue;
+            }
+        } else if !refs.is_empty() && refs.iter().all(|&i| i >= left_arity) {
+            let rebased = map_fields(&c, &mut |i| i - left_arity);
+            if let Some(t) = unparse_expr(&rebased, right_schema) {
+                right.push(t);
+                continue;
+            }
+        }
+        residual.push(c);
+    }
+    let pushed = (left.len() + right.len()) as u64;
+    if pushed == 0 {
+        return 0;
+    }
+    let residual_text = match join_conjuncts(residual) {
+        Some(e) => match unparse_expr(&e, &combined) {
+            Some(t) => Some(t),
+            None => return 0, // unrenderable residual: keep the filter whole
+        },
+        None => None,
+    };
+    stage.left_filter = (!left.is_empty()).then(|| left.join(" AND "));
+    stage.right_filter = (!right.is_empty()).then(|| right.join(" AND "));
+    stage.filter = residual_text;
+    pushed
+}
+
+/// Wire a stage chain: stage 0 reads the plan input; stage `i` reads
+/// stage `i-1`'s output; the last stage writes the plan output, the rest
+/// write sibling `.stage{i}` intermediates — numbered by final position,
+/// so fusion leaves no gaps in directories or per-stage counters.
+fn wire_chain(stages: &mut [StageSpec], input_dir: &str, output_dir: &str) {
+    let last = stages.len().saturating_sub(1);
+    for i in 0..stages.len() {
+        if i > 0 {
+            stages[i].input_dir = stages[i - 1].output_dir.clone();
+        } else if stages[i].input_dir.is_empty() {
+            stages[i].input_dir = input_dir.to_string();
+        }
+        stages[i].output_dir = if i == last {
+            output_dir.to_string()
+        } else {
+            format!("{output_dir}.stage{i}")
+        };
+        stages[i].intermediate = i != last;
     }
 }
 
@@ -457,6 +670,12 @@ pub struct StageSpec {
     /// Join only: field names of the combined row (left ++ renamed right).
     pub combined_fields: Vec<String>,
     pub filter: Option<String>,
+    /// Join only: pushed-down filter over the left input's own schema,
+    /// evaluated map-side below the join (the padded fixed-arity row
+    /// view, so it drops exactly the rows the post-join filter would).
+    pub left_filter: Option<String>,
+    /// Join only: pushed-down filter over the right input's own schema.
+    pub right_filter: Option<String>,
     pub project: Vec<String>,
     pub group_by: Option<String>,
     pub aggregates: Vec<AggSpec>,
@@ -493,6 +712,8 @@ impl StageSpec {
             right_key: None,
             combined_fields: Vec::new(),
             filter: None,
+            left_filter: None,
+            right_filter: None,
             project: Vec::new(),
             group_by: None,
             aggregates: Vec::new(),
@@ -518,6 +739,69 @@ impl StageSpec {
                 .is_some_and(|(_, n)| !n.is_empty() && n.bytes().all(|b| b.is_ascii_digit()))
     }
 
+    /// EXPLAIN summary: the execution strategy this stage would pick
+    /// right now and its estimated input bytes from DFS size metadata
+    /// (0 when the input does not exist yet — intermediates at plan
+    /// time read as unknown, which also forces the repartition answer).
+    pub fn explain_strategy(&self, dfs: &dyn Dfs) -> (&'static str, u64) {
+        match self.kind {
+            StageKind::Join => {
+                let left = dir_bytes(dfs, &self.input_dir);
+                let right = self
+                    .right_dir
+                    .as_deref()
+                    .map(|d| dir_bytes(dfs, d))
+                    .unwrap_or(0);
+                let strategy = match choose_broadcast(left, right, broadcast_max_bytes()) {
+                    Some(true) => "broadcast(build=left)",
+                    Some(false) => "broadcast(build=right)",
+                    None => "repartition",
+                };
+                (strategy, left + right)
+            }
+            _ => {
+                let bytes = dir_bytes(dfs, &self.input_dir);
+                if self.n_reduces == 0 {
+                    ("map-only", bytes)
+                } else {
+                    ("shuffle", bytes)
+                }
+            }
+        }
+    }
+
+    /// The logical ops this stage executes, in evaluation order —
+    /// EXPLAIN's per-stage `ops` list (fusion and pushdown make a stage
+    /// carry more than its own kind).
+    pub fn fused_ops(&self) -> Vec<&'static str> {
+        let mut ops = Vec::new();
+        if self.left_filter.is_some() {
+            ops.push("filter(left)");
+        }
+        if self.right_filter.is_some() {
+            ops.push("filter(right)");
+        }
+        if self.kind == StageKind::Join {
+            ops.push("join");
+        }
+        if self.filter.is_some() {
+            ops.push("filter");
+        }
+        if !self.project.is_empty() {
+            ops.push("project");
+        }
+        if !self.aggregates.is_empty() {
+            ops.push("aggregate");
+        }
+        if self.sort_by.is_some() {
+            ops.push("sort");
+        }
+        if self.limit.is_some() {
+            ops.push("limit");
+        }
+        ops
+    }
+
     fn job(&self, name: &str) -> JobSpec {
         let mut spec = JobSpec::identity(name, &self.input_dir, &self.output_dir, self.n_reduces);
         spec.input_format = InputFormat::Lines;
@@ -530,19 +814,20 @@ impl StageSpec {
         self.project.iter().map(|p| schema.index_of(p)).collect()
     }
 
-    /// Compile to a runnable [`JobSpec`]. `dfs` is only read by sort
-    /// stages (range-partitioner sampling), so compile a sort stage after
-    /// its input stage has run.
+    /// Compile to a runnable [`JobSpec`]. `dfs` is read by sort stages
+    /// (range-partitioner sampling) and join stages (size metadata for
+    /// the broadcast cost rule), so compile a stage only after its
+    /// input stages have run.
     pub fn compile(&self, dfs: &dyn Dfs) -> Result<JobSpec> {
         match self.kind {
-            StageKind::Join => self.compile_join(),
+            StageKind::Join => self.compile_join(dfs),
             StageKind::Agg => self.compile_agg(),
             StageKind::Select => self.compile_select(),
             StageKind::Sort => self.compile_sort(dfs),
         }
     }
 
-    fn compile_join(&self) -> Result<JobSpec> {
+    fn compile_join(&self, dfs: &dyn Dfs) -> Result<JobSpec> {
         let right_dir = self
             .right_dir
             .as_ref()
@@ -572,22 +857,67 @@ impl StageSpec {
             .map(|f| parse_expr(f, &combined))
             .transpose()?;
         let project = self.project_indices(&combined)?;
+        let left = JoinSide::parse(&self.input_schema, left_key, self.left_filter.as_deref())?;
+        let right = JoinSide::parse(right_schema, right_key, self.right_filter.as_deref())?;
+
+        // Cost rule: broadcast the smaller side when DFS metadata shows
+        // it materialized (> 0 bytes) and under the threshold; fall back
+        // to the repartition join otherwise. A missing or empty
+        // directory reads as "size unknown" and never broadcasts.
+        let strategy = choose_broadcast(
+            dir_bytes(dfs, &self.input_dir),
+            dir_bytes(dfs, right_dir),
+            broadcast_max_bytes(),
+        );
+        if let Some(build_is_left) = strategy {
+            let (build, probe) = if build_is_left {
+                (left, right)
+            } else {
+                (right, left)
+            };
+            let (build_dir, probe_dir) = if build_is_left {
+                (self.input_dir.clone(), right_dir.clone())
+            } else {
+                (right_dir.clone(), self.input_dir.clone())
+            };
+            let table = Arc::new(BroadcastHashTable {
+                side: build,
+                rows: RwLock::new(HashMap::new()),
+            });
+            let mut spec = self.job("query-join-broadcast");
+            spec.input_dir = probe_dir;
+            spec.n_reduces = 0; // map-only: the join shuffle is gone
+            spec.mapper = Arc::new(BroadcastHashJoinMapper {
+                side: probe,
+                table: Arc::clone(&table),
+                build_is_left,
+                combined_arity: combined.fields.len(),
+                residual: filter,
+                project,
+            });
+            spec.broadcast_inputs = vec![BroadcastInput {
+                dir: build_dir,
+                sink: table,
+            }];
+            return Ok(spec);
+        }
+
+        // Repartition join — the fallback and the broadcast strategy's
+        // byte-identity oracle (both share the emit_joined row pipeline).
         let mut spec = self.job("query-join");
         spec.n_reduces = self.n_reduces.max(1);
         spec.tagged_inputs = vec![
             TaggedInput {
                 dir: self.input_dir.clone(),
                 mapper: Arc::new(JoinSideMapper {
-                    schema: self.input_schema.clone(),
-                    key: parse_expr(left_key, &self.input_schema)?,
+                    side: left,
                     tag: b'L',
                 }),
             },
             TaggedInput {
                 dir: right_dir.clone(),
                 mapper: Arc::new(JoinSideMapper {
-                    schema: right_schema.clone(),
-                    key: parse_expr(right_key, right_schema)?,
+                    side: right,
                     tag: b'R',
                 }),
             },
@@ -623,11 +953,18 @@ impl StageSpec {
             .collect::<Result<_>>()?;
         let mut spec = self.job("query-agg");
         spec.n_reduces = self.n_reduces.max(1);
+        let wanted = wanted_columns(
+            filter
+                .iter()
+                .chain(group_by.iter())
+                .chain(aggs.iter().map(|(_, e)| e)),
+        );
         spec.mapper = Arc::new(PlanMapper {
             schema: schema.clone(),
             filter,
             group_by,
             aggs,
+            wanted,
         });
         spec.reducer = Arc::new(PlanReducer {
             aggs: self.aggregates.iter().map(|a| a.agg).collect(),
@@ -649,10 +986,12 @@ impl StageSpec {
         let project = self.project_indices(schema)?;
         let mut spec = self.job("query-select");
         spec.n_reduces = 0; // map-only
+        let wanted = wanted_columns(filter.as_ref().into_iter());
         spec.mapper = Arc::new(SelectMapper {
             schema: schema.clone(),
             filter,
             project,
+            wanted,
         });
         Ok(spec)
     }
@@ -737,6 +1076,36 @@ fn sanitize(f: &str) -> String {
     f.replace(['\t', '\n', '\r'], " ")
 }
 
+/// Union of the column indices a set of expressions reference — the
+/// columns a columnar map decode actually has to parse.
+fn wanted_columns<'a>(exprs: impl Iterator<Item = &'a Expr>) -> Vec<usize> {
+    let mut wanted: Vec<usize> = exprs.flat_map(|e| referenced_fields(e)).collect();
+    wanted.sort_unstable();
+    wanted.dedup();
+    wanted
+}
+
+/// Columnar decode of the [`Schema::parse_row`] view: only the `wanted`
+/// columns are parsed (everything else gets a placeholder the
+/// expressions never read); short rows keep their short length so
+/// out-of-range field references fail identically.
+fn plain_row(schema: &Schema, line: &str, wanted: &[usize]) -> Row {
+    let arity = schema.fields.len();
+    let Ok(d) = u8::try_from(schema.delimiter as u32) else {
+        return schema.parse_row(line);
+    };
+    let mut batch = ColumnBatch::new(arity, d);
+    batch.push_line(line.as_bytes());
+    let n = batch.fields_in(0);
+    let mut vals = vec![Value::Num(0.0); n];
+    for &i in wanted {
+        if i < n {
+            vals[i] = Value::parse(&String::from_utf8_lossy(batch.field(0, i)));
+        }
+    }
+    Row(vals)
+}
+
 /// Evaluate a sort stage's row pipeline: parse, filter, project, key.
 /// Returns `(encoded key, output row text)` or `None` when filtered out
 /// or unparseable.
@@ -812,14 +1181,139 @@ fn sample_sort_keys(
 }
 
 // ---------------------------------------------------------------------------
+// Join strategy (cost rule)
+// ---------------------------------------------------------------------------
+
+/// `HPCW_BROADCAST_MAX_BYTES`: a join side at most this large (and
+/// non-empty) may be broadcast as a map-side hash table instead of
+/// shuffled. `0` disables broadcast joins (the repartition oracle).
+fn broadcast_max_bytes() -> u64 {
+    std::env::var("HPCW_BROADCAST_MAX_BYTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16 * 1024 * 1024)
+}
+
+/// Total bytes of a directory's part files (underscore-prefixed entries —
+/// `_SUCCESS`, logs — excluded): the DFS metadata the join cost rule
+/// reads. A missing directory sums to 0.
+fn dir_bytes(dfs: &dyn Dfs, dir: &str) -> u64 {
+    dfs.list(dir)
+        .into_iter()
+        .filter(|p| !p.split('/').next_back().unwrap_or("").starts_with('_'))
+        .filter_map(|p| dfs.size(&p).ok())
+        .sum()
+}
+
+/// The broadcast decision: `Some(build_is_left)` when one side should be
+/// broadcast, `None` for the repartition fallback. A side qualifies when
+/// its size is known (> 0) and at most `max`; the smaller qualifying
+/// side builds, ties build right (the conventional build side).
+fn choose_broadcast(left_bytes: u64, right_bytes: u64, max: u64) -> Option<bool> {
+    let left_fits = left_bytes > 0 && left_bytes <= max;
+    let right_fits = right_bytes > 0 && right_bytes <= max;
+    match (left_fits, right_fits) {
+        (false, false) => None,
+        (true, false) => Some(true),
+        (false, true) => Some(false),
+        (true, true) => Some(left_bytes < right_bytes),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Join operators
 // ---------------------------------------------------------------------------
 
-/// Tagged map side of the repartition join: emits
-/// `(join_key, tag ++ raw row)` with the row re-joined on tabs.
-struct JoinSideMapper {
+/// One parsed side of a join: the key expression, an optional pushed-down
+/// filter, and the union of columns both actually reference (what the
+/// columnar decode materializes).
+struct JoinSide {
     schema: Schema,
     key: Expr,
+    filter: Option<Expr>,
+    wanted: Vec<usize>,
+}
+
+impl JoinSide {
+    fn parse(schema: &Schema, key: &str, filter: Option<&str>) -> Result<JoinSide> {
+        let key = parse_expr(key, schema)?;
+        let filter = filter.map(|f| parse_expr(f, schema)).transpose()?;
+        let mut wanted = referenced_fields(&key);
+        if let Some(f) = &filter {
+            wanted.extend(referenced_fields(f));
+        }
+        wanted.sort_unstable();
+        wanted.dedup();
+        Ok(JoinSide {
+            schema: schema.clone(),
+            key,
+            filter,
+            wanted,
+        })
+    }
+
+    /// Evaluate one line against this side: key first (plain-split view —
+    /// a short row errors and drops, like `Schema::parse_row`), then the
+    /// pushed filter (padded fixed-arity view — byte parity with
+    /// evaluating the same conjunct after the join). Returns the
+    /// normalized join key, or `None` when the row is dropped.
+    fn key_for(&self, line: &str) -> Option<String> {
+        let (plain, padded) = side_views(&self.schema, line, &self.wanted);
+        let key = self.key.eval(&plain).ok()?;
+        if let Some(f) = &self.filter {
+            match f.eval(&padded) {
+                Ok(v) if v.truthy() => {}
+                _ => return None,
+            }
+        }
+        Some(sanitize(&key.to_string()))
+    }
+}
+
+/// Decode the two row views a join side evaluates, touching only the
+/// `wanted` column positions (a columnar scan via [`ColumnBatch`] when
+/// the delimiter is single-byte). The *plain* view mirrors
+/// [`Schema::parse_row`]: its length is the line's actual field count,
+/// so out-of-range references fail identically on short rows. The
+/// *padded* view mirrors [`raw_fields`]: sanitized, fixed arity, short
+/// rows padded with empty strings.
+fn side_views(schema: &Schema, line: &str, wanted: &[usize]) -> (Row, Row) {
+    let arity = schema.fields.len();
+    match u8::try_from(schema.delimiter as u32) {
+        Ok(d) => {
+            let mut batch = ColumnBatch::new(arity, d);
+            batch.push_line(line.as_bytes());
+            let n = batch.fields_in(0);
+            let mut plain = vec![Value::Num(0.0); n];
+            let mut padded = vec![Value::Str(String::new()); arity];
+            for &i in wanted {
+                if i >= arity {
+                    continue;
+                }
+                let f = String::from_utf8_lossy(batch.field(0, i));
+                if i < n {
+                    plain[i] = Value::parse(&f);
+                }
+                padded[i] = Value::parse(&sanitize(&f));
+            }
+            (Row(plain), Row(padded))
+        }
+        // Multi-byte delimiter: no columnar cut table; fall back to the
+        // reference full decode.
+        Err(_) => {
+            let plain = schema.parse_row(line);
+            let fields = raw_fields(line, schema.delimiter, arity);
+            let padded = Row(fields.iter().map(|f| Value::parse(f)).collect());
+            (plain, padded)
+        }
+    }
+}
+
+/// Tagged map side of the repartition join: emits
+/// `(join_key, tag ++ raw row)` with the row re-joined on tabs. Pushed
+/// filters run here, before the row is shuffled.
+struct JoinSideMapper {
+    side: JoinSide,
     tag: u8,
 }
 
@@ -831,16 +1325,56 @@ impl Mapper for JoinSideMapper {
         if line.trim().is_empty() {
             return;
         }
-        let row = self.schema.parse_row(line);
-        let Ok(key) = self.key.eval(&row) else {
+        let Some(key) = self.side.key_for(line) else {
             return;
         };
-        let fields = raw_fields(line, self.schema.delimiter, self.schema.fields.len());
+        let fields = raw_fields(line, self.side.schema.delimiter, self.side.schema.fields.len());
         let mut v = Vec::with_capacity(line.len() + 1);
         v.push(self.tag);
         v.extend_from_slice(fields.join("\t").as_bytes());
-        emit(sanitize(&key.to_string()).as_bytes(), &v);
+        emit(key.as_bytes(), &v);
     }
+}
+
+/// The shared tail of both join strategies: build the combined row
+/// `left ++ '\t' ++ right`, apply the residual filter, project, emit.
+/// Keeping this in one place is what makes broadcast and repartition
+/// byte-identical.
+fn emit_joined(
+    combined_arity: usize,
+    filter: Option<&Expr>,
+    project: &[usize],
+    l: &[u8],
+    r: &[u8],
+    out: &mut dyn FnMut(&[u8]),
+) {
+    let mut row = Vec::with_capacity(l.len() + 1 + r.len());
+    row.extend_from_slice(l);
+    row.push(b'\t');
+    row.extend_from_slice(r);
+    let Ok(text) = std::str::from_utf8(&row) else {
+        return;
+    };
+    // The map sides emit fixed-arity rows, so the combined row re-splits
+    // into exactly the combined schema's columns.
+    let fields = raw_fields(text, '\t', combined_arity);
+    let parsed = Row(fields.iter().map(|f| Value::parse(f)).collect());
+    if let Some(f) = filter {
+        match f.eval(&parsed) {
+            Ok(v) if v.truthy() => {}
+            _ => return,
+        }
+    }
+    let line = if project.is_empty() {
+        fields.join("\t")
+    } else {
+        project
+            .iter()
+            .map(|&i| fields[i].as_str())
+            .collect::<Vec<_>>()
+            .join("\t")
+    };
+    out(line.as_bytes());
 }
 
 /// Reduce side of the repartition join: per key, buffer both tagged
@@ -871,44 +1405,115 @@ impl Reducer for JoinReducer {
         let arity = self.combined.fields.len();
         for l in &lefts {
             for r in &rights {
-                let mut row = Vec::with_capacity(l.len() + 1 + r.len());
-                row.extend_from_slice(l);
-                row.push(b'\t');
-                row.extend_from_slice(r);
-                let Ok(text) = std::str::from_utf8(&row) else {
-                    continue;
-                };
-                // The map sides emit fixed-arity rows, so the combined
-                // row re-splits into exactly the combined schema's
-                // columns.
-                let fields = raw_fields(text, '\t', arity);
-                let parsed = Row(fields.iter().map(|f| Value::parse(f)).collect());
-                if let Some(f) = &self.filter {
-                    match f.eval(&parsed) {
-                        Ok(v) if v.truthy() => {}
-                        _ => continue,
-                    }
-                }
-                let out = if self.project.is_empty() {
-                    fields.join("\t")
-                } else {
-                    self.project
-                        .iter()
-                        .map(|&i| fields[i].as_str())
-                        .collect::<Vec<_>>()
-                        .join("\t")
-                };
-                emit(key, out.as_bytes());
+                emit_joined(
+                    arity,
+                    self.filter.as_ref(),
+                    &self.project,
+                    l,
+                    r,
+                    &mut |out| emit(key, out),
+                );
             }
         }
     }
 }
 
-/// Map-only filter/projection pass.
+/// The broadcast join's build side: a [`BroadcastSink`] the engine fills
+/// once per run (before any map container is granted) with the small
+/// side's full contents. Keys are normalized exactly like
+/// [`JoinSideMapper`] emissions; values are the fixed-arity tab-joined
+/// rows the repartition reducer would have buffered.
+struct BroadcastHashTable {
+    side: JoinSide,
+    rows: RwLock<HashMap<Vec<u8>, Vec<String>>>,
+}
+
+impl BroadcastSink for BroadcastHashTable {
+    fn load(&self, data: &[u8]) -> Result<()> {
+        let arity = self.side.schema.fields.len();
+        let mut rows = self.rows.write().expect("broadcast table poisoned");
+        rows.clear(); // idempotent if the engine ever re-ships
+        for raw in data.split(|&b| b == b'\n') {
+            let Ok(line) = std::str::from_utf8(raw) else {
+                continue;
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            // Columnar first pass: only key + pushed-filter columns are
+            // decoded; the full row materializes only for survivors.
+            let Some(key) = self.side.key_for(line) else {
+                continue;
+            };
+            let fields = raw_fields(line, self.side.schema.delimiter, arity);
+            rows.entry(key.into_bytes())
+                .or_default()
+                .push(fields.join("\t"));
+        }
+        Ok(())
+    }
+}
+
+/// Map side of the broadcast-hash join: runs over the probe (large)
+/// input only, looks each row's key up in the broadcast table and emits
+/// the joined rows directly — a map-only job, no shuffle, no reduce.
+struct BroadcastHashJoinMapper {
+    /// The probe side's key / pushed filter / columnar column set.
+    side: JoinSide,
+    table: Arc<BroadcastHashTable>,
+    /// True when the broadcast (build) side is the plan's left input —
+    /// combined rows are always `left ++ right`.
+    build_is_left: bool,
+    combined_arity: usize,
+    /// Residual post-join filter (conjuncts touching both sides).
+    residual: Option<Expr>,
+    project: Vec<usize>,
+}
+
+impl Mapper for BroadcastHashJoinMapper {
+    fn map(&self, _k: &[u8], value: &[u8], emit: &mut dyn FnMut(&[u8], &[u8])) {
+        let Ok(line) = std::str::from_utf8(value) else {
+            return;
+        };
+        if line.trim().is_empty() {
+            return;
+        }
+        let Some(key) = self.side.key_for(line) else {
+            return;
+        };
+        let table = self.table.rows.read().expect("broadcast table poisoned");
+        let Some(matches) = table.get(key.as_bytes()) else {
+            return;
+        };
+        let probe =
+            raw_fields(line, self.side.schema.delimiter, self.side.schema.fields.len()).join("\t");
+        for build in matches {
+            let (l, r) = if self.build_is_left {
+                (build.as_bytes(), probe.as_bytes())
+            } else {
+                (probe.as_bytes(), build.as_bytes())
+            };
+            emit_joined(
+                self.combined_arity,
+                self.residual.as_ref(),
+                &self.project,
+                l,
+                r,
+                &mut |out| emit(b"", out),
+            );
+        }
+    }
+}
+
+/// Map-only filter/projection pass. The filter runs on a columnar
+/// decode of only its referenced columns; the full row materializes
+/// only when a projection needs it.
 struct SelectMapper {
     schema: Schema,
     filter: Option<Expr>,
     project: Vec<usize>,
+    /// Columns the filter references (columnar decode set).
+    wanted: Vec<usize>,
 }
 
 impl Mapper for SelectMapper {
@@ -919,8 +1524,8 @@ impl Mapper for SelectMapper {
         if line.trim().is_empty() {
             return;
         }
-        let row = self.schema.parse_row(line);
         if let Some(f) = &self.filter {
+            let row = plain_row(&self.schema, line, &self.wanted);
             match f.eval(&row) {
                 Ok(v) if v.truthy() => {}
                 _ => return,
@@ -975,12 +1580,16 @@ impl Mapper for SortMapper {
 // ---------------------------------------------------------------------------
 
 /// Map side of the aggregation: filter rows, emit
-/// `(group_key, partial-aggregate tuple)`.
+/// `(group_key, partial-aggregate tuple)`. Rows decode columnar: only
+/// the columns the filter / group key / aggregate arguments reference
+/// are ever parsed.
 struct PlanMapper {
     schema: Schema,
     filter: Option<Expr>,
     group_by: Option<Expr>,
     aggs: Vec<(Aggregate, Expr)>,
+    /// Union of all referenced columns (columnar decode set).
+    wanted: Vec<usize>,
 }
 
 /// Serialized partial: for each aggregate, `count,sum,min,max` joined by
@@ -1007,7 +1616,7 @@ impl Mapper for PlanMapper {
         if line.trim().is_empty() {
             return;
         }
-        let row = self.schema.parse_row(line);
+        let row = plain_row(&self.schema, line, &self.wanted);
         if let Some(f) = &self.filter {
             match f.eval(&row) {
                 Ok(v) if v.truthy() => {}
@@ -1303,19 +1912,26 @@ mod tests {
             desc: true,
         });
         p.limit = Some(5);
-        let stages = p.compile_stages().unwrap();
+        let (stages, stats) = p.optimized_stages().unwrap();
         assert_eq!(
             stages.iter().map(|s| s.kind).collect::<Vec<_>>(),
             vec![StageKind::Join, StageKind::Agg, StageKind::Sort]
         );
+        // Fusion folded the naive filter stage into the join...
+        assert_eq!(stats.naive_stages, 4);
+        assert_eq!(stats.stages_fused, 1);
+        // ...and pushdown moved the left-only conjunct below the join.
+        assert_eq!(stats.predicate_pushdowns, 1);
+        assert_eq!(stages[0].left_filter.as_deref(), Some("(amount > 10)"));
+        assert!(stages[0].right_filter.is_none());
         // Chained through intermediates; final stage writes the output.
         assert_eq!(stages[0].output_dir, "/report.stage0");
         assert_eq!(stages[1].input_dir, "/report.stage0");
         assert_eq!(stages[1].output_dir, "/report.stage1");
         assert_eq!(stages[2].input_dir, "/report.stage1");
         assert_eq!(stages[2].output_dir, "/report");
-        // The join consumed the filter; later stages must not re-filter.
-        assert!(stages[0].filter.is_some());
+        // The join consumed the whole filter; nothing else re-filters.
+        assert!(stages[0].filter.is_none(), "fully pushed below the join");
         assert!(stages[1].filter.is_none() && stages[2].filter.is_none());
         // Combined schema renames the colliding right-side key.
         assert_eq!(
@@ -1467,5 +2083,292 @@ mod tests {
         let lines = sorted_result_lines("10\tx\n2\ty\nalpha\tz");
         assert_eq!(lines[0].starts_with('2'), true);
         assert_eq!(lines[1].starts_with("10"), true);
+    }
+
+    #[test]
+    fn naive_lowering_emits_one_stage_per_op() {
+        let mut p = LogicalPlan::single(
+            TableRef {
+                dir: "/sales".into(),
+                schema: sales_schema(),
+            },
+            "/report",
+            3,
+        );
+        p.join = Some(JoinClause {
+            right: TableRef {
+                dir: "/regions".into(),
+                schema: Schema::new(&["region", "country"], ','),
+            },
+            left_key: "region".into(),
+            right_key: "region".into(),
+            right_prefix: "r".into(),
+        });
+        p.filter = Some("amount > 10".into());
+        p.group_by = Some("country".into());
+        p.aggregates = vec![AggSpec {
+            agg: Aggregate::Sum,
+            expr: "amount".into(),
+        }];
+        p.order_by = Some(OrderClause {
+            key: "sum_amount".into(),
+            desc: true,
+        });
+        let stages = p.lower_stages().unwrap();
+        assert_eq!(
+            stages.iter().map(|s| s.kind).collect::<Vec<_>>(),
+            vec![
+                StageKind::Join,
+                StageKind::Select,
+                StageKind::Agg,
+                StageKind::Sort
+            ]
+        );
+        // The naive join carries no map-side work; the select does.
+        assert!(stages[0].filter.is_none() && stages[0].left_filter.is_none());
+        assert_eq!(stages[1].filter.as_deref(), Some("amount > 10"));
+        assert!(stages[2].filter.is_none());
+    }
+
+    #[test]
+    fn fusion_folds_filter_and_projection_into_sort() {
+        let mut p = LogicalPlan::single(
+            TableRef {
+                dir: "/in".into(),
+                schema: sales_schema(),
+            },
+            "/out",
+            2,
+        );
+        p.filter = Some("amount > 100".into());
+        p.project = vec!["product".into(), "amount".into()];
+        p.order_by = Some(OrderClause {
+            key: "amount".into(),
+            desc: false,
+        });
+        let (stages, stats) = p.optimized_stages().unwrap();
+        assert_eq!(stages.len(), 1, "filter + project fused into the sort");
+        assert_eq!(stages[0].kind, StageKind::Sort);
+        assert_eq!(stages[0].filter.as_deref(), Some("amount > 100"));
+        assert_eq!(stages[0].project, vec!["product", "amount"]);
+        assert_eq!(stages[0].input_schema, sales_schema());
+        assert_eq!(stages[0].output_dir, "/out");
+        assert!(!stages[0].intermediate);
+        assert_eq!(stats.naive_stages, 3);
+        assert_eq!(stats.stages_fused, 2);
+        assert_eq!(stats.predicate_pushdowns, 0);
+    }
+
+    #[test]
+    fn fusion_merges_adjacent_selects() {
+        let mut p = LogicalPlan::single(
+            TableRef {
+                dir: "/in".into(),
+                schema: sales_schema(),
+            },
+            "/out",
+            2,
+        );
+        p.filter = Some("amount > 100".into());
+        p.project = vec!["region".into()];
+        let (stages, stats) = p.optimized_stages().unwrap();
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].kind, StageKind::Select);
+        assert_eq!(stages[0].filter.as_deref(), Some("amount > 100"));
+        assert_eq!(stages[0].project, vec!["region"]);
+        assert_eq!(stages[0].n_reduces, 0, "still map-only after the merge");
+        assert_eq!(stats.stages_fused, 1);
+    }
+
+    #[test]
+    fn pushdown_splits_conjuncts_by_side() {
+        let mut st = StageSpec {
+            right_dir: Some("/r".into()),
+            right_schema: Some(Schema::new(&["region", "country"], ',')),
+            left_key: Some("region".into()),
+            right_key: Some("region".into()),
+            combined_fields: vec![
+                "region".into(),
+                "amount".into(),
+                "r_region".into(),
+                "country".into(),
+            ],
+            filter: Some(
+                "amount > 100 AND country == 'UK' AND amount + r_region > 0".into(),
+            ),
+            ..StageSpec::new(StageKind::Join, Schema::new(&["region", "amount"], ','), 2)
+        };
+        let pushed = push_join_predicates(&mut st);
+        assert_eq!(pushed, 2);
+        assert_eq!(st.left_filter.as_deref(), Some("(amount > 100)"));
+        assert_eq!(st.right_filter.as_deref(), Some("(country = 'UK')"));
+        // The mixed conjunct stays as the residual post-join filter.
+        assert_eq!(st.filter.as_deref(), Some("((amount + r_region) > 0)"));
+        // The residual re-parses against the combined schema.
+        let combined = Schema {
+            fields: st.combined_fields.clone(),
+            delimiter: '\t',
+        };
+        parse_expr(st.filter.as_deref().unwrap(), &combined).unwrap();
+        parse_expr(
+            st.left_filter.as_deref().unwrap(),
+            &Schema::new(&["region", "amount"], ','),
+        )
+        .unwrap();
+        parse_expr(
+            st.right_filter.as_deref().unwrap(),
+            &Schema::new(&["region", "country"], ','),
+        )
+        .unwrap();
+        // A filterless join pushes nothing.
+        let mut bare = StageSpec::new(StageKind::Join, sales_schema(), 2);
+        assert_eq!(push_join_predicates(&mut bare), 0);
+    }
+
+    #[test]
+    fn choose_broadcast_cost_rule() {
+        // Unknown (0-byte) sides never broadcast.
+        assert_eq!(choose_broadcast(0, 0, 1024), None);
+        assert_eq!(choose_broadcast(0, 50, 1024), Some(false));
+        assert_eq!(choose_broadcast(50, 0, 1024), Some(true));
+        // The smaller qualifying side builds; ties build right.
+        assert_eq!(choose_broadcast(100, 50, 1024), Some(false));
+        assert_eq!(choose_broadcast(10, 50, 1024), Some(true));
+        assert_eq!(choose_broadcast(50, 50, 1024), Some(false));
+        // Over-threshold sides fall back to repartition.
+        assert_eq!(choose_broadcast(2048, 4096, 1024), None);
+        assert_eq!(choose_broadcast(2048, 512, 1024), Some(false));
+        // max = 0 disables broadcast entirely.
+        assert_eq!(choose_broadcast(10, 10, 0), None);
+    }
+
+    #[test]
+    fn broadcast_join_matches_repartition_byte_for_byte() {
+        let fs = fs();
+        fs.mkdirs("/lustre/scratch/bj/sales").unwrap();
+        fs.mkdirs("/lustre/scratch/bj/regions").unwrap();
+        let sales = "wales,150\nwales,80\nengland,99\nengland,700\n";
+        let regions = "wales,UK\nengland,UK\n";
+        fs.create("/lustre/scratch/bj/sales/part-0", sales.as_bytes())
+            .unwrap();
+        fs.create("/lustre/scratch/bj/regions/part-0", regions.as_bytes())
+            .unwrap();
+        let stage = |left: &str, right: &str| StageSpec {
+            input_dir: left.into(),
+            right_dir: Some(right.into()),
+            right_schema: Some(Schema::new(&["region", "country"], ',')),
+            left_key: Some("region".into()),
+            right_key: Some("region".into()),
+            combined_fields: vec![
+                "region".into(),
+                "amount".into(),
+                "r_region".into(),
+                "country".into(),
+            ],
+            filter: Some("amount > 100".into()),
+            project: vec!["country".into(), "amount".into()],
+            output_dir: "/o".into(),
+            ..StageSpec::new(StageKind::Join, Schema::new(&["region", "amount"], ','), 2)
+        };
+
+        // Both sides exist and fit under the default threshold: the
+        // smaller (regions) side broadcasts, the job goes map-only.
+        let bcast = stage("/lustre/scratch/bj/sales", "/lustre/scratch/bj/regions")
+            .compile(&fs)
+            .unwrap();
+        assert_eq!(bcast.name, "query-join-broadcast");
+        assert_eq!(bcast.n_reduces, 0, "broadcast join is map-only");
+        assert!(bcast.tagged_inputs.is_empty());
+        assert_eq!(bcast.broadcast_inputs.len(), 1);
+        assert_eq!(bcast.broadcast_inputs[0].dir, "/lustre/scratch/bj/regions");
+        assert_eq!(bcast.input_dir, "/lustre/scratch/bj/sales");
+        bcast.broadcast_inputs[0].sink.load(regions.as_bytes()).unwrap();
+        let mut bcast_out: Vec<String> = Vec::new();
+        for line in sales.lines() {
+            bcast.mapper.map(b"0", line.as_bytes(), &mut |_, v| {
+                bcast_out.push(String::from_utf8(v.to_vec()).unwrap())
+            });
+        }
+
+        // Oracle: missing directories read as size-unknown, forcing the
+        // repartition strategy on the same stage spec.
+        let repart = stage("/nosuch_l", "/nosuch_r").compile(&fs).unwrap();
+        assert_eq!(repart.name, "query-join");
+        assert_eq!(repart.tagged_inputs.len(), 2);
+        let mut by_key: std::collections::BTreeMap<Vec<u8>, Vec<Vec<u8>>> =
+            std::collections::BTreeMap::new();
+        for line in sales.lines() {
+            repart.tagged_inputs[0].mapper.map(b"0", line.as_bytes(), &mut |k, v| {
+                by_key.entry(k.to_vec()).or_default().push(v.to_vec())
+            });
+        }
+        for line in regions.lines() {
+            repart.tagged_inputs[1].mapper.map(b"0", line.as_bytes(), &mut |k, v| {
+                by_key.entry(k.to_vec()).or_default().push(v.to_vec())
+            });
+        }
+        let mut repart_out: Vec<String> = Vec::new();
+        for (k, vals) in &by_key {
+            let mut it = vals.iter().map(|v| v.as_slice());
+            repart.reducer.reduce(k, &mut it, &mut |_, v| {
+                repart_out.push(String::from_utf8(v.to_vec()).unwrap())
+            });
+        }
+
+        bcast_out.sort();
+        repart_out.sort();
+        assert_eq!(bcast_out, vec!["UK\t150", "UK\t700"]);
+        assert_eq!(bcast_out, repart_out, "strategies must agree byte-for-byte");
+    }
+
+    #[test]
+    fn pushed_filter_sees_padded_rows_like_the_reducer() {
+        // `NOT amount > 10` keeps a short row (amount pads to "") under
+        // post-join semantics; the pushed map-side evaluation must agree.
+        let st = StageSpec {
+            input_dir: "/nosuch_l".into(),
+            right_dir: Some("/nosuch_r".into()),
+            right_schema: Some(Schema::new(&["region", "country"], ',')),
+            left_key: Some("region".into()),
+            right_key: Some("region".into()),
+            combined_fields: vec![
+                "region".into(),
+                "amount".into(),
+                "r_region".into(),
+                "country".into(),
+            ],
+            left_filter: Some("NOT amount > 10".into()),
+            output_dir: "/o".into(),
+            ..StageSpec::new(StageKind::Join, Schema::new(&["region", "amount"], ','), 2)
+        };
+        let spec = st.compile(&fs()).unwrap();
+        let mut out: Vec<Vec<u8>> = Vec::new();
+        let mut emit = |_: &[u8], v: &[u8]| out.push(v.to_vec());
+        spec.tagged_inputs[0].mapper.map(b"0", b"wales", &mut emit);
+        assert_eq!(out, vec![b"Lwales\t".to_vec()], "short row kept, padded");
+        out.clear();
+        spec.tagged_inputs[0].mapper.map(b"0", b"wales,80", &mut emit);
+        assert!(out.is_empty(), "80 > 10, so NOT drops the row");
+    }
+
+    #[test]
+    fn side_views_match_reference_decode() {
+        let schema = sales_schema();
+        let wanted = [0usize, 2];
+        for line in ["wales,w,150", "a,,b", "short", "x,y,z,extra", "10,2,3.5"] {
+            let (plain, padded) = side_views(&schema, line, &wanted);
+            let reference = schema.parse_row(line);
+            assert_eq!(plain.0.len(), reference.0.len().min(3), "line={line}");
+            for &i in &wanted {
+                if i < plain.0.len() {
+                    assert_eq!(plain.0[i], reference.0[i], "plain {line} col {i}");
+                }
+            }
+            let fields = raw_fields(line, ',', 3);
+            assert_eq!(padded.0.len(), 3);
+            for &i in &wanted {
+                assert_eq!(padded.0[i], Value::parse(&fields[i]), "padded {line} col {i}");
+            }
+        }
     }
 }

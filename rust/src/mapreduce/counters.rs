@@ -56,6 +56,14 @@ pub const MAPS_INVALIDATED: &str = "MAPS_INVALIDATED";
 pub const COMBINE_INPUT_RECORDS: &str = "COMBINE_INPUT_RECORDS";
 /// Records the combiner emitted (what the shuffle actually carries).
 pub const COMBINE_OUTPUT_RECORDS: &str = "COMBINE_OUTPUT_RECORDS";
+/// Bytes shipped through the broadcast side-channel (DistributedCache
+/// shape) before map scheduling — the broadcast-hash join's small side.
+pub const BROADCAST_BYTES: &str = "BROADCAST_BYTES";
+/// Logical-plan stages eliminated by map-stage fusion (planner counter,
+/// stamped by the query layer rather than the engine).
+pub const STAGES_FUSED: &str = "STAGES_FUSED";
+/// Filter conjuncts the planner pushed below a join (planner counter).
+pub const PREDICATE_PUSHDOWNS: &str = "PREDICATE_PUSHDOWNS";
 
 impl Counters {
     pub fn new() -> Self {

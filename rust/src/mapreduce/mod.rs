@@ -150,6 +150,24 @@ pub struct TaggedInput {
     pub mapper: Arc<dyn Mapper>,
 }
 
+/// Receiver for a broadcast input (Hadoop's DistributedCache shape): the
+/// engine reads the directory once per job run and hands the concatenated
+/// bytes to `load` before any map task is scheduled. Map attempts —
+/// including retries, speculative twins, and re-executions after node
+/// loss — then share the loaded state, so broadcast data survives
+/// map re-execution by construction.
+pub trait BroadcastSink: Send + Sync {
+    fn load(&self, data: &[u8]) -> crate::error::Result<()>;
+}
+
+/// One broadcast side-input: a Dfs directory whose full contents (all
+/// non-underscore part files, in name order) are shipped to `sink`
+/// at job start — the broadcast-hash join's small side.
+pub struct BroadcastInput {
+    pub dir: String,
+    pub sink: Arc<dyn BroadcastSink>,
+}
+
 /// A MapReduce job description.
 pub struct JobSpec {
     pub name: String,
@@ -170,6 +188,10 @@ pub struct JobSpec {
     /// entry and each split runs its own entry's mapper (`mapper` and
     /// `input_dir` are ignored for split planning).
     pub tagged_inputs: Vec<TaggedInput>,
+    /// Broadcast side-inputs, loaded once per run before map scheduling
+    /// (each directory's bytes go to its [`BroadcastSink`]; the volume is
+    /// surfaced as the `BROADCAST_BYTES` counter).
+    pub broadcast_inputs: Vec<BroadcastInput>,
     pub reducer: Arc<dyn Reducer>,
     /// Optional map-side combiner, run over each sorted spill run before
     /// the segment is committed to the shuffle (Hadoop contract: it must
@@ -202,6 +224,7 @@ impl JobSpec {
             synthetic_rows: None,
             mapper: Arc::new(IdentityMapper),
             tagged_inputs: Vec::new(),
+            broadcast_inputs: Vec::new(),
             reducer: Arc::new(IdentityReducer),
             combiner: None,
             partitioner: Arc::new(HashPartitioner),

@@ -300,6 +300,15 @@ impl<'a> MrEngine<'a> {
         let counters = Arc::new(Counters::new());
         let shuffle = Arc::new(ShuffleStore::new());
 
+        // Broadcast side-inputs (DistributedCache shape): loaded exactly
+        // once per run, before any map container is granted, so every map
+        // attempt — retries, speculative twins, node-loss re-executions —
+        // shares the same loaded state.
+        if let Err(e) = self.load_broadcasts(&spec, &counters) {
+            self.fail_app(&spec, handle.app, user, &counters, now)?;
+            return Err(e);
+        }
+
         let mut phases = PhaseTimings::default();
         let exec = match self.mode {
             SchedMode::Pipelined => self.run_pipelined(
@@ -352,6 +361,38 @@ impl<'a> MrEngine<'a> {
             wall: t0.elapsed(),
             phases,
         })
+    }
+
+    /// Ship each broadcast input to its sink: concatenate the directory's
+    /// non-underscore part files in name order and call `load` once.
+    fn load_broadcasts(&self, spec: &JobSpec, counters: &Counters) -> Result<()> {
+        if spec.broadcast_inputs.is_empty() {
+            return Ok(());
+        }
+        let mut total = 0u64;
+        for b in &spec.broadcast_inputs {
+            let mut files: Vec<String> = self
+                .dfs
+                .list(&b.dir)
+                .into_iter()
+                .filter(|p| !p.rsplit('/').next().unwrap_or("").starts_with('_'))
+                .collect();
+            files.sort();
+            let mut data = Vec::new();
+            for f in &files {
+                let len = self.dfs.size(f)?;
+                data.extend_from_slice(&self.dfs.read_range(f, 0, len)?);
+                // Part files may lack a trailing newline; without one the
+                // next file's first line would merge into this file's last.
+                if data.last().is_some_and(|&b| b != b'\n') {
+                    data.push(b'\n');
+                }
+            }
+            total += data.len() as u64;
+            b.sink.load(&data)?;
+        }
+        counters.add(counters::BROADCAST_BYTES, total);
+        Ok(())
     }
 
     fn fail_app(

@@ -252,6 +252,126 @@ pub fn combine_sorted(records: &RecordBuf, combiner: &dyn crate::mapreduce::Redu
     out
 }
 
+/// A batch of delimited text rows with a precomputed per-field index,
+/// layered on [`RecordBuf`]: line payloads live in one arena and each row
+/// carries `arity + 1` cut points, so consumers (projection, aggregation,
+/// the broadcast hash-table build) slice only the columns an expression
+/// references instead of re-splitting every row per record.
+///
+/// Field `i` of a row spans `cuts[i] .. cuts[i+1] - 1` within the line
+/// (the `-1` skips the delimiter). Rows shorter than `arity` index the
+/// missing fields as empty; extra trailing fields are ignored — matching
+/// the query layer's pad/truncate row contract.
+#[derive(Clone, Default)]
+pub struct ColumnBatch {
+    lines: RecordBuf,
+    cuts: Vec<u32>,
+    arity: usize,
+    delimiter: u8,
+}
+
+impl ColumnBatch {
+    pub fn new(arity: usize, delimiter: u8) -> ColumnBatch {
+        ColumnBatch {
+            lines: RecordBuf::new(),
+            cuts: Vec::new(),
+            arity,
+            delimiter,
+        }
+    }
+
+    #[inline]
+    pub fn arity(&self) -> usize {
+        self.arity
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.lines.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    /// Append one row, scanning its delimiters once.
+    pub fn push_line(&mut self, line: &[u8]) {
+        self.lines.push(b"", line);
+        let sentinel = line.len() as u32 + 1;
+        self.cuts.push(0);
+        let mut have = 1;
+        for (pos, &b) in line.iter().enumerate() {
+            if b == self.delimiter {
+                self.cuts.push(pos as u32 + 1);
+                have += 1;
+                if have == self.arity + 1 {
+                    break;
+                }
+            }
+        }
+        while have < self.arity + 1 {
+            self.cuts.push(sentinel);
+            have += 1;
+        }
+    }
+
+    /// The raw line bytes of row `row`.
+    #[inline]
+    pub fn line(&self, row: usize) -> &[u8] {
+        self.lines.value(row)
+    }
+
+    /// Field `col` of row `row` without re-splitting the line; empty for
+    /// columns past the row's end or past the batch arity.
+    #[inline]
+    pub fn field(&self, row: usize, col: usize) -> &[u8] {
+        if col >= self.arity {
+            return b"";
+        }
+        let line = self.lines.value(row);
+        let c = &self.cuts[row * (self.arity + 1)..];
+        let len = line.len();
+        let start = (c[col] as usize).min(len);
+        let end = (c[col + 1] as usize).saturating_sub(1).clamp(start, len);
+        &line[start..end]
+    }
+
+    /// Number of fields actually present in row `row`'s line, capped at
+    /// the batch arity — what `line.split(delim).count()` would report
+    /// for short rows (padding cuts carry the out-of-range sentinel and
+    /// don't count; real cut offsets never exceed the line length).
+    #[inline]
+    pub fn fields_in(&self, row: usize) -> usize {
+        let len = self.line(row).len() as u32;
+        let c = &self.cuts[row * (self.arity + 1)..(row + 1) * (self.arity + 1)];
+        self.arity.min(c[1..].iter().filter(|&&x| x <= len).count() + 1)
+    }
+
+    /// Total line payload bytes held.
+    #[inline]
+    pub fn payload_bytes(&self) -> u64 {
+        self.lines.payload_bytes()
+    }
+
+    pub fn clear(&mut self) {
+        self.lines = RecordBuf::new();
+        self.cuts.clear();
+    }
+}
+
+impl fmt::Debug for ColumnBatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "ColumnBatch({} rows x {} cols, {} bytes)",
+            self.rows(),
+            self.arity,
+            self.payload_bytes()
+        )
+    }
+}
+
 /// Logical equality: same records in the same order, regardless of arena
 /// layout (a sorted buffer equals a freshly-pushed sorted copy).
 impl PartialEq for RecordBuf {
@@ -402,6 +522,81 @@ mod tests {
         assert!(out.is_sorted_by_key());
         // Empty input combines to empty output.
         assert_eq!(combine_sorted(&RecordBuf::new(), &CountCombiner).len(), 0);
+    }
+
+    #[test]
+    fn column_batch_slices_match_split_semantics() {
+        let mut cb = ColumnBatch::new(3, b',');
+        cb.push_line(b"wales,widget,120");
+        cb.push_line(b"a,,b"); // empty middle field
+        cb.push_line(b"short"); // fewer fields than arity -> empty pads
+        cb.push_line(b""); // empty line
+        cb.push_line(b"x,y,z,extra,extra2"); // extra fields ignored
+        assert_eq!(cb.rows(), 5);
+        assert_eq!(cb.arity(), 3);
+        assert_eq!(cb.field(0, 0), b"wales");
+        assert_eq!(cb.field(0, 1), b"widget");
+        assert_eq!(cb.field(0, 2), b"120");
+        assert_eq!(cb.field(1, 1), b"");
+        assert_eq!(cb.field(1, 2), b"b");
+        assert_eq!(cb.field(2, 0), b"short");
+        assert_eq!(cb.field(2, 1), b"");
+        assert_eq!(cb.field(2, 2), b"");
+        assert_eq!(cb.field(3, 0), b"");
+        assert_eq!(cb.field(4, 2), b"z");
+        assert_eq!(cb.field(0, 7), b"", "past arity is empty");
+        assert_eq!(cb.line(0), b"wales,widget,120");
+        cb.clear();
+        assert!(cb.is_empty());
+    }
+
+    #[test]
+    fn column_batch_field_counts_match_split() {
+        let mut cb = ColumnBatch::new(3, b',');
+        for line in ["a,b,c", "a,b", "a,", "a", "", "a,b,c,d,e", ",,", ",,,"] {
+            cb.push_line(line.as_bytes());
+        }
+        let want: Vec<usize> = ["a,b,c", "a,b", "a,", "a", "", "a,b,c,d,e", ",,", ",,,"]
+            .iter()
+            .map(|l| l.split(',').count().min(3))
+            .collect();
+        let got: Vec<usize> = (0..cb.rows()).map(|r| cb.fields_in(r)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn column_batch_parity_with_split_property() {
+        props(40, |g| {
+            let arity = g.usize(1..6);
+            let mut cb = ColumnBatch::new(arity, b',');
+            let mut expected: Vec<Vec<String>> = Vec::new();
+            for _ in 0..g.usize(0..30) {
+                let n_fields = g.usize(0..8);
+                let fields: Vec<String> = (0..n_fields).map(|_| g.ident(6)).collect();
+                let line = fields.join(",");
+                cb.push_line(line.as_bytes());
+                // Reference: split, truncate to arity, pad with "".
+                let mut split: Vec<String> = if line.is_empty() && n_fields == 0 {
+                    vec![String::new()]
+                } else {
+                    line.split(',').map(str::to_string).collect()
+                };
+                split.truncate(arity);
+                while split.len() < arity {
+                    split.push(String::new());
+                }
+                expected.push(split);
+            }
+            for (row, fields) in expected.iter().enumerate() {
+                for (col, want) in fields.iter().enumerate() {
+                    assert_eq!(
+                        cb.field(row, col),
+                        want.as_bytes(),
+                        "row {row} col {col}"
+                    );
+                }
+            }
+        });
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Multi-stage query engine integration (PR 5 acceptance):
+//! Multi-stage query engine integration (PR 5 + PR 6 acceptance):
 //!
 //! * a Hive query with JOIN + ORDER BY runs end to end over the API as a
 //!   workflow of ≥ 2 chained MR jobs, and its totally-ordered output is
@@ -8,23 +8,79 @@
 //!   while strictly reducing the `SHUFFLE_BYTES` counter (also asserted
 //!   as a property over random integer tables);
 //! * Pig's JOIN / ORDER / LIMIT pipeline runs as chained jobs on one
-//!   dynamic cluster via the `query` payload, with per-stage counters.
+//!   dynamic cluster via the `query` payload, with per-stage counters;
+//! * the cost-based optimizer (PR 6) is pinned against its oracles: the
+//!   broadcast-hash join vs the repartition fallback
+//!   (`HPCW_BROADCAST_MAX_BYTES=0`) and the fused plan vs the naive
+//!   lowering (`HPCW_FUSION=0`) are byte-identical, fusion renumbers
+//!   stages contiguously and leaves no orphan `.stage{i}` intermediates,
+//!   the broadcast hash table survives map re-execution and node loss,
+//!   and EXPLAIN output is pinned golden-file exact for a Pig and a
+//!   Hive plan.
 
-use hpcw::api::{ApiClient, ApiServer, AppPayload, Stack};
+use hpcw::api::{parse_query_text, ApiClient, ApiServer, AppPayload, Stack};
 use hpcw::api::wire::StepState;
-use hpcw::cluster::NodeId;
-use hpcw::config::StackConfig;
+use hpcw::cluster::{ClusterManager, NodeId};
+use hpcw::config::{ElasticConfig, StackConfig};
 use hpcw::frameworks::plan::StageKind;
 use hpcw::lustre::{Dfs, LustreFs};
-use hpcw::mapreduce::MrEngine;
+use hpcw::mapreduce::{
+    counters, ElasticAction, ElasticPlan, FailurePlan, MrEngine, TaskId,
+};
 use hpcw::metrics::Metrics;
 use hpcw::testkit::props;
 use hpcw::util::ids::IdGen;
 use hpcw::util::pool::Pool;
 use hpcw::util::time::Micros;
 use hpcw::wrapper::DynamicCluster;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
+
+/// Serializes tests that read or write the planner's env knobs
+/// (`HPCW_BROADCAST_MAX_BYTES`, `HPCW_FUSION`). Rust tests share one
+/// process, so an unguarded `set_var` would race every concurrent test
+/// whose plan compiles a join; the guard also restores the previous
+/// values on drop, no matter how the test exits.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+struct EnvGuard {
+    _lock: MutexGuard<'static, ()>,
+    saved: Vec<(&'static str, Option<String>)>,
+}
+
+impl EnvGuard {
+    fn lock() -> EnvGuard {
+        let lock = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let saved = ["HPCW_BROADCAST_MAX_BYTES", "HPCW_FUSION"]
+            .iter()
+            .map(|k| (*k, std::env::var(k).ok()))
+            .collect();
+        EnvGuard { _lock: lock, saved }
+    }
+
+    fn set(&self, key: &str, value: &str) {
+        std::env::set_var(key, value);
+    }
+
+    fn clear(&self, key: &str) {
+        std::env::remove_var(key);
+    }
+}
+
+impl Drop for EnvGuard {
+    fn drop(&mut self) {
+        for (k, v) in &self.saved {
+            match v {
+                Some(v) => std::env::set_var(k, v),
+                None => std::env::remove_var(k),
+            }
+        }
+    }
+}
+
+fn counter(result: &hpcw::api::AppResult, key: &str) -> Option<u64> {
+    result.counters.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+}
 
 /// Concatenate a query's output parts in partition-file order (which is
 /// global order for sort stages).
@@ -280,6 +336,8 @@ fn prop_combiner_parity_on_random_tables() {
 /// up, and the result carries merged plus per-stage (`s{i}.`) counters.
 #[test]
 fn pig_join_order_limit_runs_on_one_cluster() {
+    // Default planner knobs: the 20-byte regions table auto-broadcasts.
+    let _env = EnvGuard::lock();
     let mut stack = Stack::new(StackConfig::tiny()).unwrap();
     stack.dfs.mkdirs("/lustre/scratch/pg-sales").unwrap();
     stack.dfs.mkdirs("/lustre/scratch/pg-regions").unwrap();
@@ -334,10 +392,437 @@ fn pig_join_order_limit_runs_on_one_cluster() {
         .collect();
     assert!(amounts.windows(2).all(|w| w[0] >= w[1]), "{amounts:?}");
     assert_eq!(amounts[0], 50 + 29 * 11);
-    // Per-stage counters present: s0 = join, s1 = sort.
-    assert!(result.counters.iter().any(|(k, _)| k == "s0.SHUFFLE_BYTES"));
-    assert!(result.counters.iter().any(|(k, _)| k == "s1.SHUFFLE_BYTES"));
+    // Per-stage counters present: s0 = join, s1 = sort. The tiny
+    // regions table is under the broadcast threshold, so the cost rule
+    // makes stage 0 a map-only broadcast-hash join — it ships the build
+    // side (BROADCAST_BYTES), not a shuffle.
+    assert!(counter(&result, "s0.BROADCAST_BYTES").is_some_and(|v| v > 0));
+    assert_eq!(counter(&result, "s0.SHUFFLE_BYTES"), None);
+    assert!(counter(&result, "s1.SHUFFLE_BYTES").is_some_and(|v| v > 0));
+    // Planner counters ride along in the merged set: the FILTER fused
+    // into the join stage and its predicate pushed below the join.
+    assert!(counter(&result, "STAGES_FUSED").is_some_and(|v| v >= 1));
+    assert!(counter(&result, "PREDICATE_PUSHDOWNS").is_some_and(|v| v >= 1));
     // Intermediates were deleted after success.
     assert!(!stack.dfs.exists("/lustre/scratch/pg-top.stage0"));
     assert!(stack.dfs.exists("/lustre/scratch/pg-top/_SUCCESS"));
+}
+
+/// PR 6 regression (satellite b): a filter → project → join chain fuses
+/// into the join stage itself, so the query runs as ONE map-only job,
+/// the per-stage counters renumber contiguously from `s0.`, and no
+/// orphan `.stage{i}` intermediate is ever created.
+#[test]
+fn fusion_collapses_pipeline_and_leaves_no_orphan_intermediates() {
+    let _env = EnvGuard::lock();
+    let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/fu-sales").unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/fu-regions").unwrap();
+    let mut text = String::new();
+    for i in 0..20u64 {
+        let region = ["wales", "england"][(i % 2) as usize];
+        text.push_str(&format!("{region},p{i},{}\n", 90 + i * 10));
+    }
+    stack
+        .dfs
+        .create("/lustre/scratch/fu-sales/part-0", text.as_bytes())
+        .unwrap();
+    stack
+        .dfs
+        .create("/lustre/scratch/fu-regions/part-0", b"wales,UK\nengland,EN\n")
+        .unwrap();
+    let script = "
+        sales   = LOAD '/lustre/scratch/fu-sales' USING ',' AS (region, product, amount);
+        regions = LOAD '/lustre/scratch/fu-regions' USING ',' AS (region, country);
+        j   = JOIN sales BY region, regions BY region;
+        big = FILTER j BY amount > 100;
+        out = FOREACH big GENERATE country, amount;
+        STORE out INTO '/lustre/scratch/fu-out';
+    ";
+    let id = stack
+        .submit(
+            4,
+            "ana",
+            AppPayload::Query {
+                engine: "pig".into(),
+                text: script.into(),
+                reduces: 2,
+            },
+        )
+        .unwrap();
+    let result = stack.run_to_completion(id, 20).unwrap().clone();
+    // Naive lowering is Join, Select(filter), Select(project): the two
+    // Selects fold into the join's map phase and the filter pushes below
+    // the join, leaving a single broadcast (map-only) stage.
+    assert_eq!(counter(&result, "STAGES_FUSED"), Some(2));
+    assert_eq!(counter(&result, "PREDICATE_PUSHDOWNS"), Some(1));
+    assert!(result.counters.iter().any(|(k, _)| k.starts_with("s0.")));
+    assert!(
+        !result
+            .counters
+            .iter()
+            .any(|(k, _)| k.starts_with("s1.") || k.starts_with("s2.")),
+        "fused stages must renumber contiguously: {:?}",
+        result.counters
+    );
+    assert!(counter(&result, "s0.BROADCAST_BYTES").is_some_and(|v| v > 0));
+    // No orphan intermediate directory under any pre-fusion number.
+    for i in 0..3 {
+        assert!(
+            !stack.dfs.exists(&format!("/lustre/scratch/fu-out.stage{i}")),
+            "orphan intermediate .stage{i} left behind"
+        );
+    }
+    assert!(stack.dfs.exists("/lustre/scratch/fu-out/_SUCCESS"));
+    // Output is the filtered projection: amounts 110..280 survive.
+    let mut got: Vec<String> = read_parts(&stack.dfs, "/lustre/scratch/fu-out")
+        .lines()
+        .map(str::to_string)
+        .collect();
+    got.sort();
+    let mut want: Vec<String> = (2..20u64)
+        .map(|i| {
+            let country = ["UK", "EN"][(i % 2) as usize];
+            format!("{country}\t{}", 90 + i * 10)
+        })
+        .collect();
+    want.sort();
+    assert_eq!(got, want);
+    assert_eq!(result.records, 18);
+}
+
+/// PR 6 acceptance: the broadcast-hash join and the repartition fallback
+/// (`HPCW_BROADCAST_MAX_BYTES=0`) produce byte-identical query output,
+/// and broadcasting kills the join stage's shuffle entirely.
+#[test]
+fn broadcast_and_repartition_joins_are_byte_identical() {
+    let env = EnvGuard::lock();
+    let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/br-sales").unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/br-regions").unwrap();
+    let mut text = String::new();
+    for i in 0..40u64 {
+        // Unique amounts: the ORDER BY output is a deterministic total
+        // order, so the runs compare byte for byte. 'norge' has no
+        // regions row and is dropped by the inner join.
+        let region = ["wales", "england", "norge"][(i % 3) as usize];
+        text.push_str(&format!("{region},p{i},{}\n", 500 + i * 100));
+    }
+    stack
+        .dfs
+        .create("/lustre/scratch/br-sales/part-0", text.as_bytes())
+        .unwrap();
+    stack
+        .dfs
+        .create("/lustre/scratch/br-regions/part-0", b"wales,UK\nengland,EN\n")
+        .unwrap();
+    let run = |stack: &mut Stack, out: &str| {
+        let sql = format!(
+            "SELECT country, amount FROM '/lustre/scratch/br-sales' USING ',' \
+             SCHEMA (region, product, amount) \
+             JOIN '/lustre/scratch/br-regions' USING ',' \
+             SCHEMA (region, country) ON region = region \
+             WHERE amount > 1000 \
+             ORDER BY amount DESC \
+             INTO '{out}'"
+        );
+        let id = stack
+            .submit(
+                4,
+                "sid",
+                AppPayload::Query {
+                    engine: "hive".into(),
+                    text: sql,
+                    reduces: 2,
+                },
+            )
+            .unwrap();
+        stack.run_to_completion(id, 20).unwrap().clone()
+    };
+
+    let broadcast = run(&mut stack, "/lustre/scratch/br-bcast");
+    env.set("HPCW_BROADCAST_MAX_BYTES", "0");
+    let repart = run(&mut stack, "/lustre/scratch/br-repart");
+    env.clear("HPCW_BROADCAST_MAX_BYTES");
+
+    assert_eq!(
+        read_parts(&stack.dfs, "/lustre/scratch/br-bcast"),
+        read_parts(&stack.dfs, "/lustre/scratch/br-repart"),
+        "join strategy must never change query bytes"
+    );
+    // Broadcast: the join stage is map-only — no shuffle at all, the
+    // build side ships once per job via BROADCAST_BYTES.
+    assert!(counter(&broadcast, "s0.BROADCAST_BYTES").is_some_and(|v| v > 0));
+    assert_eq!(counter(&broadcast, "s0.SHUFFLE_BYTES"), None);
+    // Repartition: the join stage shuffles both tagged inputs.
+    assert!(counter(&repart, "s0.SHUFFLE_BYTES").is_some_and(|v| v > 0));
+    assert_eq!(counter(&repart, "s0.BROADCAST_BYTES"), None);
+    let total = |r: &hpcw::api::AppResult| {
+        counter(r, "s0.SHUFFLE_BYTES").unwrap_or(0) + counter(r, "s1.SHUFFLE_BYTES").unwrap_or(0)
+    };
+    assert!(
+        total(&broadcast) < total(&repart),
+        "broadcast must cut total shuffle bytes: {} vs {}",
+        total(&broadcast),
+        total(&repart)
+    );
+}
+
+/// PR 6 property (satellite c): over random tables, every optimizer
+/// configuration — fused+broadcast (default), fused+repartition,
+/// naive+broadcast, and naive+repartition (exactly the PR 5 plans) —
+/// produces byte-identical query output.
+#[test]
+fn prop_optimizer_configurations_are_byte_identical() {
+    let env = EnvGuard::lock();
+    props(5, |g| {
+        let mut stack = Stack::new(StackConfig::tiny()).unwrap();
+        stack.dfs.mkdirs("/lustre/scratch/po-sales").unwrap();
+        stack.dfs.mkdirs("/lustre/scratch/po-regions").unwrap();
+        let keys = ["wales", "england", "bayern", "norge", "alba"];
+        let n = g.usize(12..48);
+        let mut text = String::new();
+        for i in 0..n as u64 {
+            // i*1000 + jitter < 1000 keeps amounts unique: the sorted
+            // output is a deterministic total order.
+            let region = keys[g.usize(0..keys.len())];
+            text.push_str(&format!("{region},p{i},{}\n", 100 + i * 1000 + g.u64(0..1000)));
+        }
+        stack
+            .dfs
+            .create("/lustre/scratch/po-sales/part-0", text.as_bytes())
+            .unwrap();
+        // Two of the five regions have no country row (inner-join drops).
+        stack
+            .dfs
+            .create(
+                "/lustre/scratch/po-regions/part-0",
+                b"wales,UK\nengland,UK\nbayern,DE\n",
+            )
+            .unwrap();
+        let cutoff = g.u64(0..(n as u64 * 500));
+        let configs: &[(&str, Option<&str>, Option<&str>)] = &[
+            ("default", None, None),
+            ("repart", Some("0"), None),
+            ("naive", None, Some("0")),
+            ("pr5", Some("0"), Some("0")),
+        ];
+        let mut outputs = Vec::new();
+        for (tag, bcast, fusion) in configs {
+            match bcast {
+                Some(v) => env.set("HPCW_BROADCAST_MAX_BYTES", v),
+                None => env.clear("HPCW_BROADCAST_MAX_BYTES"),
+            }
+            match fusion {
+                Some(v) => env.set("HPCW_FUSION", v),
+                None => env.clear("HPCW_FUSION"),
+            }
+            let out = format!("/lustre/scratch/po-out-{tag}");
+            let script = format!(
+                "sales   = LOAD '/lustre/scratch/po-sales' USING ',' AS (region, product, amount);
+                 regions = LOAD '/lustre/scratch/po-regions' USING ',' AS (region, country);
+                 j   = JOIN sales BY region, regions BY region;
+                 big = FILTER j BY amount > {cutoff};
+                 prj = FOREACH big GENERATE region, country, amount;
+                 srt = ORDER prj BY amount DESC;
+                 STORE srt INTO '{out}';"
+            );
+            let id = stack
+                .submit(
+                    4,
+                    "prop",
+                    AppPayload::Query {
+                        engine: "pig".into(),
+                        text: script,
+                        reduces: 2,
+                    },
+                )
+                .unwrap();
+            stack.run_to_completion(id, 30).unwrap();
+            outputs.push((*tag, read_parts(&stack.dfs, &out)));
+        }
+        env.clear("HPCW_BROADCAST_MAX_BYTES");
+        env.clear("HPCW_FUSION");
+        let (_, reference) = &outputs[0];
+        for (tag, bytes) in &outputs[1..] {
+            assert_eq!(
+                bytes, reference,
+                "optimizer config '{tag}' changed the query bytes"
+            );
+        }
+    });
+}
+
+/// Iteration multiplier for the CI chaos step (`HPCW_CHAOS=1`).
+fn chaos_iters(base: u64) -> u64 {
+    if std::env::var("HPCW_CHAOS").is_ok() {
+        base * 4
+    } else {
+        base
+    }
+}
+
+/// PR 6 chaos (satellite c): the broadcast hash table is loaded once
+/// before the map phase, so failed map attempts and a mid-job node loss
+/// (with batch-allocator replacement) re-execute against the same
+/// broadcast state and the join output stays byte-identical.
+#[test]
+fn chaos_broadcast_join_survives_map_reexecution_and_node_loss() {
+    let _env = EnvGuard::lock();
+    props(chaos_iters(2), |g| {
+        let (cfg, fs, mut dc, pool) = engine_fixture();
+        fs.mkdirs("/lustre/scratch/cb-sales").unwrap();
+        fs.mkdirs("/lustre/scratch/cb-regions").unwrap();
+        let mut text = String::new();
+        for i in 0..150u64 {
+            let region = ["wales", "england", "bayern"][(i % 3) as usize];
+            text.push_str(&format!("{region},p{i},{}\n", 10 + i * 13));
+        }
+        fs.create("/lustre/scratch/cb-sales/part-0", text.as_bytes())
+            .unwrap();
+        fs.create(
+            "/lustre/scratch/cb-regions/part-0",
+            b"wales,UK\nengland,UK\nbayern,DE\n",
+        )
+        .unwrap();
+        let stage = |out: &str| {
+            let script = format!(
+                "sales   = LOAD '/lustre/scratch/cb-sales' USING ',' AS (region, product, amount);
+                 regions = LOAD '/lustre/scratch/cb-regions' USING ',' AS (region, country);
+                 j   = JOIN sales BY region, regions BY region;
+                 big = FILTER j BY amount > 100;
+                 prj = FOREACH big GENERATE country, amount;
+                 STORE prj INTO '{out}';"
+            );
+            let plan = parse_query_text("pig", &script, 2).unwrap();
+            let (stages, _) = plan.optimized_stages().unwrap();
+            assert_eq!(stages.len(), 1, "filter+project fuse into the join");
+            let mut spec = stages[0].compile(&*fs).unwrap();
+            assert_eq!(spec.name, "query-join-broadcast");
+            spec.split_bytes = 512; // several maps: retries have targets
+            spec
+        };
+
+        // Reference: a clean run on the same cluster.
+        let ref_outcome = {
+            let spec = stage("/lustre/scratch/cb-ref");
+            let mut engine = MrEngine::new(
+                &mut dc,
+                fs.clone() as Arc<dyn Dfs>,
+                &pool,
+                cfg.yarn.map_memory_mb,
+                cfg.yarn.reduce_memory_mb,
+            );
+            engine.run(Arc::new(spec), "chaos", Micros::ZERO).unwrap()
+        };
+        assert!(ref_outcome.counters.get(counters::BROADCAST_BYTES) > 0);
+        let n_maps = ref_outcome.maps;
+
+        // Chaos run: two random first attempts fail AND the host of a
+        // committed map dies once one map has committed; the batch
+        // allocator delivers a replacement node.
+        let mut spec = stage("/lustre/scratch/cb-chaos");
+        spec.failures = FailurePlan::none()
+            .fail_attempt(TaskId::map(g.u32(0..n_maps)), 0)
+            .fail_attempt(TaskId::map(g.u32(0..n_maps)), 0);
+        let cm = ClusterManager::new(
+            ElasticConfig {
+                nodes_min: 3,
+                nodes_max: 8,
+                queue_delay_ms: 20,
+                lease_walltime_s: 3_600,
+                nm_timeout_ms: 3_000,
+                ..Default::default()
+            },
+            (100..104).map(NodeId).collect(),
+        );
+        let plan = ElasticPlan::new()
+            .at_maps(1, ElasticAction::FailMapHost(g.u32(0..n_maps)));
+        let outcome = {
+            let mut engine = MrEngine::new(
+                &mut dc,
+                fs.clone() as Arc<dyn Dfs>,
+                &pool,
+                cfg.yarn.map_memory_mb,
+                cfg.yarn.reduce_memory_mb,
+            )
+            .with_cluster_manager(cm)
+            .with_plan(plan);
+            engine.run(Arc::new(spec), "chaos", Micros::ZERO).unwrap()
+        };
+        assert!(outcome.counters.get(counters::BROADCAST_BYTES) > 0);
+        assert_eq!(
+            read_parts(&fs, "/lustre/scratch/cb-ref"),
+            read_parts(&fs, "/lustre/scratch/cb-chaos"),
+            "broadcast state must survive map re-execution and node loss"
+        );
+    });
+}
+
+/// PR 6 golden file (satellite a): EXPLAIN for a Pig JOIN / FILTER /
+/// ORDER / LIMIT plan, pinned byte-exact. The staged inputs have fixed
+/// sizes (sales 40 B, regions 20 B), so the cost rule's strategy and
+/// `est_input_bytes` are deterministic.
+#[test]
+fn explain_pig_plan_matches_golden_file() {
+    let _env = EnvGuard::lock();
+    let stack = Stack::new(StackConfig::tiny()).unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/gx-sales").unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/gx-regions").unwrap();
+    stack
+        .dfs
+        .create(
+            "/lustre/scratch/gx-sales/part-0",
+            b"wales,p1,150\nengland,p2,90\nwales,p3,200\n",
+        )
+        .unwrap();
+    stack
+        .dfs
+        .create("/lustre/scratch/gx-regions/part-0", b"wales,UK\nengland,UK\n")
+        .unwrap();
+    assert_eq!(stack.dfs.size("/lustre/scratch/gx-sales/part-0").unwrap(), 40);
+    assert_eq!(stack.dfs.size("/lustre/scratch/gx-regions/part-0").unwrap(), 20);
+    let script = "
+        sales   = LOAD '/lustre/scratch/gx-sales' USING ',' AS (region, product, amount);
+        regions = LOAD '/lustre/scratch/gx-regions' USING ',' AS (region, country);
+        j   = JOIN sales BY region, regions BY region;
+        big = FILTER j BY amount > 100;
+        srt = ORDER big BY amount DESC;
+        top = LIMIT srt 5;
+        STORE top INTO '/lustre/scratch/gx-top';
+    ";
+    let doc = stack.explain_query("pig", script, 2).unwrap();
+    assert_eq!(
+        doc.pretty(),
+        include_str!("golden/explain_pig.json").trim_end(),
+        "EXPLAIN(pig) drifted from the golden file"
+    );
+}
+
+/// PR 6 golden file (satellite a): EXPLAIN for a Hive WHERE / GROUP BY /
+/// ORDER BY plan — the filter fuses into the aggregation's map phase.
+#[test]
+fn explain_hive_plan_matches_golden_file() {
+    let _env = EnvGuard::lock();
+    let stack = Stack::new(StackConfig::tiny()).unwrap();
+    stack.dfs.mkdirs("/lustre/scratch/gx-sales").unwrap();
+    stack
+        .dfs
+        .create(
+            "/lustre/scratch/gx-sales/part-0",
+            b"wales,p1,150\nengland,p2,90\nwales,p3,200\n",
+        )
+        .unwrap();
+    let sql = "SELECT region, SUM(amount) FROM '/lustre/scratch/gx-sales' USING ',' \
+               SCHEMA (region, product, amount) \
+               WHERE amount > 100 \
+               GROUP BY region \
+               ORDER BY sum_amount DESC \
+               INTO '/lustre/scratch/gx-agg'";
+    let doc = stack.explain_query("hive", sql, 2).unwrap();
+    assert_eq!(
+        doc.pretty(),
+        include_str!("golden/explain_hive.json").trim_end(),
+        "EXPLAIN(hive) drifted from the golden file"
+    );
 }
