@@ -1,0 +1,219 @@
+//! TWO-LEVEL — burst tier vs all-in-RAM (PR 7): the same Terasort run on
+//! an unbounded backend and on one whose burst tier is **4× smaller than
+//! the input**, so the job runs through evictions, read-through
+//! promotions and shuffle spill. Emits the tiering overhead ratio and the
+//! eviction/spill counts to **`BENCH_PR7.json`** (gated by the committed
+//! baseline floor), and proves the constrained run **byte-identical** to
+//! the RAM run — including under a mid-job node loss.
+//!
+//! `HPCW_BENCH_SMOKE=1` shrinks the data to CI size; both variants use
+//! explicit budgets (`LustreFs::with_mem_budget`), immune to an ambient
+//! `HPCW_MEM_BUDGET`.
+
+use hpcw::bench::emit_json;
+use hpcw::cluster::{ClusterManager, NodeId};
+use hpcw::config::{ElasticConfig, StackConfig};
+use hpcw::lustre::{Dfs, LustreFs};
+use hpcw::mapreduce::{counters, ElasticAction, ElasticPlan, MrEngine, MrOutcome};
+use hpcw::metrics::Metrics;
+use hpcw::terasort::{
+    run_teragen, run_terasort, summarize_dir, teravalidate, TeragenSpec, TerasortJob,
+};
+use hpcw::util::ids::IdGen;
+use hpcw::util::pool::Pool;
+use hpcw::util::time::Micros;
+use hpcw::wrapper::DynamicCluster;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn default_pool_width() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8)
+}
+
+fn build_cluster(fs: &LustreFs, cfg: &StackConfig, tag: &str) -> DynamicCluster {
+    let nodes: Vec<NodeId> = (0..5).map(NodeId).collect(); // RM, JHS, 3 slaves
+    DynamicCluster::build(
+        cfg,
+        &nodes,
+        fs,
+        Arc::new(IdGen::default()),
+        Arc::new(Metrics::new()),
+        tag,
+        Micros::ZERO,
+    )
+    .unwrap()
+}
+
+/// Output part files by name — the byte-identity comparison key.
+fn sorted_output(fs: &LustreFs, files: &[String]) -> BTreeMap<String, Vec<u8>> {
+    files
+        .iter()
+        .map(|f| {
+            let name = f.rsplit('/').next().unwrap().to_string();
+            (name, fs.read(f).unwrap())
+        })
+        .collect()
+}
+
+fn terasort_once(
+    dc: &mut DynamicCluster,
+    fs: &Arc<LustreFs>,
+    pool: &Pool,
+    ts: &TerasortJob,
+) -> (f64, MrOutcome) {
+    let t0 = std::time::Instant::now();
+    let mut engine = MrEngine::new(dc, fs.clone() as Arc<dyn Dfs>, pool, 1024, 1024);
+    let outcome = run_terasort(&mut engine, ts, None, Micros::ZERO).unwrap();
+    (t0.elapsed().as_secs_f64(), outcome)
+}
+
+fn main() {
+    let smoke = std::env::var("HPCW_BENCH_SMOKE").is_ok();
+    let cfg = StackConfig::tiny();
+    let pool = Pool::new(default_pool_width().max(2));
+    let rows: u64 = if smoke { 6_000 } else { 60_000 };
+    let split_bytes = if smoke { 60_000 } else { 200_000 };
+    let rounds = 3usize;
+    let gen = |dir: &str| TeragenSpec {
+        rows,
+        maps: 3,
+        output_dir: dir.into(),
+        seed: 42,
+    };
+
+    // --- RAM reference: explicitly unbounded ------------------------------
+    let fs_ram = Arc::new(LustreFs::with_mem_budget(&cfg.lustre, &cfg.cluster, None));
+    let mut dc_ram = build_cluster(&fs_ram, &cfg, "2l-ram");
+    {
+        let mut engine =
+            MrEngine::new(&mut dc_ram, fs_ram.clone() as Arc<dyn Dfs>, &pool, 1024, 1024);
+        run_teragen(&mut engine, &gen("/lustre/scratch/2l-in"), Micros::ZERO).unwrap();
+    }
+    let input = summarize_dir(&*fs_ram, "/lustre/scratch/2l-in").unwrap();
+    let input_bytes = hpcw::lustre::dir_bytes(&*fs_ram, "/lustre/scratch/2l-in");
+    let mut ram_total_s = f64::INFINITY;
+    let mut reference: Option<BTreeMap<String, Vec<u8>>> = None;
+    for r in 0..rounds {
+        let out = format!("/lustre/scratch/2l-ram-out-{r}");
+        let ts = TerasortJob {
+            split_bytes,
+            samples_per_file: 200,
+            ..TerasortJob::new("/lustre/scratch/2l-in", &out, 4)
+        };
+        let (secs, outcome) = terasort_once(&mut dc_ram, &fs_ram, &pool, &ts);
+        ram_total_s = ram_total_s.min(secs);
+        if reference.is_none() {
+            teravalidate(&*fs_ram, &out, input.clone()).unwrap();
+            reference = Some(sorted_output(&fs_ram, &outcome.output_files));
+        }
+        fs_ram.delete_recursive(&out).unwrap();
+        println!("[ram r{r}] total={secs:.3}s");
+    }
+    let reference = reference.unwrap();
+
+    // --- Constrained run: burst tier = input/4 (pressure 4×) --------------
+    let budget = (input_bytes / 4).max(1);
+    let fs = Arc::new(LustreFs::with_mem_budget(&cfg.lustre, &cfg.cluster, Some(budget)));
+    let mut dc = build_cluster(&fs, &cfg, "2l-tier");
+    {
+        let mut engine = MrEngine::new(&mut dc, fs.clone() as Arc<dyn Dfs>, &pool, 1024, 1024);
+        run_teragen(&mut engine, &gen("/lustre/scratch/2l-in"), Micros::ZERO).unwrap();
+    }
+    assert_eq!(
+        hpcw::lustre::dir_bytes(&*fs, "/lustre/scratch/2l-in"),
+        input_bytes,
+        "teragen must be deterministic across backends"
+    );
+    let mut tiered_total_s = f64::INFINITY;
+    let mut evictions = 0u64;
+    let mut spill_bytes = 0u64;
+    let mut byte_identical = true;
+    for r in 0..rounds {
+        let out = format!("/lustre/scratch/2l-tier-out-{r}");
+        let ts = TerasortJob {
+            split_bytes,
+            samples_per_file: 200,
+            ..TerasortJob::new("/lustre/scratch/2l-in", &out, 4)
+        };
+        let (secs, outcome) = terasort_once(&mut dc, &fs, &pool, &ts);
+        tiered_total_s = tiered_total_s.min(secs);
+        evictions += outcome.counters.get(counters::TIER_EVICTIONS);
+        spill_bytes += outcome.counters.get(counters::SPILL_BYTES);
+        teravalidate(&*fs, &out, input.clone()).unwrap();
+        byte_identical &= sorted_output(&fs, &outcome.output_files) == reference;
+        fs.delete_recursive(&out).unwrap();
+        println!(
+            "[tiered r{r}] total={secs:.3}s evictions={} spill={}B",
+            outcome.counters.get(counters::TIER_EVICTIONS),
+            outcome.counters.get(counters::SPILL_BYTES)
+        );
+    }
+    assert!(byte_identical, "constrained run must match the RAM run byte for byte");
+    assert!(evictions > 0, "4× pressure must evict: {:?}", fs.tier_stats());
+    assert!(spill_bytes > 0, "4× pressure must spill shuffle segments");
+
+    // --- Chaos variant: node loss while tiered state exists ---------------
+    let cm = ClusterManager::new(
+        ElasticConfig {
+            nodes_min: 3,
+            nodes_max: 8,
+            queue_delay_ms: 20,
+            lease_walltime_s: 3_600,
+            nm_timeout_ms: 3_000,
+            ..Default::default()
+        },
+        (100..104).map(NodeId).collect(),
+    );
+    let ts = TerasortJob {
+        split_bytes,
+        samples_per_file: 200,
+        ..TerasortJob::new("/lustre/scratch/2l-in", "/lustre/scratch/2l-chaos-out", 4)
+    };
+    let chaos_outcome = {
+        let mut engine = MrEngine::new(&mut dc, fs.clone() as Arc<dyn Dfs>, &pool, 1024, 1024)
+            .with_cluster_manager(cm)
+            .with_plan(ElasticPlan::new().at_maps(2, ElasticAction::FailMapHost(0)));
+        run_terasort(&mut engine, &ts, None, Micros::ZERO).unwrap()
+    };
+    teravalidate(&*fs, "/lustre/scratch/2l-chaos-out", input).unwrap();
+    let chaos_identical = sorted_output(&fs, &chaos_outcome.output_files) == reference;
+    assert!(chaos_identical, "node loss under memory pressure must not change bytes");
+    assert_eq!(chaos_outcome.counters.get(counters::NODES_FAILED), 1);
+
+    let stats = fs.tier_stats().unwrap();
+    let throughput_ratio = ram_total_s / tiered_total_s;
+    emit_json(
+        "BENCH_PR7.json",
+        "two_level_terasort",
+        &[
+            ("rows", rows as f64),
+            ("input_bytes", input_bytes as f64),
+            ("mem_budget_bytes", budget as f64),
+            ("pressure_x", input_bytes as f64 / budget as f64),
+            ("ram_total_s", ram_total_s),
+            ("tiered_total_s", tiered_total_s),
+            // RAM-relative throughput of the constrained run (1.0 = free
+            // tiering; the committed floor bounds the acceptable overhead).
+            ("throughput_ratio", throughput_ratio),
+            ("tier_evictions", evictions as f64),
+            ("tier_promotions", stats.tier_promotions as f64),
+            ("tier_misses", stats.tier_misses as f64),
+            ("spill_bytes", spill_bytes as f64),
+            ("writeback_bytes", stats.writeback_bytes as f64),
+            ("simulated_io_s", stats.simulated_io_s),
+            ("byte_identical", if byte_identical { 1.0 } else { 0.0 }),
+            ("chaos_byte_identical", if chaos_identical { 1.0 } else { 0.0 }),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    );
+    println!(
+        "\ntwo-level: ram {ram_total_s:.3}s vs tiered {tiered_total_s:.3}s \
+         (throughput ratio {throughput_ratio:.2}) — {evictions} evictions, \
+         {spill_bytes} spill bytes, pressure {:.1}×",
+        input_bytes as f64 / budget as f64
+    );
+    println!("two_level OK");
+}

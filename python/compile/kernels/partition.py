@@ -37,7 +37,10 @@ def _partition_kernel(keys_ref, splitters_ref, part_ref, counts_ref):
     onehot = (part[:, None] == jnp.arange(n_parts, dtype=jnp.int32)[None, :]).astype(
         jnp.int32
     )
-    block_counts = onehot.sum(axis=0)
+    # Pin the accumulator dtype: under jax_enable_x64 an unhinted sum
+    # promotes int32 -> int64 and the += into the int32 counts_ref fails
+    # with a dtype-mismatch swap error.
+    block_counts = onehot.sum(axis=0, dtype=jnp.int32)
 
     # Accumulate across grid steps (counts_ref is shared across the grid).
     @pl.when(pl.program_id(0) == 0)

@@ -727,5 +727,8 @@ fn get_events(state: &State, req: &Request) -> HandlerResult {
 }
 
 fn get_metrics(state: &State) -> HandlerResult {
+    // Refresh the storage-tier gauges so the scrape sees current tier
+    // occupancy/counters, not the values at the last job transition.
+    state.stack.lock().unwrap().publish_storage_metrics();
     Ok(Response::text(200, state.metrics.render()))
 }

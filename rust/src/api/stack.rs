@@ -10,7 +10,7 @@
 //! memory; determinism makes the tests honest). The HTTP API wraps this in
 //! a background pump thread.
 
-use crate::api::wire::{ClusterDoc, NodeDoc};
+use crate::api::wire::{ClusterDoc, NodeDoc, TierDoc};
 use crate::cluster::{ClusterModel, NodeId, NodeState};
 use crate::config::StackConfig;
 use crate::error::{Error, Result};
@@ -301,7 +301,43 @@ impl Stack {
             drained,
             down,
             leased,
+            tier: self.tier_doc(),
         }
+    }
+
+    /// Storage-tier snapshot for the wire, when the DFS tiers its storage.
+    fn tier_doc(&self) -> Option<TierDoc> {
+        let s = self.dfs.tier_stats()?;
+        Some(TierDoc {
+            mem_budget_bytes: s.mem_budget.unwrap_or(0),
+            resident_bytes: s.resident_bytes,
+            backing_bytes: s.backing_bytes,
+            hits: s.tier_hits,
+            misses: s.tier_misses,
+            evictions: s.tier_evictions,
+            promotions: s.tier_promotions,
+            writeback_bytes: s.writeback_bytes,
+            spill_bytes: s.spill_bytes,
+            simulated_io_s: s.simulated_io_s,
+        })
+    }
+
+    /// Push the tier counters into the metrics registry as gauges so
+    /// `GET /v1/metrics` exposes storage health alongside job metrics.
+    /// No-op on single-tier backends.
+    pub fn publish_storage_metrics(&self) {
+        let Some(s) = self.dfs.tier_stats() else { return };
+        let m = &self.metrics;
+        m.set_gauge("storage_mem_budget_bytes", s.mem_budget.unwrap_or(0) as f64);
+        m.set_gauge("storage_resident_bytes", s.resident_bytes as f64);
+        m.set_gauge("storage_backing_bytes", s.backing_bytes as f64);
+        m.set_gauge("storage_tier_hits", s.tier_hits as f64);
+        m.set_gauge("storage_tier_misses", s.tier_misses as f64);
+        m.set_gauge("storage_tier_evictions", s.tier_evictions as f64);
+        m.set_gauge("storage_tier_promotions", s.tier_promotions as f64);
+        m.set_gauge("storage_writeback_bytes", s.writeback_bytes as f64);
+        m.set_gauge("storage_spill_bytes", s.spill_bytes as f64);
+        m.set_gauge("storage_simulated_io_s", s.simulated_io_s);
     }
 
     /// Crash a node: it leaves the machine model and the LSF pool; any

@@ -1176,6 +1176,64 @@ impl NodeDoc {
     }
 }
 
+/// Two-level storage tier snapshot on `GET /v1/cluster` (and, as gauges,
+/// `GET /v1/metrics`). Present only when the stack's DFS tiers its
+/// storage (`HPCW_MEM_BUDGET` / `lustre.mem_budget_bytes`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierDoc {
+    /// Burst-tier budget in bytes; 0 = unbounded (pure burst, no backing
+    /// traffic — the doc still appears so clients can see the mode).
+    pub mem_budget_bytes: u64,
+    /// Bytes currently resident in the burst tier.
+    pub resident_bytes: u64,
+    /// Bytes currently held by the backing tier (evicted + written back).
+    pub backing_bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub promotions: u64,
+    pub writeback_bytes: u64,
+    pub spill_bytes: u64,
+    /// Modeled seconds of backing-tier I/O (priced by the backend's
+    /// `FsModel`).
+    pub simulated_io_s: f64,
+}
+
+impl TierDoc {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mem_budget_bytes", Json::num(self.mem_budget_bytes as f64)),
+            ("resident_bytes", Json::num(self.resident_bytes as f64)),
+            ("backing_bytes", Json::num(self.backing_bytes as f64)),
+            ("hits", Json::num(self.hits as f64)),
+            ("misses", Json::num(self.misses as f64)),
+            ("evictions", Json::num(self.evictions as f64)),
+            ("promotions", Json::num(self.promotions as f64)),
+            ("writeback_bytes", Json::num(self.writeback_bytes as f64)),
+            ("spill_bytes", Json::num(self.spill_bytes as f64)),
+            ("simulated_io_s", Json::num(self.simulated_io_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TierDoc> {
+        Ok(TierDoc {
+            mem_budget_bytes: j.req_u64("mem_budget_bytes")?,
+            resident_bytes: j.req_u64("resident_bytes")?,
+            backing_bytes: j.req_u64("backing_bytes")?,
+            hits: j.req_u64("hits")?,
+            misses: j.req_u64("misses")?,
+            evictions: j.req_u64("evictions")?,
+            promotions: j.req_u64("promotions")?,
+            writeback_bytes: j.req_u64("writeback_bytes")?,
+            spill_bytes: j.req_u64("spill_bytes")?,
+            simulated_io_s: j
+                .get("simulated_io_s")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::Codec("missing number 'simulated_io_s'".into()))?,
+        })
+    }
+}
+
 /// `GET /v1/cluster` response: node states + lease info + totals.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterDoc {
@@ -1185,11 +1243,13 @@ pub struct ClusterDoc {
     pub down: u64,
     /// Nodes currently leased to running jobs.
     pub leased: u64,
+    /// Storage-tier snapshot; absent for single-tier backends.
+    pub tier: Option<TierDoc>,
 }
 
 impl ClusterDoc {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             (
                 "nodes",
                 Json::Arr(self.nodes.iter().map(NodeDoc::to_json).collect()),
@@ -1198,7 +1258,11 @@ impl ClusterDoc {
             ("drained", Json::num(self.drained as f64)),
             ("down", Json::num(self.down as f64)),
             ("leased", Json::num(self.leased as f64)),
-        ])
+        ];
+        if let Some(t) = &self.tier {
+            fields.push(("tier", t.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<ClusterDoc> {
@@ -1215,6 +1279,7 @@ impl ClusterDoc {
             drained: j.req_u64("drained")?,
             down: j.req_u64("down")?,
             leased: j.req_u64("leased")?,
+            tier: j.get("tier").map(TierDoc::from_json).transpose()?,
         })
     }
 }
@@ -1591,6 +1656,23 @@ mod tests {
                 drained: g.u64(0..16),
                 down: g.u64(0..16),
                 leased: g.u64(0..256),
+                tier: if g.chance(0.5) {
+                    Some(TierDoc {
+                        mem_budget_bytes: g.u64(0..1 << 30),
+                        resident_bytes: g.u64(0..1 << 30),
+                        backing_bytes: g.u64(0..1 << 30),
+                        hits: g.u64(0..100_000),
+                        misses: g.u64(0..100_000),
+                        evictions: g.u64(0..100_000),
+                        promotions: g.u64(0..100_000),
+                        writeback_bytes: g.u64(0..1 << 40),
+                        spill_bytes: g.u64(0..1 << 40),
+                        // Dyadic fraction: exact across the JSON text form.
+                        simulated_io_s: g.u64(0..1 << 20) as f64 / 8.0,
+                    })
+                } else {
+                    None
+                },
             };
             let back =
                 ClusterDoc::from_json(&Json::parse(&doc.to_json().to_string()).unwrap()).unwrap();

@@ -35,6 +35,9 @@ pub struct LustreConfig {
     /// Strength of that degradation (fractional slowdown per fractional
     /// oversubscription).
     pub contention_alpha: f64,
+    /// In-memory burst-tier budget in bytes; 0 = unbounded (all-in-RAM,
+    /// no backing tier). The `HPCW_MEM_BUDGET` env knob overrides.
+    pub mem_budget_bytes: u64,
     /// Mount point (cosmetic, appears in paths).
     pub mount: String,
 }
@@ -51,6 +54,7 @@ impl Default for LustreConfig {
             client_rpcs_in_flight: 8,
             ost_max_streams: 60,
             contention_alpha: 0.5,
+            mem_budget_bytes: 0,
             mount: "/lustre/scratch".into(),
         }
     }
@@ -89,6 +93,9 @@ impl LustreConfig {
         }
         if let Some(v) = doc.f64("lustre.contention_alpha") {
             self.contention_alpha = v;
+        }
+        if let Some(v) = doc.u64("lustre.mem_budget_bytes") {
+            self.mem_budget_bytes = v;
         }
         if let Some(s) = doc.str("lustre.mount") {
             self.mount = s.to_string();

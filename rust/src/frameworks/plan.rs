@@ -65,7 +65,7 @@ use crate::frameworks::expr::{
     cmp_values, join_conjuncts, map_fields, parse_expr, referenced_fields, split_conjuncts,
     unparse_expr, Expr, Row, Schema, Value,
 };
-use crate::lustre::Dfs;
+use crate::lustre::{dir_bytes, Dfs};
 use crate::mapreduce::recordbuf::ColumnBatch;
 use crate::mapreduce::{
     BroadcastInput, BroadcastSink, HashPartitioner, InputFormat, JobSpec, Mapper, OutputFormat,
@@ -1156,12 +1156,7 @@ fn sample_sort_keys(
     key: &Expr,
     desc: bool,
 ) -> Result<Vec<u64>> {
-    let mut files: Vec<String> = dfs
-        .list(input_dir)
-        .into_iter()
-        .filter(|p| !p.split('/').next_back().unwrap_or("").starts_with('_'))
-        .collect();
-    files.sort();
+    let files = crate::lustre::visible_files(dfs, input_dir);
     let mut samples = Vec::new();
     for f in &files {
         let buf = dfs.read_range(f, 0, SORT_SAMPLE_BYTES)?;
@@ -1194,16 +1189,6 @@ fn broadcast_max_bytes() -> u64 {
         .unwrap_or(16 * 1024 * 1024)
 }
 
-/// Total bytes of a directory's part files (underscore-prefixed entries —
-/// `_SUCCESS`, logs — excluded): the DFS metadata the join cost rule
-/// reads. A missing directory sums to 0.
-fn dir_bytes(dfs: &dyn Dfs, dir: &str) -> u64 {
-    dfs.list(dir)
-        .into_iter()
-        .filter(|p| !p.split('/').next_back().unwrap_or("").starts_with('_'))
-        .filter_map(|p| dfs.size(&p).ok())
-        .sum()
-}
 
 /// The broadcast decision: `Some(build_is_left)` when one side should be
 /// broadcast, `None` for the repartition fallback. A side qualifies when

@@ -5,26 +5,78 @@
 //! engine stripes job input/output wide (the era's Hadoop-on-Lustre guides
 //! recommend stripe = OST count for shared files) while task-side files
 //! keep the default stripe of 1.
+//!
+//! Since PR 7 the data plane is a [`TieredStore`]: with `HPCW_MEM_BUDGET`
+//! (or `lustre.mem_budget_bytes`) set, a bounded in-memory burst tier
+//! fronts a persistent backing tier and this backend's own [`FsModel`]
+//! prices the tier traffic. Unset, the store is the plain in-memory plane.
 
 use crate::config::{ClusterConfig, LustreConfig};
 use crate::error::Result;
-use crate::lustre::{Dfs, FsModel, MemStore};
+use crate::lustre::tiered::{mem_budget_from_env, ShuffleSpill, TierStats, TieredStore};
+use crate::lustre::{Dfs, FsModel};
 use crate::simx::queueing::MD1;
 
 /// Lustre-backed [`Dfs`] implementation.
 pub struct LustreFs {
     cfg: LustreConfig,
     nic_bps: f64,
-    store: MemStore,
+    store: TieredStore,
     mount: String,
 }
 
+/// The Lustre cost model, independent of any store instance (the tiered
+/// store prices its backing-tier traffic with this too).
+fn lustre_model(cfg: &LustreConfig, nic_bps: f64) -> FsModel {
+    // The shared pool does not grow with the job: that is the defining
+    // contrast with HDFS-on-DAS and the cause of the Fig 4 plateau.
+    let agg = cfg.aggregate_bw();
+    // A single client with default striping is limited by the RPC
+    // window: rpcs_in_flight × 1 MB RPCs at ~1 ms ≈ rpcs × 1 GB/s·ms —
+    // in practice the era's clients sustained ~0.5–1.5 GB/s; we model
+    // the ceiling as min(NIC, rpcs_in_flight × 150 MB/s).
+    let per_client = (cfg.client_rpcs_in_flight as f64 * 150e6).min(nic_bps);
+    FsModel {
+        write_agg_bps: agg,
+        read_agg_bps: agg,
+        per_client_write_bps: per_client,
+        per_client_read_bps: per_client,
+        meta: MD1::new(cfg.mds_ops_per_sec),
+        write_amplification: 1.0,
+        local_read_frac: 0.0,
+        capacity_bytes: f64::INFINITY,
+        contention_sat_clients: (cfg.ost_count * cfg.ost_max_streams) as f64,
+        contention_alpha: cfg.contention_alpha,
+    }
+}
+
 impl LustreFs {
+    /// Backend with the ambient burst-tier budget: `HPCW_MEM_BUDGET` wins,
+    /// else `lustre.mem_budget_bytes` (0 = unbounded).
     pub fn new(cfg: &LustreConfig, cluster: &ClusterConfig) -> Self {
+        let budget = mem_budget_from_env().or(if cfg.mem_budget_bytes > 0 {
+            Some(cfg.mem_budget_bytes)
+        } else {
+            None
+        });
+        LustreFs::with_mem_budget(cfg, cluster, budget)
+    }
+
+    /// Backend with an explicit burst-tier budget (`None` = all-in-RAM).
+    /// Benches construct both variants side by side this way, immune to
+    /// env-var races.
+    pub fn with_mem_budget(
+        cfg: &LustreConfig,
+        cluster: &ClusterConfig,
+        budget: Option<u64>,
+    ) -> Self {
+        let nic_bps = cluster.ib_gbps * 1e9 / 8.0;
+        let store = TieredStore::with_budget(budget, Some(lustre_model(cfg, nic_bps)))
+            .expect("backing tier init");
         let fs = LustreFs {
             cfg: cfg.clone(),
-            nic_bps: cluster.ib_gbps * 1e9 / 8.0,
-            store: MemStore::new(),
+            nic_bps,
+            store,
             mount: cfg.mount.clone(),
         };
         fs.store.mkdirs(&cfg.mount).expect("mount point");
@@ -35,6 +87,16 @@ impl LustreFs {
     pub fn striped_client_bps(&self, stripes: u32) -> f64 {
         let stripes = stripes.clamp(1, self.cfg.ost_count) as f64;
         (stripes * self.cfg.ost_bw_mbps * 1e6).min(self.nic_bps)
+    }
+
+    /// Burst-tier budget this backend was built with.
+    pub fn mem_budget(&self) -> Option<u64> {
+        self.store.mem_budget()
+    }
+
+    /// Settle the write-behind queue (deterministic test/bench audits).
+    pub fn quiesce(&self) {
+        self.store.quiesce()
     }
 }
 
@@ -100,26 +162,7 @@ impl Dfs for LustreFs {
     }
 
     fn model(&self, _job_nodes: u32) -> FsModel {
-        // The shared pool does not grow with the job: that is the defining
-        // contrast with HDFS-on-DAS and the cause of the Fig 4 plateau.
-        let agg = self.cfg.aggregate_bw();
-        // A single client with default striping is limited by the RPC
-        // window: rpcs_in_flight × 1 MB RPCs at ~1 ms ≈ rpcs × 1 GB/s·ms —
-        // in practice the era's clients sustained ~0.5–1.5 GB/s; we model
-        // the ceiling as min(NIC, rpcs_in_flight × 150 MB/s).
-        let per_client = (self.cfg.client_rpcs_in_flight as f64 * 150e6).min(self.nic_bps);
-        FsModel {
-            write_agg_bps: agg,
-            read_agg_bps: agg,
-            per_client_write_bps: per_client,
-            per_client_read_bps: per_client,
-            meta: MD1::new(self.cfg.mds_ops_per_sec),
-            write_amplification: 1.0,
-            local_read_frac: 0.0,
-            capacity_bytes: f64::INFINITY,
-            contention_sat_clients: (self.cfg.ost_count * self.cfg.ost_max_streams) as f64,
-            contention_alpha: self.cfg.contention_alpha,
-        }
+        lustre_model(&self.cfg, self.nic_bps)
     }
 
     fn used_bytes(&self) -> u64 {
@@ -128,6 +171,14 @@ impl Dfs for LustreFs {
 
     fn object_count(&self) -> u64 {
         self.store.object_count()
+    }
+
+    fn tier_stats(&self) -> Option<TierStats> {
+        Some(self.store.tier_stats())
+    }
+
+    fn shuffle_spill(&self) -> Option<ShuffleSpill> {
+        self.store.shuffle_spill()
     }
 }
 
@@ -187,5 +238,22 @@ mod tests {
         fs.create("/lustre/scratch/user/in/f", b"rows").unwrap();
         assert_eq!(fs.read("/lustre/scratch/user/in/f").unwrap(), b"rows");
         assert_eq!(fs.used_bytes(), 4);
+    }
+
+    #[test]
+    fn explicit_budget_enables_tiering_with_the_lustre_model() {
+        let c = StackConfig::tiny();
+        let fs = LustreFs::with_mem_budget(&c.lustre, &c.cluster, Some(256));
+        assert_eq!(fs.mem_budget(), Some(256));
+        fs.mkdirs("/lustre/scratch/t").unwrap();
+        fs.create("/lustre/scratch/t/a", &[1u8; 200]).unwrap();
+        fs.create("/lustre/scratch/t/b", &[2u8; 200]).unwrap();
+        let s = fs.tier_stats().unwrap();
+        assert!(s.tier_evictions >= 1, "{s:?}");
+        // Tier traffic is priced by this backend's own FsModel: finite
+        // bandwidth means nonzero simulated time once bytes moved.
+        assert!(s.writeback_bytes > 0 && s.simulated_io_s > 0.0, "{s:?}");
+        assert_eq!(fs.read("/lustre/scratch/t/a").unwrap(), vec![1u8; 200]);
+        assert!(fs.shuffle_spill().is_some());
     }
 }

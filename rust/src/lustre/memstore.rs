@@ -199,6 +199,16 @@ impl MemStore {
         self.open(path).map(|a| a.to_vec())
     }
 
+    /// Current extent for `path` without counting a metadata op. Tier
+    /// bookkeeping (eviction, write-behind) peeks; readers use [`open`]
+    /// so MDS-load assertions see them.
+    ///
+    /// [`open`]: MemStore::open
+    pub fn peek(&self, path: &str) -> Option<Arc<[u8]>> {
+        let path = normalize(path).ok()?;
+        self.shard_for(&path).lock().unwrap().get(&path).map(Arc::clone)
+    }
+
     pub fn read_range(&self, path: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
         let buf = self.open(path)?;
         let start = (offset as usize).min(buf.len());

@@ -19,10 +19,14 @@
 pub mod hdfs_like;
 pub mod lustre_fs;
 pub mod memstore;
+pub mod tiered;
 
 pub use hdfs_like::HdfsLikeFs;
 pub use lustre_fs::LustreFs;
 pub use memstore::MemStore;
+pub use tiered::{
+    mem_budget_from_env, parse_mem_budget, ShuffleSpill, SpillSink, TierStats, TieredStore,
+};
 
 use crate::error::Result;
 use crate::simx::queueing::MD1;
@@ -157,6 +161,45 @@ pub trait Dfs: Send + Sync {
 
     /// Number of metadata objects (files + dirs), for MDS-load assertions.
     fn object_count(&self) -> u64;
+
+    // --- storage tiering (PR 7) ------------------------------------------
+    /// Burst/backing tier counters, when the backend tiers its storage
+    /// (`HPCW_MEM_BUDGET`); `None` for single-tier backends.
+    fn tier_stats(&self) -> Option<TierStats> {
+        None
+    }
+
+    /// Spill sink + budget for shuffle segments, when the backend offers
+    /// a backing tier to spill to; `None` keeps the shuffle all-in-RAM.
+    fn shuffle_spill(&self) -> Option<ShuffleSpill> {
+        None
+    }
+}
+
+/// True when `path`'s final component is a visible data file — not a
+/// `_`-prefixed marker or temporary (`_SUCCESS`, `_temporary`, `_logs`).
+/// The one visibility rule shared by split planning, broadcast loading,
+/// and directory sizing.
+pub fn is_visible(path: &str) -> bool {
+    !path.split('/').next_back().unwrap_or("").starts_with('_')
+}
+
+/// Visible entries directly under `dir`, sorted — the input set a job
+/// actually processes.
+pub fn visible_files(dfs: &dyn Dfs, dir: &str) -> Vec<String> {
+    let mut files: Vec<String> = dfs.list(dir).into_iter().filter(|p| is_visible(p)).collect();
+    files.sort();
+    files
+}
+
+/// Total bytes of `dir`'s visible part files — the DFS metadata the
+/// broadcast-join cost rule and residency planner read. A missing
+/// directory sums to 0.
+pub fn dir_bytes(dfs: &dyn Dfs, dir: &str) -> u64 {
+    visible_files(dfs, dir)
+        .iter()
+        .filter_map(|p| dfs.size(p).ok())
+        .sum()
 }
 
 #[cfg(test)]

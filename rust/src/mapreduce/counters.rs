@@ -64,6 +64,18 @@ pub const BROADCAST_BYTES: &str = "BROADCAST_BYTES";
 pub const STAGES_FUSED: &str = "STAGES_FUSED";
 /// Filter conjuncts the planner pushed below a join (planner counter).
 pub const PREDICATE_PUSHDOWNS: &str = "PREDICATE_PUSHDOWNS";
+/// DFS reads served from the in-memory burst tier (two-level storage).
+pub const TIER_HITS: &str = "TIER_HITS";
+/// DFS reads that missed the burst tier and faulted in from backing.
+pub const TIER_MISSES: &str = "TIER_MISSES";
+/// Burst-tier extents evicted to the backing tier under memory pressure.
+pub const TIER_EVICTIONS: &str = "TIER_EVICTIONS";
+/// Files promoted back into the burst tier on read-through.
+pub const TIER_PROMOTIONS: &str = "TIER_PROMOTIONS";
+/// Shuffle-segment bytes spilled to the backing tier.
+pub const SPILL_BYTES: &str = "SPILL_BYTES";
+/// File bytes persisted to the backing tier (write-behind + eviction).
+pub const WRITEBACK_BYTES: &str = "WRITEBACK_BYTES";
 
 impl Counters {
     pub fn new() -> Self {

@@ -298,7 +298,12 @@ impl<'a> MrEngine<'a> {
 
         let handle = self.cluster.rm.submit_app(&spec.name, user, now)?;
         let counters = Arc::new(Counters::new());
-        let shuffle = Arc::new(ShuffleStore::new());
+        // Tier counters are per-job deltas against the backend's cumulative
+        // stats, so back-to-back jobs each report their own tier traffic.
+        let tier0 = self.dfs.tier_stats();
+        // Tiered backends hand the shuffle a spill sink + budget; others
+        // keep it all-in-RAM.
+        let shuffle = Arc::new(ShuffleStore::for_dfs(&*self.dfs));
 
         // Broadcast side-inputs (DistributedCache shape): loaded exactly
         // once per run, before any map container is granted, so every map
@@ -328,6 +333,29 @@ impl<'a> MrEngine<'a> {
         // Commit: _SUCCESS marker, drop _temporary.
         self.dfs.delete_recursive(&tmp_root)?;
         self.dfs.create(&format!("{}/_SUCCESS", spec.output_dir), b"")?;
+
+        // Flush this job's two-level-storage traffic into the counter
+        // groups (shuffle spill flows through the backend's sink, so the
+        // tier delta already includes SPILL_BYTES).
+        if let (Some(a), Some(b)) = (tier0, self.dfs.tier_stats()) {
+            counters.add_many(&[
+                (counters::TIER_HITS, b.tier_hits.saturating_sub(a.tier_hits)),
+                (counters::TIER_MISSES, b.tier_misses.saturating_sub(a.tier_misses)),
+                (
+                    counters::TIER_EVICTIONS,
+                    b.tier_evictions.saturating_sub(a.tier_evictions),
+                ),
+                (
+                    counters::TIER_PROMOTIONS,
+                    b.tier_promotions.saturating_sub(a.tier_promotions),
+                ),
+                (counters::SPILL_BYTES, b.spill_bytes.saturating_sub(a.spill_bytes)),
+                (
+                    counters::WRITEBACK_BYTES,
+                    b.writeback_bytes.saturating_sub(a.writeback_bytes),
+                ),
+            ]);
+        }
 
         self.cluster
             .rm
@@ -371,13 +399,7 @@ impl<'a> MrEngine<'a> {
         }
         let mut total = 0u64;
         for b in &spec.broadcast_inputs {
-            let mut files: Vec<String> = self
-                .dfs
-                .list(&b.dir)
-                .into_iter()
-                .filter(|p| !p.rsplit('/').next().unwrap_or("").starts_with('_'))
-                .collect();
-            files.sort();
+            let files = crate::lustre::visible_files(&*self.dfs, &b.dir);
             let mut data = Vec::new();
             for f in &files {
                 let len = self.dfs.size(f)?;

@@ -15,13 +15,25 @@
 //! * [`merge_segments`] is a cursor-based k-way merge over borrowed key
 //!   slices: it allocates O(segments) heap entries plus the output index,
 //!   never cloning keys or values.
+//!
+//! Two-level storage (PR 7): when the backing [`Dfs`] offers a
+//! [`ShuffleSpill`] sink (`HPCW_MEM_BUDGET` set), resident segment bytes
+//! are bounded. Past the budget, unpinned segments (`Arc::strong_count`
+//! == the store's own reference — no reduce is holding them) are encoded
+//! and **spilled** to the backing tier; [`ShuffleStore::try_fetch`] and
+//! [`ShuffleStore::fetch_partition`] transparently **re-materialize**
+//! spilled segments on demand, so the reduce-side merge never knows a
+//! segment left memory. Without a sink the store is the all-in-RAM PR 2
+//! plane, byte for byte.
 
 use crate::cluster::NodeId;
 use crate::error::{Error, Result};
+use crate::lustre::{Dfs, ShuffleSpill};
 use crate::mapreduce::recordbuf::RecordBuf;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// One spilled map-output segment (already sorted by key).
@@ -38,16 +50,92 @@ impl Segment {
     pub fn bytes(&self) -> u64 {
         self.records.payload_bytes()
     }
+
+    /// Serialize for the spill tier: fixed header (map, partition, node,
+    /// record count), per-record key/value lengths, then the raw payload.
+    /// All little-endian u32s — the segment is process-local data, not a
+    /// wire format.
+    pub fn encode(&self) -> Vec<u8> {
+        let n = self.records.len();
+        let mut out =
+            Vec::with_capacity(16 + 8 * n + self.records.payload_bytes() as usize);
+        for v in [self.map, self.partition, self.node.0, n as u32] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for (k, v) in self.records.iter() {
+            out.extend_from_slice(&(k.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        }
+        for (k, v) in self.records.iter() {
+            out.extend_from_slice(k);
+            out.extend_from_slice(v);
+        }
+        out
+    }
+
+    /// Inverse of [`Segment::encode`]; re-materializes a spilled segment.
+    pub fn decode(data: &[u8]) -> Result<Segment> {
+        let rd_u32 = |off: usize| -> Result<u32> {
+            data.get(off..off + 4)
+                .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                .ok_or_else(|| Error::MapReduce("spilled segment truncated".into()))
+        };
+        let map = rd_u32(0)?;
+        let partition = rd_u32(4)?;
+        let node = NodeId(rd_u32(8)?);
+        let n = rd_u32(12)? as usize;
+        let mut lens = Vec::with_capacity(n);
+        let mut off = 16usize;
+        let mut payload = 0usize;
+        for _ in 0..n {
+            let kl = rd_u32(off)? as usize;
+            let vl = rd_u32(off + 4)? as usize;
+            lens.push((kl, vl));
+            payload += kl + vl;
+            off += 8;
+        }
+        if data.len() != off + payload {
+            return Err(Error::MapReduce(format!(
+                "spilled segment length mismatch: {} != {}",
+                data.len(),
+                off + payload
+            )));
+        }
+        let mut records = RecordBuf::with_capacity(n, payload);
+        for (kl, vl) in lens {
+            records.push_record(&data[off..off + kl + vl], kl);
+            off += kl + vl;
+        }
+        Ok(Segment { map, partition, node, records })
+    }
 }
 
 /// Default shard count; override with [`ShuffleStore::with_shards`] or the
 /// `HPCW_SHUFFLE_SHARDS` environment variable.
 pub const DEFAULT_SHUFFLE_SHARDS: usize = 16;
 
-type Shard = Mutex<BTreeMap<(u32, u32), Arc<Segment>>>;
+/// One shuffle-matrix cell: the segment, wherever it currently lives.
+#[derive(Debug)]
+enum Cell {
+    /// In memory, fetchable zero-copy.
+    Resident(Arc<Segment>),
+    /// Encoded in the backing tier under `key`; `bytes` is the payload
+    /// size it re-materializes to (resident accounting).
+    Spilled { node: NodeId, bytes: u64, key: String },
+}
+
+impl Cell {
+    fn node(&self) -> NodeId {
+        match self {
+            Cell::Resident(s) => s.node,
+            Cell::Spilled { node, .. } => *node,
+        }
+    }
+}
+
+type Shard = Mutex<BTreeMap<(u32, u32), Cell>>;
 
 /// Thread-safe, partition-sharded shuffle store for one job.
-#[derive(Debug)]
 pub struct ShuffleStore {
     shards: Vec<Shard>,
     /// Nodes whose segments are fenced out: a node that failed mid-job
@@ -56,6 +144,28 @@ pub struct ShuffleStore {
     /// committed segment (the batch allocator never re-mints a failed
     /// node id).
     banned: Mutex<BTreeSet<NodeId>>,
+    /// Spill destination + resident-byte budget; `None` = all-in-RAM.
+    spill: Option<ShuffleSpill>,
+    /// Payload bytes currently held by `Resident` cells.
+    resident_bytes: AtomicU64,
+    /// Payload bytes currently parked in `Spilled` cells.
+    spilled_now: AtomicU64,
+    /// Cumulative encoded bytes ever written to the spill sink.
+    spill_bytes_total: AtomicU64,
+    /// Spilled segments re-materialized on fetch.
+    spill_reloads: AtomicU64,
+}
+
+impl std::fmt::Debug for ShuffleStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ShuffleStore(shards={}, resident={}, spilled={})",
+            self.shards.len(),
+            self.resident_bytes.load(Ordering::Relaxed),
+            self.spilled_now.load(Ordering::Relaxed)
+        )
+    }
 }
 
 impl Default for ShuffleStore {
@@ -64,21 +174,46 @@ impl Default for ShuffleStore {
     }
 }
 
+fn env_shards() -> usize {
+    std::env::var("HPCW_SHUFFLE_SHARDS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(DEFAULT_SHUFFLE_SHARDS)
+}
+
 impl ShuffleStore {
-    /// Store with the default shard count (`HPCW_SHUFFLE_SHARDS` overrides).
+    /// All-in-RAM store with the default shard count (`HPCW_SHUFFLE_SHARDS`
+    /// overrides).
     pub fn new() -> Self {
-        let n = std::env::var("HPCW_SHUFFLE_SHARDS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .unwrap_or(DEFAULT_SHUFFLE_SHARDS);
-        ShuffleStore::with_shards(n)
+        ShuffleStore::with_shards(env_shards())
     }
 
-    /// Store with an explicit shard count (`n >= 1`).
+    /// All-in-RAM store with an explicit shard count (`n >= 1`).
     pub fn with_shards(n: usize) -> Self {
+        ShuffleStore::with_shards_and_spill(n, None)
+    }
+
+    /// Store that spills past `spill.budget` resident bytes (when `Some`).
+    pub fn with_spill(spill: Option<ShuffleSpill>) -> Self {
+        ShuffleStore::with_shards_and_spill(env_shards(), spill)
+    }
+
+    /// Store wired to `dfs`'s spill tier, when it offers one — the engine
+    /// constructor: tiered backends bound the shuffle, others keep the
+    /// all-in-RAM behavior.
+    pub fn for_dfs(dfs: &dyn Dfs) -> Self {
+        ShuffleStore::with_spill(dfs.shuffle_spill())
+    }
+
+    pub fn with_shards_and_spill(n: usize, spill: Option<ShuffleSpill>) -> Self {
         ShuffleStore {
             shards: (0..n.max(1)).map(|_| Mutex::new(BTreeMap::new())).collect(),
             banned: Mutex::new(BTreeSet::new()),
+            spill,
+            resident_bytes: AtomicU64::new(0),
+            spilled_now: AtomicU64::new(0),
+            spill_bytes_total: AtomicU64::new(0),
+            spill_reloads: AtomicU64::new(0),
         }
     }
 
@@ -100,19 +235,104 @@ impl ShuffleStore {
         if self.banned.lock().unwrap().contains(&seg.node) {
             return false;
         }
-        let mut g = self.shard_for(seg.partition).lock().unwrap();
-        g.insert((seg.map, seg.partition), Arc::new(seg));
+        let bytes = seg.bytes();
+        let cell_key = (seg.map, seg.partition);
+        let old = {
+            let mut g = self.shard_for(seg.partition).lock().unwrap();
+            g.insert(cell_key, Cell::Resident(Arc::new(seg)))
+        };
+        self.resident_bytes.fetch_add(bytes, Ordering::Relaxed);
+        match old {
+            Some(Cell::Resident(s)) => {
+                self.resident_bytes.fetch_sub(s.bytes(), Ordering::Relaxed);
+            }
+            Some(Cell::Spilled { bytes, key, .. }) => {
+                self.spilled_now.fetch_sub(bytes, Ordering::Relaxed);
+                if let Some(sp) = &self.spill {
+                    sp.sink.remove(&key);
+                }
+            }
+            None => {}
+        }
+        self.maybe_spill();
         true
     }
 
+    /// Spill LRU-ish victims (scan order) until resident bytes fit the
+    /// budget. A victim must be unpinned: `Arc::strong_count == 1` means
+    /// no reduce holds a fetched view, so the zero-copy contract
+    /// ([`ShuffleStore::fetch_partition`] handles stay valid) is never
+    /// broken by a spill. Encoding and sink I/O happen outside the shard
+    /// lock; the swap re-verifies pointer identity, so a racing re-commit
+    /// or fetch aborts the spill rather than losing it.
+    fn maybe_spill(&self) {
+        let Some(sp) = &self.spill else { return };
+        if sp.budget == 0 {
+            return;
+        }
+        while self.resident_bytes.load(Ordering::Relaxed) > sp.budget {
+            let mut victim: Option<((u32, u32), Arc<Segment>)> = None;
+            'scan: for shard in &self.shards {
+                let g = shard.lock().unwrap();
+                for (k, cell) in g.iter() {
+                    if let Cell::Resident(s) = cell {
+                        if Arc::strong_count(s) == 1 && !s.records.is_empty() {
+                            victim = Some((*k, Arc::clone(s)));
+                            break 'scan;
+                        }
+                    }
+                }
+            }
+            let Some((k, s)) = victim else {
+                return; // everything is pinned (or empty): stay resident
+            };
+            let spill_key = format!("m{}-p{}", k.0, k.1);
+            let data = s.encode();
+            if sp.sink.write(&spill_key, &data).is_err() {
+                return; // sink unavailable: keep segments resident
+            }
+            let swapped = {
+                let mut g = self.shard_for(k.1).lock().unwrap();
+                match g.get(&k) {
+                    // Still the same segment and still unpinned (our clone
+                    // is the only outside reference).
+                    Some(Cell::Resident(cur))
+                        if Arc::ptr_eq(cur, &s) && Arc::strong_count(cur) == 2 =>
+                    {
+                        g.insert(
+                            k,
+                            Cell::Spilled {
+                                node: s.node,
+                                bytes: s.bytes(),
+                                key: spill_key.clone(),
+                            },
+                        );
+                        true
+                    }
+                    _ => false,
+                }
+            };
+            if swapped {
+                self.resident_bytes.fetch_sub(s.bytes(), Ordering::Relaxed);
+                self.spilled_now.fetch_add(s.bytes(), Ordering::Relaxed);
+                self.spill_bytes_total
+                    .fetch_add(data.len() as u64, Ordering::Relaxed);
+            } else {
+                // Re-committed or fetched mid-spill: drop the orphan copy.
+                sp.sink.remove(&spill_key);
+                return;
+            }
+        }
+    }
+
     /// Fetch all segments for one reduce partition, map order. Returns
-    /// `Arc`-shared views of the committed segments — no per-record copies.
+    /// `Arc`-shared views of the committed segments — no per-record copies
+    /// for resident segments; spilled segments are re-materialized first.
     pub fn fetch_partition(&self, partition: u32, n_maps: u32) -> Result<Vec<Arc<Segment>>> {
-        let g = self.shard_for(partition).lock().unwrap();
         let mut out = Vec::with_capacity(n_maps as usize);
         for m in 0..n_maps {
-            match g.get(&(m, partition)) {
-                Some(s) => out.push(Arc::clone(s)),
+            match self.try_fetch(m, partition) {
+                Some(s) => out.push(s),
                 None => {
                     return Err(Error::MapReduce(format!(
                         "shuffle: missing segment map={m} partition={partition}"
@@ -128,17 +348,53 @@ impl ShuffleStore {
     /// to fetch already-committed segments while the remaining maps are
     /// still running. Map tasks commit all their partitions together after
     /// the last sort (see `run_map_task`), so a visible cell always comes
-    /// from an attempt that produced its full partition set.
+    /// from an attempt that produced its full partition set. A spilled
+    /// cell is reloaded from the backing tier and promoted back to
+    /// resident — callers cannot tell it ever left memory.
     pub fn try_fetch(&self, map: u32, partition: u32) -> Option<Arc<Segment>> {
-        let g = self.shard_for(partition).lock().unwrap();
-        g.get(&(map, partition)).map(Arc::clone)
+        let k = (map, partition);
+        let spill_key = {
+            let g = self.shard_for(partition).lock().unwrap();
+            match g.get(&k) {
+                Some(Cell::Resident(s)) => return Some(Arc::clone(s)),
+                Some(Cell::Spilled { key, .. }) => key.clone(),
+                None => return None,
+            }
+        };
+        // Re-materialize outside the lock.
+        let sp = self.spill.as_ref()?; // a Spilled cell implies a sink
+        let data = sp.sink.read(&spill_key).ok()?;
+        let seg = Arc::new(Segment::decode(&data).ok()?);
+        let promoted = {
+            let mut g = self.shard_for(partition).lock().unwrap();
+            match g.get(&k) {
+                Some(Cell::Spilled { bytes, .. }) => {
+                    let b = *bytes;
+                    g.insert(k, Cell::Resident(Arc::clone(&seg)));
+                    Some(b)
+                }
+                // Another reloader (or a re-commit) won the race.
+                Some(Cell::Resident(s)) => return Some(Arc::clone(s)),
+                None => return None, // invalidated meanwhile
+            }
+        };
+        if let Some(b) = promoted {
+            sp.sink.remove(&spill_key);
+            self.spilled_now.fetch_sub(b, Ordering::Relaxed);
+            self.resident_bytes.fetch_add(b, Ordering::Relaxed);
+            self.spill_reloads.fetch_add(1, Ordering::Relaxed);
+            // The caller's handle pins this segment; pressure falls on
+            // other cells.
+            self.maybe_spill();
+        }
+        Some(seg)
     }
 
-    /// Drop every segment produced on a failed node; returns the map ids
-    /// whose output was lost (they must re-run). The node is also banned:
-    /// any commit from it arriving after this call is discarded, so a
-    /// zombie attempt racing the invalidation cannot resurrect lost (or
-    /// overwrite re-executed) segments.
+    /// Drop every segment produced on a failed node — resident or spilled —
+    /// and return the map ids whose output was lost (they must re-run).
+    /// The node is also banned: any commit from it arriving after this
+    /// call is discarded, so a zombie attempt racing the invalidation
+    /// cannot resurrect lost (or overwrite re-executed) segments.
     pub fn invalidate_node(&self, node: NodeId) -> Vec<u32> {
         self.banned.lock().unwrap().insert(node);
         let mut maps = Vec::new();
@@ -146,12 +402,23 @@ impl ShuffleStore {
             let mut g = shard.lock().unwrap();
             let lost: Vec<(u32, u32)> = g
                 .iter()
-                .filter(|(_, s)| s.node == node)
+                .filter(|(_, c)| c.node() == node)
                 .map(|(&k, _)| k)
                 .collect();
             for k in lost {
                 maps.push(k.0);
-                g.remove(&k);
+                match g.remove(&k) {
+                    Some(Cell::Resident(s)) => {
+                        self.resident_bytes.fetch_sub(s.bytes(), Ordering::Relaxed);
+                    }
+                    Some(Cell::Spilled { bytes, key, .. }) => {
+                        self.spilled_now.fetch_sub(bytes, Ordering::Relaxed);
+                        if let Some(sp) = &self.spill {
+                            sp.sink.remove(&key);
+                        }
+                    }
+                    None => {}
+                }
             }
         }
         maps.sort_unstable();
@@ -159,18 +426,25 @@ impl ShuffleStore {
         maps
     }
 
-    /// Total bytes held.
+    /// Total payload bytes held (resident + spilled).
     pub fn total_bytes(&self) -> u64 {
-        self.shards
-            .iter()
-            .map(|s| {
-                s.lock()
-                    .unwrap()
-                    .values()
-                    .map(|seg| seg.bytes())
-                    .sum::<u64>()
-            })
-            .sum()
+        self.resident_bytes.load(Ordering::Relaxed) + self.spilled_now.load(Ordering::Relaxed)
+    }
+
+    /// Payload bytes currently resident in memory.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative encoded bytes written to the spill sink (the
+    /// `SPILL_BYTES`-shaped view from the shuffle's side).
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spill_bytes_total.load(Ordering::Relaxed)
+    }
+
+    /// Spilled segments transparently re-materialized by fetches.
+    pub fn spill_reloads(&self) -> u64 {
+        self.spill_reloads.load(Ordering::Relaxed)
     }
 
     pub fn segment_count(&self) -> usize {
@@ -223,7 +497,9 @@ impl Ord for Head<'_> {
 /// as `(segment index, record index)` pairs, stable across segments in map
 /// order for equal keys. Allocates the O(segments) heap and the output
 /// index — no key or value bytes are cloned; callers read records through
-/// the returned indices.
+/// the returned indices. Re-materialized (previously spilled) segments
+/// merge exactly like always-resident ones: the merge sees only
+/// `Arc<Segment>` views.
 pub fn merge_segments(segments: &[Arc<Segment>]) -> Vec<(u32, u32)> {
     let total: usize = segments.iter().map(|s| s.records.len()).sum();
     let mut out = Vec::with_capacity(total);
@@ -271,6 +547,7 @@ pub fn merge_to_recordbuf(segments: &[Arc<Segment>]) -> RecordBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lustre::SpillSink;
     use crate::testkit::props;
 
     fn seg(map: u32, part: u32, keys: &[u8]) -> Segment {
@@ -280,6 +557,39 @@ mod tests {
             node: NodeId(map),
             records: RecordBuf::from_pairs(keys.iter().map(|&k| (vec![k], vec![k, k]))),
         }
+    }
+
+    /// In-memory [`SpillSink`] test double.
+    #[derive(Default)]
+    struct MemSpillSink(Mutex<BTreeMap<String, Vec<u8>>>);
+
+    impl SpillSink for MemSpillSink {
+        fn write(&self, key: &str, data: &[u8]) -> Result<()> {
+            self.0.lock().unwrap().insert(key.to_string(), data.to_vec());
+            Ok(())
+        }
+
+        fn read(&self, key: &str) -> Result<Vec<u8>> {
+            self.0
+                .lock()
+                .unwrap()
+                .get(key)
+                .cloned()
+                .ok_or_else(|| Error::MapReduce(format!("no spilled '{key}'")))
+        }
+
+        fn remove(&self, key: &str) {
+            self.0.lock().unwrap().remove(key);
+        }
+    }
+
+    fn spilling_store(budget: u64) -> (ShuffleStore, Arc<MemSpillSink>) {
+        let sink = Arc::new(MemSpillSink::default());
+        let st = ShuffleStore::with_shards_and_spill(
+            4,
+            Some(ShuffleSpill { sink: Arc::clone(&sink) as Arc<dyn SpillSink>, budget }),
+        );
+        (st, sink)
     }
 
     #[test]
@@ -387,6 +697,91 @@ mod tests {
     }
 
     #[test]
+    fn segment_encode_decode_round_trip() {
+        props(30, |g| {
+            let n = g.usize(0..30);
+            let pairs: Vec<(Vec<u8>, Vec<u8>)> = (0..n)
+                .map(|_| {
+                    let k: Vec<u8> = (0..g.usize(0..12)).map(|_| g.u32(0..256) as u8).collect();
+                    let v: Vec<u8> = (0..g.usize(0..40)).map(|_| g.u32(0..256) as u8).collect();
+                    (k, v)
+                })
+                .collect();
+            let s = Segment {
+                map: g.u32(0..100),
+                partition: g.u32(0..100),
+                node: NodeId(g.u32(0..100)),
+                records: RecordBuf::from_pairs(pairs.clone()),
+            };
+            let d = Segment::decode(&s.encode()).unwrap();
+            assert_eq!((d.map, d.partition, d.node), (s.map, s.partition, s.node));
+            assert_eq!(d.records.to_pairs(), pairs);
+        });
+    }
+
+    #[test]
+    fn spill_under_pressure_and_transparent_reload() {
+        // 3 maps × ~40 payload bytes with a 64-byte budget: later puts
+        // must push earlier segments out to the sink, and fetches must
+        // bring them back byte-identical with the all-in-RAM merge.
+        let (st, sink) = spilling_store(64);
+        let reference = ShuffleStore::new();
+        for m in 0..3u32 {
+            let keys: Vec<u8> = (0..20).map(|i| (m as u8) * 20 + i).collect();
+            st.put(seg(m, 0, &keys));
+            reference.put(seg(m, 0, &keys));
+        }
+        assert!(st.spilled_bytes() > 0, "budget must force spills: {st:?}");
+        assert!(st.resident_bytes() <= 64, "{st:?}");
+        assert!(!sink.0.lock().unwrap().is_empty(), "sink holds spilled cells");
+        assert_eq!(st.segment_count(), 3, "spilled cells still count");
+        st.verify_complete(3, 1).unwrap();
+        // Transparent re-materialization: fetch_partition sees all three
+        // and the merge is byte-identical to the unbounded store's.
+        let got = st.fetch_partition(0, 3).unwrap();
+        assert!(st.spill_reloads() > 0, "fetch must reload spilled segments");
+        let want = merge_to_recordbuf(&reference.fetch_partition(0, 3).unwrap());
+        assert_eq!(merge_to_recordbuf(&got).to_pairs(), want.to_pairs());
+    }
+
+    #[test]
+    fn fetched_segments_are_pinned_against_spill() {
+        // A reduce holding a fetched view keeps that segment resident:
+        // spilling it would not free memory (the Arc keeps the bytes
+        // alive) and the handle must stay valid.
+        let (st, _sink) = spilling_store(64);
+        st.put(seg(0, 0, &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10]));
+        let pinned = st.try_fetch(0, 0).unwrap();
+        for m in 1..5u32 {
+            let keys: Vec<u8> = (0..20).map(|i| i as u8).collect();
+            st.put(seg(m, 0, &keys));
+        }
+        assert!(st.spilled_bytes() > 0, "pressure must spill something");
+        let again = st.try_fetch(0, 0).unwrap();
+        assert!(
+            Arc::ptr_eq(&pinned, &again),
+            "pinned segment must never round-trip through the sink"
+        );
+    }
+
+    #[test]
+    fn invalidate_node_drops_spilled_cells_too() {
+        let (st, sink) = spilling_store(32);
+        st.put(seg(0, 0, &(0..16).collect::<Vec<u8>>()));
+        st.put(seg(1, 0, &(0..16).collect::<Vec<u8>>())); // map 0 spills
+        assert!(st.spilled_bytes() > 0);
+        let lost = st.invalidate_node(NodeId(0));
+        assert_eq!(lost, vec![0]);
+        assert!(st.try_fetch(0, 0).is_none(), "spilled cell gone");
+        assert!(
+            sink.0.lock().unwrap().keys().all(|k| !k.starts_with("m0-")),
+            "spilled copy removed from the sink"
+        );
+        // Map 1's segment (16 records × 3 payload bytes) is all that's left.
+        assert_eq!(st.total_bytes(), 48);
+    }
+
+    #[test]
     fn merge_is_sorted_and_complete() {
         let a = seg(0, 0, &[1, 4, 7]);
         let b = seg(1, 0, &[2, 4, 9]);
@@ -431,6 +826,30 @@ mod tests {
             let merged = merge_to_recordbuf(&segs);
             let keys: Vec<u8> = merged.iter().map(|(k, _)| k[0]).collect();
             assert_eq!(keys, flat);
+        });
+    }
+
+    #[test]
+    fn merge_property_spilled_parity() {
+        // The k-way merge cannot tell re-materialized segments from
+        // resident ones: a budget-bounded store and the all-in-RAM store
+        // merge to identical pair streams.
+        props(20, |g| {
+            let budget = 1 + g.u64(0..96);
+            let (st, _sink) = spilling_store(budget);
+            let reference = ShuffleStore::new();
+            let n_maps = g.usize(1..5) as u32;
+            for m in 0..n_maps {
+                let mut keys: Vec<u8> =
+                    (0..g.usize(1..25)).map(|_| g.u32(0..60) as u8).collect();
+                keys.sort_unstable();
+                st.put(seg(m, 0, &keys));
+                reference.put(seg(m, 0, &keys));
+            }
+            let constrained = merge_to_recordbuf(&st.fetch_partition(0, n_maps).unwrap());
+            let unbounded =
+                merge_to_recordbuf(&reference.fetch_partition(0, n_maps).unwrap());
+            assert_eq!(constrained.to_pairs(), unbounded.to_pairs());
         });
     }
 

@@ -58,12 +58,7 @@ pub fn plan_splits(
     }
     let split_bytes = split_bytes.max(1);
     let mut out = Vec::new();
-    let mut files: Vec<String> = dfs
-        .list(input_dir)
-        .into_iter()
-        .filter(|p| !p.split('/').next_back().unwrap_or("").starts_with('_'))
-        .collect();
-    files.sort();
+    let files = crate::lustre::visible_files(dfs, input_dir);
     if files.is_empty() {
         return Err(Error::MapReduce(format!("no input files in {input_dir}")));
     }

@@ -150,6 +150,93 @@ fn chaos_terasort_node_loss_with_replacement_is_byte_identical() {
     assert_eq!(used.mem_mb, 0, "all containers released");
 }
 
+/// Two-level-storage chaos (PR 7): the same node-loss Terasort, but on a
+/// backend whose burst tier is ~6× smaller than the input, so the job
+/// runs with files evicted to the backing tier and shuffle segments
+/// spilled — and a node dies while spilled segments exist. Output must
+/// still be byte-identical to the unbounded all-in-RAM run.
+#[test]
+fn chaos_terasort_under_memory_pressure_and_node_loss_is_byte_identical() {
+    let cfg = StackConfig::tiny();
+    let pool = Pool::new(4);
+    let rows = 6_000u64; // ~600 KB of 100-byte records
+    let gen = TeragenSpec {
+        rows,
+        maps: 3,
+        output_dir: "/lustre/scratch/mp-in".into(),
+        seed: 42,
+    };
+    let ts = TerasortJob {
+        split_bytes: 60_000,
+        samples_per_file: 200,
+        ..TerasortJob::new("/lustre/scratch/mp-in", "/lustre/scratch/mp-out", 4)
+    };
+
+    // Reference: unbounded backend, healthy cluster.
+    let fs_ref = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
+    let mut dc_ref = build_cluster(&fs_ref, &cfg, "mp-ref");
+    {
+        let mut engine =
+            MrEngine::new(&mut dc_ref, fs_ref.clone() as Arc<dyn Dfs>, &pool, 1024, 1024);
+        run_teragen(&mut engine, &gen, Micros::ZERO).unwrap();
+    }
+    let input = summarize_dir(&*fs_ref, "/lustre/scratch/mp-in").unwrap();
+    let ref_outcome = {
+        let mut engine =
+            MrEngine::new(&mut dc_ref, fs_ref.clone() as Arc<dyn Dfs>, &pool, 1024, 1024);
+        run_terasort(&mut engine, &ts, None, Micros::ZERO).unwrap()
+    };
+    let reference = sorted_output(&fs_ref, &ref_outcome.output_files);
+
+    // Constrained run: 96 KB burst tier (explicit budget — no env races),
+    // same deterministic Teragen, node loss after two committed maps.
+    let fs = Arc::new(LustreFs::with_mem_budget(
+        &cfg.lustre,
+        &cfg.cluster,
+        Some(96 * 1024),
+    ));
+    let mut dc = build_cluster(&fs, &cfg, "mp-con");
+    {
+        let mut engine =
+            MrEngine::new(&mut dc, fs.clone() as Arc<dyn Dfs>, &pool, 1024, 1024);
+        run_teragen(&mut engine, &gen, Micros::ZERO).unwrap();
+    }
+    let cm = ClusterManager::new(elastic_cfg(), (100..104).map(NodeId).collect());
+    let plan = ElasticPlan::new().at_maps(2, ElasticAction::FailMapHost(0));
+    let outcome = {
+        let mut engine = MrEngine::new(&mut dc, fs.clone() as Arc<dyn Dfs>, &pool, 1024, 1024)
+            .with_cluster_manager(cm)
+            .with_plan(plan);
+        run_terasort(&mut engine, &ts, None, Micros::ZERO).unwrap()
+    };
+
+    // Same sorted bytes as the unbounded run, validated end to end.
+    let validated = teravalidate(&*fs, "/lustre/scratch/mp-out", input).unwrap();
+    assert_eq!(validated.records, rows);
+    let constrained = sorted_output(&fs, &outcome.output_files);
+    assert_eq!(
+        reference, constrained,
+        "memory pressure + node loss must never change bytes"
+    );
+
+    // The pressure was real: the job itself evicted file extents and
+    // spilled shuffle segments, and the node died while tiered state
+    // existed.
+    assert_eq!(outcome.counters.get(counters::NODES_FAILED), 1);
+    assert!(
+        outcome.counters.get(counters::TIER_EVICTIONS) > 0,
+        "input ≥ 4× budget must evict: {:?}",
+        fs.tier_stats()
+    );
+    assert!(
+        outcome.counters.get(counters::SPILL_BYTES) > 0,
+        "shuffle must spill under a 96 KB budget: {:?}",
+        fs.tier_stats()
+    );
+    assert!(outcome.counters.get(counters::TIER_MISSES) > 0);
+    dc.rm.check_invariants().unwrap();
+}
+
 /// Property: random attempt failures + a random committed-map host crash
 /// never change Terasort's bytes relative to a clean reference run.
 #[test]
