@@ -1,0 +1,133 @@
+//! API front-door saturation bench (PR 8). Writes **`BENCH_PR8.json`**:
+//!
+//! * `api_saturation` — a deliberately tiny serve pool (1 worker, accept
+//!   queue of 1) hammered by concurrent clients. Reports:
+//!   - `p99_ms` — 99th-percentile latency of the requests that were
+//!     served (observability, not gated);
+//!   - `shed_rate` — fraction of requests shed with 429 before parse
+//!     (observability, not gated);
+//!   - `sheds_seen` — gated ≥ 1: the bounded-queue backpressure path
+//!     really engaged under overload, 0 means the bench measured an
+//!     unconstrained server;
+//!   - `survived` — gated = 1: after the storm the same server still
+//!     admits, runs and completes a real job.
+//!
+//! `HPCW_BENCH_SMOKE=1` shrinks the storm to CI size.
+
+use hpcw::api::http::request_with_headers;
+use hpcw::api::{ApiClient, ApiServer, AppPayload, Stack};
+use hpcw::bench::emit_json;
+use hpcw::config::{StackConfig, TenantSpec};
+use hpcw::scheduler::JobState;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+fn main() {
+    let smoke = std::env::var("HPCW_BENCH_SMOKE").is_ok();
+    let (clients, per_client) = if smoke { (8, 25) } else { (16, 200) };
+
+    let mut cfg = StackConfig::tiny();
+    cfg.tenant.keys = TenantSpec::parse_list("k-bench:bench:root.bench").unwrap();
+    // The storm must hit the bounded accept queue, not the submission
+    // limiter: reads are uncharged anyway, and the survival job at the
+    // end needs a token.
+    cfg.tenant.submit_rate_per_s = 1_000_000.0;
+    cfg.tenant.submit_burst = 1_000_000;
+    cfg.tenant.http_workers = 1;
+    cfg.tenant.accept_queue = 1;
+    let server = ApiServer::start(Stack::new(cfg).unwrap()).unwrap();
+    let addr = server.addr.clone();
+
+    println!(
+        "api_saturation: {clients} clients x {per_client} requests against \
+         1 worker / accept queue 1"
+    );
+
+    let sheds = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let start = Arc::new(Barrier::new(clients));
+    let threads: Vec<_> = (0..clients)
+        .map(|_| {
+            let addr = addr.clone();
+            let sheds = Arc::clone(&sheds);
+            let errors = Arc::clone(&errors);
+            let start = Arc::clone(&start);
+            std::thread::spawn(move || {
+                start.wait();
+                let mut served_us: Vec<u64> = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let t0 = Instant::now();
+                    match request_with_headers(
+                        &addr,
+                        "GET",
+                        "/v1/jobs",
+                        None,
+                        &[("X-HPCW-Key", "k-bench")],
+                    ) {
+                        Ok((200, _, _)) => served_us.push(t0.elapsed().as_micros() as u64),
+                        Ok((429, _, _)) => {
+                            sheds.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok((status, _, _)) => panic!("unexpected status {status}"),
+                        // A connection reset mid-shed counts as shed load
+                        // too, but track it separately for the log.
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                served_us
+            })
+        })
+        .collect();
+    let mut served_us: Vec<u64> = threads
+        .into_iter()
+        .flat_map(|t| t.join().unwrap())
+        .collect();
+    served_us.sort_unstable();
+
+    let total = (clients * per_client) as u64;
+    let sheds = sheds.load(Ordering::Relaxed);
+    let errors = errors.load(Ordering::Relaxed);
+    let p99_ms = if served_us.is_empty() {
+        0.0
+    } else {
+        let idx = (served_us.len() - 1) * 99 / 100;
+        served_us[idx] as f64 / 1_000.0
+    };
+    let shed_rate = (sheds + errors) as f64 / total as f64;
+    println!(
+        "  served {} / {total}  sheds {sheds}  errors {errors}  p99 {p99_ms:.3} ms  \
+         shed_rate {shed_rate:.3}",
+        served_us.len()
+    );
+
+    // Survival: the storm over, the same server still does real work.
+    let client = ApiClient::with_key(&addr, "k-bench");
+    let job = client
+        .submit(
+            2,
+            "bench",
+            &AppPayload::Teragen {
+                rows: 100,
+                maps: 1,
+                dir: "/lustre/scratch/sat-survive".into(),
+            },
+        )
+        .expect("post-storm submission");
+    let doc = client.wait(job, Duration::from_secs(60)).expect("wait");
+    assert_eq!(doc.state, JobState::Done, "error={:?}", doc.error);
+    assert!(sheds >= 1, "storm never overflowed the accept queue");
+
+    emit_json(
+        "BENCH_PR8.json",
+        "api_saturation",
+        &[
+            ("p99_ms", p99_ms),
+            ("shed_rate", shed_rate),
+            ("sheds_seen", sheds as f64),
+            ("survived", 1.0),
+        ],
+    );
+}

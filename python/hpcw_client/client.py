@@ -31,21 +31,49 @@ WAIT_SLICE_MS = 10_000
 
 
 class ApiError(Exception):
-    """An error envelope from the server (or a transport failure)."""
+    """An error envelope from the server (or a transport failure).
 
-    def __init__(self, status: int, code: str, message: str):
+    ``retry_after`` carries the server's ``Retry-After`` header in
+    seconds when the request was shed (429 ``rate_limited`` /
+    ``quota_exceeded``), else ``None``.
+    """
+
+    def __init__(
+        self,
+        status: int,
+        code: str,
+        message: str,
+        retry_after: Optional[int] = None,
+    ):
         super().__init__(f"HTTP {status} {code}: {message}")
         self.status = status
         self.code = code
         self.message = message
+        self.retry_after = retry_after
 
 
 class ApiClient:
-    """Client handle for one API endpoint (``host:port``)."""
+    """Client handle for one API endpoint (``host:port``).
 
-    def __init__(self, addr: str, timeout: float = 30.0):
+    ``api_key`` is sent as the ``X-HPCW-Key`` header on every request;
+    a multi-tenant server resolves it to a tenant + fair-share queue.
+    ``retries`` > 0 transparently retries 429-shed requests after the
+    server's ``Retry-After`` delay (capped at ``retry_cap_s`` per sleep).
+    """
+
+    def __init__(
+        self,
+        addr: str,
+        timeout: float = 30.0,
+        api_key: Optional[str] = None,
+        retries: int = 0,
+        retry_cap_s: float = 5.0,
+    ):
         self.addr = addr
         self.timeout = timeout
+        self.api_key = api_key
+        self.retries = retries
+        self.retry_cap_s = retry_cap_s
         #: HTTP requests issued (conformance tests assert the
         #: O(transitions) property of ``wait`` with it).
         self.request_count = 0
@@ -54,31 +82,44 @@ class ApiClient:
 
     def _call(
         self, method: str, path: str, body: Optional[bytes] = None
-    ) -> Tuple[int, bytes]:
+    ) -> Tuple[int, bytes, Optional[int]]:
         self.request_count += 1
         # Per-request connection: the server speaks Connection: close.
         # The socket timeout must exceed the longest wait_ms slice.
         conn = http.client.HTTPConnection(
             self.addr, timeout=self.timeout + WAIT_SLICE_MS / 1000.0
         )
+        headers = {"X-HPCW-Key": self.api_key} if self.api_key else {}
         try:
-            conn.request(method, path, body=body)
+            conn.request(method, path, body=body, headers=headers)
             resp = conn.getresponse()
-            return resp.status, resp.read()
+            retry_after = resp.getheader("Retry-After")
+            data = resp.read()
         finally:
             conn.close()
+        try:
+            after = int(retry_after) if retry_after is not None else None
+        except ValueError:
+            after = None
+        return resp.status, data, after
 
     def _json(self, method: str, path: str, body: Optional[Dict[str, Any]] = None) -> Any:
         raw = wire.dumps(body).encode("utf-8") if body is not None else None
-        status, data = self._call(method, path, raw)
-        try:
-            doc = json.loads(data.decode("utf-8"))
-        except (UnicodeDecodeError, json.JSONDecodeError) as e:
-            raise ApiError(status, wire.INTERNAL, f"unparseable response: {e}")
-        if status >= 400:
+        attempts = 0
+        while True:
+            status, data, retry_after = self._call(method, path, raw)
+            try:
+                doc = json.loads(data.decode("utf-8"))
+            except (UnicodeDecodeError, json.JSONDecodeError) as e:
+                raise ApiError(status, wire.INTERNAL, f"unparseable response: {e}")
+            if status < 400:
+                return doc
             code, message = wire.parse_error(doc)
-            raise ApiError(status, code, message)
-        return doc
+            if status == 429 and attempts < self.retries:
+                attempts += 1
+                time.sleep(min(retry_after or 1, self.retry_cap_s))
+                continue
+            raise ApiError(status, code, message, retry_after)
 
     # -- jobs --------------------------------------------------------------
 
@@ -115,11 +156,11 @@ class ApiClient:
         the job's output root) or relative to it; escapes are rejected by
         the server with code ``bad_path``."""
         q = urllib.parse.quote(path, safe="/")
-        status, data = self._call("GET", f"/v1/jobs/{job}/output?path={q}")
+        status, data, retry_after = self._call("GET", f"/v1/jobs/{job}/output?path={q}")
         if status >= 400:
             doc = json.loads(data.decode("utf-8"))
             code, message = wire.parse_error(doc)
-            raise ApiError(status, code, message)
+            raise ApiError(status, code, message, retry_after)
         return data
 
     def submit_query(
@@ -188,7 +229,20 @@ class ApiClient:
         return self._json("GET", f"/v1/events?since={since}&wait_ms={wait_ms}")
 
     def metrics(self) -> str:
-        status, data = self._call("GET", "/v1/metrics")
+        status, data, _ = self._call("GET", "/v1/metrics")
         if status != 200:
             raise ApiError(status, wire.INTERNAL, "metrics unavailable")
         return data.decode("utf-8")
+
+    # -- tenancy -----------------------------------------------------------
+
+    def tenants(self) -> List[Dict[str, Any]]:
+        """Per-tenant accounting (``GET /v1/tenants``): quota usage,
+        admission counters and circuit-breaker state, in canonical
+        ``wire.TENANT_FIELDS`` order."""
+        return self._json("GET", "/v1/tenants")["tenants"]
+
+    def queues(self) -> List[Dict[str, Any]]:
+        """Fair-share queue accounting (``GET /v1/queues``): policy
+        (weight / min / max), live share and preemption counters."""
+        return self._json("GET", "/v1/queues")["queues"]

@@ -28,6 +28,9 @@ NOT_READY = "not_ready"
 TOO_LARGE = "too_large"
 DEPRECATED = "deprecated"
 INTERNAL = "internal"
+UNAUTHORIZED = "unauthorized"
+RATE_LIMITED = "rate_limited"
+QUOTA_EXCEEDED = "quota_exceeded"
 
 #: Exact job-state tokens (LSF names; KILLED is a real token, clients
 #: never prefix-match display strings like "EXIT(kill)").
@@ -251,6 +254,49 @@ def canonical_workflow(doc: Dict[str, Any]) -> Dict[str, Any]:
             for s in _req(doc, "steps")
         ],
     )
+
+
+#: Fields of a ``GET /v1/tenants`` entry, in canonical (Rust declaration)
+#: order. All counts are integers so the encoding is float-format-free.
+TENANT_FIELDS = (
+    "name",
+    "queue",
+    "running_apps",
+    "containers",
+    "dfs_bytes",
+    "submitted",
+    "rate_limited",
+    "quota_rejected",
+    "breaker_rejected",
+    "breaker",
+)
+
+#: Fields of a ``GET /v1/queues`` entry, in canonical order.
+QUEUE_FIELDS = (
+    "name",
+    "weight",
+    "min_pct",
+    "max_pct",
+    "running",
+    "served",
+    "share_pct",
+    "preemptions",
+    "wait_us",
+)
+
+#: Circuit-breaker wire tokens (mirror ``BreakerState::name``).
+BREAKER_STATES = ("closed", "open", "half_open")
+
+
+def canonical_tenant(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Parse-and-rebuild a tenant document in canonical key order — the
+    Python analog of Rust ``TenantDoc::from_json`` → ``to_json``."""
+    return {k: _req(doc, k) for k in TENANT_FIELDS}
+
+
+def canonical_queue(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Parse-and-rebuild a queue document in canonical key order."""
+    return {k: _req(doc, k) for k in QUEUE_FIELDS}
 
 
 def error_doc(code: str, message: str) -> Dict[str, Any]:

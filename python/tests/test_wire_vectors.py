@@ -96,6 +96,32 @@ def test_error_vector_is_canonical():
     assert "escapes" in message
 
 
+def test_tenant_vector_is_canonical():
+    case = load_vectors()["tenant"]
+    assert wire.dumps(wire.canonical_tenant(case["doc"])) == case["canon"]
+    # Canonicalization fixes key order even from a scrambled doc.
+    scrambled = dict(reversed(list(case["doc"].items())))
+    assert wire.dumps(wire.canonical_tenant(scrambled)) == case["canon"]
+    assert case["doc"]["breaker"] in wire.BREAKER_STATES
+
+
+def test_queue_vector_is_canonical():
+    case = load_vectors()["queue"]
+    assert wire.dumps(wire.canonical_queue(case["doc"])) == case["canon"]
+    scrambled = dict(reversed(list(case["doc"].items())))
+    assert wire.dumps(wire.canonical_queue(scrambled)) == case["canon"]
+
+
+def test_admission_error_vectors_are_canonical():
+    cases = load_vectors()["admission_errors"]
+    codes = set()
+    for case in cases:
+        assert wire.dumps(wire.canonical_error(case["doc"])) == case["canon"]
+        code, _ = wire.parse_error(case["doc"])
+        codes.add(code)
+    assert {wire.RATE_LIMITED, wire.QUOTA_EXCEEDED} <= codes
+
+
 def test_canonicalization_is_idempotent():
     for case in load_vectors()["payloads"]:
         once = wire.canonical_payload(case["doc"])

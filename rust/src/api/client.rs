@@ -8,10 +8,11 @@
 //! `GET /v1/...?wait_ms=N`, so a job that completes after time T costs
 //! O(state transitions) HTTP requests, not O(T / poll-interval).
 
-use crate::api::http::request;
+use crate::api::http::request_with_headers;
 use crate::api::stack::AppPayload;
 use crate::api::wire::{
-    ClusterDoc, ErrorDoc, EventPage, JobDoc, JobsPage, SubmitRequest, WorkflowDoc, WorkflowSpec,
+    ClusterDoc, ErrorDoc, EventPage, JobDoc, JobsPage, QueueDoc, SubmitRequest, TenantDoc,
+    WorkflowDoc, WorkflowSpec,
 };
 use crate::codec::json::Json;
 use crate::error::{Error, Result};
@@ -25,6 +26,9 @@ const WAIT_SLICE_MS: u64 = 10_000;
 #[derive(Debug)]
 pub struct ApiClient {
     pub addr: String,
+    /// `X-HPCW-Key` credential sent with every request (multi-tenant
+    /// servers resolve it to a tenant + fair-share queue).
+    api_key: Option<String>,
     /// HTTP requests issued by this handle (tests assert the O(transitions)
     /// property of `wait` with it).
     requests: AtomicU64,
@@ -34,6 +38,7 @@ impl Clone for ApiClient {
     fn clone(&self) -> ApiClient {
         ApiClient {
             addr: self.addr.clone(),
+            api_key: self.api_key.clone(),
             requests: AtomicU64::new(0),
         }
     }
@@ -43,8 +48,16 @@ impl ApiClient {
     pub fn new(addr: &str) -> ApiClient {
         ApiClient {
             addr: addr.to_string(),
+            api_key: None,
             requests: AtomicU64::new(0),
         }
+    }
+
+    /// A client that authenticates as a tenant via `X-HPCW-Key`.
+    pub fn with_key(addr: &str, key: &str) -> ApiClient {
+        let mut c = ApiClient::new(addr);
+        c.api_key = Some(key.to_string());
+        c
     }
 
     /// HTTP requests issued so far by this handle.
@@ -53,8 +66,29 @@ impl ApiClient {
     }
 
     fn call(&self, method: &str, path: &str, body: Option<&[u8]>) -> Result<(u16, Vec<u8>)> {
+        let (status, body, _) = self.call_throttled(method, path, body)?;
+        Ok((status, body))
+    }
+
+    /// Like `call`, but also returns the server's `Retry-After` seconds
+    /// when the request was shed or throttled (429).
+    fn call_throttled(
+        &self,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+    ) -> Result<(u16, Vec<u8>, Option<u64>)> {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        request(&self.addr, method, path, body)
+        let extra: Vec<(&str, &str)> = match self.api_key.as_deref() {
+            Some(k) => vec![("X-HPCW-Key", k)],
+            None => Vec::new(),
+        };
+        let (status, headers, body) =
+            request_with_headers(&self.addr, method, path, body, &extra)?;
+        let retry_after = headers
+            .get("retry-after")
+            .and_then(|v| v.trim().parse::<u64>().ok());
+        Ok((status, body, retry_after))
     }
 
     /// Parse a JSON response; `4xx`/`5xx` become errors carrying the
@@ -75,7 +109,9 @@ impl ApiClient {
         Ok(json)
     }
 
-    /// Submit an application; returns the LSF job id.
+    /// Submit an application; returns the LSF job id. A 429 rejection
+    /// (rate limit / quota / shed) carries the server's `Retry-After`
+    /// seconds in the error message.
     pub fn submit(&self, nodes: u32, user: &str, payload: &AppPayload) -> Result<u64> {
         let body = SubmitRequest {
             nodes,
@@ -84,7 +120,17 @@ impl ApiClient {
         }
         .to_json()
         .to_string();
-        let (status, resp) = self.call("POST", "/v1/jobs", Some(body.as_bytes()))?;
+        let (status, resp, retry_after) =
+            self.call_throttled("POST", "/v1/jobs", Some(body.as_bytes()))?;
+        if status == 429 {
+            let hint = retry_after
+                .map(|s| format!(" (Retry-After: {s}s)"))
+                .unwrap_or_default();
+            return match Self::check(status, &resp) {
+                Err(e) => Err(Error::Api(format!("{e}{hint}"))),
+                Ok(_) => Err(Error::Api(format!("HTTP 429{hint}"))),
+            };
+        }
         let json = Self::check(status, &resp)?;
         json.req_u64("job")
     }
@@ -272,6 +318,32 @@ impl ApiClient {
         }
         String::from_utf8(resp).map_err(|_| Error::Api("non-utf8 metrics".into()))
     }
+
+    /// Per-tenant accounting (`GET /v1/tenants`): quota usage, admission
+    /// counters and circuit-breaker state.
+    pub fn tenants(&self) -> Result<Vec<TenantDoc>> {
+        let (status, resp) = self.call("GET", "/v1/tenants", None)?;
+        let json = Self::check(status, &resp)?;
+        json.get("tenants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Api("missing 'tenants' array".into()))?
+            .iter()
+            .map(TenantDoc::from_json)
+            .collect()
+    }
+
+    /// Fair-share queue accounting (`GET /v1/queues`): policy
+    /// (weight / min / max) plus live share and preemption counters.
+    pub fn queues(&self) -> Result<Vec<QueueDoc>> {
+        let (status, resp) = self.call("GET", "/v1/queues", None)?;
+        let json = Self::check(status, &resp)?;
+        json.get("queues")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Api("missing 'queues' array".into()))?
+            .iter()
+            .map(QueueDoc::from_json)
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -337,7 +409,7 @@ mod tests {
     #[test]
     fn bad_payload_rejected_with_stable_code() {
         let (_server, client) = server();
-        let (status, body) = request(
+        let (status, body) = crate::api::http::request(
             &client.addr,
             "POST",
             "/v1/jobs",

@@ -151,10 +151,13 @@ impl Response {
             201 => "Created",
             301 => "Moved Permanently",
             400 => "Bad Request",
+            401 => "Unauthorized",
             404 => "Not Found",
             405 => "Method Not Allowed",
             409 => "Conflict",
             413 => "Payload Too Large",
+            429 => "Too Many Requests",
+            503 => "Service Unavailable",
             _ => "Internal Server Error",
         }
     }
@@ -295,6 +298,126 @@ pub fn serve(
     }
 }
 
+/// Counters published by `serve_pool`'s bounded front door.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    /// Connections shed with 429 because the accept queue was full.
+    pub shed: std::sync::atomic::AtomicU64,
+    /// Connections accepted into the work queue.
+    pub accepted: std::sync::atomic::AtomicU64,
+}
+
+impl ServeStats {
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn accepted_count(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+}
+
+/// The overload response, written *before* any request parse: when the
+/// accept queue is full the server must not spend reader-thread time on
+/// the very load it is shedding.
+fn shed_response() -> Response {
+    Response::json(
+        429,
+        "{\"error\":{\"code\":\"rate_limited\",\"message\":\"server overloaded; accept queue full\"}}"
+            .to_string(),
+    )
+    .with_header("Retry-After", "1")
+}
+
+/// Serve with a bounded front door: a fixed pool of `workers` handler
+/// threads drains a work queue of at most `queue_depth` accepted
+/// connections. When the queue is full, new connections are answered 429
+/// + `Retry-After` immediately — before the request is even read — so an
+/// overloaded server stays responsive instead of accumulating threads
+/// (the failure mode of one-thread-per-connection `serve`). Returns when
+/// `stop` flips and all workers have drained.
+pub fn serve_pool(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    handler: Arc<dyn Fn(Request) -> Response + Send + Sync>,
+    workers: usize,
+    queue_depth: usize,
+    stats: Arc<ServeStats>,
+) {
+    use std::collections::VecDeque;
+    use std::sync::{Condvar, Mutex};
+
+    let workers = workers.max(1);
+    let queue_depth = queue_depth.max(1);
+    let work: Arc<(Mutex<VecDeque<TcpStream>>, Condvar)> =
+        Arc::new((Mutex::new(VecDeque::new()), Condvar::new()));
+
+    let mut pool = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let work = Arc::clone(&work);
+        let stop = Arc::clone(&stop);
+        let handler = Arc::clone(&handler);
+        pool.push(std::thread::spawn(move || loop {
+            let mut stream = {
+                let (lock, cvar) = &*work;
+                let mut q = lock.lock().unwrap();
+                loop {
+                    if let Some(s) = q.pop_front() {
+                        break s;
+                    }
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    // Timed wait so a flipped `stop` is observed even if
+                    // the accept loop died before notifying.
+                    let (guard, _) = cvar
+                        .wait_timeout(q, Duration::from_millis(50))
+                        .unwrap();
+                    q = guard;
+                }
+            };
+            stream.set_nonblocking(false).ok();
+            let response = match read_request(&mut stream) {
+                Ok(req) => handler(req),
+                Err(e) => parse_error_response(&e),
+            };
+            let _ = response.write_to(&mut stream);
+        }));
+    }
+
+    listener
+        .set_nonblocking(true)
+        .expect("nonblocking listener");
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                let (lock, cvar) = &*work;
+                let mut q = lock.lock().unwrap();
+                if q.len() >= queue_depth {
+                    drop(q);
+                    stats.shed.fetch_add(1, Ordering::Relaxed);
+                    stream.set_nonblocking(false).ok();
+                    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+                    let _ = shed_response().write_to(&mut stream);
+                } else {
+                    q.push_back(stream);
+                    stats.accepted.fetch_add(1, Ordering::Relaxed);
+                    drop(q);
+                    cvar.notify_one();
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+    work.1.notify_all();
+    for t in pool {
+        let _ = t.join();
+    }
+}
+
 /// Blocking client request; returns (status, body).
 pub fn request(
     addr: &str,
@@ -314,13 +437,32 @@ pub fn request_full(
     path: &str,
     body: Option<&[u8]>,
 ) -> Result<(u16, BTreeMap<String, String>, Vec<u8>)> {
+    request_with_headers(addr, method, path, body, &[])
+}
+
+/// `request_full` plus caller-supplied request headers (e.g. the
+/// `X-HPCW-Key` tenant credential).
+pub fn request_with_headers(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&[u8]>,
+    extra_headers: &[(&str, &str)],
+) -> Result<(u16, BTreeMap<String, String>, Vec<u8>)> {
     let mut stream = TcpStream::connect(addr)
         .map_err(|e| Error::Api(format!("connect {addr}: {e}")))?;
     let body = body.unwrap_or(&[]);
-    let head = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+    let mut head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n",
         body.len()
     );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body)?;
 
@@ -503,6 +645,100 @@ mod tests {
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("413"), "got {line}");
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn pool_serves_and_sheds_when_saturated() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let stats = Arc::new(ServeStats::default());
+        let stats2 = Arc::clone(&stats);
+        // One worker that blocks on a gate: the first request parks it,
+        // so the queue (depth 1) fills deterministically.
+        let gate = Arc::new(AtomicBool::new(false));
+        let gate2 = Arc::clone(&gate);
+        let entered = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let entered2 = Arc::clone(&entered);
+        let handler: Arc<dyn Fn(Request) -> Response + Send + Sync> =
+            Arc::new(move |req: Request| {
+                if req.route() == "/slow" {
+                    entered2.fetch_add(1, Ordering::Relaxed);
+                    while !gate2.load(Ordering::Relaxed) {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+                Response::json(200, "{}".into())
+            });
+        let server =
+            std::thread::spawn(move || serve_pool(listener, stop2, handler, 1, 1, stats2));
+
+        // Park the single worker, then fill the single queue slot. Each
+        // uses a raw socket kept open so the connection stays queued.
+        let park = |path: &str| {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(
+                format!("GET {path} HTTP/1.1\r\nContent-Length: 0\r\n\r\n").as_bytes(),
+            )
+            .unwrap();
+            s
+        };
+        let wait_for = |cond: &dyn Fn() -> bool, what: &str| {
+            let deadline = std::time::Instant::now() + Duration::from_secs(5);
+            while !cond() {
+                assert!(std::time::Instant::now() < deadline, "timeout: {what}");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        };
+        let s1 = park("/slow");
+        // The worker must have *popped* s1 (handler entered) before s2 is
+        // sent, or s2 could race into a full queue and be shed.
+        wait_for(&|| entered.load(Ordering::Relaxed) >= 1, "worker parked");
+        let s2 = park("/slow");
+        wait_for(&|| stats.accepted_count() >= 2, "s2 queued");
+
+        // The third connection must be shed 429 before any parse.
+        let (status, headers, body) = request_full(&addr, "GET", "/fast", None).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(headers.get("retry-after").map(String::as_str), Some("1"));
+        assert!(String::from_utf8_lossy(&body).contains("rate_limited"));
+        assert_eq!(stats.shed_count(), 1);
+
+        // Release the gate: the queued requests complete normally.
+        gate.store(true, Ordering::Relaxed);
+        for s in [s1, s2] {
+            let mut line = String::new();
+            BufReader::new(s).read_line(&mut line).unwrap();
+            assert!(line.contains("200"), "queued request served, got {line}");
+        }
+        // And the pool serves new traffic again.
+        let (status, _) = request(&addr, "GET", "/fast", None).unwrap();
+        assert_eq!(status, 200);
+
+        stop.store(true, Ordering::Relaxed);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn client_extra_headers_reach_the_server() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handler: Arc<dyn Fn(Request) -> Response + Send + Sync> =
+            Arc::new(|req: Request| {
+                let key = req.headers.get("x-hpcw-key").cloned().unwrap_or_default();
+                Response::json(200, format!("{{\"key\":\"{key}\"}}"))
+            });
+        let server = std::thread::spawn(move || serve(listener, stop2, handler));
+        let (status, _headers, body) =
+            request_with_headers(&addr, "GET", "/x", None, &[("X-HPCW-Key", "k-alice")])
+                .unwrap();
+        assert_eq!(status, 200);
+        assert!(String::from_utf8_lossy(&body).contains("k-alice"));
         stop.store(true, Ordering::Relaxed);
         server.join().unwrap();
     }

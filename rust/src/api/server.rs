@@ -28,17 +28,18 @@
 //! transition to the event journal, which in turn wakes long-pollers —
 //! `wait` costs O(transitions) requests instead of O(time/poll-interval).
 
-use crate::api::http::{self, Request, Response};
+use crate::api::http::{self, Request, Response, ServeStats};
 use crate::api::stack::Stack;
 use crate::api::synfiniway::WorkflowRun;
 use crate::api::wire::{
-    self, code, ErrorDoc, EventDoc, EventPage, JobDoc, JobsPage, ResultDoc, SubmitRequest,
-    WorkflowDoc, WorkflowSpec,
+    self, code, ErrorDoc, EventDoc, EventPage, JobDoc, JobsPage, QueueDoc, ResultDoc,
+    SubmitRequest, TenantDoc, WorkflowDoc, WorkflowSpec,
 };
 use crate::codec::json::Json;
 use crate::error::Error;
 use crate::metrics::Metrics;
 use crate::scheduler::JobState;
+use crate::tenant::{AdmissionError, Tenant, TenantRegistry};
 use crate::util::ids::LsfJobId;
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
@@ -175,6 +176,10 @@ struct State {
     /// Wakes the pump on submissions / kills.
     work: Signal,
     metrics: Arc<Metrics>,
+    /// Multi-tenant front door (shared with the stack's scheduler).
+    tenants: Arc<TenantRegistry>,
+    /// Bounded-accept-queue counters from the HTTP worker pool.
+    serve_stats: Arc<ServeStats>,
     stop: Arc<AtomicBool>,
 }
 
@@ -193,6 +198,10 @@ impl ApiServer {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?.to_string();
         let metrics = Arc::clone(&stack.metrics);
+        let tenants = Arc::clone(&stack.tenants);
+        let http_workers = stack.cfg.tenant.http_workers.max(1) as usize;
+        let accept_queue = stack.cfg.tenant.accept_queue.max(1) as usize;
+        let serve_stats = Arc::new(ServeStats::default());
         let stop = Arc::new(AtomicBool::new(false));
         let state = Arc::new(State {
             stack: Mutex::new(stack),
@@ -200,6 +209,8 @@ impl ApiServer {
             events: EventBus::new(Arc::clone(&metrics)),
             work: Signal::new(),
             metrics,
+            tenants,
+            serve_stats: Arc::clone(&serve_stats),
             stop: Arc::clone(&stop),
         });
 
@@ -217,7 +228,16 @@ impl ApiServer {
         let serve_stop = Arc::clone(&stop);
         let serve_thread = std::thread::Builder::new()
             .name("hpcw-api".into())
-            .spawn(move || http::serve(listener, serve_stop, handler))
+            .spawn(move || {
+                http::serve_pool(
+                    listener,
+                    serve_stop,
+                    handler,
+                    http_workers,
+                    accept_queue,
+                    serve_stats,
+                )
+            })
             .map_err(|e| Error::Api(format!("spawn server: {e}")))?;
 
         Ok(ApiServer {
@@ -311,15 +331,27 @@ fn error_response(e: &ErrorDoc) -> Response {
 fn route(state: &State, req: Request) -> Response {
     let t0 = Instant::now();
     state.metrics.inc("api.requests", 1);
+    // Identity first, for EVERY route — including the legacy 301 arm, so
+    // a deprecated path is never a side door around the front door.
+    let tenant = match state
+        .tenants
+        .authenticate(req.headers.get("x-hpcw-key").map(String::as_str))
+    {
+        Ok(t) => t,
+        Err(e) => {
+            state.metrics.inc("api.requests.unauthorized", 1);
+            return admission_response(&e);
+        }
+    };
     let segs = req.segments();
     let (endpoint, result): (&str, HandlerResult) = match (req.method.as_str(), segs.as_slice()) {
-        ("POST", ["v1", "jobs"]) => ("post_job", post_job(state, &req)),
+        ("POST", ["v1", "jobs"]) => ("post_job", post_job(state, &req, &tenant)),
         ("GET", ["v1", "jobs"]) => ("list_jobs", list_jobs(state, &req)),
         ("GET", ["v1", "jobs", id]) => ("get_job", get_job(state, &req, id)),
         ("DELETE", ["v1", "jobs", id]) => ("delete_job", delete_job(state, id)),
         ("GET", ["v1", "jobs", id, "output"]) => ("get_output", get_output(state, &req, id)),
-        ("POST", ["v1", "workflows"]) => ("post_workflow", post_workflow(state, &req)),
-        ("POST", ["v1", "queries"]) => ("post_query", post_query(state, &req)),
+        ("POST", ["v1", "workflows"]) => ("post_workflow", post_workflow(state, &req, &tenant)),
+        ("POST", ["v1", "queries"]) => ("post_query", post_query(state, &req, &tenant)),
         ("GET", ["v1", "workflows", id]) => ("get_workflow", get_workflow(state, &req, id)),
         ("GET", ["v1", "cluster"]) => ("get_cluster", get_cluster(state)),
         ("POST", ["v1", "cluster", "nodes", id, action]) => {
@@ -327,9 +359,13 @@ fn route(state: &State, req: Request) -> Response {
         }
         ("GET", ["v1", "events"]) => ("get_events", get_events(state, &req)),
         ("GET", ["v1", "metrics"]) => ("get_metrics", get_metrics(state)),
+        ("GET", ["v1", "tenants"]) => ("get_tenants", get_tenants(state)),
+        ("GET", ["v1", "queues"]) => ("get_queues", get_queues(state)),
         // Unversioned legacy paths: permanent redirect + Deprecation.
+        // Submissions on them still pass full admission control first —
+        // a 301 must never leak capacity past the quota/rate gate.
         (_, ["jobs", ..]) | (_, ["workflows", ..]) | (_, ["metrics"]) => {
-            ("legacy", legacy_redirect(&req))
+            ("legacy", legacy_guarded(state, &req, &tenant))
         }
         _ => (
             "unrouted",
@@ -349,6 +385,61 @@ fn route(state: &State, req: Request) -> Response {
         t0.elapsed().as_micros() as u64,
     );
     response
+}
+
+/// Map an admission rejection onto the wire error taxonomy. The breaker
+/// presents as `rate_limited`: from the caller's perspective both are
+/// "server-imposed rate of zero, retry later".
+fn admission_error_doc(e: &AdmissionError) -> ErrorDoc {
+    match e {
+        AdmissionError::Unauthorized => ErrorDoc::new(
+            code::UNAUTHORIZED,
+            "missing or unknown X-HPCW-Key",
+        ),
+        AdmissionError::RateLimited { .. } => ErrorDoc::new(
+            code::RATE_LIMITED,
+            format!(
+                "submission rate limit exceeded; retry after {}s",
+                e.retry_after_s().unwrap_or(1)
+            ),
+        ),
+        AdmissionError::CircuitOpen { .. } => ErrorDoc::new(
+            code::RATE_LIMITED,
+            format!(
+                "circuit breaker open after repeated job failures; retry after {}s",
+                e.retry_after_s().unwrap_or(1)
+            ),
+        ),
+        AdmissionError::QuotaExceeded { detail } => {
+            ErrorDoc::new(code::QUOTA_EXCEEDED, detail.clone())
+        }
+    }
+}
+
+/// The full rejection response, with `Retry-After` where meaningful.
+fn admission_response(e: &AdmissionError) -> Response {
+    let doc = admission_error_doc(e);
+    let mut resp = Response::json(doc.http_status(), doc.to_json().to_string());
+    if let Some(s) = e.retry_after_s() {
+        resp = resp.with_header("Retry-After", &s.to_string());
+    }
+    resp
+}
+
+/// Legacy unversioned paths: a submission must clear the same admission
+/// gate as its versioned target BEFORE being redirected — the 301 arm
+/// was a side door past the rate/quota gate otherwise (the redirected
+/// retry is charged its own token, like any other attempt).
+fn legacy_guarded(state: &State, req: &Request, tenant: &Tenant) -> HandlerResult {
+    let is_submission = req.method == "POST"
+        && matches!(req.segments().as_slice(), ["jobs"] | ["workflows"]);
+    if is_submission {
+        let now = state.stack.lock().unwrap().now();
+        if let Err(e) = state.tenants.admit_submit(&tenant.name, now) {
+            return Ok(admission_response(&e));
+        }
+    }
+    legacy_redirect(req)
 }
 
 fn legacy_redirect(req: &Request) -> HandlerResult {
@@ -429,12 +520,27 @@ fn long_poll<T>(
 // Handlers
 // ---------------------------------------------------------------------------
 
-fn post_job(state: &State, req: &Request) -> HandlerResult {
+/// The LSF user a submission is attributed to: under tenancy the
+/// authenticated tenant (never the client-claimed body field — identity
+/// comes from the key); otherwise the body's `user`.
+fn effective_user<'a>(state: &State, tenant: &'a Tenant, claimed: &'a str) -> &'a str {
+    if state.tenants.enabled() {
+        tenant.name.as_str()
+    } else {
+        claimed
+    }
+}
+
+fn post_job(state: &State, req: &Request, tenant: &Tenant) -> HandlerResult {
     let j = parse_body(req)?;
     let submit = SubmitRequest::from_json(&j).map_err(|e| bad_request(&e))?;
     let mut stack = state.stack.lock().unwrap();
+    if let Err(e) = state.tenants.admit_submit(&tenant.name, stack.now()) {
+        return Ok(admission_response(&e));
+    }
+    let user = effective_user(state, tenant, &submit.user).to_string();
     let id = stack
-        .submit(submit.nodes, &submit.user, submit.payload)
+        .submit(submit.nodes, &user, submit.payload)
         .map_err(|e| bad_request(&e))?;
     drop(stack);
     state.work.notify();
@@ -551,9 +657,16 @@ fn get_output(state: &State, req: &Request, id: &str) -> HandlerResult {
     Ok(Response::bytes(200, bytes))
 }
 
-fn post_workflow(state: &State, req: &Request) -> HandlerResult {
+fn post_workflow(state: &State, req: &Request, tenant: &Tenant) -> HandlerResult {
     let j = parse_body(req)?;
-    let spec = WorkflowSpec::from_json(&j).map_err(|e| bad_request(&e))?;
+    let mut spec = WorkflowSpec::from_json(&j).map_err(|e| bad_request(&e))?;
+    {
+        let stack = state.stack.lock().unwrap();
+        if let Err(e) = state.tenants.admit_submit(&tenant.name, stack.now()) {
+            return Ok(admission_response(&e));
+        }
+    }
+    spec.user = effective_user(state, tenant, &spec.user).to_string();
     let mut wfs = state.workflows.lock().unwrap();
     let id = wfs.len() as u64;
     wfs.push(WorkflowRun::new(id, spec));
@@ -574,12 +687,13 @@ fn post_workflow(state: &State, req: &Request) -> HandlerResult {
 /// and answers `{job}`; `mode: "workflow"` compiles the plan to a DAG of
 /// `query_stage` steps and answers `{workflow}` — one LSF job per stage,
 /// chained through `${steps.<name>.output_dir}` references.
-fn post_query(state: &State, req: &Request) -> HandlerResult {
+fn post_query(state: &State, req: &Request, tenant: &Tenant) -> HandlerResult {
     let j = parse_body(req)?;
     let engine = j.req_str("engine").map_err(|e| bad_request(&e))?.to_string();
     let text = j.req_str("text").map_err(|e| bad_request(&e))?.to_string();
     let reduces = j.req_u64("reduces").map_err(|e| bad_request(&e))? as u32;
     if j.get("explain").and_then(Json::as_bool).unwrap_or(false) {
+        // EXPLAIN runs nothing: no admission token is charged.
         let stack = state.stack.lock().unwrap();
         let doc = stack
             .explain_query(&engine, &text, reduces)
@@ -587,7 +701,14 @@ fn post_query(state: &State, req: &Request) -> HandlerResult {
         return Ok(Response::json(200, doc.to_string()));
     }
     let nodes = j.req_u64("nodes").map_err(|e| bad_request(&e))? as u32;
-    let user = j.req_str("user").map_err(|e| bad_request(&e))?.to_string();
+    let claimed = j.req_str("user").map_err(|e| bad_request(&e))?.to_string();
+    let user = effective_user(state, tenant, &claimed).to_string();
+    {
+        let stack = state.stack.lock().unwrap();
+        if let Err(e) = state.tenants.admit_submit(&tenant.name, stack.now()) {
+            return Ok(admission_response(&e));
+        }
+    }
     let mode = j.get("mode").and_then(Json::as_str).unwrap_or("job");
     match mode {
         "job" => {
@@ -730,5 +851,67 @@ fn get_metrics(state: &State) -> HandlerResult {
     // Refresh the storage-tier gauges so the scrape sees current tier
     // occupancy/counters, not the values at the last job transition.
     state.stack.lock().unwrap().publish_storage_metrics();
+    // Front-door health: accepted vs shed at the bounded accept queue.
+    state
+        .metrics
+        .set_gauge("api.accepted", state.serve_stats.accepted_count() as f64);
+    state
+        .metrics
+        .set_gauge("api.shed", state.serve_stats.shed_count() as f64);
     Ok(Response::text(200, state.metrics.render()))
+}
+
+/// `GET /v1/tenants`: identity + accounting for every known tenant.
+fn get_tenants(state: &State) -> HandlerResult {
+    let docs: Vec<Json> = state
+        .tenants
+        .tenant_snapshots()
+        .into_iter()
+        .map(|s| {
+            TenantDoc {
+                name: s.name,
+                queue: s.queue,
+                running_apps: s.running_apps as u64,
+                containers: s.containers as u64,
+                dfs_bytes: s.dfs_bytes,
+                submitted: s.submitted,
+                rate_limited: s.rate_limited,
+                quota_rejected: s.quota_rejected,
+                breaker_rejected: s.breaker_rejected,
+                breaker: s.breaker.to_string(),
+            }
+            .to_json()
+        })
+        .collect();
+    Ok(Response::json(
+        200,
+        Json::obj(vec![("tenants", Json::Arr(docs))]).to_string(),
+    ))
+}
+
+/// `GET /v1/queues`: fair-share policy + live counters per queue.
+fn get_queues(state: &State) -> HandlerResult {
+    let docs: Vec<Json> = state
+        .tenants
+        .queue_snapshots()
+        .into_iter()
+        .map(|q| {
+            QueueDoc {
+                name: q.name,
+                weight: q.weight as u64,
+                min_pct: q.min_pct as u64,
+                max_pct: q.max_pct as u64,
+                running: q.running as u64,
+                served: q.served,
+                share_pct: q.share_pct,
+                preemptions: q.preemptions,
+                wait_us: q.wait_us,
+            }
+            .to_json()
+        })
+        .collect();
+    Ok(Response::json(
+        200,
+        Json::obj(vec![("queues", Json::Arr(docs))]).to_string(),
+    ))
 }

@@ -112,6 +112,9 @@ pub struct Stack {
     pub dfs: Arc<LustreFs>,
     pub ids: Arc<IdGen>,
     pub metrics: Arc<Metrics>,
+    /// Multi-tenant front door: identity, fair share, quotas, breaker.
+    /// Inert (admits everything) unless `cfg.tenant` configures keys.
+    pub tenants: Arc<crate::tenant::TenantRegistry>,
     pool: Pool,
     entries: BTreeMap<LsfJobId, Entry>,
     now: Micros,
@@ -123,12 +126,17 @@ impl Stack {
         let cluster = ClusterModel::new(&cfg.cluster);
         let ids = Arc::new(IdGen::default());
         let metrics = Arc::new(Metrics::new());
-        let lsf = Lsf::new(
+        let tenants = Arc::new(crate::tenant::TenantRegistry::new(
+            &cfg.tenant,
+            Arc::clone(&metrics),
+        ));
+        let mut lsf = Lsf::new(
             cfg.scheduler.clone(),
             &cluster,
             Arc::clone(&ids),
             Arc::clone(&metrics),
         );
+        lsf.set_tenants(Arc::clone(&tenants));
         let dfs = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
         let workers = std::thread::available_parallelism()
             .map(|n| n.get())
@@ -141,6 +149,7 @@ impl Stack {
             dfs,
             ids,
             metrics,
+            tenants,
             pool: Pool::new(workers),
             entries: BTreeMap::new(),
             now: Micros::ZERO,
@@ -148,6 +157,11 @@ impl Stack {
     }
 
     /// Submit an application to the bigdata queue (`bsub` analog).
+    ///
+    /// Under tenancy every accepted submission — direct or a workflow
+    /// step — books the submitting tenant's `running_apps` here, so the
+    /// accounting stays symmetric with the `on_terminal` release in
+    /// `tick` no matter which path submitted.
     pub fn submit(&mut self, nodes: u32, user: &str, payload: AppPayload) -> Result<LsfJobId> {
         let id = self.lsf.submit(
             ResourceRequest::bigdata(nodes, user),
@@ -162,6 +176,9 @@ impl Stack {
                 result: None,
             },
         );
+        if self.tenants.enabled() {
+            self.tenants.on_submitted(user, self.now);
+        }
         Ok(id)
     }
 
@@ -181,6 +198,36 @@ impl Stack {
                 let _ = self.lsf.finish(d.job, self.now);
             } else {
                 let _ = self.lsf.fail(d.job, self.now);
+            }
+            if self.tenants.enabled() {
+                if let Some(user) = self.job_user(d.job).map(str::to_string) {
+                    let bytes = if ok { self.output_bytes(d.job) } else { 0 };
+                    self.tenants
+                        .on_terminal(&user, ok, d.nodes.len() as u32, bytes, self.now);
+                    // Stamp the tenant's queue accounting into the job's
+                    // counters, next to the engine's own — the per-job view
+                    // of the fair-share ledger.
+                    if ok {
+                        let snap = self.tenants.queue_of(&user).and_then(|q| {
+                            self.tenants
+                                .queue_snapshots()
+                                .into_iter()
+                                .find(|s| s.name == q)
+                        });
+                        if let Some(snap) = snap {
+                            if let Some(Ok(r)) =
+                                self.entries.get_mut(&d.job).and_then(|e| e.result.as_mut())
+                            {
+                                use crate::mapreduce::counters as mrc;
+                                r.counters.push((mrc::QUEUE_SHARE.to_string(), snap.share_pct));
+                                r.counters
+                                    .push((mrc::PREEMPTIONS.to_string(), snap.preemptions));
+                                r.counters
+                                    .push((mrc::QUEUE_WAIT_US.to_string(), snap.wait_us));
+                            }
+                        }
+                    }
+                }
             }
             finished.push(d.job);
         }
@@ -230,15 +277,46 @@ impl Stack {
         self.entries.get(&id).map(|e| e.payload.kind())
     }
 
+    /// Submitting user (= tenant name under tenancy) of a job.
+    pub fn job_user(&self, id: LsfJobId) -> Option<&str> {
+        self.entries.get(&id).map(|e| e.user.as_str())
+    }
+
+    /// The stack's logical clock (advances one `cycle_ms` per tick).
+    pub fn now(&self) -> Micros {
+        self.now
+    }
+
+    /// Bytes a finished job left under its output dir (0 when it produced
+    /// nothing) — the figure charged against the tenant's DFS quota.
+    pub fn output_bytes(&self, id: LsfJobId) -> u64 {
+        self.entries
+            .get(&id)
+            .and_then(|e| e.result.as_ref())
+            .and_then(|r| r.as_ref().ok())
+            .map(|r| crate::lustre::dir_bytes(&*self.dfs, &r.output_dir))
+            .unwrap_or(0)
+    }
+
     /// Any job not yet in a terminal state? The API pump keeps ticking
     /// while this holds and sleeps on its condvar otherwise.
     pub fn has_active_jobs(&self) -> bool {
         self.lsf.jobs().any(|j| !j.state.is_terminal())
     }
 
-    /// `bkill` passthrough.
+    /// `bkill` passthrough. A killed job releases its tenant's
+    /// running-app slot; a kill is not a failure, so the breaker's
+    /// consecutive-failure streak is not fed (in the synchronous stack
+    /// only pending jobs are ever observable here, so no containers are
+    /// held at this point).
     pub fn kill(&mut self, id: LsfJobId) -> Result<()> {
-        self.lsf.kill(id, self.now)
+        self.lsf.kill(id, self.now)?;
+        if self.tenants.enabled() {
+            if let Some(user) = self.job_user(id).map(str::to_string) {
+                self.tenants.on_terminal(&user, true, 0, 0, self.now);
+            }
+        }
+        Ok(())
     }
 
     /// Read a result file (API step 6: data access without SSH).

@@ -48,6 +48,14 @@ pub mod code {
     pub const DEPRECATED: &str = "deprecated";
     /// Server-side failure.
     pub const INTERNAL: &str = "internal";
+    /// Missing or unknown `X-HPCW-Key` while tenancy requires one.
+    pub const UNAUTHORIZED: &str = "unauthorized";
+    /// Submission rate limit (token bucket) or open circuit breaker;
+    /// retry after the `Retry-After` header's delay.
+    pub const RATE_LIMITED: &str = "rate_limited";
+    /// A per-tenant quota (running apps, containers, DFS bytes) is
+    /// exhausted; free resources before retrying.
+    pub const QUOTA_EXCEEDED: &str = "quota_exceeded";
 }
 
 // ---------------------------------------------------------------------------
@@ -81,6 +89,8 @@ impl ErrorDoc {
             code::TOO_LARGE => 413,
             code::DEPRECATED => 301,
             code::INTERNAL => 500,
+            code::UNAUTHORIZED => 401,
+            code::RATE_LIMITED | code::QUOTA_EXCEEDED => 429,
             _ => 400,
         }
     }
@@ -1285,6 +1295,117 @@ impl ClusterDoc {
 }
 
 // ---------------------------------------------------------------------------
+// Tenancy introspection
+// ---------------------------------------------------------------------------
+
+/// One tenant's identity + live accounting on `GET /v1/tenants`.
+///
+/// All counts are integers (shares as whole percent) so the canonical
+/// encoding is float-format-free and byte-identical across languages.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantDoc {
+    pub name: String,
+    /// Hierarchical fair-share queue the tenant's jobs dispatch from.
+    pub queue: String,
+    /// Apps submitted and not yet terminal.
+    pub running_apps: u64,
+    /// Containers (node leases) currently held.
+    pub containers: u64,
+    /// Cumulative DFS bytes written by completed jobs.
+    pub dfs_bytes: u64,
+    pub submitted: u64,
+    pub rate_limited: u64,
+    pub quota_rejected: u64,
+    pub breaker_rejected: u64,
+    /// Circuit-breaker state: `closed`, `open` or `half_open`.
+    pub breaker: String,
+}
+
+impl TenantDoc {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&*self.name)),
+            ("queue", Json::str(&*self.queue)),
+            ("running_apps", Json::num(self.running_apps as f64)),
+            ("containers", Json::num(self.containers as f64)),
+            ("dfs_bytes", Json::num(self.dfs_bytes as f64)),
+            ("submitted", Json::num(self.submitted as f64)),
+            ("rate_limited", Json::num(self.rate_limited as f64)),
+            ("quota_rejected", Json::num(self.quota_rejected as f64)),
+            ("breaker_rejected", Json::num(self.breaker_rejected as f64)),
+            ("breaker", Json::str(&*self.breaker)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TenantDoc> {
+        Ok(TenantDoc {
+            name: j.req_str("name")?.to_string(),
+            queue: j.req_str("queue")?.to_string(),
+            running_apps: j.req_u64("running_apps")?,
+            containers: j.req_u64("containers")?,
+            dfs_bytes: j.req_u64("dfs_bytes")?,
+            submitted: j.req_u64("submitted")?,
+            rate_limited: j.req_u64("rate_limited")?,
+            quota_rejected: j.req_u64("quota_rejected")?,
+            breaker_rejected: j.req_u64("breaker_rejected")?,
+            breaker: j.req_str("breaker")?.to_string(),
+        })
+    }
+}
+
+/// One fair-share queue's policy + live accounting on `GET /v1/queues`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueueDoc {
+    /// Dot-path under `root`, e.g. `root.research.alice`.
+    pub name: String,
+    pub weight: u64,
+    /// Min-guarantee floor, percent of total slots.
+    pub min_pct: u64,
+    /// Max-share cap, percent of total slots.
+    pub max_pct: u64,
+    /// Jobs currently running out of this queue.
+    pub running: u64,
+    /// Jobs served over the queue's lifetime (the deficit counter).
+    pub served: u64,
+    /// Observed share of total service, whole percent.
+    pub share_pct: u64,
+    /// Containers preempted from this queue's apps.
+    pub preemptions: u64,
+    /// Total microseconds this queue's jobs waited before dispatch.
+    pub wait_us: u64,
+}
+
+impl QueueDoc {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&*self.name)),
+            ("weight", Json::num(self.weight as f64)),
+            ("min_pct", Json::num(self.min_pct as f64)),
+            ("max_pct", Json::num(self.max_pct as f64)),
+            ("running", Json::num(self.running as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("share_pct", Json::num(self.share_pct as f64)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("wait_us", Json::num(self.wait_us as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<QueueDoc> {
+        Ok(QueueDoc {
+            name: j.req_str("name")?.to_string(),
+            weight: j.req_u64("weight")?,
+            min_pct: j.req_u64("min_pct")?,
+            max_pct: j.req_u64("max_pct")?,
+            running: j.req_u64("running")?,
+            served: j.req_u64("served")?,
+            share_pct: j.req_u64("share_pct")?,
+            preemptions: j.req_u64("preemptions")?,
+            wait_us: j.req_u64("wait_us")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Events
 // ---------------------------------------------------------------------------
 
@@ -1690,6 +1811,50 @@ mod tests {
         assert_eq!(ErrorDoc::new(code::NOT_READY, "x").http_status(), 409);
         assert_eq!(ErrorDoc::new(code::INTERNAL, "x").http_status(), 500);
         assert_eq!(ErrorDoc::new(code::DEPRECATED, "x").http_status(), 301);
+        assert_eq!(ErrorDoc::new(code::UNAUTHORIZED, "x").http_status(), 401);
+        assert_eq!(ErrorDoc::new(code::RATE_LIMITED, "x").http_status(), 429);
+        assert_eq!(ErrorDoc::new(code::QUOTA_EXCEEDED, "x").http_status(), 429);
+    }
+
+    #[test]
+    fn tenant_doc_round_trip() {
+        props(60, |g| {
+            let doc = TenantDoc {
+                name: g.ident(8),
+                queue: format!("root.{}", g.ident(6)),
+                running_apps: g.u64(0..1_000),
+                containers: g.u64(0..10_000),
+                dfs_bytes: g.u64(0..1 << 40),
+                submitted: g.u64(0..1_000_000),
+                rate_limited: g.u64(0..1_000),
+                quota_rejected: g.u64(0..1_000),
+                breaker_rejected: g.u64(0..1_000),
+                breaker: g.pick(&["closed", "open", "half_open"]).to_string(),
+            };
+            let back =
+                TenantDoc::from_json(&Json::parse(&doc.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(doc, back);
+        });
+    }
+
+    #[test]
+    fn queue_doc_round_trip() {
+        props(60, |g| {
+            let doc = QueueDoc {
+                name: format!("root.{}.{}", g.ident(5), g.ident(5)),
+                weight: g.u64(1..100),
+                min_pct: g.u64(0..50),
+                max_pct: g.u64(50..101),
+                running: g.u64(0..1_000),
+                served: g.u64(0..1_000_000),
+                share_pct: g.u64(0..101),
+                preemptions: g.u64(0..10_000),
+                wait_us: g.u64(0..1 << 40),
+            };
+            let back =
+                QueueDoc::from_json(&Json::parse(&doc.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(doc, back);
+        });
     }
 
     #[test]
@@ -1826,5 +1991,26 @@ mod tests {
         let err = vectors.get("error").unwrap();
         let typed = ErrorDoc::from_json(err.get("doc").unwrap()).unwrap();
         assert_eq!(typed.to_json().to_string(), err.get("canon").unwrap().as_str().unwrap());
+        let tenant = vectors.get("tenant").unwrap();
+        let typed = TenantDoc::from_json(tenant.get("doc").unwrap()).unwrap();
+        assert_eq!(
+            typed.to_json().to_string(),
+            tenant.get("canon").unwrap().as_str().unwrap()
+        );
+        let queue = vectors.get("queue").unwrap();
+        let typed = QueueDoc::from_json(queue.get("doc").unwrap()).unwrap();
+        assert_eq!(
+            typed.to_json().to_string(),
+            queue.get("canon").unwrap().as_str().unwrap()
+        );
+        let errs = vectors.get("admission_errors").unwrap().as_arr().unwrap();
+        assert!(errs.len() >= 2, "rate_limited + quota_exceeded vectors");
+        for case in errs {
+            let doc = case.get("doc").unwrap();
+            let canon = case.get("canon").unwrap().as_str().unwrap();
+            let typed = ErrorDoc::from_json(doc).unwrap();
+            assert_eq!(typed.to_json().to_string(), canon);
+            assert_eq!(typed.http_status(), 429);
+        }
     }
 }

@@ -41,14 +41,20 @@ pub fn run(argv: Vec<String>) -> i32 {
 }
 
 fn load_config(args: &Args) -> Result<StackConfig> {
-    match args.opt("config") {
-        Some(path) => StackConfig::from_file(std::path::Path::new(&path)),
-        None => Ok(if args.flag("tiny") {
-            StackConfig::tiny()
-        } else {
-            StackConfig::paper()
-        }),
-    }
+    let mut cfg = match args.opt("config") {
+        Some(path) => StackConfig::from_file(std::path::Path::new(&path))?,
+        None => {
+            if args.flag("tiny") {
+                StackConfig::tiny()
+            } else {
+                StackConfig::paper()
+            }
+        }
+    };
+    // Env wins over file for the multi-tenant front door (HPCW_TENANTS,
+    // HPCW_ANON_QUEUE, HPCW_SUBMIT_RATE, ... — see docs/TENANCY.md).
+    cfg.tenant.apply_env()?;
+    Ok(cfg)
 }
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
@@ -63,6 +69,8 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("jobs") => cmd_jobs(&args),
         Some("events") => cmd_events(&args),
+        Some("tenants") => cmd_tenants(&args),
+        Some("queues") => cmd_queues(&args),
         Some(other) => Err(Error::Api(format!("unknown subcommand '{other}'\n{USAGE}"))),
         None => {
             println!("{USAGE}");
@@ -71,7 +79,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: hpcw <figures|terasort|pig|hive|query|wrapper|serve|jobs|events> [options]
+const USAGE: &str = "usage: hpcw <figures|terasort|pig|hive|query|wrapper|serve|jobs|events|tenants|queues> [options]
   figures   [--reps N] [--jobs N]           regenerate paper figures (sim)
   terasort  --rows N [--nodes N] [--maps N] [--reduces N] [--kernel] [--tiny]
   pig       --file SCRIPT [--reduces N] [--tiny]
@@ -82,7 +90,10 @@ const USAGE: &str = "usage: hpcw <figures|terasort|pig|hive|query|wrapper|serve|
   wrapper   --nodes N                       one simulated create/teardown
   serve     [--config FILE] [--tiny]        start the v1 API server
   jobs      --addr HOST:PORT [--offset N] [--limit N]   list a server's jobs
-  events    --addr HOST:PORT [--since SEQ] [--wait-ms N] tail the event journal";
+  events    --addr HOST:PORT [--since SEQ] [--wait-ms N] tail the event journal
+  tenants   --addr HOST:PORT [--key KEY]   per-tenant quota/limiter/breaker state
+  queues    --addr HOST:PORT [--key KEY]   fair-share queue shares + wait times
+  (jobs/events/tenants/queues accept --key KEY to authenticate as a tenant)";
 
 fn cmd_figures(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
@@ -230,7 +241,10 @@ fn client_for(args: &Args) -> Result<ApiClient> {
     let addr = args
         .opt("addr")
         .ok_or_else(|| Error::Api("needs --addr HOST:PORT of a running `hpcw serve`".into()))?;
-    Ok(ApiClient::new(&addr))
+    Ok(match args.opt("key") {
+        Some(key) => ApiClient::with_key(&addr, &key),
+        None => ApiClient::new(&addr),
+    })
 }
 
 fn cmd_jobs(args: &Args) -> Result<()> {
@@ -261,6 +275,63 @@ fn cmd_events(args: &Args) -> Result<()> {
         }
     }
     println!("next cursor: {}", page.next);
+    Ok(())
+}
+
+fn cmd_tenants(args: &Args) -> Result<()> {
+    let client = client_for(args)?;
+    let tenants = client.tenants()?;
+    if tenants.is_empty() {
+        println!("tenancy disabled (no [tenants] keys configured)");
+        return Ok(());
+    }
+    println!(
+        "{:<12} {:<24} {:>4} {:>6} {:>10} {:>6} {:>5} {:>5} {:>5}  breaker",
+        "tenant", "queue", "apps", "ctrs", "dfs_bytes", "subm", "rate", "quota", "brk"
+    );
+    for t in &tenants {
+        println!(
+            "{:<12} {:<24} {:>4} {:>6} {:>10} {:>6} {:>5} {:>5} {:>5}  {}",
+            t.name,
+            t.queue,
+            t.running_apps,
+            t.containers,
+            t.dfs_bytes,
+            t.submitted,
+            t.rate_limited,
+            t.quota_rejected,
+            t.breaker_rejected,
+            t.breaker
+        );
+    }
+    Ok(())
+}
+
+fn cmd_queues(args: &Args) -> Result<()> {
+    let client = client_for(args)?;
+    let queues = client.queues()?;
+    if queues.is_empty() {
+        println!("tenancy disabled (no [tenants] keys configured)");
+        return Ok(());
+    }
+    println!(
+        "{:<24} {:>6} {:>7} {:>7} {:>7} {:>7} {:>9} {:>7} {:>12}",
+        "queue", "weight", "min%", "max%", "running", "served", "share%", "preempt", "wait_us"
+    );
+    for q in &queues {
+        println!(
+            "{:<24} {:>6} {:>7} {:>7} {:>7} {:>7} {:>9} {:>7} {:>12}",
+            q.name,
+            q.weight,
+            q.min_pct,
+            q.max_pct,
+            q.running,
+            q.served,
+            q.share_pct,
+            q.preemptions,
+            q.wait_us
+        );
+    }
     Ok(())
 }
 

@@ -10,6 +10,7 @@ pub mod cluster;
 pub mod elastic;
 pub mod lustre;
 pub mod sched;
+pub mod tenant;
 pub mod yarn;
 
 pub use calibration::CalibrationConfig;
@@ -17,6 +18,7 @@ pub use cluster::{CampusConfig, ClusterConfig, CpuGen};
 pub use elastic::ElasticConfig;
 pub use lustre::LustreConfig;
 pub use sched::{QueuePolicy, SchedulerConfig};
+pub use tenant::{TenantConfig, TenantSpec};
 pub use yarn::YarnConfig;
 
 use crate::codec::toml::TomlDoc;
@@ -34,6 +36,7 @@ pub struct StackConfig {
     pub scheduler: SchedulerConfig,
     pub calibration: CalibrationConfig,
     pub elastic: ElasticConfig,
+    pub tenant: TenantConfig,
 }
 
 impl StackConfig {
@@ -75,6 +78,7 @@ impl StackConfig {
         cfg.scheduler.apply(&doc)?;
         cfg.calibration.apply(&doc)?;
         cfg.elastic.apply(&doc)?;
+        cfg.tenant.apply(&doc)?;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -93,6 +97,7 @@ impl StackConfig {
         self.yarn.validate(&self.cluster)?;
         self.scheduler.validate()?;
         self.elastic.validate()?;
+        self.tenant.validate()?;
         Ok(())
     }
 }

@@ -1,0 +1,347 @@
+//! Multi-tenant front-door configuration: API keys, hierarchical queue
+//! placement, submission rate limits, per-tenant quotas, the circuit
+//! breaker around failing tenants and the bounded HTTP accept queue.
+//!
+//! The paper's deployment is a *shared* service — many end users drive
+//! dynamically-created clusters through the API layer — so the front door
+//! must arbitrate: who a caller is (`X-HPCW-Key`), which queue their jobs
+//! land in, and how much they may ask for. Tenancy is **off by default**
+//! (no keys configured ⇒ every caller is the anonymous tenant with no
+//! limits), so single-user embedding and the existing tests keep working;
+//! configuring at least one key arms the whole admission pipeline.
+//!
+//! Environment overrides (`HPCW_TENANTS`, `HPCW_ANON_QUEUE`,
+//! `HPCW_SUBMIT_RATE`, `HPCW_SUBMIT_BURST`, `HPCW_ACCEPT_QUEUE`,
+//! `HPCW_HTTP_WORKERS`, `HPCW_PREEMPTION`) exist so benches and CI can
+//! flip behaviour without a config file; see `docs/TENANCY.md`.
+
+use crate::codec::toml::TomlDoc;
+use crate::error::{Error, Result};
+
+/// One API key → tenant → hierarchical queue binding.
+///
+/// Wire format (env `HPCW_TENANTS` and TOML `tenants.keys`):
+/// `key:tenant:queue[:weight[:min_pct[:max_pct]]]`, comma-separated.
+/// Example: `k-alice:alice:root.research.alice:3:20:100`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// The shared secret presented in `X-HPCW-Key`.
+    pub key: String,
+    /// Tenant name (also the LSF user jobs are attributed to).
+    pub tenant: String,
+    /// Hierarchical fair-share queue, e.g. `root.research.alice`.
+    pub queue: String,
+    /// Fair-share weight of the tenant's queue (≥ 1).
+    pub weight: u32,
+    /// Minimum guaranteed share of the cluster, percent of total (floor).
+    pub min_pct: u32,
+    /// Maximum share cap, percent of total.
+    pub max_pct: u32,
+}
+
+impl TenantSpec {
+    /// Parse a comma-separated spec list; empty input is an empty list.
+    pub fn parse_list(text: &str) -> Result<Vec<TenantSpec>> {
+        let mut out = Vec::new();
+        for entry in text.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let parts: Vec<&str> = entry.split(':').collect();
+            if parts.len() < 3 || parts.len() > 6 {
+                return Err(Error::Config(format!(
+                    "tenant spec '{entry}' is not key:tenant:queue[:weight[:min_pct[:max_pct]]]"
+                )));
+            }
+            let num = |i: usize, default: u32, what: &str| -> Result<u32> {
+                match parts.get(i) {
+                    None => Ok(default),
+                    Some(s) => s.trim().parse::<u32>().map_err(|_| {
+                        Error::Config(format!("tenant spec '{entry}': bad {what} '{s}'"))
+                    }),
+                }
+            };
+            out.push(TenantSpec {
+                key: parts[0].trim().to_string(),
+                tenant: parts[1].trim().to_string(),
+                queue: parts[2].trim().to_string(),
+                weight: num(3, 1, "weight")?,
+                min_pct: num(4, 0, "min_pct")?,
+                max_pct: num(5, 100, "max_pct")?,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TenantConfig {
+    /// Configured API keys; empty ⇒ tenancy (and every limit) disabled.
+    pub keys: Vec<TenantSpec>,
+    /// Queue for unauthenticated callers once tenancy is enabled; the
+    /// empty string means *reject* them with 401 (`HPCW_ANON_QUEUE`).
+    pub anonymous_queue: String,
+    /// Token-bucket refill rate for job submissions, per second per
+    /// tenant (`HPCW_SUBMIT_RATE`).
+    pub submit_rate_per_s: f64,
+    /// Token-bucket capacity — the largest allowed submission burst
+    /// (`HPCW_SUBMIT_BURST`).
+    pub submit_burst: u32,
+    /// Per-tenant cap on concurrently running + pending apps (0 = none).
+    pub max_running_apps: u32,
+    /// Per-tenant cap on total containers granted across running apps
+    /// (0 = none).
+    pub max_containers: u32,
+    /// Per-tenant cap on cumulative DFS bytes written by completed jobs
+    /// (0 = none).
+    pub max_dfs_bytes: u64,
+    /// Consecutive job failures that trip a tenant's circuit breaker.
+    pub breaker_threshold: u32,
+    /// How long an open breaker rejects before probing, milliseconds.
+    pub breaker_open_ms: u64,
+    /// Submissions let through while half-open (probe budget).
+    pub breaker_probes: u32,
+    /// Bounded HTTP accept/work queue depth; connections beyond it are
+    /// shed with 429 before the request is parsed (`HPCW_ACCEPT_QUEUE`).
+    pub accept_queue: u32,
+    /// HTTP worker threads draining the accept queue (`HPCW_HTTP_WORKERS`).
+    pub http_workers: u32,
+    /// Allow the RM to preempt over-share apps' containers
+    /// (`HPCW_PREEMPTION`, `0`/`false` to disable).
+    pub preemption: bool,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        TenantConfig {
+            keys: Vec::new(),
+            anonymous_queue: "root.anonymous".into(),
+            submit_rate_per_s: 50.0,
+            submit_burst: 100,
+            max_running_apps: 0,
+            max_containers: 0,
+            max_dfs_bytes: 0,
+            breaker_threshold: 5,
+            breaker_open_ms: 10_000,
+            breaker_probes: 1,
+            accept_queue: 64,
+            http_workers: 8,
+            preemption: true,
+        }
+    }
+}
+
+impl TenantConfig {
+    /// Tenancy is armed once at least one API key is configured.
+    pub fn enabled(&self) -> bool {
+        !self.keys.is_empty()
+    }
+
+    /// Apply environment-variable overrides (the CI/bench knobs).
+    pub fn apply_env(&mut self) -> Result<()> {
+        fn env_u64(name: &str) -> Option<u64> {
+            std::env::var(name).ok().and_then(|v| v.parse().ok())
+        }
+        if let Ok(v) = std::env::var("HPCW_TENANTS") {
+            self.keys = TenantSpec::parse_list(&v)?;
+        }
+        if let Ok(v) = std::env::var("HPCW_ANON_QUEUE") {
+            self.anonymous_queue = v;
+        }
+        if let Some(v) = std::env::var("HPCW_SUBMIT_RATE")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+        {
+            self.submit_rate_per_s = v;
+        }
+        if let Some(v) = env_u64("HPCW_SUBMIT_BURST") {
+            self.submit_burst = v as u32;
+        }
+        if let Some(v) = env_u64("HPCW_ACCEPT_QUEUE") {
+            self.accept_queue = v as u32;
+        }
+        if let Some(v) = env_u64("HPCW_HTTP_WORKERS") {
+            self.http_workers = v as u32;
+        }
+        if let Ok(v) = std::env::var("HPCW_PREEMPTION") {
+            self.preemption = !matches!(v.as_str(), "0" | "false" | "off");
+        }
+        Ok(())
+    }
+
+    /// Apply TOML overrides under `[tenants]`.
+    pub fn apply(&mut self, doc: &TomlDoc) -> Result<()> {
+        if let Some(v) = doc.str("tenants.keys") {
+            self.keys = TenantSpec::parse_list(v)?;
+        }
+        if let Some(v) = doc.str("tenants.anonymous_queue") {
+            self.anonymous_queue = v.to_string();
+        }
+        if let Some(v) = doc.f64("tenants.submit_rate_per_s") {
+            self.submit_rate_per_s = v;
+        }
+        if let Some(v) = doc.u64("tenants.submit_burst") {
+            self.submit_burst = v as u32;
+        }
+        if let Some(v) = doc.u64("tenants.max_running_apps") {
+            self.max_running_apps = v as u32;
+        }
+        if let Some(v) = doc.u64("tenants.max_containers") {
+            self.max_containers = v as u32;
+        }
+        if let Some(v) = doc.u64("tenants.max_dfs_bytes") {
+            self.max_dfs_bytes = v;
+        }
+        if let Some(v) = doc.u64("tenants.breaker_threshold") {
+            self.breaker_threshold = v as u32;
+        }
+        if let Some(v) = doc.u64("tenants.breaker_open_ms") {
+            self.breaker_open_ms = v;
+        }
+        if let Some(v) = doc.u64("tenants.breaker_probes") {
+            self.breaker_probes = v as u32;
+        }
+        if let Some(v) = doc.u64("tenants.accept_queue") {
+            self.accept_queue = v as u32;
+        }
+        if let Some(v) = doc.u64("tenants.http_workers") {
+            self.http_workers = v as u32;
+        }
+        if let Some(v) = doc.bool("tenants.preemption") {
+            self.preemption = v;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let mut seen_keys = std::collections::BTreeSet::new();
+        let mut seen_tenants = std::collections::BTreeSet::new();
+        for spec in &self.keys {
+            if spec.key.is_empty() || spec.tenant.is_empty() {
+                return Err(Error::Config(
+                    "tenant spec needs a non-empty key and tenant name".into(),
+                ));
+            }
+            if !seen_keys.insert(spec.key.clone()) {
+                return Err(Error::Config(format!(
+                    "duplicate tenant API key '{}'",
+                    spec.key
+                )));
+            }
+            if !seen_tenants.insert(spec.tenant.clone()) {
+                return Err(Error::Config(format!(
+                    "duplicate tenant name '{}'",
+                    spec.tenant
+                )));
+            }
+            if spec.queue != "root" && !spec.queue.starts_with("root.") {
+                return Err(Error::Config(format!(
+                    "tenant '{}' queue '{}' must be under 'root'",
+                    spec.tenant, spec.queue
+                )));
+            }
+            if spec.weight == 0 {
+                return Err(Error::Config(format!(
+                    "tenant '{}' weight must be >= 1",
+                    spec.tenant
+                )));
+            }
+            if spec.min_pct > spec.max_pct || spec.max_pct > 100 {
+                return Err(Error::Config(format!(
+                    "tenant '{}' needs min_pct <= max_pct <= 100 (got {}..{})",
+                    spec.tenant, spec.min_pct, spec.max_pct
+                )));
+            }
+        }
+        if !self.anonymous_queue.is_empty()
+            && self.anonymous_queue != "root"
+            && !self.anonymous_queue.starts_with("root.")
+        {
+            return Err(Error::Config(format!(
+                "tenants.anonymous_queue '{}' must be under 'root' (or empty to reject)",
+                self.anonymous_queue
+            )));
+        }
+        if self.submit_rate_per_s <= 0.0 {
+            return Err(Error::Config("tenants.submit_rate_per_s must be > 0".into()));
+        }
+        if self.submit_burst == 0 {
+            return Err(Error::Config("tenants.submit_burst must be >= 1".into()));
+        }
+        if self.breaker_threshold == 0 {
+            return Err(Error::Config("tenants.breaker_threshold must be >= 1".into()));
+        }
+        if self.breaker_probes == 0 {
+            return Err(Error::Config("tenants.breaker_probes must be >= 1".into()));
+        }
+        if self.accept_queue == 0 {
+            return Err(Error::Config("tenants.accept_queue must be >= 1".into()));
+        }
+        if self.http_workers == 0 {
+            return Err(Error::Config("tenants.http_workers must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate_and_disable_tenancy() {
+        let cfg = TenantConfig::default();
+        cfg.validate().unwrap();
+        assert!(!cfg.enabled());
+    }
+
+    #[test]
+    fn spec_list_parses_with_optional_fields() {
+        let specs =
+            TenantSpec::parse_list("k-a:alice:root.research.alice:3:20:100, k-b:bob:root.eng.bob")
+                .unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].weight, 3);
+        assert_eq!(specs[0].min_pct, 20);
+        assert_eq!(specs[1].weight, 1);
+        assert_eq!(specs[1].max_pct, 100);
+        assert_eq!(specs[1].queue, "root.eng.bob");
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(TenantSpec::parse_list("just-a-key").is_err());
+        assert!(TenantSpec::parse_list("k:t:root.q:notanum").is_err());
+        let mut cfg = TenantConfig::default();
+        cfg.keys = TenantSpec::parse_list("k:t:elsewhere.q").unwrap();
+        assert!(cfg.validate().is_err(), "queue must live under root");
+        cfg.keys = TenantSpec::parse_list("k:t:root.q:1:90:10").unwrap();
+        assert!(cfg.validate().is_err(), "min above max");
+        cfg.keys = TenantSpec::parse_list("k:t:root.q,k:u:root.r").unwrap();
+        assert!(cfg.validate().is_err(), "duplicate key");
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let doc = TomlDoc::parse(
+            r#"
+[tenants]
+keys = "k-a:alice:root.research.alice:2"
+anonymous_queue = ""
+submit_burst = 5
+max_running_apps = 3
+breaker_open_ms = 500
+accept_queue = 16
+"#,
+        )
+        .unwrap();
+        let mut t = TenantConfig::default();
+        t.apply(&doc).unwrap();
+        assert!(t.enabled());
+        assert_eq!(t.keys[0].tenant, "alice");
+        assert_eq!(t.keys[0].weight, 2);
+        assert!(t.anonymous_queue.is_empty());
+        assert_eq!(t.submit_burst, 5);
+        assert_eq!(t.max_running_apps, 3);
+        assert_eq!(t.breaker_open_ms, 500);
+        assert_eq!(t.accept_queue, 16);
+        t.validate().unwrap();
+    }
+}

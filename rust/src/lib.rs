@@ -18,6 +18,7 @@ pub mod prelude;
 pub mod runtime;
 pub mod scheduler;
 pub mod simx;
+pub mod tenant;
 pub mod terasort;
 pub mod testkit;
 pub mod util;

@@ -76,6 +76,13 @@ pub const TIER_PROMOTIONS: &str = "TIER_PROMOTIONS";
 pub const SPILL_BYTES: &str = "SPILL_BYTES";
 /// File bytes persisted to the backing tier (write-behind + eviction).
 pub const WRITEBACK_BYTES: &str = "WRITEBACK_BYTES";
+/// Fair-share service share (percent) of the submitting tenant's queue at
+/// the moment the job completed (multi-tenant scheduling).
+pub const QUEUE_SHARE: &str = "QUEUE_SHARE";
+/// Containers preempted from the tenant's queue over its lifetime.
+pub const PREEMPTIONS: &str = "PREEMPTIONS";
+/// Cumulative dispatch wait (µs) charged to the tenant's queue.
+pub const QUEUE_WAIT_US: &str = "QUEUE_WAIT_US";
 
 impl Counters {
     pub fn new() -> Self {

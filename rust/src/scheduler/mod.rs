@@ -47,6 +47,10 @@ pub struct Lsf {
     pending: BTreeMap<String, Vec<LsfJobId>>,
     ids: Arc<IdGen>,
     metrics: Arc<Metrics>,
+    /// Multi-tenant fair-share arbiter; when armed it overrides the LSF
+    /// queue policy's candidate pick with hierarchical weighted fair
+    /// share across tenants (and is told about every dispatch).
+    tenants: Option<Arc<crate::tenant::TenantRegistry>>,
 }
 
 impl Lsf {
@@ -62,7 +66,14 @@ impl Lsf {
             pending,
             ids,
             metrics,
+            tenants: None,
         }
+    }
+
+    /// Arm multi-tenant fair-share arbitration (no-op registry when
+    /// tenancy is disabled — the LSF queue policy then stays in charge).
+    pub fn set_tenants(&mut self, registry: Arc<crate::tenant::TenantRegistry>) {
+        self.tenants = Some(registry);
     }
 
     /// `bsub`: validate and enqueue. Returns the job id.
@@ -117,18 +128,40 @@ impl Lsf {
                 if pend.is_empty() {
                     break;
                 }
-                // Policy picks the next candidate among this queue's pending.
-                let running_by_user = self.running_nodes_by_user();
-                let queue_used = self.nodes_used_by_queue(&q.name);
-                let Some(next_id) = pick_next(
-                    q,
-                    pend,
-                    &self.jobs,
-                    &running_by_user,
-                    queue_used,
-                    self.alloc.total_nodes(),
-                ) else {
-                    break; // queue at capacity
+                // Tenancy armed: hierarchical weighted fair share across
+                // tenants picks the candidate; otherwise the LSF queue
+                // policy does. A `None` from an *enabled* registry means
+                // every tenant queue is at its max-share cap.
+                let tenant_pick = match self.tenants.as_ref().filter(|r| r.enabled()) {
+                    Some(reg) => {
+                        let users: Vec<&str> =
+                            pend.iter().map(|id| self.jobs[id].req.user.as_str()).collect();
+                        match reg.pick_pending(&users, self.alloc.total_nodes() as u32) {
+                            Some(idx) => Some(pend[idx]),
+                            None => break, // all tenant queues capped
+                        }
+                    }
+                    None => None,
+                };
+                let next_id = match tenant_pick {
+                    Some(id) => id,
+                    None => {
+                        // Policy picks the next candidate among this
+                        // queue's pending.
+                        let running_by_user = self.running_nodes_by_user();
+                        let queue_used = self.nodes_used_by_queue(&q.name);
+                        match pick_next(
+                            q,
+                            pend,
+                            &self.jobs,
+                            &running_by_user,
+                            queue_used,
+                            self.alloc.total_nodes(),
+                        ) {
+                            Some(id) => id,
+                            None => break, // queue at capacity
+                        }
+                    }
                 };
                 let req = self.jobs[&next_id].req.clone();
                 match self.alloc.try_allocate(&req) {
@@ -185,6 +218,10 @@ impl Lsf {
         self.metrics.event(now, "lsf", &format!("dispatch job {id}"));
         let wait = now.saturating_sub(self.jobs[&id].submitted_at);
         self.metrics.observe("lsf.queue_wait_us", wait.0.max(1));
+        if let Some(reg) = self.tenants.as_ref().filter(|r| r.enabled()) {
+            let j = &self.jobs[&id];
+            reg.charge_dispatch(&j.req.user, j.nodes.len() as u32, wait.0, now);
+        }
     }
 
     /// Mark a running job finished (exit 0) and release its nodes.

@@ -1,0 +1,210 @@
+//! Admission control primitives: the per-tenant circuit breaker and the
+//! typed rejection taxonomy the front door maps onto wire error codes.
+//!
+//! The breaker wraps *submission*, not execution: a tenant whose jobs
+//! keep failing stops being admitted (open), is probed with a bounded
+//! number of trial submissions after a cool-down (half-open), and is
+//! restored on the first probe that succeeds (closed). Written from first
+//! principles — stdlib only, logical `Micros` time so tests and the
+//! simulated stack share one clock.
+
+use crate::util::time::Micros;
+
+/// Breaker states, in the classic closed → open → half-open cycle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Normal service; counts consecutive failures.
+    Closed { failures: u32 },
+    /// Rejecting everything until the cool-down deadline.
+    Open { until: Micros },
+    /// Letting a bounded number of probe submissions through.
+    HalfOpen { probes_left: u32 },
+}
+
+impl BreakerState {
+    /// Wire token for introspection docs (`closed`/`open`/`half_open`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerState::Closed { .. } => "closed",
+            BreakerState::Open { .. } => "open",
+            BreakerState::HalfOpen { .. } => "half_open",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CircuitBreaker {
+    state: BreakerState,
+    /// Consecutive failures that trip the breaker.
+    threshold: u32,
+    /// Cool-down before probing, as logical time.
+    open_for: Micros,
+    /// Probe budget granted on the open → half-open transition.
+    probes: u32,
+    /// Times the breaker tripped (for introspection docs).
+    pub trips: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: u32, open_ms: u64, probes: u32) -> Self {
+        CircuitBreaker {
+            state: BreakerState::Closed { failures: 0 },
+            threshold: threshold.max(1),
+            open_for: Micros::ms(open_ms),
+            probes: probes.max(1),
+            trips: 0,
+        }
+    }
+
+    pub fn state(&self) -> &BreakerState {
+        &self.state
+    }
+
+    /// May a submission proceed now? `Err(retry_after_ms)` while open.
+    /// An elapsed cool-down moves the breaker to half-open and admits the
+    /// caller as the first probe.
+    pub fn allow(&mut self, now: Micros) -> Result<(), u64> {
+        match self.state {
+            BreakerState::Closed { .. } => Ok(()),
+            BreakerState::Open { until } => {
+                if now.0 >= until.0 {
+                    // Cool-down over: this caller becomes the first probe.
+                    let left = self.probes.saturating_sub(1);
+                    self.state = BreakerState::HalfOpen { probes_left: left };
+                    Ok(())
+                } else {
+                    let wait_ms = (until.saturating_sub(now).0).div_ceil(1_000);
+                    Err(wait_ms.max(1))
+                }
+            }
+            BreakerState::HalfOpen { probes_left } => {
+                if probes_left > 0 {
+                    self.state = BreakerState::HalfOpen {
+                        probes_left: probes_left - 1,
+                    };
+                    Ok(())
+                } else {
+                    // Probes are out; wait for their verdicts.
+                    Err((self.open_for.0.div_ceil(1_000)).max(1))
+                }
+            }
+        }
+    }
+
+    /// Record a terminal job success for this tenant.
+    pub fn on_success(&mut self) {
+        self.state = BreakerState::Closed { failures: 0 };
+    }
+
+    /// Record a terminal job failure; may trip (or re-trip) the breaker.
+    pub fn on_failure(&mut self, now: Micros) {
+        match self.state {
+            BreakerState::Closed { failures } => {
+                let failures = failures + 1;
+                if failures >= self.threshold {
+                    self.trip(now);
+                } else {
+                    self.state = BreakerState::Closed { failures };
+                }
+            }
+            // A failed probe re-opens for a full cool-down.
+            BreakerState::HalfOpen { .. } => self.trip(now),
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    fn trip(&mut self, now: Micros) {
+        self.trips += 1;
+        self.state = BreakerState::Open {
+            until: Micros(now.0 + self.open_for.0),
+        };
+    }
+}
+
+/// Why the front door rejected a request. Each variant maps 1:1 onto a
+/// stable wire error code (see `api::wire::code`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// No/unknown API key while tenancy requires one → 401 `unauthorized`.
+    Unauthorized,
+    /// Token bucket empty → 429 `rate_limited` + `Retry-After`.
+    RateLimited { retry_after_ms: u64 },
+    /// A per-tenant cap is exhausted → 429 `quota_exceeded`.
+    QuotaExceeded { detail: String },
+    /// The tenant's circuit breaker is open → 429 `rate_limited` +
+    /// `Retry-After` (the breaker is a server-imposed rate of zero).
+    CircuitOpen { retry_after_ms: u64 },
+}
+
+impl AdmissionError {
+    /// The `Retry-After` value in seconds (rounded up), where meaningful.
+    pub fn retry_after_s(&self) -> Option<u64> {
+        match self {
+            AdmissionError::RateLimited { retry_after_ms }
+            | AdmissionError::CircuitOpen { retry_after_ms } => {
+                Some(retry_after_ms.div_ceil(1_000).max(1))
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breaker_trips_after_threshold_and_recovers_via_probe() {
+        let mut b = CircuitBreaker::new(3, 1_000, 1);
+        assert_eq!(b.state().name(), "closed");
+        b.on_failure(Micros::ZERO);
+        b.on_failure(Micros::ZERO);
+        assert!(b.allow(Micros::ZERO).is_ok(), "below threshold stays closed");
+        b.on_failure(Micros::ZERO);
+        assert_eq!(b.state().name(), "open");
+        assert_eq!(b.trips, 1);
+        let wait = b.allow(Micros::ms(10)).unwrap_err();
+        assert!(wait >= 1 && wait <= 1_000, "cool-down wait, got {wait}ms");
+        // After the cool-down the first caller is admitted as a probe...
+        assert!(b.allow(Micros::ms(1_000)).is_ok());
+        assert_eq!(b.state().name(), "half_open");
+        // ...further callers wait for the probe's verdict...
+        assert!(b.allow(Micros::ms(1_001)).is_err());
+        // ...and a probe success closes the breaker fully.
+        b.on_success();
+        assert_eq!(b.state().name(), "closed");
+        assert!(b.allow(Micros::ms(1_002)).is_ok());
+    }
+
+    #[test]
+    fn failed_probe_reopens_for_a_full_cooldown() {
+        let mut b = CircuitBreaker::new(1, 2_000, 1);
+        b.on_failure(Micros::ZERO);
+        assert!(b.allow(Micros::ms(2_000)).is_ok(), "probe admitted");
+        b.on_failure(Micros::ms(2_500));
+        assert_eq!(b.state().name(), "open");
+        assert_eq!(b.trips, 2);
+        assert!(b.allow(Micros::ms(4_000)).is_err(), "cool-down restarts");
+        assert!(b.allow(Micros::ms(4_500)).is_ok());
+    }
+
+    #[test]
+    fn success_resets_the_consecutive_failure_count() {
+        let mut b = CircuitBreaker::new(2, 1_000, 1);
+        b.on_failure(Micros::ZERO);
+        b.on_success();
+        b.on_failure(Micros::ZERO);
+        assert_eq!(b.state().name(), "closed", "streak broken by success");
+    }
+
+    #[test]
+    fn retry_after_rounds_up_to_seconds() {
+        let e = AdmissionError::RateLimited { retry_after_ms: 1 };
+        assert_eq!(e.retry_after_s(), Some(1));
+        let e = AdmissionError::CircuitOpen {
+            retry_after_ms: 1_500,
+        };
+        assert_eq!(e.retry_after_s(), Some(2));
+        assert_eq!(AdmissionError::Unauthorized.retry_after_s(), None);
+    }
+}

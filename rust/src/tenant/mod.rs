@@ -1,0 +1,488 @@
+//! Multi-tenant front door: identity, fair-share queues, quotas, rate
+//! limits and the per-tenant circuit breaker.
+//!
+//! The `TenantRegistry` is the subsystem's hub. The API server asks it
+//! *who* a caller is (`authenticate`, from the `X-HPCW-Key` header) and
+//! *whether* a submission may proceed (`admit_submit` — breaker, then
+//! token bucket, then quotas, in that order so the cheapest server-side
+//! verdict wins). The LSF dispatch loop asks it *which* pending job to
+//! serve next (`pick_pending`, hierarchical weighted fair share over the
+//! tenants' queues) and reports lifecycle events back (`charge_dispatch`,
+//! `on_terminal`) to drive the deficit counters, usage accounting and the
+//! breaker. With no API keys configured the registry is inert: every
+//! caller is the anonymous tenant and nothing is limited, preserving
+//! single-user behaviour byte for byte.
+
+pub mod admission;
+pub mod queue;
+pub mod quota;
+
+pub use admission::{AdmissionError, BreakerState, CircuitBreaker};
+pub use queue::{dominant_share_milli, FairShareTree, LeafQueue};
+pub use quota::{check_quota, QuotaBreach, TokenBucket, Usage};
+
+use crate::config::TenantConfig;
+use crate::metrics::Metrics;
+use crate::util::time::Micros;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Name of the tenant unauthenticated callers resolve to.
+pub const ANONYMOUS: &str = "anonymous";
+
+/// A resolved caller identity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tenant {
+    /// Tenant name; also the LSF user its jobs are attributed to.
+    pub name: String,
+    /// The hierarchical fair-share queue its jobs land in.
+    pub queue: String,
+}
+
+/// Per-tenant mutable state behind the registry lock.
+#[derive(Debug)]
+struct TenantState {
+    bucket: TokenBucket,
+    breaker: CircuitBreaker,
+    usage: Usage,
+    submitted: u64,
+    rate_limited: u64,
+    quota_rejected: u64,
+    breaker_rejected: u64,
+}
+
+/// Snapshot of one tenant for the `/v1/tenants` introspection doc.
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    pub name: String,
+    pub queue: String,
+    pub running_apps: u32,
+    pub containers: u32,
+    pub dfs_bytes: u64,
+    pub submitted: u64,
+    pub rate_limited: u64,
+    pub quota_rejected: u64,
+    pub breaker_rejected: u64,
+    pub breaker: &'static str,
+}
+
+/// Snapshot of one queue for the `/v1/queues` introspection doc.
+#[derive(Debug, Clone)]
+pub struct QueueSnapshot {
+    pub name: String,
+    pub weight: u32,
+    pub min_pct: u32,
+    pub max_pct: u32,
+    pub running: u32,
+    pub served: u64,
+    pub share_pct: u64,
+    pub preemptions: u64,
+    pub wait_us: u64,
+}
+
+/// The tenancy hub shared by the API server and the scheduler.
+#[derive(Debug)]
+pub struct TenantRegistry {
+    cfg: TenantConfig,
+    /// API key → identity (immutable after construction).
+    by_key: BTreeMap<String, Tenant>,
+    /// Tenant name → queue (includes the anonymous tenant).
+    queues: BTreeMap<String, String>,
+    state: Mutex<BTreeMap<String, TenantState>>,
+    tree: Mutex<FairShareTree>,
+    metrics: Arc<Metrics>,
+}
+
+impl TenantRegistry {
+    pub fn new(cfg: &TenantConfig, metrics: Arc<Metrics>) -> Self {
+        let mut by_key = BTreeMap::new();
+        let mut queues = BTreeMap::new();
+        let mut tree = FairShareTree::new();
+        for spec in &cfg.keys {
+            by_key.insert(
+                spec.key.clone(),
+                Tenant {
+                    name: spec.tenant.clone(),
+                    queue: spec.queue.clone(),
+                },
+            );
+            queues.insert(spec.tenant.clone(), spec.queue.clone());
+            tree.register(&spec.queue, spec.weight, spec.min_pct, spec.max_pct);
+        }
+        if !cfg.anonymous_queue.is_empty() {
+            queues.insert(ANONYMOUS.to_string(), cfg.anonymous_queue.clone());
+            tree.register(&cfg.anonymous_queue, 1, 0, 100);
+        }
+        TenantRegistry {
+            cfg: cfg.clone(),
+            by_key,
+            queues,
+            state: Mutex::new(BTreeMap::new()),
+            tree: Mutex::new(tree),
+            metrics,
+        }
+    }
+
+    /// Is the whole admission pipeline armed?
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    pub fn config(&self) -> &TenantConfig {
+        &self.cfg
+    }
+
+    /// Resolve an `X-HPCW-Key` header value to an identity.
+    ///
+    /// Tenancy disabled ⇒ everyone (keyed or not) is anonymous. Enabled ⇒
+    /// a known key maps to its tenant; an unknown key is always rejected;
+    /// a missing key falls back to the anonymous queue, or is rejected
+    /// when `anonymous_queue` is empty.
+    pub fn authenticate(&self, key: Option<&str>) -> Result<Tenant, AdmissionError> {
+        if !self.enabled() {
+            return Ok(Tenant {
+                name: ANONYMOUS.to_string(),
+                queue: self.cfg.anonymous_queue.clone(),
+            });
+        }
+        match key {
+            Some(k) => match self.by_key.get(k) {
+                Some(t) => Ok(t.clone()),
+                None => Err(AdmissionError::Unauthorized),
+            },
+            None if !self.cfg.anonymous_queue.is_empty() => Ok(Tenant {
+                name: ANONYMOUS.to_string(),
+                queue: self.cfg.anonymous_queue.clone(),
+            }),
+            None => Err(AdmissionError::Unauthorized),
+        }
+    }
+
+    /// The queue a tenant's jobs dispatch from (`None` for unknown users,
+    /// e.g. jobs submitted while tenancy was disabled).
+    pub fn queue_of(&self, tenant: &str) -> Option<String> {
+        self.queues.get(tenant).cloned()
+    }
+
+    fn state_of<'a>(
+        &self,
+        guard: &'a mut BTreeMap<String, TenantState>,
+        tenant: &str,
+        now: Micros,
+    ) -> &'a mut TenantState {
+        guard.entry(tenant.to_string()).or_insert_with(|| TenantState {
+            bucket: TokenBucket::new(self.cfg.submit_burst, self.cfg.submit_rate_per_s, now),
+            breaker: CircuitBreaker::new(
+                self.cfg.breaker_threshold,
+                self.cfg.breaker_open_ms,
+                self.cfg.breaker_probes,
+            ),
+            usage: Usage::default(),
+            submitted: 0,
+            rate_limited: 0,
+            quota_rejected: 0,
+            breaker_rejected: 0,
+        })
+    }
+
+    /// May `tenant` submit a job right now? Checks the circuit breaker,
+    /// the token bucket and the quotas, in that order. A rejection books
+    /// the matching counter; an admission books nothing — call
+    /// `on_submitted` once the submission actually succeeded.
+    pub fn admit_submit(&self, tenant: &str, now: Micros) -> Result<(), AdmissionError> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        let mut guard = self.state.lock().unwrap();
+        let st = self.state_of(&mut guard, tenant, now);
+        if let Err(retry_after_ms) = st.breaker.allow(now) {
+            st.breaker_rejected += 1;
+            self.metrics.inc("tenant.breaker_rejected", 1);
+            return Err(AdmissionError::CircuitOpen { retry_after_ms });
+        }
+        if let Err(retry_after_ms) = st.bucket.try_take(now) {
+            st.rate_limited += 1;
+            self.metrics.inc("tenant.rate_limited", 1);
+            return Err(AdmissionError::RateLimited { retry_after_ms });
+        }
+        if let Err(breach) = check_quota(&self.cfg, &st.usage) {
+            st.quota_rejected += 1;
+            self.metrics.inc("tenant.quota_exceeded", 1);
+            return Err(AdmissionError::QuotaExceeded {
+                detail: breach.describe(),
+            });
+        }
+        Ok(())
+    }
+
+    /// A submission by `tenant` was accepted by the stack.
+    pub fn on_submitted(&self, tenant: &str, now: Micros) {
+        let mut guard = self.state.lock().unwrap();
+        let st = self.state_of(&mut guard, tenant, now);
+        st.submitted += 1;
+        st.usage.running_apps += 1;
+        self.metrics.inc(&format!("tenant.submitted.{tenant}"), 1);
+    }
+
+    /// One of `tenant`'s jobs was dispatched onto `nodes` nodes after
+    /// waiting `wait_us` in the queue.
+    pub fn charge_dispatch(&self, tenant: &str, nodes: u32, wait_us: u64, now: Micros) {
+        if let Some(queue) = self.queue_of(tenant) {
+            let mut tree = self.tree.lock().unwrap();
+            tree.charge_start(&queue, wait_us);
+            self.metrics.inc(&format!("tenant.queue_share.{queue}"), 1);
+        }
+        let mut guard = self.state.lock().unwrap();
+        let st = self.state_of(&mut guard, tenant, now);
+        st.usage.containers += nodes;
+    }
+
+    /// One of `tenant`'s jobs reached a terminal state. `ok` feeds the
+    /// circuit breaker; `dfs_bytes` charges the write quota; `nodes`
+    /// releases the container share taken at dispatch (0 if the job never
+    /// dispatched).
+    pub fn on_terminal(&self, tenant: &str, ok: bool, nodes: u32, dfs_bytes: u64, now: Micros) {
+        if nodes > 0 {
+            if let Some(queue) = self.queue_of(tenant) {
+                self.tree.lock().unwrap().charge_finish(&queue);
+            }
+        }
+        let mut guard = self.state.lock().unwrap();
+        let st = self.state_of(&mut guard, tenant, now);
+        st.usage.running_apps = st.usage.running_apps.saturating_sub(1);
+        st.usage.containers = st.usage.containers.saturating_sub(nodes);
+        st.usage.dfs_bytes += dfs_bytes;
+        if ok {
+            st.breaker.on_success();
+        } else {
+            st.breaker.on_failure(now);
+            self.metrics.inc("tenant.job_failures", 1);
+        }
+    }
+
+    /// Fair-share arbitration for the dispatch loop: which of the pending
+    /// jobs' `users` should be served next? `None` when the registry has
+    /// no opinion (tenancy disabled, or every queue is at its cap —
+    /// callers fall back to their own policy / skip the cycle).
+    pub fn pick_pending(&self, users: &[&str], total_slots: u32) -> Option<usize> {
+        if !self.enabled() {
+            return None;
+        }
+        let queues: Vec<String> = users
+            .iter()
+            .map(|u| {
+                self.queue_of(u)
+                    .unwrap_or_else(|| format!("root.unmapped.{u}"))
+            })
+            .collect();
+        let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
+        self.tree.lock().unwrap().pick(&refs, total_slots)
+    }
+
+    /// A container belonging to `tenant` was preempted by the RM.
+    pub fn charge_preemption(&self, tenant: &str) {
+        if let Some(queue) = self.queue_of(tenant) {
+            self.tree.lock().unwrap().charge_preemption(&queue);
+            self.metrics.inc("tenant.preemptions", 1);
+        }
+    }
+
+    /// Snapshots of every known tenant (configured keys plus any tenant
+    /// that has submitted), sorted by name.
+    pub fn tenant_snapshots(&self) -> Vec<TenantSnapshot> {
+        let mut names: Vec<String> = self.queues.keys().cloned().collect();
+        let guard = self.state.lock().unwrap();
+        for name in guard.keys() {
+            if !names.contains(name) {
+                names.push(name.clone());
+            }
+        }
+        names.sort();
+        names
+            .into_iter()
+            .map(|name| {
+                let queue = self.queues.get(&name).cloned().unwrap_or_default();
+                match guard.get(&name) {
+                    Some(st) => TenantSnapshot {
+                        name: name.clone(),
+                        queue,
+                        running_apps: st.usage.running_apps,
+                        containers: st.usage.containers,
+                        dfs_bytes: st.usage.dfs_bytes,
+                        submitted: st.submitted,
+                        rate_limited: st.rate_limited,
+                        quota_rejected: st.quota_rejected,
+                        breaker_rejected: st.breaker_rejected,
+                        breaker: st.breaker.state().name(),
+                    },
+                    None => TenantSnapshot {
+                        name: name.clone(),
+                        queue,
+                        running_apps: 0,
+                        containers: 0,
+                        dfs_bytes: 0,
+                        submitted: 0,
+                        rate_limited: 0,
+                        quota_rejected: 0,
+                        breaker_rejected: 0,
+                        breaker: "closed",
+                    },
+                }
+            })
+            .collect()
+    }
+
+    /// Snapshots of every registered queue, sorted by path.
+    pub fn queue_snapshots(&self) -> Vec<QueueSnapshot> {
+        let tree = self.tree.lock().unwrap();
+        tree.leaves()
+            .map(|(path, q)| QueueSnapshot {
+                name: path.clone(),
+                weight: q.weight,
+                min_pct: q.min_pct,
+                max_pct: q.max_pct,
+                running: q.running,
+                served: q.served,
+                share_pct: tree.share_pct(path),
+                preemptions: q.preemptions,
+                wait_us: q.wait_us,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TenantSpec;
+
+    fn cfg_3() -> TenantConfig {
+        TenantConfig {
+            keys: TenantSpec::parse_list(
+                "k-a:alice:root.research.alice,k-b:bob:root.research.bob,k-c:carol:root.eng.carol",
+            )
+            .unwrap(),
+            submit_burst: 2,
+            submit_rate_per_s: 1.0,
+            max_running_apps: 3,
+            breaker_threshold: 2,
+            breaker_open_ms: 1_000,
+            ..Default::default()
+        }
+    }
+
+    fn registry(cfg: &TenantConfig) -> TenantRegistry {
+        TenantRegistry::new(cfg, Arc::new(Metrics::new()))
+    }
+
+    #[test]
+    fn disabled_registry_admits_everyone() {
+        let reg = registry(&TenantConfig::default());
+        assert!(!reg.enabled());
+        let t = reg.authenticate(Some("whatever")).unwrap();
+        assert_eq!(t.name, ANONYMOUS);
+        for _ in 0..1_000 {
+            reg.admit_submit(&t.name, Micros::ZERO).unwrap();
+        }
+        assert_eq!(reg.pick_pending(&["x", "y"], 0), None);
+    }
+
+    #[test]
+    fn keys_resolve_and_unknown_keys_rejected() {
+        let reg = registry(&cfg_3());
+        let t = reg.authenticate(Some("k-a")).unwrap();
+        assert_eq!(t.name, "alice");
+        assert_eq!(t.queue, "root.research.alice");
+        assert_eq!(
+            reg.authenticate(Some("nope")),
+            Err(AdmissionError::Unauthorized)
+        );
+        // No key falls back to the anonymous queue by default...
+        assert_eq!(reg.authenticate(None).unwrap().name, ANONYMOUS);
+        // ...and is rejected once the anonymous queue is disabled.
+        let mut cfg = cfg_3();
+        cfg.anonymous_queue = String::new();
+        let strict = registry(&cfg);
+        assert_eq!(strict.authenticate(None), Err(AdmissionError::Unauthorized));
+    }
+
+    #[test]
+    fn rate_limit_then_quota_then_breaker() {
+        let reg = registry(&cfg_3());
+        let now = Micros::ZERO;
+        // Burst of 2 admitted, third rate-limited with a retry hint.
+        reg.admit_submit("alice", now).unwrap();
+        reg.on_submitted("alice", now);
+        reg.admit_submit("alice", now).unwrap();
+        reg.on_submitted("alice", now);
+        match reg.admit_submit("alice", now) {
+            Err(AdmissionError::RateLimited { retry_after_ms }) => assert!(retry_after_ms >= 1),
+            other => panic!("expected rate limit, got {other:?}"),
+        }
+        // A second later the bucket refilled but the app quota (3) trips
+        // after one more running app.
+        let later = Micros::ms(1_000);
+        reg.admit_submit("alice", later).unwrap();
+        reg.on_submitted("alice", later);
+        let much_later = Micros::ms(2_000);
+        match reg.admit_submit("alice", much_later) {
+            Err(AdmissionError::QuotaExceeded { detail }) => {
+                assert!(detail.contains("running-app"), "{detail}")
+            }
+            other => panic!("expected quota breach, got {other:?}"),
+        }
+        // Finishing jobs releases quota; two failures trip the breaker.
+        reg.on_terminal("alice", false, 4, 0, much_later);
+        reg.on_terminal("alice", false, 4, 0, much_later);
+        match reg.admit_submit("alice", much_later) {
+            Err(AdmissionError::CircuitOpen { retry_after_ms }) => {
+                assert!(retry_after_ms >= 1)
+            }
+            other => panic!("expected open breaker, got {other:?}"),
+        }
+        // Cool-down over: probe admitted, success closes the breaker.
+        let after = Micros::ms(3_500);
+        reg.admit_submit("alice", after).unwrap();
+        reg.on_submitted("alice", after);
+        reg.on_terminal("alice", true, 4, 123, after);
+        reg.admit_submit("alice", Micros::ms(5_000)).unwrap();
+        let snap = reg
+            .tenant_snapshots()
+            .into_iter()
+            .find(|s| s.name == "alice")
+            .unwrap();
+        assert_eq!(snap.breaker, "closed");
+        assert_eq!(snap.dfs_bytes, 123);
+        assert!(snap.rate_limited >= 1);
+        assert!(snap.quota_rejected >= 1);
+        assert!(snap.breaker_rejected >= 1);
+    }
+
+    #[test]
+    fn pick_pending_interleaves_tenants() {
+        let reg = registry(&cfg_3());
+        // A greedy backlog of alice jobs with one bob job queued behind:
+        // bob must be served before alice's backlog drains.
+        let users = ["alice", "alice", "alice", "bob"];
+        let first = reg.pick_pending(&users, 0).unwrap();
+        reg.charge_dispatch(users[first], 1, 0, Micros::ZERO);
+        let second = reg.pick_pending(&users, 0).unwrap();
+        assert_ne!(users[first], users[second], "service must interleave");
+    }
+
+    #[test]
+    fn snapshots_cover_queues_and_share() {
+        let reg = registry(&cfg_3());
+        reg.charge_dispatch("alice", 2, 42, Micros::ZERO);
+        let queues = reg.queue_snapshots();
+        assert_eq!(queues.len(), 4, "3 tenant queues + anonymous");
+        let alice = queues
+            .iter()
+            .find(|q| q.name == "root.research.alice")
+            .unwrap();
+        assert_eq!(alice.running, 1);
+        assert_eq!(alice.served, 1);
+        assert_eq!(alice.wait_us, 42);
+        assert_eq!(alice.share_pct, 100);
+    }
+}

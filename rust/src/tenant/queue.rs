@@ -1,0 +1,384 @@
+//! Hierarchical weighted fair-share queues.
+//!
+//! Queues are dot-paths under `root` (e.g. `root.research.alice`). Each
+//! *leaf* queue carries a weight, a min-guarantee floor and a max cap
+//! (percent of total slots); interior nodes aggregate their children, so
+//! fairness is resolved **top-down**: `root.research` vs `root.eng` is
+//! arbitrated on the subtrees' aggregate weighted service before sibling
+//! leaves inside a subtree are compared. The service measure is a
+//! deficit counter (jobs served so far ÷ weight), the textbook weighted
+//! fair queueing shape for a dispatch loop that serves one job at a time.
+
+use std::collections::BTreeMap;
+
+/// One leaf queue's static policy + live accounting.
+#[derive(Debug, Clone)]
+pub struct LeafQueue {
+    /// Fair-share weight (≥ 1) relative to sibling subtrees.
+    pub weight: u32,
+    /// Minimum guaranteed share, percent of total slots (floor).
+    pub min_pct: u32,
+    /// Maximum share cap, percent of total slots.
+    pub max_pct: u32,
+    /// Jobs currently running out of this queue.
+    pub running: u32,
+    /// Jobs served over the queue's lifetime (the deficit counter).
+    pub served: u64,
+    /// Containers preempted from this queue's apps.
+    pub preemptions: u64,
+    /// Total microseconds jobs of this queue waited before dispatch.
+    pub wait_us: u64,
+}
+
+impl LeafQueue {
+    fn new(weight: u32, min_pct: u32, max_pct: u32) -> Self {
+        LeafQueue {
+            weight: weight.max(1),
+            min_pct,
+            max_pct: max_pct.min(100).max(1),
+            running: 0,
+            served: 0,
+            preemptions: 0,
+            wait_us: 0,
+        }
+    }
+}
+
+/// The fair-share tree over all registered leaf queues.
+#[derive(Debug, Clone, Default)]
+pub struct FairShareTree {
+    leaves: BTreeMap<String, LeafQueue>,
+}
+
+impl FairShareTree {
+    pub fn new() -> Self {
+        FairShareTree::default()
+    }
+
+    /// Register (or re-register) a leaf queue.
+    pub fn register(&mut self, path: &str, weight: u32, min_pct: u32, max_pct: u32) {
+        self.leaves
+            .insert(path.to_string(), LeafQueue::new(weight, min_pct, max_pct));
+    }
+
+    pub fn get(&self, path: &str) -> Option<&LeafQueue> {
+        self.leaves.get(path)
+    }
+
+    pub fn leaves(&self) -> impl Iterator<Item = (&String, &LeafQueue)> {
+        self.leaves.iter()
+    }
+
+    fn leaf_mut(&mut self, path: &str) -> &mut LeafQueue {
+        // Unregistered queues materialize with neutral policy so a
+        // mis-routed job is accounted rather than lost.
+        self.leaves
+            .entry(path.to_string())
+            .or_insert_with(|| LeafQueue::new(1, 0, 100))
+    }
+
+    /// A job from `path` was dispatched after waiting `wait_us`.
+    pub fn charge_start(&mut self, path: &str, wait_us: u64) {
+        let q = self.leaf_mut(path);
+        q.running += 1;
+        q.served += 1;
+        q.wait_us += wait_us;
+    }
+
+    /// A job from `path` reached a terminal state.
+    pub fn charge_finish(&mut self, path: &str) {
+        let q = self.leaf_mut(path);
+        q.running = q.running.saturating_sub(1);
+    }
+
+    /// A container belonging to `path` was preempted.
+    pub fn charge_preemption(&mut self, path: &str) {
+        self.leaf_mut(path).preemptions += 1;
+    }
+
+    /// Aggregate (weight, served, running) over every leaf under `prefix`
+    /// (`prefix` itself counts if it is a leaf).
+    fn subtree(&self, prefix: &str) -> (u64, u64, u64) {
+        let mut acc = (0u64, 0u64, 0u64);
+        for (path, q) in &self.leaves {
+            if path == prefix || path.starts_with(prefix) && path[prefix.len()..].starts_with('.') {
+                acc.0 += u64::from(q.weight);
+                acc.1 += q.served;
+                acc.2 += u64::from(q.running);
+            }
+        }
+        acc
+    }
+
+    /// Is `path` at/over its max-share cap, given `total_slots` schedulable
+    /// slots? (One more running job would exceed `max_pct`.) A cap of 100
+    /// or an unknown total never blocks.
+    pub fn at_cap(&self, path: &str, total_slots: u32) -> bool {
+        match self.leaves.get(path) {
+            Some(q) if q.max_pct < 100 && total_slots > 0 => {
+                u64::from(q.running + 1) * 100 > u64::from(q.max_pct) * u64::from(total_slots)
+            }
+            _ => false,
+        }
+    }
+
+    /// Is `path` below its min-guarantee floor?
+    pub fn below_floor(&self, path: &str, total_slots: u32) -> bool {
+        match self.leaves.get(path) {
+            Some(q) if q.min_pct > 0 && total_slots > 0 => {
+                u64::from(q.running) * 100 < u64::from(q.min_pct) * u64::from(total_slots)
+            }
+            _ => false,
+        }
+    }
+
+    /// Pick which of `candidates` (leaf-queue paths, possibly repeated) to
+    /// serve next. Returns an index into `candidates`, or `None` if every
+    /// candidate is at its max cap. Order of precedence:
+    /// 1. drop candidates at their max cap;
+    /// 2. if any candidate is below its min floor, only those compete;
+    /// 3. hierarchical weighted deficit: resolve the dot-path top-down,
+    ///    each level choosing the sibling subtree with the smallest
+    ///    aggregate `served / weight` (ties to the lexicographically
+    ///    first path, then the earliest candidate — deterministic).
+    pub fn pick(&self, candidates: &[&str], total_slots: u32) -> Option<usize> {
+        let open: Vec<usize> = (0..candidates.len())
+            .filter(|&i| !self.at_cap(candidates[i], total_slots))
+            .collect();
+        if open.is_empty() {
+            return None;
+        }
+        let starved: Vec<usize> = open
+            .iter()
+            .copied()
+            .filter(|&i| self.below_floor(candidates[i], total_slots))
+            .collect();
+        let pool = if starved.is_empty() { open } else { starved };
+        Some(self.pick_hierarchical(candidates, pool))
+    }
+
+    fn pick_hierarchical(&self, candidates: &[&str], mut pool: Vec<usize>) -> usize {
+        let mut depth = 1; // segment count of the prefix under comparison
+        loop {
+            if pool.len() == 1 {
+                return pool[0];
+            }
+            // Group the pool by path prefix of `depth` segments.
+            let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+            for &i in &pool {
+                groups
+                    .entry(prefix_of(candidates[i], depth))
+                    .or_default()
+                    .push(i);
+            }
+            if groups.len() == 1 {
+                // All share this prefix: exhausted paths end the descent.
+                let only = groups.into_values().next().unwrap();
+                let deepest = only
+                    .iter()
+                    .all(|&i| segment_count(candidates[i]) <= depth);
+                if deepest {
+                    return only[0];
+                }
+                pool = only;
+                depth += 1;
+                continue;
+            }
+            // Pick the subtree with the smallest weighted service.
+            let best = groups
+                .iter()
+                .min_by(|(pa, ia), (pb, ib)| {
+                    let (wa, sa, _) = self.subtree_or_leaf(pa, candidates[ia[0]]);
+                    let (wb, sb, _) = self.subtree_or_leaf(pb, candidates[ib[0]]);
+                    // served_a/weight_a < served_b/weight_b without floats:
+                    // cross-multiply (all values well inside u64×100 range).
+                    (sa as u128 * wb as u128)
+                        .cmp(&(sb as u128 * wa as u128))
+                        .then(pa.cmp(pb))
+                })
+                .map(|(_, is)| is.clone())
+                .unwrap();
+            pool = best;
+            depth += 1;
+        }
+    }
+
+    /// Subtree aggregate for `prefix`; if nothing is registered under it
+    /// (a candidate naming an unregistered queue), fall back to neutral
+    /// weight 1 so the comparison still works.
+    fn subtree_or_leaf(&self, prefix: &str, _leaf: &str) -> (u64, u64, u64) {
+        let agg = self.subtree(prefix);
+        if agg.0 == 0 {
+            (1, 0, 0)
+        } else {
+            agg
+        }
+    }
+
+    /// Observed share of total service per leaf, in percent (for docs).
+    pub fn share_pct(&self, path: &str) -> u64 {
+        let total: u64 = self.leaves.values().map(|q| q.served).sum();
+        match (self.leaves.get(path), total) {
+            (Some(q), t) if t > 0 => q.served * 100 / t,
+            _ => 0,
+        }
+    }
+}
+
+fn segment_count(path: &str) -> usize {
+    path.split('.').count()
+}
+
+fn prefix_of(path: &str, segments: usize) -> String {
+    path.split('.')
+        .take(segments)
+        .collect::<Vec<_>>()
+        .join(".")
+}
+
+/// DRF helper: the dominant share of an app holding `(vcores, mem_mb)` out
+/// of cluster totals, scaled ×1000 for integer comparison. Lower = more
+/// entitled to the next container.
+pub fn dominant_share_milli(
+    used_vcores: u64,
+    used_mem_mb: u64,
+    total_vcores: u64,
+    total_mem_mb: u64,
+) -> u64 {
+    let cpu = if total_vcores > 0 {
+        used_vcores * 1_000 / total_vcores
+    } else {
+        0
+    };
+    let mem = if total_mem_mb > 0 {
+        used_mem_mb * 1_000 / total_mem_mb
+    } else {
+        0
+    };
+    cpu.max(mem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree_3() -> FairShareTree {
+        let mut t = FairShareTree::new();
+        t.register("root.research.alice", 1, 0, 100);
+        t.register("root.research.bob", 1, 0, 100);
+        t.register("root.eng.carol", 2, 0, 100);
+        t
+    }
+
+    #[test]
+    fn equal_weights_round_robin() {
+        let mut t = FairShareTree::new();
+        t.register("root.a", 1, 0, 100);
+        t.register("root.b", 1, 0, 100);
+        let cands = ["root.a", "root.b", "root.a", "root.a"];
+        let mut serves = Vec::new();
+        for _ in 0..4 {
+            let i = t.pick(&cands, 0).unwrap();
+            serves.push(cands[i]);
+            t.charge_start(cands[i], 0);
+            t.charge_finish(cands[i]);
+        }
+        // a and b alternate; a backlog of `a` candidates cannot starve b.
+        assert_eq!(serves.iter().filter(|s| **s == "root.b").count(), 2);
+    }
+
+    #[test]
+    fn weights_skew_service_proportionally() {
+        let mut t = FairShareTree::new();
+        t.register("root.heavy", 3, 0, 100);
+        t.register("root.light", 1, 0, 100);
+        let cands = ["root.heavy", "root.light"];
+        let mut heavy = 0;
+        for _ in 0..40 {
+            let i = t.pick(&cands, 0).unwrap();
+            if cands[i] == "root.heavy" {
+                heavy += 1;
+            }
+            t.charge_start(cands[i], 0);
+            t.charge_finish(cands[i]);
+        }
+        assert_eq!(heavy, 30, "3:1 weights ⇒ 30 of 40 serves");
+    }
+
+    #[test]
+    fn hierarchy_arbitrates_subtrees_before_leaves() {
+        let mut t = tree_3();
+        // research has two leaves (aggregate weight 2), eng has one
+        // (weight 2): the subtrees split service evenly, and inside
+        // research alice/bob alternate.
+        let cands = ["root.research.alice", "root.research.bob", "root.eng.carol"];
+        let mut counts = BTreeMap::new();
+        for _ in 0..40 {
+            let i = t.pick(&cands, 0).unwrap();
+            *counts.entry(cands[i]).or_insert(0u32) += 1;
+            t.charge_start(cands[i], 0);
+            t.charge_finish(cands[i]);
+        }
+        assert_eq!(counts["root.eng.carol"], 20, "eng subtree gets half");
+        assert_eq!(counts["root.research.alice"], 10);
+        assert_eq!(counts["root.research.bob"], 10);
+    }
+
+    #[test]
+    fn max_cap_blocks_and_floor_prioritizes() {
+        let mut t = FairShareTree::new();
+        t.register("root.capped", 10, 0, 25); // ≤ 1 of 4 slots
+        t.register("root.floored", 1, 50, 100); // ≥ 2 of 4 slots
+        // capped already runs one of four slots: a second would exceed 25%.
+        t.charge_start("root.capped", 0);
+        assert!(t.at_cap("root.capped", 4));
+        let cands = ["root.capped", "root.floored"];
+        let i = t.pick(&cands, 4).unwrap();
+        assert_eq!(cands[i], "root.floored");
+        // floored below its 50% floor wins even against a lower deficit.
+        t.charge_finish("root.capped");
+        for _ in 0..5 {
+            t.charge_start("root.capped", 0);
+            t.charge_finish("root.capped");
+        }
+        assert!(t.below_floor("root.floored", 4));
+        let i = t.pick(&cands, 4).unwrap();
+        assert_eq!(cands[i], "root.floored");
+        // All candidates capped ⇒ nothing schedulable.
+        let only_capped = ["root.capped"];
+        t.charge_start("root.capped", 0);
+        assert_eq!(t.pick(&only_capped, 4), None);
+    }
+
+    #[test]
+    fn unregistered_queue_materializes_neutral() {
+        let mut t = FairShareTree::new();
+        t.charge_start("root.stray", 7);
+        assert_eq!(t.get("root.stray").unwrap().running, 1);
+        assert_eq!(t.get("root.stray").unwrap().wait_us, 7);
+        let cands = ["root.stray"];
+        assert_eq!(t.pick(&cands, 0), Some(0));
+    }
+
+    #[test]
+    fn share_pct_reflects_service() {
+        let mut t = tree_3();
+        for _ in 0..3 {
+            t.charge_start("root.eng.carol", 0);
+            t.charge_finish("root.eng.carol");
+        }
+        t.charge_start("root.research.alice", 0);
+        t.charge_finish("root.research.alice");
+        assert_eq!(t.share_pct("root.eng.carol"), 75);
+        assert_eq!(t.share_pct("root.research.alice"), 25);
+        assert_eq!(t.share_pct("root.research.bob"), 0);
+    }
+
+    #[test]
+    fn dominant_share_takes_the_larger_axis() {
+        assert_eq!(dominant_share_milli(1, 512, 10, 10_240), 100);
+        assert_eq!(dominant_share_milli(1, 5_120, 10, 10_240), 500);
+        assert_eq!(dominant_share_milli(0, 0, 10, 10_240), 0);
+        assert_eq!(dominant_share_milli(5, 0, 0, 0), 0, "empty cluster");
+    }
+}

@@ -1,0 +1,173 @@
+//! Token-bucket rate limiting and per-tenant resource quotas.
+//!
+//! Both are enforced at submit time (the front door), so a tenant that
+//! exceeds its allowance gets a typed, retryable rejection *before* any
+//! cluster resources are spent on its job.
+
+use crate::config::TenantConfig;
+use crate::util::time::Micros;
+
+/// Classic token bucket over logical time: `capacity` tokens, refilled at
+/// `rate_per_s`. `try_take` either spends one token or reports how long
+/// (in milliseconds, rounded up) until one is available — the value the
+/// HTTP layer surfaces as `Retry-After`.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    capacity: f64,
+    rate_per_s: f64,
+    tokens: f64,
+    last: Micros,
+}
+
+impl TokenBucket {
+    pub fn new(capacity: u32, rate_per_s: f64, now: Micros) -> Self {
+        let capacity = f64::from(capacity.max(1));
+        TokenBucket {
+            capacity,
+            rate_per_s: rate_per_s.max(1e-9),
+            tokens: capacity,
+            last: now,
+        }
+    }
+
+    fn refill(&mut self, now: Micros) {
+        let elapsed = now.saturating_sub(self.last).as_secs_f64();
+        self.tokens = (self.tokens + elapsed * self.rate_per_s).min(self.capacity);
+        self.last = self.last.max(now);
+    }
+
+    /// Spend one token, or return the retry delay in whole milliseconds.
+    pub fn try_take(&mut self, now: Micros) -> Result<(), u64> {
+        self.refill(now);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            return Ok(());
+        }
+        let deficit = 1.0 - self.tokens;
+        let wait_ms = (deficit / self.rate_per_s * 1_000.0).ceil() as u64;
+        Err(wait_ms.max(1))
+    }
+
+    /// Tokens currently available (for introspection docs).
+    pub fn available(&mut self, now: Micros) -> u64 {
+        self.refill(now);
+        self.tokens as u64
+    }
+}
+
+/// Live resource usage of one tenant, charged/credited by the stack as
+/// jobs start, finish and write output.
+#[derive(Debug, Clone, Default)]
+pub struct Usage {
+    /// Apps submitted and not yet terminal.
+    pub running_apps: u32,
+    /// Containers currently granted across the tenant's running apps.
+    pub containers: u32,
+    /// Cumulative DFS bytes written by the tenant's completed jobs.
+    pub dfs_bytes: u64,
+}
+
+/// Which cap a submission tripped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QuotaBreach {
+    RunningApps { used: u32, cap: u32 },
+    Containers { used: u32, cap: u32 },
+    DfsBytes { used: u64, cap: u64 },
+}
+
+impl QuotaBreach {
+    pub fn describe(&self) -> String {
+        match self {
+            QuotaBreach::RunningApps { used, cap } => {
+                format!("running-app quota exceeded ({used} of {cap} in use)")
+            }
+            QuotaBreach::Containers { used, cap } => {
+                format!("container quota exceeded ({used} of {cap} in use)")
+            }
+            QuotaBreach::DfsBytes { used, cap } => {
+                format!("DFS write quota exceeded ({used} of {cap} bytes written)")
+            }
+        }
+    }
+}
+
+/// Check `usage` against the configured caps (0 = uncapped).
+pub fn check_quota(cfg: &TenantConfig, usage: &Usage) -> Result<(), QuotaBreach> {
+    if cfg.max_running_apps > 0 && usage.running_apps >= cfg.max_running_apps {
+        return Err(QuotaBreach::RunningApps {
+            used: usage.running_apps,
+            cap: cfg.max_running_apps,
+        });
+    }
+    if cfg.max_containers > 0 && usage.containers >= cfg.max_containers {
+        return Err(QuotaBreach::Containers {
+            used: usage.containers,
+            cap: cfg.max_containers,
+        });
+    }
+    if cfg.max_dfs_bytes > 0 && usage.dfs_bytes >= cfg.max_dfs_bytes {
+        return Err(QuotaBreach::DfsBytes {
+            used: usage.dfs_bytes,
+            cap: cfg.max_dfs_bytes,
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_spends_then_blocks_then_refills() {
+        let mut b = TokenBucket::new(2, 1.0, Micros::ZERO);
+        assert!(b.try_take(Micros::ZERO).is_ok());
+        assert!(b.try_take(Micros::ZERO).is_ok());
+        let wait = b.try_take(Micros::ZERO).unwrap_err();
+        assert!(wait >= 1 && wait <= 1_000, "full-token wait, got {wait}ms");
+        // One second later a token has refilled.
+        assert!(b.try_take(Micros::ms(1_000)).is_ok());
+        assert!(b.try_take(Micros::ms(1_000)).is_err());
+    }
+
+    #[test]
+    fn bucket_never_exceeds_capacity() {
+        let mut b = TokenBucket::new(3, 100.0, Micros::ZERO);
+        // A long idle period must not bank more than `capacity` tokens.
+        assert_eq!(b.available(Micros::ms(60_000)), 3);
+        for _ in 0..3 {
+            assert!(b.try_take(Micros::ms(60_000)).is_ok());
+        }
+        assert!(b.try_take(Micros::ms(60_000)).is_err());
+    }
+
+    #[test]
+    fn bucket_ignores_time_going_backwards() {
+        let mut b = TokenBucket::new(1, 1.0, Micros::ms(5_000));
+        assert!(b.try_take(Micros::ms(5_000)).is_ok());
+        // An earlier timestamp must not mint tokens or move `last` back.
+        assert!(b.try_take(Micros::ZERO).is_err());
+        assert!(b.try_take(Micros::ms(6_100)).is_ok());
+    }
+
+    #[test]
+    fn quota_caps_enforced_and_zero_means_uncapped() {
+        let mut cfg = TenantConfig::default();
+        let usage = Usage {
+            running_apps: 1_000,
+            containers: 1_000,
+            dfs_bytes: u64::MAX,
+        };
+        check_quota(&cfg, &usage).unwrap();
+        cfg.max_running_apps = 2;
+        let err = check_quota(&cfg, &usage).unwrap_err();
+        assert!(matches!(err, QuotaBreach::RunningApps { cap: 2, .. }));
+        assert!(err.describe().contains("running-app quota"));
+        cfg.max_running_apps = 0;
+        cfg.max_dfs_bytes = 1;
+        assert!(matches!(
+            check_quota(&cfg, &usage),
+            Err(QuotaBreach::DfsBytes { .. })
+        ));
+    }
+}

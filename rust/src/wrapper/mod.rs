@@ -80,6 +80,13 @@ impl DynamicCluster {
         // 2. Resource Manager on the first node.
         let mut rm = ResourceManager::new(cfg.yarn.clone(), ids, Arc::clone(&metrics));
         rm.set_rack_width(cfg.elastic.rack_width);
+        if cfg.tenant.enabled() {
+            // Multi-tenant front door is on: arbitrate cross-app asks by
+            // dominant resource fairness and let over-share apps lose
+            // their youngest containers to starved ones.
+            rm.set_queue_policy(Box::new(crate::yarn::rm::DrfPolicy));
+            rm.set_preemption(cfg.tenant.preemption);
+        }
         metrics.event(now, "wrapper", &format!("RM started on {rm_node}"));
 
         // 3. Job History Server on the second node.

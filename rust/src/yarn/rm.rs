@@ -42,6 +42,10 @@ struct AppRecord {
     next_container_seq: u64,
     submitted_at: Micros,
     finished_at: Option<Micros>,
+    /// Fair-share queue + DRF weight (tenancy; `root.default` / 1 until
+    /// `set_app_queue` binds them).
+    queue: String,
+    weight: u32,
     /// Release/re-grant accounting: containers granted over the app's
     /// lifetime and the concurrent high-water mark. An event-driven AM
     /// shows `granted_total` far above `peak_held` — capacity is recycled
@@ -79,6 +83,80 @@ pub struct NmInfo {
     pub last_heartbeat: Micros,
 }
 
+/// Weight-normalised dominant-share summary of one running app — the
+/// input to a [`QueuePolicy`] decision.
+#[derive(Debug, Clone)]
+pub struct AppShare {
+    pub app: AppId,
+    /// Fair-share queue the app is bound to (`root.default` until tenancy
+    /// assigns one).
+    pub queue: String,
+    pub weight: u32,
+    /// DRF dominant share of the cluster (×1000), divided by the queue
+    /// weight — lower is more entitled to the next container.
+    pub dominant_milli: u64,
+    /// Containers currently held (including the AM).
+    pub containers: usize,
+}
+
+/// Pluggable cross-app arbitration: which running app the RM should serve
+/// next, and when one app may take capacity back from another.
+pub trait QueuePolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Index of the app to serve next among `shares` (submission order).
+    fn pick(&self, shares: &[AppShare]) -> Option<usize>;
+    /// May `asker` preempt a container held by `holder`?
+    fn may_preempt(&self, asker: &AppShare, holder: &AppShare) -> bool;
+}
+
+/// Submission order, never preempts — the single-tenant default, identical
+/// to the RM's historical behaviour.
+#[derive(Debug, Default)]
+pub struct FifoAppPolicy;
+
+impl QueuePolicy for FifoAppPolicy {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&self, shares: &[AppShare]) -> Option<usize> {
+        if shares.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+
+    fn may_preempt(&self, _asker: &AppShare, _holder: &AppShare) -> bool {
+        false
+    }
+}
+
+/// Weighted DRF (dominant resource fairness): serve the app with the
+/// lowest weight-normalised dominant share. Preemption is allowed only
+/// while the holder's share exceeds **twice** the asker's — the hysteresis
+/// band keeps near-equal apps from churning containers back and forth.
+#[derive(Debug, Default)]
+pub struct DrfPolicy;
+
+impl QueuePolicy for DrfPolicy {
+    fn name(&self) -> &'static str {
+        "drf"
+    }
+
+    fn pick(&self, shares: &[AppShare]) -> Option<usize> {
+        shares
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, s)| (s.dominant_milli, *i))
+            .map(|(i, _)| i)
+    }
+
+    fn may_preempt(&self, asker: &AppShare, holder: &AppShare) -> bool {
+        holder.dominant_milli > asker.dominant_milli.saturating_mul(2)
+    }
+}
+
 /// The RM daemon.
 pub struct ResourceManager {
     cfg: YarnConfig,
@@ -90,6 +168,10 @@ pub struct ResourceManager {
     rr_cursor: usize,
     /// Nodes per rack for the rack-local placement tier.
     rack_width: u32,
+    /// Cross-app arbitration + preemption policy (FIFO by default).
+    policy: Box<dyn QueuePolicy>,
+    /// Whether `preempt_for` may actually take containers.
+    preemption_enabled: bool,
 }
 
 impl ResourceManager {
@@ -102,12 +184,41 @@ impl ResourceManager {
             metrics,
             rr_cursor: 0,
             rack_width: 4,
+            policy: Box::new(FifoAppPolicy),
+            preemption_enabled: false,
         }
     }
 
     /// Nodes per rack used by the rack-local placement tier.
     pub fn set_rack_width(&mut self, width: u32) {
         self.rack_width = width.max(1);
+    }
+
+    /// Install the cross-app arbitration policy (default: FIFO, no
+    /// preemption — the single-tenant behaviour).
+    pub fn set_queue_policy(&mut self, policy: Box<dyn QueuePolicy>) {
+        self.policy = policy;
+    }
+
+    /// Name of the installed queue policy (introspection / tests).
+    pub fn queue_policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Allow `preempt_for` to take containers from over-share apps.
+    pub fn set_preemption(&mut self, enabled: bool) {
+        self.preemption_enabled = enabled;
+    }
+
+    /// Bind an app to a fair-share queue with a DRF weight (tenancy).
+    pub fn set_app_queue(&mut self, app: AppId, queue: &str, weight: u32) -> Result<()> {
+        let rec = self
+            .apps
+            .get_mut(&app)
+            .ok_or_else(|| Error::Yarn(format!("unknown app {app}")))?;
+        rec.queue = queue.to_string();
+        rec.weight = weight.max(1);
+        Ok(())
     }
 
     /// Rack id of a node under this RM's rack geometry.
@@ -169,6 +280,8 @@ impl ResourceManager {
             next_container_seq: 2, // container 1 is the AM
             submitted_at: now,
             finished_at: None,
+            queue: "root.default".to_string(),
+            weight: 1,
             granted_total: 1, // the AM container
             peak_held: 1,
         };
@@ -538,6 +651,111 @@ impl ResourceManager {
             .get(&app)
             .map(|a| a.containers.values().copied().collect())
             .unwrap_or_default()
+    }
+
+    /// Weight-normalised dominant shares of every running app, in
+    /// submission (AppId) order — the input to the queue policy.
+    pub fn app_shares(&self) -> Vec<AppShare> {
+        let (cap, _) = self.cluster_resources();
+        self.apps
+            .iter()
+            .filter(|(_, r)| r.state == AppState::Running)
+            .map(|(&app, r)| {
+                let mut used = Resource::zero();
+                for c in r.containers.values() {
+                    used.add(c.resource);
+                }
+                let raw = crate::tenant::dominant_share_milli(
+                    used.vcores as u64,
+                    used.mem_mb,
+                    cap.vcores as u64,
+                    cap.mem_mb,
+                );
+                AppShare {
+                    app,
+                    queue: r.queue.clone(),
+                    weight: r.weight,
+                    dominant_milli: raw / r.weight.max(1) as u64,
+                    containers: r.containers.len(),
+                }
+            })
+            .collect()
+    }
+
+    /// The running app the installed policy would serve next.
+    pub fn pick_app(&self) -> Option<AppId> {
+        let shares = self.app_shares();
+        self.policy.pick(&shares).map(|i| shares[i].app)
+    }
+
+    /// Try to free room for `ask` by preempting containers from apps the
+    /// policy marks over-share relative to `asker`. Victims are chosen
+    /// youngest-first (the most recent grants — by construction the
+    /// speculative duplicates and the least sunk work) and never the AM,
+    /// so a preempted task re-runs through the existing lost-container
+    /// reschedule path and job output stays byte-identical. Returns the
+    /// `(holder, container)` pairs released — empty when preemption is
+    /// disabled, room already exists, or nothing qualifies.
+    pub fn preempt_for(
+        &mut self,
+        asker: AppId,
+        ask: Resource,
+        now: Micros,
+    ) -> Result<Vec<(AppId, Container)>> {
+        if !self.preemption_enabled {
+            return Ok(Vec::new());
+        }
+        let rounded = Resource::new(
+            self.cfg.round_allocation(ask.mem_mb),
+            ask.vcores.max(self.cfg.min_alloc_vcores),
+        );
+        let has_room =
+            |rm: &ResourceManager| rm.nodes.keys().any(|&n| rm.node_has_room(n, rounded));
+        if has_room(self) {
+            return Ok(Vec::new());
+        }
+        let shares = self.app_shares();
+        let asker_share = shares
+            .iter()
+            .find(|s| s.app == asker)
+            .cloned()
+            .ok_or_else(|| Error::Yarn(format!("unknown app {asker}")))?;
+        // Most over-share holders first.
+        let mut holders: Vec<AppShare> = shares
+            .into_iter()
+            .filter(|s| s.app != asker && self.policy.may_preempt(&asker_share, s))
+            .collect();
+        holders.sort_by(|a, b| b.dominant_milli.cmp(&a.dominant_milli));
+        let mut taken = Vec::new();
+        'holders: for h in holders {
+            let mut victims: Vec<Container> = self
+                .apps
+                .get(&h.app)
+                .map(|r| {
+                    r.containers
+                        .values()
+                        .filter(|c| c.kind != ContainerKind::AppMaster)
+                        .copied()
+                        .collect()
+                })
+                .unwrap_or_default();
+            // Youngest grant (highest container id) goes first.
+            victims.sort_by(|a, b| b.id.cmp(&a.id));
+            for v in victims {
+                self.release(h.app, v.id)?;
+                self.metrics.inc("rm.preemptions", 1);
+                self.metrics.event(
+                    now,
+                    "yarn.rm",
+                    &format!("preempted {} from app {} for {asker}", v.id, h.app),
+                );
+                taken.push((h.app, v));
+                if has_room(self) {
+                    break 'holders;
+                }
+            }
+        }
+        Ok(taken)
     }
 
     /// Accounting invariant: per-node used == Σ resources of the app
@@ -972,6 +1190,102 @@ mod tests {
                 rm.check_invariants().unwrap();
             }
         });
+    }
+
+    #[test]
+    fn drf_picks_the_starved_app_and_fifo_the_oldest() {
+        let mut rm = rm_with(4);
+        let a = rm.submit_app("greedy", "u1", Micros::ZERO).unwrap();
+        let b = rm.submit_app("starved", "u2", Micros::ZERO).unwrap();
+        // Greedy holds most of the cluster; starved has only its AM.
+        let got = rm
+            .allocate(
+                a.app,
+                ContainerRequest {
+                    resource: Resource::new(4096, 1),
+                    count: 8,
+                },
+                ContainerKind::Map,
+                Micros::ZERO,
+            )
+            .unwrap();
+        assert_eq!(got.len(), 8);
+        // Default FIFO policy: oldest submission wins regardless of load.
+        assert_eq!(rm.queue_policy_name(), "fifo");
+        assert_eq!(rm.pick_app(), Some(a.app));
+        // DRF: the app with the smaller dominant share goes first.
+        rm.set_queue_policy(Box::new(DrfPolicy));
+        assert_eq!(rm.queue_policy_name(), "drf");
+        assert_eq!(rm.pick_app(), Some(b.app));
+    }
+
+    #[test]
+    fn drf_normalises_by_queue_weight() {
+        let mut rm = rm_with(4);
+        let a = rm.submit_app("a", "u1", Micros::ZERO).unwrap();
+        let b = rm.submit_app("b", "u2", Micros::ZERO).unwrap();
+        // Identical holdings (AM only), but `a` sits in a weight-4 queue:
+        // its normalised dominant share is a quarter of `b`'s, so DRF
+        // serves it first.
+        rm.set_app_queue(a.app, "root.research", 4).unwrap();
+        rm.set_app_queue(b.app, "root.default", 1).unwrap();
+        rm.set_queue_policy(Box::new(DrfPolicy));
+        let shares = rm.app_shares();
+        let sa = shares.iter().find(|s| s.app == a.app).unwrap();
+        let sb = shares.iter().find(|s| s.app == b.app).unwrap();
+        assert_eq!(sa.queue, "root.research");
+        assert!(sa.dominant_milli < sb.dominant_milli);
+        assert_eq!(rm.pick_app(), Some(a.app));
+    }
+
+    #[test]
+    fn preemption_frees_youngest_non_am_and_respects_the_gate() {
+        let mut rm = rm_with(2);
+        // Submit both apps first so each AM fits before greedy fills up.
+        let greedy = rm.submit_app("greedy", "u1", Micros::ZERO).unwrap();
+        let starved = rm.submit_app("starved", "u2", Micros::ZERO).unwrap();
+        // 2 nodes × 52 GB = 104 GB; two AMs take 16 GB → 88 GB left →
+        // 22 maps of 4 GB (memory-bound: vcores allow 2×16-2 = 30).
+        let got = rm
+            .allocate(
+                greedy.app,
+                ContainerRequest {
+                    resource: Resource::new(4096, 1),
+                    count: 100,
+                },
+                ContainerKind::Map,
+                Micros::ZERO,
+            )
+            .unwrap();
+        assert_eq!(got.len(), 22);
+        let ask = Resource::new(4096, 1);
+        let granted = rm
+            .allocate_one(starved.app, ask, ContainerKind::Map, &[], &[], Micros::ZERO)
+            .unwrap();
+        assert!(granted.is_none(), "cluster is full");
+        // Preemption defaults off: no victims even with the cluster full.
+        assert!(rm
+            .preempt_for(starved.app, ask, Micros::ZERO)
+            .unwrap()
+            .is_empty());
+        rm.set_queue_policy(Box::new(DrfPolicy));
+        rm.set_preemption(true);
+        let taken = rm.preempt_for(starved.app, ask, Micros::ZERO).unwrap();
+        assert!(!taken.is_empty());
+        // Youngest grant (the speculative-duplicate slot) goes first and
+        // the AM is never a victim.
+        let youngest = got.iter().map(|c| c.id).max().unwrap();
+        assert_eq!(taken[0].1.id, youngest);
+        for (holder, c) in &taken {
+            assert_eq!(*holder, greedy.app);
+            assert!(c.kind != ContainerKind::AppMaster);
+        }
+        // The freed room now satisfies the ask.
+        let after = rm
+            .allocate_one(starved.app, ask, ContainerKind::Map, &[], &[], Micros::ZERO)
+            .unwrap();
+        assert!(after.is_some());
+        rm.check_invariants().unwrap();
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! Multi-tenant front door acceptance: fair-share scheduling under a
+//! greedy flood, admission control (401/429 + Retry-After) on both the
+//! versioned and the legacy redirect paths, quota + breaker rejections
+//! with stable error codes, and the preemption byte-parity oracle — the
+//! same workload with preemption on and off produces byte-identical
+//! output.
+//!
+//! `HPCW_CHAOS=1` (the CI chaos step) multiplies the flood size.
+
+use hpcw::api::http::request_with_headers;
+use hpcw::api::{ApiClient, ApiServer, AppPayload, Stack};
+use hpcw::codec::json::Json;
+use hpcw::config::{StackConfig, TenantSpec};
+use hpcw::mapreduce::counters as mrc;
+use hpcw::scheduler::JobState;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+const KEYS: &str = "k-alice:alice:root.research.alice,\
+                    k-bob:bob:root.research.bob:2,\
+                    k-carol:carol:root.eng.carol";
+
+fn tenant_cfg() -> StackConfig {
+    let mut cfg = StackConfig::tiny();
+    cfg.tenant.keys = TenantSpec::parse_list(KEYS).unwrap();
+    cfg
+}
+
+fn teragen(dir: &str, rows: u64) -> AppPayload {
+    AppPayload::Teragen {
+        rows,
+        maps: 1,
+        dir: dir.to_string(),
+    }
+}
+
+fn flood_size() -> usize {
+    if std::env::var("HPCW_CHAOS").is_ok() {
+        100
+    } else {
+        30
+    }
+}
+
+fn counter(doc: &hpcw::api::wire::JobDoc, name: &str) -> Option<u64> {
+    doc.result
+        .as_ref()?
+        .counters
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|&(_, v)| v)
+}
+
+/// THE acceptance test: one tenant floods the queue with jobs while two
+/// others submit a handful each. Fair-share dispatch interleaves the
+/// tenants (the small tenants' last jobs finish before the flood
+/// drains), every job completes, and the per-queue ledger is visible in
+/// `/v1/queues`, `/v1/tenants` and each job's counters.
+#[test]
+fn greedy_flood_cannot_starve_other_tenants() {
+    let mut cfg = tenant_cfg();
+    // The flood must hit the fair-share queue, not the rate limiter.
+    cfg.tenant.submit_rate_per_s = 10_000.0;
+    cfg.tenant.submit_burst = 1_000;
+    let server = ApiServer::start(Stack::new(cfg).unwrap()).unwrap();
+    let alice = ApiClient::with_key(&server.addr, "k-alice");
+    let bob = ApiClient::with_key(&server.addr, "k-bob");
+    let carol = ApiClient::with_key(&server.addr, "k-carol");
+
+    // Greedy tenant first, so its jobs are ahead in FIFO order — plain
+    // FIFO would run all of them before bob's and carol's.
+    let n = flood_size();
+    let alice_jobs: Vec<u64> = (0..n)
+        .map(|i| {
+            alice
+                .submit(2, "x", &teragen(&format!("/lustre/scratch/ten-a-{i}"), 50))
+                .unwrap()
+        })
+        .collect();
+    let bob_jobs: Vec<u64> = (0..4)
+        .map(|i| {
+            bob.submit(2, "x", &teragen(&format!("/lustre/scratch/ten-b-{i}"), 50))
+                .unwrap()
+        })
+        .collect();
+    let carol_jobs: Vec<u64> = (0..4)
+        .map(|i| {
+            carol
+                .submit(2, "x", &teragen(&format!("/lustre/scratch/ten-c-{i}"), 50))
+                .unwrap()
+        })
+        .collect();
+
+    // Drive the small tenants to completion first; the pump advances
+    // everyone's jobs while we wait.
+    let mut bob_doc = None;
+    for &j in bob_jobs.iter().chain(&carol_jobs) {
+        let doc = bob.wait(j, Duration::from_secs(120)).unwrap();
+        assert_eq!(doc.state, JobState::Done, "job {j} error={:?}", doc.error);
+        bob_doc = Some(doc);
+    }
+    for &j in &alice_jobs {
+        let doc = alice.wait(j, Duration::from_secs(300)).unwrap();
+        assert_eq!(doc.state, JobState::Done, "job {j} error={:?}", doc.error);
+    }
+
+    // Interleaving proof from the journal: carol's LAST job finished
+    // before alice's last — the flood did not run to exhaustion first.
+    let events = alice.events(0, 0).unwrap().events;
+    let done_seq = |id: u64| {
+        events
+            .iter()
+            .find(|e| e.kind == "job" && e.id == id && e.state == "DONE")
+            .unwrap_or_else(|| panic!("no DONE event for job {id}"))
+            .seq
+    };
+    let carol_last = carol_jobs.iter().map(|&j| done_seq(j)).max().unwrap();
+    let alice_last = alice_jobs.iter().map(|&j| done_seq(j)).max().unwrap();
+    assert!(
+        carol_last < alice_last,
+        "carol's last DONE (seq {carol_last}) should precede alice's (seq {alice_last})"
+    );
+
+    // The fair-share ledger over the wire.
+    let queues = alice.queues().unwrap();
+    let q = |name: &str| {
+        queues
+            .iter()
+            .find(|q| q.name == name)
+            .unwrap_or_else(|| panic!("queue {name} missing from {queues:?}"))
+    };
+    let qa = q("root.research.alice");
+    let qb = q("root.research.bob");
+    let qc = q("root.eng.carol");
+    assert_eq!(qb.weight, 2);
+    assert!(qa.served >= n as u64 && qb.served >= 4 && qc.served >= 4);
+    assert!(
+        qa.share_pct > qc.share_pct && qc.share_pct > 0,
+        "alice={} carol={}",
+        qa.share_pct,
+        qc.share_pct
+    );
+
+    let tenants = alice.tenants().unwrap();
+    let t = |name: &str| tenants.iter().find(|t| t.name == name).unwrap();
+    assert_eq!(t("alice").submitted, n as u64);
+    assert_eq!(t("bob").submitted, 4);
+    assert_eq!(t("alice").rate_limited, 0);
+    assert_eq!(t("alice").running_apps, 0, "all terminal — leases released");
+    assert_eq!(t("alice").breaker, "closed");
+
+    // Per-job view: the queue ledger is stamped into the job counters.
+    let doc = bob_doc.unwrap();
+    assert!(counter(&doc, mrc::QUEUE_SHARE).is_some(), "doc={doc:?}");
+    assert!(counter(&doc, mrc::QUEUE_WAIT_US).is_some());
+    assert!(counter(&doc, mrc::PREEMPTIONS).is_some());
+}
+
+/// Satellite 6 regression: the legacy 301 paths sit BEHIND the same
+/// admission gate as `/v1/*` — an unknown key gets 401 and an exhausted
+/// rate bucket gets 429, never the redirect side door.
+#[test]
+fn admission_gates_cover_legacy_redirect_paths() {
+    let mut cfg = tenant_cfg();
+    cfg.tenant.anonymous_queue = String::new(); // unauthenticated ⇒ 401
+    cfg.tenant.submit_burst = 2;
+    cfg.tenant.submit_rate_per_s = 0.001;
+    let server = ApiServer::start(Stack::new(cfg).unwrap()).unwrap();
+    let addr = &server.addr;
+
+    let code_of = |body: &[u8]| {
+        Json::parse(std::str::from_utf8(body).unwrap())
+            .unwrap()
+            .get("error")
+            .and_then(|e| e.get("code"))
+            .and_then(Json::as_str)
+            .map(str::to_string)
+    };
+
+    // No key / unknown key → 401 on versioned AND legacy paths.
+    let (status, _, body) = request_with_headers(addr, "GET", "/v1/jobs", None, &[]).unwrap();
+    assert_eq!(status, 401);
+    assert_eq!(code_of(&body).as_deref(), Some("unauthorized"));
+    let bad = [("X-HPCW-Key", "nope")];
+    let (status, _, _) = request_with_headers(addr, "GET", "/v1/jobs", None, &bad).unwrap();
+    assert_eq!(status, 401);
+    let (status, _, body) =
+        request_with_headers(addr, "POST", "/jobs", Some(b"{}"), &bad).unwrap();
+    assert_eq!(status, 401, "legacy POST must not redirect unauthenticated");
+    assert_eq!(code_of(&body).as_deref(), Some("unauthorized"));
+
+    // An authenticated legacy POST is admitted (and charged) THEN
+    // redirected; the third attempt drains the burst-2 bucket and is
+    // shed with 429 + Retry-After instead of 301.
+    let good = [("X-HPCW-Key", "k-alice")];
+    for _ in 0..2 {
+        let (status, headers, _) =
+            request_with_headers(addr, "POST", "/jobs", Some(b"{}"), &good).unwrap();
+        assert_eq!(status, 301);
+        assert_eq!(headers.get("location").map(String::as_str), Some("/v1/jobs"));
+        assert_eq!(headers.get("deprecation").map(String::as_str), Some("true"));
+    }
+    let (status, headers, body) =
+        request_with_headers(addr, "POST", "/jobs", Some(b"{}"), &good).unwrap();
+    assert_eq!(status, 429, "exhausted bucket must shed, not redirect");
+    assert_eq!(code_of(&body).as_deref(), Some("rate_limited"));
+    assert!(
+        headers.get("retry-after").is_some(),
+        "429 must carry Retry-After: {headers:?}"
+    );
+
+    // The versioned submission path answers the same way.
+    let (status, _, body) = request_with_headers(
+        addr,
+        "POST",
+        "/v1/jobs",
+        Some(br#"{"nodes":2,"user":"x","payload":{"type":"teragen","rows":1,"maps":1,"dir":"/lustre/scratch/g"}}"#),
+        &good,
+    )
+    .unwrap();
+    assert_eq!(status, 429);
+    assert_eq!(code_of(&body).as_deref(), Some("rate_limited"));
+
+    // Reads still work for an authenticated caller.
+    let (status, _, _) = request_with_headers(addr, "GET", "/v1/jobs", None, &good).unwrap();
+    assert_eq!(status, 200);
+}
+
+/// The three rejection families — rate limit, quota, breaker — surface
+/// as typed errors through the Rust client, with the Retry-After hint.
+#[test]
+fn rate_quota_and_breaker_reject_with_stable_codes() {
+    // 1. Rate limit: burst of one, slow refill.
+    let mut cfg = tenant_cfg();
+    cfg.tenant.submit_burst = 1;
+    cfg.tenant.submit_rate_per_s = 0.5;
+    let server = ApiServer::start(Stack::new(cfg).unwrap()).unwrap();
+    let alice = ApiClient::with_key(&server.addr, "k-alice");
+    alice
+        .submit(2, "x", &teragen("/lustre/scratch/rl-0", 50))
+        .unwrap();
+    let err = alice
+        .submit(2, "x", &teragen("/lustre/scratch/rl-1", 50))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("rate_limited"), "{err}");
+    assert!(err.contains("Retry-After"), "client surfaces the hint: {err}");
+
+    // 2. DFS-bytes quota: charged when the first job lands its output.
+    let mut cfg = tenant_cfg();
+    cfg.tenant.max_dfs_bytes = 1;
+    let server = ApiServer::start(Stack::new(cfg).unwrap()).unwrap();
+    let bob = ApiClient::with_key(&server.addr, "k-bob");
+    let job = bob
+        .submit(2, "x", &teragen("/lustre/scratch/qt-0", 100))
+        .unwrap();
+    let doc = bob.wait(job, Duration::from_secs(60)).unwrap();
+    assert_eq!(doc.state, JobState::Done, "error={:?}", doc.error);
+    let err = bob
+        .submit(2, "x", &teragen("/lustre/scratch/qt-1", 100))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("quota_exceeded"), "{err}");
+
+    // 3. Circuit breaker: one failed job trips it; the next submission
+    //    is rejected server-side without touching the scheduler.
+    let mut cfg = tenant_cfg();
+    cfg.tenant.breaker_threshold = 1;
+    cfg.tenant.breaker_open_ms = 3_600_000;
+    let server = ApiServer::start(Stack::new(cfg).unwrap()).unwrap();
+    let carol = ApiClient::with_key(&server.addr, "k-carol");
+    let doomed = AppPayload::HiveQuery {
+        sql: "SELECT COUNT(a) FROM '/lustre/scratch/absent' SCHEMA (a) \
+              INTO '/lustre/scratch/br-out'"
+            .into(),
+        reduces: 1,
+    };
+    let job = carol.submit(2, "x", &doomed).unwrap();
+    let doc = carol.wait(job, Duration::from_secs(60)).unwrap();
+    assert_eq!(doc.state, JobState::Exited, "the probe job must fail");
+    let err = carol
+        .submit(2, "x", &teragen("/lustre/scratch/br-1", 50))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("rate_limited"), "breaker presents as 429: {err}");
+    let t = carol.tenants().unwrap();
+    let c = t.iter().find(|t| t.name == "carol").unwrap();
+    assert_eq!(c.breaker, "open");
+    assert!(c.breaker_rejected >= 1);
+}
+
+/// The preemption byte-parity oracle: the same three-tenant workload
+/// with preemption enabled and disabled produces byte-identical output
+/// files — preempted containers re-run through the ordinary lost-
+/// container path and never corrupt results.
+#[test]
+fn preemption_on_off_outputs_byte_identical() {
+    fn run(preemption: bool) -> BTreeMap<String, Vec<u8>> {
+        let mut cfg = tenant_cfg();
+        cfg.tenant.preemption = preemption;
+        cfg.tenant.submit_burst = 100;
+        let mut stack = Stack::new(cfg).unwrap();
+        let mut jobs = vec![stack
+            .submit(
+                3,
+                "alice",
+                AppPayload::Terasort {
+                    rows: 2_000,
+                    maps: 2,
+                    reduces: 2,
+                    use_kernel: false,
+                },
+            )
+            .unwrap()];
+        for (user, dir) in [("bob", "/lustre/scratch/pp-b"), ("carol", "/lustre/scratch/pp-c")] {
+            jobs.push(stack.submit(2, user, teragen(dir, 500)).unwrap());
+        }
+        let terasort = jobs[0];
+        let mut out = BTreeMap::new();
+        for id in jobs {
+            let result = stack.run_to_completion(id, 200).unwrap().clone();
+            if id == terasort {
+                assert!(result.validated, "terasort must validate");
+            }
+            for f in &result.output_files {
+                out.insert(f.clone(), stack.read_output(f).unwrap());
+            }
+        }
+        out
+    }
+    let with_preemption = run(true);
+    let without = run(false);
+    assert!(!with_preemption.is_empty());
+    assert_eq!(
+        with_preemption.keys().collect::<Vec<_>>(),
+        without.keys().collect::<Vec<_>>(),
+        "same output files either way"
+    );
+    for (file, bytes) in &with_preemption {
+        assert_eq!(
+            Some(bytes),
+            without.get(file).as_deref(),
+            "{file} differs between preemption on/off"
+        );
+    }
+}
