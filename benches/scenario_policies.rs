@@ -1,0 +1,124 @@
+//! SCENARIO POLICIES — SLA/energy-aware autoscaling vs the legacy
+//! grow-on-backlog policy (PR 9): replays the two shipped scenario specs
+//! (`examples/scenarios/`) under both `ScalePolicy` implementations and
+//! scores them against each other. The claim under gate: on the spike
+//! scenario `sla_energy` at least halves the SLA0 violation rate, and on
+//! both scenarios it does so at **equal or lower energy** (warm spares
+//! are paid for by sleeping the idle tail, not by burning more watts).
+//!
+//! The whole bench is a pure discrete-time simulation with fixed seeds —
+//! every metric in **`BENCH_PR9.json`** is deterministic, so the
+//! committed baseline floors gate exact behavior, not noisy wall-clock.
+//! `HPCW_BENCH_SMOKE=1` is accepted for CI symmetry; the scenarios are
+//! already CI-sized (≤ 240 ticks), so it changes nothing.
+
+use hpcw::bench::emit_json;
+use hpcw::scenario::{Runner, ScenarioSpec, ScoreDoc};
+
+fn run_policy(toml: &str, policy: &str) -> ScoreDoc {
+    let mut spec = ScenarioSpec::from_toml(toml).unwrap();
+    spec.policy = policy.to_string();
+    spec.validate().unwrap();
+    Runner::run(spec).unwrap()
+}
+
+/// Total violations across every tier — the "no tier got worse" check.
+fn total_violations(s: &ScoreDoc) -> u64 {
+    s.tiers.iter().map(|t| t.violations).sum()
+}
+
+fn main() {
+    let smoke = std::env::var("HPCW_BENCH_SMOKE").is_ok();
+    let spike_toml = include_str!("../examples/scenarios/spike.toml");
+    let updown_toml = include_str!("../examples/scenarios/updown.toml");
+
+    // --- spike: a 10 s SLA0 burst against slow-waking nodes ---------------
+    let spike_backlog = run_policy(spike_toml, "grow_on_backlog");
+    let spike_sla = run_policy(spike_toml, "sla_energy");
+    println!("[spike] {}", spike_backlog.summary());
+    println!("[spike] {}", spike_sla.summary());
+    let spike_bp_backlog = spike_backlog.sla0_violation_bp();
+    let spike_bp_sla = spike_sla.sla0_violation_bp();
+    assert!(
+        spike_bp_sla * 2 <= spike_bp_backlog,
+        "sla_energy must at least halve the spike SLA0 violation rate \
+         ({spike_bp_sla}bp vs {spike_bp_backlog}bp)"
+    );
+    assert!(
+        spike_sla.energy.energy_mj <= spike_backlog.energy.energy_mj,
+        "the spike SLA win must not cost extra energy ({} mJ vs {} mJ)",
+        spike_sla.energy.energy_mj,
+        spike_backlog.energy.energy_mj
+    );
+
+    // --- updown: diurnal batch load, the win is the sleeping idle tail ----
+    let updown_backlog = run_policy(updown_toml, "grow_on_backlog");
+    let updown_sla = run_policy(updown_toml, "sla_energy");
+    println!("[updown] {}", updown_backlog.summary());
+    println!("[updown] {}", updown_sla.summary());
+    assert!(
+        total_violations(&updown_sla) <= total_violations(&updown_backlog),
+        "sla_energy must not regress any tier on updown ({} vs {})",
+        total_violations(&updown_sla),
+        total_violations(&updown_backlog)
+    );
+    assert!(
+        updown_sla.energy.energy_mj < updown_backlog.energy.energy_mj,
+        "updown exists to prove the energy saving ({} mJ vs {} mJ)",
+        updown_sla.energy.energy_mj,
+        updown_backlog.energy.energy_mj
+    );
+
+    let spike_energy_ratio =
+        spike_backlog.energy.energy_mj as f64 / spike_sla.energy.energy_mj as f64;
+    let updown_energy_ratio =
+        updown_backlog.energy.energy_mj as f64 / updown_sla.energy.energy_mj as f64;
+    emit_json(
+        "BENCH_PR9.json",
+        "scenario_policies",
+        &[
+            ("spike_sla0_bp_backlog", spike_bp_backlog as f64),
+            ("spike_sla0_bp_sla", spike_bp_sla as f64),
+            ("spike_energy_mj_backlog", spike_backlog.energy.energy_mj as f64),
+            ("spike_energy_mj_sla", spike_sla.energy.energy_mj as f64),
+            // Binary gates: 1.0 ⇒ the headline claims held this run.
+            (
+                "spike_sla0_within_ceiling",
+                if spike_bp_sla * 2 <= spike_bp_backlog { 1.0 } else { 0.0 },
+            ),
+            (
+                "spike_energy_within_ceiling",
+                if spike_sla.energy.energy_mj <= spike_backlog.energy.energy_mj {
+                    1.0
+                } else {
+                    0.0
+                },
+            ),
+            // Legacy-vs-SLA energy (> 1.0 ⇒ sla_energy is cheaper).
+            ("spike_energy_ratio", spike_energy_ratio),
+            (
+                "updown_energy_within_ceiling",
+                if updown_sla.energy.energy_mj < updown_backlog.energy.energy_mj {
+                    1.0
+                } else {
+                    0.0
+                },
+            ),
+            ("updown_energy_ratio", updown_energy_ratio),
+            (
+                "updown_sla_regression_free",
+                if total_violations(&updown_sla) <= total_violations(&updown_backlog) {
+                    1.0
+                } else {
+                    0.0
+                },
+            ),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    );
+    println!(
+        "\nscenario policies: spike sla0 {spike_bp_backlog}bp -> {spike_bp_sla}bp at \
+         {spike_energy_ratio:.2}x less energy; updown energy ratio {updown_energy_ratio:.2}x"
+    );
+    println!("scenario_policies OK");
+}

@@ -221,6 +221,40 @@ class ApiClient:
             if time.monotonic() >= deadline:
                 raise ApiError(408, wire.NOT_READY, f"timeout waiting for workflow {wf}")
 
+    # -- scenarios ---------------------------------------------------------
+
+    def run_scenario(self, spec: Dict[str, Any]) -> int:
+        """Submit a what-if scenario (build the spec as a plain dict; it
+        is canonicalized and validated client-side, mirroring the
+        server's rules). Returns the scenario id; the run executes
+        asynchronously — ``wait_scenario`` for the score."""
+        doc = self._json("POST", "/v1/scenarios", wire.canonical_scenario_spec(spec))
+        return doc["scenario"]
+
+    def scenario(self, scenario: int) -> Dict[str, Any]:
+        """Scenario lifecycle document (``state`` is an exact token from
+        ``wire.SCENARIO_STATES``; ``score`` present once DONE)."""
+        return self._json("GET", f"/v1/scenarios/{scenario}")
+
+    def wait_scenario(self, scenario: int, timeout: float = 120.0) -> Dict[str, Any]:
+        """Long-poll until the scenario is DONE or FAILED."""
+        deadline = time.monotonic() + timeout
+        while True:
+            left_ms = max(0, int((deadline - time.monotonic()) * 1000))
+            slice_ms = min(left_ms, WAIT_SLICE_MS)
+            doc = self._json("GET", f"/v1/scenarios/{scenario}?wait_ms={slice_ms}")
+            if wire.is_terminal_scenario(doc["state"]):
+                return doc
+            if time.monotonic() >= deadline:
+                raise ApiError(
+                    408, wire.NOT_READY, f"timeout waiting for scenario {scenario}"
+                )
+
+    def list_scenarios(self, offset: int = 0, limit: int = 50) -> Dict[str, Any]:
+        """Scenario page (rows omit ``score``; fetch one scenario for the
+        full document)."""
+        return self._json("GET", f"/v1/scenarios?offset={offset}&limit={limit}")
+
     # -- events and metrics ------------------------------------------------
 
     def events(self, since: int = 0, wait_ms: int = 0) -> Dict[str, Any]:

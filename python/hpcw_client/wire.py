@@ -299,6 +299,244 @@ def canonical_queue(doc: Dict[str, Any]) -> Dict[str, Any]:
     return {k: _req(doc, k) for k in QUEUE_FIELDS}
 
 
+# ---------------------------------------------------------------------------
+# Scenarios (POST /v1/scenarios)
+# ---------------------------------------------------------------------------
+
+#: SLA tiers in canonical (Rust ``TIERS``) order; score documents carry
+#: one entry per tier, in this order.
+SLA_TIERS = ("sla0", "sla1", "sla2", "batch")
+
+#: Autoscale policies the runner accepts.
+SCENARIO_POLICIES = ("grow_on_backlog", "sla_energy")
+
+#: Scenario lifecycle tokens (mirror ``ScenarioState::as_wire``).
+SCENARIO_STATES = ("PENDING", "RUNNING", "DONE", "FAILED")
+TERMINAL_SCENARIO_STATES = frozenset({"DONE", "FAILED"})
+
+#: MIPS rating that leaves task runtimes unscaled (``REFERENCE_MIPS``).
+REFERENCE_MIPS = 1000
+
+#: Maximum simulated ticks per run (``ScenarioSpec::validate``).
+MAX_SCENARIO_TICKS = 100_000
+
+
+def is_terminal_scenario(state: str) -> bool:
+    return state in TERMINAL_SCENARIO_STATES
+
+
+def canonical_machine_class(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Rebuild a machine class in canonical key order with the TOML-form
+    defaults filled (mirrors Rust ``machine_class_from_json`` →
+    ``machine_class_to_json``). ``tiers`` appears only when the class
+    restricts the SLA tiers it serves."""
+    tiers = list(doc.get("tiers") or [])
+    for t in tiers:
+        if t not in SLA_TIERS:
+            raise ValueError(f"unknown SLA tier '{t}'")
+    out: Dict[str, Any] = {
+        "name": _req(doc, "name"),
+        "count": _req(doc, "count"),
+        "cores": _req(doc, "cores"),
+        "mem_mb": _req(doc, "mem_mb"),
+        "mips": doc.get("mips", REFERENCE_MIPS),
+        "active_w": doc.get("active_w", 200),
+        "idle_w": doc.get("idle_w", 100),
+        "sleep_w": doc.get("sleep_w", 10),
+        "wake_ms": doc.get("wake_ms", 0),
+    }
+    if tiers:
+        out["tiers"] = tiers
+    return out
+
+
+def canonical_task_class(doc: Dict[str, Any], duration_ms: int) -> Dict[str, Any]:
+    """Rebuild a task class in canonical key order. ``period_ms`` /
+    ``duty_pct`` appear only for diurnal shapes (and are required then);
+    ``end_ms`` defaults to the scenario duration."""
+    tier = _req(doc, "tier")
+    if tier not in SLA_TIERS:
+        raise ValueError(f"unknown SLA tier '{tier}'")
+    shape = doc.get("shape", "steady")
+    if shape not in ("steady", "diurnal"):
+        raise ValueError(f"unknown shape '{shape}' (steady|diurnal)")
+    out: Dict[str, Any] = {
+        "name": _req(doc, "name"),
+        "tier": tier,
+        "start_ms": doc.get("start_ms", 0),
+        "end_ms": doc.get("end_ms", duration_ms),
+        "inter_arrival_ms": _req(doc, "inter_arrival_ms"),
+        "runtime_ms": _req(doc, "runtime_ms"),
+        "mem_mb": doc.get("mem_mb", 1024),
+        "shape": shape,
+    }
+    if shape == "diurnal":
+        out["period_ms"] = _req(doc, "period_ms")
+        out["duty_pct"] = _req(doc, "duty_pct")
+    out["seed"] = doc.get("seed", 0)
+    return out
+
+
+def _machine_serves(mc: Dict[str, Any], tier: str) -> bool:
+    tiers = mc.get("tiers") or []
+    return not tiers or tier in tiers
+
+
+def validate_scenario_spec(spec: Dict[str, Any]) -> None:
+    """The client-side mirror of Rust ``ScenarioSpec::validate``: a spec
+    that passes here is a spec the server's runner will accept, so a 4xx
+    on ``POST /v1/scenarios`` means a real schema disagreement."""
+    if not spec["name"]:
+        raise ValueError("scenario: name must be non-empty")
+    if spec["duration_ms"] <= 0 or spec["tick_ms"] <= 0:
+        raise ValueError("scenario: duration_ms and tick_ms must be > 0")
+    if spec["duration_ms"] // spec["tick_ms"] > MAX_SCENARIO_TICKS:
+        raise ValueError(
+            f"scenario: more than {MAX_SCENARIO_TICKS} ticks "
+            "(shrink duration or grow tick_ms)"
+        )
+    if spec["policy"] not in SCENARIO_POLICIES:
+        raise ValueError(
+            f"scenario: unknown policy '{spec['policy']}' (grow_on_backlog | sla_energy)"
+        )
+    if not spec["machine_classes"]:
+        raise ValueError("scenario: no machine classes")
+    if not spec["task_classes"]:
+        raise ValueError("scenario: no task classes")
+    names = set()
+    for c in spec["machine_classes"]:
+        if c["name"] in names:
+            raise ValueError(f"duplicate machine class '{c['name']}'")
+        names.add(c["name"])
+        if c["count"] <= 0 or c["cores"] <= 0 or c["mips"] <= 0:
+            raise ValueError(
+                f"machine_class.{c['name']}: count, cores and mips must be > 0"
+            )
+    names = set()
+    for t in spec["task_classes"]:
+        if t["name"] in names:
+            raise ValueError(f"duplicate task class '{t['name']}'")
+        names.add(t["name"])
+        if t["inter_arrival_ms"] <= 0 or t["runtime_ms"] <= 0:
+            raise ValueError(
+                f"task_class.{t['name']}: inter_arrival_ms and runtime_ms must be > 0"
+            )
+        if t["end_ms"] <= t["start_ms"]:
+            raise ValueError(f"task_class.{t['name']}: end_ms must exceed start_ms")
+        if t["shape"] == "diurnal" and (
+            t["period_ms"] <= 0 or not 1 <= t["duty_pct"] <= 100
+        ):
+            raise ValueError(
+                f"task_class.{t['name']}: diurnal needs period_ms > 0 "
+                "and duty_pct in 1..=100"
+            )
+        if not any(_machine_serves(c, t["tier"]) for c in spec["machine_classes"]):
+            raise ValueError(
+                f"task_class.{t['name']}: no machine class serves tier {t['tier']}"
+            )
+    if spec["nodes_min"] < 1:
+        raise ValueError("scenario: nodes_min must be >= 1 (the RM needs a slave)")
+    if spec["nodes_min"] > spec["nodes_max"]:
+        raise ValueError(
+            f"scenario: nodes_min ({spec['nodes_min']}) exceeds "
+            f"nodes_max ({spec['nodes_max']})"
+        )
+    total = sum(c["count"] for c in spec["machine_classes"])
+    if total < spec["nodes_min"]:
+        raise ValueError(
+            f"scenario: machine classes provide {total} nodes, "
+            f"below nodes_min {spec['nodes_min']}"
+        )
+
+
+def canonical_scenario_spec(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Parse-and-rebuild a scenario spec in canonical form — the Python
+    analog of Rust ``scenario_spec_from_json`` → ``scenario_spec_to_json``
+    (defaults filled exactly as in the TOML form, then validated)."""
+    duration_ms = _req(doc, "duration_ms")
+    out = {
+        "name": _req(doc, "name"),
+        "duration_ms": duration_ms,
+        "tick_ms": doc.get("tick_ms", 1000),
+        "seed": doc.get("seed", 0),
+        "policy": doc.get("policy", "grow_on_backlog"),
+        "warm_spares": doc.get("warm_spares", 1),
+        "batch_backlog_per_node": doc.get("batch_backlog_per_node", 4),
+        "nodes_min": _req(doc, "nodes_min"),
+        "nodes_max": _req(doc, "nodes_max"),
+        "queue_delay_ms": doc.get("queue_delay_ms", 500),
+        "machine_classes": [
+            canonical_machine_class(c) for c in _req(doc, "machine_classes")
+        ],
+        "task_classes": [
+            canonical_task_class(t, duration_ms) for t in _req(doc, "task_classes")
+        ],
+    }
+    validate_scenario_spec(out)
+    return out
+
+
+def canonical_score(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Rebuild a score document in canonical key order. The ``tiers``
+    array must hold exactly one entry per SLA tier, in ``SLA_TIERS``
+    order (mirrors Rust ``score_doc_from_json``)."""
+    tiers_in = _req(doc, "tiers")
+    if len(tiers_in) != len(SLA_TIERS):
+        raise ValueError(
+            f"score: expected {len(SLA_TIERS)} tier entries, got {len(tiers_in)}"
+        )
+    tiers = []
+    for slot, (name, t) in enumerate(zip(SLA_TIERS, tiers_in)):
+        if _req(t, "tier") != name:
+            raise ValueError(f"score: tier entry {slot} must be '{name}'")
+        tiers.append(
+            {"tier": name, "tasks": _req(t, "tasks"), "violations": _req(t, "violations")}
+        )
+    e = _req(doc, "energy")
+    energy = {
+        k: _req(e, k)
+        for k in ("node_ms", "busy_core_ms", "idle_node_ms", "wakeups", "wake_ms", "energy_mj")
+    }
+    return {
+        "scenario": _req(doc, "scenario"),
+        "policy": _req(doc, "policy"),
+        "duration_ms": _req(doc, "duration_ms"),
+        "ticks": _req(doc, "ticks"),
+        "tiers": tiers,
+        "energy": energy,
+        "peak_nodes": _req(doc, "peak_nodes"),
+        "grants": _req(doc, "grants"),
+        "drains": _req(doc, "drains"),
+    }
+
+
+def violation_bp(score: Dict[str, Any], tier: str = "sla0") -> int:
+    """Violation rate of one tier in basis points (integer division, so
+    it matches Rust ``TierScore::violation_bp`` exactly)."""
+    entry = next(t for t in score["tiers"] if t["tier"] == tier)
+    return 0 if entry["tasks"] == 0 else entry["violations"] * 10_000 // entry["tasks"]
+
+
+def canonical_scenario(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Rebuild a scenario lifecycle document (``GET /v1/scenarios/{id}``)
+    in canonical key order. ``score`` appears once DONE, ``error`` once
+    FAILED."""
+    state = _req(doc, "state")
+    if state not in SCENARIO_STATES:
+        raise ValueError(f"unknown scenario state '{state}'")
+    out: Dict[str, Any] = {
+        "scenario": _req(doc, "scenario"),
+        "name": _req(doc, "name"),
+        "policy": _req(doc, "policy"),
+        "state": state,
+    }
+    if doc.get("score") is not None:
+        out["score"] = canonical_score(doc["score"])
+    if doc.get("error") is not None:
+        out["error"] = doc["error"]
+    return out
+
+
 def error_doc(code: str, message: str) -> Dict[str, Any]:
     return {"error": {"code": code, "message": message}}
 

@@ -138,6 +138,57 @@ def test_explain_query_returns_optimizer_plan(server):
         assert wire.dumps(wire.canonical_payload(payload)) == wire.dumps(payload)
 
 
+def test_scenario_run_and_score(server):
+    client = ApiClient(server)
+    spec = {
+        "name": "py-spike",
+        "duration_ms": 30_000,
+        "tick_ms": 500,
+        "seed": 7,
+        "policy": "sla_energy",
+        "warm_spares": 2,
+        "nodes_min": 2,
+        "nodes_max": 6,
+        "machine_classes": [
+            {"name": "std", "count": 6, "cores": 2, "mem_mb": 4096, "wake_ms": 1000}
+        ],
+        "task_classes": [
+            {
+                "name": "web",
+                "tier": "sla0",
+                "start_ms": 5_000,
+                "end_ms": 15_000,
+                "inter_arrival_ms": 1_000,
+                "runtime_ms": 3_000,
+            }
+        ],
+    }
+    sid = client.run_scenario(spec)
+    doc = client.wait_scenario(sid, timeout=60.0)
+    assert doc["state"] == "DONE", doc.get("error")
+    score = doc["score"]
+    assert score["scenario"] == "py-spike"
+    assert score["policy"] == "sla_energy"
+    assert score["ticks"] == 60
+    assert score["energy"]["energy_mj"] > 0
+    assert [t["tier"] for t in score["tiers"]] == list(wire.SLA_TIERS)
+    # The score document is wire-canonical byte for byte.
+    assert wire.dumps(wire.canonical_score(score)) == wire.dumps(score)
+    # List rows omit the score; the lifecycle shows up in the journal.
+    page = client.list_scenarios()
+    assert page["total"] >= 1
+    row = next(s for s in page["scenarios"] if s["scenario"] == sid)
+    assert row["state"] == "DONE" and "score" not in row
+    events = client.events(since=0)["events"]
+    states = [
+        e["state"] for e in events if e["kind"] == "scenario" and e["id"] == sid
+    ]
+    assert states == ["PENDING", "RUNNING", "DONE"]
+    # An invalid spec never leaves the client.
+    with pytest.raises(ValueError, match="psychic"):
+        client.run_scenario(dict(spec, policy="psychic"))
+
+
 def test_unknown_job_and_bad_payload_codes(server):
     client = ApiClient(server)
     with pytest.raises(ApiError) as e:

@@ -141,6 +141,82 @@ def test_linear_workflow_builder_chains_steps():
     assert wf["steps"][1]["after"] == ["step0"]
 
 
+def test_scenario_spec_vector_is_canonical():
+    case = load_vectors()["scenario_spec"]
+    canon = wire.canonical_scenario_spec(case["doc"])
+    assert wire.dumps(canon) == case["canon"]
+    # Defaults omitted from the doc are filled exactly as in the TOML
+    # form (the canon pins them for the Rust decoder too).
+    assert canon["tick_ms"] == 1000
+    assert canon["queue_delay_ms"] == 500
+    assert canon["machine_classes"][0]["mips"] == wire.REFERENCE_MIPS
+    assert "tiers" not in canon["machine_classes"][0]
+    assert canon["machine_classes"][1]["tiers"] == ["batch"]
+    steady, diurnal = canon["task_classes"]
+    assert steady["shape"] == "steady" and "period_ms" not in steady
+    assert diurnal["shape"] == "diurnal" and diurnal["period_ms"] > 0
+    # `seed` sits after the shape parameters in both task classes.
+    assert list(steady.keys())[-1] == "seed"
+    assert list(diurnal.keys())[-1] == "seed"
+
+
+def test_scenario_spec_canonicalization_is_idempotent():
+    case = load_vectors()["scenario_spec"]
+    once = wire.canonical_scenario_spec(case["doc"])
+    assert wire.canonical_scenario_spec(once) == once
+
+
+def test_scenario_spec_validation_mirrors_server():
+    doc = load_vectors()["scenario_spec"]["doc"]
+    bad = dict(doc, policy="psychic")
+    with pytest.raises(ValueError, match="psychic"):
+        wire.canonical_scenario_spec(bad)
+    bad = dict(doc, nodes_min=99)
+    with pytest.raises(ValueError, match="nodes_min"):
+        wire.canonical_scenario_spec(bad)
+    # A tier no machine class serves is a spec error, not a runtime one.
+    only_batch = [dict(c, tiers=["batch"]) for c in doc["machine_classes"]]
+    with pytest.raises(ValueError, match="serves tier sla0"):
+        wire.canonical_scenario_spec(dict(doc, machine_classes=only_batch))
+
+
+def test_score_vector_is_canonical():
+    case = load_vectors()["score"]
+    canon = wire.canonical_score(case["doc"])
+    assert wire.dumps(canon) == case["canon"]
+    # Tier order is fixed; a scrambled tiers array must be rejected, not
+    # silently reordered.
+    scrambled = dict(case["doc"], tiers=list(reversed(case["doc"]["tiers"])))
+    with pytest.raises(ValueError, match="tier entry 0"):
+        wire.canonical_score(scrambled)
+    # Basis-point math matches Rust integer division.
+    assert wire.violation_bp(canon, "sla0") == 0
+    assert wire.violation_bp(canon, "batch") == 1 * 10_000 // 14
+
+
+def test_scenario_vector_is_canonical():
+    case = load_vectors()["scenario"]
+    canon = wire.canonical_scenario(case["doc"])
+    assert wire.dumps(canon) == case["canon"]
+    assert canon["state"] == "DONE"
+    assert "score" in canon and "error" not in canon
+    # A non-terminal row (as returned by GET /v1/scenarios) carries no
+    # score; the optional simply disappears from the encoding.
+    pending = {k: v for k, v in case["doc"].items() if k != "score"}
+    pending["state"] = "PENDING"
+    assert "score" not in wire.canonical_scenario(pending)
+    with pytest.raises(ValueError, match="unknown scenario state"):
+        wire.canonical_scenario(dict(pending, state="EXPLODED"))
+
+
+def test_scenario_state_tokens_match_rust():
+    assert wire.SCENARIO_STATES == ("PENDING", "RUNNING", "DONE", "FAILED")
+    assert wire.is_terminal_scenario("DONE") and wire.is_terminal_scenario("FAILED")
+    assert not wire.is_terminal_scenario("RUNNING")
+    assert wire.SLA_TIERS == ("sla0", "sla1", "sla2", "batch")
+    assert wire.SCENARIO_POLICIES == ("grow_on_backlog", "sla_energy")
+
+
 def test_state_tokens_match_rust():
     assert wire.JOB_STATES == ("PEND", "RUN", "DONE", "EXIT", "KILLED")
     assert wire.is_terminal("KILLED") and wire.is_terminal("DONE")

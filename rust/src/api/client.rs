@@ -11,9 +11,10 @@
 use crate::api::http::request_with_headers;
 use crate::api::stack::AppPayload;
 use crate::api::wire::{
-    ClusterDoc, ErrorDoc, EventPage, JobDoc, JobsPage, QueueDoc, SubmitRequest, TenantDoc,
-    WorkflowDoc, WorkflowSpec,
+    scenario_spec_to_json, ClusterDoc, ErrorDoc, EventPage, JobDoc, JobsPage, QueueDoc,
+    ScenarioDoc, ScenariosPage, SubmitRequest, TenantDoc, WorkflowDoc, WorkflowSpec,
 };
+use crate::scenario::ScenarioSpec;
 use crate::codec::json::Json;
 use crate::error::{Error, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -319,6 +320,55 @@ impl ApiClient {
         String::from_utf8(resp).map_err(|_| Error::Api("non-utf8 metrics".into()))
     }
 
+    /// Submit a scenario for simulation (`POST /v1/scenarios`); returns
+    /// the scenario id. The spec is validated client-side first, so a
+    /// malformed scenario fails before it costs an admission token.
+    pub fn run_scenario(&self, spec: &ScenarioSpec) -> Result<u64> {
+        spec.validate()?;
+        let body = scenario_spec_to_json(spec).to_string();
+        let (status, resp) = self.call("POST", "/v1/scenarios", Some(body.as_bytes()))?;
+        let json = Self::check(status, &resp)?;
+        json.req_u64("scenario")
+    }
+
+    /// Scenario status snapshot (with the score once `DONE`).
+    pub fn scenario(&self, id: u64) -> Result<ScenarioDoc> {
+        let (status, resp) = self.call("GET", &format!("/v1/scenarios/{id}"), None)?;
+        ScenarioDoc::from_json(&Self::check(status, &resp)?)
+    }
+
+    /// Wait for a scenario to finish (or fail), long-polling the server.
+    pub fn wait_scenario(&self, id: u64, timeout: Duration) -> Result<ScenarioDoc> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            let slice = (left.as_millis() as u64).min(WAIT_SLICE_MS);
+            let (status, resp) = self.call(
+                "GET",
+                &format!("/v1/scenarios/{id}?wait_ms={slice}"),
+                None,
+            )?;
+            let doc = ScenarioDoc::from_json(&Self::check(status, &resp)?)?;
+            if doc.is_terminal() {
+                return Ok(doc);
+            }
+            if std::time::Instant::now() >= deadline {
+                return Err(Error::Api(format!("timeout waiting for scenario {id}")));
+            }
+        }
+    }
+
+    /// One page of the scenario list (rows omit the score; fetch one
+    /// scenario for the full document).
+    pub fn list_scenarios(&self, offset: u64, limit: u64) -> Result<ScenariosPage> {
+        let (status, resp) = self.call(
+            "GET",
+            &format!("/v1/scenarios?offset={offset}&limit={limit}"),
+            None,
+        )?;
+        ScenariosPage::from_json(&Self::check(status, &resp)?)
+    }
+
     /// Per-tenant accounting (`GET /v1/tenants`): quota usage, admission
     /// counters and circuit-breaker state.
     pub fn tenants(&self) -> Result<Vec<TenantDoc>> {
@@ -555,6 +605,51 @@ mod tests {
         assert!(err.to_string().contains("not_found"), "{err}");
         let err = client.node_action(0, "explode").unwrap_err();
         assert!(err.to_string().contains("bad_request"), "{err}");
+    }
+
+    #[test]
+    fn scenario_lifecycle_over_api() {
+        let (_server, client) = server();
+        let spec = ScenarioSpec::from_toml(include_str!(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/examples/scenarios/updown.toml"
+        )))
+        .unwrap();
+        let id = client.run_scenario(&spec).unwrap();
+        let doc = client.wait_scenario(id, Duration::from_secs(60)).unwrap();
+        assert_eq!(doc.state, crate::api::wire::ScenarioState::Done, "{:?}", doc.error);
+        assert_eq!(doc.name, "updown");
+        assert_eq!(doc.policy, "sla_energy");
+        let score = doc.score.expect("DONE carries the score");
+        assert_eq!(score.policy, "sla_energy");
+        assert!(score.ticks > 0);
+        assert!(score.energy.energy_mj > 0);
+        // List rows cover the run but omit the score.
+        let page = client.list_scenarios(0, 10).unwrap();
+        assert_eq!(page.total, 1);
+        assert_eq!(page.scenarios[0].scenario, id);
+        assert!(page.scenarios[0].score.is_none());
+        // Lifecycle transitions land in the journal.
+        let events = client.events(0, 0).unwrap();
+        for state in ["PENDING", "RUNNING", "DONE"] {
+            assert!(
+                events
+                    .events
+                    .iter()
+                    .any(|e| e.kind == "scenario" && e.id == id && e.state == state),
+                "missing scenario {state} event: {:?}",
+                events.events
+            );
+        }
+        // An invalid spec answers 400 with a stable code, runs nothing.
+        let mut bad = spec.clone();
+        bad.policy = "psychic".into();
+        let err = client.run_scenario(&bad).unwrap_err();
+        assert!(err.to_string().contains("psychic"), "{err}");
+        assert_eq!(client.list_scenarios(0, 10).unwrap().total, 1);
+        // Unknown scenario id answers not_found.
+        let err = client.scenario(99).unwrap_err();
+        assert!(err.to_string().contains("not_found"), "{err}");
     }
 
     #[test]

@@ -15,8 +15,14 @@
 //!   `{job}` (one cluster, chained stages) or, with `mode:"workflow"`,
 //!   `{workflow}` (one `query_stage` step per MR job)
 //! * `GET /v1/workflows/{id}[?wait_ms=N]` → `WorkflowDoc`
+//! * `POST /v1/scenarios` `ScenarioSpec` → `{scenario}` (validated, then
+//!   queued; the pump runs the simulation and scores it)
+//! * `GET /v1/scenarios?offset=&limit=` → `ScenariosPage` (rows omit the
+//!   score)
+//! * `GET /v1/scenarios/{id}[?wait_ms=N]` → `ScenarioDoc` (long-poll
+//!   until scored)
 //! * `GET /v1/events?since=seq[&wait_ms=N]` → `EventPage`, the monotonic
-//!   journal of job/workflow/step transitions
+//!   journal of job/workflow/step/scenario transitions
 //! * `GET /v1/metrics` → text metrics dump
 //!
 //! Unversioned legacy paths answer `301 Moved Permanently` with
@@ -32,12 +38,14 @@ use crate::api::http::{self, Request, Response, ServeStats};
 use crate::api::stack::Stack;
 use crate::api::synfiniway::WorkflowRun;
 use crate::api::wire::{
-    self, code, ErrorDoc, EventDoc, EventPage, JobDoc, JobsPage, QueueDoc, ResultDoc,
-    SubmitRequest, TenantDoc, WorkflowDoc, WorkflowSpec,
+    self, code, scenario_spec_from_json, ErrorDoc, EventDoc, EventPage, JobDoc, JobsPage,
+    QueueDoc, ResultDoc, ScenarioDoc, ScenarioState, ScenariosPage, SubmitRequest, TenantDoc,
+    WorkflowDoc, WorkflowSpec,
 };
 use crate::codec::json::Json;
 use crate::error::Error;
 use crate::metrics::Metrics;
+use crate::scenario::{Runner, ScenarioSpec, ScoreDoc};
 use crate::scheduler::JobState;
 use crate::tenant::{AdmissionError, Tenant, TenantRegistry};
 use crate::util::ids::LsfJobId;
@@ -168,10 +176,33 @@ impl EventBus {
     }
 }
 
+/// One submitted scenario and its lifecycle. The index into
+/// `State::scenarios` is the wire id.
+struct ScenarioRun {
+    spec: ScenarioSpec,
+    state: ScenarioState,
+    score: Option<ScoreDoc>,
+    error: Option<String>,
+}
+
+impl ScenarioRun {
+    fn to_doc(&self, id: u64, with_score: bool) -> ScenarioDoc {
+        ScenarioDoc {
+            scenario: id,
+            name: self.spec.name.clone(),
+            policy: self.spec.policy.clone(),
+            state: self.state,
+            score: if with_score { self.score.clone() } else { None },
+            error: self.error.clone(),
+        }
+    }
+}
+
 /// Shared server state.
 struct State {
     stack: Mutex<Stack>,
     workflows: Mutex<Vec<WorkflowRun>>,
+    scenarios: Mutex<Vec<ScenarioRun>>,
     events: EventBus,
     /// Wakes the pump on submissions / kills.
     work: Signal,
@@ -206,6 +237,7 @@ impl ApiServer {
         let state = Arc::new(State {
             stack: Mutex::new(stack),
             workflows: Mutex::new(Vec::new()),
+            scenarios: Mutex::new(Vec::new()),
             events: EventBus::new(Arc::clone(&metrics)),
             work: Signal::new(),
             metrics,
@@ -312,9 +344,54 @@ fn pump(state: Arc<State>, stop: Arc<AtomicBool>) {
             }
             stack.has_active_jobs() || wfs.iter().any(|w| !w.is_terminal())
         };
+        run_pending_scenarios(&state);
         if !active {
             work_gen = state.work.wait_past(work_gen, IDLE_TICK);
         }
+    }
+}
+
+/// Run any pending scenarios to completion. A scenario simulates its own
+/// `DynamicCluster` (bounded to 100k control ticks by spec validation),
+/// so it runs synchronously here — but OUTSIDE the stack lock, so jobs
+/// and long-pollers are never blocked behind a simulation. Lifecycle
+/// transitions land in the event journal (kind `scenario`), which wakes
+/// `GET /v1/scenarios/{id}?wait_ms=` pollers.
+fn run_pending_scenarios(state: &State) {
+    loop {
+        let (id, spec) = {
+            let mut runs = state.scenarios.lock().unwrap();
+            match runs.iter().position(|r| r.state == ScenarioState::Pending) {
+                None => return,
+                Some(i) => {
+                    runs[i].state = ScenarioState::Running;
+                    (i as u64, runs[i].spec.clone())
+                }
+            }
+        };
+        state
+            .events
+            .emit("scenario", id, ScenarioState::Running.as_wire().to_string(), None);
+        let result = Runner::run(spec);
+        let final_state = {
+            let mut runs = state.scenarios.lock().unwrap();
+            let run = &mut runs[id as usize];
+            let final_state = match result {
+                Ok(score) => {
+                    run.score = Some(score);
+                    ScenarioState::Done
+                }
+                Err(e) => {
+                    run.error = Some(e.to_string());
+                    ScenarioState::Failed
+                }
+            };
+            run.state = final_state;
+            final_state
+        };
+        state
+            .events
+            .emit("scenario", id, final_state.as_wire().to_string(), None);
     }
 }
 
@@ -353,6 +430,9 @@ fn route(state: &State, req: Request) -> Response {
         ("POST", ["v1", "workflows"]) => ("post_workflow", post_workflow(state, &req, &tenant)),
         ("POST", ["v1", "queries"]) => ("post_query", post_query(state, &req, &tenant)),
         ("GET", ["v1", "workflows", id]) => ("get_workflow", get_workflow(state, &req, id)),
+        ("POST", ["v1", "scenarios"]) => ("post_scenario", post_scenario(state, &req, &tenant)),
+        ("GET", ["v1", "scenarios"]) => ("list_scenarios", list_scenarios(state, &req)),
+        ("GET", ["v1", "scenarios", id]) => ("get_scenario", get_scenario(state, &req, id)),
         ("GET", ["v1", "cluster"]) => ("get_cluster", get_cluster(state)),
         ("POST", ["v1", "cluster", "nodes", id, action]) => {
             ("post_node_action", post_node_action(state, id, action))
@@ -777,6 +857,87 @@ fn get_workflow(state: &State, req: &Request, id: &str) -> HandlerResult {
         WorkflowDoc::is_terminal,
     )?;
     Ok(Response::json(200, doc.to_json().to_string()))
+}
+
+/// `POST /v1/scenarios`: validate the declarative spec (the same
+/// validation the runner applies — a 201 is a spec that will run) and
+/// queue it for the pump. Scenario submissions clear the same admission
+/// gate as job submissions.
+fn post_scenario(state: &State, req: &Request, tenant: &Tenant) -> HandlerResult {
+    let j = parse_body(req)?;
+    let spec = scenario_spec_from_json(&j).map_err(|e| bad_request(&e))?;
+    {
+        let stack = state.stack.lock().unwrap();
+        if let Err(e) = state.tenants.admit_submit(&tenant.name, stack.now()) {
+            return Ok(admission_response(&e));
+        }
+    }
+    let mut runs = state.scenarios.lock().unwrap();
+    let id = runs.len() as u64;
+    runs.push(ScenarioRun {
+        spec,
+        state: ScenarioState::Pending,
+        score: None,
+        error: None,
+    });
+    drop(runs);
+    state
+        .events
+        .emit("scenario", id, ScenarioState::Pending.as_wire().to_string(), None);
+    state.work.notify();
+    Ok(Response::json(
+        201,
+        Json::obj(vec![("scenario", Json::num(id as f64))]).to_string(),
+    ))
+}
+
+fn get_scenario(state: &State, req: &Request, id: &str) -> HandlerResult {
+    let idx: usize = id
+        .parse()
+        .map_err(|_| ErrorDoc::new(code::BAD_REQUEST, format!("bad scenario id '{id}'")))?;
+    let deadline = Instant::now() + Duration::from_millis(wait_ms(req));
+    let doc = long_poll(
+        state,
+        deadline,
+        || {
+            state
+                .scenarios
+                .lock()
+                .unwrap()
+                .get(idx)
+                .map(|r| r.to_doc(idx as u64, true))
+                .ok_or_else(|| ErrorDoc::not_found(format!("unknown scenario {idx}")))
+        },
+        ScenarioDoc::is_terminal,
+    )?;
+    Ok(Response::json(200, doc.to_json().to_string()))
+}
+
+fn list_scenarios(state: &State, req: &Request) -> HandlerResult {
+    let offset: u64 = req
+        .query_param("offset")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let limit: u64 = req
+        .query_param("limit")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50)
+        .clamp(1, 500);
+    let runs = state.scenarios.lock().unwrap();
+    let total = runs.len() as u64;
+    let scenarios = runs
+        .iter()
+        .enumerate()
+        .skip(offset as usize)
+        .take(limit as usize)
+        .map(|(i, r)| r.to_doc(i as u64, false))
+        .collect();
+    let page = ScenariosPage {
+        scenarios,
+        total,
+        offset,
+    };
+    Ok(Response::json(200, page.to_json().to_string()))
 }
 
 fn get_cluster(state: &State) -> HandlerResult {

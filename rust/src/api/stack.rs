@@ -383,9 +383,28 @@ impl Stack {
         }
     }
 
-    /// Storage-tier snapshot for the wire, when the DFS tiers its storage.
+    /// Storage-tier snapshot for the wire. Always present so the
+    /// `GET /v1/cluster` schema is stable across configurations: a stack
+    /// whose DFS does not tier its storage (no `HPCW_MEM_BUDGET` /
+    /// `lustre.mem_budget_bytes`) reports an all-zero doc rather than
+    /// omitting the field. (`ClusterDoc::tier` stays optional on the
+    /// wire so clients tolerate older servers.)
     fn tier_doc(&self) -> Option<TierDoc> {
-        let s = self.dfs.tier_stats()?;
+        let s = match self.dfs.tier_stats() {
+            Some(s) => s,
+            None => return Some(TierDoc {
+                mem_budget_bytes: 0,
+                resident_bytes: 0,
+                backing_bytes: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                promotions: 0,
+                writeback_bytes: 0,
+                spill_bytes: 0,
+                simulated_io_s: 0.0,
+            }),
+        };
         Some(TierDoc {
             mem_budget_bytes: s.mem_budget.unwrap_or(0),
             resident_bytes: s.resident_bytes,
@@ -875,6 +894,52 @@ mod tests {
         assert_eq!(doc.down, 1);
         assert_eq!(doc.nodes[2].state, "DRAINED");
         assert_eq!(doc.nodes[5].state, "DOWN");
+    }
+
+    #[test]
+    fn cluster_doc_tier_shape_is_stable_across_configs() {
+        // Untiered stack (no HPCW_MEM_BUDGET / lustre.mem_budget_bytes —
+        // the suite runs without the env var, as the tiered-store tests
+        // already assume): the tier doc is still present, all zeroes, so
+        // the GET /v1/cluster schema has one shape across configs.
+        let mut s = stack();
+        let doc = s.cluster_doc();
+        let tier = doc.tier.clone().expect("tier doc present without a budget");
+        assert_eq!(tier.mem_budget_bytes, 0);
+        assert_eq!(tier.resident_bytes, 0);
+        assert_eq!(tier.backing_bytes, 0);
+        assert_eq!(tier.hits + tier.misses + tier.evictions, 0);
+        assert_eq!(tier.simulated_io_s, 0.0);
+        // The zeroed shape survives the wire.
+        let back = ClusterDoc::from_json(
+            &crate::codec::json::Json::parse(&doc.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.tier.unwrap(), tier);
+
+        // Tiered stack: the same field carries the real stats.
+        let mut cfg = StackConfig::tiny();
+        cfg.lustre.mem_budget_bytes = 1 << 20;
+        let mut s = Stack::new(cfg).unwrap();
+        let id = s
+            .submit(
+                2,
+                "tier",
+                AppPayload::Teragen {
+                    rows: 200,
+                    maps: 1,
+                    dir: "/lustre/scratch/tier-shape".into(),
+                },
+            )
+            .unwrap();
+        s.run_to_completion(id, 10).unwrap();
+        let doc = s.cluster_doc();
+        let tier = doc.tier.expect("tier doc present with a budget");
+        assert_eq!(tier.mem_budget_bytes, 1 << 20);
+        assert!(
+            tier.resident_bytes + tier.backing_bytes > 0,
+            "a completed teragen leaves bytes in the store: {tier:?}"
+        );
     }
 
     #[test]

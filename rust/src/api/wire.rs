@@ -21,6 +21,10 @@ use crate::codec::json::Json;
 use crate::error::{Error, Result};
 use crate::frameworks::expr::Schema;
 use crate::frameworks::plan::{AggSpec, Aggregate, StageKind, StageSpec};
+use crate::scenario::score::{EnergyScore, ScoreDoc, TierScore};
+use crate::scenario::spec::{
+    LoadShape, MachineClass, ScenarioSpec, SlaTier, TaskClass, REFERENCE_MIPS, TIERS,
+};
 use crate::scheduler::JobState;
 
 /// The protocol version segment every route is mounted under.
@@ -1485,6 +1489,379 @@ impl EventPage {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Scenarios
+// ---------------------------------------------------------------------------
+
+/// Lifecycle of a submitted scenario (`POST /v1/scenarios`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioState {
+    Pending,
+    Running,
+    Done,
+    Failed,
+}
+
+impl ScenarioState {
+    pub fn as_wire(self) -> &'static str {
+        match self {
+            ScenarioState::Pending => "PENDING",
+            ScenarioState::Running => "RUNNING",
+            ScenarioState::Done => "DONE",
+            ScenarioState::Failed => "FAILED",
+        }
+    }
+
+    pub fn from_wire(s: &str) -> Result<ScenarioState> {
+        match s {
+            "PENDING" => Ok(ScenarioState::Pending),
+            "RUNNING" => Ok(ScenarioState::Running),
+            "DONE" => Ok(ScenarioState::Done),
+            "FAILED" => Ok(ScenarioState::Failed),
+            other => Err(Error::Codec(format!("unknown scenario state '{other}'"))),
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, ScenarioState::Done | ScenarioState::Failed)
+    }
+}
+
+fn tiers_to_json(tiers: &[SlaTier]) -> Json {
+    Json::Arr(tiers.iter().map(|t| Json::str(t.name())).collect())
+}
+
+fn machine_class_to_json(c: &MachineClass) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(&*c.name)),
+        ("count", Json::num(c.count as f64)),
+        ("cores", Json::num(c.cores as f64)),
+        ("mem_mb", Json::num(c.mem_mb as f64)),
+        ("mips", Json::num(c.mips as f64)),
+        ("active_w", Json::num(c.active_w as f64)),
+        ("idle_w", Json::num(c.idle_w as f64)),
+        ("sleep_w", Json::num(c.sleep_w as f64)),
+        ("wake_ms", Json::num(c.wake_ms as f64)),
+    ];
+    if !c.tiers.is_empty() {
+        fields.push(("tiers", tiers_to_json(&c.tiers)));
+    }
+    Json::obj(fields)
+}
+
+fn machine_class_from_json(j: &Json) -> Result<MachineClass> {
+    let tiers = match j.get("tiers") {
+        None => Vec::new(),
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| Error::Codec("machine class: tiers must be an array".into()))?
+            .iter()
+            .map(|t| {
+                t.as_str()
+                    .ok_or_else(|| Error::Codec("machine class: tiers must be strings".into()))
+                    .and_then(SlaTier::from_name)
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    Ok(MachineClass {
+        name: j.req_str("name")?.to_string(),
+        count: j.req_u64("count")? as u32,
+        cores: j.req_u64("cores")? as u32,
+        mem_mb: j.req_u64("mem_mb")?,
+        mips: j.get("mips").and_then(Json::as_u64).unwrap_or(REFERENCE_MIPS),
+        active_w: j.get("active_w").and_then(Json::as_u64).unwrap_or(200),
+        idle_w: j.get("idle_w").and_then(Json::as_u64).unwrap_or(100),
+        sleep_w: j.get("sleep_w").and_then(Json::as_u64).unwrap_or(10),
+        wake_ms: j.get("wake_ms").and_then(Json::as_u64).unwrap_or(0),
+        tiers,
+    })
+}
+
+fn task_class_to_json(t: &TaskClass) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(&*t.name)),
+        ("tier", Json::str(t.tier.name())),
+        ("start_ms", Json::num(t.start_ms as f64)),
+        ("end_ms", Json::num(t.end_ms as f64)),
+        ("inter_arrival_ms", Json::num(t.inter_arrival_ms as f64)),
+        ("runtime_ms", Json::num(t.runtime_ms as f64)),
+        ("mem_mb", Json::num(t.mem_mb as f64)),
+        ("shape", Json::str(t.shape.name())),
+    ];
+    if let LoadShape::Diurnal { period_ms, duty_pct } = t.shape {
+        fields.push(("period_ms", Json::num(period_ms as f64)));
+        fields.push(("duty_pct", Json::num(duty_pct as f64)));
+    }
+    fields.push(("seed", Json::num(t.seed as f64)));
+    Json::obj(fields)
+}
+
+fn task_class_from_json(j: &Json, duration_ms: u64) -> Result<TaskClass> {
+    let shape = match j.get("shape").and_then(Json::as_str).unwrap_or("steady") {
+        "steady" => LoadShape::Steady,
+        "diurnal" => LoadShape::Diurnal {
+            period_ms: j.req_u64("period_ms")?,
+            duty_pct: j.req_u64("duty_pct")?,
+        },
+        other => {
+            return Err(Error::Codec(format!(
+                "task class: unknown shape '{other}' (steady|diurnal)"
+            )))
+        }
+    };
+    Ok(TaskClass {
+        name: j.req_str("name")?.to_string(),
+        tier: SlaTier::from_name(j.req_str("tier")?)?,
+        start_ms: j.get("start_ms").and_then(Json::as_u64).unwrap_or(0),
+        end_ms: j.get("end_ms").and_then(Json::as_u64).unwrap_or(duration_ms),
+        inter_arrival_ms: j.req_u64("inter_arrival_ms")?,
+        runtime_ms: j.req_u64("runtime_ms")?,
+        mem_mb: j.get("mem_mb").and_then(Json::as_u64).unwrap_or(1024),
+        shape,
+        seed: j.get("seed").and_then(Json::as_u64).unwrap_or(0),
+    })
+}
+
+/// Canonical JSON form of a [`ScenarioSpec`] (`POST /v1/scenarios` body).
+/// Field presence mirrors the TOML form: `tiers` appears only when the
+/// class restricts its tiers, `period_ms`/`duty_pct` only on diurnal
+/// shapes; everything else is always present.
+pub fn scenario_spec_to_json(s: &ScenarioSpec) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&*s.name)),
+        ("duration_ms", Json::num(s.duration_ms as f64)),
+        ("tick_ms", Json::num(s.tick_ms as f64)),
+        ("seed", Json::num(s.seed as f64)),
+        ("policy", Json::str(&*s.policy)),
+        ("warm_spares", Json::num(s.warm_spares as f64)),
+        (
+            "batch_backlog_per_node",
+            Json::num(s.batch_backlog_per_node as f64),
+        ),
+        ("nodes_min", Json::num(s.nodes_min as f64)),
+        ("nodes_max", Json::num(s.nodes_max as f64)),
+        ("queue_delay_ms", Json::num(s.queue_delay_ms as f64)),
+        (
+            "machine_classes",
+            Json::Arr(s.machine_classes.iter().map(machine_class_to_json).collect()),
+        ),
+        (
+            "task_classes",
+            Json::Arr(s.task_classes.iter().map(task_class_to_json).collect()),
+        ),
+    ])
+}
+
+/// Decode and validate a scenario spec. Optional fields default exactly
+/// as in the TOML form, then [`ScenarioSpec::validate`] runs, so a spec
+/// accepted here is a spec the runner will accept.
+pub fn scenario_spec_from_json(j: &Json) -> Result<ScenarioSpec> {
+    let duration_ms = j.req_u64("duration_ms")?;
+    let machine_classes = j
+        .get("machine_classes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Codec("missing array 'machine_classes'".into()))?
+        .iter()
+        .map(machine_class_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    let task_classes = j
+        .get("task_classes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Codec("missing array 'task_classes'".into()))?
+        .iter()
+        .map(|t| task_class_from_json(t, duration_ms))
+        .collect::<Result<Vec<_>>>()?;
+    let spec = ScenarioSpec {
+        name: j.req_str("name")?.to_string(),
+        duration_ms,
+        tick_ms: j.get("tick_ms").and_then(Json::as_u64).unwrap_or(1_000),
+        seed: j.get("seed").and_then(Json::as_u64).unwrap_or(0),
+        policy: j
+            .get("policy")
+            .and_then(Json::as_str)
+            .unwrap_or("grow_on_backlog")
+            .to_string(),
+        warm_spares: j.get("warm_spares").and_then(Json::as_u64).unwrap_or(1) as u32,
+        batch_backlog_per_node: j
+            .get("batch_backlog_per_node")
+            .and_then(Json::as_u64)
+            .unwrap_or(4) as u32,
+        nodes_min: j.req_u64("nodes_min")? as u32,
+        nodes_max: j.req_u64("nodes_max")? as u32,
+        queue_delay_ms: j.get("queue_delay_ms").and_then(Json::as_u64).unwrap_or(500),
+        machine_classes,
+        task_classes,
+    };
+    spec.validate().map_err(|e| Error::Codec(e.to_string()))?;
+    Ok(spec)
+}
+
+/// Canonical JSON form of a [`ScoreDoc`]: per-tier violation accounting
+/// in [`TIERS`] order, the energy integral, and provisioning counters.
+/// All integers — byte-stable across languages.
+pub fn score_doc_to_json(s: &ScoreDoc) -> Json {
+    let tiers = TIERS
+        .iter()
+        .zip(s.tiers.iter())
+        .map(|(tier, t)| {
+            Json::obj(vec![
+                ("tier", Json::str(tier.name())),
+                ("tasks", Json::num(t.tasks as f64)),
+                ("violations", Json::num(t.violations as f64)),
+            ])
+        })
+        .collect();
+    let energy = Json::obj(vec![
+        ("node_ms", Json::num(s.energy.node_ms as f64)),
+        ("busy_core_ms", Json::num(s.energy.busy_core_ms as f64)),
+        ("idle_node_ms", Json::num(s.energy.idle_node_ms as f64)),
+        ("wakeups", Json::num(s.energy.wakeups as f64)),
+        ("wake_ms", Json::num(s.energy.wake_ms as f64)),
+        ("energy_mj", Json::num(s.energy.energy_mj as f64)),
+    ]);
+    Json::obj(vec![
+        ("scenario", Json::str(&*s.scenario)),
+        ("policy", Json::str(&*s.policy)),
+        ("duration_ms", Json::num(s.duration_ms as f64)),
+        ("ticks", Json::num(s.ticks as f64)),
+        ("tiers", Json::Arr(tiers)),
+        ("energy", energy),
+        ("peak_nodes", Json::num(s.peak_nodes as f64)),
+        ("grants", Json::num(s.grants as f64)),
+        ("drains", Json::num(s.drains as f64)),
+    ])
+}
+
+pub fn score_doc_from_json(j: &Json) -> Result<ScoreDoc> {
+    let tier_arr = j
+        .get("tiers")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Codec("missing array 'tiers'".into()))?;
+    if tier_arr.len() != TIERS.len() {
+        return Err(Error::Codec(format!(
+            "score: expected {} tier entries, got {}",
+            TIERS.len(),
+            tier_arr.len()
+        )));
+    }
+    let mut tiers = [TierScore::default(); 4];
+    for (slot, (tier, t)) in TIERS.iter().zip(tier_arr.iter()).enumerate() {
+        if t.req_str("tier")? != tier.name() {
+            return Err(Error::Codec(format!(
+                "score: tier entry {slot} must be '{}'",
+                tier.name()
+            )));
+        }
+        tiers[slot] = TierScore {
+            tasks: t.req_u64("tasks")?,
+            violations: t.req_u64("violations")?,
+        };
+    }
+    let e = j
+        .get("energy")
+        .ok_or_else(|| Error::Codec("missing object 'energy'".into()))?;
+    Ok(ScoreDoc {
+        scenario: j.req_str("scenario")?.to_string(),
+        policy: j.req_str("policy")?.to_string(),
+        duration_ms: j.req_u64("duration_ms")?,
+        ticks: j.req_u64("ticks")?,
+        tiers,
+        energy: EnergyScore {
+            node_ms: e.req_u64("node_ms")?,
+            busy_core_ms: e.req_u64("busy_core_ms")?,
+            idle_node_ms: e.req_u64("idle_node_ms")?,
+            wakeups: e.req_u64("wakeups")?,
+            wake_ms: e.req_u64("wake_ms")?,
+            energy_mj: e.req_u64("energy_mj")?,
+        },
+        peak_nodes: j.req_u64("peak_nodes")? as u32,
+        grants: j.req_u64("grants")?,
+        drains: j.req_u64("drains")?,
+    })
+}
+
+/// `GET /v1/scenarios/{id}` response. `score` appears once the run is
+/// `DONE`; `error` once it is `FAILED`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioDoc {
+    pub scenario: u64,
+    pub name: String,
+    pub policy: String,
+    pub state: ScenarioState,
+    pub score: Option<ScoreDoc>,
+    pub error: Option<String>,
+}
+
+impl ScenarioDoc {
+    pub fn is_terminal(&self) -> bool {
+        self.state.is_terminal()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("scenario", Json::num(self.scenario as f64)),
+            ("name", Json::str(&*self.name)),
+            ("policy", Json::str(&*self.policy)),
+            ("state", Json::str(self.state.as_wire())),
+        ];
+        if let Some(s) = &self.score {
+            fields.push(("score", score_doc_to_json(s)));
+        }
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::str(&**e)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ScenarioDoc> {
+        Ok(ScenarioDoc {
+            scenario: j.req_u64("scenario")?,
+            name: j.req_str("name")?.to_string(),
+            policy: j.req_str("policy")?.to_string(),
+            state: ScenarioState::from_wire(j.req_str("state")?)?,
+            score: j.get("score").map(score_doc_from_json).transpose()?,
+            error: j.get("error").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+}
+
+/// `GET /v1/scenarios` response. List rows omit `score` (fetch one
+/// scenario for the full document), so pages stay small.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenariosPage {
+    pub scenarios: Vec<ScenarioDoc>,
+    pub total: u64,
+    pub offset: u64,
+}
+
+impl ScenariosPage {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "scenarios",
+                Json::Arr(self.scenarios.iter().map(ScenarioDoc::to_json).collect()),
+            ),
+            ("total", Json::num(self.total as f64)),
+            ("offset", Json::num(self.offset as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ScenariosPage> {
+        let scenarios = j
+            .get("scenarios")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Codec("missing array 'scenarios'".into()))?
+            .iter()
+            .map(ScenarioDoc::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ScenariosPage {
+            scenarios,
+            total: j.req_u64("total")?,
+            offset: j.req_u64("offset")?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1967,6 +2344,234 @@ mod tests {
         assert!(resolve_output_path(root, "/lustre/data/lsf-7/tera-out/../x").is_err());
     }
 
+    fn arb_machine_class(g: &mut Gen, i: usize, serve_all: bool) -> MachineClass {
+        MachineClass {
+            name: format!("mc{i}"),
+            count: g.u32(1..8),
+            cores: g.u32(1..8),
+            mem_mb: g.u64(1024..32_768),
+            mips: g.u64(400..2_400),
+            active_w: g.u64(100..400),
+            idle_w: g.u64(20..100),
+            sleep_w: g.u64(1..20),
+            wake_ms: g.u64(0..10_000),
+            tiers: if serve_all || g.chance(0.5) {
+                Vec::new()
+            } else {
+                vec![SlaTier::Batch]
+            },
+        }
+    }
+
+    fn arb_task_class(g: &mut Gen, i: usize, duration_ms: u64) -> TaskClass {
+        let start_ms = g.u64(0..duration_ms / 2 + 1);
+        TaskClass {
+            name: format!("tc{i}"),
+            tier: g.pick(&[SlaTier::Sla0, SlaTier::Sla1, SlaTier::Sla2, SlaTier::Batch]),
+            start_ms,
+            end_ms: start_ms + g.u64(1..duration_ms + 1),
+            inter_arrival_ms: g.u64(1..5_000),
+            runtime_ms: g.u64(1..20_000),
+            mem_mb: g.u64(128..8_192),
+            shape: if g.chance(0.4) {
+                LoadShape::Diurnal {
+                    period_ms: g.u64(1..duration_ms + 1),
+                    duty_pct: g.u64(1..101),
+                }
+            } else {
+                LoadShape::Steady
+            },
+            seed: g.u64(0..1_000),
+        }
+    }
+
+    fn arb_scenario_spec(g: &mut Gen) -> ScenarioSpec {
+        let duration_ms = g.u64(1_000..200_000);
+        // First class serves every tier so any generated task class
+        // passes the "some class serves this tier" validation.
+        let machine_classes: Vec<MachineClass> = (0..g.usize(1..4))
+            .map(|i| arb_machine_class(g, i, i == 0))
+            .collect();
+        let total: u32 = machine_classes.iter().map(|c| c.count).sum();
+        let nodes_min = g.u32(1..total + 1);
+        let spec = ScenarioSpec {
+            name: g.ident(8),
+            duration_ms,
+            tick_ms: g.u64(duration_ms / 50_000 + 1..5_000),
+            seed: g.u64(0..1_000),
+            policy: g.pick(&["grow_on_backlog", "sla_energy"]).to_string(),
+            warm_spares: g.u32(0..8),
+            batch_backlog_per_node: g.u32(1..16),
+            nodes_min,
+            nodes_max: g.u32(nodes_min..total + 8),
+            queue_delay_ms: g.u64(0..10_000),
+            machine_classes,
+            task_classes: (0..g.usize(1..4))
+                .map(|i| arb_task_class(g, i, duration_ms))
+                .collect(),
+        };
+        spec.validate().unwrap();
+        spec
+    }
+
+    fn arb_score_doc(g: &mut Gen) -> ScoreDoc {
+        let mut tiers = [TierScore::default(); 4];
+        for t in tiers.iter_mut() {
+            t.tasks = g.u64(0..100_000);
+            t.violations = g.u64(0..t.tasks + 1);
+        }
+        ScoreDoc {
+            scenario: g.ident(8),
+            policy: g.pick(&["grow_on_backlog", "sla_energy"]).to_string(),
+            duration_ms: g.u64(1..1 << 30),
+            ticks: g.u64(1..100_000),
+            tiers,
+            energy: EnergyScore {
+                node_ms: g.u64(0..1 << 40),
+                busy_core_ms: g.u64(0..1 << 40),
+                idle_node_ms: g.u64(0..1 << 40),
+                wakeups: g.u64(0..10_000),
+                wake_ms: g.u64(0..1 << 30),
+                energy_mj: g.u64(0..1 << 45),
+            },
+            peak_nodes: g.u32(0..10_000),
+            grants: g.u64(0..100_000),
+            drains: g.u64(0..100_000),
+        }
+    }
+
+    /// The scenario acceptance property: any valid spec survives the
+    /// wire byte-for-byte, including tier restrictions and load shapes.
+    #[test]
+    fn prop_scenario_spec_round_trip() {
+        props(200, |g| {
+            let spec = arb_scenario_spec(g);
+            let back =
+                scenario_spec_from_json(&Json::parse(&scenario_spec_to_json(&spec).to_string()).unwrap())
+                    .unwrap();
+            assert_eq!(spec, back);
+        });
+    }
+
+    #[test]
+    fn prop_score_doc_round_trip() {
+        props(200, |g| {
+            let score = arb_score_doc(g);
+            let back =
+                score_doc_from_json(&Json::parse(&score_doc_to_json(&score).to_string()).unwrap())
+                    .unwrap();
+            assert_eq!(score, back);
+        });
+    }
+
+    #[test]
+    fn prop_scenario_doc_round_trip() {
+        props(150, |g| {
+            let state = g.pick(&[
+                ScenarioState::Pending,
+                ScenarioState::Running,
+                ScenarioState::Done,
+                ScenarioState::Failed,
+            ]);
+            let doc = ScenarioDoc {
+                scenario: g.u64(1..10_000),
+                name: g.ident(8),
+                policy: g.pick(&["grow_on_backlog", "sla_energy"]).to_string(),
+                state,
+                score: (state == ScenarioState::Done).then(|| arb_score_doc(g)),
+                error: (state == ScenarioState::Failed).then(|| g.ident(12)),
+            };
+            let back =
+                ScenarioDoc::from_json(&Json::parse(&doc.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(doc, back);
+        });
+    }
+
+    #[test]
+    fn prop_scenarios_page_round_trip() {
+        props(100, |g| {
+            let page = ScenariosPage {
+                scenarios: g.vec(0..5, |g| ScenarioDoc {
+                    scenario: g.u64(1..10_000),
+                    name: g.ident(6),
+                    policy: "sla_energy".to_string(),
+                    state: g.pick(&[
+                        ScenarioState::Pending,
+                        ScenarioState::Running,
+                        ScenarioState::Done,
+                        ScenarioState::Failed,
+                    ]),
+                    score: None,
+                    error: None,
+                }),
+                total: g.u64(0..10_000),
+                offset: g.u64(0..10_000),
+            };
+            let back =
+                ScenariosPage::from_json(&Json::parse(&page.to_json().to_string()).unwrap())
+                    .unwrap();
+            assert_eq!(page, back);
+        });
+    }
+
+    #[test]
+    fn scenario_states_cross_the_wire_exactly() {
+        for s in [
+            ScenarioState::Pending,
+            ScenarioState::Running,
+            ScenarioState::Done,
+            ScenarioState::Failed,
+        ] {
+            assert_eq!(ScenarioState::from_wire(s.as_wire()).unwrap(), s);
+        }
+        assert!(ScenarioState::from_wire("DONEish").is_err());
+        assert!(!ScenarioState::Running.is_terminal());
+        assert!(ScenarioState::Failed.is_terminal());
+    }
+
+    /// The TOML and JSON forms describe the same spec: parsing the
+    /// shipped example TOML and round-tripping it through the wire form
+    /// yields an identical `ScenarioSpec`.
+    #[test]
+    fn scenario_toml_and_json_forms_agree() {
+        for text in [
+            include_str!(concat!(
+                env!("CARGO_MANIFEST_DIR"),
+                "/examples/scenarios/spike.toml"
+            )),
+            include_str!(concat!(
+                env!("CARGO_MANIFEST_DIR"),
+                "/examples/scenarios/updown.toml"
+            )),
+        ] {
+            let spec = ScenarioSpec::from_toml(text).unwrap();
+            let back = scenario_spec_from_json(
+                &Json::parse(&scenario_spec_to_json(&spec).to_string()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(spec, back);
+        }
+    }
+
+    #[test]
+    fn scenario_spec_from_json_rejects_invalid_specs() {
+        props(20, |g| {
+            let spec = arb_scenario_spec(g);
+            let mut j = scenario_spec_to_json(&spec);
+            // Valid as emitted.
+            scenario_spec_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            // Unknown policy is rejected by the embedded validate().
+            if let Json::Obj(fields) = &mut j {
+                for (k, v) in fields.iter_mut() {
+                    if k == "policy" {
+                        *v = Json::str("psychic");
+                    }
+                }
+            }
+            assert!(scenario_spec_from_json(&Json::parse(&j.to_string()).unwrap()).is_err());
+        });
+    }
+
     /// The Python conformance suite replays the same vectors
     /// (`python/tests/vectors.json`): every `doc` must re-serialize to the
     /// byte-identical `canon` string in both languages.
@@ -2012,5 +2617,23 @@ mod tests {
             assert_eq!(typed.to_json().to_string(), canon);
             assert_eq!(typed.http_status(), 429);
         }
+        let spec = vectors.get("scenario_spec").unwrap();
+        let typed = scenario_spec_from_json(spec.get("doc").unwrap()).unwrap();
+        assert_eq!(
+            scenario_spec_to_json(&typed).to_string(),
+            spec.get("canon").unwrap().as_str().unwrap()
+        );
+        let score = vectors.get("score").unwrap();
+        let typed = score_doc_from_json(score.get("doc").unwrap()).unwrap();
+        assert_eq!(
+            score_doc_to_json(&typed).to_string(),
+            score.get("canon").unwrap().as_str().unwrap()
+        );
+        let scen = vectors.get("scenario").unwrap();
+        let typed = ScenarioDoc::from_json(scen.get("doc").unwrap()).unwrap();
+        assert_eq!(
+            typed.to_json().to_string(),
+            scen.get("canon").unwrap().as_str().unwrap()
+        );
     }
 }

@@ -18,14 +18,21 @@
 //!   a running server's job list over the v1 wire protocol.
 //! * `hpcw events --addr HOST:PORT [--since SEQ] [--wait-ms N]` — tail a
 //!   running server's event journal.
+//! * `hpcw scenario run --file SPEC.toml [--policy P] [--json]
+//!   [--addr HOST:PORT]` — run a declarative autoscaling scenario
+//!   (in-process, or through a server's `/v1/scenarios`) and print the
+//!   score.
+//! * `hpcw scenario get --addr HOST:PORT --id N` — fetch a submitted
+//!   scenario's state and score.
 
 pub mod args;
 
 use crate::api::{ApiClient, ApiServer, AppPayload, Stack};
-use crate::api::wire::job_state_to_wire;
+use crate::api::wire::{job_state_to_wire, score_doc_to_json};
 use crate::bench;
 use crate::config::StackConfig;
 use crate::error::{Error, Result};
+use crate::scenario::{Runner, ScenarioSpec, ScoreDoc};
 use crate::wrapper::sim::simulate_wrapper;
 use args::Args;
 
@@ -58,6 +65,16 @@ fn load_config(args: &Args) -> Result<StackConfig> {
 }
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
+    // `hpcw scenario <run|get>` carries a sub-subcommand; strip the
+    // leading "scenario" so the one-positional argv parser sees run/get.
+    if argv.first().map(String::as_str) == Some("scenario") {
+        let args = Args::parse(argv[1..].to_vec())?;
+        return match args.command.as_deref() {
+            Some("run") => cmd_scenario_run(&args),
+            Some("get") => cmd_scenario_get(&args),
+            _ => Err(Error::Api(format!("scenario needs run|get\n{USAGE}"))),
+        };
+    }
     let args = Args::parse(argv)?;
     match args.command.as_deref() {
         Some("figures") => cmd_figures(&args),
@@ -79,7 +96,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: hpcw <figures|terasort|pig|hive|query|wrapper|serve|jobs|events|tenants|queues> [options]
+const USAGE: &str = "usage: hpcw <figures|terasort|pig|hive|query|wrapper|serve|jobs|events|tenants|queues|scenario> [options]
   figures   [--reps N] [--jobs N]           regenerate paper figures (sim)
   terasort  --rows N [--nodes N] [--maps N] [--reduces N] [--kernel] [--tiny]
   pig       --file SCRIPT [--reduces N] [--tiny]
@@ -93,7 +110,11 @@ const USAGE: &str = "usage: hpcw <figures|terasort|pig|hive|query|wrapper|serve|
   events    --addr HOST:PORT [--since SEQ] [--wait-ms N] tail the event journal
   tenants   --addr HOST:PORT [--key KEY]   per-tenant quota/limiter/breaker state
   queues    --addr HOST:PORT [--key KEY]   fair-share queue shares + wait times
-  (jobs/events/tenants/queues accept --key KEY to authenticate as a tenant)";
+  scenario  run --file SPEC.toml [--policy P] [--json] [--addr HOST:PORT]
+            run a declarative autoscaling scenario (see docs/SCENARIOS.md);
+            in-process by default, via POST /v1/scenarios with --addr
+  scenario  get --addr HOST:PORT --id N    fetch a scenario's state + score
+  (jobs/events/tenants/queues/scenario accept --key KEY to authenticate as a tenant)";
 
 fn cmd_figures(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
@@ -331,6 +352,74 @@ fn cmd_queues(args: &Args) -> Result<()> {
             q.preemptions,
             q.wait_us
         );
+    }
+    Ok(())
+}
+
+/// `hpcw scenario run`: parse the declarative TOML spec and run it
+/// in-process (the CI path — no server needed), or, with `--addr`,
+/// submit it to a running server over `POST /v1/scenarios` and wait for
+/// the score. `--policy` overrides the spec's autoscaling policy so one
+/// spec file drives an A/B comparison; `--json` prints the canonical
+/// wire-form score (machine-readable) instead of the one-line summary.
+fn cmd_scenario_run(args: &Args) -> Result<()> {
+    let path = args
+        .opt("file")
+        .ok_or_else(|| Error::Api("scenario run needs --file SPEC.toml".into()))?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| Error::Api(format!("read {path}: {e}")))?;
+    let mut spec = ScenarioSpec::from_toml(&text)?;
+    if let Some(p) = args.opt("policy") {
+        spec.policy = p;
+        spec.validate()?;
+    }
+    if args.opt("addr").is_some() {
+        let client = client_for(args)?;
+        let id = client.run_scenario(&spec)?;
+        eprintln!("submitted scenario {id}");
+        let doc = client.wait_scenario(id, std::time::Duration::from_secs(600))?;
+        return match doc.score {
+            Some(score) => {
+                print_score(&score, args.flag("json"));
+                Ok(())
+            }
+            None => Err(Error::Api(format!(
+                "scenario {id} failed: {}",
+                doc.error.unwrap_or_default()
+            ))),
+        };
+    }
+    let score = Runner::run(spec)?;
+    print_score(&score, args.flag("json"));
+    Ok(())
+}
+
+fn print_score(score: &ScoreDoc, json: bool) {
+    if json {
+        println!("{}", score_doc_to_json(score).to_string());
+    } else {
+        println!("{}", score.summary());
+    }
+}
+
+fn cmd_scenario_get(args: &Args) -> Result<()> {
+    let client = client_for(args)?;
+    let id = args
+        .num("id")
+        .ok_or_else(|| Error::Api("scenario get needs --id N".into()))?;
+    let doc = client.scenario(id)?;
+    println!(
+        "scenario {} '{}' [{}] {}",
+        doc.scenario,
+        doc.name,
+        doc.policy,
+        doc.state.as_wire()
+    );
+    if let Some(score) = &doc.score {
+        println!("{}", score.summary());
+    }
+    if let Some(err) = &doc.error {
+        println!("error: {err}");
     }
     Ok(())
 }

@@ -9,6 +9,16 @@
 //! live [`DynamicCluster`] against it: grow on backlog, drain-and-release
 //! on idle or lease expiry, and turn missed NM heartbeats into
 //! `node_failed` recoveries.
+//!
+//! Autoscaling is a pluggable [`ScalePolicy`]: the historical
+//! grow-on-backlog heuristic ([`GrowOnBacklogPolicy`], the default) and an
+//! SLA/energy-aware policy ([`SlaEnergyPolicy`]) that scales interactive
+//! tiers 1:1 immediately, tolerates batch queue depth, keeps warm spare
+//! capacity while an SLA0 window is open, and powers down batch-only
+//! machine classes first. Policies only *propose* a [`ScaleDecision`];
+//! [`ClusterManager::tick_with`] enforces the structural invariants
+//! (`nodes_min` floor, `nodes_max` ceiling, only idle leased nodes drain)
+//! for every policy.
 
 use crate::cluster::NodeId;
 use crate::config::ElasticConfig;
@@ -169,6 +179,222 @@ impl ClusterDelta {
     }
 }
 
+/// Queued work split by SLA tier, the demand half of a [`ScaleSignal`].
+/// The legacy `tick(backlog)` path reports everything as batch; the
+/// scenario runner reports real per-tier queue depths.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TierBacklog {
+    pub sla0: u32,
+    pub sla1: u32,
+    pub sla2: u32,
+    pub batch: u32,
+}
+
+impl TierBacklog {
+    /// All demand in the batch tier (how the MR engine's map+reduce
+    /// backlog enters the policy layer).
+    pub fn batch_only(n: u32) -> TierBacklog {
+        TierBacklog {
+            batch: n,
+            ..TierBacklog::default()
+        }
+    }
+
+    pub fn total(&self) -> u32 {
+        self.sla0 + self.sla1 + self.sla2 + self.batch
+    }
+
+    /// Demand from the interactive (deadline-bearing) tiers.
+    pub fn sla_total(&self) -> u32 {
+        self.sla0 + self.sla1 + self.sla2
+    }
+}
+
+/// Cluster state snapshot a [`ScalePolicy`] decides from.
+#[derive(Debug)]
+pub struct ScaleSignal<'a> {
+    /// Live NodeManagers.
+    pub nms: u32,
+    /// Nodes already requested and still owed by the batch queue.
+    pub pending: u32,
+    pub backlog: TierBacklog,
+    /// An SLA0 task class is inside (or entering) its arrival window —
+    /// warm-capacity policies hold spares open while this is true.
+    pub sla0_window_open: bool,
+    /// Admitted nodes still inside their wake-up latency: provisioned
+    /// capacity that cannot take work yet. The legacy path reports 0;
+    /// the scenario runner reports real wake states so warm-capacity
+    /// policies do not re-request spares that are already on the way.
+    pub waking: u32,
+    /// Pilot-leased nodes with no containers and no runner-reported work,
+    /// in ascending node-id order: the only legal drain victims.
+    pub idle_leased: &'a [NodeId],
+    pub nodes_min: u32,
+    pub nodes_max: u32,
+    pub now: Micros,
+}
+
+/// What a policy wants done this tick. `grow` asks the batch scheduler
+/// for that many more nodes; `drain` lists victims in preference order.
+/// Both are clamped by [`ClusterManager::tick_with`]: growth never
+/// exceeds `nodes_max`, drains never dip below `nodes_min`, and victims
+/// that are busy or unleased are skipped.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ScaleDecision {
+    pub grow: u32,
+    pub drain: Vec<NodeId>,
+}
+
+/// An autoscaling policy: a pure function from signal to decision.
+/// Implementations must be deterministic — same signal, same decision —
+/// so scenario scores are reproducible.
+pub trait ScalePolicy: Send {
+    fn name(&self) -> &'static str;
+    fn decide(&self, sig: &ScaleSignal) -> ScaleDecision;
+}
+
+/// The historical heuristic (and the default): grow 1:1 with total
+/// backlog, drain one idle node per tick when the backlog is empty.
+/// Reproduces the pre-policy `tick` decision chain exactly.
+#[derive(Debug, Default, Clone)]
+pub struct GrowOnBacklogPolicy;
+
+impl ScalePolicy for GrowOnBacklogPolicy {
+    fn name(&self) -> &'static str {
+        "grow_on_backlog"
+    }
+
+    fn decide(&self, sig: &ScaleSignal) -> ScaleDecision {
+        let mut d = ScaleDecision::default();
+        let backlog = sig.backlog.total();
+        if sig.nms + sig.pending < sig.nodes_min {
+            // Below the floor (a failure shrank us): request replacements.
+            d.grow = sig.nodes_min - sig.nms - sig.pending;
+        } else if backlog > sig.pending && sig.nms < sig.nodes_max {
+            d.grow = backlog - sig.pending;
+        } else if backlog == 0 && sig.nms > sig.nodes_min {
+            // Drain the highest-id idle leased node (joined last,
+            // shortest remaining walltime), one per tick.
+            if let Some(&node) = sig.idle_leased.last() {
+                d.drain.push(node);
+            }
+        }
+        d
+    }
+}
+
+/// SLA/energy-aware autoscaling:
+///
+/// * interactive backlog (SLA0–SLA2) grows the cluster 1:1 immediately;
+/// * batch backlog is queue-tolerant — it grows one node per tick, and
+///   only once depth exceeds `batch_backlog_per_node ×` live nodes;
+/// * while an SLA0 arrival window is open, total provisioned capacity
+///   is held at `nodes_min + warm_spares` — grown proactively ahead of
+///   the window — so a spike never waits on batch-queue + wake-up
+///   latency;
+/// * on idle, every surplus node drains in one tick (not one per tick),
+///   **batch-only machine classes first**, then highest id first.
+///
+/// Warm capacity deterministically wins over drain-on-idle: batch-only
+/// idles always drain, the spare set is always the `warm_spares`
+/// lowest-id SLA-capable idle nodes, and only the rest are victims.
+#[derive(Debug, Default, Clone)]
+pub struct SlaEnergyPolicy {
+    /// Idle nodes kept hot while an SLA0 window is open.
+    pub warm_spares: u32,
+    /// Batch queue depth tolerated per live node before batch-only
+    /// demand grows the cluster.
+    pub batch_backlog_per_node: u32,
+    /// Nodes whose machine class serves only the batch tier — preferred
+    /// power-down victims (the scenario runner fills this from the spec's
+    /// machine-class node ranges; empty means no class information).
+    pub batch_only: BTreeSet<NodeId>,
+}
+
+impl SlaEnergyPolicy {
+    pub fn from_config(cfg: &ElasticConfig) -> SlaEnergyPolicy {
+        SlaEnergyPolicy {
+            warm_spares: cfg.warm_spares,
+            batch_backlog_per_node: cfg.batch_backlog_per_node,
+            batch_only: BTreeSet::new(),
+        }
+    }
+}
+
+impl ScalePolicy for SlaEnergyPolicy {
+    fn name(&self) -> &'static str {
+        "sla_energy"
+    }
+
+    fn decide(&self, sig: &ScaleSignal) -> ScaleDecision {
+        let mut d = ScaleDecision::default();
+        if sig.nms + sig.pending < sig.nodes_min {
+            d.grow = sig.nodes_min - sig.nms - sig.pending;
+        }
+        let sla = sig.backlog.sla_total();
+        if sla > sig.pending && sig.nms < sig.nodes_max {
+            d.grow = d.grow.max(sla - sig.pending);
+        } else if sla == 0
+            && sig.pending == 0
+            && sig.nms < sig.nodes_max
+            && sig.backlog.batch > sig.nms.max(1) * self.batch_backlog_per_node
+        {
+            d.grow = d.grow.max(1);
+        }
+        // Warm capacity: while an SLA0 window is open (or opening within
+        // the provisioning latency), hold total provisioned capacity at
+        // `nodes_min + warm_spares` so the spike never pays batch-queue
+        // delay plus wake-up. Admitted-but-waking nodes already count in
+        // `nms` and queued requests in `pending`, so a spare in transit
+        // is never re-requested — and spares absorbed by the spike are
+        // not chased with replacements (the 1:1 SLA clause takes over
+        // once real backlog appears).
+        if sig.sla0_window_open {
+            let target = (sig.nodes_min + self.warm_spares).min(sig.nodes_max);
+            d.grow = d.grow.max(target.saturating_sub(sig.nms + sig.pending));
+        }
+        if sig.backlog.total() == 0 {
+            let reserve = if sig.sla0_window_open {
+                self.warm_spares as usize
+            } else {
+                0
+            };
+            // Batch-only classes power down first; within each group the
+            // highest id (joined last) goes first, so warm spares settle
+            // on the lowest-id SLA-capable nodes.
+            let mut victims: Vec<NodeId> = sig
+                .idle_leased
+                .iter()
+                .copied()
+                .filter(|n| self.batch_only.contains(n))
+                .collect();
+            victims.sort_by_key(|n| std::cmp::Reverse(n.0));
+            let mut sla_idle: Vec<NodeId> = sig
+                .idle_leased
+                .iter()
+                .copied()
+                .filter(|n| !self.batch_only.contains(n))
+                .collect();
+            sla_idle.sort_by_key(|n| std::cmp::Reverse(n.0));
+            if sla_idle.len() > reserve {
+                victims.extend(sla_idle.into_iter().take(sla_idle.len() - reserve));
+            }
+            d.drain = victims;
+        }
+        d
+    }
+}
+
+/// Instantiate the policy an [`ElasticConfig`] names
+/// (`elastic.scale_policy` / `HPCW_SCALE_POLICY`); unknown names fall
+/// back to the default grow-on-backlog heuristic.
+pub fn policy_from_config(cfg: &ElasticConfig) -> Box<dyn ScalePolicy> {
+    match cfg.scale_policy.as_str() {
+        "sla_energy" => Box::new(SlaEnergyPolicy::from_config(cfg)),
+        _ => Box::new(GrowOnBacklogPolicy),
+    }
+}
+
 /// Drives a live [`DynamicCluster`] against the batch allocator:
 /// registers granted nodes as NMs mid-job, drains idle nodes on lease
 /// expiry or shrink requests, and converts missed heartbeats into
@@ -176,6 +402,8 @@ impl ClusterDelta {
 pub struct ClusterManager {
     pub alloc: BatchAllocator,
     cfg: ElasticConfig,
+    /// The autoscaling policy `tick`/`tick_with` consult each cycle.
+    policy: Box<dyn ScalePolicy>,
     /// Fault injection: these nodes stop heartbeating (alive but
     /// unreachable) until restored.
     partitioned: BTreeSet<NodeId>,
@@ -186,9 +414,11 @@ pub struct ClusterManager {
 
 impl ClusterManager {
     pub fn new(cfg: ElasticConfig, pool: Vec<NodeId>) -> ClusterManager {
+        let policy = policy_from_config(&cfg);
         ClusterManager {
             alloc: BatchAllocator::new(pool, &cfg),
             cfg,
+            policy,
             partitioned: BTreeSet::new(),
             joined_total: 0,
             drained_total: 0,
@@ -198,6 +428,15 @@ impl ClusterManager {
 
     pub fn config(&self) -> &ElasticConfig {
         &self.cfg
+    }
+
+    /// Swap the autoscaling policy (scenario runner: per-spec selection).
+    pub fn set_policy(&mut self, policy: Box<dyn ScalePolicy>) {
+        self.policy = policy;
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
     }
 
     /// Ask the batch scheduler for `count` more nodes (bounded by
@@ -256,16 +495,47 @@ impl ClusterManager {
         self.partitioned.remove(&node);
     }
 
-    /// One elastic control cycle:
-    /// 1. live NMs heartbeat; silent ones past `nm_timeout_ms` fail;
-    /// 2. expired leases on idle nodes drain and return to the allocator;
-    /// 3. `backlog > 0` grows the cluster (up to `nodes_max`), an idle
-    ///    cluster above `nodes_min` drains one node;
-    /// 4. due grants are admitted as new NMs.
+    /// One elastic control cycle with the engine's flat backlog: demand
+    /// is reported as batch-tier work with no SLA window and no
+    /// runner-side occupancy (the RM's own container counts identify
+    /// idle nodes). Under the default policy this is the historical
+    /// grow-on-backlog behaviour, bit for bit.
     pub fn tick(
         &mut self,
         dc: &mut DynamicCluster,
         backlog: u32,
+        now: Micros,
+    ) -> Result<ClusterDelta> {
+        self.tick_with(
+            dc,
+            TierBacklog::batch_only(backlog),
+            false,
+            0,
+            &BTreeSet::new(),
+            now,
+        )
+    }
+
+    /// One elastic control cycle:
+    /// 1. live NMs heartbeat; silent ones past `nm_timeout_ms` fail;
+    /// 2. expired leases on idle nodes drain and return to the allocator;
+    /// 3. the [`ScalePolicy`] proposes growth/drains from the per-tier
+    ///    backlog; the proposal is clamped to the structural invariants
+    ///    (`nodes_min` floor — enforced even when the policy under-asks —
+    ///    `nodes_max` ceiling, only idle leased victims drain);
+    /// 4. due grants are admitted as new NMs.
+    ///
+    /// `busy` lists nodes occupied by work the RM cannot see (the
+    /// scenario runner's synthetic tasks); they are never drain victims.
+    /// `waking` is how many of those busy nodes are merely inside their
+    /// wake-up latency (capacity on the way, not demand).
+    pub fn tick_with(
+        &mut self,
+        dc: &mut DynamicCluster,
+        backlog: TierBacklog,
+        sla0_window_open: bool,
+        waking: u32,
+        busy: &BTreeSet<NodeId>,
         now: Micros,
     ) -> Result<ClusterDelta> {
         let mut delta = ClusterDelta::default();
@@ -284,37 +554,62 @@ impl ClusterManager {
         // idle — the engine stops placing work on a node being drained by
         // simply racing it; refusal is not an error here).
         for lease in self.alloc.expired(now) {
-            if dc.rm.has_nm(lease.node) && self.drain(dc, lease.node, now).is_ok() {
+            if dc.rm.has_nm(lease.node)
+                && !busy.contains(&lease.node)
+                && self.drain(dc, lease.node, now).is_ok()
+            {
                 delta.drained.push(lease.node);
             }
         }
 
         // 3. Autoscale policy. Requests already in the batch queue count
         // against the backlog so a slow grant is not re-requested every
-        // tick.
+        // tick. Drain victims must be idle nodes *this allocator leased*
+        // (the batch job's original allocation is never returned here —
+        // the pilot only releases nodes it acquired).
         let nms = dc.rm.nm_count() as u32;
         let pending = self.alloc.queued_nodes();
-        if nms + pending < self.cfg.nodes_min {
-            // Below the floor (a failure shrank us): request replacements.
-            self.request_grow(dc, self.cfg.nodes_min - nms - pending, now);
-        } else if backlog > pending && nms < self.cfg.nodes_max {
-            self.request_grow(dc, backlog - pending, now);
-        } else if backlog == 0 && nms > self.cfg.nodes_min {
-            // Drain the highest-id idle node among those *this allocator
-            // leased* (joined last, shortest remaining walltime). The
-            // batch job's original allocation is never returned here — the
-            // pilot only releases nodes it acquired.
-            let idle = dc
-                .rm
-                .nm_infos()
-                .into_iter()
-                .rev()
-                .find(|i| i.containers == 0 && self.alloc.lease(i.node).is_some())
-                .map(|i| i.node);
-            if let Some(node) = idle {
-                if self.drain(dc, node, now).is_ok() {
-                    delta.drained.push(node);
-                }
+        let idle_leased: Vec<NodeId> = dc
+            .rm
+            .nm_infos()
+            .into_iter()
+            .filter(|i| {
+                i.containers == 0
+                    && self.alloc.lease(i.node).is_some()
+                    && !busy.contains(&i.node)
+            })
+            .map(|i| i.node)
+            .collect();
+        let decision = self.policy.decide(&ScaleSignal {
+            nms,
+            pending,
+            backlog,
+            sla0_window_open,
+            waking,
+            idle_leased: &idle_leased,
+            nodes_min: self.cfg.nodes_min,
+            nodes_max: self.cfg.nodes_max,
+            now,
+        });
+        // Floor enforcement is structural: even a policy that never asks
+        // to grow gets its replacement requests when failures shrink the
+        // cluster below `nodes_min`.
+        let floor_deficit = self.cfg.nodes_min.saturating_sub(nms + pending);
+        let grow = decision.grow.max(floor_deficit);
+        if grow > 0 {
+            self.request_grow(dc, grow, now);
+        }
+        let mut nms_now = nms;
+        for node in decision.drain {
+            if nms_now <= self.cfg.nodes_min {
+                break; // never dip below the floor, whatever the policy says
+            }
+            if busy.contains(&node) || self.alloc.lease(node).is_none() {
+                continue; // stale or illegal victim: skip, don't fail
+            }
+            if self.drain(dc, node, now).is_ok() {
+                delta.drained.push(node);
+                nms_now -= 1;
             }
         }
 
@@ -480,6 +775,152 @@ mod tests {
         assert_eq!(drained, 2);
         assert_eq!(dc.rm.nm_count() as u32, base);
         assert_eq!(cm.alloc.free_count(), 4, "drained leases return to the pool");
+        dc.rm.check_invariants().unwrap();
+    }
+
+    fn signal<'a>(
+        nms: u32,
+        pending: u32,
+        backlog: TierBacklog,
+        window: bool,
+        waking: u32,
+        idle: &'a [NodeId],
+    ) -> ScaleSignal<'a> {
+        ScaleSignal {
+            nms,
+            pending,
+            backlog,
+            sla0_window_open: window,
+            waking,
+            idle_leased: idle,
+            nodes_min: 1,
+            nodes_max: 8,
+            now: Micros::ZERO,
+        }
+    }
+
+    #[test]
+    fn grow_on_backlog_policy_matches_legacy_chain() {
+        let p = GrowOnBacklogPolicy;
+        // Below the floor: replace the shortfall.
+        let d = p.decide(&signal(0, 0, TierBacklog::default(), false, 0, &[]));
+        assert_eq!(d.grow, 1);
+        // Backlog beyond pending grows the difference.
+        let d = p.decide(&signal(2, 1, TierBacklog::batch_only(4), false, 0, &[]));
+        assert_eq!(d.grow, 3);
+        // Idle with no backlog drains exactly one node, highest id first.
+        let idle = [NodeId(3), NodeId(5)];
+        let d = p.decide(&signal(3, 0, TierBacklog::default(), false, 0, &idle));
+        assert_eq!(d.grow, 0);
+        assert_eq!(d.drain, vec![NodeId(5)]);
+    }
+
+    #[test]
+    fn sla_energy_grows_warm_spares_while_window_open() {
+        let p = SlaEnergyPolicy {
+            warm_spares: 2,
+            batch_backlog_per_node: 4,
+            batch_only: BTreeSet::new(),
+        };
+        // Window open at the floor (nodes_min = 1): provision up to
+        // nodes_min + warm_spares.
+        let d = p.decide(&signal(1, 0, TierBacklog::default(), true, 0, &[]));
+        assert_eq!(d.grow, 2);
+        // In-flight requests count: no re-request while spares queue.
+        let d = p.decide(&signal(1, 2, TierBacklog::default(), true, 0, &[]));
+        assert_eq!(d.grow, 0);
+        // Spares admitted (even if busy or waking, they are NMs): the
+        // target is met, absorbed spares are not chased.
+        let d = p.decide(&signal(3, 0, TierBacklog::default(), true, 0, &[]));
+        assert_eq!(d.grow, 0);
+        // Window closed: no warm capacity is held.
+        let d = p.decide(&signal(1, 0, TierBacklog::default(), false, 0, &[]));
+        assert_eq!(d.grow, 0);
+    }
+
+    #[test]
+    fn sla_energy_tolerates_batch_backlog() {
+        let p = SlaEnergyPolicy {
+            warm_spares: 0,
+            batch_backlog_per_node: 4,
+            batch_only: BTreeSet::new(),
+        };
+        // Batch depth within tolerance (2 nodes x 4): no growth.
+        let d = p.decide(&signal(2, 0, TierBacklog::batch_only(8), false, 0, &[]));
+        assert_eq!(d.grow, 0);
+        // Beyond tolerance: one node per tick, not 1:1.
+        let d = p.decide(&signal(2, 0, TierBacklog::batch_only(9), false, 0, &[]));
+        assert_eq!(d.grow, 1);
+        // Interactive demand is never queued: 1:1 immediately.
+        let sla = TierBacklog {
+            sla0: 3,
+            ..TierBacklog::default()
+        };
+        let d = p.decide(&signal(2, 0, sla, false, 0, &[]));
+        assert_eq!(d.grow, 3);
+    }
+
+    #[test]
+    fn sla_energy_drain_prefers_batch_only_and_keeps_spares() {
+        let batch_only: BTreeSet<NodeId> = [NodeId(7), NodeId(8)].into_iter().collect();
+        let p = SlaEnergyPolicy {
+            warm_spares: 2,
+            batch_backlog_per_node: 4,
+            batch_only,
+        };
+        let idle = [NodeId(2), NodeId(3), NodeId(4), NodeId(7), NodeId(8)];
+        // Window open: batch-only idles always drain (highest id first),
+        // SLA-capable idles drain beyond the reserve; the spares settle
+        // on the lowest-id SLA-capable nodes. Deterministic: warm
+        // capacity wins over drain-on-idle by construction.
+        let d = p.decide(&signal(5, 0, TierBacklog::default(), true, 0, &idle));
+        assert_eq!(d.drain, vec![NodeId(8), NodeId(7), NodeId(4)]);
+        // Same signal, same decision (pure function).
+        let d2 = p.decide(&signal(5, 0, TierBacklog::default(), true, 0, &idle));
+        assert_eq!(d, d2);
+        // Window closed: everything idle drains in one tick.
+        let d = p.decide(&signal(5, 0, TierBacklog::default(), false, 0, &idle));
+        assert_eq!(
+            d.drain,
+            vec![NodeId(8), NodeId(7), NodeId(4), NodeId(3), NodeId(2)]
+        );
+    }
+
+    #[test]
+    fn tick_with_enforces_floor_against_drain_happy_policy() {
+        let (_c, _fs, mut dc) = live_cluster();
+        let base = dc.rm.nm_count() as u32;
+        let mut cm = ClusterManager::new(
+            ElasticConfig {
+                nodes_min: base,
+                scale_policy: "sla_energy".into(),
+                ..cfg()
+            },
+            pool(100, 4),
+        );
+        cm.set_policy(Box::new(SlaEnergyPolicy {
+            warm_spares: 0,
+            batch_backlog_per_node: 4,
+            batch_only: BTreeSet::new(),
+        }));
+        // Grow 2 above the floor, then go fully idle: the policy proposes
+        // draining every idle leased node in one tick, but the structural
+        // floor holds at nodes_min even mid-sweep.
+        cm.request_grow(&dc, 2, Micros::ZERO);
+        cm.tick(&mut dc, 0, Micros::ms(200)).unwrap();
+        assert_eq!(dc.rm.nm_count() as u32, base + 2);
+        let d = cm
+            .tick_with(
+                &mut dc,
+                TierBacklog::default(),
+                false,
+                0,
+                &BTreeSet::new(),
+                Micros::ms(400),
+            )
+            .unwrap();
+        assert_eq!(d.drained.len(), 2, "drains all surplus in one tick");
+        assert_eq!(dc.rm.nm_count() as u32, base);
         dc.rm.check_invariants().unwrap();
     }
 

@@ -8,7 +8,10 @@
 pub mod batch;
 pub mod interconnect;
 
-pub use batch::{BatchAllocator, ClusterDelta, ClusterManager, NodeLease};
+pub use batch::{
+    policy_from_config, BatchAllocator, ClusterDelta, ClusterManager, GrowOnBacklogPolicy,
+    NodeLease, ScaleDecision, ScalePolicy, ScaleSignal, SlaEnergyPolicy, TierBacklog,
+};
 pub use interconnect::Interconnect;
 
 use crate::config::{ClusterConfig, CpuGen};

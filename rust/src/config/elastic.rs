@@ -45,6 +45,16 @@ pub struct ElasticConfig {
     /// Preferred nodes attached to each input split (DFS shard residency
     /// fan-out; HDFS would call this the replica count).
     pub locality_replicas: u32,
+    /// Autoscaling policy the cluster manager runs: `grow_on_backlog`
+    /// (the historical default) or `sla_energy` (`HPCW_SCALE_POLICY`);
+    /// see `docs/SCENARIOS.md`.
+    pub scale_policy: String,
+    /// `sla_energy` only: idle nodes kept hot while an SLA0 arrival
+    /// window is open (`HPCW_WARM_SPARES`).
+    pub warm_spares: u32,
+    /// `sla_energy` only: batch queue depth tolerated per live node
+    /// before batch-only demand grows the cluster.
+    pub batch_backlog_per_node: u32,
 }
 
 impl Default for ElasticConfig {
@@ -60,6 +70,9 @@ impl Default for ElasticConfig {
             lease_walltime_s: 3_600,
             rack_width: 4,
             locality_replicas: 2,
+            scale_policy: "grow_on_backlog".into(),
+            warm_spares: 1,
+            batch_backlog_per_node: 4,
         }
     }
 }
@@ -81,6 +94,12 @@ impl ElasticConfig {
         }
         if let Ok(v) = std::env::var("HPCW_SPECULATION") {
             self.speculation = !matches!(v.as_str(), "0" | "false" | "off");
+        }
+        if let Ok(v) = std::env::var("HPCW_SCALE_POLICY") {
+            self.scale_policy = v;
+        }
+        if let Some(v) = env_u64("HPCW_WARM_SPARES") {
+            self.warm_spares = v as u32;
         }
     }
 
@@ -116,6 +135,15 @@ impl ElasticConfig {
         if let Some(v) = doc.u64("elastic.locality_replicas") {
             self.locality_replicas = v as u32;
         }
+        if let Some(v) = doc.str("elastic.scale_policy") {
+            self.scale_policy = v.to_string();
+        }
+        if let Some(v) = doc.u64("elastic.warm_spares") {
+            self.warm_spares = v as u32;
+        }
+        if let Some(v) = doc.u64("elastic.batch_backlog_per_node") {
+            self.batch_backlog_per_node = v as u32;
+        }
         Ok(())
     }
 
@@ -135,6 +163,17 @@ impl ElasticConfig {
         if self.speculation_factor < 1.0 {
             return Err(Error::Config(
                 "elastic.speculation_factor must be >= 1.0".into(),
+            ));
+        }
+        if !matches!(self.scale_policy.as_str(), "grow_on_backlog" | "sla_energy") {
+            return Err(Error::Config(format!(
+                "elastic.scale_policy '{}' unknown (grow_on_backlog | sla_energy)",
+                self.scale_policy
+            )));
+        }
+        if self.batch_backlog_per_node == 0 {
+            return Err(Error::Config(
+                "elastic.batch_backlog_per_node must be > 0".into(),
             ));
         }
         Ok(())
@@ -180,6 +219,28 @@ rack_width = 8
             nodes_max: 2,
             ..Default::default()
         };
+        assert!(e.validate().is_err());
+    }
+
+    #[test]
+    fn scale_policy_knobs_apply_and_validate() {
+        let doc = TomlDoc::parse(
+            r#"
+[elastic]
+scale_policy = "sla_energy"
+warm_spares = 3
+batch_backlog_per_node = 8
+"#,
+        )
+        .unwrap();
+        let mut e = ElasticConfig::default();
+        assert_eq!(e.scale_policy, "grow_on_backlog");
+        e.apply(&doc).unwrap();
+        assert_eq!(e.scale_policy, "sla_energy");
+        assert_eq!(e.warm_spares, 3);
+        assert_eq!(e.batch_backlog_per_node, 8);
+        e.validate().unwrap();
+        e.scale_policy = "random".into();
         assert!(e.validate().is_err());
     }
 

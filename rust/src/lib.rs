@@ -16,6 +16,7 @@ pub mod metrics;
 pub mod mapreduce;
 pub mod prelude;
 pub mod runtime;
+pub mod scenario;
 pub mod scheduler;
 pub mod simx;
 pub mod tenant;

@@ -1,0 +1,25 @@
+//! Scenario harness: declarative workloads scored against autoscaling
+//! policies.
+//!
+//! The paper's elasticity story ("scales seamlessly from a few cores to
+//! thousands of cores") is exercised here as a cloudsim-style what-if
+//! harness: a [`ScenarioSpec`] declares machine classes (cores, MIPS
+//! tier, power/sleep states, wake-up cost), task classes (arrival
+//! process, runtime, memory, SLA tier) and load shapes (spikes, sparse
+//! windows, diurnal cycles); the [`Runner`] drives the real
+//! [`crate::cluster::ClusterManager`] + [`crate::wrapper::DynamicCluster`]
+//! stack through the timeline under a selectable
+//! [`crate::cluster::ScalePolicy`]; the [`ScoreDoc`] reports per-tier
+//! SLA violation rates against energy spent. Specs parse from TOML
+//! (`examples/scenarios/`) or arrive as JSON via `POST /v1/scenarios`;
+//! see `docs/SCENARIOS.md`.
+
+pub mod runner;
+pub mod score;
+pub mod spec;
+
+pub use runner::Runner;
+pub use score::{EnergyScore, ScoreDoc, TierScore};
+pub use spec::{
+    LoadShape, MachineClass, ScenarioSpec, SlaTier, TaskClass, REFERENCE_MIPS, TIERS,
+};

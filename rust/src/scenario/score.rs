@@ -1,0 +1,126 @@
+//! Scenario scoring: per-SLA-tier violation rates against energy spent.
+//!
+//! Everything is an integer (basis points for rates, watt-milliseconds —
+//! i.e. millijoules — for energy) so the wire encoding is float-free and
+//! byte-stable across languages.
+
+use crate::scenario::spec::TIERS;
+
+/// Violation accounting for one SLA tier.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TierScore {
+    /// Tasks the scenario emitted into this tier.
+    pub tasks: u64,
+    /// Tasks that missed their deadline (or, for batch, never finished).
+    pub violations: u64,
+}
+
+impl TierScore {
+    /// Violation rate in basis points (0..=10000).
+    pub fn violation_bp(&self) -> u64 {
+        if self.tasks == 0 {
+            0
+        } else {
+            self.violations * 10_000 / self.tasks
+        }
+    }
+}
+
+/// Energy/provisioning accounting integrated over the timeline.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct EnergyScore {
+    /// Node-milliseconds of admitted (active or idle) capacity.
+    pub node_ms: u64,
+    /// Core-milliseconds actually running tasks.
+    pub busy_core_ms: u64,
+    /// Node-milliseconds admitted but running nothing (warm waste).
+    pub idle_node_ms: u64,
+    /// Sleep→active transitions (each charged `wake_ms` at active power).
+    pub wakeups: u64,
+    /// Node-milliseconds spent waking (unusable but at active power).
+    pub wake_ms: u64,
+    /// Total energy in millijoules (watts × milliseconds) across active,
+    /// idle, waking and sleeping nodes.
+    pub energy_mj: u64,
+}
+
+/// The scored outcome of one scenario run.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ScoreDoc {
+    pub scenario: String,
+    pub policy: String,
+    pub duration_ms: u64,
+    pub ticks: u64,
+    /// Indexed like [`TIERS`]: sla0, sla1, sla2, batch.
+    pub tiers: [TierScore; 4],
+    pub energy: EnergyScore,
+    /// Most NodeManagers alive at any tick.
+    pub peak_nodes: u32,
+    /// Nodes granted by the batch scheduler over the run.
+    pub grants: u64,
+    /// Nodes drained back to the batch scheduler over the run.
+    pub drains: u64,
+}
+
+impl ScoreDoc {
+    /// SLA0 violation rate in basis points — the headline number the
+    /// bench gate compares across policies.
+    pub fn sla0_violation_bp(&self) -> u64 {
+        self.tiers[0].violation_bp()
+    }
+
+    /// One-line human summary (CLI output).
+    pub fn summary(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for (tier, score) in TIERS.iter().zip(self.tiers.iter()) {
+            parts.push(format!(
+                "{}={}bp({}/{})",
+                tier.name(),
+                score.violation_bp(),
+                score.violations,
+                score.tasks
+            ));
+        }
+        format!(
+            "{} [{}]: {} energy={}J idle={}s wakeups={} peak={}",
+            self.scenario,
+            self.policy,
+            parts.join(" "),
+            self.energy.energy_mj / 1_000,
+            self.energy.idle_node_ms / 1_000,
+            self.energy.wakeups,
+            self.peak_nodes
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn violation_rate_in_basis_points() {
+        let t = TierScore {
+            tasks: 400,
+            violations: 3,
+        };
+        assert_eq!(t.violation_bp(), 75);
+        assert_eq!(TierScore::default().violation_bp(), 0);
+    }
+
+    #[test]
+    fn summary_reports_all_tiers() {
+        let mut s = ScoreDoc {
+            scenario: "spike".into(),
+            policy: "sla_energy".into(),
+            ..ScoreDoc::default()
+        };
+        s.tiers[0] = TierScore {
+            tasks: 100,
+            violations: 1,
+        };
+        let line = s.summary();
+        assert!(line.contains("sla0=100bp(1/100)"), "{line}");
+        assert!(line.contains("batch=0bp(0/0)"), "{line}");
+    }
+}

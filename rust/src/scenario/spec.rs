@@ -1,0 +1,533 @@
+//! The declarative scenario spec: machine classes, task classes and load
+//! shapes, cloudsim-style (machine classes carry power/sleep states and a
+//! per-class MIPS tier; task classes carry an arrival process, an expected
+//! runtime and an SLA tier).
+//!
+//! A spec parses from TOML (named sub-tables, `[machine_class.<name>]` /
+//! `[task_class.<name>]` — the in-tree TOML subset has no array-of-tables)
+//! or from the JSON wire form in [`crate::api::wire`]. Every field is an
+//! integer so both encodings are float-format-free and canonical.
+
+use crate::codec::toml::TomlDoc;
+use crate::error::{Error, Result};
+use std::collections::BTreeSet;
+
+/// SLA tiers, strictest first. `Batch` carries no deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SlaTier {
+    Sla0,
+    Sla1,
+    Sla2,
+    Batch,
+}
+
+/// All tiers, strictest first (canonical report order).
+pub const TIERS: [SlaTier; 4] = [SlaTier::Sla0, SlaTier::Sla1, SlaTier::Sla2, SlaTier::Batch];
+
+impl SlaTier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SlaTier::Sla0 => "sla0",
+            SlaTier::Sla1 => "sla1",
+            SlaTier::Sla2 => "sla2",
+            SlaTier::Batch => "batch",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<SlaTier> {
+        match s {
+            "sla0" => Ok(SlaTier::Sla0),
+            "sla1" => Ok(SlaTier::Sla1),
+            "sla2" => Ok(SlaTier::Sla2),
+            "batch" => Ok(SlaTier::Batch),
+            other => Err(Error::Config(format!(
+                "unknown SLA tier '{other}' (sla0|sla1|sla2|batch)"
+            ))),
+        }
+    }
+
+    /// Completion deadline as a percentage of the task's nominal runtime
+    /// (cloudsim's SLA0 ≤ 1.2×, SLA1 ≤ 1.5×, SLA2 ≤ 2.0×); `None` for
+    /// batch — it only has to finish.
+    pub fn deadline_factor_pct(&self) -> Option<u64> {
+        match self {
+            SlaTier::Sla0 => Some(120),
+            SlaTier::Sla1 => Some(150),
+            SlaTier::Sla2 => Some(200),
+            SlaTier::Batch => None,
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        match self {
+            SlaTier::Sla0 => 0,
+            SlaTier::Sla1 => 1,
+            SlaTier::Sla2 => 2,
+            SlaTier::Batch => 3,
+        }
+    }
+}
+
+/// Arrival-window modulation of a task class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadShape {
+    /// Arrivals throughout `[start_ms, end_ms)`. Spikes are steady
+    /// classes with a narrow window and a small inter-arrival.
+    Steady,
+    /// On/off cycling: arrivals only while
+    /// `(t - start_ms) % period_ms < period_ms * duty_pct / 100`.
+    Diurnal { period_ms: u64, duty_pct: u64 },
+}
+
+impl LoadShape {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LoadShape::Steady => "steady",
+            LoadShape::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    /// Is the class emitting arrivals at `t` (ms since scenario start)?
+    pub fn open_at(&self, t: u64, start_ms: u64) -> bool {
+        match *self {
+            LoadShape::Steady => true,
+            LoadShape::Diurnal { period_ms, duty_pct } => {
+                (t - start_ms) % period_ms < period_ms * duty_pct / 100
+            }
+        }
+    }
+}
+
+/// One machine class: a homogeneous slice of the node pool with its own
+/// speed tier and power model (cloudsim machine classes: cores, MIPS,
+/// S-states and a wake-up cost).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MachineClass {
+    pub name: String,
+    pub count: u32,
+    pub cores: u32,
+    pub mem_mb: u64,
+    /// Per-core speed; nominal task runtimes assume [`REFERENCE_MIPS`].
+    pub mips: u64,
+    /// Power draw (watts) with at least one task running.
+    pub active_w: u64,
+    /// Power draw while admitted but idle (warm capacity cost).
+    pub idle_w: u64,
+    /// Power draw while released to the batch pool (deep sleep).
+    pub sleep_w: u64,
+    /// Sleep→active latency; a freshly granted node accepts no tasks
+    /// until the wake completes (charged at `active_w`).
+    pub wake_ms: u64,
+    /// Tiers this class may serve; empty = all four.
+    pub tiers: Vec<SlaTier>,
+}
+
+/// The MIPS tier nominal task runtimes are quoted at; a class with
+/// `mips = 2000` halves them, `mips = 500` doubles them.
+pub const REFERENCE_MIPS: u64 = 1000;
+
+impl MachineClass {
+    pub fn serves(&self, tier: SlaTier) -> bool {
+        self.tiers.is_empty() || self.tiers.contains(&tier)
+    }
+
+    /// Does this class serve nothing but batch work? (Preferred
+    /// power-down victim for the SLA/energy policy.)
+    pub fn batch_only(&self) -> bool {
+        !self.tiers.is_empty() && self.tiers.iter().all(|t| *t == SlaTier::Batch)
+    }
+
+    /// Actual runtime of a nominal `runtime_ms` task on this class.
+    pub fn scaled_runtime_ms(&self, runtime_ms: u64) -> u64 {
+        (runtime_ms * REFERENCE_MIPS / self.mips.max(1)).max(1)
+    }
+}
+
+/// One task class: an arrival process emitting identical tasks into one
+/// SLA tier (cloudsim task classes: start/end, inter-arrival, expected
+/// runtime, memory, SLA type, seed).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskClass {
+    pub name: String,
+    pub tier: SlaTier,
+    pub start_ms: u64,
+    pub end_ms: u64,
+    pub inter_arrival_ms: u64,
+    /// Nominal runtime at [`REFERENCE_MIPS`]; the deadline is
+    /// `arrival + deadline_factor × runtime_ms` regardless of which
+    /// class the task lands on.
+    pub runtime_ms: u64,
+    pub mem_mb: u64,
+    pub shape: LoadShape,
+    /// Per-class stream for runtime jitter (forked off the spec seed).
+    pub seed: u64,
+}
+
+/// A complete scenario: the cluster shape, the autoscaling policy under
+/// test and the workload timeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub duration_ms: u64,
+    /// Control-cycle period; arrivals/completions/energy integrate at
+    /// this resolution.
+    pub tick_ms: u64,
+    pub seed: u64,
+    /// `grow_on_backlog` or `sla_energy`.
+    pub policy: String,
+    pub warm_spares: u32,
+    pub batch_backlog_per_node: u32,
+    pub nodes_min: u32,
+    pub nodes_max: u32,
+    /// Simulated batch-queue grant delay (PBS/SLURM queue wait).
+    pub queue_delay_ms: u64,
+    pub machine_classes: Vec<MachineClass>,
+    pub task_classes: Vec<TaskClass>,
+}
+
+impl ScenarioSpec {
+    /// Parse the TOML form (`[machine_class.<name>]` sub-tables; see
+    /// `docs/SCENARIOS.md` and `examples/scenarios/`).
+    pub fn from_toml(text: &str) -> Result<ScenarioSpec> {
+        let doc = TomlDoc::parse(text)?;
+        let req_u64 = |key: &str| -> Result<u64> {
+            doc.u64(key)
+                .ok_or_else(|| Error::Config(format!("scenario: missing '{key}'")))
+        };
+        let mut spec = ScenarioSpec {
+            name: doc
+                .str("name")
+                .ok_or_else(|| Error::Config("scenario: missing 'name'".into()))?
+                .to_string(),
+            duration_ms: req_u64("duration_ms")?,
+            tick_ms: doc.u64("tick_ms").unwrap_or(1_000),
+            seed: doc.u64("seed").unwrap_or(0),
+            policy: doc.str("policy").unwrap_or("grow_on_backlog").to_string(),
+            warm_spares: doc.u64("warm_spares").unwrap_or(1) as u32,
+            batch_backlog_per_node: doc.u64("batch_backlog_per_node").unwrap_or(4) as u32,
+            nodes_min: req_u64("nodes_min")? as u32,
+            nodes_max: req_u64("nodes_max")? as u32,
+            queue_delay_ms: doc.u64("queue_delay_ms").unwrap_or(500),
+            machine_classes: Vec::new(),
+            task_classes: Vec::new(),
+        };
+        for name in table_names(&doc, "machine_class") {
+            let k = |f: &str| format!("machine_class.{name}.{f}");
+            let req = |f: &str| -> Result<u64> {
+                doc.u64(&k(f))
+                    .ok_or_else(|| Error::Config(format!("machine_class.{name}: missing '{f}'")))
+            };
+            let tiers = match doc.get(&k("tiers")) {
+                None => Vec::new(),
+                Some(v) => match v {
+                    crate::codec::toml::TomlValue::Arr(items) => items
+                        .iter()
+                        .map(|t| {
+                            t.as_str()
+                                .ok_or_else(|| {
+                                    Error::Config(format!(
+                                        "machine_class.{name}: tiers must be strings"
+                                    ))
+                                })
+                                .and_then(SlaTier::from_name)
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                    _ => {
+                        return Err(Error::Config(format!(
+                            "machine_class.{name}: tiers must be an array"
+                        )))
+                    }
+                },
+            };
+            spec.machine_classes.push(MachineClass {
+                name: name.clone(),
+                count: req("count")? as u32,
+                cores: req("cores")? as u32,
+                mem_mb: req("mem_mb")?,
+                mips: doc.u64(&k("mips")).unwrap_or(REFERENCE_MIPS),
+                active_w: doc.u64(&k("active_w")).unwrap_or(200),
+                idle_w: doc.u64(&k("idle_w")).unwrap_or(100),
+                sleep_w: doc.u64(&k("sleep_w")).unwrap_or(10),
+                wake_ms: doc.u64(&k("wake_ms")).unwrap_or(0),
+                tiers,
+            });
+        }
+        for name in table_names(&doc, "task_class") {
+            let k = |f: &str| format!("task_class.{name}.{f}");
+            let req = |f: &str| -> Result<u64> {
+                doc.u64(&k(f))
+                    .ok_or_else(|| Error::Config(format!("task_class.{name}: missing '{f}'")))
+            };
+            let tier = SlaTier::from_name(
+                doc.str(&k("tier"))
+                    .ok_or_else(|| Error::Config(format!("task_class.{name}: missing 'tier'")))?,
+            )?;
+            let shape = match doc.str(&k("shape")).unwrap_or("steady") {
+                "steady" => LoadShape::Steady,
+                "diurnal" => LoadShape::Diurnal {
+                    period_ms: req("period_ms")?,
+                    duty_pct: req("duty_pct")?,
+                },
+                other => {
+                    return Err(Error::Config(format!(
+                        "task_class.{name}: unknown shape '{other}' (steady|diurnal)"
+                    )))
+                }
+            };
+            spec.task_classes.push(TaskClass {
+                name: name.clone(),
+                tier,
+                start_ms: doc.u64(&k("start_ms")).unwrap_or(0),
+                end_ms: doc.u64(&k("end_ms")).unwrap_or(spec.duration_ms),
+                inter_arrival_ms: req("inter_arrival_ms")?,
+                runtime_ms: req("runtime_ms")?,
+                mem_mb: doc.u64(&k("mem_mb")).unwrap_or(1024),
+                shape,
+                seed: doc.u64(&k("seed")).unwrap_or(0),
+            });
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Total nodes across machine classes.
+    pub fn total_nodes(&self) -> u32 {
+        self.machine_classes.iter().map(|c| c.count).sum()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            return Err(Error::Config("scenario: name must be non-empty".into()));
+        }
+        if self.duration_ms == 0 || self.tick_ms == 0 {
+            return Err(Error::Config(
+                "scenario: duration_ms and tick_ms must be > 0".into(),
+            ));
+        }
+        if self.duration_ms / self.tick_ms > 100_000 {
+            return Err(Error::Config(
+                "scenario: more than 100000 ticks (shrink duration or grow tick_ms)".into(),
+            ));
+        }
+        if !matches!(self.policy.as_str(), "grow_on_backlog" | "sla_energy") {
+            return Err(Error::Config(format!(
+                "scenario: unknown policy '{}' (grow_on_backlog | sla_energy)",
+                self.policy
+            )));
+        }
+        if self.machine_classes.is_empty() {
+            return Err(Error::Config("scenario: no machine classes".into()));
+        }
+        if self.task_classes.is_empty() {
+            return Err(Error::Config("scenario: no task classes".into()));
+        }
+        let mut names = BTreeSet::new();
+        for c in &self.machine_classes {
+            if !names.insert(&c.name) {
+                return Err(Error::Config(format!("duplicate machine class '{}'", c.name)));
+            }
+            if c.count == 0 || c.cores == 0 || c.mips == 0 {
+                return Err(Error::Config(format!(
+                    "machine_class.{}: count, cores and mips must be > 0",
+                    c.name
+                )));
+            }
+        }
+        let mut names = BTreeSet::new();
+        for t in &self.task_classes {
+            if !names.insert(&t.name) {
+                return Err(Error::Config(format!("duplicate task class '{}'", t.name)));
+            }
+            if t.inter_arrival_ms == 0 || t.runtime_ms == 0 {
+                return Err(Error::Config(format!(
+                    "task_class.{}: inter_arrival_ms and runtime_ms must be > 0",
+                    t.name
+                )));
+            }
+            if t.end_ms <= t.start_ms {
+                return Err(Error::Config(format!(
+                    "task_class.{}: end_ms must exceed start_ms",
+                    t.name
+                )));
+            }
+            if let LoadShape::Diurnal { period_ms, duty_pct } = t.shape {
+                if period_ms == 0 || duty_pct == 0 || duty_pct > 100 {
+                    return Err(Error::Config(format!(
+                        "task_class.{}: diurnal needs period_ms > 0 and duty_pct in 1..=100",
+                        t.name
+                    )));
+                }
+            }
+            if !self.machine_classes.iter().any(|c| c.serves(t.tier)) {
+                return Err(Error::Config(format!(
+                    "task_class.{}: no machine class serves tier {}",
+                    t.name,
+                    t.tier.name()
+                )));
+            }
+        }
+        if self.nodes_min == 0 {
+            return Err(Error::Config(
+                "scenario: nodes_min must be >= 1 (the RM needs a slave)".into(),
+            ));
+        }
+        if self.nodes_min > self.nodes_max {
+            return Err(Error::Config(format!(
+                "scenario: nodes_min ({}) exceeds nodes_max ({})",
+                self.nodes_min, self.nodes_max
+            )));
+        }
+        if self.total_nodes() < self.nodes_min {
+            return Err(Error::Config(format!(
+                "scenario: machine classes provide {} nodes, below nodes_min {}",
+                self.total_nodes(),
+                self.nodes_min
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Distinct sub-table names under `prefix` (sorted: TomlDoc's entry map
+/// is a BTreeMap, so scenario parsing is order-stable).
+fn table_names(doc: &TomlDoc, prefix: &str) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for key in doc.keys_under(prefix) {
+        let rest = &key[prefix.len() + 1..];
+        if let Some((name, _)) = rest.split_once('.') {
+            if out.last().map(String::as_str) != Some(name) {
+                out.push(name.to_string());
+            }
+        }
+    }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) const SPIKE_TOML: &str = r#"
+name = "spike"
+duration_ms = 120000
+tick_ms = 1000
+seed = 7
+policy = "sla_energy"
+warm_spares = 1
+nodes_min = 2
+nodes_max = 8
+queue_delay_ms = 2000
+
+[machine_class.fast]
+count = 6
+cores = 4
+mem_mb = 8192
+mips = 1500
+active_w = 220
+idle_w = 90
+sleep_w = 8
+wake_ms = 3000
+
+[machine_class.bulk]
+count = 2
+cores = 8
+mem_mb = 16384
+mips = 800
+tiers = ["batch"]
+
+[task_class.web]
+tier = "sla0"
+start_ms = 30000
+end_ms = 60000
+inter_arrival_ms = 500
+runtime_ms = 2000
+mem_mb = 1024
+
+[task_class.night]
+tier = "batch"
+inter_arrival_ms = 4000
+runtime_ms = 8000
+shape = "diurnal"
+period_ms = 60000
+duty_pct = 50
+"#;
+
+    #[test]
+    fn toml_round_trip_fields() {
+        let spec = ScenarioSpec::from_toml(SPIKE_TOML).unwrap();
+        assert_eq!(spec.name, "spike");
+        assert_eq!(spec.policy, "sla_energy");
+        assert_eq!(spec.machine_classes.len(), 2);
+        let bulk = &spec.machine_classes[0]; // BTreeMap order: bulk < fast
+        assert_eq!(bulk.name, "bulk");
+        assert!(bulk.batch_only());
+        assert!(!bulk.serves(SlaTier::Sla0));
+        let fast = &spec.machine_classes[1];
+        assert_eq!(fast.wake_ms, 3000);
+        assert!(fast.serves(SlaTier::Sla0));
+        assert!(!fast.batch_only());
+        assert_eq!(spec.task_classes.len(), 2);
+        let night = &spec.task_classes[0];
+        assert_eq!(night.tier, SlaTier::Batch);
+        assert_eq!(
+            night.shape,
+            LoadShape::Diurnal {
+                period_ms: 60000,
+                duty_pct: 50
+            }
+        );
+        // end_ms defaults to the scenario duration.
+        assert_eq!(night.end_ms, 120000);
+        assert_eq!(spec.total_nodes(), 8);
+    }
+
+    #[test]
+    fn runtime_scales_with_mips() {
+        let spec = ScenarioSpec::from_toml(SPIKE_TOML).unwrap();
+        let fast = &spec.machine_classes[1];
+        assert_eq!(fast.scaled_runtime_ms(3000), 2000); // 1500 MIPS
+        let bulk = &spec.machine_classes[0];
+        assert_eq!(bulk.scaled_runtime_ms(3000), 3750); // 800 MIPS
+    }
+
+    #[test]
+    fn diurnal_shape_gates_arrivals() {
+        let d = LoadShape::Diurnal {
+            period_ms: 100,
+            duty_pct: 30,
+        };
+        assert!(d.open_at(0, 0));
+        assert!(d.open_at(29, 0));
+        assert!(!d.open_at(30, 0));
+        assert!(!d.open_at(99, 0));
+        assert!(d.open_at(100, 0));
+        // Phase is relative to the class window start.
+        assert!(d.open_at(50, 50));
+    }
+
+    #[test]
+    fn deadlines_tighten_with_tier() {
+        assert_eq!(SlaTier::Sla0.deadline_factor_pct(), Some(120));
+        assert_eq!(SlaTier::Sla1.deadline_factor_pct(), Some(150));
+        assert_eq!(SlaTier::Sla2.deadline_factor_pct(), Some(200));
+        assert_eq!(SlaTier::Batch.deadline_factor_pct(), None);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        // Unknown policy.
+        let bad = SPIKE_TOML.replace("sla_energy", "psychic");
+        assert!(ScenarioSpec::from_toml(&bad).is_err());
+        // SLA0 work with no class able to serve it.
+        let mut orphan = ScenarioSpec::from_toml(SPIKE_TOML).unwrap();
+        orphan.machine_classes[1].tiers = vec![SlaTier::Batch];
+        assert!(orphan.validate().is_err());
+        // Pool smaller than the floor.
+        let bad = SPIKE_TOML.replace("nodes_min = 2", "nodes_min = 20");
+        assert!(ScenarioSpec::from_toml(&bad).is_err());
+        // Unknown tier name.
+        let bad = SPIKE_TOML.replace("tier = \"sla0\"", "tier = \"gold\"");
+        assert!(ScenarioSpec::from_toml(&bad).is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! Scenario harness acceptance: the shipped example specs run end to end
+//! through `POST /v1/scenarios`, and on them the `sla_energy` policy
+//! beats `grow_on_backlog` where it claims to — fewer SLA0 violations at
+//! equal-or-lower energy on the spike, strictly less energy with no tier
+//! regressions on the diurnal updown. The same comparison is gated in CI
+//! by `benches/scenario_policies.rs` against committed baseline floors;
+//! this test keeps the claim in `cargo test`.
+
+use hpcw::api::wire::ScenarioState;
+use hpcw::api::{ApiClient, ApiServer, Stack};
+use hpcw::config::StackConfig;
+use hpcw::scenario::{Runner, ScenarioSpec, ScoreDoc};
+use std::time::Duration;
+
+const SPIKE: &str = include_str!("../../examples/scenarios/spike.toml");
+const UPDOWN: &str = include_str!("../../examples/scenarios/updown.toml");
+
+fn spec_with_policy(toml: &str, policy: &str) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::from_toml(toml).unwrap();
+    spec.policy = policy.to_string();
+    spec.validate().unwrap();
+    spec
+}
+
+fn run_over_api(client: &ApiClient, spec: &ScenarioSpec) -> ScoreDoc {
+    let id = client.run_scenario(spec).unwrap();
+    let doc = client.wait_scenario(id, Duration::from_secs(120)).unwrap();
+    assert_eq!(doc.state, ScenarioState::Done, "error={:?}", doc.error);
+    doc.score.unwrap()
+}
+
+fn total_violations(s: &ScoreDoc) -> u64 {
+    s.tiers.iter().map(|t| t.violations).sum()
+}
+
+/// Acceptance: on the spike scenario the SLA/energy policy at least
+/// halves the SLA0 violation rate of the legacy backlog policy, without
+/// spending more energy — and the whole comparison runs through the API.
+#[test]
+fn sla_policy_beats_backlog_on_spike_over_api() {
+    let server = ApiServer::start(Stack::new(StackConfig::tiny()).unwrap()).unwrap();
+    let client = ApiClient::new(&server.addr);
+
+    let backlog = run_over_api(&client, &spec_with_policy(SPIKE, "grow_on_backlog"));
+    let sla = run_over_api(&client, &spec_with_policy(SPIKE, "sla_energy"));
+
+    assert!(
+        sla.sla0_violation_bp() * 2 <= backlog.sla0_violation_bp(),
+        "sla_energy {}bp vs grow_on_backlog {}bp",
+        sla.sla0_violation_bp(),
+        backlog.sla0_violation_bp()
+    );
+    assert!(
+        sla.energy.energy_mj <= backlog.energy.energy_mj,
+        "the SLA win must not cost energy: {} mJ vs {} mJ",
+        sla.energy.energy_mj,
+        backlog.energy.energy_mj
+    );
+    // Both rows are listable and terminal; list rows omit the score.
+    let page = client.list_scenarios(0, 10).unwrap();
+    assert_eq!(page.total, 2);
+    for row in &page.scenarios {
+        assert_eq!(row.state, ScenarioState::Done);
+        assert!(row.score.is_none(), "list rows omit the score");
+    }
+}
+
+/// Acceptance: the diurnal updown scenario saves energy (the idle night
+/// fleet sleeps) without making any tier's violation count worse.
+#[test]
+fn updown_saves_energy_without_sla_regressions() {
+    let backlog = Runner::run(spec_with_policy(UPDOWN, "grow_on_backlog")).unwrap();
+    let sla = Runner::run(spec_with_policy(UPDOWN, "sla_energy")).unwrap();
+    assert!(
+        sla.energy.energy_mj < backlog.energy.energy_mj,
+        "{} mJ vs {} mJ",
+        sla.energy.energy_mj,
+        backlog.energy.energy_mj
+    );
+    assert!(
+        total_violations(&sla) <= total_violations(&backlog),
+        "{} vs {} violations",
+        total_violations(&sla),
+        total_violations(&backlog)
+    );
+    assert_eq!(backlog.ticks, sla.ticks, "same timeline under both policies");
+}
+
+/// The runner is a pure fixed-seed simulation: identical spec, identical
+/// score — which is what lets the CI bench gate exact values.
+#[test]
+fn scenario_scores_are_deterministic() {
+    for toml in [SPIKE, UPDOWN] {
+        let a = Runner::run(ScenarioSpec::from_toml(toml).unwrap()).unwrap();
+        let b = Runner::run(ScenarioSpec::from_toml(toml).unwrap()).unwrap();
+        assert_eq!(a, b);
+    }
+}
