@@ -1,0 +1,266 @@
+//! HETERO-SCHED — adaptive vs static speculation on a heterogeneous
+//! cluster (PR 10): the same chaos Terasort (one slave at 100 MIPS — a
+//! 10× wall-clock stretch — plus a fast node lost mid-map-phase and a
+//! reference-speed batch replacement) replayed under every
+//! `HPCW_SPECULATION` mode. Emits the makespan of each mode and the
+//! **`adaptive_speedup` ratio (static ÷ adaptive)** to
+//! **`BENCH_PR10.json`**, gated by the committed baseline floor; the
+//! `off` run is the byte-parity oracle and every mode's output must
+//! match it byte for byte.
+//!
+//! Why adaptive wins here: the online estimator's warm task-shape
+//! baseline arms the fast-node placement bias, so the long tasks
+//! (reduces, any-tier maps) stop landing on the 100-MIPS node, and
+//! speculative rescues race on the fastest node with room — while static
+//! keeps feeding the slow node round-robin and only rescues stragglers
+//! at the global 2×-mean threshold.
+//!
+//! `HPCW_BENCH_SMOKE=1` shrinks the data to CI size. Makespans aggregate
+//! by **median of rounds** (not best-of): a mode's best round could be
+//! one where round-robin happened to spare the slow node, which is
+//! exactly the luck the comparison must not reward.
+
+use hpcw::bench::emit_json;
+use hpcw::cluster::{ClusterManager, NodeId};
+use hpcw::config::{ElasticConfig, SpeculationMode, StackConfig};
+use hpcw::lustre::{Dfs, LustreFs};
+use hpcw::mapreduce::{counters, ElasticAction, ElasticPlan, MrEngine};
+use hpcw::metrics::Metrics;
+use hpcw::terasort::{
+    run_teragen, run_terasort, summarize_dir, teravalidate, TeragenSpec, TerasortJob,
+};
+use hpcw::util::ids::IdGen;
+use hpcw::util::pool::Pool;
+use hpcw::util::time::Micros;
+use hpcw::wrapper::DynamicCluster;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Slave whose MIPS tier is degraded (node ids are RM, JHS, slaves 2..6).
+const SLOW_NODE: u32 = 2;
+/// 100 MIPS vs the 1000-MIPS reference: a 10× wall-clock stretch.
+const SLOW_MIPS: u64 = 100;
+
+fn default_pool_width() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8)
+}
+
+fn build_cluster(fs: &LustreFs, cfg: &StackConfig, tag: &str) -> DynamicCluster {
+    let nodes: Vec<NodeId> = (0..6).map(NodeId).collect(); // RM, JHS, 4 slaves
+    DynamicCluster::build(
+        cfg,
+        &nodes,
+        fs,
+        Arc::new(IdGen::default()),
+        Arc::new(Metrics::new()),
+        tag,
+        Micros::ZERO,
+    )
+    .unwrap()
+}
+
+/// Output part files by name — the byte-identity comparison key.
+fn sorted_output(fs: &LustreFs, files: &[String]) -> BTreeMap<String, Vec<u8>> {
+    files
+        .iter()
+        .map(|f| {
+            let name = f.rsplit('/').next().unwrap().to_string();
+            (name, fs.read(f).unwrap())
+        })
+        .collect()
+}
+
+fn elastic(mode: SpeculationMode) -> ElasticConfig {
+    ElasticConfig {
+        speculation: mode,
+        speculation_floor_ms: 10,
+        node_mips: vec![(SLOW_NODE, SLOW_MIPS)],
+        nodes_min: 4,
+        nodes_max: 8,
+        queue_delay_ms: 20,
+        lease_walltime_s: 3_600,
+        nm_timeout_ms: 3_000,
+        ..Default::default()
+    }
+}
+
+fn median(mut v: Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+struct ModeResult {
+    makespan_s: f64,
+    fast_placements: u64,
+    predicted_p95_specs: u64,
+    estimator_updates: u64,
+    byte_identical: bool,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_mode(
+    mode: SpeculationMode,
+    fs: &Arc<LustreFs>,
+    cfg: &StackConfig,
+    pool: &Pool,
+    split_bytes: u64,
+    rounds: usize,
+    input: &hpcw::terasort::DirSummary,
+    reference: &mut Option<BTreeMap<String, Vec<u8>>>,
+) -> ModeResult {
+    let mut times = Vec::new();
+    let mut fast_placements = 0u64;
+    let mut predicted_p95_specs = 0u64;
+    let mut estimator_updates = 0u64;
+    let mut byte_identical = true;
+    for r in 0..rounds {
+        let out = format!("/lustre/scratch/hs-{}-out-{r}", mode.name());
+        let ts = TerasortJob {
+            split_bytes,
+            samples_per_file: 200,
+            ..TerasortJob::new("/lustre/scratch/hs-in", &out, 4)
+        };
+        let mut dc = build_cluster(fs, cfg, &format!("hs-{}-{r}", mode.name()));
+        let cm = ClusterManager::new(elastic(mode), (200..204).map(NodeId).collect());
+        // Chaos: lose the 4th (fast) slave mid-map-phase; the batch
+        // allocator replaces it with a reference-speed node. The slow
+        // node survives, so the heterogeneity differential persists
+        // through the churn in every mode.
+        let plan = ElasticPlan::new().at_maps(2, ElasticAction::FailNthSlave(3));
+        let t0 = std::time::Instant::now();
+        let outcome = {
+            let mut engine =
+                MrEngine::new(&mut dc, fs.clone() as Arc<dyn Dfs>, pool, 1024, 1024)
+                    .with_elastic_cfg(elastic(mode))
+                    .with_cluster_manager(cm)
+                    .with_plan(plan);
+            run_terasort(&mut engine, &ts, None, Micros::ZERO).unwrap()
+        };
+        let secs = t0.elapsed().as_secs_f64();
+        times.push(secs);
+        assert_eq!(outcome.counters.get(counters::NODES_FAILED), 1);
+        fast_placements += outcome.counters.get(counters::FAST_NODE_PLACEMENTS);
+        predicted_p95_specs += outcome.counters.get(counters::PREDICTED_P95_SPECULATIONS);
+        estimator_updates += outcome.counters.get(counters::ESTIMATOR_UPDATES);
+        teravalidate(&**fs, &out, input.clone()).unwrap();
+        let bytes = sorted_output(fs, &outcome.output_files);
+        match reference {
+            Some(oracle) => byte_identical &= bytes == *oracle,
+            None => *reference = Some(bytes),
+        }
+        fs.delete_recursive(&out).unwrap();
+        println!("[{} r{r}] total={secs:.3}s", mode.name());
+    }
+    ModeResult {
+        makespan_s: median(times),
+        fast_placements,
+        predicted_p95_specs,
+        estimator_updates,
+        byte_identical,
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("HPCW_BENCH_SMOKE").is_ok();
+    let cfg = StackConfig::tiny();
+    let pool = Pool::new(default_pool_width().max(2));
+    let rows: u64 = if smoke { 6_000 } else { 40_000 };
+    let split_bytes: u64 = if smoke { 50_000 } else { 200_000 };
+    let rounds = 3usize;
+
+    let fs = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
+    {
+        let mut dc = build_cluster(&fs, &cfg, "hs-gen");
+        let mut engine =
+            MrEngine::new(&mut dc, fs.clone() as Arc<dyn Dfs>, &pool, 1024, 1024);
+        let gen = TeragenSpec {
+            rows,
+            maps: 3,
+            output_dir: "/lustre/scratch/hs-in".into(),
+            seed: 42,
+        };
+        run_teragen(&mut engine, &gen, Micros::ZERO).unwrap();
+    }
+    let input = summarize_dir(&*fs, "/lustre/scratch/hs-in").unwrap();
+
+    // `off` first: its output is the byte-parity oracle for both
+    // speculating modes (no duplicate attempt may ever change the data).
+    let mut reference: Option<BTreeMap<String, Vec<u8>>> = None;
+    let off = run_mode(
+        SpeculationMode::Off,
+        &fs,
+        &cfg,
+        &pool,
+        split_bytes,
+        rounds,
+        &input,
+        &mut reference,
+    );
+    let statik = run_mode(
+        SpeculationMode::Static,
+        &fs,
+        &cfg,
+        &pool,
+        split_bytes,
+        rounds,
+        &input,
+        &mut reference,
+    );
+    let adaptive = run_mode(
+        SpeculationMode::Adaptive,
+        &fs,
+        &cfg,
+        &pool,
+        split_bytes,
+        rounds,
+        &input,
+        &mut reference,
+    );
+
+    assert!(statik.byte_identical, "static output must match the off oracle");
+    assert!(adaptive.byte_identical, "adaptive output must match the off oracle");
+    assert!(
+        adaptive.fast_placements > 0,
+        "the fast-node bias must actually steer on a heterogeneous pool"
+    );
+    assert!(adaptive.estimator_updates > 0, "every commit feeds the estimator");
+
+    let adaptive_speedup = statik.makespan_s / adaptive.makespan_s;
+    emit_json(
+        "BENCH_PR10.json",
+        "hetero_sched",
+        &[
+            ("rows", rows as f64),
+            ("slow_mips", SLOW_MIPS as f64),
+            ("off_makespan_s", off.makespan_s),
+            ("static_makespan_s", statik.makespan_s),
+            ("adaptive_makespan_s", adaptive.makespan_s),
+            // Chaos makespan ratio, static ÷ adaptive (1.0 = no win; the
+            // committed floor gates the claimed adaptive advantage).
+            ("adaptive_speedup", adaptive_speedup),
+            ("fast_node_placements", adaptive.fast_placements as f64),
+            ("predicted_p95_speculations", adaptive.predicted_p95_specs as f64),
+            ("estimator_updates", adaptive.estimator_updates as f64),
+            (
+                "static_byte_identical",
+                if statik.byte_identical { 1.0 } else { 0.0 },
+            ),
+            (
+                "adaptive_byte_identical",
+                if adaptive.byte_identical { 1.0 } else { 0.0 },
+            ),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    );
+    println!(
+        "\nhetero-sched: off {:.3}s | static {:.3}s | adaptive {:.3}s \
+         (speedup {adaptive_speedup:.2}×) — {} fast-biased placements, \
+         {} predicted-p95 speculations",
+        off.makespan_s, statik.makespan_s, adaptive.makespan_s,
+        adaptive.fast_placements, adaptive.predicted_p95_specs
+    );
+    println!("hetero_sched OK");
+}

@@ -537,6 +537,67 @@ def canonical_scenario(doc: Dict[str, Any]) -> Dict[str, Any]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Cluster (GET /v1/cluster)
+# ---------------------------------------------------------------------------
+
+#: Node state tokens (mirror Rust ``NodeState`` rendering).
+NODE_STATES = ("UP", "DRAINED", "DOWN")
+
+#: Storage-tier snapshot keys in canonical (Rust ``TierDoc``) order. All
+#: integers except ``simulated_io_s``.
+TIER_FIELDS = (
+    "mem_budget_bytes",
+    "resident_bytes",
+    "backing_bytes",
+    "hits",
+    "misses",
+    "evictions",
+    "promotions",
+    "writeback_bytes",
+    "spill_bytes",
+    "simulated_io_s",
+)
+
+
+def canonical_node(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Rebuild one node document in canonical key order (mirrors Rust
+    ``NodeDoc::from_json`` → ``to_json``). ``mips`` defaults to
+    ``REFERENCE_MIPS`` for pre-heterogeneity servers; ``job`` /
+    ``lease_remaining_ms`` appear only when the node is leased."""
+    state = _req(doc, "state")
+    if state not in NODE_STATES:
+        raise ValueError(f"unknown node state '{state}'")
+    out: Dict[str, Any] = {
+        "node": _req(doc, "node"),
+        "hostname": _req(doc, "hostname"),
+        "state": state,
+        "cores": _req(doc, "cores"),
+        "mem_mb": _req(doc, "mem_mb"),
+        "mips": doc.get("mips", REFERENCE_MIPS),
+    }
+    if doc.get("job") is not None:
+        out["job"] = doc["job"]
+    if doc.get("lease_remaining_ms") is not None:
+        out["lease_remaining_ms"] = doc["lease_remaining_ms"]
+    return out
+
+
+def canonical_cluster(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Rebuild a ``GET /v1/cluster`` response in canonical key order.
+    ``tier`` appears only on stacks whose DFS tiers its storage."""
+    out: Dict[str, Any] = {
+        "nodes": [canonical_node(n) for n in _req(doc, "nodes")],
+        "up": _req(doc, "up"),
+        "drained": _req(doc, "drained"),
+        "down": _req(doc, "down"),
+        "leased": _req(doc, "leased"),
+    }
+    if doc.get("tier") is not None:
+        out["tier"] = {k: _req(doc["tier"], k) for k in TIER_FIELDS}
+    return out
+
+
 def error_doc(code: str, message: str) -> Dict[str, Any]:
     return {"error": {"code": code, "message": message}}
 

@@ -209,6 +209,24 @@ def test_scenario_vector_is_canonical():
         wire.canonical_scenario(dict(pending, state="EXPLODED"))
 
 
+def test_cluster_vector_is_canonical():
+    case = load_vectors()["cluster"]
+    canon = wire.canonical_cluster(case["doc"])
+    assert wire.dumps(canon) == case["canon"]
+    # A node that omits `mips` (pre-heterogeneity server) decodes to the
+    # reference speed; an explicit tier survives verbatim.
+    assert canon["nodes"][1]["mips"] == wire.REFERENCE_MIPS
+    assert canon["nodes"][0]["mips"] == 250
+    # Lease fields appear only on leased nodes.
+    assert "job" in canon["nodes"][0] and "job" not in canon["nodes"][1]
+    # An untiered stack's doc simply drops the optional.
+    single = {k: v for k, v in case["doc"].items() if k != "tier"}
+    assert "tier" not in wire.canonical_cluster(single)
+    with pytest.raises(ValueError, match="unknown node state"):
+        bad = dict(case["doc"]["nodes"][0], state="SLEEPING")
+        wire.canonical_node(bad)
+
+
 def test_scenario_state_tokens_match_rust():
     assert wire.SCENARIO_STATES == ("PENDING", "RUNNING", "DONE", "FAILED")
     assert wire.is_terminal_scenario("DONE") and wire.is_terminal_scenario("FAILED")

@@ -123,7 +123,10 @@ pub struct Stack {
 impl Stack {
     pub fn new(cfg: StackConfig) -> Result<Stack> {
         cfg.validate()?;
-        let cluster = ClusterModel::new(&cfg.cluster);
+        let mut cluster = ClusterModel::new(&cfg.cluster);
+        // Heterogeneous pools: apply per-node MIPS overrides so
+        // `GET /v1/cluster` reports the speed tier the scheduler sees.
+        cluster.set_node_mips(&cfg.elastic.node_mips);
         let ids = Arc::new(IdGen::default());
         let metrics = Arc::new(Metrics::new());
         let tenants = Arc::new(crate::tenant::TenantRegistry::new(
@@ -369,6 +372,7 @@ impl Stack {
                 state: state.to_string(),
                 cores: n.cores as u64,
                 mem_mb: n.mem_mb,
+                mips: n.mips,
                 job: holder.map(|j| j.id.0),
                 lease_remaining_ms,
             });
@@ -894,6 +898,33 @@ mod tests {
         assert_eq!(doc.down, 1);
         assert_eq!(doc.nodes[2].state, "DRAINED");
         assert_eq!(doc.nodes[5].state, "DOWN");
+    }
+
+    #[test]
+    fn cluster_doc_surfaces_node_mips() {
+        // Homogeneous default: every node reports the reference speed.
+        let s = stack();
+        let doc = s.cluster_doc();
+        assert!(doc
+            .nodes
+            .iter()
+            .all(|n| n.mips == crate::scenario::REFERENCE_MIPS));
+
+        // A heterogeneous profile flows config -> ClusterModel -> wire.
+        let mut cfg = StackConfig::tiny();
+        cfg.elastic.node_mips = vec![(0, 250), (3, 2_000)];
+        let s = Stack::new(cfg).unwrap();
+        let doc = s.cluster_doc();
+        assert_eq!(doc.nodes[0].mips, 250);
+        assert_eq!(doc.nodes[3].mips, 2_000);
+        assert_eq!(doc.nodes[1].mips, crate::scenario::REFERENCE_MIPS);
+        // And survives the canonical wire round trip.
+        let back = ClusterDoc::from_json(
+            &crate::codec::json::Json::parse(&doc.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.nodes[0].mips, 250);
+        assert_eq!(back.nodes[3].mips, 2_000);
     }
 
     #[test]

@@ -1152,6 +1152,10 @@ pub struct NodeDoc {
     pub state: String,
     pub cores: u64,
     pub mem_mb: u64,
+    /// CloudSim-style per-core speed tier; `REFERENCE_MIPS` (1000) on a
+    /// homogeneous pool. Feeds the adaptive scheduler
+    /// (`docs/SCHEDULING.md`).
+    pub mips: u64,
     /// LSF job currently leasing this node, if any.
     pub job: Option<u64>,
     /// Milliseconds left on the lease's wall limit (absent when the lease
@@ -1167,6 +1171,7 @@ impl NodeDoc {
             ("state", Json::str(&*self.state)),
             ("cores", Json::num(self.cores as f64)),
             ("mem_mb", Json::num(self.mem_mb as f64)),
+            ("mips", Json::num(self.mips as f64)),
         ];
         if let Some(j) = self.job {
             fields.push(("job", Json::num(j as f64)));
@@ -1184,6 +1189,8 @@ impl NodeDoc {
             state: j.req_str("state")?.to_string(),
             cores: j.req_u64("cores")?,
             mem_mb: j.req_u64("mem_mb")?,
+            // Absent in pre-PR-10 payloads: reference speed.
+            mips: j.get("mips").and_then(Json::as_u64).unwrap_or(REFERENCE_MIPS),
             job: j.get("job").and_then(Json::as_u64),
             lease_remaining_ms: j.get("lease_remaining_ms").and_then(Json::as_u64),
         })
@@ -2143,6 +2150,7 @@ mod tests {
                     state: g.pick(&["UP", "DRAINED", "DOWN"]).to_string(),
                     cores: g.u64(1..64),
                     mem_mb: g.u64(1024..65_536),
+                    mips: g.u64(1..4_000),
                     job: if g.chance(0.5) { Some(g.u64(1..1_000)) } else { None },
                     lease_remaining_ms: if g.chance(0.4) {
                         Some(g.u64(0..10_000_000))
@@ -2635,5 +2643,15 @@ mod tests {
             typed.to_json().to_string(),
             scen.get("canon").unwrap().as_str().unwrap()
         );
+        let cluster = vectors.get("cluster").unwrap();
+        let typed = ClusterDoc::from_json(cluster.get("doc").unwrap()).unwrap();
+        assert_eq!(
+            typed.to_json().to_string(),
+            cluster.get("canon").unwrap().as_str().unwrap()
+        );
+        // The vector's second node omits `mips`: pre-heterogeneity
+        // payloads decode to the reference speed in both languages.
+        assert_eq!(typed.nodes[1].mips, REFERENCE_MIPS);
+        assert_eq!(typed.nodes[0].mips, 250);
     }
 }

@@ -457,6 +457,14 @@ impl ClusterManager {
         let mut joined = Vec::new();
         for lease in self.alloc.poll(now) {
             dc.admit_node(lease.node, now)?;
+            // A pool node joining mid-run resolves its MIPS tier from
+            // this manager's elastic config as well — the cluster may
+            // have been built from a stack config without the profile.
+            if let Some(&(_, mips)) =
+                self.cfg.node_mips.iter().find(|&&(id, _)| id == lease.node.0)
+            {
+                dc.rm.set_node_mips(lease.node, mips);
+            }
             self.joined_total += 1;
             joined.push(lease.node);
         }

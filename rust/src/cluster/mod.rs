@@ -48,6 +48,11 @@ pub struct Node {
     pub das_mb: u64,
     pub cpu: CpuGen,
     pub state: NodeState,
+    /// Per-core speed profile (CloudSim-style MIPS tier). Nodes default
+    /// to the reference speed; heterogeneous profiles come from
+    /// `HPCW_NODE_MIPS` or a scenario's `MachineClass` layout and feed
+    /// the adaptive scheduler (`docs/SCHEDULING.md`).
+    pub mips: u64,
 }
 
 impl Node {
@@ -82,6 +87,7 @@ impl ClusterModel {
                 das_mb: cfg.das_gb as u64 * 1024,
                 cpu: cfg.cpu,
                 state: NodeState::Up,
+                mips: crate::scenario::REFERENCE_MIPS,
             })
             .collect();
         ClusterModel {
@@ -160,6 +166,17 @@ impl ClusterModel {
         Ok(())
     }
 
+    /// Install a heterogeneous performance profile (`HPCW_NODE_MIPS` /
+    /// scenario machine classes). Unknown ids are ignored — profiles may
+    /// name pool nodes that are not part of this model.
+    pub fn set_node_mips(&mut self, profiles: &[(u32, u64)]) {
+        for &(id, mips) in profiles {
+            if let Some(n) = self.nodes.get_mut(id as usize) {
+                n.mips = mips.max(1);
+            }
+        }
+    }
+
     /// Validate that a set of node ids exists and is Up (allocation check).
     pub fn assert_allocatable(&self, ids: &BTreeSet<NodeId>) -> Result<()> {
         for &id in ids {
@@ -186,6 +203,18 @@ mod tests {
         assert_eq!(n.mem_mb, 64 * 1024);
         assert_eq!(n.das_mb, 414 * 1024);
         assert_eq!(n.hostname(), "sbd0000");
+        assert_eq!(n.mips, crate::scenario::REFERENCE_MIPS);
+    }
+
+    #[test]
+    fn mips_profiles_apply_and_ignore_unknown_ids() {
+        let mut m = ClusterModel::new(&ClusterConfig::tiny());
+        m.set_node_mips(&[(2, 250), (3, 2000), (10_000, 500), (4, 0)]);
+        assert_eq!(m.node(NodeId(2)).unwrap().mips, 250);
+        assert_eq!(m.node(NodeId(3)).unwrap().mips, 2000);
+        // Zero clamps to 1 (a node is never infinitely slow).
+        assert_eq!(m.node(NodeId(4)).unwrap().mips, 1);
+        assert_eq!(m.node(NodeId(0)).unwrap().mips, 1000);
     }
 
     #[test]

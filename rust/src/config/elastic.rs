@@ -13,6 +13,55 @@
 use crate::codec::toml::TomlDoc;
 use crate::error::{Error, Result};
 
+/// How the MR engine rescues stragglers (`HPCW_SPECULATION`).
+///
+/// * `Off` — never launch duplicate attempts.
+/// * `Static` — the historical global rule: duplicate once an attempt
+///   exceeds `speculation_factor ×` the phase mean (and the floor). This
+///   is the byte-parity oracle the chaos suite pins adaptive mode against.
+/// * `Adaptive` — duplicate once an attempt exceeds the *predicted p95*
+///   of its own `(node, task-shape)` cell in the online runtime estimator
+///   (`scheduler/estimator.rs`), falling back to the static rule while
+///   the cell is cold; also arms fast-node placement bias. See
+///   `docs/SCHEDULING.md`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpeculationMode {
+    Off,
+    Static,
+    Adaptive,
+}
+
+impl SpeculationMode {
+    /// Env/TOML string form. `off|0|false|none` disables, `adaptive`
+    /// arms the estimator, anything else truthy (`1`, `true`, `on`,
+    /// `static`) keeps the historical static rule.
+    pub fn parse(s: &str) -> SpeculationMode {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "0" | "false" | "off" | "none" => SpeculationMode::Off,
+            "adaptive" => SpeculationMode::Adaptive,
+            _ => SpeculationMode::Static,
+        }
+    }
+
+    /// Any duplicate-attempt rescue at all?
+    pub fn enabled(self) -> bool {
+        self != SpeculationMode::Off
+    }
+
+    /// Estimator-driven thresholds and placement bias armed?
+    pub fn is_adaptive(self) -> bool {
+        self == SpeculationMode::Adaptive
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpeculationMode::Off => "off",
+            SpeculationMode::Static => "static",
+            SpeculationMode::Adaptive => "adaptive",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ElasticConfig {
     /// Floor of NodeManagers the cluster manager keeps alive
@@ -23,9 +72,9 @@ pub struct ElasticConfig {
     /// NM heartbeat liveness timeout in milliseconds (`HPCW_NM_TIMEOUT`);
     /// a NodeManager silent for longer is declared failed.
     pub nm_timeout_ms: u64,
-    /// Enable speculative duplicate execution of stragglers
-    /// (`HPCW_SPECULATION`, `0`/`false` to disable).
-    pub speculation: bool,
+    /// Straggler-rescue mode (`HPCW_SPECULATION=off|static|adaptive`);
+    /// see [`SpeculationMode`].
+    pub speculation: SpeculationMode,
     /// A running attempt is a straggler once its elapsed time exceeds
     /// `speculation_factor ×` the mean duration of committed attempts of
     /// the same phase…
@@ -55,6 +104,12 @@ pub struct ElasticConfig {
     /// `sla_energy` only: batch queue depth tolerated per live node
     /// before batch-only demand grows the cluster.
     pub batch_backlog_per_node: u32,
+    /// Per-node performance profiles as `(node id, MIPS)` pairs
+    /// (`HPCW_NODE_MIPS="3:250,4:250"`). Nodes not listed run at the
+    /// reference speed (1000 MIPS, `scenario::spec::REFERENCE_MIPS`).
+    /// Scenario runs derive this from their `MachineClass` layout
+    /// instead.
+    pub node_mips: Vec<(u32, u64)>,
 }
 
 impl Default for ElasticConfig {
@@ -63,7 +118,7 @@ impl Default for ElasticConfig {
             nodes_min: 1,
             nodes_max: 64,
             nm_timeout_ms: 3_000,
-            speculation: true,
+            speculation: SpeculationMode::Static,
             speculation_factor: 2.0,
             speculation_floor_ms: 100,
             queue_delay_ms: 500,
@@ -73,8 +128,28 @@ impl Default for ElasticConfig {
             scale_policy: "grow_on_backlog".into(),
             warm_spares: 1,
             batch_backlog_per_node: 4,
+            node_mips: Vec::new(),
         }
     }
+}
+
+/// Parse `HPCW_NODE_MIPS`-style pair lists (`"3:250,4:250"`). Malformed
+/// entries are skipped — env knobs never abort a run — but `validate()`
+/// still rejects zero-MIPS pairs that made it into the config.
+pub fn parse_node_mips(s: &str) -> Vec<(u32, u64)> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((id, mips)) = part.split_once(':') {
+            if let (Ok(id), Ok(mips)) = (id.trim().parse(), mips.trim().parse()) {
+                out.push((id, mips));
+            }
+        }
+    }
+    out
 }
 
 impl ElasticConfig {
@@ -93,7 +168,10 @@ impl ElasticConfig {
             self.nm_timeout_ms = v;
         }
         if let Ok(v) = std::env::var("HPCW_SPECULATION") {
-            self.speculation = !matches!(v.as_str(), "0" | "false" | "off");
+            self.speculation = SpeculationMode::parse(&v);
+        }
+        if let Ok(v) = std::env::var("HPCW_NODE_MIPS") {
+            self.node_mips = parse_node_mips(&v);
         }
         if let Ok(v) = std::env::var("HPCW_SCALE_POLICY") {
             self.scale_policy = v;
@@ -114,8 +192,21 @@ impl ElasticConfig {
         if let Some(v) = doc.u64("elastic.nm_timeout_ms") {
             self.nm_timeout_ms = v;
         }
+        // Back-compat: `speculation = false` (bool) still means off and
+        // `true` the historical static rule; the string form selects the
+        // full three-way mode.
         if let Some(v) = doc.bool("elastic.speculation") {
-            self.speculation = v;
+            self.speculation = if v {
+                SpeculationMode::Static
+            } else {
+                SpeculationMode::Off
+            };
+        }
+        if let Some(v) = doc.str("elastic.speculation") {
+            self.speculation = SpeculationMode::parse(v);
+        }
+        if let Some(v) = doc.str("elastic.node_mips") {
+            self.node_mips = parse_node_mips(v);
         }
         if let Some(v) = doc.f64("elastic.speculation_factor") {
             self.speculation_factor = v;
@@ -176,6 +267,13 @@ impl ElasticConfig {
                 "elastic.batch_backlog_per_node must be > 0".into(),
             ));
         }
+        for (id, mips) in &self.node_mips {
+            if *mips == 0 {
+                return Err(Error::Config(format!(
+                    "elastic.node_mips: node {id} has 0 MIPS"
+                )));
+            }
+        }
         Ok(())
     }
 }
@@ -207,9 +305,62 @@ rack_width = 8
         assert_eq!(e.nodes_min, 2);
         assert_eq!(e.nodes_max, 16);
         assert_eq!(e.nm_timeout_ms, 750);
-        assert!(!e.speculation);
+        assert_eq!(e.speculation, SpeculationMode::Off);
         assert_eq!(e.rack_width, 8);
         e.validate().unwrap();
+    }
+
+    #[test]
+    fn speculation_mode_parses_all_spellings() {
+        for s in ["off", "0", "false", "OFF", "none"] {
+            assert_eq!(SpeculationMode::parse(s), SpeculationMode::Off);
+        }
+        for s in ["adaptive", "Adaptive", " adaptive "] {
+            assert_eq!(SpeculationMode::parse(s), SpeculationMode::Adaptive);
+        }
+        for s in ["static", "1", "true", "on"] {
+            assert_eq!(SpeculationMode::parse(s), SpeculationMode::Static);
+        }
+        assert!(SpeculationMode::Static.enabled());
+        assert!(!SpeculationMode::Off.enabled());
+        assert!(SpeculationMode::Adaptive.is_adaptive());
+        assert!(!SpeculationMode::Static.is_adaptive());
+    }
+
+    #[test]
+    fn speculation_string_form_selects_adaptive() {
+        let doc = TomlDoc::parse(
+            r#"
+[elastic]
+speculation = "adaptive"
+node_mips = "3:250, 4:2000"
+"#,
+        )
+        .unwrap();
+        let mut e = ElasticConfig::default();
+        assert_eq!(e.speculation, SpeculationMode::Static);
+        e.apply(&doc).unwrap();
+        assert_eq!(e.speculation, SpeculationMode::Adaptive);
+        assert_eq!(e.node_mips, vec![(3, 250), (4, 2000)]);
+        e.validate().unwrap();
+    }
+
+    #[test]
+    fn node_mips_parser_skips_malformed_entries() {
+        assert_eq!(
+            parse_node_mips("3:250,,junk,4:1000, 5 : 500 ,6:x"),
+            vec![(3, 250), (4, 1000), (5, 500)]
+        );
+        assert_eq!(parse_node_mips(""), Vec::<(u32, u64)>::new());
+    }
+
+    #[test]
+    fn zero_mips_profile_rejected() {
+        let e = ElasticConfig {
+            node_mips: vec![(3, 0)],
+            ..Default::default()
+        };
+        assert!(e.validate().is_err());
     }
 
     #[test]

@@ -15,7 +15,7 @@ pub mod yarn;
 
 pub use calibration::CalibrationConfig;
 pub use cluster::{CampusConfig, ClusterConfig, CpuGen};
-pub use elastic::ElasticConfig;
+pub use elastic::{ElasticConfig, SpeculationMode};
 pub use lustre::LustreConfig;
 pub use sched::{QueuePolicy, SchedulerConfig};
 pub use tenant::{TenantConfig, TenantSpec};

@@ -83,6 +83,15 @@ pub const QUEUE_SHARE: &str = "QUEUE_SHARE";
 pub const PREEMPTIONS: &str = "PREEMPTIONS";
 /// Cumulative dispatch wait (µs) charged to the tenant's queue.
 pub const QUEUE_WAIT_US: &str = "QUEUE_WAIT_US";
+/// Attempt durations folded into the online per-(node, shape) runtime
+/// estimator (adaptive scheduling).
+pub const ESTIMATOR_UPDATES: &str = "ESTIMATOR_UPDATES";
+/// Speculative duplicates triggered by the estimator's predicted-p95
+/// threshold (as opposed to the static global multiplier).
+pub const PREDICTED_P95_SPECULATIONS: &str = "PREDICTED_P95_SPECULATIONS";
+/// Any-tier placements the fast-node bias steered onto a faster node
+/// while a strictly slower candidate also had room.
+pub const FAST_NODE_PLACEMENTS: &str = "FAST_NODE_PLACEMENTS";
 
 impl Counters {
     pub fn new() -> Self {

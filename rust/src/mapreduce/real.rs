@@ -36,6 +36,7 @@ use crate::mapreduce::split::{
 };
 use crate::mapreduce::task::{TaskId, MAX_ATTEMPTS};
 use crate::mapreduce::JobSpec;
+use crate::scheduler::{RuntimeEstimator, TaskShape};
 use crate::util::ids::AppId;
 use crate::util::pool::Pool;
 use crate::util::time::Micros;
@@ -248,6 +249,13 @@ impl<'a> MrEngine<'a> {
     /// for YARN bookkeeping; wall time is measured for the outcome.
     pub fn run(&mut self, spec: Arc<JobSpec>, user: &str, now: Micros) -> Result<MrOutcome> {
         let t0 = Instant::now();
+        // Install heterogeneous node profiles (`HPCW_NODE_MIPS` / scenario
+        // machine classes) into the RM's registry before any placement
+        // decision. The registry outlives node churn, so nodes joining
+        // mid-job pick their profile up too.
+        for &(id, mips) in &self.elastic_cfg.node_mips {
+            self.cluster.rm.set_node_mips(NodeId(id), mips);
+        }
         if self.dfs.exists(&spec.output_dir) {
             return Err(Error::MapReduce(format!(
                 "output dir '{}' already exists",
@@ -550,13 +558,17 @@ impl<'a> MrEngine<'a> {
         // event-driven shape to within a couple of wakes per floor.
         let wait_slice = if has_elastic {
             Some(ELASTIC_TICK)
-        } else if self.elastic_cfg.speculation {
+        } else if self.elastic_cfg.speculation.enabled() {
             Some(Duration::from_millis(
                 (self.elastic_cfg.speculation_floor_ms / 2).max(1),
             ))
         } else {
             None
         };
+        // Online per-(node, shape) runtime estimator: every committed
+        // attempt folds its duration in; adaptive speculation and the
+        // fast-node placement bias read it back (docs/SCHEDULING.md).
+        let mut estimator = RuntimeEstimator::new();
 
         loop {
             // --- elastic control plane: scripted chaos/growth events, NM
@@ -568,8 +580,8 @@ impl<'a> MrEngine<'a> {
 
             // --- straggler detection: duplicate slow attempts once a
             // phase majority has committed and capacity is otherwise idle.
-            if self.elastic_cfg.speculation {
-                maybe_speculate(st, &self.elastic_cfg, counters);
+            if self.elastic_cfg.speculation.enabled() {
+                maybe_speculate(st, &self.elastic_cfg, &estimator, counters);
             }
 
             // --- launch maps: one locality-aware grant per pending task
@@ -603,15 +615,26 @@ impl<'a> MrEngine<'a> {
                 } else {
                     Vec::new()
                 };
-                let got = self.cluster.rm.allocate_one(
+                // Fast-node bias (adaptive mode only): speculative rescues
+                // always prefer speed; regular maps do once the estimator's
+                // warm map baseline says the shape is long enough for the
+                // placement to matter (≥ the straggler floor). Locality
+                // tiers still win — the bias only settles any-tier ties.
+                let prefer_fast = self.elastic_cfg.speculation.is_adaptive()
+                    && (speculative
+                        || estimator.shape_mean_s(TaskShape::Map).is_some_and(|m| {
+                            m * 1000.0 >= self.elastic_cfg.speculation_floor_ms as f64
+                        }));
+                let got = self.cluster.rm.allocate_one_biased(
                     *app,
                     Resource::new(self.map_memory_mb, 1),
                     ContainerKind::Map,
                     prefs,
                     &avoid,
                     now,
+                    prefer_fast,
                 )?;
-                let Some((c, tier)) = got else { break };
+                let Some((c, tier, fast_biased)) = got else { break };
                 if let Some(nm) = self.cluster.nms.get_mut(&c.node) {
                     nm.launch(c.id)?;
                 }
@@ -623,6 +646,9 @@ impl<'a> MrEngine<'a> {
                     LocalityTier::Any => counters::OTHER_MAPS,
                 };
                 counters.add(tier_counter, 1);
+                if fast_biased {
+                    counters.add(counters::FAST_NODE_PLACEMENTS, 1);
+                }
                 if !first_map_launched {
                     first_map_launched = true;
                     phases.first_map_launch_s = t0.elapsed().as_secs_f64();
@@ -647,6 +673,7 @@ impl<'a> MrEngine<'a> {
                         idx,
                         attempt,
                         node: c.node,
+                        mips: self.cluster.rm.node_mips(c.node),
                         splits: Arc::clone(splits),
                         spec: Arc::clone(spec),
                         shuffle: Arc::clone(shuffle),
@@ -684,59 +711,91 @@ impl<'a> MrEngine<'a> {
                     });
                 }
                 while !st.pending_reduces.is_empty() && st.reduces_running < cap {
-                    let want = (st.pending_reduces.len() as u32).min(cap - st.reduces_running);
-                    let got = self.grant(
-                        app,
-                        want,
-                        self.reduce_memory_mb,
+                    let &(r, attempt, speculative) = st.pending_reduces.front().unwrap();
+                    // A speculative duplicate must not land beside the
+                    // attempt it races.
+                    let avoid: Vec<NodeId> = if speculative {
+                        st.running
+                            .values()
+                            .filter(|f| {
+                                !f.orphaned
+                                    && matches!(f.task,
+                                        TaskRef::Reduce { r: j, .. } if j == r)
+                            })
+                            .map(|f| f.container.node)
+                            .collect()
+                    } else {
+                        Vec::new()
+                    };
+                    // Reduces carry no locality preference, so placement is
+                    // always the any tier — exactly where the fast bias
+                    // matters most: the whole fetch+merge+write runs on
+                    // whichever node wins. The warm map baseline stands in
+                    // while the reduce cells are still cold (first wave).
+                    let prefer_fast = self.elastic_cfg.speculation.is_adaptive()
+                        && (speculative
+                            || estimator
+                                .shape_mean_s(TaskShape::Reduce)
+                                .or_else(|| estimator.shape_mean_s(TaskShape::Map))
+                                .is_some_and(|m| {
+                                    m * 1000.0
+                                        >= self.elastic_cfg.speculation_floor_ms as f64
+                                }));
+                    let got = self.cluster.rm.allocate_one_biased(
+                        *app,
+                        Resource::new(self.reduce_memory_mb, 1),
                         ContainerKind::Reduce,
+                        &[],
+                        &avoid,
                         now,
+                        prefer_fast,
                     )?;
-                    if got.is_empty() {
-                        break;
+                    let Some((c, _tier, fast_biased)) = got else { break };
+                    if let Some(nm) = self.cluster.nms.get_mut(&c.node) {
+                        nm.launch(c.id)?;
                     }
-                    counters.add(counters::CONTAINERS_GRANTED, got.len() as u64);
-                    for c in got {
-                        let (r, attempt, speculative) =
-                            st.pending_reduces.pop_front().unwrap();
-                        if !first_reduce_launched {
-                            first_reduce_launched = true;
-                            phases.first_reduce_launch_s = t0.elapsed().as_secs_f64();
-                            counters.add(counters::FIRST_REDUCE_LAUNCHED, 1);
-                            counters
-                                .add(counters::MAPS_AT_FIRST_REDUCE, st.maps_committed as u64);
-                        }
-                        let token = st.next_token;
-                        st.next_token += 1;
-                        st.running.insert(
-                            token,
-                            InFlight {
-                                container: c,
-                                task: TaskRef::Reduce { r, attempt },
-                                started: Instant::now(),
-                                speculative,
-                                orphaned: false,
-                            },
-                        );
-                        st.reduces_running += 1;
-                        launched += 1;
-                        self.pool.submit_with(
-                            token,
-                            ReduceTaskArgs {
-                                r,
-                                attempt,
-                                n_maps,
-                                spec: Arc::clone(spec),
-                                shuffle: Arc::clone(shuffle),
-                                counters: Arc::clone(counters),
-                                dfs: Arc::clone(&self.dfs),
-                                tmp_root: tmp_root.to_string(),
-                                cancel: Some(Arc::clone(cancel)),
-                            },
-                            run_reduce_task,
-                            tx.clone(),
-                        );
+                    st.pending_reduces.pop_front();
+                    counters.add(counters::CONTAINERS_GRANTED, 1);
+                    if fast_biased {
+                        counters.add(counters::FAST_NODE_PLACEMENTS, 1);
                     }
+                    if !first_reduce_launched {
+                        first_reduce_launched = true;
+                        phases.first_reduce_launch_s = t0.elapsed().as_secs_f64();
+                        counters.add(counters::FIRST_REDUCE_LAUNCHED, 1);
+                        counters.add(counters::MAPS_AT_FIRST_REDUCE, st.maps_committed as u64);
+                    }
+                    let token = st.next_token;
+                    st.next_token += 1;
+                    st.running.insert(
+                        token,
+                        InFlight {
+                            container: c,
+                            task: TaskRef::Reduce { r, attempt },
+                            started: Instant::now(),
+                            speculative,
+                            orphaned: false,
+                        },
+                    );
+                    st.reduces_running += 1;
+                    launched += 1;
+                    self.pool.submit_with(
+                        token,
+                        ReduceTaskArgs {
+                            r,
+                            attempt,
+                            n_maps,
+                            mips: self.cluster.rm.node_mips(c.node),
+                            spec: Arc::clone(spec),
+                            shuffle: Arc::clone(shuffle),
+                            counters: Arc::clone(counters),
+                            dfs: Arc::clone(&self.dfs),
+                            tmp_root: tmp_root.to_string(),
+                            cancel: Some(Arc::clone(cancel)),
+                        },
+                        run_reduce_task,
+                        tx.clone(),
+                    );
                 }
             }
 
@@ -832,9 +891,10 @@ impl<'a> MrEngine<'a> {
                         if !st.maps.done[i] {
                             st.maps.done[i] = true;
                             st.maps_committed += 1;
-                            st.maps
-                                .durations_s
-                                .push(inflight.started.elapsed().as_secs_f64());
+                            let dur_s = inflight.started.elapsed().as_secs_f64();
+                            st.maps.durations_s.push(dur_s);
+                            estimator.observe(inflight.container.node, TaskShape::Map, dur_s);
+                            counters.add(counters::ESTIMATOR_UPDATES, 1);
                             phases.last_map_commit_s = t0.elapsed().as_secs_f64();
                             if inflight.speculative {
                                 counters.add(counters::SPECULATIVE_WINS, 1);
@@ -868,9 +928,14 @@ impl<'a> MrEngine<'a> {
                         if !st.reduces.done[i] {
                             st.reduces.done[i] = true;
                             st.reduces_done += 1;
-                            st.reduces
-                                .durations_s
-                                .push(inflight.started.elapsed().as_secs_f64());
+                            let dur_s = inflight.started.elapsed().as_secs_f64();
+                            st.reduces.durations_s.push(dur_s);
+                            estimator.observe(
+                                inflight.container.node,
+                                TaskShape::Reduce,
+                                dur_s,
+                            );
+                            counters.add(counters::ESTIMATOR_UPDATES, 1);
                             phases.last_reduce_commit_s = t0.elapsed().as_secs_f64();
                             if inflight.speculative {
                                 counters.add(counters::SPECULATIVE_WINS, 1);
@@ -1142,6 +1207,7 @@ impl<'a> MrEngine<'a> {
                         idx: *idx,
                         attempt: *attempt,
                         node: c.node,
+                        mips: self.cluster.rm.node_mips(c.node),
                         splits: Arc::clone(splits),
                         spec: Arc::clone(spec),
                         shuffle: Arc::clone(shuffle),
@@ -1197,10 +1263,11 @@ impl<'a> MrEngine<'a> {
             let results = self.pool.try_map(
                 batch
                     .iter()
-                    .map(|((r, attempt), _)| ReduceTaskArgs {
+                    .map(|((r, attempt), c)| ReduceTaskArgs {
                         r: *r,
                         attempt: *attempt,
                         n_maps,
+                        mips: self.cluster.rm.node_mips(c.node),
                         spec: Arc::clone(spec),
                         shuffle: Arc::clone(shuffle),
                         counters: Arc::clone(counters),
@@ -1430,13 +1497,25 @@ fn apply_node_loss(
 
 /// Straggler scan: once a phase has a duration baseline (≥ 3 commits and
 /// a committed majority) and no other work is pending, any sole running
-/// attempt slower than `factor × mean` (and the absolute floor) gets a
-/// speculative duplicate. First commit wins; the loser's container is
-/// simply released on completion.
-fn maybe_speculate(st: &mut PipeState, cfg: &ElasticConfig, counters: &Counters) {
+/// attempt over its threshold gets a speculative duplicate. In static
+/// mode the threshold is the global `factor × mean` (and the absolute
+/// floor). In adaptive mode each attempt is judged against the predicted
+/// p95 of its *own* (node, shape) estimator cell — a fast node's
+/// straggler fires early instead of hiding under a mean inflated by slow
+/// nodes — falling back to the static rule while the cell is cold.
+/// First commit wins; the loser's container is simply released on
+/// completion.
+fn maybe_speculate(
+    st: &mut PipeState,
+    cfg: &ElasticConfig,
+    estimator: &RuntimeEstimator,
+    counters: &Counters,
+) {
     let floor_s = cfg.speculation_floor_ms as f64 / 1000.0;
-    let mut spec_maps: Vec<u32> = Vec::new();
-    let mut spec_reduces: Vec<u32> = Vec::new();
+    let adaptive = cfg.speculation.is_adaptive();
+    // (task index, triggered by the per-cell p95 prediction)
+    let mut spec_maps: Vec<(u32, bool)> = Vec::new();
+    let mut spec_reduces: Vec<(u32, bool)> = Vec::new();
     let n_maps = st.maps.done.len() as u32;
     let n_reduces = st.reduces.done.len() as u32;
     let m_mean = st.maps.mean_duration_s();
@@ -1446,6 +1525,7 @@ fn maybe_speculate(st: &mut PipeState, cfg: &ElasticConfig, counters: &Counters)
             continue;
         }
         let elapsed = inf.started.elapsed().as_secs_f64();
+        let node = inf.container.node;
         match inf.task {
             TaskRef::Map { idx, .. } => {
                 if !st.pending_maps.is_empty()
@@ -1458,9 +1538,20 @@ fn maybe_speculate(st: &mut PipeState, cfg: &ElasticConfig, counters: &Counters)
                 if st.maps.done[i] || st.maps.live[i] != 1 {
                     continue;
                 }
-                let Some(mean) = m_mean else { continue };
-                if elapsed > (cfg.speculation_factor * mean).max(floor_s) {
-                    spec_maps.push(idx);
+                let cell = if adaptive {
+                    estimator.predicted_p95(node, TaskShape::Map)
+                } else {
+                    None
+                };
+                let (threshold, predicted) = match cell {
+                    Some(p95) => (p95.max(floor_s), true),
+                    None => {
+                        let Some(mean) = m_mean else { continue };
+                        ((cfg.speculation_factor * mean).max(floor_s), false)
+                    }
+                };
+                if elapsed > threshold {
+                    spec_maps.push((idx, predicted));
                 }
             }
             TaskRef::Reduce { r, .. } => {
@@ -1474,20 +1565,37 @@ fn maybe_speculate(st: &mut PipeState, cfg: &ElasticConfig, counters: &Counters)
                 if st.reduces.done[i] || st.reduces.live[i] != 1 {
                     continue;
                 }
-                let Some(mean) = r_mean else { continue };
-                if elapsed > (cfg.speculation_factor * mean).max(floor_s) {
-                    spec_reduces.push(r);
+                let cell = if adaptive {
+                    estimator.predicted_p95(node, TaskShape::Reduce)
+                } else {
+                    None
+                };
+                let (threshold, predicted) = match cell {
+                    Some(p95) => (p95.max(floor_s), true),
+                    None => {
+                        let Some(mean) = r_mean else { continue };
+                        ((cfg.speculation_factor * mean).max(floor_s), false)
+                    }
+                };
+                if elapsed > threshold {
+                    spec_reduces.push((r, predicted));
                 }
             }
         }
     }
-    for idx in spec_maps {
+    for (idx, predicted) in spec_maps {
         st.push_map(idx, true);
         counters.add(counters::TASKS_SPECULATED, 1);
+        if predicted {
+            counters.add(counters::PREDICTED_P95_SPECULATIONS, 1);
+        }
     }
-    for r in spec_reduces {
+    for (r, predicted) in spec_reduces {
         st.push_reduce(r, true);
         counters.add(counters::TASKS_SPECULATED, 1);
+        if predicted {
+            counters.add(counters::PREDICTED_P95_SPECULATIONS, 1);
+        }
     }
 }
 
@@ -1499,6 +1607,8 @@ struct MapTaskArgs {
     idx: u32,
     attempt: u32,
     node: crate::cluster::NodeId,
+    /// The host node's MIPS tier (heterogeneity wall-clock model).
+    mips: u64,
     splits: Arc<[InputSplit]>,
     spec: Arc<JobSpec>,
     shuffle: Arc<ShuffleStore>,
@@ -1514,7 +1624,8 @@ struct MapTaskArgs {
 /// the task, and spilled segments hand their arenas to the shuffle store
 /// without further copying.
 fn run_map_task(args: MapTaskArgs) -> Result<()> {
-    let MapTaskArgs { idx, attempt, node, splits, spec, shuffle, counters, dfs } = args;
+    let MapTaskArgs { idx, attempt, node, mips, splits, spec, shuffle, counters, dfs } = args;
+    let t_work = Instant::now();
     let split = &splits[idx as usize];
     counters.add(counters::TASKS_LAUNCHED, 1);
     if spec.failures.should_fail(TaskId::map(idx), attempt) {
@@ -1590,6 +1701,7 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
         let attempt_file = format!("{attempt_dir}/part-m-{idx:05}");
         let final_file = format!("{}/part-m-{idx:05}", spec.output_dir);
         dfs.create(&attempt_file, &out)?;
+        stretch_for_mips(t_work, mips);
         commit_rename(&*dfs, &attempt_file, &final_file)?;
         return Ok(());
     }
@@ -1607,6 +1719,9 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
                 parts.len()
             )));
         }
+        // Pad before the segments become visible: a slow node's output
+        // commits late, which is what speculation races against.
+        stretch_for_mips(t_work, mips);
         for (p, records) in parts.into_iter().enumerate() {
             shuffle.put(Segment {
                 map: idx,
@@ -1651,6 +1766,8 @@ fn run_map_task(args: MapTaskArgs) -> Result<()> {
             records,
         });
     }
+    // As above: pad before the all-or-nothing segment commit.
+    stretch_for_mips(t_work, mips);
     for seg in segments {
         shuffle.put(seg);
     }
@@ -1683,6 +1800,8 @@ struct ReduceTaskArgs {
     r: u32,
     attempt: u32,
     n_maps: u32,
+    /// The host node's MIPS tier (heterogeneity wall-clock model).
+    mips: u64,
     spec: Arc<JobSpec>,
     shuffle: Arc<ShuffleStore>,
     counters: Arc<Counters>,
@@ -1697,8 +1816,18 @@ struct ReduceTaskArgs {
 /// merge yields `(segment, record)` indices; grouping and reduction read
 /// keys and values as borrowed slices straight out of the segment arenas.
 fn run_reduce_task(args: ReduceTaskArgs) -> Result<()> {
-    let ReduceTaskArgs { r, attempt, n_maps, spec, shuffle, counters, dfs, tmp_root, cancel } =
-        args;
+    let ReduceTaskArgs {
+        r,
+        attempt,
+        n_maps,
+        mips,
+        spec,
+        shuffle,
+        counters,
+        dfs,
+        tmp_root,
+        cancel,
+    } = args;
     counters.add(counters::TASKS_LAUNCHED, 1);
     if spec.failures.should_fail(TaskId::reduce(r), attempt) {
         return Err(Error::MapReduce(format!(
@@ -1744,6 +1873,9 @@ fn run_reduce_task(args: ReduceTaskArgs) -> Result<()> {
         }
         None => shuffle.fetch_partition(r, n_maps)?,
     };
+    // The heterogeneity clock starts after the fetch: waiting on other
+    // nodes' maps is not this node's work.
+    let t_work = Instant::now();
     let shuffle_bytes = segments.iter().map(|s| s.bytes()).sum::<u64>();
     let order = merge_segments(&segments);
     counters.add_many(&[
@@ -1794,13 +1926,34 @@ fn run_reduce_task(args: ReduceTaskArgs) -> Result<()> {
     ]);
 
     // Commit protocol: write the attempt file, then rename into place.
+    // The heterogeneity pad lands before the rename so a slow node's
+    // commit is what arrives late.
     let attempt_dir = format!("{tmp_root}/attempt_r_{r:05}_{attempt}");
     dfs.mkdirs(&attempt_dir)?;
     let attempt_file = format!("{attempt_dir}/part-r-{r:05}");
     dfs.create(&attempt_file, &out)?;
+    stretch_for_mips(t_work, mips);
     let final_file = format!("{}/part-r-{r:05}", spec.output_dir);
     commit_rename(&*dfs, &attempt_file, &final_file)?;
     Ok(())
+}
+
+/// Heterogeneity wall-clock model (CloudSim MIPS tiers): work on a node
+/// slower than the reference tier takes proportionally longer. The real
+/// computation runs at native speed and the speed deficit is padded with
+/// sleep afterwards, so output bytes are identical under any MIPS layout
+/// — only the timeline changes. Capped so a mis-profiled node cannot
+/// hang a test run.
+fn stretch_for_mips(started: Instant, mips: u64) {
+    let mips = mips.max(1);
+    if mips >= crate::scenario::REFERENCE_MIPS {
+        return;
+    }
+    let factor = crate::scenario::REFERENCE_MIPS as f64 / mips as f64 - 1.0;
+    let pad = (started.elapsed().as_secs_f64() * factor).min(10.0);
+    if pad > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(pad));
+    }
 }
 
 /// First-commit-wins rename: when a speculative twin (or a re-run racing
@@ -2169,7 +2322,7 @@ mod tests {
         spec.failures = FailurePlan::none().delay_attempt(TaskId::map(0), 0, 2_000);
         let spec = Arc::new(spec);
         let ecfg = crate::config::ElasticConfig {
-            speculation: true,
+            speculation: crate::config::SpeculationMode::Static,
             speculation_factor: 2.0,
             speculation_floor_ms: 20,
             ..Default::default()
@@ -2199,6 +2352,121 @@ mod tests {
         }
         let alpha = all.lines().find_map(|l| l.strip_prefix("alpha\t")).unwrap();
         assert_eq!(alpha, "8");
+        dc.rm.check_invariants().unwrap();
+    }
+
+    /// Adaptive speculation: the same straggler rescue works when the
+    /// threshold comes from the per-(node, shape) estimator — a cold cell
+    /// falls back to the static global-mean rule, so the rescue fires
+    /// either way — and every commit feeds the estimator.
+    #[test]
+    fn adaptive_speculation_rescues_straggler() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/ad-in").unwrap();
+        let mut text = Vec::new();
+        for i in 0..8 {
+            text.extend_from_slice(format!("alpha beta w{i} gamma delta\n").as_bytes());
+        }
+        fs.create("/lustre/scratch/ad-in/f", &text).unwrap();
+        let mut spec = wordcount_spec("/lustre/scratch/ad-in", "/lustre/scratch/ad-out");
+        spec.failures = FailurePlan::none().delay_attempt(TaskId::map(0), 0, 2_000);
+        let spec = Arc::new(spec);
+        let ecfg = crate::config::ElasticConfig {
+            speculation: crate::config::SpeculationMode::Adaptive,
+            speculation_factor: 2.0,
+            speculation_floor_ms: 20,
+            ..Default::default()
+        };
+        let mut engine = MrEngine::new(
+            &mut dc,
+            fs.clone(),
+            &pool,
+            cfg.yarn.map_memory_mb,
+            cfg.yarn.reduce_memory_mb,
+        )
+        .with_elastic_cfg(ecfg);
+        let t0 = std::time::Instant::now();
+        let outcome = engine.run(Arc::clone(&spec), "u", Micros::ZERO).unwrap();
+        assert!(outcome.counters.get(counters::TASKS_SPECULATED) >= 1);
+        // Each map and reduce commits exactly once → one estimator fold
+        // per commit.
+        assert_eq!(
+            outcome.counters.get(counters::ESTIMATOR_UPDATES),
+            (outcome.maps + outcome.reduces) as u64
+        );
+        assert!(
+            t0.elapsed() < Duration::from_millis(1_500),
+            "adaptive speculation must beat the 2s straggler; took {:?}",
+            t0.elapsed()
+        );
+        let mut all = String::new();
+        for f in &outcome.output_files {
+            all.push_str(&String::from_utf8(fs.read(f).unwrap()).unwrap());
+        }
+        let alpha = all.lines().find_map(|l| l.strip_prefix("alpha\t")).unwrap();
+        assert_eq!(alpha, "8");
+        dc.rm.check_invariants().unwrap();
+    }
+
+    /// A heterogeneous MIPS profile changes only the timeline: the tiered
+    /// run's output bytes are identical to the homogeneous run's, and the
+    /// profile sticks in the RM registry for later jobs.
+    #[test]
+    fn hetero_profile_is_output_invariant() {
+        let (cfg, fs, mut dc, pool) = stack();
+        fs.mkdirs("/lustre/scratch/ht-in").unwrap();
+        for i in 0..4 {
+            fs.create(
+                &format!("/lustre/scratch/ht-in/part-{i}"),
+                format!("word{i} again maybe\n").as_bytes(),
+            )
+            .unwrap();
+        }
+        let read_all = |dir: &str| {
+            let mut names: Vec<String> = fs
+                .list(dir)
+                .into_iter()
+                .filter(|p| p.contains("/part-"))
+                .collect();
+            names.sort();
+            let mut all = Vec::new();
+            for n in names {
+                all.extend(fs.read(&n).unwrap());
+            }
+            all
+        };
+        let profiles: [(&str, Vec<(u32, u64)>); 2] = [
+            ("flat", Vec::new()),
+            ("tiered", vec![(0, 250), (1, 250), (2, 2000)]),
+        ];
+        let mut outs = Vec::new();
+        for (label, profile) in profiles {
+            let mut spec = wordcount_spec(
+                "/lustre/scratch/ht-in",
+                &format!("/lustre/scratch/ht-out-{label}"),
+            );
+            spec.split_bytes = 1024; // one map per file
+            let ecfg = crate::config::ElasticConfig {
+                speculation: crate::config::SpeculationMode::Adaptive,
+                node_mips: profile,
+                ..Default::default()
+            };
+            let mut engine = MrEngine::new(
+                &mut dc,
+                fs.clone(),
+                &pool,
+                cfg.yarn.map_memory_mb,
+                cfg.yarn.reduce_memory_mb,
+            )
+            .with_elastic_cfg(ecfg);
+            engine.run(Arc::new(spec), "u", Micros::ZERO).unwrap();
+            outs.push(read_all(&format!("/lustre/scratch/ht-out-{label}")));
+        }
+        assert_eq!(outs[0], outs[1], "MIPS tiers must not change output bytes");
+        // The second run installed the profile into the RM registry.
+        assert_eq!(dc.rm.node_mips(NodeId(0)), 250);
+        assert_eq!(dc.rm.node_mips(NodeId(2)), 2000);
+        assert_eq!(dc.rm.node_mips(NodeId(3)), crate::scenario::REFERENCE_MIPS);
         dc.rm.check_invariants().unwrap();
     }
 

@@ -118,6 +118,11 @@ impl Runner {
         let mut nodes = BTreeMap::new();
         let mut batch_only = BTreeSet::new();
         let mut all_ids = Vec::new();
+        // Per-node MIPS profile derived from the class layout: feeds the
+        // adaptive scheduler's estimator/placement bias through the
+        // elastic config (`docs/SCHEDULING.md`). Reference-speed nodes
+        // are left implicit.
+        let mut node_mips: Vec<(u32, u64)> = Vec::new();
         let mut next_id = 2u32;
         for &ci in &order {
             let c = &spec.machine_classes[ci];
@@ -135,6 +140,9 @@ impl Runner {
                 );
                 if c.batch_only() {
                     batch_only.insert(id);
+                }
+                if c.mips != crate::scenario::REFERENCE_MIPS {
+                    node_mips.push((id.0, c.mips));
                 }
                 all_ids.push(id);
             }
@@ -160,11 +168,15 @@ impl Runner {
             scale_policy: spec.policy.clone(),
             warm_spares: spec.warm_spares,
             batch_backlog_per_node: spec.batch_backlog_per_node,
+            node_mips: node_mips.clone(),
             ..ElasticConfig::default()
         };
         ecfg.validate()?;
 
-        let stack = StackConfig::tiny();
+        let mut stack = StackConfig::tiny();
+        // The same heterogeneous profile reaches the live cluster's RM
+        // (and any MapReduce job run against it) via the stack config.
+        stack.elastic.node_mips = node_mips;
         let fs = LustreFs::new(&stack.lustre, &stack.cluster);
         let mut build_nodes = vec![NodeId(0), NodeId(1)];
         build_nodes.extend(initial.iter().copied());
@@ -528,6 +540,23 @@ mod tests {
             legacy.energy.energy_mj
         );
         assert!(sla.drains > 0, "the diurnal trough powers nodes down");
+    }
+
+    #[test]
+    fn class_mips_profile_reaches_the_rm_registry() {
+        // updown's `bulk` class runs below reference speed; every node's
+        // class MIPS must be resolvable through the live RM, including
+        // pool nodes that have not joined yet.
+        let r = Runner::new(with_policy(UPDOWN, "sla_energy")).unwrap();
+        let mut hetero = 0u32;
+        for (&id, n) in &r.nodes {
+            let cls = &r.spec.machine_classes[n.class];
+            assert_eq!(r.dc.rm.node_mips(id), cls.mips.max(1));
+            if cls.mips != crate::scenario::REFERENCE_MIPS {
+                hetero += 1;
+            }
+        }
+        assert!(hetero > 0, "updown declares a sub-reference class");
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! Online per-(node, task-shape) runtime estimation for heterogeneous
+//! clusters.
+//!
+//! The paper's dynamic YARN-on-HPC cluster assumes the scheduler can keep
+//! thousands of cores busy, but nodes in a shared HPC pool are not
+//! identical: Westmere vs Sandy Bridge partitions, burst-buffer vs
+//! spinning-disk I/O, co-tenant interference. A single global straggler
+//! multiplier (elapsed > factor × mean) mis-fires both ways on such a
+//! cluster — the slow class inflates the global mean so genuine stragglers
+//! on fast nodes are rescued late, while healthy tasks on slow nodes get
+//! pointless duplicates.
+//!
+//! This module keeps the cheap online model that fixes both: an
+//! exponentially-weighted mean/variance of observed attempt durations per
+//! `(node, task shape)` cell — no heavy ML, O(1) state and update per
+//! cell, in the spirit of the DARL load-balancing estimator. The scheduler
+//! consumes it two ways (see `docs/SCHEDULING.md`):
+//!
+//! * **adaptive speculation** — an attempt is a straggler once it exceeds
+//!   the *predicted p95* (`mean + 1.645·σ`) for its own node/shape cell,
+//!   not a global multiplier (`HPCW_SPECULATION=adaptive`);
+//! * **placement bias** — when locality ties at the any-node tier, long
+//!   task shapes are steered onto the fastest node with room.
+//!
+//! A cell is *cold* until it has [`WARM_SAMPLES`] observations;
+//! [`RuntimeEstimator::predicted_p95`] returns `None` for cold cells and
+//! callers fall back to the static threshold, so the adaptive mode
+//! degrades to the byte-parity oracle instead of guessing.
+
+use crate::cluster::NodeId;
+use std::collections::BTreeMap;
+
+/// z-score of the 95th percentile of a normal distribution: the model is
+/// "mean + 1.645σ", deliberately crude — it only has to rank attempts,
+/// not price them.
+pub const Z_P95: f64 = 1.645;
+
+/// Observations before a cell's prediction is trusted. Below this the
+/// estimator reports cold and callers use the static threshold.
+pub const WARM_SAMPLES: u64 = 3;
+
+/// Default EWMA smoothing factor: ~the last dozen attempts dominate, so
+/// the model tracks interference shifts without thrashing on one outlier.
+pub const DEFAULT_ALPHA: f64 = 0.25;
+
+/// The two task shapes the MapReduce engine schedules. Map and reduce
+/// attempts have wildly different duration distributions (CPU-bound
+/// record crunch vs fetch-merge-spill), so they never share a cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TaskShape {
+    Map,
+    Reduce,
+}
+
+impl TaskShape {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskShape::Map => "map",
+            TaskShape::Reduce => "reduce",
+        }
+    }
+}
+
+/// One `(node, shape)` cell: exponentially-weighted mean and variance of
+/// observed attempt durations, plus the sample count for warm-up gating.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellStats {
+    /// EWMA of attempt duration, seconds.
+    pub mean_s: f64,
+    /// EWMA variance, seconds².
+    pub var_s2: f64,
+    /// Observations folded into this cell.
+    pub samples: u64,
+}
+
+impl CellStats {
+    /// `mean + z·σ` — the duration this cell predicts 95% of healthy
+    /// attempts finish within.
+    pub fn p95_s(&self) -> f64 {
+        self.mean_s + Z_P95 * self.var_s2.max(0.0).sqrt()
+    }
+}
+
+/// The online estimator: a map of `(node, shape)` → [`CellStats`] updated
+/// from every committed attempt. Owned by the MR engine; one instance per
+/// job keeps cells honest across elastic grow/shrink (a replacement node
+/// re-warms from scratch rather than inheriting its predecessor's speed).
+#[derive(Debug)]
+pub struct RuntimeEstimator {
+    alpha: f64,
+    cells: BTreeMap<(NodeId, TaskShape), CellStats>,
+    updates: u64,
+}
+
+impl Default for RuntimeEstimator {
+    fn default() -> Self {
+        RuntimeEstimator::new()
+    }
+}
+
+impl RuntimeEstimator {
+    pub fn new() -> Self {
+        RuntimeEstimator::with_alpha(DEFAULT_ALPHA)
+    }
+
+    /// `alpha` is clamped to (0, 1]; 1.0 degenerates to "last sample
+    /// wins", tiny values to "first samples win".
+    pub fn with_alpha(alpha: f64) -> Self {
+        RuntimeEstimator {
+            alpha: alpha.clamp(1e-6, 1.0),
+            cells: BTreeMap::new(),
+            updates: 0,
+        }
+    }
+
+    /// Fold one observed attempt duration into its cell.
+    ///
+    /// Standard EWMA mean/variance recurrence (West 1979 incremental
+    /// form): `d = x − mean; mean += α·d; var = (1−α)(var + α·d²)`. The
+    /// first sample seeds the mean exactly with zero variance.
+    pub fn observe(&mut self, node: NodeId, shape: TaskShape, secs: f64) {
+        if !secs.is_finite() || secs < 0.0 {
+            return;
+        }
+        self.updates += 1;
+        let cell = self
+            .cells
+            .entry((node, shape))
+            .or_insert(CellStats { mean_s: secs, var_s2: 0.0, samples: 0 });
+        if cell.samples > 0 {
+            let d = secs - cell.mean_s;
+            cell.mean_s += self.alpha * d;
+            cell.var_s2 = (1.0 - self.alpha) * (cell.var_s2 + self.alpha * d * d);
+        }
+        cell.samples += 1;
+    }
+
+    /// The cell's stats, warm or cold.
+    pub fn stats(&self, node: NodeId, shape: TaskShape) -> Option<&CellStats> {
+        self.cells.get(&(node, shape))
+    }
+
+    /// Whether the cell has enough samples to be trusted.
+    pub fn is_warm(&self, node: NodeId, shape: TaskShape) -> bool {
+        self.stats(node, shape)
+            .is_some_and(|c| c.samples >= WARM_SAMPLES)
+    }
+
+    /// Predicted p95 duration for the cell, or `None` while cold (the
+    /// caller then falls back to the static straggler threshold).
+    pub fn predicted_p95(&self, node: NodeId, shape: TaskShape) -> Option<f64> {
+        self.stats(node, shape)
+            .filter(|c| c.samples >= WARM_SAMPLES)
+            .map(|c| c.p95_s())
+    }
+
+    /// Mean predicted duration of the shape across all warm cells — the
+    /// engine's "is this shape long?" signal for placement bias. `None`
+    /// until at least one cell is warm.
+    pub fn shape_mean_s(&self, shape: TaskShape) -> Option<f64> {
+        let mut sum = 0.0;
+        let mut n = 0u64;
+        for ((_, s), c) in &self.cells {
+            if *s == shape && c.samples >= WARM_SAMPLES {
+                sum += c.mean_s;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            None
+        } else {
+            Some(sum / n as f64)
+        }
+    }
+
+    /// Total observations folded in (drives the `ESTIMATOR_UPDATES`
+    /// counter).
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    /// Number of live cells (introspection/tests).
+    pub fn cells(&self) -> usize {
+        self.cells.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(i: u32) -> NodeId {
+        NodeId(i)
+    }
+
+    #[test]
+    fn first_sample_seeds_mean_with_zero_variance() {
+        let mut e = RuntimeEstimator::new();
+        e.observe(node(1), TaskShape::Map, 2.0);
+        let c = e.stats(node(1), TaskShape::Map).unwrap();
+        assert_eq!(c.mean_s, 2.0);
+        assert_eq!(c.var_s2, 0.0);
+        assert_eq!(c.samples, 1);
+        assert_eq!(e.updates(), 1);
+    }
+
+    #[test]
+    fn ewma_converges_to_a_shifted_true_mean() {
+        // Feed 1.0s for a while, then shift the true mean to 4.0s: the
+        // EWMA must track the shift to within 5% in a few dozen samples.
+        let mut e = RuntimeEstimator::new();
+        for _ in 0..50 {
+            e.observe(node(3), TaskShape::Map, 1.0);
+        }
+        assert!((e.stats(node(3), TaskShape::Map).unwrap().mean_s - 1.0).abs() < 1e-9);
+        for _ in 0..50 {
+            e.observe(node(3), TaskShape::Map, 4.0);
+        }
+        let c = e.stats(node(3), TaskShape::Map).unwrap();
+        assert!(
+            (c.mean_s - 4.0).abs() < 0.2,
+            "mean {} did not converge to shifted true mean 4.0",
+            c.mean_s
+        );
+        // Constant tail ⇒ variance decays back toward zero.
+        assert!(c.var_s2 < 0.5, "variance {} did not decay", c.var_s2);
+    }
+
+    #[test]
+    fn p95_is_monotone_in_variance() {
+        // Same mean, different spread: the noisier cell must predict a
+        // strictly larger p95.
+        let mut quiet = RuntimeEstimator::new();
+        let mut noisy = RuntimeEstimator::new();
+        for i in 0..40 {
+            quiet.observe(node(1), TaskShape::Reduce, 2.0);
+            let x = if i % 2 == 0 { 1.0 } else { 3.0 }; // mean 2.0, high var
+            noisy.observe(node(1), TaskShape::Reduce, x);
+        }
+        let q = quiet.predicted_p95(node(1), TaskShape::Reduce).unwrap();
+        let n = noisy.predicted_p95(node(1), TaskShape::Reduce).unwrap();
+        assert!(
+            n > q,
+            "p95 must grow with variance (noisy {n} vs quiet {q})"
+        );
+        // And p95 ≥ mean always.
+        let c = noisy.stats(node(1), TaskShape::Reduce).unwrap();
+        assert!(n >= c.mean_s);
+    }
+
+    #[test]
+    fn cold_cell_predicts_none_until_warm() {
+        let mut e = RuntimeEstimator::new();
+        assert_eq!(e.predicted_p95(node(7), TaskShape::Map), None);
+        for k in 0..WARM_SAMPLES {
+            assert!(!e.is_warm(node(7), TaskShape::Map), "warm after {k} samples");
+            assert_eq!(e.predicted_p95(node(7), TaskShape::Map), None);
+            e.observe(node(7), TaskShape::Map, 1.5);
+        }
+        assert!(e.is_warm(node(7), TaskShape::Map));
+        assert!(e.predicted_p95(node(7), TaskShape::Map).is_some());
+    }
+
+    #[test]
+    fn cells_are_independent_per_node_and_shape() {
+        let mut e = RuntimeEstimator::new();
+        for _ in 0..5 {
+            e.observe(node(1), TaskShape::Map, 1.0);
+            e.observe(node(2), TaskShape::Map, 8.0);
+            e.observe(node(1), TaskShape::Reduce, 3.0);
+        }
+        assert_eq!(e.cells(), 3);
+        let fast = e.stats(node(1), TaskShape::Map).unwrap().mean_s;
+        let slow = e.stats(node(2), TaskShape::Map).unwrap().mean_s;
+        assert!(fast < 2.0 && slow > 6.0);
+        // Map cell on node 1 is untouched by reduce observations.
+        assert!((e.stats(node(1), TaskShape::Reduce).unwrap().mean_s - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shape_mean_averages_only_warm_cells() {
+        let mut e = RuntimeEstimator::new();
+        assert_eq!(e.shape_mean_s(TaskShape::Map), None);
+        for _ in 0..WARM_SAMPLES {
+            e.observe(node(1), TaskShape::Map, 2.0);
+        }
+        e.observe(node(2), TaskShape::Map, 100.0); // cold, must not count
+        let m = e.shape_mean_s(TaskShape::Map).unwrap();
+        assert!((m - 2.0).abs() < 1e-9, "cold cell leaked into shape mean: {m}");
+    }
+
+    #[test]
+    fn negative_and_nonfinite_samples_are_ignored() {
+        let mut e = RuntimeEstimator::new();
+        e.observe(node(1), TaskShape::Map, -1.0);
+        e.observe(node(1), TaskShape::Map, f64::NAN);
+        e.observe(node(1), TaskShape::Map, f64::INFINITY);
+        assert_eq!(e.updates(), 0);
+        assert!(e.stats(node(1), TaskShape::Map).is_none());
+    }
+}

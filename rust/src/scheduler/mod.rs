@@ -12,10 +12,12 @@
 //! ticks, Real mode from plain calls; the state machine is identical.
 
 pub mod alloc;
+pub mod estimator;
 pub mod job;
 pub mod policy;
 
 pub use alloc::Allocator;
+pub use estimator::{RuntimeEstimator, TaskShape};
 pub use job::{JobCommand, JobState, LsfJob, ResourceRequest};
 pub use policy::pick_next;
 

@@ -80,6 +80,13 @@ impl DynamicCluster {
         // 2. Resource Manager on the first node.
         let mut rm = ResourceManager::new(cfg.yarn.clone(), ids, Arc::clone(&metrics));
         rm.set_rack_width(cfg.elastic.rack_width);
+        // Heterogeneous node profiles (HPCW_NODE_MIPS / scenario machine
+        // classes) go into the RM registry up front: the registry outlives
+        // node churn, so slaves admitted mid-job (elastic grow) resolve
+        // their MIPS tier too.
+        for &(id, mips) in &cfg.elastic.node_mips {
+            rm.set_node_mips(NodeId(id), mips);
+        }
         if cfg.tenant.enabled() {
             // Multi-tenant front door is on: arbitrate cross-app asks by
             // dominant resource fairness and let over-share apps lose

@@ -172,6 +172,10 @@ pub struct ResourceManager {
     policy: Box<dyn QueuePolicy>,
     /// Whether `preempt_for` may actually take containers.
     preemption_enabled: bool,
+    /// Heterogeneous performance profiles (CloudSim-style MIPS tiers);
+    /// unlisted nodes run at the reference speed. Feeds the fast-node
+    /// placement bias of `allocate_one_biased`.
+    node_mips: BTreeMap<NodeId, u64>,
 }
 
 impl ResourceManager {
@@ -186,7 +190,21 @@ impl ResourceManager {
             rack_width: 4,
             policy: Box::new(FifoAppPolicy),
             preemption_enabled: false,
+            node_mips: BTreeMap::new(),
         }
+    }
+
+    /// Install (or update) a node's performance profile. Zero clamps to 1.
+    pub fn set_node_mips(&mut self, node: NodeId, mips: u64) {
+        self.node_mips.insert(node, mips.max(1));
+    }
+
+    /// A node's MIPS profile; unlisted nodes run at reference speed.
+    pub fn node_mips(&self, node: NodeId) -> u64 {
+        self.node_mips
+            .get(&node)
+            .copied()
+            .unwrap_or(crate::scenario::REFERENCE_MIPS)
     }
 
     /// Nodes per rack used by the rack-local placement tier.
@@ -346,6 +364,29 @@ impl ResourceManager {
         avoid: &[NodeId],
         now: Micros,
     ) -> Result<Option<(Container, LocalityTier)>> {
+        self.allocate_one_biased(app, ask, kind, preferred, avoid, now, false)
+            .map(|opt| opt.map(|(c, tier, _)| (c, tier)))
+    }
+
+    /// `allocate_one` with an optional fast-node bias on the any-node
+    /// tier: when `prefer_fast` is set and both locality tiers miss, the
+    /// fallback picks the highest-MIPS node with room instead of the
+    /// round-robin spread — long task shapes land on fast nodes when
+    /// locality ties (`docs/SCHEDULING.md`). The third tuple element
+    /// reports whether the bias actually steered (a strictly slower
+    /// candidate also had room), which drives `FAST_NODE_PLACEMENTS`.
+    /// Locality tiers are untouched: data gravity still beats speed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn allocate_one_biased(
+        &mut self,
+        app: AppId,
+        ask: Resource,
+        kind: ContainerKind,
+        preferred: &[NodeId],
+        avoid: &[NodeId],
+        now: Micros,
+        prefer_fast: bool,
+    ) -> Result<Option<(Container, LocalityTier, bool)>> {
         let state = self
             .apps
             .get(&app)
@@ -379,7 +420,30 @@ impl ResourceManager {
                 choice = Some((n, LocalityTier::RackLocal));
             }
         }
-        // Tier 3: anywhere, via the round-robin spread.
+        // Tier 3: anywhere. Fast-node bias (adaptive scheduling) picks
+        // the highest-MIPS node with room; otherwise the round-robin
+        // spread.
+        let mut fast_biased = false;
+        if choice.is_none() && prefer_fast {
+            let candidates: Vec<NodeId> = self
+                .nodes
+                .keys()
+                .copied()
+                .filter(|&n| !avoid.contains(&n) && self.node_has_room(n, rounded))
+                .collect();
+            if let Some(&best) = candidates
+                .iter()
+                .max_by_key(|&&n| (self.node_mips(n), std::cmp::Reverse(n.0)))
+            {
+                // The bias "steered" only if a strictly slower candidate
+                // also had room — on a homogeneous pool this is plain
+                // first-fit and the counter stays honest at zero.
+                fast_biased = candidates
+                    .iter()
+                    .any(|&n| self.node_mips(n) < self.node_mips(best));
+                choice = Some((best, LocalityTier::Any));
+            }
+        }
         if choice.is_none() {
             let node_ids: Vec<NodeId> = self.nodes.keys().copied().collect();
             for _ in 0..node_ids.len() {
@@ -405,8 +469,11 @@ impl ResourceManager {
             LocalityTier::RackLocal => self.metrics.inc("rm.placements_rack_local", 1),
             LocalityTier::Any => self.metrics.inc("rm.placements_any", 1),
         }
+        if fast_biased {
+            self.metrics.inc("rm.placements_fast_biased", 1);
+        }
         let _ = now;
-        Ok(Some((c, tier)))
+        Ok(Some((c, tier, fast_biased)))
     }
 
     fn node_has_room(&self, node: NodeId, resource: Resource) -> bool {
@@ -1128,6 +1195,75 @@ mod tests {
             )
             .unwrap();
         assert!(none.is_none(), "avoiding every node grants nothing");
+        rm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fast_bias_picks_the_highest_mips_node_on_the_any_tier() {
+        let mut rm = rm_with(3);
+        rm.set_node_mips(NodeId(0), 250);
+        rm.set_node_mips(NodeId(1), 2000);
+        // Node 2 stays at the reference 1000 MIPS.
+        assert_eq!(rm.node_mips(NodeId(2)), 1000);
+        let h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        let ask = Resource::new(4096, 1);
+        let (c, tier, biased) = rm
+            .allocate_one_biased(h.app, ask, ContainerKind::Map, &[], &[], Micros::ZERO, true)
+            .unwrap()
+            .unwrap();
+        assert_eq!(c.node, NodeId(1), "fastest node with room wins");
+        assert_eq!(tier, LocalityTier::Any);
+        assert!(biased, "a slower candidate had room, so the bias steered");
+        // Avoiding the fast node degrades to the next-fastest.
+        let (c2, _, biased2) = rm
+            .allocate_one_biased(
+                h.app,
+                ask,
+                ContainerKind::Map,
+                &[],
+                &[NodeId(1)],
+                Micros::ZERO,
+                true,
+            )
+            .unwrap()
+            .unwrap();
+        assert_eq!(c2.node, NodeId(2));
+        assert!(biased2);
+        rm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fast_bias_is_inert_on_a_homogeneous_pool_and_yields_to_locality() {
+        let mut rm = rm_with(4);
+        rm.set_rack_width(2);
+        let h = rm.submit_app("t", "u", Micros::ZERO).unwrap();
+        let ask = Resource::new(4096, 1);
+        // Homogeneous pool: the bias reports "did not steer".
+        let (_, tier, biased) = rm
+            .allocate_one_biased(h.app, ask, ContainerKind::Map, &[], &[], Micros::ZERO, true)
+            .unwrap()
+            .unwrap();
+        assert_eq!(tier, LocalityTier::Any);
+        assert!(!biased, "homogeneous pool must not count as a fast placement");
+        // Heterogeneous pool, but a node-local preference still wins even
+        // when the preferred node is the slowest: data gravity beats speed.
+        rm.set_node_mips(NodeId(0), 100);
+        rm.set_node_mips(NodeId(3), 4000);
+        let (c, tier, biased) = rm
+            .allocate_one_biased(
+                h.app,
+                ask,
+                ContainerKind::Map,
+                &[NodeId(0)],
+                &[],
+                Micros::ZERO,
+                true,
+            )
+            .unwrap()
+            .unwrap();
+        assert_eq!(c.node, NodeId(0));
+        assert_eq!(tier, LocalityTier::NodeLocal);
+        assert!(!biased);
         rm.check_invariants().unwrap();
     }
 

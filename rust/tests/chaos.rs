@@ -322,6 +322,101 @@ fn run_terasort_with_failures(
     engine.run(Arc::new(spec), "chaos", Micros::ZERO).unwrap()
 }
 
+/// PR 10: heterogeneous-cluster chaos. One slave runs at 400 MIPS (2.5×
+/// slower wall clock), a node dies mid-map-phase, and the run repeats
+/// under every speculation mode (`off` — the oracle — then `static` and
+/// `adaptive`). Outputs must be byte-identical across all three: neither
+/// the per-node speed model, the estimator-driven duplicate attempts,
+/// nor fast-node placement bias may ever change the data. This is the
+/// scenario the CI scheduler matrix replays under each
+/// `HPCW_SPECULATION` token.
+#[test]
+fn chaos_hetero_cluster_speculation_modes_are_byte_identical() {
+    use hpcw::config::SpeculationMode;
+    let cfg = StackConfig::tiny();
+    let fs = Arc::new(LustreFs::new(&cfg.lustre, &cfg.cluster));
+    let pool = Pool::new(4);
+    let rows = 4_000u64;
+    let gen = TeragenSpec {
+        rows,
+        maps: 2,
+        output_dir: "/lustre/scratch/hchaos-in".into(),
+        seed: 11,
+    };
+    {
+        let mut dc = build_cluster(&fs, &cfg, "hchaos-gen");
+        let mut engine =
+            MrEngine::new(&mut dc, fs.clone() as Arc<dyn Dfs>, &pool, 1024, 1024);
+        run_teragen(&mut engine, &gen, Micros::ZERO).unwrap();
+    }
+    let input = summarize_dir(&*fs, "/lustre/scratch/hchaos-in").unwrap();
+
+    let mut outputs: Vec<(SpeculationMode, BTreeMap<String, Vec<u8>>)> = Vec::new();
+    for mode in [SpeculationMode::Off, SpeculationMode::Static, SpeculationMode::Adaptive] {
+        let out_dir = format!("/lustre/scratch/hchaos-out-{}", mode.name());
+        let ts = TerasortJob {
+            split_bytes: 50_000,
+            samples_per_file: 200,
+            ..TerasortJob::new("/lustre/scratch/hchaos-in", &out_dir, 3)
+        };
+        let mut dc = build_cluster(&fs, &cfg, &format!("hchaos-{}", mode.name()));
+        let cm = ClusterManager::new(
+            ElasticConfig {
+                node_mips: vec![(2, 400)],
+                ..elastic_cfg()
+            },
+            (200..204).map(NodeId).collect(),
+        );
+        let ecfg = ElasticConfig {
+            speculation: mode,
+            // Slave 2 (the node ids are RM, JHS, then slaves 2..5) is the
+            // slow tier; batch-allocator replacements (200..) fall back
+            // to the reference speed.
+            node_mips: vec![(2, 400)],
+            speculation_floor_ms: 10,
+            ..elastic_cfg()
+        };
+        let plan = ElasticPlan::new().at_maps(2, ElasticAction::FailMapHost(0));
+        let outcome = {
+            let mut engine =
+                MrEngine::new(&mut dc, fs.clone() as Arc<dyn Dfs>, &pool, 1024, 1024)
+                    .with_elastic_cfg(ecfg)
+                    .with_cluster_manager(cm)
+                    .with_plan(plan);
+            run_terasort(&mut engine, &ts, None, Micros::ZERO).unwrap()
+        };
+        let validated = teravalidate(&*fs, &out_dir, input.clone()).unwrap();
+        assert_eq!(validated.records, rows, "{} run lost rows", mode.name());
+        assert_eq!(
+            outcome.counters.get(counters::NODES_FAILED),
+            1,
+            "{} run must see the injected node loss",
+            mode.name()
+        );
+        // Every committed attempt feeds the runtime estimator (it learns
+        // in every mode; only `adaptive` *acts* on the predictions).
+        assert_eq!(
+            outcome.counters.get(counters::ESTIMATOR_UPDATES),
+            (outcome.maps + outcome.reduces) as u64
+        );
+        dc.rm.check_invariants().unwrap();
+        outputs.push((mode, sorted_output(&fs, &outcome.output_files)));
+    }
+
+    let (_, oracle) = &outputs[0];
+    for (mode, bytes) in &outputs[1..] {
+        assert_eq!(oracle.len(), bytes.len());
+        for (name, reference) in oracle {
+            assert_eq!(
+                Some(reference),
+                bytes.get(name),
+                "part file {name} must be byte-identical under {} speculation",
+                mode.name()
+            );
+        }
+    }
+}
+
 /// Property: arbitrary admit/drain/partition sequences through the
 /// cluster manager keep the RM ledger consistent, expire silent nodes
 /// exactly once, and drains always return leases to the allocator.

@@ -267,7 +267,7 @@ fn run_parity_job(
     // Speculation is deliberate scheduling nondeterminism (duplicate
     // attempts); the byte-parity oracle runs with it off.
     let ecfg = hpcw::config::ElasticConfig {
-        speculation: false,
+        speculation: hpcw::config::SpeculationMode::Off,
         ..Default::default()
     };
     let mut engine = MrEngine::new(

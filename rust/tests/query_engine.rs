@@ -36,11 +36,12 @@ use hpcw::wrapper::DynamicCluster;
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
-/// Serializes tests that read or write the planner's env knobs
-/// (`HPCW_BROADCAST_MAX_BYTES`, `HPCW_FUSION`). Rust tests share one
-/// process, so an unguarded `set_var` would race every concurrent test
-/// whose plan compiles a join; the guard also restores the previous
-/// values on drop, no matter how the test exits.
+/// Serializes tests that read or write the planner's and scheduler's env
+/// knobs (`HPCW_BROADCAST_MAX_BYTES`, `HPCW_FUSION`, `HPCW_SPECULATION`,
+/// `HPCW_NODE_MIPS`). Rust tests share one process, so an unguarded
+/// `set_var` would race every concurrent test whose plan compiles a join;
+/// the guard also restores the previous values on drop, no matter how
+/// the test exits.
 static ENV_LOCK: Mutex<()> = Mutex::new(());
 
 struct EnvGuard {
@@ -51,10 +52,15 @@ struct EnvGuard {
 impl EnvGuard {
     fn lock() -> EnvGuard {
         let lock = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
-        let saved = ["HPCW_BROADCAST_MAX_BYTES", "HPCW_FUSION"]
-            .iter()
-            .map(|k| (*k, std::env::var(k).ok()))
-            .collect();
+        let saved = [
+            "HPCW_BROADCAST_MAX_BYTES",
+            "HPCW_FUSION",
+            "HPCW_SPECULATION",
+            "HPCW_NODE_MIPS",
+        ]
+        .iter()
+        .map(|k| (*k, std::env::var(k).ok()))
+        .collect();
         EnvGuard { _lock: lock, saved }
     }
 
@@ -825,4 +831,53 @@ fn explain_hive_plan_matches_golden_file() {
         include_str!("golden/explain_hive.json").trim_end(),
         "EXPLAIN(hive) drifted from the golden file"
     );
+}
+
+/// PR 10: the CI scheduler matrix drives the engine through
+/// `HPCW_SPECULATION`; every token the workflow exports must select the
+/// mode it names (and restore cleanly — the guard serializes env access).
+#[test]
+fn speculation_env_knob_selects_mode() {
+    use hpcw::config::SpeculationMode;
+    let env = EnvGuard::lock();
+    let mode = |v: &str| {
+        env.set("HPCW_SPECULATION", v);
+        let mut e = ElasticConfig::default();
+        e.apply_env();
+        e.speculation
+    };
+    assert_eq!(mode("adaptive"), SpeculationMode::Adaptive);
+    assert_eq!(mode("static"), SpeculationMode::Static);
+    assert_eq!(mode("off"), SpeculationMode::Off);
+    // Pre-mode boolean spellings keep their historical meaning.
+    assert_eq!(mode("1"), SpeculationMode::Static);
+    assert_eq!(mode("true"), SpeculationMode::Static);
+    assert_eq!(mode("0"), SpeculationMode::Off);
+    assert_eq!(mode("false"), SpeculationMode::Off);
+    // Unset leaves the configured default (static) alone.
+    env.clear("HPCW_SPECULATION");
+    let mut e = ElasticConfig::default();
+    e.apply_env();
+    assert_eq!(e.speculation, SpeculationMode::Static);
+}
+
+/// PR 10: `HPCW_NODE_MIPS` installs per-node performance profiles; the
+/// resulting config passes validation and survives into a stack's
+/// cluster model (what `GET /v1/cluster` reports).
+#[test]
+fn node_mips_env_knob_installs_profiles() {
+    let env = EnvGuard::lock();
+    env.set("HPCW_NODE_MIPS", "0:250, 3:2000 ,junk");
+    let mut e = ElasticConfig::default();
+    e.apply_env();
+    assert_eq!(e.node_mips, vec![(0, 250), (3, 2000)]);
+    e.validate().unwrap();
+
+    let mut cfg = StackConfig::tiny();
+    cfg.elastic.node_mips = e.node_mips.clone();
+    let stack = Stack::new(cfg).unwrap();
+    let doc = stack.cluster_doc();
+    assert_eq!(doc.nodes[0].mips, 250);
+    assert_eq!(doc.nodes[3].mips, 2000);
+    assert_eq!(doc.nodes[1].mips, 1000);
 }
